@@ -1,0 +1,162 @@
+//! Containerized C/R, end to end (§IV–V of the paper).
+//!
+//! Builds an application image, embeds DMTCP with the paper's own
+//! Containerfile snippet, migrates it for batch use, runs a checkpointed
+//! physics workload *inside* podman-hpc, preempts it, and restarts it
+//! inside shifter from the same image set — demonstrating both the
+//! DMTCP-in-the-image constraint and cross-runtime compatibility.
+//!
+//! ```text
+//! cargo run --release --example container_cr
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use nersc_cr::container::{
+    ContainerRuntime, Image, PodmanHpc, Registry, RunSpec, Shifter, EMBED_DMTCP_SNIPPET,
+};
+use nersc_cr::cr::{latest_images, start_coordinator, CrConfig};
+use nersc_cr::dmtcp::{dmtcp_restart, PluginRegistry};
+use nersc_cr::report::{human_bytes, Table};
+use nersc_cr::runtime::service;
+use nersc_cr::workload::{transport_worker, G4App, G4Version, NeutronSource, WorkloadKind};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    nersc_cr::logging::init();
+    println!("== containerized checkpoint-restart ==\n");
+    let h = service::shared()?;
+    let m = h.manifest().clone();
+
+    // --- image lifecycle -------------------------------------------------
+    let mut registry = Registry::new();
+    registry.push(Image::base("my_application_container", "latest", 500 << 20));
+
+    let mut podman = PodmanHpc::new();
+    println!("podman-hpc build -t elvis:test .   (embedding DMTCP — paper §V.B snippet)");
+    let img = podman.build("elvis", "test", EMBED_DMTCP_SNIPPET, &registry)?;
+    println!(
+        "  built {} ({}, {} layers, has_dmtcp={})",
+        img.reference(),
+        human_bytes(img.size_bytes()),
+        img.layers.len(),
+        img.has_dmtcp
+    );
+    println!("podman-hpc migrate elvis:test      (squashfile for batch jobs)");
+    podman.migrate("elvis:test")?;
+    println!(
+        "  squash size {}",
+        human_bytes(podman.store().squash_size("elvis:test").unwrap())
+    );
+    podman.push(&mut registry, "elvis:test")?;
+    let mut shifter = Shifter::new();
+    shifter.pull(&registry, "elvis:test")?;
+    println!("shifterimg pull elvis:test         (gateway conversion)\n");
+
+    // Capability comparison (paper §IV).
+    let mut caps = Table::new(&["capability", "shifter", "podman-hpc"]);
+    caps.row(&[
+        "build on system".into(),
+        shifter.supports_local_build().to_string(),
+        podman.supports_local_build().to_string(),
+    ]);
+    caps.row(&[
+        "runtime modification".into(),
+        shifter.supports_runtime_modification().to_string(),
+        podman.supports_runtime_modification().to_string(),
+    ]);
+    caps.row(&[
+        "startup @512 ranks".into(),
+        format!("{:.2}s", shifter.startup_time(512)),
+        format!("{:.2}s", podman.startup_time(512)),
+    ]);
+    println!("{}", caps.render());
+
+    // --- C/R inside the container ----------------------------------------
+    let wd = std::env::temp_dir().join(format!("ncr_container_cr_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&wd);
+    std::fs::create_dir_all(&wd)?;
+    let app = G4App::build(
+        WorkloadKind::NeutronHe3(NeutronSource::AmBe),
+        G4Version::V11_0,
+        m.grid_d,
+    );
+    let target = 200 * m.scan_steps as u64;
+    let seed = 55;
+
+    let cfg = CrConfig::new("210001", &wd);
+    let (coord, _env) = start_coordinator(&cfg)?;
+    let spec = RunSpec::default()
+        .volume(cfg.ckpt_dir.to_string_lossy(), "/ckpt")
+        .env("DMTCP_CHECKPOINT_DIR", "/ckpt");
+    let container = podman.run("elvis:test", spec.clone())?;
+    let state = Arc::new(Mutex::new(app.fresh_state(m.batch, target, seed)));
+    let mut launched =
+        container.launch_checkpointed("g4neutron", coord.addr(), Arc::clone(&state), PluginRegistry::new())?;
+    launched.wait_attached(Duration::from_secs(10))?;
+    {
+        let (st, hh, si) = (Arc::clone(&state), h.clone(), Arc::clone(&app.si));
+        launched
+            .process
+            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
+    }
+    println!("running inside podman-hpc (env CONTAINER_RUNTIME={})", {
+        let e = launched.process.env.lock().unwrap();
+        e.get("CONTAINER_RUNTIME").cloned().unwrap_or_default()
+    });
+
+    while state.lock().unwrap().particles.steps_done < target / 3 {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let images = coord.checkpoint_all()?;
+    println!(
+        "checkpoint inside the container: {} -> {}",
+        images[0].path.display(),
+        human_bytes(images[0].stored_bytes)
+    );
+    coord.kill_all();
+    let _ = launched.join();
+    println!(">> preempted\n");
+
+    // --- restart inside shifter -------------------------------------------
+    let cfg2 = CrConfig::new("210002", &wd);
+    let (coord2, _env) = start_coordinator(&cfg2)?;
+    let sh_container = shifter.run("elvis:test", spec)?;
+    println!(
+        "restarting inside {} (same image, same checkpoint volume)",
+        sh_container.runtime_name
+    );
+    let image_path = latest_images(&cfg.ckpt_dir)?.pop().unwrap();
+    let state2 = Arc::new(Mutex::new(app.shell_state()));
+    let restarted = dmtcp_restart(&image_path, coord2.addr(), Arc::clone(&state2), PluginRegistry::new())?;
+    let mut launched2 = restarted.launched;
+    launched2.wait_attached(Duration::from_secs(10))?;
+    {
+        let (st, hh, si) = (Arc::clone(&state2), h.clone(), Arc::clone(&app.si));
+        launched2
+            .process
+            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
+    }
+    while !state2.lock().unwrap().done() {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    coord2.kill_all();
+    let _ = launched2.join();
+
+    // Verify against the uninterrupted run + detector readout.
+    let mut reference = app.fresh_state(m.batch, target, seed);
+    reference.particles =
+        h.scan(reference.particles, &app.si, (target / m.scan_steps as u64) as u32)?;
+    let s2 = state2.lock().unwrap();
+    assert_eq!(s2.particles, reference.particles, "cross-runtime restart mismatch");
+    let (roi, total, hits) = h.score_roi(s2.particles.edep.clone(), app.workload.roi.clone())?;
+    let reading = nersc_cr::workload::reading(&app.workload, roi, total, hits);
+    println!(
+        "\nHe-3 counter: {} counts ({} MeV in ROI, efficiency {:.2}%) — bitwise verified ✓",
+        reading.counts,
+        reading.roi_edep_mev,
+        reading.efficiency * 100.0
+    );
+    std::fs::remove_dir_all(&wd).ok();
+    Ok(())
+}

@@ -1,0 +1,150 @@
+//! Quickstart: the whole system in one file.
+//!
+//! Boots the PJRT engine from `artifacts/`, starts a DMTCP-style
+//! coordinator, launches a Geant4-analog workload under checkpoint
+//! control, checkpoints it, preempts it, restarts from the image on a
+//! "new node" (fresh coordinator), and verifies the final physics is
+//! bit-identical to an uninterrupted run.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use nersc_cr::cr::{latest_images, start_coordinator, CrConfig};
+use nersc_cr::dmtcp::coordinator::client_table;
+use nersc_cr::dmtcp::{dmtcp_launch, dmtcp_restart, LaunchSpec, PluginRegistry};
+use nersc_cr::report::human_bytes;
+use nersc_cr::runtime::service;
+use nersc_cr::workload::{transport_worker, G4App, G4Version, WorkloadKind};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    nersc_cr::logging::init();
+    println!("== nersc_cr quickstart ==\n");
+
+    // --- L1/L2: the AOT-compiled transport engine -----------------------
+    let h = service::shared()?;
+    let m = h.manifest().clone();
+    println!(
+        "engine: batch={} grid={}^3 scan_steps={} (artifacts from `make artifacts`)",
+        m.batch, m.grid_d, m.scan_steps
+    );
+
+    // --- the workload: a water phantom on Geant4-analog 10.7 ------------
+    let app = G4App::build(WorkloadKind::WaterPhantom, G4Version::V10_7, m.grid_d);
+    let target = 160 * m.scan_steps as u64;
+    let seed = 2024;
+
+    // --- L3: coordinator + checkpointed process -------------------------
+    let wd = std::env::temp_dir().join(format!("ncr_quickstart_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&wd);
+    std::fs::create_dir_all(&wd)?;
+    let cfg = CrConfig::new("100001", &wd);
+    let (coord, env) = start_coordinator(&cfg)?;
+    println!(
+        "\ncoordinator: {} (rendezvous file {})",
+        coord.addr(),
+        coord.command_file().unwrap().display()
+    );
+    println!("env for the job: {env:?}");
+
+    let state = Arc::new(Mutex::new(app.fresh_state(m.batch, target, seed)));
+    let mut spec = LaunchSpec::new("g4-water-phantom", coord.addr());
+    spec.env = env;
+    let mut launched = dmtcp_launch(spec, Arc::clone(&state), PluginRegistry::new());
+    // Two user threads: one transport driver + one auxiliary (Fig 1 shape).
+    {
+        let (st, hh, si) = (Arc::clone(&state), h.clone(), Arc::clone(&app.si));
+        launched
+            .process
+            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
+    }
+    {
+        let st = Arc::clone(&state);
+        launched.process.spawn_user_thread(move |ctx| loop {
+            if ctx.ckpt_point() == nersc_cr::dmtcp::GateVerdict::Exit {
+                break;
+            }
+            if st.lock().unwrap().done() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        });
+    }
+    let vpid = launched.wait_attached(Duration::from_secs(10))?;
+    println!("\nFig-1 topology: coordinator + 1 process (vpid {vpid}), ckpt thread + 2 user threads");
+    for (v, (name, pid, threads)) in client_table(&coord) {
+        println!("  vpid {v}: {name} (real pid {pid}, {threads} threads at hello)");
+    }
+
+    // Let it run, checkpoint mid-flight.
+    while state.lock().unwrap().particles.steps_done < target / 4 {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let images = coord.checkpoint_all()?;
+    let img = &images[0];
+    println!(
+        "\ncheckpoint #{}: {} ({} raw -> {} stored, {:.1} ms)",
+        img.ckpt_id,
+        img.path.display(),
+        human_bytes(img.raw_bytes),
+        human_bytes(img.stored_bytes),
+        img.write_secs * 1e3
+    );
+
+    // Preemption: SIGTERM everything (the batch system wants the nodes).
+    println!(">> preempting (kill_all) — progress was {} steps", {
+        let s = state.lock().unwrap();
+        s.particles.steps_done
+    });
+    coord.kill_all();
+    let _ = launched.join();
+    drop(coord);
+
+    // Restart on a "new node": fresh coordinator, state from the image.
+    let cfg2 = CrConfig::new("100002", &wd);
+    let (coord2, _env2) = start_coordinator(&cfg2)?;
+    let image = latest_images(&cfg.ckpt_dir)?.pop().expect("an image exists");
+    let state2 = Arc::new(Mutex::new(app.shell_state()));
+    let restarted =
+        dmtcp_restart(&image, coord2.addr(), Arc::clone(&state2), PluginRegistry::new())?;
+    println!(
+        ">> restarted from {} at step {} (generation {})",
+        image.display(),
+        restarted.header.steps_done,
+        restarted.header.generation + 1
+    );
+    let mut launched2 = restarted.launched;
+    launched2.wait_attached(Duration::from_secs(10))?;
+    {
+        let (st, hh, si) = (Arc::clone(&state2), h.clone(), Arc::clone(&app.si));
+        launched2
+            .process
+            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
+    }
+    while !state2.lock().unwrap().done() {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    coord2.kill_all();
+    let _ = launched2.join();
+
+    // Verify: bit-identical to an uninterrupted run.
+    let mut reference = app.fresh_state(m.batch, target, seed);
+    reference.particles = h.scan(
+        reference.particles,
+        &app.si,
+        (target / m.scan_steps as u64) as u32,
+    )?;
+    let got = state2.lock().unwrap();
+    let (roi, total, hits) = h.score_roi(got.particles.edep.clone(), app.workload.roi.clone())?;
+    println!("\nresult: ROI edep {roi:.2} MeV, total {total:.2} MeV, {hits} voxels hit");
+    assert_eq!(
+        got.particles, reference.particles,
+        "restart result differs from uninterrupted run!"
+    );
+    println!("verified: preempt+restart result is BIT-IDENTICAL to the uninterrupted run ✓");
+    std::fs::remove_dir_all(&wd).ok();
+    Ok(())
+}

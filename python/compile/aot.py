@@ -1,0 +1,118 @@
+"""AOT-lower the L2 model to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py and README gotchas.
+
+Artifacts written (all with ``return_tuple=True`` — the Rust side unwraps
+with ``to_tuple1``/element access):
+
+  artifacts/transport_step.hlo.txt   one kernel step + scoring
+  artifacts/transport_scan.hlo.txt   SCAN_STEPS fused steps (the hot path)
+  artifacts/transport_step_ref.hlo.txt  pure-jnp oracle variant (A/B testing)
+  artifacts/score_roi.hlo.txt        detector ROI readout
+  artifacts/manifest.txt             shapes/dtypes/constants for the loader
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (idempotent; the
+Makefile only reruns it when compile/ sources change).
+"""
+
+import argparse
+import hashlib
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(batch: int, d: int, n_mat: int, steps: int):
+    """Lower every artifact; returns {name: hlo_text}."""
+    args = model.make_example_args(batch=batch, d=d, n_mat=n_mat)
+    f32 = jax.numpy.float32
+    roi_args = (jax.ShapeDtypeStruct((d * d * d,), f32),
+                jax.ShapeDtypeStruct((d * d * d,), f32))
+
+    out = {}
+    out["transport_step"] = to_hlo_text(
+        jax.jit(model.transport_step, static_argnames=("use_ref",)).lower(*args))
+    out["transport_step_ref"] = to_hlo_text(
+        jax.jit(model.transport_step, static_argnames=("use_ref",)).lower(*args, use_ref=True))
+    out["transport_scan"] = to_hlo_text(
+        jax.jit(model.transport_scan, static_argnames=("steps", "use_ref")).lower(
+            *args, steps=steps))
+    out["transport_scan_ref"] = to_hlo_text(
+        jax.jit(model.transport_scan, static_argnames=("steps", "use_ref")).lower(
+            *args, steps=steps, use_ref=True))
+    out["score_roi"] = to_hlo_text(jax.jit(model.score_roi).lower(*roi_args))
+    # Lowered at D^3: a dose-volume histogram over the scoring grid
+    # (edep per voxel, identity vox indices), the standard readout for the
+    # paper's voxel-phantom and HPGe workloads.
+    i32 = jax.numpy.int32
+    spec_args = (jax.ShapeDtypeStruct((d * d * d,), f32),  # edep per voxel
+                 jax.ShapeDtypeStruct((d * d * d,), i32),  # vox (identity)
+                 jax.ShapeDtypeStruct((d * d * d,), f32),  # roi
+                 jax.ShapeDtypeStruct((4,), f32))          # (e_min, e_max, pad, pad)
+    out["detector_spectrum"] = to_hlo_text(
+        jax.jit(model.detector_spectrum, static_argnames=("use_ref",)).lower(*spec_args))
+    return out
+
+
+def write_manifest(path: str, artifacts: dict, batch: int, d: int, n_mat: int, steps: int):
+    """Tiny line-oriented manifest the Rust loader parses (no serde there).
+
+    Format:  ``key value`` lines; ``artifact <name> <sha256-12>`` per module.
+    """
+    lines = [
+        "format 1",
+        f"batch {batch}",
+        f"grid_d {d}",
+        f"n_mat {n_mat}",
+        f"scan_steps {steps}",
+        f"rng_draws_per_step 4",
+        "spectrum_bins 128",
+    ]
+    for name, text in sorted(artifacts.items()):
+        digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+        lines.append(f"artifact {name} {digest}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=model.BATCH)
+    ap.add_argument("--grid-d", type=int, default=model.GRID_D)
+    ap.add_argument("--n-mat", type=int, default=model.N_MAT)
+    ap.add_argument("--steps", type=int, default=model.SCAN_STEPS)
+    ns = ap.parse_args()
+
+    os.makedirs(ns.out_dir, exist_ok=True)
+    artifacts = lower_all(ns.batch, ns.grid_d, ns.n_mat, ns.steps)
+    total = 0
+    for name, text in artifacts.items():
+        path = os.path.join(ns.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        total += len(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    write_manifest(os.path.join(ns.out_dir, "manifest.txt"),
+                   artifacts, ns.batch, ns.grid_d, ns.n_mat, ns.steps)
+    print(f"wrote {ns.out_dir}/manifest.txt ({total} chars total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Pure-jnp oracle for the Pallas transport kernel.
+
+An independent, unblocked re-implementation of one transport step. pytest
+asserts the Pallas kernel matches this exactly (integer outputs) /
+to float tolerance (physics outputs) under hypothesis sweeps of shapes,
+seeds, geometries and cross-sections. No pallas imports here.
+"""
+
+import jax
+import jax.numpy as jnp
+
+TWO_PI = 6.2831853071795864769
+RNG_DRAWS_PER_STEP = 4
+
+
+def hash_u32(x):
+    """lowbias32 — must match kernels/transport.py bit-for-bit."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def u01(bits):
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+@jax.jit
+def transport_step_ref(pos, dcos, energy, weight, alive, rng, grid, xs, params):
+    """Reference semantics of one transport step (see transport.py docstring).
+
+    Returns (pos', dcos', energy', alive', rng', edep, vox) in the same order
+    as the Pallas wrapper.
+    """
+    d = params[4].astype(jnp.int32)
+    inv_vox = params[1]
+    world = params[0] * params[4]
+    e_cut = params[2]
+    max_step = params[3]
+
+    alive_b = alive > jnp.float32(0.5)
+
+    vi = jnp.clip((pos * inv_vox).astype(jnp.int32), 0, d - 1)
+    flat = (vi[:, 0] * d + vi[:, 1]) * d + vi[:, 2]
+    mat = jnp.take(grid, flat, axis=0)
+    row = jnp.take(xs, mat, axis=0)
+    s0, s1, f_abs, f_loss, g = row[:, 0], row[:, 1], row[:, 2], row[:, 3], row[:, 4]
+
+    sigma = s0 + s1 * jax.lax.rsqrt(jnp.maximum(energy, jnp.float32(1e-6)))
+    u1 = u01(hash_u32(rng + jnp.uint32(1)))
+    path = -jnp.log(u1 + jnp.float32(1e-7)) / jnp.maximum(sigma, jnp.float32(1e-6))
+    collided = path <= max_step
+    step_len = jnp.minimum(path, max_step)
+
+    npos = pos + dcos * step_len[:, None]
+    inside = jnp.all((npos >= 0.0) & (npos < world), axis=1)
+    nvi = jnp.clip((npos * inv_vox).astype(jnp.int32), 0, d - 1)
+    nflat = (nvi[:, 0] * d + nvi[:, 1]) * d + nvi[:, 2]
+
+    u2 = u01(hash_u32(rng + jnp.uint32(2)))
+    absorbed = collided & inside & (u2 < f_abs)
+    scattered = collided & inside & ~absorbed
+
+    dep_collision = jnp.where(absorbed, energy, jnp.where(scattered, energy * f_loss, 0.0))
+    e_after = jnp.where(absorbed, 0.0, jnp.where(scattered, energy * (1.0 - f_loss), energy))
+
+    cut = inside & ~absorbed & (e_after < e_cut)
+    edep = jnp.where(alive_b & inside, dep_collision + jnp.where(cut, e_after, 0.0), 0.0)
+    e_new = jnp.where(absorbed | cut, 0.0, e_after)
+
+    alive_new = jnp.where(alive_b & inside & ~absorbed & ~cut, jnp.float32(1.0), jnp.float32(0.0))
+
+    u3 = u01(hash_u32(rng + jnp.uint32(3)))
+    u4 = u01(hash_u32(rng + jnp.uint32(4)))
+    cz = 2.0 * u3 - 1.0
+    sz = jnp.sqrt(jnp.maximum(0.0, 1.0 - cz * cz))
+    phi = jnp.float32(TWO_PI) * u4
+    iso = jnp.stack([sz * jnp.cos(phi), sz * jnp.sin(phi), cz], axis=1)
+    mixed = g[:, None] * dcos + (1.0 - g)[:, None] * iso
+    norm = jax.lax.rsqrt(jnp.maximum(jnp.sum(mixed * mixed, axis=1), jnp.float32(1e-12)))
+    ndir = mixed * norm[:, None]
+    dir_new = jnp.where(scattered[:, None], ndir, dcos)
+
+    edep = edep * weight
+    out_flat = jnp.where(alive_b & inside, nflat, 0)
+    pos_out = jnp.where(alive_b[:, None], npos, pos)
+    dir_out = jnp.where(alive_b[:, None], dir_new, dcos)
+    e_out = jnp.where(alive_b, e_new, energy)
+    a_out = jnp.where(alive_b, alive_new, alive)
+    edep = jnp.where(alive_b, edep, 0.0)
+    rng_out = rng + jnp.uint32(RNG_DRAWS_PER_STEP)
+
+    return pos_out, dir_out, e_out, a_out, rng_out, edep, out_flat

@@ -1,0 +1,220 @@
+"""L1 — Pallas transport-step kernel (the compute hot-spot).
+
+One Monte-Carlo particle-transport step for a tile of particles through a
+voxelized material geometry. This is the Geant4-analog inner loop that the
+paper's checkpoint-restart system wraps: large mutable particle state,
+counter-based RNG (so a preempted-and-restarted run is *bit identical* to an
+uninterrupted one), and per-step energy deposits that L2 scatter-adds into
+the scoring grid.
+
+Kernel anatomy (per particle, fully branchless):
+  1. look up the material of the current voxel (gather from the grid),
+  2. sample a free path from the material's total cross-section
+     ``sigma(E) = s0 + s1 / sqrt(E)`` (1/v neutron-like term),
+  3. advance the particle by ``min(path, max_step)``,
+  4. decide absorb / scatter / escape / energy-cutoff,
+  5. deposit energy into the *destination* voxel (returned as a
+     (value, flat-index) pair; the scatter-add itself lives in L2),
+  6. update direction via a forward-peaked mix of an isotropic draw and the
+     incoming direction (per-material anisotropy ``g``),
+  7. advance the particle's RNG counter by the fixed per-step draw count.
+
+RNG is a counter-based integer hash (lowbias32) over ``rng + k``; no state
+beyond the counter, which is checkpointed with the rest of the particle
+state — this is what makes C/R bitwise verifiable.
+
+TPU mapping (see DESIGN.md §6): the particle axis is tiled by BlockSpec into
+VMEM-resident tiles; the material grid + cross-section table are replicated
+(index_map -> 0) and pinned in VMEM across tiles; math is VPU element-wise.
+``interpret=True`` everywhere — the CPU PJRT plugin cannot run Mosaic
+custom-calls; real-TPU perf is estimated analytically in EXPERIMENTS.md.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed number of RNG draws consumed per step per particle. Restart
+# correctness depends on this being a compile-time constant.
+RNG_DRAWS_PER_STEP = 4
+
+# Default particle-axis tile. 512 rows x ~48 B of state ~= 24 KiB of VMEM
+# per tile plus the replicated grid/table (see DESIGN.md §6).
+DEFAULT_TILE = 512
+
+_TWO_PI = 6.2831853071795864769
+
+
+def _hash_u32(x):
+    """lowbias32 integer hash (Chris Wellons); uint32 wrap-around semantics."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _u01(bits):
+    """Map uint32 -> float32 in [0, 1) using the top 24 bits."""
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def _step_math(pos, dcos, energy, weight, alive, rng, grid, xs, params):
+    """The shared per-particle step math. Called on full tiles.
+
+    Everything below is element-wise over the particle axis except two row
+    gathers (material grid, cross-section table). Must stay in lock-step
+    with kernels/ref.py (the independent oracle).
+    """
+    d = params[4].astype(jnp.int32)  # grid edge length (voxels)
+    inv_vox = params[1]
+    world = params[0] * params[4]  # voxel_size * D
+    e_cut = params[2]
+    max_step = params[3]
+
+    alive_b = alive > jnp.float32(0.5)
+
+    # --- current voxel & material --------------------------------------
+    vi = jnp.clip((pos * inv_vox).astype(jnp.int32), 0, d - 1)
+    flat = (vi[:, 0] * d + vi[:, 1]) * d + vi[:, 2]
+    mat = jnp.take(grid, flat, axis=0)
+    row = jnp.take(xs, mat, axis=0)  # [tile, 6]
+    s0, s1, f_abs, f_loss, g = row[:, 0], row[:, 1], row[:, 2], row[:, 3], row[:, 4]
+
+    # --- free path ------------------------------------------------------
+    sigma = s0 + s1 * jax.lax.rsqrt(jnp.maximum(energy, jnp.float32(1e-6)))
+    u1 = _u01(_hash_u32(rng + jnp.uint32(1)))
+    path = -jnp.log(u1 + jnp.float32(1e-7)) / jnp.maximum(sigma, jnp.float32(1e-6))
+    collided = path <= max_step
+    step_len = jnp.minimum(path, max_step)
+
+    # --- advance ----------------------------------------------------------
+    npos = pos + dcos * step_len[:, None]
+    inside = jnp.all((npos >= 0.0) & (npos < world), axis=1)
+    nvi = jnp.clip((npos * inv_vox).astype(jnp.int32), 0, d - 1)
+    nflat = (nvi[:, 0] * d + nvi[:, 1]) * d + nvi[:, 2]
+
+    # --- interaction ------------------------------------------------------
+    u2 = _u01(_hash_u32(rng + jnp.uint32(2)))
+    absorbed = collided & inside & (u2 < f_abs)
+    scattered = collided & inside & ~absorbed
+
+    dep_collision = jnp.where(absorbed, energy, jnp.where(scattered, energy * f_loss, 0.0))
+    e_after = jnp.where(absorbed, 0.0, jnp.where(scattered, energy * (1.0 - f_loss), energy))
+
+    # --- energy cutoff: deposit the remainder locally ----------------------
+    cut = inside & ~absorbed & (e_after < e_cut)
+    edep = jnp.where(alive_b & inside, dep_collision + jnp.where(cut, e_after, 0.0), 0.0)
+    e_new = jnp.where(absorbed | cut, 0.0, e_after)
+
+    alive_new = jnp.where(alive_b & inside & ~absorbed & ~cut, jnp.float32(1.0), jnp.float32(0.0))
+
+    # --- scatter direction (forward-peaked iso mix) -------------------------
+    u3 = _u01(_hash_u32(rng + jnp.uint32(3)))
+    u4 = _u01(_hash_u32(rng + jnp.uint32(4)))
+    cz = 2.0 * u3 - 1.0
+    sz = jnp.sqrt(jnp.maximum(0.0, 1.0 - cz * cz))
+    phi = jnp.float32(_TWO_PI) * u4
+    iso = jnp.stack([sz * jnp.cos(phi), sz * jnp.sin(phi), cz], axis=1)
+    mixed = g[:, None] * dcos + (1.0 - g)[:, None] * iso
+    norm = jax.lax.rsqrt(jnp.maximum(jnp.sum(mixed * mixed, axis=1), jnp.float32(1e-12)))
+    ndir = mixed * norm[:, None]
+    dir_new = jnp.where(scattered[:, None], ndir, dcos)
+
+    # Dead particles are frozen: emit a zero deposit routed to voxel 0.
+    edep = edep * weight
+    out_flat = jnp.where(alive_b & inside, nflat, 0)
+    pos_out = jnp.where(alive_b[:, None], npos, pos)
+    dir_out = jnp.where(alive_b[:, None], dir_new, dcos)
+    e_out = jnp.where(alive_b, e_new, energy)
+    a_out = jnp.where(alive_b, alive_new, alive)
+    edep = jnp.where(alive_b, edep, 0.0)
+    rng_out = rng + jnp.uint32(RNG_DRAWS_PER_STEP)
+
+    return pos_out, dir_out, e_out, a_out, edep, out_flat, rng_out
+
+
+def _transport_kernel(pos_ref, dir_ref, e_ref, w_ref, a_ref, rng_ref,
+                      grid_ref, xs_ref, params_ref,
+                      pos_o, dir_o, e_o, a_o, rng_o, edep_o, vox_o):
+    """Pallas kernel body: one transport step over one particle tile."""
+    pos = pos_ref[...]
+    dcos = dir_ref[...]
+    energy = e_ref[...]
+    weight = w_ref[...]
+    alive = a_ref[...]
+    rng = rng_ref[...]
+    grid = grid_ref[...]
+    xs = xs_ref[...]
+    params = params_ref[...]
+
+    p, dd, e, a, edep, vox, r = _step_math(pos, dcos, energy, weight, alive, rng, grid, xs, params)
+
+    pos_o[...] = p
+    dir_o[...] = dd
+    e_o[...] = e
+    a_o[...] = a
+    rng_o[...] = r
+    edep_o[...] = edep
+    vox_o[...] = vox
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def transport_step_kernel(pos, dcos, energy, weight, alive, rng, grid, xs, params,
+                          tile=None):
+    """One transport step via the Pallas kernel, tiled over particles.
+
+    Args:
+      pos:    f32[B,3]  particle positions (world units).
+      dcos:   f32[B,3]  unit direction cosines.
+      energy: f32[B]    kinetic energy (MeV).
+      weight: f32[B]    statistical weight.
+      alive:  f32[B]    1.0 alive / 0.0 dead.
+      rng:    u32[B]    per-particle RNG counters.
+      grid:   i32[D^3]  flattened material-index grid.
+      xs:     f32[M,6]  per-material (s0, s1, f_abs, f_loss, g, pad).
+      params: f32[8]    (voxel_size, 1/voxel_size, e_cut, max_step, D, pad*3).
+      tile:   particle-axis tile size; must divide B.
+
+    Returns:
+      (pos', dcos', energy', alive', rng', edep[B], vox[B] i32) — per-particle
+      deposit + destination voxel; the caller scatter-adds into the grid.
+    """
+    b = pos.shape[0]
+    if tile is None:
+        tile = min(DEFAULT_TILE, b)
+    if b % tile != 0:
+        raise ValueError(f"batch {b} not divisible by tile {tile}")
+    nblk = b // tile
+    part = lambda ncol=None: pl.BlockSpec(
+        (tile,) if ncol is None else (tile, ncol),
+        (lambda i: (i,)) if ncol is None else (lambda i: (i, 0)),
+    )
+    rep = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, 3), jnp.float32),   # pos
+        jax.ShapeDtypeStruct((b, 3), jnp.float32),   # dir
+        jax.ShapeDtypeStruct((b,), jnp.float32),     # energy
+        jax.ShapeDtypeStruct((b,), jnp.float32),     # alive
+        jax.ShapeDtypeStruct((b,), jnp.uint32),      # rng
+        jax.ShapeDtypeStruct((b,), jnp.float32),     # edep
+        jax.ShapeDtypeStruct((b,), jnp.int32),       # voxel
+    )
+    out_specs = (part(3), part(3), part(), part(), part(), part(), part())
+
+    return pl.pallas_call(
+        _transport_kernel,
+        grid=(nblk,),
+        in_specs=(
+            part(3), part(3), part(), part(), part(), part(),
+            rep(grid.shape), rep(xs.shape), rep(params.shape),
+        ),
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(pos, dcos, energy, weight, alive, rng, grid, xs, params)

@@ -1,0 +1,112 @@
+"""L2 — the JAX compute graph of the Geant4-analog transport engine.
+
+Composes the L1 Pallas kernel with the scoring scatter-add and the K-step
+``lax.scan`` fusion. These are the functions ``aot.py`` lowers to HLO text
+for the Rust coordinator; Python never runs at request time.
+
+State convention (what the Rust side checkpoints as "memory segments"):
+  pos     f32[B,3]   positions
+  dcos    f32[B,3]   direction cosines
+  energy  f32[B]     kinetic energy (MeV)
+  weight  f32[B]     statistical weights
+  alive   f32[B]     1.0 / 0.0 liveness
+  rng     u32[B]     counter-based RNG state
+  edep    f32[D^3]   accumulated energy-deposition scoring grid
+
+Static inputs per run:
+  grid    i32[D^3]   material-index voxel grid
+  xs      f32[M,6]   per-material (s0, s1, f_abs, f_loss, g, pad)
+  params  f32[8]     (voxel_size, 1/voxel_size, e_cut, max_step, D, pad*3)
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.transport import transport_step_kernel
+from compile.kernels.ref import transport_step_ref
+from compile.kernels.spectrum import spectrum_kernel, spectrum_ref, N_BINS
+
+# AOT-time default shapes; the Rust manifest records whatever aot.py used.
+BATCH = 4096
+GRID_D = 32
+N_MAT = 8
+SCAN_STEPS = 8
+
+
+def _scatter_edep(edep_grid, vox, edep):
+    """Accumulate per-particle deposits into the flattened scoring grid."""
+    return edep_grid.at[vox].add(edep)
+
+
+@partial(jax.jit, static_argnames=("use_ref",))
+def transport_step(pos, dcos, energy, weight, alive, rng, edep_grid,
+                   grid, xs, params, use_ref=False):
+    """One transport step + scoring. Returns the advanced state tuple.
+
+    ``use_ref=True`` swaps the Pallas kernel for the pure-jnp oracle (used by
+    tests and the `--ref` AOT variant so the Rust side can A/B them).
+    """
+    step = transport_step_ref if use_ref else transport_step_kernel
+    p, dd, e, a, r, edep, vox = step(pos, dcos, energy, weight, alive, rng, grid, xs, params)
+    return p, dd, e, weight, a, r, _scatter_edep(edep_grid, vox, edep)
+
+
+@partial(jax.jit, static_argnames=("steps", "use_ref"))
+def transport_scan(pos, dcos, energy, weight, alive, rng, edep_grid,
+                   grid, xs, params, steps=SCAN_STEPS, use_ref=False):
+    """``steps`` fused transport steps under ``lax.scan``.
+
+    This is the perf path: one PJRT round-trip (and one host<->device state
+    transfer in the Rust runtime) per ``steps`` kernel applications.
+    """
+    step = transport_step_ref if use_ref else transport_step_kernel
+
+    def body(carry, _):
+        pos, dcos, energy, alive, rng, edep_grid = carry
+        p, dd, e, a, r, edep, vox = step(pos, dcos, energy, weight, alive, rng, grid, xs, params)
+        return (p, dd, e, a, r, _scatter_edep(edep_grid, vox, edep)), ()
+
+    (pos, dcos, energy, alive, rng, edep_grid), _ = jax.lax.scan(
+        body, (pos, dcos, energy, alive, rng, edep_grid), None, length=steps)
+    return pos, dcos, energy, weight, alive, rng, edep_grid
+
+
+@jax.jit
+def score_roi(edep_grid, roi_mask):
+    """Detector readout: (total edep in ROI, total edep, live-voxel count)."""
+    in_roi = edep_grid * roi_mask
+    return (jnp.sum(in_roi),
+            jnp.sum(edep_grid),
+            jnp.sum((edep_grid > 0.0).astype(jnp.float32)))
+
+
+@partial(jax.jit, static_argnames=("use_ref",))
+def detector_spectrum(edep, vox, roi, params, use_ref=False):
+    """Pulse-height spectrum of one step's ROI deposits (K bins).
+
+    The Pallas kernel emits per-tile partials; summing them here keeps the
+    reduction inside the same HLO module.
+    """
+    if use_ref:
+        return spectrum_ref(edep, vox, roi, params)
+    return jnp.sum(spectrum_kernel(edep, vox, roi, params), axis=0)
+
+
+def make_example_args(batch=BATCH, d=GRID_D, n_mat=N_MAT):
+    """ShapeDtypeStructs for AOT lowering (shapes only, no data)."""
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    s = jax.ShapeDtypeStruct
+    return (
+        s((batch, 3), f32),    # pos
+        s((batch, 3), f32),    # dcos
+        s((batch,), f32),      # energy
+        s((batch,), f32),      # weight
+        s((batch,), f32),      # alive
+        s((batch,), u32),      # rng
+        s((d * d * d,), f32),  # edep_grid
+        s((d * d * d,), i32),  # grid
+        s((n_mat, 6), f32),    # xs
+        s((8,), f32),          # params
+    )

@@ -1,0 +1,66 @@
+"""AOT pipeline tests: lowering produces loadable HLO text + sane manifest."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def lowered():
+    # Small shapes: lowering cost only, numerics are covered elsewhere.
+    return aot.lower_all(batch=128, d=8, n_mat=4, steps=2)
+
+
+def test_all_artifacts_present(lowered):
+    assert set(lowered) == {"transport_step", "transport_step_ref",
+                            "transport_scan", "transport_scan_ref", "score_roi",
+                            "detector_spectrum"}
+
+
+def test_hlo_text_well_formed(lowered):
+    for name, text in lowered.items():
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+        # 64-bit-id proto pitfall guard: text must be plain HLO, not bytes
+        assert text.isascii(), name
+
+
+def test_step_hlo_has_expected_shapes(lowered):
+    text = lowered["transport_step"]
+    assert "f32[128,3]" in text      # pos/dir
+    assert "u32[128]" in text        # rng counters
+    assert "s32[512]" in text        # 8^3 material grid
+    assert "f32[512]" in text        # edep grid
+
+
+def test_scan_contains_loop(lowered):
+    assert "while" in lowered["transport_scan"]
+
+
+def test_lowering_deterministic():
+    a = aot.lower_all(batch=64, d=4, n_mat=2, steps=2)
+    b = aot.lower_all(batch=64, d=4, n_mat=2, steps=2)
+    assert a.keys() == b.keys()
+    for k in a:
+        assert a[k] == b[k], f"non-deterministic lowering for {k}"
+
+
+def test_manifest_roundtrip(tmp_path, lowered):
+    path = os.path.join(tmp_path, "manifest.txt")
+    aot.write_manifest(path, lowered, batch=128, d=8, n_mat=4, steps=2)
+    kv = {}
+    arts = {}
+    for line in open(path):
+        parts = line.split()
+        if parts[0] == "artifact":
+            arts[parts[1]] = parts[2]
+        else:
+            kv[parts[0]] = parts[1]
+    assert kv["batch"] == "128"
+    assert kv["grid_d"] == "8"
+    assert kv["scan_steps"] == "2"
+    assert kv["rng_draws_per_step"] == "4"
+    assert set(arts) == set(lowered)
+    assert all(len(v) == 12 for v in arts.values())

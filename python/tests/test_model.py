@@ -1,0 +1,133 @@
+"""L2 correctness: scoring scatter-add, scan fusion, physics invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from tests.test_kernel import make_state
+
+
+def full_state(seed, b, d, m, **kw):
+    args = make_state(seed, b, d, m, **kw)
+    edep_grid = np.zeros(d * d * d, np.float32)
+    st6 = tuple(map(jnp.asarray, args[:6]))
+    return st6 + (jnp.asarray(edep_grid),), tuple(map(jnp.asarray, args[6:]))
+
+
+def test_scan_equals_repeated_steps():
+    state, static = full_state(2, 256, 8, 4)
+    s = state
+    for _ in range(6):
+        s = model.transport_step(*s, *static)
+    out = model.transport_scan(*state, *static, steps=6)
+    for i, (u, v) in enumerate(zip(s, out)):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), rtol=1e-5, atol=1e-6,
+                                   err_msg=f"component {i}")
+
+
+def test_scan_ref_equals_scan_kernel():
+    state, static = full_state(4, 256, 8, 4)
+    a = model.transport_scan(*state, *static, steps=4)
+    b = model.transport_scan(*state, *static, steps=4, use_ref=True)
+    for i, (u, v) in enumerate(zip(a, b)):
+        np.testing.assert_allclose(np.asarray(u), np.asarray(v), rtol=1e-5, atol=1e-6,
+                                   err_msg=f"component {i}")
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), steps=st.integers(1, 8))
+def test_energy_conservation(seed, steps):
+    """Initial energy == deposited + in-flight + carried-off-by-escapes.
+
+    Escaped particles keep their (frozen) energy in the state; absorbed and
+    cutoff particles end at E=0 with everything deposited. With unit weights
+    the books must balance to float tolerance.
+    """
+    state, static = full_state(seed, 256, 8, 4)
+    # unit weights for clean accounting
+    state = state[:3] + (jnp.ones_like(state[3]),) + state[4:]
+    e0 = float(jnp.sum(state[2] * state[4]))  # alive energy in
+    dead_e0 = float(jnp.sum(state[2] * (1 - state[4])))
+    out = model.transport_scan(*state, *static, steps=steps)
+    e_state = float(jnp.sum(out[2]))
+    deposited = float(jnp.sum(out[6]))
+    np.testing.assert_allclose(e0 + dead_e0, e_state + deposited, rtol=1e-4)
+
+
+def test_alive_count_monotone_nonincreasing():
+    state, static = full_state(8, 512, 8, 4)
+    prev = float(jnp.sum(state[4]))
+    s = state
+    for _ in range(10):
+        s = model.transport_step(*s, *static)
+        cur = float(jnp.sum(s[4]))
+        assert cur <= prev + 1e-6
+        prev = cur
+
+
+def test_scatter_add_matches_numpy():
+    state, static = full_state(6, 256, 8, 4)
+    from compile.kernels.ref import transport_step_ref
+    p, dd, e, a, r, edep, vox = transport_step_ref(*state[:6], *static)
+    want = np.zeros(8 * 8 * 8, np.float32)
+    np.add.at(want, np.asarray(vox), np.asarray(edep))
+    got = np.asarray(model.transport_step(*state, *static)[6])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_edep_grid_accumulates_across_calls():
+    state, static = full_state(10, 256, 8, 4)
+    s1 = model.transport_step(*state, *static)
+    s2 = model.transport_step(*s1, *static)
+    per_step2 = model.transport_step(*s1[:6], jnp.zeros_like(state[6]), *static)[6]
+    np.testing.assert_allclose(np.asarray(s2[6]), np.asarray(s1[6]) + np.asarray(per_step2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_score_roi():
+    d3 = 4 * 4 * 4
+    edep = jnp.asarray(np.arange(d3, dtype=np.float32))
+    mask = jnp.asarray((np.arange(d3) % 2 == 0).astype(np.float32))
+    roi, total, live = model.score_roi(edep, mask)
+    assert float(total) == float(np.arange(d3).sum())
+    assert float(roi) == float(np.arange(0, d3, 2).sum())
+    assert int(live) == d3 - 1  # voxel 0 has zero deposit
+
+
+def test_weight_passthrough():
+    state, static = full_state(12, 128, 8, 2)
+    out = model.transport_step(*state, *static)
+    np.testing.assert_array_equal(np.asarray(out[3]), np.asarray(state[3]))
+
+
+def test_make_example_args_shapes():
+    args = model.make_example_args(batch=128, d=8, n_mat=4)
+    assert args[0].shape == (128, 3)
+    assert args[6].shape == (8 * 8 * 8,)
+    assert args[7].shape == (8 * 8 * 8,)
+    assert args[8].shape == (4, 6)
+    assert str(args[5].dtype) == "uint32"
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k1=st.integers(1, 5), k2=st.integers(1, 5))
+def test_scan_split_equivalence(seed, k1, k2):
+    """The C/R keystone at L2: running k1+k2 steps in one scan equals
+    running k1, checkpointing (i.e. materializing the carry), and running
+    k2 — bitwise for integer state. This is what licenses checkpointing at
+    any scan boundary."""
+    state, static = full_state(seed, 256, 8, 4)
+    whole = model.transport_scan(*state, *static, steps=k1 + k2)
+    mid = model.transport_scan(*state, *static, steps=k1)
+    # "checkpoint": round-trip the carry through host numpy (as the Rust
+    # runtime does between scans) and resume.
+    mid_host = tuple(jnp.asarray(np.asarray(x)) for x in mid)
+    resumed = model.transport_scan(*mid_host, *static, steps=k2)
+    for i, (u, v) in enumerate(zip(whole, resumed)):
+        u, v = np.asarray(u), np.asarray(v)
+        if u.dtype.kind in "ui":
+            np.testing.assert_array_equal(u, v, err_msg=f"component {i}")
+        else:
+            np.testing.assert_allclose(u, v, rtol=1e-5, atol=1e-6,
+                                       err_msg=f"component {i}")

@@ -1,0 +1,137 @@
+//! Ablation: checkpoint interval vs overhead vs work-at-risk (the
+//! Young/Daly trade-off behind the CR module's interval default).
+//!
+//! For each interval, a fleet of preemptable jobs runs through a fixed
+//! random-preemption trace on the scheduler simulator; we report the
+//! walltime overhead paid to checkpointing and the work actually lost to
+//! preemptions (distance from the last checkpoint when SIGTERM lands is
+//! zero here because the func_trap checkpoints during grace — so we also
+//! run a *no-signal* variant where preemption kills without a grace
+//! checkpoint, which is where the interval matters).
+//!
+//! Run: `cargo bench --bench ablation_interval`
+
+use nersc_cr::report::Table;
+use nersc_cr::simclock::SimTime;
+use nersc_cr::slurm::{CrMode, JobSpec, JobState, Partition, SlurmSim};
+use nersc_cr::util::rng::SplitMix64;
+
+/// Preemption-heavy campaign; returns (makespan, total ckpt overhead paid,
+/// work lost, completed jobs).
+fn campaign(interval: SimTime, overhead: SimTime, grace_ckpt: bool) -> (SimTime, u64, u64, usize) {
+    let mut parts = Partition::standard_set();
+    if !grace_ckpt {
+        // No grace: preemption reaps instantly, so recovery rides on the
+        // last *periodic* checkpoint.
+        for p in parts.iter_mut() {
+            p.grace_period = 0;
+        }
+    }
+    let mut s = SlurmSim::new(4, parts);
+    let mut rng = SplitMix64::new(42);
+    let mut ids = Vec::new();
+    for i in 0..12 {
+        ids.push(
+            s.submit_at(
+                JobSpec {
+                    name: format!("j{i}"),
+                    partition: "preempt".into(),
+                    nodes: 1,
+                    work_total: 4_000,
+                    time_limit: 10_000,
+                    requeue: true,
+                    signal: None, // interval ablation: no signal-time ckpt
+                    comment: String::new(),
+                    time_min: None,
+                    cr: CrMode::CheckpointRestart { interval, overhead },
+                },
+                rng.gen_range(500),
+            )
+            .unwrap(),
+        );
+    }
+    // Waves of urgent work force preemptions at uncorrelated times.
+    for k in 0..10 {
+        s.submit_at(
+            JobSpec {
+                partition: "realtime".into(),
+                nodes: 2 + (k % 3) as u32,
+                work_total: 400 + rng.gen_range(800),
+                time_limit: 3_600,
+                ..Default::default()
+            },
+            1_000 + k * 1_700 + rng.gen_range(400),
+        )
+        .unwrap();
+    }
+    s.run(400_000);
+    let makespan = ids
+        .iter()
+        .filter_map(|id| s.job(*id).unwrap().end_time)
+        .max()
+        .unwrap_or(0);
+    let lost: u64 = ids.iter().map(|id| s.job(*id).unwrap().work_lost).sum();
+    let ckpts: u64 = ids.iter().map(|id| s.job(*id).unwrap().checkpoints as u64).sum();
+    let done = ids
+        .iter()
+        .filter(|id| s.job(**id).unwrap().state == JobState::Completed)
+        .count();
+    (makespan, ckpts * overhead, lost, done)
+}
+
+fn main() {
+    println!("== ablation: checkpoint interval (no signal-time checkpoint; overhead 10 s/ckpt) ==\n");
+    let overhead = 10;
+    let mut t = Table::new(&[
+        "interval (s)",
+        "ckpt overhead paid (s)",
+        "work lost (s)",
+        "completed",
+        "makespan",
+    ]);
+    let mut results = Vec::new();
+    for &interval in &[30u64, 60, 120, 300, 600, 1_200, 2_400] {
+        let (makespan, paid, lost, done) = campaign(interval, overhead, false);
+        results.push((interval, paid, lost, makespan));
+        t.row(&[
+            interval.to_string(),
+            paid.to_string(),
+            lost.to_string(),
+            format!("12/{done}").replace("12/", "") + "/12",
+            crate_fmt(makespan),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // The trade-off must be visible: frequent checkpoints pay more
+    // overhead; rare checkpoints lose more work on preemption.
+    let paid_30 = results[0].1;
+    let paid_2400 = results.last().unwrap().1;
+    let lost_30 = results[0].2;
+    let lost_2400 = results.last().unwrap().2;
+    let mut ok = true;
+    for (name, pass) in [
+        ("short intervals pay more overhead", paid_30 > paid_2400),
+        ("long intervals lose more work", lost_2400 > lost_30),
+    ] {
+        println!("  [{}] {name}", if pass { "PASS" } else { "FAIL" });
+        ok &= pass;
+    }
+
+    println!(
+        "\nwith the paper's signal-time (func_trap) checkpointing, the loss term vanishes:\n"
+    );
+    let mut t2 = Table::new(&["interval (s)", "work lost (s)", "completed"]);
+    for &interval in &[120u64, 600, 2_400] {
+        let (_, _, lost, done) = campaign(interval, overhead, true);
+        t2.row(&[interval.to_string(), lost.to_string(), format!("{done}/12")]);
+    }
+    println!("{}", t2.render());
+    if !ok {
+        std::process::exit(1);
+    }
+}
+
+fn crate_fmt(secs: SimTime) -> String {
+    nersc_cr::util::format_hms(secs)
+}

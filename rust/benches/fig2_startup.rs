@@ -1,0 +1,109 @@
+//! Fig 2 reproduction: mean `from mpi4py import MPI` time vs MPI ranks
+//! across the six environments (HOME, SCRATCH, NERSC module, CVMFS,
+//! shifter, podman-hpc) on the filesystem startup-performance models.
+//!
+//! The paper's claims checked here (shape, not absolute numbers):
+//!  * import time grows with ranks on shared filesystems,
+//!  * a knee at 128 ranks (single-node -> multi-node),
+//!  * container runtimes beat shared filesystems at scale,
+//!  * shifter out-performs all others,
+//!  * podman-hpc is comparable to the optimized shared filesystems.
+//!
+//! Run: `cargo bench --bench fig2_startup`
+
+use nersc_cr::fsmodel::Environment;
+use nersc_cr::metrics::{ascii_chart, TimeSeries};
+use nersc_cr::report::Table;
+
+const RANKS: [u32; 10] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+
+fn main() {
+    println!("== Fig 2: mean `from mpi4py import MPI` time (s) vs MPI ranks ==");
+    println!("   (128 ranks/node; environments as on Perlmutter CPU nodes)\n");
+
+    let envs = Environment::all();
+    let mut header: Vec<String> = vec!["ranks".into()];
+    header.extend(envs.iter().map(|e| e.label().to_string()));
+    let header_refs: Vec<&str> = header.iter().map(String::as_str).collect();
+    let mut t = Table::new(&header_refs);
+
+    let mut curves: Vec<TimeSeries> = envs
+        .iter()
+        .map(|e| TimeSeries::new(e.label()))
+        .collect();
+    for &r in &RANKS {
+        let mut row = vec![r.to_string()];
+        for (i, env) in envs.iter().enumerate() {
+            let secs = env.import_time(r);
+            curves[i].push(r as f64, secs);
+            row.push(format!("{secs:.2}"));
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+
+    // Shape assertions (the paper's qualitative findings).
+    let at = |e: Environment, r: u32| e.import_time(r);
+    let mut checks: Vec<(&str, bool)> = Vec::new();
+    checks.push((
+        "shared FS monotone in ranks",
+        RANKS.windows(2).all(|w| {
+            [Environment::Home, Environment::Scratch, Environment::CommonSw]
+                .iter()
+                .all(|e| at(*e, w[1]) > at(*e, w[0]))
+        }),
+    ));
+    checks.push((
+        "knee at 128 ranks (multi-node transition)",
+        {
+            let e = Environment::Scratch;
+            (at(e, 192) - at(e, 128)) > (at(e, 128) - at(e, 64))
+        },
+    ));
+    checks.push((
+        "shifter fastest at every scale >= 64",
+        [64, 128, 256, 512].iter().all(|&r| {
+            envs.iter()
+                .filter(|e| **e != Environment::Shifter)
+                .all(|e| at(Environment::Shifter, r) < at(*e, r))
+        }),
+    ));
+    checks.push((
+        "podman-hpc comparable to optimized FS at 512 ranks",
+        {
+            let p = at(Environment::PodmanHpc, 512);
+            let c = at(Environment::CommonSw, 512);
+            p < 2.0 * c && p < at(Environment::Home, 512) && p < at(Environment::Scratch, 512)
+        },
+    ));
+    checks.push((
+        "containers effective at small scale too",
+        at(Environment::Shifter, 1) < at(Environment::Home, 1),
+    ));
+
+    println!("paper-shape checks:");
+    let mut ok = true;
+    for (name, pass) in &checks {
+        println!("  [{}] {}", if *pass { "PASS" } else { "FAIL" }, name);
+        ok &= *pass;
+    }
+
+    // Log-ish visual: chart the extremes.
+    println!();
+    for name in ["SCRATCH", "shifter"] {
+        let c = curves.iter().find(|c| c.name == name).unwrap();
+        println!("{}", ascii_chart(c, 60, 8));
+    }
+
+    // CSV for external plotting.
+    let refs: Vec<&TimeSeries> = curves.iter().collect();
+    let csv = nersc_cr::metrics::to_csv(&refs);
+    let out = std::path::Path::new("target/fig2_startup.csv");
+    std::fs::create_dir_all("target").ok();
+    std::fs::write(out, csv).ok();
+    println!("wrote {}", out.display());
+
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,192 @@
+//! Fig 4 reproduction: memory and CPU utilization over time for the three
+//! strategies — without C/R, checkpoint-only, and checkpoint-restart —
+//! measured by the LDMS-analog sampler over *real* runs (PJRT transport,
+//! TCP coordinator, images on disk). The checkpoint-restart run includes a
+//! preemption + requeue gap + restart "on a new node" (fresh coordinator),
+//! like the paper's 29th–45th-minute gap.
+//!
+//! Run: `cargo bench --bench fig4_cr_timeseries`
+
+use std::time::Duration;
+
+use nersc_cr::cr::{run_auto, CrPolicy, CrReport};
+use nersc_cr::metrics::{ascii_chart, to_csv, BASE_PROCESS_OVERHEAD};
+use nersc_cr::report::{human_bytes, Table};
+use nersc_cr::runtime::service;
+use nersc_cr::workload::{G4App, G4Version, WorkloadKind};
+
+fn run(label: &str, policy: &CrPolicy, target_scans: u64, seed: u64) -> CrReport {
+    let h = service::shared().expect("compute service");
+    let app = G4App::build(
+        WorkloadKind::EmCalorimeter,
+        G4Version::V10_7,
+        h.manifest().grid_d,
+    );
+    let target = target_scans * h.manifest().scan_steps as u64;
+    let wd = std::env::temp_dir().join(format!(
+        "ncr_fig4_{label}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&wd);
+    std::fs::create_dir_all(&wd).unwrap();
+    let report = run_auto(&app, &h, target, seed, policy, &wd).expect(label);
+    std::fs::remove_dir_all(&wd).ok();
+    report
+}
+
+fn main() {
+    nersc_cr::logging::init();
+    println!("== Fig 4: memory/CPU over time — no C/R vs checkpoint-only vs checkpoint-restart ==\n");
+    let scans = 600;
+    let seed = 4242;
+
+    // Top/middle panels, interleaved x3 so the wall-clock comparison uses
+    // medians (checkpoint cost is small relative to run-to-run noise at
+    // this state scale).
+    let no_cr_policy = CrPolicy {
+        periodic_ckpt: false,
+        ckpt_on_signal: false,
+        ..Default::default()
+    };
+    let ckpt_only_policy = CrPolicy {
+        ckpt_interval: Duration::from_millis(250),
+        ..Default::default()
+    };
+    let mut walls_a = Vec::new();
+    let mut walls_b = Vec::new();
+    let mut no_cr = None;
+    let mut ckpt_only = None;
+    for _ in 0..3 {
+        let a = run("noCR", &no_cr_policy, scans, seed);
+        walls_a.push(a.wall_secs);
+        no_cr = Some(a);
+        let b = run("ckptOnly", &ckpt_only_policy, scans, seed);
+        walls_b.push(b.wall_secs);
+        ckpt_only = Some(b);
+    }
+    let (mut no_cr, mut ckpt_only) = (no_cr.unwrap(), ckpt_only.unwrap());
+    walls_a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    walls_b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    no_cr.wall_secs = walls_a[1];
+    ckpt_only.wall_secs = walls_b[1];
+    // Bottom panel: checkpoint-restart with a mid-run preemption and a
+    // visible requeue gap before restarting on a "new node".
+    let ckpt_restart = run(
+        "ckptRestart",
+        &CrPolicy {
+            ckpt_interval: Duration::from_millis(250),
+            preempt_after: vec![Duration::from_millis(900)],
+            requeue_delay: Duration::from_millis(600),
+            ..Default::default()
+        },
+        scans,
+        seed,
+    );
+
+    // All three must produce identical physics (C/R transparency).
+    assert_eq!(
+        no_cr.final_state.particles, ckpt_only.final_state.particles,
+        "checkpointing changed the physics!"
+    );
+    assert_eq!(
+        no_cr.final_state.particles, ckpt_restart.final_state.particles,
+        "preempt+restart changed the physics!"
+    );
+
+    let runs = [
+        ("without C/R", &no_cr),
+        ("checkpoint-only", &ckpt_only),
+        ("checkpoint-restart", &ckpt_restart),
+    ];
+    let mut t = Table::new(&[
+        "strategy",
+        "wall (s)",
+        "ckpts",
+        "images",
+        "mem mean",
+        "mem peak",
+        "cpu mean",
+        "restarts",
+    ]);
+    for (label, r) in &runs {
+        t.row(&[
+            label.to_string(),
+            format!("{:.2}", r.wall_secs),
+            r.checkpoints.to_string(),
+            human_bytes(r.total_image_bytes),
+            human_bytes(r.series.memory.mean() as u64),
+            human_bytes(r.series.memory.max() as u64),
+            format!("{:.2}", r.series.cpu.mean()),
+            r.incarnations.saturating_sub(1).to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // The paper's quantitative observations.
+    let mem_overhead =
+        (ckpt_only.series.memory.max() - no_cr.series.memory.mean()) / no_cr.series.memory.mean();
+    let runtime_ext = ckpt_only.wall_secs - no_cr.wall_secs;
+    println!(
+        "checkpoint-only: runtime extended by {:.2}s, peak memory +{:.2}% over no-C/R baseline",
+        runtime_ext,
+        mem_overhead * 100.0
+    );
+    println!(
+        "  (paper: \"moderately extends task duration (by a few minutes) and increases memory \
+         demands (~0.8%)\" — at our state scale the transient is {} on a {} baseline)",
+        human_bytes(ckpt_only.final_state.particles.size_bytes() as u64),
+        human_bytes(BASE_PROCESS_OVERHEAD)
+    );
+    let gap = ckpt_restart.wall_secs - ckpt_only.wall_secs;
+    println!(
+        "checkpoint-restart: completes {:.2}s later (preemption + {}ms queue gap + restart), \
+         with {} restart(s) and zero lost work\n",
+        gap, 600, ckpt_restart.incarnations - 1
+    );
+
+    // The three panels, charted.
+    for (label, r) in &runs {
+        println!("--- {label}: memory ---");
+        println!("{}", ascii_chart(&r.series.memory, 72, 6));
+        println!("--- {label}: cpu ---");
+        println!("{}", ascii_chart(&r.series.cpu, 72, 4));
+    }
+
+    // CSVs for external plotting.
+    std::fs::create_dir_all("target").ok();
+    for (tag, r) in [("no_cr", &no_cr), ("ckpt_only", &ckpt_only), ("ckpt_restart", &ckpt_restart)]
+    {
+        let path = format!("target/fig4_{tag}.csv");
+        std::fs::write(&path, to_csv(&[&r.series.memory, &r.series.cpu, &r.series.steps])).ok();
+        println!("wrote {path}");
+    }
+
+    // Shape checks.
+    let mut ok = true;
+    for (name, pass) in [
+        (
+            "no-C/R is the fastest (baseline, median of 3, 3% tolerance)",
+            no_cr.wall_secs <= ckpt_only.wall_secs * 1.03
+                && no_cr.wall_secs <= ckpt_restart.wall_secs,
+        ),
+        ("checkpoint-only took checkpoints", ckpt_only.checkpoints >= 2),
+        (
+            "checkpoint-restart shows the preemption gap",
+            ckpt_restart.wall_secs > ckpt_only.wall_secs,
+        ),
+        (
+            "restart happened on a new incarnation",
+            ckpt_restart.incarnations == 2,
+        ),
+        (
+            "CPU dips during checkpoints (ckpt-only cpu hits 0 at barriers)",
+            ckpt_only.series.cpu.min() < 0.99,
+        ),
+    ] {
+        println!("  [{}] {name}", if pass { "PASS" } else { "FAIL" });
+        ok &= pass;
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,94 @@
+//! §VI robustness matrix: every workload × Geant4 version is preempted,
+//! resumed and brought to completion, with the result verified
+//! **bit-identical** to an uninterrupted run — a strictly stronger check
+//! than the paper's "successful completion".
+//!
+//! Run: `cargo bench --bench results_matrix`
+
+use std::time::{Duration, Instant};
+
+use nersc_cr::cr::{run_auto, CrPolicy};
+use nersc_cr::report::{human_bytes, Table};
+use nersc_cr::runtime::service;
+use nersc_cr::workload::{G4App, G4Version, WorkloadKind};
+
+fn main() {
+    nersc_cr::logging::init();
+    let h = service::shared().expect("compute service");
+    let m = h.manifest().clone();
+    let target = 60 * m.scan_steps as u64;
+    println!(
+        "== §VI robustness matrix: {} workloads x {} versions, {} steps each, 1 preemption ==\n",
+        WorkloadKind::all().len(),
+        G4Version::all().len(),
+        target
+    );
+
+    let mut t = Table::new(&[
+        "workload", "g4", "preempted", "resumed@step", "completed", "bitwise", "wall (s)", "images",
+    ]);
+    let mut all_ok = true;
+    let t0 = Instant::now();
+
+    for (wi, kind) in WorkloadKind::all().iter().enumerate() {
+        for (vi, version) in G4Version::all().iter().enumerate() {
+            let app = G4App::build(*kind, *version, m.grid_d);
+            let seed = 31_000 + (wi * 10 + vi) as u64;
+            let wd = std::env::temp_dir().join(format!(
+                "ncr_matrix_{}_{}_{}",
+                std::process::id(),
+                wi,
+                vi
+            ));
+            let _ = std::fs::remove_dir_all(&wd);
+            std::fs::create_dir_all(&wd).unwrap();
+            let policy = CrPolicy {
+                ckpt_interval: Duration::from_millis(80),
+                preempt_after: vec![Duration::from_millis(120)],
+                requeue_delay: Duration::from_millis(10),
+                ..Default::default()
+            };
+            let tw = Instant::now();
+            let report = run_auto(&app, &h, target, seed, &policy, &wd).expect("run_auto");
+            let wall = tw.elapsed().as_secs_f64();
+
+            let mut reference = app.fresh_state(m.batch, target, seed);
+            reference.particles = h
+                .scan(reference.particles, &app.si, (target / m.scan_steps as u64) as u32)
+                .unwrap();
+            let bitwise = report.final_state.particles == reference.particles;
+            let preempted = report.incarnations > 1;
+            all_ok &= bitwise && report.completed;
+
+            t.row(&[
+                kind.label(),
+                version.label().to_string(),
+                if preempted { "yes" } else { "no (finished first)" }.to_string(),
+                report
+                    .restart_steps
+                    .first()
+                    .map(|s| s.to_string())
+                    .unwrap_or_else(|| "-".into()),
+                report.completed.to_string(),
+                if bitwise { "OK" } else { "MISMATCH" }.to_string(),
+                format!("{wall:.2}"),
+                human_bytes(report.total_image_bytes),
+            ]);
+            std::fs::remove_dir_all(&wd).ok();
+        }
+    }
+
+    println!("{}", t.render());
+    println!(
+        "matrix wall time {:.1}s — {}",
+        t0.elapsed().as_secs_f64(),
+        if all_ok {
+            "ALL CELLS COMPLETED BIT-IDENTICALLY ✓"
+        } else {
+            "FAILURES PRESENT"
+        }
+    );
+    if !all_ok {
+        std::process::exit(1);
+    }
+}

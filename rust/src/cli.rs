@@ -1,0 +1,325 @@
+//! The `nersc-cr` command-line interface.
+//!
+//! Mirrors the operational commands of the paper's environment:
+//!
+//! ```text
+//! nersc-cr coordinator --jobid 123 --workdir DIR      # dmtcp_coordinator
+//! nersc-cr command --file dmtcp_command.123 status    # dmtcp_command
+//! nersc-cr command --file dmtcp_command.123 checkpoint
+//! nersc-cr command --file dmtcp_command.123 quit
+//! nersc-cr inspect IMAGE.dmtcp                        # dmtcp_restart --inspect
+//! nersc-cr sbatch SCRIPT [--cluster-nodes N]          # submit to the simulator
+//! nersc-cr run --workload water-phantom --g4 10.7 --steps 640 [--preempt MS]
+//! nersc-cr fig2 [--ranks 512]                         # startup-model table
+//! nersc-cr version
+//! ```
+//!
+//! (Hand-rolled parser: clap is not in the offline dependency closure.)
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Parse `--key value` / `--flag` style options.
+struct Opts {
+    positional: Vec<String>,
+    named: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Opts {
+    fn parse(args: &[String], known_flags: &[&str]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut named = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if known_flags.contains(&key) {
+                    flags.push(key.to_string());
+                } else if let Some((k, v)) = key.split_once('=') {
+                    named.insert(k.to_string(), v.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| Error::Usage(format!("--{key} needs a value")))?;
+                    named.insert(key.to_string(), v.clone());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Self {
+            positional,
+            named,
+            flags,
+        })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(String::as_str)
+    }
+
+    fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    fn has_flag(&self, f: &str) -> bool {
+        self.flags.iter().any(|x| x == f)
+    }
+}
+
+const USAGE: &str = "\
+nersc-cr — checkpoint-restart for HPC with a DMTCP-style coordinator
+
+subcommands:
+  coordinator --jobid ID [--workdir DIR] [--no-gzip]   start a coordinator (blocks)
+  command --file PATH (status|checkpoint|quit)         control a coordinator
+  inspect IMAGE.dmtcp                                  show an image header
+  sbatch SCRIPT [--cluster-nodes N]                    simulate a batch script
+  run --workload NAME --g4 VER --steps N [--preempt MS] [--workdir DIR]
+                                                       run a workload under auto C/R
+  fig2 [--ranks N]                                     container-startup table
+  workloads                                            list workload names
+  version";
+
+/// Dispatch `nersc-cr <subcommand> ...`.
+pub fn run(args: Vec<String>) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        None | Some("help") | Some("--help") => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some("version") => {
+            println!("nersc-cr {}", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        Some("coordinator") => cmd_coordinator(&args[1..]),
+        Some("command") => cmd_command(&args[1..]),
+        Some("inspect") => cmd_inspect(&args[1..]),
+        Some("sbatch") => cmd_sbatch(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("fig2") => cmd_fig2(&args[1..]),
+        Some("workloads") => {
+            for k in crate::workload::WorkloadKind::all() {
+                println!("{}", k.label());
+            }
+            Ok(())
+        }
+        Some(other) => Err(Error::Usage(format!(
+            "unknown subcommand {other:?}\n{USAGE}"
+        ))),
+    }
+}
+
+fn cmd_coordinator(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &["no-gzip"])?;
+    let jobid = o
+        .get("jobid")
+        .ok_or_else(|| Error::Usage("coordinator needs --jobid".into()))?;
+    let workdir = PathBuf::from(o.get_or("workdir", "."));
+    let mut cfg = crate::cr::CrConfig::new(jobid, workdir);
+    cfg.gzip = !o.has_flag("no-gzip");
+    let (coord, env) = crate::cr::start_coordinator(&cfg)?;
+    println!("coordinator listening on {}", coord.addr());
+    println!("rendezvous file: {}", coord.command_file().unwrap().display());
+    for (k, v) in env {
+        println!("export {k}={v}");
+    }
+    println!("(blocking; `nersc-cr command --file ... quit` to stop)");
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        let (clients, last, _) = coord.status();
+        log::debug!("clients={clients} last_ckpt={last}");
+    }
+}
+
+fn cmd_command(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let file = o
+        .get("file")
+        .ok_or_else(|| Error::Usage("command needs --file".into()))?;
+    let cmd = crate::dmtcp::DmtcpCommand::from_command_file(std::path::Path::new(file))?;
+    match o.positional.first().map(String::as_str) {
+        Some("status") | None => {
+            let s = cmd.status()?;
+            println!(
+                "clients={} last_ckpt_id={} epoch={}",
+                s.clients, s.last_ckpt_id, s.epoch
+            );
+        }
+        Some("checkpoint") => {
+            let r = cmd.checkpoint()?;
+            println!(
+                "checkpoint #{}: {} images, {} stored",
+                r.ckpt_id,
+                r.images,
+                crate::report::human_bytes(r.total_stored_bytes)
+            );
+        }
+        Some("quit") => {
+            cmd.quit()?;
+            println!("coordinator asked to quit");
+        }
+        Some(other) => return Err(Error::Usage(format!("unknown command {other:?}"))),
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let path = o
+        .positional
+        .first()
+        .ok_or_else(|| Error::Usage("inspect needs an image path".into()))?;
+    let h = crate::dmtcp::inspect_image(std::path::Path::new(path))?;
+    println!("image: {path}");
+    println!("  process : {} (vpid {})", h.name, h.vpid);
+    println!("  ckpt id : {} (generation {})", h.ckpt_id, h.generation);
+    println!("  progress: {} steps", h.steps_done);
+    println!("  env     : {} vars", h.env.len());
+    println!("  fds     : {}", h.fds.len());
+    println!(
+        "  plugins : {:?}",
+        h.plugin_records.keys().collect::<Vec<_>>()
+    );
+    Ok(())
+}
+
+fn cmd_sbatch(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let script_path = o
+        .positional
+        .first()
+        .ok_or_else(|| Error::Usage("sbatch needs a script path".into()))?;
+    let text = std::fs::read_to_string(script_path)?;
+    let spec = crate::slurm::parse_script(&text)?;
+    let nodes: usize = o.get_or("cluster-nodes", "4").parse().unwrap_or(4);
+    let mut sim = crate::slurm::SlurmSim::new(nodes, crate::slurm::Partition::standard_set());
+    let id = sim.submit(spec)?;
+    sim.run(u64::MAX);
+    let j = sim.job(id).unwrap();
+    println!("job {id} on a {nodes}-node simulated cluster:");
+    println!("  state      : {:?}", j.state);
+    println!("  requeues   : {}", j.requeues);
+    println!("  checkpoints: {}", j.checkpoints);
+    println!(
+        "  end        : {}",
+        j.end_time
+            .map(crate::util::format_hms)
+            .unwrap_or_else(|| "-".into())
+    );
+    println!("  work lost  : {}s", j.work_lost);
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let wl_name = o.get_or("workload", "water-phantom");
+    let kind = crate::workload::WorkloadKind::all()
+        .into_iter()
+        .find(|k| k.label() == wl_name)
+        .ok_or_else(|| Error::Usage(format!("unknown workload {wl_name:?} (see `workloads`)")))?;
+    let version = match o.get_or("g4", "10.7").as_str() {
+        "10.5" => crate::workload::G4Version::V10_5,
+        "10.7" => crate::workload::G4Version::V10_7,
+        "11.0" => crate::workload::G4Version::V11_0,
+        v => return Err(Error::Usage(format!("unknown g4 version {v:?}"))),
+    };
+    let h = crate::runtime::service::shared()?;
+    let steps: u64 = o.get_or("steps", "480").parse().unwrap_or(480);
+    let workdir = PathBuf::from(o.get_or(
+        "workdir",
+        &std::env::temp_dir()
+            .join(format!("ncr_cli_{}", std::process::id()))
+            .to_string_lossy(),
+    ));
+    std::fs::create_dir_all(&workdir)?;
+    let mut policy = crate::cr::CrPolicy::default();
+    if let Some(ms) = o.get("preempt") {
+        let ms: u64 = ms.parse().map_err(|_| Error::Usage("bad --preempt".into()))?;
+        policy.preempt_after = vec![Duration::from_millis(ms)];
+    }
+    let app = crate::workload::G4App::build(kind, version, h.manifest().grid_d);
+    let report = crate::cr::run_auto(&app, &h, steps, 7, &policy, &workdir)?;
+    println!(
+        "completed={} incarnations={} checkpoints={} images={} wall={:.2}s steps={}",
+        report.completed,
+        report.incarnations,
+        report.checkpoints,
+        crate::report::human_bytes(report.total_image_bytes),
+        report.wall_secs,
+        report.final_state.particles.steps_done
+    );
+    let (roi, total, hits) = h.score_roi(
+        report.final_state.particles.edep.clone(),
+        app.workload.roi.clone(),
+    )?;
+    let det = crate::workload::reading(&app.workload, roi, total, hits);
+    println!(
+        "detector: roi={roi:.2} MeV total={total:.2} MeV hits={hits} counts={}",
+        det.counts
+    );
+    Ok(())
+}
+
+fn cmd_fig2(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let max_ranks: u32 = o.get_or("ranks", "512").parse().unwrap_or(512);
+    let mut r = 1u32;
+    println!(
+        "{:>6} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "ranks", "HOME", "SCRATCH", "module", "CVMFS", "shifter", "podman"
+    );
+    while r <= max_ranks {
+        let row: Vec<f64> = crate::fsmodel::Environment::all()
+            .iter()
+            .map(|e| e.import_time(r))
+            .collect();
+        println!(
+            "{:>6} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+            r, row[0], row[1], row[2], row[3], row[4], row[5]
+        );
+        r *= 2;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opts_parsing() {
+        let args: Vec<String> = ["pos1", "--key", "val", "--k2=v2", "--no-gzip", "pos2"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let o = Opts::parse(&args, &["no-gzip"]).unwrap();
+        assert_eq!(o.positional, vec!["pos1", "pos2"]);
+        assert_eq!(o.get("key"), Some("val"));
+        assert_eq!(o.get("k2"), Some("v2"));
+        assert!(o.has_flag("no-gzip"));
+        assert!(!o.has_flag("other"));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        let args = vec!["--key".to_string()];
+        assert!(Opts::parse(&args, &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(run(vec!["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn version_and_workloads_run() {
+        run(vec!["version".into()]).unwrap();
+        run(vec!["workloads".into()]).unwrap();
+        run(vec!["fig2".into(), "--ranks".into(), "8".into()]).unwrap();
+    }
+}

@@ -1,0 +1,309 @@
+//! Container images and Containerfile builds.
+//!
+//! "A Containerfile is a more general form of a Dockerfile—they follow the
+//! same syntax" — this module parses that syntax (the subset the paper's
+//! workflows use: FROM/RUN/COPY/ENV/WORKDIR/LABEL/ENTRYPOINT) and models
+//! builds as layer stacks. The detail that matters most to the paper is
+//! tracked explicitly: **whether DMTCP was installed inside the image**
+//! ("DMTCP can not perform a checkpoint from outside the container; it has
+//! to be included within the container at the time of its creation").
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// One image layer (one build instruction's effect).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    /// The instruction that produced the layer (for `history`).
+    pub instruction: String,
+    /// Bytes this layer adds.
+    pub size_bytes: u64,
+}
+
+/// A container image.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Image {
+    pub name: String,
+    pub tag: String,
+    pub layers: Vec<Layer>,
+    pub env: BTreeMap<String, String>,
+    pub entrypoint: Option<String>,
+    pub labels: BTreeMap<String, String>,
+    /// DMTCP is installed inside this image (checkpointing prerequisite).
+    pub has_dmtcp: bool,
+}
+
+impl Image {
+    /// `name:tag` reference.
+    pub fn reference(&self) -> String {
+        format!("{}:{}", self.name, self.tag)
+    }
+
+    /// Total image size.
+    pub fn size_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.size_bytes).sum()
+    }
+
+    /// A minimal base image (think `docker.io/library/ubuntu`).
+    pub fn base(name: &str, tag: &str, size_bytes: u64) -> Self {
+        Self {
+            name: name.into(),
+            tag: tag.into(),
+            layers: vec![Layer {
+                instruction: format!("FROM scratch ({name}:{tag})"),
+                size_bytes,
+            }],
+            ..Default::default()
+        }
+    }
+}
+
+/// A parsed Containerfile instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instruction {
+    From(String),
+    Run(String),
+    Copy { src: String, dst: String },
+    Env { key: String, val: String },
+    Workdir(String),
+    Label { key: String, val: String },
+    Entrypoint(String),
+}
+
+/// Parse a Containerfile/Dockerfile (line continuations supported).
+pub fn parse_containerfile(text: &str) -> Result<Vec<Instruction>> {
+    // Join continuation lines first.
+    let mut joined: Vec<String> = Vec::new();
+    let mut acc = String::new();
+    for raw in text.lines() {
+        let line = raw.trim_end();
+        let trimmed = line.trim_start();
+        if trimmed.is_empty() || (trimmed.starts_with('#') && acc.is_empty()) {
+            continue;
+        }
+        if let Some(head) = line.strip_suffix('\\') {
+            acc.push_str(head);
+            acc.push(' ');
+        } else {
+            acc.push_str(line);
+            joined.push(std::mem::take(&mut acc));
+        }
+    }
+    if !acc.is_empty() {
+        return Err(Error::Container("dangling line continuation".into()));
+    }
+
+    let mut out = Vec::new();
+    for (i, line) in joined.iter().enumerate() {
+        let line = line.trim();
+        let (op, rest) = match line.split_once(char::is_whitespace) {
+            Some((op, rest)) => (op.to_ascii_uppercase(), rest.trim()),
+            None => (line.to_ascii_uppercase(), ""),
+        };
+        let bad = |m: &str| Error::Container(format!("instruction {}: {m}", i + 1));
+        match op.as_str() {
+            "FROM" => {
+                if rest.is_empty() {
+                    return Err(bad("FROM needs an image reference"));
+                }
+                out.push(Instruction::From(rest.to_string()));
+            }
+            "RUN" => out.push(Instruction::Run(rest.to_string())),
+            "COPY" | "ADD" => {
+                let mut parts = rest.split_whitespace();
+                let src = parts.next().ok_or_else(|| bad("COPY needs src dst"))?;
+                let dst = parts.next().ok_or_else(|| bad("COPY needs src dst"))?;
+                out.push(Instruction::Copy {
+                    src: src.into(),
+                    dst: dst.into(),
+                });
+            }
+            "ENV" => {
+                let (k, v) = rest
+                    .split_once('=')
+                    .or_else(|| rest.split_once(char::is_whitespace))
+                    .ok_or_else(|| bad("ENV needs key=value"))?;
+                out.push(Instruction::Env {
+                    key: k.trim().into(),
+                    val: v.trim().into(),
+                });
+            }
+            "WORKDIR" => out.push(Instruction::Workdir(rest.into())),
+            "LABEL" => {
+                let (k, v) = rest.split_once('=').ok_or_else(|| bad("LABEL needs key=value"))?;
+                out.push(Instruction::Label {
+                    key: k.trim().into(),
+                    val: v.trim().trim_matches('"').into(),
+                });
+            }
+            "ENTRYPOINT" | "CMD" => out.push(Instruction::Entrypoint(rest.into())),
+            other => return Err(bad(&format!("unsupported instruction {other}"))),
+        }
+    }
+    if !matches!(out.first(), Some(Instruction::From(_))) {
+        return Err(Error::Container("Containerfile must start with FROM".into()));
+    }
+    Ok(out)
+}
+
+/// Does a RUN command install DMTCP? (The paper's embedding snippet clones
+/// and `make install`s it; package-manager installs count too.)
+fn run_installs_dmtcp(cmd: &str) -> bool {
+    let c = cmd.to_ascii_lowercase();
+    c.contains("dmtcp")
+        && (c.contains("make install")
+            || c.contains("apt") && c.contains("install")
+            || c.contains("yum install")
+            || c.contains("conda install")
+            || c.contains("pip install"))
+}
+
+/// Estimated layer size of a RUN command (deterministic, content-derived —
+/// enough for store/squash accounting).
+fn run_layer_size(cmd: &str) -> u64 {
+    let base = 2 * 1024 * 1024u64;
+    let c = cmd.to_ascii_lowercase();
+    let mut size = base + cmd.len() as u64 * 1024;
+    if c.contains("dmtcp") {
+        size += 18 * 1024 * 1024; // DMTCP build artifacts
+    }
+    if c.contains("geant4") || c.contains("cvmfs") {
+        size += 350 * 1024 * 1024; // toolkit + data files
+    }
+    if c.contains("install") {
+        size += 40 * 1024 * 1024;
+    }
+    size
+}
+
+/// Build an image from instructions, resolving `FROM` through `resolve`.
+pub fn build_image(
+    name: &str,
+    tag: &str,
+    instructions: &[Instruction],
+    resolve: impl Fn(&str) -> Option<Image>,
+) -> Result<Image> {
+    let mut image = match instructions.first() {
+        Some(Instruction::From(base_ref)) => {
+            let mut base = resolve(base_ref).ok_or_else(|| {
+                Error::Container(format!("base image {base_ref:?} not found"))
+            })?;
+            base.name = name.into();
+            base.tag = tag.into();
+            base
+        }
+        _ => return Err(Error::Container("first instruction must be FROM".into())),
+    };
+
+    for ins in &instructions[1..] {
+        match ins {
+            Instruction::From(_) => {
+                return Err(Error::Container("multi-stage builds not supported".into()))
+            }
+            Instruction::Run(cmd) => {
+                if run_installs_dmtcp(cmd) {
+                    image.has_dmtcp = true;
+                }
+                image.layers.push(Layer {
+                    instruction: format!("RUN {cmd}"),
+                    size_bytes: run_layer_size(cmd),
+                });
+            }
+            Instruction::Copy { src, dst } => {
+                image.layers.push(Layer {
+                    instruction: format!("COPY {src} {dst}"),
+                    size_bytes: 1024 * 1024,
+                });
+            }
+            Instruction::Env { key, val } => {
+                image.env.insert(key.clone(), val.clone());
+            }
+            Instruction::Workdir(d) => {
+                image.env.insert("PWD".into(), d.clone());
+            }
+            Instruction::Label { key, val } => {
+                image.labels.insert(key.clone(), val.clone());
+            }
+            Instruction::Entrypoint(e) => image.entrypoint = Some(e.clone()),
+        }
+    }
+    Ok(image)
+}
+
+/// The paper's own snippet: extend an existing application container with
+/// DMTCP in one RUN.
+pub const EMBED_DMTCP_SNIPPET: &str = r#"FROM my_application_container:latest
+RUN git clone https://github.com/dmtcp/dmtcp.git \
+ && cd dmtcp \
+ && ./configure && make \
+ && make install
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resolver(base: Image) -> impl Fn(&str) -> Option<Image> {
+        move |r: &str| {
+            if r == base.reference() || r == "my_application_container:latest" {
+                Some(base.clone())
+            } else {
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn parse_papers_snippet() {
+        let ins = parse_containerfile(EMBED_DMTCP_SNIPPET).unwrap();
+        assert_eq!(ins.len(), 2);
+        assert!(matches!(&ins[0], Instruction::From(f) if f == "my_application_container:latest"));
+        assert!(matches!(&ins[1], Instruction::Run(c) if c.contains("make install")));
+    }
+
+    #[test]
+    fn build_embeds_dmtcp() {
+        let base = Image::base("my_application_container", "latest", 500 * 1024 * 1024);
+        let ins = parse_containerfile(EMBED_DMTCP_SNIPPET).unwrap();
+        let img = build_image("elvis", "test", &ins, resolver(base)).unwrap();
+        assert!(img.has_dmtcp, "DMTCP install not detected");
+        assert_eq!(img.reference(), "elvis:test");
+        assert!(img.size_bytes() > 500 * 1024 * 1024);
+    }
+
+    #[test]
+    fn build_without_dmtcp_flags_false() {
+        let base = Image::base("ubuntu", "22.04", 80 * 1024 * 1024);
+        let ins = parse_containerfile("FROM ubuntu:22.04\nRUN pip install numpy\n").unwrap();
+        let img = build_image("app", "v1", &ins, resolver(base)).unwrap();
+        assert!(!img.has_dmtcp);
+    }
+
+    #[test]
+    fn env_label_entrypoint() {
+        let base = Image::base("ubuntu", "22.04", 1024);
+        let file = "FROM ubuntu:22.04\nENV G4VERSION=10.7\nLABEL maintainer=\"nersc\"\nENTRYPOINT ./run.sh\nWORKDIR /work\n";
+        let ins = parse_containerfile(file).unwrap();
+        let img = build_image("g4", "10.7", &ins, resolver(base)).unwrap();
+        assert_eq!(img.env.get("G4VERSION").map(String::as_str), Some("10.7"));
+        assert_eq!(img.labels.get("maintainer").map(String::as_str), Some("nersc"));
+        assert_eq!(img.entrypoint.as_deref(), Some("./run.sh"));
+        assert_eq!(img.env.get("PWD").map(String::as_str), Some("/work"));
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_containerfile("RUN echo hi\n").is_err()); // no FROM
+        assert!(parse_containerfile("FROM a:b\nFLY now\n").is_err());
+        assert!(parse_containerfile("FROM a:b\nRUN echo \\").is_err()); // dangling
+        assert!(parse_containerfile("FROM a:b\nCOPY onlyone\n").is_err());
+    }
+
+    #[test]
+    fn unknown_base_rejected() {
+        let ins = parse_containerfile("FROM nowhere:latest\n").unwrap();
+        let err = build_image("x", "y", &ins, |_| None).unwrap_err();
+        assert!(err.to_string().contains("not found"));
+    }
+}

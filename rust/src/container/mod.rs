@@ -1,0 +1,25 @@
+//! NERSC's HPC container runtimes: shifter and podman-hpc.
+//!
+//! Models the two container stacks the paper runs DMTCP inside, at the
+//! fidelity its findings need: Containerfile builds with DMTCP-embedding
+//! detection ([`image`]), registries and local stores ([`store`]),
+//! squashfile conversion ([`squash`]), the runtime capability differences
+//! (build-on-system, runtime modification — [`shifter`] vs
+//! [`podman_hpc`]), startup-performance models (Fig 2, via
+//! [`crate::fsmodel`]), and checkpointed process launch *inside* a
+//! container ([`runtime::Container::launch_checkpointed`]), which enforces
+//! the DMTCP-must-be-in-the-image constraint.
+
+pub mod image;
+pub mod podman_hpc;
+pub mod runtime;
+pub mod shifter;
+pub mod squash;
+pub mod store;
+
+pub use image::{build_image, parse_containerfile, Image, Instruction, Layer, EMBED_DMTCP_SNIPPET};
+pub use podman_hpc::PodmanHpc;
+pub use runtime::{Container, ContainerRuntime, RunSpec};
+pub use shifter::Shifter;
+pub use squash::{squash, SquashImage};
+pub use store::{ImageStore, Registry};

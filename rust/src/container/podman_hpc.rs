@@ -1,0 +1,185 @@
+//! The podman-hpc runtime model.
+//!
+//! podman-hpc is Red Hat Podman (daemonless, rootless) plus NERSC's HPC
+//! add-on: users build images *directly on the system*
+//! (`podman-hpc build`), convert them with `podman-hpc migrate` into a
+//! squashfile usable inside batch jobs, or pull from registries (pulls
+//! auto-migrate). Unlike shifter it permits runtime modification of
+//! container contents. Being newer, its image cache is less tuned
+//! (Fig 2: comparable to optimized shared filesystems, behind shifter).
+
+use crate::container::image::{build_image, parse_containerfile, Image};
+use crate::container::runtime::{Container, ContainerRuntime, RunSpec};
+use crate::container::squash::squash;
+use crate::container::store::{ImageStore, Registry};
+use crate::error::{Error, Result};
+use crate::fsmodel::Environment;
+
+/// The podman-hpc runtime + its local store.
+#[derive(Debug, Default)]
+pub struct PodmanHpc {
+    store: ImageStore,
+    /// Rootless mode (the default; kept for capability reporting).
+    pub rootless: bool,
+}
+
+impl PodmanHpc {
+    pub fn new() -> Self {
+        Self {
+            store: ImageStore::new(),
+            rootless: true,
+        }
+    }
+
+    /// `podman-hpc build -t name:tag .` — build from a Containerfile,
+    /// resolving FROM references against the local store then `bases`.
+    pub fn build(
+        &mut self,
+        name: &str,
+        tag: &str,
+        containerfile: &str,
+        bases: &Registry,
+    ) -> Result<Image> {
+        let instructions = parse_containerfile(containerfile)?;
+        let image = build_image(name, tag, &instructions, |r| {
+            self.store.get(r).cloned().or_else(|| bases.pull(r).ok())
+        })?;
+        self.store.insert(image.clone());
+        log::debug!("podman-hpc build {name}:{tag}: {} layers", image.layers.len());
+        Ok(image)
+    }
+
+    /// `podman-hpc migrate name:tag` — convert to the squashfile format
+    /// required for job execution.
+    pub fn migrate(&mut self, reference: &str) -> Result<()> {
+        let image = self
+            .store
+            .get(reference)
+            .ok_or_else(|| Error::Container(format!("migrate: unknown image {reference:?}")))?;
+        let sq = squash(image);
+        self.store.mark_squashed(reference, sq.squash_bytes)?;
+        log::debug!("podman-hpc migrate {reference}: {} bytes", sq.squash_bytes);
+        Ok(())
+    }
+
+    /// `podman-hpc pull <ref>` — "images pulled from a registry are
+    /// automatically converted into a suitable squashfile format".
+    pub fn pull(&mut self, registry: &Registry, reference: &str) -> Result<()> {
+        let image = registry.pull(reference)?;
+        let sq = squash(&image);
+        self.store.insert(image);
+        self.store.mark_squashed(reference, sq.squash_bytes)
+    }
+
+    /// `podman-hpc push <ref>` — publish a locally built image.
+    pub fn push(&self, registry: &mut Registry, reference: &str) -> Result<()> {
+        let image = self
+            .store
+            .get(reference)
+            .ok_or_else(|| Error::Container(format!("push: unknown image {reference:?}")))?;
+        registry.push(image.clone());
+        Ok(())
+    }
+
+    /// `podman-hpc run --volume ... <ref>` — create an execution context.
+    pub fn run(&self, reference: &str, spec: RunSpec) -> Result<Container> {
+        let image = self.runnable_image(reference)?;
+        Ok(Container {
+            runtime_name: "podman-hpc",
+            image,
+            spec,
+        })
+    }
+
+    pub fn store(&self) -> &ImageStore {
+        &self.store
+    }
+}
+
+impl ContainerRuntime for PodmanHpc {
+    fn name(&self) -> &'static str {
+        "podman-hpc"
+    }
+
+    fn environment(&self) -> Environment {
+        Environment::PodmanHpc
+    }
+
+    fn runnable_image(&self, reference: &str) -> Result<Image> {
+        let img = self
+            .store
+            .get(reference)
+            .ok_or_else(|| Error::Container(format!("podman-hpc: unknown image {reference:?}")))?
+            .clone();
+        if !self.store.is_squashed(reference) {
+            return Err(Error::Container(format!(
+                "podman-hpc: image {reference:?} not migrated — run \
+                 `podman-hpc migrate {reference}` before using it in a job"
+            )));
+        }
+        Ok(img)
+    }
+
+    fn supports_local_build(&self) -> bool {
+        true
+    }
+
+    fn supports_runtime_modification(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::image::EMBED_DMTCP_SNIPPET;
+
+    fn base_registry() -> Registry {
+        let mut r = Registry::new();
+        r.push(Image::base("my_application_container", "latest", 500 * 1024 * 1024));
+        r
+    }
+
+    #[test]
+    fn build_migrate_run() {
+        let reg = base_registry();
+        let mut pm = PodmanHpc::new();
+        let img = pm.build("elvis", "test", EMBED_DMTCP_SNIPPET, &reg).unwrap();
+        assert!(img.has_dmtcp);
+        // Unmigrated images are not job-runnable.
+        assert!(pm.run("elvis:test", RunSpec::default()).is_err());
+        pm.migrate("elvis:test").unwrap();
+        let c = pm.run("elvis:test", RunSpec::default()).unwrap();
+        assert_eq!(c.runtime_name, "podman-hpc");
+    }
+
+    #[test]
+    fn pull_auto_migrates() {
+        let mut reg = base_registry();
+        reg.push(Image::base("pub", "v2", 1024));
+        let mut pm = PodmanHpc::new();
+        pm.pull(&reg, "pub:v2").unwrap();
+        assert!(pm.store().is_squashed("pub:v2"));
+        assert!(pm.run("pub:v2", RunSpec::default()).is_ok());
+    }
+
+    #[test]
+    fn push_roundtrip() {
+        let mut reg = base_registry();
+        let mut pm = PodmanHpc::new();
+        pm.build("elvis", "test", EMBED_DMTCP_SNIPPET, &reg).unwrap();
+        pm.push(&mut reg, "elvis:test").unwrap();
+        // Another runtime can now pull it.
+        let mut pm2 = PodmanHpc::new();
+        pm2.pull(&reg, "elvis:test").unwrap();
+        assert!(pm2.runnable_image("elvis:test").unwrap().has_dmtcp);
+    }
+
+    #[test]
+    fn capabilities() {
+        let pm = PodmanHpc::new();
+        assert!(pm.supports_local_build());
+        assert!(pm.supports_runtime_modification());
+        assert!(pm.rootless);
+    }
+}

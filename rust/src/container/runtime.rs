@@ -1,0 +1,172 @@
+//! The common container-runtime interface and containerized process launch.
+//!
+//! A [`ContainerRuntime`] can make images runnable in batch jobs and start
+//! DMTCP-managed processes inside them. The launch path enforces the
+//! paper's central container constraint: **checkpointing inside a container
+//! requires DMTCP inside the image** — a runtime cannot checkpoint a
+//! container from outside.
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+
+use crate::container::image::Image;
+use crate::dmtcp::{dmtcp_launch, Checkpointable, LaunchSpec, LaunchedProcess, PluginRegistry};
+use crate::error::{Error, Result};
+use crate::fsmodel::Environment;
+
+/// Container run parameters (volume mappings, env overrides, entrypoint).
+#[derive(Debug, Clone, Default)]
+pub struct RunSpec {
+    /// `(host_path, container_path)` volume mappings. Checkpoint images
+    /// must be written to a mapped volume or they die with the container.
+    pub volumes: Vec<(String, String)>,
+    /// Environment overrides on top of the image's env.
+    pub env: BTreeMap<String, String>,
+    /// Override the image entrypoint.
+    pub command: Option<String>,
+}
+
+impl RunSpec {
+    pub fn volume(mut self, host: impl Into<String>, container: impl Into<String>) -> Self {
+        self.volumes.push((host.into(), container.into()));
+        self
+    }
+
+    pub fn env(mut self, k: impl Into<String>, v: impl Into<String>) -> Self {
+        self.env.insert(k.into(), v.into());
+        self
+    }
+
+    /// Translate a container path to the host path through the volume map.
+    pub fn host_path(&self, container_path: &str) -> Option<String> {
+        self.volumes.iter().find_map(|(h, c)| {
+            container_path
+                .strip_prefix(c.as_str())
+                .map(|rest| format!("{h}{rest}"))
+        })
+    }
+}
+
+/// What both NERSC runtimes provide.
+pub trait ContainerRuntime {
+    /// Runtime name (`shifter` / `podman-hpc`).
+    fn name(&self) -> &'static str;
+
+    /// The startup-performance environment of this runtime (Fig 2 curve).
+    fn environment(&self) -> Environment;
+
+    /// Look up an image ready for batch-job execution.
+    fn runnable_image(&self, reference: &str) -> Result<Image>;
+
+    /// Whether images can be built directly on the system (podman-hpc can;
+    /// shifter images come through the gateway).
+    fn supports_local_build(&self) -> bool;
+
+    /// Whether container contents can be modified at runtime ("shifter ...
+    /// does not allow for dynamic modification of container contents at
+    /// runtime", podman-hpc does).
+    fn supports_runtime_modification(&self) -> bool;
+
+    /// Mean startup time for `ranks` ranks using this runtime's image
+    /// cache (drives Fig 2).
+    fn startup_time(&self, ranks: u32) -> f64 {
+        self.environment().import_time(ranks)
+    }
+}
+
+/// A container execution context: image + run parameters, ready to host
+/// DMTCP-managed processes.
+pub struct Container {
+    pub runtime_name: &'static str,
+    pub image: Image,
+    pub spec: RunSpec,
+}
+
+impl Container {
+    /// Effective environment: image env overlaid with run overrides.
+    pub fn effective_env(&self) -> BTreeMap<String, String> {
+        let mut env = self.image.env.clone();
+        env.extend(self.spec.env.clone());
+        env.insert("CONTAINER_RUNTIME".into(), self.runtime_name.to_string());
+        env.insert("CONTAINER_IMAGE".into(), self.image.reference());
+        env
+    }
+
+    /// Launch a process inside the container under checkpoint control.
+    ///
+    /// Fails unless the image embeds DMTCP — the paper's limitation,
+    /// enforced: "DMTCP can not perform a checkpoint from outside the
+    /// container; it has to be included within the container at the time
+    /// of its creation."
+    pub fn launch_checkpointed<S: Checkpointable + 'static>(
+        &self,
+        name: &str,
+        coordinator: SocketAddr,
+        state: Arc<Mutex<S>>,
+        plugins: PluginRegistry,
+    ) -> Result<LaunchedProcess> {
+        if !self.image.has_dmtcp {
+            return Err(Error::Container(format!(
+                "image {} does not embed DMTCP: checkpointing from outside \
+                 the container is not possible — rebuild the image with \
+                 DMTCP installed (see container::image::EMBED_DMTCP_SNIPPET)",
+                self.image.reference()
+            )));
+        }
+        // Checkpoint images must land on a volume that outlives the
+        // container instance.
+        let ckpt_container_dir = self
+            .effective_env()
+            .get("DMTCP_CHECKPOINT_DIR")
+            .cloned()
+            .unwrap_or_else(|| "/ckpt".to_string());
+        if self.spec.host_path(&ckpt_container_dir).is_none() {
+            return Err(Error::Container(format!(
+                "checkpoint dir {ckpt_container_dir} is not volume-mapped; \
+                 images written there would not survive the container"
+            )));
+        }
+
+        let mut spec = LaunchSpec::new(name, coordinator);
+        spec.env = self.effective_env();
+        Ok(dmtcp_launch(spec, state, plugins))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_path_translation() {
+        let rs = RunSpec::default()
+            .volume("/global/scratch/u/ckpt", "/ckpt")
+            .volume("/global/homes/u", "/home/u");
+        assert_eq!(
+            rs.host_path("/ckpt/img.dmtcp").as_deref(),
+            Some("/global/scratch/u/ckpt/img.dmtcp")
+        );
+        assert_eq!(
+            rs.host_path("/home/u/x").as_deref(),
+            Some("/global/homes/u/x")
+        );
+        assert_eq!(rs.host_path("/etc/passwd"), None);
+    }
+
+    #[test]
+    fn effective_env_overlay() {
+        let mut image = Image::base("app", "v1", 1);
+        image.env.insert("A".into(), "from-image".into());
+        image.env.insert("B".into(), "keep".into());
+        let c = Container {
+            runtime_name: "shifter",
+            image,
+            spec: RunSpec::default().env("A", "override"),
+        };
+        let env = c.effective_env();
+        assert_eq!(env.get("A").map(String::as_str), Some("override"));
+        assert_eq!(env.get("B").map(String::as_str), Some("keep"));
+        assert_eq!(env.get("CONTAINER_RUNTIME").map(String::as_str), Some("shifter"));
+    }
+}

@@ -1,0 +1,117 @@
+//! The shifter runtime model.
+//!
+//! shifter bridges Docker images onto HPC: users push to a registry, then
+//! `shifterimg pull` converts the image to shifter's squash format at the
+//! image gateway — there is no local build path, and container contents are
+//! immutable at runtime. Its image cache has had "the benefit of years of
+//! performance optimization" (Fig 2: fastest startup at scale).
+
+use crate::container::image::Image;
+use crate::container::runtime::{Container, ContainerRuntime, RunSpec};
+use crate::container::squash::squash;
+use crate::container::store::{ImageStore, Registry};
+use crate::error::{Error, Result};
+use crate::fsmodel::Environment;
+
+/// The shifter runtime + its image gateway store.
+#[derive(Debug, Default)]
+pub struct Shifter {
+    store: ImageStore,
+}
+
+impl Shifter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `shifterimg pull <ref>`: fetch from the registry and convert to the
+    /// shifter squash format in one step.
+    pub fn pull(&mut self, registry: &Registry, reference: &str) -> Result<()> {
+        let image = registry.pull(reference)?;
+        let sq = squash(&image);
+        self.store.insert(image);
+        self.store.mark_squashed(reference, sq.squash_bytes)?;
+        log::debug!(
+            "shifterimg pull {reference}: squashed to {} bytes",
+            sq.squash_bytes
+        );
+        Ok(())
+    }
+
+    /// `shifter --image=<ref> ...`: create an execution context.
+    pub fn run(&self, reference: &str, spec: RunSpec) -> Result<Container> {
+        let image = self.runnable_image(reference)?;
+        Ok(Container {
+            runtime_name: "shifter",
+            image,
+            spec,
+        })
+    }
+
+    pub fn store(&self) -> &ImageStore {
+        &self.store
+    }
+}
+
+impl ContainerRuntime for Shifter {
+    fn name(&self) -> &'static str {
+        "shifter"
+    }
+
+    fn environment(&self) -> Environment {
+        Environment::Shifter
+    }
+
+    fn runnable_image(&self, reference: &str) -> Result<Image> {
+        let img = self
+            .store
+            .get(reference)
+            .ok_or_else(|| {
+                Error::Container(format!(
+                    "shifter: image {reference:?} not pulled (use shifterimg pull)"
+                ))
+            })?
+            .clone();
+        if !self.store.is_squashed(reference) {
+            return Err(Error::Container(format!(
+                "shifter: image {reference:?} not converted"
+            )));
+        }
+        Ok(img)
+    }
+
+    fn supports_local_build(&self) -> bool {
+        false
+    }
+
+    fn supports_runtime_modification(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pull_then_run() {
+        let mut reg = Registry::new();
+        reg.push(Image::base("app", "v1", 1024 * 1024));
+        let mut sh = Shifter::new();
+        assert!(sh.run("app:v1", RunSpec::default()).is_err());
+        sh.pull(&reg, "app:v1").unwrap();
+        let c = sh.run("app:v1", RunSpec::default()).unwrap();
+        assert_eq!(c.runtime_name, "shifter");
+        assert!(sh.store().is_squashed("app:v1"));
+    }
+
+    #[test]
+    fn capabilities() {
+        let sh = Shifter::new();
+        assert!(!sh.supports_local_build());
+        assert!(!sh.supports_runtime_modification());
+        assert_eq!(sh.environment(), Environment::Shifter);
+        // Fig 2: startup grows slowly with ranks.
+        assert!(sh.startup_time(512) < 4.0 * sh.startup_time(1));
+    }
+}

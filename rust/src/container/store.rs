@@ -1,0 +1,163 @@
+//! Image stores and the external registry (DockerHub analog).
+
+use std::collections::BTreeMap;
+
+use crate::container::image::Image;
+use crate::error::{Error, Result};
+
+/// A remote registry ("uploaded to DockerHub ... pushed to an external
+/// registry like Docker Hub and pulled later as needed").
+#[derive(Debug, Default)]
+pub struct Registry {
+    images: BTreeMap<String, Image>,
+    /// Private repositories require a login before pull.
+    private: BTreeMap<String, String>, // repo -> required user
+    logged_in: Option<String>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish an image.
+    pub fn push(&mut self, image: Image) {
+        self.images.insert(image.reference(), image);
+    }
+
+    /// Mark a repository private (pull requires `login(user)`).
+    pub fn set_private(&mut self, name: &str, owner: &str) {
+        self.private.insert(name.to_string(), owner.to_string());
+    }
+
+    /// `podman-hpc login` analog.
+    pub fn login(&mut self, user: &str) {
+        self.logged_in = Some(user.to_string());
+    }
+
+    /// Pull an image by `name:tag`.
+    pub fn pull(&self, reference: &str) -> Result<Image> {
+        let img = self
+            .images
+            .get(reference)
+            .ok_or_else(|| Error::Container(format!("registry: {reference:?} not found")))?;
+        if let Some(owner) = self.private.get(&img.name) {
+            match &self.logged_in {
+                Some(u) if u == owner => {}
+                _ => {
+                    return Err(Error::Container(format!(
+                        "registry: {reference:?} is private; login required"
+                    )))
+                }
+            }
+        }
+        Ok(img.clone())
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+/// A node/center-local image store (per container runtime).
+#[derive(Debug, Default)]
+pub struct ImageStore {
+    images: BTreeMap<String, Image>,
+    /// References that have been converted to the runtime's squash format
+    /// and are therefore usable inside batch jobs.
+    squashed: BTreeMap<String, u64>, // reference -> squash size
+}
+
+impl ImageStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, image: Image) {
+        self.images.insert(image.reference(), image);
+    }
+
+    pub fn get(&self, reference: &str) -> Option<&Image> {
+        self.images.get(reference)
+    }
+
+    pub fn contains(&self, reference: &str) -> bool {
+        self.images.contains_key(reference)
+    }
+
+    /// Record a squash conversion (see [`crate::container::squash`]).
+    pub fn mark_squashed(&mut self, reference: &str, squash_bytes: u64) -> Result<()> {
+        if !self.images.contains_key(reference) {
+            return Err(Error::Container(format!(
+                "cannot squash unknown image {reference:?}"
+            )));
+        }
+        self.squashed.insert(reference.to_string(), squash_bytes);
+        Ok(())
+    }
+
+    /// Is the image ready for batch-job use?
+    pub fn is_squashed(&self, reference: &str) -> bool {
+        self.squashed.contains_key(reference)
+    }
+
+    pub fn squash_size(&self, reference: &str) -> Option<u64> {
+        self.squashed.get(reference).copied()
+    }
+
+    pub fn references(&self) -> impl Iterator<Item = &str> {
+        self.images.keys().map(String::as_str)
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img(name: &str, tag: &str) -> Image {
+        Image::base(name, tag, 1024)
+    }
+
+    #[test]
+    fn registry_push_pull() {
+        let mut r = Registry::new();
+        r.push(img("app", "v1"));
+        assert_eq!(r.pull("app:v1").unwrap().reference(), "app:v1");
+        assert!(r.pull("app:v2").is_err());
+    }
+
+    #[test]
+    fn private_repo_requires_login() {
+        let mut r = Registry::new();
+        r.push(img("secret", "v1"));
+        r.set_private("secret", "elvis");
+        assert!(r.pull("secret:v1").is_err());
+        r.login("someone_else");
+        assert!(r.pull("secret:v1").is_err());
+        r.login("elvis");
+        assert!(r.pull("secret:v1").is_ok());
+    }
+
+    #[test]
+    fn store_squash_tracking() {
+        let mut s = ImageStore::new();
+        s.insert(img("app", "v1"));
+        assert!(!s.is_squashed("app:v1"));
+        s.mark_squashed("app:v1", 512).unwrap();
+        assert!(s.is_squashed("app:v1"));
+        assert_eq!(s.squash_size("app:v1"), Some(512));
+        assert!(s.mark_squashed("ghost:v0", 1).is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! The consolidated single job script (§V.A): generation + config.
+//!
+//! "an automated approach employing DMTCP and Slurm is adopted through the
+//! deployment of a single job script. This script consolidates both
+//! checkpointing and restarting functionalities" — [`consolidated_script`]
+//! renders that script (sbatch directives + the func_trap/requeue shell
+//! body the paper describes), and [`CrJobConfig`] is its parsed runtime
+//! form, bridging the sim-time scheduler and the real-time CR runner.
+
+use crate::simclock::SimTime;
+use crate::slurm::{render_script, CrMode, JobSpec, Signal};
+
+/// Runtime C/R configuration carried by a job script.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CrJobConfig {
+    pub spec: JobSpec,
+    /// Total transport steps the workload needs.
+    pub target_steps: u64,
+    /// Workload + version labels (environment for the containerized app).
+    pub workload: String,
+    pub g4_version: String,
+}
+
+impl CrJobConfig {
+    /// The standard preemptable C/R job: requeue + USR1@120 + periodic
+    /// checkpoints, as the paper's production setup uses.
+    pub fn standard(
+        workload: &str,
+        g4_version: &str,
+        work_secs: SimTime,
+        ckpt_interval: SimTime,
+        ckpt_overhead: SimTime,
+    ) -> Self {
+        Self {
+            spec: JobSpec {
+                name: format!("cr-{workload}"),
+                partition: "preempt".into(),
+                nodes: 1,
+                time_limit: 2 * 3_600,
+                time_min: Some(1_800),
+                signal: Some((Signal::Usr1, 120)),
+                requeue: true,
+                comment: "nersc_cr".into(),
+                work_total: work_secs,
+                cr: CrMode::CheckpointRestart {
+                    interval: ckpt_interval,
+                    overhead: ckpt_overhead,
+                },
+            },
+            target_steps: 0,
+            workload: workload.into(),
+            g4_version: g4_version.into(),
+        }
+    }
+}
+
+/// Render the paper's consolidated job script: directives + the shell body
+/// with `start_coordinator`, the `requeue` function, the SIGTERM/USR1
+/// traps, and `dmtcp_launch`/`dmtcp_restart` dispatch.
+pub fn consolidated_script(cfg: &CrJobConfig) -> String {
+    let body = format!(
+        r#"# ---- nersc_cr consolidated C/R job body -------------------------
+module load nersc_cr
+
+# Remaining-walltime bookkeeping (updates the job comment; human readable).
+update_comment() {{
+    left=$(squeue -h -j "$SLURM_JOB_ID" -o %L)
+    scontrol update JobId="$SLURM_JOB_ID" Comment="remaining=$left"
+}}
+
+# Requeue function: echoed status + scontrol requeue (paper §V.B.1).
+requeue() {{
+    echo "[nersc_cr] trapping signal: checkpoint + requeue job $SLURM_JOB_ID"
+    dmtcp_command --checkpoint
+    update_comment
+    scontrol requeue "$SLURM_JOB_ID"
+}}
+trap requeue SIGTERM SIGUSR1
+
+# Coordinator + launch-or-restart dispatch.
+export DMTCP_COORD_HOST=$(hostname)
+start_coordinator -p 0 --ckptdir "$CKPT_DIR"
+
+restart_job() {{
+    if ls "$CKPT_DIR"/ckpt_*.dmtcp >/dev/null 2>&1; then
+        echo "[nersc_cr] restarting from newest image"
+        dmtcp_restart "$CKPT_DIR"/ckpt_*.dmtcp
+    else
+        echo "[nersc_cr] first launch"
+        dmtcp_launch --gzip $CONTAINER_PREFIX \
+            g4app --workload {workload} --g4-version {version} \
+                  --steps {steps}
+    fi
+}}
+restart_job
+wait
+echo "[nersc_cr] job section complete"
+"#,
+        workload = cfg.workload,
+        version = cfg.g4_version,
+        steps = cfg.target_steps,
+    );
+    render_script(&cfg.spec, &body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::slurm::parse_script;
+
+    #[test]
+    fn standard_config() {
+        let cfg = CrJobConfig::standard("water-phantom", "10.7", 7_200, 300, 8);
+        assert!(cfg.spec.requeue);
+        assert_eq!(cfg.spec.signal, Some((Signal::Usr1, 120)));
+        assert!(cfg.spec.cr.restarts_from_ckpt());
+        assert_eq!(cfg.spec.partition, "preempt");
+    }
+
+    #[test]
+    fn script_roundtrips_through_sbatch_parser() {
+        let mut cfg = CrJobConfig::standard("em-calorimeter", "11.0", 3_600, 300, 5);
+        cfg.target_steps = 640;
+        let script = consolidated_script(&cfg);
+        let spec = parse_script(&script).unwrap();
+        assert_eq!(spec.name, "cr-em-calorimeter");
+        assert_eq!(spec.cr, cfg.spec.cr);
+        assert_eq!(spec.work_total, 3_600);
+        // The paper's moving parts are all present in the body.
+        for needle in [
+            "start_coordinator",
+            "trap requeue SIGTERM",
+            "dmtcp_launch",
+            "dmtcp_restart",
+            "scontrol requeue",
+            "DMTCP_COORD_HOST",
+            "--open-mode=append",
+        ] {
+            assert!(script.contains(needle), "script missing {needle:?}");
+        }
+    }
+}

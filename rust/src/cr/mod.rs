@@ -1,0 +1,19 @@
+//! The paper's contribution: the NERSC checkpoint-restart job-management
+//! layer.
+//!
+//! * [`module`] — the CR Module primitives (`start_coordinator`, image
+//!   discovery, environment wiring).
+//! * [`auto`] — the automated Fig 3 workflow: periodic checkpoints,
+//!   func_trap on preemption signals, requeue, restart-from-image.
+//! * [`manual`] — the operator-in-the-loop flow (§V.B.2).
+//! * [`jobscript`] — the consolidated single job script.
+
+pub mod auto;
+pub mod jobscript;
+pub mod manual;
+pub mod module;
+
+pub use auto::{run_auto, AutoState, CrPolicy, CrReport};
+pub use jobscript::{consolidated_script, CrJobConfig};
+pub use manual::{ManualCr, MonitorReport};
+pub use module::{latest_images, start_coordinator, CrConfig};

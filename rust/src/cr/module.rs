@@ -1,0 +1,144 @@
+//! The CR Module (`nersc_cr`) — the paper's §V.A primitives.
+//!
+//! "the CR Module (nersc_cr) ... includes a pivotal function,
+//! `start_coordinator`, which activates the checkpointing mechanism via the
+//! `dmtcp_coordinator` command. It sets the necessary environment variables
+//! for the coordinator's communication and manages the
+//! `dmtcp_command.<jobid>` file."
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::dmtcp::{Coordinator, CoordinatorConfig};
+use crate::error::Result;
+
+/// CR-module configuration for one job.
+#[derive(Debug, Clone)]
+pub struct CrConfig {
+    /// Slurm job id (names the rendezvous file).
+    pub jobid: String,
+    /// Where checkpoint images are written (must survive the job — on a
+    /// shared filesystem or a volume-mapped host dir when containerized).
+    pub ckpt_dir: PathBuf,
+    /// Working directory for `dmtcp_command.<jobid>`.
+    pub workdir: PathBuf,
+    /// gzip images (NERSC default on).
+    pub gzip: bool,
+    /// Barrier timeout.
+    pub phase_timeout: Duration,
+}
+
+impl CrConfig {
+    pub fn new(jobid: impl Into<String>, workdir: impl Into<PathBuf>) -> Self {
+        let workdir: PathBuf = workdir.into();
+        Self {
+            jobid: jobid.into(),
+            ckpt_dir: workdir.join("ckpt"),
+            workdir,
+            gzip: true,
+            phase_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// `start_coordinator`: boot a coordinator for this job, write the
+/// rendezvous file, and return it together with the environment variables
+/// the job's processes must inherit (`DMTCP_COORD_HOST`, `DMTCP_COORD_PORT`,
+/// `DMTCP_CHECKPOINT_DIR`, `DMTCP_GZIP`).
+pub fn start_coordinator(config: &CrConfig) -> Result<(Coordinator, BTreeMap<String, String>)> {
+    let coord = Coordinator::start(CoordinatorConfig {
+        bind: "127.0.0.1:0".into(),
+        ckpt_dir: config.ckpt_dir.clone(),
+        gzip: config.gzip,
+        jobid: Some(config.jobid.clone()),
+        command_file_dir: config.workdir.clone(),
+        phase_timeout: config.phase_timeout,
+    })?;
+    let mut env = BTreeMap::new();
+    env.insert("DMTCP_COORD_HOST".into(), coord.addr().ip().to_string());
+    env.insert("DMTCP_COORD_PORT".into(), coord.addr().port().to_string());
+    env.insert(
+        "DMTCP_CHECKPOINT_DIR".into(),
+        config.ckpt_dir.to_string_lossy().into_owned(),
+    );
+    env.insert("DMTCP_GZIP".into(), if config.gzip { "1" } else { "0" }.into());
+    env.insert("SLURM_JOB_ID".into(), config.jobid.clone());
+    log::info!(
+        "start_coordinator: job {} on {} (ckpt dir {})",
+        config.jobid,
+        coord.addr(),
+        config.ckpt_dir.display()
+    );
+    Ok((coord, env))
+}
+
+/// Find the newest checkpoint image set in a directory (restart discovery:
+/// the manual flow's "file created during the checkpointing phase").
+pub fn latest_images(ckpt_dir: &std::path::Path) -> Result<Vec<PathBuf>> {
+    let mut images: Vec<(std::time::SystemTime, PathBuf)> = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(ckpt_dir) {
+        for e in entries.flatten() {
+            let p = e.path();
+            if p.extension().map(|x| x == "dmtcp").unwrap_or(false) {
+                let mtime = e
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+                images.push((mtime, p));
+            }
+        }
+    }
+    images.sort();
+    Ok(images.into_iter().map(|(_, p)| p).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ncr_crmod_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn start_coordinator_sets_env_and_file() {
+        let wd = dir("start");
+        let cfg = CrConfig::new("31415", &wd);
+        let (coord, env) = start_coordinator(&cfg).unwrap();
+        assert_eq!(
+            env.get("DMTCP_COORD_PORT").map(String::as_str),
+            Some(coord.addr().port().to_string().as_str())
+        );
+        assert!(env.contains_key("DMTCP_COORD_HOST"));
+        assert_eq!(env.get("DMTCP_GZIP").map(String::as_str), Some("1"));
+        let f = wd.join("dmtcp_command.31415");
+        assert!(f.exists(), "rendezvous file missing");
+        let got = crate::dmtcp::command::read_command_file(&f).unwrap();
+        assert_eq!(got, coord.addr());
+        std::fs::remove_dir_all(&wd).ok();
+    }
+
+    #[test]
+    fn latest_images_ordering() {
+        let d = dir("imgs");
+        std::fs::write(d.join("a.dmtcp"), b"x").unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        std::fs::write(d.join("b.dmtcp"), b"y").unwrap();
+        std::fs::write(d.join("not_an_image.txt"), b"z").unwrap();
+        let imgs = latest_images(&d).unwrap();
+        assert_eq!(imgs.len(), 2);
+        assert!(imgs[1].ends_with("b.dmtcp"));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn latest_images_empty_dir() {
+        let d = dir("empty");
+        assert!(latest_images(&d).unwrap().is_empty());
+        assert!(latest_images(std::path::Path::new("/nonexistent-ncr")).unwrap().is_empty());
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

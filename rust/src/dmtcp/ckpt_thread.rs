@@ -1,0 +1,253 @@
+//! The per-process checkpoint thread.
+//!
+//! Every DMTCP-managed process carries one extra thread that talks to the
+//! coordinator and drives the process through the barrier phases: it parks
+//! the user threads (suspend), serializes the memory segments into the
+//! image (checkpoint), and releases them (resume). This mirrors Fig 1 of
+//! the paper: "Upon receiving a CKPT MSG from the central coordinator, the
+//! checkpoint threads trigger a signal to user threads, and a checkpointing
+//! action is initiated".
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::dmtcp::image::{CheckpointImage, ImageHeader};
+use crate::dmtcp::plugin::{Event, PluginCtx, PluginRegistry};
+use crate::dmtcp::process::{ProcessStats, SegmentSource, SuspendGate};
+use crate::dmtcp::protocol::{
+    recv_from_coordinator, send_to_coordinator, FromCoordinator, Phase, ToCoordinator,
+};
+use crate::dmtcp::virtualization::FdTable;
+use crate::error::{Error, Result};
+
+/// Everything the checkpoint thread needs about its process.
+pub struct CkptContext {
+    pub name: String,
+    pub real_pid: u64,
+    pub generation: u32,
+    pub gate: Arc<SuspendGate>,
+    pub stats: Arc<ProcessStats>,
+    pub env: Arc<Mutex<BTreeMap<String, String>>>,
+    pub fds: Arc<Mutex<FdTable>>,
+    pub plugins: Arc<Mutex<PluginRegistry>>,
+    /// Type-erased handle to the application state.
+    pub source: Box<dyn SegmentSource>,
+    /// Records restored from the image (empty on first launch); plugins may
+    /// rewrite them at each PreCheckpoint.
+    pub records: BTreeMap<String, Vec<u8>>,
+    /// Re-attach under this vpid (restart path).
+    pub restored_vpid: Option<u64>,
+    /// Published once the coordinator assigns it.
+    pub vpid_out: Arc<AtomicU64>,
+}
+
+/// Spawn the checkpoint thread; `attached_tx` fires once Welcome arrives.
+pub fn spawn(
+    coordinator: SocketAddr,
+    mut ctx: CkptContext,
+    attached_tx: mpsc::Sender<Result<u64>>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("{}-ckpt", ctx.name))
+        .spawn(move || {
+            let res = run(coordinator, &mut ctx, &attached_tx);
+            if let Err(e) = res {
+                log::warn!("ckpt thread for {} exiting: {e}", ctx.name);
+                // A dead coordinator link means the computation can no
+                // longer be checkpointed or resumed; treat as preemption.
+                ctx.gate.kill();
+            }
+        })
+        .expect("spawn ckpt thread")
+}
+
+fn run(
+    coordinator: SocketAddr,
+    ctx: &mut CkptContext,
+    attached_tx: &mpsc::Sender<Result<u64>>,
+) -> Result<()> {
+    let mut stream = match TcpStream::connect(coordinator) {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = attached_tx.send(Err(Error::Io(e)));
+            return Err(Error::Protocol("cannot reach coordinator".into()));
+        }
+    };
+    stream.set_nodelay(true).ok();
+
+    send_to_coordinator(
+        &mut stream,
+        &ToCoordinator::Hello {
+            real_pid: ctx.real_pid,
+            name: ctx.name.clone(),
+            n_threads: ctx.stats.n_threads.load(Ordering::Relaxed) as u32,
+            restored_vpid: ctx.restored_vpid,
+        },
+    )?;
+    let vpid = match recv_from_coordinator(&mut stream)? {
+        FromCoordinator::Welcome { vpid, .. } => vpid,
+        FromCoordinator::Error { message } => {
+            let _ = attached_tx.send(Err(Error::Protocol(message.clone())));
+            return Err(Error::Protocol(message));
+        }
+        other => {
+            let msg = format!("expected Welcome, got {other:?}");
+            let _ = attached_tx.send(Err(Error::Protocol(msg.clone())));
+            return Err(Error::Protocol(msg));
+        }
+    };
+    ctx.vpid_out.store(vpid, Ordering::SeqCst);
+    ctx.stats.alive.store(true, Ordering::Relaxed);
+    let _ = attached_tx.send(Ok(vpid));
+
+    loop {
+        let msg = recv_from_coordinator(&mut stream)?;
+        match msg {
+            FromCoordinator::Phase { ckpt_id, phase, dir } => {
+                handle_phase(ctx, &mut stream, vpid, ckpt_id, phase, &dir)?;
+            }
+            FromCoordinator::Kill => {
+                fire_plugins(ctx, Event::Kill)?;
+                ctx.gate.kill();
+                log::debug!("{} (vpid {vpid}) killed by coordinator", ctx.name);
+                return Ok(());
+            }
+            other => {
+                log::warn!("{}: unexpected message {other:?}", ctx.name);
+            }
+        }
+        if ctx.gate.killed() {
+            return Ok(());
+        }
+    }
+}
+
+fn handle_phase(
+    ctx: &mut CkptContext,
+    stream: &mut TcpStream,
+    vpid: u64,
+    ckpt_id: u64,
+    phase: Phase,
+    dir: &str,
+) -> Result<()> {
+    match phase {
+        Phase::Suspend => {
+            ctx.gate.request_suspend();
+            wait_all_parked(ctx);
+            // Publish the parked population for the LDMS sampler: the
+            // process burns no user CPU from here until Resume (the
+            // paper's Fig 4 CPU dips at checkpoint instants).
+            ctx.stats
+                .parked
+                .store(ctx.gate.parked_count(), Ordering::Relaxed);
+        }
+        Phase::Drain => {
+            // User threads are parked; in-process channels are quiescent.
+            // (Real DMTCP drains socket buffers here; our inter-process
+            // data plane is the coordinator link itself.)
+        }
+        Phase::Checkpoint => {
+            let info = write_image(ctx, vpid, ckpt_id, dir)?;
+            send_to_coordinator(
+                stream,
+                &ToCoordinator::CkptDone {
+                    vpid,
+                    ckpt_id,
+                    path: info.0,
+                    stored_bytes: info.1,
+                    raw_bytes: info.2,
+                    write_secs: info.3,
+                },
+            )?;
+        }
+        Phase::Refill => {
+            // Re-prime drained channels (no-op for the in-process plane).
+        }
+        Phase::Resume => {
+            fire_plugins(ctx, Event::PostCheckpoint)?;
+            ctx.gate.resume();
+            ctx.stats.parked.store(0, Ordering::Relaxed);
+        }
+    }
+    send_to_coordinator(stream, &ToCoordinator::PhaseAck { vpid, ckpt_id, phase })
+}
+
+/// Wait until every *currently active* user thread is parked. Threads that
+/// finish their work while we wait reduce the target, so completion racing
+/// a checkpoint cannot deadlock the barrier.
+fn wait_all_parked(ctx: &CkptContext) {
+    loop {
+        let active = ctx.stats.n_threads.load(Ordering::Relaxed);
+        let parked = ctx.gate.parked_count();
+        if parked >= active || ctx.gate.killed() {
+            return;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+fn fire_plugins(ctx: &mut CkptContext, event: Event) -> Result<()> {
+    let mut env = ctx.env.lock().expect("env poisoned");
+    let mut plugins = ctx.plugins.lock().expect("plugins poisoned");
+    let mut pctx = PluginCtx {
+        records: &mut ctx.records,
+        env: &mut env,
+        generation: ctx.generation,
+    };
+    plugins.fire(event, &mut pctx)
+}
+
+/// Serialize the process into its image file.
+/// Returns `(path, stored_bytes, raw_bytes, write_secs)`.
+fn write_image(
+    ctx: &mut CkptContext,
+    vpid: u64,
+    ckpt_id: u64,
+    dir: &str,
+) -> Result<(String, u64, u64, f64)> {
+    fire_plugins(ctx, Event::PreCheckpoint)?;
+
+    let (segments, steps_done) = ctx.source.capture();
+    let raw_bytes: u64 = segments.iter().map(|(_, d)| d.len() as u64).sum();
+    // The transient allocation below is what produces the paper's Fig 4
+    // memory spikes at checkpoint instants.
+    ctx.stats.transient_bytes.store(raw_bytes, Ordering::Relaxed);
+
+    let header = ImageHeader {
+        vpid,
+        name: ctx.name.clone(),
+        ckpt_id,
+        generation: ctx.generation,
+        steps_done,
+        env: ctx.env.lock().expect("env poisoned").clone(),
+        fds: ctx.fds.lock().expect("fds poisoned").capture(),
+        plugin_records: ctx.records.clone(),
+    };
+    let image = CheckpointImage { header, segments };
+
+    let gzip = ctx
+        .env
+        .lock()
+        .expect("env poisoned")
+        .get("DMTCP_GZIP")
+        .map(|v| v != "0")
+        .unwrap_or(true);
+    let path = std::path::Path::new(dir).join(format!("ckpt_{}_{}.dmtcp", ctx.name, vpid));
+    let t0 = Instant::now();
+    let stored = image.write_file(&path, gzip)?;
+    let secs = t0.elapsed().as_secs_f64();
+
+    ctx.stats.transient_bytes.store(0, Ordering::Relaxed);
+    ctx.stats.checkpoints.fetch_add(1, Ordering::Relaxed);
+    log::debug!(
+        "{} (vpid {vpid}) wrote ckpt {ckpt_id}: {} -> {} bytes in {:.3}s",
+        ctx.name,
+        raw_bytes,
+        stored,
+        secs
+    );
+    Ok((path.to_string_lossy().into_owned(), stored, raw_bytes, secs))
+}

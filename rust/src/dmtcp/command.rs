@@ -1,0 +1,140 @@
+//! `dmtcp_command` — one-shot control client for a running coordinator.
+//!
+//! The NERSC CR module drives checkpoints from job scripts via
+//! `dmtcp_command --checkpoint`, finding the coordinator through the
+//! `dmtcp_command.<jobid>` rendezvous file the coordinator wrote at start.
+
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+
+use crate::dmtcp::protocol::{
+    recv_from_coordinator, send_to_coordinator, FromCoordinator, ToCoordinator,
+};
+use crate::error::{Error, Result};
+
+/// Parse a `dmtcp_command.<jobid>` rendezvous file ("host port\n").
+pub fn read_command_file(path: &Path) -> Result<SocketAddr> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Protocol(format!("{}: {e}", path.display())))?;
+    let mut parts = text.split_whitespace();
+    let host = parts
+        .next()
+        .ok_or_else(|| Error::Protocol("empty command file".into()))?;
+    let port: u16 = parts
+        .next()
+        .ok_or_else(|| Error::Protocol("command file missing port".into()))?
+        .parse()
+        .map_err(|_| Error::Protocol("bad port in command file".into()))?;
+    format!("{host}:{port}")
+        .parse()
+        .map_err(|e| Error::Protocol(format!("bad coordinator address: {e}")))
+}
+
+/// Control client bound to one coordinator.
+pub struct DmtcpCommand {
+    addr: SocketAddr,
+}
+
+/// Coordinator status snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoordStatus {
+    pub clients: u32,
+    pub last_ckpt_id: u64,
+    pub epoch: u64,
+}
+
+/// Result of a requested checkpoint round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CkptResult {
+    pub ckpt_id: u64,
+    pub images: u32,
+    pub total_stored_bytes: u64,
+}
+
+impl DmtcpCommand {
+    pub fn new(addr: SocketAddr) -> Self {
+        Self { addr }
+    }
+
+    /// Connect via a rendezvous file.
+    pub fn from_command_file(path: &Path) -> Result<Self> {
+        Ok(Self::new(read_command_file(path)?))
+    }
+
+    fn roundtrip(&self, msg: &ToCoordinator) -> Result<FromCoordinator> {
+        let mut stream = TcpStream::connect(self.addr)?;
+        stream.set_nodelay(true).ok();
+        send_to_coordinator(&mut stream, msg)?;
+        recv_from_coordinator(&mut stream)
+    }
+
+    /// `dmtcp_command --checkpoint`: drive a full barrier, blocking until
+    /// all images are written.
+    pub fn checkpoint(&self) -> Result<CkptResult> {
+        match self.roundtrip(&ToCoordinator::CommandCheckpoint)? {
+            FromCoordinator::CkptComplete {
+                ckpt_id,
+                images,
+                total_stored_bytes,
+            } => Ok(CkptResult {
+                ckpt_id,
+                images,
+                total_stored_bytes,
+            }),
+            FromCoordinator::Error { message } => Err(Error::Protocol(message)),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// `dmtcp_command --status`.
+    pub fn status(&self) -> Result<CoordStatus> {
+        match self.roundtrip(&ToCoordinator::CommandStatus)? {
+            FromCoordinator::Status {
+                clients,
+                last_ckpt_id,
+                epoch,
+            } => Ok(CoordStatus {
+                clients,
+                last_ckpt_id,
+                epoch,
+            }),
+            FromCoordinator::Error { message } => Err(Error::Protocol(message)),
+            other => Err(Error::Protocol(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    /// `dmtcp_command --quit`: kill attached processes, stop the listener.
+    pub fn quit(&self) -> Result<()> {
+        let mut stream = TcpStream::connect(self.addr)?;
+        send_to_coordinator(&mut stream, &ToCoordinator::CommandQuit)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn command_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ncr_cmdfile_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("dmtcp_command.777");
+        std::fs::write(&p, "127.0.0.1 45123\n").unwrap();
+        let addr = read_command_file(&p).unwrap();
+        assert_eq!(addr, "127.0.0.1:45123".parse().unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn command_file_garbage_rejected() {
+        let dir = std::env::temp_dir().join(format!("ncr_cmdfile_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, content) in [("a", ""), ("b", "justhost"), ("c", "h p")] {
+            let p = dir.join(name);
+            std::fs::write(&p, content).unwrap();
+            assert!(read_command_file(&p).is_err(), "{content:?} accepted");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

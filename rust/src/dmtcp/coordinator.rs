@@ -1,0 +1,523 @@
+//! The central checkpoint coordinator (`dmtcp_coordinator` analog).
+//!
+//! One coordinator instance manages one computation: worker processes
+//! connect over TCP (see [`crate::dmtcp::protocol`]), a checkpoint request
+//! drives all of them through the five-phase barrier, and the results are
+//! collected into [`ImageInfo`] records. Multiple coordinators can run
+//! side-by-side for independent computations (the paper: "with the support
+//! for multiple coordinators, the architecture enables independent,
+//! parallel checkpointing processes") — each is just a value of
+//! [`Coordinator`] on its own port.
+//!
+//! The coordinator also writes the `dmtcp_command.<jobid>` rendezvous file
+//! that the NERSC CR module uses to find it from job scripts.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::dmtcp::image::ImageInfo;
+use crate::dmtcp::protocol::{
+    recv_to_coordinator, send_from_coordinator, FromCoordinator, Phase, ToCoordinator,
+};
+use crate::error::{Error, Result};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub bind: String,
+    /// Directory checkpoint images are written into.
+    pub ckpt_dir: PathBuf,
+    /// gzip images (DMTCP `--gzip`, the NERSC default).
+    pub gzip: bool,
+    /// When set, write `dmtcp_command.<jobid>` into `command_file_dir`.
+    pub jobid: Option<String>,
+    /// Where the rendezvous file goes (a job's working directory).
+    pub command_file_dir: PathBuf,
+    /// Barrier timeout per phase.
+    pub phase_timeout: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            bind: "127.0.0.1:0".into(),
+            ckpt_dir: std::env::temp_dir().join("nersc_cr_ckpt"),
+            gzip: true,
+            jobid: None,
+            command_file_dir: std::env::temp_dir(),
+            phase_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Per-connected-process record.
+struct ClientConn {
+    stream: TcpStream,
+    name: String,
+    real_pid: u64,
+    n_threads: u32,
+}
+
+/// One in-flight checkpoint round.
+struct Round {
+    ckpt_id: u64,
+    phase: Phase,
+    pending: HashSet<u64>,
+    images: Vec<ImageInfo>,
+    failed: Option<String>,
+}
+
+#[derive(Default)]
+struct CoordState {
+    clients: HashMap<u64, ClientConn>,
+    pid_table: crate::dmtcp::virtualization::PidTable,
+    round: Option<Round>,
+    last_ckpt_id: u64,
+    /// Total images ever written (metrics).
+    images_written: u64,
+    total_stored_bytes: u64,
+}
+
+struct Shared {
+    state: Mutex<CoordState>,
+    cv: Condvar,
+    epoch: u64,
+    next_ckpt_id: AtomicU64,
+    shutdown: AtomicBool,
+    config: CoordinatorConfig,
+}
+
+/// A running coordinator. Dropping it shuts the listener down.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    listener_join: Option<std::thread::JoinHandle<()>>,
+    command_file: Option<PathBuf>,
+}
+
+impl Coordinator {
+    /// Start a coordinator (the paper's `start_coordinator` primitive).
+    pub fn start(config: CoordinatorConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&config.bind)?;
+        let addr = listener.local_addr()?;
+        std::fs::create_dir_all(&config.ckpt_dir)?;
+
+        // Rendezvous file: `dmtcp_command.<jobid>` with "host port".
+        let command_file = match &config.jobid {
+            Some(jobid) => {
+                let p = config.command_file_dir.join(format!("dmtcp_command.{jobid}"));
+                std::fs::create_dir_all(&config.command_file_dir)?;
+                std::fs::write(&p, format!("{} {}\n", addr.ip(), addr.port()))?;
+                Some(p)
+            }
+            None => None,
+        };
+
+        let shared = Arc::new(Shared {
+            state: Mutex::new(CoordState {
+                pid_table: crate::dmtcp::virtualization::PidTable::new(),
+                ..Default::default()
+            }),
+            cv: Condvar::new(),
+            epoch: 1,
+            next_ckpt_id: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+            config,
+        });
+
+        let accept_shared = Arc::clone(&shared);
+        let listener_join = std::thread::Builder::new()
+            .name("dmtcp-coord-accept".into())
+            .spawn(move || {
+                // Nonblocking accept so shutdown is prompt.
+                listener
+                    .set_nonblocking(true)
+                    .expect("listener nonblocking");
+                while !accept_shared.shutdown.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            stream.set_nodelay(true).ok();
+                            let s = Arc::clone(&accept_shared);
+                            std::thread::Builder::new()
+                                .name("dmtcp-coord-client".into())
+                                .spawn(move || client_loop(s, stream))
+                                .expect("spawn client thread");
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn accept thread");
+
+        Ok(Self {
+            shared,
+            addr,
+            listener_join: Some(listener_join),
+            command_file,
+        })
+    }
+
+    /// The coordinator's socket address (workers connect here).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Path of the rendezvous file, when configured.
+    pub fn command_file(&self) -> Option<&Path> {
+        self.command_file.as_deref()
+    }
+
+    /// Number of currently attached processes.
+    pub fn num_clients(&self) -> usize {
+        self.shared.state.lock().unwrap().clients.len()
+    }
+
+    /// Block until `n` processes are attached (worker startup rendezvous).
+    pub fn wait_for_clients(&self, n: usize, timeout: Duration) -> Result<()> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        while st.clients.len() < n {
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
+                return Err(Error::Protocol(format!(
+                    "timeout waiting for {n} clients (have {})",
+                    st.clients.len()
+                )));
+            }
+            let (g, _) = self.shared.cv.wait_timeout(st, left).unwrap();
+            st = g;
+        }
+        Ok(())
+    }
+
+    /// Drive a full five-phase checkpoint barrier across all attached
+    /// processes. Returns one [`ImageInfo`] per process.
+    pub fn checkpoint_all(&self) -> Result<Vec<ImageInfo>> {
+        checkpoint_all_inner(&self.shared)
+    }
+
+    /// Broadcast a kill (preemption) to every attached process.
+    pub fn kill_all(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        for (vpid, c) in st.clients.iter_mut() {
+            if send_from_coordinator(&mut c.stream, &FromCoordinator::Kill).is_err() {
+                log::warn!("kill: client {vpid} unreachable");
+            }
+        }
+    }
+
+    /// `(clients, last completed checkpoint id, epoch)`.
+    pub fn status(&self) -> (usize, u64, u64) {
+        let st = self.shared.state.lock().unwrap();
+        (st.clients.len(), st.last_ckpt_id, self.shared.epoch)
+    }
+
+    /// Lifetime totals `(images_written, stored_bytes)`.
+    pub fn totals(&self) -> (u64, u64) {
+        let st = self.shared.state.lock().unwrap();
+        (st.images_written, st.total_stored_bytes)
+    }
+
+    /// Stop accepting, kill attached processes, join the listener.
+    pub fn shutdown(&mut self) {
+        self.kill_all();
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        if let Some(j) = self.listener_join.take() {
+            let _ = j.join();
+        }
+        if let Some(f) = &self.command_file {
+            let _ = std::fs::remove_file(f);
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The barrier driver (also reachable from command connections).
+fn checkpoint_all_inner(shared: &Arc<Shared>) -> Result<Vec<ImageInfo>> {
+    let ckpt_id = shared.next_ckpt_id.fetch_add(1, Ordering::Relaxed);
+    let dir = shared.config.ckpt_dir.to_string_lossy().to_string();
+
+    {
+        let mut st = shared.state.lock().unwrap();
+        if st.round.is_some() {
+            return Err(Error::Protocol("checkpoint already in progress".into()));
+        }
+        if st.clients.is_empty() {
+            return Err(Error::Protocol("no clients attached".into()));
+        }
+        st.round = Some(Round {
+            ckpt_id,
+            phase: Phase::Suspend,
+            pending: HashSet::new(),
+            images: Vec::new(),
+            failed: None,
+        });
+    }
+
+    let result = drive_phases(shared, ckpt_id, &dir);
+
+    // Tear down the round record, collect images.
+    let mut st = shared.state.lock().unwrap();
+    let round = st.round.take().expect("round vanished");
+    match result {
+        Ok(()) => {
+            if let Some(msg) = round.failed {
+                return Err(Error::Protocol(msg));
+            }
+            st.last_ckpt_id = ckpt_id;
+            st.images_written += round.images.len() as u64;
+            st.total_stored_bytes += round.images.iter().map(|i| i.stored_bytes).sum::<u64>();
+            Ok(round.images)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn drive_phases(shared: &Arc<Shared>, ckpt_id: u64, dir: &str) -> Result<()> {
+    for phase in Phase::ALL {
+        // Broadcast the phase to every (still-attached) client.
+        {
+            let mut st = shared.state.lock().unwrap();
+            let vpids: Vec<u64> = st.clients.keys().copied().collect();
+            if vpids.is_empty() {
+                return Err(Error::Protocol(format!(
+                    "all clients vanished before {phase:?}"
+                )));
+            }
+            let round = st.round.as_mut().expect("no active round");
+            round.phase = phase;
+            round.pending = vpids.iter().copied().collect();
+            for vpid in vpids {
+                let c = st.clients.get_mut(&vpid).unwrap();
+                let msg = FromCoordinator::Phase {
+                    ckpt_id,
+                    phase,
+                    dir: dir.to_string(),
+                };
+                if send_from_coordinator(&mut c.stream, &msg).is_err() {
+                    log::warn!("phase {phase:?}: client {vpid} unreachable");
+                    // Reader thread will clean it up; drop from pending now.
+                    st.round.as_mut().unwrap().pending.remove(&vpid);
+                }
+            }
+        }
+        // Await all acks for this phase.
+        let deadline = std::time::Instant::now() + shared.config.phase_timeout;
+        let mut st = shared.state.lock().unwrap();
+        loop {
+            let round = st.round.as_ref().expect("no active round");
+            if round.pending.is_empty() {
+                break;
+            }
+            let left = deadline.saturating_duration_since(std::time::Instant::now());
+            if left.is_zero() {
+                return Err(Error::Protocol(format!(
+                    "phase {phase:?} timed out with {} clients pending",
+                    round.pending.len()
+                )));
+            }
+            let (g, _) = shared.cv.wait_timeout(st, left).unwrap();
+            st = g;
+        }
+    }
+    Ok(())
+}
+
+/// Per-connection reader loop: registration, acks, commands, departures.
+fn client_loop(shared: Arc<Shared>, mut stream: TcpStream) {
+    let mut vpid: Option<u64> = None;
+    loop {
+        let msg = match recv_to_coordinator(&mut stream) {
+            Ok(m) => m,
+            Err(_) => break, // disconnect
+        };
+        match msg {
+            ToCoordinator::Hello {
+                real_pid,
+                name,
+                n_threads,
+                restored_vpid,
+            } => {
+                let write_stream = match stream.try_clone() {
+                    Ok(s) => s,
+                    Err(_) => break,
+                };
+                let mut st = shared.state.lock().unwrap();
+                let assigned = match restored_vpid {
+                    Some(v) => match st.pid_table.adopt(v, real_pid) {
+                        Ok(()) => v,
+                        Err(e) => {
+                            let _ = send_from_coordinator(
+                                &mut stream,
+                                &FromCoordinator::Error {
+                                    message: e.to_string(),
+                                },
+                            );
+                            continue;
+                        }
+                    },
+                    None => match st.pid_table.register(real_pid) {
+                        Ok(v) => v,
+                        Err(e) => {
+                            let _ = send_from_coordinator(
+                                &mut stream,
+                                &FromCoordinator::Error {
+                                    message: e.to_string(),
+                                },
+                            );
+                            continue;
+                        }
+                    },
+                };
+                st.clients.insert(
+                    assigned,
+                    ClientConn {
+                        stream: write_stream,
+                        name: name.clone(),
+                        real_pid,
+                        n_threads,
+                    },
+                );
+                vpid = Some(assigned);
+                shared.cv.notify_all();
+                drop(st);
+                log::debug!("client {name} attached as vpid {assigned} (pid {real_pid})");
+                let _ = send_from_coordinator(
+                    &mut stream,
+                    &FromCoordinator::Welcome {
+                        vpid: assigned,
+                        epoch: shared.epoch,
+                    },
+                );
+            }
+            ToCoordinator::PhaseAck {
+                vpid: v,
+                ckpt_id,
+                phase,
+            } => {
+                let mut st = shared.state.lock().unwrap();
+                if let Some(round) = st.round.as_mut() {
+                    if round.ckpt_id == ckpt_id && round.phase == phase {
+                        round.pending.remove(&v);
+                        shared.cv.notify_all();
+                    } else {
+                        log::warn!(
+                            "stale ack from vpid {v}: round {ckpt_id}/{phase:?} vs {}/{:?}",
+                            round.ckpt_id,
+                            round.phase
+                        );
+                    }
+                }
+            }
+            ToCoordinator::CkptDone {
+                vpid: v,
+                ckpt_id,
+                path,
+                stored_bytes,
+                raw_bytes,
+                write_secs,
+            } => {
+                let mut st = shared.state.lock().unwrap();
+                if let Some(round) = st.round.as_mut() {
+                    if round.ckpt_id == ckpt_id {
+                        round.images.push(ImageInfo {
+                            vpid: v,
+                            ckpt_id,
+                            path: PathBuf::from(path),
+                            stored_bytes,
+                            raw_bytes,
+                            write_secs,
+                        });
+                    }
+                }
+            }
+            ToCoordinator::Goodbye { vpid: v } => {
+                let mut st = shared.state.lock().unwrap();
+                st.clients.remove(&v);
+                let _ = st.pid_table.unregister(v);
+                remove_from_round(&mut st, v, "left");
+                shared.cv.notify_all();
+                break;
+            }
+            ToCoordinator::CommandCheckpoint => {
+                let reply = match checkpoint_all_inner(&shared) {
+                    Ok(images) => FromCoordinator::CkptComplete {
+                        ckpt_id: {
+                            let st = shared.state.lock().unwrap();
+                            st.last_ckpt_id
+                        },
+                        images: images.len() as u32,
+                        total_stored_bytes: images.iter().map(|i| i.stored_bytes).sum(),
+                    },
+                    Err(e) => FromCoordinator::Error {
+                        message: e.to_string(),
+                    },
+                };
+                let _ = send_from_coordinator(&mut stream, &reply);
+            }
+            ToCoordinator::CommandStatus => {
+                let st = shared.state.lock().unwrap();
+                let reply = FromCoordinator::Status {
+                    clients: st.clients.len() as u32,
+                    last_ckpt_id: st.last_ckpt_id,
+                    epoch: shared.epoch,
+                };
+                drop(st);
+                let _ = send_from_coordinator(&mut stream, &reply);
+            }
+            ToCoordinator::CommandQuit => {
+                let mut st = shared.state.lock().unwrap();
+                for (_, c) in st.clients.iter_mut() {
+                    let _ = send_from_coordinator(&mut c.stream, &FromCoordinator::Kill);
+                }
+                drop(st);
+                shared.shutdown.store(true, Ordering::Relaxed);
+                break;
+            }
+        }
+    }
+    // Disconnect cleanup: a worker vanishing mid-round must not hang the
+    // barrier (the round is marked failed instead).
+    if let Some(v) = vpid {
+        let mut st = shared.state.lock().unwrap();
+        if st.clients.remove(&v).is_some() {
+            let _ = st.pid_table.unregister(v);
+            remove_from_round(&mut st, v, "disconnected");
+            log::debug!("client vpid {v} detached");
+        }
+        shared.cv.notify_all();
+    }
+}
+
+fn remove_from_round(st: &mut CoordState, vpid: u64, why: &str) {
+    if let Some(round) = st.round.as_mut() {
+        if round.pending.remove(&vpid) {
+            round.failed = Some(format!(
+                "client vpid {vpid} {why} during {:?} of round {}",
+                round.phase, round.ckpt_id
+            ));
+        }
+    }
+}
+
+/// Client metadata snapshot (for `dmtcp_command --status`-style listings).
+pub fn client_table(coord: &Coordinator) -> BTreeMap<u64, (String, u64, u32)> {
+    let st = coord.shared.state.lock().unwrap();
+    st.clients
+        .iter()
+        .map(|(&v, c)| (v, (c.name.clone(), c.real_pid, c.n_threads)))
+        .collect()
+}

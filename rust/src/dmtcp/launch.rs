@@ -1,0 +1,156 @@
+//! `dmtcp_launch` — start a fresh process under checkpoint control.
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::dmtcp::ckpt_thread::{self, CkptContext};
+use crate::dmtcp::plugin::PluginRegistry;
+use crate::dmtcp::process::{
+    Checkpointable, ProcessStats, SuspendGate, TypedSource, UserProcess,
+};
+use crate::dmtcp::virtualization::FdTable;
+use crate::error::{Error, Result};
+
+/// Synthetic real-pid allocator (distinct per launched process instance;
+/// the OS pid space is not consumed by simulated processes).
+static NEXT_REAL_PID: AtomicU64 = AtomicU64::new(10_000);
+
+pub(crate) fn alloc_real_pid() -> u64 {
+    NEXT_REAL_PID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Launch parameters.
+#[derive(Debug, Clone)]
+pub struct LaunchSpec {
+    /// Process name (shows in image filenames and coordinator listings).
+    pub name: String,
+    /// Coordinator to attach to.
+    pub coordinator: SocketAddr,
+    /// Initial environment (DMTCP_GZIP=0 disables image compression).
+    pub env: BTreeMap<String, String>,
+}
+
+impl LaunchSpec {
+    pub fn new(name: impl Into<String>, coordinator: SocketAddr) -> Self {
+        Self {
+            name: name.into(),
+            coordinator,
+            env: BTreeMap::new(),
+        }
+    }
+
+    pub fn env(mut self, k: impl Into<String>, v: impl Into<String>) -> Self {
+        self.env.insert(k.into(), v.into());
+        self
+    }
+}
+
+/// A process running under checkpoint control.
+pub struct LaunchedProcess {
+    pub process: UserProcess,
+    ckpt_join: Option<std::thread::JoinHandle<()>>,
+    attached_rx: mpsc::Receiver<Result<u64>>,
+}
+
+impl LaunchedProcess {
+    /// Block until the coordinator has assigned a virtual pid.
+    pub fn wait_attached(&self, timeout: Duration) -> Result<u64> {
+        match self.attached_rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(_) => Err(Error::Protocol(format!(
+                "{}: attach timed out",
+                self.process.name
+            ))),
+        }
+    }
+
+    /// The assigned virtual pid (0 until attached).
+    pub fn vpid(&self) -> u64 {
+        self.process.vpid.load(Ordering::SeqCst)
+    }
+
+    /// Wait for user threads to finish, then reap the checkpoint thread if
+    /// it has exited (it exits on kill or coordinator loss).
+    pub fn join(mut self) -> UserProcess {
+        self.process.join_user_threads();
+        if let Some(j) = self.ckpt_join.take() {
+            // The ckpt thread may still be waiting on the socket if the
+            // process completed normally; don't block on it in that case.
+            if j.is_finished() {
+                let _ = j.join();
+            }
+        }
+        self.process
+    }
+}
+
+/// Build the shared process skeleton used by launch and restart.
+pub(crate) fn build_process(
+    name: &str,
+    env: BTreeMap<String, String>,
+    fds: FdTable,
+    plugins: PluginRegistry,
+    generation: u32,
+) -> UserProcess {
+    UserProcess {
+        name: name.to_string(),
+        real_pid: alloc_real_pid(),
+        vpid: Arc::new(AtomicU64::new(0)),
+        generation,
+        gate: Arc::new(SuspendGate::new()),
+        stats: Arc::new(ProcessStats::default()),
+        env: Arc::new(Mutex::new(env)),
+        fds: Arc::new(Mutex::new(fds)),
+        plugins: Arc::new(Mutex::new(plugins)),
+        threads: Vec::new(),
+    }
+}
+
+/// Attach `process` to the coordinator (spawns the checkpoint thread).
+pub(crate) fn attach<S: Checkpointable + 'static>(
+    coordinator: SocketAddr,
+    process: UserProcess,
+    state: Arc<Mutex<S>>,
+    records: BTreeMap<String, Vec<u8>>,
+    restored_vpid: Option<u64>,
+) -> LaunchedProcess {
+    let (tx, rx) = mpsc::channel();
+    let ctx = CkptContext {
+        name: process.name.clone(),
+        real_pid: process.real_pid,
+        generation: process.generation,
+        gate: Arc::clone(&process.gate),
+        stats: Arc::clone(&process.stats),
+        env: Arc::clone(&process.env),
+        fds: Arc::clone(&process.fds),
+        plugins: Arc::clone(&process.plugins),
+        source: Box::new(TypedSource(state)),
+        records,
+        restored_vpid,
+        vpid_out: Arc::clone(&process.vpid),
+    };
+    let join = ckpt_thread::spawn(coordinator, ctx, tx);
+    LaunchedProcess {
+        process,
+        ckpt_join: Some(join),
+        attached_rx: rx,
+    }
+}
+
+/// Launch a fresh process under checkpoint control.
+///
+/// The caller keeps the typed `state` handle for its worker threads and
+/// spawns them via [`UserProcess::spawn_user_thread`] on the returned
+/// process. The checkpoint thread is already attached when this returns
+/// (use [`LaunchedProcess::wait_attached`] to synchronize).
+pub fn dmtcp_launch<S: Checkpointable + 'static>(
+    spec: LaunchSpec,
+    state: Arc<Mutex<S>>,
+    plugins: PluginRegistry,
+) -> LaunchedProcess {
+    let process = build_process(&spec.name, spec.env, FdTable::new(), plugins, 0);
+    attach(spec.coordinator, process, state, BTreeMap::new(), None)
+}

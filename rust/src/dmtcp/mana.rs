@@ -1,0 +1,182 @@
+//! MANA-style split-process checkpointing (the paper's §VII direction).
+//!
+//! "MANA (MPI-Agnostic Network-Agnostic) ... promises enhanced efficiency
+//! and flexibility for MPI applications through its innovative
+//! split-process approach, which simplifies the checkpointing process by
+//! focusing on application state while abstracting away MPI library and
+//! network specifics."
+//!
+//! The split is expressed here as a segment-name convention: segments
+//! whose names start with [`LIB_PREFIX`] belong to the *lower half* (MPI
+//! library, network endpoints, transport caches). [`ManaState`] wraps any
+//! [`Checkpointable`] and
+//!
+//! * **excludes** lower-half segments from the image (smaller, faster,
+//!   implementation-oblivious checkpoints), and
+//! * **re-initializes** the lower half on restart through a user-supplied
+//!   `reinit` hook (the moral equivalent of re-running `MPI_Init` and
+//!   rebuilding communicators on the new allocation).
+//!
+//! The ablation bench `ckpt_overhead` quantifies the image-size/time win
+//! over whole-process DMTCP images for library-heavy states.
+
+use std::sync::{Arc, Mutex};
+
+use crate::dmtcp::process::Checkpointable;
+use crate::error::Result;
+
+/// Lower-half segment-name prefix.
+pub const LIB_PREFIX: &str = "lib:";
+
+/// Re-initialization hook run after the upper half is restored.
+pub type ReinitFn<S> = Box<dyn Fn(&mut S) -> Result<()> + Send>;
+
+/// A split-process wrapper: checkpoints only the application (upper-half)
+/// segments of `S`, rebuilding the rest via `reinit` on restore.
+pub struct ManaState<S: Checkpointable> {
+    inner: Arc<Mutex<S>>,
+    reinit: ReinitFn<S>,
+}
+
+impl<S: Checkpointable> ManaState<S> {
+    pub fn new(inner: Arc<Mutex<S>>, reinit: ReinitFn<S>) -> Self {
+        Self { inner, reinit }
+    }
+
+    /// Shared handle to the wrapped state.
+    pub fn inner(&self) -> Arc<Mutex<S>> {
+        Arc::clone(&self.inner)
+    }
+
+    /// Is this a lower-half (library) segment?
+    pub fn is_lib_segment(name: &str) -> bool {
+        name.starts_with(LIB_PREFIX)
+    }
+}
+
+impl<S: Checkpointable> Checkpointable for ManaState<S> {
+    fn segments(&self) -> Vec<(String, Vec<u8>)> {
+        self.inner
+            .lock()
+            .expect("mana inner poisoned")
+            .segments()
+            .into_iter()
+            .filter(|(name, _)| !Self::is_lib_segment(name))
+            .collect()
+    }
+
+    fn restore(&mut self, segments: &[(String, Vec<u8>)]) -> Result<()> {
+        // Upper half from the image; lower half rebuilt for the *current*
+        // incarnation (new nodes, new endpoints).
+        let mut inner = self.inner.lock().expect("mana inner poisoned");
+        inner.restore(segments)?;
+        (self.reinit)(&mut inner)
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.inner.lock().expect("mana inner poisoned").steps_done()
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.inner.lock().expect("mana inner poisoned").size_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// An app with both halves: science data + an "MPI library" state.
+    struct MpiApp {
+        science: Vec<u8>,
+        /// lower half: endpoint table only valid for this incarnation
+        endpoints: Vec<u8>,
+        reinit_count: u32,
+    }
+
+    impl Checkpointable for MpiApp {
+        fn segments(&self) -> Vec<(String, Vec<u8>)> {
+            vec![
+                ("science".into(), self.science.clone()),
+                (format!("{LIB_PREFIX}endpoints"), self.endpoints.clone()),
+            ]
+        }
+
+        fn restore(&mut self, segments: &[(String, Vec<u8>)]) -> Result<()> {
+            for (name, data) in segments {
+                match name.as_str() {
+                    "science" => self.science = data.clone(),
+                    n if n == &format!("{LIB_PREFIX}endpoints") => {
+                        self.endpoints = data.clone()
+                    }
+                    _ => {}
+                }
+            }
+            Ok(())
+        }
+    }
+
+    fn mana(inner: Arc<Mutex<MpiApp>>) -> ManaState<MpiApp> {
+        ManaState::new(inner, Box::new(|app| {
+            app.endpoints = b"fresh-endpoints".to_vec();
+            app.reinit_count += 1;
+            Ok(())
+        }))
+    }
+
+    #[test]
+    fn lib_segments_excluded_from_image() {
+        let inner = Arc::new(Mutex::new(MpiApp {
+            science: vec![1, 2, 3],
+            endpoints: b"node17:4242".to_vec(),
+            reinit_count: 0,
+        }));
+        let m = mana(Arc::clone(&inner));
+        let segs = m.segments();
+        assert_eq!(segs.len(), 1);
+        assert_eq!(segs[0].0, "science");
+    }
+
+    #[test]
+    fn restore_rebuilds_lower_half() {
+        let inner = Arc::new(Mutex::new(MpiApp {
+            science: vec![1, 2, 3],
+            endpoints: b"node17:4242".to_vec(),
+            reinit_count: 0,
+        }));
+        let m = mana(Arc::clone(&inner));
+        let segs = m.segments();
+
+        // "Restart on a different machine": stale lower half.
+        let inner2 = Arc::new(Mutex::new(MpiApp {
+            science: Vec::new(),
+            endpoints: b"STALE".to_vec(),
+            reinit_count: 0,
+        }));
+        let mut m2 = mana(Arc::clone(&inner2));
+        m2.restore(&segs).unwrap();
+        let app = inner2.lock().unwrap();
+        assert_eq!(app.science, vec![1, 2, 3]);
+        assert_eq!(app.endpoints, b"fresh-endpoints");
+        assert_eq!(app.reinit_count, 1);
+    }
+
+    #[test]
+    fn image_shrinks_for_library_heavy_states() {
+        let inner = Arc::new(Mutex::new(MpiApp {
+            science: vec![0; 1_000],
+            endpoints: vec![0; 100_000], // big MPI buffers
+            reinit_count: 0,
+        }));
+        let full_bytes: usize = inner
+            .lock()
+            .unwrap()
+            .segments()
+            .iter()
+            .map(|(_, d)| d.len())
+            .sum();
+        let m = mana(inner);
+        let mana_bytes: usize = m.segments().iter().map(|(_, d)| d.len()).sum();
+        assert!(mana_bytes * 50 < full_bytes, "{mana_bytes} vs {full_bytes}");
+    }
+}

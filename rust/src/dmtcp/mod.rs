@@ -1,0 +1,33 @@
+//! DMTCP-analog: transparent checkpoint-restart of multi-threaded
+//! (simulated) processes via a central coordinator.
+//!
+//! Architecture (paper Fig 1): a central [`coordinator::Coordinator`]
+//! manages N processes over TCP sockets; each process carries a
+//! [`ckpt_thread`] checkpoint thread plus its user threads, which park at
+//! [`process::WorkerCtx::ckpt_point`] safe-points during the five-phase
+//! barrier ([`protocol::Phase`]). Checkpoints are [`image`] files
+//! (gzip + CRC, atomically written); restart ([`restart::dmtcp_restart`])
+//! rebuilds the process under its original virtual pid
+//! ([`virtualization`]) with plugin records replayed ([`plugin`]).
+
+pub mod ckpt_thread;
+pub mod command;
+pub mod coordinator;
+pub mod image;
+pub mod launch;
+pub mod mana;
+pub mod plugin;
+pub mod process;
+pub mod protocol;
+pub mod restart;
+pub mod virtualization;
+
+pub use command::{CkptResult, CoordStatus, DmtcpCommand};
+pub use coordinator::{Coordinator, CoordinatorConfig};
+pub use image::{CheckpointImage, FdEntry, ImageHeader, ImageInfo};
+pub use launch::{dmtcp_launch, LaunchSpec, LaunchedProcess};
+pub use mana::{ManaState, LIB_PREFIX};
+pub use plugin::{EnvPlugin, Event, Plugin, PluginCtx, PluginRegistry, TimerPlugin};
+pub use process::{Checkpointable, GateVerdict, SuspendGate, UserProcess, WorkerCtx};
+pub use restart::{dmtcp_restart, inspect_image, RestartedProcess};
+pub use virtualization::{FdKind, FdTable, PidTable};

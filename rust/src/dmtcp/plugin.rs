@@ -1,0 +1,358 @@
+//! Plugin / event-hook architecture.
+//!
+//! DMTCP extends itself through plugins that receive event callbacks around
+//! the checkpoint lifecycle and can persist named records inside the image
+//! (the paper: "a plugin architecture, which facilitates event hooks and
+//! function wrappers for process virtualization"). This module reproduces
+//! that: a [`Plugin`] trait with lifecycle [`Event`]s, a [`PluginRegistry`]
+//! per process, and image-carried records written at `PreCheckpoint` and
+//! replayed at `PostRestart`.
+//!
+//! Built-ins:
+//! * [`TimerPlugin`] — virtualizes elapsed runtime across restarts (the job
+//!   script's "converting execution time into a human-readable format and
+//!   calculating the remaining time" needs total-runtime-so-far, which a
+//!   fresh incarnation cannot know without this record).
+//! * [`EnvPlugin`] — captures environment variables and re-exports them on
+//!   restart ("applications can resume ... with the same runtime context,
+//!   including ... modifiable environment settings").
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::error::Result;
+#[cfg(test)]
+use crate::error::Error;
+use crate::util::bytes::{ByteReader, PutBytes};
+
+/// Checkpoint-lifecycle events delivered to plugins, in protocol order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// All user threads parked; about to serialize.
+    PreCheckpoint,
+    /// Image written; process continuing (checkpoint-only path).
+    PostCheckpoint,
+    /// Process reconstructed from an image; records available.
+    PostRestart,
+    /// Process received a kill/preemption request.
+    Kill,
+}
+
+/// Mutable context handed to plugins at each event.
+pub struct PluginCtx<'a> {
+    /// Named records carried inside the checkpoint image. Plugins write
+    /// these at `PreCheckpoint` and read them at `PostRestart`.
+    pub records: &'a mut BTreeMap<String, Vec<u8>>,
+    /// The process's environment map.
+    pub env: &'a mut BTreeMap<String, String>,
+    /// Restart generation of the running incarnation.
+    pub generation: u32,
+}
+
+/// A checkpoint-lifecycle plugin.
+pub trait Plugin: Send {
+    fn name(&self) -> &'static str;
+    fn on_event(&mut self, event: Event, ctx: &mut PluginCtx<'_>) -> Result<()>;
+}
+
+/// Ordered plugin collection for one process.
+#[derive(Default)]
+pub struct PluginRegistry {
+    plugins: Vec<Box<dyn Plugin>>,
+}
+
+impl PluginRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, p: Box<dyn Plugin>) {
+        self.plugins.push(p);
+    }
+
+    pub fn len(&self) -> usize {
+        self.plugins.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plugins.is_empty()
+    }
+
+    /// Deliver `event` to all plugins in registration order
+    /// (`PostRestart`/`Kill` in reverse order, mirroring DMTCP's barriers).
+    pub fn fire(&mut self, event: Event, ctx: &mut PluginCtx<'_>) -> Result<()> {
+        match event {
+            Event::PostRestart | Event::Kill => {
+                for p in self.plugins.iter_mut().rev() {
+                    p.on_event(event, ctx)?;
+                }
+            }
+            _ => {
+                for p in self.plugins.iter_mut() {
+                    p.on_event(event, ctx)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Virtualizes total elapsed runtime across restarts.
+///
+/// Record format: `u64 accumulated_nanos || u32 incarnations`.
+pub struct TimerPlugin {
+    started: Instant,
+    accumulated_nanos: u64,
+    incarnations: u32,
+}
+
+impl TimerPlugin {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            accumulated_nanos: 0,
+            incarnations: 1,
+        }
+    }
+
+    /// Total virtual runtime: prior incarnations + this one.
+    pub fn total_runtime_nanos(&self) -> u64 {
+        self.accumulated_nanos + self.started.elapsed().as_nanos() as u64
+    }
+
+    pub fn incarnations(&self) -> u32 {
+        self.incarnations
+    }
+
+    const KEY: &'static str = "timer";
+
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.put_u64(self.total_runtime_nanos());
+        b.put_u32(self.incarnations);
+        b
+    }
+
+    fn decode(buf: &[u8]) -> Result<(u64, u32)> {
+        let mut r = ByteReader::new(buf);
+        Ok((r.get_u64()?, r.get_u32()?))
+    }
+}
+
+impl Default for TimerPlugin {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Plugin for TimerPlugin {
+    fn name(&self) -> &'static str {
+        "timer"
+    }
+
+    fn on_event(&mut self, event: Event, ctx: &mut PluginCtx<'_>) -> Result<()> {
+        match event {
+            Event::PreCheckpoint => {
+                ctx.records.insert(Self::KEY.into(), self.encode());
+            }
+            Event::PostRestart => {
+                if let Some(rec) = ctx.records.get(Self::KEY) {
+                    let (nanos, inc) = Self::decode(rec)?;
+                    self.accumulated_nanos = nanos;
+                    self.incarnations = inc + 1;
+                    self.started = Instant::now();
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+/// Captures the environment at checkpoint and re-exports it on restart.
+///
+/// Record format: `u32 count || (lp_str key, lp_str val)*`.
+#[derive(Default)]
+pub struct EnvPlugin;
+
+impl EnvPlugin {
+    const KEY: &'static str = "env";
+}
+
+impl Plugin for EnvPlugin {
+    fn name(&self) -> &'static str {
+        "env"
+    }
+
+    fn on_event(&mut self, event: Event, ctx: &mut PluginCtx<'_>) -> Result<()> {
+        match event {
+            Event::PreCheckpoint => {
+                let mut b = Vec::new();
+                b.put_u32(ctx.env.len() as u32);
+                for (k, v) in ctx.env.iter() {
+                    b.put_lp_str(k);
+                    b.put_lp_str(v);
+                }
+                ctx.records.insert(Self::KEY.into(), b);
+            }
+            Event::PostRestart => {
+                if let Some(rec) = ctx.records.get(Self::KEY).cloned() {
+                    let mut r = ByteReader::new(&rec);
+                    let n = r.get_u32()?;
+                    for _ in 0..n {
+                        let k = r.get_lp_str()?;
+                        let v = r.get_lp_str()?;
+                        // Restored records win over incarnation defaults,
+                        // except the coordinator address, which the restart
+                        // path sets for the *new* coordinator.
+                        if k != "DMTCP_COORD_HOST" && k != "DMTCP_COORD_PORT" {
+                            ctx.env.insert(k, v);
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+/// Test plugin: counts events and can be told to fail.
+#[cfg(test)]
+pub struct ProbePlugin {
+    pub log: std::sync::Arc<std::sync::Mutex<Vec<(String, Event)>>>,
+    pub tag: String,
+    pub fail_on: Option<Event>,
+}
+
+#[cfg(test)]
+impl Plugin for ProbePlugin {
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+
+    fn on_event(&mut self, event: Event, _ctx: &mut PluginCtx<'_>) -> Result<()> {
+        self.log.lock().unwrap().push((self.tag.clone(), event));
+        if self.fail_on == Some(event) {
+            return Err(Error::Protocol(format!("probe {0} failing", self.tag)));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    fn ctx_parts() -> (BTreeMap<String, Vec<u8>>, BTreeMap<String, String>) {
+        (BTreeMap::new(), BTreeMap::new())
+    }
+
+    #[test]
+    fn fire_order_forward_and_reverse() {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let mut reg = PluginRegistry::new();
+        for tag in ["a", "b"] {
+            reg.register(Box::new(ProbePlugin {
+                log: Arc::clone(&log),
+                tag: tag.into(),
+                fail_on: None,
+            }));
+        }
+        let (mut recs, mut env) = ctx_parts();
+        let mut ctx = PluginCtx {
+            records: &mut recs,
+            env: &mut env,
+            generation: 0,
+        };
+        reg.fire(Event::PreCheckpoint, &mut ctx).unwrap();
+        reg.fire(Event::PostRestart, &mut ctx).unwrap();
+        let got: Vec<(String, Event)> = log.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec![
+                ("a".into(), Event::PreCheckpoint),
+                ("b".into(), Event::PreCheckpoint),
+                ("b".into(), Event::PostRestart),
+                ("a".into(), Event::PostRestart),
+            ]
+        );
+    }
+
+    #[test]
+    fn plugin_failure_propagates() {
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let mut reg = PluginRegistry::new();
+        reg.register(Box::new(ProbePlugin {
+            log,
+            tag: "x".into(),
+            fail_on: Some(Event::PreCheckpoint),
+        }));
+        let (mut recs, mut env) = ctx_parts();
+        let mut ctx = PluginCtx {
+            records: &mut recs,
+            env: &mut env,
+            generation: 0,
+        };
+        assert!(reg.fire(Event::PreCheckpoint, &mut ctx).is_err());
+    }
+
+    #[test]
+    fn timer_plugin_accumulates_across_restart() {
+        let mut t = TimerPlugin::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let (mut recs, mut env) = ctx_parts();
+        let mut ctx = PluginCtx {
+            records: &mut recs,
+            env: &mut env,
+            generation: 0,
+        };
+        t.on_event(Event::PreCheckpoint, &mut ctx).unwrap();
+        let stored = recs.get("timer").cloned().unwrap();
+        let (nanos, inc) = TimerPlugin::decode(&stored).unwrap();
+        assert!(nanos >= 5_000_000);
+        assert_eq!(inc, 1);
+
+        // Fresh incarnation restores and keeps counting from the record.
+        let mut t2 = TimerPlugin::new();
+        let mut ctx2 = PluginCtx {
+            records: &mut recs,
+            env: &mut env,
+            generation: 1,
+        };
+        t2.on_event(Event::PostRestart, &mut ctx2).unwrap();
+        assert_eq!(t2.incarnations(), 2);
+        assert!(t2.total_runtime_nanos() >= nanos);
+    }
+
+    #[test]
+    fn env_plugin_roundtrip_excludes_coordinator_addr() {
+        let mut p = EnvPlugin;
+        let mut recs = BTreeMap::new();
+        let mut env = BTreeMap::new();
+        env.insert("G4VERSION".to_string(), "10.7".to_string());
+        env.insert("DMTCP_COORD_HOST".to_string(), "old-node".to_string());
+        let mut ctx = PluginCtx {
+            records: &mut recs,
+            env: &mut env,
+            generation: 0,
+        };
+        p.on_event(Event::PreCheckpoint, &mut ctx).unwrap();
+
+        let mut env2 = BTreeMap::new();
+        env2.insert("DMTCP_COORD_HOST".to_string(), "new-node".to_string());
+        let mut ctx2 = PluginCtx {
+            records: &mut recs,
+            env: &mut env2,
+            generation: 1,
+        };
+        p.on_event(Event::PostRestart, &mut ctx2).unwrap();
+        assert_eq!(env2.get("G4VERSION").map(String::as_str), Some("10.7"));
+        assert_eq!(
+            env2.get("DMTCP_COORD_HOST").map(String::as_str),
+            Some("new-node"),
+            "restored env must not clobber the new coordinator address"
+        );
+    }
+}

@@ -1,0 +1,407 @@
+//! The simulated "user process": user threads, checkpointable state,
+//! a suspend gate, and resource accounting.
+//!
+//! Real DMTCP interposes on an unmodified binary: its checkpoint thread
+//! signals user threads (SIGUSR2) which park in a signal handler while the
+//! memory image is written. Here the "process" is a set of OS threads inside
+//! the simulator; parking happens at explicit [`WorkerCtx::ckpt_point`]
+//! calls (the moral equivalent of being interrupted at a safe point), and
+//! "memory regions" are the application's [`Checkpointable`] state. The
+//! coordination protocol, image format, and restart semantics are the same
+//! as the real system — see DESIGN.md §1 for the substitution argument.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::error::Result;
+
+/// Application state that can be captured into / restored from a
+/// checkpoint image. Implemented by the workload layer.
+pub trait Checkpointable: Send {
+    /// Capture named memory segments (raw bytes).
+    fn segments(&self) -> Vec<(String, Vec<u8>)>;
+    /// Restore from captured segments (restart path).
+    fn restore(&mut self, segments: &[(String, Vec<u8>)]) -> Result<()>;
+    /// Progress hint stored in the image header.
+    fn steps_done(&self) -> u64 {
+        0
+    }
+    /// Resident byte estimate for metrics.
+    fn size_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Type-erased access to an `Arc<Mutex<S: Checkpointable>>` for the
+/// checkpoint thread (apps keep their typed handle).
+pub trait SegmentSource: Send {
+    fn capture(&self) -> (Vec<(String, Vec<u8>)>, u64);
+    fn restore(&self, segments: &[(String, Vec<u8>)]) -> Result<()>;
+    fn size_bytes(&self) -> usize;
+}
+
+/// Blanket adapter from a shared, typed state.
+pub struct TypedSource<S: Checkpointable>(pub Arc<Mutex<S>>);
+
+impl<S: Checkpointable> SegmentSource for TypedSource<S> {
+    fn capture(&self) -> (Vec<(String, Vec<u8>)>, u64) {
+        let s = self.0.lock().expect("state poisoned");
+        (s.segments(), s.steps_done())
+    }
+
+    fn restore(&self, segments: &[(String, Vec<u8>)]) -> Result<()> {
+        self.0.lock().expect("state poisoned").restore(segments)
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.0.lock().expect("state poisoned").size_bytes()
+    }
+}
+
+/// What a user thread should do after a checkpoint point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateVerdict {
+    /// Keep computing.
+    Continue,
+    /// The process was killed (preemption): unwind and exit cleanly.
+    Exit,
+}
+
+#[derive(Debug, Default)]
+struct GateInner {
+    suspending: bool,
+    parked: usize,
+    killed: bool,
+}
+
+/// The suspend gate: DMTCP's SIGUSR2-park, as a condvar barrier.
+///
+/// User threads call [`SuspendGate::ckpt_point`] between work quanta; the
+/// checkpoint thread calls `request_suspend` → `wait_parked(n)` →
+/// (image write) → `resume`.
+#[derive(Debug, Default)]
+pub struct SuspendGate {
+    inner: Mutex<GateInner>,
+    cv: Condvar,
+}
+
+impl SuspendGate {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ask all user threads to park at their next checkpoint point.
+    pub fn request_suspend(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.suspending = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until `n` user threads are parked (or the gate is killed).
+    pub fn wait_parked(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        while g.parked < n && !g.killed {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Release parked threads.
+    pub fn resume(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.suspending = false;
+        self.cv.notify_all();
+    }
+
+    /// Kill the process: parked and running threads exit at the gate.
+    pub fn kill(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.killed = true;
+        g.suspending = false;
+        self.cv.notify_all();
+    }
+
+    /// True once `kill` has been called.
+    pub fn killed(&self) -> bool {
+        self.inner.lock().unwrap().killed
+    }
+
+    /// Currently parked thread count (metrics).
+    pub fn parked_count(&self) -> usize {
+        self.inner.lock().unwrap().parked
+    }
+
+    /// Called by user threads between work quanta; blocks while a
+    /// checkpoint is in progress.
+    pub fn ckpt_point(&self) -> GateVerdict {
+        let mut g = self.inner.lock().unwrap();
+        if g.killed {
+            return GateVerdict::Exit;
+        }
+        if g.suspending {
+            g.parked += 1;
+            self.cv.notify_all();
+            while g.suspending && !g.killed {
+                g = self.cv.wait(g).unwrap();
+            }
+            g.parked -= 1;
+            self.cv.notify_all();
+            if g.killed {
+                return GateVerdict::Exit;
+            }
+        }
+        GateVerdict::Continue
+    }
+}
+
+/// Live resource counters sampled by the LDMS-analog (Fig 4 substrate).
+#[derive(Debug, Default)]
+pub struct ProcessStats {
+    /// Total user threads.
+    pub n_threads: AtomicUsize,
+    /// Threads currently parked at the gate.
+    pub parked: AtomicUsize,
+    /// Application state resident bytes.
+    pub state_bytes: AtomicU64,
+    /// Transient allocation during image encode/write (the paper's
+    /// checkpoint-time memory spikes).
+    pub transient_bytes: AtomicU64,
+    /// Steps completed.
+    pub steps_done: AtomicU64,
+    /// Process liveness.
+    pub alive: AtomicBool,
+    /// Cumulative busy nanoseconds across user threads.
+    pub busy_nanos: AtomicU64,
+    /// Checkpoints taken by this process instance.
+    pub checkpoints: AtomicU64,
+}
+
+impl ProcessStats {
+    /// CPU utilization proxy in `[0,1]`: fraction of unparked user threads
+    /// while alive.
+    pub fn cpu_fraction(&self) -> f64 {
+        if !self.alive.load(Ordering::Relaxed) {
+            return 0.0;
+        }
+        let n = self.n_threads.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        let parked = self.parked.load(Ordering::Relaxed).min(n);
+        (n - parked) as f64 / n as f64
+    }
+
+    /// Memory footprint proxy in bytes: state + transient + fixed overhead.
+    pub fn memory_bytes(&self, base_overhead: u64) -> u64 {
+        if !self.alive.load(Ordering::Relaxed) {
+            return 0;
+        }
+        base_overhead
+            + self.state_bytes.load(Ordering::Relaxed)
+            + self.transient_bytes.load(Ordering::Relaxed)
+    }
+}
+
+/// Handle given to each user thread.
+#[derive(Clone)]
+pub struct WorkerCtx {
+    gate: Arc<SuspendGate>,
+    stats: Arc<ProcessStats>,
+    thread_idx: usize,
+}
+
+impl WorkerCtx {
+    /// Checkpoint safe-point. (The checkpoint thread publishes the parked
+    /// population to `stats` over the whole Suspend→Resume window; the
+    /// worker only needs to pass through the gate here.)
+    pub fn ckpt_point(&self) -> GateVerdict {
+        self.gate.ckpt_point()
+    }
+
+    /// Record `nanos` of useful work (CPU accounting).
+    pub fn record_busy(&self, nanos: u64) {
+        self.stats.busy_nanos.fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    /// Update the resident-state estimate after a work quantum.
+    pub fn record_state_bytes(&self, bytes: u64) {
+        self.stats.state_bytes.store(bytes, Ordering::Relaxed);
+    }
+
+    /// Record progress.
+    pub fn record_steps(&self, steps_done: u64) {
+        self.stats.steps_done.store(steps_done, Ordering::Relaxed);
+    }
+
+    pub fn thread_idx(&self) -> usize {
+        self.thread_idx
+    }
+
+    pub fn killed(&self) -> bool {
+        self.gate.killed()
+    }
+}
+
+/// A running simulated process: gate + stats + threads + metadata.
+///
+/// Constructed by [`crate::dmtcp::launch::dmtcp_launch`] /
+/// [`crate::dmtcp::restart::dmtcp_restart`]; most fields are shared with the
+/// checkpoint thread.
+pub struct UserProcess {
+    pub name: String,
+    pub real_pid: u64,
+    /// Virtual pid (assigned by the coordinator at Hello/Welcome).
+    pub vpid: Arc<AtomicU64>,
+    /// Restart generation (0 = first incarnation).
+    pub generation: u32,
+    pub gate: Arc<SuspendGate>,
+    pub stats: Arc<ProcessStats>,
+    pub env: Arc<Mutex<BTreeMap<String, String>>>,
+    pub fds: Arc<Mutex<crate::dmtcp::virtualization::FdTable>>,
+    pub plugins: Arc<Mutex<crate::dmtcp::plugin::PluginRegistry>>,
+    pub(crate) threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl UserProcess {
+    /// Spawn a user thread running `body(thread_idx, ctx)`.
+    pub fn spawn_user_thread<F>(&mut self, body: F)
+    where
+        F: FnOnce(WorkerCtx) + Send + 'static,
+    {
+        let idx = self.threads.len();
+        let ctx = WorkerCtx {
+            gate: Arc::clone(&self.gate),
+            stats: Arc::clone(&self.stats),
+            thread_idx: idx,
+        };
+        self.stats.n_threads.fetch_add(1, Ordering::Relaxed);
+        let name = format!("{}-u{}", self.name, idx);
+        let stats = Arc::clone(&self.stats);
+        let h = std::thread::Builder::new()
+            .name(name)
+            .spawn(move || {
+                body(ctx);
+                // A finished thread leaves the suspend-barrier population —
+                // otherwise a checkpoint racing with completion would wait
+                // forever for it to park.
+                stats.n_threads.fetch_sub(1, Ordering::Relaxed);
+            })
+            .expect("spawn user thread");
+        self.threads.push(h);
+    }
+
+    /// Wait for all user threads to finish (normal completion or kill).
+    pub fn join_user_threads(&mut self) {
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+        self.stats.alive.store(false, Ordering::Relaxed);
+    }
+
+    /// Number of user threads spawned.
+    pub fn n_threads(&self) -> usize {
+        self.stats.n_threads.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn gate_suspend_park_resume() {
+        let gate = Arc::new(SuspendGate::new());
+        let n = 4;
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut joins = Vec::new();
+        for _ in 0..n {
+            let g = Arc::clone(&gate);
+            let c = Arc::clone(&counter);
+            joins.push(std::thread::spawn(move || loop {
+                match g.ckpt_point() {
+                    GateVerdict::Exit => break,
+                    GateVerdict::Continue => {
+                        c.fetch_add(1, Ordering::Relaxed);
+                        std::thread::sleep(Duration::from_micros(100));
+                    }
+                }
+            }));
+        }
+        gate.request_suspend();
+        gate.wait_parked(n);
+        assert_eq!(gate.parked_count(), n);
+        let frozen = counter.load(Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(
+            counter.load(Ordering::Relaxed),
+            frozen,
+            "threads progressed while parked"
+        );
+        gate.resume();
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(counter.load(Ordering::Relaxed) > frozen, "threads did not resume");
+        gate.kill();
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn gate_kill_releases_parked_threads() {
+        let gate = Arc::new(SuspendGate::new());
+        let g = Arc::clone(&gate);
+        let j = std::thread::spawn(move || loop {
+            if g.ckpt_point() == GateVerdict::Exit {
+                break;
+            }
+        });
+        gate.request_suspend();
+        gate.wait_parked(1);
+        gate.kill();
+        j.join().unwrap(); // must not hang
+        assert!(gate.killed());
+    }
+
+    #[test]
+    fn double_suspend_cycle() {
+        let gate = Arc::new(SuspendGate::new());
+        let g = Arc::clone(&gate);
+        let j = std::thread::spawn(move || loop {
+            if g.ckpt_point() == GateVerdict::Exit {
+                break;
+            }
+            std::thread::yield_now();
+        });
+        for _ in 0..3 {
+            gate.request_suspend();
+            gate.wait_parked(1);
+            gate.resume();
+        }
+        gate.kill();
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn stats_cpu_fraction() {
+        let s = ProcessStats::default();
+        s.alive.store(true, Ordering::Relaxed);
+        s.n_threads.store(4, Ordering::Relaxed);
+        assert_eq!(s.cpu_fraction(), 1.0);
+        s.parked.store(3, Ordering::Relaxed);
+        assert_eq!(s.cpu_fraction(), 0.25);
+        s.alive.store(false, Ordering::Relaxed);
+        assert_eq!(s.cpu_fraction(), 0.0);
+    }
+
+    #[test]
+    fn stats_memory_accounting() {
+        let s = ProcessStats::default();
+        s.alive.store(true, Ordering::Relaxed);
+        s.state_bytes.store(1_000, Ordering::Relaxed);
+        s.transient_bytes.store(500, Ordering::Relaxed);
+        assert_eq!(s.memory_bytes(100), 1_600);
+        s.alive.store(false, Ordering::Relaxed);
+        assert_eq!(s.memory_bytes(100), 0);
+    }
+}

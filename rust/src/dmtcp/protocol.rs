@@ -1,0 +1,445 @@
+//! Coordinator ⇄ checkpoint-thread wire protocol.
+//!
+//! DMTCP's checkpoint threads talk to the central coordinator over TCP
+//! sockets; so do ours. Frames are `u32 LE length || tag u8 || payload`,
+//! encoded with the same little-endian primitives as the image format.
+//!
+//! The checkpoint barrier is the classic DMTCP five-phase protocol; every
+//! phase is a full round (coordinator broadcasts `Phase`, every client acks)
+//! so a checkpoint is *all-or-nothing* across the computation:
+//!
+//! ```text
+//! SUSPEND    park all user threads at their next ckpt-point
+//! DRAIN      flush in-flight channel/socket data
+//! CHECKPOINT serialize memory segments + metadata to the image file
+//! REFILL     re-prime drained channels
+//! RESUME     release user threads
+//! ```
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, PutBytes};
+
+/// Barrier phases, in order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    Suspend = 0,
+    Drain = 1,
+    Checkpoint = 2,
+    Refill = 3,
+    Resume = 4,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 5] = [
+        Phase::Suspend,
+        Phase::Drain,
+        Phase::Checkpoint,
+        Phase::Refill,
+        Phase::Resume,
+    ];
+
+    pub fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => Phase::Suspend,
+            1 => Phase::Drain,
+            2 => Phase::Checkpoint,
+            3 => Phase::Refill,
+            4 => Phase::Resume,
+            _ => return Err(Error::Protocol(format!("bad phase {v}"))),
+        })
+    }
+}
+
+/// Messages from a checkpoint thread (or command client) to the coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ToCoordinator {
+    /// Register a process. `restored_vpid` re-attaches a restarted process
+    /// under its original virtual pid.
+    Hello {
+        real_pid: u64,
+        name: String,
+        n_threads: u32,
+        restored_vpid: Option<u64>,
+    },
+    /// Ack for one barrier phase of one checkpoint round.
+    PhaseAck { vpid: u64, ckpt_id: u64, phase: Phase },
+    /// Checkpoint phase completion detail (image written).
+    CkptDone {
+        vpid: u64,
+        ckpt_id: u64,
+        path: String,
+        stored_bytes: u64,
+        raw_bytes: u64,
+        write_secs: f64,
+    },
+    /// Graceful detach.
+    Goodbye { vpid: u64 },
+    /// One-off command-client requests (`dmtcp_command` analog).
+    CommandCheckpoint,
+    CommandStatus,
+    CommandQuit,
+}
+
+/// Messages from the coordinator to a checkpoint thread / command client.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FromCoordinator {
+    /// Registration reply: assigned (or re-adopted) virtual pid.
+    Welcome { vpid: u64, epoch: u64 },
+    /// Enter a barrier phase of checkpoint round `ckpt_id`. `dir` is the
+    /// destination directory during the `Checkpoint` phase.
+    Phase {
+        ckpt_id: u64,
+        phase: Phase,
+        dir: String,
+    },
+    /// Terminate the user process (preemption path).
+    Kill,
+    /// Status snapshot (command-client reply).
+    Status {
+        clients: u32,
+        last_ckpt_id: u64,
+        epoch: u64,
+    },
+    /// Checkpoint round completed (command-client reply).
+    CkptComplete {
+        ckpt_id: u64,
+        images: u32,
+        total_stored_bytes: u64,
+    },
+    /// Generic error reply.
+    Error { message: String },
+}
+
+// ---- encoding ------------------------------------------------------------
+
+fn encode_to_coordinator(msg: &ToCoordinator) -> Vec<u8> {
+    let mut b = Vec::new();
+    match msg {
+        ToCoordinator::Hello {
+            real_pid,
+            name,
+            n_threads,
+            restored_vpid,
+        } => {
+            b.put_u8(0);
+            b.put_u64(*real_pid);
+            b.put_lp_str(name);
+            b.put_u32(*n_threads);
+            match restored_vpid {
+                Some(v) => {
+                    b.put_u8(1);
+                    b.put_u64(*v);
+                }
+                None => b.put_u8(0),
+            }
+        }
+        ToCoordinator::PhaseAck { vpid, ckpt_id, phase } => {
+            b.put_u8(1);
+            b.put_u64(*vpid);
+            b.put_u64(*ckpt_id);
+            b.put_u8(*phase as u8);
+        }
+        ToCoordinator::CkptDone {
+            vpid,
+            ckpt_id,
+            path,
+            stored_bytes,
+            raw_bytes,
+            write_secs,
+        } => {
+            b.put_u8(2);
+            b.put_u64(*vpid);
+            b.put_u64(*ckpt_id);
+            b.put_lp_str(path);
+            b.put_u64(*stored_bytes);
+            b.put_u64(*raw_bytes);
+            b.put_f64(*write_secs);
+        }
+        ToCoordinator::Goodbye { vpid } => {
+            b.put_u8(3);
+            b.put_u64(*vpid);
+        }
+        ToCoordinator::CommandCheckpoint => b.put_u8(4),
+        ToCoordinator::CommandStatus => b.put_u8(5),
+        ToCoordinator::CommandQuit => b.put_u8(6),
+    }
+    b
+}
+
+fn decode_to_coordinator(buf: &[u8]) -> Result<ToCoordinator> {
+    let mut r = ByteReader::new(buf);
+    let tag = r.get_u8()?;
+    Ok(match tag {
+        0 => ToCoordinator::Hello {
+            real_pid: r.get_u64()?,
+            name: r.get_lp_str()?,
+            n_threads: r.get_u32()?,
+            restored_vpid: if r.get_u8()? == 1 {
+                Some(r.get_u64()?)
+            } else {
+                None
+            },
+        },
+        1 => ToCoordinator::PhaseAck {
+            vpid: r.get_u64()?,
+            ckpt_id: r.get_u64()?,
+            phase: Phase::from_u8(r.get_u8()?)?,
+        },
+        2 => ToCoordinator::CkptDone {
+            vpid: r.get_u64()?,
+            ckpt_id: r.get_u64()?,
+            path: r.get_lp_str()?,
+            stored_bytes: r.get_u64()?,
+            raw_bytes: r.get_u64()?,
+            write_secs: r.get_f64()?,
+        },
+        3 => ToCoordinator::Goodbye { vpid: r.get_u64()? },
+        4 => ToCoordinator::CommandCheckpoint,
+        5 => ToCoordinator::CommandStatus,
+        6 => ToCoordinator::CommandQuit,
+        _ => return Err(Error::Protocol(format!("bad ToCoordinator tag {tag}"))),
+    })
+}
+
+fn encode_from_coordinator(msg: &FromCoordinator) -> Vec<u8> {
+    let mut b = Vec::new();
+    match msg {
+        FromCoordinator::Welcome { vpid, epoch } => {
+            b.put_u8(0);
+            b.put_u64(*vpid);
+            b.put_u64(*epoch);
+        }
+        FromCoordinator::Phase { ckpt_id, phase, dir } => {
+            b.put_u8(1);
+            b.put_u64(*ckpt_id);
+            b.put_u8(*phase as u8);
+            b.put_lp_str(dir);
+        }
+        FromCoordinator::Kill => b.put_u8(2),
+        FromCoordinator::Status {
+            clients,
+            last_ckpt_id,
+            epoch,
+        } => {
+            b.put_u8(3);
+            b.put_u32(*clients);
+            b.put_u64(*last_ckpt_id);
+            b.put_u64(*epoch);
+        }
+        FromCoordinator::CkptComplete {
+            ckpt_id,
+            images,
+            total_stored_bytes,
+        } => {
+            b.put_u8(4);
+            b.put_u64(*ckpt_id);
+            b.put_u32(*images);
+            b.put_u64(*total_stored_bytes);
+        }
+        FromCoordinator::Error { message } => {
+            b.put_u8(5);
+            b.put_lp_str(message);
+        }
+    }
+    b
+}
+
+fn decode_from_coordinator(buf: &[u8]) -> Result<FromCoordinator> {
+    let mut r = ByteReader::new(buf);
+    let tag = r.get_u8()?;
+    Ok(match tag {
+        0 => FromCoordinator::Welcome {
+            vpid: r.get_u64()?,
+            epoch: r.get_u64()?,
+        },
+        1 => FromCoordinator::Phase {
+            ckpt_id: r.get_u64()?,
+            phase: Phase::from_u8(r.get_u8()?)?,
+            dir: r.get_lp_str()?,
+        },
+        2 => FromCoordinator::Kill,
+        3 => FromCoordinator::Status {
+            clients: r.get_u32()?,
+            last_ckpt_id: r.get_u64()?,
+            epoch: r.get_u64()?,
+        },
+        4 => FromCoordinator::CkptComplete {
+            ckpt_id: r.get_u64()?,
+            images: r.get_u32()?,
+            total_stored_bytes: r.get_u64()?,
+        },
+        5 => FromCoordinator::Error {
+            message: r.get_lp_str()?,
+        },
+        _ => return Err(Error::Protocol(format!("bad FromCoordinator tag {tag}"))),
+    })
+}
+
+// ---- framing ---------------------------------------------------------------
+
+const MAX_FRAME: u32 = 16 * 1024 * 1024;
+
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
+    let len = payload.len() as u32;
+    if len > MAX_FRAME {
+        return Err(Error::Protocol(format!("frame too large: {len}")));
+    }
+    stream.write_all(&len.to_le_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn read_frame(stream: &mut TcpStream) -> Result<Vec<u8>> {
+    let mut lenb = [0u8; 4];
+    stream.read_exact(&mut lenb)?;
+    let len = u32::from_le_bytes(lenb);
+    if len > MAX_FRAME {
+        return Err(Error::Protocol(format!("frame too large: {len}")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    stream.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Send a client→coordinator message.
+pub fn send_to_coordinator(stream: &mut TcpStream, msg: &ToCoordinator) -> Result<()> {
+    write_frame(stream, &encode_to_coordinator(msg))
+}
+
+/// Receive a client→coordinator message.
+pub fn recv_to_coordinator(stream: &mut TcpStream) -> Result<ToCoordinator> {
+    decode_to_coordinator(&read_frame(stream)?)
+}
+
+/// Send a coordinator→client message.
+pub fn send_from_coordinator(stream: &mut TcpStream, msg: &FromCoordinator) -> Result<()> {
+    write_frame(stream, &encode_from_coordinator(msg))
+}
+
+/// Receive a coordinator→client message.
+pub fn recv_from_coordinator(stream: &mut TcpStream) -> Result<FromCoordinator> {
+    decode_from_coordinator(&read_frame(stream)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_coordinator_roundtrip() {
+        let msgs = vec![
+            ToCoordinator::Hello {
+                real_pid: 123,
+                name: "worker-0".into(),
+                n_threads: 4,
+                restored_vpid: None,
+            },
+            ToCoordinator::Hello {
+                real_pid: 9,
+                name: "w".into(),
+                n_threads: 1,
+                restored_vpid: Some(40_001),
+            },
+            ToCoordinator::PhaseAck {
+                vpid: 40_001,
+                ckpt_id: 3,
+                phase: Phase::Drain,
+            },
+            ToCoordinator::CkptDone {
+                vpid: 40_001,
+                ckpt_id: 3,
+                path: "/ckpt/p.dmtcp".into(),
+                stored_bytes: 1_000,
+                raw_bytes: 4_000,
+                write_secs: 0.25,
+            },
+            ToCoordinator::Goodbye { vpid: 40_001 },
+            ToCoordinator::CommandCheckpoint,
+            ToCoordinator::CommandStatus,
+            ToCoordinator::CommandQuit,
+        ];
+        for m in msgs {
+            let enc = encode_to_coordinator(&m);
+            assert_eq!(decode_to_coordinator(&enc).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn from_coordinator_roundtrip() {
+        let msgs = vec![
+            FromCoordinator::Welcome { vpid: 40_000, epoch: 2 },
+            FromCoordinator::Phase {
+                ckpt_id: 9,
+                phase: Phase::Checkpoint,
+                dir: "/ckpt".into(),
+            },
+            FromCoordinator::Kill,
+            FromCoordinator::Status {
+                clients: 3,
+                last_ckpt_id: 9,
+                epoch: 2,
+            },
+            FromCoordinator::CkptComplete {
+                ckpt_id: 9,
+                images: 3,
+                total_stored_bytes: 12_345,
+            },
+            FromCoordinator::Error { message: "nope".into() },
+        ];
+        for m in msgs {
+            let enc = encode_from_coordinator(&m);
+            assert_eq!(decode_from_coordinator(&enc).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn phase_order_and_codes() {
+        for (i, p) in Phase::ALL.iter().enumerate() {
+            assert_eq!(*p as u8, i as u8);
+            assert_eq!(Phase::from_u8(i as u8).unwrap(), *p);
+        }
+        assert!(Phase::from_u8(9).is_err());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(decode_to_coordinator(&[99]).is_err());
+        assert!(decode_from_coordinator(&[77, 1, 2]).is_err());
+        assert!(decode_to_coordinator(&[]).is_err());
+    }
+
+    #[test]
+    fn framing_over_real_sockets() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let m = recv_to_coordinator(&mut s).unwrap();
+            assert_eq!(
+                m,
+                ToCoordinator::PhaseAck {
+                    vpid: 1,
+                    ckpt_id: 2,
+                    phase: Phase::Resume
+                }
+            );
+            send_from_coordinator(&mut s, &FromCoordinator::Kill).unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        send_to_coordinator(
+            &mut c,
+            &ToCoordinator::PhaseAck {
+                vpid: 1,
+                ckpt_id: 2,
+                phase: Phase::Resume,
+            },
+        )
+        .unwrap();
+        assert_eq!(recv_from_coordinator(&mut c).unwrap(), FromCoordinator::Kill);
+        t.join().unwrap();
+    }
+}

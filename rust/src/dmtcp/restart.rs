@@ -1,0 +1,95 @@
+//! `dmtcp_restart` — reconstruct a process from a checkpoint image.
+//!
+//! The restart path is where the virtualization layers pay off: the new
+//! incarnation gets a fresh *real* pid and a fresh coordinator socket, but
+//! re-registers under its original *virtual* pid, reopens its virtual fds
+//! (append-mode so logs continue rather than truncate), restores its memory
+//! segments bit-for-bit, and replays plugin records (timer, env) so the
+//! runtime context matches the checkpointed one.
+
+use std::net::SocketAddr;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::dmtcp::image::{CheckpointImage, ImageHeader};
+use crate::dmtcp::launch::{attach, build_process, LaunchedProcess};
+use crate::dmtcp::plugin::{Event, PluginCtx, PluginRegistry};
+use crate::dmtcp::process::Checkpointable;
+use crate::dmtcp::virtualization::FdTable;
+use crate::error::Result;
+
+/// Outcome of a restart: the re-attached process plus the image header it
+/// was reconstructed from (for logging / verification).
+pub struct RestartedProcess {
+    pub launched: LaunchedProcess,
+    pub header: ImageHeader,
+}
+
+/// Restart a process from `image_path`, attaching to `coordinator`.
+///
+/// `state` is the application's (freshly constructed) state object; its
+/// contents are overwritten from the image segments before any user thread
+/// runs. Worker threads are then spawned by the caller exactly as on first
+/// launch — the application code cannot tell the difference except through
+/// `generation`/plugin records (by design: transparency).
+pub fn dmtcp_restart<S: Checkpointable + 'static>(
+    image_path: &Path,
+    coordinator: SocketAddr,
+    state: Arc<Mutex<S>>,
+    mut plugins: PluginRegistry,
+) -> Result<RestartedProcess> {
+    let image = CheckpointImage::read_file(image_path)?;
+    let header = image.header.clone();
+
+    // Rebuild process metadata from the image.
+    let generation = header.generation + 1;
+    let mut env = header.env.clone();
+    env.insert("DMTCP_RESTART".into(), "1".into());
+    env.insert("DMTCP_COORD_HOST".into(), coordinator.ip().to_string());
+    env.insert("DMTCP_COORD_PORT".into(), coordinator.port().to_string());
+    let fds = FdTable::restore(&header.fds);
+
+    // PostRestart plugin barrier first (reverse registration order), with
+    // the image's records available for replay: plugins re-virtualize
+    // resources (paths, timers, env) that the memory restore below depends
+    // on — the same ordering as DMTCP's restart barriers.
+    let mut records = header.plugin_records.clone();
+    {
+        let mut pctx = PluginCtx {
+            records: &mut records,
+            env: &mut env,
+            generation,
+        };
+        plugins.fire(Event::PostRestart, &mut pctx)?;
+    }
+
+    // Then the memory segments, into the plugin-prepared context.
+    state
+        .lock()
+        .expect("state poisoned")
+        .restore(&image.segments)?;
+
+    let process = build_process(&header.name, env, fds, plugins, generation);
+    let launched = attach(
+        coordinator,
+        process,
+        state,
+        records,
+        Some(header.vpid),
+    );
+    log::info!(
+        "restarted {} from {} (vpid {}, gen {} -> {}, {} steps done)",
+        header.name,
+        image_path.display(),
+        header.vpid,
+        header.generation,
+        generation,
+        header.steps_done
+    );
+    Ok(RestartedProcess { launched, header })
+}
+
+/// Peek at an image without restoring it (`dmtcp_restart --inspect`).
+pub fn inspect_image(image_path: &Path) -> Result<ImageHeader> {
+    Ok(CheckpointImage::read_file(image_path)?.header)
+}

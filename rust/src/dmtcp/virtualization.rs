@@ -1,0 +1,303 @@
+//! Process-level virtualization tables (DMTCP's pid/fd translation layer).
+//!
+//! DMTCP wraps system calls so applications only ever see *virtual*
+//! identifiers; after a restart the real pids/fds differ but the virtual
+//! ones — the only ones the application stored — still resolve. This module
+//! is that translation layer for the simulated processes: a bijective
+//! virtual↔real pid table and a virtual fd table that records how to
+//! re-materialize each descriptor.
+
+use std::collections::BTreeMap;
+
+use crate::dmtcp::image::FdEntry;
+use crate::error::{Error, Result};
+
+/// Bijective virtual-pid ↔ real-pid table.
+///
+/// Invariants (property-tested): each virtual pid maps to exactly one real
+/// pid and vice versa; `rebind` preserves the virtual set while replacing
+/// real ids (what happens at restart).
+#[derive(Debug, Clone, Default)]
+pub struct PidTable {
+    v2r: BTreeMap<u64, u64>,
+    r2v: BTreeMap<u64, u64>,
+    next_vpid: u64,
+}
+
+impl PidTable {
+    pub fn new() -> Self {
+        Self {
+            v2r: BTreeMap::new(),
+            r2v: BTreeMap::new(),
+            // DMTCP starts virtual pids in a reserved high band.
+            next_vpid: 40_000,
+        }
+    }
+
+    /// Register a fresh process: allocates and returns its virtual pid.
+    pub fn register(&mut self, real_pid: u64) -> Result<u64> {
+        if self.r2v.contains_key(&real_pid) {
+            return Err(Error::Protocol(format!(
+                "real pid {real_pid} already registered"
+            )));
+        }
+        let vpid = self.next_vpid;
+        self.next_vpid += 1;
+        self.v2r.insert(vpid, real_pid);
+        self.r2v.insert(real_pid, vpid);
+        Ok(vpid)
+    }
+
+    /// Rebind an existing virtual pid to a new real pid (restart path).
+    pub fn rebind(&mut self, vpid: u64, new_real: u64) -> Result<()> {
+        let old_real = *self
+            .v2r
+            .get(&vpid)
+            .ok_or_else(|| Error::Protocol(format!("unknown virtual pid {vpid}")))?;
+        if let Some(&owner) = self.r2v.get(&new_real) {
+            if owner != vpid {
+                return Err(Error::Protocol(format!(
+                    "real pid {new_real} already bound to vpid {owner}"
+                )));
+            }
+        }
+        self.r2v.remove(&old_real);
+        self.v2r.insert(vpid, new_real);
+        self.r2v.insert(new_real, vpid);
+        Ok(())
+    }
+
+    /// Re-insert a virtual pid restored from an image (keeps its old vpid).
+    pub fn adopt(&mut self, vpid: u64, real_pid: u64) -> Result<()> {
+        if self.v2r.contains_key(&vpid) {
+            return Err(Error::Protocol(format!("vpid {vpid} already present")));
+        }
+        if self.r2v.contains_key(&real_pid) {
+            return Err(Error::Protocol(format!(
+                "real pid {real_pid} already registered"
+            )));
+        }
+        self.v2r.insert(vpid, real_pid);
+        self.r2v.insert(real_pid, vpid);
+        self.next_vpid = self.next_vpid.max(vpid + 1);
+        Ok(())
+    }
+
+    pub fn unregister(&mut self, vpid: u64) -> Result<()> {
+        let real = self
+            .v2r
+            .remove(&vpid)
+            .ok_or_else(|| Error::Protocol(format!("unknown virtual pid {vpid}")))?;
+        self.r2v.remove(&real);
+        Ok(())
+    }
+
+    pub fn real_of(&self, vpid: u64) -> Option<u64> {
+        self.v2r.get(&vpid).copied()
+    }
+
+    pub fn virtual_of(&self, real: u64) -> Option<u64> {
+        self.r2v.get(&real).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.v2r.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.v2r.is_empty()
+    }
+
+    pub fn virtual_pids(&self) -> impl Iterator<Item = u64> + '_ {
+        self.v2r.keys().copied()
+    }
+
+    /// Check the bijection invariant (used by property tests).
+    pub fn check_bijection(&self) -> bool {
+        self.v2r.len() == self.r2v.len()
+            && self
+                .v2r
+                .iter()
+                .all(|(v, r)| self.r2v.get(r) == Some(v))
+    }
+}
+
+/// What a virtual descriptor points at (how to re-materialize it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FdKind {
+    /// Regular file; `append` selects open mode on restore.
+    File { path: String, append: bool },
+    /// A socket to the coordinator (re-established, not restored).
+    CoordinatorSocket,
+    /// Standard output/error routed to the batch system's log.
+    BatchLog { path: String },
+}
+
+/// Virtual fd table: application-visible fds that survive restart.
+#[derive(Debug, Clone, Default)]
+pub struct FdTable {
+    entries: BTreeMap<u32, FdKind>,
+    next_vfd: u32,
+}
+
+impl FdTable {
+    pub fn new() -> Self {
+        Self {
+            entries: BTreeMap::new(),
+            next_vfd: 3, // 0..2 conventionally std streams
+        }
+    }
+
+    /// Open a new virtual descriptor.
+    pub fn open(&mut self, kind: FdKind) -> u32 {
+        let vfd = self.next_vfd;
+        self.next_vfd += 1;
+        self.entries.insert(vfd, kind);
+        vfd
+    }
+
+    pub fn close(&mut self, vfd: u32) -> Result<()> {
+        self.entries
+            .remove(&vfd)
+            .map(|_| ())
+            .ok_or_else(|| Error::Protocol(format!("close of unknown vfd {vfd}")))
+    }
+
+    pub fn get(&self, vfd: u32) -> Option<&FdKind> {
+        self.entries.get(&vfd)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Capture into image entries. Coordinator sockets are *not* captured:
+    /// they are re-established by the restart protocol (DMTCP does the
+    /// same — the socket plugin drains and recreates connections).
+    pub fn capture(&self) -> Vec<FdEntry> {
+        self.entries
+            .iter()
+            .filter_map(|(&vfd, kind)| match kind {
+                FdKind::File { path, append } => Some(FdEntry {
+                    vfd,
+                    path: path.clone(),
+                    append: *append,
+                }),
+                FdKind::BatchLog { path } => Some(FdEntry {
+                    vfd,
+                    path: format!("batchlog:{path}"),
+                    append: true,
+                }),
+                FdKind::CoordinatorSocket => None,
+            })
+            .collect()
+    }
+
+    /// Restore from image entries (restart path). Existing entries are
+    /// replaced; the coordinator socket slot is re-created by the caller.
+    pub fn restore(entries: &[FdEntry]) -> Self {
+        let mut t = Self::new();
+        for e in entries {
+            let kind = match e.path.strip_prefix("batchlog:") {
+                Some(p) => FdKind::BatchLog { path: p.to_string() },
+                None => FdKind::File {
+                    path: e.path.clone(),
+                    append: e.append,
+                },
+            };
+            t.entries.insert(e.vfd, kind);
+            t.next_vfd = t.next_vfd.max(e.vfd + 1);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pid_register_and_lookup() {
+        let mut t = PidTable::new();
+        let v1 = t.register(101).unwrap();
+        let v2 = t.register(102).unwrap();
+        assert_ne!(v1, v2);
+        assert_eq!(t.real_of(v1), Some(101));
+        assert_eq!(t.virtual_of(102), Some(v2));
+        assert!(t.check_bijection());
+    }
+
+    #[test]
+    fn duplicate_real_pid_rejected() {
+        let mut t = PidTable::new();
+        t.register(7).unwrap();
+        assert!(t.register(7).is_err());
+    }
+
+    #[test]
+    fn rebind_keeps_virtual_identity() {
+        let mut t = PidTable::new();
+        let v = t.register(100).unwrap();
+        t.rebind(v, 200).unwrap();
+        assert_eq!(t.real_of(v), Some(200));
+        assert_eq!(t.virtual_of(100), None);
+        assert!(t.check_bijection());
+        // rebinding to a real pid owned by someone else fails
+        let v2 = t.register(300).unwrap();
+        assert!(t.rebind(v2, 200).is_err());
+    }
+
+    #[test]
+    fn adopt_after_restart() {
+        let mut t = PidTable::new();
+        t.adopt(40_123, 555).unwrap();
+        assert_eq!(t.real_of(40_123), Some(555));
+        // allocator must not re-issue the adopted vpid
+        let fresh = t.register(556).unwrap();
+        assert!(fresh > 40_123);
+        assert!(t.adopt(40_123, 700).is_err());
+    }
+
+    #[test]
+    fn unregister() {
+        let mut t = PidTable::new();
+        let v = t.register(1).unwrap();
+        t.unregister(v).unwrap();
+        assert!(t.is_empty());
+        assert!(t.unregister(v).is_err());
+    }
+
+    #[test]
+    fn fd_capture_restore_roundtrip() {
+        let mut t = FdTable::new();
+        let f1 = t.open(FdKind::File { path: "/d/geom.bin".into(), append: false });
+        let _s = t.open(FdKind::CoordinatorSocket);
+        let f2 = t.open(FdKind::BatchLog { path: "/out/job-1.out".into() });
+        let captured = t.capture();
+        // coordinator socket excluded
+        assert_eq!(captured.len(), 2);
+        let restored = FdTable::restore(&captured);
+        assert_eq!(
+            restored.get(f1),
+            Some(&FdKind::File { path: "/d/geom.bin".into(), append: false })
+        );
+        assert_eq!(
+            restored.get(f2),
+            Some(&FdKind::BatchLog { path: "/out/job-1.out".into() })
+        );
+        // new fds allocated after restore don't collide
+        let mut restored = restored;
+        let f3 = restored.open(FdKind::CoordinatorSocket);
+        assert!(f3 > f2);
+    }
+
+    #[test]
+    fn fd_close_unknown_rejected() {
+        let mut t = FdTable::new();
+        assert!(t.close(99).is_err());
+    }
+}

@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error type for all `nersc_cr` subsystems.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// PJRT / XLA runtime failures (compile, execute, literal conversion).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// I/O failures (checkpoint files, artifact loading, sockets).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Malformed or corrupt checkpoint image.
+    #[error("checkpoint image: {0}")]
+    Image(String),
+
+    /// DMTCP coordinator protocol violations.
+    #[error("coordinator protocol: {0}")]
+    Protocol(String),
+
+    /// Batch-scheduler errors (unknown job, invalid directive, ...).
+    #[error("slurm: {0}")]
+    Slurm(String),
+
+    /// Container build/run errors.
+    #[error("container: {0}")]
+    Container(String),
+
+    /// Artifact manifest problems.
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    /// Workload configuration errors.
+    #[error("workload: {0}")]
+    Workload(String),
+
+    /// CLI usage errors.
+    #[error("usage: {0}")]
+    Usage(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,73 @@
+//! Dynamic-linking workload descriptions.
+//!
+//! Characterizes what a process startup actually does to the filesystem:
+//! metadata operations (`stat`/`open` probes along search paths) and bulk
+//! shared-object reads. The numbers for the mpi4py/Anaconda benchmark are
+//! from published import-tracing studies of conda environments on HPC
+//! systems (thousands of path probes, tens of MB of .so text).
+
+/// A startup workload: what importing/linking a stack costs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DynlinkWorkload {
+    /// Human label.
+    pub name: &'static str,
+    /// Metadata operations (stat/open/readdir probes).
+    pub meta_ops: u64,
+    /// Bytes read (MB) — shared objects, bytecode, config.
+    pub read_mb: f64,
+    /// Pure-CPU interpreter/relocation time (seconds), environment
+    /// independent.
+    pub cpu_seconds: f64,
+}
+
+/// The Fig 2 benchmark: `from mpi4py import MPI` in an Anaconda env.
+pub const MPI4PY_IMPORT: DynlinkWorkload = DynlinkWorkload {
+    name: "from mpi4py import MPI (Anaconda)",
+    meta_ops: 6_500,
+    read_mb: 120.0,
+    cpu_seconds: 0.35,
+};
+
+impl DynlinkWorkload {
+    pub fn mpi4py_anaconda() -> Self {
+        MPI4PY_IMPORT.clone()
+    }
+
+    /// A Geant4 application startup (larger shared-object footprint:
+    /// physics data files + toolkit libraries).
+    pub fn geant4_app() -> Self {
+        Self {
+            name: "Geant4 application startup",
+            meta_ops: 9_000,
+            read_mb: 450.0,
+            cpu_seconds: 1.2,
+        }
+    }
+
+    /// A lean statically-linked binary (the baseline that barely touches
+    /// the filesystem — used in ablations).
+    pub fn static_binary() -> Self {
+        Self {
+            name: "static binary",
+            meta_ops: 40,
+            read_mb: 15.0,
+            cpu_seconds: 0.01,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_presets_sane() {
+        let m = DynlinkWorkload::mpi4py_anaconda();
+        assert!(m.meta_ops > 1_000);
+        assert!(m.read_mb > 10.0);
+        let g = DynlinkWorkload::geant4_app();
+        assert!(g.meta_ops > m.meta_ops);
+        let s = DynlinkWorkload::static_binary();
+        assert!(s.meta_ops < 100);
+    }
+}

@@ -1,0 +1,268 @@
+//! Filesystem startup-performance models — the substrate of the paper's
+//! Fig 2 (`from mpi4py import MPI` wall time vs MPI ranks vs environment).
+//!
+//! Python's import machinery performs thousands of metadata operations
+//! (stat/open along `sys.path`) plus tens of MB of shared-library reads.
+//! At scale the dominant term is metadata-server contention: R concurrent
+//! ranks hammer the same MDS. Container runtimes sidestep this by serving
+//! the environment from a node-local squashfs image (page-cache hot after
+//! the first rank), which is why the paper finds containers beating shared
+//! filesystems at scale.
+//!
+//! Each environment is an [`FsPerfModel`] with documented parameters; the
+//! six presets ([`Environment::all`]) are tuned so the *shape* of Fig 2
+//! holds: monotone growth with ranks for shared filesystems, a knee at the
+//! single-node→multi-node transition (128 ranks/node on Perlmutter CPU
+//! nodes), container curves nearly flat, `shifter` best at scale,
+//! `podman-hpc` comparable to the best shared filesystems.
+
+pub mod dynlink;
+
+pub use dynlink::{DynlinkWorkload, MPI4PY_IMPORT};
+
+/// The environments of Fig 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Environment {
+    /// `$HOME` (NFS-backed, low bandwidth, strict quotas).
+    Home,
+    /// `$SCRATCH` (Lustre: high bandwidth, contended MDS).
+    Scratch,
+    /// `/global/common/software` — the "NERSC module" path, a read-only
+    /// filesystem mounted+cached for parallel library loading.
+    CommonSw,
+    /// CVMFS (HTTP-backed, aggressive node-local caching).
+    Cvmfs,
+    /// shifter container runtime (node-local squash, years of tuning).
+    Shifter,
+    /// podman-hpc container runtime (node-local squash, newer stack).
+    PodmanHpc,
+}
+
+impl Environment {
+    pub const fn label(&self) -> &'static str {
+        match self {
+            Environment::Home => "HOME",
+            Environment::Scratch => "SCRATCH",
+            Environment::CommonSw => "NERSC module",
+            Environment::Cvmfs => "CVMFS",
+            Environment::Shifter => "shifter",
+            Environment::PodmanHpc => "podman-hpc",
+        }
+    }
+
+    pub fn all() -> [Environment; 6] {
+        [
+            Environment::Home,
+            Environment::Scratch,
+            Environment::CommonSw,
+            Environment::Cvmfs,
+            Environment::Shifter,
+            Environment::PodmanHpc,
+        ]
+    }
+
+    /// The tuned performance model for this environment.
+    pub fn model(&self) -> FsPerfModel {
+        match self {
+            // Shared filesystems: real metadata round-trips per rank, MDS
+            // contention grows with total concurrent ranks.
+            Environment::Home => FsPerfModel {
+                meta_latency_us: 180.0,
+                contention_per_rank_us: 14.0,
+                contention_exponent: 1.15,
+                bandwidth_mbs: 300.0,
+                node_local_cache: false,
+                multinode_penalty: 2.0,
+            },
+            Environment::Scratch => FsPerfModel {
+                meta_latency_us: 90.0,
+                contention_per_rank_us: 9.0,
+                contention_exponent: 1.12,
+                bandwidth_mbs: 4_000.0,
+                node_local_cache: false,
+                multinode_penalty: 1.8,
+            },
+            Environment::CommonSw => FsPerfModel {
+                meta_latency_us: 40.0,
+                contention_per_rank_us: 4.0,
+                contention_exponent: 1.05,
+                bandwidth_mbs: 6_000.0,
+                node_local_cache: false,
+                multinode_penalty: 1.4,
+            },
+            Environment::Cvmfs => FsPerfModel {
+                meta_latency_us: 120.0,
+                contention_per_rank_us: 2.0,
+                contention_exponent: 1.0,
+                bandwidth_mbs: 800.0,
+                node_local_cache: true,
+                multinode_penalty: 1.3,
+            },
+            Environment::Shifter => FsPerfModel {
+                meta_latency_us: 8.0,
+                contention_per_rank_us: 0.25,
+                contention_exponent: 1.0,
+                bandwidth_mbs: 9_000.0,
+                node_local_cache: true,
+                multinode_penalty: 1.05,
+            },
+            // "podman-hpc not having had the benefit of years of
+            // performance optimization": squash architecture, but its
+            // (2022-era) rootless runtime still pays per-rank setup against
+            // shared infrastructure, so scaling tracks the optimized shared
+            // filesystems rather than shifter ("comparable with the
+            // highly-optimized file systems").
+            Environment::PodmanHpc => FsPerfModel {
+                meta_latency_us: 25.0,
+                contention_per_rank_us: 6.0,
+                contention_exponent: 1.05,
+                bandwidth_mbs: 8_000.0,
+                node_local_cache: false,
+                multinode_penalty: 1.15,
+            },
+        }
+    }
+
+    /// Mean `from mpi4py import MPI` time at `ranks` total MPI ranks
+    /// (seconds) for the standard workload and 128 ranks/node.
+    pub fn import_time(&self, ranks: u32) -> f64 {
+        self.model()
+            .startup_time(&DynlinkWorkload::mpi4py_anaconda(), ranks, 128)
+    }
+}
+
+/// Parameterized startup-performance model of one environment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FsPerfModel {
+    /// Uncontended per-metadata-op latency (µs).
+    pub meta_latency_us: f64,
+    /// Added metadata latency per concurrent rank (µs) — MDS contention.
+    pub contention_per_rank_us: f64,
+    /// Super-linear contention exponent (lock convoys, RPC retries).
+    pub contention_exponent: f64,
+    /// Aggregate read bandwidth per node (MB/s).
+    pub bandwidth_mbs: f64,
+    /// Node-local cache (squash/CVMFS): only the first rank per node pays
+    /// the metadata + read cost; the rest hit the page cache.
+    pub node_local_cache: bool,
+    /// Multiplier on metadata cost once the job spans >1 node (network
+    /// fan-in at the shared service).
+    pub multinode_penalty: f64,
+}
+
+impl FsPerfModel {
+    /// Mean startup (import) time in seconds for `workload` at `ranks`
+    /// total ranks with `ranks_per_node` packing.
+    pub fn startup_time(&self, workload: &DynlinkWorkload, ranks: u32, ranks_per_node: u32) -> f64 {
+        assert!(ranks >= 1 && ranks_per_node >= 1);
+        let nodes = ranks.div_ceil(ranks_per_node);
+        let multi = if nodes > 1 { self.multinode_penalty } else { 1.0 };
+
+        // Effective clients hitting the backing store concurrently.
+        let (meta_clients, read_clients) = if self.node_local_cache {
+            // One warm-up per node; peers wait on the page cache (cheap).
+            (nodes as f64, nodes as f64)
+        } else {
+            (ranks as f64, ranks as f64)
+        };
+
+        let meta_us = self.meta_latency_us
+            + self.contention_per_rank_us * meta_clients.powf(self.contention_exponent);
+        let meta_total_s = workload.meta_ops as f64 * meta_us * multi / 1e6;
+
+        // Reads: backing bandwidth is shared by concurrent readers.
+        let eff_bw = self.bandwidth_mbs / read_clients.max(1.0);
+        let read_total_s = workload.read_mb / eff_bw;
+
+        // Page-cache replay cost for cached environments (non-first ranks).
+        let cache_replay_s = if self.node_local_cache {
+            workload.meta_ops as f64 * 1.5 / 1e6 + workload.read_mb / 20_000.0
+        } else {
+            0.0
+        };
+
+        workload.cpu_seconds + meta_total_s + read_total_s + cache_replay_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RANKS: [u32; 8] = [1, 4, 16, 64, 128, 192, 256, 512];
+
+    #[test]
+    fn shared_fs_monotone_in_ranks() {
+        for env in [Environment::Home, Environment::Scratch, Environment::CommonSw] {
+            let mut prev = 0.0;
+            for r in RANKS {
+                let t = env.import_time(r);
+                assert!(t > prev, "{env:?} not monotone at {r} ranks");
+                prev = t;
+            }
+        }
+    }
+
+    #[test]
+    fn multinode_knee_at_128() {
+        // "sudden rise in load time at 128 ranks corresponds to going from
+        // single node to multiple nodes": the marginal increase across the
+        // node boundary exceeds the one before it for shared filesystems.
+        for env in [Environment::Home, Environment::Scratch] {
+            let t64 = env.import_time(64);
+            let t128 = env.import_time(128);
+            let t192 = env.import_time(192);
+            let before = t128 - t64;
+            let after = t192 - t128;
+            assert!(
+                after > before,
+                "{env:?}: no knee (before={before:.3}, after={after:.3})"
+            );
+        }
+    }
+
+    #[test]
+    fn shifter_beats_everything_at_scale() {
+        for r in [128, 256, 512] {
+            let shifter = Environment::Shifter.import_time(r);
+            for env in Environment::all() {
+                if env != Environment::Shifter {
+                    assert!(
+                        shifter < env.import_time(r),
+                        "shifter not fastest at {r} ranks vs {env:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn podman_comparable_to_optimized_fs_at_scale() {
+        // "podman-hpc's performance at scale is comparable with the
+        // highly-optimized file systems": within 2x of NERSC module, and
+        // better than HOME/SCRATCH at 512 ranks.
+        let r = 512;
+        let podman = Environment::PodmanHpc.import_time(r);
+        let common = Environment::CommonSw.import_time(r);
+        assert!(podman < common * 2.0 && podman > common * 0.2,
+            "podman {podman:.2}s vs common {common:.2}s not comparable");
+        assert!(podman < Environment::Home.import_time(r));
+        assert!(podman < Environment::Scratch.import_time(r));
+    }
+
+    #[test]
+    fn containers_flat_shared_fs_steep() {
+        let steep = Environment::Scratch.import_time(512) / Environment::Scratch.import_time(1);
+        let flat = Environment::Shifter.import_time(512) / Environment::Shifter.import_time(1);
+        assert!(steep > 10.0, "scratch should degrade a lot: {steep:.1}x");
+        assert!(flat < 4.0, "shifter should stay nearly flat: {flat:.1}x");
+    }
+
+    #[test]
+    fn single_rank_times_order_of_seconds() {
+        for env in Environment::all() {
+            let t = env.import_time(1);
+            assert!((0.05..30.0).contains(&t), "{env:?}: {t}s implausible");
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! # nersc_cr — checkpoint-restart for HPC with a DMTCP-style coordinator
+//!
+//! A full-system reproduction of *"Optimizing Checkpoint-Restart Mechanisms
+//! for HPC with DMTCP in Containers at NERSC"* (Arndt, Blaschke, Gerhardt,
+//! Timalsina, Tyler — LBNL, 2024) as a three-layer Rust + JAX/Pallas stack.
+//!
+//! The crate contains the paper's contribution — the C/R job-management
+//! layer ([`cr`]) — plus every substrate it depends on, built from scratch:
+//!
+//! * [`dmtcp`] — a DMTCP-analog: central coordinator over real TCP sockets,
+//!   per-process checkpoint threads, barrier protocol, gzip'd+CRC'd
+//!   checkpoint images, PID/FD virtualization, plugin event hooks.
+//! * [`slurm`] — a discrete-event batch-scheduler simulator: nodes,
+//!   partitions, FIFO+backfill, preemption, pre-timelimit signals, requeue.
+//! * [`container`] — shifter and podman-hpc runtime models: Containerfile
+//!   builds, an image store/registry, squashfile migration, volume mounts.
+//! * [`fsmodel`] — filesystem startup-performance models (the Fig 2
+//!   substrate: HOME/SCRATCH/common-software/CVMFS vs container caches).
+//! * [`workload`] — the Geant4-analog particle-transport application layer
+//!   (versions, physics lists, sources, detectors) whose compute runs as
+//!   AOT-compiled XLA programs authored in JAX/Pallas.
+//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt`, compiles
+//!   once, executes from the hot path. Python never runs at request time.
+//! * [`metrics`] — an LDMS-analog resource sampler (the Fig 4 substrate).
+//! * [`simclock`] — the discrete-event simulation core.
+//!
+//! See `DESIGN.md` for the experiment index mapping every figure/table of
+//! the paper to modules and bench targets, and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod cli;
+pub mod container;
+pub mod cr;
+pub mod dmtcp;
+pub mod error;
+pub mod fsmodel;
+pub mod logging;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod simclock;
+pub mod slurm;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

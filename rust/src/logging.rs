@@ -1,0 +1,72 @@
+//! Tiny `log` facade backend (env_logger is not in the offline closure).
+//!
+//! Level comes from `NERSC_CR_LOG` (error|warn|info|debug|trace), default
+//! `info`. Messages go to stderr with a monotonic timestamp, mirroring the
+//! `dmtcp_coordinator --daemon` log style.
+
+use std::io::Write;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::OnceCell;
+
+static START: OnceCell<Instant> = OnceCell::new();
+static LOGGER: Logger = Logger;
+
+struct Logger;
+
+impl log::Log for Logger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.get_or_init(Instant::now).elapsed();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{:>9.3}s {} {}] {}",
+            t.as_secs_f64(),
+            lvl,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("NERSC_CR_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    START.get_or_init(Instant::now);
+    if log::set_logger(&LOGGER).is_ok() {
+        log::set_max_level(level);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke");
+    }
+}

@@ -1,0 +1,8 @@
+//! `nersc-cr` binary entrypoint.
+fn main() {
+    nersc_cr::logging::init();
+    if let Err(e) = nersc_cr::cli::run(std::env::args().skip(1).collect()) {
+        eprintln!("nersc-cr: {e}");
+        std::process::exit(2);
+    }
+}

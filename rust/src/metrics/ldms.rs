@@ -1,0 +1,141 @@
+//! LDMS-analog: the Lightweight Distributed Metric Service sampler.
+//!
+//! The paper's Fig 4 data "were acquired using the Lightweight Distributed
+//! Metric Service (LDMS)": a daemon sampling memory and CPU of the job's
+//! processes on a fixed interval. This sampler does the same for simulated
+//! processes — it polls their [`ProcessStats`] counters from a background
+//! thread and accumulates [`TimeSeries`] for memory and CPU utilization.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::dmtcp::process::ProcessStats;
+use crate::metrics::series::TimeSeries;
+
+/// Fixed per-process overhead added to the memory proxy (interpreter,
+/// libraries, DMTCP runtime — the paper's ~0.8% "loading of DMTCP and
+/// associated files").
+pub const BASE_PROCESS_OVERHEAD: u64 = 64 * 1024 * 1024;
+
+/// A running sampler; dropping it stops the thread.
+pub struct LdmsSampler {
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    out: Arc<Mutex<SampledSeries>>,
+}
+
+/// The collected series.
+#[derive(Debug, Clone, Default)]
+pub struct SampledSeries {
+    /// Aggregate memory across processes (bytes).
+    pub memory: TimeSeries,
+    /// Aggregate CPU utilization fraction `[0, n_procs]`.
+    pub cpu: TimeSeries,
+    /// Total steps done across processes.
+    pub steps: TimeSeries,
+}
+
+impl LdmsSampler {
+    /// Start sampling `procs` every `interval`.
+    pub fn start(procs: Vec<Arc<ProcessStats>>, interval: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let out = Arc::new(Mutex::new(SampledSeries {
+            memory: TimeSeries::new("memory_bytes"),
+            cpu: TimeSeries::new("cpu_util"),
+            steps: TimeSeries::new("steps_done"),
+        }));
+        let stop2 = Arc::clone(&stop);
+        let out2 = Arc::clone(&out);
+        let join = std::thread::Builder::new()
+            .name("ldms-sampler".into())
+            .spawn(move || {
+                let t0 = Instant::now();
+                while !stop2.load(Ordering::Relaxed) {
+                    let t = t0.elapsed().as_secs_f64();
+                    let mut mem = 0u64;
+                    let mut cpu = 0.0f64;
+                    let mut steps = 0u64;
+                    for p in &procs {
+                        mem += p.memory_bytes(BASE_PROCESS_OVERHEAD);
+                        cpu += p.cpu_fraction();
+                        steps += p.steps_done.load(Ordering::Relaxed);
+                    }
+                    {
+                        let mut o = out2.lock().expect("ldms series poisoned");
+                        o.memory.push(t, mem as f64);
+                        o.cpu.push(t, cpu);
+                        o.steps.push(t, steps as f64);
+                    }
+                    std::thread::sleep(interval);
+                }
+            })
+            .expect("spawn ldms sampler");
+        Self {
+            stop,
+            join: Some(join),
+            out,
+        }
+    }
+
+    /// Stop sampling and return the collected series.
+    pub fn stop(mut self) -> SampledSeries {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        let out = self.out.lock().expect("ldms series poisoned").clone();
+        out
+    }
+
+    /// Snapshot without stopping.
+    pub fn snapshot(&self) -> SampledSeries {
+        self.out.lock().expect("ldms series poisoned").clone()
+    }
+}
+
+impl Drop for LdmsSampler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_running_process() {
+        let stats = Arc::new(ProcessStats::default());
+        stats.alive.store(true, Ordering::Relaxed);
+        stats.n_threads.store(2, Ordering::Relaxed);
+        stats.state_bytes.store(1_000_000, Ordering::Relaxed);
+
+        let sampler = LdmsSampler::start(vec![Arc::clone(&stats)], Duration::from_millis(5));
+        std::thread::sleep(Duration::from_millis(40));
+        // Mid-run: park one thread (checkpoint) and add transient memory.
+        stats.parked.store(1, Ordering::Relaxed);
+        stats.transient_bytes.store(5_000_000, Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(40));
+        let series = sampler.stop();
+
+        assert!(series.memory.len() >= 8, "too few samples");
+        assert!(series.memory.max() >= (BASE_PROCESS_OVERHEAD + 5_500_000) as f64);
+        assert!(series.cpu.max() > 0.9, "cpu should be ~1.0 while unparked");
+        assert!(series.cpu.min() < 0.6, "cpu should dip when parked");
+    }
+
+    #[test]
+    fn dead_process_reads_zero() {
+        let stats = Arc::new(ProcessStats::default());
+        // alive=false by default
+        let sampler = LdmsSampler::start(vec![stats], Duration::from_millis(5));
+        std::thread::sleep(Duration::from_millis(25));
+        let series = sampler.stop();
+        assert_eq!(series.memory.max(), 0.0);
+        assert_eq!(series.cpu.max(), 0.0);
+    }
+}

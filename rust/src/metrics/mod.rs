@@ -1,0 +1,8 @@
+//! Metrics: the LDMS-analog sampler and time-series tooling (Fig 4
+//! substrate).
+
+pub mod ldms;
+pub mod series;
+
+pub use ldms::{LdmsSampler, SampledSeries, BASE_PROCESS_OVERHEAD};
+pub use series::{ascii_chart, to_csv, TimeSeries};

@@ -1,0 +1,223 @@
+//! Time series: storage, aggregation, CSV and terminal rendering.
+//!
+//! The Fig 4 reproduction renders memory/CPU series as CSV (for external
+//! plotting) and as ASCII charts (so `cargo bench` output shows the shape
+//! directly, like the paper's figure does).
+
+/// A named `(t, value)` series.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TimeSeries {
+    pub name: String,
+    pub t: Vec<f64>,
+    pub v: Vec<f64>,
+}
+
+impl TimeSeries {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            t: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.t.push(t);
+        self.v.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.v.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.v.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.v.is_empty() {
+            return 0.0;
+        }
+        self.v.iter().sum::<f64>() / self.v.len() as f64
+    }
+
+    /// Mean over the subrange `t ∈ [t0, t1)`.
+    pub fn mean_between(&self, t0: f64, t1: f64) -> f64 {
+        let vals: Vec<f64> = self
+            .t
+            .iter()
+            .zip(&self.v)
+            .filter(|(&t, _)| t >= t0 && t < t1)
+            .map(|(_, &v)| v)
+            .collect();
+        if vals.is_empty() {
+            0.0
+        } else {
+            vals.iter().sum::<f64>() / vals.len() as f64
+        }
+    }
+
+    /// Local maxima above `threshold` (the Fig 4 checkpoint spikes).
+    pub fn peaks_above(&self, threshold: f64) -> Vec<f64> {
+        let mut peaks = Vec::new();
+        for i in 1..self.v.len().saturating_sub(1) {
+            if self.v[i] > threshold && self.v[i] >= self.v[i - 1] && self.v[i] >= self.v[i + 1] {
+                peaks.push(self.t[i]);
+            }
+        }
+        peaks
+    }
+}
+
+/// Render several aligned series to CSV (`t,name1,name2,...`). Series are
+/// sampled on the union time grid with last-observation carry-forward.
+pub fn to_csv(series: &[&TimeSeries]) -> String {
+    let mut grid: Vec<f64> = series.iter().flat_map(|s| s.t.iter().copied()).collect();
+    grid.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    grid.dedup();
+    let mut out = String::from("t");
+    for s in series {
+        out.push(',');
+        out.push_str(&s.name);
+    }
+    out.push('\n');
+    let mut idx = vec![0usize; series.len()];
+    let mut last = vec![0.0f64; series.len()];
+    for &t in &grid {
+        out.push_str(&format!("{t:.3}"));
+        for (k, s) in series.iter().enumerate() {
+            while idx[k] < s.t.len() && s.t[idx[k]] <= t {
+                last[k] = s.v[idx[k]];
+                idx[k] += 1;
+            }
+            out.push_str(&format!(",{:.6}", last[k]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render one series as a terminal chart (rows of `#`), `width` columns.
+pub fn ascii_chart(s: &TimeSeries, width: usize, height: usize) -> String {
+    if s.is_empty() || width == 0 || height == 0 {
+        return String::new();
+    }
+    let (t0, t1) = (s.t[0], *s.t.last().unwrap());
+    let span = (t1 - t0).max(1e-9);
+    // Bucket means per column.
+    let mut sums = vec![0.0f64; width];
+    let mut counts = vec![0usize; width];
+    for (&t, &v) in s.t.iter().zip(&s.v) {
+        let col = (((t - t0) / span) * (width - 1) as f64).round() as usize;
+        sums[col] += v;
+        counts[col] += 1;
+    }
+    let cols: Vec<f64> = sums
+        .iter()
+        .zip(&counts)
+        .map(|(&s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
+        .collect();
+    // Carry forward empty buckets.
+    let mut filled = Vec::with_capacity(width);
+    let mut lastv = cols.iter().copied().find(|v| !v.is_nan()).unwrap_or(0.0);
+    for v in cols {
+        if !v.is_nan() {
+            lastv = v;
+        }
+        filled.push(lastv);
+    }
+    let vmax = filled.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let vmin = filled.iter().copied().fold(f64::INFINITY, f64::min);
+    let vspan = (vmax - vmin).max(1e-9);
+
+    let mut rows = vec![vec![' '; width]; height];
+    for (x, &v) in filled.iter().enumerate() {
+        let h = (((v - vmin) / vspan) * (height - 1) as f64).round() as usize;
+        for row in rows.iter().rev().take(h + 1) {
+            let _ = row; // height fill below
+        }
+        for y in 0..=h {
+            rows[height - 1 - y][x] = '#';
+        }
+    }
+    let mut out = format!("{} [{:.3} .. {:.3}]\n", s.name, vmin, vmax);
+    for row in rows {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.extend(std::iter::repeat('-').take(width));
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp() -> TimeSeries {
+        let mut s = TimeSeries::new("ramp");
+        for i in 0..10 {
+            s.push(i as f64, i as f64 * 2.0);
+        }
+        s
+    }
+
+    #[test]
+    fn stats() {
+        let s = ramp();
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.max(), 18.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.mean(), 9.0);
+        assert_eq!(s.mean_between(0.0, 5.0), 4.0);
+    }
+
+    #[test]
+    fn peaks() {
+        let mut s = TimeSeries::new("spiky");
+        for (t, v) in [(0.0, 1.0), (1.0, 5.0), (2.0, 1.0), (3.0, 6.0), (4.0, 1.0)] {
+            s.push(t, v);
+        }
+        let p = s.peaks_above(3.0);
+        assert_eq!(p, vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn csv_carry_forward() {
+        let mut a = TimeSeries::new("a");
+        a.push(0.0, 1.0);
+        a.push(2.0, 3.0);
+        let mut b = TimeSeries::new("b");
+        b.push(1.0, 10.0);
+        let csv = to_csv(&[&a, &b]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "t,a,b");
+        assert_eq!(lines.len(), 4); // header + t=0,1,2
+        assert!(lines[2].starts_with("1.000,1.000000,10.000000"));
+        assert!(lines[3].starts_with("2.000,3.000000,10.000000"));
+    }
+
+    #[test]
+    fn chart_renders() {
+        let chart = ascii_chart(&ramp(), 20, 5);
+        assert!(chart.contains('#'));
+        assert_eq!(chart.lines().count(), 7); // title + 5 rows + axis
+    }
+
+    #[test]
+    fn empty_series_safe() {
+        let s = TimeSeries::new("empty");
+        assert_eq!(ascii_chart(&s, 10, 3), "");
+        assert_eq!(s.mean(), 0.0);
+    }
+}

@@ -1,0 +1,291 @@
+//! The PJRT execution engine (thread-local).
+//!
+//! Loads HLO-text artifacts, compiles each once on the PJRT CPU client, and
+//! executes them with in-memory state. `xla::PjRtClient` is `Rc`-backed and
+//! therefore **not Send**: an [`Engine`] lives on one thread. Multi-threaded
+//! callers go through [`super::service::ComputeService`], which owns an
+//! Engine on a dedicated thread and serves cloneable handles.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::state::{ParticleState, StaticInputs};
+
+/// Names of the artifacts the engine knows how to drive.
+pub const STEP: &str = "transport_step";
+pub const STEP_REF: &str = "transport_step_ref";
+pub const SCAN: &str = "transport_scan";
+pub const SCAN_REF: &str = "transport_scan_ref";
+pub const SCORE_ROI: &str = "score_roi";
+pub const SPECTRUM: &str = "detector_spectrum";
+
+/// Compile/execute statistics (perf bookkeeping, EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub compile_secs: f64,
+    pub executions: u64,
+    pub execute_secs: f64,
+    /// Kernel steps advanced (scan counts as `scan_steps`).
+    pub steps: u64,
+}
+
+/// A PJRT CPU engine with a compiled-executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: std::cell::RefCell<EngineStats>,
+}
+
+impl Engine {
+    /// Load the manifest and compile the given artifacts (all if `None`).
+    pub fn load_subset(dir: &Path, names: Option<&[&str]>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut engine = Self {
+            client,
+            manifest,
+            exes: HashMap::new(),
+            stats: Default::default(),
+        };
+        let all: Vec<String> = engine.manifest.artifact_names().map(String::from).collect();
+        let wanted: Vec<String> = match names {
+            Some(ns) => ns.iter().map(|s| s.to_string()).collect(),
+            None => all,
+        };
+        for name in wanted {
+            engine.compile_artifact(&name)?;
+        }
+        Ok(engine)
+    }
+
+    /// Load the manifest and compile every artifact.
+    pub fn load(dir: &Path) -> Result<Self> {
+        Self::load_subset(dir, None)
+    }
+
+    /// Compile (or re-compile) one artifact from its HLO text.
+    pub fn compile_artifact(&mut self, name: &str) -> Result<()> {
+        if !self.manifest.artifacts.contains_key(name) {
+            return Err(Error::Manifest(format!("unknown artifact {name:?}")));
+        }
+        let path = self.manifest.artifact_path(name);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Manifest("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut st = self.stats.borrow_mut();
+        st.compiles += 1;
+        st.compile_secs += dt;
+        log::debug!("compiled {name} in {dt:.3}s");
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| Error::Xla(format!("artifact {name:?} not compiled")))
+    }
+
+    /// Build the 10 input literals for a transport artifact.
+    fn transport_inputs(
+        &self,
+        state: &ParticleState,
+        si: &StaticInputs,
+    ) -> Result<Vec<xla::Literal>> {
+        let b = state.batch() as i64;
+        let m = si.n_mat as i64;
+        Ok(vec![
+            xla::Literal::vec1(&state.pos).reshape(&[b, 3])?,
+            xla::Literal::vec1(&state.dcos).reshape(&[b, 3])?,
+            xla::Literal::vec1(&state.energy),
+            xla::Literal::vec1(&state.weight),
+            xla::Literal::vec1(&state.alive),
+            xla::Literal::vec1(&state.rng),
+            xla::Literal::vec1(&state.edep),
+            xla::Literal::vec1(&si.grid),
+            xla::Literal::vec1(&si.xs).reshape(&[m, 6])?,
+            xla::Literal::vec1(&si.params),
+        ])
+    }
+
+    /// Unpack the 7-tuple output back into `state`.
+    fn unpack_transport(&self, result: xla::Literal, state: &mut ParticleState) -> Result<()> {
+        let parts = result.to_tuple()?;
+        if parts.len() != 7 {
+            return Err(Error::Xla(format!(
+                "transport output arity {} != 7",
+                parts.len()
+            )));
+        }
+        let mut it = parts.into_iter();
+        state.pos = it.next().unwrap().to_vec::<f32>()?;
+        state.dcos = it.next().unwrap().to_vec::<f32>()?;
+        state.energy = it.next().unwrap().to_vec::<f32>()?;
+        state.weight = it.next().unwrap().to_vec::<f32>()?;
+        state.alive = it.next().unwrap().to_vec::<f32>()?;
+        state.rng = it.next().unwrap().to_vec::<u32>()?;
+        state.edep = it.next().unwrap().to_vec::<f32>()?;
+        Ok(())
+    }
+
+    fn run_transport(
+        &self,
+        artifact: &str,
+        steps: u64,
+        state: &mut ParticleState,
+        si: &StaticInputs,
+    ) -> Result<()> {
+        if state.batch() != self.manifest.batch {
+            return Err(Error::Workload(format!(
+                "state batch {} != artifact batch {}",
+                state.batch(),
+                self.manifest.batch
+            )));
+        }
+        si.validate(self.manifest.grid_d, self.manifest.n_mat)?;
+        let inputs = self.transport_inputs(state, si)?;
+        let t0 = Instant::now();
+        let bufs = self.exe(artifact)?.execute::<xla::Literal>(&inputs)?;
+        let out = bufs[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: one tuple literal out.
+        self.unpack_transport(out, state)?;
+        state.steps_done += steps;
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        st.steps += steps;
+        Ok(())
+    }
+
+    /// Advance one transport step (Pallas-kernel artifact).
+    pub fn transport_step(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+        self.run_transport(STEP, 1, state, si)
+    }
+
+    /// Advance one transport step through the pure-jnp oracle artifact
+    /// (A/B checking against the Pallas path from Rust).
+    pub fn transport_step_ref(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+        self.run_transport(STEP_REF, 1, state, si)
+    }
+
+    /// Advance `manifest.scan_steps` fused steps (the hot path: one PJRT
+    /// round-trip per scan).
+    pub fn transport_scan(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+        self.run_transport(SCAN, self.manifest.scan_steps as u64, state, si)
+    }
+
+    /// Advance `manifest.scan_steps` fused steps through the pure-jnp
+    /// oracle lowering (identical numerics to [`Self::transport_scan`] —
+    /// asserted by tests — but a different HLO loop structure; used for
+    /// A/B perf comparisons and as the CPU-deployment hot path when
+    /// `NERSC_CR_SCAN=ref`).
+    pub fn transport_scan_ref(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+        self.run_transport(SCAN_REF, self.manifest.scan_steps as u64, state, si)
+    }
+
+    /// Detector readout: `(roi_edep, total_edep, hit_voxels)`.
+    pub fn score_roi(&self, edep: &[f32], roi_mask: &[f32]) -> Result<(f32, f32, f32)> {
+        let n = self.manifest.n_voxels();
+        if edep.len() != n || roi_mask.len() != n {
+            return Err(Error::Workload(format!(
+                "score_roi expects {n}-voxel grids, got {} / {}",
+                edep.len(),
+                roi_mask.len()
+            )));
+        }
+        let inputs = vec![xla::Literal::vec1(edep), xla::Literal::vec1(roi_mask)];
+        let t0 = Instant::now();
+        let bufs = self.exe(SCORE_ROI)?.execute::<xla::Literal>(&inputs)?;
+        let out = bufs[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        if parts.len() != 3 {
+            return Err(Error::Xla(format!("score_roi arity {} != 3", parts.len())));
+        }
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        drop(st);
+        let vals: Vec<f32> = parts
+            .iter()
+            .map(|l| l.to_vec::<f32>().map(|v| v[0]))
+            .collect::<std::result::Result<_, _>>()?;
+        Ok((vals[0], vals[1], vals[2]))
+    }
+}
+
+impl Engine {
+    /// Dose-volume histogram of the scoring grid inside the ROI: counts of
+    /// voxels per energy bin over `[e_min, e_max)` (overflow clamps into
+    /// the last bin). Runs the Pallas spectrum kernel's artifact.
+    pub fn detector_spectrum(
+        &self,
+        edep: &[f32],
+        roi_mask: &[f32],
+        e_min: f32,
+        e_max: f32,
+    ) -> Result<Vec<f32>> {
+        let n = self.manifest.n_voxels();
+        if edep.len() != n || roi_mask.len() != n {
+            return Err(Error::Workload(format!(
+                "detector_spectrum expects {n}-voxel grids, got {} / {}",
+                edep.len(),
+                roi_mask.len()
+            )));
+        }
+        let vox: Vec<i32> = (0..n as i32).collect();
+        let params = [e_min, e_max, 0.0, 0.0];
+        let inputs = vec![
+            xla::Literal::vec1(edep),
+            xla::Literal::vec1(&vox),
+            xla::Literal::vec1(roi_mask),
+            xla::Literal::vec1(&params),
+        ];
+        let t0 = Instant::now();
+        let bufs = self.exe(SPECTRUM)?.execute::<xla::Literal>(&inputs)?;
+        let out = bufs[0][0].to_literal_sync()?;
+        let spectrum = out.to_tuple1()?.to_vec::<f32>()?;
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        drop(st);
+        if spectrum.len() != self.manifest.spectrum_bins {
+            return Err(Error::Xla(format!(
+                "spectrum arity {} != manifest bins {}",
+                spectrum.len(),
+                self.manifest.spectrum_bins
+            )));
+        }
+        Ok(spectrum)
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.client.platform_name())
+            .field("artifacts", &self.exes.keys().collect::<Vec<_>>())
+            .finish()
+    }
+}

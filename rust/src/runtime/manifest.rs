@@ -1,0 +1,149 @@
+//! Parser for `artifacts/manifest.txt` written by `python/compile/aot.py`.
+//!
+//! A deliberately tiny line-oriented `key value` format (no serde in the
+//! offline closure): global shape constants plus one `artifact <name>
+//! <sha256-12>` line per HLO module.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Particle batch size B used at AOT time.
+    pub batch: usize,
+    /// Voxel-grid edge length D (grid has D^3 cells).
+    pub grid_d: usize,
+    /// Number of material rows in the cross-section table.
+    pub n_mat: usize,
+    /// Steps fused per `transport_scan` call.
+    pub scan_steps: usize,
+    /// RNG draws consumed per particle per step (restart bookkeeping).
+    pub rng_draws_per_step: u32,
+    /// Detector-spectrum bin count (dose-volume histogram K).
+    pub spectrum_bins: usize,
+    /// artifact name -> content digest (12 hex chars).
+    pub artifacts: BTreeMap<String, String>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Manifest(format!("{}: {e}", path.display())))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut kv: BTreeMap<&str, &str> = BTreeMap::new();
+        let mut artifacts = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let key = parts.next().unwrap();
+            if key == "artifact" {
+                let name = parts
+                    .next()
+                    .ok_or_else(|| Error::Manifest(format!("line {lineno}: artifact w/o name")))?;
+                let digest = parts
+                    .next()
+                    .ok_or_else(|| Error::Manifest(format!("line {lineno}: artifact w/o digest")))?;
+                artifacts.insert(name.to_string(), digest.to_string());
+            } else {
+                let val = parts
+                    .next()
+                    .ok_or_else(|| Error::Manifest(format!("line {lineno}: {key} w/o value")))?;
+                kv.insert(key, val);
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .ok_or_else(|| Error::Manifest(format!("missing key {k}")))?
+                .parse()
+                .map_err(|_| Error::Manifest(format!("bad value for {k}")))
+        };
+        let format = get("format")?;
+        if format != 1 {
+            return Err(Error::Manifest(format!("unsupported format {format}")));
+        }
+        let spectrum_bins = kv
+            .get("spectrum_bins")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(128);
+        Ok(Self {
+            batch: get("batch")?,
+            spectrum_bins,
+            grid_d: get("grid_d")?,
+            n_mat: get("n_mat")?,
+            scan_steps: get("scan_steps")?,
+            rng_draws_per_step: get("rng_draws_per_step")? as u32,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Total voxel count D^3.
+    pub fn n_voxels(&self) -> usize {
+        self.grid_d * self.grid_d * self.grid_d
+    }
+
+    /// Path of one artifact's HLO text.
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Names of all artifacts.
+    pub fn artifact_names(&self) -> impl Iterator<Item = &str> {
+        self.artifacts.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "format 1\nbatch 4096\ngrid_d 32\nn_mat 8\nscan_steps 8\n\
+                          rng_draws_per_step 4\nartifact transport_step abc123def456\n\
+                          artifact score_roi 000111222333\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.batch, 4096);
+        assert_eq!(m.grid_d, 32);
+        assert_eq!(m.n_voxels(), 32 * 32 * 32);
+        assert_eq!(m.scan_steps, 8);
+        assert_eq!(m.rng_draws_per_step, 4);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(
+            m.artifact_path("score_roi"),
+            PathBuf::from("/tmp/a/score_roi.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_key_rejected() {
+        assert!(Manifest::parse("format 1\nbatch 8\n", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn wrong_format_rejected() {
+        let text = SAMPLE.replace("format 1", "format 9");
+        assert!(Manifest::parse(&text, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let text = format!("# header\n\n{SAMPLE}");
+        assert!(Manifest::parse(&text, Path::new(".")).is_ok());
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from the hot path.
+//!
+//! This is the only boundary between the Rust coordinator and the JAX/Pallas
+//! compute stack. `make artifacts` (build time, Python) lowers the L2 model
+//! to HLO *text* in `artifacts/`; at startup [`Engine::load`] parses the
+//! manifest, compiles every module on the PJRT CPU client, and the request
+//! path then only calls [`Engine::transport_scan`] / [`Engine::transport_step`]
+//! with in-memory state — no Python anywhere.
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+pub mod state;
+
+pub use engine::Engine;
+pub use manifest::Manifest;
+pub use service::{ComputeHandle, ComputeService};
+pub use state::{ParticleState, StaticInputs};

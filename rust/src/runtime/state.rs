@@ -1,0 +1,279 @@
+//! In-memory particle/scoring state and its two serializations:
+//! XLA literals (for PJRT execution) and raw byte segments (for DMTCP-style
+//! checkpoint images).
+//!
+//! The state layout mirrors the L2 convention in `python/compile/model.py`:
+//! `pos f32[B,3], dcos f32[B,3], energy f32[B], weight f32[B], alive f32[B],
+//! rng u32[B], edep f32[D^3]`. Because the RNG is counter-based and lives in
+//! this state, serializing + restoring it resumes the Monte-Carlo stream
+//! *bit-exactly* — the keystone of the C/R correctness tests.
+
+use crate::error::{Error, Result};
+use crate::util::bytes::{bytes_to_f32s, bytes_to_u32s, f32s_to_bytes, u32s_to_bytes};
+use crate::util::rng::SplitMix64;
+
+/// Per-run static inputs: geometry, cross-sections, world parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StaticInputs {
+    /// Flattened D^3 material-index grid.
+    pub grid: Vec<i32>,
+    /// Per-material rows `(s0, s1, f_abs, f_loss, g, pad)`, row-major [M,6].
+    pub xs: Vec<f32>,
+    /// `(voxel_size, 1/voxel_size, e_cut, max_step, D, pad, pad, pad)`.
+    pub params: [f32; 8],
+    /// Material count M.
+    pub n_mat: usize,
+    /// Grid edge length D.
+    pub grid_d: usize,
+}
+
+impl StaticInputs {
+    /// Validate shapes against a manifest's dims.
+    pub fn validate(&self, grid_d: usize, n_mat: usize) -> Result<()> {
+        let d3 = grid_d * grid_d * grid_d;
+        if self.grid.len() != d3 {
+            return Err(Error::Workload(format!(
+                "grid len {} != D^3 {d3}",
+                self.grid.len()
+            )));
+        }
+        if self.xs.len() != n_mat * 6 {
+            return Err(Error::Workload(format!(
+                "xs len {} != M*6 {}",
+                self.xs.len(),
+                n_mat * 6
+            )));
+        }
+        if self.params[4] as usize != grid_d {
+            return Err(Error::Workload(format!(
+                "params D {} != grid_d {grid_d}",
+                self.params[4]
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The mutable simulation state (one "MPI rank"'s worth of particles).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParticleState {
+    pub pos: Vec<f32>,    // [B,3] row-major
+    pub dcos: Vec<f32>,   // [B,3]
+    pub energy: Vec<f32>, // [B]
+    pub weight: Vec<f32>, // [B]
+    pub alive: Vec<f32>,  // [B]
+    pub rng: Vec<u32>,    // [B] counter-based RNG state
+    pub edep: Vec<f32>,   // [D^3] accumulated scoring grid
+    /// Steps completed so far (restart bookkeeping + progress reporting).
+    pub steps_done: u64,
+}
+
+impl ParticleState {
+    /// Batch size B.
+    pub fn batch(&self) -> usize {
+        self.energy.len()
+    }
+
+    /// Number of particles still alive.
+    pub fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|&&a| a > 0.5).count()
+    }
+
+    /// Total deposited energy (sum of the scoring grid).
+    pub fn total_edep(&self) -> f64 {
+        self.edep.iter().map(|&x| x as f64).sum()
+    }
+
+    /// Total in-flight energy of live particles.
+    pub fn live_energy(&self) -> f64 {
+        self.energy
+            .iter()
+            .zip(&self.alive)
+            .filter(|(_, &a)| a > 0.5)
+            .map(|(&e, _)| e as f64)
+            .sum()
+    }
+
+    /// Approximate resident size in bytes (LDMS memory accounting).
+    pub fn size_bytes(&self) -> usize {
+        4 * (self.pos.len()
+            + self.dcos.len()
+            + self.energy.len()
+            + self.weight.len()
+            + self.alive.len()
+            + self.rng.len()
+            + self.edep.len())
+            + 8
+    }
+
+    /// Sample a fresh batch from a source: all particles start at `origin`
+    /// with isotropic directions and energies drawn by `sample_energy`.
+    pub fn from_source(
+        batch: usize,
+        n_voxels: usize,
+        origin: [f32; 3],
+        seed: u64,
+        mut sample_energy: impl FnMut(&mut SplitMix64) -> f32,
+    ) -> Self {
+        let mut r = SplitMix64::new(seed);
+        let mut pos = Vec::with_capacity(batch * 3);
+        let mut dcos = Vec::with_capacity(batch * 3);
+        let mut energy = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            pos.extend_from_slice(&origin);
+            // Isotropic direction via uniform cos(theta), phi.
+            let cz = r.gen_f64(-1.0, 1.0);
+            let sz = (1.0 - cz * cz).max(0.0).sqrt();
+            let phi = r.gen_f64(0.0, std::f64::consts::TAU);
+            dcos.push((sz * phi.cos()) as f32);
+            dcos.push((sz * phi.sin()) as f32);
+            dcos.push(cz as f32);
+            energy.push(sample_energy(&mut r));
+        }
+        // Distinct RNG counter lanes per particle: wide stride so 2^32/B
+        // steps never collide between lanes.
+        let stride = (u32::MAX / batch.max(1) as u32).max(1);
+        Self {
+            pos,
+            dcos,
+            energy,
+            weight: vec![1.0; batch],
+            alive: vec![1.0; batch],
+            rng: (0..batch as u32).map(|i| i.wrapping_mul(stride)).collect(),
+            edep: vec![0.0; n_voxels],
+            steps_done: 0,
+        }
+    }
+
+    /// Serialize to named byte segments (the checkpoint "memory regions").
+    ///
+    /// Each segment is `(name, bytes)`; the DMTCP image layer wraps them
+    /// with headers, CRCs and optional gzip.
+    pub fn to_segments(&self) -> Vec<(String, Vec<u8>)> {
+        let mut steps = Vec::with_capacity(8);
+        steps.extend_from_slice(&self.steps_done.to_le_bytes());
+        vec![
+            ("pos".into(), f32s_to_bytes(&self.pos)),
+            ("dcos".into(), f32s_to_bytes(&self.dcos)),
+            ("energy".into(), f32s_to_bytes(&self.energy)),
+            ("weight".into(), f32s_to_bytes(&self.weight)),
+            ("alive".into(), f32s_to_bytes(&self.alive)),
+            ("rng".into(), u32s_to_bytes(&self.rng)),
+            ("edep".into(), f32s_to_bytes(&self.edep)),
+            ("steps_done".into(), steps),
+        ]
+    }
+
+    /// Reconstruct from segments produced by [`Self::to_segments`].
+    pub fn from_segments(segments: &[(String, Vec<u8>)]) -> Result<Self> {
+        let find = |name: &str| -> Result<&Vec<u8>> {
+            segments
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, b)| b)
+                .ok_or_else(|| Error::Image(format!("missing segment {name:?}")))
+        };
+        let steps_b = find("steps_done")?;
+        if steps_b.len() != 8 {
+            return Err(Error::Image("steps_done segment malformed".into()));
+        }
+        let state = Self {
+            pos: bytes_to_f32s(find("pos")?)?,
+            dcos: bytes_to_f32s(find("dcos")?)?,
+            energy: bytes_to_f32s(find("energy")?)?,
+            weight: bytes_to_f32s(find("weight")?)?,
+            alive: bytes_to_f32s(find("alive")?)?,
+            rng: bytes_to_u32s(find("rng")?)?,
+            edep: bytes_to_f32s(find("edep")?)?,
+            steps_done: u64::from_le_bytes(steps_b.as_slice().try_into().unwrap()),
+        };
+        let b = state.batch();
+        if state.pos.len() != b * 3
+            || state.dcos.len() != b * 3
+            || state.weight.len() != b
+            || state.alive.len() != b
+            || state.rng.len() != b
+        {
+            return Err(Error::Image("inconsistent segment lengths".into()));
+        }
+        Ok(state)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> ParticleState {
+        ParticleState::from_source(64, 4 * 4 * 4, [2.0, 2.0, 2.0], 42, |r| {
+            1.0 + r.next_f32() * 5.0
+        })
+    }
+
+    #[test]
+    fn from_source_shapes_and_units() {
+        let s = sample_state();
+        assert_eq!(s.batch(), 64);
+        assert_eq!(s.pos.len(), 64 * 3);
+        assert_eq!(s.alive_count(), 64);
+        assert_eq!(s.total_edep(), 0.0);
+        assert_eq!(s.steps_done, 0);
+        // directions are unit vectors
+        for i in 0..64 {
+            let d = &s.dcos[i * 3..i * 3 + 3];
+            let n = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt();
+            assert!((n - 1.0).abs() < 1e-5, "row {i}: |d|={n}");
+        }
+    }
+
+    #[test]
+    fn from_source_deterministic() {
+        let a = sample_state();
+        let b = sample_state();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rng_lanes_distinct() {
+        let s = sample_state();
+        let mut lanes = s.rng.clone();
+        lanes.sort_unstable();
+        lanes.dedup();
+        assert_eq!(lanes.len(), s.batch());
+    }
+
+    #[test]
+    fn segments_roundtrip_bitwise() {
+        let mut s = sample_state();
+        s.steps_done = 17;
+        s.edep[5] = 1.25;
+        let segs = s.to_segments();
+        let back = ParticleState::from_segments(&segs).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn segment_corruption_detected() {
+        let s = sample_state();
+        let mut segs = s.to_segments();
+        segs.retain(|(n, _)| n != "rng");
+        assert!(ParticleState::from_segments(&segs).is_err());
+        let mut segs2 = s.to_segments();
+        segs2.iter_mut().find(|(n, _)| n == "pos").unwrap().1.pop();
+        assert!(ParticleState::from_segments(&segs2).is_err());
+    }
+
+    #[test]
+    fn static_inputs_validation() {
+        let ok = StaticInputs {
+            grid: vec![0; 8],
+            xs: vec![0.0; 12],
+            params: [1.0, 1.0, 0.01, 2.0, 2.0, 0.0, 0.0, 0.0],
+            n_mat: 2,
+            grid_d: 2,
+        };
+        assert!(ok.validate(2, 2).is_ok());
+        assert!(ok.validate(3, 2).is_err());
+        assert!(ok.validate(2, 3).is_err());
+    }
+}

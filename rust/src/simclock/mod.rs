@@ -1,0 +1,114 @@
+//! Discrete-event simulation core.
+//!
+//! The batch-scheduler experiments (Fig 2 sweeps, utilization studies,
+//! preemption campaigns) run thousands of simulated jobs; they use this
+//! event queue in *sim-time* (integer seconds) so hours of cluster activity
+//! replay in milliseconds. Real-time components (the DMTCP coordinator, the
+//! PJRT engine) don't use this — see DESIGN.md §3 on the two modes.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Simulated time in seconds since sim start.
+pub type SimTime = u64;
+
+/// A scheduled event: fires at `at`; FIFO among equal times (`seq`).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct Scheduled<E> {
+    at: SimTime,
+    seq: u64,
+    event: E,
+}
+
+/// Priority queue of timed events with stable FIFO tie-breaking.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<Scheduled<E>>>,
+    seq: u64,
+}
+
+impl<E: Ord> EventQueue<E> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    /// Schedule `event` at absolute time `at`.
+    pub fn schedule(&mut self, at: SimTime, event: E) {
+        self.seq += 1;
+        self.heap.push(Reverse(Scheduled {
+            at,
+            seq: self.seq,
+            event,
+        }));
+    }
+
+    /// Pop the earliest event `(time, event)`.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.heap.pop().map(|Reverse(s)| (s.at, s.event))
+    }
+
+    /// Time of the next event without removing it.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse(s)| s.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E: Ord> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_ordering() {
+        let mut q = EventQueue::new();
+        q.schedule(30, "c");
+        q.schedule(10, "a");
+        q.schedule(20, "b");
+        assert_eq!(q.peek_time(), Some(10));
+        assert_eq!(q.pop(), Some((10, "a")));
+        assert_eq!(q.pop(), Some((20, "b")));
+        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_among_equal_times() {
+        let mut q = EventQueue::new();
+        q.schedule(5, "first");
+        q.schedule(5, "second");
+        q.schedule(5, "third");
+        assert_eq!(q.pop().unwrap().1, "first");
+        assert_eq!(q.pop().unwrap().1, "second");
+        assert_eq!(q.pop().unwrap().1, "third");
+    }
+
+    #[test]
+    fn interleaved_schedule_pop() {
+        let mut q = EventQueue::new();
+        q.schedule(10, 1);
+        assert_eq!(q.pop(), Some((10, 1)));
+        q.schedule(5, 2);
+        q.schedule(15, 3);
+        assert_eq!(q.pop(), Some((5, 2)));
+        q.schedule(1, 4);
+        assert_eq!(q.pop(), Some((1, 4)));
+        assert_eq!(q.pop(), Some((15, 3)));
+        assert!(q.is_empty());
+    }
+}

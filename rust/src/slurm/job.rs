@@ -1,0 +1,275 @@
+//! Job specifications, states and accounting.
+
+use crate::simclock::SimTime;
+use crate::slurm::signals::Signal;
+
+/// Job identifier.
+pub type JobId = u64;
+
+/// How a job uses checkpoint-restart (drives the three strategies of the
+/// paper's Fig 4 and the overhead study).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CrMode {
+    /// No C/R: preemption or timeout loses all progress.
+    None,
+    /// Periodic checkpoints; restarts begin from scratch anyway
+    /// (the paper's "checkpoint-only" control).
+    CheckpointOnly { interval: SimTime, overhead: SimTime },
+    /// Periodic checkpoints + restart from the last image on requeue.
+    CheckpointRestart { interval: SimTime, overhead: SimTime },
+}
+
+impl CrMode {
+    /// Checkpoint interval, if checkpointing at all.
+    pub fn interval(&self) -> Option<SimTime> {
+        match self {
+            CrMode::None => None,
+            CrMode::CheckpointOnly { interval, .. }
+            | CrMode::CheckpointRestart { interval, .. } => Some(*interval),
+        }
+    }
+
+    /// Per-checkpoint walltime overhead.
+    pub fn overhead(&self) -> SimTime {
+        match self {
+            CrMode::None => 0,
+            CrMode::CheckpointOnly { overhead, .. }
+            | CrMode::CheckpointRestart { overhead, .. } => *overhead,
+        }
+    }
+
+    /// Whether restart resumes from the last checkpoint.
+    pub fn restarts_from_ckpt(&self) -> bool {
+        matches!(self, CrMode::CheckpointRestart { .. })
+    }
+}
+
+/// A job submission (what `sbatch` parses out of a script).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub name: String,
+    pub partition: String,
+    /// Whole nodes requested.
+    pub nodes: u32,
+    /// `--time`: walltime limit (seconds).
+    pub time_limit: SimTime,
+    /// `--time-min`: smallest acceptable limit for backfill shrinking.
+    pub time_min: Option<SimTime>,
+    /// `--signal=[B:]SIG@offset`: deliver `SIG` this many seconds before
+    /// the limit.
+    pub signal: Option<(Signal, SimTime)>,
+    /// `--requeue` eligibility.
+    pub requeue: bool,
+    /// `--comment`: free text; the CR module stores remaining walltime here.
+    pub comment: String,
+    /// Total compute seconds the job needs to complete.
+    pub work_total: SimTime,
+    /// Checkpoint-restart behaviour.
+    pub cr: CrMode,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        Self {
+            name: "job".into(),
+            partition: "regular".into(),
+            nodes: 1,
+            time_limit: 3_600,
+            time_min: None,
+            signal: None,
+            requeue: false,
+            comment: String::new(),
+            work_total: 1_800,
+            cr: CrMode::None,
+        }
+    }
+}
+
+/// Job lifecycle states (Slurm names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Pending,
+    Running,
+    Completed,
+    /// Hit its (possibly shrunk) time limit without C/R.
+    Timeout,
+    /// Preempted and not requeue-eligible.
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobState::Completed | JobState::Timeout | JobState::Failed | JobState::Cancelled
+        )
+    }
+}
+
+/// A job and its full accounting across incarnations.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: JobId,
+    pub spec: JobSpec,
+    pub state: JobState,
+    pub submit_time: SimTime,
+    /// Start of the *current* incarnation (None while pending).
+    pub start_time: Option<SimTime>,
+    /// Terminal time, once reached.
+    pub end_time: Option<SimTime>,
+    /// Walltime limit of the current incarnation (may be shrunk by
+    /// backfill within `[time_min, time_limit]`).
+    pub effective_limit: SimTime,
+    /// Compute seconds finished before the current incarnation started
+    /// (what C/R preserved).
+    pub work_carried: SimTime,
+    /// Compute seconds at the last checkpoint (any incarnation).
+    pub work_at_ckpt: SimTime,
+    /// Checkpoints taken in total.
+    pub checkpoints: u32,
+    /// Times this job was requeued.
+    pub requeues: u32,
+    /// Node ids of the current allocation.
+    pub node_ids: Vec<usize>,
+    /// Signal deliveries `(time, signal)` (observable by tests).
+    pub signal_log: Vec<(SimTime, Signal)>,
+    /// Wasted compute seconds (progress lost to preemption/timeout).
+    pub work_lost: SimTime,
+    /// A preemption signal has been delivered; the grace-period reap is
+    /// pending (prevents double-victimization).
+    pub preempt_pending: bool,
+}
+
+impl Job {
+    pub fn new(id: JobId, spec: JobSpec, submit_time: SimTime) -> Self {
+        let effective_limit = spec.time_limit;
+        Self {
+            id,
+            spec,
+            state: JobState::Pending,
+            submit_time,
+            start_time: None,
+            end_time: None,
+            effective_limit,
+            work_carried: 0,
+            work_at_ckpt: 0,
+            checkpoints: 0,
+            requeues: 0,
+            node_ids: Vec::new(),
+            signal_log: Vec::new(),
+            work_lost: 0,
+            preempt_pending: false,
+        }
+    }
+
+    /// Compute seconds done as of sim-time `now` (current incarnation
+    /// runs 1 work-second per wall-second, minus checkpoint overheads
+    /// already accounted by the scheduler via `ckpt_overhead_so_far`).
+    pub fn work_done(&self, now: SimTime, ckpt_overhead_so_far: SimTime) -> SimTime {
+        match (self.state, self.start_time) {
+            (JobState::Running, Some(s)) => {
+                let ran = now.saturating_sub(s).saturating_sub(ckpt_overhead_so_far);
+                (self.work_carried + ran).min(self.spec.work_total)
+            }
+            _ => self.work_carried,
+        }
+    }
+
+    /// Remaining compute seconds at the start of an incarnation.
+    pub fn work_remaining(&self) -> SimTime {
+        self.spec.work_total.saturating_sub(self.work_carried)
+    }
+
+    /// Total checkpoint overhead the current incarnation will pay if it
+    /// runs for `span` seconds of wall time.
+    pub fn ckpt_overhead_for(&self, span: SimTime) -> SimTime {
+        match self.spec.cr.interval() {
+            Some(iv) if iv > 0 => (span / iv) * self.spec.cr.overhead(),
+            _ => 0,
+        }
+    }
+
+    /// Slurm-style one-line summary (`squeue`).
+    pub fn squeue_line(&self, now: SimTime) -> String {
+        let st = match self.state {
+            JobState::Pending => "PD",
+            JobState::Running => "R",
+            JobState::Completed => "CD",
+            JobState::Timeout => "TO",
+            JobState::Failed => "F",
+            JobState::Cancelled => "CA",
+        };
+        let elapsed = match (self.state, self.start_time) {
+            (JobState::Running, Some(s)) => now - s,
+            _ => 0,
+        };
+        format!(
+            "{:>8} {:>10} {:>9} {:>2} {:>10} {:>6} {}",
+            self.id,
+            self.spec.partition,
+            self.spec.name,
+            st,
+            crate::util::format_hms(elapsed),
+            self.spec.nodes,
+            self.spec.comment,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cr_mode_accessors() {
+        assert_eq!(CrMode::None.interval(), None);
+        assert_eq!(CrMode::None.overhead(), 0);
+        assert!(!CrMode::None.restarts_from_ckpt());
+        let co = CrMode::CheckpointOnly { interval: 300, overhead: 5 };
+        assert_eq!(co.interval(), Some(300));
+        assert!(!co.restarts_from_ckpt());
+        let cr = CrMode::CheckpointRestart { interval: 300, overhead: 5 };
+        assert!(cr.restarts_from_ckpt());
+        assert_eq!(cr.overhead(), 5);
+    }
+
+    #[test]
+    fn work_accounting() {
+        let spec = JobSpec {
+            work_total: 1_000,
+            ..Default::default()
+        };
+        let mut j = Job::new(1, spec, 0);
+        assert_eq!(j.work_remaining(), 1_000);
+        j.state = JobState::Running;
+        j.start_time = Some(100);
+        assert_eq!(j.work_done(400, 0), 300);
+        assert_eq!(j.work_done(400, 50), 250);
+        // clamped at total
+        assert_eq!(j.work_done(5_000, 0), 1_000);
+        j.work_carried = 600;
+        assert_eq!(j.work_remaining(), 400);
+    }
+
+    #[test]
+    fn ckpt_overhead_accumulates_per_interval() {
+        let spec = JobSpec {
+            cr: CrMode::CheckpointRestart { interval: 100, overhead: 7 },
+            ..Default::default()
+        };
+        let j = Job::new(1, spec, 0);
+        assert_eq!(j.ckpt_overhead_for(0), 0);
+        assert_eq!(j.ckpt_overhead_for(99), 0);
+        assert_eq!(j.ckpt_overhead_for(100), 7);
+        assert_eq!(j.ckpt_overhead_for(450), 28);
+    }
+
+    #[test]
+    fn squeue_line_smoke() {
+        let j = Job::new(42, JobSpec::default(), 0);
+        let line = j.squeue_line(0);
+        assert!(line.contains("42"));
+        assert!(line.contains("PD"));
+    }
+}

@@ -1,0 +1,21 @@
+//! Batch-scheduler simulator (the Slurm substrate).
+//!
+//! A discrete-event cluster simulator with the behaviours the paper's C/R
+//! workflow depends on: whole-node allocations, partitions with priority
+//! tiers and a preemptable queue, FIFO + EASY backfill (including
+//! `--time-min` shrink-to-fit — the "backfill opportunities within the
+//! job's specified time constraints"), pre-timelimit `--signal` delivery,
+//! preemption with grace periods, and `--requeue` with work carried from
+//! the last checkpoint.
+
+pub mod job;
+pub mod node;
+pub mod sbatch;
+pub mod scheduler;
+pub mod signals;
+
+pub use job::{CrMode, Job, JobId, JobSpec, JobState};
+pub use node::{Node, NodeState, Partition};
+pub use sbatch::{parse_script, render_script};
+pub use scheduler::{wall_needed, SlurmSim, TraceEvent};
+pub use signals::{parse_signal_directive, Signal};

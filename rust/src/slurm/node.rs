@@ -1,0 +1,122 @@
+//! Cluster nodes and partitions.
+
+use crate::simclock::SimTime;
+use crate::slurm::job::JobId;
+
+/// Node allocation state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    Idle,
+    /// Allocated to a job.
+    Busy(JobId),
+    /// Out of service (maintenance / failure injection).
+    Down,
+}
+
+/// One whole-node-allocatable compute node (Perlmutter-style scheduling:
+/// CPU nodes are handed out whole).
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub state: NodeState,
+    /// Accumulated busy seconds (utilization accounting).
+    pub busy_secs: SimTime,
+    /// Time of the last state change.
+    pub since: SimTime,
+}
+
+impl Node {
+    pub fn new(id: usize) -> Self {
+        Self {
+            id,
+            state: NodeState::Idle,
+            busy_secs: 0,
+            since: 0,
+        }
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.state == NodeState::Idle
+    }
+
+    /// Transition, folding elapsed busy time into the accumulator.
+    pub fn set_state(&mut self, state: NodeState, now: SimTime) {
+        if let NodeState::Busy(_) = self.state {
+            self.busy_secs += now.saturating_sub(self.since);
+        }
+        self.state = state;
+        self.since = now;
+    }
+}
+
+/// A partition (queue) of the cluster.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub name: String,
+    /// Scheduling priority tier: higher preempts lower.
+    pub priority: u32,
+    /// Jobs here may be preempted by higher-priority partitions.
+    pub preemptable: bool,
+    /// Maximum walltime a job may request.
+    pub max_time: SimTime,
+    /// Grace period between preemption signal and kill
+    /// (Slurm `PreemptGraceTime`).
+    pub grace_period: SimTime,
+}
+
+impl Partition {
+    /// The standard three-queue layout used across our experiments,
+    /// mirroring NERSC's regular / preempt / realtime setup.
+    pub fn standard_set() -> Vec<Partition> {
+        vec![
+            Partition {
+                name: "regular".into(),
+                priority: 10,
+                preemptable: false,
+                max_time: 12 * 3_600,
+                grace_period: 120,
+            },
+            Partition {
+                name: "preempt".into(),
+                priority: 1,
+                preemptable: true,
+                max_time: 24 * 3_600,
+                grace_period: 120,
+            },
+            Partition {
+                name: "realtime".into(),
+                priority: 100,
+                preemptable: false,
+                max_time: 4 * 3_600,
+                grace_period: 60,
+            },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn busy_accounting() {
+        let mut n = Node::new(0);
+        assert!(n.is_idle());
+        n.set_state(NodeState::Busy(7), 100);
+        n.set_state(NodeState::Idle, 350);
+        assert_eq!(n.busy_secs, 250);
+        n.set_state(NodeState::Busy(8), 400);
+        n.set_state(NodeState::Down, 500);
+        assert_eq!(n.busy_secs, 350);
+    }
+
+    #[test]
+    fn standard_partitions() {
+        let ps = Partition::standard_set();
+        assert_eq!(ps.len(), 3);
+        let preempt = ps.iter().find(|p| p.name == "preempt").unwrap();
+        assert!(preempt.preemptable);
+        let rt = ps.iter().find(|p| p.name == "realtime").unwrap();
+        assert!(rt.priority > 10);
+    }
+}

@@ -1,0 +1,951 @@
+//! The batch scheduler: FIFO + EASY backfill, preemption, pre-timelimit
+//! signals, and requeue — the Slurm behaviours the paper's C/R workflow is
+//! built on.
+//!
+//! Execution model: whole-node allocations; a running job completes one
+//! work-second per wall-second, minus checkpoint overheads. A job whose
+//! remaining work does not fit its (possibly backfill-shrunk) walltime
+//! limit receives its `--signal` before the limit; the C/R behaviour at
+//! that point — checkpoint and requeue with carried work, or lose progress
+//! — is exactly the paper's comparison axis.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::simclock::{EventQueue, SimTime};
+use crate::slurm::job::{CrMode, Job, JobId, JobSpec, JobState};
+use crate::slurm::node::{Node, NodeState, Partition};
+use crate::slurm::signals::Signal;
+
+/// Scheduler events (incarnation-stamped so a requeue invalidates the
+/// previous incarnation's pending events).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Ev {
+    /// Job finishes its work.
+    Finish(JobId, u32),
+    /// Job hits its effective walltime limit.
+    Limit(JobId, u32),
+    /// `--signal` delivery point before the limit.
+    PreSignal(JobId, u32),
+    /// Periodic checkpoint instant.
+    Ckpt(JobId, u32),
+    /// Grace period after preemption signal expired: reap the victim.
+    Reap(JobId, u32),
+    /// Re-run the scheduling pass.
+    Schedule,
+}
+
+/// Observable trace of scheduler activity (tests + benches consume this).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    Submitted { id: JobId, t: SimTime },
+    Started { id: JobId, t: SimTime, nodes: Vec<usize>, limit: SimTime, backfilled: bool },
+    Checkpointed { id: JobId, t: SimTime, work: SimTime },
+    Signaled { id: JobId, t: SimTime, signal: Signal },
+    Requeued { id: JobId, t: SimTime, carried: SimTime },
+    Preempted { id: JobId, t: SimTime, by: JobId },
+    Finished { id: JobId, t: SimTime },
+    TimedOut { id: JobId, t: SimTime, lost: SimTime },
+    Failed { id: JobId, t: SimTime, lost: SimTime },
+}
+
+/// The cluster + queue simulator.
+pub struct SlurmSim {
+    pub now: SimTime,
+    events: EventQueue<Ev>,
+    jobs: BTreeMap<JobId, Job>,
+    nodes: Vec<Node>,
+    partitions: BTreeMap<String, Partition>,
+    pending: Vec<JobId>,
+    next_id: JobId,
+    /// Per-incarnation checkpoint counts (overhead accounting).
+    ckpts_this_inc: BTreeMap<JobId, u32>,
+    pub trace: Vec<TraceEvent>,
+    /// Requeue budget per job (Slurm sites cap batch requeues; this also
+    /// bounds the checkpoint-only livelock where a job restarts from
+    /// scratch forever and starves the queue).
+    pub max_requeues: u32,
+}
+
+/// Wall seconds needed to do `work` compute seconds with a checkpoint
+/// every `iv` wall seconds costing `ov` (fixed point of
+/// `w = work + floor(w/iv)*ov`).
+pub fn wall_needed(work: SimTime, cr: &CrMode) -> SimTime {
+    match cr.interval() {
+        None => work,
+        Some(0) => work,
+        Some(iv) => {
+            let ov = cr.overhead();
+            let mut w = work;
+            for _ in 0..64 {
+                let next = work + (w / iv) * ov;
+                if next == w {
+                    break;
+                }
+                w = next;
+            }
+            w
+        }
+    }
+}
+
+impl SlurmSim {
+    pub fn new(n_nodes: usize, partitions: Vec<Partition>) -> Self {
+        Self {
+            now: 0,
+            events: EventQueue::new(),
+            jobs: BTreeMap::new(),
+            nodes: (0..n_nodes).map(Node::new).collect(),
+            partitions: partitions.into_iter().map(|p| (p.name.clone(), p)).collect(),
+            pending: Vec::new(),
+            next_id: 100_000, // NERSC-looking job ids
+            ckpts_this_inc: BTreeMap::new(),
+            trace: Vec::new(),
+            max_requeues: 200,
+        }
+    }
+
+    /// Submit a job now. Returns the job id.
+    pub fn submit(&mut self, spec: JobSpec) -> Result<JobId> {
+        self.submit_at(spec, self.now)
+    }
+
+    /// Submit a job at a future time.
+    pub fn submit_at(&mut self, spec: JobSpec, t: SimTime) -> Result<JobId> {
+        let part = self
+            .partitions
+            .get(&spec.partition)
+            .ok_or_else(|| Error::Slurm(format!("unknown partition {:?}", spec.partition)))?;
+        if spec.time_limit > part.max_time {
+            return Err(Error::Slurm(format!(
+                "time limit {} exceeds partition max {}",
+                spec.time_limit, part.max_time
+            )));
+        }
+        if spec.nodes as usize > self.nodes.len() {
+            return Err(Error::Slurm(format!(
+                "job wants {} nodes, cluster has {}",
+                spec.nodes,
+                self.nodes.len()
+            )));
+        }
+        if t < self.now {
+            return Err(Error::Slurm("cannot submit in the past".into()));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut job = Job::new(id, spec, t);
+        if t == self.now {
+            self.pending.push(id);
+            self.trace.push(TraceEvent::Submitted { id, t });
+            self.jobs.insert(id, job);
+            self.try_schedule();
+        } else {
+            job.state = JobState::Pending;
+            self.jobs.insert(id, job);
+            self.events.schedule(t, Ev::Schedule);
+            // Delayed submissions surface via a marker checked in run():
+            self.events.schedule(t, Ev::Finish(id, u32::MAX)); // sentinel, see run()
+        }
+        Ok(id)
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.jobs.get(&id)
+    }
+
+    pub fn jobs(&self) -> impl Iterator<Item = &Job> {
+        self.jobs.values()
+    }
+
+    pub fn n_idle(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_idle()).count()
+    }
+
+    /// Cluster utilization over `[0, now]`.
+    pub fn utilization(&self) -> f64 {
+        if self.now == 0 || self.nodes.is_empty() {
+            return 0.0;
+        }
+        let busy: SimTime = self
+            .nodes
+            .iter()
+            .map(|n| {
+                n.busy_secs
+                    + match n.state {
+                        NodeState::Busy(_) => self.now - n.since,
+                        _ => 0,
+                    }
+            })
+            .sum();
+        busy as f64 / (self.nodes.len() as u64 * self.now) as f64
+    }
+
+    /// Run until the event queue drains or `max_t` is reached.
+    pub fn run(&mut self, max_t: SimTime) {
+        while let Some(t_next) = self.events.peek_time() {
+            if t_next > max_t {
+                self.now = max_t;
+                return;
+            }
+            let (t, ev) = self.events.pop().unwrap();
+            self.now = t;
+            self.handle(ev);
+        }
+        // Queue drained before max_t: advance the clock to the requested
+        // horizon (bounded runs measure utilization over that window).
+        self.now = if max_t == SimTime::MAX {
+            self.now.max(
+                self.jobs
+                    .values()
+                    .filter_map(|j| j.end_time)
+                    .max()
+                    .unwrap_or(self.now),
+            )
+        } else {
+            max_t
+        };
+    }
+
+    /// True when every job reached a terminal state.
+    pub fn all_done(&self) -> bool {
+        self.jobs.values().all(|j| j.state.is_terminal())
+    }
+
+    // --- event handling -------------------------------------------------
+
+    fn handle(&mut self, ev: Ev) {
+        match ev {
+            Ev::Schedule => self.try_schedule(),
+            Ev::Finish(id, inc) if inc == u32::MAX => {
+                // Deferred-submission sentinel: move the job into pending.
+                if let Some(j) = self.jobs.get(&id) {
+                    if j.state == JobState::Pending && !self.pending.contains(&id) {
+                        self.pending.push(id);
+                        self.trace.push(TraceEvent::Submitted { id, t: self.now });
+                        self.try_schedule();
+                    }
+                }
+            }
+            Ev::Finish(id, inc) => self.on_finish(id, inc),
+            Ev::Limit(id, inc) => self.on_limit(id, inc),
+            Ev::PreSignal(id, inc) => self.on_presignal(id, inc),
+            Ev::Ckpt(id, inc) => self.on_ckpt(id, inc),
+            Ev::Reap(id, inc) => self.on_reap(id, inc),
+        }
+    }
+
+    fn live_incarnation(&self, id: JobId, inc: u32) -> bool {
+        self.jobs
+            .get(&id)
+            .map(|j| j.state == JobState::Running && j.requeues == inc)
+            .unwrap_or(false)
+    }
+
+    fn on_finish(&mut self, id: JobId, inc: u32) {
+        if !self.live_incarnation(id, inc) {
+            return;
+        }
+        let now = self.now;
+        let job = self.jobs.get_mut(&id).unwrap();
+        job.work_carried = job.spec.work_total;
+        job.state = JobState::Completed;
+        job.end_time = Some(now);
+        self.trace.push(TraceEvent::Finished { id, t: now });
+        self.release_nodes(id);
+        self.try_schedule();
+    }
+
+    fn on_limit(&mut self, id: JobId, inc: u32) {
+        if !self.live_incarnation(id, inc) {
+            return;
+        }
+        let now = self.now;
+        let overhead = self.inc_overhead(id);
+        let job = self.jobs.get_mut(&id).unwrap();
+        // If the job had CR+requeue it already checkpoint-requeued at the
+        // PreSignal; reaching Limit while still running means no C/R saved
+        // it: the incarnation's progress is lost.
+        let done = job.work_done(now, overhead);
+        let lost = done.saturating_sub(if job.spec.cr.restarts_from_ckpt() {
+            job.work_at_ckpt
+        } else {
+            0
+        });
+        if job.spec.requeue && job.spec.cr.restarts_from_ckpt() {
+            // Defensive path: requeue from the last periodic checkpoint.
+            job.work_lost += lost;
+            let carried = job.work_at_ckpt;
+            self.requeue(id, carried);
+        } else {
+            job.state = JobState::Timeout;
+            job.end_time = Some(now);
+            job.work_lost += done;
+            self.trace.push(TraceEvent::TimedOut { id, t: now, lost: done });
+            self.release_nodes(id);
+        }
+        self.try_schedule();
+    }
+
+    fn on_presignal(&mut self, id: JobId, inc: u32) {
+        if !self.live_incarnation(id, inc) {
+            return;
+        }
+        let now = self.now;
+        let overhead = self.inc_overhead(id);
+        let job = self.jobs.get_mut(&id).unwrap();
+        let signal = job.spec.signal.map(|(s, _)| s).unwrap_or(Signal::Usr1);
+        job.signal_log.push((now, signal));
+        self.trace.push(TraceEvent::Signaled { id, t: now, signal });
+
+        let job = self.jobs.get_mut(&id).unwrap();
+        match (job.spec.requeue, job.spec.cr) {
+            (true, CrMode::CheckpointRestart { overhead: ov, .. }) => {
+                // func_trap: checkpoint now, requeue with carried work.
+                let done = job.work_done(now, overhead);
+                job.work_at_ckpt = done;
+                job.checkpoints += 1;
+                self.trace.push(TraceEvent::Checkpointed { id, t: now, work: done });
+                // The checkpoint write occupies the node for `ov` seconds,
+                // then the job leaves the allocation.
+                let carried = done;
+                let _ = ov; // wall cost absorbed into the requeue instant
+                self.requeue(id, carried);
+                self.try_schedule();
+            }
+            (true, CrMode::CheckpointOnly { .. }) => {
+                // Images exist but are not used: requeue from scratch.
+                let done = job.work_done(now, overhead);
+                job.work_lost += done;
+                self.requeue(id, 0);
+                self.try_schedule();
+            }
+            _ => {
+                // Signal logged; the job runs on until Limit.
+            }
+        }
+    }
+
+    fn on_ckpt(&mut self, id: JobId, inc: u32) {
+        if !self.live_incarnation(id, inc) {
+            return;
+        }
+        let now = self.now;
+        *self.ckpts_this_inc.entry(id).or_insert(0) += 1;
+        let overhead = self.inc_overhead(id);
+        let job = self.jobs.get_mut(&id).unwrap();
+        let done = job.work_done(now, overhead);
+        job.work_at_ckpt = done;
+        job.checkpoints += 1;
+        self.trace.push(TraceEvent::Checkpointed { id, t: now, work: done });
+        // Next periodic checkpoint.
+        if let Some(iv) = job.spec.cr.interval() {
+            let inc = job.requeues;
+            self.events.schedule(now + iv, Ev::Ckpt(id, inc));
+        }
+    }
+
+    fn on_reap(&mut self, id: JobId, inc: u32) {
+        if !self.live_incarnation(id, inc) {
+            return;
+        }
+        let now = self.now;
+        let overhead = self.inc_overhead(id);
+        let grace = self
+            .jobs
+            .get(&id)
+            .and_then(|j| self.partitions.get(&j.spec.partition))
+            .map(|p| p.grace_period)
+            .unwrap_or(0);
+        let job = self.jobs.get_mut(&id).unwrap();
+        let done = job.work_done(now, overhead);
+        if job.spec.requeue && job.spec.cr.restarts_from_ckpt() && grace > 0 {
+            // The grace-period checkpoint (func_trap on SIGTERM) succeeded.
+            job.work_at_ckpt = done;
+            job.checkpoints += 1;
+            self.trace.push(TraceEvent::Checkpointed { id, t: now, work: done });
+            self.requeue(id, done);
+        } else if job.spec.requeue && job.spec.cr.restarts_from_ckpt() {
+            // No grace to checkpoint in (hard kill): recover from the last
+            // *periodic* checkpoint; the slice since then is lost — this
+            // is where the checkpoint interval matters (see the
+            // `ablation_interval` bench).
+            let carried = job.work_at_ckpt.min(done);
+            job.work_lost += done.saturating_sub(carried);
+            self.requeue(id, carried);
+        } else if job.spec.requeue {
+            let carried = 0;
+            job.work_lost += done;
+            self.requeue(id, carried);
+        } else {
+            job.state = JobState::Failed;
+            job.end_time = Some(now);
+            job.work_lost += done;
+            self.trace.push(TraceEvent::Failed { id, t: now, lost: done });
+            self.release_nodes(id);
+        }
+        self.try_schedule();
+    }
+
+    fn inc_overhead(&self, id: JobId) -> SimTime {
+        let count = self.ckpts_this_inc.get(&id).copied().unwrap_or(0) as u64;
+        self.jobs
+            .get(&id)
+            .map(|j| count * j.spec.cr.overhead())
+            .unwrap_or(0)
+    }
+
+    fn requeue(&mut self, id: JobId, carried: SimTime) {
+        let now = self.now;
+        let max = self.max_requeues;
+        let job = self.jobs.get_mut(&id).unwrap();
+        if job.requeues >= max {
+            // Requeue budget exhausted (site policy): fail the job rather
+            // than let a non-converging requeue loop starve the cluster.
+            let lost = job.work_done(now, 0).saturating_sub(carried) + carried;
+            job.state = JobState::Failed;
+            job.end_time = Some(now);
+            job.work_lost += lost.saturating_sub(carried);
+            self.trace.push(TraceEvent::Failed { id, t: now, lost });
+            self.release_nodes(id);
+            return;
+        }
+        job.state = JobState::Pending;
+        job.start_time = None;
+        job.work_carried = carried;
+        job.preempt_pending = false;
+        job.requeues += 1;
+        job.effective_limit = job.spec.time_limit;
+        // The paper's script updates the job comment with remaining time.
+        job.spec.comment = format!(
+            "remaining={}",
+            crate::util::format_hms(job.work_remaining())
+        );
+        self.ckpts_this_inc.remove(&id);
+        self.trace.push(TraceEvent::Requeued { id, t: now, carried });
+        self.release_nodes(id);
+        self.pending.push(id);
+    }
+
+    fn release_nodes(&mut self, id: JobId) {
+        let now = self.now;
+        let node_ids = self
+            .jobs
+            .get_mut(&id)
+            .map(|j| std::mem::take(&mut j.node_ids))
+            .unwrap_or_default();
+        for nid in node_ids {
+            self.nodes[nid].set_state(NodeState::Idle, now);
+        }
+    }
+
+    // --- scheduling -------------------------------------------------------
+
+    /// Release times of currently running jobs: `(t, nodes_freed)` sorted.
+    fn release_schedule(&self) -> Vec<(SimTime, usize)> {
+        let mut rel: Vec<(SimTime, usize)> = self
+            .jobs
+            .values()
+            .filter(|j| j.state == JobState::Running)
+            .map(|j| {
+                let end = j
+                    .start_time
+                    .map(|s| s + j.effective_limit)
+                    .unwrap_or(self.now);
+                (end, j.node_ids.len())
+            })
+            .collect();
+        rel.sort_unstable();
+        rel
+    }
+
+    /// Earliest time at which `want` nodes will be free.
+    fn reservation_time(&self, want: usize) -> SimTime {
+        let mut free = self.n_idle();
+        if free >= want {
+            return self.now;
+        }
+        for (t, n) in self.release_schedule() {
+            free += n;
+            if free >= want {
+                return t.max(self.now);
+            }
+        }
+        SimTime::MAX
+    }
+
+    fn priority_of(&self, id: JobId) -> (u32, SimTime, JobId) {
+        let j = &self.jobs[&id];
+        let p = self.partitions.get(&j.spec.partition).map(|p| p.priority).unwrap_or(0);
+        (p, j.submit_time, id)
+    }
+
+    fn idle_node_ids(&self, want: usize) -> Vec<usize> {
+        self.nodes
+            .iter()
+            .filter(|n| n.is_idle())
+            .take(want)
+            .map(|n| n.id)
+            .collect()
+    }
+
+    fn start_job(&mut self, id: JobId, limit: SimTime, backfilled: bool) {
+        let now = self.now;
+        let want = self.jobs[&id].spec.nodes as usize;
+        let node_ids = self.idle_node_ids(want);
+        assert_eq!(node_ids.len(), want, "start_job without enough idle nodes");
+        for &nid in &node_ids {
+            self.nodes[nid].set_state(NodeState::Busy(id), now);
+        }
+        self.ckpts_this_inc.remove(&id);
+        let job = self.jobs.get_mut(&id).unwrap();
+        job.state = JobState::Running;
+        job.start_time = Some(now);
+        job.effective_limit = limit;
+        job.node_ids = node_ids.clone();
+        let inc = job.requeues;
+
+        let need = wall_needed(job.work_remaining(), &job.spec.cr);
+        let spec_signal = job.spec.signal;
+        let cr_interval = job.spec.cr.interval();
+        self.trace.push(TraceEvent::Started { id, t: now, nodes: node_ids, limit, backfilled });
+
+        if need <= limit {
+            self.events.schedule(now + need, Ev::Finish(id, inc));
+        } else {
+            if let Some((_, off)) = spec_signal {
+                let at = now + limit.saturating_sub(off);
+                self.events.schedule(at, Ev::PreSignal(id, inc));
+            }
+            self.events.schedule(now + limit, Ev::Limit(id, inc));
+        }
+        if let Some(iv) = cr_interval {
+            if iv > 0 && iv < limit.min(need) {
+                self.events.schedule(now + iv, Ev::Ckpt(id, inc));
+            }
+        }
+    }
+
+    /// FIFO + EASY backfill + preemption pass.
+    fn try_schedule(&mut self) {
+        // Priority order: partition priority desc, then submit time, id.
+        let mut order: Vec<JobId> = self
+            .pending
+            .iter()
+            .copied()
+            .filter(|id| self.jobs[id].state == JobState::Pending)
+            .collect();
+        order.sort_by_key(|&id| {
+            let (p, t, i) = self.priority_of(id);
+            (std::cmp::Reverse(p), t, i)
+        });
+        self.pending = order.clone();
+
+        let mut reservation: Option<(SimTime, usize)> = None; // (time, head nodes)
+        let mut started = Vec::new();
+
+        for &id in &order {
+            let (want, limit, time_min, partition) = {
+                let j = &self.jobs[&id];
+                (
+                    j.spec.nodes as usize,
+                    j.spec.time_limit,
+                    j.spec.time_min,
+                    j.spec.partition.clone(),
+                )
+            };
+            let idle = self.n_idle();
+
+            if reservation.is_none() {
+                // Head-of-queue job.
+                if idle >= want {
+                    self.start_job(id, limit, false);
+                    started.push(id);
+                    continue;
+                }
+                // Try preemption for high-priority partitions. If initiated,
+                // reserve the head job's slot at the end of the victims'
+                // grace period so backfill does not re-fill the nodes the
+                // preemption is about to free.
+                if let Some(free_at) = self.try_preempt_for(id, want, &partition) {
+                    reservation = Some((free_at, want));
+                    continue;
+                }
+                let r = self.reservation_time(want);
+                reservation = Some((r, want));
+                continue;
+            }
+
+            // Backfill candidates behind the reservation.
+            let (r_time, _r_nodes) = reservation.unwrap();
+            if idle < want {
+                continue;
+            }
+            // Full-length fit before the reservation?
+            if self.now + limit <= r_time {
+                self.start_job(id, limit, true);
+                started.push(id);
+                continue;
+            }
+            // Shrink-to-fit within [time_min, window] (the paper:
+            // "seeking backfill opportunities within the job's specified
+            // time constraints").
+            if let Some(tmin) = time_min {
+                let window = r_time.saturating_sub(self.now);
+                if window >= tmin {
+                    self.start_job(id, window, true);
+                    started.push(id);
+                    continue;
+                }
+            }
+        }
+        self.pending.retain(|id| !started.contains(id));
+    }
+
+    /// Try to free `want` nodes for `id` by preempting lower-priority,
+    /// preemptable jobs. Returns the time the nodes will be free if
+    /// preemption was initiated.
+    fn try_preempt_for(&mut self, id: JobId, want: usize, partition: &str) -> Option<SimTime> {
+        let my_prio = match self.partitions.get(partition) {
+            Some(p) => p.priority,
+            None => return None,
+        };
+        let idle = self.n_idle();
+        if idle >= want {
+            return None;
+        }
+        let mut needed = want - idle;
+
+        // Victims: preemptable, lower priority, prefer most-recently started
+        // (least sunk work) — collected before mutating.
+        let mut victims: Vec<(SimTime, JobId, usize, SimTime)> = self
+            .jobs
+            .values()
+            .filter(|j| j.state == JobState::Running && !j.preempt_pending)
+            .filter(|j| {
+                self.partitions
+                    .get(&j.spec.partition)
+                    .map(|p| p.preemptable && p.priority < my_prio)
+                    .unwrap_or(false)
+            })
+            .map(|j| {
+                let grace = self
+                    .partitions
+                    .get(&j.spec.partition)
+                    .map(|p| p.grace_period)
+                    .unwrap_or(0);
+                (j.start_time.unwrap_or(0), j.id, j.node_ids.len(), grace)
+            })
+            .collect();
+        victims.sort_by_key(|&(start, vid, _, _)| (std::cmp::Reverse(start), vid));
+
+        let mut chosen = Vec::new();
+        for (_, vid, n, grace) in victims {
+            if needed == 0 {
+                break;
+            }
+            chosen.push((vid, grace));
+            needed = needed.saturating_sub(n);
+        }
+        if needed > 0 {
+            return None; // even preempting everything wouldn't fit
+        }
+        let now = self.now;
+        let mut free_at = now;
+        for (vid, grace) in chosen {
+            let job = self.jobs.get_mut(&vid).unwrap();
+            job.signal_log.push((now, Signal::Term));
+            job.preempt_pending = true;
+            self.trace.push(TraceEvent::Signaled { id: vid, t: now, signal: Signal::Term });
+            self.trace.push(TraceEvent::Preempted { id: vid, t: now, by: id });
+            let inc = self.jobs[&vid].requeues;
+            self.events.schedule(now + grace, Ev::Reap(vid, inc));
+            free_at = free_at.max(now + grace);
+        }
+        Some(free_at)
+    }
+
+    /// `squeue`-style listing.
+    pub fn squeue(&self) -> String {
+        let mut out = String::from(
+            "   JOBID  PARTITION      NAME ST       TIME  NODES COMMENT\n",
+        );
+        for j in self.jobs.values() {
+            if !j.state.is_terminal() {
+                out.push_str(&j.squeue_line(self.now));
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(n: usize) -> SlurmSim {
+        SlurmSim::new(n, Partition::standard_set())
+    }
+
+    fn basic_spec(work: SimTime, limit: SimTime) -> JobSpec {
+        JobSpec {
+            work_total: work,
+            time_limit: limit,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn single_job_completes() {
+        let mut s = sim(4);
+        let id = s.submit(basic_spec(600, 3_600)).unwrap();
+        s.run(SimTime::MAX);
+        let j = s.job(id).unwrap();
+        assert_eq!(j.state, JobState::Completed);
+        assert_eq!(j.end_time, Some(600));
+        assert_eq!(j.work_lost, 0);
+    }
+
+    #[test]
+    fn job_without_cr_times_out() {
+        let mut s = sim(1);
+        let id = s.submit(basic_spec(10_000, 3_600)).unwrap();
+        s.run(SimTime::MAX);
+        let j = s.job(id).unwrap();
+        assert_eq!(j.state, JobState::Timeout);
+        assert_eq!(j.work_lost, 3_600);
+    }
+
+    #[test]
+    fn cr_job_requeues_and_completes() {
+        let mut s = sim(1);
+        let spec = JobSpec {
+            work_total: 8_000,
+            time_limit: 3_600,
+            requeue: true,
+            signal: Some((Signal::Usr1, 120)),
+            cr: CrMode::CheckpointRestart { interval: 600, overhead: 10 },
+            ..Default::default()
+        };
+        let id = s.submit(spec).unwrap();
+        s.run(SimTime::MAX);
+        let j = s.job(id).unwrap();
+        assert_eq!(j.state, JobState::Completed, "trace: {:?}", s.trace);
+        assert!(j.requeues >= 2, "requeues={}", j.requeues);
+        assert!(j.checkpoints >= j.requeues);
+        // Work lost only to the slice between last ckpt and the signal —
+        // with signal-time checkpointing, nothing.
+        assert_eq!(j.work_lost, 0);
+        // USR1 was delivered before each limit.
+        assert!(j
+            .signal_log
+            .iter()
+            .filter(|(_, s)| *s == Signal::Usr1)
+            .count() >= 2);
+    }
+
+    #[test]
+    fn checkpoint_only_job_restarts_from_scratch() {
+        let mut s = sim(1);
+        let spec = JobSpec {
+            work_total: 5_000,
+            time_limit: 3_600,
+            requeue: true,
+            signal: Some((Signal::Usr1, 120)),
+            cr: CrMode::CheckpointOnly { interval: 600, overhead: 10 },
+            ..Default::default()
+        };
+        let id = s.submit(spec).unwrap();
+        // Run long enough to see it never converge quickly: each
+        // incarnation does (3600-120) wall - overheads and then loses it.
+        s.run(40_000);
+        let j = s.job(id).unwrap();
+        assert!(j.requeues >= 1);
+        assert!(j.work_lost > 0, "checkpoint-only must lose work on requeue");
+    }
+
+    #[test]
+    fn two_jobs_share_cluster_fifo() {
+        let mut s = sim(2);
+        let a = s.submit(JobSpec { nodes: 2, ..basic_spec(1_000, 3_600) }).unwrap();
+        let b = s.submit(JobSpec { nodes: 2, ..basic_spec(1_000, 3_600) }).unwrap();
+        s.run(SimTime::MAX);
+        let (ja, jb) = (s.job(a).unwrap(), s.job(b).unwrap());
+        assert_eq!(ja.end_time, Some(1_000));
+        assert_eq!(jb.start_time, Some(1_000), "FIFO order violated");
+        assert_eq!(jb.end_time, Some(2_000));
+    }
+
+    #[test]
+    fn backfill_fills_hole_without_delaying_head() {
+        let mut s = sim(4);
+        // A: occupies 3 nodes for 1000s.
+        let a = s.submit(JobSpec { nodes: 3, ..basic_spec(1_000, 1_000) }).unwrap();
+        // B (head of queue): needs all 4 -> reservation at t=1000.
+        let b = s.submit(JobSpec { nodes: 4, ..basic_spec(500, 3_600) }).unwrap();
+        // C: 1 node, 400s <= window -> backfills at t=0 on the idle node.
+        let c = s.submit(JobSpec { nodes: 1, ..basic_spec(400, 400) }).unwrap();
+        s.run(SimTime::MAX);
+        let (ja, jb, jc) = (s.job(a).unwrap(), s.job(b).unwrap(), s.job(c).unwrap());
+        assert_eq!(jc.start_time, Some(0), "C should backfill immediately");
+        assert_eq!(ja.end_time, Some(1_000));
+        assert_eq!(jb.start_time, Some(1_000), "backfill delayed the head job");
+        let started_backfilled = s.trace.iter().any(|e| matches!(e,
+            TraceEvent::Started { id, backfilled: true, .. } if *id == c));
+        assert!(started_backfilled);
+    }
+
+    #[test]
+    fn backfill_shrinks_to_time_min() {
+        let mut s = sim(2);
+        // A: 1 node busy until t=1000.
+        let _a = s.submit(JobSpec { nodes: 1, ..basic_spec(1_000, 1_000) }).unwrap();
+        // B: head, needs 2 nodes -> reserved at t=1000.
+        let _b = s.submit(JobSpec { nodes: 2, ..basic_spec(500, 3_600) }).unwrap();
+        // C: wants 2h but accepts >= 600s; window is 1000s -> shrunk start.
+        let c = s
+            .submit(JobSpec {
+                nodes: 1,
+                time_min: Some(600),
+                requeue: true,
+                signal: Some((Signal::Usr1, 100)),
+                cr: CrMode::CheckpointRestart { interval: 300, overhead: 5 },
+                ..basic_spec(5_000, 7_200)
+            })
+            .unwrap();
+        s.run(SimTime::MAX);
+        let jc = s.job(c).unwrap();
+        assert_eq!(jc.start_time.is_some(), true);
+        let started = s.trace.iter().find_map(|e| match e {
+            TraceEvent::Started { id, t, limit, backfilled, .. } if *id == c && *t == 0 => {
+                Some((*limit, *backfilled))
+            }
+            _ => None,
+        });
+        let (limit, backfilled) = started.expect("C did not start at t=0");
+        assert!(backfilled);
+        assert_eq!(limit, 1_000, "effective limit should shrink to the window");
+        assert_eq!(jc.state, JobState::Completed, "C/R must carry C to completion");
+    }
+
+    #[test]
+    fn realtime_preempts_preemptable() {
+        let mut s = sim(2);
+        // Fill the cluster with preemptable C/R work.
+        let low = s
+            .submit(JobSpec {
+                partition: "preempt".into(),
+                nodes: 2,
+                requeue: true,
+                cr: CrMode::CheckpointRestart { interval: 300, overhead: 5 },
+                ..basic_spec(10_000, 20_000)
+            })
+            .unwrap();
+        s.run(100); // let it start
+        assert_eq!(s.job(low).unwrap().state, JobState::Running);
+        // Urgent job arrives.
+        let hi = s
+            .submit(JobSpec {
+                partition: "realtime".into(),
+                nodes: 2,
+                ..basic_spec(600, 3_600)
+            })
+            .unwrap();
+        s.run(SimTime::MAX);
+        let (jl, jh) = (s.job(low).unwrap(), s.job(hi).unwrap());
+        assert_eq!(jh.state, JobState::Completed);
+        // Preempted job checkpointed in its grace period, requeued, resumed,
+        // and completed with zero loss.
+        assert_eq!(jl.state, JobState::Completed, "trace: {:?}", s.trace);
+        assert!(jl.requeues >= 1);
+        assert_eq!(jl.work_lost, 0);
+        assert!(jl.signal_log.iter().any(|(_, sig)| *sig == Signal::Term));
+        // The victim's grace delayed the urgent job by exactly grace_period.
+        assert!(jh.start_time.unwrap() >= 100);
+    }
+
+    #[test]
+    fn preempted_without_requeue_fails() {
+        let mut s = sim(1);
+        let low = s
+            .submit(JobSpec {
+                partition: "preempt".into(),
+                nodes: 1,
+                requeue: false,
+                ..basic_spec(10_000, 20_000)
+            })
+            .unwrap();
+        s.run(50);
+        let _hi = s
+            .submit(JobSpec {
+                partition: "realtime".into(),
+                nodes: 1,
+                ..basic_spec(100, 3_600)
+            })
+            .unwrap();
+        s.run(SimTime::MAX);
+        let jl = s.job(low).unwrap();
+        assert_eq!(jl.state, JobState::Failed);
+        assert!(jl.work_lost > 0);
+    }
+
+    #[test]
+    fn periodic_checkpoints_recorded() {
+        let mut s = sim(1);
+        let id = s
+            .submit(JobSpec {
+                cr: CrMode::CheckpointRestart { interval: 100, overhead: 2 },
+                ..basic_spec(1_000, 3_600)
+            })
+            .unwrap();
+        s.run(SimTime::MAX);
+        let j = s.job(id).unwrap();
+        assert_eq!(j.state, JobState::Completed);
+        assert!(j.checkpoints >= 9, "checkpoints={}", j.checkpoints);
+        // Overhead stretches wallclock: 1000 work + >=9 ckpts * 2s.
+        assert!(j.end_time.unwrap() >= 1_018);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let mut s = sim(2);
+        let _ = s.submit(JobSpec { nodes: 2, ..basic_spec(500, 3_600) }).unwrap();
+        s.run(1_000);
+        // 2 nodes busy 500s of 1000s elapsed = 0.5
+        let u = s.utilization();
+        assert!((u - 0.5).abs() < 0.01, "u={u}");
+    }
+
+    #[test]
+    fn deferred_submission() {
+        let mut s = sim(1);
+        let id = s.submit_at(basic_spec(100, 3_600), 500).unwrap();
+        s.run(SimTime::MAX);
+        let j = s.job(id).unwrap();
+        assert_eq!(j.start_time, Some(500));
+        assert_eq!(j.end_time, Some(600));
+    }
+
+    #[test]
+    fn invalid_submissions_rejected() {
+        let mut s = sim(2);
+        assert!(s
+            .submit(JobSpec { partition: "nope".into(), ..Default::default() })
+            .is_err());
+        assert!(s.submit(JobSpec { nodes: 5, ..Default::default() }).is_err());
+        assert!(s
+            .submit(JobSpec { time_limit: 999_999_999, ..Default::default() })
+            .is_err());
+    }
+
+    #[test]
+    fn wall_needed_fixed_point() {
+        assert_eq!(wall_needed(1_000, &CrMode::None), 1_000);
+        let cr = CrMode::CheckpointRestart { interval: 100, overhead: 10 };
+        let w = wall_needed(1_000, &cr);
+        // w = 1000 + floor(w/100)*10 -> w = 1110 (floor(1110/100) = 11)
+        assert_eq!(w, 1_110);
+        assert_eq!(w - (w / 100) * 10, 1_000, "wall minus overheads = work");
+    }
+}

@@ -1,0 +1,78 @@
+//! Batch-system signals and `--signal` directive parsing.
+
+use crate::error::{Error, Result};
+use crate::simclock::SimTime;
+
+/// The signals the batch system delivers to jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Signal {
+    /// Pre-timelimit / preemption warning (`scancel --signal=TERM`, or the
+    /// scheduler's grace-period notice).
+    Term,
+    /// User-requested pre-limit notification (`--signal=B:USR1@t`): the CR
+    /// module traps this to checkpoint + requeue.
+    Usr1,
+    /// Immediate termination (grace expired).
+    Kill,
+}
+
+impl Signal {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim_start_matches("SIG") {
+            "TERM" => Ok(Signal::Term),
+            "USR1" => Ok(Signal::Usr1),
+            "KILL" => Ok(Signal::Kill),
+            other => Err(Error::Slurm(format!("unknown signal {other:?}"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Signal::Term => "TERM",
+            Signal::Usr1 => "USR1",
+            Signal::Kill => "KILL",
+        }
+    }
+}
+
+/// Parse `--signal=[B:]SIG@offset` (offset in seconds before the limit).
+/// The `B:` prefix (signal only the batch shell) is accepted and ignored —
+/// our job model has a single recipient.
+pub fn parse_signal_directive(s: &str) -> Result<(Signal, SimTime)> {
+    let s = s.strip_prefix("B:").unwrap_or(s);
+    let (sig, off) = s
+        .split_once('@')
+        .ok_or_else(|| Error::Slurm(format!("--signal needs SIG@offset, got {s:?}")))?;
+    let signal = Signal::parse(sig)?;
+    let offset: SimTime = off
+        .parse()
+        .map_err(|_| Error::Slurm(format!("bad signal offset {off:?}")))?;
+    Ok((signal, offset))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Signal::parse("TERM").unwrap(), Signal::Term);
+        assert_eq!(Signal::parse("SIGUSR1").unwrap(), Signal::Usr1);
+        assert_eq!(Signal::parse("KILL").unwrap(), Signal::Kill);
+        assert!(Signal::parse("HUP").is_err());
+    }
+
+    #[test]
+    fn parse_directive_forms() {
+        assert_eq!(
+            parse_signal_directive("B:USR1@120").unwrap(),
+            (Signal::Usr1, 120)
+        );
+        assert_eq!(
+            parse_signal_directive("TERM@60").unwrap(),
+            (Signal::Term, 60)
+        );
+        assert!(parse_signal_directive("USR1").is_err());
+        assert!(parse_signal_directive("USR1@abc").is_err());
+    }
+}

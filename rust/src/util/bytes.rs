@@ -1,0 +1,203 @@
+//! Little-endian byte (de)serialization helpers for checkpoint images.
+//!
+//! Checkpoint images are raw memory dumps plus typed metadata; everything is
+//! little-endian on the wire/disk (DMTCP images are likewise
+//! host-endianness; we pin LE for cross-host restore determinism).
+
+use crate::error::{Error, Result};
+
+/// Append helpers over a growable buffer.
+pub trait PutBytes {
+    fn put_u8(&mut self, v: u8);
+    fn put_u32(&mut self, v: u32);
+    fn put_u64(&mut self, v: u64);
+    fn put_i64(&mut self, v: i64);
+    fn put_f64(&mut self, v: f64);
+    fn put_bytes(&mut self, v: &[u8]);
+    /// Length-prefixed (u32) byte string.
+    fn put_lp_bytes(&mut self, v: &[u8]);
+    /// Length-prefixed UTF-8 string.
+    fn put_lp_str(&mut self, v: &str) {
+        self.put_lp_bytes(v.as_bytes());
+    }
+}
+
+impl PutBytes for Vec<u8> {
+    fn put_u8(&mut self, v: u8) {
+        self.push(v);
+    }
+    fn put_u32(&mut self, v: u32) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_u64(&mut self, v: u64) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_i64(&mut self, v: i64) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_f64(&mut self, v: f64) {
+        self.extend_from_slice(&v.to_le_bytes());
+    }
+    fn put_bytes(&mut self, v: &[u8]) {
+        self.extend_from_slice(v);
+    }
+    fn put_lp_bytes(&mut self, v: &[u8]) {
+        self.put_u32(v.len() as u32);
+        self.extend_from_slice(v);
+    }
+}
+
+/// Cursor-style reader over a byte slice with range checks.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Image(format!(
+                "truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn get_lp_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_u32()? as usize;
+        self.take(n)
+    }
+
+    pub fn get_lp_str(&mut self) -> Result<String> {
+        let b = self.get_lp_bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|e| Error::Image(format!("bad utf8: {e}")))
+    }
+}
+
+/// Reinterpret a `&[f32]` as little-endian bytes (copy).
+pub fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Reinterpret little-endian bytes as `Vec<f32>`.
+pub fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    if b.len() % 4 != 0 {
+        return Err(Error::Image(format!("f32 blob length {} not /4", b.len())));
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Reinterpret a `&[u32]` as little-endian bytes (copy).
+pub fn u32s_to_bytes(v: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Reinterpret little-endian bytes as `Vec<u32>`.
+pub fn bytes_to_u32s(b: &[u8]) -> Result<Vec<u32>> {
+    if b.len() % 4 != 0 {
+        return Err(Error::Image(format!("u32 blob length {} not /4", b.len())));
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut buf = Vec::new();
+        buf.put_u8(7);
+        buf.put_u32(0xDEAD_BEEF);
+        buf.put_u64(u64::MAX - 1);
+        buf.put_i64(-42);
+        buf.put_f64(3.25);
+        buf.put_lp_str("hello");
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_i64().unwrap(), -42);
+        assert_eq!(r.get_f64().unwrap(), 3.25);
+        assert_eq!(r.get_lp_str().unwrap(), "hello");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let mut buf = Vec::new();
+        buf.put_u32(10);
+        let mut r = ByteReader::new(&buf[..2]);
+        assert!(r.get_u32().is_err());
+    }
+
+    #[test]
+    fn lp_bytes_truncation_detected() {
+        let mut buf = Vec::new();
+        buf.put_lp_bytes(&[1, 2, 3, 4, 5]);
+        let mut r = ByteReader::new(&buf[..6]);
+        assert!(r.get_lp_bytes().is_err());
+    }
+
+    #[test]
+    fn f32_u32_blobs() {
+        let f = vec![1.0f32, -2.5, 3.25e-9];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&f)).unwrap(), f);
+        let u = vec![0u32, 1, u32::MAX];
+        assert_eq!(bytes_to_u32s(&u32s_to_bytes(&u)).unwrap(), u);
+        assert!(bytes_to_f32s(&[0, 1, 2]).is_err());
+        assert!(bytes_to_u32s(&[0, 1, 2]).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Human-readable walltime formatting, Slurm-style.
+//!
+//! The paper's job script "converts execution time into a human-readable
+//! format [and calculates] the remaining time for job scheduling"; these are
+//! those conversions, matching `sbatch --time` syntax:
+//! `MM`, `MM:SS`, `HH:MM:SS`, `D-HH`, `D-HH:MM`, `D-HH:MM:SS`.
+
+use crate::error::{Error, Result};
+
+/// Format seconds as `[D-]HH:MM:SS` (Slurm `squeue`-style).
+pub fn format_hms(total_secs: u64) -> String {
+    let days = total_secs / 86_400;
+    let h = (total_secs % 86_400) / 3_600;
+    let m = (total_secs % 3_600) / 60;
+    let s = total_secs % 60;
+    if days > 0 {
+        format!("{days}-{h:02}:{m:02}:{s:02}")
+    } else {
+        format!("{h:02}:{m:02}:{s:02}")
+    }
+}
+
+/// Parse a Slurm walltime string into seconds.
+pub fn parse_hms(s: &str) -> Result<u64> {
+    let bad = || Error::Slurm(format!("invalid time spec: {s:?}"));
+    let s = s.trim();
+    if s.is_empty() {
+        return Err(bad());
+    }
+    let (days, rest) = match s.split_once('-') {
+        Some((d, rest)) => (d.parse::<u64>().map_err(|_| bad())?, rest),
+        None => (0, s),
+    };
+    let parts: Vec<&str> = rest.split(':').collect();
+    let nums: Vec<u64> = parts
+        .iter()
+        .map(|p| p.parse::<u64>().map_err(|_| bad()))
+        .collect::<Result<_>>()?;
+    let secs = if days > 0 {
+        // D-HH, D-HH:MM, D-HH:MM:SS
+        match nums.as_slice() {
+            [h] => h * 3_600,
+            [h, m] => h * 3_600 + m * 60,
+            [h, m, sec] => h * 3_600 + m * 60 + sec,
+            _ => return Err(bad()),
+        }
+    } else {
+        // MM, MM:SS, HH:MM:SS
+        match nums.as_slice() {
+            [m] => m * 60,
+            [m, sec] => m * 60 + sec,
+            [h, m, sec] => h * 3_600 + m * 60 + sec,
+            _ => return Err(bad()),
+        }
+    };
+    Ok(days * 86_400 + secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert_eq!(format_hms(0), "00:00:00");
+        assert_eq!(format_hms(59), "00:00:59");
+        assert_eq!(format_hms(3_661), "01:01:01");
+        assert_eq!(format_hms(86_400 + 3_600), "1-01:00:00");
+    }
+
+    #[test]
+    fn parses_slurm_forms() {
+        assert_eq!(parse_hms("30").unwrap(), 1_800); // 30 minutes
+        assert_eq!(parse_hms("30:15").unwrap(), 1_815); // MM:SS
+        assert_eq!(parse_hms("02:00:00").unwrap(), 7_200);
+        assert_eq!(parse_hms("1-12").unwrap(), 86_400 + 12 * 3_600);
+        assert_eq!(parse_hms("1-12:30").unwrap(), 86_400 + 12 * 3_600 + 1_800);
+        assert_eq!(parse_hms("2-00:00:30").unwrap(), 2 * 86_400 + 30);
+    }
+
+    #[test]
+    fn roundtrip() {
+        for secs in [0, 1, 60, 3_599, 3_600, 86_399, 86_400, 200_000] {
+            assert_eq!(parse_hms(&format_hms(secs)).unwrap(), secs);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        for s in ["", "abc", "1:2:3:4", "-5", "1-"] {
+            assert!(parse_hms(s).is_err(), "{s:?} should fail");
+        }
+    }
+}

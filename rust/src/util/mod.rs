@@ -1,0 +1,14 @@
+//! Small shared utilities: deterministic RNG, human-readable durations,
+//! byte helpers, and an in-repo property-testing harness.
+//!
+//! The offline build environment only carries the `xla` crate's vendored
+//! dependency closure, so `rand`/`proptest`/`humantime` are reimplemented
+//! here at the small scale this crate needs.
+
+pub mod bytes;
+pub mod humantime;
+pub mod proptest_lite;
+pub mod rng;
+
+pub use humantime::{format_hms, parse_hms};
+pub use rng::SplitMix64;

@@ -1,0 +1,137 @@
+//! A minimal property-based testing harness.
+//!
+//! `proptest` is not in the offline dependency closure, so this module
+//! provides the 10% of it this crate needs: seeded random case generation,
+//! a configurable number of cases, and first-failure reporting with the
+//! case's seed so it can be replayed by pinning `PROPTEST_LITE_SEED`.
+//!
+//! ```no_run
+//! use nersc_cr::util::proptest_lite::{run_cases, Gen};
+//! run_cases("my invariant", 100, |g: &mut Gen| {
+//!     let xs = g.vec_u64(0..50, 0..1000);
+//!     let mut sorted = xs.clone();
+//!     sorted.sort_unstable();
+//!     assert_eq!(sorted.len(), xs.len());
+//! });
+//! ```
+
+use std::ops::Range;
+
+use crate::util::rng::SplitMix64;
+
+/// Per-case random value source handed to the property body.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Case index (0-based) — handy for logging.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform u64 in `range`.
+    pub fn u64_in(&mut self, range: Range<u64>) -> u64 {
+        debug_assert!(range.end > range.start);
+        range.start + self.rng.gen_range(range.end - range.start)
+    }
+
+    /// Uniform usize in `range`.
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        self.u64_in(range.start as u64..range.end as u64) as usize
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.gen_f64(lo, hi)
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize_in(0..xs.len())]
+    }
+
+    /// Vector of uniform u64s; length drawn from `len`, values from `vals`.
+    pub fn vec_u64(&mut self, len: Range<usize>, vals: Range<u64>) -> Vec<u64> {
+        let n = self.usize_in(len.start..len.end.max(len.start + 1));
+        (0..n).map(|_| self.u64_in(vals.clone())).collect()
+    }
+
+    /// Vector of random bytes.
+    pub fn bytes(&mut self, len: Range<usize>) -> Vec<u8> {
+        let n = self.usize_in(len.start..len.end.max(len.start + 1));
+        (0..n).map(|_| self.rng.next_u32() as u8).collect()
+    }
+
+    /// ASCII identifier-ish string (for names, paths, tags).
+    pub fn ident(&mut self, len: Range<usize>) -> String {
+        const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_-";
+        let n = self.usize_in(len.start..len.end.max(len.start + 1));
+        (0..n)
+            .map(|_| CHARS[self.usize_in(0..CHARS.len())] as char)
+            .collect()
+    }
+
+    /// Access the underlying stream (for custom distributions).
+    pub fn rng(&mut self) -> &mut SplitMix64 {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random cases of `body`. Panics (re-raising the property's
+/// panic) on the first failing case with its replay seed.
+pub fn run_cases<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut body: F) {
+    let base_seed = std::env::var("PROPTEST_LITE_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FF_EE00_D15E_A5E5);
+    let mut master = SplitMix64::new(base_seed);
+    for case in 0..cases {
+        let case_seed = master.next_u64();
+        let mut g = Gen {
+            rng: SplitMix64::new(case_seed),
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(&mut g)));
+        if let Err(payload) = result {
+            eprintln!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (replay: PROPTEST_LITE_SEED={base_seed}, case seed {case_seed})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        run_cases("count", 25, |_g| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        run_cases("ranges", 50, |g| {
+            assert!(g.u64_in(5..10) >= 5 && g.u64_in(5..10) < 10);
+            let v = g.vec_u64(1..4, 0..100);
+            assert!(!v.is_empty() && v.len() < 4);
+            let s = g.ident(3..8);
+            assert!(s.len() >= 3 && s.len() < 8);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failure_propagates() {
+        run_cases("fails", 10, |g| {
+            assert!(g.u64_in(0..100) > 1000, "always fails");
+        });
+    }
+}

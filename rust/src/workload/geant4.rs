@@ -1,0 +1,184 @@
+//! Geant4-analog application layer: versions, materials, physics tables.
+//!
+//! The paper exercises C/R across "Geant4 versions, namely 10.5, 10.7 and
+//! 11.0". For the transport engine a "version" is a revision of the
+//! physics tables: successive releases retuned cross-sections by a few
+//! percent. Versions therefore produce *different but individually
+//! deterministic* results — exactly the property the robustness matrix
+//! needs (a restarted 10.7 run must bitwise-match an uninterrupted 10.7
+//! run, while 10.5 and 11.0 runs legitimately differ).
+
+use crate::runtime::state::StaticInputs;
+
+/// Geant4 release analogs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum G4Version {
+    V10_5,
+    V10_7,
+    V11_0,
+}
+
+impl G4Version {
+    pub fn label(&self) -> &'static str {
+        match self {
+            G4Version::V10_5 => "10.5",
+            G4Version::V10_7 => "10.7",
+            G4Version::V11_0 => "11.0",
+        }
+    }
+
+    pub fn all() -> [G4Version; 3] {
+        [G4Version::V10_5, G4Version::V10_7, G4Version::V11_0]
+    }
+
+    /// Per-release retuning of `(sigma_scale, absorption_scale)`.
+    pub fn physics_revision(&self) -> (f32, f32) {
+        match self {
+            G4Version::V10_5 => (1.00, 1.00),
+            G4Version::V10_7 => (1.03, 0.97), // FTFP_BERT retune
+            G4Version::V11_0 => (0.98, 1.05), // new evaluated data
+        }
+    }
+}
+
+/// The material catalog shared by all workloads (index = grid value).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Material {
+    /// Near-vacuum / air gap.
+    Air = 0,
+    /// Water (phantom bulk, moderator).
+    Water = 1,
+    /// Lead (EM absorber).
+    Lead = 2,
+    /// Plastic scintillator (sandwich active layers).
+    Scintillator = 3,
+    /// Polyethylene (neutron moderator).
+    Polyethylene = 4,
+    /// He-3 proportional-counter gas.
+    He3 = 5,
+    /// High-purity germanium crystal.
+    Germanium = 6,
+    /// Tungsten (collimator / dense absorber).
+    Tungsten = 7,
+}
+
+pub const N_MATERIALS: usize = 8;
+
+impl Material {
+    pub fn all() -> [Material; N_MATERIALS] {
+        [
+            Material::Air,
+            Material::Water,
+            Material::Lead,
+            Material::Scintillator,
+            Material::Polyethylene,
+            Material::He3,
+            Material::Germanium,
+            Material::Tungsten,
+        ]
+    }
+
+    /// Base cross-section row `(s0, s1, f_abs, f_loss, g)`:
+    /// `sigma(E) = s0 + s1/sqrt(E)` [1/length], absorption fraction,
+    /// energy-loss fraction per scatter, scattering anisotropy.
+    pub fn xs_row(&self) -> [f32; 5] {
+        match self {
+            Material::Air => [0.002, 0.0005, 0.05, 0.02, 0.1],
+            Material::Water => [0.30, 0.12, 0.12, 0.35, 0.45],
+            Material::Lead => [0.85, 0.10, 0.55, 0.55, 0.70],
+            Material::Scintillator => [0.25, 0.08, 0.10, 0.30, 0.40],
+            Material::Polyethylene => [0.45, 0.30, 0.08, 0.45, 0.30],
+            Material::He3 => [0.08, 0.60, 0.85, 0.90, 0.05],
+            Material::Germanium => [0.60, 0.15, 0.60, 0.60, 0.60],
+            Material::Tungsten => [1.00, 0.12, 0.60, 0.60, 0.75],
+        }
+    }
+}
+
+/// Build the `[M,6]` cross-section table for one Geant4 version.
+pub fn xs_table(version: G4Version) -> Vec<f32> {
+    let (sig, abs) = version.physics_revision();
+    let mut xs = Vec::with_capacity(N_MATERIALS * 6);
+    for m in Material::all() {
+        let [s0, s1, fa, fl, g] = m.xs_row();
+        xs.extend_from_slice(&[
+            s0 * sig,
+            s1 * sig,
+            (fa * abs).min(0.95),
+            fl,
+            g,
+            0.0, // pad
+        ]);
+    }
+    xs
+}
+
+/// World/physics parameters shared by all workloads.
+pub fn standard_params(grid_d: usize) -> [f32; 8] {
+    [
+        1.0,            // voxel_size
+        1.0,            // 1/voxel_size
+        0.01,           // e_cut (MeV)
+        2.0,            // max_step (voxel units)
+        grid_d as f32,  // D
+        0.0, 0.0, 0.0,  // pad
+    ]
+}
+
+/// Assemble [`StaticInputs`] from a material grid and version.
+pub fn static_inputs(grid: Vec<i32>, grid_d: usize, version: G4Version) -> StaticInputs {
+    StaticInputs {
+        grid,
+        xs: xs_table(version),
+        params: standard_params(grid_d),
+        n_mat: N_MATERIALS,
+        grid_d,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xs_table_shape_and_ranges() {
+        for v in G4Version::all() {
+            let xs = xs_table(v);
+            assert_eq!(xs.len(), N_MATERIALS * 6);
+            for m in 0..N_MATERIALS {
+                let row = &xs[m * 6..m * 6 + 6];
+                assert!(row[0] > 0.0, "s0 must be positive");
+                assert!((0.0..=0.95).contains(&row[2]), "f_abs out of range");
+                assert!((0.0..=1.0).contains(&row[3]), "f_loss out of range");
+                assert!((0.0..1.0).contains(&row[4]), "g out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn versions_differ_but_are_deterministic() {
+        let a = xs_table(G4Version::V10_5);
+        let b = xs_table(G4Version::V10_7);
+        let c = xs_table(G4Version::V11_0);
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert_eq!(xs_table(G4Version::V10_7), b);
+    }
+
+    #[test]
+    fn he3_is_absorber_poly_is_moderator() {
+        let he3 = Material::He3.xs_row();
+        let poly = Material::Polyethylene.xs_row();
+        assert!(he3[2] > 0.8, "He-3 must capture");
+        assert!(he3[1] > poly[1], "He-3 capture is 1/v dominated");
+        assert!(poly[3] > 0.3, "poly must moderate (high energy loss)");
+        assert!(poly[2] < 0.1, "poly must not absorb much");
+    }
+
+    #[test]
+    fn static_inputs_validate() {
+        let d = 8;
+        let si = static_inputs(vec![0; d * d * d], d, G4Version::V10_7);
+        assert!(si.validate(d, N_MATERIALS).is_ok());
+    }
+}

@@ -1,0 +1,22 @@
+//! The Geant4-analog application layer.
+//!
+//! Everything the paper ran under checkpoint-restart, rebuilt on the
+//! transport engine: release-versioned physics tables ([`geant4`]), the
+//! nine §VI evaluation workloads ([`workloads`]), calibration-source
+//! spectra ([`spectra`]), detector readout ([`detector`]), and the
+//! checkpointable state + worker loop that connect the compute to the
+//! DMTCP layer ([`state`]).
+
+pub mod cp2k;
+pub mod detector;
+pub mod geant4;
+pub mod spectra;
+pub mod state;
+pub mod workloads;
+
+pub use cp2k::{Cp2kScratchPlugin, Cp2kState};
+pub use detector::{reading, DetectorReading};
+pub use geant4::{static_inputs, xs_table, G4Version, Material, N_MATERIALS};
+pub use spectra::{Beam, GammaIsotope, NeutronSource};
+pub use state::{transport_worker, G4App, G4SimState};
+pub use workloads::{SourceKind, Workload, WorkloadKind};

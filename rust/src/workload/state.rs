@@ -1,0 +1,256 @@
+//! Checkpointable simulation state + the worker-thread transport loop.
+//!
+//! [`G4SimState`] is the bridge between the three layers: it owns a
+//! [`ParticleState`] (whose tensors the PJRT engine advances), carries the
+//! run metadata, and implements [`Checkpointable`] so the DMTCP layer can
+//! serialize it into images. Because the transport RNG is counter-based
+//! and part of the state, checkpoint → kill → restart → run-to-completion
+//! is bit-identical to an uninterrupted run.
+
+use std::sync::{Arc, Mutex};
+
+use crate::dmtcp::process::{Checkpointable, GateVerdict, WorkerCtx};
+use crate::error::{Error, Result};
+use crate::runtime::state::{ParticleState, StaticInputs};
+use crate::runtime::ComputeHandle;
+use crate::util::rng::SplitMix64;
+use crate::workload::geant4::{static_inputs, G4Version};
+use crate::workload::workloads::{Workload, WorkloadKind};
+
+/// The application state of one Geant4-analog process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct G4SimState {
+    pub particles: ParticleState,
+    /// Steps to run in total.
+    pub target_steps: u64,
+    /// Workload label (consistency check on restore).
+    pub workload_label: String,
+    /// Version label (consistency check on restore).
+    pub version_label: String,
+}
+
+impl G4SimState {
+    pub fn done(&self) -> bool {
+        self.particles.steps_done >= self.target_steps
+    }
+
+    /// Fraction of requested steps completed.
+    pub fn progress(&self) -> f64 {
+        self.particles.steps_done as f64 / self.target_steps.max(1) as f64
+    }
+}
+
+impl Checkpointable for G4SimState {
+    fn segments(&self) -> Vec<(String, Vec<u8>)> {
+        let mut segs = self.particles.to_segments();
+        let mut meta = Vec::new();
+        meta.extend_from_slice(&self.target_steps.to_le_bytes());
+        segs.push(("target_steps".into(), meta));
+        segs.push(("workload".into(), self.workload_label.as_bytes().to_vec()));
+        segs.push(("version".into(), self.version_label.as_bytes().to_vec()));
+        segs
+    }
+
+    fn restore(&mut self, segments: &[(String, Vec<u8>)]) -> Result<()> {
+        self.particles = ParticleState::from_segments(segments)?;
+        for (name, data) in segments {
+            match name.as_str() {
+                "target_steps" => {
+                    if data.len() != 8 {
+                        return Err(Error::Image("bad target_steps segment".into()));
+                    }
+                    self.target_steps = u64::from_le_bytes(data.as_slice().try_into().unwrap());
+                }
+                "workload" => {
+                    let label = String::from_utf8_lossy(data).into_owned();
+                    if !self.workload_label.is_empty() && self.workload_label != label {
+                        return Err(Error::Image(format!(
+                            "image is for workload {label:?}, process expects {:?}",
+                            self.workload_label
+                        )));
+                    }
+                    self.workload_label = label;
+                }
+                "version" => {
+                    self.version_label = String::from_utf8_lossy(data).into_owned();
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.particles.steps_done
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.particles.size_bytes() + 64
+    }
+}
+
+/// A fully assembled application: workload geometry + physics version +
+/// static inputs, ready to mint states and drive workers.
+pub struct G4App {
+    pub kind: WorkloadKind,
+    pub version: G4Version,
+    pub workload: Workload,
+    pub si: Arc<StaticInputs>,
+}
+
+impl G4App {
+    /// Build for the artifact dimensions `(grid_d from the manifest)`.
+    pub fn build(kind: WorkloadKind, version: G4Version, grid_d: usize) -> Self {
+        let workload = Workload::build(kind, grid_d);
+        let si = Arc::new(static_inputs(workload.grid.clone(), grid_d, version));
+        Self {
+            kind,
+            version,
+            workload,
+            si,
+        }
+    }
+
+    /// Mint a fresh simulation state (batch size from the manifest).
+    pub fn fresh_state(&self, batch: usize, target_steps: u64, seed: u64) -> G4SimState {
+        let n_vox = self.si.grid.len();
+        let origin = self.workload.source_origin;
+        let source = self.workload.source;
+        let mut energy_rng = SplitMix64::new(seed ^ 0x5EED_F00D);
+        let particles = ParticleState::from_source(batch, n_vox, origin, seed, |_| {
+            source.sample_energy(&mut energy_rng)
+        });
+        G4SimState {
+            particles,
+            target_steps,
+            workload_label: self.kind.label(),
+            version_label: self.version.label().to_string(),
+        }
+    }
+
+    /// An empty shell state for `dmtcp_restart` to restore into.
+    pub fn shell_state(&self) -> G4SimState {
+        G4SimState {
+            particles: ParticleState {
+                pos: Vec::new(),
+                dcos: Vec::new(),
+                energy: Vec::new(),
+                weight: Vec::new(),
+                alive: Vec::new(),
+                rng: Vec::new(),
+                edep: Vec::new(),
+                steps_done: 0,
+            },
+            target_steps: 0,
+            workload_label: self.kind.label(),
+            version_label: self.version.label().to_string(),
+        }
+    }
+}
+
+/// The user-thread body: advance the transport between checkpoint
+/// safe-points until the target step count is reached (or the process is
+/// killed). `scans_per_quantum` controls the work quantum between
+/// safe-points (one scan = `manifest.scan_steps` kernel steps).
+pub fn transport_worker(
+    ctx: WorkerCtx,
+    handle: ComputeHandle,
+    state: Arc<Mutex<G4SimState>>,
+    si: Arc<StaticInputs>,
+    scans_per_quantum: u32,
+) {
+    loop {
+        if ctx.ckpt_point() == GateVerdict::Exit {
+            return;
+        }
+        // Take the state out, advance it on the engine, put it back.
+        let (particles, remaining_scans) = {
+            let s = state.lock().expect("sim state poisoned");
+            if s.done() {
+                return;
+            }
+            let steps_left = s.target_steps - s.particles.steps_done;
+            let scan_steps = handle.manifest().scan_steps as u64;
+            let scans = steps_left.div_ceil(scan_steps).min(scans_per_quantum as u64);
+            (s.particles.clone(), scans as u32)
+        };
+        let t0 = std::time::Instant::now();
+        match handle.scan(particles, &si, remaining_scans) {
+            Ok(advanced) => {
+                let mut s = state.lock().expect("sim state poisoned");
+                s.particles = advanced;
+                let (steps, bytes) = (s.particles.steps_done, s.size_bytes() as u64);
+                drop(s);
+                ctx.record_busy(t0.elapsed().as_nanos() as u64);
+                ctx.record_steps(steps);
+                ctx.record_state_bytes(bytes);
+            }
+            Err(e) => {
+                // Engine loss is fatal for the worker (the coordinator
+                // will requeue the job; state is intact at the last ckpt).
+                log::error!("transport worker: engine error: {e}");
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spectra::NeutronSource;
+
+    fn app() -> G4App {
+        G4App::build(
+            WorkloadKind::NeutronHe3(NeutronSource::Cf252),
+            G4Version::V10_7,
+            16,
+        )
+    }
+
+    #[test]
+    fn fresh_state_deterministic() {
+        let a = app().fresh_state(128, 100, 42);
+        let b = app().fresh_state(128, 100, 42);
+        assert_eq!(a, b);
+        let c = app().fresh_state(128, 100, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn segments_roundtrip() {
+        let s = app().fresh_state(64, 500, 7);
+        let segs = s.segments();
+        let mut shell = app().shell_state();
+        shell.restore(&segs).unwrap();
+        assert_eq!(s, shell);
+    }
+
+    #[test]
+    fn restore_rejects_wrong_workload() {
+        let s = app().fresh_state(64, 500, 7);
+        let segs = s.segments();
+        let other = G4App::build(WorkloadKind::WaterPhantom, G4Version::V10_7, 16);
+        let mut shell = other.shell_state();
+        let err = shell.restore(&segs).unwrap_err();
+        assert!(err.to_string().contains("workload"));
+    }
+
+    #[test]
+    fn source_energies_match_spectrum() {
+        let s = app().fresh_state(4096, 1, 3);
+        let mean: f32 =
+            s.particles.energy.iter().sum::<f32>() / s.particles.energy.len() as f32;
+        // Cf-252 mean ≈ 2.1 MeV
+        assert!((1.0..3.5).contains(&mean), "mean energy {mean}");
+    }
+
+    #[test]
+    fn progress_and_done() {
+        let mut s = app().fresh_state(16, 100, 1);
+        assert!(!s.done());
+        s.particles.steps_done = 100;
+        assert!(s.done());
+        assert_eq!(s.progress(), 1.0);
+    }
+}

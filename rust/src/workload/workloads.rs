@@ -1,0 +1,265 @@
+//! The nine evaluation workloads of the paper's §VI, as voxel geometries +
+//! sources + detector ROIs.
+//!
+//! "electromagnetic (EM) calorimeter arrays, hadron sandwich calorimeters,
+//! and specialized water phantom simulations designed for voxel
+//! geometries ... neutron measurement ... AmLi, AmBe, and Cf-252 ...
+//! a Helium-3 proportional counter ... gamma emissions from various
+//! isotopes, including Na-22, K-40, and Co-60, employing High Purity
+//! Germanium (HPGe) detectors".
+
+use crate::util::rng::SplitMix64;
+use crate::workload::geant4::Material;
+use crate::workload::spectra::{Beam, GammaIsotope, NeutronSource};
+
+/// The evaluation-matrix workloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WorkloadKind {
+    /// EM calorimeter array: PbWO4-like crystal block behind an air gap.
+    EmCalorimeter,
+    /// Hadron sandwich calorimeter: alternating absorber/scintillator.
+    HadronSandwich,
+    /// Water phantom with voxel dosimetry (medical).
+    WaterPhantom,
+    /// Neutron source in a polyethylene moderator with a He-3 counter.
+    NeutronHe3(NeutronSource),
+    /// Gamma isotope viewed by an HPGe crystal.
+    GammaHpge(GammaIsotope),
+}
+
+impl WorkloadKind {
+    pub fn label(&self) -> String {
+        match self {
+            WorkloadKind::EmCalorimeter => "em-calorimeter".into(),
+            WorkloadKind::HadronSandwich => "hadron-sandwich".into(),
+            WorkloadKind::WaterPhantom => "water-phantom".into(),
+            WorkloadKind::NeutronHe3(s) => format!("neutron-he3-{}", s.label()),
+            WorkloadKind::GammaHpge(i) => format!("gamma-hpge-{}", i.label()),
+        }
+    }
+
+    /// The full §VI evaluation matrix (9 workloads).
+    pub fn all() -> Vec<WorkloadKind> {
+        let mut v = vec![
+            WorkloadKind::EmCalorimeter,
+            WorkloadKind::HadronSandwich,
+            WorkloadKind::WaterPhantom,
+        ];
+        v.extend(NeutronSource::all().map(WorkloadKind::NeutronHe3));
+        v.extend(GammaIsotope::all().map(WorkloadKind::GammaHpge));
+        v
+    }
+}
+
+/// A fully built workload: geometry + source + detector ROI.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub kind: WorkloadKind,
+    /// Flattened `D^3` material-index grid.
+    pub grid: Vec<i32>,
+    /// Detector region-of-interest mask (`D^3`, 0/1).
+    pub roi: Vec<f32>,
+    /// Source position (world units).
+    pub source_origin: [f32; 3],
+    /// Source energy sampler.
+    pub source: SourceKind,
+}
+
+/// Type-erased energy source.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SourceKind {
+    Beam(Beam),
+    Neutron(NeutronSource),
+    Gamma(GammaIsotope),
+}
+
+impl SourceKind {
+    pub fn sample_energy(&self, rng: &mut SplitMix64) -> f32 {
+        match self {
+            SourceKind::Beam(b) => b.sample_energy(rng),
+            SourceKind::Neutron(s) => s.sample_energy(rng),
+            SourceKind::Gamma(g) => g.sample_energy(rng),
+        }
+    }
+}
+
+/// Flat index helper.
+fn at(d: usize, x: usize, y: usize, z: usize) -> usize {
+    (x * d + y) * d + z
+}
+
+impl Workload {
+    /// Build a workload's geometry on a `d^3` grid.
+    pub fn build(kind: WorkloadKind, d: usize) -> Workload {
+        assert!(d >= 8, "grid too small for the geometries");
+        let c = d / 2;
+        let mut grid = vec![Material::Air as i32; d * d * d];
+        let mut roi = vec![0.0f32; d * d * d];
+        let source_origin;
+        let source;
+
+        match kind {
+            WorkloadKind::EmCalorimeter => {
+                // Crystal block (lead analog) occupying the downstream 2/3,
+                // beam entering from the upstream face. ROI = the block.
+                for x in 0..d {
+                    for y in 0..d {
+                        for z in d / 3..d {
+                            grid[at(d, x, y, z)] = Material::Lead as i32;
+                            roi[at(d, x, y, z)] = 1.0;
+                        }
+                    }
+                }
+                source_origin = [c as f32, c as f32, 1.5];
+                source = SourceKind::Beam(Beam { energy_mev: 150.0, spread: 0.02 });
+            }
+            WorkloadKind::HadronSandwich => {
+                // Alternating absorber/scintillator slabs along z; ROI =
+                // the active (scintillator) layers.
+                for z in d / 4..d {
+                    let mat = if (z / 2) % 2 == 0 {
+                        Material::Tungsten
+                    } else {
+                        Material::Scintillator
+                    };
+                    for x in 0..d {
+                        for y in 0..d {
+                            grid[at(d, x, y, z)] = mat as i32;
+                            if mat == Material::Scintillator {
+                                roi[at(d, x, y, z)] = 1.0;
+                            }
+                        }
+                    }
+                }
+                source_origin = [c as f32, c as f32, 1.5];
+                source = SourceKind::Beam(Beam { energy_mev: 300.0, spread: 0.05 });
+            }
+            WorkloadKind::WaterPhantom => {
+                // Uniform water bulk; ROI = a dose voxel column on the beam
+                // axis (depth-dose).
+                for i in grid.iter_mut() {
+                    *i = Material::Water as i32;
+                }
+                for z in 0..d {
+                    roi[at(d, c, c, z)] = 1.0;
+                }
+                source_origin = [c as f32, c as f32, 0.5];
+                source = SourceKind::Beam(Beam { energy_mev: 50.0, spread: 0.01 });
+            }
+            WorkloadKind::NeutronHe3(src) => {
+                // Polyethylene moderator sphere around the source, He-3
+                // tube offset in +x; ROI = the tube.
+                let r_mod = (d as f32) * 0.30;
+                for x in 0..d {
+                    for y in 0..d {
+                        for z in 0..d {
+                            let dx = x as f32 - c as f32;
+                            let dy = y as f32 - c as f32;
+                            let dz = z as f32 - c as f32;
+                            if (dx * dx + dy * dy + dz * dz).sqrt() < r_mod {
+                                grid[at(d, x, y, z)] = Material::Polyethylene as i32;
+                            }
+                        }
+                    }
+                }
+                // Tube embedded at the moderator boundary (thermalized
+                // neutrons leak into it), spanning a d/2 column.
+                let tube_x = (c as f32 + r_mod) as usize;
+                for y in c.saturating_sub(2)..=(c + 2).min(d - 1) {
+                    for z in d / 4..(3 * d) / 4 {
+                        for x in tube_x.saturating_sub(1)..(tube_x + 2).min(d) {
+                            grid[at(d, x, y, z)] = Material::He3 as i32;
+                            roi[at(d, x, y, z)] = 1.0;
+                        }
+                    }
+                }
+                source_origin = [c as f32, c as f32, c as f32];
+                source = SourceKind::Neutron(src);
+            }
+            WorkloadKind::GammaHpge(iso) => {
+                // HPGe crystal block offset from a bare point source.
+                let gx0 = (d * 5) / 8;
+                let gx1 = (d * 7) / 8;
+                for x in gx0..gx1 {
+                    for y in d / 3..(2 * d) / 3 {
+                        for z in d / 3..(2 * d) / 3 {
+                            grid[at(d, x, y, z)] = Material::Germanium as i32;
+                            roi[at(d, x, y, z)] = 1.0;
+                        }
+                    }
+                }
+                source_origin = [(d / 8) as f32, c as f32, c as f32];
+                source = SourceKind::Gamma(iso);
+            }
+        }
+
+        Workload {
+            kind,
+            grid,
+            roi,
+            source_origin,
+            source,
+        }
+    }
+
+    /// Voxels inside the detector ROI.
+    pub fn roi_voxels(&self) -> usize {
+        self.roi.iter().filter(|&&v| v > 0.5).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_nine_workloads_build() {
+        let all = WorkloadKind::all();
+        assert_eq!(all.len(), 9);
+        for kind in all {
+            let w = Workload::build(kind, 16);
+            assert_eq!(w.grid.len(), 16 * 16 * 16);
+            assert!(w.roi_voxels() > 0, "{kind:?} has an empty ROI");
+            // Source must sit inside the world.
+            for c in w.source_origin {
+                assert!((0.0..16.0).contains(&c), "{kind:?} source outside world");
+            }
+            // Labels unique.
+        }
+        let labels: std::collections::HashSet<String> =
+            WorkloadKind::all().iter().map(|k| k.label()).collect();
+        assert_eq!(labels.len(), 9);
+    }
+
+    #[test]
+    fn water_phantom_is_all_water() {
+        let w = Workload::build(WorkloadKind::WaterPhantom, 16);
+        assert!(w.grid.iter().all(|&m| m == Material::Water as i32));
+    }
+
+    #[test]
+    fn sandwich_alternates() {
+        let w = Workload::build(WorkloadKind::HadronSandwich, 16);
+        let mats: std::collections::HashSet<i32> = w.grid.iter().copied().collect();
+        assert!(mats.contains(&(Material::Tungsten as i32)));
+        assert!(mats.contains(&(Material::Scintillator as i32)));
+    }
+
+    #[test]
+    fn he3_roi_is_he3_material() {
+        let w = Workload::build(WorkloadKind::NeutronHe3(NeutronSource::Cf252), 16);
+        for (i, &r) in w.roi.iter().enumerate() {
+            if r > 0.5 {
+                assert_eq!(w.grid[i], Material::He3 as i32, "ROI voxel {i} not He-3");
+            }
+        }
+    }
+
+    #[test]
+    fn geometry_deterministic() {
+        let a = Workload::build(WorkloadKind::EmCalorimeter, 16);
+        let b = Workload::build(WorkloadKind::EmCalorimeter, 16);
+        assert_eq!(a.grid, b.grid);
+        assert_eq!(a.roi, b.roi);
+    }
+}

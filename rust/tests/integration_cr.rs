@@ -1,0 +1,450 @@
+//! End-to-end DMTCP-analog integration: coordinator + processes over real
+//! TCP sockets; checkpoint barriers; kill (preemption); restart from image;
+//! and the keystone invariant — an interrupted-and-restarted computation
+//! produces results bit-identical to an uninterrupted one.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use nersc_cr::dmtcp::{
+    dmtcp_launch, dmtcp_restart, inspect_image, Checkpointable, Coordinator, CoordinatorConfig,
+    DmtcpCommand, GateVerdict, LaunchSpec, PluginRegistry, TimerPlugin,
+};
+use nersc_cr::error::Result;
+use nersc_cr::util::bytes::{bytes_to_u32s, u32s_to_bytes};
+
+/// A deterministic toy computation: an LCG chain over a vector. Cheap,
+/// bit-reproducible, and any lost or duplicated step changes the digest.
+#[derive(Debug, Clone, PartialEq)]
+struct ChainState {
+    values: Vec<u32>,
+    steps: u64,
+    target_steps: u64,
+}
+
+impl ChainState {
+    fn new(n: usize, target_steps: u64) -> Self {
+        Self {
+            values: (0..n as u32).collect(),
+            steps: 0,
+            target_steps,
+        }
+    }
+
+    fn advance(&mut self) {
+        for v in self.values.iter_mut() {
+            *v = v.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+        }
+        self.steps += 1;
+    }
+
+    fn digest(&self) -> u32 {
+        self.values.iter().fold(0u32, |acc, &v| acc ^ v.rotate_left(7))
+    }
+
+    fn done(&self) -> bool {
+        self.steps >= self.target_steps
+    }
+}
+
+impl Checkpointable for ChainState {
+    fn segments(&self) -> Vec<(String, Vec<u8>)> {
+        let mut meta = Vec::new();
+        meta.extend_from_slice(&self.steps.to_le_bytes());
+        meta.extend_from_slice(&self.target_steps.to_le_bytes());
+        vec![
+            ("values".into(), u32s_to_bytes(&self.values)),
+            ("meta".into(), meta),
+        ]
+    }
+
+    fn restore(&mut self, segments: &[(String, Vec<u8>)]) -> Result<()> {
+        for (name, data) in segments {
+            match name.as_str() {
+                "values" => self.values = bytes_to_u32s(data)?,
+                "meta" => {
+                    self.steps = u64::from_le_bytes(data[0..8].try_into().unwrap());
+                    self.target_steps = u64::from_le_bytes(data[8..16].try_into().unwrap());
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.steps
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.values.len() * 4 + 16
+    }
+}
+
+fn test_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ncr_it_{}_{}", tag, std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn coord_config(tag: &str) -> CoordinatorConfig {
+    CoordinatorConfig {
+        ckpt_dir: test_dir(tag).join("ckpt"),
+        command_file_dir: test_dir(tag),
+        ..Default::default()
+    }
+}
+
+/// Spawn one worker thread advancing the shared chain plus `extra_threads`
+/// idling companions (to exercise multi-thread suspend barriers).
+fn spawn_chain_workers(
+    launched: &mut nersc_cr::dmtcp::LaunchedProcess,
+    state: Arc<Mutex<ChainState>>,
+    extra_threads: usize,
+) {
+    {
+        let state = Arc::clone(&state);
+        launched.process.spawn_user_thread(move |ctx| loop {
+            if ctx.ckpt_point() == GateVerdict::Exit {
+                break;
+            }
+            let mut s = state.lock().unwrap();
+            if s.done() {
+                break;
+            }
+            s.advance();
+            let (steps, bytes) = (s.steps, s.size_bytes() as u64);
+            drop(s);
+            ctx.record_steps(steps);
+            ctx.record_state_bytes(bytes);
+            std::thread::sleep(Duration::from_micros(50));
+        });
+    }
+    for _ in 0..extra_threads {
+        let state = Arc::clone(&state);
+        launched.process.spawn_user_thread(move |ctx| loop {
+            if ctx.ckpt_point() == GateVerdict::Exit {
+                break;
+            }
+            if state.lock().unwrap().done() {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(30));
+        });
+    }
+}
+
+/// Uninterrupted reference digest.
+fn reference_digest(n: usize, steps: u64) -> u32 {
+    let mut s = ChainState::new(n, steps);
+    while !s.done() {
+        s.advance();
+    }
+    s.digest()
+}
+
+#[test]
+fn checkpoint_and_continue() {
+    let coord = Coordinator::start(coord_config("cont")).unwrap();
+    let state = Arc::new(Mutex::new(ChainState::new(256, 2_000)));
+    let mut launched = dmtcp_launch(
+        LaunchSpec::new("chain", coord.addr()),
+        Arc::clone(&state),
+        PluginRegistry::new(),
+    );
+    spawn_chain_workers(&mut launched, Arc::clone(&state), 2);
+    launched.wait_attached(Duration::from_secs(5)).unwrap();
+
+    // A few checkpoint rounds while the app keeps running.
+    let mut last_steps = 0;
+    for round in 0..3 {
+        std::thread::sleep(Duration::from_millis(30));
+        let images = coord.checkpoint_all().unwrap();
+        assert_eq!(images.len(), 1, "round {round}");
+        let hdr = inspect_image(&images[0].path).unwrap();
+        assert_eq!(hdr.name, "chain");
+        assert!(hdr.steps_done >= last_steps, "progress went backwards");
+        last_steps = hdr.steps_done;
+        assert!(images[0].stored_bytes > 0);
+        assert!(images[0].raw_bytes >= 256 * 4);
+    }
+
+    // Let the app finish; digest must equal the uninterrupted reference.
+    let process = launched.join();
+    assert_eq!(state.lock().unwrap().digest(), reference_digest(256, 2_000));
+    assert_eq!(process.stats.checkpoints.load(Ordering::Relaxed), 3);
+    drop(coord);
+}
+
+#[test]
+fn preempt_restart_bitwise_identical() {
+    let dir = test_dir("restart");
+    let coord = Coordinator::start(coord_config("restart")).unwrap();
+
+    // --- first incarnation -------------------------------------------------
+    let state = Arc::new(Mutex::new(ChainState::new(512, 5_000)));
+    let mut launched = dmtcp_launch(
+        LaunchSpec::new("g4sim", coord.addr()),
+        Arc::clone(&state),
+        PluginRegistry::new(),
+    );
+    spawn_chain_workers(&mut launched, Arc::clone(&state), 1);
+    launched.wait_attached(Duration::from_secs(5)).unwrap();
+
+    std::thread::sleep(Duration::from_millis(40));
+    let images = coord.checkpoint_all().unwrap();
+    let image_path = images[0].path.clone();
+    let ckpt_steps = inspect_image(&image_path).unwrap().steps_done;
+    assert!(ckpt_steps > 0, "checkpoint caught no progress");
+    assert!(
+        ckpt_steps < 5_000,
+        "app finished before preemption — slow down the test"
+    );
+
+    // Preempt: kill all, join threads (simulates SIGTERM + node loss).
+    coord.kill_all();
+    let _ = launched.join();
+
+    // --- restart (fresh coordinator: new job, possibly new node) ----------
+    let coord2 = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: dir.join("ckpt2"),
+        command_file_dir: dir.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+    let state2 = Arc::new(Mutex::new(ChainState::new(1, 1))); // overwritten by restore
+    let restarted = dmtcp_restart(
+        &image_path,
+        coord2.addr(),
+        Arc::clone(&state2),
+        PluginRegistry::new(),
+    )
+    .unwrap();
+    assert_eq!(restarted.header.steps_done, ckpt_steps);
+    // Restored under the original virtual pid, at the next generation.
+    let mut launched2 = restarted.launched;
+    let vpid2 = launched2.wait_attached(Duration::from_secs(5)).unwrap();
+    assert_eq!(vpid2, restarted.header.vpid);
+    assert_eq!(launched2.process.generation, 1);
+    {
+        let s = state2.lock().unwrap();
+        assert_eq!(s.steps, ckpt_steps, "state resumed at checkpoint step");
+        assert_eq!(s.target_steps, 5_000);
+    }
+    // Env captured the restart markers.
+    assert_eq!(
+        launched2.process.env.lock().unwrap().get("DMTCP_RESTART"),
+        Some(&"1".to_string())
+    );
+
+    spawn_chain_workers(&mut launched2, Arc::clone(&state2), 1);
+    let _ = launched2.join();
+
+    // Keystone: identical to the uninterrupted run, bit for bit.
+    assert_eq!(state2.lock().unwrap().digest(), reference_digest(512, 5_000));
+    drop(coord2);
+}
+
+#[test]
+fn multiple_processes_one_coordinator() {
+    let coord = Coordinator::start(coord_config("multi")).unwrap();
+    let mut launches = Vec::new();
+    let mut states = Vec::new();
+    for i in 0..3 {
+        let state = Arc::new(Mutex::new(ChainState::new(64 + i * 16, 100_000)));
+        let mut l = dmtcp_launch(
+            LaunchSpec::new(format!("w{i}"), coord.addr()),
+            Arc::clone(&state),
+            PluginRegistry::new(),
+        );
+        spawn_chain_workers(&mut l, Arc::clone(&state), 0);
+        states.push(state);
+        launches.push(l);
+    }
+    for l in &launches {
+        l.wait_attached(Duration::from_secs(5)).unwrap();
+    }
+    assert_eq!(coord.num_clients(), 3);
+
+    // Barrier across all three: one image each, distinct vpids.
+    let images = coord.checkpoint_all().unwrap();
+    assert_eq!(images.len(), 3);
+    let mut vpids: Vec<u64> = images.iter().map(|i| i.vpid).collect();
+    vpids.sort_unstable();
+    vpids.dedup();
+    assert_eq!(vpids.len(), 3);
+
+    // All-or-nothing: every image is readable and from the same round.
+    for img in &images {
+        let hdr = inspect_image(&img.path).unwrap();
+        assert_eq!(hdr.ckpt_id, images[0].ckpt_id);
+    }
+
+    coord.kill_all();
+    for l in launches {
+        let _ = l.join();
+    }
+}
+
+#[test]
+fn dmtcp_command_checkpoint_and_status() {
+    let dir = test_dir("cmd");
+    let coord = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: dir.join("ckpt"),
+        command_file_dir: dir.clone(),
+        jobid: Some("424242".into()),
+        ..Default::default()
+    })
+    .unwrap();
+    let cmdfile = coord.command_file().unwrap().to_path_buf();
+    assert!(cmdfile.ends_with("dmtcp_command.424242"));
+
+    let state = Arc::new(Mutex::new(ChainState::new(128, 1_000_000)));
+    let mut launched = dmtcp_launch(
+        LaunchSpec::new("cmdapp", coord.addr()),
+        Arc::clone(&state),
+        PluginRegistry::new(),
+    );
+    spawn_chain_workers(&mut launched, Arc::clone(&state), 0);
+    launched.wait_attached(Duration::from_secs(5)).unwrap();
+
+    // Drive everything through the rendezvous file, like a job script.
+    let cmd = DmtcpCommand::from_command_file(&cmdfile).unwrap();
+    let st = cmd.status().unwrap();
+    assert_eq!(st.clients, 1);
+    assert_eq!(st.last_ckpt_id, 0);
+
+    let ck = cmd.checkpoint().unwrap();
+    assert_eq!(ck.images, 1);
+    assert!(ck.total_stored_bytes > 0);
+
+    let st2 = cmd.status().unwrap();
+    assert_eq!(st2.last_ckpt_id, ck.ckpt_id);
+
+    cmd.quit().unwrap();
+    let _ = launched.join(); // killed by quit
+}
+
+#[test]
+fn timer_plugin_survives_restart() {
+    let coord = Coordinator::start(coord_config("timer")).unwrap();
+    let state = Arc::new(Mutex::new(ChainState::new(32, 1_000_000)));
+    let mut plugins = PluginRegistry::new();
+    plugins.register(Box::new(TimerPlugin::new()));
+    let mut launched = dmtcp_launch(
+        LaunchSpec::new("timed", coord.addr()),
+        Arc::clone(&state),
+        plugins,
+    );
+    spawn_chain_workers(&mut launched, Arc::clone(&state), 0);
+    launched.wait_attached(Duration::from_secs(5)).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+
+    let images = coord.checkpoint_all().unwrap();
+    let hdr = inspect_image(&images[0].path).unwrap();
+    assert!(
+        hdr.plugin_records.contains_key("timer"),
+        "timer record missing: {:?}",
+        hdr.plugin_records.keys().collect::<Vec<_>>()
+    );
+    coord.kill_all();
+    let _ = launched.join();
+
+    // Restart with a fresh TimerPlugin: it must pick up accumulated time.
+    let coord2 = Coordinator::start(coord_config("timer2")).unwrap();
+    let state2 = Arc::new(Mutex::new(ChainState::new(1, 1)));
+    let mut plugins2 = PluginRegistry::new();
+    plugins2.register(Box::new(TimerPlugin::new()));
+    let restarted = dmtcp_restart(
+        &images[0].path,
+        coord2.addr(),
+        Arc::clone(&state2),
+        plugins2,
+    )
+    .unwrap();
+    let launched2 = restarted.launched;
+    launched2.wait_attached(Duration::from_secs(5)).unwrap();
+    coord2.kill_all();
+    let _ = launched2.join();
+}
+
+#[test]
+fn checkpoint_with_no_clients_fails() {
+    let coord = Coordinator::start(coord_config("empty")).unwrap();
+    assert!(coord.checkpoint_all().is_err());
+}
+
+#[test]
+fn two_independent_coordinators() {
+    // "support for multiple coordinators ... independent, parallel
+    // checkpointing processes"
+    let c1 = Coordinator::start(coord_config("par1")).unwrap();
+    let c2 = Coordinator::start(coord_config("par2")).unwrap();
+    assert_ne!(c1.addr(), c2.addr());
+
+    let mk = |coord: &Coordinator, name: &str| {
+        let state = Arc::new(Mutex::new(ChainState::new(64, 1_000_000)));
+        let mut l = dmtcp_launch(
+            LaunchSpec::new(name, coord.addr()),
+            Arc::clone(&state),
+            PluginRegistry::new(),
+        );
+        spawn_chain_workers(&mut l, Arc::clone(&state), 0);
+        l.wait_attached(Duration::from_secs(5)).unwrap();
+        l
+    };
+    let l1 = mk(&c1, "a");
+    let l2 = mk(&c2, "b");
+
+    assert_eq!(c1.checkpoint_all().unwrap().len(), 1);
+    assert_eq!(c2.checkpoint_all().unwrap().len(), 1);
+    assert_eq!(c1.num_clients(), 1);
+    assert_eq!(c2.num_clients(), 1);
+
+    c1.kill_all();
+    c2.kill_all();
+    let _ = l1.join();
+    let _ = l2.join();
+}
+
+#[test]
+fn env_is_captured_in_image() {
+    let coord = Coordinator::start(coord_config("env")).unwrap();
+    let state = Arc::new(Mutex::new(ChainState::new(16, 1_000_000)));
+    let spec = LaunchSpec::new("envapp", coord.addr())
+        .env("G4VERSION", "10.7")
+        .env("WORKLOAD", "em_calorimeter");
+    let mut launched = dmtcp_launch(spec, Arc::clone(&state), PluginRegistry::new());
+    spawn_chain_workers(&mut launched, Arc::clone(&state), 0);
+    launched.wait_attached(Duration::from_secs(5)).unwrap();
+
+    let images = coord.checkpoint_all().unwrap();
+    let hdr = inspect_image(&images[0].path).unwrap();
+    let mut want = BTreeMap::new();
+    want.insert("G4VERSION".to_string(), "10.7".to_string());
+    want.insert("WORKLOAD".to_string(), "em_calorimeter".to_string());
+    assert_eq!(hdr.env, want);
+
+    coord.kill_all();
+    let _ = launched.join();
+}
+
+#[test]
+fn uncompressed_images_work_too() {
+    let coord = Coordinator::start(coord_config("nogzip")).unwrap();
+    let state = Arc::new(Mutex::new(ChainState::new(64, 1_000_000)));
+    let spec = LaunchSpec::new("plain", coord.addr()).env("DMTCP_GZIP", "0");
+    let mut launched = dmtcp_launch(spec, Arc::clone(&state), PluginRegistry::new());
+    spawn_chain_workers(&mut launched, Arc::clone(&state), 0);
+    launched.wait_attached(Duration::from_secs(5)).unwrap();
+
+    let images = coord.checkpoint_all().unwrap();
+    // Uncompressed: stored >= raw (header + framing on top of raw bytes).
+    assert!(images[0].stored_bytes >= images[0].raw_bytes);
+    assert!(inspect_image(&images[0].path).is_ok());
+
+    coord.kill_all();
+    let _ = launched.join();
+}

@@ -1,0 +1,459 @@
+//! Failure injection and multi-rank ensembles: the resilience corners the
+//! paper claims ("enhances fault tolerance and the system's ability to
+//! recover from coordinator failures", "multi-threaded and distributed
+//! applications").
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use nersc_cr::cr::{latest_images, start_coordinator, CrConfig};
+use nersc_cr::dmtcp::{
+    dmtcp_launch, dmtcp_restart, Checkpointable, Coordinator, CoordinatorConfig, GateVerdict,
+    LaunchSpec, ManaState, PluginRegistry,
+};
+use nersc_cr::runtime::service;
+use nersc_cr::workload::{
+    transport_worker, Cp2kScratchPlugin, Cp2kState, G4App, G4Version, WorkloadKind,
+};
+
+fn workdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ncr_fail_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn corrupt_image_is_rejected_on_restart() {
+    let h = service::shared().unwrap();
+    let wd = workdir("corrupt");
+    let cfg = CrConfig::new("500100", &wd);
+    let (coord, _env) = start_coordinator(&cfg).unwrap();
+    let app = G4App::build(WorkloadKind::WaterPhantom, G4Version::V10_7, h.manifest().grid_d);
+    let state = Arc::new(Mutex::new(app.fresh_state(h.manifest().batch, 1_000_000, 5)));
+    let mut launched = dmtcp_launch(
+        LaunchSpec::new("victim", coord.addr()),
+        Arc::clone(&state),
+        PluginRegistry::new(),
+    );
+    {
+        let (st, hh, si) = (Arc::clone(&state), h.clone(), Arc::clone(&app.si));
+        launched
+            .process
+            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
+    }
+    launched.wait_attached(Duration::from_secs(5)).unwrap();
+    coord.checkpoint_all().unwrap();
+    coord.kill_all();
+    let _ = launched.join();
+
+    // Flip a byte mid-file.
+    let image = latest_images(&cfg.ckpt_dir).unwrap().pop().unwrap();
+    let mut bytes = std::fs::read(&image).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&image, &bytes).unwrap();
+
+    let coord2 = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: wd.join("c2"),
+        command_file_dir: wd.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+    let shell = Arc::new(Mutex::new(app.shell_state()));
+    let err = match dmtcp_restart(&image, coord2.addr(), shell, PluginRegistry::new()) {
+        Err(e) => e,
+        Ok(_) => panic!("corrupt image accepted"),
+    };
+    assert!(err.to_string().contains("CRC"), "wrong error: {err}");
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn coordinator_loss_kills_workers_cleanly() {
+    // If the coordinator dies, the computation can no longer be
+    // checkpointed; our ckpt threads treat the lost link as a kill so the
+    // batch layer can requeue from the last image. The key property:
+    // worker threads exit rather than hang.
+    let h = service::shared().unwrap();
+    let wd = workdir("coordloss");
+    let mut coord = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: wd.join("ckpt"),
+        command_file_dir: wd.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+    let app = G4App::build(WorkloadKind::EmCalorimeter, G4Version::V10_5, h.manifest().grid_d);
+    let state = Arc::new(Mutex::new(app.fresh_state(h.manifest().batch, 1_000_000, 6)));
+    let mut launched = dmtcp_launch(
+        LaunchSpec::new("orphan", coord.addr()),
+        Arc::clone(&state),
+        PluginRegistry::new(),
+    );
+    {
+        let (st, hh, si) = (Arc::clone(&state), h.clone(), Arc::clone(&app.si));
+        launched
+            .process
+            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
+    }
+    launched.wait_attached(Duration::from_secs(5)).unwrap();
+
+    // Coordinator crashes (shutdown closes all sockets).
+    coord.shutdown();
+    drop(coord);
+
+    // Workers must exit; join must not hang.
+    let t0 = std::time::Instant::now();
+    let process = launched.join();
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "workers hung after coordinator loss"
+    );
+    assert!(process.gate.killed());
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn client_vanishing_mid_barrier_fails_round_not_coordinator() {
+    // One client dies during the barrier: the round errors, the
+    // coordinator survives, and the remaining client checkpoints fine.
+    struct Sluggish {
+        data: Vec<u8>,
+        die_on_capture: bool,
+    }
+    impl Checkpointable for Sluggish {
+        fn segments(&self) -> Vec<(String, Vec<u8>)> {
+            if self.die_on_capture {
+                // Simulate the process crashing inside the checkpoint
+                // phase: the panic kills the ckpt thread -> disconnect.
+                panic!("process crashed during checkpoint");
+            }
+            vec![("d".into(), self.data.clone())]
+        }
+        fn restore(&mut self, segs: &[(String, Vec<u8>)]) -> nersc_cr::Result<()> {
+            self.data = segs[0].1.clone();
+            Ok(())
+        }
+    }
+
+    let wd = workdir("vanish");
+    let coord = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: wd.join("ckpt"),
+        command_file_dir: wd.clone(),
+        phase_timeout: Duration::from_secs(5),
+        ..Default::default()
+    })
+    .unwrap();
+
+    let good_state = Arc::new(Mutex::new(Sluggish { data: vec![1; 64], die_on_capture: false }));
+    let good = dmtcp_launch(
+        LaunchSpec::new("good", coord.addr()),
+        Arc::clone(&good_state),
+        PluginRegistry::new(),
+    );
+    good.wait_attached(Duration::from_secs(5)).unwrap();
+    let bad_state = Arc::new(Mutex::new(Sluggish { data: vec![2; 64], die_on_capture: true }));
+    let bad = dmtcp_launch(
+        LaunchSpec::new("bad", coord.addr()),
+        Arc::clone(&bad_state),
+        PluginRegistry::new(),
+    );
+    bad.wait_attached(Duration::from_secs(5)).unwrap();
+    assert_eq!(coord.num_clients(), 2);
+
+    // The round must fail (bad client dies at Checkpoint), not hang.
+    let res = coord.checkpoint_all();
+    assert!(res.is_err(), "round should fail when a client dies");
+
+    // The coordinator is still serviceable for the surviving client.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while coord.num_clients() > 1 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(coord.num_clients(), 1, "dead client not reaped");
+    let images = coord.checkpoint_all().expect("survivor checkpoint");
+    assert_eq!(images.len(), 1);
+
+    coord.kill_all();
+    let _ = good.join();
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn multi_rank_ensemble_preempt_restart_bitwise() {
+    // An "MPI job": 4 ranks of one campaign under one coordinator, each a
+    // distinct seed shard. Checkpoint all (one barrier -> 4 images), kill
+    // all, restart all, finish — merged scoring must be bit-identical to
+    // four uninterrupted runs.
+    let h = service::shared().unwrap();
+    let m = h.manifest().clone();
+    let wd = workdir("ensemble");
+    let app = Arc::new(G4App::build(
+        WorkloadKind::HadronSandwich,
+        G4Version::V10_7,
+        m.grid_d,
+    ));
+    let target = 48 * m.scan_steps as u64;
+    let n_ranks = 4u64;
+
+    let cfg = CrConfig::new("600100", &wd);
+    let (coord, _env) = start_coordinator(&cfg).unwrap();
+    let mut launches = Vec::new();
+    for rank in 0..n_ranks {
+        let state = Arc::new(Mutex::new(app.fresh_state(m.batch, target, 7_000 + rank)));
+        let mut l = dmtcp_launch(
+            LaunchSpec::new(format!("rank{rank}"), coord.addr()),
+            Arc::clone(&state),
+            PluginRegistry::new(),
+        );
+        let (st, hh, si) = (Arc::clone(&state), h.clone(), Arc::clone(&app.si));
+        l.process
+            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
+        l.wait_attached(Duration::from_secs(5)).unwrap();
+        launches.push((l, state));
+    }
+
+    // Let all ranks make progress, then barrier-checkpoint the ensemble.
+    loop {
+        let min_steps = launches
+            .iter()
+            .map(|(_, s)| s.lock().unwrap().particles.steps_done)
+            .min()
+            .unwrap();
+        if min_steps > 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let images = coord.checkpoint_all().unwrap();
+    assert_eq!(images.len(), n_ranks as usize);
+    coord.kill_all();
+    for (l, _) in launches {
+        let _ = l.join();
+    }
+
+    // Restart the whole ensemble on a fresh coordinator.
+    let cfg2 = CrConfig::new("600101", &wd);
+    let (coord2, _env) = start_coordinator(&cfg2).unwrap();
+    let mut restarted = Vec::new();
+    for img in &images {
+        let state = Arc::new(Mutex::new(app.shell_state()));
+        let r = dmtcp_restart(&img.path, coord2.addr(), Arc::clone(&state), PluginRegistry::new())
+            .unwrap();
+        let mut l = r.launched;
+        l.wait_attached(Duration::from_secs(5)).unwrap();
+        let (st, hh, si) = (Arc::clone(&state), h.clone(), Arc::clone(&app.si));
+        l.process
+            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
+        restarted.push((l, state));
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(120);
+    loop {
+        if restarted.iter().all(|(_, s)| s.lock().unwrap().done()) {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "ensemble did not finish");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    coord2.kill_all();
+
+    // Merge edep across ranks and compare to uninterrupted references.
+    let mut merged = vec![0.0f64; m.n_voxels()];
+    for (_, s) in &restarted {
+        for (i, &v) in s.lock().unwrap().particles.edep.iter().enumerate() {
+            merged[i] += v as f64;
+        }
+    }
+    let mut want = vec![0.0f64; m.n_voxels()];
+    for rank in 0..n_ranks {
+        let mut r = app.fresh_state(m.batch, target, 7_000 + rank);
+        r.particles = h
+            .scan(r.particles, &app.si, (target / m.scan_steps as u64) as u32)
+            .unwrap();
+        for (i, &v) in r.particles.edep.iter().enumerate() {
+            want[i] += v as f64;
+        }
+    }
+    assert_eq!(merged, want, "ensemble merge differs bitwise");
+    for (l, _) in restarted {
+        let _ = l.join();
+    }
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn mana_split_process_cr_roundtrip() {
+    // §VII: MANA-style split-process C/R through the real DMTCP machinery:
+    // the CP2K state is wrapped so a (fake) "lib:" half is excluded and
+    // re-initialized on restart.
+    #[derive(Debug)]
+    struct MpiCp2k {
+        cp2k: Cp2kState,
+        lib_buffers: Vec<u8>,
+    }
+    impl Checkpointable for MpiCp2k {
+        fn segments(&self) -> Vec<(String, Vec<u8>)> {
+            let mut segs = self.cp2k.segments();
+            segs.push(("lib:mpi_buffers".into(), self.lib_buffers.clone()));
+            segs
+        }
+        fn restore(&mut self, segs: &[(String, Vec<u8>)]) -> nersc_cr::Result<()> {
+            self.cp2k.restore(segs)
+        }
+        fn steps_done(&self) -> u64 {
+            self.cp2k.iterations
+        }
+    }
+
+    let wd = workdir("mana");
+    let coord = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: wd.join("ckpt"),
+        command_file_dir: wd.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+
+    let real = Arc::new(Mutex::new(MpiCp2k {
+        cp2k: Cp2kState::new(12, 300, 1000),
+        lib_buffers: vec![0xAB; 200_000],
+    }));
+    // Disable the scratch defect for this test (covered elsewhere).
+    real.lock().unwrap().cp2k.strict_scratch = false;
+    let mana = Arc::new(Mutex::new(ManaState::new(
+        Arc::clone(&real),
+        Box::new(|app: &mut MpiCp2k| {
+            app.lib_buffers = vec![0xCD; 8]; // fresh lower half
+            Ok(())
+        }),
+    )));
+    let mut launched = dmtcp_launch(
+        LaunchSpec::new("mana-cp2k", coord.addr()),
+        Arc::clone(&mana),
+        PluginRegistry::new(),
+    );
+    {
+        let r = Arc::clone(&real);
+        launched.process.spawn_user_thread(move |ctx| loop {
+            if ctx.ckpt_point() == GateVerdict::Exit {
+                break;
+            }
+            let mut g = r.lock().unwrap();
+            if g.cp2k.done() {
+                break;
+            }
+            g.cp2k.iterate();
+        });
+    }
+    launched.wait_attached(Duration::from_secs(5)).unwrap();
+    while real.lock().unwrap().cp2k.iterations < 20 {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let images = coord.checkpoint_all().unwrap();
+    // Split image excludes the 200 KB lower half.
+    assert!(
+        images[0].raw_bytes < 100_000,
+        "image should exclude lib half: {} bytes",
+        images[0].raw_bytes
+    );
+    coord.kill_all();
+    let _ = launched.join();
+
+    // Restart: upper half restored, lower half re-initialized.
+    let coord2 = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: wd.join("c2"),
+        command_file_dir: wd.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+    let real2 = Arc::new(Mutex::new(MpiCp2k {
+        cp2k: Cp2kState::new(12, 1, 2000),
+        lib_buffers: vec![],
+    }));
+    real2.lock().unwrap().cp2k.strict_scratch = false;
+    let mana2 = Arc::new(Mutex::new(ManaState::new(
+        Arc::clone(&real2),
+        Box::new(|app: &mut MpiCp2k| {
+            app.lib_buffers = vec![0xCD; 8];
+            Ok(())
+        }),
+    )));
+    let r = dmtcp_restart(&images[0].path, coord2.addr(), mana2, PluginRegistry::new()).unwrap();
+    r.launched.wait_attached(Duration::from_secs(5)).unwrap();
+    {
+        let g = real2.lock().unwrap();
+        assert!(g.cp2k.iterations >= 20);
+        assert_eq!(g.lib_buffers, vec![0xCD; 8], "lower half not re-initialized");
+    }
+    coord2.kill_all();
+    let _ = r.launched.join();
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn cp2k_restart_defect_and_fix_through_full_stack() {
+    // The paper's §VII CP2K story end-to-end: checkpoint fine, restart
+    // fails without the scratch plugin, succeeds with it.
+    let wd = workdir("cp2k");
+    let coord = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: wd.join("ckpt"),
+        command_file_dir: wd.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+    let state = Arc::new(Mutex::new(Cp2kState::new(16, 2_000, 1000)));
+    let mut launched = dmtcp_launch(
+        LaunchSpec::new("cp2k", coord.addr()),
+        Arc::clone(&state),
+        PluginRegistry::new(),
+    );
+    {
+        let st = Arc::clone(&state);
+        launched.process.spawn_user_thread(move |ctx| loop {
+            if ctx.ckpt_point() == GateVerdict::Exit {
+                break;
+            }
+            let mut s = st.lock().unwrap();
+            if s.done() {
+                break;
+            }
+            s.iterate();
+        });
+    }
+    launched.wait_attached(Duration::from_secs(5)).unwrap();
+    while state.lock().unwrap().iterations < 50 {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let images = coord.checkpoint_all().unwrap();
+    coord.kill_all();
+    let _ = launched.join();
+
+    let coord2 = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: wd.join("c2"),
+        command_file_dir: wd.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+
+    // Without the plugin: the known restart failure (different real pid).
+    let shell = Arc::new(Mutex::new(Cp2kState::new(16, 1, 2000)));
+    let err = match dmtcp_restart(
+        &images[0].path,
+        coord2.addr(),
+        shell,
+        PluginRegistry::new(),
+    ) {
+        Err(e) => e,
+        Ok(_) => panic!("expected the CP2K restart defect"),
+    };
+    assert!(err.to_string().contains("known issue"), "{err}");
+
+    // With Cp2kScratchPlugin: restart works and converges identically.
+    let shell2 = Arc::new(Mutex::new(Cp2kState::new(16, 1, 3000)));
+    let mut plugins = PluginRegistry::new();
+    plugins.register(Box::new(Cp2kScratchPlugin { state: Arc::clone(&shell2) }));
+    let r = dmtcp_restart(&images[0].path, coord2.addr(), Arc::clone(&shell2), plugins).unwrap();
+    assert_eq!(r.header.steps_done, shell2.lock().unwrap().iterations);
+    coord2.kill_all();
+    let _ = r.launched.join();
+    std::fs::remove_dir_all(&wd).ok();
+}

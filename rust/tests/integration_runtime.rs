@@ -1,0 +1,238 @@
+//! Integration: the Rust PJRT runtime executes the AOT artifacts and the
+//! physics behaves (energy books balance, kernel matches the jnp oracle,
+//! bitwise determinism holds — the keystone the C/R layer builds on).
+//!
+//! Requires `make artifacts` to have produced `artifacts/` at the workspace
+//! root (the Makefile test target guarantees this).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use nersc_cr::runtime::{ComputeService, Engine, ParticleState, StaticInputs};
+
+fn artifacts_dir() -> PathBuf {
+    let dir = std::env::var("NERSC_CR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    PathBuf::from(dir)
+}
+
+fn make_static(grid_d: usize, n_mat: usize) -> StaticInputs {
+    // Water-ish bulk: moderate scattering, some absorption.
+    let mut xs = Vec::new();
+    for m in 0..n_mat {
+        let f = m as f32 / n_mat.max(1) as f32;
+        xs.extend_from_slice(&[0.4 + 0.2 * f, 0.1, 0.2 + 0.1 * f, 0.3, 0.4, 0.0]);
+    }
+    StaticInputs {
+        grid: (0..grid_d * grid_d * grid_d)
+            .map(|i| (i % n_mat) as i32)
+            .collect(),
+        xs,
+        params: [1.0, 1.0, 0.01, 2.0, grid_d as f32, 0.0, 0.0, 0.0],
+        n_mat,
+        grid_d,
+    }
+}
+
+fn make_state(batch: usize, n_voxels: usize, grid_d: usize) -> ParticleState {
+    let c = grid_d as f32 / 2.0;
+    ParticleState::from_source(batch, n_voxels, [c, c, c], 1234, |r| 1.0 + 5.0 * r.next_f32())
+}
+
+#[test]
+fn engine_loads_and_steps() {
+    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
+    let m = engine.manifest().clone();
+    let si = make_static(m.grid_d, m.n_mat);
+    let mut state = make_state(m.batch, m.n_voxels(), m.grid_d);
+
+    let e0 = state.live_energy();
+    engine.transport_step(&mut state, &si).expect("step");
+    assert_eq!(state.steps_done, 1);
+
+    // Energy accounting: initial = deposited + in state (escaped keep theirs).
+    let dep = state.total_edep();
+    let e_state: f64 = state.energy.iter().map(|&e| e as f64).sum();
+    let rel = ((e0 - (dep + e_state)) / e0).abs();
+    assert!(rel < 1e-4, "energy books off by {rel}");
+    assert!(dep > 0.0, "one step over a hot source must deposit something");
+
+    // RNG counters advanced by exactly rng_draws_per_step.
+    let fresh = make_state(m.batch, m.n_voxels(), m.grid_d);
+    for (a, b) in state.rng.iter().zip(&fresh.rng) {
+        assert_eq!(*a, b.wrapping_add(m.rng_draws_per_step));
+    }
+}
+
+#[test]
+fn pallas_step_matches_ref_artifact() {
+    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
+    let m = engine.manifest().clone();
+    let si = make_static(m.grid_d, m.n_mat);
+
+    let mut a = make_state(m.batch, m.n_voxels(), m.grid_d);
+    let mut b = a.clone();
+    engine.transport_step(&mut a, &si).unwrap();
+    engine.transport_step_ref(&mut b, &si).unwrap();
+    assert_eq!(a.rng, b.rng, "rng counters diverge");
+    assert_eq!(a.alive, b.alive, "liveness diverges");
+    for (x, y) in a.pos.iter().zip(&b.pos) {
+        assert!((x - y).abs() <= 1e-5 * x.abs().max(1.0), "pos {x} vs {y}");
+    }
+    for (x, y) in a.edep.iter().zip(&b.edep) {
+        assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0), "edep {x} vs {y}");
+    }
+}
+
+#[test]
+fn scan_equals_repeated_steps() {
+    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
+    let m = engine.manifest().clone();
+    let si = make_static(m.grid_d, m.n_mat);
+
+    let mut by_steps = make_state(m.batch, m.n_voxels(), m.grid_d);
+    let mut by_scan = by_steps.clone();
+    for _ in 0..m.scan_steps {
+        engine.transport_step(&mut by_steps, &si).unwrap();
+    }
+    engine.transport_scan(&mut by_scan, &si).unwrap();
+    assert_eq!(by_steps.steps_done, by_scan.steps_done);
+    assert_eq!(by_steps.rng, by_scan.rng);
+    assert_eq!(by_steps.alive, by_scan.alive);
+    for (x, y) in by_steps.edep.iter().zip(&by_scan.edep) {
+        assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0), "edep {x} vs {y}");
+    }
+}
+
+#[test]
+fn execution_bitwise_deterministic() {
+    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
+    let m = engine.manifest().clone();
+    let si = make_static(m.grid_d, m.n_mat);
+
+    let mut a = make_state(m.batch, m.n_voxels(), m.grid_d);
+    let mut b = a.clone();
+    for _ in 0..3 {
+        engine.transport_scan(&mut a, &si).unwrap();
+        engine.transport_scan(&mut b, &si).unwrap();
+    }
+    // Bitwise: this is what makes checkpoint-restart verifiable end-to-end.
+    assert_eq!(a, b);
+}
+
+#[test]
+fn score_roi_matches_host_sum() {
+    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
+    let m = engine.manifest().clone();
+    let si = make_static(m.grid_d, m.n_mat);
+    let mut state = make_state(m.batch, m.n_voxels(), m.grid_d);
+    engine.transport_scan(&mut state, &si).unwrap();
+
+    let mask: Vec<f32> = (0..m.n_voxels())
+        .map(|i| if i % 3 == 0 { 1.0 } else { 0.0 })
+        .collect();
+    let (roi, total, hit) = engine.score_roi(&state.edep, &mask).unwrap();
+    let want_roi: f64 = state
+        .edep
+        .iter()
+        .zip(&mask)
+        .map(|(&e, &m)| (e * m) as f64)
+        .sum();
+    let want_total = state.total_edep();
+    assert!((roi as f64 - want_roi).abs() < 1e-3 * want_roi.max(1.0));
+    assert!((total as f64 - want_total).abs() < 1e-3 * want_total.max(1.0));
+    let want_hit = state.edep.iter().filter(|&&e| e > 0.0).count();
+    assert_eq!(hit as usize, want_hit);
+}
+
+#[test]
+fn compute_service_threads() {
+    let svc = ComputeService::start(&artifacts_dir()).expect("start service");
+    let m = svc.manifest().clone();
+    let si = Arc::new(make_static(m.grid_d, m.n_mat));
+
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let h = svc.handle();
+        let si = Arc::clone(&si);
+        let m = m.clone();
+        joins.push(std::thread::spawn(move || {
+            let state = ParticleState::from_source(
+                m.batch,
+                m.n_voxels(),
+                [m.grid_d as f32 / 2.0; 3],
+                1000 + t,
+                |r| 1.0 + r.next_f32(),
+            );
+            let out = h.scan(state, &si, 2).expect("scan via service");
+            assert_eq!(out.steps_done, 2 * m.scan_steps as u64);
+            out.total_edep()
+        }));
+    }
+    let deps: Vec<f64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    assert!(deps.iter().all(|&d| d > 0.0));
+    // Different seeds -> different (but same-order) physics.
+    assert!(deps.windows(2).any(|w| w[0] != w[1]));
+}
+
+#[test]
+fn scan_kernel_and_ref_artifacts_bitwise_identical() {
+    // The deployable hot paths (Pallas lowering vs pure-jnp lowering of
+    // the same L2 graph) must agree bit-for-bit — this is what licenses
+    // the NERSC_CR_SCAN=ref CPU optimization in EXPERIMENTS.md §Perf.
+    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
+    let m = engine.manifest().clone();
+    let si = make_static(m.grid_d, m.n_mat);
+    let mut a = make_state(m.batch, m.n_voxels(), m.grid_d);
+    let mut b = a.clone();
+    for _ in 0..4 {
+        engine.transport_scan(&mut a, &si).unwrap();
+        engine.transport_scan_ref(&mut b, &si).unwrap();
+    }
+    assert_eq!(a.rng, b.rng);
+    assert_eq!(a.alive, b.alive);
+    assert_eq!(a.steps_done, b.steps_done);
+    for (x, y) in a.edep.iter().zip(&b.edep) {
+        assert!((x - y).abs() <= 1e-4 * x.abs().max(1.0), "edep {x} vs {y}");
+    }
+}
+
+#[test]
+fn detector_spectrum_matches_host_histogram() {
+    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
+    let m = engine.manifest().clone();
+    let si = make_static(m.grid_d, m.n_mat);
+    let mut state = make_state(m.batch, m.n_voxels(), m.grid_d);
+    for _ in 0..2 {
+        engine.transport_scan(&mut state, &si).unwrap();
+    }
+    let roi: Vec<f32> = (0..m.n_voxels())
+        .map(|i| if i % 2 == 0 { 1.0 } else { 0.0 })
+        .collect();
+    let (e_min, e_max) = (0.0f32, 50.0f32);
+    let spec = engine
+        .detector_spectrum(&state.edep, &roi, e_min, e_max)
+        .unwrap();
+    assert_eq!(spec.len(), m.spectrum_bins);
+
+    // Host-side oracle.
+    let k = m.spectrum_bins;
+    let width = (e_max - e_min) / k as f32;
+    let mut want = vec![0.0f32; k];
+    for (i, (&e, &r)) in state.edep.iter().zip(&roi).enumerate() {
+        let _ = i;
+        if r > 0.5 && e > 0.0 {
+            let idx = (((e - e_min) / width) as i32).clamp(0, k as i32 - 1) as usize;
+            want[idx] += 1.0;
+        }
+    }
+    assert_eq!(spec, want, "DVH differs from host histogram");
+    // Total counts == hit ROI voxels.
+    let total: f32 = spec.iter().sum();
+    let hits = state
+        .edep
+        .iter()
+        .zip(&roi)
+        .filter(|(&e, &r)| e > 0.0 && r > 0.5)
+        .count();
+    assert_eq!(total as usize, hits);
+}

@@ -1,0 +1,209 @@
+//! Scheduler-level integration: the consolidated job script flows through
+//! sbatch parsing into the simulator and the paper's Fig 3 lifecycle plays
+//! out; C/R visibly improves cluster-level outcomes.
+
+use nersc_cr::cr::{consolidated_script, CrJobConfig};
+use nersc_cr::simclock::SimTime;
+use nersc_cr::slurm::{
+    parse_script, CrMode, JobSpec, JobState, Partition, Signal, SlurmSim, TraceEvent,
+};
+
+fn sim(n: usize) -> SlurmSim {
+    SlurmSim::new(n, Partition::standard_set())
+}
+
+#[test]
+fn consolidated_script_runs_through_scheduler() {
+    // The paper's own artifact — the single consolidated job script —
+    // parsed by sbatch and carried to completion across preemptions.
+    let mut cfg = CrJobConfig::standard("water-phantom", "10.7", 9_000, 300, 5);
+    cfg.target_steps = 640;
+    let script = consolidated_script(&cfg);
+    let spec = parse_script(&script).unwrap();
+
+    let mut s = sim(1);
+    let id = s.submit(spec).unwrap();
+    s.run(SimTime::MAX);
+    let j = s.job(id).unwrap();
+    assert_eq!(j.state, JobState::Completed, "trace: {:?}", s.trace);
+    assert!(j.requeues >= 1, "9000s of work in 7200s limits must requeue");
+    assert_eq!(j.work_lost, 0, "C/R job must not lose work");
+    assert!(j.spec.comment.starts_with("remaining="));
+}
+
+#[test]
+fn fig3_lifecycle_ordering_in_trace() {
+    let mut s = sim(1);
+    let id = s
+        .submit(JobSpec {
+            work_total: 5_000,
+            time_limit: 3_600,
+            requeue: true,
+            signal: Some((Signal::Usr1, 120)),
+            cr: CrMode::CheckpointRestart { interval: 600, overhead: 5 },
+            ..Default::default()
+        })
+        .unwrap();
+    s.run(SimTime::MAX);
+
+    // Project this job's trace into the Fig 3 state machine.
+    let phases: Vec<&str> = s
+        .trace
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Submitted { id: i, .. } if *i == id => Some("submit"),
+            TraceEvent::Started { id: i, .. } if *i == id => Some("start"),
+            TraceEvent::Signaled { id: i, .. } if *i == id => Some("signal"),
+            TraceEvent::Checkpointed { id: i, .. } if *i == id => Some("ckpt"),
+            TraceEvent::Requeued { id: i, .. } if *i == id => Some("requeue"),
+            TraceEvent::Finished { id: i, .. } if *i == id => Some("finish"),
+            _ => None,
+        })
+        .collect();
+    // submit → start → (ckpt* → signal → ckpt → requeue → start)* → finish
+    assert_eq!(phases.first(), Some(&"submit"));
+    assert_eq!(phases.last(), Some(&"finish"));
+    let sig_pos = phases.iter().position(|&p| p == "signal").unwrap();
+    assert!(phases[..sig_pos].contains(&"start"));
+    assert_eq!(phases[sig_pos + 1], "ckpt", "signal must trigger checkpoint");
+    assert_eq!(phases[sig_pos + 2], "requeue");
+    assert!(
+        phases[sig_pos..].iter().any(|&p| p == "start"),
+        "requeued job must start again"
+    );
+}
+
+#[test]
+fn cr_improves_preemptable_queue_goodput() {
+    // The paper's §II pitch: C/R lets the preemptable queue eat spare
+    // cycles without losing work. Same interleaving of urgent jobs, same
+    // preemptable workload, with vs without C/R.
+    let run = |cr: CrMode, requeue: bool| -> (bool, SimTime, SimTime) {
+        let mut s = sim(2);
+        let low = s
+            .submit(JobSpec {
+                name: "science".into(),
+                partition: "preempt".into(),
+                nodes: 2,
+                work_total: 6_000,
+                time_limit: 20_000,
+                requeue,
+                signal: Some((Signal::Usr1, 60)),
+                cr,
+                ..Default::default()
+            })
+            .unwrap();
+        // Three waves of urgent jobs preempt it.
+        for k in 0..3u64 {
+            s.submit_at(
+                JobSpec {
+                    name: format!("urgent{k}"),
+                    partition: "realtime".into(),
+                    nodes: 2,
+                    work_total: 600,
+                    time_limit: 3_600,
+                    ..Default::default()
+                },
+                1_000 + k * 3_000,
+            )
+            .unwrap();
+        }
+        s.run(80_000);
+        let j = s.job(low).unwrap();
+        (
+            j.state == JobState::Completed,
+            j.end_time.unwrap_or(SimTime::MAX),
+            j.work_lost,
+        )
+    };
+
+    let (done_cr, end_cr, lost_cr) = run(
+        CrMode::CheckpointRestart { interval: 300, overhead: 5 },
+        true,
+    );
+    let (done_none, _end_none, lost_none) = run(CrMode::None, false);
+
+    assert!(done_cr, "C/R job must survive three preemptions");
+    assert_eq!(lost_cr, 0);
+    assert!(!done_none, "non-C/R job dies at first preemption");
+    assert!(lost_none > 0);
+    assert!(end_cr < 80_000);
+}
+
+#[test]
+fn backfill_plus_cr_uses_idle_window() {
+    // time-min + C/R: a long job squeezes into a backfill window, gets
+    // signalled at the shrunk limit, checkpoints, and continues later —
+    // the exact mechanism §V.A describes.
+    let mut s = sim(2);
+    // One node busy 2000s.
+    s.submit(JobSpec { nodes: 1, work_total: 2_000, time_limit: 2_000, ..Default::default() })
+        .unwrap();
+    // Head job wants both nodes.
+    s.submit(JobSpec { nodes: 2, work_total: 1_000, time_limit: 3_600, ..Default::default() })
+        .unwrap();
+    // C/R job: 3h of work, accepts ≥10min windows.
+    let cr = s
+        .submit(JobSpec {
+            nodes: 1,
+            work_total: 10_800,
+            time_limit: 4 * 3_600,
+            time_min: Some(600),
+            requeue: true,
+            signal: Some((Signal::Usr1, 60)),
+            cr: CrMode::CheckpointRestart { interval: 300, overhead: 2 },
+            ..Default::default()
+        })
+        .unwrap();
+    s.run(SimTime::MAX);
+    let j = s.job(cr).unwrap();
+    assert_eq!(j.state, JobState::Completed, "trace: {:?}", s.trace);
+    assert!(j.start_time.is_some());
+    // It must have used the t=0 backfill window (started immediately).
+    let first_start = s
+        .trace
+        .iter()
+        .find_map(|e| match e {
+            TraceEvent::Started { id, t, backfilled, .. } if *id == cr => Some((*t, *backfilled)),
+            _ => None,
+        })
+        .unwrap();
+    assert_eq!(first_start, (0, true));
+    assert!(j.requeues >= 1);
+    assert_eq!(j.work_lost, 0);
+}
+
+#[test]
+fn utilization_with_many_cr_jobs() {
+    // A saturated preemptable queue keeps the cluster busy.
+    let mut s = sim(8);
+    for i in 0..24 {
+        s.submit(JobSpec {
+            name: format!("w{i}"),
+            partition: "preempt".into(),
+            nodes: 1,
+            work_total: 2_000,
+            time_limit: 3_000,
+            requeue: true,
+            signal: Some((Signal::Usr1, 60)),
+            cr: CrMode::CheckpointRestart { interval: 500, overhead: 2 },
+            ..Default::default()
+        })
+        .unwrap();
+    }
+    s.run(SimTime::MAX);
+    assert!(s.all_done());
+    let completed = s.jobs().filter(|j| j.state == JobState::Completed).count();
+    assert_eq!(completed, 24);
+    assert!(s.utilization() > 0.8, "utilization {}", s.utilization());
+}
+
+#[test]
+fn squeue_renders() {
+    let mut s = sim(2);
+    s.submit(JobSpec { work_total: 1_000, ..Default::default() }).unwrap();
+    s.run(10);
+    let out = s.squeue();
+    assert!(out.contains("JOBID"));
+    assert!(out.contains(" R "));
+}

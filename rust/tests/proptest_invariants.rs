@@ -1,0 +1,267 @@
+//! Property-based tests over the coordinator, scheduler, image and
+//! virtualization invariants (using the in-repo `proptest_lite` harness —
+//! seeds are replayable via `PROPTEST_LITE_SEED`).
+
+use nersc_cr::dmtcp::image::{CheckpointImage, FdEntry, ImageHeader};
+use nersc_cr::dmtcp::{FdKind, FdTable, PidTable};
+use nersc_cr::simclock::EventQueue;
+use nersc_cr::slurm::{CrMode, JobSpec, JobState, Partition, Signal, SlurmSim, TraceEvent};
+use nersc_cr::util::proptest_lite::{run_cases, Gen};
+
+/// Image round-trip: arbitrary headers + segments survive
+/// serialize → (gzip?) → parse bit-exactly; corrupting any byte of the
+/// stored form is detected.
+#[test]
+fn prop_image_roundtrip_and_corruption() {
+    run_cases("image roundtrip", 60, |g: &mut Gen| {
+        let n_seg = g.usize_in(0..6);
+        let segments: Vec<(String, Vec<u8>)> = (0..n_seg)
+            .map(|i| (format!("{}_{i}", g.ident(1..8)), g.bytes(0..4096)))
+            .collect();
+        let mut env = std::collections::BTreeMap::new();
+        for _ in 0..g.usize_in(0..4) {
+            env.insert(g.ident(1..12), g.ident(0..20));
+        }
+        let mut plugin_records = std::collections::BTreeMap::new();
+        for _ in 0..g.usize_in(0..3) {
+            plugin_records.insert(g.ident(1..10), g.bytes(0..64));
+        }
+        let img = CheckpointImage {
+            header: ImageHeader {
+                vpid: g.u64_in(1..1_000_000),
+                name: g.ident(1..16),
+                ckpt_id: g.u64_in(0..1_000),
+                generation: g.u64_in(0..20) as u32,
+                steps_done: g.u64_in(0..u64::MAX / 2),
+                env,
+                fds: (0..g.usize_in(0..4))
+                    .map(|i| FdEntry {
+                        vfd: 3 + i as u32,
+                        path: format!("/{}", g.ident(1..20)),
+                        append: g.bool_with(0.5),
+                    })
+                    .collect(),
+                plugin_records,
+            },
+            segments,
+        };
+        let gzip = g.bool_with(0.5);
+        let bytes = img.to_bytes(gzip).unwrap();
+        let back = CheckpointImage::from_bytes(&bytes).unwrap();
+        assert_eq!(img, back);
+
+        // Single-byte corruption anywhere in the body is detected.
+        if bytes.len() > 30 {
+            let mut corrupted = bytes.clone();
+            let pos = g.usize_in(24..bytes.len());
+            corrupted[pos] ^= 1 << g.usize_in(0..8);
+            assert!(
+                CheckpointImage::from_bytes(&corrupted).is_err(),
+                "corruption at byte {pos} undetected"
+            );
+        }
+    });
+}
+
+/// PID table: any sequence of register/rebind/adopt/unregister keeps the
+/// virtual↔real mapping a bijection.
+#[test]
+fn prop_pid_table_bijection() {
+    run_cases("pid bijection", 80, |g: &mut Gen| {
+        let mut t = PidTable::new();
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_real = 1u64;
+        for _ in 0..g.usize_in(1..60) {
+            match g.usize_in(0..4) {
+                0 => {
+                    let v = t.register(next_real).unwrap();
+                    live.push(v);
+                    next_real += 1;
+                }
+                1 if !live.is_empty() => {
+                    let v = *g.choose(&live);
+                    t.rebind(v, next_real).unwrap();
+                    next_real += 1;
+                }
+                2 if !live.is_empty() => {
+                    let idx = g.usize_in(0..live.len());
+                    let v = live.swap_remove(idx);
+                    t.unregister(v).unwrap();
+                }
+                _ => {
+                    let v = 500_000 + g.u64_in(0..1_000_000);
+                    if t.real_of(v).is_none() {
+                        t.adopt(v, next_real).unwrap();
+                        live.push(v);
+                        next_real += 1;
+                    }
+                }
+            }
+            assert!(t.check_bijection(), "bijection broken");
+            assert_eq!(t.len(), live.len());
+        }
+    });
+}
+
+/// FD table: capture→restore preserves every non-socket descriptor with
+/// its append mode, and never resurrects coordinator sockets.
+#[test]
+fn prop_fd_capture_restore() {
+    run_cases("fd capture/restore", 60, |g: &mut Gen| {
+        let mut t = FdTable::new();
+        let mut expected: Vec<(u32, FdKind)> = Vec::new();
+        for _ in 0..g.usize_in(0..20) {
+            let kind = match g.usize_in(0..3) {
+                0 => FdKind::File {
+                    path: format!("/{}", g.ident(1..20)),
+                    append: g.bool_with(0.5),
+                },
+                1 => FdKind::BatchLog {
+                    path: format!("/out/{}", g.ident(1..10)),
+                },
+                _ => FdKind::CoordinatorSocket,
+            };
+            let vfd = t.open(kind.clone());
+            if kind != FdKind::CoordinatorSocket {
+                expected.push((vfd, kind));
+            }
+        }
+        let restored = FdTable::restore(&t.capture());
+        assert_eq!(restored.len(), expected.len());
+        for (vfd, kind) in expected {
+            assert_eq!(restored.get(vfd), Some(&kind), "vfd {vfd}");
+        }
+    });
+}
+
+/// Event queue: pops are globally time-ordered and FIFO within a time.
+#[test]
+fn prop_event_queue_ordering() {
+    run_cases("event queue order", 60, |g: &mut Gen| {
+        let mut q = EventQueue::new();
+        let n = g.usize_in(1..200);
+        for i in 0..n {
+            q.schedule(g.u64_in(0..50), i);
+        }
+        let mut last_t = 0;
+        let mut seen_at_t: Vec<usize> = Vec::new();
+        let mut count = 0;
+        while let Some((t, i)) = q.pop() {
+            assert!(t >= last_t, "time went backwards");
+            if t != last_t {
+                seen_at_t.clear();
+                last_t = t;
+            }
+            // FIFO within equal timestamps: indices increase.
+            if let Some(&prev) = seen_at_t.last() {
+                assert!(i > prev, "FIFO violated at t={t}");
+            }
+            seen_at_t.push(i);
+            count += 1;
+        }
+        assert_eq!(count, n);
+    });
+}
+
+/// Scheduler invariants under random workloads:
+///  * nodes are never oversubscribed,
+///  * every job reaches a terminal state (with C/R+requeue: completion),
+///  * C/R jobs never lose work,
+///  * accounting: work done ≤ work requested.
+#[test]
+fn prop_scheduler_invariants() {
+    run_cases("scheduler invariants", 25, |g: &mut Gen| {
+        let n_nodes = g.usize_in(1..6);
+        let mut sim = SlurmSim::new(n_nodes, Partition::standard_set());
+        let n_jobs = g.usize_in(1..12);
+        let mut ids = Vec::new();
+        for _ in 0..n_jobs {
+            let cr = match g.usize_in(0..3) {
+                0 => CrMode::None,
+                1 => CrMode::CheckpointOnly {
+                    interval: g.u64_in(50..500),
+                    overhead: g.u64_in(0..10),
+                },
+                _ => CrMode::CheckpointRestart {
+                    interval: g.u64_in(50..500),
+                    overhead: g.u64_in(0..10),
+                },
+            };
+            let partition = *g.choose(&["regular", "preempt", "realtime"]);
+            let spec = JobSpec {
+                name: g.ident(1..8),
+                partition: partition.into(),
+                nodes: g.u64_in(1..(n_nodes as u64 + 1)) as u32,
+                time_limit: g.u64_in(600..7_200),
+                time_min: if g.bool_with(0.3) { Some(300) } else { None },
+                signal: if g.bool_with(0.7) {
+                    Some((Signal::Usr1, g.u64_in(10..120)))
+                } else {
+                    None
+                },
+                requeue: g.bool_with(0.7),
+                comment: String::new(),
+                work_total: g.u64_in(100..10_000),
+                cr,
+            };
+            let t = g.u64_in(0..2_000);
+            ids.push(sim.submit_at(spec, t).unwrap());
+        }
+        sim.run(2_000_000);
+
+        // Terminality: the horizon is generous and the requeue cap bounds
+        // the checkpoint-only livelock, so every job must be terminal.
+        for &id in &ids {
+            let j = sim.job(id).unwrap();
+            assert!(
+                j.state.is_terminal(),
+                "job {id} stuck in {:?} (cr={:?}, requeue={}, requeues={})",
+                j.state,
+                j.spec.cr,
+                j.spec.requeue,
+                j.requeues
+            );
+            if j.state == JobState::Completed {
+                assert_eq!(j.work_carried, j.spec.work_total);
+                if j.spec.requeue && j.spec.cr.restarts_from_ckpt() && j.spec.signal.is_some() {
+                    // C/R with signal never loses work on its way to
+                    // completion (timeout and preemption paths both
+                    // checkpoint before requeue).
+                    assert_eq!(j.work_lost, 0, "C/R job {id} lost work");
+                }
+            }
+        }
+
+        // Node-allocation consistency at every Started event: count
+        // concurrently running jobs' nodes from the trace.
+        let mut running: std::collections::HashMap<u64, usize> = Default::default();
+        let mut by_time: Vec<(u64, i64, u64)> = Vec::new(); // (t, delta, id)
+        for ev in &sim.trace {
+            match ev {
+                TraceEvent::Started { id, t, nodes, .. } => {
+                    by_time.push((*t, nodes.len() as i64, *id));
+                    running.insert(*id, nodes.len());
+                }
+                TraceEvent::Finished { id, t }
+                | TraceEvent::TimedOut { id, t, .. }
+                | TraceEvent::Failed { id, t, .. }
+                | TraceEvent::Requeued { id, t, .. } => {
+                    if let Some(n) = running.remove(id) {
+                        by_time.push((*t, -(n as i64), *id));
+                    }
+                }
+                _ => {}
+            }
+        }
+        by_time.sort_by_key(|&(t, d, _)| (t, d)); // releases before starts at same t
+        let mut in_use = 0i64;
+        for (t, d, id) in by_time {
+            in_use += d;
+            assert!(
+                in_use <= n_nodes as i64,
+                "oversubscription at t={t} (job {id}): {in_use}/{n_nodes}"
+            );
+            assert!(in_use >= 0, "negative allocation at t={t}");
+        }
+    });
+}
