@@ -1,0 +1,32 @@
+# Convenience targets. The Rust side is fully offline (`cargo build/test`);
+# the Python targets need jax (see python/compile/aot.py's docstring).
+
+ARTIFACT_DIR ?= artifacts
+
+.PHONY: build test bench artifacts pytest clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+# Self-checking paper reproductions (each exits nonzero on shape violations).
+bench:
+	cargo bench --bench fig2_startup
+	cargo bench --bench ablation_interval
+	cargo bench --bench ckpt_overhead
+	cargo bench --bench fig4_cr_timeseries
+	cargo bench --bench results_matrix
+
+# AOT-lower the L2 model to HLO text for the PJRT backend (needs jax).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../$(ARTIFACT_DIR)
+
+# L1 kernel-equivalence suites (needs jax + pytest + hypothesis).
+pytest:
+	cd python && python -m pytest tests -q
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACT_DIR)

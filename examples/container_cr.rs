@@ -91,8 +91,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .env("DMTCP_CHECKPOINT_DIR", "/ckpt");
     let container = podman.run("elvis:test", spec.clone())?;
     let state = Arc::new(Mutex::new(app.fresh_state(m.batch, target, seed)));
-    let mut launched =
-        container.launch_checkpointed("g4neutron", coord.addr(), Arc::clone(&state), PluginRegistry::new())?;
+    let mut launched = container.launch_checkpointed(
+        "g4neutron",
+        coord.addr(),
+        Arc::clone(&state),
+        PluginRegistry::new(),
+    )?;
     launched.wait_attached(Duration::from_secs(10))?;
     {
         let (st, hh, si) = (Arc::clone(&state), h.clone(), Arc::clone(&app.si));
@@ -128,7 +132,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     let image_path = latest_images(&cfg.ckpt_dir)?.pop().unwrap();
     let state2 = Arc::new(Mutex::new(app.shell_state()));
-    let restarted = dmtcp_restart(&image_path, coord2.addr(), Arc::clone(&state2), PluginRegistry::new())?;
+    let restarted =
+        dmtcp_restart(&image_path, coord2.addr(), Arc::clone(&state2), PluginRegistry::new())?;
     let mut launched2 = restarted.launched;
     launched2.wait_attached(Duration::from_secs(10))?;
     {

@@ -213,7 +213,12 @@ fn bench_restart_vs_coldstart() {
     let h = service::shared().expect("compute service");
     let app = G4App::build(WorkloadKind::EmCalorimeter, G4Version::V10_7, h.manifest().grid_d);
     let scan_steps = h.manifest().scan_steps as u64;
-    let mut t = Table::new(&["progress at interrupt", "recompute (s)", "restore image (s)", "speedup"]);
+    let mut t = Table::new(&[
+        "progress at interrupt",
+        "recompute (s)",
+        "restore image (s)",
+        "speedup",
+    ]);
     for &scans_done in &[50u64, 200, 400] {
         // State at the interrupt point.
         let mut st = app.fresh_state(h.manifest().batch, u64::MAX, 11);

@@ -29,14 +29,23 @@ use crate::workload::{transport_worker, G4App, G4SimState};
 /// Fig 3 states (the workflow diagram, as data).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum AutoState {
+    /// Job handed to the batch system.
     Submitted,
+    /// Coordinator boot + launch/restart in progress.
     Starting,
+    /// Transport workers advancing the state.
     Running,
+    /// A coordinator-wide checkpoint barrier is in flight.
     Checkpointing,
+    /// A preemption signal was trapped (func_trap).
     SignalTrapped,
+    /// Waiting in the queue after a requeue.
     Requeued,
+    /// Restoring state from the newest image.
     Restarting,
+    /// Workload reached its target step count.
     Completed,
+    /// Incarnation budget exhausted (or unrecoverable error).
     Failed,
 }
 
@@ -81,10 +90,15 @@ impl Default for CrPolicy {
 /// Outcome of an automated run.
 #[derive(Debug)]
 pub struct CrReport {
+    /// Whether the workload reached its target step count.
     pub completed: bool,
+    /// Batch-job incarnations used (1 = never preempted).
     pub incarnations: u32,
+    /// Checkpoints taken across all incarnations.
     pub checkpoints: u64,
+    /// Stored (possibly compressed) checkpoint bytes written.
     pub total_image_bytes: u64,
+    /// Raw (uncompressed) checkpoint bytes serialized.
     pub total_raw_bytes: u64,
     /// `(elapsed_secs, state)` transitions.
     pub timeline: Vec<(f64, AutoState)>,

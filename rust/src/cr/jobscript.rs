@@ -13,11 +13,13 @@ use crate::slurm::{render_script, CrMode, JobSpec, Signal};
 /// Runtime C/R configuration carried by a job script.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CrJobConfig {
+    /// The batch-scheduler job specification (directives + C/R mode).
     pub spec: JobSpec,
     /// Total transport steps the workload needs.
     pub target_steps: u64,
-    /// Workload + version labels (environment for the containerized app).
+    /// Workload label (environment for the containerized app).
     pub workload: String,
+    /// Geant4-analog version label.
     pub g4_version: String,
 }
 

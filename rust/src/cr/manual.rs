@@ -23,10 +23,15 @@ use crate::workload::{transport_worker, G4App, G4SimState};
 /// What `monitor` reports (the user's view of the output/error logs).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MonitorReport {
+    /// Transport steps completed so far.
     pub steps_done: u64,
+    /// Steps the workload needs in total.
     pub target_steps: u64,
+    /// Particles still alive in the batch.
     pub alive_particles: usize,
+    /// Whether the workload is finished.
     pub done: bool,
+    /// `steps_done / target_steps` in `[0, 1]`.
     pub progress: f64,
 }
 
@@ -48,6 +53,7 @@ struct ActiveJob {
 }
 
 impl<'a> ManualCr<'a> {
+    /// Set up a session (no job submitted yet; call [`Self::submit`]).
     pub fn new(
         app: &'a G4App,
         handle: ComputeHandle,
@@ -87,7 +93,8 @@ impl<'a> ManualCr<'a> {
             self.target_steps,
             self.seed,
         )));
-        let mut spec = LaunchSpec::new(format!("manual-{}", self.app.kind.label()), coordinator.addr());
+        let mut spec =
+            LaunchSpec::new(format!("manual-{}", self.app.kind.label()), coordinator.addr());
         spec.env = env;
         let mut launched = dmtcp_launch(spec, Arc::clone(&state), PluginRegistry::new());
         launched.wait_attached(Duration::from_secs(10))?;

@@ -30,6 +30,8 @@ pub struct CrConfig {
 }
 
 impl CrConfig {
+    /// Standard configuration for one job: checkpoints under
+    /// `<workdir>/ckpt`, gzip on, 30 s barrier timeout.
     pub fn new(jobid: impl Into<String>, workdir: impl Into<PathBuf>) -> Self {
         let workdir: PathBuf = workdir.into();
         Self {

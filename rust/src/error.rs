@@ -1,52 +1,101 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: `thiserror` is not in the offline
+//! dependency closure (see `vendor/README.md`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error type for all `nersc_cr` subsystems.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    /// PJRT / XLA runtime failures (compile, execute, literal conversion).
-    #[error("xla: {0}")]
-    Xla(String),
+    /// Compute-backend failures (engine startup, compile, execute,
+    /// service-channel breakdowns).
+    Backend(String),
 
     /// I/O failures (checkpoint files, artifact loading, sockets).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Malformed or corrupt checkpoint image.
-    #[error("checkpoint image: {0}")]
     Image(String),
 
     /// DMTCP coordinator protocol violations.
-    #[error("coordinator protocol: {0}")]
     Protocol(String),
 
     /// Batch-scheduler errors (unknown job, invalid directive, ...).
-    #[error("slurm: {0}")]
     Slurm(String),
 
     /// Container build/run errors.
-    #[error("container: {0}")]
     Container(String),
 
     /// Artifact manifest problems.
-    #[error("manifest: {0}")]
     Manifest(String),
 
     /// Workload configuration errors.
-    #[error("workload: {0}")]
     Workload(String),
 
     /// CLI usage errors.
-    #[error("usage: {0}")]
     Usage(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Backend(msg) => write!(f, "backend: {msg}"),
+            Error::Io(err) => write!(f, "io: {err}"),
+            Error::Image(msg) => write!(f, "checkpoint image: {msg}"),
+            Error::Protocol(msg) => write!(f, "coordinator protocol: {msg}"),
+            Error::Slurm(msg) => write!(f, "slurm: {msg}"),
+            Error::Container(msg) => write!(f, "container: {msg}"),
+            Error::Manifest(msg) => write!(f, "manifest: {msg}"),
+            Error::Workload(msg) => write!(f, "workload: {msg}"),
+            Error::Usage(msg) => write!(f, "usage: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(err) => Some(err),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
-        Error::Xla(e.to_string())
+        Error::Backend(e.to_string())
     }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::Slurm("x".into()).to_string(), "slurm: x");
+        assert_eq!(
+            Error::Image("bad".into()).to_string(),
+            "checkpoint image: bad"
+        );
+    }
+
+    #[test]
+    fn io_conversion_preserves_source() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let err: Error = io.into();
+        assert!(err.to_string().contains("gone"));
+        assert!(std::error::Error::source(&err).is_some());
+    }
+}

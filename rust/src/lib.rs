@@ -17,19 +17,22 @@
 //! * [`fsmodel`] — filesystem startup-performance models (the Fig 2
 //!   substrate: HOME/SCRATCH/common-software/CVMFS vs container caches).
 //! * [`workload`] — the Geant4-analog particle-transport application layer
-//!   (versions, physics lists, sources, detectors) whose compute runs as
-//!   AOT-compiled XLA programs authored in JAX/Pallas.
-//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt`, compiles
-//!   once, executes from the hot path. Python never runs at request time.
+//!   (versions, physics lists, sources, detectors) whose compute runs
+//!   behind the pluggable [`runtime::ComputeBackend`] boundary.
+//! * [`runtime`] — the compute runtime: a pure-Rust reference backend (the
+//!   default — ports the kernel semantics of `python/compile/kernels/`)
+//!   and, behind the `pjrt` feature, the PJRT/XLA engine that executes the
+//!   AOT-lowered `artifacts/*.hlo.txt`. Python never runs at request time.
 //! * [`metrics`] — an LDMS-analog resource sampler (the Fig 4 substrate).
 //! * [`simclock`] — the discrete-event simulation core.
 //!
-//! See `DESIGN.md` for the experiment index mapping every figure/table of
-//! the paper to modules and bench targets, and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` for the architecture and the experiment index mapping
+//! every figure/table of the paper to modules and bench targets, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod cli;
 pub mod container;
+#[deny(missing_docs)]
 pub mod cr;
 pub mod dmtcp;
 pub mod error;
@@ -37,6 +40,7 @@ pub mod fsmodel;
 pub mod logging;
 pub mod metrics;
 pub mod report;
+#[deny(missing_docs)]
 pub mod runtime;
 pub mod simclock;
 pub mod slurm;

@@ -5,12 +5,12 @@
 //! `dmtcp_coordinator --daemon` log style.
 
 use std::io::Write;
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use log::{Level, LevelFilter, Metadata, Record};
-use once_cell::sync::OnceCell;
 
-static START: OnceCell<Instant> = OnceCell::new();
+static START: OnceLock<Instant> = OnceLock::new();
 static LOGGER: Logger = Logger;
 
 struct Logger;

@@ -1,0 +1,208 @@
+//! The pluggable compute-backend boundary.
+//!
+//! The paper's C/R layer is deliberately substrate-agnostic: DMTCP wraps
+//! *any* process, and the NERSC scripts run the same workload under
+//! shifter, podman-hpc or bare metal. This module mirrors that design at
+//! the compute layer. Everything above the transport kernels — the C/R
+//! workflows, the service thread, the workloads, the benches — talks to a
+//! [`ComputeBackend`] trait object and never to a concrete engine.
+//!
+//! Two implementations ship today:
+//!
+//! * [`ReferenceBackend`](super::reference::ReferenceBackend) — a pure-Rust
+//!   port of the kernel semantics specified by
+//!   `python/compile/kernels/ref.py` (the independent oracle the Pallas
+//!   kernel is verified against). Always available, no artifacts or
+//!   external runtime needed, bit-reproducible. The default.
+//! * [`Engine`](super::engine::Engine) — the PJRT/XLA engine executing the
+//!   AOT-lowered HLO artifacts. Feature-gated behind `pjrt` and selected
+//!   with `NERSC_CR_BACKEND=pjrt`.
+//!
+//! Selection happens once, in [`load_backend`]; see the decision table
+//! there. `DESIGN.md` §Backends documents the contract in prose.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::state::{ParticleState, StaticInputs};
+
+/// Compile/execute statistics (perf bookkeeping, `EXPERIMENTS.md` §Perf).
+#[derive(Debug, Default, Clone)]
+pub struct BackendStats {
+    /// Artifact compilations performed (0 for backends that don't compile).
+    pub compiles: u64,
+    /// Wall seconds spent compiling.
+    pub compile_secs: f64,
+    /// Kernel invocations (a fused scan counts once).
+    pub executions: u64,
+    /// Wall seconds spent executing.
+    pub execute_secs: f64,
+    /// Kernel steps advanced (a scan counts `scan_steps`).
+    pub steps: u64,
+}
+
+/// A transport/scoring compute engine.
+///
+/// Implementations are **single-threaded** by contract: one backend
+/// instance lives on one thread (the PJRT client is `Rc`-backed and not
+/// `Send`). Multi-threaded callers go through
+/// [`ComputeService`](super::service::ComputeService), which owns a backend
+/// on a dedicated thread and serves cloneable handles.
+///
+/// Correctness contract (enforced by `rust/tests/integration_runtime.rs`
+/// and `rust/tests/reference_backend.rs`):
+///
+/// * `transport_step` and `transport_step_ref` agree exactly on integer
+///   state (rng counters, liveness) and to float tolerance elsewhere.
+/// * One `transport_scan` equals `manifest().scan_steps` repeated
+///   `transport_step` calls.
+/// * Same inputs produce bit-identical outputs (the C/R keystone).
+/// * RNG counters advance by exactly `manifest().rng_draws_per_step` per
+///   step, so a checkpoint/restart resumes the Monte-Carlo stream exactly.
+pub trait ComputeBackend {
+    /// Short backend identifier (`"reference"`, `"pjrt"`), for logs and
+    /// reports.
+    fn name(&self) -> &'static str;
+
+    /// The artifact manifest this backend was configured from (shapes,
+    /// scan length, RNG stride).
+    fn manifest(&self) -> &Manifest;
+
+    /// Advance one transport step (the production kernel path).
+    fn transport_step(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()>;
+
+    /// Advance one transport step through the backend's reference/oracle
+    /// path (A/B checking). Backends without a distinct oracle lowering
+    /// may route this to [`Self::transport_step`].
+    fn transport_step_ref(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+        self.transport_step(state, si)
+    }
+
+    /// Advance `manifest().scan_steps` fused steps (the hot path: one
+    /// backend round-trip per scan).
+    fn transport_scan(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()>;
+
+    /// The oracle-lowering variant of [`Self::transport_scan`]; identical
+    /// numerics, used for A/B perf comparisons (`NERSC_CR_SCAN=ref`).
+    fn transport_scan_ref(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+        self.transport_scan(state, si)
+    }
+
+    /// Detector readout over the scoring grid:
+    /// `(roi_edep, total_edep, hit_voxels)`.
+    fn score_roi(&self, edep: &[f32], roi_mask: &[f32]) -> Result<(f32, f32, f32)>;
+
+    /// Dose-volume histogram of the scoring grid inside the ROI: counts of
+    /// voxels per energy bin over `[e_min, e_max)` (overflow clamps into
+    /// the last bin), `manifest().spectrum_bins` bins.
+    fn detector_spectrum(
+        &self,
+        edep: &[f32],
+        roi_mask: &[f32],
+        e_min: f32,
+        e_max: f32,
+    ) -> Result<Vec<f32>>;
+
+    /// Statistics snapshot.
+    fn stats(&self) -> BackendStats;
+}
+
+/// Which backend [`load_backend`] should construct.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The pure-Rust reference backend (always available).
+    Reference,
+    /// The PJRT/XLA artifact engine (requires the `pjrt` cargo feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Resolve the backend choice from `NERSC_CR_BACKEND`
+    /// (`reference` | `pjrt`; unset defaults to `reference`).
+    pub fn from_env() -> Result<Self> {
+        match std::env::var("NERSC_CR_BACKEND").as_deref() {
+            Err(_) | Ok("") | Ok("reference") => Ok(Self::Reference),
+            Ok("pjrt") => Ok(Self::Pjrt),
+            Ok(other) => Err(Error::Usage(format!(
+                "NERSC_CR_BACKEND={other:?}: expected \"reference\" or \"pjrt\""
+            ))),
+        }
+    }
+}
+
+/// Construct the backend selected by `NERSC_CR_BACKEND` (see
+/// [`BackendKind::from_env`]).
+///
+/// * `Reference`: loads `manifest.txt` from `dir` when present (so shapes
+///   match any AOT artifacts lying around) and otherwise falls back to the
+///   compiled-in default dimensions — no filesystem requirement at all.
+/// * `Pjrt`: requires the `pjrt` cargo feature *and* real artifacts in
+///   `dir`; errors out otherwise.
+pub fn load_backend(dir: &Path) -> Result<Box<dyn ComputeBackend>> {
+    match BackendKind::from_env()? {
+        BackendKind::Reference => {
+            let manifest = Manifest::load_or_default(dir)?;
+            load_backend_with(BackendKind::Reference, dir, manifest)
+        }
+        BackendKind::Pjrt => pjrt_backend(dir),
+    }
+}
+
+/// As [`load_backend`], but with the backend choice already resolved and
+/// the manifest already parsed, so callers that do both eagerly (like
+/// `ComputeService::start`) resolve the environment exactly once and don't
+/// parse — or log the missing-manifest fallback — twice. Only the
+/// reference backend consults `manifest`; the PJRT engine always re-reads
+/// its own from `dir`.
+pub fn load_backend_with(
+    kind: BackendKind,
+    dir: &Path,
+    manifest: Manifest,
+) -> Result<Box<dyn ComputeBackend>> {
+    match kind {
+        BackendKind::Reference => {
+            Ok(Box::new(super::reference::ReferenceBackend::new(manifest)))
+        }
+        BackendKind::Pjrt => pjrt_backend(dir),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(dir: &Path) -> Result<Box<dyn ComputeBackend>> {
+    Ok(Box::new(super::engine::Engine::load(dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_dir: &Path) -> Result<Box<dyn ComputeBackend>> {
+    Err(Error::Usage(
+        "NERSC_CR_BACKEND=pjrt but this build has no PJRT support; \
+         rebuild with `--features pjrt` (and real xla bindings, see \
+         vendor/README.md)"
+            .into(),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_backend_is_reference() {
+        // Guarded rather than forced: tests never mutate process-global
+        // env, so only assert when the variable is genuinely unset.
+        if std::env::var("NERSC_CR_BACKEND").is_err() {
+            assert_eq!(BackendKind::from_env().unwrap(), BackendKind::Reference);
+        }
+    }
+
+    #[test]
+    fn loads_without_artifacts() {
+        // Same guard as above: meaningful only under the default selection.
+        if std::env::var("NERSC_CR_BACKEND").is_err() {
+            let backend = load_backend(Path::new("/nonexistent-ncr-artifacts")).unwrap();
+            assert_eq!(backend.name(), "reference");
+            assert!(backend.manifest().batch > 0);
+        }
+    }
+}

@@ -1,44 +1,45 @@
-//! The PJRT execution engine (thread-local).
+//! The PJRT execution engine (thread-local, `pjrt` feature).
 //!
 //! Loads HLO-text artifacts, compiles each once on the PJRT CPU client, and
 //! executes them with in-memory state. `xla::PjRtClient` is `Rc`-backed and
 //! therefore **not Send**: an [`Engine`] lives on one thread. Multi-threaded
-//! callers go through [`super::service::ComputeService`], which owns an
-//! Engine on a dedicated thread and serves cloneable handles.
+//! callers go through [`super::service::ComputeService`], which owns a
+//! backend on a dedicated thread and serves cloneable handles.
+//!
+//! This module only builds with `--features pjrt`. The offline build links
+//! the `vendor/xla` stub (every runtime call errors out); swap in the real
+//! xla-rs bindings to execute artifacts — the call sites are identical.
+//! Select at runtime with `NERSC_CR_BACKEND=pjrt` (see
+//! [`super::backend::load_backend`]).
 
 use std::collections::HashMap;
 use std::path::Path;
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::runtime::backend::{BackendStats, ComputeBackend};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::state::{ParticleState, StaticInputs};
 
-/// Names of the artifacts the engine knows how to drive.
+/// Artifact name: one Pallas-kernel transport step.
 pub const STEP: &str = "transport_step";
+/// Artifact name: one pure-jnp oracle transport step.
 pub const STEP_REF: &str = "transport_step_ref";
+/// Artifact name: the fused Pallas-kernel scan.
 pub const SCAN: &str = "transport_scan";
+/// Artifact name: the fused pure-jnp oracle scan.
 pub const SCAN_REF: &str = "transport_scan_ref";
+/// Artifact name: detector ROI readout.
 pub const SCORE_ROI: &str = "score_roi";
+/// Artifact name: dose-volume histogram readout.
 pub const SPECTRUM: &str = "detector_spectrum";
-
-/// Compile/execute statistics (perf bookkeeping, EXPERIMENTS.md §Perf).
-#[derive(Debug, Default, Clone)]
-pub struct EngineStats {
-    pub compiles: u64,
-    pub compile_secs: f64,
-    pub executions: u64,
-    pub execute_secs: f64,
-    /// Kernel steps advanced (scan counts as `scan_steps`).
-    pub steps: u64,
-}
 
 /// A PJRT CPU engine with a compiled-executable cache.
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
-    stats: std::cell::RefCell<EngineStats>,
+    stats: std::cell::RefCell<BackendStats>,
 }
 
 impl Engine {
@@ -90,14 +91,7 @@ impl Engine {
         Ok(())
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn stats(&self) -> EngineStats {
-        self.stats.borrow().clone()
-    }
-
+    /// The PJRT platform backing this engine.
     pub fn platform_name(&self) -> String {
         self.client.platform_name()
     }
@@ -105,7 +99,7 @@ impl Engine {
     fn exe(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
         self.exes
             .get(name)
-            .ok_or_else(|| Error::Xla(format!("artifact {name:?} not compiled")))
+            .ok_or_else(|| Error::Backend(format!("artifact {name:?} not compiled")))
     }
 
     /// Build the 10 input literals for a transport artifact.
@@ -134,7 +128,7 @@ impl Engine {
     fn unpack_transport(&self, result: xla::Literal, state: &mut ParticleState) -> Result<()> {
         let parts = result.to_tuple()?;
         if parts.len() != 7 {
-            return Err(Error::Xla(format!(
+            return Err(Error::Backend(format!(
                 "transport output arity {} != 7",
                 parts.len()
             )));
@@ -178,35 +172,45 @@ impl Engine {
         st.steps += steps;
         Ok(())
     }
+}
+
+impl ComputeBackend for Engine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
 
     /// Advance one transport step (Pallas-kernel artifact).
-    pub fn transport_step(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+    fn transport_step(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
         self.run_transport(STEP, 1, state, si)
     }
 
     /// Advance one transport step through the pure-jnp oracle artifact
     /// (A/B checking against the Pallas path from Rust).
-    pub fn transport_step_ref(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+    fn transport_step_ref(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
         self.run_transport(STEP_REF, 1, state, si)
     }
 
     /// Advance `manifest.scan_steps` fused steps (the hot path: one PJRT
     /// round-trip per scan).
-    pub fn transport_scan(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+    fn transport_scan(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
         self.run_transport(SCAN, self.manifest.scan_steps as u64, state, si)
     }
 
     /// Advance `manifest.scan_steps` fused steps through the pure-jnp
-    /// oracle lowering (identical numerics to [`Self::transport_scan`] —
-    /// asserted by tests — but a different HLO loop structure; used for
-    /// A/B perf comparisons and as the CPU-deployment hot path when
+    /// oracle lowering (identical numerics to the Pallas path — asserted
+    /// by tests — but a different HLO loop structure; used for A/B perf
+    /// comparisons and as the CPU-deployment hot path when
     /// `NERSC_CR_SCAN=ref`).
-    pub fn transport_scan_ref(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+    fn transport_scan_ref(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
         self.run_transport(SCAN_REF, self.manifest.scan_steps as u64, state, si)
     }
 
     /// Detector readout: `(roi_edep, total_edep, hit_voxels)`.
-    pub fn score_roi(&self, edep: &[f32], roi_mask: &[f32]) -> Result<(f32, f32, f32)> {
+    fn score_roi(&self, edep: &[f32], roi_mask: &[f32]) -> Result<(f32, f32, f32)> {
         let n = self.manifest.n_voxels();
         if edep.len() != n || roi_mask.len() != n {
             return Err(Error::Workload(format!(
@@ -221,7 +225,7 @@ impl Engine {
         let out = bufs[0][0].to_literal_sync()?;
         let parts = out.to_tuple()?;
         if parts.len() != 3 {
-            return Err(Error::Xla(format!("score_roi arity {} != 3", parts.len())));
+            return Err(Error::Backend(format!("score_roi arity {} != 3", parts.len())));
         }
         let mut st = self.stats.borrow_mut();
         st.executions += 1;
@@ -233,13 +237,10 @@ impl Engine {
             .collect::<std::result::Result<_, _>>()?;
         Ok((vals[0], vals[1], vals[2]))
     }
-}
 
-impl Engine {
-    /// Dose-volume histogram of the scoring grid inside the ROI: counts of
-    /// voxels per energy bin over `[e_min, e_max)` (overflow clamps into
-    /// the last bin). Runs the Pallas spectrum kernel's artifact.
-    pub fn detector_spectrum(
+    /// Dose-volume histogram of the scoring grid inside the ROI. Runs the
+    /// Pallas spectrum kernel's artifact.
+    fn detector_spectrum(
         &self,
         edep: &[f32],
         roi_mask: &[f32],
@@ -271,13 +272,17 @@ impl Engine {
         st.execute_secs += t0.elapsed().as_secs_f64();
         drop(st);
         if spectrum.len() != self.manifest.spectrum_bins {
-            return Err(Error::Xla(format!(
+            return Err(Error::Backend(format!(
                 "spectrum arity {} != manifest bins {}",
                 spectrum.len(),
                 self.manifest.spectrum_bins
             )));
         }
         Ok(spectrum)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats.borrow().clone()
     }
 }
 

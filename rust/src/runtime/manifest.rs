@@ -39,6 +39,40 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// The compiled-in default dimensions (mirrors `python/compile/model.py`:
+    /// `BATCH/GRID_D/N_MAT/SCAN_STEPS` and the kernel constants). Used by
+    /// the reference backend when no artifact manifest is on disk.
+    pub fn default_reference(dir: &Path) -> Self {
+        Self {
+            batch: 4096,
+            grid_d: 32,
+            n_mat: 8,
+            scan_steps: 8,
+            rng_draws_per_step: 4,
+            spectrum_bins: 128,
+            artifacts: BTreeMap::new(),
+            dir: dir.to_path_buf(),
+        }
+    }
+
+    /// Load `<dir>/manifest.txt` if it exists, otherwise fall back to
+    /// [`Self::default_reference`]. A manifest that exists but fails to
+    /// parse is still an error (silent fallback would mask corruption),
+    /// and the fallback itself is logged so a mistyped artifact dir is
+    /// observable rather than quietly running at the default geometry.
+    pub fn load_or_default(dir: &Path) -> Result<Self> {
+        if dir.join("manifest.txt").exists() {
+            Self::load(dir)
+        } else {
+            log::warn!(
+                "no manifest.txt under {}; using compiled-in reference shapes \
+                 (batch 4096, grid 32^3, scan 8)",
+                dir.display()
+            );
+            Ok(Self::default_reference(dir))
+        }
+    }
+
     /// Parse manifest text (exposed for tests).
     pub fn parse(text: &str, dir: &Path) -> Result<Self> {
         let mut kv: BTreeMap<&str, &str> = BTreeMap::new();
@@ -139,6 +173,17 @@ mod tests {
     fn wrong_format_rejected() {
         let text = SAMPLE.replace("format 1", "format 9");
         assert!(Manifest::parse(&text, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn load_or_default_falls_back_when_missing() {
+        let m = Manifest::load_or_default(Path::new("/nonexistent-ncr-manifest")).unwrap();
+        assert_eq!(m.batch, 4096);
+        assert_eq!(m.grid_d, 32);
+        assert_eq!(m.scan_steps, 8);
+        assert_eq!(m.rng_draws_per_step, 4);
+        assert_eq!(m.spectrum_bins, 128);
+        assert!(m.artifacts.is_empty());
     }
 
     #[test]

@@ -1,18 +1,34 @@
-//! PJRT runtime: load AOT artifacts, compile once, execute from the hot path.
+//! The compute runtime: pluggable transport/scoring backends behind the
+//! [`ComputeBackend`] trait, served to worker threads by [`ComputeService`].
 //!
-//! This is the only boundary between the Rust coordinator and the JAX/Pallas
-//! compute stack. `make artifacts` (build time, Python) lowers the L2 model
-//! to HLO *text* in `artifacts/`; at startup [`Engine::load`] parses the
-//! manifest, compiles every module on the PJRT CPU client, and the request
-//! path then only calls [`Engine::transport_scan`] / [`Engine::transport_step`]
-//! with in-memory state — no Python anywhere.
+//! Two backends implement the trait:
+//!
+//! * [`reference::ReferenceBackend`] (default) — a pure-Rust port of the
+//!   kernel semantics in `python/compile/kernels/ref.py`. No artifacts, no
+//!   Python, no XLA; bit-reproducible; what tests and offline deployments
+//!   run.
+//! * [`engine::Engine`] (`--features pjrt`, `NERSC_CR_BACKEND=pjrt`) — the
+//!   PJRT bridge: `make artifacts` (build time, Python) lowers the L2
+//!   model to HLO *text* in `artifacts/`; at startup the engine parses the
+//!   manifest and compiles every module on the PJRT CPU client. The
+//!   request path then only moves in-memory state — no Python anywhere.
+//!
+//! Both execute the same logical kernels; the integration suite asserts
+//! they agree (`rust/tests/integration_runtime.rs`,
+//! `rust/tests/reference_backend.rs`). See `DESIGN.md` §Backends.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod reference;
 pub mod service;
 pub mod state;
 
+pub use backend::{load_backend, load_backend_with, BackendKind, BackendStats, ComputeBackend};
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use manifest::Manifest;
+pub use reference::ReferenceBackend;
 pub use service::{ComputeHandle, ComputeService};
 pub use state::{ParticleState, StaticInputs};

@@ -1,0 +1,345 @@
+//! The pure-Rust reference compute backend.
+//!
+//! A scalar f32 port of the kernel semantics specified by
+//! `python/compile/kernels/ref.py` (the independent oracle the Pallas
+//! kernel is verified against) plus the L2 scoring scatter-add from
+//! `python/compile/model.py`. Operation order and precision deliberately
+//! mirror the JAX lowering — all math is `f32`, the RNG is the same
+//! lowbias32 counter hash — so results agree with the artifact engine to
+//! float tolerance and with themselves bit-exactly (the C/R keystone).
+//!
+//! This backend needs no artifacts, no Python and no XLA runtime: it is
+//! what `cargo test` and the default service run everywhere. Golden-value
+//! tests against the Python suite's expectations live in
+//! `rust/tests/reference_backend.rs`.
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::runtime::backend::{BackendStats, ComputeBackend};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::state::{ParticleState, StaticInputs};
+
+/// RNG draws consumed per particle per step. Must stay in lock-step with
+/// `RNG_DRAWS_PER_STEP` in `python/compile/kernels/transport.py`: restart
+/// correctness depends on it.
+pub const RNG_DRAWS_PER_STEP: u32 = 4;
+
+/// 2π at f32 precision (`jnp.float32(TWO_PI)` in the kernels rounds to
+/// the same nearest f32).
+const TWO_PI: f32 = std::f32::consts::TAU;
+
+/// lowbias32 integer hash (Chris Wellons); uint32 wrap-around semantics.
+/// Must match `hash_u32` in `python/compile/kernels/ref.py` bit-for-bit.
+#[inline]
+pub fn hash_u32(mut x: u32) -> u32 {
+    x ^= x >> 16;
+    x = x.wrapping_mul(0x7FEB_352D);
+    x ^= x >> 15;
+    x = x.wrapping_mul(0x846C_A68B);
+    x ^= x >> 16;
+    x
+}
+
+/// Map a u32 to f32 in `[0, 1)` using the top 24 bits (matches `u01`).
+#[inline]
+pub fn u01(bits: u32) -> f32 {
+    (bits >> 8) as f32 * (1.0 / (1 << 24) as f32)
+}
+
+#[inline]
+fn rsqrt(x: f32) -> f32 {
+    1.0 / x.sqrt()
+}
+
+/// The reference backend: manifest-shaped, artifact-free.
+pub struct ReferenceBackend {
+    manifest: Manifest,
+    stats: RefCell<BackendStats>,
+}
+
+impl ReferenceBackend {
+    /// Build from a manifest (shapes, scan length, RNG stride).
+    pub fn new(manifest: Manifest) -> Self {
+        Self {
+            manifest,
+            stats: RefCell::new(BackendStats::default()),
+        }
+    }
+
+    /// Validate manifest compatibility and state/static-input shape
+    /// consistency before a kernel run (mirrors the PJRT engine's checks,
+    /// so the backends stay interchangeable).
+    fn validate(&self, state: &ParticleState, si: &StaticInputs) -> Result<()> {
+        if self.manifest.rng_draws_per_step != RNG_DRAWS_PER_STEP {
+            return Err(Error::Manifest(format!(
+                "manifest declares {} rng draws/step but this kernel consumes {}; \
+                 the Monte-Carlo streams would desynchronize",
+                self.manifest.rng_draws_per_step, RNG_DRAWS_PER_STEP
+            )));
+        }
+        if state.batch() != self.manifest.batch {
+            return Err(Error::Workload(format!(
+                "state batch {} != manifest batch {}",
+                state.batch(),
+                self.manifest.batch
+            )));
+        }
+        si.validate(self.manifest.grid_d, self.manifest.n_mat)?;
+        state.check_consistent()?;
+        if state.edep.len() != si.grid.len() {
+            return Err(Error::Workload(format!(
+                "scoring grid {} voxels != material grid {} voxels",
+                state.edep.len(),
+                si.grid.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// One transport step over every particle, scatter-adding deposits
+    /// into `state.edep`. The body is `ref.py` line for line.
+    fn step_once(state: &mut ParticleState, si: &StaticInputs) {
+        let d = si.params[4] as i32;
+        let inv_vox = si.params[1];
+        let world = si.params[0] * si.params[4];
+        let e_cut = si.params[2];
+        let max_step = si.params[3];
+        let n_mat = si.n_mat as i32;
+
+        let voxel = |x: f32| -> i32 { ((x * inv_vox) as i32).clamp(0, d - 1) };
+        let flatten = |p: &[f32; 3]| -> usize {
+            ((voxel(p[0]) * d + voxel(p[1])) * d + voxel(p[2])) as usize
+        };
+
+        for i in 0..state.batch() {
+            let alive_b = state.alive[i] > 0.5;
+            let counter = state.rng[i];
+            // RNG counters advance whether the particle is alive or not
+            // (the lanes stay in lock-step, exactly as in the kernel).
+            state.rng[i] = counter.wrapping_add(RNG_DRAWS_PER_STEP);
+            if !alive_b {
+                continue; // dead particles are frozen; deposits are zero
+            }
+            let pos = [state.pos[3 * i], state.pos[3 * i + 1], state.pos[3 * i + 2]];
+            let dir = [state.dcos[3 * i], state.dcos[3 * i + 1], state.dcos[3 * i + 2]];
+            let energy = state.energy[i];
+
+            // --- current voxel & material --------------------------------
+            let mat = si.grid[flatten(&pos)].clamp(0, n_mat - 1) as usize;
+            let row = &si.xs[mat * 6..mat * 6 + 6];
+            let (s0, s1, f_abs, f_loss, g) = (row[0], row[1], row[2], row[3], row[4]);
+
+            // --- free path -----------------------------------------------
+            let sigma = s0 + s1 * rsqrt(energy.max(1e-6));
+            let u1 = u01(hash_u32(counter.wrapping_add(1)));
+            let path = -(u1 + 1e-7).ln() / sigma.max(1e-6);
+            let collided = path <= max_step;
+            let step_len = path.min(max_step);
+
+            // --- advance -------------------------------------------------
+            let npos = [
+                pos[0] + dir[0] * step_len,
+                pos[1] + dir[1] * step_len,
+                pos[2] + dir[2] * step_len,
+            ];
+            let inside = npos.iter().all(|&x| (0.0..world).contains(&x));
+
+            // --- interaction ---------------------------------------------
+            let u2 = u01(hash_u32(counter.wrapping_add(2)));
+            let absorbed = collided && inside && u2 < f_abs;
+            let scattered = collided && inside && !absorbed;
+
+            let dep_collision = if absorbed {
+                energy
+            } else if scattered {
+                energy * f_loss
+            } else {
+                0.0
+            };
+            let e_after = if absorbed {
+                0.0
+            } else if scattered {
+                energy * (1.0 - f_loss)
+            } else {
+                energy
+            };
+
+            // --- energy cutoff: deposit the remainder locally -------------
+            let cut = inside && !absorbed && e_after < e_cut;
+            let deposit = if inside {
+                dep_collision + if cut { e_after } else { 0.0 }
+            } else {
+                0.0
+            };
+            let e_new = if absorbed || cut { 0.0 } else { e_after };
+            let alive_new = if inside && !absorbed && !cut { 1.0 } else { 0.0 };
+
+            // --- scatter direction (forward-peaked iso mix) ---------------
+            let u3 = u01(hash_u32(counter.wrapping_add(3)));
+            let u4 = u01(hash_u32(counter.wrapping_add(4)));
+            let cz = 2.0 * u3 - 1.0;
+            let sz = (1.0 - cz * cz).max(0.0).sqrt();
+            let phi = TWO_PI * u4;
+            let iso = [sz * phi.cos(), sz * phi.sin(), cz];
+            let mixed = [
+                g * dir[0] + (1.0 - g) * iso[0],
+                g * dir[1] + (1.0 - g) * iso[1],
+                g * dir[2] + (1.0 - g) * iso[2],
+            ];
+            let dot = mixed[0] * mixed[0] + mixed[1] * mixed[1] + mixed[2] * mixed[2];
+            let norm = rsqrt(dot.max(1e-12));
+            let new_dir = if scattered {
+                [mixed[0] * norm, mixed[1] * norm, mixed[2] * norm]
+            } else {
+                dir
+            };
+
+            // --- write back + scoring scatter-add -------------------------
+            state.pos[3 * i..3 * i + 3].copy_from_slice(&npos);
+            state.dcos[3 * i..3 * i + 3].copy_from_slice(&new_dir);
+            state.energy[i] = e_new;
+            state.alive[i] = alive_new;
+            let out_flat = if inside { flatten(&npos) } else { 0 };
+            state.edep[out_flat] += deposit * state.weight[i];
+        }
+    }
+
+    fn run(&self, steps: u64, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+        self.validate(state, si)?;
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            Self::step_once(state, si);
+        }
+        state.steps_done += steps;
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        st.steps += steps;
+        Ok(())
+    }
+}
+
+impl ComputeBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn transport_step(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+        self.run(1, state, si)
+    }
+
+    fn transport_scan(&self, state: &mut ParticleState, si: &StaticInputs) -> Result<()> {
+        self.run(self.manifest.scan_steps as u64, state, si)
+    }
+
+    fn score_roi(&self, edep: &[f32], roi_mask: &[f32]) -> Result<(f32, f32, f32)> {
+        let n = self.manifest.n_voxels();
+        if edep.len() != n || roi_mask.len() != n {
+            return Err(Error::Workload(format!(
+                "score_roi expects {n}-voxel grids, got {} / {}",
+                edep.len(),
+                roi_mask.len()
+            )));
+        }
+        let t0 = Instant::now();
+        let mut roi = 0.0f64;
+        let mut total = 0.0f64;
+        let mut hits = 0u64;
+        for (&e, &m) in edep.iter().zip(roi_mask) {
+            total += e as f64;
+            roi += (e * m) as f64;
+            if e > 0.0 {
+                hits += 1;
+            }
+        }
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        Ok((roi as f32, total as f32, hits as f32))
+    }
+
+    fn detector_spectrum(
+        &self,
+        edep: &[f32],
+        roi_mask: &[f32],
+        e_min: f32,
+        e_max: f32,
+    ) -> Result<Vec<f32>> {
+        let n = self.manifest.n_voxels();
+        if edep.len() != n || roi_mask.len() != n {
+            return Err(Error::Workload(format!(
+                "detector_spectrum expects {n}-voxel grids, got {} / {}",
+                edep.len(),
+                roi_mask.len()
+            )));
+        }
+        let k = self.manifest.spectrum_bins;
+        if k == 0 {
+            return Err(Error::Manifest("spectrum_bins must be >= 1".into()));
+        }
+        let width = ((e_max - e_min) / k as f32).max(1e-9);
+        let t0 = Instant::now();
+        let mut spectrum = vec![0.0f32; k];
+        for (&e, &m) in edep.iter().zip(roi_mask) {
+            if m > 0.5 && e > 0.0 {
+                let idx = (((e - e_min) / width) as i32).clamp(0, k as i32 - 1) as usize;
+                spectrum[idx] += 1.0;
+            }
+        }
+        let mut st = self.stats.borrow_mut();
+        st.executions += 1;
+        st.execute_secs += t0.elapsed().as_secs_f64();
+        Ok(spectrum)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats.borrow().clone()
+    }
+}
+
+impl std::fmt::Debug for ReferenceBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReferenceBackend")
+            .field("batch", &self.manifest.batch)
+            .field("grid_d", &self.manifest.grid_d)
+            .field("scan_steps", &self.manifest.scan_steps)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_matches_lowbias32() {
+        // Independent re-derivation, as in python/tests/test_kernel.py.
+        fn low(mut x: u64) -> u32 {
+            x &= 0xFFFF_FFFF;
+            x ^= x >> 16;
+            x = (x * 0x7FEB_352D) & 0xFFFF_FFFF;
+            x ^= x >> 15;
+            x = (x * 0x846C_A68B) & 0xFFFF_FFFF;
+            x ^= x >> 16;
+            x as u32
+        }
+        for v in [0u32, 1, 2, 0xDEAD_BEEF, 12345, u32::MAX] {
+            assert_eq!(hash_u32(v), low(v as u64), "hash_u32({v:#x})");
+        }
+    }
+
+    #[test]
+    fn u01_in_unit_interval() {
+        for bits in [0u32, 1, 255, 256, 0x8000_0000, u32::MAX] {
+            let u = u01(bits);
+            assert!((0.0..1.0).contains(&u), "u01({bits:#x}) = {u}");
+        }
+        assert_eq!(u01(0), 0.0);
+    }
+}

@@ -1,19 +1,21 @@
-//! Compute service: a dedicated thread owning the (non-`Send`) [`Engine`],
-//! serving transport/score requests to any number of worker threads through
-//! cloneable [`ComputeHandle`]s.
+//! Compute service: a dedicated thread owning a (possibly non-`Send`)
+//! [`ComputeBackend`], serving transport/score requests to any number of
+//! worker threads through cloneable [`ComputeHandle`]s.
 //!
 //! This mirrors the serving-system shape the paper's environment implies
 //! (many MPI ranks sharing node-local accelerators): the DMTCP-analog user
-//! processes run on their own threads and the request path into PJRT is a
-//! channel hop, never a Python call.
+//! processes run on their own threads and the request path into the
+//! backend is a channel hop, never a Python call. Which backend serves is
+//! decided once at startup by [`backend::load_backend_with`]
+//! (`NERSC_CR_BACKEND`, default: the pure-Rust reference backend).
 
 use std::path::Path;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
-use crate::runtime::engine::{Engine, EngineStats};
+use crate::runtime::backend::{self, BackendStats, ComputeBackend};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::state::{ParticleState, StaticInputs};
 
@@ -36,13 +38,19 @@ enum Request {
         mask: Vec<f32>,
         reply: mpsc::Sender<Result<(f32, f32, f32)>>,
     },
+    Spectrum {
+        edep: Vec<f32>,
+        mask: Vec<f32>,
+        e_range: (f32, f32),
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
     Stats {
-        reply: mpsc::Sender<EngineStats>,
+        reply: mpsc::Sender<(&'static str, BackendStats)>,
     },
     Shutdown,
 }
 
-/// Owns the engine thread; dropping shuts it down.
+/// Owns the backend thread; dropping shuts it down.
 pub struct ComputeService {
     tx: mpsc::Sender<Request>,
     manifest: Manifest,
@@ -57,36 +65,46 @@ pub struct ComputeHandle {
 }
 
 impl ComputeService {
-    /// Spawn the engine thread and compile artifacts from `dir`.
+    /// Spawn the service thread and construct the backend selected by
+    /// `NERSC_CR_BACKEND` from `dir` (see [`backend::load_backend`]).
     ///
-    /// Compilation happens on the service thread; this call blocks until the
-    /// engine is ready (or failed), so callers get load errors eagerly.
+    /// Backend construction (artifact compilation, for PJRT) happens on
+    /// the service thread; this call blocks until the backend is ready
+    /// (or failed), so callers get load errors eagerly.
     pub fn start(dir: &Path) -> Result<Self> {
         // Manifest parsed on the caller thread too: cheap, and lets handles
-        // answer shape questions without a channel hop.
-        let manifest = Manifest::load(dir)?;
+        // answer shape questions without a channel hop. Only the reference
+        // backend may fall back to compiled-in shapes; PJRT requires real
+        // artifacts, so its manifest errors surface here, eagerly.
+        let kind = backend::BackendKind::from_env()?;
+        let manifest = match kind {
+            backend::BackendKind::Reference => Manifest::load_or_default(dir)?,
+            backend::BackendKind::Pjrt => Manifest::load(dir)?,
+        };
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let dir = dir.to_path_buf();
+        let manifest_for_backend = manifest.clone();
         let join = std::thread::Builder::new()
-            .name("pjrt-engine".into())
+            .name("compute-backend".into())
             .spawn(move || {
-                let engine = match Engine::load(&dir) {
-                    Ok(e) => {
+                let backend = match backend::load_backend_with(kind, &dir, manifest_for_backend) {
+                    Ok(b) => {
                         let _ = ready_tx.send(Ok(()));
-                        e
+                        b
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                         return;
                     }
                 };
-                Self::serve(engine, rx);
+                log::debug!("compute service: {} backend ready", backend.name());
+                Self::serve(backend, rx);
             })
-            .expect("spawn pjrt-engine thread");
+            .expect("spawn compute-backend thread");
         ready_rx
             .recv()
-            .map_err(|_| Error::Xla("engine thread died during load".into()))??;
+            .map_err(|_| Error::Backend("backend thread died during load".into()))??;
         Ok(Self {
             tx,
             manifest,
@@ -94,9 +112,9 @@ impl ComputeService {
         })
     }
 
-    fn serve(engine: Engine, rx: mpsc::Receiver<Request>) {
-        // Hot-path selection: both artifacts lower from the same L2 graph
-        // and produce bit-identical results (asserted by tests).
+    fn serve(backend: Box<dyn ComputeBackend>, rx: mpsc::Receiver<Request>) {
+        // Hot-path selection: both scan lowerings produce bit-identical
+        // results (asserted by tests), so this is purely a perf knob.
         let use_ref_scan = std::env::var("NERSC_CR_SCAN").as_deref() == Ok("ref");
         while let Ok(req) = rx.recv() {
             match req {
@@ -107,9 +125,9 @@ impl ComputeService {
                     reply,
                 } => {
                     let r = if use_ref {
-                        engine.transport_step_ref(&mut state, &si)
+                        backend.transport_step_ref(&mut state, &si)
                     } else {
-                        engine.transport_step(&mut state, &si)
+                        backend.transport_step(&mut state, &si)
                     };
                     let _ = reply.send(r.map(|()| state));
                 }
@@ -123,12 +141,11 @@ impl ComputeService {
                     for _ in 0..repeats {
                         out = if use_ref_scan {
                             // CPU-deployment hot path (NERSC_CR_SCAN=ref):
-                            // the pure-jnp lowering of the same L2 graph,
-                            // bit-identical outputs, ~25% faster on the CPU
-                            // PJRT plugin (see EXPERIMENTS.md §Perf).
-                            engine.transport_scan_ref(&mut state, &si)
+                            // the oracle lowering of the same graph,
+                            // bit-identical outputs (EXPERIMENTS.md §Perf).
+                            backend.transport_scan_ref(&mut state, &si)
                         } else {
-                            engine.transport_scan(&mut state, &si)
+                            backend.transport_scan(&mut state, &si)
                         };
                         if out.is_err() {
                             break;
@@ -137,10 +154,19 @@ impl ComputeService {
                     let _ = reply.send(out.map(|()| state));
                 }
                 Request::ScoreRoi { edep, mask, reply } => {
-                    let _ = reply.send(engine.score_roi(&edep, &mask));
+                    let _ = reply.send(backend.score_roi(&edep, &mask));
+                }
+                Request::Spectrum {
+                    edep,
+                    mask,
+                    e_range,
+                    reply,
+                } => {
+                    let spec = backend.detector_spectrum(&edep, &mask, e_range.0, e_range.1);
+                    let _ = reply.send(spec);
                 }
                 Request::Stats { reply } => {
-                    let _ = reply.send(engine.stats());
+                    let _ = reply.send((backend.name(), backend.stats()));
                 }
                 Request::Shutdown => break,
             }
@@ -155,6 +181,7 @@ impl ComputeService {
         }
     }
 
+    /// The manifest the service was configured from.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -170,23 +197,21 @@ impl Drop for ComputeService {
 }
 
 impl ComputeHandle {
+    /// The manifest the service was configured from.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    fn roundtrip<T>(
-        &self,
-        build: impl FnOnce(mpsc::Sender<Result<T>>) -> Request,
-    ) -> Result<T> {
+    fn roundtrip<T>(&self, build: impl FnOnce(mpsc::Sender<Result<T>>) -> Request) -> Result<T> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(build(reply))
-            .map_err(|_| Error::Xla("compute service is down".into()))?;
+            .map_err(|_| Error::Backend("compute service is down".into()))?;
         rx.recv()
-            .map_err(|_| Error::Xla("compute service dropped the request".into()))?
+            .map_err(|_| Error::Backend("compute service dropped the request".into()))?
     }
 
-    /// One transport step (Pallas artifact, or the jnp oracle with `use_ref`).
+    /// One transport step (production path, or the oracle with `use_ref`).
     pub fn step(
         &self,
         state: ParticleState,
@@ -223,14 +248,30 @@ impl ComputeHandle {
         self.roundtrip(|reply| Request::ScoreRoi { edep, mask, reply })
     }
 
-    /// Engine statistics snapshot.
-    pub fn stats(&self) -> Result<EngineStats> {
+    /// Dose-volume histogram over `[e_min, e_max)`.
+    pub fn detector_spectrum(
+        &self,
+        edep: Vec<f32>,
+        mask: Vec<f32>,
+        e_min: f32,
+        e_max: f32,
+    ) -> Result<Vec<f32>> {
+        self.roundtrip(|reply| Request::Spectrum {
+            edep,
+            mask,
+            e_range: (e_min, e_max),
+            reply,
+        })
+    }
+
+    /// Backend statistics snapshot, tagged with the backend name.
+    pub fn stats(&self) -> Result<(&'static str, BackendStats)> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Request::Stats { reply })
-            .map_err(|_| Error::Xla("compute service is down".into()))?;
+            .map_err(|_| Error::Backend("compute service is down".into()))?;
         rx.recv()
-            .map_err(|_| Error::Xla("compute service dropped the request".into()))
+            .map_err(|_| Error::Backend("compute service dropped the request".into()))
     }
 }
 
@@ -238,8 +279,7 @@ impl ComputeHandle {
 /// started on first use with `artifacts/` from `NERSC_CR_ARTIFACTS` or the
 /// workspace default.
 pub fn shared() -> Result<ComputeHandle> {
-    static SHARED: once_cell::sync::OnceCell<Mutex<Option<ComputeService>>> =
-        once_cell::sync::OnceCell::new();
+    static SHARED: OnceLock<Mutex<Option<ComputeService>>> = OnceLock::new();
     let cell = SHARED.get_or_init(|| Mutex::new(None));
     let mut guard = cell.lock().expect("shared compute service poisoned");
     if guard.is_none() {

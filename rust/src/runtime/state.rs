@@ -57,13 +57,20 @@ impl StaticInputs {
 /// The mutable simulation state (one "MPI rank"'s worth of particles).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParticleState {
-    pub pos: Vec<f32>,    // [B,3] row-major
-    pub dcos: Vec<f32>,   // [B,3]
-    pub energy: Vec<f32>, // [B]
-    pub weight: Vec<f32>, // [B]
-    pub alive: Vec<f32>,  // [B]
-    pub rng: Vec<u32>,    // [B] counter-based RNG state
-    pub edep: Vec<f32>,   // [D^3] accumulated scoring grid
+    /// Positions, `[B,3]` row-major (world units).
+    pub pos: Vec<f32>,
+    /// Unit direction cosines, `[B,3]` row-major.
+    pub dcos: Vec<f32>,
+    /// Kinetic energy per particle, `[B]` (MeV).
+    pub energy: Vec<f32>,
+    /// Statistical weight per particle, `[B]`.
+    pub weight: Vec<f32>,
+    /// Liveness per particle, `[B]` (1.0 alive / 0.0 dead).
+    pub alive: Vec<f32>,
+    /// Counter-based RNG state per particle, `[B]`.
+    pub rng: Vec<u32>,
+    /// Accumulated energy-deposition scoring grid, `[D^3]` flattened.
+    pub edep: Vec<f32>,
     /// Steps completed so far (restart bookkeeping + progress reporting).
     pub steps_done: u64,
 }
@@ -72,6 +79,30 @@ impl ParticleState {
     /// Batch size B.
     pub fn batch(&self) -> usize {
         self.energy.len()
+    }
+
+    /// Check that the per-particle vectors agree with the batch size
+    /// (`energy.len()`): `pos`/`dcos` are `[B,3]`, the rest `[B]`.
+    /// Shared by segment restore and the compute backends.
+    pub fn check_consistent(&self) -> Result<()> {
+        let b = self.batch();
+        if self.pos.len() != b * 3
+            || self.dcos.len() != b * 3
+            || self.weight.len() != b
+            || self.alive.len() != b
+            || self.rng.len() != b
+        {
+            return Err(Error::Workload(format!(
+                "state vectors inconsistent: batch {b}, pos {}, dcos {}, weight {}, \
+                 alive {}, rng {}",
+                self.pos.len(),
+                self.dcos.len(),
+                self.weight.len(),
+                self.alive.len(),
+                self.rng.len()
+            )));
+        }
+        Ok(())
     }
 
     /// Number of particles still alive.
@@ -187,15 +218,9 @@ impl ParticleState {
             edep: bytes_to_f32s(find("edep")?)?,
             steps_done: u64::from_le_bytes(steps_b.as_slice().try_into().unwrap()),
         };
-        let b = state.batch();
-        if state.pos.len() != b * 3
-            || state.dcos.len() != b * 3
-            || state.weight.len() != b
-            || state.alive.len() != b
-            || state.rng.len() != b
-        {
-            return Err(Error::Image("inconsistent segment lengths".into()));
-        }
+        state
+            .check_consistent()
+            .map_err(|_| Error::Image("inconsistent segment lengths".into()))?;
         Ok(state)
     }
 }

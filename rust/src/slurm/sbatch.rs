@@ -32,9 +32,9 @@ pub fn parse_script(script: &str) -> Result<JobSpec> {
                 .map_err(|e| Error::Slurm(format!("line {}: {e}", lineno + 1)))?;
         } else if let Some(rest) = line.strip_prefix("#NERSC_CR") {
             for tok in rest.split_whitespace() {
-                let (k, v) = tok
-                    .split_once('=')
-                    .ok_or_else(|| Error::Slurm(format!("line {}: bad token {tok:?}", lineno + 1)))?;
+                let (k, v) = tok.split_once('=').ok_or_else(|| {
+                    Error::Slurm(format!("line {}: bad token {tok:?}", lineno + 1))
+                })?;
                 match k {
                     "mode" => {
                         cr_mode = Some(match v {

@@ -61,7 +61,12 @@ fn image_without_dmtcp_cannot_checkpoint() {
             RunSpec::default().volume(cfg.ckpt_dir.to_string_lossy(), "/ckpt"),
         )
         .unwrap();
-    let err = match container.launch_checkpointed("app", coord.addr(), state, PluginRegistry::new()) {
+    let err = match container.launch_checkpointed(
+        "app",
+        coord.addr(),
+        state,
+        PluginRegistry::new(),
+    ) {
         Err(e) => e,
         Ok(_) => panic!("launch without DMTCP should fail"),
     };
@@ -88,7 +93,12 @@ fn ckpt_dir_must_be_volume_mapped() {
 
     // No volume mapping: images would die with the container.
     let container = pm.run("cr:v1", RunSpec::default()).unwrap();
-    let err = match container.launch_checkpointed("app", coord.addr(), state, PluginRegistry::new()) {
+    let err = match container.launch_checkpointed(
+        "app",
+        coord.addr(),
+        state,
+        PluginRegistry::new(),
+    ) {
         Err(e) => e,
         Ok(_) => panic!("launch without volume mapping should fail"),
     };

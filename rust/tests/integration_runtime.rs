@@ -1,18 +1,25 @@
-//! Integration: the Rust PJRT runtime executes the AOT artifacts and the
-//! physics behaves (energy books balance, kernel matches the jnp oracle,
-//! bitwise determinism holds — the keystone the C/R layer builds on).
+//! Integration: the compute runtime executes the transport kernels through
+//! the [`ComputeBackend`] trait and the physics behaves (energy books
+//! balance, the production path matches the oracle path, bitwise
+//! determinism holds — the keystone the C/R layer builds on).
 //!
-//! Requires `make artifacts` to have produced `artifacts/` at the workspace
-//! root (the Makefile test target guarantees this).
+//! Runs against whatever backend `NERSC_CR_BACKEND` selects (default: the
+//! pure-Rust reference backend, which needs no artifacts on disk).
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use nersc_cr::runtime::{ComputeService, Engine, ParticleState, StaticInputs};
+use nersc_cr::runtime::{
+    load_backend, ComputeBackend, ComputeService, ParticleState, StaticInputs,
+};
 
 fn artifacts_dir() -> PathBuf {
     let dir = std::env::var("NERSC_CR_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     PathBuf::from(dir)
+}
+
+fn backend() -> Box<dyn ComputeBackend> {
+    load_backend(&artifacts_dir()).expect("load compute backend")
 }
 
 fn make_static(grid_d: usize, n_mat: usize) -> StaticInputs {
@@ -39,14 +46,14 @@ fn make_state(batch: usize, n_voxels: usize, grid_d: usize) -> ParticleState {
 }
 
 #[test]
-fn engine_loads_and_steps() {
-    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
-    let m = engine.manifest().clone();
+fn backend_loads_and_steps() {
+    let be = backend();
+    let m = be.manifest().clone();
     let si = make_static(m.grid_d, m.n_mat);
     let mut state = make_state(m.batch, m.n_voxels(), m.grid_d);
 
     let e0 = state.live_energy();
-    engine.transport_step(&mut state, &si).expect("step");
+    be.transport_step(&mut state, &si).expect("step");
     assert_eq!(state.steps_done, 1);
 
     // Energy accounting: initial = deposited + in state (escaped keep theirs).
@@ -64,15 +71,15 @@ fn engine_loads_and_steps() {
 }
 
 #[test]
-fn pallas_step_matches_ref_artifact() {
-    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
-    let m = engine.manifest().clone();
+fn production_step_matches_oracle_step() {
+    let be = backend();
+    let m = be.manifest().clone();
     let si = make_static(m.grid_d, m.n_mat);
 
     let mut a = make_state(m.batch, m.n_voxels(), m.grid_d);
     let mut b = a.clone();
-    engine.transport_step(&mut a, &si).unwrap();
-    engine.transport_step_ref(&mut b, &si).unwrap();
+    be.transport_step(&mut a, &si).unwrap();
+    be.transport_step_ref(&mut b, &si).unwrap();
     assert_eq!(a.rng, b.rng, "rng counters diverge");
     assert_eq!(a.alive, b.alive, "liveness diverges");
     for (x, y) in a.pos.iter().zip(&b.pos) {
@@ -85,16 +92,16 @@ fn pallas_step_matches_ref_artifact() {
 
 #[test]
 fn scan_equals_repeated_steps() {
-    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
-    let m = engine.manifest().clone();
+    let be = backend();
+    let m = be.manifest().clone();
     let si = make_static(m.grid_d, m.n_mat);
 
     let mut by_steps = make_state(m.batch, m.n_voxels(), m.grid_d);
     let mut by_scan = by_steps.clone();
     for _ in 0..m.scan_steps {
-        engine.transport_step(&mut by_steps, &si).unwrap();
+        be.transport_step(&mut by_steps, &si).unwrap();
     }
-    engine.transport_scan(&mut by_scan, &si).unwrap();
+    be.transport_scan(&mut by_scan, &si).unwrap();
     assert_eq!(by_steps.steps_done, by_scan.steps_done);
     assert_eq!(by_steps.rng, by_scan.rng);
     assert_eq!(by_steps.alive, by_scan.alive);
@@ -105,15 +112,15 @@ fn scan_equals_repeated_steps() {
 
 #[test]
 fn execution_bitwise_deterministic() {
-    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
-    let m = engine.manifest().clone();
+    let be = backend();
+    let m = be.manifest().clone();
     let si = make_static(m.grid_d, m.n_mat);
 
     let mut a = make_state(m.batch, m.n_voxels(), m.grid_d);
     let mut b = a.clone();
     for _ in 0..3 {
-        engine.transport_scan(&mut a, &si).unwrap();
-        engine.transport_scan(&mut b, &si).unwrap();
+        be.transport_scan(&mut a, &si).unwrap();
+        be.transport_scan(&mut b, &si).unwrap();
     }
     // Bitwise: this is what makes checkpoint-restart verifiable end-to-end.
     assert_eq!(a, b);
@@ -121,16 +128,16 @@ fn execution_bitwise_deterministic() {
 
 #[test]
 fn score_roi_matches_host_sum() {
-    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
-    let m = engine.manifest().clone();
+    let be = backend();
+    let m = be.manifest().clone();
     let si = make_static(m.grid_d, m.n_mat);
     let mut state = make_state(m.batch, m.n_voxels(), m.grid_d);
-    engine.transport_scan(&mut state, &si).unwrap();
+    be.transport_scan(&mut state, &si).unwrap();
 
     let mask: Vec<f32> = (0..m.n_voxels())
         .map(|i| if i % 3 == 0 { 1.0 } else { 0.0 })
         .collect();
-    let (roi, total, hit) = engine.score_roi(&state.edep, &mask).unwrap();
+    let (roi, total, hit) = be.score_roi(&state.edep, &mask).unwrap();
     let want_roi: f64 = state
         .edep
         .iter()
@@ -175,18 +182,18 @@ fn compute_service_threads() {
 }
 
 #[test]
-fn scan_kernel_and_ref_artifacts_bitwise_identical() {
-    // The deployable hot paths (Pallas lowering vs pure-jnp lowering of
-    // the same L2 graph) must agree bit-for-bit — this is what licenses
-    // the NERSC_CR_SCAN=ref CPU optimization in EXPERIMENTS.md §Perf.
-    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
-    let m = engine.manifest().clone();
+fn scan_production_and_oracle_paths_bitwise_identical() {
+    // The deployable hot paths (production lowering vs oracle lowering of
+    // the same logical graph) must agree bit-for-bit — this is what
+    // licenses the NERSC_CR_SCAN=ref switch in EXPERIMENTS.md §Perf.
+    let be = backend();
+    let m = be.manifest().clone();
     let si = make_static(m.grid_d, m.n_mat);
     let mut a = make_state(m.batch, m.n_voxels(), m.grid_d);
     let mut b = a.clone();
     for _ in 0..4 {
-        engine.transport_scan(&mut a, &si).unwrap();
-        engine.transport_scan_ref(&mut b, &si).unwrap();
+        be.transport_scan(&mut a, &si).unwrap();
+        be.transport_scan_ref(&mut b, &si).unwrap();
     }
     assert_eq!(a.rng, b.rng);
     assert_eq!(a.alive, b.alive);
@@ -198,28 +205,25 @@ fn scan_kernel_and_ref_artifacts_bitwise_identical() {
 
 #[test]
 fn detector_spectrum_matches_host_histogram() {
-    let engine = Engine::load(&artifacts_dir()).expect("load artifacts");
-    let m = engine.manifest().clone();
+    let be = backend();
+    let m = be.manifest().clone();
     let si = make_static(m.grid_d, m.n_mat);
     let mut state = make_state(m.batch, m.n_voxels(), m.grid_d);
     for _ in 0..2 {
-        engine.transport_scan(&mut state, &si).unwrap();
+        be.transport_scan(&mut state, &si).unwrap();
     }
     let roi: Vec<f32> = (0..m.n_voxels())
         .map(|i| if i % 2 == 0 { 1.0 } else { 0.0 })
         .collect();
     let (e_min, e_max) = (0.0f32, 50.0f32);
-    let spec = engine
-        .detector_spectrum(&state.edep, &roi, e_min, e_max)
-        .unwrap();
+    let spec = be.detector_spectrum(&state.edep, &roi, e_min, e_max).unwrap();
     assert_eq!(spec.len(), m.spectrum_bins);
 
     // Host-side oracle.
     let k = m.spectrum_bins;
     let width = (e_max - e_min) / k as f32;
     let mut want = vec![0.0f32; k];
-    for (i, (&e, &r)) in state.edep.iter().zip(&roi).enumerate() {
-        let _ = i;
+    for (&e, &r) in state.edep.iter().zip(&roi) {
         if r > 0.5 && e > 0.0 {
             let idx = (((e - e_min) / width) as i32).clamp(0, k as i32 - 1) as usize;
             want[idx] += 1.0;
@@ -235,4 +239,47 @@ fn detector_spectrum_matches_host_histogram() {
         .filter(|(&e, &r)| e > 0.0 && r > 0.5)
         .count();
     assert_eq!(total as usize, hits);
+}
+
+/// The satellite smoke test: exercise a backend purely through a trait
+/// object reference, the way every layer above `runtime` consumes it.
+#[test]
+fn trait_object_smoke() {
+    fn drive(be: &dyn ComputeBackend) {
+        let m = be.manifest().clone();
+        assert!(!be.name().is_empty());
+        let si = make_static(m.grid_d, m.n_mat);
+        let mut state = make_state(m.batch, m.n_voxels(), m.grid_d);
+        be.transport_step(&mut state, &si).unwrap();
+        be.transport_scan(&mut state, &si).unwrap();
+        assert_eq!(state.steps_done, 1 + m.scan_steps as u64);
+
+        let mask = vec![1.0f32; m.n_voxels()];
+        let (roi, total, _hits) = be.score_roi(&state.edep, &mask).unwrap();
+        assert!((roi - total).abs() <= 1e-3 * total.abs().max(1.0));
+        let spec = be.detector_spectrum(&state.edep, &mask, 0.0, 50.0).unwrap();
+        assert_eq!(spec.len(), m.spectrum_bins);
+
+        let stats = be.stats();
+        assert_eq!(stats.executions, 4, "step + scan + score + spectrum");
+        assert_eq!(stats.steps, 1 + m.scan_steps as u64);
+    }
+    let be = backend();
+    drive(be.as_ref());
+}
+
+/// Shape mismatches are reported as errors, not panics, through the trait.
+#[test]
+fn shape_errors_are_reported() {
+    let be = backend();
+    let m = be.manifest().clone();
+    let si = make_static(m.grid_d, m.n_mat);
+    // Scoring grid sized for the wrong geometry.
+    let mut state = make_state(m.batch, 8, m.grid_d);
+    assert!(be.transport_step(&mut state, &si).is_err());
+    // Static inputs that disagree with themselves.
+    let mut bad = make_static(m.grid_d, m.n_mat);
+    bad.grid.pop();
+    let mut state2 = make_state(m.batch, m.n_voxels(), m.grid_d);
+    assert!(be.transport_step(&mut state2, &bad).is_err());
 }

@@ -1,0 +1,97 @@
+//! Offline shim for the `crc32fast` crate: CRC-32/IEEE (reflected,
+//! polynomial 0xEDB88320, init/xorout 0xFFFFFFFF) — the checksum used by
+//! gzip, zip and the DMTCP-analog checkpoint images in this repo.
+//!
+//! Only the API surface `nersc_cr` uses is provided: [`hash`] and a
+//! streaming [`Hasher`].
+
+/// Byte-at-a-time lookup table for the reflected IEEE polynomial.
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0usize;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
+const TABLE: [u32; 256] = make_table();
+
+/// CRC-32/IEEE of `bytes` in one call.
+pub fn hash(bytes: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(bytes);
+    h.finalize()
+}
+
+/// Streaming CRC-32 state (API-compatible subset of `crc32fast::Hasher`).
+#[derive(Debug, Clone)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Hasher {
+    /// Fresh hasher (initial state 0xFFFFFFFF, per the IEEE definition).
+    pub fn new() -> Self {
+        Self { state: 0xFFFF_FFFF }
+    }
+
+    /// Absorb more bytes.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.state;
+        for &b in bytes {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    /// Final checksum value.
+    pub fn finalize(self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_value() {
+        // The canonical CRC-32/IEEE check value.
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert_eq!(hash(b""), 0);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data = b"The quick brown fox jumps over the lazy dog";
+        let mut h = Hasher::new();
+        for chunk in data.chunks(7) {
+            h.update(chunk);
+        }
+        assert_eq!(h.finalize(), hash(data));
+    }
+
+    #[test]
+    fn known_vector() {
+        // zlib.crc32(b"gzip shim") == 0x8f240689 (computed with CPython).
+        assert_eq!(hash(b"gzip shim"), 0x8F24_0689);
+    }
+}

@@ -1,0 +1,339 @@
+//! Offline shim for the `flate2` crate.
+//!
+//! Implements the [`write::GzEncoder`] / [`read::GzDecoder`] subset that
+//! `nersc_cr` uses, producing **valid gzip streams** (RFC 1952 container,
+//! RFC 1951 *stored* DEFLATE blocks, CRC-32 + ISIZE trailer) that any real
+//! gzip implementation can read. Nothing is actually compressed — stored
+//! blocks copy the input verbatim — so "gzip'd" checkpoint images are
+//! integrity-protected and format-compatible but not smaller. Swap in the
+//! real `flate2` via a `[patch]` entry to get real compression.
+//!
+//! The decoder accepts gzip streams whose DEFLATE payload uses stored
+//! blocks only (i.e. everything the encoder here emits, or `gzip -0`-style
+//! output); Huffman-compressed blocks are rejected with a clear error.
+
+use std::io;
+
+/// Compression level. Accepted for API compatibility; stored blocks are
+/// emitted regardless of the level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compression(u32);
+
+impl Compression {
+    /// Construct a specific level (0-9). Retained for API compatibility.
+    pub fn new(level: u32) -> Self {
+        Self(level)
+    }
+
+    /// No compression.
+    pub fn none() -> Self {
+        Self(0)
+    }
+
+    /// Fastest "compression" (stored blocks here).
+    pub fn fast() -> Self {
+        Self(1)
+    }
+
+    /// Best "compression" (still stored blocks here).
+    pub fn best() -> Self {
+        Self(9)
+    }
+
+    /// The numeric level.
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Self {
+        Self(6)
+    }
+}
+
+/// gzip header: magic, CM=8 (deflate), no flags, zero mtime, XFL=0,
+/// OS=255 (unknown).
+const GZIP_HEADER: [u8; 10] = [0x1F, 0x8B, 0x08, 0, 0, 0, 0, 0, 0, 0xFF];
+
+/// Serialize `data` as a gzip member using stored DEFLATE blocks.
+fn gzip_stored(data: &[u8]) -> Vec<u8> {
+    // header + per-64KiB block overhead (5 bytes) + trailer.
+    let n_blocks = data.len() / 0xFFFF + 1;
+    let mut out = Vec::with_capacity(data.len() + 10 + 8 + 5 * n_blocks);
+    out.extend_from_slice(&GZIP_HEADER);
+    let chunks: Vec<&[u8]> = data.chunks(0xFFFF).collect();
+    if chunks.is_empty() {
+        // Empty input: one final stored block of length zero.
+        out.extend_from_slice(&[0x01, 0x00, 0x00, 0xFF, 0xFF]);
+    }
+    for (idx, chunk) in chunks.iter().enumerate() {
+        let bfinal = u8::from(idx + 1 == chunks.len());
+        let len = chunk.len() as u16;
+        out.push(bfinal); // BFINAL bit, BTYPE=00 (stored)
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&(!len).to_le_bytes());
+        out.extend_from_slice(chunk);
+    }
+    out.extend_from_slice(&crc32fast::hash(data).to_le_bytes());
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out
+}
+
+/// Parse a gzip member produced with stored DEFLATE blocks.
+fn gunzip_stored(bytes: &[u8]) -> io::Result<Vec<u8>> {
+    let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
+    if bytes.len() < 18 {
+        return Err(bad("gzip stream truncated"));
+    }
+    if bytes[0] != 0x1F || bytes[1] != 0x8B {
+        return Err(bad("bad gzip magic"));
+    }
+    if bytes[2] != 0x08 {
+        return Err(bad("unsupported gzip compression method"));
+    }
+    let flg = bytes[3];
+    let mut pos = 10usize;
+    // Skip the optional header fields we never emit but tolerate.
+    if flg & 0x04 != 0 {
+        // FEXTRA
+        if pos + 2 > bytes.len() {
+            return Err(bad("gzip FEXTRA truncated"));
+        }
+        let xlen = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as usize;
+        pos += 2 + xlen;
+    }
+    for flag in [0x08u8, 0x10] {
+        // FNAME, FCOMMENT: zero-terminated strings.
+        if flg & flag != 0 {
+            while pos < bytes.len() && bytes[pos] != 0 {
+                pos += 1;
+            }
+            pos += 1;
+        }
+    }
+    if flg & 0x02 != 0 {
+        pos += 2; // FHCRC
+    }
+    if pos >= bytes.len() {
+        return Err(bad("gzip header overruns stream"));
+    }
+    // DEFLATE payload: stored blocks only.
+    let mut out = Vec::new();
+    loop {
+        if pos >= bytes.len() {
+            return Err(bad("deflate stream truncated"));
+        }
+        let hdr = bytes[pos];
+        pos += 1;
+        if hdr & 0x06 != 0 {
+            return Err(bad(
+                "flate2 shim: only stored deflate blocks are supported",
+            ));
+        }
+        if pos + 4 > bytes.len() {
+            return Err(bad("stored block header truncated"));
+        }
+        let len = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as usize;
+        let nlen = u16::from_le_bytes([bytes[pos + 2], bytes[pos + 3]]);
+        if nlen != !(len as u16) {
+            return Err(bad("stored block LEN/NLEN mismatch"));
+        }
+        pos += 4;
+        if pos + len > bytes.len() {
+            return Err(bad("stored block body truncated"));
+        }
+        out.extend_from_slice(&bytes[pos..pos + len]);
+        pos += len;
+        if hdr & 0x01 != 0 {
+            break;
+        }
+    }
+    // Trailer: CRC-32 of the plain data, then ISIZE (mod 2^32).
+    if pos + 8 > bytes.len() {
+        return Err(bad("gzip trailer truncated"));
+    }
+    let crc = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+    let isize = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+    if crc32fast::hash(&out) != crc {
+        return Err(bad("gzip CRC mismatch"));
+    }
+    if out.len() as u32 != isize {
+        return Err(bad("gzip ISIZE mismatch"));
+    }
+    Ok(out)
+}
+
+/// Write-side gzip adapters.
+pub mod write {
+    use super::{gzip_stored, Compression};
+    use std::io::{self, Write};
+
+    /// Buffers everything written to it; [`GzEncoder::finish`] emits the
+    /// gzip stream into the inner writer and returns it.
+    #[derive(Debug)]
+    pub struct GzEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> GzEncoder<W> {
+        /// Wrap `inner`; `level` is accepted for API compatibility.
+        pub fn new(inner: W, _level: Compression) -> Self {
+            Self {
+                inner,
+                buf: Vec::new(),
+            }
+        }
+
+        /// Emit the gzip stream and hand back the inner writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            let bytes = gzip_stored(&self.buf);
+            self.inner.write_all(&bytes)?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for GzEncoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+/// Read-side gzip adapters.
+pub mod read {
+    use super::gunzip_stored;
+    use std::io::{self, Read};
+
+    /// Decodes a whole gzip stream from the inner reader on first read,
+    /// then serves the plain bytes. Decode failures are sticky: every
+    /// subsequent read reports the same error rather than a clean EOF, so
+    /// a retrying caller cannot mistake a corrupt stream for empty data.
+    #[derive(Debug)]
+    pub struct GzDecoder<R: Read> {
+        inner: Option<R>,
+        plain: Vec<u8>,
+        pos: usize,
+        error: Option<(io::ErrorKind, String)>,
+    }
+
+    impl<R: Read> GzDecoder<R> {
+        /// Wrap `inner`. The stream is consumed lazily on first read.
+        pub fn new(inner: R) -> Self {
+            Self {
+                inner: Some(inner),
+                plain: Vec::new(),
+                pos: 0,
+                error: None,
+            }
+        }
+    }
+
+    impl<R: Read> Read for GzDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if let Some(mut r) = self.inner.take() {
+                let decoded = (|| {
+                    let mut raw = Vec::new();
+                    r.read_to_end(&mut raw)?;
+                    gunzip_stored(&raw)
+                })();
+                match decoded {
+                    Ok(plain) => self.plain = plain,
+                    Err(e) => self.error = Some((e.kind(), e.to_string())),
+                }
+            }
+            if let Some((kind, msg)) = &self.error {
+                return Err(io::Error::new(*kind, msg.clone()));
+            }
+            let n = buf.len().min(self.plain.len() - self.pos);
+            buf[..n].copy_from_slice(&self.plain[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::read::GzDecoder;
+    use super::write::GzEncoder;
+    use super::{gunzip_stored, gzip_stored, Compression};
+    use std::io::{Read, Write};
+
+    fn roundtrip(data: &[u8]) {
+        let mut enc = GzEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(data).unwrap();
+        let stream = enc.finish().unwrap();
+        let mut dec = GzDecoder::new(stream.as_slice());
+        let mut back = Vec::new();
+        dec.read_to_end(&mut back).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        roundtrip(b"hello checkpoint world");
+    }
+
+    #[test]
+    fn roundtrip_empty() {
+        roundtrip(b"");
+    }
+
+    #[test]
+    fn roundtrip_multi_block() {
+        // > 64 KiB forces several stored blocks.
+        let data: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn trailer_crc_is_checked() {
+        let mut stream = gzip_stored(b"payload");
+        let n = stream.len();
+        stream[n - 6] ^= 0xFF; // flip a CRC byte
+        assert!(gunzip_stored(&stream).is_err());
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let stream = gzip_stored(b"payload bytes here");
+        for cut in [3, 11, stream.len() - 3] {
+            assert!(gunzip_stored(&stream[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn huffman_blocks_rejected() {
+        let mut stream = gzip_stored(b"x");
+        stream[10] = 0x03; // BFINAL=1, BTYPE=01 (fixed Huffman)
+        assert!(gunzip_stored(&stream).is_err());
+    }
+
+    #[test]
+    fn header_magic_checked() {
+        let mut stream = gzip_stored(b"x");
+        stream[0] = 0x00;
+        assert!(gunzip_stored(&stream).is_err());
+    }
+
+    #[test]
+    fn decoder_errors_are_sticky() {
+        let mut stream = gzip_stored(b"payload");
+        let n = stream.len();
+        stream[n - 6] ^= 0xFF; // corrupt the CRC
+        let mut dec = GzDecoder::new(stream.as_slice());
+        let mut out = Vec::new();
+        assert!(dec.read_to_end(&mut out).is_err());
+        // A retry must re-report the failure, not fake a clean EOF.
+        let mut buf = [0u8; 8];
+        assert!(dec.read(&mut buf).is_err());
+    }
+}

@@ -1,0 +1,238 @@
+//! Offline shim for the `log` facade crate.
+//!
+//! Provides the subset `nersc_cr` uses: the five level macros
+//! (`error!` … `trace!`), the [`Log`] trait with [`Record`] / [`Metadata`],
+//! and the global `set_logger` / `set_max_level` wiring. Semantics mirror
+//! the real crate: records above the max level are skipped before the
+//! logger is consulted, and `set_logger` succeeds exactly once.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity of a single log record, most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    /// Unrecoverable or user-visible failures.
+    Error = 1,
+    /// Suspicious conditions the run survives.
+    Warn,
+    /// High-level progress.
+    Info,
+    /// Developer diagnostics.
+    Debug,
+    /// Very verbose tracing.
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Global verbosity ceiling: `Off` plus one filter per [`Level`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    /// Disable all logging.
+    Off = 0,
+    /// Allow `Error` only.
+    Error,
+    /// Allow `Warn` and above.
+    Warn,
+    /// Allow `Info` and above.
+    Info,
+    /// Allow `Debug` and above.
+    Debug,
+    /// Allow everything.
+    Trace,
+}
+
+/// Record metadata consulted by [`Log::enabled`].
+#[derive(Debug, Clone)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    /// The record's level.
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    /// The record's target (module path by default).
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record, passed to [`Log::log`].
+#[derive(Debug, Clone)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    /// The record's metadata.
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    /// The record's level.
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    /// The record's target.
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    /// The formatted message payload.
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A log sink. Implementations must be thread-safe: records arrive from
+/// any thread.
+pub trait Log: Sync + Send {
+    /// Fast pre-filter; return `false` to drop the record.
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    /// Consume one record.
+    fn log(&self, record: &Record);
+    /// Flush buffered records, if any.
+    fn flush(&self);
+}
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+
+/// Error returned when [`set_logger`] is called twice.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the process-wide logger. Succeeds exactly once.
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global verbosity ceiling.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// The current global verbosity ceiling.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Macro plumbing: filter, build the record, dispatch. Not public API in
+/// the real crate either, but macro expansion needs a path to it.
+#[doc(hidden)]
+pub fn __dispatch(level: Level, target: &str, args: fmt::Arguments) {
+    if level as usize > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let metadata = Metadata { level, target };
+        if logger.enabled(&metadata) {
+            logger.log(&Record { metadata, args });
+        }
+    }
+}
+
+/// Log at an explicit [`Level`].
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__dispatch($lvl, module_path!(), format_args!($($arg)+))
+    };
+}
+
+/// Log at [`Level::Error`].
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+/// Log at [`Level::Trace`].
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+
+    impl Log for Counter {
+        fn enabled(&self, _m: &Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &Record) {
+            let _ = format!("{}", record.args());
+            HITS.fetch_add(1, Ordering::Relaxed);
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn filtering_and_dispatch() {
+        static COUNTER: Counter = Counter;
+        set_logger(&COUNTER).unwrap();
+        set_max_level(LevelFilter::Info);
+        crate::info!("visible {}", 1);
+        crate::debug!("filtered out");
+        assert_eq!(HITS.load(Ordering::Relaxed), 1);
+        assert!(set_logger(&COUNTER).is_err(), "second install must fail");
+        assert_eq!(max_level(), LevelFilter::Info);
+    }
+}

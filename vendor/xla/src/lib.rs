@@ -1,0 +1,167 @@
+//! Offline stub of the `xla-rs` bindings (`xla` crate) API surface that
+//! `nersc_cr`'s feature-gated PJRT engine compiles against.
+//!
+//! The real crate links the XLA C++ runtime, which is not present in the
+//! offline build environment. This stub keeps `--features pjrt` *building*
+//! so the engine's call sites stay type-checked; every runtime entry point
+//! returns [`Error::Stub`] with an explanation. To run a real PJRT engine,
+//! replace this path dependency with the published `xla` crate (or a
+//! `[patch]` entry) — the API below is the subset `nersc_cr` calls.
+
+use std::fmt;
+use std::marker::PhantomData;
+
+/// Errors surfaced by the (stubbed) XLA runtime.
+#[derive(Debug)]
+pub enum Error {
+    /// The operation requires the real XLA runtime.
+    Stub(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Stub(what) => write!(
+                f,
+                "xla stub: {what} requires the real xla-rs bindings; this build carries \
+                 the offline stub (see vendor/README.md). Use the default reference \
+                 backend, or link the real `xla` crate to enable PJRT."
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Stub result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types [`Literal::vec1`] accepts (sealed in the real crate).
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+
+/// A host-side literal value (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _priv: PhantomData<()>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Self {
+        Self { _priv: PhantomData }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Self> {
+        Ok(Self { _priv: PhantomData })
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Stub("Literal::to_tuple"))
+    }
+
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::Stub("Literal::to_tuple1"))
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Stub("Literal::to_vec"))
+    }
+}
+
+/// Parsed HLO module (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _priv: PhantomData<()>,
+}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::Stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation handle (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _priv: PhantomData<()>,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _priv: PhantomData }
+    }
+}
+
+/// A device buffer holding an execution result (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _priv: PhantomData<()>,
+}
+
+impl PjRtBuffer {
+    /// Transfer the buffer to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable (stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: PhantomData<()>,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given input literals.
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Stub("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A PJRT client (stub). [`PjRtClient::cpu`] fails fast so engine startup
+/// reports a clear error instead of limping along.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _priv: PhantomData<()>,
+}
+
+impl PjRtClient {
+    /// Connect to the CPU PJRT plugin.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Stub("PjRtClient::cpu"))
+    }
+
+    /// The backing platform's name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Stub("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_errors_are_explanatory() {
+        let err = PjRtClient::cpu().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("reference backend"), "{msg}");
+    }
+}
