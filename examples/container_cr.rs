@@ -1,26 +1,25 @@
-//! Containerized C/R, end to end (§IV–V of the paper).
+//! Containerized C/R, end to end (§IV–V of the paper), through `CrSession`.
 //!
 //! Builds an application image, embeds DMTCP with the paper's own
 //! Containerfile snippet, migrates it for batch use, runs a checkpointed
-//! physics workload *inside* podman-hpc, preempts it, and restarts it
-//! inside shifter from the same image set — demonstrating both the
-//! DMTCP-in-the-image constraint and cross-runtime compatibility.
+//! physics workload *inside* podman-hpc, preempts it, switches the session
+//! substrate, and restarts it inside shifter from the same image set —
+//! demonstrating both the DMTCP-in-the-image constraint and cross-runtime
+//! compatibility with the same orchestration code as the bare flow.
 //!
 //! ```text
 //! cargo run --release --example container_cr
 //! ```
 
-use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use nersc_cr::container::{
     ContainerRuntime, Image, PodmanHpc, Registry, RunSpec, Shifter, EMBED_DMTCP_SNIPPET,
 };
-use nersc_cr::cr::{latest_images, start_coordinator, CrConfig};
-use nersc_cr::dmtcp::{dmtcp_restart, PluginRegistry};
+use nersc_cr::cr::{CrSession, CrStrategy, Substrate};
 use nersc_cr::report::{human_bytes, Table};
 use nersc_cr::runtime::service;
-use nersc_cr::workload::{transport_worker, G4App, G4Version, NeutronSource, WorkloadKind};
+use nersc_cr::workload::{G4App, G4Version, NeutronSource, WorkloadKind};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     nersc_cr::logging::init();
@@ -72,7 +71,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     ]);
     println!("{}", caps.render());
 
-    // --- C/R inside the container ----------------------------------------
+    // --- C/R inside the container, one session across both runtimes ------
     let wd = std::env::temp_dir().join(format!("ncr_container_cr_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&wd);
     std::fs::create_dir_all(&wd)?;
@@ -84,77 +83,47 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let target = 200 * m.scan_steps as u64;
     let seed = 55;
 
-    let cfg = CrConfig::new("210001", &wd);
-    let (coord, _env) = start_coordinator(&cfg)?;
+    // The checkpoint dir inside the container is /ckpt, volume-mapped to
+    // the host dir the coordinator writes into (a bind mount).
     let spec = RunSpec::default()
-        .volume(cfg.ckpt_dir.to_string_lossy(), "/ckpt")
+        .volume(wd.join("ckpt").to_string_lossy(), "/ckpt")
         .env("DMTCP_CHECKPOINT_DIR", "/ckpt");
-    let container = podman.run("elvis:test", spec.clone())?;
-    let state = Arc::new(Mutex::new(app.fresh_state(m.batch, target, seed)));
-    let mut launched = container.launch_checkpointed(
-        "g4neutron",
-        coord.addr(),
-        Arc::clone(&state),
-        PluginRegistry::new(),
-    )?;
-    launched.wait_attached(Duration::from_secs(10))?;
-    {
-        let (st, hh, si) = (Arc::clone(&state), h.clone(), Arc::clone(&app.si));
-        launched
-            .process
-            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
-    }
-    println!("running inside podman-hpc (env CONTAINER_RUNTIME={})", {
-        let e = launched.process.env.lock().unwrap();
-        e.get("CONTAINER_RUNTIME").cloned().unwrap_or_default()
-    });
 
-    while state.lock().unwrap().particles.steps_done < target / 3 {
+    let mut session = CrSession::builder(&app)
+        .substrate(Substrate::container(podman.run("elvis:test", spec.clone())?))
+        .strategy(CrStrategy::Manual)
+        .workdir(&wd)
+        .target_steps(target)
+        .seed(seed)
+        .build()?;
+    session.submit()?;
+    println!("running inside {} (job {})", session.substrate().name(), session.jobid());
+
+    while session.monitor()?.steps_done < target / 3 {
         std::thread::sleep(Duration::from_millis(5));
     }
-    let images = coord.checkpoint_all()?;
+    let images = session.checkpoint_now()?;
     println!(
-        "checkpoint inside the container: {} -> {}",
-        images[0].path.display(),
-        human_bytes(images[0].stored_bytes)
+        "checkpoint inside the container: {}",
+        images.last().unwrap().display()
     );
-    coord.kill_all();
-    let _ = launched.join();
+    session.kill()?;
     println!(">> preempted\n");
 
-    // --- restart inside shifter -------------------------------------------
-    let cfg2 = CrConfig::new("210002", &wd);
-    let (coord2, _env) = start_coordinator(&cfg2)?;
-    let sh_container = shifter.run("elvis:test", spec)?;
+    // --- restart inside shifter: same session, new substrate --------------
+    session.set_substrate(Substrate::container(shifter.run("elvis:test", spec)?))?;
+    let resumed_at = session.resubmit_from_checkpoint()?;
     println!(
-        "restarting inside {} (same image, same checkpoint volume)",
-        sh_container.runtime_name
+        "restarting inside {} (same image, same checkpoint volume) at step {resumed_at}",
+        session.substrate().name()
     );
-    let image_path = latest_images(&cfg.ckpt_dir)?.pop().unwrap();
-    let state2 = Arc::new(Mutex::new(app.shell_state()));
-    let restarted =
-        dmtcp_restart(&image_path, coord2.addr(), Arc::clone(&state2), PluginRegistry::new())?;
-    let mut launched2 = restarted.launched;
-    launched2.wait_attached(Duration::from_secs(10))?;
-    {
-        let (st, hh, si) = (Arc::clone(&state2), h.clone(), Arc::clone(&app.si));
-        launched2
-            .process
-            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
-    }
-    while !state2.lock().unwrap().done() {
-        std::thread::sleep(Duration::from_millis(5));
-    }
-    coord2.kill_all();
-    let _ = launched2.join();
+    session.wait_done(Duration::from_secs(120))?;
 
     // Verify against the uninterrupted run + detector readout.
-    let mut reference = app.fresh_state(m.batch, target, seed);
-    reference.particles =
-        h.scan(reference.particles, &app.si, (target / m.scan_steps as u64) as u32)?;
-    let s2 = state2.lock().unwrap();
-    assert_eq!(s2.particles, reference.particles, "cross-runtime restart mismatch");
-    let (roi, total, hits) = h.score_roi(s2.particles.edep.clone(), app.workload.roi.clone())?;
+    let final_state = session.final_state()?;
+    session.verify_final(&final_state)?;
+    let (roi, total, hits) =
+        h.score_roi(final_state.particles.edep.clone(), app.workload.roi.clone())?;
     let reading = nersc_cr::workload::reading(&app.workload, roi, total, hits);
     println!(
         "\nHe-3 counter: {} counts ({} MeV in ROI, efficiency {:.2}%) — bitwise verified ✓",
@@ -162,6 +131,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         reading.roi_edep_mev,
         reading.efficiency * 100.0
     );
+    session.finish();
     std::fs::remove_dir_all(&wd).ok();
     Ok(())
 }

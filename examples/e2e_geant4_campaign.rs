@@ -15,7 +15,7 @@
 
 use std::time::{Duration, Instant};
 
-use nersc_cr::cr::{run_auto, CrPolicy};
+use nersc_cr::cr::{CrPolicy, CrSession, CrStrategy};
 use nersc_cr::report::{human_bytes, Table};
 use nersc_cr::runtime::service;
 use nersc_cr::workload::{reading, G4App, G4Version, WorkloadKind};
@@ -74,7 +74,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 ..Default::default()
             };
             let t0 = Instant::now();
-            let report = run_auto(&app, &h, target, seed, &policy, &wd)?;
+            let report = CrSession::builder(&app)
+                .strategy(CrStrategy::Auto(policy))
+                .workdir(&wd)
+                .target_steps(target)
+                .seed(seed)
+                .build()?
+                .run()?;
             let wall = t0.elapsed().as_secs_f64();
 
             // Uninterrupted reference for the bitwise check.

@@ -1,24 +1,23 @@
-//! Quickstart: the whole system in one file.
+//! Quickstart: the whole system in one file, driven through `CrSession`.
 //!
-//! Boots the PJRT engine from `artifacts/`, starts a DMTCP-style
-//! coordinator, launches a Geant4-analog workload under checkpoint
-//! control, checkpoints it, preempts it, restarts from the image on a
-//! "new node" (fresh coordinator), and verifies the final physics is
-//! bit-identical to an uninterrupted run.
+//! Boots the compute service, builds a Geant4-analog workload, and walks
+//! the paper's §V.B.2 operator flow as session steps: submit under
+//! checkpoint control, monitor, checkpoint mid-flight, preempt (kill),
+//! restart from the image on a "new node" (fresh coordinator), run to
+//! completion, and verify the final physics is bit-identical to an
+//! uninterrupted run.
 //!
 //! ```text
 //! cargo run --release --example quickstart
 //! ```
 
-use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use nersc_cr::cr::{latest_images, start_coordinator, CrConfig};
+use nersc_cr::cr::{CrSession, CrStrategy, Substrate};
 use nersc_cr::dmtcp::coordinator::client_table;
-use nersc_cr::dmtcp::{dmtcp_launch, dmtcp_restart, LaunchSpec, PluginRegistry};
 use nersc_cr::report::human_bytes;
 use nersc_cr::runtime::service;
-use nersc_cr::workload::{transport_worker, G4App, G4Version, WorkloadKind};
+use nersc_cr::workload::{G4App, G4Version, WorkloadKind};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     nersc_cr::logging::init();
@@ -37,114 +36,82 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let target = 160 * m.scan_steps as u64;
     let seed = 2024;
 
-    // --- L3: coordinator + checkpointed process -------------------------
+    // --- L3: one C/R session over the whole lifecycle -------------------
     let wd = std::env::temp_dir().join(format!("ncr_quickstart_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&wd);
-    std::fs::create_dir_all(&wd)?;
-    let cfg = CrConfig::new("100001", &wd);
-    let (coord, env) = start_coordinator(&cfg)?;
+    let mut session = CrSession::builder(&app)
+        .substrate(Substrate::bare())
+        .strategy(CrStrategy::Manual)
+        .workdir(&wd)
+        .target_steps(target)
+        .seed(seed)
+        .build()?;
+
+    // Step 1: submit — coordinator boot + dmtcp_launch + worker spawn.
+    session.submit()?;
     println!(
-        "\ncoordinator: {} (rendezvous file {})",
-        coord.addr(),
-        coord.command_file().unwrap().display()
+        "\nsubmitted job {} on substrate {}",
+        session.jobid(),
+        session.substrate().name()
     );
-    println!("env for the job: {env:?}");
-
-    let state = Arc::new(Mutex::new(app.fresh_state(m.batch, target, seed)));
-    let mut spec = LaunchSpec::new("g4-water-phantom", coord.addr());
-    spec.env = env;
-    let mut launched = dmtcp_launch(spec, Arc::clone(&state), PluginRegistry::new());
-    // Two user threads: one transport driver + one auxiliary (Fig 1 shape).
     {
-        let (st, hh, si) = (Arc::clone(&state), h.clone(), Arc::clone(&app.si));
-        launched
-            .process
-            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
-    }
-    {
-        let st = Arc::clone(&state);
-        launched.process.spawn_user_thread(move |ctx| loop {
-            if ctx.ckpt_point() == nersc_cr::dmtcp::GateVerdict::Exit {
-                break;
-            }
-            if st.lock().unwrap().done() {
-                break;
-            }
-            std::thread::sleep(Duration::from_millis(2));
-        });
-    }
-    let vpid = launched.wait_attached(Duration::from_secs(10))?;
-    println!("\nFig-1 topology: coordinator + 1 process (vpid {vpid}), ckpt thread + 2 user threads");
-    for (v, (name, pid, threads)) in client_table(&coord) {
-        println!("  vpid {v}: {name} (real pid {pid}, {threads} threads at hello)");
+        let coord = session.coordinator()?;
+        println!(
+            "coordinator: {} (rendezvous file {})",
+            coord.addr(),
+            coord.command_file().unwrap().display()
+        );
+        println!("\nFig-1 topology: coordinator + 1 process, ckpt thread + user threads");
+        for (v, (name, pid, threads)) in client_table(coord) {
+            println!("  vpid {v}: {name} (real pid {pid}, {threads} threads at hello)");
+        }
     }
 
-    // Let it run, checkpoint mid-flight.
-    while state.lock().unwrap().particles.steps_done < target / 4 {
+    // Step 2: monitor until a quarter of the work is done.
+    while session.monitor()?.steps_done < target / 4 {
         std::thread::sleep(Duration::from_millis(5));
     }
-    let images = coord.checkpoint_all()?;
-    let img = &images[0];
+
+    // Step 3: checkpoint mid-flight.
+    let images = session.checkpoint_now()?;
     println!(
-        "\ncheckpoint #{}: {} ({} raw -> {} stored, {:.1} ms)",
-        img.ckpt_id,
-        img.path.display(),
-        human_bytes(img.raw_bytes),
-        human_bytes(img.stored_bytes),
-        img.write_secs * 1e3
+        "\ncheckpoint: {} image(s), newest {}",
+        images.len(),
+        images.last().unwrap().display()
     );
 
-    // Preemption: SIGTERM everything (the batch system wants the nodes).
-    println!(">> preempting (kill_all) — progress was {} steps", {
-        let s = state.lock().unwrap();
-        s.particles.steps_done
-    });
-    coord.kill_all();
-    let _ = launched.join();
-    drop(coord);
+    // Step 4: preemption — the batch system wants the nodes back.
+    let at = session.monitor()?.steps_done;
+    println!(">> preempting (kill) — progress was {at} steps");
+    session.kill()?;
 
-    // Restart on a "new node": fresh coordinator, state from the image.
-    let cfg2 = CrConfig::new("100002", &wd);
-    let (coord2, _env2) = start_coordinator(&cfg2)?;
-    let image = latest_images(&cfg.ckpt_dir)?.pop().expect("an image exists");
-    let state2 = Arc::new(Mutex::new(app.shell_state()));
-    let restarted =
-        dmtcp_restart(&image, coord2.addr(), Arc::clone(&state2), PluginRegistry::new())?;
+    // Step 5: resubmit on a "new node" (fresh coordinator, same images).
+    let resumed_at = session.resubmit_from_checkpoint()?;
     println!(
-        ">> restarted from {} at step {} (generation {})",
-        image.display(),
-        restarted.header.steps_done,
-        restarted.header.generation + 1
+        ">> restarted from the newest image at step {resumed_at} (incarnation {})",
+        session.incarnation()
     );
-    let mut launched2 = restarted.launched;
-    launched2.wait_attached(Duration::from_secs(10))?;
-    {
-        let (st, hh, si) = (Arc::clone(&state2), h.clone(), Arc::clone(&app.si));
-        launched2
-            .process
-            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
-    }
-    while !state2.lock().unwrap().done() {
-        std::thread::sleep(Duration::from_millis(5));
-    }
-    coord2.kill_all();
-    let _ = launched2.join();
+    let fin = session.wait_done(Duration::from_secs(120))?;
+    println!(
+        "done: {}/{} steps ({:.0}%)",
+        fin.steps_done,
+        fin.target_steps,
+        fin.progress * 100.0
+    );
 
     // Verify: bit-identical to an uninterrupted run.
-    let mut reference = app.fresh_state(m.batch, target, seed);
-    reference.particles = h.scan(
-        reference.particles,
-        &app.si,
-        (target / m.scan_steps as u64) as u32,
-    )?;
-    let got = state2.lock().unwrap();
-    let (roi, total, hits) = h.score_roi(got.particles.edep.clone(), app.workload.roi.clone())?;
+    let final_state = session.final_state()?;
+    session.verify_final(&final_state)?;
+    let (roi, total, hits) =
+        h.score_roi(final_state.particles.edep.clone(), app.workload.roi.clone())?;
     println!("\nresult: ROI edep {roi:.2} MeV, total {total:.2} MeV, {hits} voxels hit");
-    assert_eq!(
-        got.particles, reference.particles,
-        "restart result differs from uninterrupted run!"
-    );
     println!("verified: preempt+restart result is BIT-IDENTICAL to the uninterrupted run ✓");
+    println!(
+        "(state size {}, workdir {})",
+        human_bytes(nersc_cr::dmtcp::Checkpointable::size_bytes(&final_state) as u64),
+        wd.display()
+    );
+    session.finish();
     std::fs::remove_dir_all(&wd).ok();
     Ok(())
 }

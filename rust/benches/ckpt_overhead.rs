@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use nersc_cr::cr::{run_auto, CrPolicy};
+use nersc_cr::cr::{CrPolicy, CrSession, CrStrategy};
 use nersc_cr::dmtcp::{
     dmtcp_launch, Checkpointable, CheckpointImage, Coordinator, CoordinatorConfig, GateVerdict,
     ImageHeader, LaunchSpec, PluginRegistry,
@@ -154,7 +154,15 @@ fn bench_end_to_end_overhead() {
             ckpt_interval: Duration::from_millis(200),
             ..Default::default()
         };
-        let r = run_auto(&app, &h, target, 99, &policy, &wd).expect(label);
+        let r = CrSession::builder(&app)
+            .strategy(CrStrategy::Auto(policy))
+            .workdir(&wd)
+            .target_steps(target)
+            .seed(99)
+            .build()
+            .expect(label)
+            .run()
+            .expect(label);
         std::fs::remove_dir_all(&wd).ok();
         r
     };

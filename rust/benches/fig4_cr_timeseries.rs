@@ -9,7 +9,7 @@
 
 use std::time::Duration;
 
-use nersc_cr::cr::{run_auto, CrPolicy, CrReport};
+use nersc_cr::cr::{CrPolicy, CrReport, CrSession, CrStrategy};
 use nersc_cr::metrics::{ascii_chart, to_csv, BASE_PROCESS_OVERHEAD};
 use nersc_cr::report::{human_bytes, Table};
 use nersc_cr::runtime::service;
@@ -29,7 +29,15 @@ fn run(label: &str, policy: &CrPolicy, target_scans: u64, seed: u64) -> CrReport
     ));
     let _ = std::fs::remove_dir_all(&wd);
     std::fs::create_dir_all(&wd).unwrap();
-    let report = run_auto(&app, &h, target, seed, policy, &wd).expect(label);
+    let report = CrSession::builder(&app)
+        .strategy(CrStrategy::Auto(policy.clone()))
+        .workdir(&wd)
+        .target_steps(target)
+        .seed(seed)
+        .build()
+        .expect(label)
+        .run()
+        .expect(label);
     std::fs::remove_dir_all(&wd).ok();
     report
 }

@@ -7,7 +7,7 @@
 
 use std::time::{Duration, Instant};
 
-use nersc_cr::cr::{run_auto, CrPolicy};
+use nersc_cr::cr::{CrPolicy, CrSession, CrStrategy};
 use nersc_cr::report::{human_bytes, Table};
 use nersc_cr::runtime::service;
 use nersc_cr::workload::{G4App, G4Version, WorkloadKind};
@@ -49,7 +49,15 @@ fn main() {
                 ..Default::default()
             };
             let tw = Instant::now();
-            let report = run_auto(&app, &h, target, seed, &policy, &wd).expect("run_auto");
+            let report = CrSession::builder(&app)
+                .strategy(CrStrategy::Auto(policy))
+                .workdir(&wd)
+                .target_steps(target)
+                .seed(seed)
+                .build()
+                .expect("session build")
+                .run()
+                .expect("session run");
             let wall = tw.elapsed().as_secs_f64();
 
             let mut reference = app.fresh_state(m.batch, target, seed);

@@ -106,6 +106,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
             for k in crate::workload::WorkloadKind::all() {
                 println!("{}", k.label());
             }
+            println!("{}", crate::workload::CP2K_SCF_LABEL);
             Ok(())
         }
         Some(other) => Err(Error::Usage(format!(
@@ -218,6 +219,44 @@ fn cmd_sbatch(args: &[String]) -> Result<()> {
 fn cmd_run(args: &[String]) -> Result<()> {
     let o = Opts::parse(args, &[])?;
     let wl_name = o.get_or("workload", "water-phantom");
+    let steps: u64 = o.get_or("steps", "480").parse().unwrap_or(480);
+    let workdir = PathBuf::from(o.get_or(
+        "workdir",
+        &std::env::temp_dir()
+            .join(format!("ncr_cli_{}", std::process::id()))
+            .to_string_lossy(),
+    ));
+    let mut policy = crate::cr::CrPolicy::default();
+    if let Some(ms) = o.get("preempt") {
+        let ms: u64 = ms.parse().map_err(|_| Error::Usage("bad --preempt".into()))?;
+        policy.preempt_after = vec![Duration::from_millis(ms)];
+    }
+
+    // The CP2K-analog drives through the same session API as Geant4 —
+    // that is the point of the CrApp boundary.
+    if wl_name == crate::workload::CP2K_SCF_LABEL {
+        let app = crate::workload::Cp2kApp::new(24);
+        let report = crate::cr::CrSession::builder(&app)
+            .strategy(crate::cr::CrStrategy::Auto(policy))
+            .workdir(&workdir)
+            .target_steps(steps)
+            .seed(7)
+            .build()?
+            .run()?;
+        println!(
+            "completed={} incarnations={} checkpoints={} images={} wall={:.2}s \
+             iterations={} digest={:016x}",
+            report.completed,
+            report.incarnations,
+            report.checkpoints,
+            crate::report::human_bytes(report.total_image_bytes),
+            report.wall_secs,
+            report.final_state.iterations,
+            report.final_state.digest()
+        );
+        return Ok(());
+    }
+
     let kind = crate::workload::WorkloadKind::all()
         .into_iter()
         .find(|k| k.label() == wl_name)
@@ -229,21 +268,14 @@ fn cmd_run(args: &[String]) -> Result<()> {
         v => return Err(Error::Usage(format!("unknown g4 version {v:?}"))),
     };
     let h = crate::runtime::service::shared()?;
-    let steps: u64 = o.get_or("steps", "480").parse().unwrap_or(480);
-    let workdir = PathBuf::from(o.get_or(
-        "workdir",
-        &std::env::temp_dir()
-            .join(format!("ncr_cli_{}", std::process::id()))
-            .to_string_lossy(),
-    ));
-    std::fs::create_dir_all(&workdir)?;
-    let mut policy = crate::cr::CrPolicy::default();
-    if let Some(ms) = o.get("preempt") {
-        let ms: u64 = ms.parse().map_err(|_| Error::Usage("bad --preempt".into()))?;
-        policy.preempt_after = vec![Duration::from_millis(ms)];
-    }
     let app = crate::workload::G4App::build(kind, version, h.manifest().grid_d);
-    let report = crate::cr::run_auto(&app, &h, steps, 7, &policy, &workdir)?;
+    let report = crate::cr::CrSession::builder(&app)
+        .strategy(crate::cr::CrStrategy::Auto(policy))
+        .workdir(&workdir)
+        .target_steps(steps)
+        .seed(7)
+        .build()?
+        .run()?;
     println!(
         "completed={} incarnations={} checkpoints={} images={} wall={:.2}s steps={}",
         report.completed,

@@ -6,9 +6,10 @@
 //! squashfile conversion ([`squash`]), the runtime capability differences
 //! (build-on-system, runtime modification — [`shifter`] vs
 //! [`podman_hpc`]), startup-performance models (Fig 2, via
-//! [`crate::fsmodel`]), and checkpointed process launch *inside* a
-//! container ([`runtime::Container::launch_checkpointed`]), which enforces
-//! the DMTCP-must-be-in-the-image constraint.
+//! [`crate::fsmodel`]), and container execution contexts ([`Container`])
+//! that plug into the C/R layer as `cr::Substrate::container(..)`, which
+//! enforces the DMTCP-must-be-in-the-image constraint on launch and
+//! restart.
 
 pub mod image;
 pub mod podman_hpc;

@@ -11,8 +11,8 @@ use std::net::SocketAddr;
 use std::sync::{Arc, Mutex};
 
 use crate::container::image::Image;
-use crate::dmtcp::{dmtcp_launch, Checkpointable, LaunchSpec, LaunchedProcess, PluginRegistry};
-use crate::error::{Error, Result};
+use crate::dmtcp::{Checkpointable, LaunchedProcess, PluginRegistry};
+use crate::error::Result;
 use crate::fsmodel::Environment;
 
 /// Container run parameters (volume mappings, env overrides, entrypoint).
@@ -93,12 +93,17 @@ impl Container {
         env
     }
 
-    /// Launch a process inside the container under checkpoint control.
+    /// Launch a process inside the container under checkpoint control
+    /// (legacy shim).
     ///
-    /// Fails unless the image embeds DMTCP — the paper's limitation,
-    /// enforced: "DMTCP can not perform a checkpoint from outside the
-    /// container; it has to be included within the container at the time
-    /// of its creation."
+    /// The container constraints — DMTCP embedded in the image,
+    /// checkpoint dir volume-mapped — now live in
+    /// [`crate::cr::substrate`], where the session orchestration enforces
+    /// them on launch *and* restart. This delegates there.
+    #[deprecated(
+        since = "0.3.0",
+        note = "pass the container as cr::Substrate::container(..) to a cr::CrSession"
+    )]
     pub fn launch_checkpointed<S: Checkpointable + 'static>(
         &self,
         name: &str,
@@ -106,31 +111,14 @@ impl Container {
         state: Arc<Mutex<S>>,
         plugins: PluginRegistry,
     ) -> Result<LaunchedProcess> {
-        if !self.image.has_dmtcp {
-            return Err(Error::Container(format!(
-                "image {} does not embed DMTCP: checkpointing from outside \
-                 the container is not possible — rebuild the image with \
-                 DMTCP installed (see container::image::EMBED_DMTCP_SNIPPET)",
-                self.image.reference()
-            )));
-        }
-        // Checkpoint images must land on a volume that outlives the
-        // container instance.
-        let ckpt_container_dir = self
-            .effective_env()
-            .get("DMTCP_CHECKPOINT_DIR")
-            .cloned()
-            .unwrap_or_else(|| "/ckpt".to_string());
-        if self.spec.host_path(&ckpt_container_dir).is_none() {
-            return Err(Error::Container(format!(
-                "checkpoint dir {ckpt_container_dir} is not volume-mapped; \
-                 images written there would not survive the container"
-            )));
-        }
-
-        let mut spec = LaunchSpec::new(name, coordinator);
-        spec.env = self.effective_env();
-        Ok(dmtcp_launch(spec, state, plugins))
+        crate::cr::substrate::launch_in_container(
+            self,
+            name,
+            coordinator,
+            BTreeMap::new(),
+            state,
+            plugins,
+        )
     }
 }
 

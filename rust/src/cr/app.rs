@@ -1,0 +1,305 @@
+//! The workload-facing side of the C/R layer: the [`CrApp`] trait.
+//!
+//! DMTCP's design argument is that checkpoint-restart is *transparent* —
+//! it wraps any process, whatever it computes. The session orchestration
+//! ([`crate::cr::session::CrSession`]) mirrors that: it drives anything
+//! implementing `CrApp`, which is the minimal contract a workload needs to
+//! expose — mint a fresh state, mint a shell for restart to restore into,
+//! spawn the worker threads that advance it, report progress, and verify a
+//! final state against an uninterrupted reference run.
+//!
+//! Both paper workloads implement it: the Geant4-analog transport
+//! ([`G4App`]) and the CP2K-analog SCF driver ([`Cp2kApp`], §VII),
+//! including the latter's scratch-path restart fix. Any user state that is
+//! [`Checkpointable`] can join them (the integration suite drives a plain
+//! LCG chain through the same orchestration).
+
+#![deny(missing_docs)]
+
+use std::fmt::Debug;
+use std::sync::{Arc, Mutex};
+
+use crate::dmtcp::process::Checkpointable;
+use crate::dmtcp::{LaunchedProcess, PluginRegistry};
+use crate::error::{Error, Result};
+use crate::runtime::service;
+use crate::workload::cp2k::{cp2k_worker, Cp2kApp, Cp2kScratchPlugin, Cp2kState};
+use crate::workload::{transport_worker, G4App, G4SimState};
+
+/// A workload the C/R layer can orchestrate.
+///
+/// Implementors own whatever compute resources they need (the Geant4
+/// implementation serves through the shared [`crate::runtime`] service;
+/// the CP2K driver is self-contained) so the session stays
+/// workload-generic.
+pub trait CrApp {
+    /// The checkpointable application state this workload advances.
+    type State: Checkpointable + Clone + PartialEq + Debug + Send + 'static;
+
+    /// Stable label used in process names, image file names and job ids.
+    fn label(&self) -> String;
+
+    /// Mint the state a fresh (incarnation-0) job starts from.
+    fn fresh_state(&self, target_steps: u64, seed: u64) -> Result<Self::State>;
+
+    /// Mint an empty shell for `dmtcp_restart` to restore an image into.
+    fn restore_state(&self) -> Self::State;
+
+    /// Register workload-specific DMTCP plugins (e.g. the CP2K scratch-path
+    /// fix). Called before launch *and* before restart, so `PostRestart`
+    /// hooks fire ahead of the state restore.
+    fn register_plugins(&self, _state: &Arc<Mutex<Self::State>>, _plugins: &mut PluginRegistry) {}
+
+    /// Spawn the worker threads that advance `state` under `launched`.
+    /// `work_per_quantum` is the work quantum between checkpoint
+    /// safe-points (scans for transport, sweeps for SCF).
+    fn spawn_workers(
+        &self,
+        launched: &mut LaunchedProcess,
+        state: Arc<Mutex<Self::State>>,
+        n_threads: u32,
+        work_per_quantum: u32,
+    ) -> Result<()>;
+
+    /// Whether the workload reached its goal.
+    fn done(&self, state: &Self::State) -> bool;
+
+    /// Progress toward the goal in `[0, 1]`.
+    fn progress(&self, state: &Self::State) -> f64;
+
+    /// Verify `final_state` bitwise against an uninterrupted reference run
+    /// with the same `(target_steps, seed)`. `Err` on any divergence —
+    /// this is the paper's robustness claim as a method.
+    fn verify_final(
+        &self,
+        final_state: &Self::State,
+        target_steps: u64,
+        seed: u64,
+    ) -> Result<()>;
+}
+
+/// Sessions borrow apps freely: a reference to a `CrApp` is a `CrApp`.
+impl<A: CrApp + ?Sized> CrApp for &A {
+    type State = A::State;
+
+    fn label(&self) -> String {
+        (**self).label()
+    }
+
+    fn fresh_state(&self, target_steps: u64, seed: u64) -> Result<Self::State> {
+        (**self).fresh_state(target_steps, seed)
+    }
+
+    fn restore_state(&self) -> Self::State {
+        (**self).restore_state()
+    }
+
+    fn register_plugins(&self, state: &Arc<Mutex<Self::State>>, plugins: &mut PluginRegistry) {
+        (**self).register_plugins(state, plugins)
+    }
+
+    fn spawn_workers(
+        &self,
+        launched: &mut LaunchedProcess,
+        state: Arc<Mutex<Self::State>>,
+        n_threads: u32,
+        work_per_quantum: u32,
+    ) -> Result<()> {
+        (**self).spawn_workers(launched, state, n_threads, work_per_quantum)
+    }
+
+    fn done(&self, state: &Self::State) -> bool {
+        (**self).done(state)
+    }
+
+    fn progress(&self, state: &Self::State) -> f64 {
+        (**self).progress(state)
+    }
+
+    fn verify_final(
+        &self,
+        final_state: &Self::State,
+        target_steps: u64,
+        seed: u64,
+    ) -> Result<()> {
+        (**self).verify_final(final_state, target_steps, seed)
+    }
+}
+
+/// The Geant4-analog transport workload, served through the shared compute
+/// service (`runtime::service::shared`). Worker threads run
+/// [`transport_worker`]; the batch size comes from the engine manifest.
+impl CrApp for G4App {
+    type State = G4SimState;
+
+    fn label(&self) -> String {
+        format!("g4-{}", self.kind.label())
+    }
+
+    fn fresh_state(&self, target_steps: u64, seed: u64) -> Result<G4SimState> {
+        let h = service::shared()?;
+        let batch = h.manifest().batch;
+        Ok(G4App::fresh_state(self, batch, target_steps, seed))
+    }
+
+    fn restore_state(&self) -> G4SimState {
+        self.shell_state()
+    }
+
+    fn spawn_workers(
+        &self,
+        launched: &mut LaunchedProcess,
+        state: Arc<Mutex<G4SimState>>,
+        n_threads: u32,
+        work_per_quantum: u32,
+    ) -> Result<()> {
+        let h = service::shared()?;
+        for _ in 0..n_threads.max(1) {
+            let (st, hh, si) = (Arc::clone(&state), h.clone(), Arc::clone(&self.si));
+            launched
+                .process
+                .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, work_per_quantum));
+        }
+        Ok(())
+    }
+
+    fn done(&self, state: &G4SimState) -> bool {
+        state.done()
+    }
+
+    fn progress(&self, state: &G4SimState) -> f64 {
+        state.progress()
+    }
+
+    fn verify_final(&self, final_state: &G4SimState, target_steps: u64, seed: u64) -> Result<()> {
+        let h = service::shared()?;
+        let m = h.manifest().clone();
+        let mut reference = G4App::fresh_state(self, m.batch, target_steps, seed);
+        let scans = target_steps.div_ceil(m.scan_steps as u64) as u32;
+        reference.particles = h.scan(reference.particles, &self.si, scans)?;
+        if final_state.particles != reference.particles {
+            return Err(Error::Workload(format!(
+                "{}: final state is not bit-identical to the uninterrupted reference",
+                CrApp::label(self)
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The CP2K-analog SCF workload (§VII), self-contained (no compute
+/// service). With [`Cp2kApp::scratch_fix`] on, the scratch-path plugin is
+/// registered so restart works; with it off, the paper's known restart
+/// defect reproduces through the full C/R stack.
+impl CrApp for Cp2kApp {
+    type State = Cp2kState;
+
+    fn label(&self) -> String {
+        crate::workload::cp2k::CP2K_SCF_LABEL.into()
+    }
+
+    fn fresh_state(&self, target_steps: u64, _seed: u64) -> Result<Cp2kState> {
+        Ok(Cp2kState::new(self.n, target_steps, Cp2kApp::next_scratch_pid()))
+    }
+
+    fn restore_state(&self) -> Cp2kState {
+        // Target/field come from the image; a *new* incarnation pid makes
+        // the recorded scratch path dangle — the defect the plugin fixes.
+        Cp2kState::new(self.n, 0, Cp2kApp::next_scratch_pid())
+    }
+
+    fn register_plugins(&self, state: &Arc<Mutex<Cp2kState>>, plugins: &mut PluginRegistry) {
+        if self.scratch_fix {
+            plugins.register(Box::new(Cp2kScratchPlugin {
+                state: Arc::clone(state),
+            }));
+        }
+    }
+
+    fn spawn_workers(
+        &self,
+        launched: &mut LaunchedProcess,
+        state: Arc<Mutex<Cp2kState>>,
+        n_threads: u32,
+        work_per_quantum: u32,
+    ) -> Result<()> {
+        let pause = self.sweep_pause;
+        for _ in 0..n_threads.max(1) {
+            let st = Arc::clone(&state);
+            launched
+                .process
+                .spawn_user_thread(move |ctx| cp2k_worker(ctx, st, work_per_quantum, pause));
+        }
+        Ok(())
+    }
+
+    fn done(&self, state: &Cp2kState) -> bool {
+        state.done()
+    }
+
+    fn progress(&self, state: &Cp2kState) -> f64 {
+        state.iterations as f64 / state.target_iterations.max(1) as f64
+    }
+
+    fn verify_final(&self, final_state: &Cp2kState, target_steps: u64, _seed: u64) -> Result<()> {
+        // The SCF iteration is deterministic and pid-independent; drive a
+        // fresh problem to the same target and compare the field bitwise.
+        let mut reference = Cp2kState::new(self.n, target_steps, 0);
+        while !reference.done() {
+            reference.iterate();
+        }
+        if final_state.iterations != reference.iterations
+            || final_state.digest() != reference.digest()
+            || final_state.residuals != reference.residuals
+        {
+            return Err(Error::Workload(format!(
+                "cp2k-scf: final state differs from the uninterrupted reference \
+                 ({}/{} iterations, digest {:016x} vs {:016x})",
+                final_state.iterations,
+                reference.iterations,
+                final_state.digest(),
+                reference.digest()
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{G4Version, WorkloadKind};
+
+    #[test]
+    fn g4_app_trait_surface() {
+        let app = G4App::build(WorkloadKind::WaterPhantom, G4Version::V10_7, 16);
+        assert_eq!(CrApp::label(&app), "g4-water-phantom");
+        let s = CrApp::fresh_state(&app, 64, 3).unwrap();
+        assert!(!CrApp::done(&app, &s));
+        assert_eq!(CrApp::progress(&app, &s), 0.0);
+        // The blanket impl forwards.
+        let by_ref: &G4App = &app;
+        assert_eq!(CrApp::label(&by_ref), "g4-water-phantom");
+    }
+
+    #[test]
+    fn cp2k_app_verifies_its_own_reference() {
+        let app = Cp2kApp::new(12);
+        let mut s = CrApp::fresh_state(&app, 40, 0).unwrap();
+        while !s.done() {
+            s.iterate();
+        }
+        CrApp::verify_final(&app, &s, 40, 0).unwrap();
+        // A diverged state is rejected.
+        s.field[5] += 1.0;
+        assert!(CrApp::verify_final(&app, &s, 40, 0).is_err());
+    }
+
+    #[test]
+    fn cp2k_restore_state_gets_fresh_scratch_pid() {
+        let app = Cp2kApp::new(8);
+        let a = CrApp::restore_state(&app);
+        let b = CrApp::restore_state(&app);
+        assert_ne!(a.scratch_path, b.scratch_path);
+    }
+}

@@ -1,4 +1,4 @@
-//! Automated C/R strategy — the paper's Fig 3 workflow, executable.
+//! Automated C/R strategy types — the paper's Fig 3 workflow, as data.
 //!
 //! "Users initiate their computational tasks with batch scripts that
 //! include DMTCP within the container ... a `restart_job` function that
@@ -7,24 +7,22 @@
 //! termination signals such as SIGTERM ... thereby triggering a requeue
 //! function".
 //!
-//! [`run_auto`] drives the full lifecycle in real time against the real
-//! subsystems: coordinator per incarnation (a fresh batch job lands on a
-//! fresh node), periodic `dmtcp_command --checkpoint`, a preemption plan
-//! (when the "scheduler" SIGTERMs each incarnation), func_trap-style
-//! checkpoint-on-signal, requeue delay, restart from the newest image —
-//! until the workload completes or the incarnation budget is exhausted.
+//! The orchestration itself lives in [`crate::cr::session::CrSession`]:
+//! build a session with `CrStrategy::Auto(CrPolicy)` and call
+//! [`crate::cr::session::CrSession::run`], which drives the full lifecycle
+//! — coordinator per incarnation, periodic `dmtcp_command --checkpoint`,
+//! the preemption plan, func_trap checkpoint-on-signal, requeue delay,
+//! restart from the newest image — until the workload completes or the
+//! incarnation budget is exhausted. This module keeps the policy/report
+//! types and the deprecated [`run_auto`] shim.
 
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::cr::module::{latest_images, start_coordinator, CrConfig};
-use crate::dmtcp::{
-    dmtcp_launch, dmtcp_restart, LaunchSpec, PluginRegistry, TimerPlugin,
-};
-use crate::error::{Error, Result};
-use crate::metrics::{LdmsSampler, SampledSeries};
+use crate::cr::session::{CrSession, CrStrategy};
+use crate::error::Result;
+use crate::metrics::SampledSeries;
 use crate::runtime::ComputeHandle;
-use crate::workload::{transport_worker, G4App, G4SimState};
+use crate::workload::{G4App, G4SimState};
 
 /// Fig 3 states (the workflow diagram, as data).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,7 +66,7 @@ pub struct CrPolicy {
     pub periodic_ckpt: bool,
     /// Worker threads per process.
     pub n_threads: u32,
-    /// Scans between checkpoint safe-points.
+    /// Work quanta (scans/sweeps) between checkpoint safe-points.
     pub scans_per_quantum: u32,
 }
 
@@ -87,9 +85,10 @@ impl Default for CrPolicy {
     }
 }
 
-/// Outcome of an automated run.
+/// Outcome of an automated run, generic over the application state (the
+/// default keeps the historical Geant4-analog shape).
 #[derive(Debug)]
-pub struct CrReport {
+pub struct CrReport<S = G4SimState> {
     /// Whether the workload reached its target step count.
     pub completed: bool,
     /// Batch-job incarnations used (1 = never preempted).
@@ -104,201 +103,39 @@ pub struct CrReport {
     pub timeline: Vec<(f64, AutoState)>,
     /// Wall time, start to terminal state.
     pub wall_secs: f64,
-    /// The final simulation state (for bitwise verification).
-    pub final_state: G4SimState,
+    /// The final application state (for bitwise verification).
+    pub final_state: S,
     /// LDMS series across the whole run (all incarnations).
     pub series: SampledSeries,
     /// Steps at each restart (monotone; proves no lost progress).
     pub restart_steps: Vec<u64>,
 }
 
-/// Run the automated Fig 3 workflow to completion.
+/// Run the automated Fig 3 workflow to completion (legacy entry point).
+///
+/// The `handle` parameter is unused: the Geant4-analog [`CrApp`
+/// implementation](crate::cr::app) serves compute through the shared
+/// service handle, which is the same handle every historical caller passed
+/// here.
+#[deprecated(
+    since = "0.3.0",
+    note = "build a cr::CrSession with .policy(..) and call .run() instead"
+)]
 pub fn run_auto(
     app: &G4App,
-    handle: &ComputeHandle,
+    _handle: &ComputeHandle,
     target_steps: u64,
     seed: u64,
     policy: &CrPolicy,
     workdir: &std::path::Path,
 ) -> Result<CrReport> {
-    let t0 = Instant::now();
-    let mut timeline = vec![(0.0, AutoState::Submitted)];
-    let mark = |tl: &mut Vec<(f64, AutoState)>, s: AutoState| {
-        tl.push((t0.elapsed().as_secs_f64(), s));
-    };
-
-    let batch = handle.manifest().batch;
-    let mut checkpoints = 0u64;
-    let mut total_image_bytes = 0u64;
-    let mut total_raw_bytes = 0u64;
-    let mut restart_steps = Vec::new();
-    let mut sampler: Option<LdmsSampler> = None;
-    let mut series_acc: Option<SampledSeries> = None;
-
-    let mut incarnation = 0u32;
-    loop {
-        if incarnation >= policy.max_incarnations {
-            mark(&mut timeline, AutoState::Failed);
-            return Err(Error::Workload(format!(
-                "incarnation budget ({}) exhausted",
-                policy.max_incarnations
-            )));
-        }
-        let jobid = format!("{}{:02}", seed % 900_000 + 100_000, incarnation);
-        let cfg = CrConfig::new(jobid, workdir);
-        mark(&mut timeline, AutoState::Starting);
-        let (coord, env) = start_coordinator(&cfg)?;
-
-        // Launch fresh or restart from the newest image.
-        let images = latest_images(&cfg.ckpt_dir)?;
-        let state: Arc<Mutex<G4SimState>>;
-        let mut launched;
-        let mut plugins = PluginRegistry::new();
-        plugins.register(Box::new(TimerPlugin::new()));
-        if incarnation == 0 {
-            assert!(images.is_empty(), "stale images in a fresh workdir");
-            state = Arc::new(Mutex::new(app.fresh_state(batch, target_steps, seed)));
-            let mut spec = LaunchSpec::new(format!("g4-{}", app.kind.label()), coord.addr());
-            spec.env = env.clone();
-            launched = dmtcp_launch(spec, Arc::clone(&state), plugins);
-        } else {
-            mark(&mut timeline, AutoState::Restarting);
-            let image = images
-                .last()
-                .ok_or_else(|| Error::Workload("requeued but no checkpoint image".into()))?;
-            state = Arc::new(Mutex::new(app.shell_state()));
-            let restarted = dmtcp_restart(image, coord.addr(), Arc::clone(&state), plugins)?;
-            restart_steps.push(restarted.header.steps_done);
-            launched = restarted.launched;
-        }
-        launched.wait_attached(Duration::from_secs(10))?;
-
-        // Spawn the transport workers.
-        for _ in 0..policy.n_threads {
-            let ctx_state = Arc::clone(&state);
-            let h = handle.clone();
-            let si = Arc::clone(&app.si);
-            let spq = policy.scans_per_quantum;
-            launched
-                .process
-                .spawn_user_thread(move |ctx| transport_worker(ctx, h, ctx_state, si, spq));
-        }
-        // (Re)start the LDMS sampler over this incarnation's process.
-        if let Some(s) = sampler.take() {
-            merge_series(&mut series_acc, s.stop());
-        }
-        sampler = Some(LdmsSampler::start(
-            vec![Arc::clone(&launched.process.stats)],
-            Duration::from_millis(3),
-        ));
-        mark(&mut timeline, AutoState::Running);
-
-        // Drive this incarnation: periodic checkpoints + preemption plan.
-        let inc_start = Instant::now();
-        let preempt_at = policy.preempt_after.get(incarnation as usize).copied();
-        let mut next_ckpt = policy.ckpt_interval;
-        let outcome = loop {
-            std::thread::sleep(Duration::from_millis(5));
-            let done = state.lock().expect("state poisoned").done();
-            if done {
-                break IncOutcome::Completed;
-            }
-            let ran = inc_start.elapsed();
-            if let Some(p) = preempt_at {
-                if ran >= p {
-                    break IncOutcome::Preempted;
-                }
-            }
-            if policy.periodic_ckpt && ran >= next_ckpt {
-                mark(&mut timeline, AutoState::Checkpointing);
-                match coord.checkpoint_all() {
-                    Ok(images) => {
-                        checkpoints += 1;
-                        total_image_bytes +=
-                            images.iter().map(|i| i.stored_bytes).sum::<u64>();
-                        total_raw_bytes += images.iter().map(|i| i.raw_bytes).sum::<u64>();
-                    }
-                    Err(e) => log::warn!("periodic checkpoint failed: {e}"),
-                }
-                mark(&mut timeline, AutoState::Running);
-                next_ckpt += policy.ckpt_interval;
-            }
-        };
-
-        match outcome {
-            IncOutcome::Completed => {
-                coord.kill_all();
-                let process = launched.join();
-                if let Some(s) = sampler.take() {
-                    merge_series(&mut series_acc, s.stop());
-                }
-                drop(process);
-                mark(&mut timeline, AutoState::Completed);
-                let final_state = state.lock().expect("state poisoned").clone();
-                return Ok(CrReport {
-                    completed: true,
-                    incarnations: incarnation + 1,
-                    checkpoints,
-                    total_image_bytes,
-                    total_raw_bytes,
-                    wall_secs: t0.elapsed().as_secs_f64(),
-                    timeline,
-                    final_state,
-                    series: series_acc.unwrap_or_default(),
-                    restart_steps,
-                });
-            }
-            IncOutcome::Preempted => {
-                // func_trap: SIGTERM trapped → checkpoint → requeue.
-                mark(&mut timeline, AutoState::SignalTrapped);
-                if policy.ckpt_on_signal {
-                    match coord.checkpoint_all() {
-                        Ok(images) => {
-                            checkpoints += 1;
-                            total_image_bytes +=
-                                images.iter().map(|i| i.stored_bytes).sum::<u64>();
-                            total_raw_bytes += images.iter().map(|i| i.raw_bytes).sum::<u64>();
-                        }
-                        Err(e) => log::warn!("trap checkpoint failed: {e}"),
-                    }
-                }
-                coord.kill_all();
-                let _ = launched.join();
-                if let Some(s) = sampler.take() {
-                    merge_series(&mut series_acc, s.stop());
-                }
-                mark(&mut timeline, AutoState::Requeued);
-                std::thread::sleep(policy.requeue_delay);
-                incarnation += 1;
-            }
-        }
-        drop(coord); // fresh coordinator next incarnation
-    }
-}
-
-enum IncOutcome {
-    Completed,
-    Preempted,
-}
-
-/// Concatenate sampler outputs across incarnations (time axes are
-/// per-incarnation; offset each segment by the accumulated end time).
-fn merge_series(acc: &mut Option<SampledSeries>, next: SampledSeries) {
-    match acc {
-        None => *acc = Some(next),
-        Some(a) => {
-            let offset = a.memory.t.last().copied().unwrap_or(0.0);
-            for (dst, src) in [
-                (&mut a.memory, &next.memory),
-                (&mut a.cpu, &next.cpu),
-                (&mut a.steps, &next.steps),
-            ] {
-                for (&t, &v) in src.t.iter().zip(&src.v) {
-                    dst.push(offset + t, v);
-                }
-            }
-        }
-    }
+    CrSession::builder(app)
+        .strategy(CrStrategy::Auto(policy.clone()))
+        .workdir(workdir)
+        .target_steps(target_steps)
+        .seed(seed)
+        .build()?
+        .run()
 }
 
 #[cfg(test)]
@@ -310,20 +147,5 @@ mod tests {
         let p = CrPolicy::default();
         assert!(p.periodic_ckpt && p.ckpt_on_signal);
         assert!(p.max_incarnations > 1);
-    }
-
-    #[test]
-    fn merge_series_offsets_time() {
-        let mut a = SampledSeries::default();
-        a.memory.push(0.0, 1.0);
-        a.memory.push(1.0, 2.0);
-        let mut b = SampledSeries::default();
-        b.memory.push(0.0, 3.0);
-        b.memory.push(0.5, 4.0);
-        let mut acc = Some(a);
-        merge_series(&mut acc, b);
-        let m = &acc.unwrap().memory;
-        assert_eq!(m.t, vec![0.0, 1.0, 1.0, 1.5]);
-        assert_eq!(m.v, vec![1.0, 2.0, 3.0, 4.0]);
     }
 }

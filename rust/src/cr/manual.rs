@@ -1,26 +1,25 @@
-//! Manual C/R strategy — the paper's §V.B.2 operator-in-the-loop flow.
+//! Manual C/R strategy — the paper's §V.B.2 operator-in-the-loop flow
+//! (legacy shim).
 //!
 //! "the user actively monitors its output ... Based on this analysis, the
 //! user can decide whether to resubmit or restart the job ... utilizing a
-//! file created during the checkpointing phase". Each paper step is one
-//! method here: [`ManualCr::submit`], [`ManualCr::monitor`],
-//! [`ManualCr::checkpoint_now`], [`ManualCr::kill`],
-//! [`ManualCr::resubmit_from_checkpoint`], iterated until
-//! [`MonitorReport::done`].
+//! file created during the checkpointing phase". The five paper steps are
+//! now methods on [`crate::cr::session::CrSession`] built with
+//! `CrStrategy::Manual` (`submit` / `monitor` / `checkpoint_now` / `kill`
+//! / `resubmit_from_checkpoint`); [`ManualCr`] remains for one release as
+//! a thin wrapper preserving the old Geant4-analog-specific API.
 
 use std::path::PathBuf;
-use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use crate::cr::module::{latest_images, start_coordinator, CrConfig};
-use crate::dmtcp::{
-    dmtcp_launch, dmtcp_restart, Coordinator, LaunchSpec, LaunchedProcess, PluginRegistry,
-};
-use crate::error::{Error, Result};
+use crate::cr::session::{CrSession, CrStrategy};
+use crate::error::Result;
 use crate::runtime::ComputeHandle;
-use crate::workload::{transport_worker, G4App, G4SimState};
+use crate::workload::{G4App, G4SimState};
 
-/// What `monitor` reports (the user's view of the output/error logs).
+/// What [`ManualCr::monitor`] reports (the user's view of the output/error
+/// logs), with the Geant4-analog-specific fields the generic
+/// [`crate::cr::session::SessionStatus`] does not carry.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MonitorReport {
     /// Transport steps completed so far.
@@ -35,25 +34,24 @@ pub struct MonitorReport {
     pub progress: f64,
 }
 
-/// An operator-driven C/R session for one job.
+/// An operator-driven C/R session for one Geant4-analog job (legacy).
+#[deprecated(
+    since = "0.3.0",
+    note = "build a cr::CrSession with CrStrategy::Manual instead"
+)]
 pub struct ManualCr<'a> {
-    app: &'a G4App,
-    handle: ComputeHandle,
-    workdir: PathBuf,
-    target_steps: u64,
-    seed: u64,
-    incarnation: u32,
-    active: Option<ActiveJob>,
+    session: CrSession<&'a G4App>,
 }
 
-struct ActiveJob {
-    coordinator: Coordinator,
-    launched: LaunchedProcess,
-    state: Arc<Mutex<G4SimState>>,
-}
-
+#[allow(deprecated)]
 impl<'a> ManualCr<'a> {
     /// Set up a session (no job submitted yet; call [`Self::submit`]).
+    ///
+    /// `handle` is unused: the Geant4-analog `CrApp` implementation serves
+    /// compute through the shared service handle, which is the same handle
+    /// every historical caller passed here. Panics only if `workdir`
+    /// cannot be created (the historical constructor deferred that failure
+    /// to `submit`).
     pub fn new(
         app: &'a G4App,
         handle: ComputeHandle,
@@ -61,60 +59,25 @@ impl<'a> ManualCr<'a> {
         target_steps: u64,
         seed: u64,
     ) -> Self {
-        Self {
-            app,
-            handle,
-            workdir,
-            target_steps,
-            seed,
-            incarnation: 0,
-            active: None,
-        }
-    }
-
-    fn spawn_workers(&self, launched: &mut LaunchedProcess, state: &Arc<Mutex<G4SimState>>) {
-        let h = self.handle.clone();
-        let si = Arc::clone(&self.app.si);
-        let st = Arc::clone(state);
-        launched
-            .process
-            .spawn_user_thread(move |ctx| transport_worker(ctx, h, st, si, 1));
+        let _ = handle;
+        let session = CrSession::builder(app)
+            .strategy(CrStrategy::Manual)
+            .workdir(workdir)
+            .target_steps(target_steps)
+            .seed(seed)
+            .build()
+            .expect("manual C/R session");
+        Self { session }
     }
 
     /// Step 1: initial submission ("creates a checkpointing state").
     pub fn submit(&mut self) -> Result<()> {
-        if self.active.is_some() {
-            return Err(Error::Workload("job already active".into()));
-        }
-        let cfg = CrConfig::new(format!("M{}0", self.seed % 100_000), &self.workdir);
-        let (coordinator, env) = start_coordinator(&cfg)?;
-        let state = Arc::new(Mutex::new(self.app.fresh_state(
-            self.handle.manifest().batch,
-            self.target_steps,
-            self.seed,
-        )));
-        let mut spec =
-            LaunchSpec::new(format!("manual-{}", self.app.kind.label()), coordinator.addr());
-        spec.env = env;
-        let mut launched = dmtcp_launch(spec, Arc::clone(&state), PluginRegistry::new());
-        launched.wait_attached(Duration::from_secs(10))?;
-        self.spawn_workers(&mut launched, &state);
-        self.active = Some(ActiveJob {
-            coordinator,
-            launched,
-            state,
-        });
-        Ok(())
+        self.session.submit()
     }
 
     /// Step 2: monitor the job (output/error log inspection analog).
     pub fn monitor(&self) -> Result<MonitorReport> {
-        let job = self
-            .active
-            .as_ref()
-            .ok_or_else(|| Error::Workload("no active job".into()))?;
-        let s = job.state.lock().expect("state poisoned");
-        Ok(MonitorReport {
+        self.session.with_state(|s| MonitorReport {
             steps_done: s.particles.steps_done,
             target_steps: s.target_steps,
             alive_particles: s.particles.alive_count(),
@@ -126,99 +89,32 @@ impl<'a> ManualCr<'a> {
     /// Step 3: take a checkpoint on demand (`dmtcp_command --checkpoint`).
     /// Returns the image paths.
     pub fn checkpoint_now(&self) -> Result<Vec<PathBuf>> {
-        let job = self
-            .active
-            .as_ref()
-            .ok_or_else(|| Error::Workload("no active job".into()))?;
-        let images = job.coordinator.checkpoint_all()?;
-        Ok(images.into_iter().map(|i| i.path).collect())
+        self.session.checkpoint_now()
     }
 
     /// Step 4: kill the job (failure injection / operator decision).
     pub fn kill(&mut self) -> Result<()> {
-        let job = self
-            .active
-            .take()
-            .ok_or_else(|| Error::Workload("no active job".into()))?;
-        job.coordinator.kill_all();
-        let _ = job.launched.join();
-        Ok(())
+        self.session.kill()
     }
 
     /// Step 5: resubmit from the newest checkpoint file.
     pub fn resubmit_from_checkpoint(&mut self) -> Result<u64> {
-        if self.active.is_some() {
-            return Err(Error::Workload("kill the active job first".into()));
-        }
-        self.incarnation += 1;
-        let cfg = CrConfig::new(
-            format!("M{}{}", self.seed % 100_000, self.incarnation),
-            &self.workdir,
-        );
-        // All incarnations share the ckpt dir (first config created it).
-        let ckpt_dir = CrConfig::new("x", &self.workdir).ckpt_dir;
-        let image = latest_images(&ckpt_dir)?
-            .into_iter()
-            .last()
-            .ok_or_else(|| Error::Workload("no checkpoint image to restart from".into()))?;
-        let (coordinator, _env) = start_coordinator(&cfg)?;
-        let state = Arc::new(Mutex::new(self.app.shell_state()));
-        let restarted = dmtcp_restart(
-            &image,
-            coordinator.addr(),
-            Arc::clone(&state),
-            PluginRegistry::new(),
-        )?;
-        let steps_at_restart = restarted.header.steps_done;
-        let mut launched = restarted.launched;
-        launched.wait_attached(Duration::from_secs(10))?;
-        self.spawn_workers(&mut launched, &state);
-        self.active = Some(ActiveJob {
-            coordinator,
-            launched,
-            state,
-        });
-        Ok(steps_at_restart)
+        self.session.resubmit_from_checkpoint()
     }
 
     /// Wait (polling) until done or `timeout`; returns the final report.
     pub fn wait_done(&self, timeout: Duration) -> Result<MonitorReport> {
-        let deadline = std::time::Instant::now() + timeout;
-        loop {
-            let r = self.monitor()?;
-            if r.done {
-                return Ok(r);
-            }
-            if std::time::Instant::now() > deadline {
-                return Err(Error::Workload(format!(
-                    "timeout at {}/{} steps",
-                    r.steps_done, r.target_steps
-                )));
-            }
-            std::thread::sleep(Duration::from_millis(5));
-        }
+        self.session.wait_done(timeout)?;
+        self.monitor()
     }
 
     /// Final state snapshot (verification).
     pub fn final_state(&self) -> Result<G4SimState> {
-        let job = self
-            .active
-            .as_ref()
-            .ok_or_else(|| Error::Workload("no active job".into()))?;
-        Ok(job.state.lock().expect("state poisoned").clone())
+        self.session.final_state()
     }
 
     /// Tear down.
     pub fn finish(&mut self) {
-        if let Some(job) = self.active.take() {
-            job.coordinator.kill_all();
-            let _ = job.launched.join();
-        }
-    }
-}
-
-impl Drop for ManualCr<'_> {
-    fn drop(&mut self) {
-        self.finish();
+        self.session.finish();
     }
 }

@@ -1,19 +1,37 @@
 //! The paper's contribution: the NERSC checkpoint-restart job-management
-//! layer.
+//! layer, entered through one session-first API.
 //!
+//! * [`session`] — [`CrSession`]: builder-style orchestration over any
+//!   [`CrApp`] workload, on any [`Substrate`] (bare / shifter /
+//!   podman-hpc), driven automatically ([`CrStrategy::Auto`], the Fig 3
+//!   workflow) or by an operator ([`CrStrategy::Manual`], §V.B.2).
+//! * [`app`] — the [`CrApp`] trait both paper workloads implement
+//!   (Geant4-analog transport and the CP2K-analog SCF driver).
+//! * [`substrate`] — the [`Substrate`] execution environments, enforcing
+//!   the paper's containerized-C/R constraints.
 //! * [`module`] — the CR Module primitives (`start_coordinator`, image
 //!   discovery, environment wiring).
-//! * [`auto`] — the automated Fig 3 workflow: periodic checkpoints,
-//!   func_trap on preemption signals, requeue, restart-from-image.
-//! * [`manual`] — the operator-in-the-loop flow (§V.B.2).
+//! * [`auto`] — the Fig 3 policy/report types ([`CrPolicy`],
+//!   [`CrReport`]) and the deprecated [`run_auto`] shim.
+//! * [`manual`] — the deprecated [`ManualCr`] shim.
 //! * [`jobscript`] — the consolidated single job script.
 
+pub mod app;
 pub mod auto;
 pub mod jobscript;
 pub mod manual;
 pub mod module;
+pub mod session;
+pub mod substrate;
 
-pub use auto::{run_auto, AutoState, CrPolicy, CrReport};
+pub use app::CrApp;
+pub use auto::{AutoState, CrPolicy, CrReport};
+#[allow(deprecated)]
+pub use auto::run_auto;
 pub use jobscript::{consolidated_script, CrJobConfig};
-pub use manual::{ManualCr, MonitorReport};
+#[allow(deprecated)]
+pub use manual::ManualCr;
+pub use manual::MonitorReport;
 pub use module::{latest_images, start_coordinator, CrConfig};
+pub use session::{CrSession, CrSessionBuilder, CrStrategy, SessionStatus};
+pub use substrate::Substrate;

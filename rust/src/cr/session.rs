@@ -1,0 +1,725 @@
+//! One session-first entry point for C/R orchestration: [`CrSession`].
+//!
+//! A session owns everything one checkpointed job needs across its
+//! incarnations — coordinator boot, plugin registration, image discovery,
+//! launch/restart, worker spawn — behind a builder:
+//!
+//! ```no_run
+//! use nersc_cr::cr::{CrPolicy, CrSession, Substrate};
+//! use nersc_cr::workload::{G4App, G4Version, WorkloadKind};
+//!
+//! let app = G4App::build(WorkloadKind::WaterPhantom, G4Version::V10_7, 16);
+//! let report = CrSession::builder(&app)
+//!     .substrate(Substrate::bare())
+//!     .policy(CrPolicy::default())      // == .strategy(CrStrategy::Auto(..))
+//!     .workdir("/tmp/ncr-demo")
+//!     .target_steps(640)
+//!     .seed(7)
+//!     .build()?
+//!     .run()?;
+//! assert!(report.completed);
+//! # Ok::<(), nersc_cr::Error>(())
+//! ```
+//!
+//! The `app` is any [`CrApp`] (Geant4-analog, CP2K-analog, or your own
+//! checkpointable state); the [`Substrate`] selects bare vs shifter vs
+//! podman-hpc; the [`CrStrategy`] selects the paper's automated Fig 3
+//! workflow ([`CrSession::run`]) or the §V.B.2 operator-in-the-loop steps
+//! ([`CrSession::submit`] / [`CrSession::monitor`] /
+//! [`CrSession::checkpoint_now`] / [`CrSession::kill`] /
+//! [`CrSession::resubmit_from_checkpoint`]). Both strategies share one
+//! code path for every lifecycle mechanic, so what the automated flow
+//! exercises is exactly what the operator flow exercises.
+//!
+//! Sessions are concurrency-safe at the filesystem level: job ids and
+//! image names embed a per-session nonce, so any number of sessions can
+//! share one workdir (and its `ckpt/` directory) without colliding — the
+//! prerequisite for pooling sessions behind a service.
+
+#![deny(missing_docs)]
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cr::app::CrApp;
+use crate::cr::auto::{AutoState, CrPolicy, CrReport};
+use crate::cr::module::{latest_images, start_coordinator, CrConfig};
+use crate::dmtcp::process::Checkpointable;
+use crate::dmtcp::{Coordinator, ImageInfo, PluginRegistry, TimerPlugin};
+use crate::error::{Error, Result};
+use crate::metrics::{LdmsSampler, SampledSeries};
+
+use super::substrate::Substrate;
+
+/// How long to wait for the coordinator to assign a virtual pid.
+const ATTACH_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Poll interval for progress checks in the drive loops.
+const POLL: Duration = Duration::from_millis(5);
+
+/// Process-wide session nonce allocator. Combined with the OS process id
+/// so two sessions never mint the same job id or image-name prefix, even
+/// across processes sharing a workdir.
+fn next_nonce() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    ((std::process::id() as u64) << 20) | NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Which orchestration drives the session.
+#[derive(Debug, Clone)]
+pub enum CrStrategy {
+    /// The automated Fig 3 workflow: periodic checkpoints, func_trap
+    /// checkpoint-on-signal, requeue, restart — driven to completion by
+    /// [`CrSession::run`].
+    Auto(CrPolicy),
+    /// The §V.B.2 operator-in-the-loop flow, driven step by step through
+    /// the session's manual methods.
+    Manual,
+}
+
+/// What [`CrSession::monitor`] reports (the operator's view of the
+/// output/error logs), workload-generic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionStatus {
+    /// Steps (scans, sweeps, ...) completed so far.
+    pub steps_done: u64,
+    /// Steps the workload needs in total.
+    pub target_steps: u64,
+    /// Whether the workload is finished.
+    pub done: bool,
+    /// Progress toward the goal in `[0, 1]`.
+    pub progress: f64,
+}
+
+/// Builder for [`CrSession`] — see the module docs for the canonical
+/// chain. `workdir` is required.
+pub struct CrSessionBuilder<A: CrApp> {
+    app: A,
+    substrate: Substrate,
+    strategy: CrStrategy,
+    workdir: Option<PathBuf>,
+    target_steps: u64,
+    seed: u64,
+}
+
+impl<A: CrApp> CrSessionBuilder<A> {
+    /// Select the execution environment (default: bare process).
+    pub fn substrate(mut self, substrate: Substrate) -> Self {
+        self.substrate = substrate;
+        self
+    }
+
+    /// Select the orchestration strategy (default: [`CrStrategy::Manual`]).
+    pub fn strategy(mut self, strategy: CrStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Shorthand for `strategy(CrStrategy::Auto(policy))`.
+    pub fn policy(mut self, policy: CrPolicy) -> Self {
+        self.strategy = CrStrategy::Auto(policy);
+        self
+    }
+
+    /// Where the rendezvous file and `ckpt/` images live (required; must
+    /// survive the job — a shared filesystem or volume-mapped host dir
+    /// when containerized).
+    pub fn workdir(mut self, workdir: impl Into<PathBuf>) -> Self {
+        self.workdir = Some(workdir.into());
+        self
+    }
+
+    /// Total steps the workload must complete (0 = trivially done).
+    pub fn target_steps(mut self, target_steps: u64) -> Self {
+        self.target_steps = target_steps;
+        self
+    }
+
+    /// Workload seed (also folded into the job id).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Validate and assemble the session (creates the workdir).
+    pub fn build(self) -> Result<CrSession<A>> {
+        let workdir = self.workdir.ok_or_else(|| {
+            Error::Workload("CrSession needs a workdir (builder .workdir(..))".into())
+        })?;
+        std::fs::create_dir_all(&workdir)?;
+        Ok(CrSession {
+            app: self.app,
+            substrate: self.substrate,
+            strategy: self.strategy,
+            workdir,
+            target_steps: self.target_steps,
+            seed: self.seed,
+            nonce: next_nonce(),
+            incarnation: 0,
+            active: None,
+            series_acc: None,
+        })
+    }
+}
+
+struct ActiveJob<S: Checkpointable> {
+    coordinator: Coordinator,
+    launched: crate::dmtcp::LaunchedProcess,
+    state: Arc<Mutex<S>>,
+    sampler: Option<LdmsSampler>,
+}
+
+/// A checkpoint-restart session: one workload, one substrate, any number
+/// of incarnations. Built with [`CrSession::builder`].
+pub struct CrSession<A: CrApp> {
+    app: A,
+    substrate: Substrate,
+    strategy: CrStrategy,
+    workdir: PathBuf,
+    target_steps: u64,
+    seed: u64,
+    nonce: u64,
+    incarnation: u32,
+    active: Option<ActiveJob<A::State>>,
+    series_acc: Option<SampledSeries>,
+}
+
+impl<A: CrApp> CrSession<A> {
+    /// Start a builder for `app` (anything implementing [`CrApp`], by
+    /// value or by reference).
+    pub fn builder(app: A) -> CrSessionBuilder<A> {
+        CrSessionBuilder {
+            app,
+            substrate: Substrate::Bare,
+            strategy: CrStrategy::Manual,
+            workdir: None,
+            target_steps: 0,
+            seed: 0,
+        }
+    }
+
+    /// The Slurm-style job id of the *current* incarnation. Unique across
+    /// sessions (nonce) and incarnations, so sessions can share a workdir.
+    pub fn jobid(&self) -> String {
+        format!(
+            "{}s{}i{:02}",
+            self.seed % 900_000 + 100_000,
+            self.nonce,
+            self.incarnation
+        )
+    }
+
+    /// The process name this session launches under; checkpoint images
+    /// carry it, which is what scopes image discovery per session.
+    pub fn process_name(&self) -> String {
+        format!("{}-s{}", self.app.label(), self.nonce)
+    }
+
+    /// Incarnations used so far (0 = the initial submission).
+    pub fn incarnation(&self) -> u32 {
+        self.incarnation
+    }
+
+    /// The substrate this session launches on.
+    pub fn substrate(&self) -> &Substrate {
+        &self.substrate
+    }
+
+    /// Switch substrate between incarnations (the paper's cross-runtime
+    /// compatibility claim: checkpoint under podman-hpc, restart under
+    /// shifter). Fails while a job is active.
+    pub fn set_substrate(&mut self, substrate: Substrate) -> Result<()> {
+        if self.active.is_some() {
+            return Err(Error::Workload(
+                "kill the active job before switching substrates".into(),
+            ));
+        }
+        self.substrate = substrate;
+        Ok(())
+    }
+
+    /// The coordinator of the active incarnation (for topology inspection
+    /// — `dmtcp::coordinator::client_table` — and direct `dmtcp_command`
+    /// control).
+    pub fn coordinator(&self) -> Result<&Coordinator> {
+        Ok(&self.job()?.coordinator)
+    }
+
+    /// This session's checkpoint images, oldest to newest (only images
+    /// minted by this session — discovery is nonce-scoped).
+    pub fn session_images(&self) -> Result<Vec<PathBuf>> {
+        let prefix = format!("ckpt_{}_", self.process_name());
+        Ok(latest_images(&self.workdir.join("ckpt"))?
+            .into_iter()
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with(&prefix))
+            })
+            .collect())
+    }
+
+    fn job(&self) -> Result<&ActiveJob<A::State>> {
+        self.active
+            .as_ref()
+            .ok_or_else(|| Error::Workload("no active job".into()))
+    }
+
+    fn worker_shape(&self) -> (u32, u32) {
+        match &self.strategy {
+            CrStrategy::Auto(p) => (p.n_threads, p.scans_per_quantum),
+            CrStrategy::Manual => (1, 1),
+        }
+    }
+
+    /// Boot one incarnation: coordinator + plugins + (launch | restart) +
+    /// workers + sampler. Returns `Some(steps_at_restart)` when restoring
+    /// from an image, `None` on a fresh launch. This is the one code path
+    /// both strategies share.
+    fn boot(&mut self) -> Result<Option<u64>> {
+        if self.active.is_some() {
+            return Err(Error::Workload("job already active".into()));
+        }
+        let cfg = CrConfig::new(self.jobid(), &self.workdir);
+        let (coordinator, env) = start_coordinator(&cfg)?;
+        let images = self.session_images()?;
+        let mut plugins = PluginRegistry::new();
+        plugins.register(Box::new(TimerPlugin::new()));
+        let name = self.process_name();
+
+        let (state, mut launched, resumed_at) = if self.incarnation == 0 {
+            if let Some(stale) = images.last() {
+                return Err(Error::Workload(format!(
+                    "stale checkpoint images in a fresh workdir (e.g. {}): \
+                     clean {} or resume through a restart path",
+                    stale.display(),
+                    self.workdir.display()
+                )));
+            }
+            let state = Arc::new(Mutex::new(
+                self.app.fresh_state(self.target_steps, self.seed)?,
+            ));
+            self.app.register_plugins(&state, &mut plugins);
+            let launched = self.substrate.launch(
+                &name,
+                coordinator.addr(),
+                env,
+                Arc::clone(&state),
+                plugins,
+            )?;
+            (state, launched, None)
+        } else {
+            let image = images.last().cloned().ok_or_else(|| {
+                Error::Workload("requeued but no checkpoint image".into())
+            })?;
+            let state = Arc::new(Mutex::new(self.app.restore_state()));
+            self.app.register_plugins(&state, &mut plugins);
+            let restarted = self.substrate.restart(
+                &image,
+                coordinator.addr(),
+                Arc::clone(&state),
+                plugins,
+            )?;
+            let at = restarted.header.steps_done;
+            (state, restarted.launched, Some(at))
+        };
+        launched.wait_attached(ATTACH_TIMEOUT)?;
+        let (n_threads, per_quantum) = self.worker_shape();
+        self.app.spawn_workers(&mut launched, Arc::clone(&state), n_threads, per_quantum)?;
+        let sampler = LdmsSampler::start(
+            vec![Arc::clone(&launched.process.stats)],
+            Duration::from_millis(3),
+        );
+        self.active = Some(ActiveJob {
+            coordinator,
+            launched,
+            state,
+            sampler: Some(sampler),
+        });
+        Ok(resumed_at)
+    }
+
+    /// Kill the active incarnation, join its threads, fold its LDMS series
+    /// into the session accumulator, and hand back the state.
+    fn teardown(&mut self) -> Result<Arc<Mutex<A::State>>> {
+        let ActiveJob {
+            coordinator,
+            launched,
+            state,
+            mut sampler,
+        } = self
+            .active
+            .take()
+            .ok_or_else(|| Error::Workload("no active job".into()))?;
+        coordinator.kill_all();
+        let _ = launched.join();
+        if let Some(s) = sampler.take() {
+            merge_series(&mut self.series_acc, s.stop());
+        }
+        Ok(state)
+    }
+
+    fn checkpoint_images(&self) -> Result<Vec<ImageInfo>> {
+        self.job()?.coordinator.checkpoint_all()
+    }
+
+    // ----- shared observation methods (both strategies) -----------------
+
+    /// Inspect the running workload (the paper's "monitor the output" step).
+    pub fn monitor(&self) -> Result<SessionStatus> {
+        let job = self.job()?;
+        let s = job.state.lock().expect("state poisoned");
+        Ok(SessionStatus {
+            steps_done: s.steps_done(),
+            target_steps: self.target_steps,
+            done: self.app.done(&s),
+            progress: self.app.progress(&s),
+        })
+    }
+
+    /// Run a closure against the live (locked) application state — for
+    /// typed observations the generic [`SessionStatus`] doesn't carry.
+    pub fn with_state<R>(&self, f: impl FnOnce(&A::State) -> R) -> Result<R> {
+        let job = self.job()?;
+        let s = job.state.lock().expect("state poisoned");
+        Ok(f(&s))
+    }
+
+    /// Snapshot of the application state (for final verification).
+    pub fn final_state(&self) -> Result<A::State> {
+        self.with_state(|s| s.clone())
+    }
+
+    /// Verify a final state bitwise against an uninterrupted reference run
+    /// of this session's `(target_steps, seed)` — delegates to
+    /// [`CrApp::verify_final`].
+    pub fn verify_final(&self, final_state: &A::State) -> Result<()> {
+        self.app
+            .verify_final(final_state, self.target_steps, self.seed)
+    }
+
+    /// Take a checkpoint now (`dmtcp_command --checkpoint`); returns the
+    /// image paths.
+    pub fn checkpoint_now(&self) -> Result<Vec<PathBuf>> {
+        Ok(self
+            .checkpoint_images()?
+            .into_iter()
+            .map(|i| i.path)
+            .collect())
+    }
+
+    /// Poll until the workload finishes or `timeout` elapses.
+    pub fn wait_done(&self, timeout: Duration) -> Result<SessionStatus> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let st = self.monitor()?;
+            if st.done {
+                return Ok(st);
+            }
+            if Instant::now() > deadline {
+                return Err(Error::Workload(format!(
+                    "timeout at {}/{} steps",
+                    st.steps_done, st.target_steps
+                )));
+            }
+            std::thread::sleep(POLL);
+        }
+    }
+
+    /// Tear down the active incarnation, if any (idempotent; also runs on
+    /// drop).
+    pub fn finish(&mut self) {
+        if self.active.is_some() {
+            let _ = self.teardown();
+        }
+    }
+
+    // ----- the manual (§V.B.2) strategy ---------------------------------
+
+    /// Manual step 1: initial submission ("creates a checkpointing
+    /// state"). Requires [`CrStrategy::Manual`].
+    pub fn submit(&mut self) -> Result<()> {
+        self.require_manual("submit")?;
+        if self.incarnation != 0 {
+            return Err(Error::Workload(
+                "session already past its first incarnation; use \
+                 resubmit_from_checkpoint"
+                    .into(),
+            ));
+        }
+        self.boot().map(|_| ())
+    }
+
+    /// Manual step 4: kill the job (failure injection / operator
+    /// decision). The session stays usable for resubmission.
+    pub fn kill(&mut self) -> Result<()> {
+        self.teardown().map(|_| ())
+    }
+
+    /// Manual step 5: resubmit from the newest checkpoint image of this
+    /// session. Returns the step count at the restart point.
+    pub fn resubmit_from_checkpoint(&mut self) -> Result<u64> {
+        self.require_manual("resubmit_from_checkpoint")?;
+        if self.active.is_some() {
+            return Err(Error::Workload("kill the active job first".into()));
+        }
+        self.incarnation += 1;
+        self.boot()?
+            .ok_or_else(|| Error::Workload("restart did not report a resume point".into()))
+    }
+
+    fn require_manual(&self, what: &str) -> Result<()> {
+        match self.strategy {
+            CrStrategy::Manual => Ok(()),
+            CrStrategy::Auto(_) => Err(Error::Workload(format!(
+                "{what} is a manual-strategy method; CrStrategy::Auto sessions \
+                 are driven by CrSession::run"
+            ))),
+        }
+    }
+
+    // ----- the automated (Fig 3) strategy -------------------------------
+
+    /// Drive the automated Fig 3 workflow to completion: periodic
+    /// checkpoints, the preemption plan, func_trap checkpoint-on-signal,
+    /// requeue, restart from the newest image — until the workload
+    /// completes or the incarnation budget is exhausted
+    /// ([`Error::IncarnationsExhausted`]). Requires [`CrStrategy::Auto`].
+    pub fn run(mut self) -> Result<CrReport<A::State>> {
+        let policy = match &self.strategy {
+            CrStrategy::Auto(p) => p.clone(),
+            CrStrategy::Manual => {
+                return Err(Error::Workload(
+                    "CrSession::run drives CrStrategy::Auto; manual sessions use \
+                     submit/monitor/checkpoint_now/kill/resubmit_from_checkpoint"
+                        .into(),
+                ))
+            }
+        };
+        let t0 = Instant::now();
+        let mut timeline = vec![(0.0, AutoState::Submitted)];
+        let mark = |tl: &mut Vec<(f64, AutoState)>, s: AutoState| {
+            tl.push((t0.elapsed().as_secs_f64(), s));
+        };
+
+        let mut checkpoints = 0u64;
+        let mut total_image_bytes = 0u64;
+        let mut total_raw_bytes = 0u64;
+        let mut restart_steps = Vec::new();
+
+        loop {
+            if self.incarnation >= policy.max_incarnations {
+                mark(&mut timeline, AutoState::Failed);
+                return Err(Error::IncarnationsExhausted(policy.max_incarnations));
+            }
+            mark(&mut timeline, AutoState::Starting);
+            if self.incarnation > 0 {
+                mark(&mut timeline, AutoState::Restarting);
+            }
+            if let Some(at) = self.boot()? {
+                restart_steps.push(at);
+            }
+            mark(&mut timeline, AutoState::Running);
+
+            // Drive this incarnation: periodic checkpoints + preemption
+            // plan.
+            let inc_start = Instant::now();
+            let preempt_at = policy.preempt_after.get(self.incarnation as usize).copied();
+            let mut next_ckpt = policy.ckpt_interval;
+            let completed = loop {
+                std::thread::sleep(POLL);
+                let done = {
+                    let job = self.active.as_ref().expect("active job");
+                    let s = job.state.lock().expect("state poisoned");
+                    self.app.done(&s)
+                };
+                if done {
+                    break true;
+                }
+                let ran = inc_start.elapsed();
+                if let Some(p) = preempt_at {
+                    if ran >= p {
+                        break false;
+                    }
+                }
+                if policy.periodic_ckpt && ran >= next_ckpt {
+                    mark(&mut timeline, AutoState::Checkpointing);
+                    match self.checkpoint_images() {
+                        Ok(images) => tally(
+                            &images,
+                            &mut checkpoints,
+                            &mut total_image_bytes,
+                            &mut total_raw_bytes,
+                        ),
+                        Err(e) => log::warn!("periodic checkpoint failed: {e}"),
+                    }
+                    mark(&mut timeline, AutoState::Running);
+                    next_ckpt += policy.ckpt_interval;
+                }
+            };
+
+            if completed {
+                let state = self.teardown()?;
+                mark(&mut timeline, AutoState::Completed);
+                let final_state = state.lock().expect("state poisoned").clone();
+                return Ok(CrReport {
+                    completed: true,
+                    incarnations: self.incarnation + 1,
+                    checkpoints,
+                    total_image_bytes,
+                    total_raw_bytes,
+                    wall_secs: t0.elapsed().as_secs_f64(),
+                    timeline,
+                    final_state,
+                    series: self.series_acc.take().unwrap_or_default(),
+                    restart_steps,
+                });
+            }
+            // func_trap: SIGTERM trapped → checkpoint → requeue.
+            mark(&mut timeline, AutoState::SignalTrapped);
+            if policy.ckpt_on_signal {
+                match self.checkpoint_images() {
+                    Ok(images) => tally(
+                        &images,
+                        &mut checkpoints,
+                        &mut total_image_bytes,
+                        &mut total_raw_bytes,
+                    ),
+                    Err(e) => log::warn!("trap checkpoint failed: {e}"),
+                }
+            }
+            let _ = self.teardown()?;
+            mark(&mut timeline, AutoState::Requeued);
+            std::thread::sleep(policy.requeue_delay);
+            self.incarnation += 1;
+        }
+    }
+}
+
+impl<A: CrApp> Drop for CrSession<A> {
+    fn drop(&mut self) {
+        if let Some(job) = self.active.take() {
+            job.coordinator.kill_all();
+            let _ = job.launched.join();
+        }
+    }
+}
+
+/// Fold one checkpoint round into the report accounting.
+fn tally(images: &[ImageInfo], checkpoints: &mut u64, image_bytes: &mut u64, raw_bytes: &mut u64) {
+    *checkpoints += 1;
+    *image_bytes += images.iter().map(|i| i.stored_bytes).sum::<u64>();
+    *raw_bytes += images.iter().map(|i| i.raw_bytes).sum::<u64>();
+}
+
+/// Concatenate sampler outputs across incarnations (time axes are
+/// per-incarnation; offset each segment by the accumulated end time).
+fn merge_series(acc: &mut Option<SampledSeries>, next: SampledSeries) {
+    match acc {
+        None => *acc = Some(next),
+        Some(a) => {
+            let offset = a.memory.t.last().copied().unwrap_or(0.0);
+            for (dst, src) in [
+                (&mut a.memory, &next.memory),
+                (&mut a.cpu, &next.cpu),
+                (&mut a.steps, &next.steps),
+            ] {
+                for (&t, &v) in src.t.iter().zip(&src.v) {
+                    dst.push(offset + t, v);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{G4App, G4Version, WorkloadKind};
+
+    fn app() -> G4App {
+        G4App::build(WorkloadKind::WaterPhantom, G4Version::V10_7, 16)
+    }
+
+    fn workdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ncr_sess_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn builder_requires_workdir() {
+        let a = app();
+        assert!(CrSession::builder(&a).target_steps(8).build().is_err());
+        // A zero target is a degenerate but valid already-done workload
+        // (the legacy entry points allowed it, so the builder must too).
+        assert!(CrSession::builder(&a)
+            .workdir(workdir("req"))
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn nonces_make_jobids_and_names_unique() {
+        let a = app();
+        let wd = workdir("nonce");
+        let s1 = CrSession::builder(&a)
+            .workdir(&wd)
+            .target_steps(8)
+            .seed(7)
+            .build()
+            .unwrap();
+        let s2 = CrSession::builder(&a)
+            .workdir(&wd)
+            .target_steps(8)
+            .seed(7)
+            .build()
+            .unwrap();
+        assert_ne!(s1.jobid(), s2.jobid());
+        assert_ne!(s1.process_name(), s2.process_name());
+        // Same seed still contributes the Slurm-looking prefix.
+        assert!(s1.jobid().starts_with("100007"));
+    }
+
+    #[test]
+    fn manual_methods_rejected_under_auto() {
+        let a = app();
+        let mut s = CrSession::builder(&a)
+            .policy(CrPolicy::default())
+            .workdir(workdir("gate"))
+            .target_steps(8)
+            .build()
+            .unwrap();
+        assert!(s.submit().is_err());
+        assert!(s.monitor().is_err(), "no active job yet");
+    }
+
+    #[test]
+    fn run_rejected_under_manual() {
+        let a = app();
+        let s = CrSession::builder(&a)
+            .workdir(workdir("runman"))
+            .target_steps(8)
+            .build()
+            .unwrap();
+        let err = s.run().unwrap_err();
+        assert!(err.to_string().contains("CrStrategy::Auto"), "{err}");
+    }
+
+    #[test]
+    fn merge_series_offsets_time() {
+        let mut a = SampledSeries::default();
+        a.memory.push(0.0, 1.0);
+        a.memory.push(1.0, 2.0);
+        let mut b = SampledSeries::default();
+        b.memory.push(0.0, 3.0);
+        b.memory.push(0.5, 4.0);
+        let mut acc = Some(a);
+        merge_series(&mut acc, b);
+        let m = &acc.unwrap().memory;
+        assert_eq!(m.t, vec![0.0, 1.0, 1.0, 1.5]);
+        assert_eq!(m.v, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+}

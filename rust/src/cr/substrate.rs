@@ -1,0 +1,179 @@
+//! Where a checkpointed process runs: bare on the host, or inside a
+//! shifter / podman-hpc container.
+//!
+//! The paper's central container constraint lives here (absorbed from the
+//! old `Container::launch_checkpointed`): **checkpointing inside a
+//! container requires DMTCP inside the image** — a runtime cannot
+//! checkpoint a container from outside — and checkpoint images must land
+//! on a volume that outlives the container instance. A [`Substrate`] makes
+//! the choice of execution environment a one-line builder argument on
+//! [`crate::cr::session::CrSession`], so the same workflow runs bare,
+//! under shifter, or under podman-hpc (the paper's §V claim).
+
+#![deny(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::container::runtime::Container;
+use crate::dmtcp::process::Checkpointable;
+use crate::dmtcp::{
+    dmtcp_launch, dmtcp_restart, LaunchSpec, LaunchedProcess, PluginRegistry, RestartedProcess,
+};
+use crate::error::{Error, Result};
+
+/// The execution environment a C/R session launches its processes in.
+pub enum Substrate {
+    /// A plain host process (no container runtime).
+    Bare,
+    /// Inside a container execution context (shifter or podman-hpc —
+    /// build one with `Shifter::run` / `PodmanHpc::run`).
+    Container(Container),
+}
+
+impl Substrate {
+    /// The bare-process substrate.
+    pub fn bare() -> Self {
+        Substrate::Bare
+    }
+
+    /// A containerized substrate from an execution context.
+    pub fn container(container: Container) -> Self {
+        Substrate::Container(container)
+    }
+
+    /// Substrate name for logs and reports (`bare` / `shifter` /
+    /// `podman-hpc`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Substrate::Bare => "bare",
+            Substrate::Container(c) => c.runtime_name,
+        }
+    }
+
+    /// Launch a fresh process on this substrate under checkpoint control.
+    /// `env` is the CR-module environment (coordinator address, checkpoint
+    /// dir, job id); containerized launches overlay the image environment
+    /// on top of it.
+    pub(crate) fn launch<S: Checkpointable + 'static>(
+        &self,
+        name: &str,
+        coordinator: SocketAddr,
+        env: BTreeMap<String, String>,
+        state: Arc<Mutex<S>>,
+        plugins: PluginRegistry,
+    ) -> Result<LaunchedProcess> {
+        match self {
+            Substrate::Bare => {
+                let mut spec = LaunchSpec::new(name, coordinator);
+                spec.env = env;
+                Ok(dmtcp_launch(spec, state, plugins))
+            }
+            Substrate::Container(c) => {
+                launch_in_container(c, name, coordinator, env, state, plugins)
+            }
+        }
+    }
+
+    /// Restart a process from a checkpoint image on this substrate. The
+    /// container constraints are re-validated: the restarting image set
+    /// must also run where DMTCP is embedded and checkpoints persist.
+    pub(crate) fn restart<S: Checkpointable + 'static>(
+        &self,
+        image: &Path,
+        coordinator: SocketAddr,
+        state: Arc<Mutex<S>>,
+        plugins: PluginRegistry,
+    ) -> Result<RestartedProcess> {
+        if let Substrate::Container(c) = self {
+            validate_container(c)?;
+        }
+        dmtcp_restart(image, coordinator, state, plugins)
+    }
+}
+
+/// Enforce the paper's containerized-C/R preconditions: DMTCP embedded in
+/// the image, and the checkpoint directory volume-mapped to the host.
+pub(crate) fn validate_container(container: &Container) -> Result<()> {
+    if !container.image.has_dmtcp {
+        return Err(Error::Container(format!(
+            "image {} does not embed DMTCP: checkpointing from outside \
+             the container is not possible — rebuild the image with \
+             DMTCP installed (see container::image::EMBED_DMTCP_SNIPPET)",
+            container.image.reference()
+        )));
+    }
+    // Checkpoint images must land on a volume that outlives the
+    // container instance.
+    let ckpt_container_dir = container
+        .effective_env()
+        .get("DMTCP_CHECKPOINT_DIR")
+        .cloned()
+        .unwrap_or_else(|| "/ckpt".to_string());
+    if container.spec.host_path(&ckpt_container_dir).is_none() {
+        return Err(Error::Container(format!(
+            "checkpoint dir {ckpt_container_dir} is not volume-mapped; \
+             images written there would not survive the container"
+        )));
+    }
+    Ok(())
+}
+
+/// Validate, then launch inside the container with the image environment
+/// overlaid on the session environment (the container view wins for keys
+/// both define, matching what the runtime would present to the process).
+pub(crate) fn launch_in_container<S: Checkpointable + 'static>(
+    container: &Container,
+    name: &str,
+    coordinator: SocketAddr,
+    extra_env: BTreeMap<String, String>,
+    state: Arc<Mutex<S>>,
+    plugins: PluginRegistry,
+) -> Result<LaunchedProcess> {
+    validate_container(container)?;
+    let mut spec = LaunchSpec::new(name, coordinator);
+    spec.env = extra_env;
+    spec.env.extend(container.effective_env());
+    Ok(dmtcp_launch(spec, state, plugins))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::container::image::Image;
+    use crate::container::runtime::RunSpec;
+
+    fn container(has_dmtcp: bool, volume: bool) -> Container {
+        let mut image = Image::base("app", "v1", 1);
+        image.has_dmtcp = has_dmtcp;
+        let mut spec = RunSpec::default().env("DMTCP_CHECKPOINT_DIR", "/ckpt");
+        if volume {
+            spec = spec.volume("/host/ckpt", "/ckpt");
+        }
+        Container {
+            runtime_name: "podman-hpc",
+            image,
+            spec,
+        }
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(Substrate::bare().name(), "bare");
+        assert_eq!(
+            Substrate::container(container(true, true)).name(),
+            "podman-hpc"
+        );
+    }
+
+    #[test]
+    fn validation_enforces_paper_constraints() {
+        assert!(validate_container(&container(true, true)).is_ok());
+        let err = validate_container(&container(false, true)).unwrap_err();
+        assert!(err.to_string().contains("does not embed DMTCP"), "{err}");
+        let err = validate_container(&container(true, false)).unwrap_err();
+        assert!(err.to_string().contains("volume"), "{err}");
+    }
+}

@@ -33,6 +33,10 @@ pub enum Error {
     /// Workload configuration errors.
     Workload(String),
 
+    /// An automated C/R session used up its incarnation budget without
+    /// completing (the contained value is the budget that was exhausted).
+    IncarnationsExhausted(u32),
+
     /// CLI usage errors.
     Usage(String),
 }
@@ -48,6 +52,9 @@ impl fmt::Display for Error {
             Error::Container(msg) => write!(f, "container: {msg}"),
             Error::Manifest(msg) => write!(f, "manifest: {msg}"),
             Error::Workload(msg) => write!(f, "workload: {msg}"),
+            Error::IncarnationsExhausted(budget) => {
+                write!(f, "incarnation budget ({budget}) exhausted")
+            }
             Error::Usage(msg) => write!(f, "usage: {msg}"),
         }
     }
@@ -88,6 +95,14 @@ mod tests {
         assert_eq!(
             Error::Image("bad".into()).to_string(),
             "checkpoint image: bad"
+        );
+    }
+
+    #[test]
+    fn incarnations_exhausted_displays_budget() {
+        assert_eq!(
+            Error::IncarnationsExhausted(8).to_string(),
+            "incarnation budget (8) exhausted"
         );
     }
 

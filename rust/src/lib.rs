@@ -5,7 +5,10 @@
 //! Timalsina, Tyler — LBNL, 2024) as a three-layer Rust + JAX/Pallas stack.
 //!
 //! The crate contains the paper's contribution — the C/R job-management
-//! layer ([`cr`]) — plus every substrate it depends on, built from scratch:
+//! layer ([`cr`]), entered through the session-first
+//! [`cr::session::CrSession`] builder over the workload-generic
+//! [`cr::app::CrApp`] trait and [`cr::substrate::Substrate`] execution
+//! environments — plus every substrate it depends on, built from scratch:
 //!
 //! * [`dmtcp`] — a DMTCP-analog: central coordinator over real TCP sockets,
 //!   per-process checkpoint threads, barrier protocol, gzip'd+CRC'd

@@ -15,8 +15,12 @@
 //! aborts. [`Cp2kScratchPlugin`] is the fix under development with the
 //! DMTCP developers: it re-virtualizes the scratch path on `PostRestart`.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
 use crate::dmtcp::plugin::{Event, Plugin, PluginCtx};
-use crate::dmtcp::process::Checkpointable;
+use crate::dmtcp::process::{Checkpointable, GateVerdict, WorkerCtx};
 use crate::error::{Error, Result};
 use crate::util::bytes::{bytes_to_f32s, f32s_to_bytes};
 
@@ -157,6 +161,81 @@ impl Checkpointable for Cp2kState {
 
     fn size_bytes(&self) -> usize {
         (self.field.len() + self.source.len() + self.residuals.len()) * 4 + 64
+    }
+}
+
+/// The one workload label for the CP2K-analog, shared by the `CrApp`
+/// implementation, the CLI dispatch, and the CLI `workloads` listing.
+pub const CP2K_SCF_LABEL: &str = "cp2k-scf";
+
+/// Driver configuration for running the CP2K-analog through the C/R layer
+/// (`cr::CrApp` is implemented for this type in `cr::app`).
+#[derive(Debug, Clone)]
+pub struct Cp2kApp {
+    /// Grid edge length of the Laplace problem.
+    pub n: usize,
+    /// Register [`Cp2kScratchPlugin`] so restart re-virtualizes the
+    /// scratch path. Disable to reproduce the paper's §VII restart defect
+    /// through the full C/R stack.
+    pub scratch_fix: bool,
+    /// Artificial per-quantum pause, pacing the toy sweep like a
+    /// realistically sized SCF step (so checkpoints and preemptions land
+    /// mid-run instead of after completion).
+    pub sweep_pause: Duration,
+}
+
+impl Cp2kApp {
+    /// Driver for an `n`×`n` problem with the scratch fix on and a 50 µs
+    /// sweep pause.
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            scratch_fix: true,
+            sweep_pause: Duration::from_micros(50),
+        }
+    }
+
+    /// Synthetic per-incarnation "real pid" for scratch-path derivation
+    /// (mirrors the DMTCP launch-layer pid allocator; each incarnation
+    /// must get a distinct one for the defect model to hold).
+    pub fn next_scratch_pid() -> u64 {
+        static NEXT: AtomicU64 = AtomicU64::new(5_000);
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// The user-thread body driving a shared [`Cp2kState`]: iterate between
+/// checkpoint safe-points until the target iteration count is reached (or
+/// the process is killed). Sweeps run under the state lock, so any number
+/// of workers interleave deterministically.
+pub fn cp2k_worker(
+    ctx: WorkerCtx,
+    state: Arc<Mutex<Cp2kState>>,
+    sweeps_per_quantum: u32,
+    pause: Duration,
+) {
+    loop {
+        if ctx.ckpt_point() == GateVerdict::Exit {
+            return;
+        }
+        let (steps, bytes) = {
+            let mut s = state.lock().expect("cp2k state poisoned");
+            if s.done() {
+                return;
+            }
+            for _ in 0..sweeps_per_quantum.max(1) {
+                if s.done() {
+                    break;
+                }
+                s.iterate();
+            }
+            (s.iterations, s.size_bytes() as u64)
+        };
+        ctx.record_steps(steps);
+        ctx.record_state_bytes(bytes);
+        if !pause.is_zero() {
+            std::thread::sleep(pause);
+        }
     }
 }
 

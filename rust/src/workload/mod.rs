@@ -14,7 +14,7 @@ pub mod spectra;
 pub mod state;
 pub mod workloads;
 
-pub use cp2k::{Cp2kScratchPlugin, Cp2kState};
+pub use cp2k::{cp2k_worker, Cp2kApp, Cp2kScratchPlugin, Cp2kState, CP2K_SCF_LABEL};
 pub use detector::{reading, DetectorReading};
 pub use geant4::{static_inputs, xs_table, G4Version, Material, N_MATERIALS};
 pub use spectra::{Beam, GammaIsotope, NeutronSource};

@@ -1,21 +1,19 @@
-//! Containerized C/R integration (§V.B): build images with and without
-//! DMTCP embedded, run checkpointed workloads inside shifter and
-//! podman-hpc, and verify restartability across container runtimes —
-//! "Significant modifications have been implemented in the shifter
-//! container script to ensure compatibility with podman-hpc and vice
-//! versa" becomes: an image checkpointed under one runtime restarts under
-//! the other.
+//! Containerized C/R integration (§V.B) through the session API: build
+//! images with and without DMTCP embedded, run checkpointed workloads
+//! inside shifter and podman-hpc substrates, and verify restartability
+//! across container runtimes — "Significant modifications have been
+//! implemented in the shifter container script to ensure compatibility
+//! with podman-hpc and vice versa" becomes: one `CrSession` checkpoints
+//! under one runtime and restarts under the other.
 
-use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use nersc_cr::container::{
     ContainerRuntime, Image, PodmanHpc, Registry, RunSpec, Shifter, EMBED_DMTCP_SNIPPET,
 };
-use nersc_cr::cr::{latest_images, start_coordinator, CrConfig};
-use nersc_cr::dmtcp::{dmtcp_restart, PluginRegistry};
+use nersc_cr::cr::{CrSession, CrStrategy, Substrate};
 use nersc_cr::runtime::service;
-use nersc_cr::workload::{transport_worker, G4App, G4Version, WorkloadKind};
+use nersc_cr::workload::{G4App, G4Version, WorkloadKind};
 
 fn workdir(tag: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join(format!("ncr_ct_{tag}_{}", std::process::id()));
@@ -33,9 +31,13 @@ fn registry_with_base() -> Registry {
     reg
 }
 
+fn g4_app() -> G4App {
+    let h = service::shared().unwrap();
+    G4App::build(WorkloadKind::WaterPhantom, G4Version::V10_7, h.manifest().grid_d)
+}
+
 #[test]
 fn image_without_dmtcp_cannot_checkpoint() {
-    let h = service::shared().unwrap();
     let mut reg = registry_with_base();
     // Build a plain app image (no DMTCP) and publish it.
     let mut pm = PodmanHpc::new();
@@ -50,26 +52,22 @@ fn image_without_dmtcp_cannot_checkpoint() {
     pm.migrate("plain:v1").unwrap();
 
     let wd = workdir("nodmtcp");
-    let cfg = CrConfig::new("777100", &wd);
-    let (coord, _env) = start_coordinator(&cfg).unwrap();
-    let app = G4App::build(WorkloadKind::WaterPhantom, G4Version::V10_7, h.manifest().grid_d);
-    let state = Arc::new(Mutex::new(app.fresh_state(h.manifest().batch, 8, 1)));
-
+    let app = g4_app();
     let container = pm
         .run(
             "plain:v1",
-            RunSpec::default().volume(cfg.ckpt_dir.to_string_lossy(), "/ckpt"),
+            RunSpec::default().volume(wd.join("ckpt").to_string_lossy(), "/ckpt"),
         )
         .unwrap();
-    let err = match container.launch_checkpointed(
-        "app",
-        coord.addr(),
-        state,
-        PluginRegistry::new(),
-    ) {
-        Err(e) => e,
-        Ok(_) => panic!("launch without DMTCP should fail"),
-    };
+    let mut session = CrSession::builder(&app)
+        .substrate(Substrate::container(container))
+        .strategy(CrStrategy::Manual)
+        .workdir(&wd)
+        .target_steps(8)
+        .seed(1)
+        .build()
+        .unwrap();
+    let err = session.submit().unwrap_err();
     assert!(
         err.to_string().contains("does not embed DMTCP"),
         "wrong error: {err}"
@@ -79,36 +77,32 @@ fn image_without_dmtcp_cannot_checkpoint() {
 
 #[test]
 fn ckpt_dir_must_be_volume_mapped() {
-    let h = service::shared().unwrap();
     let mut pm = PodmanHpc::new();
     let reg = registry_with_base();
     pm.build("cr", "v1", EMBED_DMTCP_SNIPPET, &reg).unwrap();
     pm.migrate("cr:v1").unwrap();
 
     let wd = workdir("novol");
-    let cfg = CrConfig::new("777200", &wd);
-    let (coord, _env) = start_coordinator(&cfg).unwrap();
-    let app = G4App::build(WorkloadKind::WaterPhantom, G4Version::V10_7, h.manifest().grid_d);
-    let state = Arc::new(Mutex::new(app.fresh_state(h.manifest().batch, 8, 1)));
-
+    let app = g4_app();
     // No volume mapping: images would die with the container.
     let container = pm.run("cr:v1", RunSpec::default()).unwrap();
-    let err = match container.launch_checkpointed(
-        "app",
-        coord.addr(),
-        state,
-        PluginRegistry::new(),
-    ) {
-        Err(e) => e,
-        Ok(_) => panic!("launch without volume mapping should fail"),
-    };
+    let mut session = CrSession::builder(&app)
+        .substrate(Substrate::container(container))
+        .strategy(CrStrategy::Manual)
+        .workdir(&wd)
+        .target_steps(8)
+        .seed(1)
+        .build()
+        .unwrap();
+    let err = session.submit().unwrap_err();
     assert!(err.to_string().contains("volume"), "wrong error: {err}");
     std::fs::remove_dir_all(&wd).ok();
 }
 
 #[test]
 fn checkpoint_in_podman_restart_in_shifter() {
-    // The full cross-runtime C/R cycle with real compute inside.
+    // The full cross-runtime C/R cycle with real compute inside, driven by
+    // one session whose substrate switches between incarnations.
     let h = service::shared().unwrap();
     let mut reg = registry_with_base();
 
@@ -127,81 +121,82 @@ fn checkpoint_in_podman_restart_in_shifter() {
     let app = G4App::build(WorkloadKind::EmCalorimeter, G4Version::V10_7, h.manifest().grid_d);
     let target = 12 * h.manifest().scan_steps as u64;
 
-    // --- incarnation 1: podman-hpc ------------------------------------
-    let cfg1 = CrConfig::new("888100", &wd);
-    let (coord1, env) = start_coordinator(&cfg1).unwrap();
-    let state1 = Arc::new(Mutex::new(app.fresh_state(h.manifest().batch, target, 321)));
     // The checkpoint dir inside the container is /ckpt, volume-mapped to
     // the host dir the coordinator writes into (a bind mount).
-    let _ = &env;
     let spec = RunSpec::default()
-        .volume(cfg1.ckpt_dir.to_string_lossy(), "/ckpt")
+        .volume(wd.join("ckpt").to_string_lossy(), "/ckpt")
         .env("DMTCP_CHECKPOINT_DIR", "/ckpt");
-    let container = pm.run("g4cr:test", spec.clone()).unwrap();
-    let mut launched = container
-        .launch_checkpointed("g4pm", coord1.addr(), Arc::clone(&state1), PluginRegistry::new())
+
+    // --- incarnation 1: podman-hpc ------------------------------------
+    let mut session = CrSession::builder(&app)
+        .substrate(Substrate::container(pm.run("g4cr:test", spec.clone()).unwrap()))
+        .strategy(CrStrategy::Manual)
+        .workdir(&wd)
+        .target_steps(target)
+        .seed(321)
+        .build()
         .unwrap();
-    launched.wait_attached(Duration::from_secs(10)).unwrap();
-    // Containerized env is visible to the process.
-    assert_eq!(
-        launched.process.env.lock().unwrap().get("CONTAINER_RUNTIME"),
-        Some(&"podman-hpc".to_string())
-    );
-    {
-        let st = Arc::clone(&state1);
-        let hh = h.clone();
-        let si = Arc::clone(&app.si);
-        launched
-            .process
-            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
-    }
+    session.submit().unwrap();
+    assert_eq!(session.substrate().name(), "podman-hpc");
     // Let it make progress, checkpoint, preempt.
     let deadline = std::time::Instant::now() + Duration::from_secs(30);
-    while state1.lock().unwrap().particles.steps_done == 0 {
+    while session.monitor().unwrap().steps_done == 0 {
         assert!(std::time::Instant::now() < deadline);
         std::thread::sleep(Duration::from_millis(10));
     }
-    coord1.checkpoint_all().unwrap();
-    coord1.kill_all();
-    let _ = launched.join();
+    let images = session.checkpoint_now().unwrap();
+    // The image header captures the launched process environment: the
+    // container view must have reached the process (runtime marker, the
+    // container-side checkpoint dir winning over the session's host path)
+    // alongside the session's coordinator wiring.
+    let hdr = nersc_cr::dmtcp::inspect_image(images.last().unwrap()).unwrap();
+    assert_eq!(
+        hdr.env.get("CONTAINER_RUNTIME").map(String::as_str),
+        Some("podman-hpc")
+    );
+    assert_eq!(
+        hdr.env.get("DMTCP_CHECKPOINT_DIR").map(String::as_str),
+        Some("/ckpt")
+    );
+    assert!(hdr.env.contains_key("DMTCP_COORD_PORT"), "session env lost");
+    session.kill().unwrap();
 
     // --- incarnation 2: shifter, same image, same checkpoint dir -------
-    let image_path = latest_images(&cfg1.ckpt_dir).unwrap().pop().unwrap();
-    let cfg2 = CrConfig::new("888101", &wd);
-    let (coord2, _env2) = start_coordinator(&cfg2).unwrap();
     let sh_container = sh.run("g4cr:test", spec).unwrap();
     assert!(sh_container.image.has_dmtcp);
-    let state2 = Arc::new(Mutex::new(app.shell_state()));
-    let restarted = dmtcp_restart(
-        &image_path,
-        coord2.addr(),
-        Arc::clone(&state2),
-        PluginRegistry::new(),
-    )
-    .unwrap();
-    let mut launched2 = restarted.launched;
-    launched2.wait_attached(Duration::from_secs(10)).unwrap();
-    {
-        let st = Arc::clone(&state2);
-        let hh = h.clone();
-        let si = Arc::clone(&app.si);
-        launched2
-            .process
-            .spawn_user_thread(move |ctx| transport_worker(ctx, hh, st, si, 1));
-    }
-    let deadline = std::time::Instant::now() + Duration::from_secs(60);
-    while !state2.lock().unwrap().done() {
-        assert!(std::time::Instant::now() < deadline, "restart did not finish");
-        std::thread::sleep(Duration::from_millis(10));
-    }
-    coord2.kill_all();
-    let _ = launched2.join();
+    session
+        .set_substrate(Substrate::container(sh_container))
+        .unwrap();
+    let resumed = session.resubmit_from_checkpoint().unwrap();
+    assert!(resumed > 0);
+    assert_eq!(session.substrate().name(), "shifter");
+    session.wait_done(Duration::from_secs(60)).unwrap();
+    let final_state = session.final_state().unwrap();
+    session.finish();
 
     // Bitwise vs uninterrupted reference.
     let mut ref_state = app.fresh_state(h.manifest().batch, target, 321);
     let scans = target.div_ceil(h.manifest().scan_steps as u64) as u32;
     ref_state.particles = h.scan(ref_state.particles, &app.si, scans).unwrap();
-    assert_eq!(state2.lock().unwrap().particles, ref_state.particles);
+    assert_eq!(final_state.particles, ref_state.particles);
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn substrate_cannot_switch_while_active() {
+    let app = g4_app();
+    let wd = workdir("noswitch");
+    let mut session = CrSession::builder(&app)
+        .strategy(CrStrategy::Manual)
+        .workdir(&wd)
+        .target_steps(1_000_000)
+        .seed(2)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+    let err = session.set_substrate(Substrate::bare()).unwrap_err();
+    assert!(err.to_string().contains("kill the active job"), "{err}");
+    session.finish();
     std::fs::remove_dir_all(&wd).ok();
 }
 

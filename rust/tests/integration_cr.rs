@@ -1,7 +1,10 @@
 //! End-to-end DMTCP-analog integration: coordinator + processes over real
 //! TCP sockets; checkpoint barriers; kill (preemption); restart from image;
 //! and the keystone invariant — an interrupted-and-restarted computation
-//! produces results bit-identical to an uninterrupted one.
+//! produces results bit-identical to an uninterrupted one. The same toy
+//! workload also rides the `CrSession` orchestration at the end of this
+//! file, proving the session API is workload-generic (any
+//! `Checkpointable` state, not just the paper's two applications).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
@@ -368,6 +371,118 @@ fn timer_plugin_survives_restart() {
     launched2.wait_attached(Duration::from_secs(5)).unwrap();
     coord2.kill_all();
     let _ = launched2.join();
+}
+
+// --- the session API over an arbitrary user workload ---------------------
+
+/// A `CrApp` for the LCG chain: ~30 lines to put any checkpointable state
+/// under the full automated C/R lifecycle.
+struct ChainApp {
+    n: usize,
+}
+
+impl nersc_cr::cr::CrApp for ChainApp {
+    type State = ChainState;
+
+    fn label(&self) -> String {
+        "lcg-chain".into()
+    }
+
+    fn fresh_state(&self, target_steps: u64, _seed: u64) -> Result<ChainState> {
+        Ok(ChainState::new(self.n, target_steps))
+    }
+
+    fn restore_state(&self) -> ChainState {
+        ChainState::new(1, 1) // overwritten by the image restore
+    }
+
+    fn spawn_workers(
+        &self,
+        launched: &mut nersc_cr::dmtcp::LaunchedProcess,
+        state: Arc<Mutex<ChainState>>,
+        n_threads: u32,
+        work_per_quantum: u32,
+    ) -> Result<()> {
+        for _ in 0..n_threads.max(1) {
+            let st = Arc::clone(&state);
+            launched.process.spawn_user_thread(move |ctx| loop {
+                if ctx.ckpt_point() == GateVerdict::Exit {
+                    break;
+                }
+                let (steps, bytes) = {
+                    let mut s = st.lock().unwrap();
+                    if s.done() {
+                        break;
+                    }
+                    for _ in 0..work_per_quantum.max(1) {
+                        if s.done() {
+                            break;
+                        }
+                        s.advance();
+                    }
+                    (s.steps, s.size_bytes() as u64)
+                };
+                ctx.record_steps(steps);
+                ctx.record_state_bytes(bytes);
+                std::thread::sleep(Duration::from_micros(50));
+            });
+        }
+        Ok(())
+    }
+
+    fn done(&self, state: &ChainState) -> bool {
+        state.done()
+    }
+
+    fn progress(&self, state: &ChainState) -> f64 {
+        state.steps as f64 / state.target_steps.max(1) as f64
+    }
+
+    fn verify_final(
+        &self,
+        final_state: &ChainState,
+        target_steps: u64,
+        _seed: u64,
+    ) -> Result<()> {
+        if final_state.digest() != reference_digest(self.n, target_steps) {
+            return Err(nersc_cr::Error::Workload(
+                "chain digest differs from uninterrupted reference".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn session_orchestrates_arbitrary_user_workloads() {
+    use nersc_cr::cr::{CrApp, CrPolicy, CrSession, CrStrategy};
+
+    let app = ChainApp { n: 512 };
+    let wd = test_dir("session_chain");
+    let policy = CrPolicy {
+        ckpt_interval: Duration::from_millis(30),
+        preempt_after: vec![Duration::from_millis(60)],
+        requeue_delay: Duration::from_millis(10),
+        ..Default::default()
+    };
+    let report = CrSession::builder(&app)
+        .strategy(CrStrategy::Auto(policy))
+        .workdir(&wd)
+        .target_steps(5_000)
+        .seed(0)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(report.completed);
+    assert!(
+        report.incarnations >= 2,
+        "preemption should have forced a restart: {:?}",
+        report.timeline
+    );
+    assert_eq!(report.final_state.digest(), reference_digest(512, 5_000));
+    app.verify_final(&report.final_state, 5_000, 0).unwrap();
+    std::fs::remove_dir_all(&wd).ok();
 }
 
 #[test]

@@ -1,14 +1,14 @@
 //! Full-stack C/R workflow integration: the automated (Fig 3) and manual
-//! (§V.B.2) strategies drive the *real* pipeline — PJRT transport compute,
-//! TCP coordinator, checkpoint images on disk, restart — and the result is
-//! bit-identical to an uninterrupted run. This is the paper's §VI
-//! robustness claim as an executable test.
+//! (§V.B.2) strategies drive the *real* pipeline through one `CrSession`
+//! API — transport compute, TCP coordinator, checkpoint images on disk,
+//! restart — and the result is bit-identical to an uninterrupted run.
+//! This is the paper's §VI robustness claim as an executable test, plus
+//! the deprecation-shim contracts for the legacy entry points.
 
 use std::path::PathBuf;
-use std::sync::Arc;
 use std::time::Duration;
 
-use nersc_cr::cr::{run_auto, AutoState, CrPolicy, ManualCr};
+use nersc_cr::cr::{AutoState, CrPolicy, CrSession, CrStrategy};
 use nersc_cr::runtime::{service, ComputeHandle, ParticleState};
 use nersc_cr::workload::{G4App, G4Version, GammaIsotope, NeutronSource, WorkloadKind};
 
@@ -59,7 +59,15 @@ fn auto_cr_without_preemption_completes() {
         ckpt_interval: Duration::from_millis(200),
         ..Default::default()
     };
-    let report = run_auto(&app, &h, target, 71, &policy, &wd).unwrap();
+    let report = CrSession::builder(&app)
+        .strategy(CrStrategy::Auto(policy))
+        .workdir(&wd)
+        .target_steps(target)
+        .seed(71)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
     assert!(report.completed);
     assert_eq!(report.incarnations, 1);
     assert_eq!(report.final_state.particles.steps_done, target);
@@ -88,7 +96,15 @@ fn auto_cr_survives_two_preemptions_bitwise() {
         requeue_delay: Duration::from_millis(30),
         ..Default::default()
     };
-    let report = run_auto(&app, &h, target, 1234, &policy, &wd).unwrap();
+    let report = CrSession::builder(&app)
+        .strategy(CrStrategy::Auto(policy))
+        .workdir(&wd)
+        .target_steps(target)
+        .seed(1234)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
     assert!(report.completed);
     assert_eq!(report.incarnations, 3, "timeline: {:?}", report.timeline);
     assert!(report.checkpoints >= 2);
@@ -126,13 +142,19 @@ fn manual_cr_flow_bitwise() {
     let target = 96 * h.manifest().scan_steps as u64;
     let wd = workdir("manual");
 
-    let mut mcr = ManualCr::new(&app, h.clone(), wd.clone(), target, 99);
+    let mut session = CrSession::builder(&app)
+        .strategy(CrStrategy::Manual)
+        .workdir(&wd)
+        .target_steps(target)
+        .seed(99)
+        .build()
+        .unwrap();
     // Step 1: submit.
-    mcr.submit().unwrap();
+    session.submit().unwrap();
     // Step 2: monitor until some progress shows in the "logs".
     let deadline = std::time::Instant::now() + Duration::from_secs(30);
     loop {
-        let r = mcr.monitor().unwrap();
+        let r = session.monitor().unwrap();
         if r.steps_done > 0 {
             assert!(!r.done, "workload too small for a meaningful test");
             break;
@@ -141,21 +163,166 @@ fn manual_cr_flow_bitwise() {
         std::thread::sleep(Duration::from_millis(10));
     }
     // Step 3: the user decides to checkpoint...
-    let images = mcr.checkpoint_now().unwrap();
+    let images = session.checkpoint_now().unwrap();
     assert_eq!(images.len(), 1);
     // ...and the job then dies (node failure / operator kill).
-    mcr.kill().unwrap();
+    session.kill().unwrap();
     // Step 4: manual resubmission from the checkpoint file.
-    let resumed_at = mcr.resubmit_from_checkpoint().unwrap();
+    let resumed_at = session.resubmit_from_checkpoint().unwrap();
     assert!(resumed_at > 0 && resumed_at < target);
+    assert_eq!(session.incarnation(), 1);
     // Step 5: iterate monitoring until completion.
-    let fin = mcr.wait_done(Duration::from_secs(60)).unwrap();
+    let fin = session.wait_done(Duration::from_secs(60)).unwrap();
     assert!(fin.done);
-    let final_state = mcr.final_state().unwrap();
-    mcr.finish();
+    let final_state = session.final_state().unwrap();
+    // The app-level verification method agrees with the explicit check.
+    session.verify_final(&final_state).unwrap();
+    session.finish();
 
     let want = reference_run(&h, &app, target, 99);
     assert_eq!(final_state.particles, want);
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+#[allow(deprecated)]
+fn run_auto_shim_returns_the_same_report() {
+    // The deprecated entry point must produce the same `CrReport` as the
+    // session it wraps: same completion, same physics, same incarnation
+    // count (separate workdirs — sessions are filesystem-scoped).
+    let h = handle();
+    let app = G4App::build(
+        WorkloadKind::EmCalorimeter,
+        G4Version::V10_7,
+        h.manifest().grid_d,
+    );
+    let target = 6 * h.manifest().scan_steps as u64;
+    let policy = CrPolicy::default();
+
+    let wd_shim = workdir("shim");
+    let shim = nersc_cr::cr::run_auto(&app, &h, target, 7, &policy, &wd_shim).unwrap();
+
+    let wd_sess = workdir("shim_sess");
+    let sess = CrSession::builder(&app)
+        .strategy(CrStrategy::Auto(policy))
+        .workdir(&wd_sess)
+        .target_steps(target)
+        .seed(7)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+
+    assert!(shim.completed && sess.completed);
+    assert_eq!(shim.incarnations, sess.incarnations);
+    assert_eq!(shim.final_state.particles, sess.final_state.particles);
+    assert_eq!(
+        shim.final_state.particles,
+        reference_run(&h, &app, target, 7)
+    );
+    std::fs::remove_dir_all(&wd_shim).ok();
+    std::fs::remove_dir_all(&wd_sess).ok();
+}
+
+#[test]
+#[allow(deprecated)]
+fn manual_cr_shim_still_drives_the_five_steps() {
+    let h = handle();
+    let app = G4App::build(
+        WorkloadKind::WaterPhantom,
+        G4Version::V10_7,
+        h.manifest().grid_d,
+    );
+    let target = 24 * h.manifest().scan_steps as u64;
+    let wd = workdir("manual_shim");
+
+    let mut mcr = nersc_cr::cr::ManualCr::new(&app, h.clone(), wd.clone(), target, 41);
+    mcr.submit().unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while mcr.monitor().unwrap().steps_done == 0 {
+        assert!(std::time::Instant::now() < deadline, "no progress");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    mcr.checkpoint_now().unwrap();
+    mcr.kill().unwrap();
+    let resumed = mcr.resubmit_from_checkpoint().unwrap();
+    assert!(resumed > 0);
+    let fin = mcr.wait_done(Duration::from_secs(60)).unwrap();
+    assert!(fin.done && fin.alive_particles <= h.manifest().batch);
+    let final_state = mcr.final_state().unwrap();
+    mcr.finish();
+    assert_eq!(final_state.particles, reference_run(&h, &app, target, 41));
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn stale_images_in_fresh_workdir_error_not_panic() {
+    // A dirty workdir must surface as a proper Err from the library, not
+    // abort the host process.
+    let h = handle();
+    let app = G4App::build(
+        WorkloadKind::WaterPhantom,
+        G4Version::V10_7,
+        h.manifest().grid_d,
+    );
+    let wd = workdir("stale");
+    let target = 4 * h.manifest().scan_steps as u64;
+
+    // Build a session, then plant a stale image under *its* name prefix.
+    let session = CrSession::builder(&app)
+        .strategy(CrStrategy::Auto(CrPolicy::default()))
+        .workdir(&wd)
+        .target_steps(target)
+        .seed(3)
+        .build()
+        .unwrap();
+    let ckpt = wd.join("ckpt");
+    std::fs::create_dir_all(&ckpt).unwrap();
+    std::fs::write(
+        ckpt.join(format!("ckpt_{}_1.dmtcp", session.process_name())),
+        b"stale",
+    )
+    .unwrap();
+    let err = session.run().unwrap_err();
+    assert!(
+        err.to_string().contains("stale checkpoint images"),
+        "wrong error: {err}"
+    );
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn incarnation_budget_is_a_dedicated_error() {
+    let h = handle();
+    let app = G4App::build(
+        WorkloadKind::WaterPhantom,
+        G4Version::V10_7,
+        h.manifest().grid_d,
+    );
+    let wd = workdir("budget");
+    // Preempt every incarnation almost immediately with a budget of 2:
+    // the session must give up with the typed error.
+    let policy = CrPolicy {
+        max_incarnations: 2,
+        preempt_after: vec![Duration::from_millis(40); 4],
+        ckpt_interval: Duration::from_millis(10),
+        requeue_delay: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let target = 100_000 * h.manifest().scan_steps as u64; // unreachable
+    let err = CrSession::builder(&app)
+        .strategy(CrStrategy::Auto(policy))
+        .workdir(&wd)
+        .target_steps(target)
+        .seed(5)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    match err {
+        nersc_cr::Error::IncarnationsExhausted(budget) => assert_eq!(budget, 2),
+        other => panic!("expected IncarnationsExhausted, got {other}"),
+    }
     std::fs::remove_dir_all(&wd).ok();
 }
 

@@ -1,0 +1,305 @@
+//! The `CrSession` robustness matrix: strategy (auto/manual) × substrate
+//! (bare/shifter/podman-hpc) × workload (Geant4-analog/CP2K-analog), every
+//! cell preempted, restarted and verified **bit-identical** to an
+//! uninterrupted run — the paper's transparency claim over the full
+//! cartesian product of its execution environments. Plus the concurrency
+//! properties the session design adds: collision-free job ids and
+//! image discovery when sessions share a workdir.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use nersc_cr::container::{Image, PodmanHpc, Registry, RunSpec, Shifter, EMBED_DMTCP_SNIPPET};
+use nersc_cr::cr::{CrApp, CrPolicy, CrSession, CrStrategy, Substrate};
+use nersc_cr::runtime::service;
+use nersc_cr::workload::{Cp2kApp, G4App, G4Version, WorkloadKind};
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ncr_mx_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Build a DMTCP-embedding image and an execution context for `which`
+/// (`bare` / `shifter` / `podman-hpc`) with the checkpoint volume mapped.
+fn substrate(which: &str, wd: &Path) -> Substrate {
+    if which == "bare" {
+        return Substrate::bare();
+    }
+    let mut registry = Registry::new();
+    registry.push(Image::base("my_application_container", "latest", 64 << 20));
+    let mut pm = PodmanHpc::new();
+    pm.build("mxcr", "v1", EMBED_DMTCP_SNIPPET, &registry).unwrap();
+    pm.migrate("mxcr:v1").unwrap();
+    let spec = RunSpec::default()
+        .volume(wd.join("ckpt").to_string_lossy(), "/ckpt")
+        .env("DMTCP_CHECKPOINT_DIR", "/ckpt");
+    match which {
+        "podman-hpc" => Substrate::container(pm.run("mxcr:v1", spec).unwrap()),
+        "shifter" => {
+            pm.push(&mut registry, "mxcr:v1").unwrap();
+            let mut sh = Shifter::new();
+            sh.pull(&registry, "mxcr:v1").unwrap();
+            Substrate::container(sh.run("mxcr:v1", spec).unwrap())
+        }
+        other => panic!("unknown substrate {other}"),
+    }
+}
+
+/// Drive one (strategy × substrate) cell for `app` and verify the final
+/// state bitwise against the app's uninterrupted reference.
+fn run_cell<A: CrApp>(app: A, strategy: &str, sub_name: &str, target: u64, seed: u64) {
+    let wd = workdir(&format!("{strategy}_{sub_name}"));
+    let sub = substrate(sub_name, &wd);
+    match strategy {
+        "auto" => {
+            let policy = CrPolicy {
+                ckpt_interval: Duration::from_millis(30),
+                preempt_after: vec![Duration::from_millis(60)],
+                requeue_delay: Duration::from_millis(10),
+                ..Default::default()
+            };
+            let report = CrSession::builder(&app)
+                .substrate(sub)
+                .strategy(CrStrategy::Auto(policy))
+                .workdir(&wd)
+                .target_steps(target)
+                .seed(seed)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            assert!(report.completed, "{strategy}/{sub_name}: did not complete");
+            app.verify_final(&report.final_state, target, seed)
+                .unwrap_or_else(|e| panic!("{strategy}/{sub_name}: {e}"));
+        }
+        "manual" => {
+            let mut session = CrSession::builder(&app)
+                .substrate(sub)
+                .strategy(CrStrategy::Manual)
+                .workdir(&wd)
+                .target_steps(target)
+                .seed(seed)
+                .build()
+                .unwrap();
+            session.submit().unwrap();
+            let deadline = std::time::Instant::now() + Duration::from_secs(30);
+            while session.monitor().unwrap().steps_done == 0 {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "{strategy}/{sub_name}: no progress"
+                );
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let images = session.checkpoint_now().unwrap();
+            assert!(!images.is_empty());
+            session.kill().unwrap();
+            let resumed = session.resubmit_from_checkpoint().unwrap();
+            assert!(resumed > 0, "{strategy}/{sub_name}: resumed at 0");
+            let fin = session.wait_done(Duration::from_secs(120)).unwrap();
+            assert!(fin.done);
+            let final_state = session.final_state().unwrap();
+            session.finish();
+            app.verify_final(&final_state, target, seed)
+                .unwrap_or_else(|e| panic!("{strategy}/{sub_name}: {e}"));
+        }
+        other => panic!("unknown strategy {other}"),
+    }
+}
+
+fn g4_app() -> G4App {
+    let h = service::shared().expect("compute service");
+    G4App::build(
+        WorkloadKind::WaterPhantom,
+        G4Version::V10_7,
+        h.manifest().grid_d,
+    )
+}
+
+fn g4_target() -> u64 {
+    let h = service::shared().expect("compute service");
+    // Long enough that the 60 ms auto preemption lands mid-run.
+    120 * h.manifest().scan_steps as u64
+}
+
+fn cp2k_app() -> Cp2kApp {
+    Cp2kApp::new(16)
+}
+
+/// ~100 ms of paced SCF sweeps — preemption and manual checkpoints land
+/// mid-run.
+const CP2K_TARGET: u64 = 2_000;
+
+// --- the 2 × 3 × 2 matrix, one test per cell so failures localize -------
+
+#[test]
+fn auto_bare_geant4() {
+    run_cell(g4_app(), "auto", "bare", g4_target(), 901);
+}
+
+#[test]
+fn auto_shifter_geant4() {
+    run_cell(g4_app(), "auto", "shifter", g4_target(), 902);
+}
+
+#[test]
+fn auto_podman_geant4() {
+    run_cell(g4_app(), "auto", "podman-hpc", g4_target(), 903);
+}
+
+#[test]
+fn manual_bare_geant4() {
+    run_cell(g4_app(), "manual", "bare", g4_target(), 904);
+}
+
+#[test]
+fn manual_shifter_geant4() {
+    run_cell(g4_app(), "manual", "shifter", g4_target(), 905);
+}
+
+#[test]
+fn manual_podman_geant4() {
+    run_cell(g4_app(), "manual", "podman-hpc", g4_target(), 906);
+}
+
+#[test]
+fn auto_bare_cp2k() {
+    run_cell(cp2k_app(), "auto", "bare", CP2K_TARGET, 911);
+}
+
+#[test]
+fn auto_shifter_cp2k() {
+    run_cell(cp2k_app(), "auto", "shifter", CP2K_TARGET, 912);
+}
+
+#[test]
+fn auto_podman_cp2k() {
+    run_cell(cp2k_app(), "auto", "podman-hpc", CP2K_TARGET, 913);
+}
+
+#[test]
+fn manual_bare_cp2k() {
+    run_cell(cp2k_app(), "manual", "bare", CP2K_TARGET, 914);
+}
+
+#[test]
+fn manual_shifter_cp2k() {
+    run_cell(cp2k_app(), "manual", "shifter", CP2K_TARGET, 915);
+}
+
+#[test]
+fn manual_podman_cp2k() {
+    run_cell(cp2k_app(), "manual", "podman-hpc", CP2K_TARGET, 916);
+}
+
+// --- CP2K's known restart defect, reproduced through the session --------
+
+#[test]
+fn cp2k_without_scratch_fix_reproduces_paper_defect() {
+    let mut app = Cp2kApp::new(16);
+    app.scratch_fix = false;
+    let wd = workdir("cp2k_defect");
+    let mut session = CrSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(CP2K_TARGET)
+        .seed(917)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while session.monitor().unwrap().steps_done == 0 {
+        assert!(std::time::Instant::now() < deadline, "no progress");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    session.checkpoint_now().unwrap();
+    session.kill().unwrap();
+    let err = session.resubmit_from_checkpoint().unwrap_err();
+    assert!(
+        err.to_string().contains("known issue"),
+        "expected the §VII restart defect, got: {err}"
+    );
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+// --- concurrency: sessions sharing one workdir ---------------------------
+
+#[test]
+fn jobids_and_image_prefixes_are_collision_free() {
+    let app = cp2k_app();
+    let wd = workdir("nonces");
+    let a = CrSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(10)
+        .seed(1)
+        .build()
+        .unwrap();
+    let b = CrSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(10)
+        .seed(1)
+        .build()
+        .unwrap();
+    assert_ne!(a.jobid(), b.jobid(), "same seed, same workdir must differ");
+    assert_ne!(a.process_name(), b.process_name());
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn two_concurrent_sessions_share_one_workdir() {
+    // Two auto sessions with preemptions, same workdir and ckpt dir, run
+    // concurrently: nonce-scoped job ids and image discovery must keep
+    // them fully isolated — both complete bit-identically.
+    let wd = workdir("shared");
+    let app_a = g4_app();
+    let app_b = cp2k_app();
+    let run_one = |wd: &Path, which: u32| {
+        let policy = CrPolicy {
+            ckpt_interval: Duration::from_millis(30),
+            preempt_after: vec![Duration::from_millis(60)],
+            requeue_delay: Duration::from_millis(10),
+            ..Default::default()
+        };
+        if which == 0 {
+            let target = g4_target();
+            let report = CrSession::builder(&app_a)
+                .strategy(CrStrategy::Auto(policy))
+                .workdir(wd)
+                .target_steps(target)
+                .seed(31)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            assert!(report.completed);
+            app_a.verify_final(&report.final_state, target, 31).unwrap();
+        } else {
+            let report = CrSession::builder(&app_b)
+                .strategy(CrStrategy::Auto(policy))
+                .workdir(wd)
+                .target_steps(CP2K_TARGET)
+                .seed(32)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            assert!(report.completed);
+            app_b
+                .verify_final(&report.final_state, CP2K_TARGET, 32)
+                .unwrap();
+        }
+    };
+    std::thread::scope(|s| {
+        let h1 = s.spawn(|| run_one(&wd, 0));
+        let h2 = s.spawn(|| run_one(&wd, 1));
+        h1.join().unwrap();
+        h2.join().unwrap();
+    });
+    std::fs::remove_dir_all(&wd).ok();
+}
