@@ -12,12 +12,14 @@ test:
 	cargo test -q
 
 # Self-checking paper reproductions (each exits nonzero on shape violations).
+# BENCH_SMOKE=1 runs the same binaries at a tiny scale (the CI lane).
 bench:
 	cargo bench --bench fig2_startup
 	cargo bench --bench ablation_interval
 	cargo bench --bench ckpt_overhead
 	cargo bench --bench fig4_cr_timeseries
 	cargo bench --bench results_matrix
+	cargo bench --bench incremental_ckpt
 
 # AOT-lower the L2 model to HLO text for the PJRT backend (needs jax).
 artifacts:

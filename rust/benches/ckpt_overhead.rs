@@ -14,7 +14,7 @@ use nersc_cr::dmtcp::{
     dmtcp_launch, Checkpointable, CheckpointImage, Coordinator, CoordinatorConfig, GateVerdict,
     ImageHeader, LaunchSpec, PluginRegistry,
 };
-use nersc_cr::report::{human_bytes, Table};
+use nersc_cr::report::{bench_smoke, emit_bench_json, human_bytes, smoke_scaled, Table};
 use nersc_cr::runtime::service;
 use nersc_cr::util::rng::SplitMix64;
 use nersc_cr::workload::{G4App, G4Version, WorkloadKind};
@@ -45,12 +45,16 @@ fn make_blob(bytes: usize, compressible: bool, seed: u64) -> Vec<u8> {
     }
 }
 
-fn bench_image_write() {
+fn bench_image_write() -> f64 {
+    let reps = smoke_scaled(5, 2);
     println!("--- image write throughput (atomic tmp+rename, CRC per segment) ---");
     let dir = std::env::temp_dir().join(format!("ncr_bench_img_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
-    let mut t = Table::new(&["state", "content", "mode", "stored", "MB/s (median of 5)"]);
-    for &mb in &[1usize, 8, 32] {
+    let rate_col = format!("MB/s (median of {reps})");
+    let mut t = Table::new(&["state", "content", "mode", "stored", rate_col.as_str()]);
+    let sizes: &[usize] = if bench_smoke() { &[1, 4] } else { &[1, 8, 32] };
+    let mut gzip_physics_rate = 0.0;
+    for &mb in sizes {
         for &compressible in &[true, false] {
             for &gzip in &[false, true] {
                 let data = make_blob(mb << 20, compressible, 7);
@@ -65,31 +69,40 @@ fn bench_image_write() {
                 let path = dir.join("bench.dmtcp");
                 let mut rates = Vec::new();
                 let mut stored = 0;
-                for _ in 0..5 {
+                for _ in 0..reps {
                     let t0 = Instant::now();
                     stored = img.write_file(&path, gzip).unwrap();
                     let dt = t0.elapsed().as_secs_f64();
                     rates.push((mb as f64) / dt);
                 }
                 rates.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let median = rates[rates.len() / 2];
+                if gzip && compressible && mb == *sizes.last().unwrap() {
+                    gzip_physics_rate = median;
+                }
                 t.row(&[
                     format!("{mb} MiB"),
                     if compressible { "physics-like" } else { "random" }.to_string(),
                     if gzip { "gzip" } else { "raw" }.to_string(),
                     human_bytes(stored),
-                    format!("{:.0}", rates[2]),
+                    format!("{median:.0}"),
                 ]);
             }
         }
     }
     println!("{}", t.render());
     std::fs::remove_dir_all(&dir).ok();
+    gzip_physics_rate
 }
 
-fn bench_barrier_latency() {
+fn bench_barrier_latency() -> f64 {
+    let reps = smoke_scaled(7, 3);
     println!("--- five-phase barrier latency vs attached processes (tiny states) ---");
-    let mut t = Table::new(&["processes", "threads each", "barrier ms (median of 7)"]);
-    for &n in &[1usize, 2, 4, 8] {
+    let lat_col = format!("barrier ms (median of {reps})");
+    let mut t = Table::new(&["processes", "threads each", lat_col.as_str()]);
+    let procs: &[usize] = if bench_smoke() { &[1, 2] } else { &[1, 2, 4, 8] };
+    let mut last_median = 0.0;
+    for &n in procs {
         let dir = std::env::temp_dir().join(format!("ncr_bench_bar_{}_{n}", std::process::id()));
         let coord = Coordinator::start(CoordinatorConfig {
             ckpt_dir: dir.clone(),
@@ -119,13 +132,14 @@ fn bench_barrier_latency() {
             launches.push((l, state));
         }
         let mut times = Vec::new();
-        for _ in 0..7 {
+        for _ in 0..reps {
             let t0 = Instant::now();
             coord.checkpoint_all().unwrap();
             times.push(t0.elapsed().as_secs_f64() * 1e3);
         }
         times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        t.row(&[n.to_string(), "2".into(), format!("{:.2}", times[3])]);
+        last_median = times[times.len() / 2];
+        t.row(&[n.to_string(), "2".into(), format!("{last_median:.2}")]);
         coord.kill_all();
         for (l, _) in launches {
             let _ = l.join();
@@ -133,13 +147,15 @@ fn bench_barrier_latency() {
         std::fs::remove_dir_all(&dir).ok();
     }
     println!("{}", t.render());
+    last_median
 }
 
-fn bench_end_to_end_overhead() {
+fn bench_end_to_end_overhead() -> f64 {
+    let reps = smoke_scaled(3, 1);
     println!("--- end-to-end overhead: checkpoint-only vs no-C/R (real transport run) ---");
     let h = service::shared().expect("compute service");
     let app = G4App::build(WorkloadKind::WaterPhantom, G4Version::V10_7, h.manifest().grid_d);
-    let target = 400 * h.manifest().scan_steps as u64;
+    let target = smoke_scaled(400, 50) as u64 * h.manifest().scan_steps as u64;
 
     let mut run = |label: &str, periodic: bool| {
         let wd = std::env::temp_dir().join(format!(
@@ -171,7 +187,7 @@ fn bench_end_to_end_overhead() {
     let mut walls_b = Vec::new();
     let mut last_a = None;
     let mut last_b = None;
-    for _ in 0..3 {
+    for _ in 0..reps {
         let a = run("none", false);
         walls_a.push(a.wall_secs);
         last_a = Some(a);
@@ -183,13 +199,13 @@ fn bench_end_to_end_overhead() {
     assert_eq!(a.final_state.particles, b.final_state.particles);
     walls_a.sort_by(|x, y| x.partial_cmp(y).unwrap());
     walls_b.sort_by(|x, y| x.partial_cmp(y).unwrap());
-    let (wa, wb) = (walls_a[1], walls_b[1]);
+    let (wa, wb) = (walls_a[walls_a.len() / 2], walls_b[walls_b.len() / 2]);
 
     let mem_a = a.series.memory.mean();
     let mem_peak_b = b.series.memory.max();
     let mut t = Table::new(&["metric", "no C/R", "checkpoint-only", "overhead"]);
     t.row(&[
-        "wall (s, median of 3)".into(),
+        format!("wall (s, median of {reps})"),
         format!("{wa:.2}"),
         format!("{wb:.2}"),
         format!("+{:.1}%", (wb - wa) / wa * 100.0),
@@ -212,9 +228,10 @@ fn bench_end_to_end_overhead() {
          memory demands (~0.8%)\"."
     );
     let _ = BTreeMap::<(), ()>::new(); // (keep import surface minimal-warning-free)
+    (wb - wa) / wa * 100.0
 }
 
-fn bench_restart_vs_coldstart() {
+fn bench_restart_vs_coldstart() -> f64 {
     // §II: C/R "can significantly reduce application startup times" — a
     // restart resumes at step N instead of recomputing 0..N.
     println!("--- restart-from-image vs recompute-from-scratch ---");
@@ -227,7 +244,9 @@ fn bench_restart_vs_coldstart() {
         "restore image (s)",
         "speedup",
     ]);
-    for &scans_done in &[50u64, 200, 400] {
+    let scans: &[u64] = if bench_smoke() { &[50] } else { &[50, 200, 400] };
+    let mut last_speedup = 0.0;
+    for &scans_done in scans {
         // State at the interrupt point.
         let mut st = app.fresh_state(h.manifest().batch, u64::MAX, 11);
         st.particles = h.scan(st.particles, &app.si, scans_done as u32).unwrap();
@@ -255,22 +274,35 @@ fn bench_restart_vs_coldstart() {
         let restore = t0.elapsed().as_secs_f64();
         assert_eq!(shell.particles, st.particles, "restore not bitwise");
 
+        last_speedup = recompute / restore.max(1e-9);
         t.row(&[
             format!("{} steps", scans_done * scan_steps),
             format!("{recompute:.3}"),
             format!("{restore:.4}"),
-            format!("{:.0}x", recompute / restore.max(1e-9)),
+            format!("{last_speedup:.0}x"),
         ]);
         std::fs::remove_dir_all(&dir).ok();
     }
     println!("{}", t.render());
+    last_speedup
 }
 
 fn main() {
     nersc_cr::logging::init();
     println!("== checkpoint overhead microbenchmarks ==\n");
-    bench_image_write();
-    bench_barrier_latency();
-    bench_restart_vs_coldstart();
-    bench_end_to_end_overhead();
+    let write_rate = bench_image_write();
+    let barrier_ms = bench_barrier_latency();
+    let restart_speedup = bench_restart_vs_coldstart();
+    let wall_overhead_pct = bench_end_to_end_overhead();
+    if let Ok(p) = emit_bench_json(
+        "ckpt_overhead",
+        &[
+            ("image_write_mb_per_s_gzip_physics", write_rate),
+            ("barrier_ms_median_max_procs", barrier_ms),
+            ("restart_vs_recompute_speedup", restart_speedup),
+            ("ckpt_only_wall_overhead_pct", wall_overhead_pct),
+        ],
+    ) {
+        println!("wrote {}", p.display());
+    }
 }

@@ -13,7 +13,7 @@
 
 use nersc_cr::fsmodel::Environment;
 use nersc_cr::metrics::{ascii_chart, TimeSeries};
-use nersc_cr::report::Table;
+use nersc_cr::report::{emit_bench_json, Table};
 
 const RANKS: [u32; 10] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512];
 
@@ -102,6 +102,20 @@ fn main() {
     std::fs::create_dir_all("target").ok();
     std::fs::write(out, csv).ok();
     println!("wrote {}", out.display());
+
+    if let Ok(p) = emit_bench_json(
+        "fig2_startup",
+        &[
+            ("home_512", at(Environment::Home, 512)),
+            ("scratch_512", at(Environment::Scratch, 512)),
+            ("common_sw_512", at(Environment::CommonSw, 512)),
+            ("shifter_512", at(Environment::Shifter, 512)),
+            ("podman_hpc_512", at(Environment::PodmanHpc, 512)),
+            ("checks_passed", if ok { 1.0 } else { 0.0 }),
+        ],
+    ) {
+        println!("wrote {}", p.display());
+    }
 
     if !ok {
         std::process::exit(1);

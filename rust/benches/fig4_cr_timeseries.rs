@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use nersc_cr::cr::{CrPolicy, CrReport, CrSession, CrStrategy};
 use nersc_cr::metrics::{ascii_chart, to_csv, BASE_PROCESS_OVERHEAD};
-use nersc_cr::report::{human_bytes, Table};
+use nersc_cr::report::{bench_smoke, emit_bench_json, human_bytes, smoke_scaled, Table};
 use nersc_cr::runtime::service;
 use nersc_cr::workload::{G4App, G4Version, WorkloadKind};
 
@@ -45,7 +45,7 @@ fn run(label: &str, policy: &CrPolicy, target_scans: u64, seed: u64) -> CrReport
 fn main() {
     nersc_cr::logging::init();
     println!("== Fig 4: memory/CPU over time — no C/R vs checkpoint-only vs checkpoint-restart ==\n");
-    let scans = 600;
+    let scans = smoke_scaled(600, 150) as u64;
     let seed = 4242;
 
     // Top/middle panels, interleaved x3 so the wall-clock comparison uses
@@ -64,7 +64,7 @@ fn main() {
     let mut walls_b = Vec::new();
     let mut no_cr = None;
     let mut ckpt_only = None;
-    for _ in 0..3 {
+    for _ in 0..smoke_scaled(3, 1) {
         let a = run("noCR", &no_cr_policy, scans, seed);
         walls_a.push(a.wall_secs);
         no_cr = Some(a);
@@ -75,16 +75,19 @@ fn main() {
     let (mut no_cr, mut ckpt_only) = (no_cr.unwrap(), ckpt_only.unwrap());
     walls_a.sort_by(|x, y| x.partial_cmp(y).unwrap());
     walls_b.sort_by(|x, y| x.partial_cmp(y).unwrap());
-    no_cr.wall_secs = walls_a[1];
-    ckpt_only.wall_secs = walls_b[1];
+    no_cr.wall_secs = walls_a[walls_a.len() / 2];
+    ckpt_only.wall_secs = walls_b[walls_b.len() / 2];
     // Bottom panel: checkpoint-restart with a mid-run preemption and a
-    // visible requeue gap before restarting on a "new node".
+    // visible requeue gap before restarting on a "new node". The smoke
+    // lane preempts earlier so the shorter run is still mid-flight.
+    let preempt_ms = smoke_scaled(900, 200) as u64;
+    let gap_ms = smoke_scaled(600, 200) as u64;
     let ckpt_restart = run(
         "ckptRestart",
         &CrPolicy {
-            ckpt_interval: Duration::from_millis(250),
-            preempt_after: vec![Duration::from_millis(900)],
-            requeue_delay: Duration::from_millis(600),
+            ckpt_interval: Duration::from_millis(smoke_scaled(250, 60) as u64),
+            preempt_after: vec![Duration::from_millis(preempt_ms)],
+            requeue_delay: Duration::from_millis(gap_ms),
             ..Default::default()
         },
         scans,
@@ -149,7 +152,9 @@ fn main() {
     println!(
         "checkpoint-restart: completes {:.2}s later (preemption + {}ms queue gap + restart), \
          with {} restart(s) and zero lost work\n",
-        gap, 600, ckpt_restart.incarnations - 1
+        gap,
+        gap_ms,
+        ckpt_restart.incarnations - 1
     );
 
     // The three panels, charted.
@@ -194,7 +199,25 @@ fn main() {
         println!("  [{}] {name}", if pass { "PASS" } else { "FAIL" });
         ok &= pass;
     }
-    if !ok {
+
+    if let Ok(p) = emit_bench_json(
+        "fig4_cr_timeseries",
+        &[
+            ("no_cr_wall_s", no_cr.wall_secs),
+            ("ckpt_only_wall_s", ckpt_only.wall_secs),
+            ("ckpt_restart_wall_s", ckpt_restart.wall_secs),
+            ("ckpt_only_mem_overhead_pct", mem_overhead * 100.0),
+            ("ckpt_restart_incarnations", ckpt_restart.incarnations as f64),
+            ("checks_passed", if ok { 1.0 } else { 0.0 }),
+        ],
+    ) {
+        println!("wrote {}", p.display());
+    }
+
+    // The physics equality above is always fatal; the wall-clock shape
+    // checks only gate the full-scale run — single-reps on a busy smoke
+    // runner are too noisy to fail CI on.
+    if !ok && !bench_smoke() {
         std::process::exit(1);
     }
 }

@@ -1,0 +1,238 @@
+//! Incremental-vs-full checkpoint ablation: the tentpole claim of the
+//! content-addressed chunk store, measured.
+//!
+//! A physics-like state (large, mostly static) takes a small delta between
+//! checkpoint generations — the common case the paper's whole-image-gzip
+//! default pays full price for. Lane A writes a v1 full image every
+//! generation; lane B writes a v2 manifest over the chunk store (dirty
+//! tracking + content dedup + parallel chunk compression). Every
+//! generation is restored and compared bitwise; incremental generations
+//! after the first must store *strictly fewer* bytes than full ones, or
+//! the bench exits nonzero.
+//!
+//! A second section drives the same pipeline end-to-end through a
+//! `CrSession` (coordinator, checkpoint thread, restart) and reports the
+//! session-level chunk accounting.
+//!
+//! Run: `cargo bench --bench incremental_ckpt` (`BENCH_SMOKE=1` for the
+//! tiny CI lane)
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use nersc_cr::cr::{CrApp, CrPolicy, CrSession, CrStrategy};
+use nersc_cr::dmtcp::store::read_image_file;
+use nersc_cr::dmtcp::{
+    CheckpointImage, ImageHeader, ImageStore, SegmentManifest, StoreOpts,
+};
+use nersc_cr::report::{emit_bench_json, human_bytes, smoke_scaled, Table};
+use nersc_cr::util::rng::SplitMix64;
+use nersc_cr::workload::Cp2kApp;
+
+/// Physics-like bulk: long runs of slowly varying bytes (compressible,
+/// chunk-stable), plus a hot region that churns every generation.
+fn make_state(bytes: usize, seed: u64) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..bytes)
+        .map(|i| ((i / 64) % 251) as u8 ^ (rng.next_u32() as u8 & 0x03))
+        .collect()
+}
+
+/// Mutate a contiguous window of ~`fraction` of the state at a random
+/// position — the locality real checkpoint deltas have (a scoring region
+/// accumulating, a particle batch advancing), and what makes chunk-level
+/// dedup meaningful: scattering the same byte count uniformly would dirty
+/// every chunk.
+fn apply_delta(state: &mut [u8], fraction: f64, rng: &mut SplitMix64) {
+    let window = ((state.len() as f64 * fraction) as usize).clamp(1, state.len());
+    let start = rng.gen_range((state.len() - window + 1) as u64) as usize;
+    for b in &mut state[start..start + window] {
+        *b = b.wrapping_add(1 + (rng.next_u32() % 7) as u8);
+    }
+}
+
+fn image_of(state: &[u8], ckpt_id: u64) -> CheckpointImage {
+    CheckpointImage {
+        header: ImageHeader {
+            vpid: 1,
+            name: "ablate".into(),
+            ckpt_id,
+            ..Default::default()
+        },
+        // Two segments so dirty tracking and chunk dedup both participate:
+        // geometry never changes, the scoring state takes the delta.
+        segments: vec![
+            ("geometry".into(), state[..state.len() / 4].to_vec()),
+            ("scoring".into(), state[state.len() / 4..].to_vec()),
+        ],
+    }
+}
+
+fn bench_ablation() -> (u64, u64) {
+    let mib = smoke_scaled(32, 2);
+    let generations = smoke_scaled(8, 4);
+    let delta = 0.01;
+    println!(
+        "--- full vs incremental over {generations} generations of a {mib} MiB state, \
+         ~{:.0}% delta/gen ---",
+        delta * 100.0
+    );
+
+    let dir = std::env::temp_dir().join(format!("ncr_incr_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let full_dir = dir.join("full");
+    let incr_dir = dir.join("incr");
+    std::fs::create_dir_all(&full_dir).unwrap();
+    std::fs::create_dir_all(&incr_dir).unwrap();
+    let store = ImageStore::for_images(&incr_dir);
+    let opts = StoreOpts::default();
+
+    let mut state = make_state(mib << 20, 11);
+    let mut rng = SplitMix64::new(23);
+    let mut prev: Option<BTreeMap<String, SegmentManifest>> = None;
+    let mut t = Table::new(&[
+        "gen",
+        "full stored",
+        "incr stored",
+        "ratio",
+        "chunks new",
+        "chunks reused",
+        "full ms",
+        "incr ms",
+    ]);
+    let (mut full_total, mut incr_total) = (0u64, 0u64);
+    let mut per_gen_ok = true;
+
+    for gen in 0..generations {
+        if gen > 0 {
+            apply_delta(&mut state, delta, &mut rng);
+        }
+        let img = image_of(&state, gen as u64);
+
+        let full_path = full_dir.join(format!("g{gen}.dmtcp"));
+        let t0 = Instant::now();
+        let full_stored = img.write_file(&full_path, true).unwrap();
+        let full_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let incr_path = incr_dir.join(format!("g{gen}.dmtcp"));
+        let t0 = Instant::now();
+        let (manifest, stats) = store
+            .write_incremental(&img, &incr_path, prev.as_ref(), &opts)
+            .unwrap();
+        let incr_ms = t0.elapsed().as_secs_f64() * 1e3;
+        prev = Some(
+            manifest
+                .segments
+                .iter()
+                .map(|s| (s.name.clone(), s.clone()))
+                .collect(),
+        );
+
+        // Both lanes must restore bit-identically, every generation.
+        assert_eq!(read_image_file(&full_path).unwrap(), img, "gen {gen} full");
+        assert_eq!(read_image_file(&incr_path).unwrap(), img, "gen {gen} incr");
+
+        full_total += full_stored;
+        incr_total += stats.stored_bytes;
+        if gen > 0 {
+            per_gen_ok &= stats.stored_bytes < full_stored;
+        }
+        t.row(&[
+            gen.to_string(),
+            human_bytes(full_stored),
+            human_bytes(stats.stored_bytes),
+            format!("{:.3}", stats.stored_bytes as f64 / full_stored as f64),
+            stats.chunks_written.to_string(),
+            stats.chunks_deduped.to_string(),
+            format!("{full_ms:.1}"),
+            format!("{incr_ms:.1}"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "cumulative stored: full {} vs incremental {} ({:.1}% of full)",
+        human_bytes(full_total),
+        human_bytes(incr_total),
+        incr_total as f64 / full_total as f64 * 100.0
+    );
+
+    let mut ok = true;
+    for (name, pass) in [
+        (
+            "every post-delta incremental generation stores strictly fewer bytes",
+            per_gen_ok,
+        ),
+        (
+            "cumulative incremental < cumulative full",
+            incr_total < full_total,
+        ),
+    ] {
+        println!("  [{}] {name}", if pass { "PASS" } else { "FAIL" });
+        ok &= pass;
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    if !ok {
+        std::process::exit(1);
+    }
+    (full_total, incr_total)
+}
+
+fn bench_session_wiring() -> (u64, u64) {
+    println!("\n--- the same pipeline end-to-end through a CrSession (CP2K-analog) ---");
+    let app = Cp2kApp::new(16);
+    let wd = std::env::temp_dir().join(format!("ncr_incr_sess_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&wd);
+    std::fs::create_dir_all(&wd).unwrap();
+    let policy = CrPolicy {
+        ckpt_interval: Duration::from_millis(30),
+        preempt_after: vec![Duration::from_millis(smoke_scaled(250, 120) as u64)],
+        requeue_delay: Duration::from_millis(10),
+        incremental_ckpt: true,
+        full_image_every: 4,
+        ..Default::default()
+    };
+    let target = smoke_scaled(8_000, 2_500) as u64;
+    let report = CrSession::builder(&app)
+        .strategy(CrStrategy::Auto(policy))
+        .workdir(&wd)
+        .target_steps(target)
+        .seed(77)
+        .build()
+        .expect("session build")
+        .run()
+        .expect("session run");
+    assert!(report.completed);
+    app.verify_final(&report.final_state, target, 77)
+        .expect("bit-identical final state under incremental checkpoints");
+    println!(
+        "completed in {} incarnation(s): {} checkpoints, {} logical -> {} stored, \
+         {} chunks written, {} reused",
+        report.incarnations,
+        report.checkpoints,
+        human_bytes(report.total_raw_bytes),
+        human_bytes(report.total_image_bytes),
+        report.chunks_written,
+        report.chunks_deduped
+    );
+    std::fs::remove_dir_all(&wd).ok();
+    (report.chunks_written, report.chunks_deduped)
+}
+
+fn main() {
+    nersc_cr::logging::init();
+    println!("== incremental (content-addressed) vs full checkpoint images ==\n");
+    let (full_total, incr_total) = bench_ablation();
+    let (cw, cd) = bench_session_wiring();
+    let path = emit_bench_json(
+        "incremental_ckpt",
+        &[
+            ("full_stored_bytes", full_total as f64),
+            ("incremental_stored_bytes", incr_total as f64),
+            ("stored_ratio", incr_total as f64 / full_total as f64),
+            ("session_chunks_written", cw as f64),
+            ("session_chunks_deduped", cd as f64),
+        ],
+    )
+    .expect("bench json");
+    println!("\nwrote {}", path.display());
+}

@@ -8,7 +8,7 @@
 use std::time::{Duration, Instant};
 
 use nersc_cr::cr::{CrPolicy, CrSession, CrStrategy};
-use nersc_cr::report::{human_bytes, Table};
+use nersc_cr::report::{bench_smoke, emit_bench_json, human_bytes, smoke_scaled, Table};
 use nersc_cr::runtime::service;
 use nersc_cr::workload::{G4App, G4Version, WorkloadKind};
 
@@ -16,11 +16,23 @@ fn main() {
     nersc_cr::logging::init();
     let h = service::shared().expect("compute service");
     let m = h.manifest().clone();
-    let target = 60 * m.scan_steps as u64;
+    let target = smoke_scaled(60, 12) as u64 * m.scan_steps as u64;
+    // The smoke lane runs a 2 x 1 corner of the matrix; the full run
+    // covers every cell.
+    let workloads: Vec<_> = if bench_smoke() {
+        WorkloadKind::all().into_iter().take(2).collect()
+    } else {
+        WorkloadKind::all()
+    };
+    let versions: Vec<_> = if bench_smoke() {
+        G4Version::all().into_iter().take(1).collect()
+    } else {
+        G4Version::all()
+    };
     println!(
         "== §VI robustness matrix: {} workloads x {} versions, {} steps each, 1 preemption ==\n",
-        WorkloadKind::all().len(),
-        G4Version::all().len(),
+        workloads.len(),
+        versions.len(),
         target
     );
 
@@ -30,8 +42,8 @@ fn main() {
     let mut all_ok = true;
     let t0 = Instant::now();
 
-    for (wi, kind) in WorkloadKind::all().iter().enumerate() {
-        for (vi, version) in G4Version::all().iter().enumerate() {
+    for (wi, kind) in workloads.iter().enumerate() {
+        for (vi, version) in versions.iter().enumerate() {
             let app = G4App::build(*kind, *version, m.grid_d);
             let seed = 31_000 + (wi * 10 + vi) as u64;
             let wd = std::env::temp_dir().join(format!(
@@ -96,6 +108,16 @@ fn main() {
             "FAILURES PRESENT"
         }
     );
+    if let Ok(p) = emit_bench_json(
+        "results_matrix",
+        &[
+            ("cells", (workloads.len() * versions.len()) as f64),
+            ("matrix_wall_s", t0.elapsed().as_secs_f64()),
+            ("all_bitwise", if all_ok { 1.0 } else { 0.0 }),
+        ],
+    ) {
+        println!("wrote {}", p.display());
+    }
     if !all_ok {
         std::process::exit(1);
     }

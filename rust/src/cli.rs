@@ -80,7 +80,7 @@ subcommands:
   inspect IMAGE.dmtcp                                  show an image header
   sbatch SCRIPT [--cluster-nodes N]                    simulate a batch script
   run --workload NAME --g4 VER --steps N [--preempt MS] [--workdir DIR]
-                                                       run a workload under auto C/R
+      [--incremental [--full-every N]]                 run a workload under auto C/R
   fig2 [--ranks N]                                     container-startup table
   workloads                                            list workload names
   version";
@@ -217,7 +217,7 @@ fn cmd_sbatch(args: &[String]) -> Result<()> {
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
-    let o = Opts::parse(args, &[])?;
+    let o = Opts::parse(args, &["incremental"])?;
     let wl_name = o.get_or("workload", "water-phantom");
     let steps: u64 = o.get_or("steps", "480").parse().unwrap_or(480);
     let workdir = PathBuf::from(o.get_or(
@@ -230,6 +230,18 @@ fn cmd_run(args: &[String]) -> Result<()> {
     if let Some(ms) = o.get("preempt") {
         let ms: u64 = ms.parse().map_err(|_| Error::Usage("bad --preempt".into()))?;
         policy.preempt_after = vec![Duration::from_millis(ms)];
+    }
+    if o.has_flag("incremental") {
+        policy.incremental_ckpt = true;
+        if let Some(n) = o.get("full-every") {
+            policy.full_image_every = n
+                .parse()
+                .map_err(|_| Error::Usage("bad --full-every".into()))?;
+        }
+    } else if o.get("full-every").is_some() {
+        return Err(Error::Usage(
+            "--full-every only applies with --incremental".into(),
+        ));
     }
 
     // The CP2K-analog drives through the same session API as Geant4 —

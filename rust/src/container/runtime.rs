@@ -1,17 +1,16 @@
-//! The common container-runtime interface and containerized process launch.
+//! The common container-runtime interface.
 //!
-//! A [`ContainerRuntime`] can make images runnable in batch jobs and start
-//! DMTCP-managed processes inside them. The launch path enforces the
-//! paper's central container constraint: **checkpointing inside a container
-//! requires DMTCP inside the image** — a runtime cannot checkpoint a
-//! container from outside.
+//! A [`ContainerRuntime`] can make images runnable in batch jobs; a
+//! [`Container`] is the resulting execution context. Launching
+//! DMTCP-managed processes inside one goes through
+//! [`crate::cr::substrate::Substrate::container`], which enforces the
+//! paper's central container constraint: **checkpointing inside a
+//! container requires DMTCP inside the image** — a runtime cannot
+//! checkpoint a container from outside.
 
 use std::collections::BTreeMap;
-use std::net::SocketAddr;
-use std::sync::{Arc, Mutex};
 
 use crate::container::image::Image;
-use crate::dmtcp::{Checkpointable, LaunchedProcess, PluginRegistry};
 use crate::error::Result;
 use crate::fsmodel::Environment;
 
@@ -91,34 +90,6 @@ impl Container {
         env.insert("CONTAINER_RUNTIME".into(), self.runtime_name.to_string());
         env.insert("CONTAINER_IMAGE".into(), self.image.reference());
         env
-    }
-
-    /// Launch a process inside the container under checkpoint control
-    /// (legacy shim).
-    ///
-    /// The container constraints — DMTCP embedded in the image,
-    /// checkpoint dir volume-mapped — now live in
-    /// [`crate::cr::substrate`], where the session orchestration enforces
-    /// them on launch *and* restart. This delegates there.
-    #[deprecated(
-        since = "0.3.0",
-        note = "pass the container as cr::Substrate::container(..) to a cr::CrSession"
-    )]
-    pub fn launch_checkpointed<S: Checkpointable + 'static>(
-        &self,
-        name: &str,
-        coordinator: SocketAddr,
-        state: Arc<Mutex<S>>,
-        plugins: PluginRegistry,
-    ) -> Result<LaunchedProcess> {
-        crate::cr::substrate::launch_in_container(
-            self,
-            name,
-            coordinator,
-            BTreeMap::new(),
-            state,
-            plugins,
-        )
     }
 }
 

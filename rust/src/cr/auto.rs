@@ -14,15 +14,12 @@
 //! the preemption plan, func_trap checkpoint-on-signal, requeue delay,
 //! restart from the newest image — until the workload completes or the
 //! incarnation budget is exhausted. This module keeps the policy/report
-//! types and the deprecated [`run_auto`] shim.
+//! types.
 
 use std::time::Duration;
 
-use crate::cr::session::{CrSession, CrStrategy};
-use crate::error::Result;
 use crate::metrics::SampledSeries;
-use crate::runtime::ComputeHandle;
-use crate::workload::{G4App, G4SimState};
+use crate::workload::G4SimState;
 
 /// Fig 3 states (the workflow diagram, as data).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -68,6 +65,17 @@ pub struct CrPolicy {
     pub n_threads: u32,
     /// Work quanta (scans/sweeps) between checkpoint safe-points.
     pub scans_per_quantum: u32,
+    /// Write incremental (content-addressed, chunked) checkpoint images:
+    /// after a small state delta only the changed chunks are compressed
+    /// and stored. Off reproduces the paper's whole-image-gzip baseline.
+    pub incremental_ckpt: bool,
+    /// With `incremental_ckpt`, force every Nth checkpoint of an
+    /// incarnation back to a self-contained full image (0 = never) — a
+    /// periodic anchor that restores independently of the chunk store and
+    /// bounds how many generations a damaged store entry can poison.
+    /// Defaults to 16 so flipping `incremental_ckpt` on inherits a sane
+    /// anchor cadence.
+    pub full_image_every: u32,
 }
 
 impl Default for CrPolicy {
@@ -81,6 +89,8 @@ impl Default for CrPolicy {
             periodic_ckpt: true,
             n_threads: 1,
             scans_per_quantum: 1,
+            incremental_ckpt: false,
+            full_image_every: 16,
         }
     }
 }
@@ -109,33 +119,12 @@ pub struct CrReport<S = G4SimState> {
     pub series: SampledSeries,
     /// Steps at each restart (monotone; proves no lost progress).
     pub restart_steps: Vec<u64>,
-}
-
-/// Run the automated Fig 3 workflow to completion (legacy entry point).
-///
-/// The `handle` parameter is unused: the Geant4-analog [`CrApp`
-/// implementation](crate::cr::app) serves compute through the shared
-/// service handle, which is the same handle every historical caller passed
-/// here.
-#[deprecated(
-    since = "0.3.0",
-    note = "build a cr::CrSession with .policy(..) and call .run() instead"
-)]
-pub fn run_auto(
-    app: &G4App,
-    _handle: &ComputeHandle,
-    target_steps: u64,
-    seed: u64,
-    policy: &CrPolicy,
-    workdir: &std::path::Path,
-) -> Result<CrReport> {
-    CrSession::builder(app)
-        .strategy(CrStrategy::Auto(policy.clone()))
-        .workdir(workdir)
-        .target_steps(target_steps)
-        .seed(seed)
-        .build()?
-        .run()
+    /// Chunks newly written to the content-addressed store (0 when
+    /// `incremental_ckpt` is off).
+    pub chunks_written: u64,
+    /// Chunks reused instead of rewritten — the incremental pipeline's
+    /// savings, in chunk counts.
+    pub chunks_deduped: u64,
 }
 
 #[cfg(test)]

@@ -10,28 +10,25 @@
 //! * [`substrate`] — the [`Substrate`] execution environments, enforcing
 //!   the paper's containerized-C/R constraints.
 //! * [`module`] — the CR Module primitives (`start_coordinator`, image
-//!   discovery, environment wiring).
+//!   discovery, environment wiring, the incremental-image knobs).
 //! * [`auto`] — the Fig 3 policy/report types ([`CrPolicy`],
-//!   [`CrReport`]) and the deprecated [`run_auto`] shim.
-//! * [`manual`] — the deprecated [`ManualCr`] shim.
+//!   [`CrReport`]).
 //! * [`jobscript`] — the consolidated single job script.
+//!
+//! The pre-0.3 entry points (`run_auto`, `ManualCr`,
+//! `Container::launch_checkpointed`) were deprecated in 0.3 and are now
+//! removed; see the migration table in `CHANGES.md`.
 
 pub mod app;
 pub mod auto;
 pub mod jobscript;
-pub mod manual;
 pub mod module;
 pub mod session;
 pub mod substrate;
 
 pub use app::CrApp;
 pub use auto::{AutoState, CrPolicy, CrReport};
-#[allow(deprecated)]
-pub use auto::run_auto;
 pub use jobscript::{consolidated_script, CrJobConfig};
-#[allow(deprecated)]
-pub use manual::ManualCr;
-pub use manual::MonitorReport;
 pub use module::{latest_images, start_coordinator, CrConfig};
 pub use session::{CrSession, CrSessionBuilder, CrStrategy, SessionStatus};
 pub use substrate::Substrate;

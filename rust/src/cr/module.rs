@@ -25,6 +25,13 @@ pub struct CrConfig {
     pub workdir: PathBuf,
     /// gzip images (NERSC default on).
     pub gzip: bool,
+    /// Write incremental (v2, content-addressed) checkpoint images: only
+    /// chunks whose content changed since the previous generation hit the
+    /// disk. Off = v1 full images every time (the paper's baseline).
+    pub incremental: bool,
+    /// With `incremental`, force every Nth checkpoint back to a
+    /// self-contained v1 full image (0 = never force).
+    pub full_image_every: u32,
     /// Barrier timeout.
     pub phase_timeout: Duration,
 }
@@ -39,6 +46,8 @@ impl CrConfig {
             ckpt_dir: workdir.join("ckpt"),
             workdir,
             gzip: true,
+            incremental: false,
+            full_image_every: 0,
             phase_timeout: Duration::from_secs(30),
         }
     }
@@ -47,7 +56,8 @@ impl CrConfig {
 /// `start_coordinator`: boot a coordinator for this job, write the
 /// rendezvous file, and return it together with the environment variables
 /// the job's processes must inherit (`DMTCP_COORD_HOST`, `DMTCP_COORD_PORT`,
-/// `DMTCP_CHECKPOINT_DIR`, `DMTCP_GZIP`).
+/// `DMTCP_CHECKPOINT_DIR`, `DMTCP_GZIP`, and — when incremental images are
+/// on — `DMTCP_INCREMENTAL` / `DMTCP_FULL_EVERY`).
 pub fn start_coordinator(config: &CrConfig) -> Result<(Coordinator, BTreeMap<String, String>)> {
     let coord = Coordinator::start(CoordinatorConfig {
         bind: "127.0.0.1:0".into(),
@@ -65,6 +75,15 @@ pub fn start_coordinator(config: &CrConfig) -> Result<(Coordinator, BTreeMap<Str
         config.ckpt_dir.to_string_lossy().into_owned(),
     );
     env.insert("DMTCP_GZIP".into(), if config.gzip { "1" } else { "0" }.into());
+    if config.incremental {
+        env.insert("DMTCP_INCREMENTAL".into(), "1".into());
+        if config.full_image_every > 0 {
+            env.insert(
+                "DMTCP_FULL_EVERY".into(),
+                config.full_image_every.to_string(),
+            );
+        }
+    }
     env.insert("SLURM_JOB_ID".into(), config.jobid.clone());
     log::info!(
         "start_coordinator: job {} on {} (ckpt dir {})",

@@ -47,6 +47,7 @@ use crate::cr::app::CrApp;
 use crate::cr::auto::{AutoState, CrPolicy, CrReport};
 use crate::cr::module::{latest_images, start_coordinator, CrConfig};
 use crate::dmtcp::process::Checkpointable;
+use crate::dmtcp::store::ImageStore;
 use crate::dmtcp::{Coordinator, ImageInfo, PluginRegistry, TimerPlugin};
 use crate::error::{Error, Result};
 use crate::metrics::{LdmsSampler, SampledSeries};
@@ -58,6 +59,14 @@ const ATTACH_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Poll interval for progress checks in the drive loops.
 const POLL: Duration = Duration::from_millis(5);
+
+/// Chunks younger than this survive store GC: a concurrent session sharing
+/// the workdir may have stored (or mtime-refreshed, for dedup reuse) them
+/// but not yet published the manifest that references them. The window
+/// must comfortably exceed the longest plausible single checkpoint write —
+/// a write slower than this while another session tears down concurrently
+/// is the remaining (documented) exposure.
+const GC_GRACE: Duration = Duration::from_secs(600);
 
 /// Process-wide session nonce allocator. Combined with the OS process id
 /// so two sessions never mint the same job id or image-name prefix, even
@@ -102,6 +111,7 @@ pub struct CrSessionBuilder<A: CrApp> {
     workdir: Option<PathBuf>,
     target_steps: u64,
     seed: u64,
+    incremental: Option<u32>,
 }
 
 impl<A: CrApp> CrSessionBuilder<A> {
@@ -143,6 +153,16 @@ impl<A: CrApp> CrSessionBuilder<A> {
         self
     }
 
+    /// Write incremental (content-addressed, chunked) checkpoint images
+    /// whatever the strategy — manual sessions have no [`CrPolicy`] to
+    /// carry [`CrPolicy::incremental_ckpt`]. `full_image_every` forces
+    /// every Nth checkpoint of an incarnation back to a self-contained
+    /// full image (0 = never).
+    pub fn incremental_images(mut self, full_image_every: u32) -> Self {
+        self.incremental = Some(full_image_every);
+        self
+    }
+
     /// Validate and assemble the session (creates the workdir).
     pub fn build(self) -> Result<CrSession<A>> {
         let workdir = self.workdir.ok_or_else(|| {
@@ -156,6 +176,7 @@ impl<A: CrApp> CrSessionBuilder<A> {
             workdir,
             target_steps: self.target_steps,
             seed: self.seed,
+            incremental: self.incremental,
             nonce: next_nonce(),
             incarnation: 0,
             active: None,
@@ -180,6 +201,7 @@ pub struct CrSession<A: CrApp> {
     workdir: PathBuf,
     target_steps: u64,
     seed: u64,
+    incremental: Option<u32>,
     nonce: u64,
     incarnation: u32,
     active: Option<ActiveJob<A::State>>,
@@ -197,6 +219,7 @@ impl<A: CrApp> CrSession<A> {
             workdir: None,
             target_steps: 0,
             seed: 0,
+            incremental: None,
         }
     }
 
@@ -282,7 +305,15 @@ impl<A: CrApp> CrSession<A> {
         if self.active.is_some() {
             return Err(Error::Workload("job already active".into()));
         }
-        let cfg = CrConfig::new(self.jobid(), &self.workdir);
+        let mut cfg = CrConfig::new(self.jobid(), &self.workdir);
+        if let CrStrategy::Auto(p) = &self.strategy {
+            cfg.incremental = p.incremental_ckpt;
+            cfg.full_image_every = p.full_image_every;
+        }
+        if let Some(full_every) = self.incremental {
+            cfg.incremental = true;
+            cfg.full_image_every = full_every;
+        }
         let (coordinator, env) = start_coordinator(&cfg)?;
         let images = self.session_images()?;
         let mut plugins = PluginRegistry::new();
@@ -429,10 +460,34 @@ impl<A: CrApp> CrSession<A> {
     }
 
     /// Tear down the active incarnation, if any (idempotent; also runs on
-    /// drop).
+    /// drop), then garbage-collect chunk-store entries no image of this
+    /// workdir references anymore.
     pub fn finish(&mut self) {
         if self.active.is_some() {
             let _ = self.teardown();
+        }
+        self.gc_store();
+    }
+
+    /// Reclaim unreferenced chunks from the workdir's content-addressed
+    /// store (no-op when no incremental image was ever written). Chunks
+    /// younger than [`GC_GRACE`] are spared so concurrent sessions sharing
+    /// the workdir cannot lose chunks stored ahead of their manifest.
+    fn gc_store(&self) {
+        let ckpt_dir = self.workdir.join("ckpt");
+        let store = ImageStore::for_images(&ckpt_dir);
+        if !store.root().exists() {
+            return;
+        }
+        match store.gc(&ckpt_dir, GC_GRACE) {
+            Ok(st) if st.deleted > 0 => log::debug!(
+                "session {}: store GC reclaimed {} chunks ({} bytes)",
+                self.nonce,
+                st.deleted,
+                st.deleted_bytes
+            ),
+            Ok(_) => {}
+            Err(e) => log::warn!("session {}: store GC failed: {e}", self.nonce),
         }
     }
 
@@ -504,14 +559,13 @@ impl<A: CrApp> CrSession<A> {
             tl.push((t0.elapsed().as_secs_f64(), s));
         };
 
-        let mut checkpoints = 0u64;
-        let mut total_image_bytes = 0u64;
-        let mut total_raw_bytes = 0u64;
+        let mut tally = CkptTally::default();
         let mut restart_steps = Vec::new();
 
         loop {
             if self.incarnation >= policy.max_incarnations {
                 mark(&mut timeline, AutoState::Failed);
+                self.gc_store();
                 return Err(Error::IncarnationsExhausted(policy.max_incarnations));
             }
             mark(&mut timeline, AutoState::Starting);
@@ -547,12 +601,7 @@ impl<A: CrApp> CrSession<A> {
                 if policy.periodic_ckpt && ran >= next_ckpt {
                     mark(&mut timeline, AutoState::Checkpointing);
                     match self.checkpoint_images() {
-                        Ok(images) => tally(
-                            &images,
-                            &mut checkpoints,
-                            &mut total_image_bytes,
-                            &mut total_raw_bytes,
-                        ),
+                        Ok(images) => tally.add(&images),
                         Err(e) => log::warn!("periodic checkpoint failed: {e}"),
                     }
                     mark(&mut timeline, AutoState::Running);
@@ -563,30 +612,28 @@ impl<A: CrApp> CrSession<A> {
             if completed {
                 let state = self.teardown()?;
                 mark(&mut timeline, AutoState::Completed);
+                self.gc_store();
                 let final_state = state.lock().expect("state poisoned").clone();
                 return Ok(CrReport {
                     completed: true,
                     incarnations: self.incarnation + 1,
-                    checkpoints,
-                    total_image_bytes,
-                    total_raw_bytes,
+                    checkpoints: tally.checkpoints,
+                    total_image_bytes: tally.image_bytes,
+                    total_raw_bytes: tally.raw_bytes,
                     wall_secs: t0.elapsed().as_secs_f64(),
                     timeline,
                     final_state,
                     series: self.series_acc.take().unwrap_or_default(),
                     restart_steps,
+                    chunks_written: tally.chunks_written,
+                    chunks_deduped: tally.chunks_deduped,
                 });
             }
             // func_trap: SIGTERM trapped → checkpoint → requeue.
             mark(&mut timeline, AutoState::SignalTrapped);
             if policy.ckpt_on_signal {
                 match self.checkpoint_images() {
-                    Ok(images) => tally(
-                        &images,
-                        &mut checkpoints,
-                        &mut total_image_bytes,
-                        &mut total_raw_bytes,
-                    ),
+                    Ok(images) => tally.add(&images),
                     Err(e) => log::warn!("trap checkpoint failed: {e}"),
                 }
             }
@@ -607,15 +654,31 @@ impl<A: CrApp> Drop for CrSession<A> {
     }
 }
 
-/// Fold one checkpoint round into the report accounting.
-fn tally(images: &[ImageInfo], checkpoints: &mut u64, image_bytes: &mut u64, raw_bytes: &mut u64) {
-    *checkpoints += 1;
-    *image_bytes += images.iter().map(|i| i.stored_bytes).sum::<u64>();
-    *raw_bytes += images.iter().map(|i| i.raw_bytes).sum::<u64>();
+/// Report accounting folded over checkpoint rounds.
+#[derive(Default)]
+struct CkptTally {
+    checkpoints: u64,
+    image_bytes: u64,
+    raw_bytes: u64,
+    chunks_written: u64,
+    chunks_deduped: u64,
+}
+
+impl CkptTally {
+    fn add(&mut self, images: &[ImageInfo]) {
+        self.checkpoints += 1;
+        self.image_bytes += images.iter().map(|i| i.stored_bytes).sum::<u64>();
+        self.raw_bytes += images.iter().map(|i| i.raw_bytes).sum::<u64>();
+        self.chunks_written += images.iter().map(|i| i.chunks_written).sum::<u64>();
+        self.chunks_deduped += images.iter().map(|i| i.chunks_deduped).sum::<u64>();
+    }
 }
 
 /// Concatenate sampler outputs across incarnations (time axes are
 /// per-incarnation; offset each segment by the accumulated end time).
+/// `ckpt_stored` is a per-process *cumulative* counter that restarts at 0
+/// each incarnation, so its values are additionally offset by the
+/// accumulated total — the merged series stays monotone.
 fn merge_series(acc: &mut Option<SampledSeries>, next: SampledSeries) {
     match acc {
         None => *acc = Some(next),
@@ -629,6 +692,10 @@ fn merge_series(acc: &mut Option<SampledSeries>, next: SampledSeries) {
                 for (&t, &v) in src.t.iter().zip(&src.v) {
                     dst.push(offset + t, v);
                 }
+            }
+            let stored_base = a.ckpt_stored.v.last().copied().unwrap_or(0.0);
+            for (&t, &v) in next.ckpt_stored.t.iter().zip(&next.ckpt_stored.v) {
+                a.ckpt_stored.push(offset + t, stored_base + v);
             }
         }
     }

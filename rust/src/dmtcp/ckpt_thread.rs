@@ -20,6 +20,7 @@ use crate::dmtcp::process::{ProcessStats, SegmentSource, SuspendGate};
 use crate::dmtcp::protocol::{
     recv_from_coordinator, send_to_coordinator, FromCoordinator, Phase, ToCoordinator,
 };
+use crate::dmtcp::store::{ImageStore, SegmentManifest, StoreOpts};
 use crate::dmtcp::virtualization::FdTable;
 use crate::error::{Error, Result};
 
@@ -42,6 +43,21 @@ pub struct CkptContext {
     pub restored_vpid: Option<u64>,
     /// Published once the coordinator assigns it.
     pub vpid_out: Arc<AtomicU64>,
+    /// Per-segment manifests of this process's previous checkpoint
+    /// (dirty-segment tracking for the incremental pipeline). Empty before
+    /// the first checkpoint of an incarnation; the store still dedups
+    /// content-addressed chunks written by prior incarnations.
+    pub prev_manifest: BTreeMap<String, SegmentManifest>,
+}
+
+/// One checkpoint write outcome (what `CkptDone` carries).
+struct WriteOutcome {
+    path: String,
+    stored_bytes: u64,
+    raw_bytes: u64,
+    write_secs: f64,
+    chunks_written: u64,
+    chunks_deduped: u64,
 }
 
 /// Spawn the checkpoint thread; `attached_tx` fires once Welcome arrives.
@@ -150,16 +166,18 @@ fn handle_phase(
             // data plane is the coordinator link itself.)
         }
         Phase::Checkpoint => {
-            let info = write_image(ctx, vpid, ckpt_id, dir)?;
+            let out = write_image(ctx, vpid, ckpt_id, dir)?;
             send_to_coordinator(
                 stream,
                 &ToCoordinator::CkptDone {
                     vpid,
                     ckpt_id,
-                    path: info.0,
-                    stored_bytes: info.1,
-                    raw_bytes: info.2,
-                    write_secs: info.3,
+                    path: out.path,
+                    stored_bytes: out.stored_bytes,
+                    raw_bytes: out.raw_bytes,
+                    write_secs: out.write_secs,
+                    chunks_written: out.chunks_written,
+                    chunks_deduped: out.chunks_deduped,
                 },
             )?;
         }
@@ -201,13 +219,16 @@ fn fire_plugins(ctx: &mut CkptContext, event: Event) -> Result<()> {
 }
 
 /// Serialize the process into its image file.
-/// Returns `(path, stored_bytes, raw_bytes, write_secs)`.
-fn write_image(
-    ctx: &mut CkptContext,
-    vpid: u64,
-    ckpt_id: u64,
-    dir: &str,
-) -> Result<(String, u64, u64, f64)> {
+///
+/// With `DMTCP_INCREMENTAL` set (and nonzero), the image is written as a
+/// v2 manifest over the per-workdir content-addressed chunk store: only
+/// chunks whose content changed since the previous generation are
+/// compressed and stored, with compression fanned out over the store's
+/// worker pool. `DMTCP_FULL_EVERY=N` forces every Nth checkpoint (counting
+/// from the first of each incarnation) back to a self-contained v1 full
+/// image — the store-independence anchor. Without `DMTCP_INCREMENTAL`,
+/// every checkpoint is a v1 full image (the NERSC `--gzip` default).
+fn write_image(ctx: &mut CkptContext, vpid: u64, ckpt_id: u64, dir: &str) -> Result<WriteOutcome> {
     fire_plugins(ctx, Event::PreCheckpoint)?;
 
     let (segments, steps_done) = ctx.source.capture();
@@ -228,26 +249,62 @@ fn write_image(
     };
     let image = CheckpointImage { header, segments };
 
-    let gzip = ctx
-        .env
-        .lock()
-        .expect("env poisoned")
-        .get("DMTCP_GZIP")
-        .map(|v| v != "0")
-        .unwrap_or(true);
+    let (gzip, incremental, full_every) = {
+        let env = ctx.env.lock().expect("env poisoned");
+        let flag = |k: &str| env.get(k).map(|v| v != "0").unwrap_or(false);
+        (
+            env.get("DMTCP_GZIP").map(|v| v != "0").unwrap_or(true),
+            flag("DMTCP_INCREMENTAL"),
+            env.get("DMTCP_FULL_EVERY")
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or(0),
+        )
+    };
+    let ckpt_index = ctx.stats.checkpoints.load(Ordering::Relaxed);
+    let force_full = full_every > 0 && ckpt_index % full_every == 0;
+
     let path = std::path::Path::new(dir).join(format!("ckpt_{}_{}.dmtcp", ctx.name, vpid));
     let t0 = Instant::now();
-    let stored = image.write_file(&path, gzip)?;
+    let (stored, chunks_written, chunks_deduped) = if incremental && !force_full {
+        let store = ImageStore::for_images(std::path::Path::new(dir));
+        let opts = StoreOpts {
+            gzip,
+            ..Default::default()
+        };
+        let (manifest, stats) =
+            store.write_incremental(&image, &path, Some(&ctx.prev_manifest), &opts)?;
+        ctx.prev_manifest = manifest
+            .segments
+            .iter()
+            .map(|s| (s.name.clone(), s.clone()))
+            .collect();
+        (stats.stored_bytes, stats.chunks_written, stats.chunks_deduped)
+    } else {
+        // Full image. The previous manifests stay valid for the *next*
+        // incremental delta: their chunks remain in the store until GC.
+        (image.write_file(&path, gzip)?, 0, 0)
+    };
     let secs = t0.elapsed().as_secs_f64();
 
     ctx.stats.transient_bytes.store(0, Ordering::Relaxed);
     ctx.stats.checkpoints.fetch_add(1, Ordering::Relaxed);
+    ctx.stats.ckpt_stored_bytes.fetch_add(stored, Ordering::Relaxed);
     log::debug!(
-        "{} (vpid {vpid}) wrote ckpt {ckpt_id}: {} -> {} bytes in {:.3}s",
+        "{} (vpid {vpid}) wrote ckpt {ckpt_id}: {} -> {} bytes in {:.3}s \
+         ({} chunks new, {} reused)",
         ctx.name,
         raw_bytes,
         stored,
-        secs
+        secs,
+        chunks_written,
+        chunks_deduped
     );
-    Ok((path.to_string_lossy().into_owned(), stored, raw_bytes, secs))
+    Ok(WriteOutcome {
+        path: path.to_string_lossy().into_owned(),
+        stored_bytes: stored,
+        raw_bytes,
+        write_secs: secs,
+        chunks_written,
+        chunks_deduped,
+    })
 }

@@ -81,6 +81,29 @@ struct CoordState {
     /// Total images ever written (metrics).
     images_written: u64,
     total_stored_bytes: u64,
+    /// Raw (logical) bytes the images described — the denominator of the
+    /// incremental pipeline's savings.
+    total_raw_bytes: u64,
+    /// Chunks written to / reused from the content-addressed store.
+    total_chunks_written: u64,
+    total_chunks_deduped: u64,
+}
+
+/// Lifetime checkpoint-store totals across all rounds of a coordinator —
+/// the chunks-written-vs-deduped and logical-vs-stored accounting the
+/// incremental pipeline is judged by.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreTotals {
+    /// Images written across all completed rounds.
+    pub images_written: u64,
+    /// Bytes actually stored (manifest + new chunks, or whole v1 files).
+    pub stored_bytes: u64,
+    /// Raw (logical) bytes those images described.
+    pub logical_bytes: u64,
+    /// Chunks newly written to the content-addressed store.
+    pub chunks_written: u64,
+    /// Chunks reused instead of rewritten.
+    pub chunks_deduped: u64,
 }
 
 struct Shared {
@@ -226,6 +249,19 @@ impl Coordinator {
         (st.images_written, st.total_stored_bytes)
     }
 
+    /// Lifetime checkpoint-store accounting (chunks written vs deduped,
+    /// logical vs stored bytes).
+    pub fn store_totals(&self) -> StoreTotals {
+        let st = self.shared.state.lock().unwrap();
+        StoreTotals {
+            images_written: st.images_written,
+            stored_bytes: st.total_stored_bytes,
+            logical_bytes: st.total_raw_bytes,
+            chunks_written: st.total_chunks_written,
+            chunks_deduped: st.total_chunks_deduped,
+        }
+    }
+
     /// Stop accepting, kill attached processes, join the listener.
     pub fn shutdown(&mut self) {
         self.kill_all();
@@ -280,6 +316,9 @@ fn checkpoint_all_inner(shared: &Arc<Shared>) -> Result<Vec<ImageInfo>> {
             st.last_ckpt_id = ckpt_id;
             st.images_written += round.images.len() as u64;
             st.total_stored_bytes += round.images.iter().map(|i| i.stored_bytes).sum::<u64>();
+            st.total_raw_bytes += round.images.iter().map(|i| i.raw_bytes).sum::<u64>();
+            st.total_chunks_written += round.images.iter().map(|i| i.chunks_written).sum::<u64>();
+            st.total_chunks_deduped += round.images.iter().map(|i| i.chunks_deduped).sum::<u64>();
             Ok(round.images)
         }
         Err(e) => Err(e),
@@ -429,6 +468,8 @@ fn client_loop(shared: Arc<Shared>, mut stream: TcpStream) {
                 stored_bytes,
                 raw_bytes,
                 write_secs,
+                chunks_written,
+                chunks_deduped,
             } => {
                 let mut st = shared.state.lock().unwrap();
                 if let Some(round) = st.round.as_mut() {
@@ -440,6 +481,8 @@ fn client_loop(shared: Arc<Shared>, mut stream: TcpStream) {
                             stored_bytes,
                             raw_bytes,
                             write_secs,
+                            chunks_written,
+                            chunks_deduped,
                         });
                     }
                 }

@@ -7,17 +7,24 @@
 //!
 //! ```text
 //! magic  "NCRDMTCP"            8 bytes
-//! version u32                  (currently 1)
+//! version u32                  (1 = full image, 2 = chunk manifest)
 //! flags   u32                  bit 0: body is gzip-compressed
 //! body_crc u32                 CRC32 of the *stored* (possibly gzip'd) body
 //! body_len u64                 stored body length
 //! body  { header | segments }  see below
 //! ```
 //!
-//! Body layout (before optional gzip):
+//! Version-1 body layout (before optional gzip):
 //! `header`: virtual pid, process name, checkpoint id, generation,
 //! steps-done hint, env-var map, fd-table entries, plugin records.
 //! `segments`: count, then per segment `name, raw_len, raw_crc32, bytes`.
+//!
+//! Version 2 keeps the same outer frame and header encoding, but the
+//! segment payload is a *manifest of chunk references* into the per-workdir
+//! content-addressed [`crate::dmtcp::store::ImageStore`] — see that module
+//! for the incremental pipeline. [`CheckpointImage::read_file`] reads both
+//! versions transparently (the v1 full-image reader is the fallback for
+//! pre-chunk images).
 //!
 //! Integrity is checked at three levels on load: magic/version, whole-body
 //! CRC, and per-segment CRC — a truncated or bit-flipped image is rejected
@@ -37,9 +44,10 @@ use flate2::Compression;
 use crate::error::{Error, Result};
 use crate::util::bytes::{ByteReader, PutBytes};
 
-const MAGIC: &[u8; 8] = b"NCRDMTCP";
-const VERSION: u32 = 1;
-const FLAG_GZIP: u32 = 1;
+pub(crate) const MAGIC: &[u8; 8] = b"NCRDMTCP";
+pub(crate) const VERSION_FULL: u32 = 1;
+pub(crate) const VERSION_MANIFEST: u32 = 2;
+pub(crate) const FLAG_GZIP: u32 = 1;
 
 /// A virtualized file-descriptor table entry captured in the image.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -82,32 +90,115 @@ pub struct CheckpointImage {
     pub segments: Vec<(String, Vec<u8>)>,
 }
 
+/// Encode an [`ImageHeader`] into `b` (shared by the v1 body and the v2
+/// manifest body — the header wire format is identical across versions).
+pub(crate) fn encode_header(h: &ImageHeader, b: &mut Vec<u8>) {
+    b.put_u64(h.vpid);
+    b.put_lp_str(&h.name);
+    b.put_u64(h.ckpt_id);
+    b.put_u32(h.generation);
+    b.put_u64(h.steps_done);
+    b.put_u32(h.env.len() as u32);
+    for (k, v) in &h.env {
+        b.put_lp_str(k);
+        b.put_lp_str(v);
+    }
+    b.put_u32(h.fds.len() as u32);
+    for fd in &h.fds {
+        b.put_u32(fd.vfd);
+        b.put_lp_str(&fd.path);
+        b.put_u8(fd.append as u8);
+    }
+    b.put_u32(h.plugin_records.len() as u32);
+    for (k, v) in &h.plugin_records {
+        b.put_lp_str(k);
+        b.put_lp_bytes(v);
+    }
+}
+
+/// Decode an [`ImageHeader`] (inverse of [`encode_header`]); the reader is
+/// left positioned at the first byte after the header.
+pub(crate) fn decode_header(r: &mut ByteReader<'_>) -> Result<ImageHeader> {
+    let vpid = r.get_u64()?;
+    let name = r.get_lp_str()?;
+    let ckpt_id = r.get_u64()?;
+    let generation = r.get_u32()?;
+    let steps_done = r.get_u64()?;
+    let mut env = BTreeMap::new();
+    for _ in 0..r.get_u32()? {
+        let k = r.get_lp_str()?;
+        let v = r.get_lp_str()?;
+        env.insert(k, v);
+    }
+    let mut fds = Vec::new();
+    for _ in 0..r.get_u32()? {
+        fds.push(FdEntry {
+            vfd: r.get_u32()?,
+            path: r.get_lp_str()?,
+            append: r.get_u8()? != 0,
+        });
+    }
+    let mut plugin_records = BTreeMap::new();
+    for _ in 0..r.get_u32()? {
+        let k = r.get_lp_str()?;
+        let v = r.get_lp_bytes()?.to_vec();
+        plugin_records.insert(k, v);
+    }
+    Ok(ImageHeader {
+        vpid,
+        name,
+        ckpt_id,
+        generation,
+        steps_done,
+        env,
+        fds,
+        plugin_records,
+    })
+}
+
+/// Wrap `body` in the outer frame (magic, version, flags, body CRC, length).
+pub(crate) fn frame(version: u32, flags: u32, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + 28);
+    out.put_bytes(MAGIC);
+    out.put_u32(version);
+    out.put_u32(flags);
+    out.put_u32(crc32fast::hash(body));
+    out.put_u64(body.len() as u64);
+    out.put_bytes(body);
+    out
+}
+
+/// Verify the outer frame of `bytes` (magic, body CRC, exact length) and
+/// return `(version, flags, body)`. Version validation is the caller's job
+/// — this is shared by the v1 and v2 readers.
+pub(crate) fn unframe(bytes: &[u8]) -> Result<(u32, u32, &[u8])> {
+    let mut r = ByteReader::new(bytes);
+    let magic = r.get_bytes(8)?;
+    if magic != MAGIC {
+        return Err(Error::Image("bad magic: not a checkpoint image".into()));
+    }
+    let version = r.get_u32()?;
+    let flags = r.get_u32()?;
+    let body_crc = r.get_u32()?;
+    let body_len = r.get_u64()? as usize;
+    let body = r.get_bytes(body_len)?;
+    if r.remaining() != 0 {
+        return Err(Error::Image("trailing bytes after image body".into()));
+    }
+    let got = crc32fast::hash(body);
+    if got != body_crc {
+        return Err(Error::Image(format!(
+            "body CRC mismatch: stored {body_crc:08x}, computed {got:08x}"
+        )));
+    }
+    Ok((version, flags, body))
+}
+
 impl CheckpointImage {
     /// Serialize the body (header + segments), before compression.
     fn encode_body(&self) -> Vec<u8> {
         let mut b = Vec::new();
-        let h = &self.header;
-        b.put_u64(h.vpid);
-        b.put_lp_str(&h.name);
-        b.put_u64(h.ckpt_id);
-        b.put_u32(h.generation);
-        b.put_u64(h.steps_done);
-        b.put_u32(h.env.len() as u32);
-        for (k, v) in &h.env {
-            b.put_lp_str(k);
-            b.put_lp_str(v);
-        }
-        b.put_u32(h.fds.len() as u32);
-        for fd in &h.fds {
-            b.put_u32(fd.vfd);
-            b.put_lp_str(&fd.path);
-            b.put_u8(fd.append as u8);
-        }
-        b.put_u32(h.plugin_records.len() as u32);
-        for (k, v) in &h.plugin_records {
-            b.put_lp_str(k);
-            b.put_lp_bytes(v);
-        }
+        encode_header(&self.header, &mut b);
         b.put_u32(self.segments.len() as u32);
         for (name, data) in &self.segments {
             b.put_lp_str(name);
@@ -120,31 +211,7 @@ impl CheckpointImage {
 
     fn decode_body(body: &[u8]) -> Result<Self> {
         let mut r = ByteReader::new(body);
-        let vpid = r.get_u64()?;
-        let name = r.get_lp_str()?;
-        let ckpt_id = r.get_u64()?;
-        let generation = r.get_u32()?;
-        let steps_done = r.get_u64()?;
-        let mut env = BTreeMap::new();
-        for _ in 0..r.get_u32()? {
-            let k = r.get_lp_str()?;
-            let v = r.get_lp_str()?;
-            env.insert(k, v);
-        }
-        let mut fds = Vec::new();
-        for _ in 0..r.get_u32()? {
-            fds.push(FdEntry {
-                vfd: r.get_u32()?,
-                path: r.get_lp_str()?,
-                append: r.get_u8()? != 0,
-            });
-        }
-        let mut plugin_records = BTreeMap::new();
-        for _ in 0..r.get_u32()? {
-            let k = r.get_lp_str()?;
-            let v = r.get_lp_bytes()?.to_vec();
-            plugin_records.insert(k, v);
-        }
+        let header = decode_header(&mut r)?;
         let n_seg = r.get_u32()?;
         let mut segments = Vec::with_capacity(n_seg as usize);
         for _ in 0..n_seg {
@@ -166,23 +233,11 @@ impl CheckpointImage {
                 r.remaining()
             )));
         }
-        Ok(Self {
-            header: ImageHeader {
-                vpid,
-                name,
-                ckpt_id,
-                generation,
-                steps_done,
-                env,
-                fds,
-                plugin_records,
-            },
-            segments,
-        })
+        Ok(Self { header, segments })
     }
 
-    /// Serialize to bytes, optionally gzip-compressing the body
-    /// (DMTCP's `--gzip`, the NERSC default).
+    /// Serialize to bytes as a version-1 full image, optionally
+    /// gzip-compressing the body (DMTCP's `--gzip`, the NERSC default).
     pub fn to_bytes(&self, gzip: bool) -> Result<Vec<u8>> {
         let raw = self.encode_body();
         let body = if gzip {
@@ -192,40 +247,27 @@ impl CheckpointImage {
         } else {
             raw
         };
-        let mut out = Vec::with_capacity(body.len() + 28);
-        out.put_bytes(MAGIC);
-        out.put_u32(VERSION);
-        out.put_u32(if gzip { FLAG_GZIP } else { 0 });
-        out.put_u32(crc32fast::hash(&body));
-        out.put_u64(body.len() as u64);
-        out.put_bytes(&body);
-        Ok(out)
+        Ok(frame(VERSION_FULL, if gzip { FLAG_GZIP } else { 0 }, &body))
     }
 
-    /// Parse an image from bytes, verifying magic, version and CRCs.
+    /// Parse a version-1 full image from bytes, verifying magic, version
+    /// and CRCs. Version-2 manifests need their chunk store and go through
+    /// [`crate::dmtcp::store::read_image_file`] (or [`Self::read_file`]).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
-        let mut r = ByteReader::new(bytes);
-        let magic = r.get_bytes(8)?;
-        if magic != MAGIC {
-            return Err(Error::Image("bad magic: not a checkpoint image".into()));
-        }
-        let version = r.get_u32()?;
-        if version != VERSION {
-            return Err(Error::Image(format!("unsupported image version {version}")));
-        }
-        let flags = r.get_u32()?;
-        let body_crc = r.get_u32()?;
-        let body_len = r.get_u64()? as usize;
-        let body = r.get_bytes(body_len)?;
-        if r.remaining() != 0 {
-            return Err(Error::Image("trailing bytes after image body".into()));
-        }
-        let got = crc32fast::hash(body);
-        if got != body_crc {
+        let (version, flags, body) = unframe(bytes)?;
+        if version != VERSION_FULL {
             return Err(Error::Image(format!(
-                "body CRC mismatch: stored {body_crc:08x}, computed {got:08x}"
+                "unsupported image version {version} for the in-memory reader \
+                 (v2 manifests are read through their chunk store)"
             )));
         }
+        Self::from_unframed(flags, body)
+    }
+
+    /// Decode a v1 body whose outer frame was already verified with
+    /// [`unframe`] — readers that dispatch on the version avoid a second
+    /// whole-body CRC pass this way.
+    pub(crate) fn from_unframed(flags: u32, body: &[u8]) -> Result<Self> {
         let raw = if flags & FLAG_GZIP != 0 {
             let mut dec = GzDecoder::new(body);
             let mut out = Vec::new();
@@ -238,23 +280,20 @@ impl CheckpointImage {
         Self::decode_body(&raw)
     }
 
-    /// Write atomically to `path` (`.tmp` + rename). Returns stored size.
+    /// Write atomically to `path` (`.tmp` + rename) as a version-1 full
+    /// image. Returns stored size. (The incremental v2 writer is
+    /// [`crate::dmtcp::store::ImageStore::write_incremental`].)
     pub fn write_file(&self, path: &Path, gzip: bool) -> Result<u64> {
         let bytes = self.to_bytes(gzip)?;
-        let tmp = tmp_path(path);
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        std::fs::write(&tmp, &bytes)?;
-        std::fs::rename(&tmp, path)?;
+        atomic_write(path, &bytes)?;
         Ok(bytes.len() as u64)
     }
 
-    /// Read and verify an image file.
+    /// Read and verify an image file of either version: v1 full images
+    /// decode standalone, v2 manifests reassemble from the chunk store
+    /// sitting next to the image (`<dir>/store/`).
     pub fn read_file(path: &Path) -> Result<Self> {
-        let bytes = std::fs::read(path)
-            .map_err(|e| Error::Image(format!("{}: {e}", path.display())))?;
-        Self::from_bytes(&bytes)
+        crate::dmtcp::store::read_image_file(path)
     }
 
     /// Total raw (uncompressed) segment bytes.
@@ -269,18 +308,35 @@ fn tmp_path(path: &Path) -> PathBuf {
     PathBuf::from(os)
 }
 
+/// Atomic publish: write to `<path>.tmp` then rename, so a preemption
+/// mid-write never leaves a half image (or half chunk) at the final path.
+pub(crate) fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_path(path);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
 /// Summary of one written checkpoint (coordinator bookkeeping + metrics).
 #[derive(Debug, Clone)]
 pub struct ImageInfo {
     pub vpid: u64,
     pub ckpt_id: u64,
     pub path: PathBuf,
-    /// Stored (possibly compressed) byte size.
+    /// Stored byte size: the whole file for v1 full images; manifest bytes
+    /// plus *newly written* chunk bytes for v2 incremental images.
     pub stored_bytes: u64,
-    /// Raw segment byte size.
+    /// Raw (logical, uncompressed) segment byte size.
     pub raw_bytes: u64,
     /// Wall time spent writing, seconds.
     pub write_secs: f64,
+    /// Chunks newly written to the content-addressed store (0 for v1).
+    pub chunks_written: u64,
+    /// Chunks already present in the store and reused (0 for v1).
+    pub chunks_deduped: u64,
 }
 
 #[cfg(test)]

@@ -131,6 +131,7 @@ pub(crate) fn attach<S: Checkpointable + 'static>(
         records,
         restored_vpid,
         vpid_out: Arc::clone(&process.vpid),
+        prev_manifest: BTreeMap::new(),
     };
     let join = ckpt_thread::spawn(coordinator, ctx, tx);
     LaunchedProcess {

@@ -6,9 +6,11 @@
 //! [`ckpt_thread`] checkpoint thread plus its user threads, which park at
 //! [`process::WorkerCtx::ckpt_point`] safe-points during the five-phase
 //! barrier ([`protocol::Phase`]). Checkpoints are [`image`] files
-//! (gzip + CRC, atomically written); restart ([`restart::dmtcp_restart`])
-//! rebuilds the process under its original virtual pid
-//! ([`virtualization`]) with plugin records replayed ([`plugin`]).
+//! (gzip + CRC, atomically written) — either v1 full images or v2
+//! manifests over the content-addressed incremental [`store`] — and
+//! restart ([`restart::dmtcp_restart`]) rebuilds the process under its
+//! original virtual pid ([`virtualization`]) with plugin records replayed
+//! ([`plugin`]).
 
 pub mod ckpt_thread;
 pub mod command;
@@ -20,14 +22,19 @@ pub mod plugin;
 pub mod process;
 pub mod protocol;
 pub mod restart;
+pub mod store;
 pub mod virtualization;
 
 pub use command::{CkptResult, CoordStatus, DmtcpCommand};
-pub use coordinator::{Coordinator, CoordinatorConfig};
+pub use coordinator::{Coordinator, CoordinatorConfig, StoreTotals};
 pub use image::{CheckpointImage, FdEntry, ImageHeader, ImageInfo};
 pub use launch::{dmtcp_launch, LaunchSpec, LaunchedProcess};
 pub use mana::{ManaState, LIB_PREFIX};
 pub use plugin::{EnvPlugin, Event, Plugin, PluginCtx, PluginRegistry, TimerPlugin};
 pub use process::{Checkpointable, GateVerdict, SuspendGate, UserProcess, WorkerCtx};
 pub use restart::{dmtcp_restart, inspect_image, RestartedProcess};
+pub use store::{
+    ChunkId, ChunkRef, GcStats, ImageManifest, ImageStore, SegmentManifest, StoreOpts,
+    StoreWriteStats, DEFAULT_CHUNK_SIZE,
+};
 pub use virtualization::{FdKind, FdTable, PidTable};

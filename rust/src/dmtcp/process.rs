@@ -174,6 +174,12 @@ pub struct ProcessStats {
     pub busy_nanos: AtomicU64,
     /// Checkpoints taken by this process instance.
     pub checkpoints: AtomicU64,
+    /// Cumulative checkpoint bytes actually stored (manifest + new chunks
+    /// for incremental images; whole file for full images), sampled by the
+    /// LDMS-analog. Chunk-level counts travel over the coordinator
+    /// protocol (`CkptDone`) instead — they are round accounting, not a
+    /// sampled time series.
+    pub ckpt_stored_bytes: AtomicU64,
 }
 
 impl ProcessStats {

@@ -74,6 +74,11 @@ pub enum ToCoordinator {
         stored_bytes: u64,
         raw_bytes: u64,
         write_secs: f64,
+        /// Chunks newly written to the content-addressed store (0 for
+        /// full images).
+        chunks_written: u64,
+        /// Chunks reused instead of rewritten (0 for full images).
+        chunks_deduped: u64,
     },
     /// Graceful detach.
     Goodbye { vpid: u64 },
@@ -149,6 +154,8 @@ fn encode_to_coordinator(msg: &ToCoordinator) -> Vec<u8> {
             stored_bytes,
             raw_bytes,
             write_secs,
+            chunks_written,
+            chunks_deduped,
         } => {
             b.put_u8(2);
             b.put_u64(*vpid);
@@ -157,6 +164,8 @@ fn encode_to_coordinator(msg: &ToCoordinator) -> Vec<u8> {
             b.put_u64(*stored_bytes);
             b.put_u64(*raw_bytes);
             b.put_f64(*write_secs);
+            b.put_u64(*chunks_written);
+            b.put_u64(*chunks_deduped);
         }
         ToCoordinator::Goodbye { vpid } => {
             b.put_u8(3);
@@ -195,6 +204,8 @@ fn decode_to_coordinator(buf: &[u8]) -> Result<ToCoordinator> {
             stored_bytes: r.get_u64()?,
             raw_bytes: r.get_u64()?,
             write_secs: r.get_f64()?,
+            chunks_written: r.get_u64()?,
+            chunks_deduped: r.get_u64()?,
         },
         3 => ToCoordinator::Goodbye { vpid: r.get_u64()? },
         4 => ToCoordinator::CommandCheckpoint,
@@ -356,6 +367,8 @@ mod tests {
                 stored_bytes: 1_000,
                 raw_bytes: 4_000,
                 write_secs: 0.25,
+                chunks_written: 3,
+                chunks_deduped: 61,
             },
             ToCoordinator::Goodbye { vpid: 40_001 },
             ToCoordinator::CommandCheckpoint,

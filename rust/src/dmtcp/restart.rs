@@ -11,7 +11,7 @@ use std::net::SocketAddr;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
 
-use crate::dmtcp::image::{CheckpointImage, ImageHeader};
+use crate::dmtcp::image::ImageHeader;
 use crate::dmtcp::launch::{attach, build_process, LaunchedProcess};
 use crate::dmtcp::plugin::{Event, PluginCtx, PluginRegistry};
 use crate::dmtcp::process::Checkpointable;
@@ -38,7 +38,11 @@ pub fn dmtcp_restart<S: Checkpointable + 'static>(
     state: Arc<Mutex<S>>,
     mut plugins: PluginRegistry,
 ) -> Result<RestartedProcess> {
-    let image = CheckpointImage::read_file(image_path)?;
+    // Reads v1 full images and v2 incremental manifests alike; v2 segments
+    // reassemble from the chunk store next to the image, with per-chunk
+    // CRC verification — a damaged store surfaces as `Error::Corrupt`
+    // before any state is touched.
+    let image = crate::dmtcp::store::read_image_file(image_path)?;
     let header = image.header.clone();
 
     // Rebuild process metadata from the image.
@@ -90,6 +94,8 @@ pub fn dmtcp_restart<S: Checkpointable + 'static>(
 }
 
 /// Peek at an image without restoring it (`dmtcp_restart --inspect`).
+/// Header-only: v2 manifests are inspectable even when their chunk store
+/// is unavailable or damaged.
 pub fn inspect_image(image_path: &Path) -> Result<ImageHeader> {
-    Ok(CheckpointImage::read_file(image_path)?.header)
+    crate::dmtcp::store::inspect_image_file(image_path)
 }

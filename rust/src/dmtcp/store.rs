@@ -1,0 +1,1027 @@
+//! Content-addressed incremental checkpoint store (image format v2).
+//!
+//! The paper's dominant C/R cost is rewriting the whole image every
+//! checkpoint (gzip of every segment, every time — the NERSC `--gzip`
+//! default). CRIU's incremental pre-dump and MANA's segment exclusion both
+//! show the same lever: *don't rewrite unchanged memory*. This module
+//! applies it to the image format:
+//!
+//! * Segments are split into fixed-size chunks; each chunk is addressed by
+//!   a CRC-seeded 128-bit content hash ([`ChunkId`]).
+//! * Chunks live in a per-workdir store (`<ckpt_dir>/store/<aa>/<hex>.chunk`,
+//!   atomically published), so a checkpoint after a small state delta only
+//!   compresses and writes chunks whose content actually changed — across
+//!   generations, processes, and even restarts (content addressing dedups
+//!   against everything already on disk).
+//! * The image file itself becomes a small v2 *manifest* of chunk
+//!   references (same outer frame and header encoding as v1; see
+//!   [`crate::dmtcp::image`]); v1 full images remain readable through the
+//!   same entry points as the fallback.
+//! * Chunk compression fans out across a small worker pool — the gzip
+//!   stage, serial in the v1 writer, parallelizes per chunk.
+//! * Reads verify every chunk's CRC and length before any state is
+//!   restored; a missing or damaged chunk surfaces as the typed
+//!   [`Error::Corrupt`] — never a panic or silent zero-fill.
+//!
+//! Dirty-segment tracking lives one level up (the checkpoint thread keeps
+//! the previous generation's [`SegmentManifest`]s and skips re-chunking
+//! segments whose raw CRC is unchanged); [`ImageStore::gc`] reclaims
+//! chunks no manifest references (sessions run it on teardown).
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use flate2::read::GzDecoder;
+use flate2::write::GzEncoder;
+use flate2::Compression;
+
+use crate::dmtcp::image::{
+    self, atomic_write, CheckpointImage, ImageHeader, VERSION_FULL, VERSION_MANIFEST,
+};
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, PutBytes};
+
+/// Default chunk size: 64 KiB balances dedup granularity (small deltas
+/// re-store little) against per-chunk overhead (hashing, one file each).
+pub const DEFAULT_CHUNK_SIZE: usize = 64 * 1024;
+
+/// The store directory name under a checkpoint directory.
+pub const STORE_DIR_NAME: &str = "store";
+
+/// Chunk-file magic (`NCRCHNK` + format version byte).
+const CHUNK_MAGIC: &[u8; 8] = b"NCRCHNK1";
+const CHUNK_FLAG_GZIP: u8 = 1;
+
+/// 128-bit content address of a chunk.
+///
+/// CRC-seeded: the chunk's CRC-32 (the integrity primitive the image
+/// format already standardizes on) seeds two independently-mixed 64-bit
+/// streaming hashes over the content, so equal content always maps to the
+/// same address and 2^-128-scale collisions are not a practical concern
+/// for checkpoint dedup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ChunkId {
+    /// High 64 bits of the address.
+    pub hi: u64,
+    /// Low 64 bits of the address.
+    pub lo: u64,
+}
+
+impl ChunkId {
+    /// Content address of `data`.
+    pub fn of(data: &[u8]) -> Self {
+        Self::of_with_crc(data, crc32fast::hash(data))
+    }
+
+    /// Content address of `data` with its CRC-32 already computed — the
+    /// write path CRCs each chunk exactly once and seeds the address from
+    /// that same pass.
+    pub fn of_with_crc(data: &[u8], crc: u32) -> Self {
+        let crc = crc as u64;
+        Self {
+            hi: hash64(data, crc ^ 0x9E37_79B9_7F4A_7C15),
+            lo: hash64(data, crc.wrapping_mul(0xBF58_476D_1CE4_E5B9) ^ 0x94D0_49BB_1331_11EB),
+        }
+    }
+
+    /// 32-hex-digit form (chunk file names).
+    pub fn hex(&self) -> String {
+        format!("{:016x}{:016x}", self.hi, self.lo)
+    }
+
+    /// Parse the 32-hex-digit form back (GC scans file names).
+    pub fn from_hex(s: &str) -> Option<Self> {
+        if s.len() != 32 || !s.is_ascii() {
+            return None;
+        }
+        let hi = u64::from_str_radix(&s[..16], 16).ok()?;
+        let lo = u64::from_str_radix(&s[16..], 16).ok()?;
+        Some(Self { hi, lo })
+    }
+}
+
+/// SplitMix64 finalizer (also the mixer behind `util::rng`).
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Seeded 64-bit streaming hash over 8-byte words (zero-padded tail),
+/// length-mixed so prefixes don't collide.
+fn hash64(data: &[u8], seed: u64) -> u64 {
+    let mut h = seed;
+    let mut it = data.chunks_exact(8);
+    for w in &mut it {
+        h = mix64(h ^ u64::from_le_bytes(w.try_into().expect("8-byte word")));
+    }
+    let rem = it.remainder();
+    if !rem.is_empty() {
+        let mut buf = [0u8; 8];
+        buf[..rem.len()].copy_from_slice(rem);
+        h = mix64(h ^ u64::from_le_bytes(buf));
+    }
+    mix64(h ^ data.len() as u64)
+}
+
+/// One chunk reference inside a segment manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkRef {
+    /// Content address (names the chunk file in the store).
+    pub id: ChunkId,
+    /// Raw (uncompressed) chunk length.
+    pub raw_len: u32,
+    /// CRC-32 of the raw chunk bytes (verified on every read).
+    pub raw_crc: u32,
+}
+
+impl ChunkRef {
+    /// Reference for `data`: one CRC pass seeds both the integrity field
+    /// and the content address.
+    fn of(data: &[u8]) -> Self {
+        let raw_crc = crc32fast::hash(data);
+        Self {
+            id: ChunkId::of_with_crc(data, raw_crc),
+            raw_len: data.len() as u32,
+            raw_crc,
+        }
+    }
+}
+
+/// Atomic publish with a *writer-unique* tmp name: concurrent writers of
+/// the same content-addressed path (two pool workers, two ranks, two
+/// sessions) each stage their own tmp file and race only on the final
+/// rename — which is harmless, since the bytes are identical. A shared
+/// deterministic tmp name would let one writer rename away (or truncate)
+/// another's in-flight staging file.
+fn atomic_publish(path: &Path, bytes: &[u8]) -> Result<()> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let mut os = path.as_os_str().to_owned();
+    os.push(format!(
+        ".tmp.{}.{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let tmp = PathBuf::from(os);
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// The chunked form of one named memory segment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentManifest {
+    /// Segment name (matches the v1 segment name).
+    pub name: String,
+    /// Total raw segment length.
+    pub raw_len: u64,
+    /// CRC-32 of the whole raw segment (second integrity level).
+    pub raw_crc: u32,
+    /// Chunk references, in segment order.
+    pub chunks: Vec<ChunkRef>,
+}
+
+/// A v2 image: the v1 header plus chunk manifests instead of inline bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageManifest {
+    /// Same header as v1 images (vpid, env, fds, plugin records, ...).
+    pub header: ImageHeader,
+    /// One manifest per memory segment.
+    pub segments: Vec<SegmentManifest>,
+}
+
+impl ImageManifest {
+    /// Total raw (logical) segment bytes the manifest describes.
+    pub fn raw_bytes(&self) -> u64 {
+        self.segments.iter().map(|s| s.raw_len).sum()
+    }
+
+    /// Total chunk references across all segments.
+    pub fn n_chunks(&self) -> usize {
+        self.segments.iter().map(|s| s.chunks.len()).sum()
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        image::encode_header(&self.header, &mut b);
+        b.put_u32(self.segments.len() as u32);
+        for s in &self.segments {
+            b.put_lp_str(&s.name);
+            b.put_u64(s.raw_len);
+            b.put_u32(s.raw_crc);
+            b.put_u32(s.chunks.len() as u32);
+            for c in &s.chunks {
+                b.put_u64(c.id.hi);
+                b.put_u64(c.id.lo);
+                b.put_u32(c.raw_len);
+                b.put_u32(c.raw_crc);
+            }
+        }
+        b
+    }
+
+    fn decode(body: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(body);
+        let header = image::decode_header(&mut r)?;
+        let n_seg = r.get_u32()?;
+        let mut segments = Vec::with_capacity(n_seg as usize);
+        for _ in 0..n_seg {
+            let name = r.get_lp_str()?;
+            let raw_len = r.get_u64()?;
+            let raw_crc = r.get_u32()?;
+            let n_chunks = r.get_u32()?;
+            let mut chunks = Vec::with_capacity(n_chunks as usize);
+            let mut covered = 0u64;
+            for _ in 0..n_chunks {
+                let c = ChunkRef {
+                    id: ChunkId {
+                        hi: r.get_u64()?,
+                        lo: r.get_u64()?,
+                    },
+                    raw_len: r.get_u32()?,
+                    raw_crc: r.get_u32()?,
+                };
+                covered += c.raw_len as u64;
+                chunks.push(c);
+            }
+            if covered != raw_len {
+                return Err(Error::Image(format!(
+                    "segment {name:?} manifest covers {covered} of {raw_len} bytes"
+                )));
+            }
+            segments.push(SegmentManifest {
+                name,
+                raw_len,
+                raw_crc,
+                chunks,
+            });
+        }
+        if r.remaining() != 0 {
+            return Err(Error::Image(format!(
+                "{} trailing bytes after last segment manifest",
+                r.remaining()
+            )));
+        }
+        Ok(Self { header, segments })
+    }
+}
+
+/// Knobs for the incremental write pipeline.
+#[derive(Debug, Clone)]
+pub struct StoreOpts {
+    /// Chunk size in bytes (fixed-size split; the last chunk is shorter).
+    pub chunk_size: usize,
+    /// Compression worker threads (the parallel gzip stage).
+    pub workers: usize,
+    /// gzip chunk payloads (DMTCP `--gzip`; chunk files self-describe, so
+    /// mixed-mode stores read fine).
+    pub gzip: bool,
+}
+
+impl Default for StoreOpts {
+    fn default() -> Self {
+        Self {
+            chunk_size: DEFAULT_CHUNK_SIZE,
+            workers: default_workers(),
+            gzip: true,
+        }
+    }
+}
+
+/// Small default pool: enough to overlap gzip with file IO without
+/// oversubscribing nodes that run many ranks per host.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .clamp(1, 4)
+}
+
+/// Counters from one incremental image write.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreWriteStats {
+    /// Chunks newly written to the store this write.
+    pub chunks_written: u64,
+    /// Chunks already present (content-addressed dedup) or carried over
+    /// from an unchanged segment (dirty tracking).
+    pub chunks_deduped: u64,
+    /// Raw segment bytes the image describes (what a full image would
+    /// serialize).
+    pub logical_bytes: u64,
+    /// Bytes actually written to disk: new chunk files + the manifest.
+    pub stored_bytes: u64,
+}
+
+/// Stats from one [`ImageStore::gc`] pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcStats {
+    /// Chunk files examined.
+    pub scanned: u64,
+    /// Distinct chunks referenced by at least one manifest.
+    pub live: u64,
+    /// Unreferenced chunk files deleted.
+    pub deleted: u64,
+    /// Bytes reclaimed.
+    pub deleted_bytes: u64,
+}
+
+/// A per-workdir content-addressed chunk store.
+#[derive(Debug, Clone)]
+pub struct ImageStore {
+    root: PathBuf,
+}
+
+impl ImageStore {
+    /// The store serving the images in `ckpt_dir` (lives at
+    /// `<ckpt_dir>/store/`). Nothing is created until a chunk is written.
+    pub fn for_images(ckpt_dir: &Path) -> Self {
+        Self {
+            root: ckpt_dir.join(STORE_DIR_NAME),
+        }
+    }
+
+    /// Open a store at an explicit root directory.
+    pub fn open(root: impl Into<PathBuf>) -> Self {
+        Self { root: root.into() }
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn chunk_path(&self, id: ChunkId) -> PathBuf {
+        let hex = id.hex();
+        self.root.join(&hex[..2]).join(format!("{hex}.chunk"))
+    }
+
+    /// Write an image incrementally: chunk + hash the segments, store only
+    /// chunks not already present, and publish a v2 manifest at `path`.
+    ///
+    /// `prev` is the previous generation's per-segment manifests (dirty
+    /// tracking): a segment whose name, length and raw CRC are unchanged —
+    /// and whose chunks are all still on disk (their mtimes are refreshed,
+    /// re-arming the GC grace window) — reuses its manifest without
+    /// re-chunking, content-hashing or re-storing anything. (The one CRC
+    /// pass that decides cleanliness is the floor cost per segment.)
+    pub fn write_incremental(
+        &self,
+        img: &CheckpointImage,
+        path: &Path,
+        prev: Option<&BTreeMap<String, SegmentManifest>>,
+        opts: &StoreOpts,
+    ) -> Result<(ImageManifest, StoreWriteStats)> {
+        let mut stats = StoreWriteStats::default();
+        let chunk_size = opts.chunk_size.max(1);
+
+        // Split segments into clean (manifest reuse) and dirty (re-chunk).
+        let mut segments: Vec<Option<SegmentManifest>> = vec![None; img.segments.len()];
+        let mut dirty: Vec<(usize, &str, &[u8], u32)> = Vec::new();
+        for (i, (name, data)) in img.segments.iter().enumerate() {
+            stats.logical_bytes += data.len() as u64;
+            let crc = crc32fast::hash(data);
+            if let Some(p) = prev.and_then(|m| m.get(name.as_str())) {
+                if p.raw_len == data.len() as u64
+                    && p.raw_crc == crc
+                    && p.chunks.iter().all(|c| self.refresh_chunk(c.id))
+                {
+                    stats.chunks_deduped += p.chunks.len() as u64;
+                    segments[i] = Some(p.clone());
+                    continue;
+                }
+            }
+            dirty.push((i, name.as_str(), data.as_slice(), crc));
+        }
+
+        // Fan the dirty chunks out over the compression pool.
+        let jobs: Vec<(usize, usize, &[u8])> = dirty
+            .iter()
+            .flat_map(|&(si, _, data, _)| {
+                data.chunks(chunk_size)
+                    .enumerate()
+                    .map(move |(ci, c)| (si, ci, c))
+            })
+            .collect();
+        // Degenerate but legal: an empty segment still needs a manifest.
+        let results: Vec<(usize, usize, ChunkRef, u64, bool)> = if jobs.is_empty() {
+            Vec::new()
+        } else {
+            self.run_pool(&jobs, opts)?
+        };
+        let mut per_segment: BTreeMap<usize, Vec<(usize, ChunkRef)>> = BTreeMap::new();
+        for (si, ci, cref, written, was_new) in results {
+            stats.stored_bytes += written;
+            if was_new {
+                stats.chunks_written += 1;
+            } else {
+                stats.chunks_deduped += 1;
+            }
+            per_segment.entry(si).or_default().push((ci, cref));
+        }
+        for &(si, name, data, crc) in &dirty {
+            let mut chunks = per_segment.remove(&si).unwrap_or_default();
+            chunks.sort_by_key(|&(ci, _)| ci);
+            segments[si] = Some(SegmentManifest {
+                name: name.to_string(),
+                raw_len: data.len() as u64,
+                raw_crc: crc,
+                chunks: chunks.into_iter().map(|(_, c)| c).collect(),
+            });
+        }
+
+        let manifest = ImageManifest {
+            header: img.header.clone(),
+            segments: segments
+                .into_iter()
+                .map(|s| s.expect("every segment resolved"))
+                .collect(),
+        };
+        let body = manifest.encode();
+        let bytes = image::frame(VERSION_MANIFEST, 0, &body);
+        atomic_write(path, &bytes)?;
+        stats.stored_bytes += bytes.len() as u64;
+        Ok((manifest, stats))
+    }
+
+    /// The parallel gzip stage: workers pull `(segment, chunk, bytes)`
+    /// jobs off a shared cursor, hash + compress + publish each chunk, and
+    /// report `(refs, bytes written, newly written)`.
+    #[allow(clippy::type_complexity)]
+    fn run_pool(
+        &self,
+        jobs: &[(usize, usize, &[u8])],
+        opts: &StoreOpts,
+    ) -> Result<Vec<(usize, usize, ChunkRef, u64, bool)>> {
+        let cursor = AtomicUsize::new(0);
+        let out: Mutex<Vec<(usize, usize, ChunkRef, u64, bool)>> =
+            Mutex::new(Vec::with_capacity(jobs.len()));
+        let first_err: Mutex<Option<Error>> = Mutex::new(None);
+        // Ids claimed within this write: repeated content (zero pages, a
+        // replicated table) is compressed and stored once, and the other
+        // occurrences just take the reference. The scope joins every
+        // worker before the manifest is published, so a claim-skipped
+        // occurrence never references a chunk still being written.
+        let claimed: Mutex<BTreeSet<ChunkId>> = Mutex::new(BTreeSet::new());
+        let workers = opts.workers.clamp(1, jobs.len().max(1));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= jobs.len() {
+                            break;
+                        }
+                        let (si, ci, data) = jobs[i];
+                        let cref = ChunkRef::of(data);
+                        let owner = claimed.lock().expect("claim set").insert(cref.id);
+                        let stored = if owner {
+                            self.store_chunk(&cref, data, opts.gzip)
+                        } else {
+                            Ok((0, false))
+                        };
+                        match stored {
+                            Ok((written, was_new)) => {
+                                local.push((si, ci, cref, written, was_new))
+                            }
+                            Err(e) => {
+                                let mut g = first_err.lock().expect("pool error slot");
+                                if g.is_none() {
+                                    *g = Some(e);
+                                }
+                                break;
+                            }
+                        }
+                    }
+                    out.lock().expect("pool results").extend(local);
+                });
+            }
+        });
+        if let Some(e) = first_err.into_inner().expect("pool error slot") {
+            return Err(e);
+        }
+        Ok(out.into_inner().expect("pool results"))
+    }
+
+    /// Freshen an existing chunk's mtime (best-effort) so the GC grace
+    /// window protects *reused* chunks exactly like newly written ones — a
+    /// concurrent session's teardown GC must not reap a chunk between this
+    /// dedup decision and the manifest publish that re-references it.
+    /// Sanity-checks the file's magic while it is open: a truncated or
+    /// overwritten chunk file reads as absent, so the caller rewrites it
+    /// instead of silently referencing garbage across every generation
+    /// until the content changes. (Interior bit-rot is still caught at
+    /// read time by the per-chunk CRC; `full_image_every` anchors bound
+    /// how many generations one bad chunk can poison.)
+    /// Returns false when the chunk file is absent or visibly damaged.
+    fn refresh_chunk(&self, id: ChunkId) -> bool {
+        use std::io::Read as _;
+        let path = self.chunk_path(id);
+        match std::fs::OpenOptions::new().read(true).write(true).open(&path) {
+            Ok(mut f) => {
+                let mut magic = [0u8; 8];
+                if f.read_exact(&mut magic).is_err() || &magic != CHUNK_MAGIC {
+                    return false;
+                }
+                let now = std::time::SystemTime::now();
+                let _ = f.set_times(std::fs::FileTimes::new().set_modified(now));
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Store one chunk if absent (refreshing its mtime if present).
+    /// Returns `(bytes written, newly written)`. Publication uses a
+    /// writer-unique staging file, so cross-process writers of the same
+    /// content race only on the final rename — harmlessly, the bytes are
+    /// identical.
+    fn store_chunk(&self, cref: &ChunkRef, data: &[u8], gzip: bool) -> Result<(u64, bool)> {
+        if self.refresh_chunk(cref.id) {
+            return Ok((0, false));
+        }
+        let path = self.chunk_path(cref.id);
+        let mut file = Vec::with_capacity(data.len() / 2 + 16);
+        file.extend_from_slice(CHUNK_MAGIC);
+        if gzip {
+            file.push(CHUNK_FLAG_GZIP);
+            let mut enc = GzEncoder::new(file, Compression::fast());
+            enc.write_all(data)?;
+            file = enc.finish()?;
+        } else {
+            file.push(0);
+            file.extend_from_slice(data);
+        }
+        atomic_publish(&path, &file)?;
+        Ok((file.len() as u64, true))
+    }
+
+    /// Fetch and verify one chunk. Every failure mode — missing file, bad
+    /// magic, gzip damage, length or CRC mismatch — is [`Error::Corrupt`].
+    pub fn get_chunk(&self, cref: &ChunkRef) -> Result<Vec<u8>> {
+        let path = self.chunk_path(cref.id);
+        let bytes = std::fs::read(&path).map_err(|e| {
+            Error::Corrupt(format!(
+                "chunk {} missing from store {}: {e}",
+                cref.id.hex(),
+                self.root.display()
+            ))
+        })?;
+        if bytes.len() < CHUNK_MAGIC.len() + 1 || &bytes[..CHUNK_MAGIC.len()] != CHUNK_MAGIC {
+            return Err(Error::Corrupt(format!(
+                "chunk {}: bad chunk-file magic",
+                cref.id.hex()
+            )));
+        }
+        let flags = bytes[CHUNK_MAGIC.len()];
+        let payload = &bytes[CHUNK_MAGIC.len() + 1..];
+        let raw = if flags & CHUNK_FLAG_GZIP != 0 {
+            let mut dec = GzDecoder::new(payload);
+            let mut out = Vec::with_capacity(cref.raw_len as usize);
+            dec.read_to_end(&mut out).map_err(|e| {
+                Error::Corrupt(format!("chunk {}: gzip: {e}", cref.id.hex()))
+            })?;
+            out
+        } else {
+            payload.to_vec()
+        };
+        if raw.len() != cref.raw_len as usize {
+            return Err(Error::Corrupt(format!(
+                "chunk {}: length {} != manifest {}",
+                cref.id.hex(),
+                raw.len(),
+                cref.raw_len
+            )));
+        }
+        let got = crc32fast::hash(&raw);
+        if got != cref.raw_crc {
+            return Err(Error::Corrupt(format!(
+                "chunk {}: CRC mismatch: stored {:08x}, computed {got:08x}",
+                cref.id.hex(),
+                cref.raw_crc
+            )));
+        }
+        Ok(raw)
+    }
+
+    /// Reassemble a full [`CheckpointImage`] from a manifest, verifying
+    /// per-chunk and per-segment CRCs.
+    pub fn assemble(&self, manifest: &ImageManifest) -> Result<CheckpointImage> {
+        let mut segments = Vec::with_capacity(manifest.segments.len());
+        for s in &manifest.segments {
+            let mut data = Vec::with_capacity(s.raw_len as usize);
+            for c in &s.chunks {
+                data.extend_from_slice(&self.get_chunk(c)?);
+            }
+            let got = crc32fast::hash(&data);
+            if got != s.raw_crc {
+                return Err(Error::Corrupt(format!(
+                    "segment {:?}: CRC mismatch after reassembly: stored {:08x}, \
+                     computed {got:08x}",
+                    s.name, s.raw_crc
+                )));
+            }
+            segments.push((s.name.clone(), data));
+        }
+        Ok(CheckpointImage {
+            header: manifest.header.clone(),
+            segments,
+        })
+    }
+
+    /// Delete chunks referenced by no `*.dmtcp` manifest under `ckpt_dir`,
+    /// skipping chunks younger than `min_age` (grace window for a
+    /// concurrent writer that has stored — or refreshed, for dedup reuse —
+    /// chunks but not yet published the manifest that references them).
+    /// Unreadable images contribute no references (they cannot be restored
+    /// either way).
+    pub fn gc(&self, ckpt_dir: &Path, min_age: Duration) -> Result<GcStats> {
+        let mut stats = GcStats::default();
+        let mut live: BTreeSet<ChunkId> = BTreeSet::new();
+        if let Ok(entries) = std::fs::read_dir(ckpt_dir) {
+            for e in entries.flatten() {
+                let p = e.path();
+                if p.extension().map(|x| x == "dmtcp").unwrap_or(false) {
+                    if let Ok(Some(m)) = read_manifest_file(&p) {
+                        for s in &m.segments {
+                            live.extend(s.chunks.iter().map(|c| c.id));
+                        }
+                    }
+                }
+            }
+        }
+        stats.live = live.len() as u64;
+        let now = std::time::SystemTime::now();
+        let Ok(buckets) = std::fs::read_dir(&self.root) else {
+            return Ok(stats); // no store yet: nothing to reclaim
+        };
+        for bucket in buckets.flatten() {
+            let Ok(files) = std::fs::read_dir(bucket.path()) else {
+                continue;
+            };
+            for f in files.flatten() {
+                let p = f.path();
+                let Some(id) = p
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .and_then(ChunkId::from_hex)
+                else {
+                    // Crash debris: a staging file whose writer died before
+                    // the rename. Reap it once it is older than the grace
+                    // window; anything else is a stranger we leave alone.
+                    let stale_tmp = p
+                        .file_name()
+                        .and_then(|n| n.to_str())
+                        .map(|n| n.contains(".chunk.tmp."))
+                        .unwrap_or(false)
+                        && f.metadata()
+                            .ok()
+                            .and_then(|m| m.modified().ok())
+                            .and_then(|t| now.duration_since(t).ok())
+                            .map(|age| age >= min_age)
+                            .unwrap_or(false);
+                    if stale_tmp {
+                        let _ = std::fs::remove_file(&p);
+                    }
+                    continue;
+                };
+                stats.scanned += 1;
+                if live.contains(&id) {
+                    continue;
+                }
+                let meta = f.metadata().ok();
+                let young = meta
+                    .as_ref()
+                    .and_then(|m| m.modified().ok())
+                    .and_then(|t| now.duration_since(t).ok())
+                    .map(|age| age < min_age)
+                    .unwrap_or(true);
+                if min_age > Duration::ZERO && young {
+                    continue;
+                }
+                let len = meta.map(|m| m.len()).unwrap_or(0);
+                if std::fs::remove_file(&p).is_ok() {
+                    stats.deleted += 1;
+                    stats.deleted_bytes += len;
+                }
+            }
+        }
+        Ok(stats)
+    }
+}
+
+/// Parse an image file's manifest if it is v2; `Ok(None)` for v1 images.
+fn read_manifest_file(path: &Path) -> Result<Option<ImageManifest>> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::Image(format!("{}: {e}", path.display())))?;
+    let (version, _flags, body) = image::unframe(&bytes)?;
+    match version {
+        VERSION_MANIFEST => Ok(Some(ImageManifest::decode(body)?)),
+        _ => Ok(None),
+    }
+}
+
+/// Read a checkpoint image of either version: v1 full images decode
+/// standalone; v2 manifests reassemble from `<dir>/store/` next to the
+/// image file. This is what `CheckpointImage::read_file` and
+/// `dmtcp_restart` call.
+pub fn read_image_file(path: &Path) -> Result<CheckpointImage> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::Image(format!("{}: {e}", path.display())))?;
+    let (version, flags, body) = image::unframe(&bytes)?;
+    match version {
+        VERSION_FULL => CheckpointImage::from_unframed(flags, body),
+        VERSION_MANIFEST => {
+            let manifest = ImageManifest::decode(body)?;
+            let dir = path.parent().unwrap_or(Path::new("."));
+            ImageStore::for_images(dir).assemble(&manifest)
+        }
+        other => Err(Error::Image(format!("unsupported image version {other}"))),
+    }
+}
+
+/// Read only the header of an image of either version (the
+/// `dmtcp_restart --inspect` path) — v2 manifests need no chunk store for
+/// this, so inspection works even when the store is damaged.
+pub fn inspect_image_file(path: &Path) -> Result<ImageHeader> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::Image(format!("{}: {e}", path.display())))?;
+    let (version, flags, body) = image::unframe(&bytes)?;
+    match version {
+        VERSION_FULL => Ok(CheckpointImage::from_unframed(flags, body)?.header),
+        VERSION_MANIFEST => Ok(ImageManifest::decode(body)?.header),
+        other => Err(Error::Image(format!("unsupported image version {other}"))),
+    }
+}
+
+/// The image version (1 full, 2 manifest) of an image file, for tooling
+/// and tests.
+pub fn image_version(path: &Path) -> Result<u32> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| Error::Image(format!("{}: {e}", path.display())))?;
+    Ok(image::unframe(&bytes)?.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "ncr_store_{tag}_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_image(seed: u8) -> CheckpointImage {
+        CheckpointImage {
+            header: ImageHeader {
+                vpid: 40001,
+                name: "store_test".into(),
+                ckpt_id: 1,
+                ..Default::default()
+            },
+            segments: vec![
+                ("a".into(), vec![seed; 200_000]),
+                (
+                    "b".into(),
+                    (0..100_000u32).map(|i| (i % 251) as u8 ^ seed).collect(),
+                ),
+                ("empty".into(), Vec::new()),
+            ],
+        }
+    }
+
+    fn opts() -> StoreOpts {
+        StoreOpts {
+            chunk_size: 16 * 1024,
+            workers: 3,
+            gzip: true,
+        }
+    }
+
+    #[test]
+    fn chunk_id_deterministic_and_sensitive() {
+        let a = ChunkId::of(b"hello world");
+        assert_eq!(a, ChunkId::of(b"hello world"));
+        assert_ne!(a, ChunkId::of(b"hello worle"));
+        assert_ne!(ChunkId::of(b""), ChunkId::of(b"\0"));
+        assert_eq!(ChunkId::from_hex(&a.hex()), Some(a));
+        assert_eq!(ChunkId::from_hex("xyz"), None);
+    }
+
+    #[test]
+    fn incremental_roundtrip_bitwise() {
+        let d = dir("rt");
+        let store = ImageStore::for_images(&d);
+        let img = sample_image(7);
+        let path = d.join("g1.dmtcp");
+        let (manifest, stats) = store
+            .write_incremental(&img, &path, None, &opts())
+            .unwrap();
+        assert_eq!(manifest.raw_bytes(), img.raw_segment_bytes());
+        assert!(stats.chunks_written > 0);
+        assert_eq!(stats.logical_bytes, img.raw_segment_bytes());
+        let back = read_image_file(&path).unwrap();
+        assert_eq!(img, back);
+        assert_eq!(image_version(&path).unwrap(), VERSION_MANIFEST);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn second_generation_small_delta_dedups() {
+        let d = dir("delta");
+        let store = ImageStore::for_images(&d);
+        let img1 = sample_image(7);
+        let p1 = d.join("g1.dmtcp");
+        let (m1, s1) = store.write_incremental(&img1, &p1, None, &opts()).unwrap();
+        let prev: BTreeMap<String, SegmentManifest> = m1
+            .segments
+            .iter()
+            .map(|s| (s.name.clone(), s.clone()))
+            .collect();
+
+        // Touch one chunk's worth of one segment.
+        let mut img2 = img1.clone();
+        img2.segments[1].1[5] ^= 0xFF;
+        let p2 = d.join("g2.dmtcp");
+        let (_, s2) = store
+            .write_incremental(&img2, &p2, Some(&prev), &opts())
+            .unwrap();
+        assert!(
+            s2.chunks_written <= 1,
+            "one flipped byte should dirty at most one chunk, wrote {}",
+            s2.chunks_written
+        );
+        assert!(
+            s2.chunks_deduped > s2.chunks_written,
+            "most chunks should be reused: {s2:?}"
+        );
+        assert!(
+            s2.stored_bytes < s1.stored_bytes / 4,
+            "delta write should be far smaller: {} vs {}",
+            s2.stored_bytes,
+            s1.stored_bytes
+        );
+        // Both generations restore bitwise.
+        assert_eq!(read_image_file(&p1).unwrap(), img1);
+        assert_eq!(read_image_file(&p2).unwrap(), img2);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn unchanged_segments_reuse_manifests_without_store_io() {
+        let d = dir("clean");
+        let store = ImageStore::for_images(&d);
+        let img = sample_image(9);
+        let p1 = d.join("g1.dmtcp");
+        let (m1, _) = store.write_incremental(&img, &p1, None, &opts()).unwrap();
+        let prev: BTreeMap<String, SegmentManifest> = m1
+            .segments
+            .iter()
+            .map(|s| (s.name.clone(), s.clone()))
+            .collect();
+        let p2 = d.join("g2.dmtcp");
+        let (m2, s2) = store
+            .write_incremental(&img, &p2, Some(&prev), &opts())
+            .unwrap();
+        assert_eq!(s2.chunks_written, 0);
+        assert_eq!(s2.chunks_deduped, m1.n_chunks() as u64);
+        assert_eq!(m1.segments, m2.segments);
+        // Only the manifest file itself hit the disk.
+        assert!(s2.stored_bytes < 4096, "{}", s2.stored_bytes);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn missing_chunk_is_typed_corruption() {
+        let d = dir("missing");
+        let store = ImageStore::for_images(&d);
+        let img = sample_image(3);
+        let path = d.join("g.dmtcp");
+        let (manifest, _) = store.write_incremental(&img, &path, None, &opts()).unwrap();
+        let victim = manifest.segments[0].chunks[0];
+        std::fs::remove_file(store.chunk_path(victim.id)).unwrap();
+        match read_image_file(&path) {
+            Err(Error::Corrupt(msg)) => assert!(msg.contains("missing"), "{msg}"),
+            other => panic!("expected Error::Corrupt, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn bit_flipped_chunk_is_typed_corruption() {
+        let d = dir("flip");
+        let store = ImageStore::for_images(&d);
+        let img = sample_image(4);
+        let path = d.join("g.dmtcp");
+        let (manifest, _) = store.write_incremental(&img, &path, None, &opts()).unwrap();
+        let victim = store.chunk_path(manifest.segments[1].chunks[0].id);
+        let mut bytes = std::fs::read(&victim).unwrap();
+        let n = bytes.len();
+        bytes[n - 1] ^= 0x01; // trailer byte: survives gzip framing checks
+        std::fs::write(&victim, &bytes).unwrap();
+        match read_image_file(&path) {
+            Err(Error::Corrupt(_)) => {}
+            other => panic!("expected Error::Corrupt, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn gc_reclaims_only_unreferenced_chunks() {
+        let d = dir("gc");
+        let store = ImageStore::for_images(&d);
+        let img1 = sample_image(1);
+        let mut img2 = sample_image(1);
+        img2.segments[0].1 = vec![0x55; 200_000]; // gen2 rewrites segment a
+        let p1 = d.join("g1.dmtcp");
+        let p2 = d.join("g2.dmtcp");
+        store.write_incremental(&img1, &p1, None, &opts()).unwrap();
+        store.write_incremental(&img2, &p2, None, &opts()).unwrap();
+
+        // Both manifests present: nothing is unreferenced.
+        let none = store.gc(&d, Duration::ZERO).unwrap();
+        assert_eq!(none.deleted, 0);
+        assert!(none.live > 0);
+
+        // Drop gen1: its now-unique chunks become garbage; gen2 survives.
+        std::fs::remove_file(&p1).unwrap();
+        let swept = store.gc(&d, Duration::ZERO).unwrap();
+        assert!(swept.deleted > 0, "{swept:?}");
+        assert_eq!(read_image_file(&p2).unwrap(), img2);
+        // A huge grace window protects freshly written chunks.
+        std::fs::remove_file(&p2).unwrap();
+        let grace = store.gc(&d, Duration::from_secs(3600)).unwrap();
+        assert_eq!(grace.deleted, 0, "{grace:?}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn v1_images_read_through_the_same_entry_points() {
+        let d = dir("v1");
+        let img = sample_image(2);
+        let path = d.join("full.dmtcp");
+        img.write_file(&path, true).unwrap();
+        assert_eq!(image_version(&path).unwrap(), VERSION_FULL);
+        assert_eq!(read_image_file(&path).unwrap(), img);
+        assert_eq!(inspect_image_file(&path).unwrap(), img.header);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn inspect_does_not_need_the_store() {
+        let d = dir("inspect");
+        let store = ImageStore::for_images(&d);
+        let img = sample_image(6);
+        let path = d.join("g.dmtcp");
+        store.write_incremental(&img, &path, None, &opts()).unwrap();
+        std::fs::remove_dir_all(store.root()).unwrap();
+        assert_eq!(inspect_image_file(&path).unwrap(), img.header);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn uncompressed_chunks_roundtrip() {
+        let d = dir("nogz");
+        let store = ImageStore::for_images(&d);
+        let img = sample_image(8);
+        let path = d.join("g.dmtcp");
+        let o = StoreOpts {
+            gzip: false,
+            ..opts()
+        };
+        store.write_incremental(&img, &path, None, &o).unwrap();
+        assert_eq!(read_image_file(&path).unwrap(), img);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn truncated_manifest_rejected() {
+        let d = dir("trunc");
+        let store = ImageStore::for_images(&d);
+        let img = sample_image(5);
+        let path = d.join("g.dmtcp");
+        store.write_incremental(&img, &path, None, &opts()).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [0, 7, 12, bytes.len() / 2, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(read_image_file(&path).is_err(), "cut={cut} accepted");
+        }
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

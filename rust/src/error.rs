@@ -18,6 +18,12 @@ pub enum Error {
     /// Malformed or corrupt checkpoint image.
     Image(String),
 
+    /// Detected corruption in checkpoint storage: a chunk referenced by an
+    /// image manifest is missing from the content-addressed store, or its
+    /// bytes fail CRC/length verification. Restart paths surface this
+    /// instead of panicking or silently zero-filling state.
+    Corrupt(String),
+
     /// DMTCP coordinator protocol violations.
     Protocol(String),
 
@@ -47,6 +53,7 @@ impl fmt::Display for Error {
             Error::Backend(msg) => write!(f, "backend: {msg}"),
             Error::Io(err) => write!(f, "io: {err}"),
             Error::Image(msg) => write!(f, "checkpoint image: {msg}"),
+            Error::Corrupt(msg) => write!(f, "corrupt checkpoint storage: {msg}"),
             Error::Protocol(msg) => write!(f, "coordinator protocol: {msg}"),
             Error::Slurm(msg) => write!(f, "slurm: {msg}"),
             Error::Container(msg) => write!(f, "container: {msg}"),
@@ -95,6 +102,14 @@ mod tests {
         assert_eq!(
             Error::Image("bad".into()).to_string(),
             "checkpoint image: bad"
+        );
+    }
+
+    #[test]
+    fn corrupt_displays_prefix() {
+        assert_eq!(
+            Error::Corrupt("chunk gone".into()).to_string(),
+            "corrupt checkpoint storage: chunk gone"
         );
     }
 

@@ -34,6 +34,10 @@ pub struct SampledSeries {
     pub cpu: TimeSeries,
     /// Total steps done across processes.
     pub steps: TimeSeries,
+    /// Cumulative checkpoint bytes stored across processes (for full
+    /// images: file sizes; for incremental images: manifest + new chunks —
+    /// the flat-vs-steep contrast between the two pipelines).
+    pub ckpt_stored: TimeSeries,
 }
 
 impl LdmsSampler {
@@ -44,6 +48,7 @@ impl LdmsSampler {
             memory: TimeSeries::new("memory_bytes"),
             cpu: TimeSeries::new("cpu_util"),
             steps: TimeSeries::new("steps_done"),
+            ckpt_stored: TimeSeries::new("ckpt_stored_bytes"),
         }));
         let stop2 = Arc::clone(&stop);
         let out2 = Arc::clone(&out);
@@ -56,16 +61,19 @@ impl LdmsSampler {
                     let mut mem = 0u64;
                     let mut cpu = 0.0f64;
                     let mut steps = 0u64;
+                    let mut stored = 0u64;
                     for p in &procs {
                         mem += p.memory_bytes(BASE_PROCESS_OVERHEAD);
                         cpu += p.cpu_fraction();
                         steps += p.steps_done.load(Ordering::Relaxed);
+                        stored += p.ckpt_stored_bytes.load(Ordering::Relaxed);
                     }
                     {
                         let mut o = out2.lock().expect("ldms series poisoned");
                         o.memory.push(t, mem as f64);
                         o.cpu.push(t, cpu);
                         o.steps.push(t, steps as f64);
+                        o.ckpt_stored.push(t, stored as f64);
                     }
                     std::thread::sleep(interval);
                 }

@@ -1,4 +1,5 @@
-//! Report emitters shared by benches and examples: aligned tables and CSV.
+//! Report emitters shared by benches and examples: aligned tables, CSV,
+//! bench-smoke scaling and the JSON metric emitter CI archives.
 
 /// A simple aligned-column table builder.
 #[derive(Debug, Default, Clone)]
@@ -79,6 +80,63 @@ impl Table {
     }
 }
 
+/// True when `BENCH_SMOKE` is set (and not `0`): benches run at a tiny
+/// scale so CI can execute every bench on every push — a perf-report
+/// *code* regression (panic, shape violation, broken emitter) cannot land
+/// silently even though smoke timings themselves are meaningless.
+pub fn bench_smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+}
+
+/// `full` normally, `smoke` under `BENCH_SMOKE=1`.
+pub fn smoke_scaled(full: usize, smoke: usize) -> usize {
+    if bench_smoke() {
+        smoke
+    } else {
+        full
+    }
+}
+
+/// Write a bench's headline metrics as JSON to
+/// `$BENCH_JSON_DIR/<bench>.json` (default `target/bench-json/`), for the
+/// CI artifact upload. Non-finite values serialize as `null`.
+pub fn emit_bench_json(
+    bench: &str,
+    metrics: &[(&str, f64)],
+) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| "target/bench-json".into());
+    write_bench_json(std::path::Path::new(&dir), bench, metrics)
+}
+
+/// [`emit_bench_json`] with an explicit output directory (the env-free
+/// core, also what the unit test drives).
+fn write_bench_json(
+    dir: &std::path::Path,
+    bench: &str,
+    metrics: &[(&str, f64)],
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let mut json = format!(
+        "{{\n  \"bench\": \"{}\",\n  \"smoke\": {},\n  \"metrics\": {{\n",
+        esc(bench),
+        bench_smoke()
+    );
+    for (i, (k, v)) in metrics.iter().enumerate() {
+        let val = if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".into()
+        };
+        let comma = if i + 1 == metrics.len() { "" } else { "," };
+        json.push_str(&format!("    \"{}\": {val}{comma}\n", esc(k)));
+    }
+    json.push_str("  }\n}\n");
+    let path = dir.join(format!("{bench}.json"));
+    std::fs::write(&path, json)?;
+    Ok(path)
+}
+
 /// Format bytes human-readably.
 pub fn human_bytes(b: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
@@ -131,5 +189,17 @@ mod tests {
     fn row_arity_checked() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let dir = std::env::temp_dir().join(format!("ncr_benchjson_{}", std::process::id()));
+        let p = write_bench_json(&dir, "unit_test", &[("a", 1.5), ("b", f64::NAN)]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("\"bench\": \"unit_test\""), "{s}");
+        assert!(s.contains("\"a\": 1.5"), "{s}");
+        assert!(s.contains("\"b\": null"), "{s}");
+        assert!(!s.contains("NaN"), "{s}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,364 @@
+//! The incremental (content-addressed) checkpoint pipeline, end to end:
+//! session-level bit-identical restart on bare *and* container substrates,
+//! the full-every-N image cadence through the real checkpoint thread, the
+//! chunk accounting through the coordinator, and the corruption contract —
+//! a truncated or bit-flipped image, or a store missing a referenced
+//! chunk, surfaces as a typed error through `dmtcp_restart`, never a panic
+//! or silent zero-fill.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use nersc_cr::container::{Image, PodmanHpc, Registry, RunSpec, EMBED_DMTCP_SNIPPET};
+use nersc_cr::cr::{CrApp, CrPolicy, CrSession, CrStrategy, Substrate};
+use nersc_cr::dmtcp::store::image_version;
+use nersc_cr::dmtcp::{
+    dmtcp_launch, dmtcp_restart, Checkpointable, Coordinator, CoordinatorConfig, GateVerdict,
+    LaunchSpec, PluginRegistry,
+};
+use nersc_cr::workload::Cp2kApp;
+use nersc_cr::Error;
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ncr_incr_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A state with a large stable segment and a small hot one — the
+/// small-delta workload the incremental pipeline exists for.
+struct SplitState {
+    stable: Vec<u8>,
+    hot: Vec<u8>,
+    ticks: u64,
+}
+
+impl SplitState {
+    fn new() -> Self {
+        Self {
+            stable: (0..300_000u32).map(|i| (i % 241) as u8).collect(),
+            hot: vec![0u8; 4_096],
+            ticks: 0,
+        }
+    }
+
+    fn tick(&mut self) {
+        self.ticks += 1;
+        let n = self.hot.len() as u64;
+        self.hot[(self.ticks % n) as usize] = self.ticks as u8;
+    }
+}
+
+impl Checkpointable for SplitState {
+    fn segments(&self) -> Vec<(String, Vec<u8>)> {
+        vec![
+            ("stable".into(), self.stable.clone()),
+            ("hot".into(), self.hot.clone()),
+            ("ticks".into(), self.ticks.to_le_bytes().to_vec()),
+        ]
+    }
+    fn restore(&mut self, segs: &[(String, Vec<u8>)]) -> nersc_cr::Result<()> {
+        for (name, data) in segs {
+            match name.as_str() {
+                "stable" => self.stable = data.clone(),
+                "hot" => self.hot = data.clone(),
+                "ticks" => self.ticks = u64::from_le_bytes(data.as_slice().try_into().unwrap()),
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+    fn steps_done(&self) -> u64 {
+        self.ticks
+    }
+}
+
+/// Launch one SplitState process under `coord` with the incremental env
+/// knobs, let it tick a bit, and return the launch + state handles.
+fn launch_split(
+    coord: &Coordinator,
+    full_every: &str,
+) -> (nersc_cr::dmtcp::LaunchedProcess, Arc<Mutex<SplitState>>) {
+    let state = Arc::new(Mutex::new(SplitState::new()));
+    let spec = LaunchSpec::new("split", coord.addr())
+        .env("DMTCP_INCREMENTAL", "1")
+        .env("DMTCP_FULL_EVERY", full_every);
+    let mut launched = dmtcp_launch(spec, Arc::clone(&state), PluginRegistry::new());
+    {
+        let st = Arc::clone(&state);
+        launched.process.spawn_user_thread(move |ctx| loop {
+            if ctx.ckpt_point() == GateVerdict::Exit {
+                break;
+            }
+            st.lock().unwrap().tick();
+            std::thread::sleep(Duration::from_micros(200));
+        });
+    }
+    launched.wait_attached(Duration::from_secs(5)).unwrap();
+    (launched, state)
+}
+
+#[test]
+fn full_every_n_alternates_image_versions_and_dedups() {
+    let wd = workdir("cadence");
+    let ckpt_dir = wd.join("ckpt");
+    let coord = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: ckpt_dir.clone(),
+        command_file_dir: wd.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+    let (launched, _state) = launch_split(&coord, "3");
+
+    // Checkpoint 0: index 0 % 3 == 0 -> forced full (v1).
+    let i0 = coord.checkpoint_all().unwrap();
+    assert_eq!(image_version(&i0[0].path).unwrap(), 1, "ckpt 0 should be full");
+    assert_eq!(i0[0].chunks_written + i0[0].chunks_deduped, 0);
+
+    // Checkpoint 1: the first incremental seeds the store (every chunk is
+    // new — a full image preceded it, so there is nothing to dedup yet).
+    let i1 = coord.checkpoint_all().unwrap();
+    assert_eq!(image_version(&i1[0].path).unwrap(), 2, "ckpt 1 should be incremental");
+    assert!(i1[0].chunks_written > 0, "{:?}", i1[0]);
+
+    // Checkpoint 2: the steady state — only the hot segment's delta is
+    // stored; the big stable segment rides on dirty tracking + dedup.
+    let i2 = coord.checkpoint_all().unwrap();
+    assert_eq!(image_version(&i2[0].path).unwrap(), 2, "ckpt 2 should be incremental");
+    assert!(i2[0].chunks_deduped > 0, "{:?}", i2[0]);
+    assert!(
+        i2[0].stored_bytes < i1[0].stored_bytes / 2,
+        "steady-state incremental must store far less: {} vs {}",
+        i2[0].stored_bytes,
+        i1[0].stored_bytes
+    );
+    assert!(
+        i2[0].stored_bytes < i0[0].stored_bytes / 2,
+        "steady-state incremental must beat the full image: {} vs {}",
+        i2[0].stored_bytes,
+        i0[0].stored_bytes
+    );
+
+    // Restore the v2 image through dmtcp_restart (before the next full
+    // anchor overwrites the file) and compare bitwise against what the
+    // image on disk froze.
+    let frozen = nersc_cr::dmtcp::CheckpointImage::read_file(&i2[0].path).unwrap();
+    let coord2 = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: wd.join("c2"),
+        command_file_dir: wd.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+    let shell = Arc::new(Mutex::new(SplitState::new()));
+    let r = dmtcp_restart(&i2[0].path, coord2.addr(), Arc::clone(&shell), PluginRegistry::new())
+        .unwrap();
+    assert_eq!(shell.lock().unwrap().ticks, r.header.steps_done);
+    assert_eq!(shell.lock().unwrap().segments(), frozen.segments);
+    coord2.kill_all();
+    let _ = r.launched.join();
+
+    // Checkpoint 3: back to a forced full anchor.
+    let i3 = coord.checkpoint_all().unwrap();
+    assert_eq!(image_version(&i3[0].path).unwrap(), 1, "ckpt 3 should be full again");
+
+    // Coordinator-level accounting saw the chunk traffic.
+    let totals = coord.store_totals();
+    assert_eq!(totals.images_written, 4);
+    assert!(totals.chunks_written > 0 && totals.chunks_deduped > 0);
+    coord.kill_all();
+    let _ = launched.join();
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+fn first_chunk_file(store_root: &Path) -> PathBuf {
+    for bucket in std::fs::read_dir(store_root).unwrap().flatten() {
+        if bucket.path().is_dir() {
+            for f in std::fs::read_dir(bucket.path()).unwrap().flatten() {
+                if f.path().extension().map(|x| x == "chunk").unwrap_or(false) {
+                    return f.path();
+                }
+            }
+        }
+    }
+    panic!("no chunk files under {}", store_root.display());
+}
+
+#[test]
+fn restart_from_damaged_incremental_image_is_typed_error() {
+    let wd = workdir("damage");
+    let ckpt_dir = wd.join("ckpt");
+    let coord = Coordinator::start(CoordinatorConfig {
+        ckpt_dir: ckpt_dir.clone(),
+        command_file_dir: wd.clone(),
+        ..Default::default()
+    })
+    .unwrap();
+    let (launched, _state) = launch_split(&coord, "0");
+    let images = coord.checkpoint_all().unwrap();
+    let image = images[0].path.clone();
+    assert_eq!(image_version(&image).unwrap(), 2);
+    coord.kill_all();
+    let _ = launched.join();
+
+    let restart_err = |tag: &str| -> Error {
+        let c = Coordinator::start(CoordinatorConfig {
+            ckpt_dir: wd.join(tag),
+            command_file_dir: wd.clone(),
+            ..Default::default()
+        })
+        .unwrap();
+        let shell = Arc::new(Mutex::new(SplitState::new()));
+        match dmtcp_restart(&image, c.addr(), shell, PluginRegistry::new()) {
+            Err(e) => e,
+            Ok(r) => {
+                c.kill_all();
+                let _ = r.launched.join();
+                panic!("{tag}: damaged image accepted");
+            }
+        }
+    };
+    let pristine = std::fs::read(&image).unwrap();
+
+    // Truncated manifest.
+    std::fs::write(&image, &pristine[..pristine.len() / 2]).unwrap();
+    let err = restart_err("c_trunc");
+    assert!(
+        matches!(err, Error::Image(_) | Error::Corrupt(_)),
+        "truncated image: wrong error: {err}"
+    );
+
+    // Bit-flipped manifest.
+    let mut flipped = pristine.clone();
+    let mid = flipped.len() / 2;
+    flipped[mid] ^= 0x20;
+    std::fs::write(&image, &flipped).unwrap();
+    let err = restart_err("c_flip");
+    assert!(
+        matches!(err, Error::Image(_) | Error::Corrupt(_)),
+        "bit-flipped image: wrong error: {err}"
+    );
+
+    // Pristine manifest, but the store lost a referenced chunk.
+    std::fs::write(&image, &pristine).unwrap();
+    let victim = first_chunk_file(&ckpt_dir.join("store"));
+    std::fs::remove_file(&victim).unwrap();
+    match restart_err("c_missing") {
+        Error::Corrupt(msg) => assert!(msg.contains("missing"), "{msg}"),
+        other => panic!("missing chunk: expected Error::Corrupt, got {other}"),
+    }
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// Build a podman-hpc execution context with DMTCP embedded and the
+/// checkpoint volume mapped (the paper's containerized-C/R preconditions).
+fn podman_substrate(wd: &Path) -> Substrate {
+    let mut registry = Registry::new();
+    registry.push(Image::base("my_application_container", "latest", 64 << 20));
+    let mut pm = PodmanHpc::new();
+    pm.build("incrcr", "v1", EMBED_DMTCP_SNIPPET, &registry).unwrap();
+    pm.migrate("incrcr:v1").unwrap();
+    let spec = RunSpec::default()
+        .volume(wd.join("ckpt").to_string_lossy(), "/ckpt")
+        .env("DMTCP_CHECKPOINT_DIR", "/ckpt");
+    Substrate::container(pm.run("incrcr:v1", spec).unwrap())
+}
+
+/// The acceptance cell: a preempted auto session with incremental
+/// checkpoints restores bit-identically — on the given substrate.
+fn run_incremental_cell(sub_name: &str) {
+    let wd = workdir(&format!("cell_{sub_name}"));
+    let sub = match sub_name {
+        "bare" => Substrate::bare(),
+        "podman-hpc" => podman_substrate(&wd),
+        other => panic!("unknown substrate {other}"),
+    };
+    let app = Cp2kApp::new(16);
+    let target = 2_000u64;
+    let policy = CrPolicy {
+        ckpt_interval: Duration::from_millis(25),
+        preempt_after: vec![Duration::from_millis(60)],
+        requeue_delay: Duration::from_millis(10),
+        incremental_ckpt: true,
+        full_image_every: 3,
+        ..Default::default()
+    };
+    let report = CrSession::builder(&app)
+        .substrate(sub)
+        .strategy(CrStrategy::Auto(policy))
+        .workdir(&wd)
+        .target_steps(target)
+        .seed(4242)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(report.completed, "{sub_name}: did not complete");
+    app.verify_final(&report.final_state, target, 4242)
+        .unwrap_or_else(|e| panic!("{sub_name}: {e}"));
+    assert!(
+        report.checkpoints == 0 || report.total_image_bytes > 0,
+        "{sub_name}: checkpoint accounting missing"
+    );
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn incremental_session_bare_bitwise() {
+    run_incremental_cell("bare");
+}
+
+#[test]
+fn incremental_session_podman_bitwise() {
+    run_incremental_cell("podman-hpc");
+}
+
+#[test]
+fn manual_incremental_session_restarts_from_v2_images() {
+    // Manual strategy with builder-level incremental images: checkpoint,
+    // kill, resubmit from a v2 manifest, complete bit-identically, then
+    // finish() — which garbage-collects the store.
+    let wd = workdir("chain");
+    let app = Cp2kApp::new(12);
+    let mut session = CrSession::builder(&app)
+        .strategy(CrStrategy::Manual)
+        .incremental_images(0)
+        .workdir(&wd)
+        .target_steps(4_000)
+        .seed(99)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while session.monitor().unwrap().steps_done == 0 {
+        assert!(std::time::Instant::now() < deadline, "no progress");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let images = session.checkpoint_now().unwrap();
+    assert_eq!(images.len(), 1);
+    assert_eq!(
+        image_version(&images[0]).unwrap(),
+        2,
+        "manual + incremental_images must mint v2 manifests"
+    );
+    session.kill().unwrap();
+    let resumed = session.resubmit_from_checkpoint().unwrap();
+    assert!(resumed > 0);
+    let fin = session.wait_done(Duration::from_secs(60)).unwrap();
+    assert!(fin.done);
+    let final_state = session.final_state().unwrap();
+    session.verify_final(&final_state).unwrap();
+    session.finish();
+    // The store exists (chunks were written) and survived GC's grace
+    // window; referenced chunks are still restorable.
+    let store_root = wd.join("ckpt").join("store");
+    assert!(store_root.exists(), "store never materialized");
+    std::fs::remove_dir_all(&wd).ok();
+}

@@ -2,8 +2,7 @@
 //! (§V.B.2) strategies drive the *real* pipeline through one `CrSession`
 //! API — transport compute, TCP coordinator, checkpoint images on disk,
 //! restart — and the result is bit-identical to an uninterrupted run.
-//! This is the paper's §VI robustness claim as an executable test, plus
-//! the deprecation-shim contracts for the legacy entry points.
+//! This is the paper's §VI robustness claim as an executable test.
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -181,77 +180,6 @@ fn manual_cr_flow_bitwise() {
 
     let want = reference_run(&h, &app, target, 99);
     assert_eq!(final_state.particles, want);
-    std::fs::remove_dir_all(&wd).ok();
-}
-
-#[test]
-#[allow(deprecated)]
-fn run_auto_shim_returns_the_same_report() {
-    // The deprecated entry point must produce the same `CrReport` as the
-    // session it wraps: same completion, same physics, same incarnation
-    // count (separate workdirs — sessions are filesystem-scoped).
-    let h = handle();
-    let app = G4App::build(
-        WorkloadKind::EmCalorimeter,
-        G4Version::V10_7,
-        h.manifest().grid_d,
-    );
-    let target = 6 * h.manifest().scan_steps as u64;
-    let policy = CrPolicy::default();
-
-    let wd_shim = workdir("shim");
-    let shim = nersc_cr::cr::run_auto(&app, &h, target, 7, &policy, &wd_shim).unwrap();
-
-    let wd_sess = workdir("shim_sess");
-    let sess = CrSession::builder(&app)
-        .strategy(CrStrategy::Auto(policy))
-        .workdir(&wd_sess)
-        .target_steps(target)
-        .seed(7)
-        .build()
-        .unwrap()
-        .run()
-        .unwrap();
-
-    assert!(shim.completed && sess.completed);
-    assert_eq!(shim.incarnations, sess.incarnations);
-    assert_eq!(shim.final_state.particles, sess.final_state.particles);
-    assert_eq!(
-        shim.final_state.particles,
-        reference_run(&h, &app, target, 7)
-    );
-    std::fs::remove_dir_all(&wd_shim).ok();
-    std::fs::remove_dir_all(&wd_sess).ok();
-}
-
-#[test]
-#[allow(deprecated)]
-fn manual_cr_shim_still_drives_the_five_steps() {
-    let h = handle();
-    let app = G4App::build(
-        WorkloadKind::WaterPhantom,
-        G4Version::V10_7,
-        h.manifest().grid_d,
-    );
-    let target = 24 * h.manifest().scan_steps as u64;
-    let wd = workdir("manual_shim");
-
-    let mut mcr = nersc_cr::cr::ManualCr::new(&app, h.clone(), wd.clone(), target, 41);
-    mcr.submit().unwrap();
-    let deadline = std::time::Instant::now() + Duration::from_secs(30);
-    while mcr.monitor().unwrap().steps_done == 0 {
-        assert!(std::time::Instant::now() < deadline, "no progress");
-        std::thread::sleep(Duration::from_millis(5));
-    }
-    mcr.checkpoint_now().unwrap();
-    mcr.kill().unwrap();
-    let resumed = mcr.resubmit_from_checkpoint().unwrap();
-    assert!(resumed > 0);
-    let fin = mcr.wait_done(Duration::from_secs(60)).unwrap();
-    assert!(fin.done && fin.alive_particles <= h.manifest().batch);
-    let final_state = mcr.final_state().unwrap();
-    mcr.finish();
-    assert_eq!(final_state.particles, reference_run(&h, &app, target, 41));
     std::fs::remove_dir_all(&wd).ok();
 }
 
