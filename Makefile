@@ -20,6 +20,7 @@ bench:
 	cargo bench --bench fig4_cr_timeseries
 	cargo bench --bench results_matrix
 	cargo bench --bench incremental_ckpt
+	cargo bench --bench campaign_sweep
 
 # AOT-lower the L2 model to HLO text for the PJRT backend (needs jax).
 artifacts:

@@ -1,121 +1,79 @@
-//! Preemptible-queue campaign on the batch-scheduler simulator.
+//! Preemptible-queue campaign on the batch-scheduler simulator — a thin
+//! driver over the `campaign::sim` fleet harness.
 //!
 //! The paper's operational argument (§II): C/R lets an HPC center backfill
 //! a preemptable queue around urgent/realtime work, improving node
 //! utilization without losing science. This example runs the same
 //! 24-hour cluster trace three times — preemptable jobs without C/R, with
 //! checkpoint-only, and with checkpoint-restart — and reports utilization,
-//! completed work, and lost work.
+//! completed work, and lost work. The fleet construction, seeding and
+//! accounting all live in [`nersc_cr::campaign::sim`]; this file only
+//! declares the three strategies and renders the table.
 //!
 //! ```text
 //! cargo run --release --example preemptible_queue
 //! ```
 
+use nersc_cr::campaign::{run_fleet_sim, SimFleetOutcome, SimFleetSpec, UrgentLoad};
 use nersc_cr::report::Table;
 use nersc_cr::simclock::SimTime;
-use nersc_cr::slurm::{CrMode, JobSpec, JobState, Partition, Signal, SlurmSim};
-use nersc_cr::util::rng::SplitMix64;
+use nersc_cr::slurm::{CrMode, Signal};
 
 const NODES: usize = 32;
 const HORIZON: SimTime = 24 * 3_600;
 
-struct Outcome {
-    label: &'static str,
-    utilization: f64,
-    science_done: usize,
-    science_total: usize,
-    work_lost_h: f64,
-    urgent_wait_mean_s: f64,
-}
-
-fn campaign(label: &'static str, cr: CrMode, requeue: bool) -> Outcome {
-    let mut s = SlurmSim::new(NODES, Partition::standard_set());
-    let mut rng = SplitMix64::new(7);
-
-    // The science backlog: 60 long preemptable jobs.
-    let mut science = Vec::new();
-    for i in 0..60 {
-        let id = s
-            .submit_at(
-                JobSpec {
-                    name: format!("science{i}"),
-                    partition: "preempt".into(),
-                    nodes: 1 + (rng.gen_range(4)) as u32,
-                    work_total: 3_600 + rng.gen_range(4 * 3_600),
-                    time_limit: 12 * 3_600,
-                    time_min: Some(1_800),
-                    signal: Some((Signal::Usr1, 120)),
-                    requeue,
-                    comment: String::new(),
-                    cr,
-                },
-                rng.gen_range(1_800),
-            )
-            .unwrap();
-        science.push(id);
-    }
-    // Urgent/realtime bursts arriving all day (the light-source beamtime
-    // pattern the NERSC superfacility serves).
-    let mut urgent = Vec::new();
-    for k in 0..30 {
-        let id = s
-            .submit_at(
-                JobSpec {
-                    name: format!("urgent{k}"),
-                    partition: "realtime".into(),
-                    nodes: 4 + (rng.gen_range(9)) as u32,
-                    work_total: 900 + rng.gen_range(1_800),
-                    time_limit: 3 * 3_600,
-                    ..Default::default()
-                },
-                rng.gen_range(HORIZON / 2),
-            )
-            .unwrap();
-        urgent.push(id);
-    }
-
-    s.run(HORIZON);
-    let done = science
-        .iter()
-        .filter(|id| s.job(**id).unwrap().state == JobState::Completed)
-        .count();
-    let lost: SimTime = science.iter().map(|id| s.job(*id).unwrap().work_lost).sum();
-    let waits: Vec<f64> = urgent
-        .iter()
-        .filter_map(|id| {
-            let j = s.job(*id).unwrap();
-            j.start_time.map(|st| (st - j.submit_time) as f64)
-        })
-        .collect();
-    Outcome {
-        label,
-        utilization: s.utilization(),
-        science_done: done,
-        science_total: science.len(),
-        work_lost_h: lost as f64 / 3_600.0,
-        urgent_wait_mean_s: if waits.is_empty() {
-            0.0
-        } else {
-            waits.iter().sum::<f64>() / waits.len() as f64
-        },
+/// The shared 24-hour trace: 60 long preemptable science jobs plus 30
+/// urgent/realtime bursts (the light-source beamtime pattern the NERSC
+/// superfacility serves). Only the C/R strategy varies between runs.
+fn spec(cr: CrMode, requeue: bool) -> SimFleetSpec {
+    SimFleetSpec {
+        nodes: NODES,
+        n_jobs: 60,
+        nodes_max: 4,
+        work_min: 3_600,
+        work_spread: 4 * 3_600,
+        time_limit: 12 * 3_600,
+        time_min: Some(1_800),
+        signal: Some((Signal::Usr1, 120)),
+        requeue,
+        cr,
+        submit_spread: 1_800,
+        horizon: HORIZON,
+        seed: 7,
+        urgent: Some(UrgentLoad {
+            n: 30,
+            nodes_min: 4,
+            nodes_spread: 9,
+            work_min: 900,
+            work_spread: 1_800,
+            time_limit: 3 * 3_600,
+            window: HORIZON / 2,
+        }),
+        grace_override: None,
     }
 }
 
 fn main() {
     nersc_cr::logging::init();
-    println!("== preemptible-queue campaign: {NODES} nodes, 24 h, 60 science + 30 urgent jobs ==\n");
+    println!(
+        "== preemptible-queue campaign: {NODES} nodes, 24 h, 60 science + 30 urgent jobs ==\n"
+    );
 
-    let runs = [
-        campaign("no C/R", CrMode::None, false),
-        campaign(
+    let runs: Vec<(&str, SimFleetOutcome)> = vec![
+        ("no C/R", run_fleet_sim(&spec(CrMode::None, false))),
+        (
             "checkpoint-only",
-            CrMode::CheckpointOnly { interval: 900, overhead: 8 },
-            true,
+            run_fleet_sim(&spec(
+                CrMode::CheckpointOnly { interval: 900, overhead: 8 },
+                true,
+            )),
         ),
-        campaign(
+        (
             "checkpoint-restart",
-            CrMode::CheckpointRestart { interval: 900, overhead: 8 },
-            true,
+            run_fleet_sim(&spec(
+                CrMode::CheckpointRestart { interval: 900, overhead: 8 },
+                true,
+            )),
         ),
     ];
 
@@ -126,32 +84,34 @@ fn main() {
         "work lost (h)",
         "urgent wait (s)",
     ]);
-    for r in &runs {
+    for (label, r) in &runs {
         t.row(&[
-            r.label.to_string(),
+            label.to_string(),
             format!("{:.1}%", r.utilization * 100.0),
-            format!("{}/{}", r.science_done, r.science_total),
-            format!("{:.1}", r.work_lost_h),
-            format!("{:.0}", r.urgent_wait_mean_s),
+            format!("{}/{}", r.completed, r.n_jobs),
+            format!("{:.1}", r.work_lost as f64 / 3_600.0),
+            format!("{:.0}", r.urgent_wait_mean),
         ]);
     }
     println!("{}", t.render());
 
-    let (none, cr) = (&runs[0], &runs[2]);
+    let (none, cr) = (&runs[0].1, &runs[2].1);
+    let none_lost_h = none.work_lost as f64 / 3_600.0;
+    let cr_lost_h = cr.work_lost as f64 / 3_600.0;
     println!(
         "checkpoint-restart completed {}x the science of no-C/R and cut lost work {:.0}x \
          (paper §II: preemption + requeue without restarting from scratch).",
-        if none.science_done == 0 {
-            cr.science_done as f64
+        if none.completed == 0 {
+            cr.completed as f64
         } else {
-            cr.science_done as f64 / none.science_done as f64
+            cr.completed as f64 / none.completed as f64
         },
-        if cr.work_lost_h == 0.0 {
-            none.work_lost_h.max(1.0)
+        if cr_lost_h == 0.0 {
+            none_lost_h.max(1.0)
         } else {
-            none.work_lost_h / cr.work_lost_h
+            none_lost_h / cr_lost_h
         }
     );
-    assert!(cr.science_done >= none.science_done);
-    assert!(cr.work_lost_h <= none.work_lost_h);
+    assert!(cr.completed >= none.completed);
+    assert!(cr.work_lost <= none.work_lost);
 }

@@ -1,0 +1,174 @@
+//! Campaign efficiency vs checkpoint interval: the Young/Daly ablation,
+//! self-checking.
+//!
+//! Part 1 (simulator): sweep a grid of fixed checkpoint intervals through
+//! the seeded hard-kill preemption lab on the `slurm` simulator and
+//! compare against the Young/Daly interval computed from the same
+//! `(ckpt_cost, MTBF)` — Daly must waste strictly less than the worst
+//! fixed interval and land within tolerance of the brute-force optimum.
+//!
+//! Part 2 (live stack): run a real fleet campaign — concurrent
+//! `CrSession`s, injected kills, Daly-tuned cadence from *measured*
+//! checkpoint costs — and require every session to complete bit-identical
+//! to its failure-free reference.
+//!
+//! Run: `cargo bench --bench campaign_sweep`
+
+use std::time::Duration;
+
+use nersc_cr::campaign::{
+    averaged_lab, brute_force_optimal, run_campaign, young_daly_interval_secs, CampaignSpec,
+    FaultPlan, IntervalPolicy, SessionDisposition, SWEEP_GRID,
+};
+use nersc_cr::report::{bench_smoke, emit_bench_json, smoke_scaled, Table};
+use nersc_cr::simclock::SimTime;
+
+/// Trace seeds averaged per grid point (single hard-kill traces are
+/// noisy at long MTBFs; see `campaign::tune::averaged_lab`).
+const ROUNDS: u32 = 3;
+
+fn main() {
+    nersc_cr::logging::init();
+    let (ckpt_cost, mtbf, seed): (SimTime, SimTime, u64) = (12, 2_000, 424_242);
+    println!(
+        "== campaign sweep: efficiency vs checkpoint interval \
+         (hard kills, cost {ckpt_cost} s, MTBF {mtbf} s) ==\n"
+    );
+
+    // --- Part 1: fixed-interval grid vs Daly on the simulator ----------
+    let grid: &[SimTime] = if bench_smoke() {
+        &[30, 600, 4_800]
+    } else {
+        &SWEEP_GRID
+    };
+    let (best_iv, best_waste, sweep) = brute_force_optimal(ckpt_cost, mtbf, seed, grid, ROUNDS);
+    let daly_iv = young_daly_interval_secs(ckpt_cost as f64, mtbf as f64).round() as SimTime;
+    let daly = averaged_lab(daly_iv, ckpt_cost, mtbf, seed, ROUNDS);
+    let (daly_waste, daly_lost) = (daly.waste, daly.lost);
+
+    let mut t = Table::new(&[
+        "interval (s)",
+        "work lost (s)",
+        "ckpt overhead (s)",
+        "waste (s)",
+        "completed",
+    ]);
+    for p in &sweep {
+        t.row(&[
+            p.interval.to_string(),
+            format!("{:.0}", p.lost),
+            format!("{:.0}", p.overhead),
+            format!("{:.0}", p.waste),
+            format!("{}/{}", p.completed_min, p.n_jobs),
+        ]);
+    }
+    t.row(&[
+        format!("{daly_iv} (daly)"),
+        format!("{daly_lost:.0}"),
+        format!("{:.0}", daly.overhead),
+        format!("{daly_waste:.0}"),
+        format!("{}/{}", daly.completed_min, daly.n_jobs),
+    ]);
+    println!("{}", t.render());
+
+    let worst_waste = sweep.iter().map(|p| p.waste).fold(0.0, f64::max);
+    let worst_lost = sweep.iter().map(|p| p.lost).fold(0.0, f64::max);
+    println!(
+        "brute-force optimum: {best_iv} s (waste {best_waste:.0} s); daly: {daly_iv} s \
+         (waste {daly_waste:.0} s, {:.2}x optimum)\n",
+        daly_waste / best_waste.max(1.0)
+    );
+
+    // --- Part 2: the live fleet, Daly-tuned from measured costs --------
+    let sessions = smoke_scaled(16, 4) as u32;
+    let spec = CampaignSpec {
+        name: "sweep-live".into(),
+        sessions,
+        concurrency: 4,
+        target_steps: 800,
+        seed: 10_000,
+        interval: IntervalPolicy::Daly {
+            cost_prior: Duration::from_millis(4),
+        },
+        faults: FaultPlan::exponential(Duration::from_millis(60), 2),
+        straggler_timeout: Duration::from_secs(180),
+        ..Default::default()
+    };
+    let report = run_campaign(&spec).expect("live campaign");
+    println!("live Daly-tuned fleet:\n{}", report.summary_table().render());
+
+    let live_completed = report.completed();
+    let live_verified = report.verified();
+    let tuned_ms = report
+        .sessions
+        .iter()
+        .map(|s| s.final_interval_ms)
+        .max()
+        .unwrap_or(0);
+
+    let mut ok = true;
+    for (name, pass) in [
+        (
+            "daly wastes strictly less than the worst fixed interval",
+            daly_waste < worst_waste,
+        ),
+        (
+            "daly loses strictly less work than the worst fixed interval",
+            daly_lost < worst_lost,
+        ),
+        (
+            "daly within 1.8x of the brute-force optimum",
+            daly_waste <= best_waste * 1.8 + 300.0,
+        ),
+        (
+            "daly completes the whole simulated fleet (every trace seed)",
+            daly.completed_min == daly.n_jobs,
+        ),
+        (
+            "live fleet fully completed",
+            live_completed == sessions as usize,
+        ),
+        (
+            "live fleet fully bit-identical",
+            live_verified == sessions as usize,
+        ),
+        (
+            "live tuner produced a finite interval",
+            tuned_ms > 0,
+        ),
+    ] {
+        println!("  [{}] {name}", if pass { "PASS" } else { "FAIL" });
+        ok &= pass;
+    }
+
+    if let Ok(p) = emit_bench_json(
+        "campaign_sweep",
+        &[
+            ("daly_interval_s", daly_iv as f64),
+            ("daly_waste_s", daly_waste),
+            ("daly_lost_s", daly_lost),
+            ("brute_force_interval_s", best_iv as f64),
+            ("brute_force_waste_s", best_waste),
+            ("worst_fixed_waste_s", worst_waste),
+            ("live_sessions", sessions as f64),
+            ("live_completed", live_completed as f64),
+            ("live_verified", live_verified as f64),
+            ("live_kills", report.kills() as f64),
+            ("live_availability", report.availability()),
+            ("live_wall_secs", report.wall_secs),
+            (
+                "live_stragglers",
+                report
+                    .sessions
+                    .iter()
+                    .filter(|s| s.disposition == SessionDisposition::Straggler)
+                    .count() as f64,
+            ),
+        ],
+    ) {
+        println!("\nwrote {}", p.display());
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,493 @@
+//! The fleet executor: a bounded worker pool driving many live
+//! [`CrSession`]s concurrently, with seeded failure injection and
+//! checkpoint-interval auto-tuning.
+//!
+//! Each worker owns one session at a time and drives it through the
+//! manual (§V.B.2) strategy — submit, periodic `checkpoint_now` at the
+//! cadence the [`IntervalPolicy`] dictates (measuring every checkpoint's
+//! real cost and feeding it back to the [`DalyTuner`]), injected
+//! `kill`/`resubmit_from_checkpoint` cycles from the
+//! [`crate::campaign::faults::FaultPlan`], and
+//! teardown. Coordinators bind ephemeral ports per incarnation, so any
+//! concurrency level fits on one host; sessions either get per-session
+//! workdirs or share one (nonce-scoped job ids and image discovery keep
+//! them isolated; the content-addressed chunk store is then shared and
+//! deduplicates across the fleet).
+//!
+//! The pool is cancellation-aware ([`CancelToken`]) and bounds every
+//! session by the spec's straggler timeout: a fleet run always
+//! terminates, and the [`CampaignReport`] says exactly how.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::campaign::faults::FaultInjector;
+use crate::campaign::report::{CampaignReport, SessionDisposition, SessionOutcome};
+use crate::campaign::spec::{CampaignSpec, SubstrateSpec, WorkloadSpec};
+use crate::campaign::tune::{DalyTuner, IntervalPolicy};
+use crate::container::{Image, PodmanHpc, Registry, RunSpec, Shifter, EMBED_DMTCP_SNIPPET};
+use crate::cr::{CrApp, CrSession, Substrate};
+use crate::error::Result;
+use crate::workload::{Cp2kApp, G4App};
+
+/// Poll cadence of the per-session drive loop.
+const POLL: Duration = Duration::from_millis(2);
+
+/// Cooperative cancellation for a running campaign: clone the token,
+/// hand it to [`run_fleet`], and flip it from any thread. Workers finish
+/// their current poll step, tear their sessions down, and report
+/// [`SessionDisposition::Cancelled`] for everything not yet complete.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    /// A fresh, uncancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (idempotent).
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether cancellation was requested.
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::Relaxed)
+    }
+}
+
+/// Run the campaign a spec describes, constructing its workload: the
+/// CP2K-analog is self-contained; the Geant4-analog serves through the
+/// shared compute service.
+pub fn run_campaign(spec: &CampaignSpec) -> Result<CampaignReport> {
+    run_campaign_cancellable(spec, &CancelToken::new())
+}
+
+/// [`run_campaign`] with an external [`CancelToken`].
+pub fn run_campaign_cancellable(
+    spec: &CampaignSpec,
+    cancel: &CancelToken,
+) -> Result<CampaignReport> {
+    match spec.workload {
+        WorkloadSpec::Cp2kScf { n } => {
+            let app = Cp2kApp::new(n);
+            run_fleet(spec, &app, cancel)
+        }
+        WorkloadSpec::Geant4 { kind, version } => {
+            let h = crate::runtime::service::shared()?;
+            let app = G4App::build(kind, version, h.manifest().grid_d);
+            run_fleet(spec, &app, cancel)
+        }
+    }
+}
+
+/// Drive a fleet of sessions of `app` per `spec` on a worker pool of
+/// `spec.concurrency` threads. Session `i` runs with seed
+/// `spec.seed.wrapping_add(i)` and the kill schedule derived from
+/// `(spec.seed, i)`, so equal specs replay equal campaigns.
+/// Orchestration failures are folded into per-session outcomes, not
+/// bubbled: the returned report always covers every session.
+pub fn run_fleet<A: CrApp + Sync>(
+    spec: &CampaignSpec,
+    app: &A,
+    cancel: &CancelToken,
+) -> Result<CampaignReport> {
+    spec.validate()?;
+    let root = match &spec.workdir {
+        Some(p) => p.clone(),
+        None => std::env::temp_dir().join(format!(
+            "ncr_campaign_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .expect("clock before epoch")
+                .as_nanos()
+        )),
+    };
+    std::fs::create_dir_all(&root)?;
+    let t0 = Instant::now();
+    let next = AtomicU32::new(0);
+    let outcomes: Mutex<Vec<Option<SessionOutcome>>> =
+        Mutex::new((0..spec.sessions).map(|_| None).collect());
+    let workers = spec.concurrency.min(spec.sessions).max(1);
+    std::thread::scope(|sc| {
+        for _ in 0..workers {
+            sc.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= spec.sessions {
+                    break;
+                }
+                let outcome = drive_session(app, spec, i, &root, cancel);
+                outcomes.lock().expect("outcomes poisoned")[i as usize] = Some(outcome);
+            });
+        }
+    });
+    let sessions = outcomes
+        .into_inner()
+        .expect("outcomes poisoned")
+        .into_iter()
+        .map(|o| o.expect("worker filled every slot"))
+        .collect();
+    Ok(CampaignReport {
+        name: spec.name.clone(),
+        sessions,
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Build one session's execution environment (mirrors the robustness
+/// matrix's container setup: DMTCP embedded, checkpoint volume mapped).
+fn build_substrate(which: SubstrateSpec, session_wd: &Path) -> Result<Substrate> {
+    if which == SubstrateSpec::Bare {
+        return Ok(Substrate::bare());
+    }
+    let mut registry = Registry::new();
+    registry.push(Image::base("my_application_container", "latest", 64 << 20));
+    let mut pm = PodmanHpc::new();
+    pm.build("campaign-cr", "v1", EMBED_DMTCP_SNIPPET, &registry)?;
+    pm.migrate("campaign-cr:v1")?;
+    let spec = RunSpec::default()
+        .volume(session_wd.join("ckpt").to_string_lossy(), "/ckpt")
+        .env("DMTCP_CHECKPOINT_DIR", "/ckpt");
+    match which {
+        SubstrateSpec::PodmanHpc => Ok(Substrate::container(pm.run("campaign-cr:v1", spec)?)),
+        SubstrateSpec::Shifter => {
+            pm.push(&mut registry, "campaign-cr:v1")?;
+            let mut sh = Shifter::new();
+            sh.pull(&registry, "campaign-cr:v1")?;
+            Ok(Substrate::container(sh.run("campaign-cr:v1", spec)?))
+        }
+        SubstrateSpec::Bare => unreachable!("handled above"),
+    }
+}
+
+/// The per-session interval source: a constant, or a live Daly tuner.
+enum Cadence {
+    Fixed(Duration),
+    Daly(DalyTuner),
+}
+
+impl Cadence {
+    fn for_spec(spec: &CampaignSpec) -> Self {
+        match spec.interval {
+            IntervalPolicy::Fixed(d) => Cadence::Fixed(d),
+            IntervalPolicy::Daly { cost_prior } => {
+                // Without a fault plan there is nothing to tune against;
+                // an effectively-infinite MTBF pushes the interval to the
+                // hi clamp (checkpoint rarely, as theory says to).
+                let mtbf = spec
+                    .faults
+                    .mtbf
+                    .unwrap_or(Duration::from_secs(30 * 24 * 3_600));
+                Cadence::Daly(DalyTuner::new(mtbf, cost_prior).clamp(
+                    Duration::from_millis(2),
+                    // Guarantee several checkpoints fit before the
+                    // straggler deadline would reap the session.
+                    spec.straggler_timeout / 8,
+                ))
+            }
+        }
+    }
+
+    fn interval(&self) -> Duration {
+        match self {
+            Cadence::Fixed(d) => *d,
+            Cadence::Daly(t) => t.interval(),
+        }
+    }
+
+    fn observe_cost(&mut self, measured: Duration) {
+        if let Cadence::Daly(t) = self {
+            t.observe_cost(measured);
+        }
+    }
+
+    fn measured_cost_ms(&self) -> u64 {
+        match self {
+            Cadence::Fixed(_) => 0,
+            Cadence::Daly(t) if t.observations() == 0 => 0,
+            Cadence::Daly(t) => t.cost_estimate().as_millis() as u64,
+        }
+    }
+}
+
+/// Fold the active coordinator's lifetime store totals into the outcome
+/// (called once per incarnation, just before its teardown — coordinator
+/// totals do not survive the incarnation).
+fn harvest_store<A: CrApp>(out: &mut SessionOutcome, session: &CrSession<A>) {
+    if let Ok(c) = session.coordinator() {
+        let t = c.store_totals();
+        out.stored_bytes += t.stored_bytes;
+        out.logical_bytes += t.logical_bytes;
+        out.chunks_written += t.chunks_written;
+        out.chunks_deduped += t.chunks_deduped;
+    }
+}
+
+/// Drive one session start to finish; every failure mode lands in the
+/// outcome's disposition instead of unwinding the pool.
+fn drive_session<A: CrApp>(
+    app: &A,
+    spec: &CampaignSpec,
+    index: u32,
+    root: &Path,
+    cancel: &CancelToken,
+) -> SessionOutcome {
+    let seed = spec.seed.wrapping_add(index as u64);
+    let wd: PathBuf = if spec.shared_workdir {
+        root.to_path_buf()
+    } else {
+        root.join(format!("s{index:03}"))
+    };
+    let mut out = SessionOutcome {
+        index,
+        seed,
+        disposition: SessionDisposition::Failed("did not start".into()),
+        verified: false,
+        incarnations: 0,
+        kills: 0,
+        checkpoints: 0,
+        steps_done: 0,
+        target_steps: spec.target_steps,
+        steps_lost: 0,
+        wall_secs: 0.0,
+        stored_bytes: 0,
+        logical_bytes: 0,
+        chunks_written: 0,
+        chunks_deduped: 0,
+        final_interval_ms: 0,
+        measured_ckpt_cost_ms: 0,
+        series: Default::default(),
+    };
+    let t0 = Instant::now();
+    let mut cadence = Cadence::for_spec(spec);
+    let mut injector = spec.faults.injector(spec.seed, index);
+
+    // A cancellation that lands while this session is still queued must
+    // not boot a whole stack (substrate, coordinator, workers) just to
+    // tear it down one poll later.
+    if cancel.is_cancelled() {
+        out.disposition = SessionDisposition::Cancelled;
+        out.final_interval_ms = cadence.interval().as_millis() as u64;
+        return out;
+    }
+
+    let result = drive_session_inner(
+        app, spec, seed, &wd, cancel, &mut cadence, &mut injector, &mut out,
+    );
+    if let Err(e) = result {
+        out.disposition = SessionDisposition::Failed(e.to_string());
+        log::warn!("campaign session {index}: {e}");
+    }
+    out.final_interval_ms = cadence.interval().as_millis() as u64;
+    out.measured_ckpt_cost_ms = cadence.measured_cost_ms();
+    out.wall_secs = t0.elapsed().as_secs_f64();
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn drive_session_inner<A: CrApp>(
+    app: &A,
+    spec: &CampaignSpec,
+    seed: u64,
+    wd: &Path,
+    cancel: &CancelToken,
+    cadence: &mut Cadence,
+    injector: &mut FaultInjector,
+    out: &mut SessionOutcome,
+) -> Result<()> {
+    let substrate = build_substrate(spec.substrate, wd)?;
+    let mut builder = CrSession::builder(app)
+        .substrate(substrate)
+        .workdir(wd)
+        .target_steps(spec.target_steps)
+        .seed(seed)
+        .gc_grace(spec.gc_grace);
+    if let Some(full_every) = spec.incremental {
+        builder = builder.incremental_images(full_every);
+    }
+    let mut session = builder.build()?;
+    session.submit()?;
+
+    let deadline = Instant::now() + spec.straggler_timeout;
+    let mut next_ckpt = Instant::now() + cadence.interval();
+    let mut next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
+
+    let completed = loop {
+        std::thread::sleep(POLL);
+        let status = session.monitor()?;
+        out.steps_done = status.steps_done;
+        if status.done {
+            break true;
+        }
+        if cancel.is_cancelled() || Instant::now() > deadline {
+            break false;
+        }
+        let now = Instant::now();
+        if now >= next_ckpt {
+            let t = Instant::now();
+            match session.checkpoint_now() {
+                Ok(_) => {
+                    out.checkpoints += 1;
+                    cadence.observe_cost(t.elapsed());
+                }
+                Err(e) => log::warn!("campaign session {}: checkpoint failed: {e}", out.index),
+            }
+            next_ckpt = Instant::now() + cadence.interval();
+        }
+        if let Some(kill_at) = next_kill {
+            if now >= kill_at {
+                if session.session_images()?.is_empty() {
+                    // Nothing to restart from yet: defer the kill past
+                    // the next checkpoint (see campaign::faults docs).
+                    next_kill = Some(now + cadence.interval());
+                } else {
+                    let at_kill = session.monitor()?.steps_done;
+                    harvest_store(out, &session);
+                    session.kill()?;
+                    out.kills += 1;
+                    std::thread::sleep(spec.requeue_delay);
+                    let resumed = session.resubmit_from_checkpoint()?;
+                    out.steps_lost += at_kill.saturating_sub(resumed);
+                    next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
+                    next_ckpt = Instant::now() + cadence.interval();
+                }
+            }
+        }
+    };
+
+    harvest_store(out, &session);
+    out.incarnations = session.incarnation() + 1;
+    if completed {
+        let final_state = session.final_state()?;
+        session.finish();
+        out.verified = app
+            .verify_final(&final_state, spec.target_steps, seed)
+            .is_ok();
+        out.disposition = SessionDisposition::Completed;
+    } else {
+        session.finish();
+        out.disposition = if cancel.is_cancelled() {
+            SessionDisposition::Cancelled
+        } else {
+            SessionDisposition::Straggler
+        };
+    }
+    out.series = session.series();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::faults::FaultPlan;
+
+    fn test_workdir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ncr_exec_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn cancel_token_flips_once_for_all_clones() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        assert!(!u.is_cancelled());
+        t.cancel();
+        assert!(u.is_cancelled());
+    }
+
+    #[test]
+    fn small_bare_fleet_completes_and_verifies() {
+        let wd = test_workdir("small");
+        let spec = CampaignSpec {
+            name: "unit".into(),
+            sessions: 3,
+            concurrency: 2,
+            target_steps: 300,
+            seed: 1_000,
+            workdir: Some(wd.clone()),
+            faults: FaultPlan::exponential(Duration::from_millis(25), 1),
+            interval: IntervalPolicy::Fixed(Duration::from_millis(10)),
+            straggler_timeout: Duration::from_secs(120),
+            ..Default::default()
+        };
+        let report = run_campaign(&spec).unwrap();
+        assert_eq!(report.sessions.len(), 3);
+        for s in &report.sessions {
+            assert_eq!(
+                s.disposition,
+                SessionDisposition::Completed,
+                "s{}: {:?}",
+                s.index,
+                s.disposition
+            );
+            assert!(s.verified, "s{} diverged", s.index);
+            assert!(s.checkpoints > 0, "s{} never checkpointed", s.index);
+        }
+        assert!(report.availability() > 0.0);
+        std::fs::remove_dir_all(&wd).ok();
+    }
+
+    #[test]
+    fn cancellation_stops_the_fleet_early() {
+        let wd = test_workdir("cancel");
+        let spec = CampaignSpec {
+            name: "cancel".into(),
+            sessions: 4,
+            concurrency: 2,
+            // Far more work than the test allows to finish.
+            target_steps: 2_000_000,
+            seed: 2_000,
+            workdir: Some(wd.clone()),
+            straggler_timeout: Duration::from_secs(600),
+            ..Default::default()
+        };
+        let cancel = CancelToken::new();
+        let killer = cancel.clone();
+        std::thread::scope(|sc| {
+            sc.spawn(move || {
+                std::thread::sleep(Duration::from_millis(120));
+                killer.cancel();
+            });
+            let report = run_campaign_cancellable(&spec, &cancel).unwrap();
+            assert_eq!(report.sessions.len(), 4);
+            assert!(
+                report
+                    .sessions
+                    .iter()
+                    .all(|s| s.disposition == SessionDisposition::Cancelled),
+                "{:?}",
+                report
+                    .sessions
+                    .iter()
+                    .map(|s| s.disposition.clone())
+                    .collect::<Vec<_>>()
+            );
+        });
+        std::fs::remove_dir_all(&wd).ok();
+    }
+
+    #[test]
+    fn straggler_timeout_reaps_unfinishable_sessions() {
+        let wd = test_workdir("straggler");
+        let spec = CampaignSpec {
+            name: "straggler".into(),
+            sessions: 1,
+            concurrency: 1,
+            target_steps: 2_000_000,
+            seed: 3_000,
+            workdir: Some(wd.clone()),
+            straggler_timeout: Duration::from_millis(150),
+            ..Default::default()
+        };
+        let report = run_campaign(&spec).unwrap();
+        assert_eq!(report.sessions.len(), 1);
+        assert_eq!(report.sessions[0].disposition, SessionDisposition::Straggler);
+        assert!(report.completed() == 0);
+        std::fs::remove_dir_all(&wd).ok();
+    }
+}

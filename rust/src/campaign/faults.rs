@@ -1,0 +1,138 @@
+//! Seeded failure injection for live campaigns.
+//!
+//! A campaign's efficiency question only exists because sessions die:
+//! preemption by higher-priority work, node failure, walltime eviction.
+//! This module turns that into a reproducible experiment — a [`FaultPlan`]
+//! describes the failure process (exponential inter-kill times around an
+//! MTBF, the classic renewal model behind Young/Daly), and mints one
+//! deterministic [`FaultInjector`] per session from `(campaign seed,
+//! session index)`, so the same spec replays the same kill schedule.
+//!
+//! The executor applies a kill through the session's own operator path —
+//! [`crate::cr::session::CrSession::kill`] followed by
+//! [`crate::cr::session::CrSession::resubmit_from_checkpoint`] — which is
+//! exactly the §V.B.2 flow, bare or containerized. Kills are *deferred*
+//! until the session has at least one checkpoint image: a session killed
+//! before its first checkpoint has nothing to restart from (the
+//! real-world analog is a job failing before `dmtcp_command --checkpoint`
+//! ever ran, which simply reruns from scratch — a case the session API
+//! models as a fresh submission, not a restart).
+
+use std::time::Duration;
+
+use crate::util::rng::SplitMix64;
+
+/// The failure process of one campaign, applied per session.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Mean time between injected kills per session (`None` = no faults).
+    pub mtbf: Option<Duration>,
+    /// Stop injecting after this many kills per session (bounds the
+    /// incarnation count so a short straggler timeout stays meaningful).
+    pub max_kills_per_session: u32,
+}
+
+impl FaultPlan {
+    /// A plan that never kills anything.
+    pub fn none() -> Self {
+        Self {
+            mtbf: None,
+            max_kills_per_session: 0,
+        }
+    }
+
+    /// Exponential kills around `mtbf`, at most `max_kills` per session.
+    pub fn exponential(mtbf: Duration, max_kills: u32) -> Self {
+        Self {
+            mtbf: Some(mtbf),
+            max_kills_per_session: max_kills,
+        }
+    }
+
+    /// Mint the deterministic injector for one session of the campaign.
+    /// Equal `(campaign_seed, session_index)` pairs yield equal kill
+    /// schedules.
+    pub fn injector(&self, campaign_seed: u64, session_index: u32) -> FaultInjector {
+        // Decorrelate per-session streams the same way SplitMix64::fork
+        // does, but keyed so the schedule survives executor reordering.
+        let seed = campaign_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(0xFAu64 << 32)
+            .wrapping_add(session_index as u64);
+        FaultInjector {
+            rng: SplitMix64::new(seed),
+            mtbf: self.mtbf,
+            kills_left: self.max_kills_per_session,
+        }
+    }
+}
+
+/// Per-session kill schedule generator (see [`FaultPlan::injector`]).
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    rng: SplitMix64,
+    mtbf: Option<Duration>,
+    kills_left: u32,
+}
+
+impl FaultInjector {
+    /// Draw the delay from now until the next injected kill, consuming
+    /// one kill from the budget. `None` once the plan is exhausted (or
+    /// was fault-free to begin with).
+    pub fn next_kill_in(&mut self) -> Option<Duration> {
+        let mtbf = self.mtbf?;
+        if self.kills_left == 0 {
+            return None;
+        }
+        self.kills_left -= 1;
+        let secs = self.rng.gen_exp(mtbf.as_secs_f64());
+        Some(Duration::from_secs_f64(secs))
+    }
+
+    /// Kills still available in this session's budget.
+    pub fn kills_left(&self) -> u32 {
+        self.kills_left
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_never_kills() {
+        let mut inj = FaultPlan::none().injector(7, 0);
+        assert_eq!(inj.next_kill_in(), None);
+    }
+
+    #[test]
+    fn injector_is_deterministic_per_seed_and_index() {
+        let plan = FaultPlan::exponential(Duration::from_millis(100), 4);
+        let mut a = plan.injector(42, 3);
+        let mut b = plan.injector(42, 3);
+        for _ in 0..4 {
+            assert_eq!(a.next_kill_in(), b.next_kill_in());
+        }
+        assert_eq!(a.next_kill_in(), None, "budget of 4 exhausted");
+    }
+
+    #[test]
+    fn sessions_get_distinct_schedules() {
+        let plan = FaultPlan::exponential(Duration::from_millis(100), 1);
+        let mut a = plan.injector(42, 0);
+        let mut b = plan.injector(42, 1);
+        assert_ne!(a.next_kill_in(), b.next_kill_in());
+    }
+
+    #[test]
+    fn draws_cluster_around_mtbf() {
+        let plan = FaultPlan::exponential(Duration::from_secs(10), u32::MAX);
+        let mut inj = plan.injector(9, 0);
+        let n = 4_000;
+        let mean: f64 = (0..n)
+            .map(|_| inj.next_kill_in().unwrap().as_secs_f64())
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 10.0).abs() < 0.6, "mean={mean}");
+    }
+}

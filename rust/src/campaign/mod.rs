@@ -1,0 +1,45 @@
+//! Fleet-scale C/R campaign orchestration (L4).
+//!
+//! The paper's operational case (§II, §V) is not one job but *campaigns*:
+//! fleets of long-running preemptable computations whose efficiency is
+//! set by the checkpoint cadence versus the failure/preemption rate. This
+//! subsystem connects the repo's two halves — it drives many *real*
+//! [`crate::cr::session::CrSession`]s concurrently (the live stack:
+//! coordinators on ephemeral ports, checkpoint images on disk, bare or
+//! containerized) and chooses the checkpoint interval with the same
+//! Young/Daly analysis it validates by brute force on the [`crate::slurm`]
+//! simulator.
+//!
+//! * [`spec`] — the declarative [`CampaignSpec`] (N sessions × workload ×
+//!   substrate × policy, seeded), parseable from `key = value` text for
+//!   `nersc-cr campaign`.
+//! * [`executor`] — the bounded worker pool ([`run_campaign`],
+//!   [`run_fleet`]) with cancellation and straggler timeouts.
+//! * [`faults`] — the seeded MTBF kill injector driving the §V.B.2
+//!   `kill`/`resubmit_from_checkpoint` path.
+//! * [`tune`] — the Young/Daly interval policy with measured-cost
+//!   feedback ([`DalyTuner`]), validated against brute-force sweeps.
+//! * [`sim`] — the seeded fleet harness on the scheduler simulator the
+//!   sweeps, the `campaign_sweep` bench and the `preemptible_queue`
+//!   example share.
+//! * [`report`] — per-session outcomes aggregated into a
+//!   [`CampaignReport`] (tables, JSON, LDMS rollups).
+
+#![deny(missing_docs)]
+
+pub mod executor;
+pub mod faults;
+pub mod report;
+pub mod sim;
+pub mod spec;
+pub mod tune;
+
+pub use executor::{run_campaign, run_campaign_cancellable, run_fleet, CancelToken};
+pub use faults::{FaultInjector, FaultPlan};
+pub use report::{CampaignReport, LdmsRollup, SessionDisposition, SessionOutcome};
+pub use sim::{run_fleet_sim, SimFleetOutcome, SimFleetSpec, UrgentLoad};
+pub use spec::{CampaignSpec, SubstrateSpec, WorkloadSpec};
+pub use tune::{
+    averaged_lab, brute_force_optimal, young_daly_interval_secs, DalyTuner, IntervalPolicy,
+    SweepPoint, SWEEP_GRID,
+};

@@ -1,0 +1,353 @@
+//! Campaign-level accounting: per-session outcomes aggregated into one
+//! [`CampaignReport`] that renders as a [`crate::report::Table`], as JSON
+//! (the CI artifact shape), and as LDMS rollups derived from the
+//! per-session [`SampledSeries`] the sessions collected.
+
+use crate::metrics::SampledSeries;
+use crate::report::Table;
+
+/// How one session of the fleet ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionDisposition {
+    /// Reached its target steps (and was verified, unless `verified` says
+    /// otherwise).
+    Completed,
+    /// Still running at the straggler timeout; torn down.
+    Straggler,
+    /// Torn down because the campaign was cancelled.
+    Cancelled,
+    /// Died on an orchestration error (message preserved).
+    Failed(String),
+}
+
+impl SessionDisposition {
+    /// Short label for tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SessionDisposition::Completed => "completed",
+            SessionDisposition::Straggler => "straggler",
+            SessionDisposition::Cancelled => "cancelled",
+            SessionDisposition::Failed(_) => "failed",
+        }
+    }
+}
+
+/// Everything the executor learned about one session.
+#[derive(Debug, Clone)]
+pub struct SessionOutcome {
+    /// Fleet index (0-based).
+    pub index: u32,
+    /// The session's workload seed (`campaign seed + index`).
+    pub seed: u64,
+    /// How the session ended.
+    pub disposition: SessionDisposition,
+    /// Final state bit-identical to the failure-free reference run.
+    pub verified: bool,
+    /// Incarnations used (1 = never killed).
+    pub incarnations: u32,
+    /// Kills the fault injector landed.
+    pub kills: u32,
+    /// Checkpoints taken across all incarnations.
+    pub checkpoints: u64,
+    /// Steps done when the session ended.
+    pub steps_done: u64,
+    /// Target steps.
+    pub target_steps: u64,
+    /// Steps of progress lost to kills (work redone after restarts).
+    pub steps_lost: u64,
+    /// Wall clock from submit to teardown (seconds).
+    pub wall_secs: f64,
+    /// Bytes actually stored across all checkpoint rounds.
+    pub stored_bytes: u64,
+    /// Raw (logical) bytes those checkpoints described.
+    pub logical_bytes: u64,
+    /// Chunks newly written to the content-addressed store.
+    pub chunks_written: u64,
+    /// Chunks reused instead of rewritten.
+    pub chunks_deduped: u64,
+    /// The checkpoint interval in force when the session ended
+    /// (tuned sessions drift; fixed sessions report the constant).
+    pub final_interval_ms: u64,
+    /// The tuner's final measured checkpoint-cost estimate (0 when the
+    /// cadence was fixed or no checkpoint was measured).
+    pub measured_ckpt_cost_ms: u64,
+    /// The session's LDMS series (all incarnations, folded at teardown).
+    pub series: SampledSeries,
+}
+
+/// Aggregate LDMS rollup across the fleet.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LdmsRollup {
+    /// Highest per-session aggregate memory sample seen (bytes).
+    pub peak_memory_bytes: f64,
+    /// Final cumulative checkpoint-stored bytes, summed over sessions.
+    pub ckpt_stored_bytes: f64,
+    /// Samples collected across the fleet.
+    pub samples: u64,
+}
+
+/// The aggregated result of one campaign run.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    /// Spec name the run was built from.
+    pub name: String,
+    /// Per-session outcomes, fleet order.
+    pub sessions: Vec<SessionOutcome>,
+    /// Campaign wall clock, first submit to last teardown (seconds).
+    pub wall_secs: f64,
+}
+
+impl CampaignReport {
+    /// Sessions that completed their target.
+    pub fn completed(&self) -> usize {
+        self.sessions
+            .iter()
+            .filter(|s| s.disposition == SessionDisposition::Completed)
+            .count()
+    }
+
+    /// Completed sessions whose final state verified bit-identical.
+    pub fn verified(&self) -> usize {
+        self.sessions
+            .iter()
+            .filter(|s| s.disposition == SessionDisposition::Completed && s.verified)
+            .count()
+    }
+
+    /// Kills injected across the fleet.
+    pub fn kills(&self) -> u64 {
+        self.sessions.iter().map(|s| s.kills as u64).sum()
+    }
+
+    /// Steps of progress lost to kills across the fleet.
+    pub fn steps_lost(&self) -> u64 {
+        self.sessions.iter().map(|s| s.steps_lost).sum()
+    }
+
+    /// Steps completed across the fleet.
+    pub fn steps_done(&self) -> u64 {
+        self.sessions.iter().map(|s| s.steps_done).sum()
+    }
+
+    /// Work availability: productive steps over productive-plus-redone
+    /// steps, in `[0, 1]`. `1.0` means no injected kill cost any work.
+    pub fn availability(&self) -> f64 {
+        let done = self.steps_done() as f64;
+        let lost = self.steps_lost() as f64;
+        if done + lost == 0.0 {
+            return 1.0;
+        }
+        done / (done + lost)
+    }
+
+    /// Chunk-store totals `(stored, logical, written, deduped)` across
+    /// the fleet.
+    pub fn store_totals(&self) -> (u64, u64, u64, u64) {
+        self.sessions.iter().fold((0, 0, 0, 0), |acc, s| {
+            (
+                acc.0 + s.stored_bytes,
+                acc.1 + s.logical_bytes,
+                acc.2 + s.chunks_written,
+                acc.3 + s.chunks_deduped,
+            )
+        })
+    }
+
+    /// Roll the per-session LDMS series up into fleet-level numbers.
+    pub fn ldms_rollup(&self) -> LdmsRollup {
+        let mut r = LdmsRollup::default();
+        for s in &self.sessions {
+            if !s.series.memory.is_empty() {
+                r.peak_memory_bytes = r.peak_memory_bytes.max(s.series.memory.max());
+            }
+            r.ckpt_stored_bytes += s.series.ckpt_stored.v.last().copied().unwrap_or(0.0);
+            r.samples += s.series.memory.len() as u64;
+        }
+        r
+    }
+
+    /// Per-session table (one row per session, fleet order).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(&[
+            "session",
+            "disposition",
+            "incs",
+            "kills",
+            "ckpts",
+            "steps",
+            "lost",
+            "interval (ms)",
+            "stored",
+            "bitwise",
+        ]);
+        for s in &self.sessions {
+            t.row(&[
+                format!("s{:03}", s.index),
+                s.disposition.label().to_string(),
+                s.incarnations.to_string(),
+                s.kills.to_string(),
+                s.checkpoints.to_string(),
+                format!("{}/{}", s.steps_done, s.target_steps),
+                s.steps_lost.to_string(),
+                s.final_interval_ms.to_string(),
+                crate::report::human_bytes(s.stored_bytes),
+                if s.disposition != SessionDisposition::Completed {
+                    "-".into()
+                } else if s.verified {
+                    "ok".into()
+                } else {
+                    "DIVERGED".into()
+                },
+            ]);
+        }
+        t
+    }
+
+    /// One-row fleet summary table.
+    pub fn summary_table(&self) -> Table {
+        let (stored, logical, written, deduped) = self.store_totals();
+        let ldms = self.ldms_rollup();
+        let mut t = Table::new(&[
+            "sessions",
+            "completed",
+            "verified",
+            "kills",
+            "availability",
+            "stored",
+            "logical",
+            "chunks w/d",
+            "peak mem",
+            "wall (s)",
+        ]);
+        t.row(&[
+            self.sessions.len().to_string(),
+            self.completed().to_string(),
+            self.verified().to_string(),
+            self.kills().to_string(),
+            format!("{:.1}%", self.availability() * 100.0),
+            crate::report::human_bytes(stored),
+            crate::report::human_bytes(logical),
+            format!("{written}/{deduped}"),
+            crate::report::human_bytes(ldms.peak_memory_bytes as u64),
+            format!("{:.2}", self.wall_secs),
+        ]);
+        t
+    }
+
+    /// Serialize the fleet summary (not the per-session rows) as JSON.
+    pub fn to_json(&self) -> String {
+        let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+        let (stored, logical, written, deduped) = self.store_totals();
+        let ldms = self.ldms_rollup();
+        format!(
+            "{{\n  \"campaign\": \"{}\",\n  \"sessions\": {},\n  \"completed\": {},\n  \
+             \"verified\": {},\n  \"kills\": {},\n  \"steps_done\": {},\n  \
+             \"steps_lost\": {},\n  \"availability\": {:.6},\n  \"stored_bytes\": {},\n  \
+             \"logical_bytes\": {},\n  \"chunks_written\": {},\n  \"chunks_deduped\": {},\n  \
+             \"ldms_peak_memory_bytes\": {},\n  \"ldms_ckpt_stored_bytes\": {},\n  \
+             \"wall_secs\": {:.3}\n}}\n",
+            esc(&self.name),
+            self.sessions.len(),
+            self.completed(),
+            self.verified(),
+            self.kills(),
+            self.steps_done(),
+            self.steps_lost(),
+            self.availability(),
+            stored,
+            logical,
+            written,
+            deduped,
+            ldms.peak_memory_bytes,
+            ldms.ckpt_stored_bytes,
+            self.wall_secs,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(index: u32, done: u64, lost: u64, completed: bool) -> SessionOutcome {
+        SessionOutcome {
+            index,
+            seed: 7 + index as u64,
+            disposition: if completed {
+                SessionDisposition::Completed
+            } else {
+                SessionDisposition::Straggler
+            },
+            verified: completed,
+            incarnations: 2,
+            kills: 1,
+            checkpoints: 3,
+            steps_done: done,
+            target_steps: done,
+            steps_lost: lost,
+            wall_secs: 0.5,
+            stored_bytes: 100,
+            logical_bytes: 400,
+            chunks_written: 5,
+            chunks_deduped: 7,
+            final_interval_ms: 40,
+            measured_ckpt_cost_ms: 2,
+            series: SampledSeries::default(),
+        }
+    }
+
+    fn report() -> CampaignReport {
+        CampaignReport {
+            name: "t".into(),
+            sessions: vec![outcome(0, 600, 200, true), outcome(1, 600, 0, false)],
+            wall_secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = report();
+        assert_eq!(r.completed(), 1);
+        assert_eq!(r.verified(), 1);
+        assert_eq!(r.kills(), 2);
+        assert_eq!(r.steps_lost(), 200);
+        let avail = r.availability();
+        assert!((avail - 1200.0 / 1400.0).abs() < 1e-9, "{avail}");
+        assert_eq!(r.store_totals(), (200, 800, 10, 14));
+    }
+
+    #[test]
+    fn empty_fleet_availability_is_one() {
+        let r = CampaignReport {
+            name: "e".into(),
+            sessions: vec![],
+            wall_secs: 0.0,
+        };
+        assert_eq!(r.availability(), 1.0);
+    }
+
+    #[test]
+    fn tables_and_json_render() {
+        let r = report();
+        assert_eq!(r.table().n_rows(), 2);
+        assert_eq!(r.summary_table().n_rows(), 1);
+        let j = r.to_json();
+        assert!(j.contains("\"sessions\": 2"), "{j}");
+        assert!(j.contains("\"availability\": 0.857143"), "{j}");
+        assert!(!j.contains("NaN"), "{j}");
+    }
+
+    #[test]
+    fn ldms_rollup_folds_series() {
+        let mut r = report();
+        r.sessions[0].series.memory.push(0.0, 10.0);
+        r.sessions[0].series.memory.push(1.0, 30.0);
+        r.sessions[0].series.ckpt_stored.push(1.0, 500.0);
+        r.sessions[1].series.memory.push(0.0, 20.0);
+        r.sessions[1].series.ckpt_stored.push(0.5, 250.0);
+        let roll = r.ldms_rollup();
+        assert_eq!(roll.peak_memory_bytes, 30.0);
+        assert_eq!(roll.ckpt_stored_bytes, 750.0);
+        assert_eq!(roll.samples, 3);
+    }
+}

@@ -1,0 +1,286 @@
+//! Seeded fleet campaigns on the batch-scheduler simulator.
+//!
+//! One harness, three consumers: the Young/Daly tuner's brute-force
+//! validation sweeps ([`crate::campaign::tune`]), the `campaign_sweep`
+//! bench, and the `preemptible_queue` example. A [`SimFleetSpec`] submits
+//! a fleet of preemptable "science" jobs plus an optional stream of
+//! higher-priority "urgent" jobs that force preemptions, runs the
+//! discrete-event [`SlurmSim`], and folds the accounting into a
+//! [`SimFleetOutcome`]. Everything is seeded, so a spec replays the same
+//! trace — the property the tuner tests and the bench lean on.
+
+use crate::simclock::SimTime;
+use crate::slurm::{CrMode, JobId, JobSpec, JobState, Partition, Signal, SlurmSim};
+use crate::util::rng::SplitMix64;
+
+/// Higher-priority load injected to preempt the science fleet: `n` jobs
+/// submitted at seeded-uniform times in `[0, window)` on the `realtime`
+/// partition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UrgentLoad {
+    /// Number of urgent jobs over the window.
+    pub n: u32,
+    /// Minimum nodes per urgent job.
+    pub nodes_min: u32,
+    /// Extra nodes drawn uniformly from `[0, nodes_spread)`.
+    pub nodes_spread: u64,
+    /// Minimum work per urgent job (seconds).
+    pub work_min: SimTime,
+    /// Extra work drawn uniformly from `[0, work_spread)`.
+    pub work_spread: SimTime,
+    /// Walltime limit per urgent job.
+    pub time_limit: SimTime,
+    /// Submission window: arrivals are uniform in `[0, window)`.
+    pub window: SimTime,
+}
+
+/// A seeded fleet campaign on the scheduler simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimFleetSpec {
+    /// Cluster size (whole nodes).
+    pub nodes: usize,
+    /// Science jobs in the fleet (submitted on the `preempt` partition).
+    pub n_jobs: u32,
+    /// Science job nodes drawn uniformly from `[1, nodes_max]`.
+    pub nodes_max: u32,
+    /// Minimum work per science job (seconds).
+    pub work_min: SimTime,
+    /// Extra work drawn uniformly from `[0, work_spread)`.
+    pub work_spread: SimTime,
+    /// Walltime limit per science job.
+    pub time_limit: SimTime,
+    /// `--time-min` for backfill shrink-to-fit (None = rigid).
+    pub time_min: Option<SimTime>,
+    /// Pre-timelimit `--signal` directive.
+    pub signal: Option<(Signal, SimTime)>,
+    /// `--requeue` eligibility of the science jobs.
+    pub requeue: bool,
+    /// Checkpoint-restart mode of the science jobs (the comparison axis).
+    pub cr: CrMode,
+    /// Science submissions are uniform in `[0, submit_spread)`.
+    pub submit_spread: SimTime,
+    /// Simulation horizon.
+    pub horizon: SimTime,
+    /// Trace seed: equal specs replay equal traces.
+    pub seed: u64,
+    /// Optional preemption pressure.
+    pub urgent: Option<UrgentLoad>,
+    /// Override every partition's preemption grace period (``Some(0)`` =
+    /// hard kills, where recovery rides on the last *periodic*
+    /// checkpoint — the regime the checkpoint interval matters in).
+    pub grace_override: Option<SimTime>,
+}
+
+impl SimFleetSpec {
+    /// The tuner's laboratory: a small fleet of single-node science jobs
+    /// under hard-kill (zero-grace) preemption waves with mean
+    /// inter-arrival `mtbf`. Each wave takes the whole cluster, so every
+    /// running science job loses the work since its last periodic
+    /// checkpoint — the textbook renewal process Young/Daly optimizes.
+    pub fn preemption_lab(interval: SimTime, ckpt_cost: SimTime, mtbf: SimTime, seed: u64) -> Self {
+        let nodes = 4usize;
+        let work: SimTime = 20_000;
+        // Enough urgent arrivals to cover the stretched makespan; extras
+        // after the fleet finishes just run to completion harmlessly.
+        let window = 6 * work;
+        let n = (window / mtbf.max(1)).max(1) as u32;
+        Self {
+            nodes,
+            n_jobs: nodes as u32,
+            nodes_max: 1,
+            work_min: work,
+            work_spread: 1,
+            time_limit: 80_000,
+            time_min: None,
+            signal: None,
+            requeue: true,
+            cr: CrMode::CheckpointRestart {
+                interval,
+                overhead: ckpt_cost,
+            },
+            submit_spread: 1,
+            horizon: SimTime::MAX,
+            seed,
+            urgent: Some(UrgentLoad {
+                n,
+                nodes_min: nodes as u32,
+                nodes_spread: 1,
+                work_min: 60,
+                work_spread: 60,
+                time_limit: 3_600,
+                window,
+            }),
+            grace_override: Some(0),
+        }
+    }
+}
+
+/// Fleet-level accounting folded out of one simulated campaign.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimFleetOutcome {
+    /// Cluster utilization over the measured window.
+    pub utilization: f64,
+    /// Science jobs that completed.
+    pub completed: u32,
+    /// Science jobs submitted.
+    pub n_jobs: u32,
+    /// Compute seconds the science fleet lost to preemptions/timeouts.
+    pub work_lost: u64,
+    /// Walltime seconds the fleet paid writing checkpoints.
+    pub ckpt_overhead_paid: u64,
+    /// Checkpoints taken across the fleet.
+    pub checkpoints: u64,
+    /// Requeues across the fleet.
+    pub requeues: u64,
+    /// Latest science-job end time (0 when none finished).
+    pub makespan: SimTime,
+    /// Mean queue wait of the urgent jobs that started (seconds).
+    pub urgent_wait_mean: f64,
+    /// Total wasted seconds: lost work plus checkpoint overhead — the
+    /// quantity the Young/Daly interval minimizes.
+    pub waste: u64,
+}
+
+/// Run one seeded fleet campaign to its horizon.
+pub fn run_fleet_sim(spec: &SimFleetSpec) -> SimFleetOutcome {
+    let mut parts = Partition::standard_set();
+    if let Some(g) = spec.grace_override {
+        for p in parts.iter_mut() {
+            p.grace_period = g;
+        }
+    }
+    let mut sim = SlurmSim::new(spec.nodes, parts);
+    let mut rng = SplitMix64::new(spec.seed);
+
+    let mut science: Vec<JobId> = Vec::new();
+    let mut science_rng = rng.fork();
+    for i in 0..spec.n_jobs {
+        let id = sim
+            .submit_at(
+                JobSpec {
+                    name: format!("science{i}"),
+                    partition: "preempt".into(),
+                    nodes: 1 + science_rng.gen_range(spec.nodes_max.max(1) as u64) as u32,
+                    work_total: spec.work_min + science_rng.gen_range(spec.work_spread.max(1)),
+                    time_limit: spec.time_limit,
+                    time_min: spec.time_min,
+                    signal: spec.signal,
+                    requeue: spec.requeue,
+                    comment: String::new(),
+                    cr: spec.cr,
+                },
+                science_rng.gen_range(spec.submit_spread.max(1)),
+            )
+            .expect("science submission");
+        science.push(id);
+    }
+
+    let mut urgent: Vec<JobId> = Vec::new();
+    if let Some(u) = &spec.urgent {
+        let mut urgent_rng = rng.fork();
+        for k in 0..u.n {
+            let id = sim
+                .submit_at(
+                    JobSpec {
+                        name: format!("urgent{k}"),
+                        partition: "realtime".into(),
+                        nodes: u.nodes_min + urgent_rng.gen_range(u.nodes_spread.max(1)) as u32,
+                        work_total: u.work_min + urgent_rng.gen_range(u.work_spread.max(1)),
+                        time_limit: u.time_limit,
+                        ..Default::default()
+                    },
+                    urgent_rng.gen_range(u.window.max(1)),
+                )
+                .expect("urgent submission");
+            urgent.push(id);
+        }
+    }
+
+    sim.run(spec.horizon);
+
+    let mut out = SimFleetOutcome {
+        utilization: sim.utilization(),
+        completed: 0,
+        n_jobs: spec.n_jobs,
+        work_lost: 0,
+        ckpt_overhead_paid: 0,
+        checkpoints: 0,
+        requeues: 0,
+        makespan: 0,
+        urgent_wait_mean: 0.0,
+        waste: 0,
+    };
+    for id in &science {
+        let j = sim.job(*id).expect("science job");
+        if j.state == JobState::Completed {
+            out.completed += 1;
+        }
+        out.work_lost += j.work_lost;
+        out.checkpoints += j.checkpoints as u64;
+        out.ckpt_overhead_paid += j.checkpoints as u64 * j.spec.cr.overhead();
+        out.requeues += j.requeues as u64;
+        if let Some(t) = j.end_time {
+            out.makespan = out.makespan.max(t);
+        }
+    }
+    let waits: Vec<f64> = urgent
+        .iter()
+        .filter_map(|id| {
+            let j = sim.job(*id).expect("urgent job");
+            j.start_time.map(|st| (st - j.submit_time) as f64)
+        })
+        .collect();
+    if !waits.is_empty() {
+        out.urgent_wait_mean = waits.iter().sum::<f64>() / waits.len() as f64;
+    }
+    out.waste = out.work_lost + out.ckpt_overhead_paid;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_replays_are_identical() {
+        let spec = SimFleetSpec::preemption_lab(600, 10, 2_000, 42);
+        let a = run_fleet_sim(&spec);
+        let b = run_fleet_sim(&spec);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seeds_change_the_trace() {
+        let a = run_fleet_sim(&SimFleetSpec::preemption_lab(600, 10, 2_000, 1));
+        let b = run_fleet_sim(&SimFleetSpec::preemption_lab(600, 10, 2_000, 2));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn lab_fleet_completes_under_cr_despite_hard_kills() {
+        let o = run_fleet_sim(&SimFleetSpec::preemption_lab(600, 10, 2_000, 42));
+        assert_eq!(o.completed, o.n_jobs, "C/R must carry the fleet through");
+        assert!(o.requeues > 0, "the lab must actually preempt");
+        assert!(o.work_lost > 0, "hard kills must cost something");
+    }
+
+    #[test]
+    fn interval_extremes_trade_overhead_for_loss() {
+        // Frequent checkpoints pay more overhead; rare ones lose more
+        // work — the trade the lab exists to expose.
+        let fast = run_fleet_sim(&SimFleetSpec::preemption_lab(30, 10, 2_000, 42));
+        let slow = run_fleet_sim(&SimFleetSpec::preemption_lab(8_000, 10, 2_000, 42));
+        assert!(
+            fast.ckpt_overhead_paid > slow.ckpt_overhead_paid,
+            "fast={} slow={}",
+            fast.ckpt_overhead_paid,
+            slow.ckpt_overhead_paid
+        );
+        assert!(
+            slow.work_lost > fast.work_lost,
+            "slow={} fast={}",
+            slow.work_lost,
+            fast.work_lost
+        );
+    }
+}

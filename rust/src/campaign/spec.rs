@@ -1,0 +1,534 @@
+//! Declarative campaign specifications.
+//!
+//! A [`CampaignSpec`] is everything a fleet run needs — how many
+//! sessions, which workload, which substrate, the checkpoint-interval
+//! policy, the failure process, and the executor bounds — in one value
+//! that parses from a simple `key = value` text file (the CLI's
+//! `nersc-cr campaign --spec FILE`) and renders back for round-tripping.
+//! Equal specs replay equal campaigns: every random choice downstream is
+//! derived from [`CampaignSpec::seed`].
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::campaign::faults::FaultPlan;
+use crate::campaign::tune::IntervalPolicy;
+use crate::error::{Error, Result};
+use crate::workload::{G4Version, WorkloadKind, CP2K_SCF_LABEL};
+
+/// Which application the campaign's sessions run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkloadSpec {
+    /// The CP2K-analog SCF driver with an `n`-point field.
+    Cp2kScf {
+        /// Field size of the SCF problem.
+        n: usize,
+    },
+    /// The Geant4-analog transport workload.
+    Geant4 {
+        /// Which source/detector configuration.
+        kind: WorkloadKind,
+        /// Which Geant4-analog version.
+        version: G4Version,
+    },
+}
+
+impl WorkloadSpec {
+    /// The workload label as the CLI spells it.
+    pub fn label(&self) -> String {
+        match self {
+            WorkloadSpec::Cp2kScf { .. } => CP2K_SCF_LABEL.into(),
+            WorkloadSpec::Geant4 { kind, .. } => kind.label(),
+        }
+    }
+}
+
+/// Which execution environment every session launches on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubstrateSpec {
+    /// Plain host processes.
+    Bare,
+    /// podman-hpc containers (DMTCP embedded, checkpoint volume mapped).
+    PodmanHpc,
+    /// shifter containers (image migrated through the registry first).
+    Shifter,
+}
+
+impl SubstrateSpec {
+    /// The substrate name as the CLI spells it.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SubstrateSpec::Bare => "bare",
+            SubstrateSpec::PodmanHpc => "podman-hpc",
+            SubstrateSpec::Shifter => "shifter",
+        }
+    }
+}
+
+/// One fleet-scale campaign, declaratively.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignSpec {
+    /// Campaign name (reports, artifact files).
+    pub name: String,
+    /// Number of sessions in the fleet.
+    pub sessions: u32,
+    /// Live sessions driven concurrently (the worker-pool bound `K`).
+    pub concurrency: u32,
+    /// The application every session runs.
+    pub workload: WorkloadSpec,
+    /// The execution environment every session launches on.
+    pub substrate: SubstrateSpec,
+    /// Target steps per session.
+    pub target_steps: u64,
+    /// Campaign seed; session `i` runs with seed `seed + i` and a kill
+    /// schedule derived from `(seed, i)`.
+    pub seed: u64,
+    /// Root directory for session workdirs (`None` = a fresh temp dir).
+    pub workdir: Option<PathBuf>,
+    /// All sessions share one workdir (and one content-addressed chunk
+    /// store) instead of per-session subdirectories.
+    pub shared_workdir: bool,
+    /// Write incremental checkpoint images, forcing a full image every
+    /// `Some(n)` checkpoints (`None` = whole-image v1 checkpoints).
+    pub incremental: Option<u32>,
+    /// Chunk-store GC grace window for session teardown (see
+    /// [`crate::cr::CrPolicy::gc_grace`]).
+    pub gc_grace: Duration,
+    /// Checkpoint cadence: fixed, or Young/Daly auto-tuned.
+    pub interval: IntervalPolicy,
+    /// The failure process injected into the fleet.
+    pub faults: FaultPlan,
+    /// Give up on a session that has not finished after this long
+    /// (stragglers are torn down and reported, not waited on).
+    pub straggler_timeout: Duration,
+    /// Pause between an injected kill and the resubmission (the queue
+    /// wait of the Fig 4 gap).
+    pub requeue_delay: Duration,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        Self {
+            name: "campaign".into(),
+            sessions: 8,
+            concurrency: 4,
+            workload: WorkloadSpec::Cp2kScf { n: 16 },
+            substrate: SubstrateSpec::Bare,
+            target_steps: 1_000,
+            seed: 7,
+            workdir: None,
+            shared_workdir: false,
+            incremental: None,
+            gc_grace: crate::cr::GC_GRACE,
+            interval: IntervalPolicy::Fixed(Duration::from_millis(40)),
+            faults: FaultPlan::none(),
+            straggler_timeout: Duration::from_secs(300),
+            requeue_delay: Duration::from_millis(10),
+        }
+    }
+}
+
+impl CampaignSpec {
+    /// Parse a spec from `key = value` lines. `#` starts a comment,
+    /// blank lines are ignored, unknown keys are errors (a typo must not
+    /// silently fall back to a default). See [`CampaignSpec::to_text`]
+    /// for the key set.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut spec = CampaignSpec::default();
+        let mut g4_version = G4Version::V10_7;
+        let mut g4_kind: Option<WorkloadKind> = None;
+        let mut cp2k_n = 16usize;
+        let mut wants_cp2k = true;
+        let mut cost_prior = Duration::from_millis(5);
+        let mut wants_daly = false;
+        let mut fixed_ms: Option<u64> = None;
+        let mut mtbf_ms: Option<u64> = None;
+        let mut max_kills = 2u32;
+
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Usage(format!("campaign spec line {}: expected key = value", lineno + 1))
+            })?;
+            let (key, value) = (key.trim(), value.trim());
+            let bad = |what: &str| {
+                Error::Usage(format!(
+                    "campaign spec line {}: bad {what} {value:?}",
+                    lineno + 1
+                ))
+            };
+            match key {
+                "name" => spec.name = value.to_string(),
+                "sessions" => spec.sessions = value.parse().map_err(|_| bad("sessions"))?,
+                "concurrency" => {
+                    spec.concurrency = value.parse().map_err(|_| bad("concurrency"))?
+                }
+                "workload" => {
+                    if value == CP2K_SCF_LABEL {
+                        wants_cp2k = true;
+                    } else {
+                        wants_cp2k = false;
+                        g4_kind = Some(
+                            WorkloadKind::all()
+                                .into_iter()
+                                .find(|k| k.label() == value)
+                                .ok_or_else(|| bad("workload"))?,
+                        );
+                    }
+                }
+                "cp2k-n" => cp2k_n = value.parse().map_err(|_| bad("cp2k-n"))?,
+                "g4" => {
+                    g4_version = match value {
+                        "10.5" => G4Version::V10_5,
+                        "10.7" => G4Version::V10_7,
+                        "11.0" => G4Version::V11_0,
+                        _ => return Err(bad("g4 version")),
+                    }
+                }
+                "substrate" => {
+                    spec.substrate = match value {
+                        "bare" => SubstrateSpec::Bare,
+                        "podman-hpc" => SubstrateSpec::PodmanHpc,
+                        "shifter" => SubstrateSpec::Shifter,
+                        _ => return Err(bad("substrate")),
+                    }
+                }
+                "steps" => spec.target_steps = value.parse().map_err(|_| bad("steps"))?,
+                "seed" => spec.seed = value.parse().map_err(|_| bad("seed"))?,
+                "workdir" => spec.workdir = Some(PathBuf::from(value)),
+                "shared-workdir" => {
+                    spec.shared_workdir = parse_bool(value).ok_or_else(|| bad("shared-workdir"))?
+                }
+                "incremental" => {
+                    spec.incremental = match value {
+                        "off" => None,
+                        n => Some(n.parse().map_err(|_| bad("incremental"))?),
+                    }
+                }
+                "gc-grace-ms" => {
+                    spec.gc_grace =
+                        Duration::from_millis(value.parse().map_err(|_| bad("gc-grace-ms"))?)
+                }
+                "interval" => {
+                    // Last one wins, like every other key: a later fixed
+                    // interval overrides an earlier `daly` and vice versa.
+                    if value == "daly" {
+                        wants_daly = true;
+                        fixed_ms = None;
+                    } else {
+                        fixed_ms = Some(value.parse().map_err(|_| bad("interval"))?);
+                        wants_daly = false;
+                    }
+                }
+                "ckpt-cost-hint-ms" => {
+                    cost_prior = Duration::from_millis(
+                        value.parse().map_err(|_| bad("ckpt-cost-hint-ms"))?,
+                    )
+                }
+                "mtbf-ms" => {
+                    mtbf_ms = match value {
+                        "off" => None,
+                        n => Some(n.parse().map_err(|_| bad("mtbf-ms"))?),
+                    }
+                }
+                "max-kills" => max_kills = value.parse().map_err(|_| bad("max-kills"))?,
+                "straggler-timeout-ms" => {
+                    spec.straggler_timeout = Duration::from_millis(
+                        value.parse().map_err(|_| bad("straggler-timeout-ms"))?,
+                    )
+                }
+                "requeue-delay-ms" => {
+                    spec.requeue_delay = Duration::from_millis(
+                        value.parse().map_err(|_| bad("requeue-delay-ms"))?,
+                    )
+                }
+                other => {
+                    return Err(Error::Usage(format!(
+                        "campaign spec line {}: unknown key {other:?}",
+                        lineno + 1
+                    )))
+                }
+            }
+        }
+
+        spec.workload = if wants_cp2k {
+            WorkloadSpec::Cp2kScf { n: cp2k_n }
+        } else {
+            WorkloadSpec::Geant4 {
+                kind: g4_kind.expect("workload key parsed"),
+                version: g4_version,
+            }
+        };
+        spec.interval = if wants_daly {
+            IntervalPolicy::Daly { cost_prior }
+        } else if let Some(ms) = fixed_ms {
+            IntervalPolicy::Fixed(Duration::from_millis(ms))
+        } else {
+            spec.interval
+        };
+        spec.faults = match mtbf_ms {
+            Some(ms) => FaultPlan::exponential(Duration::from_millis(ms), max_kills),
+            None => FaultPlan::none(),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Reject specs the executor cannot run — or that the spec text
+    /// format cannot faithfully represent (a free-text value containing
+    /// a comment-opening `#` would silently truncate on the next
+    /// [`CampaignSpec::parse`] of its [`CampaignSpec::to_text`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.sessions == 0 {
+            return Err(Error::Usage("campaign needs sessions >= 1".into()));
+        }
+        if self.concurrency == 0 {
+            return Err(Error::Usage("campaign needs concurrency >= 1".into()));
+        }
+        if self.straggler_timeout.is_zero() {
+            return Err(Error::Usage(
+                "straggler-timeout-ms must be nonzero (sessions need time to run)".into(),
+            ));
+        }
+        if opens_comment(&self.name) {
+            return Err(Error::Usage(format!(
+                "campaign name {:?} contains a comment-opening '#' the spec text \
+                 format cannot represent",
+                self.name
+            )));
+        }
+        if let Some(wd) = &self.workdir {
+            if opens_comment(&wd.to_string_lossy()) {
+                return Err(Error::Usage(format!(
+                    "workdir {:?} contains a comment-opening '#' the spec text \
+                     format cannot represent",
+                    wd.display()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Render the spec as the `key = value` text [`CampaignSpec::parse`]
+    /// accepts (round-trips).
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        let mut kv = |k: &str, v: String| {
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(&v);
+            out.push('\n');
+        };
+        kv("name", self.name.clone());
+        kv("sessions", self.sessions.to_string());
+        kv("concurrency", self.concurrency.to_string());
+        match self.workload {
+            WorkloadSpec::Cp2kScf { n } => {
+                kv("workload", CP2K_SCF_LABEL.into());
+                kv("cp2k-n", n.to_string());
+            }
+            WorkloadSpec::Geant4 { kind, version } => {
+                kv("workload", kind.label());
+                kv(
+                    "g4",
+                    match version {
+                        G4Version::V10_5 => "10.5".into(),
+                        G4Version::V10_7 => "10.7".into(),
+                        G4Version::V11_0 => "11.0".into(),
+                    },
+                );
+            }
+        }
+        kv("substrate", self.substrate.name().into());
+        kv("steps", self.target_steps.to_string());
+        kv("seed", self.seed.to_string());
+        if let Some(wd) = &self.workdir {
+            kv("workdir", wd.to_string_lossy().into_owned());
+        }
+        kv("shared-workdir", (self.shared_workdir as u8).to_string());
+        kv(
+            "incremental",
+            match self.incremental {
+                None => "off".into(),
+                Some(n) => n.to_string(),
+            },
+        );
+        kv("gc-grace-ms", self.gc_grace.as_millis().to_string());
+        match self.interval {
+            IntervalPolicy::Fixed(d) => kv("interval", d.as_millis().to_string()),
+            IntervalPolicy::Daly { cost_prior } => {
+                kv("interval", "daly".into());
+                kv("ckpt-cost-hint-ms", cost_prior.as_millis().to_string());
+            }
+        }
+        match self.faults.mtbf {
+            None => kv("mtbf-ms", "off".into()),
+            Some(m) => {
+                kv("mtbf-ms", m.as_millis().to_string());
+                kv("max-kills", self.faults.max_kills_per_session.to_string());
+            }
+        }
+        kv(
+            "straggler-timeout-ms",
+            self.straggler_timeout.as_millis().to_string(),
+        );
+        kv("requeue-delay-ms", self.requeue_delay.as_millis().to_string());
+        out
+    }
+}
+
+/// Strip a `#` comment: only a `#` at the start of the line or preceded
+/// by whitespace opens one, so values like `run#3` survive parsing (and
+/// round-trip through [`CampaignSpec::to_text`]).
+fn strip_comment(line: &str) -> &str {
+    match comment_start(line) {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Byte index of the first comment-opening `#` (start of string or
+/// preceded by whitespace), if any.
+fn comment_start(s: &str) -> Option<usize> {
+    let bytes = s.as_bytes();
+    bytes.iter().enumerate().find_map(|(i, &b)| {
+        (b == b'#' && (i == 0 || bytes[i - 1] == b' ' || bytes[i - 1] == b'\t')).then_some(i)
+    })
+}
+
+/// Whether a free-text value would open a comment when rendered into the
+/// spec text format (and thus fail to round-trip).
+fn opens_comment(v: &str) -> bool {
+    comment_start(v).is_some()
+}
+
+fn parse_bool(v: &str) -> Option<bool> {
+    match v {
+        "1" | "true" | "yes" | "on" => Some(true),
+        "0" | "false" | "no" | "off" => Some(false),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_spec() {
+        let text = "\
+# a fleet
+name = smoke
+sessions = 64
+concurrency = 8
+workload = cp2k-scf
+cp2k-n = 12
+substrate = bare
+steps = 600        # per session
+seed = 41
+shared-workdir = 1
+incremental = 8
+gc-grace-ms = 250
+interval = daly
+ckpt-cost-hint-ms = 5
+mtbf-ms = 80
+max-kills = 2
+straggler-timeout-ms = 120000
+requeue-delay-ms = 10
+";
+        let s = CampaignSpec::parse(text).unwrap();
+        assert_eq!(s.name, "smoke");
+        assert_eq!(s.sessions, 64);
+        assert_eq!(s.concurrency, 8);
+        assert_eq!(s.workload, WorkloadSpec::Cp2kScf { n: 12 });
+        assert_eq!(s.target_steps, 600);
+        assert!(s.shared_workdir);
+        assert_eq!(s.incremental, Some(8));
+        assert_eq!(s.gc_grace, Duration::from_millis(250));
+        assert_eq!(
+            s.interval,
+            IntervalPolicy::Daly {
+                cost_prior: Duration::from_millis(5)
+            }
+        );
+        assert_eq!(s.faults.mtbf, Some(Duration::from_millis(80)));
+        assert_eq!(s.faults.max_kills_per_session, 2);
+    }
+
+    #[test]
+    fn round_trips_through_text() {
+        let mut spec = CampaignSpec {
+            sessions: 3,
+            interval: IntervalPolicy::Daly {
+                cost_prior: Duration::from_millis(7),
+            },
+            faults: FaultPlan::exponential(Duration::from_millis(90), 3),
+            incremental: Some(4),
+            shared_workdir: true,
+            ..Default::default()
+        };
+        assert_eq!(CampaignSpec::parse(&spec.to_text()).unwrap(), spec);
+        spec.workload = WorkloadSpec::Geant4 {
+            kind: WorkloadKind::WaterPhantom,
+            version: G4Version::V11_0,
+        };
+        spec.interval = IntervalPolicy::Fixed(Duration::from_millis(25));
+        spec.faults = FaultPlan::none();
+        assert_eq!(CampaignSpec::parse(&spec.to_text()).unwrap(), spec);
+    }
+
+    #[test]
+    fn unknown_keys_and_bad_values_are_errors() {
+        assert!(CampaignSpec::parse("frobnicate = 1").is_err());
+        assert!(CampaignSpec::parse("sessions = many").is_err());
+        assert!(CampaignSpec::parse("workload = not-a-workload").is_err());
+        assert!(CampaignSpec::parse("sessions = 0").is_err());
+        assert!(CampaignSpec::parse("just a line").is_err());
+    }
+
+    #[test]
+    fn hash_in_values_survives_but_spaced_comments_strip() {
+        let s = CampaignSpec::parse("name = run#3\nseed = 9 # trailing comment\n").unwrap();
+        assert_eq!(s.name, "run#3");
+        assert_eq!(s.seed, 9);
+        assert_eq!(CampaignSpec::parse(&s.to_text()).unwrap().name, "run#3");
+    }
+
+    #[test]
+    fn unrepresentable_comment_opening_values_are_rejected() {
+        // A name like "nightly #1" would silently truncate on the next
+        // parse of to_text — validate refuses instead.
+        let spec = CampaignSpec {
+            name: "nightly #1".into(),
+            ..Default::default()
+        };
+        assert!(spec.validate().is_err());
+        let spec = CampaignSpec {
+            name: "#lead".into(),
+            ..Default::default()
+        };
+        assert!(spec.validate().is_err());
+        let spec = CampaignSpec {
+            workdir: Some(PathBuf::from("/data/run #7")),
+            ..Default::default()
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn interval_is_last_one_wins_in_both_directions() {
+        let s = CampaignSpec::parse("interval = daly\ninterval = 500\n").unwrap();
+        assert_eq!(s.interval, IntervalPolicy::Fixed(Duration::from_millis(500)));
+        let s = CampaignSpec::parse("interval = 500\ninterval = daly\n").unwrap();
+        assert!(matches!(s.interval, IntervalPolicy::Daly { .. }));
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        CampaignSpec::default().validate().unwrap();
+        assert_eq!(CampaignSpec::parse("").unwrap(), CampaignSpec::default());
+    }
+}

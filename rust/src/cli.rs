@@ -81,6 +81,8 @@ subcommands:
   sbatch SCRIPT [--cluster-nodes N]                    simulate a batch script
   run --workload NAME --g4 VER --steps N [--preempt MS] [--workdir DIR]
       [--incremental [--full-every N]]                 run a workload under auto C/R
+  campaign [--spec FILE] [--sessions N] [--seed S] [--workdir DIR]
+      [--json] [--print-spec]                          run a fleet campaign
   fig2 [--ranks N]                                     container-startup table
   workloads                                            list workload names
   version";
@@ -101,6 +103,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("sbatch") => cmd_sbatch(&args[1..]),
         Some("run") => cmd_run(&args[1..]),
+        Some("campaign") => cmd_campaign(&args[1..]),
         Some("fig2") => cmd_fig2(&args[1..]),
         Some("workloads") => {
             for k in crate::workload::WorkloadKind::all() {
@@ -309,6 +312,49 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_campaign(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &["json", "print-spec"])?;
+    let mut spec = match o.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            crate::campaign::CampaignSpec::parse(&text)?
+        }
+        None => crate::campaign::CampaignSpec::default(),
+    };
+    // Command-line overrides on top of the (possibly default) spec.
+    if let Some(n) = o.get("sessions") {
+        spec.sessions = n.parse().map_err(|_| Error::Usage("bad --sessions".into()))?;
+    }
+    if let Some(s) = o.get("seed") {
+        spec.seed = s.parse().map_err(|_| Error::Usage("bad --seed".into()))?;
+    }
+    if let Some(wd) = o.get("workdir") {
+        spec.workdir = Some(PathBuf::from(wd));
+    }
+    spec.validate()?;
+    if o.has_flag("print-spec") {
+        print!("{}", spec.to_text());
+        return Ok(());
+    }
+    let report = crate::campaign::run_campaign(&spec)?;
+    if o.has_flag("json") {
+        print!("{}", report.to_json());
+        return Ok(());
+    }
+    println!(
+        "== campaign {:?}: {} sessions x {} (K={}, {}), seed {} ==\n",
+        spec.name,
+        spec.sessions,
+        spec.workload.label(),
+        spec.concurrency,
+        spec.substrate.name(),
+        spec.seed
+    );
+    println!("{}", report.table().render());
+    println!("{}", report.summary_table().render());
+    Ok(())
+}
+
 fn cmd_fig2(args: &[String]) -> Result<()> {
     let o = Opts::parse(args, &[])?;
     let max_ranks: u32 = o.get_or("ranks", "512").parse().unwrap_or(512);
@@ -365,5 +411,46 @@ mod tests {
         run(vec!["version".into()]).unwrap();
         run(vec!["workloads".into()]).unwrap();
         run(vec!["fig2".into(), "--ranks".into(), "8".into()]).unwrap();
+    }
+
+    #[test]
+    fn campaign_print_spec_and_overrides() {
+        run(vec![
+            "campaign".into(),
+            "--sessions".into(),
+            "5".into(),
+            "--print-spec".into(),
+        ])
+        .unwrap();
+        assert!(run(vec![
+            "campaign".into(),
+            "--sessions".into(),
+            "0".into(),
+            "--print-spec".into(),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn campaign_runs_a_tiny_fleet_from_a_spec_file() {
+        let dir = std::env::temp_dir().join(format!("ncr_cli_campaign_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec_path = dir.join("tiny.campaign");
+        std::fs::write(
+            &spec_path,
+            "name = cli-tiny\nsessions = 2\nconcurrency = 2\nsteps = 200\n\
+             interval = 10\nmtbf-ms = off\nstraggler-timeout-ms = 60000\n",
+        )
+        .unwrap();
+        run(vec![
+            "campaign".into(),
+            "--spec".into(),
+            spec_path.to_string_lossy().into_owned(),
+            "--workdir".into(),
+            dir.join("wd").to_string_lossy().into_owned(),
+            "--json".into(),
+        ])
+        .unwrap();
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

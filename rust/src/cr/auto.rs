@@ -76,6 +76,14 @@ pub struct CrPolicy {
     /// Defaults to 16 so flipping `incremental_ckpt` on inherits a sane
     /// anchor cadence.
     pub full_image_every: u32,
+    /// Chunk-store GC grace window applied at session teardown: chunks
+    /// younger than this are never reclaimed, protecting a concurrent
+    /// session (sharing the workdir's store) that stored chunks but has
+    /// not yet published the manifest referencing them. Campaigns with
+    /// fast session churn over one shared store tune this; the default
+    /// ([`crate::cr::session::GC_GRACE`], 10 min) comfortably exceeds any
+    /// plausible single checkpoint write.
+    pub gc_grace: Duration,
 }
 
 impl Default for CrPolicy {
@@ -91,6 +99,7 @@ impl Default for CrPolicy {
             scans_per_quantum: 1,
             incremental_ckpt: false,
             full_image_every: 16,
+            gc_grace: crate::cr::session::GC_GRACE,
         }
     }
 }

@@ -30,5 +30,5 @@ pub use app::CrApp;
 pub use auto::{AutoState, CrPolicy, CrReport};
 pub use jobscript::{consolidated_script, CrJobConfig};
 pub use module::{latest_images, start_coordinator, CrConfig};
-pub use session::{CrSession, CrSessionBuilder, CrStrategy, SessionStatus};
+pub use session::{CrSession, CrSessionBuilder, CrStrategy, SessionStatus, GC_GRACE};
 pub use substrate::Substrate;

@@ -60,13 +60,16 @@ const ATTACH_TIMEOUT: Duration = Duration::from_secs(10);
 /// Poll interval for progress checks in the drive loops.
 const POLL: Duration = Duration::from_millis(5);
 
-/// Chunks younger than this survive store GC: a concurrent session sharing
-/// the workdir may have stored (or mtime-refreshed, for dedup reuse) them
-/// but not yet published the manifest that references them. The window
-/// must comfortably exceed the longest plausible single checkpoint write —
-/// a write slower than this while another session tears down concurrently
-/// is the remaining (documented) exposure.
-const GC_GRACE: Duration = Duration::from_secs(600);
+/// Default for [`CrPolicy::gc_grace`] / [`CrSessionBuilder::gc_grace`]:
+/// chunks younger than this survive store GC. A concurrent session
+/// sharing the workdir may have stored (or mtime-refreshed, for dedup
+/// reuse) chunks but not yet published the manifest that references
+/// them, so the window must comfortably exceed the longest plausible
+/// single checkpoint write — a write slower than the configured grace
+/// while another session tears down concurrently is the remaining
+/// (documented) exposure. Campaigns that tear many sessions down against
+/// one shared chunk store tighten or loosen this through the builder.
+pub const GC_GRACE: Duration = Duration::from_secs(600);
 
 /// Process-wide session nonce allocator. Combined with the OS process id
 /// so two sessions never mint the same job id or image-name prefix, even
@@ -112,6 +115,7 @@ pub struct CrSessionBuilder<A: CrApp> {
     target_steps: u64,
     seed: u64,
     incremental: Option<u32>,
+    gc_grace: Option<Duration>,
 }
 
 impl<A: CrApp> CrSessionBuilder<A> {
@@ -163,12 +167,28 @@ impl<A: CrApp> CrSessionBuilder<A> {
         self
     }
 
+    /// Override the chunk-store GC grace window for this session's
+    /// teardown (default [`GC_GRACE`], or [`CrPolicy::gc_grace`] for auto
+    /// sessions). Campaigns with fast session teardown sharing one chunk
+    /// store tighten it to reclaim space promptly, or loosen it when
+    /// checkpoint writes can outlast the default window.
+    pub fn gc_grace(mut self, grace: Duration) -> Self {
+        self.gc_grace = Some(grace);
+        self
+    }
+
     /// Validate and assemble the session (creates the workdir).
     pub fn build(self) -> Result<CrSession<A>> {
         let workdir = self.workdir.ok_or_else(|| {
             Error::Workload("CrSession needs a workdir (builder .workdir(..))".into())
         })?;
         std::fs::create_dir_all(&workdir)?;
+        // Builder override wins; auto sessions otherwise inherit their
+        // policy's window; manual sessions fall back to the default.
+        let gc_grace = self.gc_grace.unwrap_or(match &self.strategy {
+            CrStrategy::Auto(p) => p.gc_grace,
+            CrStrategy::Manual => GC_GRACE,
+        });
         Ok(CrSession {
             app: self.app,
             substrate: self.substrate,
@@ -177,6 +197,7 @@ impl<A: CrApp> CrSessionBuilder<A> {
             target_steps: self.target_steps,
             seed: self.seed,
             incremental: self.incremental,
+            gc_grace,
             nonce: next_nonce(),
             incarnation: 0,
             active: None,
@@ -202,6 +223,7 @@ pub struct CrSession<A: CrApp> {
     target_steps: u64,
     seed: u64,
     incremental: Option<u32>,
+    gc_grace: Duration,
     nonce: u64,
     incarnation: u32,
     active: Option<ActiveJob<A::State>>,
@@ -220,6 +242,7 @@ impl<A: CrApp> CrSession<A> {
             target_steps: 0,
             seed: 0,
             incremental: None,
+            gc_grace: None,
         }
     }
 
@@ -423,6 +446,14 @@ impl<A: CrApp> CrSession<A> {
         self.with_state(|s| s.clone())
     }
 
+    /// The LDMS series accumulated across this session's *finished*
+    /// incarnations (each incarnation's sampler is folded in at
+    /// teardown — an active incarnation's samples appear after the next
+    /// `kill`/`finish`). Campaign reports roll these up fleet-wide.
+    pub fn series(&self) -> SampledSeries {
+        self.series_acc.clone().unwrap_or_default()
+    }
+
     /// Verify a final state bitwise against an uninterrupted reference run
     /// of this session's `(target_steps, seed)` — delegates to
     /// [`CrApp::verify_final`].
@@ -471,15 +502,17 @@ impl<A: CrApp> CrSession<A> {
 
     /// Reclaim unreferenced chunks from the workdir's content-addressed
     /// store (no-op when no incremental image was ever written). Chunks
-    /// younger than [`GC_GRACE`] are spared so concurrent sessions sharing
-    /// the workdir cannot lose chunks stored ahead of their manifest.
+    /// younger than the session's configured grace window (builder
+    /// [`CrSessionBuilder::gc_grace`] / [`CrPolicy::gc_grace`], default
+    /// [`GC_GRACE`]) are spared so concurrent sessions sharing the
+    /// workdir cannot lose chunks stored ahead of their manifest.
     fn gc_store(&self) {
         let ckpt_dir = self.workdir.join("ckpt");
         let store = ImageStore::for_images(&ckpt_dir);
         if !store.root().exists() {
             return;
         }
-        match store.gc(&ckpt_dir, GC_GRACE) {
+        match store.gc(&ckpt_dir, self.gc_grace) {
             Ok(st) if st.deleted > 0 => log::debug!(
                 "session {}: store GC reclaimed {} chunks ({} bytes)",
                 self.nonce,
@@ -773,6 +806,42 @@ mod tests {
             .unwrap();
         let err = s.run().unwrap_err();
         assert!(err.to_string().contains("CrStrategy::Auto"), "{err}");
+    }
+
+    #[test]
+    fn gc_grace_resolves_builder_then_policy_then_default() {
+        let a = app();
+        let s = CrSession::builder(&a)
+            .workdir(workdir("gcg_default"))
+            .build()
+            .unwrap();
+        assert_eq!(s.gc_grace, GC_GRACE);
+        let s = CrSession::builder(&a)
+            .workdir(workdir("gcg_builder"))
+            .gc_grace(Duration::from_millis(5))
+            .build()
+            .unwrap();
+        assert_eq!(s.gc_grace, Duration::from_millis(5));
+        let s = CrSession::builder(&a)
+            .policy(CrPolicy {
+                gc_grace: Duration::from_secs(1),
+                ..Default::default()
+            })
+            .workdir(workdir("gcg_policy"))
+            .build()
+            .unwrap();
+        assert_eq!(s.gc_grace, Duration::from_secs(1));
+        // The builder override beats the policy.
+        let s = CrSession::builder(&a)
+            .policy(CrPolicy {
+                gc_grace: Duration::from_secs(1),
+                ..Default::default()
+            })
+            .gc_grace(Duration::from_millis(7))
+            .workdir(workdir("gcg_both"))
+            .build()
+            .unwrap();
+        assert_eq!(s.gc_grace, Duration::from_millis(7));
     }
 
     #[test]

@@ -131,11 +131,24 @@ impl Coordinator {
         std::fs::create_dir_all(&config.ckpt_dir)?;
 
         // Rendezvous file: `dmtcp_command.<jobid>` with "host port".
+        // Written to a temp name and renamed into place: rename is atomic
+        // on POSIX filesystems, so a concurrent reader (a job script
+        // polling for the coordinator) sees either no file or a complete
+        // "host port" line — never a partially written one.
         let command_file = match &config.jobid {
             Some(jobid) => {
                 let p = config.command_file_dir.join(format!("dmtcp_command.{jobid}"));
                 std::fs::create_dir_all(&config.command_file_dir)?;
-                std::fs::write(&p, format!("{} {}\n", addr.ip(), addr.port()))?;
+                let tmp = config.command_file_dir.join(format!(
+                    ".dmtcp_command.{jobid}.tmp.{}.{}",
+                    std::process::id(),
+                    addr.port()
+                ));
+                std::fs::write(&tmp, format!("{} {}\n", addr.ip(), addr.port()))?;
+                if let Err(e) = std::fs::rename(&tmp, &p) {
+                    let _ = std::fs::remove_file(&tmp);
+                    return Err(e.into());
+                }
                 Some(p)
             }
             None => None,
@@ -563,4 +576,79 @@ pub fn client_table(coord: &Coordinator) -> BTreeMap<u64, (String, u64, u32)> {
         .iter()
         .map(|(&v, c)| (v, (c.name.clone(), c.real_pid, c.n_threads)))
         .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+
+    /// Regression test for the rendezvous-file race: the file is renamed
+    /// into place atomically, so a reader polling it while coordinators
+    /// come and go must only ever observe a complete "host port" line
+    /// (or no file at all) — never a prefix of one.
+    #[test]
+    fn rendezvous_file_is_never_partially_visible() {
+        let dir = std::env::temp_dir().join(format!("ncr_coord_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("dmtcp_command.race");
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let reader = {
+            let (path, stop) = (path.clone(), Arc::clone(&stop));
+            std::thread::spawn(move || {
+                let mut observed = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    match std::fs::read_to_string(&path) {
+                        Ok(content) => {
+                            observed += 1;
+                            // A visible file must be the complete line.
+                            assert!(
+                                content.ends_with('\n'),
+                                "partial rendezvous content: {content:?}"
+                            );
+                            let mut parts = content.trim().split(' ');
+                            let host = parts.next().expect("host field");
+                            let port = parts.next().expect("port field");
+                            assert!(host.parse::<std::net::IpAddr>().is_ok(), "{content:?}");
+                            assert!(port.parse::<u16>().is_ok(), "{content:?}");
+                            assert_eq!(parts.next(), None, "{content:?}");
+                        }
+                        Err(e) => {
+                            assert_eq!(
+                                e.kind(),
+                                std::io::ErrorKind::NotFound,
+                                "unexpected read error: {e}"
+                            );
+                        }
+                    }
+                }
+                observed
+            })
+        };
+
+        for _ in 0..40 {
+            let coord = Coordinator::start(CoordinatorConfig {
+                ckpt_dir: dir.join("ckpt"),
+                jobid: Some("race".into()),
+                command_file_dir: dir.clone(),
+                ..Default::default()
+            })
+            .unwrap();
+            assert_eq!(coord.command_file(), Some(path.as_path()));
+            drop(coord); // shutdown removes the file
+        }
+        stop.store(true, Ordering::Relaxed);
+        let observed = reader.join().expect("reader panicked (partial content?)");
+        assert!(observed > 0, "reader never saw the rendezvous file");
+
+        // No staging debris: every temp file was renamed or cleaned up.
+        let debris: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(debris.is_empty(), "staging files left behind: {debris:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

@@ -10,6 +10,9 @@
 //! [`cr::app::CrApp`] trait and [`cr::substrate::Substrate`] execution
 //! environments — plus every substrate it depends on, built from scratch:
 //!
+//! * [`campaign`] — fleet-scale orchestration (L4) over sessions: a
+//!   bounded concurrent executor, seeded failure injection, Young/Daly
+//!   checkpoint-interval auto-tuning, aggregated campaign reports.
 //! * [`dmtcp`] — a DMTCP-analog: central coordinator over real TCP sockets,
 //!   per-process checkpoint threads, barrier protocol, gzip'd+CRC'd
 //!   checkpoint images, PID/FD virtualization, plugin event hooks.
@@ -33,6 +36,8 @@
 //! every figure/table of the paper to modules and bench targets, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
+#[deny(missing_docs)]
+pub mod campaign;
 pub mod cli;
 pub mod container;
 #[deny(missing_docs)]

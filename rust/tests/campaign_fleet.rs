@@ -1,0 +1,237 @@
+//! The campaign subsystem's acceptance suite: a seeded fleet of 64 live
+//! sessions with injected kills completes deterministically — every
+//! surviving session's final state bit-identical to its failure-free
+//! single-session reference — plus the fleet-level properties the
+//! executor guarantees (shared-workdir isolation, chunk-store accounting,
+//! Daly tuning from measured costs, cancellation, per-substrate runs).
+
+use std::time::Duration;
+
+use nersc_cr::campaign::{
+    run_campaign, run_campaign_cancellable, CampaignSpec, CancelToken, FaultPlan, IntervalPolicy,
+    SessionDisposition, SubstrateSpec, WorkloadSpec,
+};
+
+fn workdir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "ncr_fleet_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+/// The headline acceptance cell: 64 sessions, one shared workdir and
+/// chunk store, incremental images, seeded exponential kills. Everything
+/// completes and verifies bitwise.
+#[test]
+fn fleet_of_64_with_injected_kills_is_bit_identical() {
+    let wd = workdir("64");
+    let spec = CampaignSpec {
+        name: "accept-64".into(),
+        sessions: 64,
+        concurrency: 8,
+        workload: WorkloadSpec::Cp2kScf { n: 12 },
+        target_steps: 500,
+        seed: 640_000,
+        workdir: Some(wd.clone()),
+        shared_workdir: true,
+        incremental: Some(4),
+        interval: IntervalPolicy::Fixed(Duration::from_millis(8)),
+        faults: FaultPlan::exponential(Duration::from_millis(30), 2),
+        straggler_timeout: Duration::from_secs(300),
+        requeue_delay: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let report = run_campaign(&spec).unwrap();
+    assert_eq!(report.sessions.len(), 64);
+    for s in &report.sessions {
+        assert_eq!(
+            s.disposition,
+            SessionDisposition::Completed,
+            "s{:03}: {:?}",
+            s.index,
+            s.disposition
+        );
+        assert!(
+            s.verified,
+            "s{:03} diverged from its failure-free reference",
+            s.index
+        );
+        assert_eq!(s.steps_done, 500, "s{:03} under-ran", s.index);
+    }
+    // The fault plan must have actually exercised the kill/restart path
+    // somewhere in a 64-session fleet.
+    assert!(report.kills() > 0, "no kill ever landed across 64 sessions");
+    assert!(
+        report.sessions.iter().any(|s| s.incarnations > 1),
+        "no session ever restarted"
+    );
+    // Kills cost work; availability reflects it but stays positive.
+    let avail = report.availability();
+    assert!(avail > 0.0 && avail <= 1.0, "availability {avail}");
+    // Incremental accounting flowed through the coordinators.
+    let (stored, logical, written, _deduped) = report.store_totals();
+    assert!(stored > 0 && logical > 0 && written > 0);
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// Determinism of the orchestration inputs: the same spec replays the
+/// same per-session seeds and kill schedules (wall-clock jitter may vary
+/// incarnation counts, but the work and its verification are fixed).
+#[test]
+fn replayed_campaign_reproduces_outcomes() {
+    let run = |wd: &std::path::Path| {
+        let spec = CampaignSpec {
+            name: "replay".into(),
+            sessions: 6,
+            concurrency: 3,
+            workload: WorkloadSpec::Cp2kScf { n: 10 },
+            target_steps: 300,
+            seed: 77,
+            workdir: Some(wd.to_path_buf()),
+            faults: FaultPlan::exponential(Duration::from_millis(20), 1),
+            interval: IntervalPolicy::Fixed(Duration::from_millis(6)),
+            ..Default::default()
+        };
+        run_campaign(&spec).unwrap()
+    };
+    let (wd_a, wd_b) = (workdir("replay_a"), workdir("replay_b"));
+    let a = run(&wd_a);
+    let b = run(&wd_b);
+    let summary = |r: &nersc_cr::campaign::CampaignReport| {
+        r.sessions
+            .iter()
+            .map(|s| (s.index, s.seed, s.disposition.clone(), s.verified, s.steps_done))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(summary(&a), summary(&b));
+    std::fs::remove_dir_all(&wd_a).ok();
+    std::fs::remove_dir_all(&wd_b).ok();
+}
+
+/// Daly-tuned cadence on the live stack: the tuner must have measured
+/// real checkpoint costs and produced a clamped, nonzero interval.
+#[test]
+fn daly_tuned_fleet_measures_costs_and_completes() {
+    let wd = workdir("daly");
+    let spec = CampaignSpec {
+        name: "daly-live".into(),
+        sessions: 6,
+        concurrency: 3,
+        workload: WorkloadSpec::Cp2kScf { n: 12 },
+        target_steps: 800,
+        seed: 909,
+        workdir: Some(wd.clone()),
+        interval: IntervalPolicy::Daly {
+            cost_prior: Duration::from_millis(3),
+        },
+        faults: FaultPlan::exponential(Duration::from_millis(50), 2),
+        straggler_timeout: Duration::from_secs(180),
+        ..Default::default()
+    };
+    let report = run_campaign(&spec).unwrap();
+    assert_eq!(report.completed(), 6, "{:?}", report.summary_table().render());
+    assert_eq!(report.verified(), 6);
+    for s in &report.sessions {
+        assert!(s.final_interval_ms > 0, "s{}: no tuned interval", s.index);
+        assert!(
+            s.checkpoints == 0 || s.measured_ckpt_cost_ms < 60_000,
+            "s{}: absurd measured cost",
+            s.index
+        );
+    }
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// The containerized path: a small podman-hpc fleet with kills completes
+/// bit-identically (DMTCP-in-image and volume constraints enforced per
+/// session launch and restart).
+#[test]
+fn containerized_fleet_with_kills_completes() {
+    let wd = workdir("podman");
+    let spec = CampaignSpec {
+        name: "podman-fleet".into(),
+        sessions: 4,
+        concurrency: 2,
+        workload: WorkloadSpec::Cp2kScf { n: 12 },
+        substrate: SubstrateSpec::PodmanHpc,
+        target_steps: 400,
+        seed: 4_100,
+        workdir: Some(wd.clone()),
+        interval: IntervalPolicy::Fixed(Duration::from_millis(8)),
+        faults: FaultPlan::exponential(Duration::from_millis(25), 1),
+        ..Default::default()
+    };
+    let report = run_campaign(&spec).unwrap();
+    assert_eq!(report.completed(), 4, "{}", report.table().render());
+    assert_eq!(report.verified(), 4);
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// LDMS rollups flow out of the fleet: sessions that restarted folded
+/// sampler series across incarnations.
+#[test]
+fn ldms_rollup_covers_the_fleet() {
+    let wd = workdir("ldms");
+    let spec = CampaignSpec {
+        name: "ldms".into(),
+        sessions: 3,
+        concurrency: 3,
+        workload: WorkloadSpec::Cp2kScf { n: 10 },
+        target_steps: 400,
+        seed: 5_500,
+        workdir: Some(wd.clone()),
+        interval: IntervalPolicy::Fixed(Duration::from_millis(8)),
+        faults: FaultPlan::exponential(Duration::from_millis(30), 1),
+        ..Default::default()
+    };
+    let report = run_campaign(&spec).unwrap();
+    assert_eq!(report.completed(), 3);
+    let roll = report.ldms_rollup();
+    assert!(roll.samples > 0, "no LDMS samples folded");
+    assert!(roll.peak_memory_bytes > 0.0);
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// Cancellation mid-flight: the pool drains promptly and reports every
+/// session (none lost, none left running).
+#[test]
+fn cancelled_fleet_reports_every_session() {
+    let wd = workdir("cancel");
+    let spec = CampaignSpec {
+        name: "cancel".into(),
+        sessions: 6,
+        concurrency: 3,
+        workload: WorkloadSpec::Cp2kScf { n: 10 },
+        // Too much work to finish before the cancel lands.
+        target_steps: 5_000_000,
+        seed: 66,
+        workdir: Some(wd.clone()),
+        straggler_timeout: Duration::from_secs(600),
+        ..Default::default()
+    };
+    let cancel = CancelToken::new();
+    let killer = cancel.clone();
+    std::thread::scope(|sc| {
+        sc.spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            killer.cancel();
+        });
+        let report = run_campaign_cancellable(&spec, &cancel).unwrap();
+        assert_eq!(report.sessions.len(), 6);
+        assert_eq!(report.completed(), 0);
+        for s in &report.sessions {
+            assert_eq!(
+                s.disposition,
+                SessionDisposition::Cancelled,
+                "s{}: {:?}",
+                s.index,
+                s.disposition
+            );
+        }
+    });
+    std::fs::remove_dir_all(&wd).ok();
+}

@@ -362,3 +362,88 @@ fn manual_incremental_session_restarts_from_v2_images() {
     assert!(store_root.exists(), "store never materialized");
     std::fs::remove_dir_all(&wd).ok();
 }
+
+/// Count real chunk files (not staging debris) under a store root.
+fn count_chunks(store_root: &Path) -> usize {
+    let mut n = 0;
+    if let Ok(buckets) = std::fs::read_dir(store_root) {
+        for b in buckets.flatten() {
+            if let Ok(files) = std::fs::read_dir(b.path()) {
+                n += files
+                    .flatten()
+                    .filter(|f| !f.file_name().to_string_lossy().contains(".tmp."))
+                    .count();
+            }
+        }
+    }
+    n
+}
+
+#[test]
+fn gc_grace_window_is_configurable_per_session() {
+    // The shared-workdir GC race, as a regression test: session A stores
+    // chunks; its manifests then vanish (models "stored ahead of the
+    // manifest publish"). A session tearing down against the same store
+    // with the default grace must spare those fresh orphans; one
+    // configured with a zero grace (a campaign that wants prompt
+    // reclamation and accepts the race) must reclaim them.
+    let wd = workdir("gcgrace");
+    let app = Cp2kApp::new(12);
+
+    // A: mint fresh chunks, tear down without a finish() (no GC).
+    let mut a = CrSession::builder(&app)
+        .incremental_images(0)
+        .workdir(&wd)
+        .target_steps(50_000)
+        .seed(71)
+        .build()
+        .unwrap();
+    a.submit().unwrap();
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while a.monitor().unwrap().steps_done == 0 {
+        assert!(std::time::Instant::now() < deadline, "no progress");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    a.checkpoint_now().unwrap();
+    let images = a.session_images().unwrap();
+    assert!(!images.is_empty());
+    a.kill().unwrap();
+    for img in &images {
+        std::fs::remove_file(img).unwrap(); // orphan A's chunks
+    }
+    drop(a);
+
+    let store_root = wd.join("ckpt").join("store");
+    let orphans = count_chunks(&store_root);
+    assert!(orphans > 0, "A stored no chunks");
+
+    // B: default grace (10 min) — the fresh orphans must survive.
+    let mut b = CrSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(0)
+        .seed(72)
+        .build()
+        .unwrap();
+    b.finish();
+    assert_eq!(
+        count_chunks(&store_root),
+        orphans,
+        "default grace must spare fresh unreferenced chunks"
+    );
+
+    // C: zero grace — prompt reclamation takes them all.
+    let mut c = CrSession::builder(&app)
+        .gc_grace(Duration::ZERO)
+        .workdir(&wd)
+        .target_steps(0)
+        .seed(73)
+        .build()
+        .unwrap();
+    c.finish();
+    assert_eq!(
+        count_chunks(&store_root),
+        0,
+        "zero grace must reclaim unreferenced chunks immediately"
+    );
+    std::fs::remove_dir_all(&wd).ok();
+}
