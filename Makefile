@@ -21,6 +21,7 @@ bench:
 	cargo bench --bench results_matrix
 	cargo bench --bench incremental_ckpt
 	cargo bench --bench campaign_sweep
+	cargo bench --bench gang_scale
 
 # AOT-lower the L2 model to HLO text for the PJRT backend (needs jax).
 artifacts:

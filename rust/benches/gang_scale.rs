@@ -1,0 +1,200 @@
+//! `gang_scale` — gang checkpoint cost vs rank count, MANA on/off.
+//!
+//! For each rank count, one gang of halo-stencil ranks is driven live:
+//! submit → mid-run gang checkpoint (timed) → kill → gang restart from
+//! the cut → run to completion → bitwise verification against the
+//! uninterrupted reference. Both MANA modes run at every width.
+//!
+//! Self-checks (exit nonzero on violation):
+//! * every gang restores bit-identical, at every width, in both modes;
+//! * with MANA lower-half exclusion, total image bytes are strictly
+//!   smaller than whole-process images at the same width — per rank;
+//! * image bytes grow with rank count within a mode (more ranks, more
+//!   state).
+//!
+//! `BENCH_SMOKE=1` shrinks the sweep so CI exercises the full code path
+//! on every push.
+
+use std::time::{Duration, Instant};
+
+use nersc_cr::cr::GangSession;
+use nersc_cr::report::{bench_smoke, emit_bench_json, human_bytes, Table};
+use nersc_cr::workload::StencilApp;
+
+const CELLS_PER_RANK: usize = 32;
+const ENDPOINT_BYTES: usize = 64 * 1024;
+const TARGET_STEPS: u64 = 400;
+
+struct Sample {
+    ranks: u32,
+    mana: bool,
+    ckpt_secs: f64,
+    image_bytes: u64,
+    per_rank_bytes: Vec<u64>,
+    verified: bool,
+}
+
+fn run_gang(ranks: u32, mana: bool) -> Sample {
+    let app = StencilApp::new(ranks, CELLS_PER_RANK).endpoint_bytes(ENDPOINT_BYTES);
+    let wd = std::env::temp_dir().join(format!(
+        "ncr_gang_scale_{}_{}_{}",
+        std::process::id(),
+        ranks,
+        mana
+    ));
+    std::fs::create_dir_all(&wd).expect("bench workdir");
+    let mut session = GangSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(TARGET_STEPS)
+        .seed(2024)
+        .mana_exclusion(mana)
+        .build()
+        .expect("build gang session");
+    session.submit().expect("submit gang");
+
+    // Let the gang get off step 0, then take the timed cut. Only the
+    // successful barrier is timed — retry sleeps must not bill into the
+    // measured checkpoint cost.
+    std::thread::sleep(Duration::from_millis(10));
+    let (ck, ckpt_secs) = loop {
+        let t0 = Instant::now();
+        match session.checkpoint_now() {
+            Ok(ck) => break (ck, t0.elapsed().as_secs_f64()),
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    };
+    let per_rank_bytes: Vec<u64> = ck.manifest.ranks.iter().map(|r| r.stored_bytes).collect();
+    let image_bytes = ck.manifest.stored_bytes();
+
+    // Kill the whole gang and restart it from the cut.
+    session.kill().expect("kill gang");
+    session
+        .resubmit_from_checkpoint()
+        .expect("gang restart from the cut");
+    session
+        .wait_done(Duration::from_secs(300))
+        .expect("gang completion");
+    let finals = session.final_states().expect("final states");
+    let verified = session.verify_final(&finals).is_ok();
+    session.finish();
+    std::fs::remove_dir_all(&wd).ok();
+    Sample {
+        ranks,
+        mana,
+        ckpt_secs,
+        image_bytes,
+        per_rank_bytes,
+        verified,
+    }
+}
+
+fn main() {
+    let rank_counts: Vec<u32> = if bench_smoke() {
+        vec![2, 4]
+    } else {
+        vec![2, 4, 8]
+    };
+    let mut samples = Vec::new();
+    for &ranks in &rank_counts {
+        for mana in [true, false] {
+            samples.push(run_gang(ranks, mana));
+        }
+    }
+
+    let mut t = Table::new(&[
+        "ranks",
+        "mana",
+        "ckpt (s)",
+        "image bytes",
+        "bytes/rank",
+        "bitwise",
+    ]);
+    for s in &samples {
+        t.row(&[
+            s.ranks.to_string(),
+            if s.mana { "on" } else { "off" }.to_string(),
+            format!("{:.4}", s.ckpt_secs),
+            human_bytes(s.image_bytes),
+            human_bytes(s.image_bytes / s.ranks as u64),
+            if s.verified { "ok" } else { "DIVERGED" }.to_string(),
+        ]);
+    }
+    println!("== gang_scale: checkpoint cost vs rank count, MANA ablation ==\n");
+    println!("{}", t.render());
+
+    // ---- self-checks ------------------------------------------------------
+    let mut failures = Vec::new();
+    for s in &samples {
+        if !s.verified {
+            failures.push(format!(
+                "ranks={} mana={}: restore diverged from reference",
+                s.ranks, s.mana
+            ));
+        }
+    }
+    for &ranks in &rank_counts {
+        let mana = samples.iter().find(|s| s.ranks == ranks && s.mana).unwrap();
+        let full = samples.iter().find(|s| s.ranks == ranks && !s.mana).unwrap();
+        for (rank, (m, f)) in mana
+            .per_rank_bytes
+            .iter()
+            .zip(&full.per_rank_bytes)
+            .enumerate()
+        {
+            if m >= f {
+                failures.push(format!(
+                    "ranks={ranks} rank {rank}: MANA image {m} B not strictly \
+                     smaller than whole-process {f} B"
+                ));
+            }
+        }
+    }
+    for mana in [true, false] {
+        let mut in_mode: Vec<&Sample> = samples.iter().filter(|s| s.mana == mana).collect();
+        in_mode.sort_by_key(|s| s.ranks);
+        for pair in in_mode.windows(2) {
+            if pair[1].image_bytes <= pair[0].image_bytes {
+                failures.push(format!(
+                    "mana={mana}: image bytes not growing with rank count \
+                     ({} ranks: {} B, {} ranks: {} B)",
+                    pair[0].ranks, pair[0].image_bytes, pair[1].ranks, pair[1].image_bytes
+                ));
+            }
+        }
+    }
+
+    let widest = samples
+        .iter()
+        .filter(|s| s.ranks == *rank_counts.last().unwrap())
+        .collect::<Vec<_>>();
+    let mana_w = widest.iter().find(|s| s.mana).unwrap();
+    let full_w = widest.iter().find(|s| !s.mana).unwrap();
+    emit_bench_json(
+        "gang_scale",
+        &[
+            ("max_ranks", *rank_counts.last().unwrap() as f64),
+            ("mana_image_bytes", mana_w.image_bytes as f64),
+            ("full_image_bytes", full_w.image_bytes as f64),
+            (
+                "mana_shrink_ratio",
+                full_w.image_bytes as f64 / mana_w.image_bytes.max(1) as f64,
+            ),
+            ("mana_ckpt_secs", mana_w.ckpt_secs),
+            ("full_ckpt_secs", full_w.ckpt_secs),
+            (
+                "all_verified",
+                samples.iter().all(|s| s.verified) as u8 as f64,
+            ),
+        ],
+    )
+    .expect("emit bench json");
+
+    if !failures.is_empty() {
+        eprintln!("gang_scale self-checks FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+    println!("self-checks passed: {} gangs, all bit-identical", samples.len());
+}

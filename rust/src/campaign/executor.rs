@@ -28,9 +28,10 @@ use crate::campaign::report::{CampaignReport, SessionDisposition, SessionOutcome
 use crate::campaign::spec::{CampaignSpec, SubstrateSpec, WorkloadSpec};
 use crate::campaign::tune::{DalyTuner, IntervalPolicy};
 use crate::container::{Image, PodmanHpc, Registry, RunSpec, Shifter, EMBED_DMTCP_SNIPPET};
-use crate::cr::{CrApp, CrSession, Substrate};
+use crate::cr::{CrApp, CrSession, GangApp, GangSession, Substrate};
 use crate::error::Result;
-use crate::workload::{Cp2kApp, G4App};
+use crate::util::rng::SplitMix64;
+use crate::workload::{Cp2kApp, G4App, StencilApp};
 
 /// Poll cadence of the per-session drive loop.
 const POLL: Duration = Duration::from_millis(2);
@@ -83,6 +84,12 @@ pub fn run_campaign_cancellable(
             let app = G4App::build(kind, version, h.manifest().grid_d);
             run_fleet(spec, &app, cancel)
         }
+        WorkloadSpec::HaloStencil { cells_per_rank } => {
+            // Each worker needs its own app instance: the fabric inside a
+            // StencilApp is per-gang, and concurrent gangs must not share
+            // a communication plane.
+            run_gang_fleet(spec, cells_per_rank, cancel)
+        }
     }
 }
 
@@ -97,11 +104,24 @@ pub fn run_fleet<A: CrApp + Sync>(
     app: &A,
     cancel: &CancelToken,
 ) -> Result<CampaignReport> {
+    run_session_pool(spec, "ncr_campaign", |i, root| {
+        drive_session(app, spec, i, root, cancel)
+    })
+}
+
+/// The bounded worker pool behind [`run_fleet`] and [`run_gang_fleet`]:
+/// `drive(index, root)` produces one session's outcome; the pool fills
+/// every slot, so the returned report always covers every session.
+fn run_session_pool(
+    spec: &CampaignSpec,
+    root_tag: &str,
+    drive: impl Fn(u32, &Path) -> SessionOutcome + Sync,
+) -> Result<CampaignReport> {
     spec.validate()?;
     let root = match &spec.workdir {
         Some(p) => p.clone(),
         None => std::env::temp_dir().join(format!(
-            "ncr_campaign_{}_{}",
+            "{root_tag}_{}_{}",
             std::process::id(),
             std::time::SystemTime::now()
                 .duration_since(std::time::UNIX_EPOCH)
@@ -122,7 +142,7 @@ pub fn run_fleet<A: CrApp + Sync>(
                 if i >= spec.sessions {
                     break;
                 }
-                let outcome = drive_session(app, spec, i, &root, cancel);
+                let outcome = drive(i, &root);
                 outcomes.lock().expect("outcomes poisoned")[i as usize] = Some(outcome);
             });
         }
@@ -248,6 +268,7 @@ fn drive_session<A: CrApp>(
         index,
         seed,
         disposition: SessionDisposition::Failed("did not start".into()),
+        ranks: 1,
         verified: false,
         incarnations: 0,
         kills: 0,
@@ -369,6 +390,187 @@ fn drive_session_inner<A: CrApp>(
         out.verified = app
             .verify_final(&final_state, spec.target_steps, seed)
             .is_ok();
+        out.disposition = SessionDisposition::Completed;
+    } else {
+        session.finish();
+        out.disposition = if cancel.is_cancelled() {
+            SessionDisposition::Cancelled
+        } else {
+            SessionDisposition::Straggler
+        };
+    }
+    out.series = session.series();
+    Ok(())
+}
+
+/// Drive a fleet of `spec.sessions` *gangs* of `spec.ranks` halo-stencil
+/// ranks each, on the same bounded pool, with the same seeding contract
+/// as [`run_fleet`]. Each worker builds its own [`StencilApp`] — a gang's
+/// fabric is private to it.
+pub fn run_gang_fleet(
+    spec: &CampaignSpec,
+    cells_per_rank: usize,
+    cancel: &CancelToken,
+) -> Result<CampaignReport> {
+    run_session_pool(spec, "ncr_gangfleet", |i, root| {
+        drive_gang(spec, cells_per_rank, i, root, cancel)
+    })
+}
+
+/// Drive one gang start to finish; every failure mode lands in the
+/// outcome's disposition, mirroring [`drive_session`].
+fn drive_gang(
+    spec: &CampaignSpec,
+    cells_per_rank: usize,
+    index: u32,
+    root: &Path,
+    cancel: &CancelToken,
+) -> SessionOutcome {
+    let seed = spec.seed.wrapping_add(index as u64);
+    let wd: PathBuf = if spec.shared_workdir {
+        root.to_path_buf()
+    } else {
+        root.join(format!("g{index:03}"))
+    };
+    let mut out = SessionOutcome {
+        index,
+        seed,
+        disposition: SessionDisposition::Failed("did not start".into()),
+        ranks: spec.ranks,
+        verified: false,
+        incarnations: 0,
+        kills: 0,
+        checkpoints: 0,
+        steps_done: 0,
+        target_steps: spec.target_steps,
+        steps_lost: 0,
+        wall_secs: 0.0,
+        stored_bytes: 0,
+        logical_bytes: 0,
+        chunks_written: 0,
+        chunks_deduped: 0,
+        final_interval_ms: 0,
+        measured_ckpt_cost_ms: 0,
+        series: Default::default(),
+    };
+    let t0 = Instant::now();
+    let mut cadence = Cadence::for_spec(spec);
+    let mut injector = spec.faults.injector(spec.seed, index);
+    if cancel.is_cancelled() {
+        out.disposition = SessionDisposition::Cancelled;
+        out.final_interval_ms = cadence.interval().as_millis() as u64;
+        return out;
+    }
+    let result = drive_gang_inner(
+        spec, cells_per_rank, seed, &wd, cancel, &mut cadence, &mut injector, &mut out,
+    );
+    if let Err(e) = result {
+        out.disposition = SessionDisposition::Failed(e.to_string());
+        log::warn!("campaign gang {index}: {e}");
+    }
+    out.final_interval_ms = cadence.interval().as_millis() as u64;
+    out.measured_ckpt_cost_ms = cadence.measured_cost_ms();
+    out.wall_secs = t0.elapsed().as_secs_f64();
+    out
+}
+
+/// Fold the gang coordinator's store totals into the outcome (per
+/// incarnation, before teardown — totals die with the coordinator).
+fn harvest_gang_store<A: GangApp>(out: &mut SessionOutcome, session: &GangSession<A>) {
+    if let Ok(c) = session.coordinator() {
+        let t = c.store_totals();
+        out.stored_bytes += t.stored_bytes;
+        out.logical_bytes += t.logical_bytes;
+        out.chunks_written += t.chunks_written;
+        out.chunks_deduped += t.chunks_deduped;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn drive_gang_inner(
+    spec: &CampaignSpec,
+    cells_per_rank: usize,
+    seed: u64,
+    wd: &Path,
+    cancel: &CancelToken,
+    cadence: &mut Cadence,
+    injector: &mut FaultInjector,
+    out: &mut SessionOutcome,
+) -> Result<()> {
+    let app = StencilApp::new(spec.ranks, cells_per_rank);
+    let substrate = build_substrate(spec.substrate, wd)?;
+    let mut builder = GangSession::builder(&app)
+        .substrate(substrate)
+        .workdir(wd)
+        .target_steps(spec.target_steps)
+        .seed(seed)
+        .gc_grace(spec.gc_grace);
+    if let Some(full_every) = spec.incremental {
+        builder = builder.incremental_images(full_every);
+    }
+    let mut session = builder.build()?;
+    session.submit()?;
+
+    // Which rank each injected fault lands on: seeded like the kill
+    // schedule itself, so equal specs replay equal campaigns.
+    let mut rank_rng = SplitMix64::new(spec.seed ^ (out.index as u64).rotate_left(23) ^ 0x6A16);
+
+    let deadline = Instant::now() + spec.straggler_timeout;
+    let mut next_ckpt = Instant::now() + cadence.interval();
+    let mut next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
+
+    let completed = loop {
+        std::thread::sleep(POLL);
+        let status = session.monitor()?;
+        out.steps_done = status.steps_done;
+        if status.done {
+            break true;
+        }
+        if cancel.is_cancelled() || Instant::now() > deadline {
+            break false;
+        }
+        let now = Instant::now();
+        if now >= next_ckpt {
+            let t = Instant::now();
+            match session.checkpoint_now() {
+                Ok(_) => {
+                    out.checkpoints += 1;
+                    cadence.observe_cost(t.elapsed());
+                }
+                Err(e) => log::warn!("campaign gang {}: checkpoint failed: {e}", out.index),
+            }
+            next_ckpt = Instant::now() + cadence.interval();
+        }
+        if let Some(kill_at) = next_kill {
+            if now >= kill_at {
+                if session.latest_checkpoint()?.is_none() {
+                    // Nothing to gang-restart from yet: defer the kill.
+                    next_kill = Some(now + cadence.interval());
+                } else {
+                    let at_kill = session.monitor()?.steps_done;
+                    // Losing one rank aborts the generation: the whole
+                    // gang is torn down and restarted from the last cut.
+                    let victim = rank_rng.gen_range(spec.ranks as u64) as u32;
+                    session.kill_rank(victim)?;
+                    harvest_gang_store(out, &session);
+                    session.kill()?;
+                    out.kills += 1;
+                    std::thread::sleep(spec.requeue_delay);
+                    let resumed = session.resubmit_from_checkpoint()?;
+                    out.steps_lost += at_kill.saturating_sub(resumed);
+                    next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
+                    next_ckpt = Instant::now() + cadence.interval();
+                }
+            }
+        }
+    };
+
+    harvest_gang_store(out, &session);
+    out.incarnations = session.generation() + 1;
+    if completed {
+        let finals = session.final_states()?;
+        session.finish();
+        out.verified = session.verify_final(&finals).is_ok();
         out.disposition = SessionDisposition::Completed;
     } else {
         session.finish();

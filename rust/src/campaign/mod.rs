@@ -14,7 +14,8 @@
 //!   substrate × policy, seeded), parseable from `key = value` text for
 //!   `nersc-cr campaign`.
 //! * [`executor`] — the bounded worker pool ([`run_campaign`],
-//!   [`run_fleet`]) with cancellation and straggler timeouts.
+//!   [`run_fleet`], and [`run_gang_fleet`] for multi-rank gang sessions)
+//!   with cancellation and straggler timeouts.
 //! * [`faults`] — the seeded MTBF kill injector driving the §V.B.2
 //!   `kill`/`resubmit_from_checkpoint` path.
 //! * [`tune`] — the Young/Daly interval policy with measured-cost
@@ -34,7 +35,7 @@ pub mod sim;
 pub mod spec;
 pub mod tune;
 
-pub use executor::{run_campaign, run_campaign_cancellable, run_fleet, CancelToken};
+pub use executor::{run_campaign, run_campaign_cancellable, run_fleet, run_gang_fleet, CancelToken};
 pub use faults::{FaultInjector, FaultPlan};
 pub use report::{CampaignReport, LdmsRollup, SessionDisposition, SessionOutcome};
 pub use sim::{run_fleet_sim, SimFleetOutcome, SimFleetSpec, UrgentLoad};

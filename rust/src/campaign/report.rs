@@ -41,7 +41,10 @@ pub struct SessionOutcome {
     pub seed: u64,
     /// How the session ended.
     pub disposition: SessionDisposition,
-    /// Final state bit-identical to the failure-free reference run.
+    /// Ranks the session drove (1 = a plain session, >1 = a gang).
+    pub ranks: u32,
+    /// Final state bit-identical to the failure-free reference run (for
+    /// gangs: *every* rank matched).
     pub verified: bool,
     /// Incarnations used (1 = never killed).
     pub incarnations: u32,
@@ -171,6 +174,7 @@ impl CampaignReport {
         let mut t = Table::new(&[
             "session",
             "disposition",
+            "ranks",
             "incs",
             "kills",
             "ckpts",
@@ -184,6 +188,7 @@ impl CampaignReport {
             t.row(&[
                 format!("s{:03}", s.index),
                 s.disposition.label().to_string(),
+                s.ranks.to_string(),
                 s.incarnations.to_string(),
                 s.kills.to_string(),
                 s.checkpoints.to_string(),
@@ -278,6 +283,7 @@ mod tests {
             } else {
                 SessionDisposition::Straggler
             },
+            ranks: 1,
             verified: completed,
             incarnations: 2,
             kills: 1,

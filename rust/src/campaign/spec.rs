@@ -14,7 +14,7 @@ use std::time::Duration;
 use crate::campaign::faults::FaultPlan;
 use crate::campaign::tune::IntervalPolicy;
 use crate::error::{Error, Result};
-use crate::workload::{G4Version, WorkloadKind, CP2K_SCF_LABEL};
+use crate::workload::{G4Version, WorkloadKind, CP2K_SCF_LABEL, STENCIL_LABEL};
 
 /// Which application the campaign's sessions run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,6 +31,12 @@ pub enum WorkloadSpec {
         /// Which Geant4-analog version.
         version: G4Version,
     },
+    /// The halo-exchange stencil gang (each session is a
+    /// [`CampaignSpec::ranks`]-rank gang driven through gang C/R).
+    HaloStencil {
+        /// Slab size per rank.
+        cells_per_rank: usize,
+    },
 }
 
 impl WorkloadSpec {
@@ -39,6 +45,7 @@ impl WorkloadSpec {
         match self {
             WorkloadSpec::Cp2kScf { .. } => CP2K_SCF_LABEL.into(),
             WorkloadSpec::Geant4 { kind, .. } => kind.label(),
+            WorkloadSpec::HaloStencil { .. } => STENCIL_LABEL.into(),
         }
     }
 }
@@ -76,6 +83,10 @@ pub struct CampaignSpec {
     pub concurrency: u32,
     /// The application every session runs.
     pub workload: WorkloadSpec,
+    /// Ranks per session: 1 drives plain [`crate::cr::CrSession`]s; more
+    /// makes every session a gang ([`crate::cr::gang::GangSession`]) of
+    /// this width — gang workloads only.
+    pub ranks: u32,
     /// The execution environment every session launches on.
     pub substrate: SubstrateSpec,
     /// Target steps per session.
@@ -113,6 +124,7 @@ impl Default for CampaignSpec {
             sessions: 8,
             concurrency: 4,
             workload: WorkloadSpec::Cp2kScf { n: 16 },
+            ranks: 1,
             substrate: SubstrateSpec::Bare,
             target_steps: 1_000,
             seed: 7,
@@ -131,29 +143,53 @@ impl Default for CampaignSpec {
 impl CampaignSpec {
     /// Parse a spec from `key = value` lines. `#` starts a comment,
     /// blank lines are ignored, unknown keys are errors (a typo must not
-    /// silently fall back to a default). See [`CampaignSpec::to_text`]
-    /// for the key set.
+    /// silently fall back to a default), and so are repeated keys and
+    /// `[section]` headers — this format has neither, and a duplicate is
+    /// almost always an editing mistake whose silent last-one-wins
+    /// resolution would mask it. See [`CampaignSpec::to_text`] for the
+    /// key set.
     pub fn parse(text: &str) -> Result<Self> {
+        #[derive(PartialEq)]
+        enum Which {
+            Cp2k,
+            G4,
+            Stencil,
+        }
         let mut spec = CampaignSpec::default();
         let mut g4_version = G4Version::V10_7;
         let mut g4_kind: Option<WorkloadKind> = None;
         let mut cp2k_n = 16usize;
-        let mut wants_cp2k = true;
+        let mut stencil_cells = 64usize;
+        let mut which = Which::Cp2k;
         let mut cost_prior = Duration::from_millis(5);
         let mut wants_daly = false;
         let mut fixed_ms: Option<u64> = None;
         let mut mtbf_ms: Option<u64> = None;
         let mut max_kills = 2u32;
+        let mut seen_keys: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
 
         for (lineno, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
+            if line.starts_with('[') {
+                return Err(Error::Usage(format!(
+                    "campaign spec line {}: section headers like {line:?} are not part of \
+                     this format (flat key = value only)",
+                    lineno + 1
+                )));
+            }
             let (key, value) = line.split_once('=').ok_or_else(|| {
                 Error::Usage(format!("campaign spec line {}: expected key = value", lineno + 1))
             })?;
             let (key, value) = (key.trim(), value.trim());
+            if !seen_keys.insert(key.to_string()) {
+                return Err(Error::Usage(format!(
+                    "campaign spec line {}: duplicate key {key:?}",
+                    lineno + 1
+                )));
+            }
             let bad = |what: &str| {
                 Error::Usage(format!(
                     "campaign spec line {}: bad {what} {value:?}",
@@ -168,9 +204,11 @@ impl CampaignSpec {
                 }
                 "workload" => {
                     if value == CP2K_SCF_LABEL {
-                        wants_cp2k = true;
+                        which = Which::Cp2k;
+                    } else if value == STENCIL_LABEL {
+                        which = Which::Stencil;
                     } else {
-                        wants_cp2k = false;
+                        which = Which::G4;
                         g4_kind = Some(
                             WorkloadKind::all()
                                 .into_iter()
@@ -180,6 +218,10 @@ impl CampaignSpec {
                     }
                 }
                 "cp2k-n" => cp2k_n = value.parse().map_err(|_| bad("cp2k-n"))?,
+                "stencil-cells" => {
+                    stencil_cells = value.parse().map_err(|_| bad("stencil-cells"))?
+                }
+                "ranks" => spec.ranks = value.parse().map_err(|_| bad("ranks"))?,
                 "g4" => {
                     g4_version = match value {
                         "10.5" => G4Version::V10_5,
@@ -254,13 +296,15 @@ impl CampaignSpec {
             }
         }
 
-        spec.workload = if wants_cp2k {
-            WorkloadSpec::Cp2kScf { n: cp2k_n }
-        } else {
-            WorkloadSpec::Geant4 {
+        spec.workload = match which {
+            Which::Cp2k => WorkloadSpec::Cp2kScf { n: cp2k_n },
+            Which::Stencil => WorkloadSpec::HaloStencil {
+                cells_per_rank: stencil_cells,
+            },
+            Which::G4 => WorkloadSpec::Geant4 {
                 kind: g4_kind.expect("workload key parsed"),
                 version: g4_version,
-            }
+            },
         };
         spec.interval = if wants_daly {
             IntervalPolicy::Daly { cost_prior }
@@ -287,6 +331,17 @@ impl CampaignSpec {
         }
         if self.concurrency == 0 {
             return Err(Error::Usage("campaign needs concurrency >= 1".into()));
+        }
+        if self.ranks == 0 {
+            return Err(Error::Usage("campaign needs ranks >= 1".into()));
+        }
+        if self.ranks > 1 && !matches!(self.workload, WorkloadSpec::HaloStencil { .. }) {
+            return Err(Error::Usage(format!(
+                "ranks = {} needs a gang workload (workload = {STENCIL_LABEL}); {} is \
+                 single-process",
+                self.ranks,
+                self.workload.label()
+            )));
         }
         if self.straggler_timeout.is_zero() {
             return Err(Error::Usage(
@@ -341,7 +396,12 @@ impl CampaignSpec {
                     },
                 );
             }
+            WorkloadSpec::HaloStencil { cells_per_rank } => {
+                kv("workload", STENCIL_LABEL.into());
+                kv("stencil-cells", cells_per_rank.to_string());
+            }
         }
+        kv("ranks", self.ranks.to_string());
         kv("substrate", self.substrate.name().into());
         kv("steps", self.target_steps.to_string());
         kv("seed", self.seed.to_string());
@@ -519,11 +579,31 @@ requeue-delay-ms = 10
     }
 
     #[test]
-    fn interval_is_last_one_wins_in_both_directions() {
-        let s = CampaignSpec::parse("interval = daly\ninterval = 500\n").unwrap();
-        assert_eq!(s.interval, IntervalPolicy::Fixed(Duration::from_millis(500)));
-        let s = CampaignSpec::parse("interval = 500\ninterval = daly\n").unwrap();
-        assert!(matches!(s.interval, IntervalPolicy::Daly { .. }));
+    fn duplicate_keys_and_section_headers_rejected() {
+        // Pre-0.6, a repeated key silently resolved last-one-wins, which
+        // let an edited-but-not-deleted line mask the intended value.
+        let err = CampaignSpec::parse("interval = daly\ninterval = 500\n").unwrap_err();
+        assert!(err.to_string().contains("duplicate key"), "{err}");
+        let err = CampaignSpec::parse("seed = 1\nseed = 2\n").unwrap_err();
+        assert!(err.to_string().contains("duplicate key"), "{err}");
+        // INI-style sections are not part of the format.
+        let err = CampaignSpec::parse("[fleet]\nsessions = 2\n").unwrap_err();
+        assert!(err.to_string().contains("section"), "{err}");
+    }
+
+    #[test]
+    fn gang_spec_parses_and_validates() {
+        let s = CampaignSpec::parse(
+            "workload = halo-stencil\nstencil-cells = 32\nranks = 4\nsessions = 2\n",
+        )
+        .unwrap();
+        assert_eq!(s.workload, WorkloadSpec::HaloStencil { cells_per_rank: 32 });
+        assert_eq!(s.ranks, 4);
+        // Round-trips like every other shape.
+        assert_eq!(CampaignSpec::parse(&s.to_text()).unwrap(), s);
+        // ranks > 1 without a gang workload is rejected.
+        assert!(CampaignSpec::parse("ranks = 4\n").is_err());
+        assert!(CampaignSpec::parse("workload = halo-stencil\nranks = 0\n").is_err());
     }
 
     #[test]

@@ -81,8 +81,11 @@ subcommands:
   sbatch SCRIPT [--cluster-nodes N]                    simulate a batch script
   run --workload NAME --g4 VER --steps N [--preempt MS] [--workdir DIR]
       [--incremental [--full-every N]]                 run a workload under auto C/R
+  run --ranks N [--workload halo-stencil] [--stencil-cells C] [--steps N]
+      [--mana off] [--preempt MS] [--incremental]      run an N-rank gang under gang C/R
   campaign [--spec FILE] [--sessions N] [--seed S] [--workdir DIR]
       [--json] [--print-spec]                          run a fleet campaign
+                                                       (spec: ranks = N for gangs)
   fig2 [--ranks N]                                     container-startup table
   workloads                                            list workload names
   version";
@@ -110,6 +113,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
                 println!("{}", k.label());
             }
             println!("{}", crate::workload::CP2K_SCF_LABEL);
+            println!("{}", crate::workload::STENCIL_LABEL);
             Ok(())
         }
         Some(other) => Err(Error::Usage(format!(
@@ -229,6 +233,33 @@ fn cmd_run(args: &[String]) -> Result<()> {
             .join(format!("ncr_cli_{}", std::process::id()))
             .to_string_lossy(),
     ));
+
+    // Gang mode: `--ranks N` (or the gang workload by name) drives every
+    // rank of one halo-stencil computation through gang C/R.
+    let ranks: Option<u32> = match o.get("ranks") {
+        Some(v) => Some(v.parse().map_err(|_| Error::Usage("bad --ranks".into()))?),
+        None => None,
+    };
+    if ranks == Some(0) {
+        // Same contract as CampaignSpec::validate: a zero-rank gang is a
+        // usage error, not a silent 1-rank run.
+        return Err(Error::Usage("--ranks must be >= 1".into()));
+    }
+    if wl_name == crate::workload::STENCIL_LABEL || ranks.map(|r| r > 1).unwrap_or(false) {
+        if let Some(explicit) = o.get("workload") {
+            if explicit != crate::workload::STENCIL_LABEL {
+                return Err(Error::Usage(format!(
+                    "--ranks > 1 needs the gang workload ({}), not {explicit:?}",
+                    crate::workload::STENCIL_LABEL
+                )));
+            }
+        }
+        return cmd_run_gang(&o, ranks.unwrap_or(4), steps, &workdir);
+    }
+    if ranks.is_some() {
+        // --ranks 1 on a single-process workload is just the normal path.
+        log::info!("--ranks 1: driving a plain single-process session");
+    }
     let mut policy = crate::cr::CrPolicy::default();
     if let Some(ms) = o.get("preempt") {
         let ms: u64 = ms.parse().map_err(|_| Error::Usage("bad --preempt".into()))?;
@@ -309,6 +340,109 @@ fn cmd_run(args: &[String]) -> Result<()> {
         "detector: roi={roi:.2} MeV total={total:.2} MeV hits={hits} counts={}",
         det.counts
     );
+    Ok(())
+}
+
+/// Drive an N-rank halo-stencil gang: submit, periodic gang checkpoints,
+/// an optional mid-run preemption (`--preempt MS` kills one rank, which
+/// aborts the generation, then gang-restarts every rank from the last
+/// committed cut), and a final bitwise verification against the
+/// uninterrupted reference.
+fn cmd_run_gang(o: &Opts, ranks: u32, steps: u64, workdir: &std::path::Path) -> Result<()> {
+    let cells: usize = o
+        .get_or("stencil-cells", "64")
+        .parse()
+        .map_err(|_| Error::Usage("bad --stencil-cells".into()))?;
+    let mana = o.get("mana").map(|v| v != "off").unwrap_or(true);
+    let ckpt_every = Duration::from_millis(
+        o.get_or("ckpt-ms", "60")
+            .parse()
+            .map_err(|_| Error::Usage("bad --ckpt-ms".into()))?,
+    );
+    let preempt_at: Option<Duration> = match o.get("preempt") {
+        Some(ms) => Some(Duration::from_millis(
+            ms.parse().map_err(|_| Error::Usage("bad --preempt".into()))?,
+        )),
+        None => None,
+    };
+    let app = crate::workload::StencilApp::new(ranks, cells);
+    let mut builder = crate::cr::GangSession::builder(&app)
+        .workdir(workdir)
+        .target_steps(steps)
+        .seed(7)
+        .mana_exclusion(mana);
+    if o.has_flag("incremental") {
+        let full_every = match o.get("full-every") {
+            Some(n) => n.parse().map_err(|_| Error::Usage("bad --full-every".into()))?,
+            None => 0,
+        };
+        builder = builder.incremental_images(full_every);
+    } else if o.get("full-every").is_some() {
+        return Err(Error::Usage(
+            "--full-every only applies with --incremental".into(),
+        ));
+    }
+    let mut session = builder.build()?;
+    session.submit()?;
+
+    let t0 = std::time::Instant::now();
+    let mut checkpoints = 0u64;
+    let mut stored = 0u64;
+    let mut preempted = false;
+    // Scheduled from "now" after each checkpoint (like the campaign
+    // executor), so time spent in a gang restart does not produce a burst
+    // of back-to-back catch-up barriers afterwards.
+    let mut next_ckpt = std::time::Instant::now() + ckpt_every;
+    loop {
+        std::thread::sleep(Duration::from_millis(5));
+        let st = session.monitor()?;
+        if st.done {
+            break;
+        }
+        let ran = t0.elapsed();
+        if std::time::Instant::now() >= next_ckpt {
+            match session.checkpoint_now() {
+                Ok(ck) => {
+                    checkpoints += 1;
+                    stored += ck.manifest.stored_bytes();
+                }
+                Err(e) => log::warn!("gang checkpoint failed: {e}"),
+            }
+            next_ckpt = std::time::Instant::now() + ckpt_every;
+        }
+        if let Some(p) = preempt_at {
+            if !preempted && ran >= p && session.latest_checkpoint()?.is_some() {
+                let victim = (ranks / 2).min(ranks - 1);
+                println!(
+                    "preempting: killing rank {victim} (aborts the generation), \
+                     gang-restarting all {ranks} ranks"
+                );
+                session.kill_rank(victim)?;
+                session.kill()?;
+                let resumed = session.resubmit_from_checkpoint()?;
+                println!("gang restarted at the cut: {resumed}/{steps} steps");
+                preempted = true;
+                next_ckpt = std::time::Instant::now() + ckpt_every;
+            }
+        }
+    }
+    let finals = session.final_states()?;
+    let verified = session.verify_final(&finals).is_ok();
+    let generations = session.generation() + 1;
+    session.finish();
+    println!(
+        "completed=true ranks={ranks} mana={} generations={generations} \
+         gang_checkpoints={checkpoints} stored={} wall={:.2}s bitwise={}",
+        if mana { "on" } else { "off" },
+        crate::report::human_bytes(stored),
+        t0.elapsed().as_secs_f64(),
+        if verified { "ok" } else { "DIVERGED" }
+    );
+    if !verified {
+        return Err(Error::Workload(
+            "gang final state diverged from the uninterrupted reference".into(),
+        ));
+    }
     Ok(())
 }
 
@@ -429,6 +563,35 @@ mod tests {
             "--print-spec".into(),
         ])
         .is_err());
+    }
+
+    #[test]
+    fn run_gang_smoke() {
+        let dir = std::env::temp_dir().join(format!("ncr_cli_gang_{}", std::process::id()));
+        run(vec![
+            "run".into(),
+            "--ranks".into(),
+            "2".into(),
+            "--steps".into(),
+            "30".into(),
+            "--stencil-cells".into(),
+            "8".into(),
+            "--ckpt-ms".into(),
+            "20".into(),
+            "--workdir".into(),
+            dir.to_string_lossy().into_owned(),
+        ])
+        .unwrap();
+        // A non-gang workload with --ranks > 1 is a usage error.
+        assert!(run(vec![
+            "run".into(),
+            "--ranks".into(),
+            "2".into(),
+            "--workload".into(),
+            "cp2k-scf".into(),
+        ])
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -19,11 +19,16 @@
 use std::fmt::Debug;
 use std::sync::{Arc, Mutex};
 
+use crate::dmtcp::mana::ReinitFn;
 use crate::dmtcp::process::Checkpointable;
 use crate::dmtcp::{LaunchedProcess, PluginRegistry};
 use crate::error::{Error, Result};
 use crate::runtime::service;
 use crate::workload::cp2k::{cp2k_worker, Cp2kApp, Cp2kScratchPlugin, Cp2kState};
+use crate::workload::stencil::{
+    reference_final_states, stencil_worker, HaloDrainPlugin, StencilApp, StencilState,
+    STENCIL_LABEL,
+};
 use crate::workload::{transport_worker, G4App, G4SimState};
 
 /// A workload the C/R layer can orchestrate.
@@ -76,6 +81,253 @@ pub trait CrApp {
         target_steps: u64,
         seed: u64,
     ) -> Result<()>;
+}
+
+/// A *distributed* workload the gang C/R layer can orchestrate: N
+/// communicating ranks advancing one computation, checkpointed through a
+/// single all-or-nothing barrier and restarted as a set.
+///
+/// The contract extends [`CrApp`]'s shape to the multi-rank case:
+///
+/// * per-rank states (fresh and restore-shell), worker spawns, and plugin
+///   registration — one process per rank;
+/// * an incarnation hook ([`GangApp::begin_incarnation`]) where the app
+///   rebuilds its incarnation-scoped communication plane (the MANA lower
+///   half: endpoints, transports) before any rank launches or restarts;
+/// * a MANA `reinit` closure per rank ([`GangApp::reinit_fn`]), run after
+///   a rank's upper half is restored, that re-attaches the rank to the
+///   *current* incarnation's plane;
+/// * gang-level completion and bitwise verification over the full rank
+///   vector — a gang is done when every rank is, and correct only if every
+///   rank matches the uninterrupted reference.
+pub trait GangApp {
+    /// The checkpointable per-rank state.
+    type RankState: Checkpointable + Clone + PartialEq + Debug + Send + 'static;
+
+    /// Stable label used in process names, image file names and job ids.
+    fn label(&self) -> String;
+
+    /// Gang width (fixed for the life of the computation — gang restart
+    /// is rank-count-preserving).
+    fn n_ranks(&self) -> u32;
+
+    /// Rebuild the incarnation-scoped communication plane for restart
+    /// generation `generation`. Called by the session at every boot,
+    /// before any rank launches or restores.
+    fn begin_incarnation(&self, generation: u32);
+
+    /// Mint rank `rank`'s state for a fresh (generation-0) gang.
+    fn fresh_rank_state(&self, rank: u32, target_steps: u64, seed: u64)
+        -> Result<Self::RankState>;
+
+    /// Mint rank `rank`'s empty shell for `dmtcp_restart` to restore into.
+    fn restore_rank_state(&self, rank: u32) -> Self::RankState;
+
+    /// Register rank-specific DMTCP plugins (e.g. the DRAIN-phase message
+    /// drain). Called before launch *and* before restart.
+    fn register_rank_plugins(
+        &self,
+        _rank: u32,
+        _state: &Arc<Mutex<Self::RankState>>,
+        _plugins: &mut PluginRegistry,
+    ) {
+    }
+
+    /// The MANA lower-half rebuild hook for rank `rank`: runs right after
+    /// the rank's segments are restored, against the *current*
+    /// incarnation's plane. Must be `'static` (it is installed into the
+    /// rank's [`crate::dmtcp::ManaState`] wrapper), so capture shared
+    /// handles, not `&self`.
+    fn reinit_fn(&self, rank: u32) -> ReinitFn<Self::RankState>;
+
+    /// Spawn rank `rank`'s worker threads under `launched`.
+    fn spawn_rank_workers(
+        &self,
+        rank: u32,
+        launched: &mut LaunchedProcess,
+        state: Arc<Mutex<Self::RankState>>,
+        work_per_quantum: u32,
+    ) -> Result<()>;
+
+    /// Whether one rank reached its goal (the gang is done when all are).
+    fn rank_done(&self, state: &Self::RankState) -> bool;
+
+    /// Verify the full rank vector bitwise against an uninterrupted
+    /// reference run of the same `(target_steps, seed)`.
+    fn verify_final(
+        &self,
+        finals: &[Self::RankState],
+        target_steps: u64,
+        seed: u64,
+    ) -> Result<()>;
+}
+
+/// Gang sessions borrow apps freely too.
+impl<A: GangApp + ?Sized> GangApp for &A {
+    type RankState = A::RankState;
+
+    fn label(&self) -> String {
+        (**self).label()
+    }
+
+    fn n_ranks(&self) -> u32 {
+        (**self).n_ranks()
+    }
+
+    fn begin_incarnation(&self, generation: u32) {
+        (**self).begin_incarnation(generation)
+    }
+
+    fn fresh_rank_state(
+        &self,
+        rank: u32,
+        target_steps: u64,
+        seed: u64,
+    ) -> Result<Self::RankState> {
+        (**self).fresh_rank_state(rank, target_steps, seed)
+    }
+
+    fn restore_rank_state(&self, rank: u32) -> Self::RankState {
+        (**self).restore_rank_state(rank)
+    }
+
+    fn register_rank_plugins(
+        &self,
+        rank: u32,
+        state: &Arc<Mutex<Self::RankState>>,
+        plugins: &mut PluginRegistry,
+    ) {
+        (**self).register_rank_plugins(rank, state, plugins)
+    }
+
+    fn reinit_fn(&self, rank: u32) -> ReinitFn<Self::RankState> {
+        (**self).reinit_fn(rank)
+    }
+
+    fn spawn_rank_workers(
+        &self,
+        rank: u32,
+        launched: &mut LaunchedProcess,
+        state: Arc<Mutex<Self::RankState>>,
+        work_per_quantum: u32,
+    ) -> Result<()> {
+        (**self).spawn_rank_workers(rank, launched, state, work_per_quantum)
+    }
+
+    fn rank_done(&self, state: &Self::RankState) -> bool {
+        (**self).rank_done(state)
+    }
+
+    fn verify_final(
+        &self,
+        finals: &[Self::RankState],
+        target_steps: u64,
+        seed: u64,
+    ) -> Result<()> {
+        (**self).verify_final(finals, target_steps, seed)
+    }
+}
+
+/// The halo-exchange stencil gang (the distributed workload of DESIGN
+/// §10): per-rank slabs, real in-flight halo messages drained at the
+/// DRAIN phase, and an incarnation-scoped fabric rebuilt through the MANA
+/// reinit hook.
+impl GangApp for StencilApp {
+    type RankState = StencilState;
+
+    fn label(&self) -> String {
+        STENCIL_LABEL.into()
+    }
+
+    fn n_ranks(&self) -> u32 {
+        self.n_ranks
+    }
+
+    fn begin_incarnation(&self, generation: u32) {
+        self.rebuild_fabric(generation);
+    }
+
+    fn fresh_rank_state(&self, rank: u32, target_steps: u64, seed: u64) -> Result<StencilState> {
+        let mut s =
+            StencilState::fresh(rank, self.n_ranks, self.cells_per_rank, target_steps, seed);
+        s.endpoints = self.fabric().endpoint_blob(rank);
+        Ok(s)
+    }
+
+    fn restore_rank_state(&self, rank: u32) -> StencilState {
+        StencilState::shell(rank, self.n_ranks)
+    }
+
+    fn register_rank_plugins(
+        &self,
+        rank: u32,
+        state: &Arc<Mutex<StencilState>>,
+        plugins: &mut PluginRegistry,
+    ) {
+        plugins.register(Box::new(HaloDrainPlugin {
+            rank,
+            state: Arc::clone(state),
+            fabric: self.fabric(),
+        }));
+    }
+
+    fn reinit_fn(&self, rank: u32) -> ReinitFn<StencilState> {
+        let holder = self.fabric_holder();
+        Box::new(move |s: &mut StencilState| {
+            let fabric = holder
+                .lock()
+                .expect("fabric holder poisoned")
+                .as_ref()
+                .cloned()
+                .ok_or_else(|| {
+                    Error::Workload("stencil reinit before begin_incarnation".into())
+                })?;
+            s.endpoints = fabric.endpoint_blob(rank);
+            Ok(())
+        })
+    }
+
+    fn spawn_rank_workers(
+        &self,
+        _rank: u32,
+        launched: &mut LaunchedProcess,
+        state: Arc<Mutex<StencilState>>,
+        work_per_quantum: u32,
+    ) -> Result<()> {
+        let fabric = self.fabric();
+        launched
+            .process
+            .spawn_user_thread(move |ctx| stencil_worker(ctx, state, fabric, work_per_quantum));
+        Ok(())
+    }
+
+    fn rank_done(&self, state: &StencilState) -> bool {
+        state.done()
+    }
+
+    fn verify_final(&self, finals: &[StencilState], target_steps: u64, seed: u64) -> Result<()> {
+        if finals.len() != self.n_ranks as usize {
+            return Err(Error::Workload(format!(
+                "{STENCIL_LABEL}: {} final states for a {}-rank gang",
+                finals.len(),
+                self.n_ranks
+            )));
+        }
+        let reference =
+            reference_final_states(self.n_ranks, self.cells_per_rank, target_steps, seed);
+        for (rank, (got, (cells, step))) in finals.iter().zip(&reference).enumerate() {
+            if got.step != *step || &got.cells != cells {
+                return Err(Error::Workload(format!(
+                    "{STENCIL_LABEL}: rank {rank} is not bit-identical to the \
+                     uninterrupted reference ({}/{} steps, digest {:016x})",
+                    got.step,
+                    step,
+                    got.science_digest()
+                )));
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Sessions borrow apps freely: a reference to a `CrApp` is a `CrApp`.
@@ -293,6 +545,49 @@ mod tests {
         // A diverged state is rejected.
         s.field[5] += 1.0;
         assert!(CrApp::verify_final(&app, &s, 40, 0).is_err());
+    }
+
+    #[test]
+    fn stencil_gang_app_trait_surface() {
+        let app = StencilApp::new(3, 4).endpoint_bytes(128);
+        assert_eq!(GangApp::label(&app), "halo-stencil");
+        assert_eq!(GangApp::n_ranks(&app), 3);
+        app.begin_incarnation(0);
+        let s = GangApp::fresh_rank_state(&app, 1, 10, 7).unwrap();
+        assert!(!GangApp::rank_done(&app, &s));
+        assert_eq!(s.endpoints.len(), 128, "fresh state carries the lower half");
+        // reinit rebuilds endpoints against the *current* incarnation.
+        let blob0 = s.endpoints.clone();
+        app.begin_incarnation(1);
+        let mut shell = GangApp::restore_rank_state(&app, 1);
+        (GangApp::reinit_fn(&app, 1))(&mut shell).unwrap();
+        assert_eq!(shell.endpoints.len(), 128);
+        assert_ne!(shell.endpoints, blob0, "new incarnation, new endpoints");
+        // The blanket impl forwards.
+        let by_ref: &StencilApp = &app;
+        assert_eq!(GangApp::label(&by_ref), "halo-stencil");
+    }
+
+    #[test]
+    fn stencil_verify_rejects_divergence() {
+        let app = StencilApp::new(2, 4);
+        let finals: Vec<StencilState> =
+            crate::workload::reference_final_states(2, 4, 6, 9)
+                .into_iter()
+                .enumerate()
+                .map(|(r, (cells, step))| {
+                    let mut s = StencilState::shell(r as u32, 2);
+                    s.cells = cells;
+                    s.step = step;
+                    s.target_steps = 6;
+                    s
+                })
+                .collect();
+        GangApp::verify_final(&app, &finals, 6, 9).unwrap();
+        let mut bad = finals.clone();
+        bad[1].cells[0] ^= 1;
+        assert!(GangApp::verify_final(&app, &bad, 6, 9).is_err());
+        assert!(GangApp::verify_final(&app, &finals[..1], 6, 9).is_err());
     }
 
     #[test]

@@ -1,0 +1,772 @@
+//! Gang checkpoint-restart: one session driving *all ranks* of a
+//! distributed computation — [`GangSession`].
+//!
+//! The paper's subject is **Distributed** MultiThreaded CheckPointing: an
+//! all-or-nothing coordinated checkpoint of a cluster computation with
+//! in-flight data drained, followed by a consistent gang restart. This
+//! module is that layer. One coordinator manages every rank of one
+//! [`GangApp`] computation; [`GangSession::checkpoint_now`] drives them
+//! through a single five-phase barrier
+//! ([`crate::dmtcp::Coordinator::checkpoint_gang`]) and commits the round
+//! by atomically publishing a [`GangManifest`] — the generation-stamped
+//! consistent cut tying the per-rank images together. Rank images are
+//! round-stamped (`DMTCP_IMAGE_PER_ROUND`), so a published manifest's
+//! image set is immutable; an aborted round leaves at most unreferenced
+//! debris, never a torn set (invariant 7, DESIGN §10).
+//!
+//! Restart is symmetric: [`GangSession::resubmit_from_checkpoint`] reads
+//! the newest manifest and restarts *every* rank from its image — onto
+//! the same substrate or a different one ([`GangSession::set_substrate`]),
+//! always rank-count-preserving. Each rank's state is wrapped in a
+//! [`ManaState`]: with exclusion on (the default), `lib:` lower-half
+//! segments never enter the images and the app's per-rank `reinit` hook
+//! rebuilds channels against the new incarnation's fabric; with exclusion
+//! off, the whole-process baseline of the MANA ablation runs through the
+//! very same path.
+//!
+//! The operator vocabulary mirrors [`crate::cr::CrSession`]'s §V.B.2
+//! methods:
+//! `submit` / `monitor` / `checkpoint_now` / `kill` (+ the gang-specific
+//! [`GangSession::kill_rank`] fault injection — losing *any* rank aborts
+//! the generation) / `resubmit_from_checkpoint` / `wait_done` / `finish`.
+
+#![deny(missing_docs)]
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cr::app::GangApp;
+use crate::cr::module::{start_coordinator, CrConfig};
+use crate::cr::session::{merge_series, next_nonce, GC_GRACE};
+use crate::dmtcp::process::Checkpointable;
+use crate::dmtcp::store::{latest_gang_manifest, GangManifest, GangRankEntry, ImageStore};
+use crate::dmtcp::{inspect_image, Coordinator, LaunchedProcess, ManaState, PluginRegistry, TimerPlugin};
+use crate::error::{Error, Result};
+use crate::metrics::{LdmsSampler, SampledSeries};
+
+use super::substrate::Substrate;
+
+/// How long to wait for the coordinator to assign each rank's virtual pid.
+const ATTACH_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Poll interval of [`GangSession::wait_done`].
+const POLL: Duration = Duration::from_millis(5);
+
+/// What [`GangSession::monitor`] reports: the gang moves at the pace of
+/// its slowest rank.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GangStatus {
+    /// The slowest rank's completed steps.
+    pub steps_done: u64,
+    /// Steps every rank must complete.
+    pub target_steps: u64,
+    /// Whether *every* rank reached the target.
+    pub done: bool,
+    /// Slowest-rank progress in `[0, 1]`.
+    pub progress: f64,
+    /// Ranks in the gang.
+    pub ranks: u32,
+    /// Ranks whose process is still alive (a dead rank means the
+    /// generation is lost — kill and gang-restart).
+    pub alive_ranks: u32,
+}
+
+/// One committed gang checkpoint: the manifest and where it was published.
+#[derive(Debug, Clone)]
+pub struct GangCheckpoint {
+    /// Path of the atomically published gang manifest.
+    pub manifest_path: PathBuf,
+    /// The consistent-cut record itself.
+    pub manifest: GangManifest,
+}
+
+/// Builder for [`GangSession`] — `workdir` is required, everything else
+/// has gang-sensible defaults (MANA exclusion on).
+pub struct GangSessionBuilder<A: GangApp> {
+    app: A,
+    substrate: Substrate,
+    workdir: Option<PathBuf>,
+    target_steps: u64,
+    seed: u64,
+    mana_exclusion: bool,
+    incremental: Option<u32>,
+    work_per_quantum: u32,
+    gc_grace: Duration,
+}
+
+impl<A: GangApp> GangSessionBuilder<A> {
+    /// Select the execution environment (default: bare processes).
+    pub fn substrate(mut self, substrate: Substrate) -> Self {
+        self.substrate = substrate;
+        self
+    }
+
+    /// Where the rendezvous file, `ckpt/` images and gang manifests live
+    /// (required; must survive the job).
+    pub fn workdir(mut self, workdir: impl Into<PathBuf>) -> Self {
+        self.workdir = Some(workdir.into());
+        self
+    }
+
+    /// Steps every rank must complete (0 = trivially done).
+    pub fn target_steps(mut self, target_steps: u64) -> Self {
+        self.target_steps = target_steps;
+        self
+    }
+
+    /// Workload seed (also folded into the job id).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// MANA lower-half exclusion (default **on**): `lib:` segments are
+    /// omitted from rank images and rebuilt by the app's `reinit` hook on
+    /// restart. Off = the whole-process DMTCP baseline of the ablation.
+    pub fn mana_exclusion(mut self, on: bool) -> Self {
+        self.mana_exclusion = on;
+        self
+    }
+
+    /// Write incremental (content-addressed, chunked) rank images,
+    /// forcing every Nth checkpoint back to a self-contained full image
+    /// (0 = never).
+    pub fn incremental_images(mut self, full_image_every: u32) -> Self {
+        self.incremental = Some(full_image_every);
+        self
+    }
+
+    /// Work quanta between checkpoint safe-points in each rank worker.
+    pub fn work_per_quantum(mut self, quanta: u32) -> Self {
+        self.work_per_quantum = quanta.max(1);
+        self
+    }
+
+    /// Override the chunk-store GC grace window applied at teardown.
+    pub fn gc_grace(mut self, grace: Duration) -> Self {
+        self.gc_grace = grace;
+        self
+    }
+
+    /// Validate and assemble the session (creates the workdir).
+    pub fn build(self) -> Result<GangSession<A>> {
+        let workdir = self.workdir.ok_or_else(|| {
+            Error::Workload("GangSession needs a workdir (builder .workdir(..))".into())
+        })?;
+        if self.app.n_ranks() == 0 {
+            return Err(Error::Workload("a gang needs at least one rank".into()));
+        }
+        std::fs::create_dir_all(&workdir)?;
+        Ok(GangSession {
+            app: self.app,
+            substrate: self.substrate,
+            workdir,
+            target_steps: self.target_steps,
+            seed: self.seed,
+            mana_exclusion: self.mana_exclusion,
+            incremental: self.incremental,
+            work_per_quantum: self.work_per_quantum,
+            gc_grace: self.gc_grace,
+            nonce: next_nonce(),
+            generation: 0,
+            submitted: false,
+            active: None,
+            series_acc: None,
+        })
+    }
+}
+
+/// One launched rank of the active incarnation.
+struct RankSlot<S: Checkpointable> {
+    state: Arc<Mutex<S>>,
+    launched: LaunchedProcess,
+}
+
+struct ActiveGang<S: Checkpointable> {
+    coordinator: Coordinator,
+    slots: Vec<RankSlot<S>>,
+    sampler: Option<LdmsSampler>,
+}
+
+/// A gang checkpoint-restart session: one distributed computation, one
+/// substrate, any number of incarnations. Built with
+/// [`GangSession::builder`].
+pub struct GangSession<A: GangApp> {
+    app: A,
+    substrate: Substrate,
+    workdir: PathBuf,
+    target_steps: u64,
+    seed: u64,
+    mana_exclusion: bool,
+    incremental: Option<u32>,
+    work_per_quantum: u32,
+    gc_grace: Duration,
+    nonce: u64,
+    generation: u32,
+    submitted: bool,
+    active: Option<ActiveGang<A::RankState>>,
+    series_acc: Option<SampledSeries>,
+}
+
+impl<A: GangApp> GangSession<A> {
+    /// Start a builder for `app` (anything implementing [`GangApp`], by
+    /// value or by reference).
+    pub fn builder(app: A) -> GangSessionBuilder<A> {
+        GangSessionBuilder {
+            app,
+            substrate: Substrate::Bare,
+            workdir: None,
+            target_steps: 0,
+            seed: 0,
+            mana_exclusion: true,
+            incremental: None,
+            work_per_quantum: 1,
+            gc_grace: GC_GRACE,
+        }
+    }
+
+    /// The Slurm-style job id of the current incarnation (nonce-scoped,
+    /// like [`crate::cr::CrSession::jobid`]).
+    pub fn jobid(&self) -> String {
+        format!(
+            "{}g{}i{:02}",
+            self.seed % 900_000 + 100_000,
+            self.nonce,
+            self.generation
+        )
+    }
+
+    /// The gang's process-name base; rank processes are
+    /// `<base>-r<rank>`, and image/manifest discovery is scoped by it.
+    pub fn gang_name(&self) -> String {
+        format!("{}-s{}", self.app.label(), self.nonce)
+    }
+
+    fn rank_name(&self, rank: u32) -> String {
+        format!("{}-r{rank:03}", self.gang_name())
+    }
+
+    fn ckpt_dir(&self) -> PathBuf {
+        self.workdir.join("ckpt")
+    }
+
+    /// Incarnations used so far (0 = the initial submission).
+    pub fn generation(&self) -> u32 {
+        self.generation
+    }
+
+    /// The substrate the gang launches on.
+    pub fn substrate(&self) -> &Substrate {
+        &self.substrate
+    }
+
+    /// Switch substrate between incarnations (checkpoint under one
+    /// runtime, gang-restart under another). Fails while a gang is live.
+    pub fn set_substrate(&mut self, substrate: Substrate) -> Result<()> {
+        if self.active.is_some() {
+            return Err(Error::Workload(
+                "kill the active gang before switching substrates".into(),
+            ));
+        }
+        self.substrate = substrate;
+        Ok(())
+    }
+
+    /// The coordinator of the active incarnation.
+    pub fn coordinator(&self) -> Result<&Coordinator> {
+        Ok(&self.gang()?.coordinator)
+    }
+
+    /// The newest committed gang checkpoint of this session, if any.
+    pub fn latest_checkpoint(&self) -> Result<Option<GangCheckpoint>> {
+        Ok(
+            latest_gang_manifest(&self.ckpt_dir(), &self.gang_name())?.map(
+                |(manifest_path, manifest)| GangCheckpoint {
+                    manifest_path,
+                    manifest,
+                },
+            ),
+        )
+    }
+
+    fn gang(&self) -> Result<&ActiveGang<A::RankState>> {
+        self.active
+            .as_ref()
+            .ok_or_else(|| Error::Workload("no active gang".into()))
+    }
+
+    /// Boot one incarnation: coordinator, fabric rebuild, then every rank
+    /// launched (generation 0) or restored from the newest gang manifest
+    /// (later generations), workers spawned, sampler started. Returns
+    /// `Some(cut steps)` when restoring.
+    fn boot(&mut self) -> Result<Option<u64>> {
+        if self.active.is_some() {
+            return Err(Error::Workload("gang already active".into()));
+        }
+        let mut cfg = CrConfig::new(self.jobid(), &self.workdir);
+        if let Some(full_every) = self.incremental {
+            cfg.incremental = true;
+            cfg.full_image_every = full_every;
+        }
+        let (coordinator, base_env) = start_coordinator(&cfg)?;
+        self.app.begin_incarnation(self.generation);
+        let n = self.app.n_ranks();
+
+        let restore_from = if self.generation == 0 {
+            None
+        } else {
+            let (_, manifest) = latest_gang_manifest(&self.ckpt_dir(), &self.gang_name())?
+                .ok_or_else(|| Error::Workload("requeued but no gang manifest".into()))?;
+            if manifest.n_ranks() != n {
+                return Err(Error::Workload(format!(
+                    "gang manifest covers {} ranks, app wants {n} \
+                     (gang restart is rank-count-preserving)",
+                    manifest.n_ranks()
+                )));
+            }
+            // Round ids must stay unique across incarnations: a fresh
+            // coordinator would reuse the committed cut's round id and
+            // overwrite the very files its manifest references.
+            coordinator.bump_ckpt_id_to(manifest.ckpt_id + 1);
+            Some(manifest)
+        };
+
+        // The gang resumes from the cut: the slowest rank's step at the
+        // checkpoint (each rank still restores at its own recorded step —
+        // cut consistency covers the skew).
+        let resumed_at = restore_from.as_ref().map(|m| m.cut_steps());
+        let mut slots: Vec<RankSlot<A::RankState>> = Vec::with_capacity(n as usize);
+        for rank in 0..n {
+            let mut plugins = PluginRegistry::new();
+            plugins.register(Box::new(TimerPlugin::new()));
+            let name = self.rank_name(rank);
+            let (state, launched) = match &restore_from {
+                None => {
+                    let state = Arc::new(Mutex::new(self.app.fresh_rank_state(
+                        rank,
+                        self.target_steps,
+                        self.seed,
+                    )?));
+                    self.app.register_rank_plugins(rank, &state, &mut plugins);
+                    let wrapped = Arc::new(Mutex::new(ManaState::with_exclusion(
+                        Arc::clone(&state),
+                        self.app.reinit_fn(rank),
+                        self.mana_exclusion,
+                    )));
+                    let mut env = base_env.clone();
+                    env.insert("DMTCP_RANK".into(), rank.to_string());
+                    env.insert("DMTCP_IMAGE_PER_ROUND".into(), "1".into());
+                    let launched = self.substrate.launch(
+                        &name,
+                        coordinator.addr(),
+                        env,
+                        wrapped,
+                        plugins,
+                    )?;
+                    (state, launched)
+                }
+                Some(manifest) => {
+                    let entry = &manifest.ranks[rank as usize];
+                    let image = self.ckpt_dir().join(&entry.image);
+                    let state = Arc::new(Mutex::new(self.app.restore_rank_state(rank)));
+                    self.app.register_rank_plugins(rank, &state, &mut plugins);
+                    let wrapped = Arc::new(Mutex::new(ManaState::with_exclusion(
+                        Arc::clone(&state),
+                        self.app.reinit_fn(rank),
+                        self.mana_exclusion,
+                    )));
+                    let restarted = self.substrate.restart(
+                        &image,
+                        coordinator.addr(),
+                        wrapped,
+                        plugins,
+                    )?;
+                    (state, restarted.launched)
+                }
+            };
+            slots.push(RankSlot { state, launched });
+        }
+        for slot in &slots {
+            slot.launched.wait_attached(ATTACH_TIMEOUT)?;
+        }
+        for (rank, slot) in slots.iter_mut().enumerate() {
+            self.app.spawn_rank_workers(
+                rank as u32,
+                &mut slot.launched,
+                Arc::clone(&slot.state),
+                self.work_per_quantum,
+            )?;
+        }
+        let sampler = LdmsSampler::start(
+            slots
+                .iter()
+                .map(|s| Arc::clone(&s.launched.process.stats))
+                .collect(),
+            Duration::from_millis(3),
+        );
+        self.active = Some(ActiveGang {
+            coordinator,
+            slots,
+            sampler: Some(sampler),
+        });
+        Ok(resumed_at)
+    }
+
+    fn teardown(&mut self) -> Result<Vec<Arc<Mutex<A::RankState>>>> {
+        let ActiveGang {
+            coordinator,
+            slots,
+            mut sampler,
+        } = self
+            .active
+            .take()
+            .ok_or_else(|| Error::Workload("no active gang".into()))?;
+        coordinator.kill_all();
+        let mut states = Vec::with_capacity(slots.len());
+        for slot in slots {
+            let _ = slot.launched.join();
+            states.push(slot.state);
+        }
+        if let Some(s) = sampler.take() {
+            merge_series(&mut self.series_acc, s.stop());
+        }
+        Ok(states)
+    }
+
+    // ----- observation ---------------------------------------------------
+
+    /// Inspect the running gang. The gang moves at its slowest rank.
+    pub fn monitor(&self) -> Result<GangStatus> {
+        let gang = self.gang()?;
+        let mut min_steps = u64::MAX;
+        let mut all_done = true;
+        let mut alive = 0u32;
+        for slot in &gang.slots {
+            let s = slot.state.lock().expect("rank state poisoned");
+            min_steps = min_steps.min(s.steps_done());
+            if !self.app.rank_done(&s) {
+                all_done = false;
+            }
+            // A rank is lost once its gate was killed (fault injection,
+            // coordinator Kill, or a dead coordinator link) — normal
+            // completion leaves the gate alone.
+            if !slot.launched.process.gate.killed() {
+                alive += 1;
+            }
+        }
+        let steps_done = if min_steps == u64::MAX { 0 } else { min_steps };
+        Ok(GangStatus {
+            steps_done,
+            target_steps: self.target_steps,
+            done: all_done,
+            progress: steps_done as f64 / self.target_steps.max(1) as f64,
+            ranks: self.app.n_ranks(),
+            alive_ranks: alive,
+        })
+    }
+
+    /// Run a closure against one rank's live (locked) state.
+    pub fn with_rank_state<R>(&self, rank: u32, f: impl FnOnce(&A::RankState) -> R) -> Result<R> {
+        let gang = self.gang()?;
+        let slot = gang
+            .slots
+            .get(rank as usize)
+            .ok_or_else(|| Error::Workload(format!("no rank {rank} in this gang")))?;
+        let s = slot.state.lock().expect("rank state poisoned");
+        Ok(f(&s))
+    }
+
+    /// Snapshot every rank's state, rank order (for final verification).
+    pub fn final_states(&self) -> Result<Vec<A::RankState>> {
+        let gang = self.gang()?;
+        Ok(gang
+            .slots
+            .iter()
+            .map(|s| s.state.lock().expect("rank state poisoned").clone())
+            .collect())
+    }
+
+    /// Verify a final rank vector bitwise against an uninterrupted
+    /// reference run of this session's `(target_steps, seed)`.
+    pub fn verify_final(&self, finals: &[A::RankState]) -> Result<()> {
+        self.app.verify_final(finals, self.target_steps, self.seed)
+    }
+
+    /// The LDMS series accumulated across finished incarnations — one
+    /// series covering all ranks (the per-gang rollup campaigns consume).
+    pub fn series(&self) -> SampledSeries {
+        self.series_acc.clone().unwrap_or_default()
+    }
+
+    /// Poll until every rank finishes or `timeout` elapses.
+    pub fn wait_done(&self, timeout: Duration) -> Result<GangStatus> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let st = self.monitor()?;
+            if st.done {
+                return Ok(st);
+            }
+            if st.alive_ranks < st.ranks {
+                return Err(Error::Workload(format!(
+                    "gang lost {} rank(s) at {}/{} steps: kill and gang-restart",
+                    st.ranks - st.alive_ranks,
+                    st.steps_done,
+                    st.target_steps
+                )));
+            }
+            if Instant::now() > deadline {
+                return Err(Error::Workload(format!(
+                    "gang timeout at {}/{} steps",
+                    st.steps_done, st.target_steps
+                )));
+            }
+            std::thread::sleep(POLL);
+        }
+    }
+
+    // ----- lifecycle ------------------------------------------------------
+
+    /// Initial submission: boot generation 0 (all ranks fresh).
+    pub fn submit(&mut self) -> Result<()> {
+        if self.submitted {
+            return Err(Error::Workload(
+                "gang already submitted; use resubmit_from_checkpoint".into(),
+            ));
+        }
+        self.boot()?;
+        self.submitted = true;
+        Ok(())
+    }
+
+    /// Take an all-or-nothing gang checkpoint now: drive every rank
+    /// through one barrier, then — only if *every* rank image of the
+    /// round is durably published — commit the round by atomically
+    /// writing the gang manifest. On any failure (a rank died
+    /// mid-barrier, a phase timed out) nothing is committed and the
+    /// previous manifest remains the newest restartable cut.
+    pub fn checkpoint_now(&self) -> Result<GangCheckpoint> {
+        let gang = self.gang()?;
+        let images = gang.coordinator.checkpoint_gang(self.app.n_ranks())?;
+        let ckpt_dir = self.ckpt_dir();
+        let ckpt_id = images.first().map(|(_, i)| i.ckpt_id).unwrap_or(0);
+        let mut ranks = Vec::with_capacity(images.len());
+        for (rank, info) in &images {
+            // Header-only read: also proves each image file is present and
+            // frame-valid before the manifest commits to it.
+            let header = inspect_image(&info.path)?;
+            let image = info
+                .path
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .ok_or_else(|| {
+                    Error::Image(format!("rank image path {:?} has no file name", info.path))
+                })?;
+            ranks.push(GangRankEntry {
+                rank: *rank,
+                vpid: info.vpid,
+                image,
+                steps_done: header.steps_done,
+                stored_bytes: info.stored_bytes,
+                raw_bytes: info.raw_bytes,
+            });
+        }
+        let manifest = GangManifest {
+            gang: self.gang_name(),
+            generation: self.generation,
+            ckpt_id,
+            ranks,
+        };
+        let manifest_path = manifest.write_file(&ckpt_dir)?;
+        self.prune_superseded_rounds(&manifest);
+        Ok(GangCheckpoint {
+            manifest_path,
+            manifest,
+        })
+    }
+
+    /// Best-effort cleanup of rounds older than the just-committed one:
+    /// their manifests and round-stamped rank images are superseded.
+    /// (Chunk-store entries are reclaimed by the regular GC once the old
+    /// `.dmtcp` manifests are gone.) Never touches the new round.
+    fn prune_superseded_rounds(&self, newest: &GangManifest) {
+        let ckpt_dir = self.ckpt_dir();
+        let prefix = format!("gang_{}_", self.gang_name());
+        let Ok(entries) = std::fs::read_dir(&ckpt_dir) else {
+            return;
+        };
+        for e in entries.flatten() {
+            let p = e.path();
+            let Some(name) = p.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            if !name.starts_with(&prefix) || !name.ends_with(".gang") {
+                continue;
+            }
+            match GangManifest::read_file(&p) {
+                Ok(m)
+                    if m.gang == newest.gang
+                        && (m.generation, m.ckpt_id) < (newest.generation, newest.ckpt_id) =>
+                {
+                    for r in &m.ranks {
+                        let _ = std::fs::remove_file(ckpt_dir.join(&r.image));
+                    }
+                    let _ = std::fs::remove_file(&p);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Kill a single rank (fault injection). Losing any rank aborts the
+    /// generation: in-flight and future gang checkpoints fail their
+    /// barrier, and the computation cannot finish — follow with
+    /// [`GangSession::kill`] and [`GangSession::resubmit_from_checkpoint`]
+    /// to gang-restart every rank from the last committed cut.
+    pub fn kill_rank(&self, rank: u32) -> Result<()> {
+        let gang = self.gang()?;
+        let slot = gang
+            .slots
+            .get(rank as usize)
+            .ok_or_else(|| Error::Workload(format!("no rank {rank} in this gang")))?;
+        slot.launched.process.gate.kill();
+        Ok(())
+    }
+
+    /// Kill the whole gang (teardown; the session stays resubmittable).
+    pub fn kill(&mut self) -> Result<()> {
+        self.teardown().map(|_| ())
+    }
+
+    /// Gang-restart every rank from the newest committed manifest.
+    /// Returns the cut's step count (the slowest rank's progress at the
+    /// checkpoint — where the whole gang resumes from).
+    pub fn resubmit_from_checkpoint(&mut self) -> Result<u64> {
+        if self.active.is_some() {
+            return Err(Error::Workload("kill the active gang first".into()));
+        }
+        if !self.submitted {
+            return Err(Error::Workload("gang was never submitted".into()));
+        }
+        self.generation += 1;
+        self.boot()?
+            .ok_or_else(|| Error::Workload("gang restart did not report a resume point".into()))
+    }
+
+    /// Tear down the active gang, if any, then garbage-collect
+    /// chunk-store entries nothing references anymore.
+    pub fn finish(&mut self) {
+        if self.active.is_some() {
+            let _ = self.teardown();
+        }
+        let ckpt_dir = self.ckpt_dir();
+        let store = ImageStore::for_images(&ckpt_dir);
+        if !store.root().exists() {
+            return;
+        }
+        match store.gc(&ckpt_dir, self.gc_grace) {
+            Ok(st) if st.deleted > 0 => log::debug!(
+                "gang {}: store GC reclaimed {} chunks ({} bytes)",
+                self.nonce,
+                st.deleted,
+                st.deleted_bytes
+            ),
+            Ok(_) => {}
+            Err(e) => log::warn!("gang {}: store GC failed: {e}", self.nonce),
+        }
+    }
+}
+
+impl<A: GangApp> Drop for GangSession<A> {
+    fn drop(&mut self) {
+        if let Some(gang) = self.active.take() {
+            gang.coordinator.kill_all();
+            for slot in gang.slots {
+                let _ = slot.launched.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::StencilApp;
+
+    fn workdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("ncr_gang_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn builder_requires_workdir() {
+        let app = StencilApp::new(2, 4);
+        assert!(GangSession::builder(&app).target_steps(8).build().is_err());
+        assert!(GangSession::builder(&app)
+            .workdir(workdir("req"))
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn names_are_nonce_scoped() {
+        let app = StencilApp::new(2, 4);
+        let a = GangSession::builder(&app)
+            .workdir(workdir("nonce"))
+            .build()
+            .unwrap();
+        let b = GangSession::builder(&app)
+            .workdir(workdir("nonce"))
+            .build()
+            .unwrap();
+        assert_ne!(a.gang_name(), b.gang_name());
+        assert_ne!(a.jobid(), b.jobid());
+        assert!(a.rank_name(3).starts_with(&a.gang_name()));
+    }
+
+    #[test]
+    fn lifecycle_gates() {
+        let app = StencilApp::new(2, 4);
+        let mut s = GangSession::builder(&app)
+            .workdir(workdir("gates"))
+            .target_steps(8)
+            .build()
+            .unwrap();
+        assert!(s.monitor().is_err(), "no active gang yet");
+        assert!(s.checkpoint_now().is_err());
+        assert!(s.kill().is_err());
+        assert!(
+            s.resubmit_from_checkpoint().is_err(),
+            "never-submitted gang cannot resubmit"
+        );
+    }
+
+    #[test]
+    fn tiny_gang_runs_checkpoints_and_completes() {
+        let app = StencilApp::new(2, 8).endpoint_bytes(512);
+        let wd = workdir("tiny");
+        let mut s = GangSession::builder(&app)
+            .workdir(&wd)
+            .target_steps(40)
+            .seed(11)
+            .build()
+            .unwrap();
+        s.submit().unwrap();
+        // A mid-run gang checkpoint commits a manifest covering each rank.
+        let ck = loop {
+            match s.checkpoint_now() {
+                Ok(ck) => break ck,
+                Err(_) => std::thread::sleep(Duration::from_millis(2)),
+            }
+        };
+        assert_eq!(ck.manifest.n_ranks(), 2);
+        assert!(ck.manifest_path.exists());
+        let st = s.wait_done(Duration::from_secs(60)).unwrap();
+        assert!(st.done);
+        let finals = s.final_states().unwrap();
+        s.verify_final(&finals).unwrap();
+        s.finish();
+        std::fs::remove_dir_all(&wd).ok();
+    }
+}

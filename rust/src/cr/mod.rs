@@ -6,7 +6,11 @@
 //!   podman-hpc), driven automatically ([`CrStrategy::Auto`], the Fig 3
 //!   workflow) or by an operator ([`CrStrategy::Manual`], §V.B.2).
 //! * [`app`] — the [`CrApp`] trait both paper workloads implement
-//!   (Geant4-analog transport and the CP2K-analog SCF driver).
+//!   (Geant4-analog transport and the CP2K-analog SCF driver), plus the
+//!   multi-rank [`GangApp`] contract for distributed computations.
+//! * [`gang`] — [`GangSession`]: gang checkpoint-restart of N
+//!   communicating ranks through one all-or-nothing barrier, committed by
+//!   an atomically published consistent-cut manifest (DESIGN §10).
 //! * [`substrate`] — the [`Substrate`] execution environments, enforcing
 //!   the paper's containerized-C/R constraints.
 //! * [`module`] — the CR Module primitives (`start_coordinator`, image
@@ -21,13 +25,15 @@
 
 pub mod app;
 pub mod auto;
+pub mod gang;
 pub mod jobscript;
 pub mod module;
 pub mod session;
 pub mod substrate;
 
-pub use app::CrApp;
+pub use app::{CrApp, GangApp};
 pub use auto::{AutoState, CrPolicy, CrReport};
+pub use gang::{GangCheckpoint, GangSession, GangSessionBuilder, GangStatus};
 pub use jobscript::{consolidated_script, CrJobConfig};
 pub use module::{latest_images, start_coordinator, CrConfig};
 pub use session::{CrSession, CrSessionBuilder, CrStrategy, SessionStatus, GC_GRACE};

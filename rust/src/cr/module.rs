@@ -66,6 +66,7 @@ pub fn start_coordinator(config: &CrConfig) -> Result<(Coordinator, BTreeMap<Str
         jobid: Some(config.jobid.clone()),
         command_file_dir: config.workdir.clone(),
         phase_timeout: config.phase_timeout,
+        retry_ephemeral: true,
     })?;
     let mut env = BTreeMap::new();
     env.insert("DMTCP_COORD_HOST".into(), coord.addr().ip().to_string());

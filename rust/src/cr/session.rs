@@ -35,6 +35,13 @@
 //! image names embed a per-session nonce, so any number of sessions can
 //! share one workdir (and its `ckpt/` directory) without colliding — the
 //! prerequisite for pooling sessions behind a service.
+//!
+//! `CrSession` drives *one process*. Multi-rank distributed workloads go
+//! through the sibling [`crate::cr::gang::GangSession`], which drives all
+//! ranks of one [`crate::cr::app::GangApp`] computation under a single
+//! coordinator with all-or-nothing gang checkpoints and gang restarts
+//! (DESIGN §10); the two share nonces, workdir layout, and the manual
+//! method vocabulary.
 
 #![deny(missing_docs)]
 
@@ -73,8 +80,10 @@ pub const GC_GRACE: Duration = Duration::from_secs(600);
 
 /// Process-wide session nonce allocator. Combined with the OS process id
 /// so two sessions never mint the same job id or image-name prefix, even
-/// across processes sharing a workdir.
-fn next_nonce() -> u64 {
+/// across processes sharing a workdir. Shared with the gang sessions
+/// ([`crate::cr::gang::GangSession`]) — single-process and gang sessions
+/// can interleave in one workdir without colliding.
+pub(crate) fn next_nonce() -> u64 {
     static NEXT: AtomicU64 = AtomicU64::new(1);
     ((std::process::id() as u64) << 20) | NEXT.fetch_add(1, Ordering::Relaxed)
 }
@@ -711,8 +720,9 @@ impl CkptTally {
 /// per-incarnation; offset each segment by the accumulated end time).
 /// `ckpt_stored` is a per-process *cumulative* counter that restarts at 0
 /// each incarnation, so its values are additionally offset by the
-/// accumulated total — the merged series stays monotone.
-fn merge_series(acc: &mut Option<SampledSeries>, next: SampledSeries) {
+/// accumulated total — the merged series stays monotone. Shared with the
+/// gang sessions, whose per-incarnation samplers cover all ranks at once.
+pub(crate) fn merge_series(acc: &mut Option<SampledSeries>, next: SampledSeries) {
     match acc {
         None => *acc = Some(next),
         Some(a) => {

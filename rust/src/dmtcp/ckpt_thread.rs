@@ -94,6 +94,13 @@ fn run(
     };
     stream.set_nodelay(true).ok();
 
+    // Gang rank, if any: set by the gang session on launch and preserved in
+    // the image env across restarts, so a restarted rank re-advertises the
+    // same position in the computation.
+    let rank = {
+        let env = ctx.env.lock().expect("env poisoned");
+        env.get("DMTCP_RANK").and_then(|v| v.parse::<u32>().ok())
+    };
     send_to_coordinator(
         &mut stream,
         &ToCoordinator::Hello {
@@ -101,6 +108,7 @@ fn run(
             name: ctx.name.clone(),
             n_threads: ctx.stats.n_threads.load(Ordering::Relaxed) as u32,
             restored_vpid: ctx.restored_vpid,
+            rank,
         },
     )?;
     let vpid = match recv_from_coordinator(&mut stream)? {
@@ -159,11 +167,15 @@ fn handle_phase(
             ctx.stats
                 .parked
                 .store(ctx.gate.parked_count(), Ordering::Relaxed);
+            fire_plugins(ctx, Event::Suspend)?;
         }
         Phase::Drain => {
-            // User threads are parked; in-process channels are quiescent.
-            // (Real DMTCP drains socket buffers here; our inter-process
-            // data plane is the coordinator link itself.)
+            // User threads are parked everywhere (the barrier orders all
+            // SUSPENDs before any DRAIN), so in-flight channel data is
+            // final: drain plugins move undelivered rank-to-rank messages
+            // into the checkpointable state here, making the image set a
+            // consistent cut of the whole computation.
+            fire_plugins(ctx, Event::Drain)?;
         }
         Phase::Checkpoint => {
             let out = write_image(ctx, vpid, ckpt_id, dir)?;
@@ -182,7 +194,11 @@ fn handle_phase(
             )?;
         }
         Phase::Refill => {
-            // Re-prime drained channels (no-op for the in-process plane).
+            // Re-prime drained channels. The gang drain plugins leave
+            // drained messages in the state (workers consume state-held
+            // messages before polling the fabric), so this is a plugin
+            // hook rather than a rewind of the drain.
+            fire_plugins(ctx, Event::Refill)?;
         }
         Phase::Resume => {
             fire_plugins(ctx, Event::PostCheckpoint)?;
@@ -249,7 +265,7 @@ fn write_image(ctx: &mut CkptContext, vpid: u64, ckpt_id: u64, dir: &str) -> Res
     };
     let image = CheckpointImage { header, segments };
 
-    let (gzip, incremental, full_every) = {
+    let (gzip, incremental, full_every, per_round) = {
         let env = ctx.env.lock().expect("env poisoned");
         let flag = |k: &str| env.get(k).map(|v| v != "0").unwrap_or(false);
         (
@@ -258,12 +274,23 @@ fn write_image(ctx: &mut CkptContext, vpid: u64, ckpt_id: u64, dir: &str) -> Res
             env.get("DMTCP_FULL_EVERY")
                 .and_then(|v| v.parse::<u64>().ok())
                 .unwrap_or(0),
+            flag("DMTCP_IMAGE_PER_ROUND"),
         )
     };
     let ckpt_index = ctx.stats.checkpoints.load(Ordering::Relaxed);
     let force_full = full_every > 0 && ckpt_index % full_every == 0;
 
-    let path = std::path::Path::new(dir).join(format!("ckpt_{}_{}.dmtcp", ctx.name, vpid));
+    // Default: one image path per process, atomically replaced each round.
+    // `DMTCP_IMAGE_PER_ROUND` (the gang path) stamps the round id into the
+    // name instead, so a *failed* gang round can never overwrite images a
+    // published gang manifest still references — the manifest's image set
+    // stays immutable once visible.
+    let fname = if per_round {
+        format!("ckpt_{}_{}_{:08}.dmtcp", ctx.name, vpid, ckpt_id)
+    } else {
+        format!("ckpt_{}_{}.dmtcp", ctx.name, vpid)
+    };
+    let path = std::path::Path::new(dir).join(fname);
     let t0 = Instant::now();
     let (stored, chunks_written, chunks_deduped) = if incremental && !force_full {
         let store = ImageStore::for_images(std::path::Path::new(dir));

@@ -40,6 +40,12 @@ pub struct CoordinatorConfig {
     pub command_file_dir: PathBuf,
     /// Barrier timeout per phase.
     pub phase_timeout: Duration,
+    /// When the configured `bind` port is already taken (two jobs booting
+    /// concurrently on one host with a pinned `DMTCP_COORD_PORT`), fall
+    /// back to an ephemeral port instead of failing the session — the
+    /// rendezvous file carries the actual port either way, so nothing
+    /// downstream depends on the requested one.
+    pub retry_ephemeral: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -51,6 +57,7 @@ impl Default for CoordinatorConfig {
             jobid: None,
             command_file_dir: std::env::temp_dir(),
             phase_timeout: Duration::from_secs(30),
+            retry_ephemeral: true,
         }
     }
 }
@@ -61,6 +68,8 @@ struct ClientConn {
     name: String,
     real_pid: u64,
     n_threads: u32,
+    /// Gang rank advertised in Hello (`None` for independent processes).
+    rank: Option<u32>,
 }
 
 /// One in-flight checkpoint round.
@@ -125,8 +134,29 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start a coordinator (the paper's `start_coordinator` primitive).
+    ///
+    /// When the configured bind port is already in use and
+    /// [`CoordinatorConfig::retry_ephemeral`] is set (the default), the
+    /// coordinator falls back to an ephemeral port on the same address
+    /// instead of failing — two computations booting concurrently on one
+    /// host both come up, each on its own port.
     pub fn start(config: CoordinatorConfig) -> Result<Self> {
-        let listener = TcpListener::bind(&config.bind)?;
+        let listener = match TcpListener::bind(&config.bind) {
+            Ok(l) => l,
+            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse && config.retry_ephemeral => {
+                let host = config
+                    .bind
+                    .rsplit_once(':')
+                    .map(|(h, _)| h)
+                    .unwrap_or("127.0.0.1");
+                log::warn!(
+                    "coordinator bind {} in use; retrying on an ephemeral port",
+                    config.bind
+                );
+                TcpListener::bind(format!("{host}:0"))?
+            }
+            Err(e) => return Err(e.into()),
+        };
         let addr = listener.local_addr()?;
         std::fs::create_dir_all(&config.ckpt_dir)?;
 
@@ -240,6 +270,80 @@ impl Coordinator {
         checkpoint_all_inner(&self.shared)
     }
 
+    /// Drive one all-or-nothing gang checkpoint barrier: every attached
+    /// client must carry a gang rank, the ranks must be exactly
+    /// `0..expected_ranks`, and the round must produce one image per rank —
+    /// anything less is an error and nothing of the round is usable (the
+    /// caller publishes the gang manifest only on `Ok`). Returns the
+    /// images sorted by rank.
+    pub fn checkpoint_gang(&self, expected_ranks: u32) -> Result<Vec<(u32, ImageInfo)>> {
+        let rank_of: HashMap<u64, u32> = {
+            let st = self.shared.state.lock().unwrap();
+            let mut by_vpid = HashMap::new();
+            let mut seen = HashSet::new();
+            for (&vpid, c) in &st.clients {
+                let r = c.rank.ok_or_else(|| {
+                    Error::Protocol(format!(
+                        "gang checkpoint: client {:?} (vpid {vpid}) advertised no rank",
+                        c.name
+                    ))
+                })?;
+                if !seen.insert(r) {
+                    return Err(Error::Protocol(format!(
+                        "gang checkpoint: rank {r} attached twice"
+                    )));
+                }
+                by_vpid.insert(vpid, r);
+            }
+            if by_vpid.len() != expected_ranks as usize
+                || (0..expected_ranks).any(|r| !seen.contains(&r))
+            {
+                return Err(Error::Protocol(format!(
+                    "gang checkpoint: expected ranks 0..{expected_ranks}, have {} clients",
+                    by_vpid.len()
+                )));
+            }
+            by_vpid
+        };
+        let images = checkpoint_all_inner(&self.shared)?;
+        let mut out = Vec::with_capacity(images.len());
+        for info in images {
+            let r = rank_of.get(&info.vpid).copied().ok_or_else(|| {
+                Error::Protocol(format!(
+                    "gang checkpoint: image from unknown vpid {}",
+                    info.vpid
+                ))
+            })?;
+            out.push((r, info));
+        }
+        out.sort_by_key(|(r, _)| *r);
+        for (i, (r, _)) in out.iter().enumerate() {
+            if *r != i as u32 {
+                return Err(Error::Protocol(format!(
+                    "gang checkpoint: incomplete image set (missing rank {i})"
+                )));
+            }
+        }
+        if out.len() != expected_ranks as usize {
+            return Err(Error::Protocol(format!(
+                "gang checkpoint: {} of {expected_ranks} rank images",
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Ensure future round ids start at or above `min`. A fresh
+    /// coordinator numbers rounds from 1; a gang restart seeds this from
+    /// the restored manifest's round id so round stamps — and with them
+    /// the round-stamped rank-image and gang-manifest file names — stay
+    /// unique across incarnations. Without it, a later generation's round
+    /// 1 would overwrite the committed cut's files that the live gang
+    /// manifest still references.
+    pub fn bump_ckpt_id_to(&self, min: u64) {
+        self.shared.next_ckpt_id.fetch_max(min, Ordering::Relaxed);
+    }
+
     /// Broadcast a kill (preemption) to every attached process.
     pub fn kill_all(&self) {
         let mut st = self.shared.state.lock().unwrap();
@@ -321,21 +425,33 @@ fn checkpoint_all_inner(shared: &Arc<Shared>) -> Result<Vec<ImageInfo>> {
     // Tear down the round record, collect images.
     let mut st = shared.state.lock().unwrap();
     let round = st.round.take().expect("round vanished");
-    match result {
-        Ok(()) => {
-            if let Some(msg) = round.failed {
-                return Err(Error::Protocol(msg));
+    let failure = match result {
+        Err(e) => Some(e),
+        Ok(()) => round.failed.map(Error::Protocol),
+    };
+    if let Some(e) = failure {
+        // Abort: survivors may be parked mid-barrier waiting for the next
+        // phase that will never come — release them so a failed round
+        // costs the computation nothing but the (unpublished) checkpoint.
+        for (vpid, c) in st.clients.iter_mut() {
+            let msg = FromCoordinator::Phase {
+                ckpt_id,
+                phase: Phase::Resume,
+                dir: dir.clone(),
+            };
+            if send_from_coordinator(&mut c.stream, &msg).is_err() {
+                log::warn!("round {ckpt_id} abort: client {vpid} unreachable");
             }
-            st.last_ckpt_id = ckpt_id;
-            st.images_written += round.images.len() as u64;
-            st.total_stored_bytes += round.images.iter().map(|i| i.stored_bytes).sum::<u64>();
-            st.total_raw_bytes += round.images.iter().map(|i| i.raw_bytes).sum::<u64>();
-            st.total_chunks_written += round.images.iter().map(|i| i.chunks_written).sum::<u64>();
-            st.total_chunks_deduped += round.images.iter().map(|i| i.chunks_deduped).sum::<u64>();
-            Ok(round.images)
         }
-        Err(e) => Err(e),
+        return Err(e);
     }
+    st.last_ckpt_id = ckpt_id;
+    st.images_written += round.images.len() as u64;
+    st.total_stored_bytes += round.images.iter().map(|i| i.stored_bytes).sum::<u64>();
+    st.total_raw_bytes += round.images.iter().map(|i| i.raw_bytes).sum::<u64>();
+    st.total_chunks_written += round.images.iter().map(|i| i.chunks_written).sum::<u64>();
+    st.total_chunks_deduped += round.images.iter().map(|i| i.chunks_deduped).sum::<u64>();
+    Ok(round.images)
 }
 
 fn drive_phases(shared: &Arc<Shared>, ckpt_id: u64, dir: &str) -> Result<()> {
@@ -361,16 +477,29 @@ fn drive_phases(shared: &Arc<Shared>, ckpt_id: u64, dir: &str) -> Result<()> {
                 };
                 if send_from_coordinator(&mut c.stream, &msg).is_err() {
                     log::warn!("phase {phase:?}: client {vpid} unreachable");
-                    // Reader thread will clean it up; drop from pending now.
-                    st.round.as_mut().unwrap().pending.remove(&vpid);
+                    // All-or-nothing: a client unreachable mid-barrier
+                    // fails the whole round (the reader thread will reap
+                    // the connection; the round must not "succeed" with a
+                    // partial image set).
+                    let round = st.round.as_mut().unwrap();
+                    round.pending.remove(&vpid);
+                    round.failed = Some(format!(
+                        "client vpid {vpid} unreachable during {phase:?} of round {ckpt_id}"
+                    ));
                 }
             }
         }
-        // Await all acks for this phase.
+        // Await all acks for this phase. A round marked failed (client
+        // death or unreachability) aborts promptly — the teardown in
+        // `checkpoint_all_inner` converts it into the error and resumes
+        // the survivors; waiting out the timeout would only stall them.
         let deadline = std::time::Instant::now() + shared.config.phase_timeout;
         let mut st = shared.state.lock().unwrap();
         loop {
             let round = st.round.as_ref().expect("no active round");
+            if round.failed.is_some() {
+                return Ok(());
+            }
             if round.pending.is_empty() {
                 break;
             }
@@ -402,6 +531,7 @@ fn client_loop(shared: Arc<Shared>, mut stream: TcpStream) {
                 name,
                 n_threads,
                 restored_vpid,
+                rank,
             } => {
                 let write_stream = match stream.try_clone() {
                     Ok(s) => s,
@@ -441,6 +571,7 @@ fn client_loop(shared: Arc<Shared>, mut stream: TcpStream) {
                         name: name.clone(),
                         real_pid,
                         n_threads,
+                        rank,
                     },
                 );
                 vpid = Some(assigned);
@@ -582,6 +713,29 @@ pub fn client_table(coord: &Coordinator) -> BTreeMap<u64, (String, u64, u32)> {
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicBool;
+
+    /// Regression test for concurrent boots colliding on a pinned port:
+    /// with `retry_ephemeral` (the default) the second coordinator falls
+    /// back to an ephemeral port instead of failing; with it disabled the
+    /// collision surfaces as an error.
+    #[test]
+    fn pinned_port_collision_falls_back_to_ephemeral() {
+        // Occupy a concrete port first.
+        let blocker = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let taken = blocker.local_addr().unwrap().port();
+        let dir = std::env::temp_dir().join(format!("ncr_coord_port_{}", std::process::id()));
+        let cfg = |retry: bool| CoordinatorConfig {
+            bind: format!("127.0.0.1:{taken}"),
+            ckpt_dir: dir.join("ckpt"),
+            retry_ephemeral: retry,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(cfg(true)).expect("ephemeral fallback");
+        assert_ne!(coord.addr().port(), taken, "fallback must pick a new port");
+        assert!(Coordinator::start(cfg(false)).is_err(), "no-retry must fail");
+        drop(coord);
+        std::fs::remove_dir_all(&dir).ok();
+    }
 
     /// Regression test for the rendezvous-file race: the file is renamed
     /// into place atomically, so a reader polling it while coordinators

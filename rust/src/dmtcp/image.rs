@@ -47,6 +47,9 @@ use crate::util::bytes::{ByteReader, PutBytes};
 pub(crate) const MAGIC: &[u8; 8] = b"NCRDMTCP";
 pub(crate) const VERSION_FULL: u32 = 1;
 pub(crate) const VERSION_MANIFEST: u32 = 2;
+/// A gang manifest: the consistent-cut record tying one checkpoint round's
+/// per-rank images together (see [`crate::dmtcp::store::GangManifest`]).
+pub(crate) const VERSION_GANG: u32 = 3;
 pub(crate) const FLAG_GZIP: u32 = 1;
 
 /// A virtualized file-descriptor table entry captured in the image.

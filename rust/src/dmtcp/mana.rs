@@ -36,11 +36,25 @@ pub type ReinitFn<S> = Box<dyn Fn(&mut S) -> Result<()> + Send>;
 pub struct ManaState<S: Checkpointable> {
     inner: Arc<Mutex<S>>,
     reinit: ReinitFn<S>,
+    exclude_lib: bool,
 }
 
 impl<S: Checkpointable> ManaState<S> {
     pub fn new(inner: Arc<Mutex<S>>, reinit: ReinitFn<S>) -> Self {
-        Self { inner, reinit }
+        Self::with_exclusion(inner, reinit, true)
+    }
+
+    /// Like [`ManaState::new`], but with lower-half exclusion as a knob:
+    /// `exclude_lib = false` keeps `lib:` segments in the image (the
+    /// whole-process DMTCP baseline of the MANA ablation) while *still*
+    /// running `reinit` on restore — a restored lower half is stale for
+    /// the new incarnation either way, so the rebuild is unconditional.
+    pub fn with_exclusion(inner: Arc<Mutex<S>>, reinit: ReinitFn<S>, exclude_lib: bool) -> Self {
+        Self {
+            inner,
+            reinit,
+            exclude_lib,
+        }
     }
 
     /// Shared handle to the wrapped state.
@@ -61,7 +75,7 @@ impl<S: Checkpointable> Checkpointable for ManaState<S> {
             .expect("mana inner poisoned")
             .segments()
             .into_iter()
-            .filter(|(name, _)| !Self::is_lib_segment(name))
+            .filter(|(name, _)| !self.exclude_lib || !Self::is_lib_segment(name))
             .collect()
     }
 
@@ -157,6 +171,46 @@ mod tests {
         m2.restore(&segs).unwrap();
         let app = inner2.lock().unwrap();
         assert_eq!(app.science, vec![1, 2, 3]);
+        assert_eq!(app.endpoints, b"fresh-endpoints");
+        assert_eq!(app.reinit_count, 1);
+    }
+
+    #[test]
+    fn exclusion_off_keeps_lib_segments_but_still_reinits() {
+        let inner = Arc::new(Mutex::new(MpiApp {
+            science: vec![1, 2, 3],
+            endpoints: b"node17:4242".to_vec(),
+            reinit_count: 0,
+        }));
+        let m = ManaState::with_exclusion(
+            Arc::clone(&inner),
+            Box::new(|app: &mut MpiApp| {
+                app.endpoints = b"fresh-endpoints".to_vec();
+                app.reinit_count += 1;
+                Ok(())
+            }),
+            false,
+        );
+        let segs = m.segments();
+        assert_eq!(segs.len(), 2, "whole-process mode keeps the lower half");
+        let inner2 = Arc::new(Mutex::new(MpiApp {
+            science: Vec::new(),
+            endpoints: b"STALE".to_vec(),
+            reinit_count: 0,
+        }));
+        let mut m2 = ManaState::with_exclusion(
+            Arc::clone(&inner2),
+            Box::new(|app: &mut MpiApp| {
+                app.endpoints = b"fresh-endpoints".to_vec();
+                app.reinit_count += 1;
+                Ok(())
+            }),
+            false,
+        );
+        m2.restore(&segs).unwrap();
+        let app = inner2.lock().unwrap();
+        assert_eq!(app.science, vec![1, 2, 3]);
+        // Restored stale endpoints are rebuilt regardless of the knob.
         assert_eq!(app.endpoints, b"fresh-endpoints");
         assert_eq!(app.reinit_count, 1);
     }

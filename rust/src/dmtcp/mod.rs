@@ -32,9 +32,9 @@ pub use launch::{dmtcp_launch, LaunchSpec, LaunchedProcess};
 pub use mana::{ManaState, LIB_PREFIX};
 pub use plugin::{EnvPlugin, Event, Plugin, PluginCtx, PluginRegistry, TimerPlugin};
 pub use process::{Checkpointable, GateVerdict, SuspendGate, UserProcess, WorkerCtx};
-pub use restart::{dmtcp_restart, inspect_image, RestartedProcess};
+pub use restart::{dmtcp_restart, inspect_gang, inspect_image, RestartedProcess};
 pub use store::{
-    ChunkId, ChunkRef, GcStats, ImageManifest, ImageStore, SegmentManifest, StoreOpts,
-    StoreWriteStats, DEFAULT_CHUNK_SIZE,
+    latest_gang_manifest, ChunkId, ChunkRef, GangManifest, GangRankEntry, GcStats, ImageManifest,
+    ImageStore, SegmentManifest, StoreOpts, StoreWriteStats, DEFAULT_CHUNK_SIZE,
 };
 pub use virtualization::{FdKind, FdTable, PidTable};

@@ -26,10 +26,25 @@ use crate::error::Error;
 use crate::util::bytes::{ByteReader, PutBytes};
 
 /// Checkpoint-lifecycle events delivered to plugins, in protocol order.
+///
+/// The five barrier phases each have a hook: `Suspend` (threads parked),
+/// `Drain` (quiesce in-flight channel data — the gang C/R drain plugins
+/// move undelivered rank-to-rank messages into the checkpointable state
+/// here, so the image set is a consistent cut), `PreCheckpoint` (about to
+/// serialize), `Refill` (re-prime drained channels), and `PostCheckpoint`
+/// (resuming). `PostRestart` and `Kill` are the out-of-barrier events.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Event {
+    /// All user threads parked at their safe-points (SUSPEND phase).
+    Suspend,
+    /// Flush in-flight channel/socket data into the checkpointable state
+    /// (DRAIN phase). All processes of the computation are suspended when
+    /// this fires — the global barrier orders SUSPEND before any DRAIN.
+    Drain,
     /// All user threads parked; about to serialize.
     PreCheckpoint,
+    /// Re-prime drained channels (REFILL phase).
+    Refill,
     /// Image written; process continuing (checkpoint-only path).
     PostCheckpoint,
     /// Process reconstructed from an image; records available.

@@ -57,12 +57,16 @@ impl Phase {
 #[derive(Debug, Clone, PartialEq)]
 pub enum ToCoordinator {
     /// Register a process. `restored_vpid` re-attaches a restarted process
-    /// under its original virtual pid.
+    /// under its original virtual pid. `rank` identifies the process's
+    /// position in a gang computation (`None` for independent processes);
+    /// the coordinator uses it to assemble per-rank image sets into one
+    /// gang manifest.
     Hello {
         real_pid: u64,
         name: String,
         n_threads: u32,
         restored_vpid: Option<u64>,
+        rank: Option<u32>,
     },
     /// Ack for one barrier phase of one checkpoint round.
     PhaseAck { vpid: u64, ckpt_id: u64, phase: Phase },
@@ -120,7 +124,10 @@ pub enum FromCoordinator {
 
 // ---- encoding ------------------------------------------------------------
 
-fn encode_to_coordinator(msg: &ToCoordinator) -> Vec<u8> {
+/// Encode a client→coordinator message body (tag byte + payload, no
+/// frame). Public so the protocol torture suite can corrupt known-good
+/// encodings byte-by-byte.
+pub fn encode_to_coordinator(msg: &ToCoordinator) -> Vec<u8> {
     let mut b = Vec::new();
     match msg {
         ToCoordinator::Hello {
@@ -128,6 +135,7 @@ fn encode_to_coordinator(msg: &ToCoordinator) -> Vec<u8> {
             name,
             n_threads,
             restored_vpid,
+            rank,
         } => {
             b.put_u8(0);
             b.put_u64(*real_pid);
@@ -137,6 +145,13 @@ fn encode_to_coordinator(msg: &ToCoordinator) -> Vec<u8> {
                 Some(v) => {
                     b.put_u8(1);
                     b.put_u64(*v);
+                }
+                None => b.put_u8(0),
+            }
+            match rank {
+                Some(r) => {
+                    b.put_u8(1);
+                    b.put_u32(*r);
                 }
                 None => b.put_u8(0),
             }
@@ -178,7 +193,20 @@ fn encode_to_coordinator(msg: &ToCoordinator) -> Vec<u8> {
     b
 }
 
-fn decode_to_coordinator(buf: &[u8]) -> Result<ToCoordinator> {
+/// Decode the presence byte of an optional field strictly: anything other
+/// than 0 or 1 is a protocol error, not a silent `None` — a bit-flipped
+/// flag must not quietly drop a restart's virtual pid or a gang rank.
+fn get_opt_flag(r: &mut ByteReader<'_>, what: &str) -> Result<bool> {
+    match r.get_u8().map_err(|e| Error::Protocol(e.to_string()))? {
+        0 => Ok(false),
+        1 => Ok(true),
+        v => Err(Error::Protocol(format!("bad {what} presence byte {v}"))),
+    }
+}
+
+/// Decode a client→coordinator message body (inverse of
+/// [`encode_to_coordinator`]). Public for the protocol torture suite.
+pub fn decode_to_coordinator(buf: &[u8]) -> Result<ToCoordinator> {
     let mut r = ByteReader::new(buf);
     let tag = r.get_u8()?;
     Ok(match tag {
@@ -186,8 +214,13 @@ fn decode_to_coordinator(buf: &[u8]) -> Result<ToCoordinator> {
             real_pid: r.get_u64()?,
             name: r.get_lp_str()?,
             n_threads: r.get_u32()?,
-            restored_vpid: if r.get_u8()? == 1 {
+            restored_vpid: if get_opt_flag(&mut r, "restored_vpid")? {
                 Some(r.get_u64()?)
+            } else {
+                None
+            },
+            rank: if get_opt_flag(&mut r, "rank")? {
+                Some(r.get_u32()?)
             } else {
                 None
             },
@@ -213,9 +246,25 @@ fn decode_to_coordinator(buf: &[u8]) -> Result<ToCoordinator> {
         6 => ToCoordinator::CommandQuit,
         _ => return Err(Error::Protocol(format!("bad ToCoordinator tag {tag}"))),
     })
+    .and_then(|m| reject_trailing(&r, m))
 }
 
-fn encode_from_coordinator(msg: &FromCoordinator) -> Vec<u8> {
+/// A frame longer than its message is as malformed as one shorter: reject
+/// trailing bytes so corruption in a length prefix cannot smuggle extra
+/// payload past the decoder.
+fn reject_trailing<T>(r: &ByteReader<'_>, msg: T) -> Result<T> {
+    if r.remaining() != 0 {
+        return Err(Error::Protocol(format!(
+            "{} trailing bytes after message",
+            r.remaining()
+        )));
+    }
+    Ok(msg)
+}
+
+/// Encode a coordinator→client message body (tag byte + payload, no
+/// frame). Public for the protocol torture suite.
+pub fn encode_from_coordinator(msg: &FromCoordinator) -> Vec<u8> {
     let mut b = Vec::new();
     match msg {
         FromCoordinator::Welcome { vpid, epoch } => {
@@ -258,7 +307,9 @@ fn encode_from_coordinator(msg: &FromCoordinator) -> Vec<u8> {
     b
 }
 
-fn decode_from_coordinator(buf: &[u8]) -> Result<FromCoordinator> {
+/// Decode a coordinator→client message body (inverse of
+/// [`encode_from_coordinator`]). Public for the protocol torture suite.
+pub fn decode_from_coordinator(buf: &[u8]) -> Result<FromCoordinator> {
     let mut r = ByteReader::new(buf);
     let tag = r.get_u8()?;
     Ok(match tag {
@@ -287,11 +338,14 @@ fn decode_from_coordinator(buf: &[u8]) -> Result<FromCoordinator> {
         },
         _ => return Err(Error::Protocol(format!("bad FromCoordinator tag {tag}"))),
     })
+    .and_then(|m| reject_trailing(&r, m))
 }
 
 // ---- framing ---------------------------------------------------------------
 
-const MAX_FRAME: u32 = 16 * 1024 * 1024;
+/// Upper bound on one frame's payload; an oversized length prefix is
+/// rejected before any allocation or read happens.
+pub const MAX_FRAME: u32 = 16 * 1024 * 1024;
 
 fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> Result<()> {
     let len = payload.len() as u32;
@@ -348,12 +402,14 @@ mod tests {
                 name: "worker-0".into(),
                 n_threads: 4,
                 restored_vpid: None,
+                rank: None,
             },
             ToCoordinator::Hello {
                 real_pid: 9,
                 name: "w".into(),
                 n_threads: 1,
                 restored_vpid: Some(40_001),
+                rank: Some(3),
             },
             ToCoordinator::PhaseAck {
                 vpid: 40_001,
@@ -423,6 +479,29 @@ mod tests {
         assert!(decode_to_coordinator(&[99]).is_err());
         assert!(decode_from_coordinator(&[77, 1, 2]).is_err());
         assert!(decode_to_coordinator(&[]).is_err());
+    }
+
+    #[test]
+    fn strict_option_flags_and_trailing_bytes_rejected() {
+        let good = encode_to_coordinator(&ToCoordinator::Hello {
+            real_pid: 1,
+            name: "w".into(),
+            n_threads: 1,
+            restored_vpid: None,
+            rank: None,
+        });
+        // A bit-flipped presence byte must be an error, not a silent None.
+        let mut bad_flag = good.clone();
+        let flag_at = bad_flag.len() - 2; // [.., restored_vpid flag, rank flag]
+        bad_flag[flag_at] = 7;
+        assert!(decode_to_coordinator(&bad_flag).is_err());
+        // Trailing bytes beyond the message are rejected in both directions.
+        let mut trailing = good;
+        trailing.push(0);
+        assert!(decode_to_coordinator(&trailing).is_err());
+        let mut trailing = encode_from_coordinator(&FromCoordinator::Kill);
+        trailing.push(9);
+        assert!(decode_from_coordinator(&trailing).is_err());
     }
 
     #[test]

@@ -99,3 +99,27 @@ pub fn dmtcp_restart<S: Checkpointable + 'static>(
 pub fn inspect_image(image_path: &Path) -> Result<ImageHeader> {
     crate::dmtcp::store::inspect_image_file(image_path)
 }
+
+/// Peek at a gang checkpoint without restoring it: read the consistent-cut
+/// manifest and the header of every rank image it references. Any missing,
+/// truncated, or damaged piece is a typed error — exactly what a gang
+/// restart would hit — so tooling (and the phase-kill torture suite) can
+/// prove an image set is restartable without booting ranks.
+pub fn inspect_gang(
+    manifest_path: &Path,
+) -> Result<(crate::dmtcp::store::GangManifest, Vec<ImageHeader>)> {
+    let manifest = crate::dmtcp::store::GangManifest::read_file(manifest_path)?;
+    let dir = manifest_path.parent().unwrap_or(Path::new("."));
+    let mut headers = Vec::with_capacity(manifest.ranks.len());
+    for entry in &manifest.ranks {
+        let h = inspect_image(&dir.join(&entry.image))?;
+        if h.vpid != entry.vpid {
+            return Err(crate::error::Error::Image(format!(
+                "gang rank {}: image {} holds vpid {}, manifest says {}",
+                entry.rank, entry.image, h.vpid, entry.vpid
+            )));
+        }
+        headers.push(h);
+    }
+    Ok((manifest, headers))
+}

@@ -41,7 +41,8 @@ use flate2::write::GzEncoder;
 use flate2::Compression;
 
 use crate::dmtcp::image::{
-    self, atomic_write, CheckpointImage, ImageHeader, VERSION_FULL, VERSION_MANIFEST,
+    self, atomic_write, CheckpointImage, ImageHeader, VERSION_FULL, VERSION_GANG,
+    VERSION_MANIFEST,
 };
 use crate::error::{Error, Result};
 use crate::util::bytes::{ByteReader, PutBytes};
@@ -762,12 +763,206 @@ pub fn inspect_image_file(path: &Path) -> Result<ImageHeader> {
     }
 }
 
-/// The image version (1 full, 2 manifest) of an image file, for tooling
-/// and tests.
+/// The image version (1 full, 2 manifest, 3 gang manifest) of an image
+/// file, for tooling and tests.
 pub fn image_version(path: &Path) -> Result<u32> {
     let bytes = std::fs::read(path)
         .map_err(|e| Error::Image(format!("{}: {e}", path.display())))?;
     Ok(image::unframe(&bytes)?.0)
+}
+
+// ---- gang manifests --------------------------------------------------------
+
+/// One rank's image in a gang checkpoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GangRankEntry {
+    /// Gang rank (0-based, contiguous).
+    pub rank: u32,
+    /// Virtual pid the rank runs (and restarts) under.
+    pub vpid: u64,
+    /// Image file name, relative to the gang manifest's directory (the
+    /// set stays portable across substrates and volume mappings).
+    pub image: String,
+    /// Steps the rank had completed at the consistent cut.
+    pub steps_done: u64,
+    /// Bytes the rank's image stored (whole file for v1; manifest plus
+    /// new chunks for v2 incremental images).
+    pub stored_bytes: u64,
+    /// Raw (logical) bytes the rank's image described.
+    pub raw_bytes: u64,
+}
+
+/// The consistent-cut record of one gang checkpoint round: which rank
+/// images belong together, written *atomically, once, after every rank
+/// image of the round is durably published*. A gang restart trusts only
+/// this file — per-rank images are round-stamped and immutable once a
+/// manifest references them, so a torn or aborted round can never be
+/// confused with a restartable one (invariant 7, DESIGN §10).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GangManifest {
+    /// The gang's process-name base (session-nonce-scoped, like image
+    /// names).
+    pub gang: String,
+    /// Restart generation of the incarnation that took the checkpoint.
+    pub generation: u32,
+    /// Coordinator round id — the generation stamp of the cut.
+    pub ckpt_id: u64,
+    /// Per-rank entries, rank order (contiguous from 0).
+    pub ranks: Vec<GangRankEntry>,
+}
+
+impl GangManifest {
+    /// Number of ranks in the gang.
+    pub fn n_ranks(&self) -> u32 {
+        self.ranks.len() as u32
+    }
+
+    /// Total stored bytes across the rank images.
+    pub fn stored_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.stored_bytes).sum()
+    }
+
+    /// The slowest rank's progress at the cut (a gang restart resumes the
+    /// whole computation from a cut, so the gang's resume point is the
+    /// minimum).
+    pub fn cut_steps(&self) -> u64 {
+        self.ranks.iter().map(|r| r.steps_done).min().unwrap_or(0)
+    }
+
+    /// The file name a gang manifest of `gang` for round `ckpt_id` is
+    /// published under.
+    pub fn file_name(gang: &str, ckpt_id: u64) -> String {
+        format!("gang_{gang}_{ckpt_id:08}.gang")
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.put_lp_str(&self.gang);
+        b.put_u32(self.generation);
+        b.put_u64(self.ckpt_id);
+        b.put_u32(self.ranks.len() as u32);
+        for r in &self.ranks {
+            b.put_u32(r.rank);
+            b.put_u64(r.vpid);
+            b.put_lp_str(&r.image);
+            b.put_u64(r.steps_done);
+            b.put_u64(r.stored_bytes);
+            b.put_u64(r.raw_bytes);
+        }
+        b
+    }
+
+    fn decode(body: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(body);
+        let gang = r.get_lp_str()?;
+        let generation = r.get_u32()?;
+        let ckpt_id = r.get_u64()?;
+        let n = r.get_u32()?;
+        let mut ranks = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            ranks.push(GangRankEntry {
+                rank: r.get_u32()?,
+                vpid: r.get_u64()?,
+                image: r.get_lp_str()?,
+                steps_done: r.get_u64()?,
+                stored_bytes: r.get_u64()?,
+                raw_bytes: r.get_u64()?,
+            });
+        }
+        if r.remaining() != 0 {
+            return Err(Error::Image(format!(
+                "{} trailing bytes after gang manifest",
+                r.remaining()
+            )));
+        }
+        let m = Self {
+            gang,
+            generation,
+            ckpt_id,
+            ranks,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural validation shared by the writer and the reader: a gang
+    /// manifest describes a complete, contiguous, duplicate-free rank set.
+    pub fn validate(&self) -> Result<()> {
+        if self.ranks.is_empty() {
+            return Err(Error::Image("gang manifest with zero ranks".into()));
+        }
+        for (i, e) in self.ranks.iter().enumerate() {
+            if e.rank != i as u32 {
+                return Err(Error::Image(format!(
+                    "gang manifest ranks not contiguous: position {i} holds rank {}",
+                    e.rank
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Atomically publish the manifest into `dir` under its canonical
+    /// name; returns the path. Callers only invoke this once every rank
+    /// image of the round is durably on disk — the rename is the commit
+    /// point of the whole gang checkpoint.
+    pub fn write_file(&self, dir: &Path) -> Result<PathBuf> {
+        self.validate()?;
+        let path = dir.join(Self::file_name(&self.gang, self.ckpt_id));
+        let bytes = image::frame(VERSION_GANG, 0, &self.encode());
+        atomic_write(&path, &bytes)?;
+        Ok(path)
+    }
+
+    /// Read and verify a gang manifest (magic, version, body CRC,
+    /// structural validity).
+    pub fn read_file(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::Image(format!("{}: {e}", path.display())))?;
+        let (version, _flags, body) = image::unframe(&bytes)?;
+        if version != VERSION_GANG {
+            return Err(Error::Image(format!(
+                "{}: image version {version} is not a gang manifest",
+                path.display()
+            )));
+        }
+        Self::decode(body)
+    }
+}
+
+/// Find the newest restartable gang manifest for `gang` in `ckpt_dir`:
+/// the highest `(generation, round id)` whose manifest reads back valid —
+/// generation first, so even if round ids ever regressed across
+/// incarnations a later generation's cut could not be shadowed by an
+/// older one (the gang session additionally seeds each incarnation's
+/// round ids above the restored cut's, keeping file names unique).
+/// Unreadable or damaged manifests are skipped (an aborted writer or bit
+/// rot must not mask an older good cut); `Ok(None)` when none exists.
+pub fn latest_gang_manifest(ckpt_dir: &Path, gang: &str) -> Result<Option<(PathBuf, GangManifest)>> {
+    let prefix = format!("gang_{gang}_");
+    let mut best: Option<((u32, u64), PathBuf, GangManifest)> = None;
+    if let Ok(entries) = std::fs::read_dir(ckpt_dir) {
+        for e in entries.flatten() {
+            let p = e.path();
+            let Some(name) = p.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            if !name.starts_with(&prefix) || !name.ends_with(".gang") {
+                continue;
+            }
+            match GangManifest::read_file(&p) {
+                Ok(m) if m.gang == gang => {
+                    let key = (m.generation, m.ckpt_id);
+                    if best.as_ref().map(|(k, _, _)| key > *k).unwrap_or(true) {
+                        best = Some((key, p, m));
+                    }
+                }
+                Ok(_) => {} // prefix collision with a longer gang name
+                Err(e) => log::warn!("skipping unreadable gang manifest {name}: {e}"),
+            }
+        }
+    }
+    Ok(best.map(|(_, p, m)| (p, m)))
 }
 
 #[cfg(test)]

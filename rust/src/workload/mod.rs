@@ -12,9 +12,14 @@ pub mod detector;
 pub mod geant4;
 pub mod spectra;
 pub mod state;
+pub mod stencil;
 pub mod workloads;
 
 pub use cp2k::{cp2k_worker, Cp2kApp, Cp2kScratchPlugin, Cp2kState, CP2K_SCF_LABEL};
+pub use stencil::{
+    reference_final_states, stencil_worker, Fabric, HaloDrainPlugin, HaloMsg, Side, StencilApp,
+    StencilState, STENCIL_LABEL,
+};
 pub use detector::{reading, DetectorReading};
 pub use geant4::{static_inputs, xs_table, G4Version, Material, N_MATERIALS};
 pub use spectra::{Beam, GammaIsotope, NeutronSource};

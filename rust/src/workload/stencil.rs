@@ -1,0 +1,631 @@
+//! The distributed gang workload: an N-rank halo-exchange stencil.
+//!
+//! This is the multi-rank harness the gang C/R layer is exercised by —
+//! the moral equivalent of the paper's MPI applications under MANA. `N`
+//! ranks each own a slab of a 1-D ring of `u64` cells; every step each
+//! rank sends its two boundary cells to its neighbors over the in-process
+//! [`Fabric`] and cannot advance until both neighbor halos for the current
+//! step have arrived. All arithmetic is wrapping-integer, so a gang run is
+//! bit-reproducible and `checkpoint → kill → gang restart → completion` can
+//! be compared bit-for-bit against an uninterrupted reference.
+//!
+//! The C/R-relevant design points:
+//!
+//! * **In-flight messages are real.** A halo sent but not yet consumed
+//!   lives in the receiver's fabric inbox. During the DRAIN phase (all
+//!   ranks suspended) the [`HaloDrainPlugin`] moves every undelivered
+//!   message into the receiver's checkpointable state
+//!   ([`StencilState::pending_halos`]), making the per-rank image set a
+//!   consistent cut of the computation. Workers consume state-held halos
+//!   before polling the fabric, so REFILL needs no rewind.
+//! * **The fabric is lower-half state.** Endpoint tables are minted per
+//!   incarnation ([`Fabric::endpoint_blob`]) and exposed as a
+//!   [`crate::dmtcp::mana::LIB_PREFIX`] segment: MANA-style exclusion
+//!   drops them from images, and the MANA `reinit` hook rebuilds them on
+//!   restart — restored endpoints would dangle either way.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::dmtcp::mana::LIB_PREFIX;
+use crate::dmtcp::plugin::{Event, Plugin, PluginCtx};
+use crate::dmtcp::process::{Checkpointable, GateVerdict, WorkerCtx};
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, PutBytes};
+use crate::util::rng::SplitMix64;
+
+/// The workload label (process names, campaign specs, CLI).
+pub const STENCIL_LABEL: &str = "halo-stencil";
+
+/// Which boundary of the *receiver* a halo value feeds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Side {
+    /// The receiver's left boundary (value comes from its left neighbor).
+    Left = 0,
+    /// The receiver's right boundary.
+    Right = 1,
+}
+
+impl Side {
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            0 => Ok(Side::Left),
+            1 => Ok(Side::Right),
+            _ => Err(Error::Image(format!("bad halo side {v}"))),
+        }
+    }
+}
+
+/// One halo message: the sender's boundary cell at the start of `step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HaloMsg {
+    /// The step this halo belongs to.
+    pub step: u64,
+    /// Sending rank (diagnostics; delivery is keyed by `(step, side)`).
+    pub from: u32,
+    /// Which boundary of the receiver it feeds.
+    pub side: Side,
+    /// The boundary cell value.
+    pub value: u64,
+}
+
+/// Incarnation-scoped boot nonce source: two fabrics never share endpoint
+/// tables, even at the same generation (two sessions, one process).
+static FABRIC_NONCE: AtomicU64 = AtomicU64::new(1);
+
+/// The in-process communication plane of one gang incarnation: one inbox
+/// per rank, plus the incarnation-scoped endpoint tables (the lower half).
+/// Rebuilt from scratch at every (re)start — nothing in it survives an
+/// incarnation, which is exactly why it must not be checkpointed.
+pub struct Fabric {
+    n_ranks: u32,
+    generation: u32,
+    boot_nonce: u64,
+    endpoint_bytes: usize,
+    inboxes: Vec<Mutex<VecDeque<HaloMsg>>>,
+}
+
+impl Fabric {
+    /// A fresh fabric for `n_ranks` ranks at restart generation
+    /// `generation`, with `endpoint_bytes` of synthetic endpoint table per
+    /// rank (the MPI-library/transport-cache stand-in MANA excludes).
+    pub fn new(n_ranks: u32, generation: u32, endpoint_bytes: usize) -> Self {
+        Self {
+            n_ranks,
+            generation,
+            boot_nonce: FABRIC_NONCE.fetch_add(1, Ordering::Relaxed),
+            endpoint_bytes,
+            inboxes: (0..n_ranks).map(|_| Mutex::new(VecDeque::new())).collect(),
+        }
+    }
+
+    /// Ranks this fabric connects.
+    pub fn n_ranks(&self) -> u32 {
+        self.n_ranks
+    }
+
+    /// Deliver `msg` into rank `to`'s inbox (never blocks, never drops).
+    pub fn send(&self, to: u32, msg: HaloMsg) {
+        self.inboxes[to as usize]
+            .lock()
+            .expect("fabric inbox poisoned")
+            .push_back(msg);
+    }
+
+    /// Pop the oldest undelivered message for `rank`, if any.
+    pub fn try_recv(&self, rank: u32) -> Option<HaloMsg> {
+        self.inboxes[rank as usize]
+            .lock()
+            .expect("fabric inbox poisoned")
+            .pop_front()
+    }
+
+    /// Undelivered messages currently queued for `rank` (tests/metrics).
+    pub fn inbox_len(&self, rank: u32) -> usize {
+        self.inboxes[rank as usize]
+            .lock()
+            .expect("fabric inbox poisoned")
+            .len()
+    }
+
+    /// Rank `rank`'s endpoint table for *this* incarnation: deterministic
+    /// in `(generation, boot nonce, rank)`, so it differs across restarts
+    /// — a restored copy is recognizably stale.
+    pub fn endpoint_blob(&self, rank: u32) -> Vec<u8> {
+        let mut rng = SplitMix64::new(
+            (self.generation as u64) ^ self.boot_nonce.rotate_left(17) ^ ((rank as u64) << 40),
+        );
+        (0..self.endpoint_bytes).map(|_| rng.next_u32() as u8).collect()
+    }
+}
+
+/// One rank's checkpointable state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StencilState {
+    /// This rank's position.
+    pub rank: u32,
+    /// Gang width.
+    pub n_ranks: u32,
+    /// The rank's slab of the ring.
+    pub cells: Vec<u64>,
+    /// Steps completed.
+    pub step: u64,
+    /// Steps to run in total.
+    pub target_steps: u64,
+    /// Whether this rank's halos for the in-progress step were sent.
+    pub halos_sent: bool,
+    /// Halos received (or drained) but not yet consumed, keyed by
+    /// `(step, side)` — delivery order cannot matter.
+    pub pending_halos: BTreeMap<(u64, u8), u64>,
+    /// Lower half: the incarnation-scoped endpoint table copy, exposed as
+    /// a `lib:` segment (excluded under MANA, rebuilt by `reinit`).
+    pub endpoints: Vec<u8>,
+}
+
+/// Seed-derived initial cell value.
+fn initial_cell(seed: u64, rank: u32, i: usize) -> u64 {
+    let mut rng = SplitMix64::new(seed ^ ((rank as u64) << 32) ^ (i as u64).rotate_left(11));
+    rng.next_u64()
+}
+
+/// The stencil update: deterministic wrapping mix of the left/center/right
+/// values plus the step index (so there are no fixed points).
+fn stencil_mix(l: u64, c: u64, r: u64, step: u64) -> u64 {
+    l.rotate_left(7)
+        .wrapping_add(c.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        ^ r.rotate_right(13).wrapping_add(step)
+}
+
+impl StencilState {
+    /// A fresh rank state at step 0.
+    pub fn fresh(rank: u32, n_ranks: u32, cells_per_rank: usize, target_steps: u64, seed: u64) -> Self {
+        Self {
+            rank,
+            n_ranks,
+            cells: (0..cells_per_rank).map(|i| initial_cell(seed, rank, i)).collect(),
+            step: 0,
+            target_steps,
+            halos_sent: false,
+            pending_halos: BTreeMap::new(),
+            endpoints: Vec::new(),
+        }
+    }
+
+    /// An empty shell for `dmtcp_restart` to restore into.
+    pub fn shell(rank: u32, n_ranks: u32) -> Self {
+        Self {
+            rank,
+            n_ranks,
+            cells: Vec::new(),
+            step: 0,
+            target_steps: 0,
+            halos_sent: false,
+            pending_halos: BTreeMap::new(),
+            endpoints: Vec::new(),
+        }
+    }
+
+    /// Left neighbor on the ring.
+    pub fn left(&self) -> u32 {
+        (self.rank + self.n_ranks - 1) % self.n_ranks
+    }
+
+    /// Right neighbor on the ring.
+    pub fn right(&self) -> u32 {
+        (self.rank + 1) % self.n_ranks
+    }
+
+    /// Whether the rank reached its target.
+    pub fn done(&self) -> bool {
+        self.step >= self.target_steps
+    }
+
+    /// Apply one stencil step given both halo values for the current step.
+    fn advance(&mut self, left_halo: u64, right_halo: u64) {
+        let prev = self.cells.clone();
+        let n = prev.len();
+        for i in 0..n {
+            let l = if i == 0 { left_halo } else { prev[i - 1] };
+            let r = if i + 1 == n { right_halo } else { prev[i + 1] };
+            self.cells[i] = stencil_mix(l, prev[i], r, self.step);
+        }
+        self.step += 1;
+        self.halos_sent = false;
+    }
+
+    /// Digest of the upper-half (science) state, for bit-identity checks
+    /// that must not depend on the incarnation-scoped lower half.
+    pub fn science_digest(&self) -> u64 {
+        let mut h = self.step ^ ((self.rank as u64) << 48);
+        for &c in &self.cells {
+            h = stencil_mix(h, c, h.rotate_left(31), 0x5EED);
+        }
+        h
+    }
+}
+
+impl Checkpointable for StencilState {
+    fn segments(&self) -> Vec<(String, Vec<u8>)> {
+        let mut cells = Vec::with_capacity(self.cells.len() * 8);
+        for c in &self.cells {
+            cells.extend_from_slice(&c.to_le_bytes());
+        }
+        let mut meta = Vec::new();
+        meta.put_u32(self.rank);
+        meta.put_u32(self.n_ranks);
+        meta.put_u64(self.step);
+        meta.put_u64(self.target_steps);
+        meta.put_u8(self.halos_sent as u8);
+        let mut halos = Vec::new();
+        halos.put_u32(self.pending_halos.len() as u32);
+        for (&(step, side), &value) in &self.pending_halos {
+            halos.put_u64(step);
+            halos.put_u8(side);
+            halos.put_u64(value);
+        }
+        vec![
+            ("cells".into(), cells),
+            ("meta".into(), meta),
+            ("halos".into(), halos),
+            (format!("{LIB_PREFIX}endpoints"), self.endpoints.clone()),
+        ]
+    }
+
+    fn restore(&mut self, segments: &[(String, Vec<u8>)]) -> Result<()> {
+        let lib_endpoints = format!("{LIB_PREFIX}endpoints");
+        let mut saw_meta = false;
+        for (name, data) in segments {
+            match name.as_str() {
+                "cells" => {
+                    if data.len() % 8 != 0 {
+                        return Err(Error::Image(format!(
+                            "stencil cells segment length {} not /8",
+                            data.len()
+                        )));
+                    }
+                    self.cells = data
+                        .chunks_exact(8)
+                        .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+                        .collect();
+                }
+                "meta" => {
+                    let mut r = ByteReader::new(data);
+                    let rank = r.get_u32()?;
+                    if rank != self.rank {
+                        return Err(Error::Image(format!(
+                            "stencil image is for rank {rank}, restoring shell is rank {}",
+                            self.rank
+                        )));
+                    }
+                    let n_ranks = r.get_u32()?;
+                    if n_ranks != self.n_ranks {
+                        return Err(Error::Image(format!(
+                            "stencil image is for a {n_ranks}-rank gang, shell expects {} \
+                             (gang restart preserves rank count)",
+                            self.n_ranks
+                        )));
+                    }
+                    self.step = r.get_u64()?;
+                    self.target_steps = r.get_u64()?;
+                    self.halos_sent = r.get_u8()? != 0;
+                    saw_meta = true;
+                }
+                "halos" => {
+                    let mut r = ByteReader::new(data);
+                    let n = r.get_u32()?;
+                    self.pending_halos.clear();
+                    for _ in 0..n {
+                        let step = r.get_u64()?;
+                        let side = Side::from_u8(r.get_u8()?)? as u8;
+                        let value = r.get_u64()?;
+                        self.pending_halos.insert((step, side), value);
+                    }
+                }
+                n if n == lib_endpoints => {
+                    // Present only in whole-process (non-MANA) images; a
+                    // restored endpoint table is stale and is rebuilt by
+                    // the MANA reinit hook right after this restore.
+                    self.endpoints = data.clone();
+                }
+                _ => {}
+            }
+        }
+        if !saw_meta {
+            return Err(Error::Image("stencil image missing meta segment".into()));
+        }
+        Ok(())
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step
+    }
+
+    fn size_bytes(&self) -> usize {
+        self.cells.len() * 8 + self.endpoints.len() + self.pending_halos.len() * 24 + 64
+    }
+}
+
+/// The DRAIN-phase plugin: move every undelivered message for this rank
+/// from the fabric inbox into the checkpointable state, so the image set
+/// captures the consistent cut (in-flight data included). Fires only when
+/// every rank of the computation is suspended — the global barrier orders
+/// all SUSPENDs before any DRAIN — so the inbox is final when read.
+pub struct HaloDrainPlugin {
+    /// The rank whose inbox this plugin drains.
+    pub rank: u32,
+    /// The rank's state (drained messages land in `pending_halos`).
+    pub state: Arc<Mutex<StencilState>>,
+    /// This incarnation's fabric.
+    pub fabric: Arc<Fabric>,
+}
+
+impl Plugin for HaloDrainPlugin {
+    fn name(&self) -> &'static str {
+        "halo-drain"
+    }
+
+    fn on_event(&mut self, event: Event, _ctx: &mut PluginCtx<'_>) -> Result<()> {
+        if event == Event::Drain {
+            let mut s = self.state.lock().expect("stencil state poisoned");
+            let mut drained = 0u32;
+            while let Some(m) = self.fabric.try_recv(self.rank) {
+                s.pending_halos.insert((m.step, m.side as u8), m.value);
+                drained += 1;
+            }
+            if drained > 0 {
+                log::debug!("rank {}: drained {drained} in-flight halos", self.rank);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The rank worker: exchange halos and advance the slab until the target
+/// step count (or a kill). `steps_per_quantum` bounds the work between
+/// checkpoint safe-points. State-held halos are consumed before the
+/// fabric is polled — the property that makes DRAIN lossless.
+pub fn stencil_worker(
+    ctx: WorkerCtx,
+    state: Arc<Mutex<StencilState>>,
+    fabric: Arc<Fabric>,
+    steps_per_quantum: u32,
+) {
+    loop {
+        if ctx.ckpt_point() == GateVerdict::Exit {
+            return;
+        }
+        let mut advanced = false;
+        for _ in 0..steps_per_quantum.max(1) {
+            let mut s = state.lock().expect("stencil state poisoned");
+            if s.done() {
+                ctx.record_steps(s.step);
+                return;
+            }
+            if !s.halos_sent {
+                // Our left boundary feeds the left neighbor's RIGHT side;
+                // our right boundary feeds the right neighbor's LEFT side.
+                let (step, rank) = (s.step, s.rank);
+                let first = *s.cells.first().expect("nonempty slab");
+                let last = *s.cells.last().expect("nonempty slab");
+                fabric.send(s.left(), HaloMsg { step, from: rank, side: Side::Right, value: first });
+                fabric.send(s.right(), HaloMsg { step, from: rank, side: Side::Left, value: last });
+                s.halos_sent = true;
+            }
+            while let Some(m) = fabric.try_recv(s.rank) {
+                s.pending_halos.insert((m.step, m.side as u8), m.value);
+            }
+            let l = s.pending_halos.get(&(s.step, Side::Left as u8)).copied();
+            let r = s.pending_halos.get(&(s.step, Side::Right as u8)).copied();
+            match (l, r) {
+                (Some(l), Some(r)) => {
+                    let key_l = (s.step, Side::Left as u8);
+                    let key_r = (s.step, Side::Right as u8);
+                    s.pending_halos.remove(&key_l);
+                    s.pending_halos.remove(&key_r);
+                    s.advance(l, r);
+                    let (step, bytes) = (s.step, s.size_bytes() as u64);
+                    drop(s);
+                    ctx.record_steps(step);
+                    ctx.record_state_bytes(bytes);
+                    advanced = true;
+                }
+                _ => break, // waiting on a neighbor
+            }
+        }
+        if !advanced {
+            std::thread::sleep(Duration::from_micros(100));
+        }
+    }
+}
+
+/// Run the gang lockstep in-process (no fabric, no threads): the
+/// uninterrupted reference every gang run is verified bit-for-bit
+/// against. Returns each rank's `(cells, step)` at completion.
+pub fn reference_final_states(
+    n_ranks: u32,
+    cells_per_rank: usize,
+    target_steps: u64,
+    seed: u64,
+) -> Vec<(Vec<u64>, u64)> {
+    let n = n_ranks as usize;
+    let mut slabs: Vec<Vec<u64>> = (0..n_ranks)
+        .map(|r| (0..cells_per_rank).map(|i| initial_cell(seed, r, i)).collect())
+        .collect();
+    for step in 0..target_steps {
+        let snapshot = slabs.clone();
+        for r in 0..n {
+            let left_halo = *snapshot[(r + n - 1) % n].last().expect("nonempty slab");
+            let right_halo = *snapshot[(r + 1) % n].first().expect("nonempty slab");
+            let prev = &snapshot[r];
+            let m = prev.len();
+            for i in 0..m {
+                let l = if i == 0 { left_halo } else { prev[i - 1] };
+                let rv = if i + 1 == m { right_halo } else { prev[i + 1] };
+                slabs[r][i] = stencil_mix(l, prev[i], rv, step);
+            }
+        }
+    }
+    slabs.into_iter().map(|cells| (cells, target_steps)).collect()
+}
+
+/// Default lower-half size: big enough that MANA exclusion visibly wins.
+pub const DEFAULT_ENDPOINT_BYTES: usize = 64 * 1024;
+
+/// The halo-exchange gang application: mints rank states, owns the
+/// incarnation-scoped [`Fabric`], and implements
+/// [`crate::cr::app::GangApp`] so a [`crate::cr::gang::GangSession`] can
+/// drive it.
+pub struct StencilApp {
+    /// Gang width.
+    pub n_ranks: u32,
+    /// Slab size per rank.
+    pub cells_per_rank: usize,
+    /// Synthetic endpoint-table bytes per rank (the MANA ablation lever).
+    pub endpoint_bytes: usize,
+    fabric: Arc<Mutex<Option<Arc<Fabric>>>>,
+}
+
+impl StencilApp {
+    /// A gang of `n_ranks` ranks with `cells_per_rank`-cell slabs.
+    pub fn new(n_ranks: u32, cells_per_rank: usize) -> Self {
+        assert!(n_ranks >= 1, "a gang needs at least one rank");
+        assert!(cells_per_rank >= 1, "a slab needs at least one cell");
+        Self {
+            n_ranks,
+            cells_per_rank,
+            endpoint_bytes: DEFAULT_ENDPOINT_BYTES,
+            fabric: Arc::new(Mutex::new(None)),
+        }
+    }
+
+    /// Override the per-rank lower-half size.
+    pub fn endpoint_bytes(mut self, bytes: usize) -> Self {
+        self.endpoint_bytes = bytes;
+        self
+    }
+
+    /// Swap in a fresh fabric for restart generation `generation`.
+    pub fn rebuild_fabric(&self, generation: u32) {
+        *self.fabric.lock().expect("fabric holder poisoned") =
+            Some(Arc::new(Fabric::new(self.n_ranks, generation, self.endpoint_bytes)));
+    }
+
+    /// The current incarnation's fabric.
+    ///
+    /// # Panics
+    /// If no incarnation was begun ([`StencilApp::rebuild_fabric`]).
+    pub fn fabric(&self) -> Arc<Fabric> {
+        Arc::clone(
+            self.fabric
+                .lock()
+                .expect("fabric holder poisoned")
+                .as_ref()
+                .expect("no incarnation begun (rebuild_fabric not called)"),
+        )
+    }
+
+    /// Shared handle to the fabric slot (for `'static` reinit closures).
+    pub(crate) fn fabric_holder(&self) -> Arc<Mutex<Option<Arc<Fabric>>>> {
+        Arc::clone(&self.fabric)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fabric_delivers_in_order_per_inbox() {
+        let f = Fabric::new(2, 0, 16);
+        f.send(1, HaloMsg { step: 0, from: 0, side: Side::Left, value: 7 });
+        f.send(1, HaloMsg { step: 1, from: 0, side: Side::Left, value: 8 });
+        assert_eq!(f.inbox_len(1), 2);
+        assert_eq!(f.try_recv(1).unwrap().value, 7);
+        assert_eq!(f.try_recv(1).unwrap().value, 8);
+        assert!(f.try_recv(1).is_none());
+        assert!(f.try_recv(0).is_none());
+    }
+
+    #[test]
+    fn endpoint_blobs_differ_across_incarnations_and_ranks() {
+        let a = Fabric::new(2, 0, 256);
+        let b = Fabric::new(2, 1, 256);
+        assert_ne!(a.endpoint_blob(0), a.endpoint_blob(1));
+        assert_ne!(a.endpoint_blob(0), b.endpoint_blob(0));
+        // Within one fabric the table is stable.
+        assert_eq!(a.endpoint_blob(0), a.endpoint_blob(0));
+    }
+
+    #[test]
+    fn reference_is_deterministic_and_seed_sensitive() {
+        let a = reference_final_states(4, 8, 10, 42);
+        let b = reference_final_states(4, 8, 10, 42);
+        assert_eq!(a, b);
+        let c = reference_final_states(4, 8, 10, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn state_segments_roundtrip_with_pending_halos() {
+        let mut s = StencilState::fresh(2, 4, 8, 100, 7);
+        s.step = 3;
+        s.halos_sent = true;
+        s.pending_halos.insert((3, Side::Left as u8), 99);
+        s.pending_halos.insert((4, Side::Right as u8), 17);
+        s.endpoints = vec![1, 2, 3];
+        let segs = s.segments();
+        let mut shell = StencilState::shell(2, 4);
+        shell.restore(&segs).unwrap();
+        assert_eq!(s, shell);
+    }
+
+    #[test]
+    fn restore_rejects_rank_and_width_mismatch() {
+        let s = StencilState::fresh(1, 4, 8, 10, 7);
+        let segs = s.segments();
+        let mut wrong_rank = StencilState::shell(2, 4);
+        assert!(wrong_rank.restore(&segs).is_err());
+        let mut wrong_width = StencilState::shell(1, 8);
+        assert!(wrong_width.restore(&segs).is_err());
+    }
+
+    #[test]
+    fn drain_plugin_moves_inflight_halos_into_state() {
+        let fabric = Arc::new(Fabric::new(2, 0, 16));
+        let state = Arc::new(Mutex::new(StencilState::fresh(1, 2, 4, 10, 0)));
+        fabric.send(1, HaloMsg { step: 0, from: 0, side: Side::Left, value: 5 });
+        fabric.send(1, HaloMsg { step: 0, from: 0, side: Side::Right, value: 6 });
+        let mut p = HaloDrainPlugin {
+            rank: 1,
+            state: Arc::clone(&state),
+            fabric: Arc::clone(&fabric),
+        };
+        let mut records = std::collections::BTreeMap::new();
+        let mut env = std::collections::BTreeMap::new();
+        let mut ctx = PluginCtx {
+            records: &mut records,
+            env: &mut env,
+            generation: 0,
+        };
+        p.on_event(Event::Drain, &mut ctx).unwrap();
+        assert_eq!(fabric.inbox_len(1), 0, "inbox fully drained");
+        let s = state.lock().unwrap();
+        assert_eq!(s.pending_halos.get(&(0, Side::Left as u8)), Some(&5));
+        assert_eq!(s.pending_halos.get(&(0, Side::Right as u8)), Some(&6));
+    }
+
+    #[test]
+    fn single_rank_ring_matches_reference() {
+        // rank 0's neighbors are itself: both halos come from its own slab.
+        let reference = reference_final_states(1, 4, 5, 3);
+        let mut s = StencilState::fresh(0, 1, 4, 5, 3);
+        while !s.done() {
+            let l = *s.cells.last().unwrap();
+            let r = *s.cells.first().unwrap();
+            s.advance(l, r);
+        }
+        assert_eq!(s.cells, reference[0].0);
+    }
+}

@@ -1,0 +1,322 @@
+//! Gang C/R acceptance suite (PR-5 tentpole): coordinated multi-rank
+//! checkpoint + distributed restart over the halo-exchange stencil gang.
+//!
+//! * an 8-rank gang with injected kills completes **bit-identical** to
+//!   its failure-free reference;
+//! * gang restart works across substrates (checkpoint bare, restart
+//!   under podman-hpc), rank-count-preserving;
+//! * with MANA lower-half exclusion, every rank image is strictly
+//!   smaller than its whole-process counterpart while restores stay
+//!   bit-identical;
+//! * concurrent gangs boot side-by-side on one host (ephemeral
+//!   coordinator ports; the pinned-port fallback is unit-tested in
+//!   `dmtcp::coordinator`).
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use nersc_cr::container::{Image, PodmanHpc, Registry, RunSpec, EMBED_DMTCP_SNIPPET};
+use nersc_cr::cr::{GangSession, Substrate};
+use nersc_cr::dmtcp::store::latest_gang_manifest;
+use nersc_cr::workload::StencilApp;
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ncr_gangcr_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A podman-hpc execution context with DMTCP embedded and the checkpoint
+/// volume mapped (the same constraints `session_matrix` enforces).
+fn podman_substrate(wd: &Path) -> Substrate {
+    let mut registry = Registry::new();
+    registry.push(Image::base("my_application_container", "latest", 64 << 20));
+    let mut pm = PodmanHpc::new();
+    pm.build("gangcr", "v1", EMBED_DMTCP_SNIPPET, &registry).unwrap();
+    pm.migrate("gangcr:v1").unwrap();
+    let spec = RunSpec::default()
+        .volume(wd.join("ckpt").to_string_lossy(), "/ckpt")
+        .env("DMTCP_CHECKPOINT_DIR", "/ckpt");
+    Substrate::container(pm.run("gangcr:v1", spec).unwrap())
+}
+
+/// Checkpoint, retrying briefly (ranks may still be attaching-adjacent or
+/// a prior round may be in flight under contention).
+fn checkpoint_retrying(session: &GangSession<&StencilApp>) -> nersc_cr::cr::GangCheckpoint {
+    let mut last_err = None;
+    for _ in 0..200 {
+        match session.checkpoint_now() {
+            Ok(ck) => return ck,
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(Duration::from_millis(3));
+            }
+        }
+    }
+    panic!("gang checkpoint never succeeded: {:?}", last_err);
+}
+
+/// The acceptance scenario: an 8-rank gang, checkpointed mid-run, with
+/// two injected rank deaths (each aborting its generation and forcing a
+/// full gang restart), completing bit-identical to the uninterrupted
+/// reference.
+#[test]
+fn eight_rank_gang_with_injected_kills_is_bit_identical() {
+    const RANKS: u32 = 8;
+    const TARGET: u64 = 700;
+    let app = StencilApp::new(RANKS, 16).endpoint_bytes(4096);
+    let wd = workdir("eight");
+    let mut session = GangSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(TARGET)
+        .seed(42)
+        .incremental_images(4)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+
+    let mut kills = 0u32;
+    let mut checkpoints = 0u64;
+    while kills < 2 {
+        // Let the gang make some progress, then cut. (A gang that already
+        // finished still checkpoints and gang-restarts — the cycle below
+        // is valid at any point of the computation.)
+        std::thread::sleep(Duration::from_millis(15));
+        let ck = checkpoint_retrying(&session);
+        checkpoints += 1;
+        assert_eq!(ck.manifest.n_ranks(), RANKS);
+        // Kill a different rank each time: losing any rank aborts the
+        // generation, and the *whole* gang restarts from the cut.
+        let victim = (kills * 5) % RANKS;
+        session.kill_rank(victim).unwrap();
+        session.kill().unwrap();
+        let resumed = session.resubmit_from_checkpoint().unwrap();
+        assert_eq!(resumed, ck.manifest.cut_steps());
+        assert!(resumed <= TARGET);
+        kills += 1;
+    }
+    let st = session.wait_done(Duration::from_secs(120)).unwrap();
+    assert!(st.done);
+    assert!(checkpoints > 0, "the scenario must have checkpointed");
+    assert_eq!(
+        session.generation(),
+        kills,
+        "every kill costs exactly one generation"
+    );
+
+    // Bit-identical to the failure-free reference, on every rank.
+    let finals = session.final_states().unwrap();
+    assert_eq!(finals.len(), RANKS as usize);
+    session.verify_final(&finals).unwrap();
+    // The per-rank pending queues fully drained by completion.
+    for f in &finals {
+        assert!(f.pending_halos.is_empty(), "rank {} kept stale halos", f.rank);
+    }
+    session.finish();
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// Cross-substrate gang restart: checkpoint on bare processes, gang
+/// restart every rank under podman-hpc, complete, verify bit-identical.
+#[test]
+fn gang_restart_bare_to_podman_hpc() {
+    const RANKS: u32 = 4;
+    let app = StencilApp::new(RANKS, 12);
+    let wd = workdir("xsub");
+    let mut session = GangSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(400)
+        .seed(7)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+    let ck = checkpoint_retrying(&session);
+    session.kill().unwrap();
+
+    session.set_substrate(podman_substrate(&wd)).unwrap();
+    let resumed = session.resubmit_from_checkpoint().unwrap();
+    assert_eq!(resumed, ck.manifest.cut_steps());
+    assert_eq!(session.substrate().name(), "podman-hpc");
+    session.wait_done(Duration::from_secs(120)).unwrap();
+    let finals = session.final_states().unwrap();
+    session.verify_final(&finals).unwrap();
+    session.finish();
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// The MANA ablation: with lower-half exclusion, *every* rank image is
+/// strictly smaller than its whole-process counterpart at the same cut,
+/// and both modes gang-restart bit-identical.
+#[test]
+fn mana_rank_images_strictly_smaller_and_restores_bit_identical() {
+    const RANKS: u32 = 4;
+    const TARGET: u64 = 300;
+    const SEED: u64 = 1234;
+    let run = |mana: bool, tag: &str| -> Vec<u64> {
+        let app = StencilApp::new(RANKS, 8).endpoint_bytes(128 * 1024);
+        let wd = workdir(tag);
+        let mut session = GangSession::builder(&app)
+            .workdir(&wd)
+            .target_steps(TARGET)
+            .seed(SEED)
+            .mana_exclusion(mana)
+            .build()
+            .unwrap();
+        session.submit().unwrap();
+        let ck = checkpoint_retrying(&session);
+        let sizes: Vec<u64> = ck.manifest.ranks.iter().map(|r| r.stored_bytes).collect();
+        // Restart from the cut and run to completion: the upper half is
+        // bit-identical either way (the lower half is rebuilt, by design).
+        session.kill().unwrap();
+        session.resubmit_from_checkpoint().unwrap();
+        session.wait_done(Duration::from_secs(120)).unwrap();
+        let finals = session.final_states().unwrap();
+        session.verify_final(&finals).unwrap();
+        // MANA mode: no lib: bytes in the image, so the restored+rebuilt
+        // endpoint table must come from the *new* incarnation's fabric.
+        for f in &finals {
+            assert!(
+                !f.endpoints.is_empty(),
+                "rank {}: reinit must rebuild the lower half",
+                f.rank
+            );
+        }
+        session.finish();
+        std::fs::remove_dir_all(&wd).ok();
+        sizes
+    };
+    let mana_sizes = run(true, "mana_on");
+    let full_sizes = run(false, "mana_off");
+    assert_eq!(mana_sizes.len(), RANKS as usize);
+    for (rank, (m, f)) in mana_sizes.iter().zip(&full_sizes).enumerate() {
+        assert!(
+            m < f,
+            "rank {rank}: MANA image {m} B must be strictly smaller than \
+             whole-process image {f} B"
+        );
+    }
+}
+
+/// Two gangs booting and checkpointing concurrently on one host: each
+/// coordinator takes its own ephemeral port, the shared workdir stays
+/// collision-free (nonce-scoped names), and both complete verified.
+#[test]
+fn concurrent_gangs_share_a_host_and_a_workdir() {
+    let wd = workdir("pair");
+    std::thread::scope(|sc| {
+        for i in 0..2u64 {
+            let wd = wd.clone();
+            sc.spawn(move || {
+                let app = StencilApp::new(3, 8);
+                let mut session = GangSession::builder(&app)
+                    .workdir(&wd)
+                    .target_steps(250)
+                    .seed(500 + i)
+                    .build()
+                    .unwrap();
+                session.submit().unwrap();
+                let ck = checkpoint_retrying(&session);
+                assert_eq!(ck.manifest.n_ranks(), 3);
+                session.kill().unwrap();
+                session.resubmit_from_checkpoint().unwrap();
+                session.wait_done(Duration::from_secs(120)).unwrap();
+                let finals = session.final_states().unwrap();
+                session.verify_final(&finals).unwrap();
+                session.finish();
+            });
+        }
+    });
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// Regression: round ids must stay unique across gang restarts. A fresh
+/// coordinator numbers rounds from 1; without seeding it above the
+/// restored cut's id, a later generation's round would reuse the id and
+/// overwrite the very rank-image and manifest files the committed cut
+/// references — a failed round could then expose a torn, mixed-generation
+/// image set.
+#[test]
+fn round_ids_stay_unique_across_generations() {
+    let app = StencilApp::new(2, 8);
+    let wd = workdir("roundids");
+    let mut session = GangSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(600)
+        .seed(31)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+    let first = checkpoint_retrying(&session);
+    session.kill().unwrap();
+    session.resubmit_from_checkpoint().unwrap();
+    let second = checkpoint_retrying(&session);
+    assert!(
+        second.manifest.ckpt_id > first.manifest.ckpt_id,
+        "round ids reset across incarnations: {} then {}",
+        first.manifest.ckpt_id,
+        second.manifest.ckpt_id
+    );
+    assert!(second.manifest.generation > first.manifest.generation);
+    assert_ne!(first.manifest_path, second.manifest_path);
+    for (a, b) in first.manifest.ranks.iter().zip(&second.manifest.ranks) {
+        assert_ne!(
+            a.image, b.image,
+            "a later generation reused a committed cut's image file name"
+        );
+    }
+    session.wait_done(Duration::from_secs(120)).unwrap();
+    let finals = session.final_states().unwrap();
+    session.verify_final(&finals).unwrap();
+    session.finish();
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// Committed cuts are pruned to the newest on each successful round:
+/// after several checkpoints only the latest manifest (and its images)
+/// remain discoverable, and it is the one a restart uses.
+#[test]
+fn superseded_rounds_are_pruned_after_commit() {
+    let app = StencilApp::new(2, 8);
+    let wd = workdir("prune");
+    let mut session = GangSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(500)
+        .seed(77)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+    let first = checkpoint_retrying(&session);
+    std::thread::sleep(Duration::from_millis(10));
+    let second = checkpoint_retrying(&session);
+    assert!(second.manifest.ckpt_id > first.manifest.ckpt_id);
+    assert!(!first.manifest_path.exists(), "superseded manifest pruned");
+    let ckpt_dir = wd.join("ckpt");
+    for entry in &first.manifest.ranks {
+        assert!(
+            !ckpt_dir.join(&entry.image).exists(),
+            "superseded rank image {} pruned",
+            entry.image
+        );
+    }
+    let (_, latest) = latest_gang_manifest(&ckpt_dir, &session.gang_name())
+        .unwrap()
+        .expect("newest cut discoverable");
+    assert_eq!(latest, second.manifest);
+    session.kill().unwrap();
+    assert_eq!(
+        session.resubmit_from_checkpoint().unwrap(),
+        second.manifest.cut_steps()
+    );
+    session.wait_done(Duration::from_secs(120)).unwrap();
+    let finals = session.final_states().unwrap();
+    session.verify_final(&finals).unwrap();
+    session.finish();
+    std::fs::remove_dir_all(&wd).ok();
+}

@@ -1,0 +1,246 @@
+//! Phase-kill torture suite (PR-5 satellite): kill a rank mid-barrier at
+//! each of the five phases — SUSPEND, DRAIN, CHECKPOINT, REFILL, RESUME —
+//! and prove that no torn or partially-published gang image set ever
+//! becomes visible to the restart/inspect paths.
+//!
+//! The invariant under test (invariant 7, DESIGN §10): a gang checkpoint
+//! is committed solely by the atomic publish of its gang manifest, which
+//! happens only after every rank image of the round is durably on disk;
+//! rank images are round-stamped, so a failed round can never overwrite a
+//! committed round's images. Whatever `latest_gang_manifest` returns must
+//! therefore always be a complete, internally consistent, restartable cut.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use nersc_cr::cr::{GangApp, GangSession};
+use nersc_cr::dmtcp::mana::ReinitFn;
+use nersc_cr::dmtcp::plugin::{Event, Plugin, PluginCtx};
+use nersc_cr::dmtcp::store::latest_gang_manifest;
+use nersc_cr::dmtcp::{inspect_gang, LaunchedProcess, PluginRegistry};
+use nersc_cr::error::{Error, Result};
+use nersc_cr::workload::{StencilApp, StencilState};
+
+/// A plugin that injects a rank death at one barrier phase: it returns an
+/// error from the phase's event hook, which unwinds the checkpoint thread
+/// and kills the process — the rank drops off the coordinator mid-barrier.
+struct KillAtPhase {
+    event: Event,
+    armed: Arc<AtomicBool>,
+}
+
+impl Plugin for KillAtPhase {
+    fn name(&self) -> &'static str {
+        "kill-at-phase"
+    }
+
+    fn on_event(&mut self, event: Event, _ctx: &mut PluginCtx<'_>) -> Result<()> {
+        if event == self.event && self.armed.swap(false, Ordering::SeqCst) {
+            return Err(Error::Workload(format!("injected rank death at {event:?}")));
+        }
+        Ok(())
+    }
+}
+
+/// A stencil gang with a phase-death injector on one victim rank.
+struct TortureApp {
+    inner: StencilApp,
+    victim: u32,
+    event: Event,
+    armed: Arc<AtomicBool>,
+}
+
+impl GangApp for TortureApp {
+    type RankState = StencilState;
+
+    fn label(&self) -> String {
+        "halo-stencil-torture".into()
+    }
+
+    fn n_ranks(&self) -> u32 {
+        self.inner.n_ranks
+    }
+
+    fn begin_incarnation(&self, generation: u32) {
+        self.inner.begin_incarnation(generation)
+    }
+
+    fn fresh_rank_state(&self, rank: u32, target_steps: u64, seed: u64) -> Result<StencilState> {
+        self.inner.fresh_rank_state(rank, target_steps, seed)
+    }
+
+    fn restore_rank_state(&self, rank: u32) -> StencilState {
+        self.inner.restore_rank_state(rank)
+    }
+
+    fn register_rank_plugins(
+        &self,
+        rank: u32,
+        state: &Arc<Mutex<StencilState>>,
+        plugins: &mut PluginRegistry,
+    ) {
+        self.inner.register_rank_plugins(rank, state, plugins);
+        if rank == self.victim {
+            plugins.register(Box::new(KillAtPhase {
+                event: self.event,
+                armed: Arc::clone(&self.armed),
+            }));
+        }
+    }
+
+    fn reinit_fn(&self, rank: u32) -> ReinitFn<StencilState> {
+        self.inner.reinit_fn(rank)
+    }
+
+    fn spawn_rank_workers(
+        &self,
+        rank: u32,
+        launched: &mut LaunchedProcess,
+        state: Arc<Mutex<StencilState>>,
+        work_per_quantum: u32,
+    ) -> Result<()> {
+        self.inner
+            .spawn_rank_workers(rank, launched, state, work_per_quantum)
+    }
+
+    fn rank_done(&self, state: &StencilState) -> bool {
+        self.inner.rank_done(state)
+    }
+
+    fn verify_final(&self, finals: &[StencilState], target_steps: u64, seed: u64) -> Result<()> {
+        self.inner.verify_final(finals, target_steps, seed)
+    }
+}
+
+fn workdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ncr_phase_torture_{tag}_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Assert the newest visible gang checkpoint is a complete, consistent,
+/// restart-grade cut: the manifest decodes, covers every rank exactly
+/// once, and every referenced rank image exists, frame-verifies, and
+/// carries the vpid the manifest recorded.
+fn assert_cut_is_whole(ckpt_dir: &std::path::Path, gang: &str, n_ranks: u32) -> u64 {
+    let (path, manifest) = latest_gang_manifest(ckpt_dir, gang)
+        .unwrap()
+        .expect("a committed cut must exist");
+    assert_eq!(manifest.n_ranks(), n_ranks, "manifest covers every rank");
+    let (m2, headers) = inspect_gang(&path).expect("cut must be fully inspectable");
+    assert_eq!(m2, manifest);
+    for (entry, header) in manifest.ranks.iter().zip(&headers) {
+        assert_eq!(header.vpid, entry.vpid);
+        assert_eq!(header.steps_done, entry.steps_done);
+    }
+    manifest.ckpt_id
+}
+
+/// The five barrier phases, as the plugin events that fire inside them.
+const PHASE_EVENTS: [Event; 5] = [
+    Event::Suspend,
+    Event::Drain,
+    Event::PreCheckpoint,
+    Event::Refill,
+    Event::PostCheckpoint,
+];
+
+#[test]
+fn rank_death_at_every_phase_never_exposes_a_torn_image_set() {
+    const RANKS: u32 = 4;
+    for (i, event) in PHASE_EVENTS.iter().enumerate() {
+        let armed = Arc::new(AtomicBool::new(false));
+        let app = TortureApp {
+            inner: StencilApp::new(RANKS, 8).endpoint_bytes(2048),
+            victim: 2,
+            event: *event,
+            armed: Arc::clone(&armed),
+        };
+        let wd = workdir(&format!("p{i}"));
+        let mut session = GangSession::builder(&app)
+            .workdir(&wd)
+            .target_steps(1_200)
+            .seed(100 + i as u64)
+            .build()
+            .unwrap();
+        session.submit().unwrap();
+        let gang = session.gang_name();
+        let ckpt_dir = wd.join("ckpt");
+
+        // Round 1: a clean committed cut.
+        let good = session.checkpoint_now().unwrap();
+        let good_id = assert_cut_is_whole(&ckpt_dir, &gang, RANKS);
+        assert_eq!(good_id, good.manifest.ckpt_id);
+
+        // Round 2: the victim dies mid-barrier at this phase. The round
+        // must fail as a whole — all-or-nothing — and commit nothing.
+        armed.store(true, Ordering::SeqCst);
+        let err = session
+            .checkpoint_now()
+            .expect_err("a rank death mid-barrier must fail the round");
+        let msg = err.to_string();
+        assert!(
+            !armed.load(Ordering::SeqCst),
+            "the injector must actually have fired at {event:?} ({msg})"
+        );
+
+        // The newest visible cut is still round 1, byte-for-byte whole:
+        // the failed round published nothing and overwrote nothing.
+        let still_id = assert_cut_is_whole(&ckpt_dir, &gang, RANKS);
+        assert_eq!(
+            still_id, good_id,
+            "{event:?}: a failed round must not change the newest cut"
+        );
+
+        // And the cut is not just inspectable but *restartable*: gang
+        // restart from it runs the computation to completion,
+        // bit-identical to the uninterrupted reference.
+        session.kill().unwrap();
+        let resumed = session.resubmit_from_checkpoint().unwrap();
+        assert_eq!(resumed, good.manifest.cut_steps());
+        session.wait_done(Duration::from_secs(120)).unwrap();
+        let finals = session.final_states().unwrap();
+        session.verify_final(&finals).unwrap_or_else(|e| {
+            panic!("{event:?}: restored gang diverged from reference: {e}")
+        });
+        session.finish();
+        std::fs::remove_dir_all(&wd).ok();
+    }
+}
+
+#[test]
+fn repeated_phase_deaths_before_any_commit_leave_no_cut_visible() {
+    // Kill during the very first round: nothing was ever committed, and
+    // nothing must appear committed afterwards (no manifest at all).
+    let armed = Arc::new(AtomicBool::new(true));
+    let app = TortureApp {
+        inner: StencilApp::new(3, 8),
+        victim: 1,
+        event: Event::Drain,
+        armed: Arc::clone(&armed),
+    };
+    let wd = workdir("first");
+    let mut session = GangSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(1_000)
+        .seed(9)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+    let gang = session.gang_name();
+    assert!(session.checkpoint_now().is_err());
+    assert!(
+        latest_gang_manifest(&wd.join("ckpt"), &gang).unwrap().is_none(),
+        "no cut was committed, none may be visible"
+    );
+    // With no cut, gang restart is impossible — a typed error, not a
+    // torn restore.
+    session.kill().unwrap();
+    assert!(session.resubmit_from_checkpoint().is_err());
+    session.finish();
+    std::fs::remove_dir_all(&wd).ok();
+}

@@ -1,0 +1,244 @@
+//! Protocol torture suite (PR-5 satellite): the coordinator wire protocol
+//! must answer every malformed input — truncated frames, oversized length
+//! prefixes, bad tags, bit flips, trailing garbage — with a typed
+//! [`nersc_cr::Error`], never a panic, hang, or silent misparse.
+//!
+//! Two layers are tortured:
+//! * the message decoders (`decode_to_coordinator` /
+//!   `decode_from_coordinator`), property-style over seeded random
+//!   corruptions of known-good encodings;
+//! * the framing layer (`recv_to_coordinator` / `recv_from_coordinator`)
+//!   over real sockets, with crafted raw byte streams.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use nersc_cr::dmtcp::protocol::{
+    decode_from_coordinator, decode_to_coordinator, encode_from_coordinator,
+    encode_to_coordinator, recv_from_coordinator, recv_to_coordinator, FromCoordinator, Phase,
+    ToCoordinator, MAX_FRAME,
+};
+use nersc_cr::util::proptest_lite::{run_cases, Gen};
+
+fn random_to_coordinator(g: &mut Gen) -> ToCoordinator {
+    match g.usize_in(0..7) {
+        0 => ToCoordinator::Hello {
+            real_pid: g.u64_in(1..1 << 48),
+            name: g.ident(1..24),
+            n_threads: g.u64_in(1..64) as u32,
+            restored_vpid: if g.bool_with(0.5) {
+                Some(g.u64_in(1..1 << 32))
+            } else {
+                None
+            },
+            rank: if g.bool_with(0.5) {
+                Some(g.u64_in(0..4096) as u32)
+            } else {
+                None
+            },
+        },
+        1 => ToCoordinator::PhaseAck {
+            vpid: g.u64_in(1..1 << 32),
+            ckpt_id: g.u64_in(1..1 << 20),
+            phase: *g.choose(&Phase::ALL),
+        },
+        2 => ToCoordinator::CkptDone {
+            vpid: g.u64_in(1..1 << 32),
+            ckpt_id: g.u64_in(1..1 << 20),
+            path: format!("/ckpt/{}.dmtcp", g.ident(1..16)),
+            stored_bytes: g.u64_in(0..1 << 40),
+            raw_bytes: g.u64_in(0..1 << 40),
+            write_secs: g.f64_in(0.0, 100.0),
+            chunks_written: g.u64_in(0..1 << 20),
+            chunks_deduped: g.u64_in(0..1 << 20),
+        },
+        3 => ToCoordinator::Goodbye {
+            vpid: g.u64_in(1..1 << 32),
+        },
+        4 => ToCoordinator::CommandCheckpoint,
+        5 => ToCoordinator::CommandStatus,
+        _ => ToCoordinator::CommandQuit,
+    }
+}
+
+fn random_from_coordinator(g: &mut Gen) -> FromCoordinator {
+    match g.usize_in(0..6) {
+        0 => FromCoordinator::Welcome {
+            vpid: g.u64_in(1..1 << 32),
+            epoch: g.u64_in(1..1 << 16),
+        },
+        1 => FromCoordinator::Phase {
+            ckpt_id: g.u64_in(1..1 << 20),
+            phase: *g.choose(&Phase::ALL),
+            dir: format!("/ckpt/{}", g.ident(1..16)),
+        },
+        2 => FromCoordinator::Kill,
+        3 => FromCoordinator::Status {
+            clients: g.u64_in(0..4096) as u32,
+            last_ckpt_id: g.u64_in(0..1 << 20),
+            epoch: g.u64_in(1..1 << 16),
+        },
+        4 => FromCoordinator::CkptComplete {
+            ckpt_id: g.u64_in(1..1 << 20),
+            images: g.u64_in(0..4096) as u32,
+            total_stored_bytes: g.u64_in(0..1 << 40),
+        },
+        _ => FromCoordinator::Error {
+            message: g.ident(0..64),
+        },
+    }
+}
+
+#[test]
+fn random_messages_roundtrip_exactly() {
+    run_cases("to-coordinator roundtrip", 300, |g| {
+        let m = random_to_coordinator(g);
+        assert_eq!(decode_to_coordinator(&encode_to_coordinator(&m)).unwrap(), m);
+    });
+    run_cases("from-coordinator roundtrip", 300, |g| {
+        let m = random_from_coordinator(g);
+        assert_eq!(
+            decode_from_coordinator(&encode_from_coordinator(&m)).unwrap(),
+            m
+        );
+    });
+}
+
+#[test]
+fn every_strict_prefix_of_a_valid_encoding_is_rejected() {
+    run_cases("truncation rejected", 200, |g| {
+        let enc = encode_to_coordinator(&random_to_coordinator(g));
+        for cut in 0..enc.len() {
+            assert!(
+                decode_to_coordinator(&enc[..cut]).is_err(),
+                "prefix of {cut}/{} bytes accepted",
+                enc.len()
+            );
+        }
+        let enc = encode_from_coordinator(&random_from_coordinator(g));
+        for cut in 0..enc.len() {
+            assert!(decode_from_coordinator(&enc[..cut]).is_err());
+        }
+    });
+}
+
+#[test]
+fn trailing_garbage_after_a_valid_encoding_is_rejected() {
+    run_cases("trailing rejected", 200, |g| {
+        let mut enc = encode_to_coordinator(&random_to_coordinator(g));
+        enc.extend(g.bytes(1..8));
+        assert!(decode_to_coordinator(&enc).is_err());
+        let mut enc = encode_from_coordinator(&random_from_coordinator(g));
+        enc.extend(g.bytes(1..8));
+        assert!(decode_from_coordinator(&enc).is_err());
+    });
+}
+
+#[test]
+fn bit_flips_never_panic_and_never_misparse_silently() {
+    run_cases("bit-flip torture", 400, |g| {
+        let original = random_to_coordinator(g);
+        let mut enc = encode_to_coordinator(&original);
+        let byte = g.usize_in(0..enc.len());
+        let bit = 1u8 << g.usize_in(0..8);
+        enc[byte] ^= bit;
+        // A single flipped bit either fails to decode (typed error) or
+        // decodes to *some* message — but flipping it back must restore
+        // the original exactly (no state is kept across decodes).
+        let _ = decode_to_coordinator(&enc);
+        enc[byte] ^= bit;
+        assert_eq!(decode_to_coordinator(&enc).unwrap(), original);
+    });
+    run_cases("bit-flip torture (from)", 400, |g| {
+        let original = random_from_coordinator(g);
+        let mut enc = encode_from_coordinator(&original);
+        let byte = g.usize_in(0..enc.len());
+        enc[byte] ^= 1u8 << g.usize_in(0..8);
+        let _ = decode_from_coordinator(&enc);
+    });
+}
+
+#[test]
+fn random_garbage_never_panics_the_decoders() {
+    run_cases("garbage decode", 500, |g| {
+        let bytes = g.bytes(0..96);
+        let _ = decode_to_coordinator(&bytes);
+        let _ = decode_from_coordinator(&bytes);
+    });
+}
+
+// ---- framing over real sockets ---------------------------------------------
+
+/// Feed raw bytes to a receiver over a real socket (writer closes after
+/// writing); a read timeout guards against hangs.
+fn recv_raw<T>(
+    bytes: Vec<u8>,
+    recv: impl FnOnce(&mut TcpStream) -> nersc_cr::Result<T>,
+) -> nersc_cr::Result<T> {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let writer = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&bytes).ok();
+        // dropping s closes the connection: a short stream is EOF, not a hang
+    });
+    let (mut conn, _) = listener.accept().unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let out = recv(&mut conn);
+    writer.join().unwrap();
+    out
+}
+
+fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = (payload.len() as u32).to_le_bytes().to_vec();
+    out.extend_from_slice(payload);
+    out
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_reading_the_body() {
+    // Only the 4 length bytes are sent: if the receiver tried to read the
+    // advertised body it would block until the timeout — instead the
+    // oversized prefix is rejected immediately.
+    let huge = (MAX_FRAME + 1).to_le_bytes().to_vec();
+    let err = recv_raw(huge.clone(), recv_to_coordinator).unwrap_err();
+    assert!(err.to_string().contains("frame too large"), "{err}");
+    let err = recv_raw(huge, recv_from_coordinator).unwrap_err();
+    assert!(err.to_string().contains("frame too large"), "{err}");
+}
+
+#[test]
+fn truncated_frames_over_sockets_are_errors_not_hangs() {
+    // Length says 64, body delivers 10, writer closes: UnexpectedEof.
+    let mut bytes = 64u32.to_le_bytes().to_vec();
+    bytes.extend_from_slice(&[7; 10]);
+    assert!(recv_raw(bytes, recv_to_coordinator).is_err());
+    // A bare, partial length prefix.
+    assert!(recv_raw(vec![3, 0], recv_to_coordinator).is_err());
+    // An empty stream (immediate close).
+    assert!(recv_raw(Vec::new(), recv_from_coordinator).is_err());
+}
+
+#[test]
+fn bad_tag_frames_over_sockets_are_typed_errors() {
+    let err = recv_raw(frame(&[0xEE, 1, 2, 3]), recv_to_coordinator).unwrap_err();
+    assert!(err.to_string().contains("bad ToCoordinator tag"), "{err}");
+    let err = recv_raw(frame(&[0xEE]), recv_from_coordinator).unwrap_err();
+    assert!(err.to_string().contains("bad FromCoordinator tag"), "{err}");
+    // An empty (zero-length) frame is malformed too.
+    assert!(recv_raw(frame(&[]), recv_to_coordinator).is_err());
+}
+
+#[test]
+fn good_frame_after_decoder_hardening_still_flows_end_to_end() {
+    let msg = ToCoordinator::Hello {
+        real_pid: 42,
+        name: "rank-3".into(),
+        n_threads: 2,
+        restored_vpid: Some(40_003),
+        rank: Some(3),
+    };
+    let got = recv_raw(frame(&encode_to_coordinator(&msg)), recv_to_coordinator).unwrap();
+    assert_eq!(got, msg);
+}

@@ -1,0 +1,151 @@
+//! `CampaignSpec` round-trip property suite (PR-5 satellite): for seeded
+//! random *valid* specs, `parse(to_text(spec)) == spec` — the text format
+//! is a faithful, lossless encoding over the full shape space (all three
+//! workloads, gang ranks, both interval policies, both fault plans, every
+//! substrate) — plus rejection properties for malformed inputs (duplicate
+//! keys, section headers, unknown keys, comment-opening values).
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use nersc_cr::campaign::{CampaignSpec, FaultPlan, IntervalPolicy, SubstrateSpec, WorkloadSpec};
+use nersc_cr::util::proptest_lite::{run_cases, Gen};
+use nersc_cr::workload::{G4Version, WorkloadKind};
+
+fn random_spec(g: &mut Gen) -> CampaignSpec {
+    let workload = match g.usize_in(0..3) {
+        0 => WorkloadSpec::Cp2kScf {
+            n: g.usize_in(4..64),
+        },
+        1 => {
+            let kinds = WorkloadKind::all();
+            WorkloadSpec::Geant4 {
+                kind: *g.choose(&kinds),
+                version: *g.choose(&[G4Version::V10_5, G4Version::V10_7, G4Version::V11_0]),
+            }
+        }
+        _ => WorkloadSpec::HaloStencil {
+            cells_per_rank: g.usize_in(1..256),
+        },
+    };
+    let ranks = if matches!(workload, WorkloadSpec::HaloStencil { .. }) {
+        g.u64_in(1..17) as u32
+    } else {
+        1
+    };
+    CampaignSpec {
+        name: g.ident(1..20),
+        sessions: g.u64_in(1..200) as u32,
+        concurrency: g.u64_in(1..33) as u32,
+        workload,
+        ranks,
+        substrate: *g.choose(&[
+            SubstrateSpec::Bare,
+            SubstrateSpec::PodmanHpc,
+            SubstrateSpec::Shifter,
+        ]),
+        target_steps: g.u64_in(0..1_000_000),
+        seed: g.u64_in(0..1 << 62),
+        workdir: if g.bool_with(0.5) {
+            Some(PathBuf::from(format!("/scratch/{}", g.ident(1..16))))
+        } else {
+            None
+        },
+        shared_workdir: g.bool_with(0.5),
+        incremental: if g.bool_with(0.5) {
+            Some(g.u64_in(0..64) as u32)
+        } else {
+            None
+        },
+        // Durations render as whole milliseconds, so generate them so.
+        gc_grace: Duration::from_millis(g.u64_in(0..600_001)),
+        interval: if g.bool_with(0.5) {
+            IntervalPolicy::Fixed(Duration::from_millis(g.u64_in(1..60_001)))
+        } else {
+            IntervalPolicy::Daly {
+                cost_prior: Duration::from_millis(g.u64_in(0..5_001)),
+            }
+        },
+        faults: if g.bool_with(0.5) {
+            FaultPlan::exponential(
+                Duration::from_millis(g.u64_in(1..1_000_001)),
+                g.u64_in(0..10) as u32,
+            )
+        } else {
+            FaultPlan::none()
+        },
+        straggler_timeout: Duration::from_millis(g.u64_in(1..10_000_001)),
+        requeue_delay: Duration::from_millis(g.u64_in(0..10_001)),
+    }
+}
+
+#[test]
+fn random_valid_specs_roundtrip_exactly() {
+    run_cases("spec roundtrip", 300, |g| {
+        let spec = random_spec(g);
+        spec.validate().expect("generator emits only valid specs");
+        let text = spec.to_text();
+        let parsed = CampaignSpec::parse(&text)
+            .unwrap_or_else(|e| panic!("rendered spec failed to parse: {e}\n{text}"));
+        assert_eq!(parsed, spec, "parse(to_text(spec)) != spec\n{text}");
+        // And the rendering itself is a fixed point.
+        assert_eq!(parsed.to_text(), text, "to_text is not idempotent");
+    });
+}
+
+#[test]
+fn rendered_specs_never_contain_duplicate_keys() {
+    run_cases("no duplicate keys in to_text", 200, |g| {
+        let text = random_spec(g).to_text();
+        let mut keys: Vec<&str> = text
+            .lines()
+            .filter_map(|l| l.split_once('=').map(|(k, _)| k.trim()))
+            .collect();
+        let n = keys.len();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "duplicate key in:\n{text}");
+    });
+}
+
+#[test]
+fn duplicate_keys_are_rejected_wherever_they_land() {
+    run_cases("duplicate key rejected", 100, |g| {
+        let spec = random_spec(g);
+        let text = spec.to_text();
+        // Re-append any one existing line: now a duplicate key.
+        let lines: Vec<&str> = text.lines().collect();
+        let dup = *g.choose(&lines);
+        let err = CampaignSpec::parse(&format!("{text}{dup}\n"))
+            .expect_err("duplicate key must be rejected");
+        assert!(err.to_string().contains("duplicate key"), "{err}");
+    });
+}
+
+#[test]
+fn unknown_keys_and_sections_are_rejected() {
+    run_cases("unknown key rejected", 100, |g| {
+        let key = format!("x-{}", g.ident(1..12));
+        assert!(CampaignSpec::parse(&format!("{key} = 1\n")).is_err());
+        let section = format!("[{}]\n", g.ident(1..12));
+        let err = CampaignSpec::parse(&section).unwrap_err();
+        assert!(err.to_string().contains("section"), "{err}");
+    });
+}
+
+#[test]
+fn unrepresentable_values_fail_validation_not_roundtrip() {
+    // A comment-opening '#' in free text cannot be encoded; validate()
+    // refuses rather than letting to_text produce a lying rendering.
+    let spec = CampaignSpec {
+        name: "nightly #7".into(),
+        ..Default::default()
+    };
+    assert!(spec.validate().is_err());
+    // Gang sanity is validation too: ranks > 1 without a gang workload.
+    let spec = CampaignSpec {
+        ranks: 4,
+        ..Default::default()
+    };
+    assert!(spec.validate().is_err());
+}
