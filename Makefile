@@ -22,6 +22,7 @@ bench:
 	cargo bench --bench incremental_ckpt
 	cargo bench --bench campaign_sweep
 	cargo bench --bench gang_scale
+	cargo bench --bench coordinator_mux
 
 # AOT-lower the L2 model to HLO text for the PJRT backend (needs jax).
 artifacts:

@@ -1,0 +1,287 @@
+//! `coordinator_mux` — barrier latency and thread count of the
+//! multi-tenant coordinator daemon while the session count scales.
+//!
+//! At each scale N, ONE daemon hosts N idle single-client jobs, two
+//! 8-rank gang jobs, and one probe job — every client multiplexed over
+//! the daemon's single port. The probe job's five-phase barrier is timed
+//! (median over repeated rounds), and one gang barrier is timed, while
+//! the whole crowd stays attached. A dedicated daemon hosting only the
+//! probe job provides the classic one-coordinator-per-session baseline.
+//!
+//! Self-checks (exit nonzero on violation):
+//! * the daemon runs exactly ONE I/O thread at every scale — coordinator
+//!   threads are O(1) in fleet size, the whole point of the refactor;
+//! * every timed round completes (no barrier lost in the crowd);
+//! * full mode only: at the top scale the multiplexed barrier latency is
+//!   within 1.5× of the dedicated-coordinator baseline, and latency
+//!   stays flat (≤ 3×) from the smallest to the largest scale.
+//!
+//! `BENCH_SMOKE=1` shrinks the sweep so CI exercises the full code path
+//! on every push.
+
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nersc_cr::dmtcp::protocol::{
+    recv_from_coordinator, send_to_coordinator, FromCoordinator, Phase, ToCoordinator,
+};
+use nersc_cr::dmtcp::{CoordinatorDaemon, DaemonConfig, JobSpec};
+use nersc_cr::report::{bench_smoke, emit_bench_json, Table};
+
+const GANGS: u32 = 2;
+const GANG_RANKS: u32 = 8;
+const TIMED_ROUNDS: usize = 15;
+
+static NEXT_FAKE_PID: AtomicU64 = AtomicU64::new(200_000);
+
+fn attach(addr: SocketAddr, job: &str, rank: Option<u32>) -> (TcpStream, u64) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    send_to_coordinator(
+        &mut s,
+        &ToCoordinator::Hello {
+            real_pid: NEXT_FAKE_PID.fetch_add(1, Ordering::Relaxed),
+            name: format!("bench-{job}"),
+            n_threads: 1,
+            restored_vpid: None,
+            rank,
+            job: Some(job.to_string()),
+        },
+    )
+    .expect("hello");
+    match recv_from_coordinator(&mut s).expect("welcome") {
+        FromCoordinator::Welcome { vpid, .. } => (s, vpid),
+        other => panic!("expected Welcome, got {other:?}"),
+    }
+}
+
+/// Client thread: ack every phase of every round (one fake image per
+/// checkpoint) until the daemon kills the job or shuts down.
+fn responder(mut s: TcpStream, vpid: u64) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        match recv_from_coordinator(&mut s) {
+            Ok(FromCoordinator::Phase { ckpt_id, phase, .. }) => {
+                if phase == Phase::Checkpoint {
+                    let _ = send_to_coordinator(
+                        &mut s,
+                        &ToCoordinator::CkptDone {
+                            vpid,
+                            ckpt_id,
+                            path: format!("bench-{vpid}.img"),
+                            stored_bytes: 64,
+                            raw_bytes: 64,
+                            write_secs: 0.0,
+                            chunks_written: 1,
+                            chunks_deduped: 0,
+                        },
+                    );
+                }
+                if send_to_coordinator(&mut s, &ToCoordinator::PhaseAck { vpid, ckpt_id, phase })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Ok(FromCoordinator::Kill) | Err(_) => break,
+            Ok(_) => {}
+        }
+    })
+}
+
+fn register(daemon: &CoordinatorDaemon, root: &std::path::Path, job: &str) {
+    daemon
+        .register_job(&JobSpec {
+            job: job.to_string(),
+            ckpt_dir: root.join(job),
+            phase_timeout: Duration::from_secs(30),
+        })
+        .expect("register job");
+}
+
+fn median_ms(samples: &mut Vec<f64>) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Median probe-barrier latency over `TIMED_ROUNDS` rounds (after one
+/// warmup round).
+fn timed_rounds(daemon: &Arc<CoordinatorDaemon>, job: &str, ranks: Option<u32>) -> f64 {
+    daemon.checkpoint_job(job, ranks).expect("warmup round");
+    let mut samples = Vec::with_capacity(TIMED_ROUNDS);
+    for _ in 0..TIMED_ROUNDS {
+        let t0 = Instant::now();
+        daemon.checkpoint_job(job, ranks).expect("timed round");
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    median_ms(&mut samples)
+}
+
+struct Sample {
+    sessions: usize,
+    clients: usize,
+    shared_ms: f64,
+    gang_ms: f64,
+    dedicated_ms: f64,
+    io_threads: usize,
+}
+
+fn run_scale(sessions: usize) -> Sample {
+    let root = std::env::temp_dir().join(format!(
+        "ncr_mux_bench_{}_{}",
+        std::process::id(),
+        sessions
+    ));
+    std::fs::create_dir_all(&root).expect("bench workdir");
+
+    // The multiplexed side: idle sessions + gangs + probe on ONE daemon.
+    let daemon = CoordinatorDaemon::start(DaemonConfig::default()).expect("daemon");
+    let mut idle = Vec::with_capacity(sessions);
+    for i in 0..sessions {
+        let job = format!("idle{i:04}");
+        register(&daemon, &root, &job);
+        idle.push(attach(daemon.addr(), &job, None));
+    }
+    let mut gang_threads = Vec::new();
+    for g in 0..GANGS {
+        let job = format!("gang{g}");
+        register(&daemon, &root, &job);
+        for r in 0..GANG_RANKS {
+            let (s, v) = attach(daemon.addr(), &job, Some(r));
+            gang_threads.push(responder(s, v));
+        }
+    }
+    register(&daemon, &root, "probe");
+    let (ps, pv) = attach(daemon.addr(), "probe", None);
+    let probe_thread = responder(ps, pv);
+
+    let clients = daemon.num_connections();
+    let shared_ms = timed_rounds(&daemon, "probe", None);
+    let t0 = Instant::now();
+    daemon
+        .checkpoint_job("gang0", Some(GANG_RANKS))
+        .expect("gang round");
+    let gang_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let io_threads = daemon.io_threads();
+
+    daemon.shutdown();
+    drop(idle);
+    for t in gang_threads {
+        t.join().unwrap();
+    }
+    probe_thread.join().unwrap();
+
+    // The baseline: a dedicated daemon owning only the probe job — the
+    // one-coordinator-per-session deployment this PR replaces at scale.
+    let dedicated = CoordinatorDaemon::start(DaemonConfig::default()).expect("daemon");
+    register(&dedicated, &root, "probe");
+    let (ds, dv) = attach(dedicated.addr(), "probe", None);
+    let dthread = responder(ds, dv);
+    let dedicated_ms = timed_rounds(&dedicated, "probe", None);
+    dedicated.shutdown();
+    dthread.join().unwrap();
+
+    std::fs::remove_dir_all(&root).ok();
+    Sample {
+        sessions,
+        clients,
+        shared_ms,
+        gang_ms,
+        dedicated_ms,
+        io_threads,
+    }
+}
+
+fn main() {
+    let scales: Vec<usize> = if bench_smoke() {
+        vec![8, 16]
+    } else {
+        vec![16, 64, 256]
+    };
+    let samples: Vec<Sample> = scales.iter().map(|&n| run_scale(n)).collect();
+
+    let mut t = Table::new(&[
+        "sessions",
+        "clients on port",
+        "mux barrier (ms)",
+        "gang barrier (ms)",
+        "dedicated (ms)",
+        "ratio",
+        "io threads",
+    ]);
+    for s in &samples {
+        t.row(&[
+            s.sessions.to_string(),
+            s.clients.to_string(),
+            format!("{:.3}", s.shared_ms),
+            format!("{:.3}", s.gang_ms),
+            format!("{:.3}", s.dedicated_ms),
+            format!("{:.2}", s.shared_ms / s.dedicated_ms.max(1e-9)),
+            s.io_threads.to_string(),
+        ]);
+    }
+    println!("== coordinator_mux: one daemon vs per-session coordinators ==\n");
+    println!("{}", t.render());
+
+    // ---- self-checks ------------------------------------------------------
+    let mut failures = Vec::new();
+    for s in &samples {
+        if s.io_threads != 1 {
+            failures.push(format!(
+                "sessions={}: {} coordinator I/O threads (must be O(1) == 1)",
+                s.sessions, s.io_threads
+            ));
+        }
+        if !(s.shared_ms > 0.0 && s.gang_ms > 0.0 && s.dedicated_ms > 0.0) {
+            failures.push(format!("sessions={}: degenerate timing", s.sessions));
+        }
+    }
+    let top = samples.last().unwrap();
+    let ratio = top.shared_ms / top.dedicated_ms.max(1e-9);
+    let flatness = top.shared_ms / samples.first().unwrap().shared_ms.max(1e-9);
+    if !bench_smoke() {
+        if ratio > 1.5 {
+            failures.push(format!(
+                "at {} sessions the multiplexed barrier is {ratio:.2}x the \
+                 dedicated baseline (budget 1.5x)",
+                top.sessions
+            ));
+        }
+        if flatness > 3.0 {
+            failures.push(format!(
+                "barrier latency not flat across scales: {flatness:.2}x from \
+                 {} to {} sessions",
+                samples.first().unwrap().sessions,
+                top.sessions
+            ));
+        }
+    }
+
+    emit_bench_json(
+        "coordinator_mux",
+        &[
+            ("max_sessions", top.sessions as f64),
+            ("clients_on_one_port", top.clients as f64),
+            ("mux_barrier_ms", top.shared_ms),
+            ("gang_barrier_ms", top.gang_ms),
+            ("dedicated_barrier_ms", top.dedicated_ms),
+            ("mux_over_dedicated_ratio", ratio),
+            ("latency_flatness", flatness),
+            ("io_threads", top.io_threads as f64),
+        ],
+    )
+    .expect("emit bench json");
+
+    if !failures.is_empty() {
+        eprintln!("coordinator_mux self-checks FAILED:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+    println!(
+        "self-checks passed: {} scales, one port and one coordinator thread throughout",
+        samples.len()
+    );
+}

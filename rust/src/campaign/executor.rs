@@ -28,7 +28,8 @@ use crate::campaign::report::{CampaignReport, SessionDisposition, SessionOutcome
 use crate::campaign::spec::{CampaignSpec, SubstrateSpec, WorkloadSpec};
 use crate::campaign::tune::{DalyTuner, IntervalPolicy};
 use crate::container::{Image, PodmanHpc, Registry, RunSpec, Shifter, EMBED_DMTCP_SNIPPET};
-use crate::cr::{CrApp, CrSession, GangApp, GangSession, Substrate};
+use crate::cr::{CoordinatorHandle, CrApp, CrSession, GangApp, GangSession, Substrate};
+use crate::dmtcp::{CoordinatorDaemon, DaemonConfig};
 use crate::error::Result;
 use crate::util::rng::SplitMix64;
 use crate::workload::{Cp2kApp, G4App, StencilApp};
@@ -104,8 +105,25 @@ pub fn run_fleet<A: CrApp + Sync>(
     app: &A,
     cancel: &CancelToken,
 ) -> Result<CampaignReport> {
-    run_session_pool(spec, "ncr_campaign", |i, root| {
-        drive_session(app, spec, i, root, cancel)
+    let coord = fleet_coordinator(spec)?;
+    let report = run_session_pool(spec, "ncr_campaign", |i, root| {
+        drive_session(app, spec, i, root, cancel, &coord)
+    });
+    if let CoordinatorHandle::Shared(daemon) = &coord {
+        daemon.shutdown();
+    }
+    report
+}
+
+/// The fleet's coordinator plan: with `shared_coordinator` ONE
+/// multi-tenant daemon serves every session's jobs over a single port
+/// (O(1) coordinator threads for the whole fleet); otherwise each
+/// incarnation boots a private coordinator as before.
+fn fleet_coordinator(spec: &CampaignSpec) -> Result<CoordinatorHandle> {
+    Ok(if spec.shared_coordinator {
+        CoordinatorHandle::Shared(CoordinatorDaemon::start(DaemonConfig::default())?)
+    } else {
+        CoordinatorHandle::Private
     })
 }
 
@@ -257,6 +275,7 @@ fn drive_session<A: CrApp>(
     index: u32,
     root: &Path,
     cancel: &CancelToken,
+    coord: &CoordinatorHandle,
 ) -> SessionOutcome {
     let seed = spec.seed.wrapping_add(index as u64);
     let wd: PathBuf = if spec.shared_workdir {
@@ -299,7 +318,7 @@ fn drive_session<A: CrApp>(
     }
 
     let result = drive_session_inner(
-        app, spec, seed, &wd, cancel, &mut cadence, &mut injector, &mut out,
+        app, spec, seed, &wd, cancel, coord, &mut cadence, &mut injector, &mut out,
     );
     if let Err(e) = result {
         out.disposition = SessionDisposition::Failed(e.to_string());
@@ -318,6 +337,7 @@ fn drive_session_inner<A: CrApp>(
     seed: u64,
     wd: &Path,
     cancel: &CancelToken,
+    coord: &CoordinatorHandle,
     cadence: &mut Cadence,
     injector: &mut FaultInjector,
     out: &mut SessionOutcome,
@@ -328,7 +348,8 @@ fn drive_session_inner<A: CrApp>(
         .workdir(wd)
         .target_steps(spec.target_steps)
         .seed(seed)
-        .gc_grace(spec.gc_grace);
+        .gc_grace(spec.gc_grace)
+        .coordinator(coord.clone());
     if let Some(full_every) = spec.incremental {
         builder = builder.incremental_images(full_every);
     }
@@ -412,9 +433,14 @@ pub fn run_gang_fleet(
     cells_per_rank: usize,
     cancel: &CancelToken,
 ) -> Result<CampaignReport> {
-    run_session_pool(spec, "ncr_gangfleet", |i, root| {
-        drive_gang(spec, cells_per_rank, i, root, cancel)
-    })
+    let coord = fleet_coordinator(spec)?;
+    let report = run_session_pool(spec, "ncr_gangfleet", |i, root| {
+        drive_gang(spec, cells_per_rank, i, root, cancel, &coord)
+    });
+    if let CoordinatorHandle::Shared(daemon) = &coord {
+        daemon.shutdown();
+    }
+    report
 }
 
 /// Drive one gang start to finish; every failure mode lands in the
@@ -425,6 +451,7 @@ fn drive_gang(
     index: u32,
     root: &Path,
     cancel: &CancelToken,
+    coord: &CoordinatorHandle,
 ) -> SessionOutcome {
     let seed = spec.seed.wrapping_add(index as u64);
     let wd: PathBuf = if spec.shared_workdir {
@@ -462,7 +489,15 @@ fn drive_gang(
         return out;
     }
     let result = drive_gang_inner(
-        spec, cells_per_rank, seed, &wd, cancel, &mut cadence, &mut injector, &mut out,
+        spec,
+        cells_per_rank,
+        seed,
+        &wd,
+        cancel,
+        coord,
+        &mut cadence,
+        &mut injector,
+        &mut out,
     );
     if let Err(e) = result {
         out.disposition = SessionDisposition::Failed(e.to_string());
@@ -493,6 +528,7 @@ fn drive_gang_inner(
     seed: u64,
     wd: &Path,
     cancel: &CancelToken,
+    coord: &CoordinatorHandle,
     cadence: &mut Cadence,
     injector: &mut FaultInjector,
     out: &mut SessionOutcome,
@@ -504,7 +540,8 @@ fn drive_gang_inner(
         .workdir(wd)
         .target_steps(spec.target_steps)
         .seed(seed)
-        .gc_grace(spec.gc_grace);
+        .gc_grace(spec.gc_grace)
+        .coordinator(coord.clone());
     if let Some(full_every) = spec.incremental {
         builder = builder.incremental_images(full_every);
     }

@@ -99,6 +99,10 @@ pub struct CampaignSpec {
     /// All sessions share one workdir (and one content-addressed chunk
     /// store) instead of per-session subdirectories.
     pub shared_workdir: bool,
+    /// Run the whole fleet through ONE multi-tenant coordinator daemon
+    /// (every session's jobs multiplex over a single port) instead of a
+    /// private coordinator per session.
+    pub shared_coordinator: bool,
     /// Write incremental checkpoint images, forcing a full image every
     /// `Some(n)` checkpoints (`None` = whole-image v1 checkpoints).
     pub incremental: Option<u32>,
@@ -130,6 +134,7 @@ impl Default for CampaignSpec {
             seed: 7,
             workdir: None,
             shared_workdir: false,
+            shared_coordinator: false,
             incremental: None,
             gc_grace: crate::cr::GC_GRACE,
             interval: IntervalPolicy::Fixed(Duration::from_millis(40)),
@@ -243,6 +248,23 @@ impl CampaignSpec {
                 "workdir" => spec.workdir = Some(PathBuf::from(value)),
                 "shared-workdir" => {
                     spec.shared_workdir = parse_bool(value).ok_or_else(|| bad("shared-workdir"))?
+                }
+                // Underscore alias accepted; both spellings count as one
+                // key for the duplicate check.
+                "shared-coordinator" | "shared_coordinator" => {
+                    let alias = if key == "shared-coordinator" {
+                        "shared_coordinator"
+                    } else {
+                        "shared-coordinator"
+                    };
+                    if !seen_keys.insert(alias.to_string()) {
+                        return Err(Error::Usage(format!(
+                            "campaign spec line {}: duplicate key {key:?}",
+                            lineno + 1
+                        )));
+                    }
+                    spec.shared_coordinator =
+                        parse_bool(value).ok_or_else(|| bad("shared-coordinator"))?
                 }
                 "incremental" => {
                     spec.incremental = match value {
@@ -409,6 +431,10 @@ impl CampaignSpec {
             kv("workdir", wd.to_string_lossy().into_owned());
         }
         kv("shared-workdir", (self.shared_workdir as u8).to_string());
+        kv(
+            "shared-coordinator",
+            (self.shared_coordinator as u8).to_string(),
+        );
         kv(
             "incremental",
             match self.incremental {
@@ -589,6 +615,24 @@ requeue-delay-ms = 10
         // INI-style sections are not part of the format.
         let err = CampaignSpec::parse("[fleet]\nsessions = 2\n").unwrap_err();
         assert!(err.to_string().contains("section"), "{err}");
+    }
+
+    #[test]
+    fn shared_coordinator_key_parses_round_trips_and_dedups_aliases() {
+        let s = CampaignSpec::parse("shared-coordinator = 1\n").unwrap();
+        assert!(s.shared_coordinator);
+        // The underscore spelling from the issue tracker works too.
+        let s = CampaignSpec::parse("shared_coordinator = true\n").unwrap();
+        assert!(s.shared_coordinator);
+        assert_eq!(CampaignSpec::parse(&s.to_text()).unwrap(), s);
+        // The two spellings are one key for duplicate detection.
+        let err =
+            CampaignSpec::parse("shared_coordinator = 1\nshared-coordinator = 0\n").unwrap_err();
+        assert!(err.to_string().contains("duplicate key"), "{err}");
+        let err =
+            CampaignSpec::parse("shared-coordinator = 1\nshared_coordinator = 0\n").unwrap_err();
+        assert!(err.to_string().contains("duplicate key"), "{err}");
+        assert!(CampaignSpec::parse("shared-coordinator = maybe\n").is_err());
     }
 
     #[test]

@@ -76,6 +76,10 @@ nersc-cr — checkpoint-restart for HPC with a DMTCP-style coordinator
 
 subcommands:
   coordinator --jobid ID [--workdir DIR] [--no-gzip]   start a coordinator (blocks)
+  daemon [--bind HOST:PORT] [--ckpt-root DIR]
+      [--phase-timeout-ms N]                           start a multi-tenant coordinator
+                                                       daemon: many jobs, ONE port
+                                                       (blocks; `command ... quit` stops it)
   command --file PATH (status|checkpoint|quit)         control a coordinator
   inspect IMAGE.dmtcp                                  show an image header
   sbatch SCRIPT [--cluster-nodes N]                    simulate a batch script
@@ -102,6 +106,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
             Ok(())
         }
         Some("coordinator") => cmd_coordinator(&args[1..]),
+        Some("daemon") => cmd_daemon(&args[1..]),
         Some("command") => cmd_command(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("sbatch") => cmd_sbatch(&args[1..]),
@@ -142,6 +147,54 @@ fn cmd_coordinator(args: &[String]) -> Result<()> {
         let (clients, last, _) = coord.status();
         log::debug!("clients={clients} last_ckpt={last}");
     }
+}
+
+/// `nersc-cr daemon`: one long-lived event-driven coordinator daemon
+/// multiplexing any number of jobs over a single port. Jobs are
+/// auto-registered on first tagged Hello (checkpoints land under
+/// `<ckpt-root>/<job>`); sessions in other processes attach by exporting
+/// `DMTCP_COORD_HOST/PORT` and a unique `DMTCP_JOB`. Blocks until a
+/// `quit` command arrives on the port.
+fn cmd_daemon(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let ckpt_root = PathBuf::from(o.get_or(
+        "ckpt-root",
+        &std::env::temp_dir()
+            .join("nersc_cr_daemon_ckpt")
+            .to_string_lossy(),
+    ));
+    let timeout_ms: u64 = o
+        .get_or("phase-timeout-ms", "30000")
+        .parse()
+        .map_err(|_| Error::Usage("bad --phase-timeout-ms".into()))?;
+    let daemon = crate::dmtcp::CoordinatorDaemon::start(crate::dmtcp::DaemonConfig {
+        bind: o.get_or("bind", "127.0.0.1:0"),
+        retry_ephemeral: true,
+        auto_register_jobs: true,
+        auto_ckpt_dir: ckpt_root.clone(),
+        auto_phase_timeout: Duration::from_millis(timeout_ms),
+    })?;
+    println!("multi-tenant coordinator daemon on {}", daemon.addr());
+    println!(
+        "auto-registered jobs checkpoint under {}",
+        ckpt_root.display()
+    );
+    println!(
+        "clients: export DMTCP_COORD_HOST={} DMTCP_COORD_PORT={} DMTCP_JOB=<unique-id>",
+        daemon.addr().ip(),
+        daemon.addr().port()
+    );
+    println!("(blocking; `nersc-cr command --file ... quit` or a Quit frame stops it)");
+    while !daemon.shutdown_flag() {
+        std::thread::sleep(Duration::from_millis(200));
+        log::debug!(
+            "daemon: jobs={} connections={}",
+            daemon.num_jobs(),
+            daemon.num_connections()
+        );
+    }
+    println!("daemon shut down");
+    Ok(())
 }
 
 fn cmd_command(args: &[String]) -> Result<()> {

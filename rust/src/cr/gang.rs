@@ -37,7 +37,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cr::app::GangApp;
-use crate::cr::module::{start_coordinator, CrConfig};
+use crate::cr::module::{CoordinatorHandle, CrConfig};
 use crate::cr::session::{merge_series, next_nonce, GC_GRACE};
 use crate::dmtcp::process::Checkpointable;
 use crate::dmtcp::store::{latest_gang_manifest, GangManifest, GangRankEntry, ImageStore};
@@ -93,6 +93,7 @@ pub struct GangSessionBuilder<A: GangApp> {
     incremental: Option<u32>,
     work_per_quantum: u32,
     gc_grace: Duration,
+    coordinator: CoordinatorHandle,
 }
 
 impl<A: GangApp> GangSessionBuilder<A> {
@@ -149,6 +150,15 @@ impl<A: GangApp> GangSessionBuilder<A> {
         self
     }
 
+    /// How this gang obtains its coordinator (default
+    /// [`CoordinatorHandle::Private`]). With [`CoordinatorHandle::Shared`]
+    /// every incarnation registers its job on the given multi-tenant
+    /// daemon, and all ranks' barriers multiplex over its single port.
+    pub fn coordinator(mut self, handle: CoordinatorHandle) -> Self {
+        self.coordinator = handle;
+        self
+    }
+
     /// Validate and assemble the session (creates the workdir).
     pub fn build(self) -> Result<GangSession<A>> {
         let workdir = self.workdir.ok_or_else(|| {
@@ -168,6 +178,7 @@ impl<A: GangApp> GangSessionBuilder<A> {
             incremental: self.incremental,
             work_per_quantum: self.work_per_quantum,
             gc_grace: self.gc_grace,
+            coordinator_handle: self.coordinator,
             nonce: next_nonce(),
             generation: 0,
             submitted: false,
@@ -202,6 +213,7 @@ pub struct GangSession<A: GangApp> {
     incremental: Option<u32>,
     work_per_quantum: u32,
     gc_grace: Duration,
+    coordinator_handle: CoordinatorHandle,
     nonce: u64,
     generation: u32,
     submitted: bool,
@@ -223,6 +235,7 @@ impl<A: GangApp> GangSession<A> {
             incremental: None,
             work_per_quantum: 1,
             gc_grace: GC_GRACE,
+            coordinator: CoordinatorHandle::Private,
         }
     }
 
@@ -309,7 +322,7 @@ impl<A: GangApp> GangSession<A> {
             cfg.incremental = true;
             cfg.full_image_every = full_every;
         }
-        let (coordinator, base_env) = start_coordinator(&cfg)?;
+        let (coordinator, base_env) = self.coordinator_handle.start(&cfg)?;
         self.app.begin_incarnation(self.generation);
         let n = self.app.n_ranks();
 
@@ -376,11 +389,16 @@ impl<A: GangApp> GangSession<A> {
                         self.app.reinit_fn(rank),
                         self.mana_exclusion,
                     )));
+                    // Re-tag the rank with this incarnation's coordinator
+                    // routing (DMTCP_JOB names the previous incarnation's
+                    // job inside the image); the rank's position itself is
+                    // preserved by the image's DMTCP_RANK.
                     let restarted = self.substrate.restart(
                         &image,
                         coordinator.addr(),
                         wrapped,
                         plugins,
+                        &base_env,
                     )?;
                     (state, restarted.launched)
                 }

@@ -35,6 +35,8 @@ pub use app::{CrApp, GangApp};
 pub use auto::{AutoState, CrPolicy, CrReport};
 pub use gang::{GangCheckpoint, GangSession, GangSessionBuilder, GangStatus};
 pub use jobscript::{consolidated_script, CrJobConfig};
-pub use module::{latest_images, start_coordinator, CrConfig};
+pub use module::{
+    latest_images, start_coordinator, start_coordinator_on, CoordinatorHandle, CrConfig,
+};
 pub use session::{CrSession, CrSessionBuilder, CrStrategy, SessionStatus, GC_GRACE};
 pub use substrate::Substrate;

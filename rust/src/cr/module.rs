@@ -8,8 +8,10 @@
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
+use crate::dmtcp::daemon::CoordinatorDaemon;
 use crate::dmtcp::{Coordinator, CoordinatorConfig};
 use crate::error::Result;
 
@@ -53,13 +55,41 @@ impl CrConfig {
     }
 }
 
-/// `start_coordinator`: boot a coordinator for this job, write the
-/// rendezvous file, and return it together with the environment variables
-/// the job's processes must inherit (`DMTCP_COORD_HOST`, `DMTCP_COORD_PORT`,
-/// `DMTCP_CHECKPOINT_DIR`, `DMTCP_GZIP`, and — when incremental images are
-/// on — `DMTCP_INCREMENTAL` / `DMTCP_FULL_EVERY`).
-pub fn start_coordinator(config: &CrConfig) -> Result<(Coordinator, BTreeMap<String, String>)> {
-    let coord = Coordinator::start(CoordinatorConfig {
+/// How a session obtains its coordinator: boot a private daemon (the
+/// default, one coordinator per job — the paper's deployment) or attach
+/// the job to a long-lived shared [`CoordinatorDaemon`] so whole fleets
+/// multiplex over one port with O(1) coordinator threads.
+#[derive(Clone, Default)]
+pub enum CoordinatorHandle {
+    /// Boot a private daemon for this job (the per-session default).
+    #[default]
+    Private,
+    /// Register the job on this shared multi-tenant daemon.
+    Shared(Arc<CoordinatorDaemon>),
+}
+
+impl CoordinatorHandle {
+    /// Start (or attach) the coordinator for `config`'s job and return it
+    /// with the environment its processes must inherit.
+    pub fn start(&self, config: &CrConfig) -> Result<(Coordinator, BTreeMap<String, String>)> {
+        match self {
+            CoordinatorHandle::Private => start_coordinator(config),
+            CoordinatorHandle::Shared(daemon) => start_coordinator_on(daemon, config),
+        }
+    }
+}
+
+impl std::fmt::Debug for CoordinatorHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoordinatorHandle::Private => write!(f, "Private"),
+            CoordinatorHandle::Shared(d) => write!(f, "Shared({})", d.addr()),
+        }
+    }
+}
+
+fn coordinator_config(config: &CrConfig) -> CoordinatorConfig {
+    CoordinatorConfig {
         bind: "127.0.0.1:0".into(),
         ckpt_dir: config.ckpt_dir.clone(),
         gzip: config.gzip,
@@ -67,7 +97,47 @@ pub fn start_coordinator(config: &CrConfig) -> Result<(Coordinator, BTreeMap<Str
         command_file_dir: config.workdir.clone(),
         phase_timeout: config.phase_timeout,
         retry_ephemeral: true,
-    })?;
+    }
+}
+
+/// `start_coordinator`: boot a coordinator for this job, write the
+/// rendezvous file, and return it together with the environment variables
+/// the job's processes must inherit (`DMTCP_COORD_HOST`, `DMTCP_COORD_PORT`,
+/// `DMTCP_JOB`, `DMTCP_CHECKPOINT_DIR`, `DMTCP_GZIP`, and — when
+/// incremental images are on — `DMTCP_INCREMENTAL` / `DMTCP_FULL_EVERY`).
+pub fn start_coordinator(config: &CrConfig) -> Result<(Coordinator, BTreeMap<String, String>)> {
+    let coord = Coordinator::start(coordinator_config(config))?;
+    let env = coordinator_env(config, &coord);
+    log::info!(
+        "start_coordinator: job {} on {} (ckpt dir {})",
+        config.jobid,
+        coord.addr(),
+        config.ckpt_dir.display()
+    );
+    Ok((coord, env))
+}
+
+/// `start_coordinator` against a *shared* multi-tenant daemon: the job is
+/// registered on `daemon` instead of booting a private one, and its
+/// processes route to it through the `DMTCP_JOB` tag in their Hello
+/// handshake. Everything else — rendezvous file, environment contract,
+/// teardown — is identical to the private path.
+pub fn start_coordinator_on(
+    daemon: &Arc<CoordinatorDaemon>,
+    config: &CrConfig,
+) -> Result<(Coordinator, BTreeMap<String, String>)> {
+    let coord = Coordinator::attach(daemon, coordinator_config(config))?;
+    let env = coordinator_env(config, &coord);
+    log::info!(
+        "start_coordinator: job {} attached to shared daemon {} (ckpt dir {})",
+        config.jobid,
+        coord.addr(),
+        config.ckpt_dir.display()
+    );
+    Ok((coord, env))
+}
+
+fn coordinator_env(config: &CrConfig, coord: &Coordinator) -> BTreeMap<String, String> {
     let mut env = BTreeMap::new();
     env.insert("DMTCP_COORD_HOST".into(), coord.addr().ip().to_string());
     env.insert("DMTCP_COORD_PORT".into(), coord.addr().port().to_string());
@@ -86,13 +156,10 @@ pub fn start_coordinator(config: &CrConfig) -> Result<(Coordinator, BTreeMap<Str
         }
     }
     env.insert("SLURM_JOB_ID".into(), config.jobid.clone());
-    log::info!(
-        "start_coordinator: job {} on {} (ckpt dir {})",
-        config.jobid,
-        coord.addr(),
-        config.ckpt_dir.display()
-    );
-    Ok((coord, env))
+    // The daemon-routing tag: each process's Hello carries it so a shared
+    // daemon delivers frames to this job's state machine and no other.
+    env.insert("DMTCP_JOB".into(), coord.job().to_string());
+    env
 }
 
 /// Find the newest checkpoint image set in a directory (restart discovery:
@@ -140,6 +207,29 @@ mod tests {
         assert!(f.exists(), "rendezvous file missing");
         let got = crate::dmtcp::command::read_command_file(&f).unwrap();
         assert_eq!(got, coord.addr());
+        std::fs::remove_dir_all(&wd).ok();
+    }
+
+    #[test]
+    fn start_coordinator_on_shares_one_daemon_across_jobs() {
+        let wd = dir("shared");
+        let daemon = CoordinatorDaemon::start(Default::default()).unwrap();
+        let (a, env_a) = start_coordinator_on(&daemon, &CrConfig::new("900001", &wd)).unwrap();
+        let (b, env_b) = start_coordinator_on(&daemon, &CrConfig::new("900002", &wd)).unwrap();
+        // One daemon, one port, both jobs' env point at it under their own tag.
+        assert_eq!(a.addr(), b.addr());
+        assert_eq!(a.addr(), daemon.addr());
+        assert_eq!(env_a.get("DMTCP_JOB").map(String::as_str), Some("900001"));
+        assert_eq!(env_b.get("DMTCP_JOB").map(String::as_str), Some("900002"));
+        assert_eq!(daemon.num_jobs(), 2);
+        // Per-job rendezvous files, removed per-job on teardown.
+        assert!(wd.join("dmtcp_command.900001").exists());
+        assert!(wd.join("dmtcp_command.900002").exists());
+        drop(a);
+        assert!(!wd.join("dmtcp_command.900001").exists());
+        assert!(wd.join("dmtcp_command.900002").exists());
+        assert_eq!(daemon.num_jobs(), 1);
+        drop(b);
         std::fs::remove_dir_all(&wd).ok();
     }
 

@@ -52,7 +52,7 @@ use std::time::{Duration, Instant};
 
 use crate::cr::app::CrApp;
 use crate::cr::auto::{AutoState, CrPolicy, CrReport};
-use crate::cr::module::{latest_images, start_coordinator, CrConfig};
+use crate::cr::module::{latest_images, CoordinatorHandle, CrConfig};
 use crate::dmtcp::process::Checkpointable;
 use crate::dmtcp::store::ImageStore;
 use crate::dmtcp::{Coordinator, ImageInfo, PluginRegistry, TimerPlugin};
@@ -125,6 +125,7 @@ pub struct CrSessionBuilder<A: CrApp> {
     seed: u64,
     incremental: Option<u32>,
     gc_grace: Option<Duration>,
+    coordinator: CoordinatorHandle,
 }
 
 impl<A: CrApp> CrSessionBuilder<A> {
@@ -186,6 +187,16 @@ impl<A: CrApp> CrSessionBuilder<A> {
         self
     }
 
+    /// How this session obtains its coordinator (default
+    /// [`CoordinatorHandle::Private`]: a private daemon per incarnation).
+    /// Pass [`CoordinatorHandle::Shared`] to register each incarnation's
+    /// job on a long-lived multi-tenant daemon instead, multiplexing the
+    /// session over the daemon's single port.
+    pub fn coordinator(mut self, handle: CoordinatorHandle) -> Self {
+        self.coordinator = handle;
+        self
+    }
+
     /// Validate and assemble the session (creates the workdir).
     pub fn build(self) -> Result<CrSession<A>> {
         let workdir = self.workdir.ok_or_else(|| {
@@ -207,6 +218,7 @@ impl<A: CrApp> CrSessionBuilder<A> {
             seed: self.seed,
             incremental: self.incremental,
             gc_grace,
+            coordinator_handle: self.coordinator,
             nonce: next_nonce(),
             incarnation: 0,
             active: None,
@@ -233,6 +245,7 @@ pub struct CrSession<A: CrApp> {
     seed: u64,
     incremental: Option<u32>,
     gc_grace: Duration,
+    coordinator_handle: CoordinatorHandle,
     nonce: u64,
     incarnation: u32,
     active: Option<ActiveJob<A::State>>,
@@ -252,6 +265,7 @@ impl<A: CrApp> CrSession<A> {
             seed: 0,
             incremental: None,
             gc_grace: None,
+            coordinator: CoordinatorHandle::Private,
         }
     }
 
@@ -346,7 +360,7 @@ impl<A: CrApp> CrSession<A> {
             cfg.incremental = true;
             cfg.full_image_every = full_every;
         }
-        let (coordinator, env) = start_coordinator(&cfg)?;
+        let (coordinator, env) = self.coordinator_handle.start(&cfg)?;
         let images = self.session_images()?;
         let mut plugins = PluginRegistry::new();
         plugins.register(Box::new(TimerPlugin::new()));
@@ -379,11 +393,15 @@ impl<A: CrApp> CrSession<A> {
             })?;
             let state = Arc::new(Mutex::new(self.app.restore_state()));
             self.app.register_plugins(&state, &mut plugins);
+            // The env overlay re-tags the restarted process with *this*
+            // incarnation's coordinator routing (DMTCP_JOB et al.); the
+            // image's copy names the previous incarnation's job.
             let restarted = self.substrate.restart(
                 &image,
                 coordinator.addr(),
                 Arc::clone(&state),
                 plugins,
+                &env,
             )?;
             let at = restarted.header.steps_done;
             (state, restarted.launched, Some(at))

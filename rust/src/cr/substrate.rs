@@ -20,7 +20,8 @@ use std::sync::{Arc, Mutex};
 use crate::container::runtime::Container;
 use crate::dmtcp::process::Checkpointable;
 use crate::dmtcp::{
-    dmtcp_launch, dmtcp_restart, LaunchSpec, LaunchedProcess, PluginRegistry, RestartedProcess,
+    dmtcp_launch, dmtcp_restart_with_env, LaunchSpec, LaunchedProcess, PluginRegistry,
+    RestartedProcess,
 };
 use crate::error::{Error, Result};
 
@@ -80,17 +81,21 @@ impl Substrate {
     /// Restart a process from a checkpoint image on this substrate. The
     /// container constraints are re-validated: the restarting image set
     /// must also run where DMTCP is embedded and checkpoints persist.
+    /// `env_overrides` is layered over the image environment — the session
+    /// layers use it to stamp the new incarnation's coordinator routing
+    /// (`DMTCP_JOB`) over the image's stale tag.
     pub(crate) fn restart<S: Checkpointable + 'static>(
         &self,
         image: &Path,
         coordinator: SocketAddr,
         state: Arc<Mutex<S>>,
         plugins: PluginRegistry,
+        env_overrides: &BTreeMap<String, String>,
     ) -> Result<RestartedProcess> {
         if let Substrate::Container(c) = self {
             validate_container(c)?;
         }
-        dmtcp_restart(image, coordinator, state, plugins)
+        dmtcp_restart_with_env(image, coordinator, state, plugins, env_overrides)
     }
 }
 

@@ -96,10 +96,15 @@ fn run(
 
     // Gang rank, if any: set by the gang session on launch and preserved in
     // the image env across restarts, so a restarted rank re-advertises the
-    // same position in the computation.
-    let rank = {
+    // same position in the computation. The job tag routes this client to
+    // its own job's state machine on a multi-tenant coordinator daemon
+    // (untagged clients only attach when the daemon hosts a single job).
+    let (rank, job) = {
         let env = ctx.env.lock().expect("env poisoned");
-        env.get("DMTCP_RANK").and_then(|v| v.parse::<u32>().ok())
+        (
+            env.get("DMTCP_RANK").and_then(|v| v.parse::<u32>().ok()),
+            env.get("DMTCP_JOB").cloned(),
+        )
     };
     send_to_coordinator(
         &mut stream,
@@ -109,6 +114,7 @@ fn run(
             n_threads: ctx.stats.n_threads.load(Ordering::Relaxed) as u32,
             restored_vpid: ctx.restored_vpid,
             rank,
+            job,
         },
     )?;
     let vpid = match recv_from_coordinator(&mut stream)? {

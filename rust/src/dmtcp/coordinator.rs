@@ -1,34 +1,39 @@
-//! The central checkpoint coordinator (`dmtcp_coordinator` analog).
+//! The per-job checkpoint coordinator handle (`dmtcp_coordinator` analog).
 //!
-//! One coordinator instance manages one computation: worker processes
-//! connect over TCP (see [`crate::dmtcp::protocol`]), a checkpoint request
-//! drives all of them through the five-phase barrier, and the results are
-//! collected into [`ImageInfo`] records. Multiple coordinators can run
-//! side-by-side for independent computations (the paper: "with the support
-//! for multiple coordinators, the architecture enables independent,
-//! parallel checkpointing processes") — each is just a value of
-//! [`Coordinator`] on its own port.
+//! One [`Coordinator`] manages one computation (one *job*). Since the
+//! multi-tenant rewrite it is a handle over the event-driven
+//! [`CoordinatorDaemon`](crate::dmtcp::daemon::CoordinatorDaemon):
 //!
-//! The coordinator also writes the `dmtcp_command.<jobid>` rendezvous file
-//! that the NERSC CR module uses to find it from job scripts.
+//! * [`Coordinator::start`] boots a **private** daemon and registers the
+//!   job on it — the default, and exactly the old one-coordinator-per-job
+//!   deployment (the paper: "with the support for multiple coordinators,
+//!   the architecture enables independent, parallel checkpointing
+//!   processes");
+//! * [`Coordinator::attach`] registers the job on a **shared** daemon, so
+//!   whole fleets multiplex over one port with O(1) coordinator threads.
+//!
+//! Either way the handle's API is identical: checkpoint barriers, gang
+//! rounds, kills, status and store totals are all scoped to this job and
+//! this job only. The handle also writes (and on teardown removes) the
+//! `dmtcp_command.<jobid>` rendezvous file that the NERSC CR module uses
+//! to find the coordinator from job scripts.
 
-use std::collections::{BTreeMap, HashMap, HashSet};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
+use crate::dmtcp::daemon::{CoordinatorDaemon, DaemonConfig, JobSpec};
 use crate::dmtcp::image::ImageInfo;
-use crate::dmtcp::protocol::{
-    recv_to_coordinator, send_from_coordinator, FromCoordinator, Phase, ToCoordinator,
-};
 use crate::error::{Error, Result};
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Bind address; port 0 picks an ephemeral port.
+    /// Bind address; port 0 picks an ephemeral port. (Ignored by
+    /// [`Coordinator::attach`] — the shared daemon is already bound.)
     pub bind: String,
     /// Directory checkpoint images are written into.
     pub ckpt_dir: PathBuf,
@@ -62,42 +67,6 @@ impl Default for CoordinatorConfig {
     }
 }
 
-/// Per-connected-process record.
-struct ClientConn {
-    stream: TcpStream,
-    name: String,
-    real_pid: u64,
-    n_threads: u32,
-    /// Gang rank advertised in Hello (`None` for independent processes).
-    rank: Option<u32>,
-}
-
-/// One in-flight checkpoint round.
-struct Round {
-    ckpt_id: u64,
-    phase: Phase,
-    pending: HashSet<u64>,
-    images: Vec<ImageInfo>,
-    failed: Option<String>,
-}
-
-#[derive(Default)]
-struct CoordState {
-    clients: HashMap<u64, ClientConn>,
-    pid_table: crate::dmtcp::virtualization::PidTable,
-    round: Option<Round>,
-    last_ckpt_id: u64,
-    /// Total images ever written (metrics).
-    images_written: u64,
-    total_stored_bytes: u64,
-    /// Raw (logical) bytes the images described — the denominator of the
-    /// incremental pipeline's savings.
-    total_raw_bytes: u64,
-    /// Chunks written to / reused from the content-addressed store.
-    total_chunks_written: u64,
-    total_chunks_deduped: u64,
-}
-
 /// Lifetime checkpoint-store totals across all rounds of a coordinator —
 /// the chunks-written-vs-deduped and logical-vs-stored accounting the
 /// incremental pipeline is judged by.
@@ -115,50 +84,67 @@ pub struct StoreTotals {
     pub chunks_deduped: u64,
 }
 
-struct Shared {
-    state: Mutex<CoordState>,
-    cv: Condvar,
-    epoch: u64,
-    next_ckpt_id: AtomicU64,
-    shutdown: AtomicBool,
-    config: CoordinatorConfig,
-}
+/// Distinguishes anonymous (no-jobid) registrations on one daemon.
+static ANON_JOB: AtomicU64 = AtomicU64::new(1);
 
-/// A running coordinator. Dropping it shuts the listener down.
+/// A running coordinator handle for one job. Dropping it tears the job
+/// down (and, for a private daemon, the daemon with it).
 pub struct Coordinator {
-    shared: Arc<Shared>,
+    daemon: Arc<CoordinatorDaemon>,
+    /// Private-daemon handles shut the daemon down on teardown; shared
+    /// handles leave it running for the other jobs.
+    owns_daemon: bool,
+    job: String,
     addr: SocketAddr,
-    listener_join: Option<std::thread::JoinHandle<()>>,
     command_file: Option<PathBuf>,
+    closed: bool,
 }
 
 impl Coordinator {
-    /// Start a coordinator (the paper's `start_coordinator` primitive).
+    /// Start a coordinator (the paper's `start_coordinator` primitive):
+    /// boot a private daemon and register this job on it.
     ///
     /// When the configured bind port is already in use and
     /// [`CoordinatorConfig::retry_ephemeral`] is set (the default), the
-    /// coordinator falls back to an ephemeral port on the same address
-    /// instead of failing — two computations booting concurrently on one
-    /// host both come up, each on its own port.
+    /// daemon falls back to an ephemeral port on the same address instead
+    /// of failing — two computations booting concurrently on one host
+    /// both come up, each on its own port.
     pub fn start(config: CoordinatorConfig) -> Result<Self> {
-        let listener = match TcpListener::bind(&config.bind) {
-            Ok(l) => l,
-            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse && config.retry_ephemeral => {
-                let host = config
-                    .bind
-                    .rsplit_once(':')
-                    .map(|(h, _)| h)
-                    .unwrap_or("127.0.0.1");
-                log::warn!(
-                    "coordinator bind {} in use; retrying on an ephemeral port",
-                    config.bind
-                );
-                TcpListener::bind(format!("{host}:0"))?
-            }
-            Err(e) => return Err(e.into()),
-        };
-        let addr = listener.local_addr()?;
-        std::fs::create_dir_all(&config.ckpt_dir)?;
+        let daemon = CoordinatorDaemon::start(DaemonConfig {
+            bind: config.bind.clone(),
+            retry_ephemeral: config.retry_ephemeral,
+            auto_register_jobs: false,
+            ..Default::default()
+        })?;
+        Self::register_on(daemon, true, config)
+    }
+
+    /// Register this job on an already-running shared daemon: the
+    /// multi-tenant path. The handle behaves exactly like a private
+    /// coordinator, but its clients multiplex over the daemon's one port
+    /// and its teardown leaves the daemon (and every other job) running.
+    pub fn attach(daemon: &Arc<CoordinatorDaemon>, config: CoordinatorConfig) -> Result<Self> {
+        Self::register_on(Arc::clone(daemon), false, config)
+    }
+
+    fn register_on(
+        daemon: Arc<CoordinatorDaemon>,
+        owns_daemon: bool,
+        config: CoordinatorConfig,
+    ) -> Result<Self> {
+        let job = config.jobid.clone().unwrap_or_else(|| {
+            format!(
+                "anon-{}-{}",
+                std::process::id(),
+                ANON_JOB.fetch_add(1, Ordering::Relaxed)
+            )
+        });
+        daemon.register_job(&JobSpec {
+            job: job.clone(),
+            ckpt_dir: config.ckpt_dir.clone(),
+            phase_timeout: config.phase_timeout,
+        })?;
+        let addr = daemon.addr();
 
         // Rendezvous file: `dmtcp_command.<jobid>` with "host port".
         // Written to a temp name and renamed into place: rename is atomic
@@ -167,73 +153,60 @@ impl Coordinator {
         // "host port" line — never a partially written one.
         let command_file = match &config.jobid {
             Some(jobid) => {
-                let p = config.command_file_dir.join(format!("dmtcp_command.{jobid}"));
-                std::fs::create_dir_all(&config.command_file_dir)?;
-                let tmp = config.command_file_dir.join(format!(
-                    ".dmtcp_command.{jobid}.tmp.{}.{}",
-                    std::process::id(),
-                    addr.port()
-                ));
-                std::fs::write(&tmp, format!("{} {}\n", addr.ip(), addr.port()))?;
-                if let Err(e) = std::fs::rename(&tmp, &p) {
-                    let _ = std::fs::remove_file(&tmp);
-                    return Err(e.into());
+                let write = || -> Result<PathBuf> {
+                    let p = config.command_file_dir.join(format!("dmtcp_command.{jobid}"));
+                    std::fs::create_dir_all(&config.command_file_dir)?;
+                    let tmp = config.command_file_dir.join(format!(
+                        ".dmtcp_command.{jobid}.tmp.{}.{}",
+                        std::process::id(),
+                        addr.port()
+                    ));
+                    std::fs::write(&tmp, format!("{} {}\n", addr.ip(), addr.port()))?;
+                    if let Err(e) = std::fs::rename(&tmp, &p) {
+                        let _ = std::fs::remove_file(&tmp);
+                        return Err(e.into());
+                    }
+                    Ok(p)
+                };
+                match write() {
+                    Ok(p) => Some(p),
+                    Err(e) => {
+                        daemon.close_job(&job);
+                        if owns_daemon {
+                            daemon.shutdown();
+                        }
+                        return Err(e);
+                    }
                 }
-                Some(p)
             }
             None => None,
         };
 
-        let shared = Arc::new(Shared {
-            state: Mutex::new(CoordState {
-                pid_table: crate::dmtcp::virtualization::PidTable::new(),
-                ..Default::default()
-            }),
-            cv: Condvar::new(),
-            epoch: 1,
-            next_ckpt_id: AtomicU64::new(1),
-            shutdown: AtomicBool::new(false),
-            config,
-        });
-
-        let accept_shared = Arc::clone(&shared);
-        let listener_join = std::thread::Builder::new()
-            .name("dmtcp-coord-accept".into())
-            .spawn(move || {
-                // Nonblocking accept so shutdown is prompt.
-                listener
-                    .set_nonblocking(true)
-                    .expect("listener nonblocking");
-                while !accept_shared.shutdown.load(Ordering::Relaxed) {
-                    match listener.accept() {
-                        Ok((stream, _peer)) => {
-                            stream.set_nodelay(true).ok();
-                            let s = Arc::clone(&accept_shared);
-                            std::thread::Builder::new()
-                                .name("dmtcp-coord-client".into())
-                                .spawn(move || client_loop(s, stream))
-                                .expect("spawn client thread");
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(2));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })
-            .expect("spawn accept thread");
-
         Ok(Self {
-            shared,
+            daemon,
+            owns_daemon,
+            job,
             addr,
-            listener_join: Some(listener_join),
             command_file,
+            closed: false,
         })
     }
 
-    /// The coordinator's socket address (workers connect here).
+    /// The coordinator's socket address (workers connect here). For a
+    /// shared daemon this is the one port every job multiplexes over.
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// This job's routing key on the daemon (what `Hello { job }` must
+    /// carry; exported to clients as `DMTCP_JOB`).
+    pub fn job(&self) -> &str {
+        &self.job
+    }
+
+    /// The underlying daemon (shared by every co-located job's handle).
+    pub fn daemon(&self) -> &Arc<CoordinatorDaemon> {
+        &self.daemon
     }
 
     /// Path of the rendezvous file, when configured.
@@ -241,33 +214,22 @@ impl Coordinator {
         self.command_file.as_deref()
     }
 
-    /// Number of currently attached processes.
+    /// Number of currently attached processes (this job only).
     pub fn num_clients(&self) -> usize {
-        self.shared.state.lock().unwrap().clients.len()
+        self.daemon.num_clients(&self.job)
     }
 
     /// Block until `n` processes are attached (worker startup rendezvous).
     pub fn wait_for_clients(&self, n: usize, timeout: Duration) -> Result<()> {
-        let deadline = std::time::Instant::now() + timeout;
-        let mut st = self.shared.state.lock().unwrap();
-        while st.clients.len() < n {
-            let left = deadline.saturating_duration_since(std::time::Instant::now());
-            if left.is_zero() {
-                return Err(Error::Protocol(format!(
-                    "timeout waiting for {n} clients (have {})",
-                    st.clients.len()
-                )));
-            }
-            let (g, _) = self.shared.cv.wait_timeout(st, left).unwrap();
-            st = g;
-        }
-        Ok(())
+        self.daemon.wait_for_clients(&self.job, n, timeout)
     }
 
     /// Drive a full five-phase checkpoint barrier across all attached
-    /// processes. Returns one [`ImageInfo`] per process.
+    /// processes of this job. Returns one [`ImageInfo`] per process.
     pub fn checkpoint_all(&self) -> Result<Vec<ImageInfo>> {
-        checkpoint_all_inner(&self.shared)
+        self.daemon
+            .checkpoint_job(&self.job, None)
+            .map(|(images, _ranks)| images)
     }
 
     /// Drive one all-or-nothing gang checkpoint barrier: every attached
@@ -277,35 +239,7 @@ impl Coordinator {
     /// caller publishes the gang manifest only on `Ok`). Returns the
     /// images sorted by rank.
     pub fn checkpoint_gang(&self, expected_ranks: u32) -> Result<Vec<(u32, ImageInfo)>> {
-        let rank_of: HashMap<u64, u32> = {
-            let st = self.shared.state.lock().unwrap();
-            let mut by_vpid = HashMap::new();
-            let mut seen = HashSet::new();
-            for (&vpid, c) in &st.clients {
-                let r = c.rank.ok_or_else(|| {
-                    Error::Protocol(format!(
-                        "gang checkpoint: client {:?} (vpid {vpid}) advertised no rank",
-                        c.name
-                    ))
-                })?;
-                if !seen.insert(r) {
-                    return Err(Error::Protocol(format!(
-                        "gang checkpoint: rank {r} attached twice"
-                    )));
-                }
-                by_vpid.insert(vpid, r);
-            }
-            if by_vpid.len() != expected_ranks as usize
-                || (0..expected_ranks).any(|r| !seen.contains(&r))
-            {
-                return Err(Error::Protocol(format!(
-                    "gang checkpoint: expected ranks 0..{expected_ranks}, have {} clients",
-                    by_vpid.len()
-                )));
-            }
-            by_vpid
-        };
-        let images = checkpoint_all_inner(&self.shared)?;
+        let (images, rank_of) = self.daemon.checkpoint_job(&self.job, Some(expected_ranks))?;
         let mut out = Vec::with_capacity(images.len());
         for info in images {
             let r = rank_of.get(&info.vpid).copied().ok_or_else(|| {
@@ -341,53 +275,49 @@ impl Coordinator {
     /// 1 would overwrite the committed cut's files that the live gang
     /// manifest still references.
     pub fn bump_ckpt_id_to(&self, min: u64) {
-        self.shared.next_ckpt_id.fetch_max(min, Ordering::Relaxed);
+        self.daemon.bump_ckpt_id(&self.job, min);
     }
 
-    /// Broadcast a kill (preemption) to every attached process.
+    /// Broadcast a kill (preemption) to every attached process of this
+    /// job; other jobs on a shared daemon are untouched.
     pub fn kill_all(&self) {
-        let mut st = self.shared.state.lock().unwrap();
-        for (vpid, c) in st.clients.iter_mut() {
-            if send_from_coordinator(&mut c.stream, &FromCoordinator::Kill).is_err() {
-                log::warn!("kill: client {vpid} unreachable");
-            }
-        }
+        self.daemon.kill_job(&self.job);
     }
 
     /// `(clients, last completed checkpoint id, epoch)`.
     pub fn status(&self) -> (usize, u64, u64) {
-        let st = self.shared.state.lock().unwrap();
-        (st.clients.len(), st.last_ckpt_id, self.shared.epoch)
+        self.daemon.job_status(&self.job)
     }
 
     /// Lifetime totals `(images_written, stored_bytes)`.
     pub fn totals(&self) -> (u64, u64) {
-        let st = self.shared.state.lock().unwrap();
-        (st.images_written, st.total_stored_bytes)
+        self.daemon.job_totals(&self.job)
     }
 
     /// Lifetime checkpoint-store accounting (chunks written vs deduped,
     /// logical vs stored bytes).
     pub fn store_totals(&self) -> StoreTotals {
-        let st = self.shared.state.lock().unwrap();
-        StoreTotals {
-            images_written: st.images_written,
-            stored_bytes: st.total_stored_bytes,
-            logical_bytes: st.total_raw_bytes,
-            chunks_written: st.total_chunks_written,
-            chunks_deduped: st.total_chunks_deduped,
-        }
+        self.daemon.job_store_totals(&self.job)
     }
 
-    /// Stop accepting, kill attached processes, join the listener.
+    /// Tear this job down: kill its clients, remove it from the daemon's
+    /// routing table, remove its rendezvous file — and for a private
+    /// daemon, stop the daemon too. Idempotent.
     pub fn shutdown(&mut self) {
-        self.kill_all();
-        self.shared.shutdown.store(true, Ordering::Relaxed);
-        if let Some(j) = self.listener_join.take() {
-            let _ = j.join();
+        if self.closed {
+            return;
         }
+        self.closed = true;
+        self.daemon.kill_job(&self.job);
+        self.daemon.close_job(&self.job);
+        // Teardown always removes the rendezvous file: a stale
+        // `dmtcp_command.<jobid>` in a shared workdir would point later
+        // discovery at a dead (or worse, recycled) host/port.
         if let Some(f) = &self.command_file {
             let _ = std::fs::remove_file(f);
+        }
+        if self.owns_daemon {
+            self.daemon.shutdown();
         }
     }
 }
@@ -398,315 +328,9 @@ impl Drop for Coordinator {
     }
 }
 
-/// The barrier driver (also reachable from command connections).
-fn checkpoint_all_inner(shared: &Arc<Shared>) -> Result<Vec<ImageInfo>> {
-    let ckpt_id = shared.next_ckpt_id.fetch_add(1, Ordering::Relaxed);
-    let dir = shared.config.ckpt_dir.to_string_lossy().to_string();
-
-    {
-        let mut st = shared.state.lock().unwrap();
-        if st.round.is_some() {
-            return Err(Error::Protocol("checkpoint already in progress".into()));
-        }
-        if st.clients.is_empty() {
-            return Err(Error::Protocol("no clients attached".into()));
-        }
-        st.round = Some(Round {
-            ckpt_id,
-            phase: Phase::Suspend,
-            pending: HashSet::new(),
-            images: Vec::new(),
-            failed: None,
-        });
-    }
-
-    let result = drive_phases(shared, ckpt_id, &dir);
-
-    // Tear down the round record, collect images.
-    let mut st = shared.state.lock().unwrap();
-    let round = st.round.take().expect("round vanished");
-    let failure = match result {
-        Err(e) => Some(e),
-        Ok(()) => round.failed.map(Error::Protocol),
-    };
-    if let Some(e) = failure {
-        // Abort: survivors may be parked mid-barrier waiting for the next
-        // phase that will never come — release them so a failed round
-        // costs the computation nothing but the (unpublished) checkpoint.
-        for (vpid, c) in st.clients.iter_mut() {
-            let msg = FromCoordinator::Phase {
-                ckpt_id,
-                phase: Phase::Resume,
-                dir: dir.clone(),
-            };
-            if send_from_coordinator(&mut c.stream, &msg).is_err() {
-                log::warn!("round {ckpt_id} abort: client {vpid} unreachable");
-            }
-        }
-        return Err(e);
-    }
-    st.last_ckpt_id = ckpt_id;
-    st.images_written += round.images.len() as u64;
-    st.total_stored_bytes += round.images.iter().map(|i| i.stored_bytes).sum::<u64>();
-    st.total_raw_bytes += round.images.iter().map(|i| i.raw_bytes).sum::<u64>();
-    st.total_chunks_written += round.images.iter().map(|i| i.chunks_written).sum::<u64>();
-    st.total_chunks_deduped += round.images.iter().map(|i| i.chunks_deduped).sum::<u64>();
-    Ok(round.images)
-}
-
-fn drive_phases(shared: &Arc<Shared>, ckpt_id: u64, dir: &str) -> Result<()> {
-    for phase in Phase::ALL {
-        // Broadcast the phase to every (still-attached) client.
-        {
-            let mut st = shared.state.lock().unwrap();
-            let vpids: Vec<u64> = st.clients.keys().copied().collect();
-            if vpids.is_empty() {
-                return Err(Error::Protocol(format!(
-                    "all clients vanished before {phase:?}"
-                )));
-            }
-            let round = st.round.as_mut().expect("no active round");
-            round.phase = phase;
-            round.pending = vpids.iter().copied().collect();
-            for vpid in vpids {
-                let c = st.clients.get_mut(&vpid).unwrap();
-                let msg = FromCoordinator::Phase {
-                    ckpt_id,
-                    phase,
-                    dir: dir.to_string(),
-                };
-                if send_from_coordinator(&mut c.stream, &msg).is_err() {
-                    log::warn!("phase {phase:?}: client {vpid} unreachable");
-                    // All-or-nothing: a client unreachable mid-barrier
-                    // fails the whole round (the reader thread will reap
-                    // the connection; the round must not "succeed" with a
-                    // partial image set).
-                    let round = st.round.as_mut().unwrap();
-                    round.pending.remove(&vpid);
-                    round.failed = Some(format!(
-                        "client vpid {vpid} unreachable during {phase:?} of round {ckpt_id}"
-                    ));
-                }
-            }
-        }
-        // Await all acks for this phase. A round marked failed (client
-        // death or unreachability) aborts promptly — the teardown in
-        // `checkpoint_all_inner` converts it into the error and resumes
-        // the survivors; waiting out the timeout would only stall them.
-        let deadline = std::time::Instant::now() + shared.config.phase_timeout;
-        let mut st = shared.state.lock().unwrap();
-        loop {
-            let round = st.round.as_ref().expect("no active round");
-            if round.failed.is_some() {
-                return Ok(());
-            }
-            if round.pending.is_empty() {
-                break;
-            }
-            let left = deadline.saturating_duration_since(std::time::Instant::now());
-            if left.is_zero() {
-                return Err(Error::Protocol(format!(
-                    "phase {phase:?} timed out with {} clients pending",
-                    round.pending.len()
-                )));
-            }
-            let (g, _) = shared.cv.wait_timeout(st, left).unwrap();
-            st = g;
-        }
-    }
-    Ok(())
-}
-
-/// Per-connection reader loop: registration, acks, commands, departures.
-fn client_loop(shared: Arc<Shared>, mut stream: TcpStream) {
-    let mut vpid: Option<u64> = None;
-    loop {
-        let msg = match recv_to_coordinator(&mut stream) {
-            Ok(m) => m,
-            Err(_) => break, // disconnect
-        };
-        match msg {
-            ToCoordinator::Hello {
-                real_pid,
-                name,
-                n_threads,
-                restored_vpid,
-                rank,
-            } => {
-                let write_stream = match stream.try_clone() {
-                    Ok(s) => s,
-                    Err(_) => break,
-                };
-                let mut st = shared.state.lock().unwrap();
-                let assigned = match restored_vpid {
-                    Some(v) => match st.pid_table.adopt(v, real_pid) {
-                        Ok(()) => v,
-                        Err(e) => {
-                            let _ = send_from_coordinator(
-                                &mut stream,
-                                &FromCoordinator::Error {
-                                    message: e.to_string(),
-                                },
-                            );
-                            continue;
-                        }
-                    },
-                    None => match st.pid_table.register(real_pid) {
-                        Ok(v) => v,
-                        Err(e) => {
-                            let _ = send_from_coordinator(
-                                &mut stream,
-                                &FromCoordinator::Error {
-                                    message: e.to_string(),
-                                },
-                            );
-                            continue;
-                        }
-                    },
-                };
-                st.clients.insert(
-                    assigned,
-                    ClientConn {
-                        stream: write_stream,
-                        name: name.clone(),
-                        real_pid,
-                        n_threads,
-                        rank,
-                    },
-                );
-                vpid = Some(assigned);
-                shared.cv.notify_all();
-                drop(st);
-                log::debug!("client {name} attached as vpid {assigned} (pid {real_pid})");
-                let _ = send_from_coordinator(
-                    &mut stream,
-                    &FromCoordinator::Welcome {
-                        vpid: assigned,
-                        epoch: shared.epoch,
-                    },
-                );
-            }
-            ToCoordinator::PhaseAck {
-                vpid: v,
-                ckpt_id,
-                phase,
-            } => {
-                let mut st = shared.state.lock().unwrap();
-                if let Some(round) = st.round.as_mut() {
-                    if round.ckpt_id == ckpt_id && round.phase == phase {
-                        round.pending.remove(&v);
-                        shared.cv.notify_all();
-                    } else {
-                        log::warn!(
-                            "stale ack from vpid {v}: round {ckpt_id}/{phase:?} vs {}/{:?}",
-                            round.ckpt_id,
-                            round.phase
-                        );
-                    }
-                }
-            }
-            ToCoordinator::CkptDone {
-                vpid: v,
-                ckpt_id,
-                path,
-                stored_bytes,
-                raw_bytes,
-                write_secs,
-                chunks_written,
-                chunks_deduped,
-            } => {
-                let mut st = shared.state.lock().unwrap();
-                if let Some(round) = st.round.as_mut() {
-                    if round.ckpt_id == ckpt_id {
-                        round.images.push(ImageInfo {
-                            vpid: v,
-                            ckpt_id,
-                            path: PathBuf::from(path),
-                            stored_bytes,
-                            raw_bytes,
-                            write_secs,
-                            chunks_written,
-                            chunks_deduped,
-                        });
-                    }
-                }
-            }
-            ToCoordinator::Goodbye { vpid: v } => {
-                let mut st = shared.state.lock().unwrap();
-                st.clients.remove(&v);
-                let _ = st.pid_table.unregister(v);
-                remove_from_round(&mut st, v, "left");
-                shared.cv.notify_all();
-                break;
-            }
-            ToCoordinator::CommandCheckpoint => {
-                let reply = match checkpoint_all_inner(&shared) {
-                    Ok(images) => FromCoordinator::CkptComplete {
-                        ckpt_id: {
-                            let st = shared.state.lock().unwrap();
-                            st.last_ckpt_id
-                        },
-                        images: images.len() as u32,
-                        total_stored_bytes: images.iter().map(|i| i.stored_bytes).sum(),
-                    },
-                    Err(e) => FromCoordinator::Error {
-                        message: e.to_string(),
-                    },
-                };
-                let _ = send_from_coordinator(&mut stream, &reply);
-            }
-            ToCoordinator::CommandStatus => {
-                let st = shared.state.lock().unwrap();
-                let reply = FromCoordinator::Status {
-                    clients: st.clients.len() as u32,
-                    last_ckpt_id: st.last_ckpt_id,
-                    epoch: shared.epoch,
-                };
-                drop(st);
-                let _ = send_from_coordinator(&mut stream, &reply);
-            }
-            ToCoordinator::CommandQuit => {
-                let mut st = shared.state.lock().unwrap();
-                for (_, c) in st.clients.iter_mut() {
-                    let _ = send_from_coordinator(&mut c.stream, &FromCoordinator::Kill);
-                }
-                drop(st);
-                shared.shutdown.store(true, Ordering::Relaxed);
-                break;
-            }
-        }
-    }
-    // Disconnect cleanup: a worker vanishing mid-round must not hang the
-    // barrier (the round is marked failed instead).
-    if let Some(v) = vpid {
-        let mut st = shared.state.lock().unwrap();
-        if st.clients.remove(&v).is_some() {
-            let _ = st.pid_table.unregister(v);
-            remove_from_round(&mut st, v, "disconnected");
-            log::debug!("client vpid {v} detached");
-        }
-        shared.cv.notify_all();
-    }
-}
-
-fn remove_from_round(st: &mut CoordState, vpid: u64, why: &str) {
-    if let Some(round) = st.round.as_mut() {
-        if round.pending.remove(&vpid) {
-            round.failed = Some(format!(
-                "client vpid {vpid} {why} during {:?} of round {}",
-                round.phase, round.ckpt_id
-            ));
-        }
-    }
-}
-
 /// Client metadata snapshot (for `dmtcp_command --status`-style listings).
 pub fn client_table(coord: &Coordinator) -> BTreeMap<u64, (String, u64, u32)> {
-    let st = coord.shared.state.lock().unwrap();
-    st.clients
-        .iter()
-        .map(|(&v, c)| (v, (c.name.clone(), c.real_pid, c.n_threads)))
-        .collect()
+    coord.daemon.job_client_table(&coord.job)
 }
 
 #[cfg(test)]
@@ -803,6 +427,63 @@ mod tests {
             .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
             .collect();
         assert!(debris.is_empty(), "staging files left behind: {debris:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Satellite regression: teardown removes the `dmtcp_command.<jobid>`
+    /// rendezvous file in a *shared* workdir, so a restart incarnation's
+    /// discovery can never read a dead coordinator's host/port — and on a
+    /// shared daemon, closing one job removes only that job's file.
+    #[test]
+    fn teardown_removes_rendezvous_file_in_shared_workdir() {
+        let dir = std::env::temp_dir().join(format!("ncr_coord_rdv_gc_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = |jobid: &str| CoordinatorConfig {
+            ckpt_dir: dir.join("ckpt"),
+            jobid: Some(jobid.into()),
+            command_file_dir: dir.clone(),
+            ..Default::default()
+        };
+
+        // Incarnation 0 comes and goes; its file must go with it.
+        let first = Coordinator::start(cfg("job.i00")).unwrap();
+        let first_file = first.command_file().unwrap().to_path_buf();
+        assert!(first_file.exists());
+        drop(first);
+        assert!(
+            !first_file.exists(),
+            "stale rendezvous file survived teardown"
+        );
+
+        // Restart-after-teardown in the same (shared) workdir: discovery
+        // only ever sees the live incarnation's file.
+        let second = Coordinator::start(cfg("job.i01")).unwrap();
+        let found: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().starts_with("dmtcp_command."))
+            .collect();
+        assert_eq!(found.len(), 1, "stale files accumulated: {found:?}");
+        let addr = crate::dmtcp::command::read_command_file(second.command_file().unwrap())
+            .expect("live rendezvous file parses");
+        assert_eq!(addr, second.addr());
+
+        // Shared daemon: two jobs, two files, per-job removal.
+        let daemon = CoordinatorDaemon::start(DaemonConfig::default()).unwrap();
+        let mut a = Coordinator::attach(&daemon, cfg("shared.a")).unwrap();
+        let b = Coordinator::attach(&daemon, cfg("shared.b")).unwrap();
+        let (fa, fb) = (
+            a.command_file().unwrap().to_path_buf(),
+            b.command_file().unwrap().to_path_buf(),
+        );
+        assert!(fa.exists() && fb.exists());
+        a.shutdown();
+        assert!(!fa.exists(), "closed job's rendezvous file not removed");
+        assert!(fb.exists(), "sibling job's rendezvous file removed");
+        let addr_b = crate::dmtcp::command::read_command_file(&fb).unwrap();
+        assert_eq!(addr_b, b.addr());
+        drop(b);
+        drop(second);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,1282 @@
+//! The multi-tenant coordinator daemon: one event-driven loop multiplexing
+//! many jobs' checkpoint barriers over a single port.
+//!
+//! The classic deployment (and PRs 1–5 of this repo) ran one blocking
+//! coordinator — accept thread plus a reader thread per client — per
+//! session, so coordinator thread and port count scaled with fleet size.
+//! This module replaces that with a single long-lived readiness loop:
+//!
+//! * **one** loop thread owns the listener and every client socket, all
+//!   nonblocking; it accepts, reads, parses frames, routes, advances
+//!   barriers, and drains write queues in bounded ticks;
+//! * a `JobId`-keyed **routing table** gives every job its own state
+//!   machine (clients, pid table, barrier round, store totals): frames are
+//!   delivered to exactly the job the connection's `Hello { job }`
+//!   handshake routed it into, never across jobs;
+//! * **per-job rounds**: one gang stalling in `Drain` cannot delay another
+//!   job's five-phase barrier, because rounds are advanced independently
+//!   per routing-table entry;
+//! * **bounded write queues**: a client that stops draining its socket is
+//!   disconnected (failing only its own job's round) once its queue or a
+//!   phase deadline overflows — backpressure never stalls the loop.
+//!
+//! [`super::coordinator::Coordinator`] is now a per-job *handle* over this
+//! daemon: `Coordinator::start` boots a private daemon (the default, used
+//! by every single-session path), `Coordinator::attach` registers one more
+//! job on a shared daemon (the fleet path, `nersc-cr daemon`).
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::dmtcp::image::ImageInfo;
+use crate::dmtcp::protocol::{
+    decode_to_coordinator, encode_from_coordinator, FromCoordinator, Phase, ToCoordinator,
+    MAX_FRAME,
+};
+use crate::dmtcp::virtualization::PidTable;
+use crate::error::{Error, Result};
+
+/// Frames a slow client may have queued before it is declared stalled and
+/// disconnected. A healthy checkpoint client holds at most a handful of
+/// outstanding frames (one phase broadcast at a time), so this bound only
+/// trips for clients that stopped reading their socket.
+const WQ_MAX_FRAMES: usize = 256;
+/// Byte bound on one client's write queue (same backpressure semantic).
+const WQ_MAX_BYTES: usize = 1 << 20;
+
+/// How long a caller blocked on a round waits past the round's own phase
+/// deadlines before declaring the daemon itself unresponsive.
+const ROUND_GUARD_SLACK: Duration = Duration::from_secs(30);
+
+/// Daemon configuration (the shared, fleet-facing knobs; per-job knobs
+/// arrive with [`JobSpec`]).
+#[derive(Debug, Clone)]
+pub struct DaemonConfig {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub bind: String,
+    /// Fall back to an ephemeral port when `bind`'s port is taken.
+    pub retry_ephemeral: bool,
+    /// Auto-register unknown jobs named in `Hello { job }` handshakes
+    /// (the `nersc-cr daemon` CLI mode; library embedders register jobs
+    /// explicitly and leave this off so typos surface as typed errors).
+    pub auto_register_jobs: bool,
+    /// Checkpoint directory for auto-registered jobs (per-job subdirs).
+    pub auto_ckpt_dir: PathBuf,
+    /// Phase timeout for auto-registered jobs.
+    pub auto_phase_timeout: Duration,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        Self {
+            bind: "127.0.0.1:0".into(),
+            retry_ephemeral: true,
+            auto_register_jobs: false,
+            auto_ckpt_dir: std::env::temp_dir().join("nersc_cr_daemon_ckpt"),
+            auto_phase_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// One job's registration on the daemon.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Routing key carried by `Hello { job }` handshakes.
+    pub job: String,
+    /// Directory this job's checkpoint images are written into.
+    pub ckpt_dir: PathBuf,
+    /// Barrier timeout per phase; a phase that misses it disconnects the
+    /// stalled clients and fails (only) this job's round.
+    pub phase_timeout: Duration,
+}
+
+/// Per-client record inside one job's routing-table entry.
+struct ClientMeta {
+    conn: u64,
+    name: String,
+    real_pid: u64,
+    n_threads: u32,
+    rank: Option<u32>,
+}
+
+/// One in-flight barrier round of one job.
+struct Round {
+    ckpt_id: u64,
+    phase: Phase,
+    pending: HashSet<u64>,
+    images: Vec<ImageInfo>,
+    failed: Option<String>,
+    deadline: Instant,
+    /// vpid → gang rank map captured (and validated) at round start; empty
+    /// for non-gang rounds.
+    rank_map: BTreeMap<u64, u32>,
+    /// Command connection awaiting a `CkptComplete` reply, if the round
+    /// was started by a `dmtcp_command` client rather than a handle.
+    reply_conn: Option<u64>,
+    /// Whether a handle thread is blocked on this round's result.
+    waited: bool,
+}
+
+/// One entry of the routing table.
+struct JobState {
+    ckpt_dir: PathBuf,
+    phase_timeout: Duration,
+    clients: HashMap<u64, ClientMeta>,
+    pid_table: PidTable,
+    round: Option<Round>,
+    /// Completed-round result parked for the waiting handle thread.
+    round_result: Option<Result<(Vec<ImageInfo>, BTreeMap<u64, u32>)>>,
+    next_ckpt_id: u64,
+    last_ckpt_id: u64,
+    images_written: u64,
+    total_stored_bytes: u64,
+    total_raw_bytes: u64,
+    total_chunks_written: u64,
+    total_chunks_deduped: u64,
+}
+
+impl JobState {
+    fn new(spec: &JobSpec) -> Self {
+        Self {
+            ckpt_dir: spec.ckpt_dir.clone(),
+            phase_timeout: spec.phase_timeout,
+            clients: HashMap::new(),
+            pid_table: PidTable::new(),
+            round: None,
+            round_result: None,
+            next_ckpt_id: 1,
+            last_ckpt_id: 0,
+            images_written: 0,
+            total_stored_bytes: 0,
+            total_raw_bytes: 0,
+            total_chunks_written: 0,
+            total_chunks_deduped: 0,
+        }
+    }
+}
+
+/// One nonblocking connection owned by the loop.
+struct Conn {
+    stream: TcpStream,
+    /// Unparsed inbound bytes (grown by reads, drained by frame parsing).
+    rdbuf: Vec<u8>,
+    /// Outbound frames (each already length-prefixed), drained nonblocking.
+    wq: VecDeque<Vec<u8>>,
+    /// Bytes of `wq.front()` already written.
+    wq_front_off: usize,
+    wq_bytes: usize,
+    /// Routed job (set by the `Hello` handshake).
+    job: Option<String>,
+    /// Assigned virtual pid (set by the `Hello` handshake).
+    vpid: Option<u64>,
+    /// Flush the write queue, then close (error replies, kills).
+    close_after_flush: bool,
+    dead: bool,
+}
+
+struct DaemonState {
+    jobs: HashMap<String, JobState>,
+    conns: HashMap<u64, Conn>,
+    next_conn_id: u64,
+    jobs_registered_total: u64,
+}
+
+struct Shared {
+    state: Mutex<DaemonState>,
+    cv: Condvar,
+    epoch: u64,
+    shutdown: AtomicBool,
+    config: DaemonConfig,
+}
+
+/// The multi-tenant coordinator daemon. One loop thread, one port, any
+/// number of jobs. Cheap to share: handles hold an `Arc`.
+pub struct CoordinatorDaemon {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    loop_join: Mutex<Option<std::thread::JoinHandle<()>>>,
+    io_threads: AtomicUsize,
+}
+
+impl CoordinatorDaemon {
+    /// Boot the daemon: bind (with the same ephemeral-port fallback the
+    /// per-session coordinator always had) and start the readiness loop.
+    pub fn start(config: DaemonConfig) -> Result<Arc<Self>> {
+        let listener = match TcpListener::bind(&config.bind) {
+            Ok(l) => l,
+            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse && config.retry_ephemeral => {
+                let host = config
+                    .bind
+                    .rsplit_once(':')
+                    .map(|(h, _)| h)
+                    .unwrap_or("127.0.0.1");
+                log::warn!(
+                    "daemon bind {} in use; retrying on an ephemeral port",
+                    config.bind
+                );
+                TcpListener::bind(format!("{host}:0"))?
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let shared = Arc::new(Shared {
+            state: Mutex::new(DaemonState {
+                jobs: HashMap::new(),
+                conns: HashMap::new(),
+                next_conn_id: 1,
+                jobs_registered_total: 0,
+            }),
+            cv: Condvar::new(),
+            epoch: 1,
+            shutdown: AtomicBool::new(false),
+            config,
+        });
+
+        let loop_shared = Arc::clone(&shared);
+        let loop_join = std::thread::Builder::new()
+            .name("dmtcp-daemon-loop".into())
+            .spawn(move || event_loop(loop_shared, listener))
+            .expect("spawn daemon loop thread");
+
+        let daemon = Arc::new(Self {
+            shared,
+            addr,
+            loop_join: Mutex::new(Some(loop_join)),
+            io_threads: AtomicUsize::new(1),
+        });
+        Ok(daemon)
+    }
+
+    /// The single socket address every job's clients connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Register a job in the routing table (its ckpt dir is created).
+    /// Duplicate keys are rejected: two live jobs must never share a
+    /// routing-table entry.
+    pub fn register_job(&self, spec: &JobSpec) -> Result<()> {
+        std::fs::create_dir_all(&spec.ckpt_dir)?;
+        let mut st = self.shared.state.lock().unwrap();
+        if st.jobs.contains_key(&spec.job) {
+            return Err(Error::Protocol(format!(
+                "job {:?} already registered on this daemon",
+                spec.job
+            )));
+        }
+        st.jobs.insert(spec.job.clone(), JobState::new(spec));
+        st.jobs_registered_total += 1;
+        self.shared.cv.notify_all();
+        Ok(())
+    }
+
+    /// Tear one job out of the routing table: fail its in-flight round,
+    /// disconnect its clients, drop its state. Other jobs are untouched.
+    pub fn close_job(&self, job: &str) {
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(mut j) = st.jobs.remove(job) {
+            if let Some(round) = j.round.take() {
+                if round.waited {
+                    j.round_result = Some(Err(Error::Protocol(format!(
+                        "job {job:?} closed during round {}",
+                        round.ckpt_id
+                    ))));
+                }
+            }
+            for (_, c) in j.clients.drain() {
+                if let Some(conn) = st.conns.get_mut(&c.conn) {
+                    conn.dead = true;
+                }
+            }
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// Broadcast `Kill` to every client of `job` and wait (bounded) until
+    /// the frames have been flushed and the connections reaped, so callers
+    /// that join their worker processes right after cannot race the
+    /// delivery of the kill.
+    pub fn kill_job(&self, job: &str) {
+        let mut st = self.shared.state.lock().unwrap();
+        let conn_ids: Vec<u64> = match st.jobs.get(job) {
+            Some(j) => j.clients.values().map(|c| c.conn).collect(),
+            None => return,
+        };
+        for cid in &conn_ids {
+            if let Some(conn) = st.conns.get_mut(cid) {
+                enqueue_frame(conn, &FromCoordinator::Kill);
+                conn.close_after_flush = true;
+            }
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while conn_ids.iter().any(|cid| st.conns.contains_key(cid)) {
+            if Instant::now() >= deadline || self.shutdown_flag() {
+                break;
+            }
+            let (g, _) = self
+                .shared
+                .cv
+                .wait_timeout(st, Duration::from_millis(20))
+                .unwrap();
+            st = g;
+        }
+    }
+
+    /// Drive one five-phase barrier for `job`. With `expected_ranks` the
+    /// round is an all-or-nothing gang round: ranks are validated at round
+    /// start and the returned map carries vpid → rank. The calling thread
+    /// blocks; the loop thread advances the phases.
+    pub fn checkpoint_job(
+        &self,
+        job: &str,
+        expected_ranks: Option<u32>,
+    ) -> Result<(Vec<ImageInfo>, BTreeMap<u64, u32>)> {
+        let mut st = self.shared.state.lock().unwrap();
+        let now = Instant::now();
+        let phase_timeout = st
+            .jobs
+            .get(job)
+            .map(|j| j.phase_timeout)
+            .unwrap_or(Duration::from_secs(30));
+        start_round(&mut st, job, expected_ranks, None, true, now)?;
+        let guard = now + phase_timeout * (Phase::ALL.len() as u32) + ROUND_GUARD_SLACK;
+        loop {
+            match st.jobs.get_mut(job) {
+                None => {
+                    return Err(Error::Protocol(format!(
+                        "job {job:?} closed during checkpoint"
+                    )))
+                }
+                Some(j) => {
+                    if let Some(result) = j.round_result.take() {
+                        return result;
+                    }
+                }
+            }
+            if self.shutdown_flag() {
+                return Err(Error::Protocol("daemon shut down mid-round".into()));
+            }
+            if Instant::now() >= guard {
+                // The loop enforces per-phase deadlines itself; reaching
+                // this guard means the loop is gone. Unwedge the job.
+                if let Some(j) = st.jobs.get_mut(job) {
+                    j.round = None;
+                }
+                return Err(Error::Protocol("coordinator daemon unresponsive".into()));
+            }
+            let (g, _) = self
+                .shared
+                .cv
+                .wait_timeout(st, Duration::from_millis(50))
+                .unwrap();
+            st = g;
+        }
+    }
+
+    /// Ensure `job`'s future round ids start at or above `min`.
+    pub fn bump_ckpt_id(&self, job: &str, min: u64) {
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(j) = st.jobs.get_mut(job) {
+            j.next_ckpt_id = j.next_ckpt_id.max(min);
+        }
+    }
+
+    /// Block until `job` has `n` attached clients.
+    pub fn wait_for_clients(&self, job: &str, n: usize, timeout: Duration) -> Result<()> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            let have = st.jobs.get(job).map(|j| j.clients.len()).unwrap_or(0);
+            if have >= n {
+                return Ok(());
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(Error::Protocol(format!(
+                    "timeout waiting for {n} clients (have {have})"
+                )));
+            }
+            let (g, _) = self
+                .shared
+                .cv
+                .wait_timeout(st, left.min(Duration::from_millis(50)))
+                .unwrap();
+            st = g;
+        }
+    }
+
+    /// Attached client count of one job (0 for unknown jobs).
+    pub fn num_clients(&self, job: &str) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        st.jobs.get(job).map(|j| j.clients.len()).unwrap_or(0)
+    }
+
+    /// `(clients, last completed checkpoint id, epoch)` of one job.
+    pub fn job_status(&self, job: &str) -> (usize, u64, u64) {
+        let st = self.shared.state.lock().unwrap();
+        match st.jobs.get(job) {
+            Some(j) => (j.clients.len(), j.last_ckpt_id, self.shared.epoch),
+            None => (0, 0, self.shared.epoch),
+        }
+    }
+
+    /// Lifetime `(images_written, stored_bytes)` of one job.
+    pub fn job_totals(&self, job: &str) -> (u64, u64) {
+        let st = self.shared.state.lock().unwrap();
+        match st.jobs.get(job) {
+            Some(j) => (j.images_written, j.total_stored_bytes),
+            None => (0, 0),
+        }
+    }
+
+    /// Lifetime store accounting of one job.
+    pub fn job_store_totals(&self, job: &str) -> super::coordinator::StoreTotals {
+        let st = self.shared.state.lock().unwrap();
+        match st.jobs.get(job) {
+            Some(j) => super::coordinator::StoreTotals {
+                images_written: j.images_written,
+                stored_bytes: j.total_stored_bytes,
+                logical_bytes: j.total_raw_bytes,
+                chunks_written: j.total_chunks_written,
+                chunks_deduped: j.total_chunks_deduped,
+            },
+            None => super::coordinator::StoreTotals::default(),
+        }
+    }
+
+    /// Client metadata snapshot of one job (vpid → name, real pid,
+    /// threads).
+    pub fn job_client_table(&self, job: &str) -> BTreeMap<u64, (String, u64, u32)> {
+        let st = self.shared.state.lock().unwrap();
+        match st.jobs.get(job) {
+            Some(j) => j
+                .clients
+                .iter()
+                .map(|(&v, c)| (v, (c.name.clone(), c.real_pid, c.n_threads)))
+                .collect(),
+            None => BTreeMap::new(),
+        }
+    }
+
+    /// Currently registered jobs.
+    pub fn num_jobs(&self) -> usize {
+        self.shared.state.lock().unwrap().jobs.len()
+    }
+
+    /// Currently open connections (clients + command clients).
+    pub fn num_connections(&self) -> usize {
+        self.shared.state.lock().unwrap().conns.len()
+    }
+
+    /// Jobs ever registered (restart incarnations each count once).
+    pub fn jobs_registered_total(&self) -> u64 {
+        self.shared.state.lock().unwrap().jobs_registered_total
+    }
+
+    /// I/O threads this daemon runs — the O(1) the mux bench asserts while
+    /// session count scales. Always 1: the readiness loop owns every
+    /// socket.
+    pub fn io_threads(&self) -> usize {
+        self.io_threads.load(Ordering::Relaxed)
+    }
+
+    /// True once shutdown was requested (e.g. a `CommandQuit` arrived).
+    pub fn shutdown_flag(&self) -> bool {
+        self.shared.shutdown.load(Ordering::Relaxed)
+    }
+
+    /// Stop the loop and drop every connection and job.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.cv.notify_all();
+        if let Some(j) = self.loop_join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+        let mut st = self.shared.state.lock().unwrap();
+        st.conns.clear();
+        st.jobs.clear();
+    }
+}
+
+impl Drop for CoordinatorDaemon {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---- the readiness loop ----------------------------------------------------
+
+fn event_loop(shared: Arc<Shared>, listener: TcpListener) {
+    while !shared.shutdown.load(Ordering::Relaxed) {
+        let progress = {
+            let mut st = shared.state.lock().unwrap();
+            let mut progress = false;
+            progress |= accept_new(&mut st, &listener);
+            progress |= pump_connections(&mut st, &shared);
+            progress |= reap_dead(&mut st);
+            progress |= advance_rounds(&mut st, Instant::now());
+            progress |= flush_writes(&mut st);
+            progress |= reap_dead(&mut st);
+            if progress {
+                shared.cv.notify_all();
+            }
+            progress
+        };
+        if progress {
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    // Last chance for queued frames (kills) to reach their sockets.
+    let mut st = shared.state.lock().unwrap();
+    flush_writes(&mut st);
+    shared.cv.notify_all();
+}
+
+fn accept_new(st: &mut DaemonState, listener: &TcpListener) -> bool {
+    let mut progress = false;
+    loop {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                stream.set_nodelay(true).ok();
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let cid = st.next_conn_id;
+                st.next_conn_id += 1;
+                st.conns.insert(
+                    cid,
+                    Conn {
+                        stream,
+                        rdbuf: Vec::new(),
+                        wq: VecDeque::new(),
+                        wq_front_off: 0,
+                        wq_bytes: 0,
+                        job: None,
+                        vpid: None,
+                        close_after_flush: false,
+                        dead: false,
+                    },
+                );
+                progress = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(_) => break,
+        }
+    }
+    progress
+}
+
+/// Queue one message on a connection. Overflow marks the connection dead —
+/// the bounded-queue backpressure semantic — and returns `false`.
+fn enqueue_frame(conn: &mut Conn, msg: &FromCoordinator) -> bool {
+    if conn.dead {
+        return false;
+    }
+    let body = encode_from_coordinator(msg);
+    let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+    frame.extend_from_slice(&body);
+    if conn.wq.len() >= WQ_MAX_FRAMES || conn.wq_bytes + frame.len() > WQ_MAX_BYTES {
+        log::warn!(
+            "write queue overflow ({} frames, {} bytes): disconnecting stalled client",
+            conn.wq.len(),
+            conn.wq_bytes
+        );
+        conn.dead = true;
+        return false;
+    }
+    conn.wq_bytes += frame.len();
+    conn.wq.push_back(frame);
+    true
+}
+
+/// Drain one connection's write queue as far as the socket accepts.
+fn drain_writes(conn: &mut Conn) -> bool {
+    let mut progress = false;
+    while let Some(front) = conn.wq.front() {
+        match conn.stream.write(&front[conn.wq_front_off..]) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => {
+                progress = true;
+                conn.wq_front_off += n;
+                if conn.wq_front_off >= front.len() {
+                    conn.wq_bytes -= front.len();
+                    conn.wq_front_off = 0;
+                    conn.wq.pop_front();
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    if conn.close_after_flush && conn.wq.is_empty() {
+        conn.dead = true;
+    }
+    progress
+}
+
+fn flush_writes(st: &mut DaemonState) -> bool {
+    let mut progress = false;
+    for conn in st.conns.values_mut() {
+        progress |= drain_writes(conn);
+    }
+    progress
+}
+
+/// Per-connection I/O and dispatch: drain writes, read what's available,
+/// parse complete frames, route each message.
+fn pump_connections(st: &mut DaemonState, shared: &Shared) -> bool {
+    let mut progress = false;
+    let cids: Vec<u64> = st.conns.keys().copied().collect();
+    for cid in cids {
+        let msgs = {
+            let Some(conn) = st.conns.get_mut(&cid) else {
+                continue;
+            };
+            if conn.dead {
+                continue;
+            }
+            progress |= drain_writes(conn);
+            progress |= read_available(conn);
+            parse_frames(conn)
+        };
+        for msg in msgs {
+            progress = true;
+            match msg {
+                Ok(m) => dispatch(st, shared, cid, m),
+                Err(e) => {
+                    // Malformed frame: typed error reply, then close. The
+                    // decoder rejected it — nothing was routed anywhere.
+                    if let Some(conn) = st.conns.get_mut(&cid) {
+                        enqueue_frame(
+                            conn,
+                            &FromCoordinator::Error {
+                                message: e.to_string(),
+                            },
+                        );
+                        conn.close_after_flush = true;
+                    }
+                }
+            }
+        }
+    }
+    progress
+}
+
+fn read_available(conn: &mut Conn) -> bool {
+    let mut progress = false;
+    let mut buf = [0u8; 8192];
+    loop {
+        match conn.stream.read(&mut buf) {
+            Ok(0) => {
+                conn.dead = true;
+                break;
+            }
+            Ok(n) => {
+                progress = true;
+                conn.rdbuf.extend_from_slice(&buf[..n]);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.dead = true;
+                break;
+            }
+        }
+    }
+    progress
+}
+
+/// Split complete frames out of the read buffer and decode them. Stops at
+/// the first malformed frame (oversized length prefix or decode error):
+/// everything after it on the stream is untrusted.
+fn parse_frames(conn: &mut Conn) -> Vec<Result<ToCoordinator>> {
+    let mut out = Vec::new();
+    let mut consumed = 0usize;
+    loop {
+        let buf = &conn.rdbuf[consumed..];
+        if buf.len() < 4 {
+            break;
+        }
+        let len = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+        if len > MAX_FRAME {
+            out.push(Err(Error::Protocol(format!("frame too large: {len}"))));
+            consumed = conn.rdbuf.len();
+            break;
+        }
+        let total = 4 + len as usize;
+        if buf.len() < total {
+            break;
+        }
+        let decoded = decode_to_coordinator(&buf[4..total]);
+        consumed += total;
+        let bad = decoded.is_err();
+        out.push(decoded);
+        if bad {
+            consumed = conn.rdbuf.len();
+            break;
+        }
+    }
+    conn.rdbuf.drain(..consumed);
+    out
+}
+
+/// Route one decoded message. Routing is connection-scoped: a connection
+/// belongs to at most one job (bound by its `Hello`), so no frame can ever
+/// act on another job's state machine.
+fn dispatch(st: &mut DaemonState, shared: &Shared, cid: u64, msg: ToCoordinator) {
+    match msg {
+        ToCoordinator::Hello {
+            real_pid,
+            name,
+            n_threads,
+            restored_vpid,
+            rank,
+            job,
+        } => handle_hello(st, shared, cid, real_pid, name, n_threads, restored_vpid, rank, job),
+        ToCoordinator::PhaseAck {
+            vpid,
+            ckpt_id,
+            phase,
+        } => with_conn_job(st, cid, |j| {
+            if let Some(round) = j.round.as_mut() {
+                if round.ckpt_id == ckpt_id && round.phase == phase {
+                    round.pending.remove(&vpid);
+                } else {
+                    log::warn!(
+                        "stale ack from vpid {vpid}: round {ckpt_id}/{phase:?} vs {}/{:?}",
+                        round.ckpt_id,
+                        round.phase
+                    );
+                }
+            }
+        }),
+        ToCoordinator::CkptDone {
+            vpid,
+            ckpt_id,
+            path,
+            stored_bytes,
+            raw_bytes,
+            write_secs,
+            chunks_written,
+            chunks_deduped,
+        } => with_conn_job(st, cid, |j| {
+            if let Some(round) = j.round.as_mut() {
+                if round.ckpt_id == ckpt_id {
+                    round.images.push(ImageInfo {
+                        vpid,
+                        ckpt_id,
+                        path: PathBuf::from(path),
+                        stored_bytes,
+                        raw_bytes,
+                        write_secs,
+                        chunks_written,
+                        chunks_deduped,
+                    });
+                }
+            }
+        }),
+        ToCoordinator::Goodbye { vpid } => {
+            let job = st.conns.get(&cid).and_then(|c| c.job.clone());
+            if let Some(job_key) = job {
+                detach_client(st, &job_key, vpid, "left");
+            }
+            if let Some(conn) = st.conns.get_mut(&cid) {
+                conn.dead = true;
+            }
+        }
+        ToCoordinator::CommandCheckpoint => {
+            // Command connections carry no handshake, so the request is
+            // only routable when the daemon hosts exactly one job.
+            let reply_err = match sole_job(st) {
+                Ok(job_key) => {
+                    match start_round(st, &job_key, None, Some(cid), false, Instant::now()) {
+                        Ok(()) => None, // CkptComplete is sent at round end
+                        Err(e) => Some(e.to_string()),
+                    }
+                }
+                Err(e) => Some(e.to_string()),
+            };
+            if let (Some(message), Some(conn)) = (reply_err, st.conns.get_mut(&cid)) {
+                enqueue_frame(conn, &FromCoordinator::Error { message });
+            }
+        }
+        ToCoordinator::CommandStatus => {
+            let clients: usize = st.jobs.values().map(|j| j.clients.len()).sum();
+            let last = st.jobs.values().map(|j| j.last_ckpt_id).max().unwrap_or(0);
+            let reply = FromCoordinator::Status {
+                clients: clients as u32,
+                last_ckpt_id: last,
+                epoch: shared.epoch,
+            };
+            if let Some(conn) = st.conns.get_mut(&cid) {
+                enqueue_frame(conn, &reply);
+            }
+        }
+        ToCoordinator::CommandQuit => {
+            let client_conns: Vec<u64> = st
+                .jobs
+                .values()
+                .flat_map(|j| j.clients.values().map(|c| c.conn))
+                .collect();
+            for ccid in client_conns {
+                if let Some(conn) = st.conns.get_mut(&ccid) {
+                    enqueue_frame(conn, &FromCoordinator::Kill);
+                    conn.close_after_flush = true;
+                }
+            }
+            if let Some(conn) = st.conns.get_mut(&cid) {
+                conn.close_after_flush = true;
+            }
+            shared.shutdown.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Run `f` on the job the connection was routed into. Un-routed
+/// connections sending job-scoped frames get a typed error and are
+/// dropped — never a panic, never delivery into an arbitrary job.
+fn with_conn_job(st: &mut DaemonState, cid: u64, f: impl FnOnce(&mut JobState)) {
+    let job = st.conns.get(&cid).and_then(|c| c.job.clone());
+    match job.and_then(|k| st.jobs.remove_entry(&k)) {
+        Some((key, mut j)) => {
+            f(&mut j);
+            st.jobs.insert(key, j);
+        }
+        None => {
+            if let Some(conn) = st.conns.get_mut(&cid) {
+                enqueue_frame(
+                    conn,
+                    &FromCoordinator::Error {
+                        message: "job-scoped frame on a connection with no Hello handshake".into(),
+                    },
+                );
+                conn.close_after_flush = true;
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn handle_hello(
+    st: &mut DaemonState,
+    shared: &Shared,
+    cid: u64,
+    real_pid: u64,
+    name: String,
+    n_threads: u32,
+    restored_vpid: Option<u64>,
+    rank: Option<u32>,
+    job: Option<String>,
+) {
+    let reject = |st: &mut DaemonState, cid: u64, message: String| {
+        if let Some(conn) = st.conns.get_mut(&cid) {
+            enqueue_frame(conn, &FromCoordinator::Error { message });
+            conn.close_after_flush = true;
+        }
+    };
+    let job_key = match job {
+        Some(j) => {
+            if !st.jobs.contains_key(&j) {
+                if shared.config.auto_register_jobs {
+                    let spec = JobSpec {
+                        job: j.clone(),
+                        ckpt_dir: shared.config.auto_ckpt_dir.join(&j),
+                        phase_timeout: shared.config.auto_phase_timeout,
+                    };
+                    if let Err(e) = std::fs::create_dir_all(&spec.ckpt_dir) {
+                        reject(st, cid, format!("auto-register job {j:?}: {e}"));
+                        return;
+                    }
+                    st.jobs.insert(j.clone(), JobState::new(&spec));
+                    st.jobs_registered_total += 1;
+                } else {
+                    // The router drops the handshake with a typed error;
+                    // the frame is never delivered into another job.
+                    reject(
+                        st,
+                        cid,
+                        format!("unknown job {j:?}: Hello from {name:?} dropped"),
+                    );
+                    return;
+                }
+            }
+            j
+        }
+        None => {
+            // Back-compat single-tenant routing: an untagged Hello is only
+            // unambiguous when exactly one job is registered.
+            let mut keys = st.jobs.keys();
+            match (keys.next().cloned(), keys.next()) {
+                (Some(k), None) => k,
+                (first, _) => {
+                    reject(
+                        st,
+                        cid,
+                        format!(
+                            "Hello without a job tag needs exactly one registered job (have {})",
+                            if first.is_none() { 0 } else { st.jobs.len() }
+                        ),
+                    );
+                    return;
+                }
+            }
+        }
+    };
+
+    let j = st.jobs.get_mut(&job_key).expect("job just resolved");
+    let assigned = match restored_vpid {
+        Some(v) => j.pid_table.adopt(v, real_pid).map(|()| v),
+        None => j.pid_table.register(real_pid),
+    };
+    let assigned = match assigned {
+        Ok(v) => v,
+        Err(e) => {
+            // Parity with the blocking coordinator: pid-table conflicts
+            // reply with an error but keep the connection open.
+            if let Some(conn) = st.conns.get_mut(&cid) {
+                enqueue_frame(
+                    conn,
+                    &FromCoordinator::Error {
+                        message: e.to_string(),
+                    },
+                );
+            }
+            return;
+        }
+    };
+    j.clients.insert(
+        assigned,
+        ClientMeta {
+            conn: cid,
+            name: name.clone(),
+            real_pid,
+            n_threads,
+            rank,
+        },
+    );
+    if let Some(conn) = st.conns.get_mut(&cid) {
+        conn.job = Some(job_key.clone());
+        conn.vpid = Some(assigned);
+        enqueue_frame(
+            conn,
+            &FromCoordinator::Welcome {
+                vpid: assigned,
+                epoch: shared.epoch,
+            },
+        );
+    }
+    log::debug!("client {name} attached to job {job_key:?} as vpid {assigned} (pid {real_pid})");
+}
+
+/// Remove a client from its job; a mid-round departure fails the round.
+fn detach_client(st: &mut DaemonState, job_key: &str, vpid: u64, why: &str) {
+    if let Some(j) = st.jobs.get_mut(job_key) {
+        if j.clients.remove(&vpid).is_some() {
+            let _ = j.pid_table.unregister(vpid);
+            log::debug!("client vpid {vpid} {why} job {job_key:?}");
+        }
+        if let Some(round) = j.round.as_mut() {
+            if round.pending.remove(&vpid) {
+                round.failed = Some(format!(
+                    "client vpid {vpid} {why} during {:?} of round {}",
+                    round.phase, round.ckpt_id
+                ));
+            }
+        }
+    }
+}
+
+/// Remove dead connections and detach their clients.
+fn reap_dead(st: &mut DaemonState) -> bool {
+    let dead: Vec<u64> = st
+        .conns
+        .iter()
+        .filter(|(_, c)| c.dead)
+        .map(|(&cid, _)| cid)
+        .collect();
+    for cid in &dead {
+        if let Some(conn) = st.conns.remove(cid) {
+            if let (Some(job), Some(vpid)) = (conn.job, conn.vpid) {
+                detach_client(st, &job, vpid, "disconnected");
+            }
+        }
+    }
+    !dead.is_empty()
+}
+
+/// The sole registered job, or a typed routing error.
+fn sole_job(st: &DaemonState) -> Result<String> {
+    let mut keys = st.jobs.keys();
+    match (keys.next(), keys.next()) {
+        (Some(k), None) => Ok(k.clone()),
+        _ => Err(Error::Protocol(format!(
+            "command needs exactly one registered job (have {})",
+            st.jobs.len()
+        ))),
+    }
+}
+
+/// Validate and create a round for `job`, broadcasting `Suspend`.
+fn start_round(
+    st: &mut DaemonState,
+    job_key: &str,
+    expected_ranks: Option<u32>,
+    reply_conn: Option<u64>,
+    waited: bool,
+    now: Instant,
+) -> Result<()> {
+    let j = st
+        .jobs
+        .get_mut(job_key)
+        .ok_or_else(|| Error::Protocol(format!("unknown job {job_key:?}")))?;
+    if j.round.is_some() || j.round_result.is_some() {
+        return Err(Error::Protocol("checkpoint already in progress".into()));
+    }
+    if j.clients.is_empty() {
+        return Err(Error::Protocol("no clients attached".into()));
+    }
+    let rank_map = match expected_ranks {
+        None => BTreeMap::new(),
+        Some(n) => {
+            let mut by_vpid = BTreeMap::new();
+            let mut seen = HashSet::new();
+            for (&vpid, c) in &j.clients {
+                let r = c.rank.ok_or_else(|| {
+                    Error::Protocol(format!(
+                        "gang checkpoint: client {:?} (vpid {vpid}) advertised no rank",
+                        c.name
+                    ))
+                })?;
+                if !seen.insert(r) {
+                    return Err(Error::Protocol(format!(
+                        "gang checkpoint: rank {r} attached twice"
+                    )));
+                }
+                by_vpid.insert(vpid, r);
+            }
+            if by_vpid.len() != n as usize || (0..n).any(|r| !seen.contains(&r)) {
+                return Err(Error::Protocol(format!(
+                    "gang checkpoint: expected ranks 0..{n}, have {} clients",
+                    by_vpid.len()
+                )));
+            }
+            by_vpid
+        }
+    };
+    let ckpt_id = j.next_ckpt_id;
+    j.next_ckpt_id += 1;
+    let deadline = now + j.phase_timeout;
+    j.round = Some(Round {
+        ckpt_id,
+        phase: Phase::Suspend,
+        pending: HashSet::new(),
+        images: Vec::new(),
+        failed: None,
+        deadline,
+        rank_map,
+        reply_conn,
+        waited,
+    });
+    broadcast_phase(st, job_key, ckpt_id, Phase::Suspend);
+    Ok(())
+}
+
+/// Broadcast one phase to every client of `job`, resetting the pending
+/// set and the phase deadline. An unreachable client fails the round.
+fn broadcast_phase(st: &mut DaemonState, job_key: &str, ckpt_id: u64, phase: Phase) {
+    let Some((key, mut j)) = st.jobs.remove_entry(job_key) else {
+        return;
+    };
+    let dir = j.ckpt_dir.to_string_lossy().to_string();
+    let targets: Vec<(u64, u64)> = j.clients.iter().map(|(&v, c)| (v, c.conn)).collect();
+    if let Some(round) = j.round.as_mut() {
+        round.phase = phase;
+        round.deadline = Instant::now() + j.phase_timeout;
+        round.pending = targets.iter().map(|(v, _)| *v).collect();
+        if targets.is_empty() {
+            round.failed = Some(format!("all clients vanished before {phase:?}"));
+        }
+        for (vpid, cid) in targets {
+            let ok = match st.conns.get_mut(&cid) {
+                Some(conn) => enqueue_frame(
+                    conn,
+                    &FromCoordinator::Phase {
+                        ckpt_id,
+                        phase,
+                        dir: dir.clone(),
+                    },
+                ),
+                None => false,
+            };
+            if !ok {
+                log::warn!("phase {phase:?}: client {vpid} unreachable");
+                round.pending.remove(&vpid);
+                round.failed = Some(format!(
+                    "client vpid {vpid} unreachable during {phase:?} of round {ckpt_id}"
+                ));
+            }
+        }
+    }
+    st.jobs.insert(key, j);
+}
+
+/// Advance every job's round independently: complete finished phases,
+/// fail rounds whose clients vanished, disconnect clients that blew a
+/// phase deadline. One job's stall never touches another's round.
+fn advance_rounds(st: &mut DaemonState, now: Instant) -> bool {
+    let mut progress = false;
+    let job_keys: Vec<String> = st
+        .jobs
+        .iter()
+        .filter(|(_, j)| j.round.is_some())
+        .map(|(k, _)| k.clone())
+        .collect();
+    for key in job_keys {
+        enum Action {
+            Fail(String),
+            NextPhase(u64, Phase),
+            Complete,
+            TimedOut(Vec<u64>),
+            Wait,
+        }
+        let action = {
+            let Some(j) = st.jobs.get(&key) else { continue };
+            let Some(round) = j.round.as_ref() else {
+                continue;
+            };
+            if let Some(why) = &round.failed {
+                Action::Fail(why.clone())
+            } else if round.pending.is_empty() {
+                if round.phase == Phase::Resume {
+                    Action::Complete
+                } else {
+                    let next = Phase::ALL[round.phase as usize + 1];
+                    Action::NextPhase(round.ckpt_id, next)
+                }
+            } else if now >= round.deadline {
+                // Stalled clients: everyone still pending is disconnected
+                // and only this job's round fails.
+                let stalled: Vec<u64> = round.pending.iter().copied().collect();
+                Action::TimedOut(stalled)
+            } else {
+                Action::Wait
+            }
+        };
+        match action {
+            Action::Wait => {}
+            Action::NextPhase(ckpt_id, next) => {
+                broadcast_phase(st, &key, ckpt_id, next);
+                progress = true;
+            }
+            Action::Complete => {
+                let Some(j) = st.jobs.get_mut(&key) else {
+                    continue;
+                };
+                let round = j.round.take().expect("round checked above");
+                j.last_ckpt_id = round.ckpt_id;
+                j.images_written += round.images.len() as u64;
+                j.total_stored_bytes += round.images.iter().map(|i| i.stored_bytes).sum::<u64>();
+                j.total_raw_bytes += round.images.iter().map(|i| i.raw_bytes).sum::<u64>();
+                j.total_chunks_written +=
+                    round.images.iter().map(|i| i.chunks_written).sum::<u64>();
+                j.total_chunks_deduped +=
+                    round.images.iter().map(|i| i.chunks_deduped).sum::<u64>();
+                let reply = FromCoordinator::CkptComplete {
+                    ckpt_id: round.ckpt_id,
+                    images: round.images.len() as u32,
+                    total_stored_bytes: round.images.iter().map(|i| i.stored_bytes).sum(),
+                };
+                if round.waited {
+                    j.round_result = Some(Ok((round.images, round.rank_map)));
+                }
+                if let Some(rc) = round.reply_conn {
+                    if let Some(conn) = st.conns.get_mut(&rc) {
+                        enqueue_frame(conn, &reply);
+                    }
+                }
+                progress = true;
+            }
+            Action::TimedOut(stalled) => {
+                let phase;
+                let ckpt_id;
+                {
+                    let Some(j) = st.jobs.get_mut(&key) else {
+                        continue;
+                    };
+                    let round = j.round.as_mut().expect("round checked above");
+                    phase = round.phase;
+                    ckpt_id = round.ckpt_id;
+                    round.failed = Some(format!(
+                        "phase {phase:?} timed out with {} clients pending (round {ckpt_id}); \
+                         stalled clients disconnected",
+                        stalled.len()
+                    ));
+                }
+                for vpid in stalled {
+                    let cid = st
+                        .jobs
+                        .get(&key)
+                        .and_then(|j| j.clients.get(&vpid))
+                        .map(|c| c.conn);
+                    if let Some(cid) = cid {
+                        if let Some(conn) = st.conns.get_mut(&cid) {
+                            conn.dead = true;
+                        }
+                    }
+                    detach_client(st, &key, vpid, "stalled (backpressure disconnect)");
+                }
+                progress = true;
+            }
+            Action::Fail(why) => {
+                let Some(j) = st.jobs.get_mut(&key) else {
+                    continue;
+                };
+                let round = j.round.take().expect("round checked above");
+                let ckpt_id = round.ckpt_id;
+                if round.waited {
+                    j.round_result = Some(Err(Error::Protocol(why.clone())));
+                }
+                let reply_conn = round.reply_conn;
+                // Abort: release survivors parked mid-barrier so a failed
+                // round costs nothing but the unpublished checkpoint.
+                let dir = j.ckpt_dir.to_string_lossy().to_string();
+                let survivors: Vec<u64> = j.clients.values().map(|c| c.conn).collect();
+                for cid in survivors {
+                    if let Some(conn) = st.conns.get_mut(&cid) {
+                        enqueue_frame(
+                            conn,
+                            &FromCoordinator::Phase {
+                                ckpt_id,
+                                phase: Phase::Resume,
+                                dir: dir.clone(),
+                            },
+                        );
+                    }
+                }
+                if let Some(rc) = reply_conn {
+                    if let Some(conn) = st.conns.get_mut(&rc) {
+                        enqueue_frame(conn, &FromCoordinator::Error { message: why });
+                    }
+                }
+                progress = true;
+            }
+        }
+    }
+    progress
+}

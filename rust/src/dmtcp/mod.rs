@@ -15,6 +15,7 @@
 pub mod ckpt_thread;
 pub mod command;
 pub mod coordinator;
+pub mod daemon;
 pub mod image;
 pub mod launch;
 pub mod mana;
@@ -27,12 +28,15 @@ pub mod virtualization;
 
 pub use command::{CkptResult, CoordStatus, DmtcpCommand};
 pub use coordinator::{Coordinator, CoordinatorConfig, StoreTotals};
+pub use daemon::{CoordinatorDaemon, DaemonConfig, JobSpec};
 pub use image::{CheckpointImage, FdEntry, ImageHeader, ImageInfo};
 pub use launch::{dmtcp_launch, LaunchSpec, LaunchedProcess};
 pub use mana::{ManaState, LIB_PREFIX};
 pub use plugin::{EnvPlugin, Event, Plugin, PluginCtx, PluginRegistry, TimerPlugin};
 pub use process::{Checkpointable, GateVerdict, SuspendGate, UserProcess, WorkerCtx};
-pub use restart::{dmtcp_restart, inspect_gang, inspect_image, RestartedProcess};
+pub use restart::{
+    dmtcp_restart, dmtcp_restart_with_env, inspect_gang, inspect_image, RestartedProcess,
+};
 pub use store::{
     latest_gang_manifest, ChunkId, ChunkRef, GangManifest, GangRankEntry, GcStats, ImageManifest,
     ImageStore, SegmentManifest, StoreOpts, StoreWriteStats, DEFAULT_CHUNK_SIZE,

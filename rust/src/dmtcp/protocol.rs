@@ -60,13 +60,17 @@ pub enum ToCoordinator {
     /// under its original virtual pid. `rank` identifies the process's
     /// position in a gang computation (`None` for independent processes);
     /// the coordinator uses it to assemble per-rank image sets into one
-    /// gang manifest.
+    /// gang manifest. `job` scopes the client to one job's state machine on
+    /// a multi-tenant coordinator daemon: a tagged Hello is routed to
+    /// exactly that job (unknown tags are rejected with a typed error), an
+    /// untagged Hello is only accepted when the daemon hosts a single job.
     Hello {
         real_pid: u64,
         name: String,
         n_threads: u32,
         restored_vpid: Option<u64>,
         rank: Option<u32>,
+        job: Option<String>,
     },
     /// Ack for one barrier phase of one checkpoint round.
     PhaseAck { vpid: u64, ckpt_id: u64, phase: Phase },
@@ -136,6 +140,7 @@ pub fn encode_to_coordinator(msg: &ToCoordinator) -> Vec<u8> {
             n_threads,
             restored_vpid,
             rank,
+            job,
         } => {
             b.put_u8(0);
             b.put_u64(*real_pid);
@@ -152,6 +157,13 @@ pub fn encode_to_coordinator(msg: &ToCoordinator) -> Vec<u8> {
                 Some(r) => {
                     b.put_u8(1);
                     b.put_u32(*r);
+                }
+                None => b.put_u8(0),
+            }
+            match job {
+                Some(j) => {
+                    b.put_u8(1);
+                    b.put_lp_str(j);
                 }
                 None => b.put_u8(0),
             }
@@ -221,6 +233,11 @@ pub fn decode_to_coordinator(buf: &[u8]) -> Result<ToCoordinator> {
             },
             rank: if get_opt_flag(&mut r, "rank")? {
                 Some(r.get_u32()?)
+            } else {
+                None
+            },
+            job: if get_opt_flag(&mut r, "job")? {
+                Some(r.get_lp_str()?)
             } else {
                 None
             },
@@ -403,6 +420,7 @@ mod tests {
                 n_threads: 4,
                 restored_vpid: None,
                 rank: None,
+                job: None,
             },
             ToCoordinator::Hello {
                 real_pid: 9,
@@ -410,6 +428,7 @@ mod tests {
                 n_threads: 1,
                 restored_vpid: Some(40_001),
                 rank: Some(3),
+                job: Some("cr-719g41i00".into()),
             },
             ToCoordinator::PhaseAck {
                 vpid: 40_001,
@@ -489,12 +508,17 @@ mod tests {
             n_threads: 1,
             restored_vpid: None,
             rank: None,
+            job: None,
         });
-        // A bit-flipped presence byte must be an error, not a silent None.
-        let mut bad_flag = good.clone();
-        let flag_at = bad_flag.len() - 2; // [.., restored_vpid flag, rank flag]
-        bad_flag[flag_at] = 7;
-        assert!(decode_to_coordinator(&bad_flag).is_err());
+        // A bit-flipped presence byte must be an error, not a silent None
+        // — for every optional field, including the job routing tag.
+        for back in 1..=3 {
+            // [.., restored_vpid flag, rank flag, job flag]
+            let mut bad_flag = good.clone();
+            let flag_at = bad_flag.len() - back;
+            bad_flag[flag_at] = 7;
+            assert!(decode_to_coordinator(&bad_flag).is_err(), "flag -{back}");
+        }
         // Trailing bytes beyond the message are rejected in both directions.
         let mut trailing = good;
         trailing.push(0);

@@ -7,6 +7,7 @@
 //! segments bit-for-bit, and replays plugin records (timer, env) so the
 //! runtime context matches the checkpointed one.
 
+use std::collections::BTreeMap;
 use std::net::SocketAddr;
 use std::path::Path;
 use std::sync::{Arc, Mutex};
@@ -36,7 +37,22 @@ pub fn dmtcp_restart<S: Checkpointable + 'static>(
     image_path: &Path,
     coordinator: SocketAddr,
     state: Arc<Mutex<S>>,
+    plugins: PluginRegistry,
+) -> Result<RestartedProcess> {
+    dmtcp_restart_with_env(image_path, coordinator, state, plugins, &BTreeMap::new())
+}
+
+/// [`dmtcp_restart`] with environment overrides applied on top of the
+/// image's environment. The session/gang layers use this to stamp the new
+/// incarnation's coordinator routing (`DMTCP_JOB`) into the restarted
+/// process: the image carries the *previous* incarnation's job id, which a
+/// multi-tenant daemon would rightly reject as unknown.
+pub fn dmtcp_restart_with_env<S: Checkpointable + 'static>(
+    image_path: &Path,
+    coordinator: SocketAddr,
+    state: Arc<Mutex<S>>,
     mut plugins: PluginRegistry,
+    env_overrides: &BTreeMap<String, String>,
 ) -> Result<RestartedProcess> {
     // Reads v1 full images and v2 incremental manifests alike; v2 segments
     // reassemble from the chunk store next to the image, with per-chunk
@@ -48,9 +64,15 @@ pub fn dmtcp_restart<S: Checkpointable + 'static>(
     // Rebuild process metadata from the image.
     let generation = header.generation + 1;
     let mut env = header.env.clone();
+    // The image's job tag scoped the *previous* incarnation; a restart may
+    // attach anywhere (a different coordinator, a shared daemon under a
+    // new job id), so the stale tag is dropped and the caller's overrides
+    // supply the current one when there is one.
+    env.remove("DMTCP_JOB");
     env.insert("DMTCP_RESTART".into(), "1".into());
     env.insert("DMTCP_COORD_HOST".into(), coordinator.ip().to_string());
     env.insert("DMTCP_COORD_PORT".into(), coordinator.port().to_string());
+    env.extend(env_overrides.iter().map(|(k, v)| (k.clone(), v.clone())));
     let fds = FdTable::restore(&header.fds);
 
     // PostRestart plugin barrier first (reverse registration order), with

@@ -196,6 +196,54 @@ fn ldms_rollup_covers_the_fleet() {
     std::fs::remove_dir_all(&wd).ok();
 }
 
+/// One multi-tenant coordinator daemon for the whole fleet (spec key
+/// `shared_coordinator = true`): every session multiplexes over a single
+/// port, and the run is indistinguishable from the per-session-daemon
+/// fleet — identical deterministic report rows, identical verification,
+/// and the same LDMS rollup coverage.
+#[test]
+fn shared_coordinator_fleet_matches_per_session_run() {
+    let run = |wd: &std::path::Path, shared: bool| {
+        let spec = CampaignSpec {
+            name: if shared { "mux-fleet" } else { "dedicated-fleet" }.into(),
+            sessions: 8,
+            concurrency: 4,
+            workload: WorkloadSpec::Cp2kScf { n: 10 },
+            target_steps: 300,
+            seed: 808,
+            workdir: Some(wd.to_path_buf()),
+            shared_coordinator: shared,
+            interval: IntervalPolicy::Fixed(Duration::from_millis(6)),
+            faults: FaultPlan::exponential(Duration::from_millis(25), 1),
+            ..Default::default()
+        };
+        run_campaign(&spec).unwrap()
+    };
+    let (wd_d, wd_s) = (workdir("coord_dedicated"), workdir("coord_shared"));
+    let dedicated = run(&wd_d, false);
+    let shared = run(&wd_s, true);
+    let summary = |r: &nersc_cr::campaign::CampaignReport| {
+        r.sessions
+            .iter()
+            .map(|s| (s.index, s.seed, s.disposition.clone(), s.verified, s.steps_done))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(summary(&dedicated), summary(&shared));
+    assert_eq!(shared.completed(), 8, "{}", shared.table().render());
+    assert_eq!(shared.verified(), 8);
+    // The kill/restart path was exercised *through the shared daemon*.
+    assert!(shared.kills() > 0, "no kill landed in the shared-daemon run");
+    // Store accounting and LDMS rollups flow identically through one
+    // daemon's routing table as through eight private daemons.
+    let (stored, logical, written, _) = shared.store_totals();
+    assert!(stored > 0 && logical > 0 && written > 0);
+    let (roll_d, roll_s) = (dedicated.ldms_rollup(), shared.ldms_rollup());
+    assert!(roll_s.samples > 0 && roll_s.peak_memory_bytes > 0.0);
+    assert!(roll_d.samples > 0);
+    std::fs::remove_dir_all(&wd_d).ok();
+    std::fs::remove_dir_all(&wd_s).ok();
+}
+
 /// Cancellation mid-flight: the pool drains promptly and reports every
 /// session (none lost, none left running).
 #[test]

@@ -1,0 +1,335 @@
+//! Multi-tenant coordinator soak suite (PR-6 tentpole): ONE event-driven
+//! daemon — one port, one I/O thread — multiplexing whole fleets.
+//!
+//! * 256 live sessions (with injected kills and bit-identical restores)
+//!   flow through a single shared daemon;
+//! * 8-rank gangs and single-process sessions mix on the same port;
+//! * 256 *concurrent* attached clients across 256 jobs hold the port open
+//!   simultaneously while barriers keep completing;
+//! * a stalled client blows only its own job's round — backpressure is
+//!   job-scoped, never daemon-wide.
+
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nersc_cr::cr::{CoordinatorHandle, CrSession, GangSession};
+use nersc_cr::dmtcp::protocol::{
+    recv_from_coordinator, send_to_coordinator, FromCoordinator, Phase, ToCoordinator,
+};
+use nersc_cr::dmtcp::{CoordinatorDaemon, DaemonConfig, JobSpec};
+use nersc_cr::workload::{Cp2kApp, StencilApp};
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ncr_mux_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+static NEXT_FAKE_PID: AtomicU64 = AtomicU64::new(90_000);
+
+/// Raw protocol client: connect, handshake into `job`, return stream + vpid.
+fn attach(addr: SocketAddr, job: &str, rank: Option<u32>) -> (TcpStream, u64) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    send_to_coordinator(
+        &mut s,
+        &ToCoordinator::Hello {
+            real_pid: NEXT_FAKE_PID.fetch_add(1, Ordering::Relaxed),
+            name: format!("raw-{job}"),
+            n_threads: 1,
+            restored_vpid: None,
+            rank,
+            job: Some(job.to_string()),
+        },
+    )
+    .unwrap();
+    match recv_from_coordinator(&mut s).unwrap() {
+        FromCoordinator::Welcome { vpid, .. } => (s, vpid),
+        other => panic!("expected Welcome, got {other:?}"),
+    }
+}
+
+/// Ack every phase of one barrier round (reporting one image at
+/// `Checkpoint`) on an attached raw client.
+fn ack_one_round(s: &mut TcpStream, vpid: u64) {
+    loop {
+        match recv_from_coordinator(s).unwrap() {
+            FromCoordinator::Phase { ckpt_id, phase, .. } => {
+                if phase == Phase::Checkpoint {
+                    send_to_coordinator(
+                        s,
+                        &ToCoordinator::CkptDone {
+                            vpid,
+                            ckpt_id,
+                            path: format!("raw-{vpid}.img"),
+                            stored_bytes: 32,
+                            raw_bytes: 32,
+                            write_secs: 0.0,
+                            chunks_written: 1,
+                            chunks_deduped: 0,
+                        },
+                    )
+                    .unwrap();
+                }
+                send_to_coordinator(s, &ToCoordinator::PhaseAck { vpid, ckpt_id, phase }).unwrap();
+                if phase == Phase::Resume {
+                    return;
+                }
+            }
+            FromCoordinator::Kill => return,
+            other => panic!("unexpected mid-round frame {other:?}"),
+        }
+    }
+}
+
+/// One live session through the shared daemon; `kill` injects a
+/// checkpoint + preemption + restart cycle before completion.
+fn drive_session(daemon: &Arc<CoordinatorDaemon>, wd: &Path, seed: u64, kill: bool) {
+    let app = Cp2kApp::new(8);
+    let mut session = CrSession::builder(&app)
+        .coordinator(CoordinatorHandle::Shared(Arc::clone(daemon)))
+        .workdir(wd)
+        .target_steps(150)
+        .seed(seed)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+    if kill {
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while session.monitor().unwrap().steps_done == 0 {
+            assert!(Instant::now() < deadline, "seed {seed}: no progress");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let images = session.checkpoint_now().unwrap();
+        assert!(!images.is_empty(), "seed {seed}: no image");
+        session.kill().unwrap();
+        let resumed = session.resubmit_from_checkpoint().unwrap();
+        assert!(resumed > 0, "seed {seed}: resumed at step 0");
+    }
+    let st = session.wait_done(Duration::from_secs(120)).unwrap();
+    assert!(st.done, "seed {seed}: never finished");
+    let fin = session.final_state().unwrap();
+    session
+        .verify_final(&fin)
+        .unwrap_or_else(|e| panic!("seed {seed} diverged after mux restore: {e}"));
+    session.finish();
+}
+
+/// The headline soak: 256 sessions — every 16th preempted and restored
+/// bit-identical — all multiplexed through ONE daemon on ONE port with
+/// O(1) I/O threads. Per-incarnation jobs registered and torn down
+/// through the routing table leave the daemon empty at the end.
+#[test]
+fn soak_256_sessions_through_one_daemon_with_kills() {
+    const SESSIONS: u64 = 256;
+    const POOL: usize = 16;
+    let daemon = CoordinatorDaemon::start(DaemonConfig::default()).unwrap();
+    let wd = workdir("soak");
+    let next = AtomicU64::new(0);
+    std::thread::scope(|sc| {
+        for _ in 0..POOL {
+            sc.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= SESSIONS {
+                    break;
+                }
+                drive_session(&daemon, &wd, 20_000 + i, i % 16 == 0);
+            });
+        }
+    });
+    // One port, one loop thread, the whole time.
+    assert_eq!(daemon.io_threads(), 1);
+    // Every session (and every restart incarnation) took its own
+    // routing-table entry on this one daemon.
+    assert!(
+        daemon.jobs_registered_total() >= SESSIONS,
+        "only {} jobs ever registered",
+        daemon.jobs_registered_total()
+    );
+    // Teardown was per-job: nothing left behind.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while daemon.num_jobs() > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(daemon.num_jobs(), 0, "jobs leaked in the routing table");
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// Gangs and single-process sessions mix on one daemon: two 8-rank gangs
+/// (each killed and gang-restarted once) and four singles, all attached
+/// to the same port, all bit-identical at the end.
+#[test]
+fn gangs_and_singles_mix_on_one_daemon() {
+    let daemon = CoordinatorDaemon::start(DaemonConfig::default()).unwrap();
+    let wd = workdir("mix");
+    std::thread::scope(|sc| {
+        for g in 0..2u64 {
+            let daemon = &daemon;
+            let wd = &wd;
+            sc.spawn(move || {
+                let app = StencilApp::new(8, 8);
+                let mut session = GangSession::builder(&app)
+                    .coordinator(CoordinatorHandle::Shared(Arc::clone(daemon)))
+                    .workdir(wd)
+                    .target_steps(300)
+                    .seed(7_000 + g)
+                    .build()
+                    .unwrap();
+                session.submit().unwrap();
+                let ck = {
+                    let mut last = None;
+                    let mut ok = None;
+                    for _ in 0..200 {
+                        match session.checkpoint_now() {
+                            Ok(c) => {
+                                ok = Some(c);
+                                break;
+                            }
+                            Err(e) => {
+                                last = Some(e);
+                                std::thread::sleep(Duration::from_millis(3));
+                            }
+                        }
+                    }
+                    ok.unwrap_or_else(|| panic!("gang {g}: checkpoint never succeeded: {last:?}"))
+                };
+                assert_eq!(ck.manifest.n_ranks(), 8);
+                session.kill().unwrap();
+                let resumed = session.resubmit_from_checkpoint().unwrap();
+                assert_eq!(resumed, ck.manifest.cut_steps());
+                session.wait_done(Duration::from_secs(120)).unwrap();
+                let finals = session.final_states().unwrap();
+                session.verify_final(&finals).unwrap();
+                session.finish();
+            });
+        }
+        for i in 0..4u64 {
+            let daemon = &daemon;
+            let wd = &wd;
+            sc.spawn(move || drive_session(daemon, wd, 8_000 + i, i == 0));
+        }
+    });
+    assert_eq!(daemon.io_threads(), 1);
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// 256 *simultaneously attached* clients across 256 jobs hold one port —
+/// and with all of them idle-connected, a five-phase barrier on one of
+/// the jobs still completes promptly.
+#[test]
+fn two_hundred_fifty_six_concurrent_clients_on_one_port() {
+    const JOBS: usize = 256;
+    let daemon = CoordinatorDaemon::start(DaemonConfig::default()).unwrap();
+    let root = workdir("conc");
+    let mut clients = Vec::with_capacity(JOBS);
+    for j in 0..JOBS {
+        let job = format!("muxjob{j:03}");
+        daemon
+            .register_job(&JobSpec {
+                job: job.clone(),
+                ckpt_dir: root.join(&job),
+                phase_timeout: Duration::from_secs(30),
+            })
+            .unwrap();
+        clients.push(attach(daemon.addr(), &job, None));
+    }
+    assert_eq!(daemon.num_jobs(), JOBS);
+    assert!(daemon.num_connections() >= JOBS);
+    assert_eq!(daemon.io_threads(), 1, "thread count must not scale with clients");
+    for j in 0..JOBS {
+        assert_eq!(daemon.num_clients(&format!("muxjob{j:03}")), 1);
+    }
+    // A barrier in the middle of the crowd: job 137's round completes
+    // while 255 other connections sit on the same port.
+    let (stream, vpid) = &mut clients[137];
+    let d2 = Arc::clone(&daemon);
+    let round = std::thread::spawn(move || d2.checkpoint_job("muxjob137", None));
+    ack_one_round(stream, *vpid);
+    let (images, _) = round.join().unwrap().unwrap();
+    assert_eq!(images.len(), 1);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Backpressure is job-scoped: a client that never acks (simulating a
+/// stopped reader / wedged rank) times out and fails ONLY its own job's
+/// round; a concurrent round on a healthy job completes untouched, and
+/// the stalled client is disconnected.
+#[test]
+fn stalled_client_fails_only_its_own_job() {
+    let daemon = CoordinatorDaemon::start(DaemonConfig::default()).unwrap();
+    let root = workdir("stall");
+    daemon
+        .register_job(&JobSpec {
+            job: "stalled".into(),
+            ckpt_dir: root.join("stalled"),
+            phase_timeout: Duration::from_millis(200),
+        })
+        .unwrap();
+    daemon
+        .register_job(&JobSpec {
+            job: "healthy".into(),
+            ckpt_dir: root.join("healthy"),
+            phase_timeout: Duration::from_secs(30),
+        })
+        .unwrap();
+    // The stalled client attaches and then never reads nor acks.
+    let (_wedged, _wv) = attach(daemon.addr(), "stalled", None);
+    let (mut good, gv) = attach(daemon.addr(), "healthy", None);
+
+    let d_stall = Arc::clone(&daemon);
+    let stalled_round = std::thread::spawn(move || d_stall.checkpoint_job("stalled", None));
+    let d_ok = Arc::clone(&daemon);
+    let healthy_round = std::thread::spawn(move || d_ok.checkpoint_job("healthy", None));
+    ack_one_round(&mut good, gv);
+
+    let err = stalled_round.join().unwrap().unwrap_err();
+    assert!(err.to_string().contains("timed out"), "{err}");
+    let (images, _) = healthy_round.join().unwrap().unwrap();
+    assert_eq!(images.len(), 1, "healthy job's round was disturbed");
+    // The wedged client was disconnected (backpressure), the good one
+    // kept its seat.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while daemon.num_clients("stalled") > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(daemon.num_clients("stalled"), 0, "stalled client not reaped");
+    assert_eq!(daemon.num_clients("healthy"), 1);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Restart-after-teardown in a shared workdir (the rendezvous-file
+/// regression, end-to-end): two sessions sharing one workdir, the first
+/// finishing and tearing down, must never leave a stale
+/// `dmtcp_command.*` file that poisons the second's restart.
+#[test]
+fn teardown_in_shared_workdir_never_poisons_a_restart() {
+    let daemon = CoordinatorDaemon::start(DaemonConfig::default()).unwrap();
+    let wd = workdir("shared_wd");
+    // Session one completes and tears down entirely.
+    drive_session(&daemon, &wd, 31_000, false);
+    // Session two — same workdir — checkpoints, dies, and restarts. A
+    // stale rendezvous file from session one would misdirect tooling and
+    // (before the per-job teardown fix) break command-file discovery.
+    drive_session(&daemon, &wd, 31_001, true);
+    let leftover: Vec<_> = std::fs::read_dir(&wd)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("dmtcp_command."))
+        .collect();
+    assert!(
+        leftover.is_empty(),
+        "stale rendezvous files after teardown: {leftover:?}"
+    );
+    std::fs::remove_dir_all(&wd).ok();
+}

@@ -11,15 +11,31 @@
 //!   over real sockets, with crafted raw byte streams.
 
 use std::io::Write;
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use nersc_cr::dmtcp::protocol::{
     decode_from_coordinator, decode_to_coordinator, encode_from_coordinator,
-    encode_to_coordinator, recv_from_coordinator, recv_to_coordinator, FromCoordinator, Phase,
-    ToCoordinator, MAX_FRAME,
+    encode_to_coordinator, recv_from_coordinator, recv_to_coordinator, send_to_coordinator,
+    FromCoordinator, Phase, ToCoordinator, MAX_FRAME,
 };
+use nersc_cr::dmtcp::{CoordinatorDaemon, DaemonConfig, JobSpec};
 use nersc_cr::util::proptest_lite::{run_cases, Gen};
+
+/// Job routing tags as hostile as the wire allows: plain idents, jobid-like
+/// digit strings, dots/dashes/slashes, embedded NULs, and non-ASCII — the
+/// router must treat all of them as opaque keys.
+fn random_job_tag(g: &mut Gen) -> String {
+    match g.usize_in(0..5) {
+        0 => g.ident(1..24),
+        1 => format!("{}", g.u64_in(100_000..999_999)),
+        2 => format!("{}.{}-{}", g.ident(1..8), g.u64_in(0..99), g.ident(1..8)),
+        3 => format!("{}\0{}", g.ident(1..8), g.ident(1..8)),
+        _ => format!("jøb-{}", g.ident(1..8)),
+    }
+}
 
 fn random_to_coordinator(g: &mut Gen) -> ToCoordinator {
     match g.usize_in(0..7) {
@@ -34,6 +50,11 @@ fn random_to_coordinator(g: &mut Gen) -> ToCoordinator {
             },
             rank: if g.bool_with(0.5) {
                 Some(g.u64_in(0..4096) as u32)
+            } else {
+                None
+            },
+            job: if g.bool_with(0.5) {
+                Some(random_job_tag(g))
             } else {
                 None
             },
@@ -238,7 +259,284 @@ fn good_frame_after_decoder_hardening_still_flows_end_to_end() {
         n_threads: 2,
         restored_vpid: Some(40_003),
         rank: Some(3),
+        job: Some("600123s7i01".into()),
     };
     let got = recv_raw(frame(&encode_to_coordinator(&msg)), recv_to_coordinator).unwrap();
     assert_eq!(got, msg);
+}
+
+#[test]
+fn hostile_job_tags_roundtrip_exactly_through_the_codec() {
+    // The router treats job tags as opaque keys; the codec must carry NULs,
+    // unicode, and jobid-shaped strings without loss or panic.
+    run_cases("job tag roundtrip", 300, |g| {
+        let m = ToCoordinator::Hello {
+            real_pid: g.u64_in(1..1 << 32),
+            name: g.ident(1..16),
+            n_threads: 1,
+            restored_vpid: None,
+            rank: if g.bool_with(0.5) {
+                Some(g.u64_in(0..4096) as u32)
+            } else {
+                None
+            },
+            job: Some(random_job_tag(g)),
+        };
+        assert_eq!(decode_to_coordinator(&encode_to_coordinator(&m)).unwrap(), m);
+    });
+}
+
+// ---- job routing against a live multi-tenant daemon ------------------------
+//
+// The frames above tortured the codec in isolation; the tests below drive
+// raw sockets into a running `CoordinatorDaemon` and pin the routing
+// invariant: a frame is delivered into exactly the job its connection's
+// `Hello` handshake named — an unknown job, an ambiguous untagged Hello,
+// or a handshake-less job-scoped frame gets a typed error reply (never a
+// panic, never delivery into some other job's state machine).
+
+static NEXT_FAKE_PID: AtomicU64 = AtomicU64::new(50_000);
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("ncr_pt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn mux_daemon(tag: &str, jobs: &[&str]) -> (Arc<CoordinatorDaemon>, std::path::PathBuf) {
+    let root = scratch(tag);
+    let daemon = CoordinatorDaemon::start(DaemonConfig::default()).unwrap();
+    for job in jobs {
+        daemon
+            .register_job(&JobSpec {
+                job: job.to_string(),
+                ckpt_dir: root.join(job),
+                phase_timeout: Duration::from_secs(10),
+            })
+            .unwrap();
+    }
+    (daemon, root)
+}
+
+fn hello(job: Option<&str>, name: &str) -> ToCoordinator {
+    ToCoordinator::Hello {
+        real_pid: NEXT_FAKE_PID.fetch_add(1, Ordering::Relaxed),
+        name: name.into(),
+        n_threads: 1,
+        restored_vpid: None,
+        rank: None,
+        job: job.map(str::to_string),
+    }
+}
+
+/// Connect, handshake into `job`, and return the stream plus assigned vpid.
+fn attach(addr: SocketAddr, job: Option<&str>, name: &str) -> (TcpStream, u64) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    send_to_coordinator(&mut s, &hello(job, name)).unwrap();
+    match recv_from_coordinator(&mut s).unwrap() {
+        FromCoordinator::Welcome { vpid, .. } => (s, vpid),
+        other => panic!("expected Welcome, got {other:?}"),
+    }
+}
+
+/// Connect, send one message, and return the daemon's first reply.
+fn send_and_reply(addr: SocketAddr, msg: &ToCoordinator) -> nersc_cr::Result<FromCoordinator> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    send_to_coordinator(&mut s, msg).unwrap();
+    recv_from_coordinator(&mut s)
+}
+
+#[test]
+fn unknown_job_tag_is_dropped_with_a_typed_error_never_misrouted() {
+    let (daemon, _root) = mux_daemon("unknown", &["tenant.a", "tenant.b"]);
+    let reply = send_and_reply(daemon.addr(), &hello(Some("tenant.zzz"), "intruder")).unwrap();
+    match reply {
+        FromCoordinator::Error { message } => {
+            assert!(message.contains("unknown job"), "{message}");
+        }
+        other => panic!("expected typed error, got {other:?}"),
+    }
+    // Structurally no misdelivery: the rejected handshake attached to
+    // neither registered job, and the daemon did not invent a third.
+    assert!(daemon.job_client_table("tenant.a").is_empty());
+    assert!(daemon.job_client_table("tenant.b").is_empty());
+    assert_eq!(daemon.num_jobs(), 2);
+}
+
+#[test]
+fn untagged_hello_with_multiple_jobs_is_ambiguous_and_rejected() {
+    let (daemon, _root) = mux_daemon("ambig", &["tenant.a", "tenant.b"]);
+    let reply = send_and_reply(daemon.addr(), &hello(None, "legacy")).unwrap();
+    match reply {
+        FromCoordinator::Error { message } => {
+            assert!(message.contains("exactly one registered job"), "{message}");
+        }
+        other => panic!("expected typed error, got {other:?}"),
+    }
+    // With exactly one job the same untagged Hello routes fine.
+    let (daemon1, _root1) = mux_daemon("ambig1", &["only"]);
+    let (_s, vpid) = attach(daemon1.addr(), None, "legacy");
+    assert!(vpid > 0);
+    assert_eq!(daemon1.num_clients("only"), 1);
+}
+
+#[test]
+fn job_scoped_frames_without_a_handshake_get_a_typed_error() {
+    let (daemon, _root) = mux_daemon("nohello", &["tenant.a"]);
+    let reply = send_and_reply(
+        daemon.addr(),
+        &ToCoordinator::PhaseAck {
+            vpid: 7,
+            ckpt_id: 1,
+            phase: Phase::Suspend,
+        },
+    )
+    .unwrap();
+    match reply {
+        FromCoordinator::Error { message } => {
+            assert!(message.contains("no Hello handshake"), "{message}");
+        }
+        other => panic!("expected typed error, got {other:?}"),
+    }
+    assert!(daemon.job_client_table("tenant.a").is_empty());
+}
+
+#[test]
+fn truncated_handshakes_against_a_live_daemon_never_panic_or_route() {
+    let (daemon, _root) = mux_daemon("trunc", &["torture.trunc"]);
+    let addr = daemon.addr();
+    run_cases("truncated handshakes", 40, |g| {
+        let body = encode_to_coordinator(&hello(Some("torture.trunc"), "partial"));
+        let full = frame(&body);
+        // Strictly partial: anywhere from one byte of the length prefix to
+        // one byte short of the complete frame, then close.
+        let cut = g.usize_in(1..full.len());
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&full[..cut]).unwrap();
+        drop(s); // close mid-frame
+    });
+    // Garbage tag frames get the decoder's typed error reflected back.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    s.write_all(&frame(&[0xEE, 1, 2, 3])).unwrap();
+    match recv_from_coordinator(&mut s).unwrap() {
+        FromCoordinator::Error { message } => {
+            assert!(message.contains("bad ToCoordinator tag"), "{message}");
+        }
+        other => panic!("expected typed error, got {other:?}"),
+    }
+    // After all that abuse the daemon still routes a clean handshake.
+    let (_s, _vpid) = attach(addr, Some("torture.trunc"), "survivor");
+    assert_eq!(daemon.num_clients("torture.trunc"), 1);
+    assert_eq!(daemon.io_threads(), 1);
+}
+
+/// Ack phases (and report one image at `Checkpoint`) for exactly one
+/// five-phase round on an attached client stream.
+fn ack_one_round(s: &mut TcpStream, vpid: u64, image: &str) {
+    loop {
+        match recv_from_coordinator(s).unwrap() {
+            FromCoordinator::Phase { ckpt_id, phase, .. } => {
+                if phase == Phase::Checkpoint {
+                    send_to_coordinator(
+                        s,
+                        &ToCoordinator::CkptDone {
+                            vpid,
+                            ckpt_id,
+                            path: image.into(),
+                            stored_bytes: 64,
+                            raw_bytes: 64,
+                            write_secs: 0.0,
+                            chunks_written: 1,
+                            chunks_deduped: 0,
+                        },
+                    )
+                    .unwrap();
+                }
+                send_to_coordinator(s, &ToCoordinator::PhaseAck { vpid, ckpt_id, phase }).unwrap();
+                if phase == Phase::Resume {
+                    return;
+                }
+            }
+            other => panic!("unexpected mid-round frame {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn forged_cross_job_frames_cannot_touch_another_jobs_round() {
+    let (daemon, _root) = mux_daemon("forge", &["tenant.a", "tenant.b"]);
+    let addr = daemon.addr();
+    let (mut sa, _va) = attach(addr, Some("tenant.a"), "client-a");
+    let (mut sb, vb) = attach(addr, Some("tenant.b"), "client-b");
+
+    // A round on job b, driven from a helper thread so this thread can
+    // play both clients.
+    let d2 = Arc::clone(&daemon);
+    let round = std::thread::spawn(move || d2.checkpoint_job("tenant.b", None));
+
+    // Job b's round is in flight once its client sees Suspend.
+    let (first_ckpt_id, first_phase) = match recv_from_coordinator(&mut sb).unwrap() {
+        FromCoordinator::Phase { ckpt_id, phase, .. } => (ckpt_id, phase),
+        other => panic!("expected Suspend, got {other:?}"),
+    };
+    assert_eq!(first_phase, Phase::Suspend);
+
+    // Client-a forges job-b frames: the ack that would advance b's barrier
+    // and a CkptDone that would plant a forged image in b's result set.
+    // Routing is connection-scoped, so both must land in job a (which has
+    // no round) and be ignored.
+    send_to_coordinator(
+        &mut sa,
+        &ToCoordinator::PhaseAck {
+            vpid: vb,
+            ckpt_id: first_ckpt_id,
+            phase: Phase::Suspend,
+        },
+    )
+    .unwrap();
+    send_to_coordinator(
+        &mut sa,
+        &ToCoordinator::CkptDone {
+            vpid: vb,
+            ckpt_id: first_ckpt_id,
+            path: "FORGED.img".into(),
+            stored_bytes: 1,
+            raw_bytes: 1,
+            write_secs: 0.0,
+            chunks_written: 1,
+            chunks_deduped: 0,
+        },
+    )
+    .unwrap();
+    // Frames on one connection dispatch in order: once this status
+    // round-trip completes, the forged frames above were already routed.
+    send_to_coordinator(&mut sa, &ToCoordinator::CommandStatus).unwrap();
+    match recv_from_coordinator(&mut sa).unwrap() {
+        FromCoordinator::Status { .. } => {}
+        other => panic!("expected Status, got {other:?}"),
+    }
+
+    // Now client-b completes its round legitimately (Suspend was already
+    // received above, so ack it first, then run the remaining phases).
+    send_to_coordinator(
+        &mut sb,
+        &ToCoordinator::PhaseAck {
+            vpid: vb,
+            ckpt_id: first_ckpt_id,
+            phase: Phase::Suspend,
+        },
+    )
+    .unwrap();
+    ack_one_round(&mut sb, vb, "real.img");
+
+    let (images, _ranks) = round.join().unwrap().unwrap();
+    assert_eq!(images.len(), 1, "forged CkptDone leaked into job b");
+    assert!(images[0].path.to_string_lossy().ends_with("real.img"));
+    // Job a never had a round to poison either.
+    let (_clients, last_a, _epoch) = daemon.job_status("tenant.a");
+    assert_eq!(last_a, 0);
 }
