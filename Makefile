@@ -23,6 +23,7 @@ bench:
 	cargo bench --bench campaign_sweep
 	cargo bench --bench gang_scale
 	cargo bench --bench coordinator_mux
+	cargo bench --bench sched_campaign
 
 # AOT-lower the L2 model to HLO text for the PJRT backend (needs jax).
 artifacts:

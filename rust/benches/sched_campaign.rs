@@ -1,0 +1,209 @@
+//! Checkpoint-aware scheduling vs the naive-concurrent baseline,
+//! self-checking.
+//!
+//! Part 1 (scheduler lab): replay identical seeded preemption traces —
+//! same work sizes, same arrivals, same wave times — through the two
+//! policies. The naive-concurrent baseline (FIFO, in-phase Daly
+//! barriers, preemption notices ignored) must lose to the
+//! checkpoint-aware configuration (BarrierPlacer stagger + heeded
+//! `--signal`-style notices) *strictly*, per seed, on makespan and on
+//! shared-store burst collisions, and in aggregate on lost work; and the
+//! preemption-notice override must yield a restartable final checkpoint
+//! at every wave of every seeded trace.
+//!
+//! Part 2 (live stack): a real fleet under Poisson arrivals, the
+//! checkpoint-aware scheduler, and a 1 s preemption notice against a 2 s
+//! per-incarnation walltime — every session must complete bit-identical
+//! to its reference across notice-forced checkpoint/requeue cycles.
+//!
+//! Run: `cargo bench --bench sched_campaign`
+
+use std::time::Duration;
+
+use nersc_cr::campaign::{
+    run_campaign, run_lab, ArrivalSpec, CampaignSpec, IntervalPolicy, LabOutcome, LabSpec,
+    SchedulerKind, WorkloadSpec,
+};
+use nersc_cr::report::{emit_bench_json, smoke_scaled, Table};
+use nersc_cr::slurm::Signal;
+
+/// Fixed trace seeds: the lab is deterministic, so these assertions are
+/// exact reproductions, not statistical hopes.
+const SEEDS: [u64; 5] = [11, 23, 47, 61, 83];
+
+fn main() {
+    nersc_cr::logging::init();
+    let n_seeds = smoke_scaled(SEEDS.len(), 2);
+    let sessions = smoke_scaled(20, 8) as u32;
+    // 4 slots keeps every drain's staggered final-checkpoint lanes
+    // (slots x ckpt_cost = 24 s) comfortably inside the 40 s grace
+    // window, even with one straggling periodic burst in flight.
+    let slots = 4u32;
+    println!(
+        "== sched campaign: checkpoint-aware vs naive-concurrent \
+         ({sessions} sessions, {slots} slots, {n_seeds} traces) ==\n"
+    );
+
+    // --- Part 1: identical traces, two policies -----------------------
+    let mut t = Table::new(&[
+        "seed",
+        "policy",
+        "makespan (s)",
+        "lost (s)",
+        "collisions",
+        "waves",
+        "notice ckpts",
+        "restartable",
+    ]);
+    let mut naive_runs: Vec<LabOutcome> = Vec::new();
+    let mut aware_runs: Vec<LabOutcome> = Vec::new();
+    for &seed in SEEDS.iter().take(n_seeds) {
+        let naive = run_lab(&LabSpec::naive(sessions, slots, seed)).expect("naive lab");
+        let aware = run_lab(&LabSpec::aware(sessions, slots, seed)).expect("aware lab");
+        for (name, out) in [("naive", &naive), ("aware", &aware)] {
+            t.row(&[
+                seed.to_string(),
+                name.into(),
+                format!("{:.0}", out.makespan_secs),
+                format!("{:.0}", out.work_lost_secs),
+                out.burst_collisions.to_string(),
+                out.waves.to_string(),
+                out.notice_ckpts.to_string(),
+                out.restartable_at_every_preemption.to_string(),
+            ]);
+        }
+        naive_runs.push(naive);
+        aware_runs.push(aware);
+    }
+    println!("{}", t.render());
+
+    let sum = |runs: &[LabOutcome], f: fn(&LabOutcome) -> f64| -> f64 {
+        runs.iter().map(f).sum()
+    };
+    let naive_makespan = sum(&naive_runs, |o| o.makespan_secs);
+    let aware_makespan = sum(&aware_runs, |o| o.makespan_secs);
+    let naive_lost = sum(&naive_runs, |o| o.work_lost_secs);
+    let aware_lost = sum(&aware_runs, |o| o.work_lost_secs);
+    let naive_collisions: u64 = naive_runs.iter().map(|o| o.burst_collisions).sum();
+    let aware_collisions: u64 = aware_runs.iter().map(|o| o.burst_collisions).sum();
+    let naive_waves: u32 = naive_runs.iter().map(|o| o.waves).sum();
+    let aware_notice_ckpts: u64 = aware_runs.iter().map(|o| o.notice_ckpts).sum();
+    println!(
+        "aggregate: makespan {naive_makespan:.0} -> {aware_makespan:.0} s, \
+         lost {naive_lost:.0} -> {aware_lost:.0} s, \
+         collisions {naive_collisions} -> {aware_collisions} \
+         ({naive_waves} naive waves, {aware_notice_ckpts} notice checkpoints)\n"
+    );
+
+    // --- Part 2: the live stack under notice-driven preemption --------
+    let live_sessions = smoke_scaled(6, 2) as u32;
+    let spec = CampaignSpec {
+        name: "sched-live".into(),
+        sessions: live_sessions,
+        concurrency: 2,
+        workload: WorkloadSpec::Cp2kScf { n: 10 },
+        // ~50 us/step: several 2 s virtual walltimes of work, so notice
+        // cycles fire even on a fast machine.
+        target_steps: 120_000,
+        seed: 31_337,
+        interval: IntervalPolicy::Fixed(Duration::from_millis(8)),
+        arrival: ArrivalSpec::poisson(10.0).expect("rate"),
+        scheduler: SchedulerKind::CkptAware,
+        straggler_timeout: Duration::from_secs(2),
+        preempt_signal: Some((Signal::Term, 1)),
+        requeue_delay: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let report = run_campaign(&spec).expect("live campaign");
+    println!("live fleet SLOs:\n{}", report.slo_table().render());
+    let (restart_p50, restart_p99) = report.restart_latency_percentiles();
+    let (wait_p50, wait_p99) = report.queue_wait_percentiles();
+
+    let mut ok = true;
+    let per_seed = |f: &dyn Fn(&LabOutcome, &LabOutcome) -> bool| -> bool {
+        naive_runs.iter().zip(&aware_runs).all(|(n, a)| f(n, a))
+    };
+    for (name, pass) in [
+        (
+            "aware beats naive on makespan in every trace",
+            per_seed(&|n, a| a.makespan_secs < n.makespan_secs),
+        ),
+        (
+            "aware has strictly fewer burst collisions in every trace",
+            per_seed(&|n, a| a.burst_collisions < n.burst_collisions),
+        ),
+        (
+            "notice override leaves a restartable final checkpoint at every wave",
+            aware_runs.iter().all(|a| a.restartable_at_every_preemption),
+        ),
+        (
+            "no admitted session starves under either policy (invariant 9)",
+            naive_runs
+                .iter()
+                .chain(&aware_runs)
+                .all(|o| o.starvation_violations == 0),
+        ),
+        (
+            "every lab session completes under both policies",
+            naive_runs
+                .iter()
+                .chain(&aware_runs)
+                .all(|o| o.completed == sessions),
+        ),
+        (
+            "preemption actually exercised the traces (waves >= 1)",
+            naive_waves >= 1,
+        ),
+        (
+            "aware loses strictly less work in aggregate",
+            aware_lost < naive_lost,
+        ),
+        (
+            "live fleet fully completed",
+            report.completed() == live_sessions as usize,
+        ),
+        (
+            "live fleet fully bit-identical",
+            report.verified() == live_sessions as usize,
+        ),
+        ("live notice forced final checkpoints", report.notice_ckpts() >= 1),
+        ("live preemption cycles fired", report.preempts() >= 1),
+        ("live admission rejected nobody", report.rejected_admissions() == 0),
+    ] {
+        println!("  [{}] {name}", if pass { "PASS" } else { "FAIL" });
+        ok &= pass;
+    }
+
+    if let Ok(p) = emit_bench_json(
+        "sched_campaign",
+        &[
+            ("lab_traces", n_seeds as f64),
+            ("lab_sessions", sessions as f64),
+            ("lab_slots", slots as f64),
+            ("naive_makespan_s", naive_makespan),
+            ("aware_makespan_s", aware_makespan),
+            ("makespan_speedup", naive_makespan / aware_makespan.max(1.0)),
+            ("naive_lost_s", naive_lost),
+            ("aware_lost_s", aware_lost),
+            ("naive_collisions", naive_collisions as f64),
+            ("aware_collisions", aware_collisions as f64),
+            ("naive_waves", naive_waves as f64),
+            ("aware_notice_ckpts", aware_notice_ckpts as f64),
+            ("live_sessions", live_sessions as f64),
+            ("live_completed", report.completed() as f64),
+            ("live_verified", report.verified() as f64),
+            ("live_preempts", report.preempts() as f64),
+            ("live_notice_ckpts", report.notice_ckpts() as f64),
+            ("live_restart_p50_s", restart_p50),
+            ("live_restart_p99_s", restart_p99),
+            ("live_queue_wait_p50_s", wait_p50),
+            ("live_queue_wait_p99_s", wait_p99),
+            ("live_burst_collisions", report.burst_collisions as f64),
+        ],
+    ) {
+        println!("\nwrote {}", p.display());
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -1,6 +1,12 @@
 //! The fleet executor: a bounded worker pool driving many live
-//! [`CrSession`]s concurrently, with seeded failure injection and
-//! checkpoint-interval auto-tuning.
+//! [`CrSession`]s concurrently, with seeded failure injection,
+//! checkpoint-interval auto-tuning, and (since the `sched` subsystem) a
+//! scheduler-driven dispatch loop: sessions enter through the spec's
+//! arrival process and admission control, freed workers ask the
+//! configured `dyn Scheduler` which request to run, checkpoint barriers
+//! go through the fleet `BarrierPlacer` under the ckpt-aware policy,
+//! and a `preempt_signal` walltime notice triggers one final
+//! checkpoint plus an immediate requeue (DESIGN §12).
 //!
 //! Each worker owns one session at a time and drives it through the
 //! manual (§V.B.2) strategy — submit, periodic `checkpoint_now` at the
@@ -19,12 +25,15 @@
 //! terminates, and the [`CampaignReport`] says exactly how.
 
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::campaign::faults::FaultInjector;
 use crate::campaign::report::{CampaignReport, SessionDisposition, SessionOutcome};
+use crate::campaign::sched::{
+    AdmitOutcome, BarrierPlacer, BurstMeter, ReadyQueue, Scheduler, SchedulerKind, SessionRequest,
+};
 use crate::campaign::spec::{CampaignSpec, SubstrateSpec, WorkloadSpec};
 use crate::campaign::tune::{DalyTuner, IntervalPolicy};
 use crate::container::{Image, PodmanHpc, Registry, RunSpec, Shifter, EMBED_DMTCP_SNIPPET};
@@ -36,6 +45,47 @@ use crate::workload::{Cp2kApp, G4App, StencilApp};
 
 /// Poll cadence of the per-session drive loop.
 const POLL: Duration = Duration::from_millis(2);
+
+/// Hard cap on preemption-notice cycles per session: a campaign must
+/// terminate even if a session never fits inside one walltime.
+const MAX_PREEMPT_CYCLES: u32 = 32;
+
+/// Fleet-shared scheduling context: the checkpoint-barrier placer (only
+/// for the ckpt-aware policy), the burst-collision meter wrapped around
+/// every `checkpoint_now`, and the campaign epoch the placer's clock
+/// runs on.
+struct SchedCtx {
+    placer: Option<BarrierPlacer>,
+    meter: BurstMeter,
+    epoch: Instant,
+}
+
+impl SchedCtx {
+    fn for_spec(spec: &CampaignSpec, epoch: Instant) -> Self {
+        SchedCtx {
+            placer: (spec.scheduler == SchedulerKind::CkptAware).then(BarrierPlacer::new),
+            meter: BurstMeter::new(),
+            epoch,
+        }
+    }
+
+    /// Where this session's next checkpoint barrier goes: the cadence
+    /// interval from now, shifted by the fleet placer when one is
+    /// active (ckpt-aware scheduling staggers bursts on the shared
+    /// store).
+    fn next_ckpt_at(&self, cadence: &Cadence) -> Instant {
+        let interval = cadence.interval();
+        match &self.placer {
+            None => Instant::now() + interval,
+            Some(placer) => {
+                let now_s = self.epoch.elapsed().as_secs_f64();
+                let cost_s = (cadence.measured_cost_ms().max(1) as f64) / 1_000.0;
+                let at = placer.place(now_s, interval.as_secs_f64(), cost_s);
+                self.epoch + Duration::from_secs_f64(at.max(now_s))
+            }
+        }
+    }
+}
 
 /// Cooperative cancellation for a running campaign: clone the token,
 /// hand it to [`run_fleet`], and flip it from any thread. Workers finish
@@ -106,8 +156,8 @@ pub fn run_fleet<A: CrApp + Sync>(
     cancel: &CancelToken,
 ) -> Result<CampaignReport> {
     let coord = fleet_coordinator(spec)?;
-    let report = run_session_pool(spec, "ncr_campaign", |i, root| {
-        drive_session(app, spec, i, root, cancel, &coord)
+    let report = run_session_pool(spec, "ncr_campaign", |i, root, ctx| {
+        drive_session(app, spec, i, root, cancel, &coord, ctx)
     });
     if let CoordinatorHandle::Shared(daemon) = &coord {
         daemon.shutdown();
@@ -127,13 +177,38 @@ fn fleet_coordinator(spec: &CampaignSpec) -> Result<CoordinatorHandle> {
     })
 }
 
+/// Shared dispatch state: the arrival cursor, the bounded ready queue,
+/// and the pluggable policy choosing which admitted request a freed
+/// worker runs next.
+struct Dispatch {
+    next_arrival: usize,
+    queue: ReadyQueue,
+    sched: Box<dyn Scheduler>,
+}
+
+/// What one dispatch tick told a worker to do.
+enum Tick {
+    /// Drive this request (dispatched at the given campaign second).
+    Run(SessionRequest, f64),
+    /// Nothing ready yet (arrivals pending or queue starved); poll.
+    Idle,
+    /// Every session is dispatched or rejected; the worker can exit.
+    Done,
+}
+
 /// The bounded worker pool behind [`run_fleet`] and [`run_gang_fleet`]:
-/// `drive(index, root)` produces one session's outcome; the pool fills
-/// every slot, so the returned report always covers every session.
+/// a `dyn Scheduler` tick loop over the spec's arrival process —
+/// workers admit due arrivals into the bounded ready queue (rejections
+/// become [`SessionDisposition::Rejected`] outcomes on the spot), ask
+/// the policy which request to run, and drive it to completion.
+/// `drive(index, root, ctx)` produces one session's outcome; the pool
+/// fills every slot, so the returned report always covers every
+/// session. The default spec (static arrival, FIFO, unbounded queue)
+/// reproduces the old drain exactly: index order, all ready at `t = 0`.
 fn run_session_pool(
     spec: &CampaignSpec,
     root_tag: &str,
-    drive: impl Fn(u32, &Path) -> SessionOutcome + Sync,
+    drive: impl Fn(u32, &Path, &SchedCtx) -> SessionOutcome + Sync,
 ) -> Result<CampaignReport> {
     spec.validate()?;
     let root = match &spec.workdir {
@@ -149,19 +224,69 @@ fn run_session_pool(
     };
     std::fs::create_dir_all(&root)?;
     let t0 = Instant::now();
-    let next = AtomicU32::new(0);
+    let ctx = SchedCtx::for_spec(spec, t0);
+    let offsets = spec.arrival.arrival_offsets(spec.sessions, spec.seed);
+    // Remaining-work and checkpoint-cost hints for cost-aware policies:
+    // a uniform fleet ties everywhere, and ties dispatch in fleet order.
+    let ckpt_cost_hint = match spec.interval {
+        IntervalPolicy::Fixed(_) => 0.0,
+        IntervalPolicy::Daly { cost_prior } => cost_prior.as_secs_f64(),
+    };
+    let dispatch = Mutex::new(Dispatch {
+        next_arrival: 0,
+        queue: ReadyQueue::new(spec.admit_max.map(|n| n as usize))?,
+        sched: spec.scheduler.build(),
+    });
     let outcomes: Mutex<Vec<Option<SessionOutcome>>> =
         Mutex::new((0..spec.sessions).map(|_| None).collect());
     let workers = spec.concurrency.min(spec.sessions).max(1);
     std::thread::scope(|sc| {
         for _ in 0..workers {
             sc.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= spec.sessions {
-                    break;
+                let tick = {
+                    let mut d = dispatch.lock().expect("dispatch poisoned");
+                    let now = ctx.epoch.elapsed().as_secs_f64();
+                    // Admission control over everything that has arrived.
+                    while d.next_arrival < offsets.len() && offsets[d.next_arrival] <= now {
+                        let i = d.next_arrival as u32;
+                        d.next_arrival += 1;
+                        let req = SessionRequest {
+                            index: i,
+                            arrival_secs: offsets[i as usize],
+                            work_estimate_secs: spec.target_steps as f64,
+                            ckpt_cost_secs: ckpt_cost_hint,
+                        };
+                        if let AdmitOutcome::Rejected(reason) = d.queue.offer(req) {
+                            log::warn!("campaign session {i}: {reason}");
+                            let mut o = SessionOutcome::unstarted(
+                                i,
+                                spec.seed.wrapping_add(i as u64),
+                                spec.ranks,
+                                spec.target_steps,
+                            );
+                            o.disposition = SessionDisposition::Rejected;
+                            outcomes.lock().expect("outcomes poisoned")[i as usize] = Some(o);
+                        }
+                    }
+                    match d.sched.pick(&d.queue, now) {
+                        Some(pos) => {
+                            let req = d.queue.take(pos).expect("scheduler picked a live slot");
+                            Tick::Run(req, now)
+                        }
+                        None if d.next_arrival >= offsets.len() && d.queue.is_empty() => Tick::Done,
+                        None => Tick::Idle,
+                    }
+                };
+                match tick {
+                    Tick::Done => break,
+                    Tick::Idle => std::thread::sleep(POLL),
+                    Tick::Run(req, dispatched_at) => {
+                        let mut outcome = drive(req.index, &root, &ctx);
+                        outcome.queue_wait_secs = (dispatched_at - req.arrival_secs).max(0.0);
+                        outcomes.lock().expect("outcomes poisoned")[req.index as usize] =
+                            Some(outcome);
+                    }
                 }
-                let outcome = drive(i, &root);
-                outcomes.lock().expect("outcomes poisoned")[i as usize] = Some(outcome);
             });
         }
     });
@@ -175,6 +300,7 @@ fn run_session_pool(
         name: spec.name.clone(),
         sessions,
         wall_secs: t0.elapsed().as_secs_f64(),
+        burst_collisions: ctx.meter.collisions(),
     })
 }
 
@@ -276,6 +402,7 @@ fn drive_session<A: CrApp>(
     root: &Path,
     cancel: &CancelToken,
     coord: &CoordinatorHandle,
+    ctx: &SchedCtx,
 ) -> SessionOutcome {
     let seed = spec.seed.wrapping_add(index as u64);
     let wd: PathBuf = if spec.shared_workdir {
@@ -283,27 +410,7 @@ fn drive_session<A: CrApp>(
     } else {
         root.join(format!("s{index:03}"))
     };
-    let mut out = SessionOutcome {
-        index,
-        seed,
-        disposition: SessionDisposition::Failed("did not start".into()),
-        ranks: 1,
-        verified: false,
-        incarnations: 0,
-        kills: 0,
-        checkpoints: 0,
-        steps_done: 0,
-        target_steps: spec.target_steps,
-        steps_lost: 0,
-        wall_secs: 0.0,
-        stored_bytes: 0,
-        logical_bytes: 0,
-        chunks_written: 0,
-        chunks_deduped: 0,
-        final_interval_ms: 0,
-        measured_ckpt_cost_ms: 0,
-        series: Default::default(),
-    };
+    let mut out = SessionOutcome::unstarted(index, seed, 1, spec.target_steps);
     let t0 = Instant::now();
     let mut cadence = Cadence::for_spec(spec);
     let mut injector = spec.faults.injector(spec.seed, index);
@@ -318,7 +425,7 @@ fn drive_session<A: CrApp>(
     }
 
     let result = drive_session_inner(
-        app, spec, seed, &wd, cancel, coord, &mut cadence, &mut injector, &mut out,
+        app, spec, seed, &wd, cancel, coord, ctx, &mut cadence, &mut injector, &mut out,
     );
     if let Err(e) = result {
         out.disposition = SessionDisposition::Failed(e.to_string());
@@ -338,6 +445,7 @@ fn drive_session_inner<A: CrApp>(
     wd: &Path,
     cancel: &CancelToken,
     coord: &CoordinatorHandle,
+    ctx: &SchedCtx,
     cadence: &mut Cadence,
     injector: &mut FaultInjector,
     out: &mut SessionOutcome,
@@ -356,9 +464,17 @@ fn drive_session_inner<A: CrApp>(
     let mut session = builder.build()?;
     session.submit()?;
 
-    let deadline = Instant::now() + spec.straggler_timeout;
-    let mut next_ckpt = Instant::now() + cadence.interval();
+    // Without a preemption signal the straggler timeout is an absolute
+    // deadline; with one it is the per-incarnation walltime the grace
+    // notice fires against (`offset` seconds before the limit).
+    let notice_offset = spec
+        .preempt_signal
+        .map(|(_, offset)| Duration::from_secs(offset));
+    let mut deadline = Instant::now() + spec.straggler_timeout;
+    let mut notice_at = notice_offset.map(|off| deadline - off);
+    let mut next_ckpt = ctx.next_ckpt_at(cadence);
     let mut next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
+    let mut steps_at_ckpt = 0u64;
 
     let completed = loop {
         std::thread::sleep(POLL);
@@ -367,20 +483,77 @@ fn drive_session_inner<A: CrApp>(
         if status.done {
             break true;
         }
-        if cancel.is_cancelled() || Instant::now() > deadline {
+        if cancel.is_cancelled() {
             break false;
         }
         let now = Instant::now();
+        if let Some(at) = notice_at {
+            if now >= at {
+                // SLURM grace notice: one final checkpoint when it is
+                // strictly better than riding the cadence into the
+                // kill (unsaved work exists, or no image at all), then
+                // an immediate requeue into a fresh walltime.
+                let at_notice = status.steps_done;
+                let no_image = session.session_images()?.is_empty();
+                if at_notice > steps_at_ckpt || no_image {
+                    if let Some(placer) = &ctx.placer {
+                        placer.place_final(
+                            ctx.epoch.elapsed().as_secs_f64(),
+                            (cadence.measured_cost_ms().max(1) as f64) / 1_000.0,
+                        );
+                    }
+                    ctx.meter.begin();
+                    let r = session.checkpoint_now();
+                    ctx.meter.end();
+                    match r {
+                        Ok(_) => {
+                            out.checkpoints += 1;
+                            out.notice_ckpts += 1;
+                            steps_at_ckpt = at_notice;
+                        }
+                        Err(e) => log::warn!(
+                            "campaign session {}: notice checkpoint failed: {e}",
+                            out.index
+                        ),
+                    }
+                }
+                if out.preempts >= MAX_PREEMPT_CYCLES || session.session_images()?.is_empty() {
+                    // Cannot (or may no longer) restart: reap as a
+                    // straggler rather than loop forever.
+                    break false;
+                }
+                let at_kill = session.monitor()?.steps_done;
+                harvest_store(out, &session);
+                let t_kill = Instant::now();
+                session.kill()?;
+                out.preempts += 1;
+                std::thread::sleep(spec.requeue_delay);
+                let resumed = session.resubmit_from_checkpoint()?;
+                out.restart_latencies_secs.push(t_kill.elapsed().as_secs_f64());
+                out.steps_lost += at_kill.saturating_sub(resumed);
+                steps_at_ckpt = resumed;
+                deadline = Instant::now() + spec.straggler_timeout;
+                notice_at = notice_offset.map(|off| deadline - off);
+                next_ckpt = ctx.next_ckpt_at(cadence);
+                continue;
+            }
+        } else if now > deadline {
+            break false;
+        }
         if now >= next_ckpt {
             let t = Instant::now();
-            match session.checkpoint_now() {
+            ctx.meter.begin();
+            let r = session.checkpoint_now();
+            ctx.meter.end();
+            match r {
                 Ok(_) => {
                     out.checkpoints += 1;
+                    steps_at_ckpt = status.steps_done;
                     cadence.observe_cost(t.elapsed());
                 }
                 Err(e) => log::warn!("campaign session {}: checkpoint failed: {e}", out.index),
             }
-            next_ckpt = Instant::now() + cadence.interval();
+            next_ckpt = ctx.next_ckpt_at(cadence);
         }
         if let Some(kill_at) = next_kill {
             if now >= kill_at {
@@ -391,13 +564,16 @@ fn drive_session_inner<A: CrApp>(
                 } else {
                     let at_kill = session.monitor()?.steps_done;
                     harvest_store(out, &session);
+                    let t_kill = Instant::now();
                     session.kill()?;
                     out.kills += 1;
                     std::thread::sleep(spec.requeue_delay);
                     let resumed = session.resubmit_from_checkpoint()?;
+                    out.restart_latencies_secs.push(t_kill.elapsed().as_secs_f64());
                     out.steps_lost += at_kill.saturating_sub(resumed);
+                    steps_at_ckpt = resumed;
                     next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
-                    next_ckpt = Instant::now() + cadence.interval();
+                    next_ckpt = ctx.next_ckpt_at(cadence);
                 }
             }
         }
@@ -434,8 +610,8 @@ pub fn run_gang_fleet(
     cancel: &CancelToken,
 ) -> Result<CampaignReport> {
     let coord = fleet_coordinator(spec)?;
-    let report = run_session_pool(spec, "ncr_gangfleet", |i, root| {
-        drive_gang(spec, cells_per_rank, i, root, cancel, &coord)
+    let report = run_session_pool(spec, "ncr_gangfleet", |i, root, ctx| {
+        drive_gang(spec, cells_per_rank, i, root, cancel, &coord, ctx)
     });
     if let CoordinatorHandle::Shared(daemon) = &coord {
         daemon.shutdown();
@@ -452,6 +628,7 @@ fn drive_gang(
     root: &Path,
     cancel: &CancelToken,
     coord: &CoordinatorHandle,
+    ctx: &SchedCtx,
 ) -> SessionOutcome {
     let seed = spec.seed.wrapping_add(index as u64);
     let wd: PathBuf = if spec.shared_workdir {
@@ -459,27 +636,7 @@ fn drive_gang(
     } else {
         root.join(format!("g{index:03}"))
     };
-    let mut out = SessionOutcome {
-        index,
-        seed,
-        disposition: SessionDisposition::Failed("did not start".into()),
-        ranks: spec.ranks,
-        verified: false,
-        incarnations: 0,
-        kills: 0,
-        checkpoints: 0,
-        steps_done: 0,
-        target_steps: spec.target_steps,
-        steps_lost: 0,
-        wall_secs: 0.0,
-        stored_bytes: 0,
-        logical_bytes: 0,
-        chunks_written: 0,
-        chunks_deduped: 0,
-        final_interval_ms: 0,
-        measured_ckpt_cost_ms: 0,
-        series: Default::default(),
-    };
+    let mut out = SessionOutcome::unstarted(index, seed, spec.ranks, spec.target_steps);
     let t0 = Instant::now();
     let mut cadence = Cadence::for_spec(spec);
     let mut injector = spec.faults.injector(spec.seed, index);
@@ -495,6 +652,7 @@ fn drive_gang(
         &wd,
         cancel,
         coord,
+        ctx,
         &mut cadence,
         &mut injector,
         &mut out,
@@ -529,6 +687,7 @@ fn drive_gang_inner(
     wd: &Path,
     cancel: &CancelToken,
     coord: &CoordinatorHandle,
+    ctx: &SchedCtx,
     cadence: &mut Cadence,
     injector: &mut FaultInjector,
     out: &mut SessionOutcome,
@@ -552,9 +711,14 @@ fn drive_gang_inner(
     // schedule itself, so equal specs replay equal campaigns.
     let mut rank_rng = SplitMix64::new(spec.seed ^ (out.index as u64).rotate_left(23) ^ 0x6A16);
 
-    let deadline = Instant::now() + spec.straggler_timeout;
-    let mut next_ckpt = Instant::now() + cadence.interval();
+    let notice_offset = spec
+        .preempt_signal
+        .map(|(_, offset)| Duration::from_secs(offset));
+    let mut deadline = Instant::now() + spec.straggler_timeout;
+    let mut notice_at = notice_offset.map(|off| deadline - off);
+    let mut next_ckpt = ctx.next_ckpt_at(cadence);
     let mut next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
+    let mut steps_at_ckpt = 0u64;
 
     let completed = loop {
         std::thread::sleep(POLL);
@@ -563,20 +727,74 @@ fn drive_gang_inner(
         if status.done {
             break true;
         }
-        if cancel.is_cancelled() || Instant::now() > deadline {
+        if cancel.is_cancelled() {
             break false;
         }
         let now = Instant::now();
+        if let Some(at) = notice_at {
+            if now >= at {
+                // Grace notice for the whole gang: one final
+                // coordinated checkpoint if strictly better, then an
+                // immediate gang requeue into a fresh walltime.
+                let at_notice = status.steps_done;
+                let no_image = session.latest_checkpoint()?.is_none();
+                if at_notice > steps_at_ckpt || no_image {
+                    if let Some(placer) = &ctx.placer {
+                        placer.place_final(
+                            ctx.epoch.elapsed().as_secs_f64(),
+                            (cadence.measured_cost_ms().max(1) as f64) / 1_000.0,
+                        );
+                    }
+                    ctx.meter.begin();
+                    let r = session.checkpoint_now();
+                    ctx.meter.end();
+                    match r {
+                        Ok(_) => {
+                            out.checkpoints += 1;
+                            out.notice_ckpts += 1;
+                            steps_at_ckpt = at_notice;
+                        }
+                        Err(e) => log::warn!(
+                            "campaign gang {}: notice checkpoint failed: {e}",
+                            out.index
+                        ),
+                    }
+                }
+                if out.preempts >= MAX_PREEMPT_CYCLES || session.latest_checkpoint()?.is_none() {
+                    break false;
+                }
+                let at_kill = session.monitor()?.steps_done;
+                harvest_gang_store(out, &session);
+                let t_kill = Instant::now();
+                session.kill()?;
+                out.preempts += 1;
+                std::thread::sleep(spec.requeue_delay);
+                let resumed = session.resubmit_from_checkpoint()?;
+                out.restart_latencies_secs.push(t_kill.elapsed().as_secs_f64());
+                out.steps_lost += at_kill.saturating_sub(resumed);
+                steps_at_ckpt = resumed;
+                deadline = Instant::now() + spec.straggler_timeout;
+                notice_at = notice_offset.map(|off| deadline - off);
+                next_ckpt = ctx.next_ckpt_at(cadence);
+                continue;
+            }
+        } else if now > deadline {
+            break false;
+        }
         if now >= next_ckpt {
             let t = Instant::now();
-            match session.checkpoint_now() {
+            ctx.meter.begin();
+            let r = session.checkpoint_now();
+            ctx.meter.end();
+            match r {
                 Ok(_) => {
                     out.checkpoints += 1;
+                    steps_at_ckpt = status.steps_done;
                     cadence.observe_cost(t.elapsed());
                 }
                 Err(e) => log::warn!("campaign gang {}: checkpoint failed: {e}", out.index),
             }
-            next_ckpt = Instant::now() + cadence.interval();
+            next_ckpt = ctx.next_ckpt_at(cadence);
         }
         if let Some(kill_at) = next_kill {
             if now >= kill_at {
@@ -590,13 +808,16 @@ fn drive_gang_inner(
                     let victim = rank_rng.gen_range(spec.ranks as u64) as u32;
                     session.kill_rank(victim)?;
                     harvest_gang_store(out, &session);
+                    let t_kill = Instant::now();
                     session.kill()?;
                     out.kills += 1;
                     std::thread::sleep(spec.requeue_delay);
                     let resumed = session.resubmit_from_checkpoint()?;
+                    out.restart_latencies_secs.push(t_kill.elapsed().as_secs_f64());
                     out.steps_lost += at_kill.saturating_sub(resumed);
+                    steps_at_ckpt = resumed;
                     next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
-                    next_ckpt = Instant::now() + cadence.interval();
+                    next_ckpt = ctx.next_ckpt_at(cadence);
                 }
             }
         }

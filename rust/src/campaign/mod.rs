@@ -25,12 +25,17 @@
 //!   example share.
 //! * [`report`] — per-session outcomes aggregated into a
 //!   [`CampaignReport`] (tables, JSON, LDMS rollups).
+//! * [`sched`] — checkpoint-aware fleet scheduling: seeded arrival/size
+//!   models, bounded-queue admission control with pluggable policies,
+//!   and the barrier placer that staggers checkpoint bursts and heeds
+//!   SLURM preemption notices (DESIGN §12).
 
 #![deny(missing_docs)]
 
 pub mod executor;
 pub mod faults;
 pub mod report;
+pub mod sched;
 pub mod sim;
 pub mod spec;
 pub mod tune;
@@ -38,6 +43,10 @@ pub mod tune;
 pub use executor::{run_campaign, run_campaign_cancellable, run_fleet, run_gang_fleet, CancelToken};
 pub use faults::{FaultInjector, FaultPlan};
 pub use report::{CampaignReport, LdmsRollup, SessionDisposition, SessionOutcome};
+pub use sched::{
+    run_lab, ArrivalSpec, BarrierPlacer, BurstMeter, LabOutcome, LabSpec, RandomVariable,
+    ReadyQueue, Scheduler, SchedulerKind, SessionRequest,
+};
 pub use sim::{run_fleet_sim, SimFleetOutcome, SimFleetSpec, UrgentLoad};
 pub use spec::{CampaignSpec, SubstrateSpec, WorkloadSpec};
 pub use tune::{

@@ -16,6 +16,9 @@ pub enum SessionDisposition {
     Straggler,
     /// Torn down because the campaign was cancelled.
     Cancelled,
+    /// Refused by admission control (the bounded ready queue was full
+    /// at arrival); never ran.
+    Rejected,
     /// Died on an orchestration error (message preserved).
     Failed(String),
 }
@@ -27,9 +30,20 @@ impl SessionDisposition {
             SessionDisposition::Completed => "completed",
             SessionDisposition::Straggler => "straggler",
             SessionDisposition::Cancelled => "cancelled",
+            SessionDisposition::Rejected => "rejected",
             SessionDisposition::Failed(_) => "failed",
         }
     }
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice (`0.0` when
+/// empty). `p` is in percent: `percentile(xs, 50.0)` is the median.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
 /// Everything the executor learned about one session.
@@ -74,8 +88,53 @@ pub struct SessionOutcome {
     /// The tuner's final measured checkpoint-cost estimate (0 when the
     /// cadence was fixed or no checkpoint was measured).
     pub measured_ckpt_cost_ms: u64,
+    /// Seconds the session waited between entering the ready queue and
+    /// being dispatched to a worker slot.
+    pub queue_wait_secs: f64,
+    /// Kill-to-resumed latency of every restart the session went
+    /// through (injected faults and preemption cycles), seconds.
+    pub restart_latencies_secs: Vec<f64>,
+    /// Preemption-notice cycles the session survived (walltime notices
+    /// that triggered a final checkpoint + requeue).
+    pub preempts: u32,
+    /// Notice-triggered final checkpoints taken (the preemption-notice
+    /// override firing because it was strictly better).
+    pub notice_ckpts: u64,
     /// The session's LDMS series (all incarnations, folded at teardown).
     pub series: SampledSeries,
+}
+
+impl SessionOutcome {
+    /// A blank outcome for a session that has not run (yet): the
+    /// executor's starting point, and the terminal record for arrivals
+    /// admission control turned away.
+    pub fn unstarted(index: u32, seed: u64, ranks: u32, target_steps: u64) -> Self {
+        SessionOutcome {
+            index,
+            seed,
+            disposition: SessionDisposition::Failed("did not start".into()),
+            ranks,
+            verified: false,
+            incarnations: 0,
+            kills: 0,
+            checkpoints: 0,
+            steps_done: 0,
+            target_steps,
+            steps_lost: 0,
+            wall_secs: 0.0,
+            stored_bytes: 0,
+            logical_bytes: 0,
+            chunks_written: 0,
+            chunks_deduped: 0,
+            final_interval_ms: 0,
+            measured_ckpt_cost_ms: 0,
+            queue_wait_secs: 0.0,
+            restart_latencies_secs: Vec::new(),
+            preempts: 0,
+            notice_ckpts: 0,
+            series: Default::default(),
+        }
+    }
 }
 
 /// Aggregate LDMS rollup across the fleet.
@@ -98,6 +157,9 @@ pub struct CampaignReport {
     pub sessions: Vec<SessionOutcome>,
     /// Campaign wall clock, first submit to last teardown (seconds).
     pub wall_secs: f64,
+    /// Checkpoint bursts that started while another was in flight on
+    /// the shared store (the fleet-wide `BurstMeter` count).
+    pub burst_collisions: u64,
 }
 
 impl CampaignReport {
@@ -120,6 +182,49 @@ impl CampaignReport {
     /// Kills injected across the fleet.
     pub fn kills(&self) -> u64 {
         self.sessions.iter().map(|s| s.kills as u64).sum()
+    }
+
+    /// Arrivals admission control turned away.
+    pub fn rejected_admissions(&self) -> usize {
+        self.sessions
+            .iter()
+            .filter(|s| s.disposition == SessionDisposition::Rejected)
+            .count()
+    }
+
+    /// Preemption-notice cycles survived across the fleet.
+    pub fn preempts(&self) -> u64 {
+        self.sessions.iter().map(|s| s.preempts as u64).sum()
+    }
+
+    /// Notice-triggered final checkpoints across the fleet.
+    pub fn notice_ckpts(&self) -> u64 {
+        self.sessions.iter().map(|s| s.notice_ckpts).sum()
+    }
+
+    /// `(p50, p99)` of kill-to-resumed restart latency across every
+    /// restart in the fleet, seconds (`(0, 0)` with no restarts).
+    pub fn restart_latency_percentiles(&self) -> (f64, f64) {
+        let mut xs: Vec<f64> = self
+            .sessions
+            .iter()
+            .flat_map(|s| s.restart_latencies_secs.iter().copied())
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        (percentile(&xs, 50.0), percentile(&xs, 99.0))
+    }
+
+    /// `(p50, p99)` of ready-queue wait across sessions that ran,
+    /// seconds.
+    pub fn queue_wait_percentiles(&self) -> (f64, f64) {
+        let mut xs: Vec<f64> = self
+            .sessions
+            .iter()
+            .filter(|s| s.disposition != SessionDisposition::Rejected)
+            .map(|s| s.queue_wait_secs)
+            .collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        (percentile(&xs, 50.0), percentile(&xs, 99.0))
     }
 
     /// Steps of progress lost to kills across the fleet.
@@ -239,17 +344,52 @@ impl CampaignReport {
         t
     }
 
+    /// One-row scheduling/SLO summary: admission rejections, queue-wait
+    /// and restart-latency percentiles, preemption-notice activity, and
+    /// shared-store burst collisions.
+    pub fn slo_table(&self) -> Table {
+        let (qw50, qw99) = self.queue_wait_percentiles();
+        let (rl50, rl99) = self.restart_latency_percentiles();
+        let mut t = Table::new(&[
+            "rejected",
+            "q-wait p50 (s)",
+            "q-wait p99 (s)",
+            "restart p50 (s)",
+            "restart p99 (s)",
+            "preempts",
+            "notice ckpts",
+            "burst collisions",
+        ]);
+        t.row(&[
+            self.rejected_admissions().to_string(),
+            format!("{qw50:.3}"),
+            format!("{qw99:.3}"),
+            format!("{rl50:.3}"),
+            format!("{rl99:.3}"),
+            self.preempts().to_string(),
+            self.notice_ckpts().to_string(),
+            self.burst_collisions.to_string(),
+        ]);
+        t
+    }
+
     /// Serialize the fleet summary (not the per-session rows) as JSON.
     pub fn to_json(&self) -> String {
         let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
         let (stored, logical, written, deduped) = self.store_totals();
         let ldms = self.ldms_rollup();
+        let (qw50, qw99) = self.queue_wait_percentiles();
+        let (rl50, rl99) = self.restart_latency_percentiles();
         format!(
             "{{\n  \"campaign\": \"{}\",\n  \"sessions\": {},\n  \"completed\": {},\n  \
              \"verified\": {},\n  \"kills\": {},\n  \"steps_done\": {},\n  \
              \"steps_lost\": {},\n  \"availability\": {:.6},\n  \"stored_bytes\": {},\n  \
              \"logical_bytes\": {},\n  \"chunks_written\": {},\n  \"chunks_deduped\": {},\n  \
              \"ldms_peak_memory_bytes\": {},\n  \"ldms_ckpt_stored_bytes\": {},\n  \
+             \"rejected_admissions\": {},\n  \"queue_wait_p50_secs\": {:.6},\n  \
+             \"queue_wait_p99_secs\": {:.6},\n  \"restart_latency_p50_secs\": {:.6},\n  \
+             \"restart_latency_p99_secs\": {:.6},\n  \"preempts\": {},\n  \
+             \"notice_ckpts\": {},\n  \"burst_collisions\": {},\n  \
              \"wall_secs\": {:.3}\n}}\n",
             esc(&self.name),
             self.sessions.len(),
@@ -265,6 +405,14 @@ impl CampaignReport {
             deduped,
             ldms.peak_memory_bytes,
             ldms.ckpt_stored_bytes,
+            self.rejected_admissions(),
+            qw50,
+            qw99,
+            rl50,
+            rl99,
+            self.preempts(),
+            self.notice_ckpts(),
+            self.burst_collisions,
             self.wall_secs,
         )
     }
@@ -275,31 +423,29 @@ mod tests {
     use super::*;
 
     fn outcome(index: u32, done: u64, lost: u64, completed: bool) -> SessionOutcome {
-        SessionOutcome {
-            index,
-            seed: 7 + index as u64,
-            disposition: if completed {
-                SessionDisposition::Completed
-            } else {
-                SessionDisposition::Straggler
-            },
-            ranks: 1,
-            verified: completed,
-            incarnations: 2,
-            kills: 1,
-            checkpoints: 3,
-            steps_done: done,
-            target_steps: done,
-            steps_lost: lost,
-            wall_secs: 0.5,
-            stored_bytes: 100,
-            logical_bytes: 400,
-            chunks_written: 5,
-            chunks_deduped: 7,
-            final_interval_ms: 40,
-            measured_ckpt_cost_ms: 2,
-            series: SampledSeries::default(),
-        }
+        let mut o = SessionOutcome::unstarted(index, 7 + index as u64, 1, done);
+        o.disposition = if completed {
+            SessionDisposition::Completed
+        } else {
+            SessionDisposition::Straggler
+        };
+        o.verified = completed;
+        o.incarnations = 2;
+        o.kills = 1;
+        o.checkpoints = 3;
+        o.steps_done = done;
+        o.steps_lost = lost;
+        o.wall_secs = 0.5;
+        o.stored_bytes = 100;
+        o.logical_bytes = 400;
+        o.chunks_written = 5;
+        o.chunks_deduped = 7;
+        o.final_interval_ms = 40;
+        o.measured_ckpt_cost_ms = 2;
+        o.queue_wait_secs = 0.25 * (index + 1) as f64;
+        o.restart_latencies_secs = vec![0.1 * (index + 1) as f64];
+        o.series = SampledSeries::default();
+        o
     }
 
     fn report() -> CampaignReport {
@@ -307,6 +453,7 @@ mod tests {
             name: "t".into(),
             sessions: vec![outcome(0, 600, 200, true), outcome(1, 600, 0, false)],
             wall_secs: 1.0,
+            burst_collisions: 3,
         }
     }
 
@@ -328,8 +475,11 @@ mod tests {
             name: "e".into(),
             sessions: vec![],
             wall_secs: 0.0,
+            burst_collisions: 0,
         };
         assert_eq!(r.availability(), 1.0);
+        assert_eq!(r.queue_wait_percentiles(), (0.0, 0.0));
+        assert_eq!(r.restart_latency_percentiles(), (0.0, 0.0));
     }
 
     #[test]
@@ -337,10 +487,31 @@ mod tests {
         let r = report();
         assert_eq!(r.table().n_rows(), 2);
         assert_eq!(r.summary_table().n_rows(), 1);
+        assert_eq!(r.slo_table().n_rows(), 1);
         let j = r.to_json();
         assert!(j.contains("\"sessions\": 2"), "{j}");
         assert!(j.contains("\"availability\": 0.857143"), "{j}");
+        assert!(j.contains("\"rejected_admissions\": 0"), "{j}");
+        assert!(j.contains("\"burst_collisions\": 3"), "{j}");
+        assert!(j.contains("\"queue_wait_p99_secs\": 0.500000"), "{j}");
+        assert!(j.contains("\"restart_latency_p50_secs\": 0.100000"), "{j}");
         assert!(!j.contains("NaN"), "{j}");
+    }
+
+    #[test]
+    fn percentiles_use_nearest_rank_and_rejections_count() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 50.0), 2.0);
+        assert_eq!(percentile(&xs, 99.0), 4.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        let mut r = report();
+        let mut rej = SessionOutcome::unstarted(2, 9, 1, 600);
+        rej.disposition = SessionDisposition::Rejected;
+        r.sessions.push(rej);
+        assert_eq!(r.rejected_admissions(), 1);
+        // Rejected sessions do not skew queue-wait percentiles.
+        assert_eq!(r.queue_wait_percentiles(), (0.25, 0.5));
     }
 
     #[test]

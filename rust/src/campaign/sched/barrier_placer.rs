@@ -1,0 +1,203 @@
+//! Fleet-level checkpoint-barrier placement.
+//!
+//! Young/Daly gives every session its own optimal interval, but the
+//! fleet shares one chunk store (and, with PR 6's daemon, one
+//! coordinator): when several sessions reach their barrier in the same
+//! window, their compression bursts collide and each effectively pays
+//! the whole fleet's checkpoint cost. The [`BarrierPlacer`] is the
+//! shared planner that staggers barriers — each session asks where to
+//! put its next checkpoint and gets its Daly target shifted just past
+//! any already-reserved burst window — and the [`BurstMeter`] is the
+//! ground-truth instrument that counts how many bursts actually
+//! overlapped.
+//!
+//! The placer also owns the preemption-notice override: when a SLURM
+//! grace notice arrives, [`final_ckpt_strictly_better`] decides whether
+//! one last "checkpoint now" beats riding the periodic cadence into the
+//! kill (it does exactly when there is unsaved work and the checkpoint
+//! can still finish inside the grace window).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared planner that keeps concurrent checkpoint bursts from landing
+/// in the same window. All methods take `&self`; one placer is shared
+/// by every worker of a fleet.
+#[derive(Debug, Default)]
+pub struct BarrierPlacer {
+    /// Reserved burst windows `(start, end)` in campaign seconds.
+    reserved: Mutex<Vec<(f64, f64)>>,
+    /// Barriers that had to move off their Daly target to avoid a
+    /// reserved window.
+    staggered: AtomicU64,
+}
+
+impl BarrierPlacer {
+    /// A fresh placer with no reservations.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reserve a burst window for a checkpoint of duration `cost_secs`
+    /// that wants to start at `now_secs + interval_secs`, and return the
+    /// start time actually granted: the Daly target if free, otherwise
+    /// the end of the last conflicting reservation (the stagger).
+    pub fn place(&self, now_secs: f64, interval_secs: f64, cost_secs: f64) -> f64 {
+        let cost = cost_secs.max(1e-9);
+        let mut want = now_secs + interval_secs.max(0.0);
+        let mut reserved = self.reserved.lock().expect("placer poisoned");
+        reserved.retain(|&(_, end)| end > now_secs);
+        // Sort by start so one forward scan resolves chained conflicts.
+        reserved.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        let target = want;
+        for &(start, end) in reserved.iter() {
+            if want < end && start < want + cost {
+                want = end;
+            }
+        }
+        if want > target {
+            self.staggered.fetch_add(1, Ordering::Relaxed);
+        }
+        reserved.push((want, want + cost));
+        want
+    }
+
+    /// Reserve an immediate window for a preemption-notice final
+    /// checkpoint: the notice overrides the stagger — the kill is
+    /// coming, so the burst starts now regardless of other reservations.
+    pub fn place_final(&self, now_secs: f64, cost_secs: f64) {
+        let mut reserved = self.reserved.lock().expect("placer poisoned");
+        reserved.push((now_secs, now_secs + cost_secs.max(1e-9)));
+    }
+
+    /// Barriers moved off their Daly target so far.
+    pub fn staggered(&self) -> u64 {
+        self.staggered.load(Ordering::Relaxed)
+    }
+
+    /// Reservations currently held (tests and diagnostics).
+    pub fn reserved_now(&self) -> usize {
+        self.reserved.lock().expect("placer poisoned").len()
+    }
+}
+
+/// Ground-truth burst-overlap instrument: wrap every `checkpoint_now`
+/// in [`BurstMeter::begin`]/[`BurstMeter::end`] and the meter counts
+/// how many bursts started while another was in flight — the collision
+/// number the placer exists to drive down.
+#[derive(Debug, Default)]
+pub struct BurstMeter {
+    in_flight: AtomicU32,
+    bursts: AtomicU64,
+    collisions: AtomicU64,
+}
+
+impl BurstMeter {
+    /// A fresh meter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a burst starting; returns whether it collided with one
+    /// already in flight.
+    pub fn begin(&self) -> bool {
+        let prior = self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.bursts.fetch_add(1, Ordering::Relaxed);
+        if prior > 0 {
+            self.collisions.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Record the burst finishing.
+    pub fn end(&self) {
+        self.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Bursts recorded so far.
+    pub fn bursts(&self) -> u64 {
+        self.bursts.load(Ordering::Relaxed)
+    }
+
+    /// Bursts that started while another was in flight.
+    pub fn collisions(&self) -> u64 {
+        self.collisions.load(Ordering::Relaxed)
+    }
+}
+
+/// The preemption-notice decision: is one final "checkpoint now"
+/// strictly better than riding the periodic cadence into the kill?
+///
+/// Yes exactly when there is work at risk (progress since the last
+/// completed checkpoint) *and* the checkpoint can still complete inside
+/// the remaining grace window — a final checkpoint that cannot finish
+/// saves nothing, and one with no unsaved work behind it buys nothing.
+pub fn final_ckpt_strictly_better(
+    work_at_risk_secs: f64,
+    ckpt_cost_secs: f64,
+    grace_left_secs: f64,
+) -> bool {
+    work_at_risk_secs > 0.0 && ckpt_cost_secs <= grace_left_secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placer_grants_free_targets_and_staggers_conflicts() {
+        let p = BarrierPlacer::new();
+        // First barrier lands on its Daly target.
+        let a = p.place(0.0, 10.0, 3.0);
+        assert_eq!(a, 10.0);
+        assert_eq!(p.staggered(), 0);
+        // Second wants the same window: shifted past the first burst.
+        let b = p.place(0.0, 10.0, 3.0);
+        assert!(b >= a + 3.0, "b = {b}");
+        assert_eq!(p.staggered(), 1);
+        // Third chains past both.
+        let c = p.place(0.0, 10.0, 3.0);
+        assert!(c >= b + 3.0, "c = {c}");
+        // A disjoint target is untouched.
+        let d = p.place(0.0, 100.0, 3.0);
+        assert_eq!(d, 100.0);
+    }
+
+    #[test]
+    fn placer_prunes_expired_reservations() {
+        let p = BarrierPlacer::new();
+        p.place(0.0, 1.0, 1.0);
+        p.place(0.0, 1.0, 1.0);
+        assert_eq!(p.reserved_now(), 2);
+        // Far in the future both reservations are history: the Daly
+        // target is granted unshifted and the table stays small.
+        let t = p.place(1_000.0, 5.0, 1.0);
+        assert_eq!(t, 1_005.0);
+        assert_eq!(p.reserved_now(), 1);
+    }
+
+    #[test]
+    fn meter_counts_overlaps_only() {
+        let m = BurstMeter::new();
+        assert!(!m.begin());
+        assert!(m.begin());
+        m.end();
+        m.end();
+        assert!(!m.begin());
+        m.end();
+        assert_eq!(m.bursts(), 3);
+        assert_eq!(m.collisions(), 1);
+    }
+
+    #[test]
+    fn notice_override_decision() {
+        // Unsaved work + enough grace: strictly better.
+        assert!(final_ckpt_strictly_better(30.0, 5.0, 120.0));
+        // No work at risk: the image is already current.
+        assert!(!final_ckpt_strictly_better(0.0, 5.0, 120.0));
+        // Checkpoint cannot finish before the kill: saves nothing.
+        assert!(!final_ckpt_strictly_better(30.0, 10.0, 4.0));
+    }
+}

@@ -1,0 +1,546 @@
+//! A deterministic virtual-time fleet laboratory for scheduler policies.
+//!
+//! Live fleets cannot back strict bench assertions — wall-clock noise
+//! swamps the effects under test. The lab replays the whole scheduling
+//! problem on a seeded 1-second virtual clock: sessions arrive by an
+//! [`ArrivalSpec`], pass admission control, get dispatched by a
+//! [`Scheduler`] into `slots` execution slots, checkpoint through a
+//! shared store that serializes compression bursts (b concurrent bursts
+//! each progress at `1/b`), and are preempted by seeded notice-preceded
+//! kill waves. Equal [`LabSpec`]s produce bit-identical [`LabOutcome`]s
+//! — the replay property `sched_arrivals.rs` asserts — so
+//! `benches/sched_campaign.rs` can demand *strict* wins for the
+//! checkpoint-aware policy over the naive-concurrent baseline.
+//!
+//! The two policies under comparison:
+//!
+//! * **naive-concurrent** ([`LabSpec::naive`]): FIFO dispatch, every
+//!   session checkpoints on its own Daly clock (in-phase bursts
+//!   collide on the shared store), preemption notices are ignored.
+//! * **checkpoint-aware** ([`LabSpec::aware`]): the [`BarrierPlacer`]
+//!   staggers barriers out of each other's burst windows, and on a
+//!   preemption notice the fleet drains — each at-risk session takes
+//!   one staggered final checkpoint and requeues voluntarily, so the
+//!   wave kills nothing that has unsaved work.
+
+use crate::campaign::sched::barrier_placer::{final_ckpt_strictly_better, BarrierPlacer};
+use crate::campaign::sched::queue::{
+    AdmitOutcome, CkptAwareScheduler, FifoScheduler, ReadyQueue, Scheduler, SchedulerKind,
+    SessionRequest,
+};
+use crate::campaign::sched::randvars::{ArrivalSpec, RandomVariable};
+use crate::campaign::report::percentile;
+use crate::error::{Error, Result};
+use crate::util::rng::SplitMix64;
+
+/// One scheduler-lab experiment, fully seeded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LabSpec {
+    /// Sessions in the fleet.
+    pub sessions: u32,
+    /// Concurrent execution slots (the live executor's `concurrency`).
+    pub slots: u32,
+    /// Per-session work model (seconds of compute).
+    pub work: RandomVariable,
+    /// When sessions enter the ready queue.
+    pub arrival: ArrivalSpec,
+    /// Admission bound (`None` = admit everything).
+    pub admit_max: Option<usize>,
+    /// Dispatch policy.
+    pub scheduler: SchedulerKind,
+    /// Checkpoint interval (seconds) — the Daly-derived cadence.
+    pub interval_secs: f64,
+    /// Checkpoint burst cost (seconds) on an uncontended store.
+    pub ckpt_cost_secs: f64,
+    /// Mean seconds between preemption waves (`0` = no preemption).
+    pub preempt_mtbf_secs: f64,
+    /// Grace notice: waves announce themselves this many seconds ahead
+    /// (the `--signal=B:SIG@offset` offset).
+    pub notice_secs: f64,
+    /// Whether the fleet heeds the notice (final checkpoint + drain) —
+    /// the preemption-notice override under test.
+    pub heed_notice: bool,
+    /// Whether barriers go through the [`BarrierPlacer`] stagger.
+    pub stagger: bool,
+    /// Requeue delay after a preemption or voluntary yield (seconds).
+    pub requeue_delay_secs: f64,
+    /// Anti-starvation deadline for the aware policy and the invariant
+    /// monitor (seconds waiting in queue).
+    pub starve_after_secs: f64,
+    /// Trace seed: equal specs replay bit-identical outcomes.
+    pub seed: u64,
+    /// Hard stop for the virtual clock (seconds).
+    pub horizon_secs: u64,
+}
+
+impl LabSpec {
+    /// The naive-concurrent baseline on a preemption trace: FIFO,
+    /// in-phase barriers, notices ignored. Sessions arrive by a Poisson
+    /// intake (~1 per 100 s) with bounded-jitter work sizes around a
+    /// 600 s mean, and checkpoint on the Young/Daly interval for the
+    /// trace's `(cost, MTBF)`.
+    pub fn naive(sessions: u32, slots: u32, seed: u64) -> Self {
+        LabSpec {
+            sessions,
+            slots,
+            work: RandomVariable::Uniform {
+                lo: 500.0,
+                hi: 700.0,
+            },
+            arrival: ArrivalSpec::Poisson { rate: 0.01 },
+            admit_max: None,
+            scheduler: SchedulerKind::Fifo,
+            interval_secs: crate::campaign::tune::young_daly_interval_secs(6.0, 500.0),
+            ckpt_cost_secs: 6.0,
+            preempt_mtbf_secs: 500.0,
+            notice_secs: 40.0,
+            heed_notice: false,
+            stagger: false,
+            requeue_delay_secs: 5.0,
+            starve_after_secs: 300.0,
+            seed,
+            horizon_secs: 200_000,
+        }
+    }
+
+    /// The checkpoint-aware configuration on the *same* trace as
+    /// [`LabSpec::naive`] (same seed ⇒ same work sizes, arrivals, and
+    /// wave times): staggered barriers, notice heeded.
+    pub fn aware(sessions: u32, slots: u32, seed: u64) -> Self {
+        LabSpec {
+            scheduler: SchedulerKind::CkptAware,
+            heed_notice: true,
+            stagger: true,
+            ..LabSpec::naive(sessions, slots, seed)
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.sessions == 0 || self.slots == 0 {
+            return Err(Error::Usage("lab needs sessions >= 1 and slots >= 1".into()));
+        }
+        if !(self.interval_secs > 0.0) || !(self.ckpt_cost_secs > 0.0) {
+            return Err(Error::Usage(
+                "lab needs positive interval and checkpoint cost".into(),
+            ));
+        }
+        if self.preempt_mtbf_secs > 0.0 && self.heed_notice && !(self.notice_secs > 0.0) {
+            return Err(Error::Usage(
+                "heeding a preemption notice needs notice_secs > 0".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// What one lab run measured. Equal specs produce equal outcomes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LabOutcome {
+    /// Virtual seconds until every admitted session finished.
+    pub makespan_secs: f64,
+    /// Work recomputed after preemptions (seconds).
+    pub work_lost_secs: f64,
+    /// Slot-seconds spent inside checkpoint bursts.
+    pub ckpt_overhead_secs: f64,
+    /// Sessions that reached their full work.
+    pub completed: u32,
+    /// Arrivals refused by admission control.
+    pub rejected: u64,
+    /// Checkpoints committed.
+    pub checkpoints: u64,
+    /// Bursts that started while another burst was in flight on the
+    /// shared store.
+    pub burst_collisions: u64,
+    /// Preemption waves that fired inside the run.
+    pub waves: u32,
+    /// Sessions killed by waves (a drained fleet dodges these).
+    pub preempted_sessions: u64,
+    /// Notice-triggered final checkpoints committed.
+    pub notice_ckpts: u64,
+    /// Whether every session still running at a wave had a completed
+    /// checkpoint covering its progress as of the notice — the
+    /// "restartable final checkpoint" property.
+    pub restartable_at_every_preemption: bool,
+    /// Invariant-9 monitor: ticks where a slot sat free while an
+    /// admitted request waited past its starvation deadline (drain
+    /// windows exempt — capacity there is about to be preempted away).
+    pub starvation_violations: u64,
+    /// Median queue wait (arrival/requeue to dispatch), seconds.
+    pub queue_wait_p50_secs: f64,
+    /// 99th-percentile queue wait, seconds.
+    pub queue_wait_p99_secs: f64,
+}
+
+/// Per-session state inside the lab.
+struct Sess {
+    work: f64,
+    progress: f64,
+    committed: f64,
+    running: bool,
+    burst: Option<Burst>,
+    next_ckpt: f64,
+    final_at: Option<f64>,
+    requeue_at: Option<f64>,
+    arrived: bool,
+    done: bool,
+    rejected: bool,
+}
+
+/// One in-flight checkpoint burst on the shared store.
+struct Burst {
+    remaining: f64,
+    commit_to: f64,
+    is_final: bool,
+}
+
+/// Run one lab experiment to completion (or the horizon).
+pub fn run_lab(spec: &LabSpec) -> Result<LabOutcome> {
+    spec.validate()?;
+    let n = spec.sessions as usize;
+    let offsets = spec.arrival.arrival_offsets(spec.sessions, spec.seed);
+    let mut size_rng = SplitMix64::new(spec.seed ^ 0x5EED_517E);
+    let mut wave_rng = SplitMix64::new(spec.seed ^ 0x9A7E_0FF5);
+    let mut sess: Vec<Sess> = (0..n)
+        .map(|_| Sess {
+            work: spec.work.sample(&mut size_rng).max(1.0),
+            progress: 0.0,
+            committed: 0.0,
+            running: false,
+            burst: None,
+            next_ckpt: f64::INFINITY,
+            final_at: None,
+            requeue_at: None,
+            arrived: false,
+            done: false,
+            rejected: false,
+        })
+        .collect();
+
+    let mut queue = ReadyQueue::new(spec.admit_max)?;
+    let mut sched: Box<dyn Scheduler> = match spec.scheduler {
+        SchedulerKind::Fifo => Box::new(FifoScheduler),
+        SchedulerKind::CkptAware => Box::new(CkptAwareScheduler {
+            starve_after_secs: spec.starve_after_secs,
+        }),
+    };
+    let placer = BarrierPlacer::new();
+
+    let mut next_wave = if spec.preempt_mtbf_secs > 0.0 {
+        wave_rng.gen_exp(spec.preempt_mtbf_secs)
+    } else {
+        f64::INFINITY
+    };
+    let mut notice_armed = false;
+    let mut progress_at_notice = vec![0.0f64; n];
+
+    let mut out = LabOutcome {
+        makespan_secs: 0.0,
+        work_lost_secs: 0.0,
+        ckpt_overhead_secs: 0.0,
+        completed: 0,
+        rejected: 0,
+        checkpoints: 0,
+        burst_collisions: 0,
+        waves: 0,
+        preempted_sessions: 0,
+        notice_ckpts: 0,
+        restartable_at_every_preemption: true,
+        starvation_violations: 0,
+        queue_wait_p50_secs: 0.0,
+        queue_wait_p99_secs: 0.0,
+    };
+    let mut waits: Vec<f64> = Vec::new();
+
+    // Schedule one session's next periodic barrier.
+    let next_barrier = |placer: &BarrierPlacer, now: f64| -> f64 {
+        if spec.stagger {
+            placer.place(now, spec.interval_secs, spec.ckpt_cost_secs)
+        } else {
+            now + spec.interval_secs
+        }
+    };
+    // Start a burst, counting a collision if the shared store already
+    // has one in flight.
+    let start_burst = |sess: &mut [Sess], i: usize, is_final: bool, out: &mut LabOutcome| {
+        let in_flight = sess.iter().filter(|s| s.burst.is_some()).count();
+        if in_flight > 0 {
+            out.burst_collisions += 1;
+        }
+        sess[i].burst = Some(Burst {
+            remaining: spec.ckpt_cost_secs,
+            commit_to: sess[i].progress,
+            is_final,
+        });
+    };
+
+    for tick in 0..spec.horizon_secs {
+        let t = tick as f64;
+        let drain = spec.heed_notice && t >= next_wave - spec.notice_secs;
+
+        // 1. Fresh arrivals meet admission control.
+        for i in 0..n {
+            if !sess[i].arrived && offsets[i] <= t {
+                sess[i].arrived = true;
+                let req = SessionRequest {
+                    index: i as u32,
+                    arrival_secs: t,
+                    work_estimate_secs: sess[i].work,
+                    ckpt_cost_secs: spec.ckpt_cost_secs,
+                };
+                if let AdmitOutcome::Rejected(_) = queue.offer(req) {
+                    sess[i].rejected = true;
+                    out.rejected += 1;
+                }
+            }
+        }
+        // 2. Requeued sessions whose delay elapsed re-enter (never
+        // rejected — they were already admitted).
+        for i in 0..n {
+            if sess[i].requeue_at.is_some_and(|r| r <= t) {
+                sess[i].requeue_at = None;
+                queue.requeue(SessionRequest {
+                    index: i as u32,
+                    arrival_secs: t,
+                    work_estimate_secs: sess[i].work - sess[i].progress,
+                    ckpt_cost_secs: spec.ckpt_cost_secs,
+                });
+            }
+        }
+
+        // 3. Notice handling: record at-risk progress for the wave's
+        // restartability audit; a heeding fleet schedules staggered
+        // final checkpoints for every session the override helps.
+        if next_wave.is_finite() && t >= next_wave - spec.notice_secs && !notice_armed {
+            notice_armed = true;
+            let mut lane = 0u32;
+            for i in 0..n {
+                if sess[i].running {
+                    progress_at_notice[i] = sess[i].progress;
+                    let at_risk = sess[i].progress - sess[i].committed;
+                    if spec.heed_notice
+                        && final_ckpt_strictly_better(
+                            at_risk,
+                            spec.ckpt_cost_secs,
+                            next_wave - t,
+                        )
+                    {
+                        // Serialize final bursts so the shared store
+                        // finishes each inside the grace window.
+                        sess[i].final_at = Some(t + lane as f64 * spec.ckpt_cost_secs);
+                        lane += 1;
+                    }
+                }
+            }
+        }
+        if spec.heed_notice {
+            for i in 0..n {
+                if sess[i].running
+                    && sess[i].burst.is_none()
+                    && sess[i].final_at.is_some_and(|at| t >= at)
+                {
+                    sess[i].final_at = None;
+                    start_burst(&mut sess, i, true, &mut out);
+                }
+            }
+        }
+
+        // 4. The wave fires: everything still running is preempted.
+        if t >= next_wave {
+            out.waves += 1;
+            for i in 0..n {
+                if sess[i].running {
+                    out.preempted_sessions += 1;
+                    if sess[i].committed + 1e-9 < progress_at_notice[i] {
+                        out.restartable_at_every_preemption = false;
+                    }
+                    out.work_lost_secs += sess[i].progress - sess[i].committed;
+                    sess[i].progress = sess[i].committed;
+                    sess[i].burst = None;
+                    sess[i].final_at = None;
+                    sess[i].running = false;
+                    sess[i].requeue_at = Some(t + spec.requeue_delay_secs);
+                }
+            }
+            next_wave = t + wave_rng.gen_exp(spec.preempt_mtbf_secs);
+            notice_armed = false;
+        }
+
+        // 5. The shared store advances every in-flight burst at 1/b.
+        let b = sess.iter().filter(|s| s.burst.is_some()).count();
+        if b > 0 {
+            out.ckpt_overhead_secs += b as f64;
+            let rate = 1.0 / b as f64;
+            for i in 0..n {
+                let Some(burst) = sess[i].burst.as_mut() else {
+                    continue;
+                };
+                burst.remaining -= rate;
+                if burst.remaining <= 1e-9 {
+                    sess[i].committed = burst.commit_to;
+                    out.checkpoints += 1;
+                    let was_final = burst.is_final;
+                    sess[i].burst = None;
+                    if was_final {
+                        // Voluntary yield: the override saved the work;
+                        // give the doomed slot back before the wave.
+                        out.notice_ckpts += 1;
+                        sess[i].running = false;
+                        sess[i].requeue_at = Some(t + spec.requeue_delay_secs);
+                    } else {
+                        sess[i].next_ckpt = next_barrier(&placer, t);
+                    }
+                }
+            }
+        }
+
+        // 6. Compute advances for running sessions outside a burst.
+        for i in 0..n {
+            if sess[i].running && sess[i].burst.is_none() {
+                sess[i].progress += 1.0;
+                if sess[i].progress >= sess[i].work {
+                    sess[i].running = false;
+                    sess[i].done = true;
+                    sess[i].final_at = None;
+                    out.completed += 1;
+                    out.makespan_secs = t + 1.0;
+                }
+            }
+        }
+
+        // 7. Periodic barriers come due — skipped while a final
+        // checkpoint is pending, and fleet-wide during a heeded drain:
+        // the override supersedes the cadence, and a periodic burst
+        // started inside the grace window would contend with the final
+        // lanes on the shared store and could push one past the wave.
+        for i in 0..n {
+            if !drain
+                && sess[i].running
+                && sess[i].burst.is_none()
+                && sess[i].final_at.is_none()
+                && t >= sess[i].next_ckpt
+            {
+                if sess[i].progress > sess[i].committed + 1e-9 {
+                    start_burst(&mut sess, i, false, &mut out);
+                } else {
+                    sess[i].next_ckpt = next_barrier(&placer, t);
+                }
+            }
+        }
+
+        // 8. Dispatch freed slots — paused during a heeded drain
+        // window (new work dispatched there would die at the wave).
+        let mut running_count = sess.iter().filter(|s| s.running).count();
+        if !drain {
+            while running_count < spec.slots as usize {
+                match sched.pick(&queue, t) {
+                    Some(pos) => {
+                        let req = queue.take(pos).expect("scheduler picked a live slot");
+                        let i = req.index as usize;
+                        waits.push(t - req.arrival_secs);
+                        sess[i].running = true;
+                        sess[i].next_ckpt = next_barrier(&placer, t);
+                        running_count += 1;
+                    }
+                    None => {
+                        if queue
+                            .waiting()
+                            .iter()
+                            .any(|r| t - r.arrival_secs >= spec.starve_after_secs)
+                        {
+                            out.starvation_violations += 1;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+
+        // 9. Done when every session is accounted for.
+        let settled = sess.iter().filter(|s| s.done || s.rejected).count();
+        if settled == n {
+            break;
+        }
+        if tick + 1 == spec.horizon_secs {
+            out.makespan_secs = spec.horizon_secs as f64;
+        }
+    }
+
+    waits.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    out.queue_wait_p50_secs = percentile(&waits, 50.0);
+    out.queue_wait_p99_secs = percentile(&waits, 99.0);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lab_is_deterministic_per_seed() {
+        let spec = LabSpec::aware(8, 3, 42);
+        let a = run_lab(&spec).unwrap();
+        let b = run_lab(&spec).unwrap();
+        assert_eq!(a, b);
+        // A different seed is a different trace.
+        let c = run_lab(&LabSpec::aware(8, 3, 43)).unwrap();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn quiet_fleet_completes_without_losses() {
+        let spec = LabSpec {
+            preempt_mtbf_secs: 0.0,
+            ..LabSpec::naive(4, 2, 7)
+        };
+        let out = run_lab(&spec).unwrap();
+        assert_eq!(out.completed, 4);
+        assert_eq!(out.work_lost_secs, 0.0);
+        assert_eq!(out.waves, 0);
+        assert!(out.makespan_secs > 0.0);
+        assert_eq!(out.starvation_violations, 0);
+    }
+
+    #[test]
+    fn admission_bound_rejects_overflow_arrivals() {
+        let spec = LabSpec {
+            admit_max: Some(1),
+            slots: 1,
+            preempt_mtbf_secs: 0.0,
+            work: RandomVariable::Constant { c: 50.0 },
+            // Static intake: all six hit admission control at t = 0, so
+            // the capacity-1 queue must turn some away.
+            arrival: ArrivalSpec::Static,
+            ..LabSpec::naive(6, 1, 11)
+        };
+        let out = run_lab(&spec).unwrap();
+        assert!(out.rejected >= 1, "{out:?}");
+        assert_eq!(out.completed as u64 + out.rejected, 6);
+    }
+
+    #[test]
+    fn aware_lab_survives_preemption_restartably() {
+        let out = run_lab(&LabSpec::aware(10, 4, 5)).unwrap();
+        assert_eq!(out.completed, 10);
+        assert!(out.restartable_at_every_preemption, "{out:?}");
+        assert_eq!(out.starvation_violations, 0, "{out:?}");
+    }
+
+    #[test]
+    fn pathological_lab_specs_are_typed_errors() {
+        assert!(run_lab(&LabSpec {
+            sessions: 0,
+            ..LabSpec::naive(1, 1, 1)
+        })
+        .is_err());
+        assert!(run_lab(&LabSpec {
+            interval_secs: 0.0,
+            ..LabSpec::naive(1, 1, 1)
+        })
+        .is_err());
+        assert!(run_lab(&LabSpec {
+            notice_secs: 0.0,
+            ..LabSpec::aware(1, 1, 1)
+        })
+        .is_err());
+    }
+}

@@ -1,0 +1,44 @@
+//! Checkpoint-aware fleet scheduling: arrival models, admission
+//! control, and barrier placement (DESIGN §12).
+//!
+//! The paper's operational claim — C/R turns preemptible capacity into
+//! reliable throughput — needs a decision layer above the per-session
+//! Young/Daly cadence: *when* sessions enter the fleet, *which* waiting
+//! session a freed slot runs, and *where* each session's checkpoint
+//! barrier lands relative to everyone else sharing the chunk store and
+//! (since PR 6) the one coordinator daemon. This module is that layer:
+//!
+//! * [`randvars`] — seeded [`RandomVariable`] arrival/size models
+//!   (Poisson inter-arrival, LogNormal/Exp work sizes) feeding an
+//!   [`ArrivalSpec`] arrival process instead of a static session list.
+//! * [`queue`] — admission control: a bounded [`ReadyQueue`] with typed
+//!   [`RejectReason`] outcomes, and pluggable [`Scheduler`] policies
+//!   (FIFO baseline, checkpoint-cost-aware smallest-remaining-work
+//!   with anti-starvation aging — invariant 9).
+//! * [`barrier_placer`] — the fleet-level [`BarrierPlacer`] that
+//!   staggers Daly barriers out of each other's compression-burst
+//!   windows, the [`BurstMeter`] that measures real burst collisions,
+//!   and the [`final_ckpt_strictly_better`] preemption-notice override.
+//! * [`lab`] — the seeded virtual-time laboratory ([`run_lab`]) where
+//!   `benches/sched_campaign.rs` proves the aware policy strictly
+//!   beats the naive-concurrent baseline, deterministically.
+//!
+//! The live integration lives in [`crate::campaign::executor`]: the
+//! worker pool consumes a `dyn Scheduler` tick loop instead of
+//! draining a Vec, and `CampaignSpec` grows `arrival`, `scheduler`,
+//! `admit_max`, and `preempt_signal` keys.
+
+#![deny(missing_docs)]
+
+pub mod barrier_placer;
+pub mod lab;
+pub mod queue;
+pub mod randvars;
+
+pub use barrier_placer::{final_ckpt_strictly_better, BarrierPlacer, BurstMeter};
+pub use lab::{run_lab, LabOutcome, LabSpec};
+pub use queue::{
+    AdmitOutcome, CkptAwareScheduler, FifoScheduler, ReadyQueue, RejectReason, Scheduler,
+    SchedulerKind, SessionRequest,
+};
+pub use randvars::{ArrivalSpec, RandomVariable};

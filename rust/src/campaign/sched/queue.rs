@@ -1,0 +1,338 @@
+//! Admission control and pluggable dispatch policies.
+//!
+//! The executor no longer drains a static Vec: arrivals land in a
+//! bounded [`ReadyQueue`] (admission control — a full queue produces a
+//! typed [`RejectReason`], never an unbounded backlog), and a
+//! [`Scheduler`] policy decides which admitted request each freed slot
+//! picks up. The FIFO baseline reproduces the old index-order drain;
+//! the checkpoint-cost-aware policy runs smallest-remaining-work first
+//! (cheap sessions stop blocking slots behind expensive ones), with an
+//! aging escape hatch that upholds DESIGN invariant 9: an admitted
+//! request past its deadline is never passed over while a slot is free.
+
+use std::collections::VecDeque;
+
+use crate::error::{Error, Result};
+
+/// One session asking the fleet for a slot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionRequest {
+    /// Fleet index of the session (its identity everywhere else).
+    pub index: u32,
+    /// When the request entered the system (seconds on the campaign
+    /// clock).
+    pub arrival_secs: f64,
+    /// Estimated remaining work, in seconds of compute. Restarted
+    /// sessions re-enter with their *remaining* work, so the aware
+    /// policy favors nearly-done restarts.
+    pub work_estimate_secs: f64,
+    /// Estimated per-checkpoint cost for this session (seconds).
+    pub ckpt_cost_secs: f64,
+}
+
+/// Why an arrival was refused admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded ready queue was full at arrival time.
+    QueueFull {
+        /// The queue's capacity at the moment of rejection.
+        capacity: usize,
+    },
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull { capacity } => {
+                write!(f, "ready queue full (admit_max = {capacity})")
+            }
+        }
+    }
+}
+
+/// What admission control decided about one arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmitOutcome {
+    /// The request is in the ready queue.
+    Admitted,
+    /// The request was turned away (typed reason preserved).
+    Rejected(RejectReason),
+}
+
+/// The bounded ready queue between the arrival process and the slots.
+///
+/// `capacity = None` means unbounded (the default: every arrival is
+/// admitted, as before this subsystem existed). Requeued restarts
+/// bypass the bound — a session the fleet already admitted is never
+/// rejected halfway through its work.
+#[derive(Debug)]
+pub struct ReadyQueue {
+    items: VecDeque<SessionRequest>,
+    capacity: Option<usize>,
+    admitted: u64,
+    rejected: u64,
+}
+
+impl ReadyQueue {
+    /// A queue admitting at most `capacity` waiting requests at a time
+    /// (`None` = unbounded). Zero capacity is a configuration error.
+    pub fn new(capacity: Option<usize>) -> Result<Self> {
+        if capacity == Some(0) {
+            return Err(Error::Usage(
+                "admit_max must be >= 1 (a zero-capacity queue admits nothing)".into(),
+            ));
+        }
+        Ok(Self {
+            items: VecDeque::new(),
+            capacity,
+            admitted: 0,
+            rejected: 0,
+        })
+    }
+
+    /// Offer a fresh arrival to admission control.
+    pub fn offer(&mut self, req: SessionRequest) -> AdmitOutcome {
+        if let Some(cap) = self.capacity {
+            if self.items.len() >= cap {
+                self.rejected += 1;
+                return AdmitOutcome::Rejected(RejectReason::QueueFull { capacity: cap });
+            }
+        }
+        self.admitted += 1;
+        self.items.push_back(req);
+        AdmitOutcome::Admitted
+    }
+
+    /// Re-enter a request the fleet already admitted (a preempted or
+    /// killed session coming back from requeue). Never rejected.
+    pub fn requeue(&mut self, req: SessionRequest) {
+        self.items.push_back(req);
+    }
+
+    /// The waiting requests, arrival order (schedulers index into this).
+    pub fn waiting(&self) -> &VecDeque<SessionRequest> {
+        &self.items
+    }
+
+    /// Remove and return the request at `pos` (scheduler's pick).
+    pub fn take(&mut self, pos: usize) -> Option<SessionRequest> {
+        self.items.remove(pos)
+    }
+
+    /// Number of requests waiting now.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Arrivals admitted over the queue's lifetime.
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    /// Arrivals rejected over the queue's lifetime.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+}
+
+/// A dispatch policy: given the ready queue and the clock, which
+/// waiting request should the freed slot run next?
+pub trait Scheduler: Send {
+    /// The policy's name (reports, bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Position (into [`ReadyQueue::waiting`]) of the next request to
+    /// dispatch, or `None` to leave the slot idle.
+    fn pick(&mut self, queue: &ReadyQueue, now_secs: f64) -> Option<usize>;
+}
+
+/// First-come-first-served: dispatch in arrival order — exactly the
+/// drain order the pre-scheduler executor had.
+#[derive(Debug, Default)]
+pub struct FifoScheduler;
+
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&mut self, queue: &ReadyQueue, _now_secs: f64) -> Option<usize> {
+        (!queue.is_empty()).then_some(0)
+    }
+}
+
+/// Checkpoint-cost-aware policy: smallest remaining work plus one
+/// checkpoint-cost round first, so short sessions (and nearly-done
+/// restarts) clear slots quickly, with FIFO aging past
+/// `starve_after_secs` to uphold invariant 9.
+#[derive(Debug)]
+pub struct CkptAwareScheduler {
+    /// A request waiting longer than this is dispatched FIFO ahead of
+    /// any smallest-work pick (the anti-starvation deadline).
+    pub starve_after_secs: f64,
+}
+
+impl Default for CkptAwareScheduler {
+    fn default() -> Self {
+        Self {
+            starve_after_secs: 600.0,
+        }
+    }
+}
+
+impl Scheduler for CkptAwareScheduler {
+    fn name(&self) -> &'static str {
+        "ckpt-aware"
+    }
+
+    fn pick(&mut self, queue: &ReadyQueue, now_secs: f64) -> Option<usize> {
+        // Invariant 9: an admitted request past its deadline preempts
+        // the cost ordering — oldest first.
+        let starved = queue
+            .waiting()
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| now_secs - r.arrival_secs >= self.starve_after_secs)
+            .min_by(|(_, a), (_, b)| {
+                a.arrival_secs
+                    .partial_cmp(&b.arrival_secs)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+        if let Some((pos, _)) = starved {
+            return Some(pos);
+        }
+        queue
+            .waiting()
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                let ka = a.work_estimate_secs + a.ckpt_cost_secs;
+                let kb = b.work_estimate_secs + b.ckpt_cost_secs;
+                ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|(pos, _)| pos)
+    }
+}
+
+/// Which dispatch policy a spec asks for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// Arrival order ([`FifoScheduler`]).
+    Fifo,
+    /// Smallest work-plus-checkpoint-cost first with anti-starvation
+    /// aging ([`CkptAwareScheduler`]).
+    CkptAware,
+}
+
+impl Default for SchedulerKind {
+    fn default() -> Self {
+        SchedulerKind::Fifo
+    }
+}
+
+impl SchedulerKind {
+    /// Parse the spec/CLI spelling: `fifo` or `ckpt-aware`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fifo" => Ok(SchedulerKind::Fifo),
+            "ckpt-aware" | "ckpt_aware" => Ok(SchedulerKind::CkptAware),
+            _ => Err(Error::Usage(format!(
+                "bad scheduler {s:?} (want fifo or ckpt-aware)"
+            ))),
+        }
+    }
+
+    /// The canonical spelling [`SchedulerKind::parse`] accepts.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Fifo => "fifo",
+            SchedulerKind::CkptAware => "ckpt-aware",
+        }
+    }
+
+    /// Instantiate the policy.
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Fifo => Box::new(FifoScheduler),
+            SchedulerKind::CkptAware => Box::new(CkptAwareScheduler::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(index: u32, arrival: f64, work: f64) -> SessionRequest {
+        SessionRequest {
+            index,
+            arrival_secs: arrival,
+            work_estimate_secs: work,
+            ckpt_cost_secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn bounded_queue_rejects_past_capacity_but_requeues_freely() {
+        let mut q = ReadyQueue::new(Some(2)).unwrap();
+        assert_eq!(q.offer(req(0, 0.0, 5.0)), AdmitOutcome::Admitted);
+        assert_eq!(q.offer(req(1, 0.1, 5.0)), AdmitOutcome::Admitted);
+        assert_eq!(
+            q.offer(req(2, 0.2, 5.0)),
+            AdmitOutcome::Rejected(RejectReason::QueueFull { capacity: 2 })
+        );
+        // An already-admitted session coming back from preemption is
+        // never bounced, even over capacity.
+        q.requeue(req(0, 0.3, 2.0));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.admitted(), 2);
+        assert_eq!(q.rejected(), 1);
+        assert!(ReadyQueue::new(Some(0)).is_err());
+    }
+
+    #[test]
+    fn fifo_picks_arrival_order() {
+        let mut q = ReadyQueue::new(None).unwrap();
+        q.offer(req(0, 0.0, 9.0));
+        q.offer(req(1, 1.0, 1.0));
+        let mut s = FifoScheduler;
+        assert_eq!(s.pick(&q, 2.0), Some(0));
+        assert_eq!(q.take(0).unwrap().index, 0);
+        assert_eq!(s.pick(&q, 2.0), Some(0));
+        q.take(0);
+        assert_eq!(s.pick(&q, 2.0), None);
+    }
+
+    #[test]
+    fn ckpt_aware_picks_smallest_work_until_starvation() {
+        let mut q = ReadyQueue::new(None).unwrap();
+        q.offer(req(0, 0.0, 9.0));
+        q.offer(req(1, 1.0, 1.0));
+        let mut s = CkptAwareScheduler {
+            starve_after_secs: 100.0,
+        };
+        // Smallest work wins while nobody is starved.
+        let pos = s.pick(&q, 2.0).unwrap();
+        assert_eq!(q.waiting()[pos].index, 1);
+        // Past the deadline the oldest request jumps the ordering.
+        let pos = s.pick(&q, 150.0).unwrap();
+        assert_eq!(q.waiting()[pos].index, 0);
+    }
+
+    #[test]
+    fn kind_parses_builds_and_names() {
+        assert_eq!(SchedulerKind::parse("fifo").unwrap(), SchedulerKind::Fifo);
+        assert_eq!(
+            SchedulerKind::parse("ckpt_aware").unwrap(),
+            SchedulerKind::CkptAware
+        );
+        assert!(SchedulerKind::parse("lottery").is_err());
+        assert_eq!(SchedulerKind::CkptAware.build().name(), "ckpt-aware");
+        assert_eq!(SchedulerKind::Fifo.name(), "fifo");
+    }
+}

@@ -1,0 +1,344 @@
+//! Seeded random-variable models for arrival processes and work sizes.
+//!
+//! Campaigns stop being static session lists once the fleet has an
+//! *arrival process*: sessions enter the ready queue at seeded random
+//! offsets, sized by seeded random work models, exactly the way a batch
+//! queue's intake looks to the scheduler. Every distribution here
+//! samples from a caller-owned [`SplitMix64`], so equal seeds replay
+//! bit-identical arrival traces — the property every campaign-level
+//! replay test leans on.
+//!
+//! Constructors return typed [`Error::Usage`] values for pathological
+//! parameters (NaN, infinities, non-positive rates); nothing in this
+//! module panics on bad input.
+
+use crate::error::{Error, Result};
+use crate::util::rng::SplitMix64;
+
+/// A seeded scalar random variable over non-negative reals.
+///
+/// The variants cover the models the scheduler literature actually uses
+/// for intake processes: constants for pinned grids, uniforms for
+/// bounded jitter, exponentials for memoryless inter-arrival gaps,
+/// Poisson counts, and log-normals for the heavy-tailed work sizes real
+/// job traces show.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RandomVariable {
+    /// Always `c`.
+    Constant {
+        /// The constant value.
+        c: f64,
+    },
+    /// Uniform on `[lo, hi)`.
+    Uniform {
+        /// Inclusive lower bound.
+        lo: f64,
+        /// Exclusive upper bound.
+        hi: f64,
+    },
+    /// Exponential with the given mean (rate `1/mean`).
+    Exp {
+        /// Mean of the distribution.
+        mean: f64,
+    },
+    /// Poisson counts with rate `lambda`.
+    Poisson {
+        /// Expected count per unit.
+        lambda: f64,
+    },
+    /// Log-normal: `exp(N(mu, sigma^2))`.
+    LogNormal {
+        /// Mean of the underlying normal.
+        mu: f64,
+        /// Standard deviation of the underlying normal.
+        sigma: f64,
+    },
+}
+
+/// Reject NaN/infinite parameters with a typed usage error.
+fn finite(what: &str, v: f64) -> Result<f64> {
+    if v.is_finite() {
+        Ok(v)
+    } else {
+        Err(Error::Usage(format!("{what} must be finite, got {v}")))
+    }
+}
+
+impl RandomVariable {
+    /// A constant variable (must be finite and non-negative).
+    pub fn constant(c: f64) -> Result<Self> {
+        let c = finite("constant value", c)?;
+        if c < 0.0 {
+            return Err(Error::Usage(format!(
+                "constant value must be >= 0, got {c}"
+            )));
+        }
+        Ok(RandomVariable::Constant { c })
+    }
+
+    /// A uniform variable on `[lo, hi)` (finite, `0 <= lo < hi`).
+    pub fn uniform(lo: f64, hi: f64) -> Result<Self> {
+        let lo = finite("uniform lo", lo)?;
+        let hi = finite("uniform hi", hi)?;
+        if lo < 0.0 || lo >= hi {
+            return Err(Error::Usage(format!(
+                "uniform needs 0 <= lo < hi, got [{lo}, {hi})"
+            )));
+        }
+        Ok(RandomVariable::Uniform { lo, hi })
+    }
+
+    /// An exponential variable with the given mean (finite, positive).
+    pub fn exp(mean: f64) -> Result<Self> {
+        let mean = finite("exp mean", mean)?;
+        if mean <= 0.0 {
+            return Err(Error::Usage(format!("exp mean must be > 0, got {mean}")));
+        }
+        Ok(RandomVariable::Exp { mean })
+    }
+
+    /// A Poisson count variable with rate `lambda` (finite, positive).
+    pub fn poisson(lambda: f64) -> Result<Self> {
+        let lambda = finite("poisson lambda", lambda)?;
+        if lambda <= 0.0 {
+            return Err(Error::Usage(format!(
+                "poisson lambda must be > 0, got {lambda}"
+            )));
+        }
+        Ok(RandomVariable::Poisson { lambda })
+    }
+
+    /// A log-normal variable `exp(N(mu, sigma^2))` (finite parameters,
+    /// `sigma > 0`, and small enough that the mean does not overflow).
+    pub fn lognormal(mu: f64, sigma: f64) -> Result<Self> {
+        let mu = finite("lognormal mu", mu)?;
+        let sigma = finite("lognormal sigma", sigma)?;
+        if sigma <= 0.0 {
+            return Err(Error::Usage(format!(
+                "lognormal sigma must be > 0, got {sigma}"
+            )));
+        }
+        if mu + sigma * sigma / 2.0 > 700.0 {
+            return Err(Error::Usage(format!(
+                "lognormal(mu = {mu}, sigma = {sigma}) has an unrepresentable mean"
+            )));
+        }
+        Ok(RandomVariable::LogNormal { mu, sigma })
+    }
+
+    /// The analytic mean — what a long sample average converges to.
+    pub fn mean(&self) -> f64 {
+        match *self {
+            RandomVariable::Constant { c } => c,
+            RandomVariable::Uniform { lo, hi } => (lo + hi) / 2.0,
+            RandomVariable::Exp { mean } => mean,
+            RandomVariable::Poisson { lambda } => lambda,
+            RandomVariable::LogNormal { mu, sigma } => (mu + sigma * sigma / 2.0).exp(),
+        }
+    }
+
+    /// Draw one sample from `rng`. Always finite and non-negative.
+    pub fn sample(&self, rng: &mut SplitMix64) -> f64 {
+        match *self {
+            RandomVariable::Constant { c } => c,
+            RandomVariable::Uniform { lo, hi } => rng.gen_f64(lo, hi),
+            RandomVariable::Exp { mean } => rng.gen_exp(mean),
+            RandomVariable::Poisson { lambda } => sample_poisson(lambda, rng),
+            RandomVariable::LogNormal { mu, sigma } => (mu + sigma * rng.gen_normal()).exp(),
+        }
+    }
+
+    /// Parse the spec/CLI spelling: `const:C`, `uniform:LO:HI`,
+    /// `exp:MEAN`, `poisson:LAMBDA`, `lognormal:MU:SIGMA`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let bad = || Error::Usage(format!("bad random variable {s:?}"));
+        let mut parts = s.split(':');
+        let kind = parts.next().ok_or_else(bad)?;
+        let mut nums = Vec::new();
+        for p in parts {
+            nums.push(p.parse::<f64>().map_err(|_| bad())?);
+        }
+        match (kind, nums.as_slice()) {
+            ("const", [c]) => RandomVariable::constant(*c),
+            ("uniform", [lo, hi]) => RandomVariable::uniform(*lo, *hi),
+            ("exp", [m]) => RandomVariable::exp(*m),
+            ("poisson", [l]) => RandomVariable::poisson(*l),
+            ("lognormal", [mu, sigma]) => RandomVariable::lognormal(*mu, *sigma),
+            _ => Err(bad()),
+        }
+    }
+
+    /// Render the spelling [`RandomVariable::parse`] accepts.
+    pub fn render(&self) -> String {
+        match *self {
+            RandomVariable::Constant { c } => format!("const:{c}"),
+            RandomVariable::Uniform { lo, hi } => format!("uniform:{lo}:{hi}"),
+            RandomVariable::Exp { mean } => format!("exp:{mean}"),
+            RandomVariable::Poisson { lambda } => format!("poisson:{lambda}"),
+            RandomVariable::LogNormal { mu, sigma } => format!("lognormal:{mu}:{sigma}"),
+        }
+    }
+}
+
+/// Poisson sampler: Knuth's product-of-uniforms for small `lambda`, the
+/// normal approximation (clamped at zero) past `lambda > 30`, where the
+/// product underflows and the Gaussian error is already negligible.
+fn sample_poisson(lambda: f64, rng: &mut SplitMix64) -> f64 {
+    if lambda > 30.0 {
+        return (lambda + lambda.sqrt() * rng.gen_normal()).round().max(0.0);
+    }
+    let limit = (-lambda).exp();
+    let mut k = 0u64;
+    let mut prod = rng.next_f64();
+    while prod > limit {
+        k += 1;
+        prod *= rng.next_f64();
+    }
+    k as f64
+}
+
+/// When the fleet's sessions enter the ready queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalSpec {
+    /// Everything is ready at `t = 0` — the pre-scheduler static drain.
+    Static,
+    /// Memoryless intake: exponential inter-arrival gaps with `rate`
+    /// sessions per second.
+    Poisson {
+        /// Arrival rate in sessions per second.
+        rate: f64,
+    },
+}
+
+impl Default for ArrivalSpec {
+    fn default() -> Self {
+        ArrivalSpec::Static
+    }
+}
+
+impl ArrivalSpec {
+    /// A Poisson arrival process (finite, positive rate).
+    pub fn poisson(rate: f64) -> Result<Self> {
+        let rate = finite("arrival rate", rate)?;
+        if rate <= 0.0 {
+            return Err(Error::Usage(format!(
+                "poisson arrival rate must be > 0, got {rate}"
+            )));
+        }
+        Ok(ArrivalSpec::Poisson { rate })
+    }
+
+    /// Parse the spec spelling: `static` or `poisson:RATE`.
+    pub fn parse(s: &str) -> Result<Self> {
+        if s == "static" {
+            return Ok(ArrivalSpec::Static);
+        }
+        match s.split_once(':') {
+            Some(("poisson", rate)) => {
+                let rate: f64 = rate
+                    .parse()
+                    .map_err(|_| Error::Usage(format!("bad arrival rate {rate:?}")))?;
+                ArrivalSpec::poisson(rate)
+            }
+            _ => Err(Error::Usage(format!(
+                "bad arrival {s:?} (want static or poisson:RATE)"
+            ))),
+        }
+    }
+
+    /// Render the spelling [`ArrivalSpec::parse`] accepts.
+    pub fn render(&self) -> String {
+        match *self {
+            ArrivalSpec::Static => "static".into(),
+            ArrivalSpec::Poisson { rate } => format!("poisson:{rate}"),
+        }
+    }
+
+    /// The seeded arrival offsets (seconds) for `n` sessions, fleet
+    /// order, non-decreasing. Static arrivals are all zero; Poisson
+    /// arrivals accumulate exponential gaps of mean `1/rate`.
+    pub fn arrival_offsets(&self, n: u32, seed: u64) -> Vec<f64> {
+        match *self {
+            ArrivalSpec::Static => vec![0.0; n as usize],
+            ArrivalSpec::Poisson { rate } => {
+                // Decorrelate from workload/fault seeds the same way the
+                // injector does: a multiplicative scramble of the seed.
+                let mut rng =
+                    SplitMix64::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xA881_55ED);
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.gen_exp(1.0 / rate);
+                        t
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_reject_pathological_params() {
+        assert!(RandomVariable::constant(f64::NAN).is_err());
+        assert!(RandomVariable::constant(-1.0).is_err());
+        assert!(RandomVariable::uniform(5.0, 5.0).is_err());
+        assert!(RandomVariable::uniform(-1.0, 2.0).is_err());
+        assert!(RandomVariable::exp(0.0).is_err());
+        assert!(RandomVariable::exp(f64::INFINITY).is_err());
+        assert!(RandomVariable::poisson(-3.0).is_err());
+        assert!(RandomVariable::lognormal(0.0, 0.0).is_err());
+        assert!(RandomVariable::lognormal(1e9, 1.0).is_err());
+        assert!(ArrivalSpec::poisson(0.0).is_err());
+        assert!(ArrivalSpec::poisson(f64::NAN).is_err());
+    }
+
+    #[test]
+    fn parse_and_render_roundtrip() {
+        for s in [
+            "const:3",
+            "uniform:1:9",
+            "exp:40",
+            "poisson:2.5",
+            "lognormal:1:0.5",
+        ] {
+            let v = RandomVariable::parse(s).unwrap();
+            assert_eq!(RandomVariable::parse(&v.render()).unwrap(), v, "{s}");
+        }
+        assert!(RandomVariable::parse("exp").is_err());
+        assert!(RandomVariable::parse("exp:a").is_err());
+        assert!(RandomVariable::parse("zipf:2").is_err());
+        assert_eq!(ArrivalSpec::parse("static").unwrap(), ArrivalSpec::Static);
+        let a = ArrivalSpec::parse("poisson:0.5").unwrap();
+        assert_eq!(ArrivalSpec::parse(&a.render()).unwrap(), a);
+        assert!(ArrivalSpec::parse("poisson:").is_err());
+        assert!(ArrivalSpec::parse("burst:3").is_err());
+    }
+
+    #[test]
+    fn poisson_sampler_covers_both_regimes() {
+        let mut rng = SplitMix64::new(11);
+        let small = RandomVariable::poisson(3.0).unwrap();
+        let big = RandomVariable::poisson(200.0).unwrap();
+        for _ in 0..200 {
+            let s = small.sample(&mut rng);
+            assert!(s >= 0.0 && s == s.trunc(), "{s}");
+            let b = big.sample(&mut rng);
+            assert!(b >= 0.0 && b == b.trunc(), "{b}");
+        }
+    }
+
+    #[test]
+    fn arrival_offsets_are_sorted_and_deterministic() {
+        let a = ArrivalSpec::poisson(2.0).unwrap();
+        let xs = a.arrival_offsets(64, 9);
+        let ys = a.arrival_offsets(64, 9);
+        assert_eq!(xs, ys);
+        assert!(xs.windows(2).all(|w| w[0] <= w[1]));
+        assert!(xs.iter().all(|&x| x > 0.0));
+        assert_eq!(ArrivalSpec::Static.arrival_offsets(5, 1), vec![0.0; 5]);
+    }
+}

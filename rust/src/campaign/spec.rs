@@ -12,8 +12,11 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::campaign::faults::FaultPlan;
+use crate::campaign::sched::{ArrivalSpec, SchedulerKind};
 use crate::campaign::tune::IntervalPolicy;
 use crate::error::{Error, Result};
+use crate::simclock::SimTime;
+use crate::slurm::signals::{parse_signal_directive, Signal};
 use crate::workload::{G4Version, WorkloadKind, CP2K_SCF_LABEL, STENCIL_LABEL};
 
 /// Which application the campaign's sessions run.
@@ -113,12 +116,28 @@ pub struct CampaignSpec {
     pub interval: IntervalPolicy,
     /// The failure process injected into the fleet.
     pub faults: FaultPlan,
-    /// Give up on a session that has not finished after this long
-    /// (stragglers are torn down and reported, not waited on).
+    /// Give up on a session that has not finished after this long.
+    /// Without a preemption signal, stragglers are torn down and
+    /// reported; with one, this is the per-incarnation walltime the
+    /// notice fires against (see [`CampaignSpec::preempt_signal`]).
     pub straggler_timeout: Duration,
     /// Pause between an injected kill and the resubmission (the queue
     /// wait of the Fig 4 gap).
     pub requeue_delay: Duration,
+    /// When sessions enter the ready queue: `static` (all at `t = 0`,
+    /// the pre-scheduler behavior) or `poisson:RATE` arrivals.
+    pub arrival: ArrivalSpec,
+    /// Which dispatch policy assigns freed worker slots.
+    pub scheduler: SchedulerKind,
+    /// Admission bound: at most this many sessions waiting in the ready
+    /// queue; arrivals past it are rejected (`None` = admit all).
+    pub admit_max: Option<u32>,
+    /// SLURM-style preemption notice, `--signal=B:SIG@offset` semantics:
+    /// each incarnation gets [`CampaignSpec::straggler_timeout`] of
+    /// walltime, the signal fires `offset` seconds before that limit,
+    /// and the executor answers with one final checkpoint plus an
+    /// immediate requeue (`None` = no preemption, plain straggler reap).
+    pub preempt_signal: Option<(Signal, SimTime)>,
 }
 
 impl Default for CampaignSpec {
@@ -141,6 +160,10 @@ impl Default for CampaignSpec {
             faults: FaultPlan::none(),
             straggler_timeout: Duration::from_secs(300),
             requeue_delay: Duration::from_millis(10),
+            arrival: ArrivalSpec::Static,
+            scheduler: SchedulerKind::Fifo,
+            admit_max: None,
+            preempt_signal: None,
         }
     }
 }
@@ -309,6 +332,55 @@ impl CampaignSpec {
                         value.parse().map_err(|_| bad("requeue-delay-ms"))?,
                     )
                 }
+                "arrival" => {
+                    spec.arrival = ArrivalSpec::parse(value).map_err(|e| {
+                        Error::Usage(format!("campaign spec line {}: {e}", lineno + 1))
+                    })?
+                }
+                "scheduler" => {
+                    spec.scheduler = SchedulerKind::parse(value).map_err(|e| {
+                        Error::Usage(format!("campaign spec line {}: {e}", lineno + 1))
+                    })?
+                }
+                // Underscore aliases accepted; both spellings count as
+                // one key for the duplicate check (shared-coordinator
+                // precedent).
+                "admit-max" | "admit_max" => {
+                    let alias = if key == "admit-max" {
+                        "admit_max"
+                    } else {
+                        "admit-max"
+                    };
+                    if !seen_keys.insert(alias.to_string()) {
+                        return Err(Error::Usage(format!(
+                            "campaign spec line {}: duplicate key {key:?}",
+                            lineno + 1
+                        )));
+                    }
+                    spec.admit_max = match value {
+                        "off" => None,
+                        n => Some(n.parse().map_err(|_| bad("admit-max"))?),
+                    }
+                }
+                "preempt-signal" | "preempt_signal" => {
+                    let alias = if key == "preempt-signal" {
+                        "preempt_signal"
+                    } else {
+                        "preempt-signal"
+                    };
+                    if !seen_keys.insert(alias.to_string()) {
+                        return Err(Error::Usage(format!(
+                            "campaign spec line {}: duplicate key {key:?}",
+                            lineno + 1
+                        )));
+                    }
+                    spec.preempt_signal = match value {
+                        "off" => None,
+                        directive => Some(parse_signal_directive(directive).map_err(|e| {
+                            Error::Usage(format!("campaign spec line {}: {e}", lineno + 1))
+                        })?),
+                    }
+                }
                 other => {
                     return Err(Error::Usage(format!(
                         "campaign spec line {}: unknown key {other:?}",
@@ -369,6 +441,29 @@ impl CampaignSpec {
             return Err(Error::Usage(
                 "straggler-timeout-ms must be nonzero (sessions need time to run)".into(),
             ));
+        }
+        if self.admit_max == Some(0) {
+            return Err(Error::Usage(
+                "admit-max must be >= 1 (a zero-capacity queue admits nothing); \
+                 use admit-max = off to disable admission control"
+                    .into(),
+            ));
+        }
+        if let Some((_, offset)) = self.preempt_signal {
+            if offset == 0 {
+                return Err(Error::Usage(
+                    "preempt-signal offset must be >= 1 second (the final checkpoint \
+                     needs grace to complete)"
+                        .into(),
+                ));
+            }
+            if Duration::from_secs(offset) >= self.straggler_timeout {
+                return Err(Error::Usage(format!(
+                    "preempt-signal offset ({offset}s) must be smaller than the \
+                     walltime (straggler-timeout-ms = {}ms)",
+                    self.straggler_timeout.as_millis()
+                )));
+            }
         }
         if opens_comment(&self.name) {
             return Err(Error::Usage(format!(
@@ -462,6 +557,22 @@ impl CampaignSpec {
             self.straggler_timeout.as_millis().to_string(),
         );
         kv("requeue-delay-ms", self.requeue_delay.as_millis().to_string());
+        kv("arrival", self.arrival.render());
+        kv("scheduler", self.scheduler.name().into());
+        kv(
+            "admit-max",
+            match self.admit_max {
+                None => "off".into(),
+                Some(n) => n.to_string(),
+            },
+        );
+        kv(
+            "preempt-signal",
+            match self.preempt_signal {
+                None => "off".into(),
+                Some((sig, offset)) => format!("{}@{offset}", sig.name()),
+            },
+        );
         out
     }
 }
@@ -633,6 +744,50 @@ requeue-delay-ms = 10
             CampaignSpec::parse("shared-coordinator = 1\nshared_coordinator = 0\n").unwrap_err();
         assert!(err.to_string().contains("duplicate key"), "{err}");
         assert!(CampaignSpec::parse("shared-coordinator = maybe\n").is_err());
+    }
+
+    #[test]
+    fn scheduler_keys_parse_round_trip_and_validate() {
+        let s = CampaignSpec::parse(
+            "arrival = poisson:2.5\nscheduler = ckpt-aware\nadmit-max = 6\n\
+             preempt-signal = TERM@120\n",
+        )
+        .unwrap();
+        assert_eq!(s.arrival, ArrivalSpec::Poisson { rate: 2.5 });
+        assert_eq!(s.scheduler, SchedulerKind::CkptAware);
+        assert_eq!(s.admit_max, Some(6));
+        assert_eq!(s.preempt_signal, Some((Signal::Term, 120)));
+        assert_eq!(CampaignSpec::parse(&s.to_text()).unwrap(), s);
+        // The B: batch-shell prefix is accepted, and renders without it.
+        let s = CampaignSpec::parse("preempt-signal = B:USR1@30\n").unwrap();
+        assert_eq!(s.preempt_signal, Some((Signal::Usr1, 30)));
+        assert!(s.to_text().contains("preempt-signal = USR1@30"));
+        // Underscore aliases are one key for duplicate detection.
+        let err = CampaignSpec::parse("admit_max = 2\nadmit-max = 3\n").unwrap_err();
+        assert!(err.to_string().contains("duplicate key"), "{err}");
+        let err =
+            CampaignSpec::parse("preempt-signal = off\npreempt_signal = TERM@9\n").unwrap_err();
+        assert!(err.to_string().contains("duplicate key"), "{err}");
+    }
+
+    #[test]
+    fn scheduler_keys_reject_bad_values() {
+        // A signal without an offset is the bug this key existed to fix:
+        // the offset must parse and must be consumed.
+        assert!(CampaignSpec::parse("preempt-signal = TERM\n").is_err());
+        assert!(CampaignSpec::parse("preempt-signal = TERM@\n").is_err());
+        assert!(CampaignSpec::parse("preempt-signal = HUP@30\n").is_err());
+        assert!(CampaignSpec::parse("preempt-signal = TERM@0\n").is_err());
+        // Offset must leave walltime in front of the notice.
+        assert!(
+            CampaignSpec::parse("preempt-signal = TERM@400\nstraggler-timeout-ms = 300000\n")
+                .is_err()
+        );
+        assert!(CampaignSpec::parse("arrival = poisson:0\n").is_err());
+        assert!(CampaignSpec::parse("arrival = burst:2\n").is_err());
+        assert!(CampaignSpec::parse("scheduler = lottery\n").is_err());
+        assert!(CampaignSpec::parse("admit-max = 0\n").is_err());
+        assert!(CampaignSpec::parse("admit-max = many\n").is_err());
     }
 
     #[test]

@@ -88,6 +88,8 @@ subcommands:
   run --ranks N [--workload halo-stencil] [--stencil-cells C] [--steps N]
       [--mana off] [--preempt MS] [--incremental]      run an N-rank gang under gang C/R
   campaign [--spec FILE] [--sessions N] [--seed S] [--workdir DIR]
+      [--arrival static|poisson:RATE] [--scheduler fifo|ckpt-aware]
+      [--admit-max N|off] [--preempt-signal SIG@OFFSET|off]
       [--json] [--print-spec]                          run a fleet campaign
                                                        (spec: ranks = N for gangs)
   fig2 [--ranks N]                                     container-startup table
@@ -518,6 +520,24 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
     if let Some(wd) = o.get("workdir") {
         spec.workdir = Some(PathBuf::from(wd));
     }
+    if let Some(a) = o.get("arrival") {
+        spec.arrival = crate::campaign::ArrivalSpec::parse(a)?;
+    }
+    if let Some(s) = o.get("scheduler") {
+        spec.scheduler = crate::campaign::SchedulerKind::parse(s)?;
+    }
+    if let Some(n) = o.get("admit-max") {
+        spec.admit_max = match n {
+            "off" => None,
+            n => Some(n.parse().map_err(|_| Error::Usage("bad --admit-max".into()))?),
+        };
+    }
+    if let Some(d) = o.get("preempt-signal") {
+        spec.preempt_signal = match d {
+            "off" => None,
+            d => Some(crate::slurm::parse_signal_directive(d)?),
+        };
+    }
     spec.validate()?;
     if o.has_flag("print-spec") {
         print!("{}", spec.to_text());
@@ -539,6 +559,7 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
     );
     println!("{}", report.table().render());
     println!("{}", report.summary_table().render());
+    println!("{}", report.slo_table().render());
     Ok(())
 }
 
@@ -616,6 +637,35 @@ mod tests {
             "--print-spec".into(),
         ])
         .is_err());
+    }
+
+    #[test]
+    fn campaign_scheduler_overrides_parse_and_validate() {
+        run(vec![
+            "campaign".into(),
+            "--arrival".into(),
+            "poisson:4".into(),
+            "--scheduler".into(),
+            "ckpt-aware".into(),
+            "--admit-max".into(),
+            "3".into(),
+            "--preempt-signal".into(),
+            "TERM@120".into(),
+            "--print-spec".into(),
+        ])
+        .unwrap();
+        for bad in [
+            vec!["campaign", "--scheduler", "lottery", "--print-spec"],
+            vec!["campaign", "--arrival", "poisson:0", "--print-spec"],
+            vec!["campaign", "--admit-max", "0", "--print-spec"],
+            // The offset is required and consumed, not silently dropped.
+            vec!["campaign", "--preempt-signal", "TERM", "--print-spec"],
+        ] {
+            assert!(
+                run(bad.iter().map(|s| s.to_string()).collect()).is_err(),
+                "{bad:?}"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Scheduler-subsystem acceptance suite (PR-7 satellite): seeded property
+//! tests for the `campaign::sched` random-variable models — sample means
+//! converge to the analytic means, equal seeds replay bit-identical
+//! streams, pathological parameters are typed errors and never panics —
+//! plus deterministic-replay properties for the full scheduler lab loop
+//! and live executor runs of the three new spec knobs (Poisson arrivals
+//! with checkpoint-aware dispatch, bounded admission control, and the
+//! `--signal=B:SIG@offset` preemption-notice override).
+
+use std::time::Duration;
+
+use nersc_cr::campaign::{
+    run_campaign, run_lab, ArrivalSpec, CampaignSpec, IntervalPolicy, LabSpec, RandomVariable,
+    SchedulerKind, SessionDisposition, WorkloadSpec,
+};
+use nersc_cr::slurm::Signal;
+use nersc_cr::util::proptest_lite::{run_cases, Gen};
+use nersc_cr::util::rng::SplitMix64;
+
+fn workdir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "ncr_sched_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+/// Draw a random variable with parameters bounded so that a 20k-sample
+/// average sits within the test tolerance with overwhelming margin.
+fn random_variable(g: &mut Gen) -> RandomVariable {
+    match g.usize_in(0..6) {
+        0 => RandomVariable::constant(g.f64_in(0.0, 100.0)).unwrap(),
+        1 => {
+            let lo = g.f64_in(0.0, 50.0);
+            RandomVariable::uniform(lo, lo + g.f64_in(1.0, 50.0)).unwrap()
+        }
+        2 => RandomVariable::exp(g.f64_in(1.0, 100.0)).unwrap(),
+        // Both Poisson sampling regimes: Knuth products (lambda <= 30)
+        // and the normal approximation above.
+        3 => RandomVariable::poisson(g.f64_in(1.0, 20.0)).unwrap(),
+        4 => RandomVariable::poisson(g.f64_in(40.0, 200.0)).unwrap(),
+        _ => RandomVariable::lognormal(g.f64_in(0.0, 2.0), g.f64_in(0.1, 0.8)).unwrap(),
+    }
+}
+
+#[test]
+fn sample_means_converge_to_analytic_means() {
+    run_cases("sample mean ~ analytic mean", 30, |g| {
+        let v = random_variable(g);
+        let mut rng = SplitMix64::new(g.u64_in(0..u64::MAX));
+        const N: u64 = 20_000;
+        let sum: f64 = (0..N).map(|_| v.sample(&mut rng)).sum();
+        let got = sum / N as f64;
+        let want = v.mean();
+        // 10% relative plus an absolute floor dwarfs the standard error
+        // of every parameterization `random_variable` emits.
+        let tol = (0.1 * want).max(1.0);
+        assert!(
+            (got - want).abs() <= tol,
+            "{v:?}: sample mean {got} vs analytic {want} (tol {tol})"
+        );
+    });
+}
+
+#[test]
+fn equal_seeds_replay_bit_identical_streams() {
+    run_cases("seeded streams are bit-identical", 60, |g| {
+        let v = random_variable(g);
+        let seed = g.u64_in(0..u64::MAX);
+        let mut a = SplitMix64::new(seed);
+        let mut b = SplitMix64::new(seed);
+        let xs: Vec<u64> = (0..100).map(|_| v.sample(&mut a).to_bits()).collect();
+        let ys: Vec<u64> = (0..100).map(|_| v.sample(&mut b).to_bits()).collect();
+        assert_eq!(xs, ys, "{v:?} seed {seed}");
+        // A different seed is a different stream (constants excepted:
+        // they never consume randomness).
+        if !matches!(v, RandomVariable::Constant { .. }) {
+            let mut c = SplitMix64::new(seed ^ 0xDEAD_BEEF);
+            let zs: Vec<u64> = (0..100).map(|_| v.sample(&mut c).to_bits()).collect();
+            assert_ne!(xs, zs, "{v:?} seed {seed}");
+        }
+    });
+}
+
+#[test]
+fn pathological_params_are_typed_errors_never_panics() {
+    run_cases("pathological params reject cleanly", 100, |g| {
+        let poison = *g.choose(&[f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0, -1e300]);
+        assert!(RandomVariable::constant(poison).is_err(), "{poison}");
+        assert!(RandomVariable::exp(poison).is_err(), "{poison}");
+        assert!(RandomVariable::poisson(poison).is_err(), "{poison}");
+        assert!(RandomVariable::uniform(poison, poison + 1.0).is_err());
+        assert!(RandomVariable::lognormal(0.0, poison).is_err());
+        assert!(ArrivalSpec::poisson(poison).is_err());
+        // Degenerate and overflowing shapes are errors too, not panics.
+        let x = g.f64_in(0.0, 100.0);
+        assert!(RandomVariable::uniform(x, x).is_err());
+        assert!(RandomVariable::exp(0.0).is_err());
+        assert!(RandomVariable::lognormal(g.f64_in(800.0, 1e6), 1.0).is_err());
+        // Garbage spellings parse to typed errors; valid spellings
+        // round-trip through render.
+        let garbage = format!("{}:{}", g.ident(1..8), g.ident(1..8));
+        assert!(RandomVariable::parse(&garbage).is_err(), "{garbage}");
+        assert!(ArrivalSpec::parse(&garbage).is_err(), "{garbage}");
+        let v = random_variable(g);
+        assert_eq!(RandomVariable::parse(&v.render()).unwrap(), v);
+    });
+}
+
+#[test]
+fn poisson_arrival_offsets_match_the_rate() {
+    run_cases("poisson arrivals", 25, |g| {
+        let rate = g.f64_in(0.1, 10.0);
+        let seed = g.u64_in(0..u64::MAX);
+        let a = ArrivalSpec::poisson(rate).unwrap();
+        let n = 4_000u32;
+        let xs = a.arrival_offsets(n, seed);
+        assert_eq!(xs, a.arrival_offsets(n, seed), "not deterministic");
+        assert_ne!(
+            xs,
+            a.arrival_offsets(n, seed ^ 1),
+            "seed does not steer the trace"
+        );
+        assert!(
+            xs[0] > 0.0 && xs.windows(2).all(|w| w[0] < w[1]),
+            "offsets must be strictly increasing"
+        );
+        // The empirical mean gap tracks 1/rate.
+        let mean_gap = xs[xs.len() - 1] / n as f64;
+        let want = 1.0 / rate;
+        assert!(
+            (mean_gap - want).abs() <= 0.15 * want,
+            "rate {rate}: mean gap {mean_gap} vs {want}"
+        );
+    });
+}
+
+/// The deterministic-replay property for the full scheduler loop: equal
+/// [`LabSpec`]s — arrivals, admission, dispatch policy, shared-store
+/// bursts, preemption waves and all — produce bit-identical outcomes.
+#[test]
+fn lab_replays_bit_identically_across_policies() {
+    run_cases("lab replay", 12, |g| {
+        let sessions = g.u64_in(1..10) as u32;
+        let slots = g.u64_in(1..5) as u32;
+        let seed = g.u64_in(0..u64::MAX);
+        let base = if g.bool_with(0.5) {
+            LabSpec::naive(sessions, slots, seed)
+        } else {
+            LabSpec::aware(sessions, slots, seed)
+        };
+        let spec = LabSpec {
+            work: RandomVariable::Exp { mean: 200.0 },
+            preempt_mtbf_secs: *g.choose(&[0.0, 400.0, 900.0]),
+            admit_max: if g.bool_with(0.3) {
+                Some(g.usize_in(1..8))
+            } else {
+                None
+            },
+            arrival: if g.bool_with(0.5) {
+                ArrivalSpec::Poisson { rate: 0.05 }
+            } else {
+                ArrivalSpec::Static
+            },
+            horizon_secs: 50_000,
+            ..base
+        };
+        let a = run_lab(&spec).unwrap();
+        let b = run_lab(&spec).unwrap();
+        assert_eq!(a, b, "lab is not a pure function of its spec");
+        // Invariant 9's monitor: no admitted session starves while a
+        // slot sits free, under either policy, on any trace.
+        assert_eq!(a.starvation_violations, 0, "{spec:?} -> {a:?}");
+        // Conservation: completions and rejections never double-count.
+        assert!(a.completed as u64 + a.rejected <= sessions as u64, "{a:?}");
+    });
+}
+
+/// The aware policy's headline property on a fixed trace: every wave
+/// lands on a fleet whose at-risk sessions already committed a final
+/// checkpoint (the preemption-notice override), with zero starvation.
+#[test]
+fn aware_lab_is_restartable_at_every_wave() {
+    for seed in [3, 17, 202, 9_001] {
+        let out = run_lab(&LabSpec::aware(12, 4, seed)).unwrap();
+        assert_eq!(out.completed, 12, "seed {seed}: {out:?}");
+        assert!(
+            out.restartable_at_every_preemption,
+            "seed {seed}: wave killed unsaved work despite the notice: {out:?}"
+        );
+        assert_eq!(out.starvation_violations, 0, "seed {seed}");
+    }
+}
+
+/// Live executor: a Poisson-arrival fleet under the checkpoint-aware
+/// scheduler (barrier placer engaged) completes and verifies, and the
+/// new SLO metrics flow into the report and its JSON rendering.
+#[test]
+fn live_poisson_ckpt_aware_fleet_completes() {
+    let wd = workdir("poisson");
+    let spec = CampaignSpec {
+        name: "sched-live".into(),
+        sessions: 5,
+        concurrency: 2,
+        workload: WorkloadSpec::Cp2kScf { n: 10 },
+        target_steps: 300,
+        seed: 7_700,
+        workdir: Some(wd.clone()),
+        interval: IntervalPolicy::Fixed(Duration::from_millis(8)),
+        arrival: ArrivalSpec::poisson(20.0).unwrap(),
+        scheduler: SchedulerKind::CkptAware,
+        ..Default::default()
+    };
+    spec.validate().unwrap();
+    let report = run_campaign(&spec).unwrap();
+    assert_eq!(report.completed(), 5, "{}", report.table().render());
+    assert_eq!(report.verified(), 5);
+    assert_eq!(report.rejected_admissions(), 0);
+    // 5 sessions over 2 slots: somebody waited, and the wait metrics
+    // survived aggregation.
+    let (p50, p99) = report.queue_wait_percentiles();
+    assert!(p50 >= 0.0 && p99 >= p50, "p50 {p50} p99 {p99}");
+    let json = report.to_json();
+    for key in [
+        "rejected_admissions",
+        "queue_wait_p50_secs",
+        "queue_wait_p99_secs",
+        "restart_latency_p50_secs",
+        "restart_latency_p99_secs",
+        "preempts",
+        "notice_ckpts",
+        "burst_collisions",
+    ] {
+        assert!(json.contains(key), "JSON missing {key}:\n{json}");
+    }
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// Live executor: a bounded ready queue rejects overflow arrivals with a
+/// typed disposition while every admitted session still completes.
+#[test]
+fn live_admission_bound_rejects_overflow() {
+    let wd = workdir("admit");
+    let spec = CampaignSpec {
+        name: "admit-live".into(),
+        sessions: 6,
+        concurrency: 1,
+        workload: WorkloadSpec::Cp2kScf { n: 10 },
+        target_steps: 200,
+        seed: 4_242,
+        workdir: Some(wd.clone()),
+        interval: IntervalPolicy::Fixed(Duration::from_millis(10)),
+        admit_max: Some(1),
+        ..Default::default()
+    };
+    let report = run_campaign(&spec).unwrap();
+    assert_eq!(report.sessions.len(), 6);
+    let rejected = report.rejected_admissions();
+    assert!(rejected >= 1, "{}", report.table().render());
+    assert_eq!(report.completed() + rejected, 6);
+    for s in &report.sessions {
+        match s.disposition {
+            SessionDisposition::Completed => assert!(s.verified, "s{}", s.index),
+            SessionDisposition::Rejected => {
+                assert_eq!(s.steps_done, 0, "rejected s{} ran anyway", s.index)
+            }
+            ref other => panic!("s{}: unexpected disposition {other:?}", s.index),
+        }
+    }
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// Live executor: the `--signal=B:SIG@offset` override. With a 2 s
+/// per-incarnation walltime and a 1 s notice, sessions too big for one
+/// incarnation take a notice-triggered final checkpoint, requeue, and
+/// finish across incarnations — bit-identical to their references.
+#[test]
+fn live_preemption_notice_checkpoints_and_requeues() {
+    let wd = workdir("notice");
+    let spec = CampaignSpec {
+        name: "notice-live".into(),
+        sessions: 2,
+        concurrency: 2,
+        workload: WorkloadSpec::Cp2kScf { n: 10 },
+        // ~50 us/step: several virtual walltimes of work, so at least
+        // one preemption cycle fires even on a fast machine.
+        target_steps: 120_000,
+        seed: 1_212,
+        workdir: Some(wd.clone()),
+        interval: IntervalPolicy::Fixed(Duration::from_millis(8)),
+        straggler_timeout: Duration::from_secs(2),
+        preempt_signal: Some((Signal::Term, 1)),
+        requeue_delay: Duration::from_millis(5),
+        ..Default::default()
+    };
+    spec.validate().unwrap();
+    let report = run_campaign(&spec).unwrap();
+    assert_eq!(report.completed(), 2, "{}", report.table().render());
+    assert_eq!(report.verified(), 2);
+    assert!(
+        report.preempts() >= 1,
+        "no preemption cycle fired: {}",
+        report.slo_table().render()
+    );
+    assert!(
+        report.notice_ckpts() >= 1,
+        "notice never forced a final checkpoint: {}",
+        report.slo_table().render()
+    );
+    assert!(
+        report.sessions.iter().any(|s| s.incarnations > 1),
+        "nobody restarted"
+    );
+    let (p50, p99) = report.restart_latency_percentiles();
+    assert!(p50 > 0.0 && p99 >= p50, "restart latency p50 {p50} p99 {p99}");
+    std::fs::remove_dir_all(&wd).ok();
+}

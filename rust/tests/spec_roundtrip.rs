@@ -8,7 +8,11 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
-use nersc_cr::campaign::{CampaignSpec, FaultPlan, IntervalPolicy, SubstrateSpec, WorkloadSpec};
+use nersc_cr::campaign::{
+    ArrivalSpec, CampaignSpec, FaultPlan, IntervalPolicy, SchedulerKind, SubstrateSpec,
+    WorkloadSpec,
+};
+use nersc_cr::slurm::Signal;
 use nersc_cr::util::proptest_lite::{run_cases, Gen};
 use nersc_cr::workload::{G4Version, WorkloadKind};
 
@@ -33,6 +37,19 @@ fn random_spec(g: &mut Gen) -> CampaignSpec {
     } else {
         1
     };
+    // Validation requires the notice offset to be strictly inside the
+    // walltime, so draw the signal first and floor the straggler timeout.
+    let preempt_signal = if g.bool_with(0.5) {
+        Some((
+            *g.choose(&[Signal::Term, Signal::Usr1, Signal::Kill]),
+            g.u64_in(1..120),
+        ))
+    } else {
+        None
+    };
+    let straggler_floor_ms = preempt_signal.map_or(1, |(_, off)| off * 1000 + 1);
+    let straggler_timeout =
+        Duration::from_millis(g.u64_in(straggler_floor_ms..straggler_floor_ms + 10_000_000));
     CampaignSpec {
         name: g.ident(1..20),
         sessions: g.u64_in(1..200) as u32,
@@ -74,8 +91,22 @@ fn random_spec(g: &mut Gen) -> CampaignSpec {
         } else {
             FaultPlan::none()
         },
-        straggler_timeout: Duration::from_millis(g.u64_in(1..10_000_001)),
+        straggler_timeout,
         requeue_delay: Duration::from_millis(g.u64_in(0..10_001)),
+        arrival: if g.bool_with(0.5) {
+            // Tenths keep the rendered rate short; f64 Display round-trips
+            // exactly regardless.
+            ArrivalSpec::poisson(g.u64_in(1..100) as f64 / 10.0).unwrap()
+        } else {
+            ArrivalSpec::Static
+        },
+        scheduler: *g.choose(&[SchedulerKind::Fifo, SchedulerKind::CkptAware]),
+        admit_max: if g.bool_with(0.5) {
+            Some(g.u64_in(1..64) as u32)
+        } else {
+            None
+        },
+        preempt_signal,
     }
 }
 
@@ -148,4 +179,51 @@ fn unrepresentable_values_fail_validation_not_roundtrip() {
         ..Default::default()
     };
     assert!(spec.validate().is_err());
+}
+
+#[test]
+fn scheduler_keys_reject_malformed_and_aliased_duplicates() {
+    // `--signal=B:SIG@offset` semantics: an offset-less directive is an
+    // error (the offset must be consumed, never silently defaulted).
+    for bad in [
+        "preempt-signal = TERM\n",
+        "preempt-signal = @120\n",
+        "preempt-signal = HUP@30\n",
+        "preempt-signal = TERM@-5\n",
+        "arrival = poisson\n",
+        "arrival = poisson:-1\n",
+        "arrival = uniform:1:2\n",
+        "scheduler = srpt\n",
+        "admit-max = -1\n",
+    ] {
+        assert!(CampaignSpec::parse(bad).is_err(), "accepted {bad:?}");
+    }
+    // Underscore/hyphen spellings of one key are one key.
+    for dup in [
+        "admit-max = 2\nadmit_max = 2\n",
+        "preempt_signal = TERM@30\npreempt-signal = TERM@30\n",
+    ] {
+        let err = CampaignSpec::parse(dup).expect_err("alias duplicate must be rejected");
+        assert!(err.to_string().contains("duplicate key"), "{err}");
+    }
+    // Offsets at or past the walltime can never fire before the kill.
+    let mut spec = CampaignSpec {
+        preempt_signal: Some((Signal::Term, 600)),
+        straggler_timeout: Duration::from_secs(600),
+        ..Default::default()
+    };
+    assert!(spec.validate().is_err());
+    spec.straggler_timeout = Duration::from_secs(601);
+    assert!(spec.validate().is_ok());
+}
+
+#[test]
+fn scheduler_keys_roundtrip_through_signal_directive_forms() {
+    // The spec accepts the full sbatch directive (`B:` prefix) but renders
+    // the canonical `SIG@offset` form; re-parsing that is a fixed point.
+    let spec = CampaignSpec::parse("preempt-signal = B:USR1@45\n").unwrap();
+    assert_eq!(spec.preempt_signal, Some((Signal::Usr1, 45)));
+    let text = spec.to_text();
+    assert!(text.contains("preempt-signal = USR1@45"), "{text}");
+    assert_eq!(CampaignSpec::parse(&text).unwrap(), spec);
 }
