@@ -205,6 +205,13 @@ enum Tick {
 /// fills every slot, so the returned report always covers every
 /// session. The default spec (static arrival, FIFO, unbounded queue)
 /// reproduces the old drain exactly: index order, all ready at `t = 0`.
+///
+/// Admission timing: arrivals meet the bounded queue when a worker next
+/// polls for work, not at their nominal arrival instant — with every
+/// worker busy, due arrivals accumulate and are offered in one burst at
+/// the next free tick, so `admit_max` rejections under full load depend
+/// on worker availability. Use the deterministic lab for studies where
+/// exact arrival-time admission matters.
 fn run_session_pool(
     spec: &CampaignSpec,
     root_tag: &str,
@@ -245,8 +252,19 @@ fn run_session_pool(
             sc.spawn(|| loop {
                 let tick = {
                     let mut d = dispatch.lock().expect("dispatch poisoned");
+                    // Reborrow through the guard so `d.sched` and
+                    // `d.queue` below are disjoint field borrows.
+                    let d = &mut *d;
                     let now = ctx.epoch.elapsed().as_secs_f64();
-                    // Admission control over everything that has arrived.
+                    // Admission control over everything that has
+                    // arrived. Admission is lazy: arrivals are offered
+                    // to the bounded queue when a worker next polls, so
+                    // while every worker is busy, due arrivals batch up
+                    // and rejection reflects the queue depth at that
+                    // poll, not at each arrival's nominal instant. The
+                    // lab (`sched/lab.rs`) admits on a per-second
+                    // virtual clock and is the ground truth for
+                    // arrival-time admission semantics.
                     while d.next_arrival < offsets.len() && offsets[d.next_arrival] <= now {
                         let i = d.next_arrival as u32;
                         d.next_arrival += 1;

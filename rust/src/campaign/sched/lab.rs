@@ -159,11 +159,16 @@ pub struct LabOutcome {
     pub notice_ckpts: u64,
     /// Whether every session still running at a wave had a completed
     /// checkpoint covering its progress as of the notice — the
-    /// "restartable final checkpoint" property.
+    /// "restartable final checkpoint" property. Sessions dispatched
+    /// *after* the notice armed (possible in naive mode, which keeps
+    /// dispatching through the grace window) never saw the notice and
+    /// are exempt from that wave's audit.
     pub restartable_at_every_preemption: bool,
-    /// Invariant-9 monitor: ticks where a slot sat free while an
-    /// admitted request waited past its starvation deadline (drain
-    /// windows exempt — capacity there is about to be preempted away).
+    /// Invariant-9 monitor: dispatch decisions that passed over an
+    /// admitted request already waiting past its starvation deadline —
+    /// either a younger request was dispatched ahead of it, or the
+    /// policy left a slot idle while it waited (drain windows exempt —
+    /// capacity there is about to be preempted away).
     pub starvation_violations: u64,
     /// Median queue wait (arrival/requeue to dispatch), seconds.
     pub queue_wait_p50_secs: f64,
@@ -231,7 +236,11 @@ pub fn run_lab(spec: &LabSpec) -> Result<LabOutcome> {
         f64::INFINITY
     };
     let mut notice_armed = false;
-    let mut progress_at_notice = vec![0.0f64; n];
+    // Progress each session had when the current wave's notice armed;
+    // NaN = no recording (not running at the notice, or dispatched
+    // after it armed), which exempts the session from that wave's
+    // restartability audit.
+    let mut progress_at_notice = vec![f64::NAN; n];
 
     let mut out = LabOutcome {
         makespan_secs: 0.0,
@@ -350,6 +359,11 @@ pub fn run_lab(spec: &LabSpec) -> Result<LabOutcome> {
             for i in 0..n {
                 if sess[i].running {
                     out.preempted_sessions += 1;
+                    // Audit only sessions with notice-time progress on
+                    // record: a session dispatched after the notice
+                    // armed (naive mode keeps dispatching) never saw it
+                    // and is exempt. Comparisons against NaN are
+                    // false, so the audit self-skips them.
                     if sess[i].committed + 1e-9 < progress_at_notice[i] {
                         out.restartable_at_every_preemption = false;
                     }
@@ -363,6 +377,9 @@ pub fn run_lab(spec: &LabSpec) -> Result<LabOutcome> {
             }
             next_wave = t + wave_rng.gen_exp(spec.preempt_mtbf_secs);
             notice_armed = false;
+            // This wave's recordings are spent; the next notice records
+            // afresh so no session is audited against a stale value.
+            progress_at_notice.fill(f64::NAN);
         }
 
         // 5. The shared store advances every in-flight burst at 1/b.
@@ -436,12 +453,38 @@ pub fn run_lab(spec: &LabSpec) -> Result<LabOutcome> {
                     Some(pos) => {
                         let req = queue.take(pos).expect("scheduler picked a live slot");
                         let i = req.index as usize;
-                        waits.push(t - req.arrival_secs);
+                        let wait = t - req.arrival_secs;
+                        // Invariant-9 monitor: a policy that dispatches
+                        // an unstarved request while a starved one
+                        // keeps waiting has passed the starved request
+                        // over — a violation even though the slot was
+                        // filled. (FIFO picks the longest waiter, and
+                        // the aware policy dispatches the oldest
+                        // starved request first, so both hold a
+                        // non-vacuous hard zero here.)
+                        if wait < spec.starve_after_secs
+                            && queue
+                                .waiting()
+                                .iter()
+                                .any(|r| t - r.arrival_secs >= spec.starve_after_secs)
+                        {
+                            out.starvation_violations += 1;
+                        }
+                        waits.push(wait);
                         sess[i].running = true;
                         sess[i].next_ckpt = next_barrier(&placer, t);
+                        // A fresh dispatch has no notice-time progress
+                        // for the pending wave (it was not running when
+                        // the notice armed); keep it out of the audit.
+                        progress_at_notice[i] = f64::NAN;
                         running_count += 1;
                     }
                     None => {
+                        // Invariant-9 monitor, idle shape: the policy
+                        // left a slot free while a starved request
+                        // waited. (Both shipped policies decline only
+                        // on an empty queue, so this arm guards
+                        // hypothetical future policies.)
                         if queue
                             .waiting()
                             .iter()
