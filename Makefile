@@ -24,6 +24,7 @@ bench:
 	cargo bench --bench gang_scale
 	cargo bench --bench coordinator_mux
 	cargo bench --bench sched_campaign
+	cargo bench --bench store_hotpath
 
 # AOT-lower the L2 model to HLO text for the PJRT backend (needs jax).
 artifacts:

@@ -12,6 +12,12 @@
 //! * image bytes grow with rank count within a mode (more ranks, more
 //!   state).
 //!
+//! One extra lane re-runs the widest gang with incremental (v2
+//! manifest) images and no full-image anchors, so the parallel-restore
+//! pipeline actually runs on restart and its per-phase read/decompress/
+//! verify seconds are reported (v1 full images decode inline — their
+//! phase columns are `-`).
+//!
 //! `BENCH_SMOKE=1` shrinks the sweep so CI exercises the full code path
 //! on every push.
 
@@ -28,28 +34,35 @@ const TARGET_STEPS: u64 = 400;
 struct Sample {
     ranks: u32,
     mana: bool,
+    incremental: bool,
     ckpt_secs: f64,
     image_bytes: u64,
     per_rank_bytes: Vec<u64>,
+    restore_phases: [f64; 3],
     verified: bool,
 }
 
-fn run_gang(ranks: u32, mana: bool) -> Sample {
+fn run_gang(ranks: u32, mana: bool, incremental: bool) -> Sample {
     let app = StencilApp::new(ranks, CELLS_PER_RANK).endpoint_bytes(ENDPOINT_BYTES);
     let wd = std::env::temp_dir().join(format!(
-        "ncr_gang_scale_{}_{}_{}",
+        "ncr_gang_scale_{}_{}_{}_{}",
         std::process::id(),
         ranks,
-        mana
+        mana,
+        incremental
     ));
     std::fs::create_dir_all(&wd).expect("bench workdir");
-    let mut session = GangSession::builder(&app)
+    let mut builder = GangSession::builder(&app)
         .workdir(&wd)
         .target_steps(TARGET_STEPS)
         .seed(2024)
-        .mana_exclusion(mana)
-        .build()
-        .expect("build gang session");
+        .mana_exclusion(mana);
+    if incremental {
+        // 0 = no full-image anchors: every rank image is a v2 manifest,
+        // so the restart below exercises the parallel restore pipeline.
+        builder = builder.incremental_images(0);
+    }
+    let mut session = builder.build().expect("build gang session");
     session.submit().expect("submit gang");
 
     // Let the gang get off step 0, then take the timed cut. Only the
@@ -76,14 +89,17 @@ fn run_gang(ranks: u32, mana: bool) -> Sample {
         .expect("gang completion");
     let finals = session.final_states().expect("final states");
     let verified = session.verify_final(&finals).is_ok();
+    let restore_phases = session.restore_phase_secs();
     session.finish();
     std::fs::remove_dir_all(&wd).ok();
     Sample {
         ranks,
         mana,
+        incremental,
         ckpt_secs,
         image_bytes,
         per_rank_bytes,
+        restore_phases,
         verified,
     }
 }
@@ -97,25 +113,36 @@ fn main() {
     let mut samples = Vec::new();
     for &ranks in &rank_counts {
         for mana in [true, false] {
-            samples.push(run_gang(ranks, mana));
+            samples.push(run_gang(ranks, mana, false));
         }
     }
+    // The restore-phase lane: widest gang, incremental images only.
+    samples.push(run_gang(*rank_counts.last().unwrap(), false, true));
 
     let mut t = Table::new(&[
         "ranks",
         "mana",
+        "images",
         "ckpt (s)",
         "image bytes",
         "bytes/rank",
+        "restore r/d/v (ms)",
         "bitwise",
     ]);
     for s in &samples {
+        let [rr, rd, rv] = s.restore_phases;
         t.row(&[
             s.ranks.to_string(),
             if s.mana { "on" } else { "off" }.to_string(),
+            if s.incremental { "v2" } else { "v1" }.to_string(),
             format!("{:.4}", s.ckpt_secs),
             human_bytes(s.image_bytes),
             human_bytes(s.image_bytes / s.ranks as u64),
+            if s.incremental {
+                format!("{:.2}/{:.2}/{:.2}", rr * 1e3, rd * 1e3, rv * 1e3)
+            } else {
+                "-".to_string()
+            },
             if s.verified { "ok" } else { "DIVERGED" }.to_string(),
         ]);
     }
@@ -133,8 +160,14 @@ fn main() {
         }
     }
     for &ranks in &rank_counts {
-        let mana = samples.iter().find(|s| s.ranks == ranks && s.mana).unwrap();
-        let full = samples.iter().find(|s| s.ranks == ranks && !s.mana).unwrap();
+        let mana = samples
+            .iter()
+            .find(|s| s.ranks == ranks && s.mana && !s.incremental)
+            .unwrap();
+        let full = samples
+            .iter()
+            .find(|s| s.ranks == ranks && !s.mana && !s.incremental)
+            .unwrap();
         for (rank, (m, f)) in mana
             .per_rank_bytes
             .iter()
@@ -150,7 +183,10 @@ fn main() {
         }
     }
     for mana in [true, false] {
-        let mut in_mode: Vec<&Sample> = samples.iter().filter(|s| s.mana == mana).collect();
+        let mut in_mode: Vec<&Sample> = samples
+            .iter()
+            .filter(|s| s.mana == mana && !s.incremental)
+            .collect();
         in_mode.sort_by_key(|s| s.ranks);
         for pair in in_mode.windows(2) {
             if pair[1].image_bytes <= pair[0].image_bytes {
@@ -163,9 +199,18 @@ fn main() {
         }
     }
 
+    let incr = samples.iter().find(|s| s.incremental).unwrap();
+    if incr.restore_phases.iter().sum::<f64>() <= 0.0 {
+        failures.push(
+            "incremental lane: v2 manifest restart reported zero restore-phase \
+             seconds (pipeline not exercised?)"
+                .to_string(),
+        );
+    }
+
     let widest = samples
         .iter()
-        .filter(|s| s.ranks == *rank_counts.last().unwrap())
+        .filter(|s| s.ranks == *rank_counts.last().unwrap() && !s.incremental)
         .collect::<Vec<_>>();
     let mana_w = widest.iter().find(|s| s.mana).unwrap();
     let full_w = widest.iter().find(|s| !s.mana).unwrap();
@@ -185,6 +230,9 @@ fn main() {
                 "all_verified",
                 samples.iter().all(|s| s.verified) as u8 as f64,
             ),
+            ("restore_read_secs", incr.restore_phases[0]),
+            ("restore_decompress_secs", incr.restore_phases[1]),
+            ("restore_verify_secs", incr.restore_phases[2]),
         ],
     )
     .expect("emit bench json");

@@ -23,7 +23,7 @@ use std::time::{Duration, Instant};
 use nersc_cr::cr::{CrApp, CrPolicy, CrSession, CrStrategy};
 use nersc_cr::dmtcp::store::read_image_file;
 use nersc_cr::dmtcp::{
-    CheckpointImage, ImageHeader, ImageStore, SegmentManifest, StoreOpts,
+    CheckpointImage, ImageHeader, ImageStore, SegmentManifest, StoreConfig,
 };
 use nersc_cr::report::{emit_bench_json, human_bytes, smoke_scaled, Table};
 use nersc_cr::util::rng::SplitMix64;
@@ -85,7 +85,7 @@ fn bench_ablation() -> (u64, u64) {
     std::fs::create_dir_all(&full_dir).unwrap();
     std::fs::create_dir_all(&incr_dir).unwrap();
     let store = ImageStore::for_images(&incr_dir);
-    let opts = StoreOpts::default();
+    let opts = StoreConfig::default();
 
     let mut state = make_state(mib << 20, 11);
     let mut rng = SplitMix64::new(23);

@@ -477,7 +477,7 @@ fn drive_session_inner<A: CrApp>(
         .gc_grace(spec.gc_grace)
         .coordinator(coord.clone());
     if let Some(full_every) = spec.incremental {
-        builder = builder.incremental_images(full_every);
+        builder = builder.incremental_images(full_every).chunker(spec.chunker);
     }
     let mut session = builder.build()?;
     session.submit()?;
@@ -598,6 +598,9 @@ fn drive_session_inner<A: CrApp>(
     };
 
     harvest_store(out, &session);
+    // Assigned once (not accumulated per harvest): the session's phase
+    // counters already span every restart of every incarnation.
+    out.restore_phase_secs = session.restore_phase_secs();
     out.incarnations = session.incarnation() + 1;
     if completed {
         let final_state = session.final_state()?;
@@ -720,7 +723,7 @@ fn drive_gang_inner(
         .gc_grace(spec.gc_grace)
         .coordinator(coord.clone());
     if let Some(full_every) = spec.incremental {
-        builder = builder.incremental_images(full_every);
+        builder = builder.incremental_images(full_every).chunker(spec.chunker);
     }
     let mut session = builder.build()?;
     session.submit()?;
@@ -842,6 +845,9 @@ fn drive_gang_inner(
     };
 
     harvest_gang_store(out, &session);
+    // Assigned once, like the single-process driver: the counters span
+    // every rank restart of every incarnation.
+    out.restore_phase_secs = session.restore_phase_secs();
     out.incarnations = session.generation() + 1;
     if completed {
         let finals = session.final_states()?;

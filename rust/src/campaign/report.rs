@@ -100,6 +100,11 @@ pub struct SessionOutcome {
     /// Notice-triggered final checkpoints taken (the preemption-notice
     /// override firing because it was strictly better).
     pub notice_ckpts: u64,
+    /// Restore-pipeline `[read, decompress, verify]` seconds summed over
+    /// every restart the session went through (all `0.0` when every
+    /// restart decoded a v1 full image — the phases only exist for v2
+    /// manifest restores).
+    pub restore_phase_secs: [f64; 3],
     /// The session's LDMS series (all incarnations, folded at teardown).
     pub series: SampledSeries,
 }
@@ -132,6 +137,7 @@ impl SessionOutcome {
             restart_latencies_secs: Vec::new(),
             preempts: 0,
             notice_ckpts: 0,
+            restore_phase_secs: [0.0; 3],
             series: Default::default(),
         }
     }
@@ -261,6 +267,19 @@ impl CampaignReport {
         })
     }
 
+    /// Restore-pipeline `[read, decompress, verify]` seconds summed
+    /// across every restart in the fleet (all `0.0` when no session
+    /// restarted from a v2 manifest image).
+    pub fn restore_phase_totals(&self) -> [f64; 3] {
+        self.sessions.iter().fold([0.0; 3], |acc, s| {
+            [
+                acc[0] + s.restore_phase_secs[0],
+                acc[1] + s.restore_phase_secs[1],
+                acc[2] + s.restore_phase_secs[2],
+            ]
+        })
+    }
+
     /// Roll the per-session LDMS series up into fleet-level numbers.
     pub fn ldms_rollup(&self) -> LdmsRollup {
         let mut r = LdmsRollup::default();
@@ -350,12 +369,14 @@ impl CampaignReport {
     pub fn slo_table(&self) -> Table {
         let (qw50, qw99) = self.queue_wait_percentiles();
         let (rl50, rl99) = self.restart_latency_percentiles();
+        let [rr, rd, rv] = self.restore_phase_totals();
         let mut t = Table::new(&[
             "rejected",
             "q-wait p50 (s)",
             "q-wait p99 (s)",
             "restart p50 (s)",
             "restart p99 (s)",
+            "restore r/d/v (s)",
             "preempts",
             "notice ckpts",
             "burst collisions",
@@ -366,6 +387,7 @@ impl CampaignReport {
             format!("{qw99:.3}"),
             format!("{rl50:.3}"),
             format!("{rl99:.3}"),
+            format!("{rr:.3}/{rd:.3}/{rv:.3}"),
             self.preempts().to_string(),
             self.notice_ckpts().to_string(),
             self.burst_collisions.to_string(),
@@ -380,6 +402,7 @@ impl CampaignReport {
         let ldms = self.ldms_rollup();
         let (qw50, qw99) = self.queue_wait_percentiles();
         let (rl50, rl99) = self.restart_latency_percentiles();
+        let [rr, rd, rv] = self.restore_phase_totals();
         format!(
             "{{\n  \"campaign\": \"{}\",\n  \"sessions\": {},\n  \"completed\": {},\n  \
              \"verified\": {},\n  \"kills\": {},\n  \"steps_done\": {},\n  \
@@ -388,7 +411,9 @@ impl CampaignReport {
              \"ldms_peak_memory_bytes\": {},\n  \"ldms_ckpt_stored_bytes\": {},\n  \
              \"rejected_admissions\": {},\n  \"queue_wait_p50_secs\": {:.6},\n  \
              \"queue_wait_p99_secs\": {:.6},\n  \"restart_latency_p50_secs\": {:.6},\n  \
-             \"restart_latency_p99_secs\": {:.6},\n  \"preempts\": {},\n  \
+             \"restart_latency_p99_secs\": {:.6},\n  \"restore_read_secs\": {:.6},\n  \
+             \"restore_decompress_secs\": {:.6},\n  \"restore_verify_secs\": {:.6},\n  \
+             \"preempts\": {},\n  \
              \"notice_ckpts\": {},\n  \"burst_collisions\": {},\n  \
              \"wall_secs\": {:.3}\n}}\n",
             esc(&self.name),
@@ -410,6 +435,9 @@ impl CampaignReport {
             qw99,
             rl50,
             rl99,
+            rr,
+            rd,
+            rv,
             self.preempts(),
             self.notice_ckpts(),
             self.burst_collisions,
@@ -444,6 +472,7 @@ mod tests {
         o.measured_ckpt_cost_ms = 2;
         o.queue_wait_secs = 0.25 * (index + 1) as f64;
         o.restart_latencies_secs = vec![0.1 * (index + 1) as f64];
+        o.restore_phase_secs = [0.01, 0.02, 0.03];
         o.series = SampledSeries::default();
         o
     }
@@ -495,6 +524,10 @@ mod tests {
         assert!(j.contains("\"burst_collisions\": 3"), "{j}");
         assert!(j.contains("\"queue_wait_p99_secs\": 0.500000"), "{j}");
         assert!(j.contains("\"restart_latency_p50_secs\": 0.100000"), "{j}");
+        // Restore-pipeline phases sum across sessions (two outcomes here).
+        assert!(j.contains("\"restore_read_secs\": 0.020000"), "{j}");
+        assert!(j.contains("\"restore_decompress_secs\": 0.040000"), "{j}");
+        assert!(j.contains("\"restore_verify_secs\": 0.060000"), "{j}");
         assert!(!j.contains("NaN"), "{j}");
     }
 

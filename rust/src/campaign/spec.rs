@@ -14,6 +14,7 @@ use std::time::Duration;
 use crate::campaign::faults::FaultPlan;
 use crate::campaign::sched::{ArrivalSpec, SchedulerKind};
 use crate::campaign::tune::IntervalPolicy;
+use crate::dmtcp::store::ChunkerSpec;
 use crate::error::{Error, Result};
 use crate::simclock::SimTime;
 use crate::slurm::signals::{parse_signal_directive, Signal};
@@ -109,6 +110,11 @@ pub struct CampaignSpec {
     /// Write incremental checkpoint images, forcing a full image every
     /// `Some(n)` checkpoints (`None` = whole-image v1 checkpoints).
     pub incremental: Option<u32>,
+    /// How incremental images split segments into chunks (fixed-size
+    /// offsets or content-defined boundaries); ignored without
+    /// [`CampaignSpec::incremental`]. Spec key `chunker =` in
+    /// [`ChunkerSpec`]'s text forms (`fixed`, `cdc`, `cdc:MIN:AVG:MAX`).
+    pub chunker: ChunkerSpec,
     /// Chunk-store GC grace window for session teardown (see
     /// [`crate::cr::CrPolicy::gc_grace`]).
     pub gc_grace: Duration,
@@ -155,6 +161,7 @@ impl Default for CampaignSpec {
             shared_workdir: false,
             shared_coordinator: false,
             incremental: None,
+            chunker: ChunkerSpec::Fixed,
             gc_grace: crate::cr::GC_GRACE,
             interval: IntervalPolicy::Fixed(Duration::from_millis(40)),
             faults: FaultPlan::none(),
@@ -294,6 +301,11 @@ impl CampaignSpec {
                         "off" => None,
                         n => Some(n.parse().map_err(|_| bad("incremental"))?),
                     }
+                }
+                "chunker" => {
+                    spec.chunker = value.parse::<ChunkerSpec>().map_err(|e| {
+                        Error::Usage(format!("campaign spec line {}: {e}", lineno + 1))
+                    })?
                 }
                 "gc-grace-ms" => {
                     spec.gc_grace =
@@ -537,6 +549,7 @@ impl CampaignSpec {
                 Some(n) => n.to_string(),
             },
         );
+        kv("chunker", self.chunker.to_string());
         kv("gc-grace-ms", self.gc_grace.as_millis().to_string());
         match self.interval {
             IntervalPolicy::Fixed(d) => kv("interval", d.as_millis().to_string()),
@@ -788,6 +801,32 @@ requeue-delay-ms = 10
         assert!(CampaignSpec::parse("scheduler = lottery\n").is_err());
         assert!(CampaignSpec::parse("admit-max = 0\n").is_err());
         assert!(CampaignSpec::parse("admit-max = many\n").is_err());
+    }
+
+    #[test]
+    fn chunker_key_parses_round_trips_and_rejects_bad_specs() {
+        let s = CampaignSpec::parse("incremental = 8\nchunker = cdc\n").unwrap();
+        assert_eq!(s.chunker, ChunkerSpec::cdc_default());
+        assert_eq!(CampaignSpec::parse(&s.to_text()).unwrap(), s);
+        let s = CampaignSpec::parse("chunker = cdc:4096:16384:65536\n").unwrap();
+        assert_eq!(
+            s.chunker,
+            ChunkerSpec::Cdc {
+                min: 4096,
+                avg: 16384,
+                max: 65536
+            }
+        );
+        assert_eq!(CampaignSpec::parse(&s.to_text()).unwrap(), s);
+        // Default renders as `fixed` and round-trips.
+        assert_eq!(CampaignSpec::parse("chunker = fixed\n").unwrap(), CampaignSpec::default());
+        // Malformed or invalid chunker geometry is a parse error, and the
+        // key participates in duplicate detection like every other.
+        assert!(CampaignSpec::parse("chunker = cdc:0:8192:16384\n").is_err());
+        assert!(CampaignSpec::parse("chunker = cdc:1:3:9\n").is_err());
+        assert!(CampaignSpec::parse("chunker = rolling\n").is_err());
+        let err = CampaignSpec::parse("chunker = fixed\nchunker = cdc\n").unwrap_err();
+        assert!(err.to_string().contains("duplicate key"), "{err}");
     }
 
     #[test]

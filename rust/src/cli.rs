@@ -84,12 +84,14 @@ subcommands:
   inspect IMAGE.dmtcp                                  show an image header
   sbatch SCRIPT [--cluster-nodes N]                    simulate a batch script
   run --workload NAME --g4 VER --steps N [--preempt MS] [--workdir DIR]
-      [--incremental [--full-every N]]                 run a workload under auto C/R
+      [--incremental [--full-every N] [--chunker SPEC]] run a workload under auto C/R
+                                                       (SPEC: fixed | cdc | cdc:MIN:AVG:MAX)
   run --ranks N [--workload halo-stencil] [--stencil-cells C] [--steps N]
       [--mana off] [--preempt MS] [--incremental]      run an N-rank gang under gang C/R
   campaign [--spec FILE] [--sessions N] [--seed S] [--workdir DIR]
       [--arrival static|poisson:RATE] [--scheduler fifo|ckpt-aware]
       [--admit-max N|off] [--preempt-signal SIG@OFFSET|off]
+      [--chunker SPEC]
       [--json] [--print-spec]                          run a fleet campaign
                                                        (spec: ranks = N for gangs)
   fig2 [--ranks N]                                     container-startup table
@@ -327,9 +329,16 @@ fn cmd_run(args: &[String]) -> Result<()> {
                 .parse()
                 .map_err(|_| Error::Usage("bad --full-every".into()))?;
         }
+        if let Some(spec) = o.get("chunker") {
+            policy.chunker = spec.parse()?;
+        }
     } else if o.get("full-every").is_some() {
         return Err(Error::Usage(
             "--full-every only applies with --incremental".into(),
+        ));
+    } else if o.get("chunker").is_some() {
+        return Err(Error::Usage(
+            "--chunker only applies with --incremental".into(),
         ));
     }
 
@@ -432,9 +441,16 @@ fn cmd_run_gang(o: &Opts, ranks: u32, steps: u64, workdir: &std::path::Path) -> 
             None => 0,
         };
         builder = builder.incremental_images(full_every);
+        if let Some(spec) = o.get("chunker") {
+            builder = builder.chunker(spec.parse()?);
+        }
     } else if o.get("full-every").is_some() {
         return Err(Error::Usage(
             "--full-every only applies with --incremental".into(),
+        ));
+    } else if o.get("chunker").is_some() {
+        return Err(Error::Usage(
+            "--chunker only applies with --incremental".into(),
         ));
     }
     let mut session = builder.build()?;
@@ -537,6 +553,9 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             "off" => None,
             d => Some(crate::slurm::parse_signal_directive(d)?),
         };
+    }
+    if let Some(c) = o.get("chunker") {
+        spec.chunker = c.parse()?;
     }
     spec.validate()?;
     if o.has_flag("print-spec") {
@@ -660,6 +679,28 @@ mod tests {
             vec!["campaign", "--admit-max", "0", "--print-spec"],
             // The offset is required and consumed, not silently dropped.
             vec!["campaign", "--preempt-signal", "TERM", "--print-spec"],
+        ] {
+            assert!(
+                run(bad.iter().map(|s| s.to_string()).collect()).is_err(),
+                "{bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn campaign_chunker_override_parses_and_rejects_bad_specs() {
+        run(vec![
+            "campaign".into(),
+            "--chunker".into(),
+            "cdc:4096:16384:65536".into(),
+            "--print-spec".into(),
+        ])
+        .unwrap();
+        for bad in [
+            vec!["campaign", "--chunker", "rolling", "--print-spec"],
+            vec!["campaign", "--chunker", "cdc:0:8:16", "--print-spec"],
+            // --chunker without --incremental on `run` is a usage error.
+            vec!["run", "--chunker", "cdc"],
         ] {
             assert!(
                 run(bad.iter().map(|s| s.to_string()).collect()).is_err(),

@@ -18,6 +18,7 @@
 
 use std::time::Duration;
 
+use crate::dmtcp::store::ChunkerSpec;
 use crate::metrics::SampledSeries;
 use crate::workload::G4SimState;
 
@@ -84,6 +85,11 @@ pub struct CrPolicy {
     /// ([`crate::cr::session::GC_GRACE`], 10 min) comfortably exceeds any
     /// plausible single checkpoint write.
     pub gc_grace: Duration,
+    /// How incremental images split segments into chunks
+    /// ([`ChunkerSpec::Fixed`] offsets, or content-defined `Cdc` so
+    /// insert-shifted state keeps deduping). Ignored unless
+    /// `incremental_ckpt` is on. Spec key `chunker =`, CLI `--chunker`.
+    pub chunker: ChunkerSpec,
 }
 
 impl Default for CrPolicy {
@@ -100,6 +106,7 @@ impl Default for CrPolicy {
             incremental_ckpt: false,
             full_image_every: 16,
             gc_grace: crate::cr::session::GC_GRACE,
+            chunker: ChunkerSpec::Fixed,
         }
     }
 }
@@ -134,6 +141,15 @@ pub struct CrReport<S = G4SimState> {
     /// Chunks reused instead of rewritten — the incremental pipeline's
     /// savings, in chunk counts.
     pub chunks_deduped: u64,
+    /// Restore-pipeline seconds spent reading chunk files, summed across
+    /// all restarts (0.0 when every restart decoded a v1 full image).
+    pub restore_read_secs: f64,
+    /// Restore-pipeline seconds spent decompressing chunk payloads,
+    /// summed across all restarts.
+    pub restore_decompress_secs: f64,
+    /// Restore-pipeline seconds spent CRC-verifying restored bytes,
+    /// summed across all restarts.
+    pub restore_verify_secs: f64,
 }
 
 #[cfg(test)]

@@ -40,7 +40,9 @@ use crate::cr::app::GangApp;
 use crate::cr::module::{CoordinatorHandle, CrConfig};
 use crate::cr::session::{merge_series, next_nonce, GC_GRACE};
 use crate::dmtcp::process::Checkpointable;
-use crate::dmtcp::store::{latest_gang_manifest, GangManifest, GangRankEntry, ImageStore};
+use crate::dmtcp::store::{
+    latest_gang_manifest, ChunkerSpec, GangManifest, GangRankEntry, ImageStore,
+};
 use crate::dmtcp::{inspect_image, Coordinator, LaunchedProcess, ManaState, PluginRegistry, TimerPlugin};
 use crate::error::{Error, Result};
 use crate::metrics::{LdmsSampler, SampledSeries};
@@ -91,6 +93,7 @@ pub struct GangSessionBuilder<A: GangApp> {
     seed: u64,
     mana_exclusion: bool,
     incremental: Option<u32>,
+    chunker: ChunkerSpec,
     work_per_quantum: u32,
     gc_grace: Duration,
     coordinator: CoordinatorHandle,
@@ -138,6 +141,16 @@ impl<A: GangApp> GangSessionBuilder<A> {
         self
     }
 
+    /// How incremental rank images split segments into chunks
+    /// ([`ChunkerSpec::Fixed`] offsets, or content-defined `Cdc` so
+    /// insert-shifted rank state keeps deduping). Validated at
+    /// [`GangSessionBuilder::build`]; ignored without
+    /// [`GangSessionBuilder::incremental_images`].
+    pub fn chunker(mut self, spec: ChunkerSpec) -> Self {
+        self.chunker = spec;
+        self
+    }
+
     /// Work quanta between checkpoint safe-points in each rank worker.
     pub fn work_per_quantum(mut self, quanta: u32) -> Self {
         self.work_per_quantum = quanta.max(1);
@@ -167,6 +180,7 @@ impl<A: GangApp> GangSessionBuilder<A> {
         if self.app.n_ranks() == 0 {
             return Err(Error::Workload("a gang needs at least one rank".into()));
         }
+        self.chunker.validate()?;
         std::fs::create_dir_all(&workdir)?;
         Ok(GangSession {
             app: self.app,
@@ -176,6 +190,7 @@ impl<A: GangApp> GangSessionBuilder<A> {
             seed: self.seed,
             mana_exclusion: self.mana_exclusion,
             incremental: self.incremental,
+            chunker: self.chunker,
             work_per_quantum: self.work_per_quantum,
             gc_grace: self.gc_grace,
             coordinator_handle: self.coordinator,
@@ -184,6 +199,7 @@ impl<A: GangApp> GangSessionBuilder<A> {
             submitted: false,
             active: None,
             series_acc: None,
+            restore_phases: [0.0; 3],
         })
     }
 }
@@ -211,6 +227,7 @@ pub struct GangSession<A: GangApp> {
     seed: u64,
     mana_exclusion: bool,
     incremental: Option<u32>,
+    chunker: ChunkerSpec,
     work_per_quantum: u32,
     gc_grace: Duration,
     coordinator_handle: CoordinatorHandle,
@@ -219,6 +236,9 @@ pub struct GangSession<A: GangApp> {
     submitted: bool,
     active: Option<ActiveGang<A::RankState>>,
     series_acc: Option<SampledSeries>,
+    /// Restore-pipeline `[read, decompress, verify]` seconds summed over
+    /// every rank restart of every incarnation (v2 manifest images only).
+    restore_phases: [f64; 3],
 }
 
 impl<A: GangApp> GangSession<A> {
@@ -233,6 +253,7 @@ impl<A: GangApp> GangSession<A> {
             seed: 0,
             mana_exclusion: true,
             incremental: None,
+            chunker: ChunkerSpec::Fixed,
             work_per_quantum: 1,
             gc_grace: GC_GRACE,
             coordinator: CoordinatorHandle::Private,
@@ -309,6 +330,13 @@ impl<A: GangApp> GangSession<A> {
             .ok_or_else(|| Error::Workload("no active gang".into()))
     }
 
+    /// Restore-pipeline `[read, decompress, verify]` seconds summed over
+    /// every rank restart so far (all `[0.0; 3]` when every restart decoded
+    /// a v1 full image — the phases only exist for v2 manifest restores).
+    pub fn restore_phase_secs(&self) -> [f64; 3] {
+        self.restore_phases
+    }
+
     /// Boot one incarnation: coordinator, fabric rebuild, then every rank
     /// launched (generation 0) or restored from the newest gang manifest
     /// (later generations), workers spawned, sampler started. Returns
@@ -321,6 +349,7 @@ impl<A: GangApp> GangSession<A> {
         if let Some(full_every) = self.incremental {
             cfg.incremental = true;
             cfg.full_image_every = full_every;
+            cfg.chunker = self.chunker;
         }
         let (coordinator, base_env) = self.coordinator_handle.start(&cfg)?;
         self.app.begin_incarnation(self.generation);
@@ -400,6 +429,11 @@ impl<A: GangApp> GangSession<A> {
                         plugins,
                         &base_env,
                     )?;
+                    if let Some(rs) = &restarted.restore {
+                        self.restore_phases[0] += rs.read_secs;
+                        self.restore_phases[1] += rs.decompress_secs;
+                        self.restore_phases[2] += rs.verify_secs;
+                    }
                     (state, restarted.launched)
                 }
             };

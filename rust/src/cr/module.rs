@@ -12,6 +12,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::dmtcp::daemon::CoordinatorDaemon;
+use crate::dmtcp::store::ChunkerSpec;
 use crate::dmtcp::{Coordinator, CoordinatorConfig};
 use crate::error::Result;
 
@@ -34,6 +35,9 @@ pub struct CrConfig {
     /// With `incremental`, force every Nth checkpoint back to a
     /// self-contained v1 full image (0 = never force).
     pub full_image_every: u32,
+    /// With `incremental`, how segments split into chunks (fixed-size or
+    /// content-defined; exported as `DMTCP_CHUNKER`).
+    pub chunker: ChunkerSpec,
     /// Barrier timeout.
     pub phase_timeout: Duration,
 }
@@ -50,6 +54,7 @@ impl CrConfig {
             gzip: true,
             incremental: false,
             full_image_every: 0,
+            chunker: ChunkerSpec::Fixed,
             phase_timeout: Duration::from_secs(30),
         }
     }
@@ -153,6 +158,9 @@ fn coordinator_env(config: &CrConfig, coord: &Coordinator) -> BTreeMap<String, S
                 "DMTCP_FULL_EVERY".into(),
                 config.full_image_every.to_string(),
             );
+        }
+        if config.chunker != ChunkerSpec::Fixed {
+            env.insert("DMTCP_CHUNKER".into(), config.chunker.to_string());
         }
     }
     env.insert("SLURM_JOB_ID".into(), config.jobid.clone());

@@ -54,7 +54,7 @@ use crate::cr::app::CrApp;
 use crate::cr::auto::{AutoState, CrPolicy, CrReport};
 use crate::cr::module::{latest_images, CoordinatorHandle, CrConfig};
 use crate::dmtcp::process::Checkpointable;
-use crate::dmtcp::store::ImageStore;
+use crate::dmtcp::store::{ChunkerSpec, ImageStore};
 use crate::dmtcp::{Coordinator, ImageInfo, PluginRegistry, TimerPlugin};
 use crate::error::{Error, Result};
 use crate::metrics::{LdmsSampler, SampledSeries};
@@ -124,6 +124,7 @@ pub struct CrSessionBuilder<A: CrApp> {
     target_steps: u64,
     seed: u64,
     incremental: Option<u32>,
+    chunker: Option<ChunkerSpec>,
     gc_grace: Option<Duration>,
     coordinator: CoordinatorHandle,
 }
@@ -177,6 +178,16 @@ impl<A: CrApp> CrSessionBuilder<A> {
         self
     }
 
+    /// How incremental images chunk their segments (default
+    /// [`ChunkerSpec::Fixed`], or [`CrPolicy::chunker`] for auto
+    /// sessions): content-defined chunking keeps dedup effective when
+    /// state inserts shift segment bytes. No effect unless incremental
+    /// images are on.
+    pub fn chunker(mut self, chunker: ChunkerSpec) -> Self {
+        self.chunker = Some(chunker);
+        self
+    }
+
     /// Override the chunk-store GC grace window for this session's
     /// teardown (default [`GC_GRACE`], or [`CrPolicy::gc_grace`] for auto
     /// sessions). Campaigns with fast session teardown sharing one chunk
@@ -209,6 +220,12 @@ impl<A: CrApp> CrSessionBuilder<A> {
             CrStrategy::Auto(p) => p.gc_grace,
             CrStrategy::Manual => GC_GRACE,
         });
+        if let Some(c) = &self.chunker {
+            c.validate()?;
+        }
+        if let CrStrategy::Auto(p) = &self.strategy {
+            p.chunker.validate()?;
+        }
         Ok(CrSession {
             app: self.app,
             substrate: self.substrate,
@@ -217,12 +234,14 @@ impl<A: CrApp> CrSessionBuilder<A> {
             target_steps: self.target_steps,
             seed: self.seed,
             incremental: self.incremental,
+            chunker: self.chunker,
             gc_grace,
             coordinator_handle: self.coordinator,
             nonce: next_nonce(),
             incarnation: 0,
             active: None,
             series_acc: None,
+            restore_phases: [0.0; 3],
         })
     }
 }
@@ -244,12 +263,16 @@ pub struct CrSession<A: CrApp> {
     target_steps: u64,
     seed: u64,
     incremental: Option<u32>,
+    chunker: Option<ChunkerSpec>,
     gc_grace: Duration,
     coordinator_handle: CoordinatorHandle,
     nonce: u64,
     incarnation: u32,
     active: Option<ActiveJob<A::State>>,
     series_acc: Option<SampledSeries>,
+    /// Restore-pipeline `[read, decompress, verify]` seconds summed over
+    /// this session's restarts (v2 manifest images only).
+    restore_phases: [f64; 3],
 }
 
 impl<A: CrApp> CrSession<A> {
@@ -265,6 +288,7 @@ impl<A: CrApp> CrSession<A> {
             seed: 0,
             incremental: None,
             gc_grace: None,
+            chunker: None,
             coordinator: CoordinatorHandle::Private,
         }
     }
@@ -355,10 +379,14 @@ impl<A: CrApp> CrSession<A> {
         if let CrStrategy::Auto(p) = &self.strategy {
             cfg.incremental = p.incremental_ckpt;
             cfg.full_image_every = p.full_image_every;
+            cfg.chunker = p.chunker;
         }
         if let Some(full_every) = self.incremental {
             cfg.incremental = true;
             cfg.full_image_every = full_every;
+        }
+        if let Some(chunker) = self.chunker {
+            cfg.chunker = chunker;
         }
         let (coordinator, env) = self.coordinator_handle.start(&cfg)?;
         let images = self.session_images()?;
@@ -404,6 +432,11 @@ impl<A: CrApp> CrSession<A> {
                 &env,
             )?;
             let at = restarted.header.steps_done;
+            if let Some(rs) = &restarted.restore {
+                self.restore_phases[0] += rs.read_secs;
+                self.restore_phases[1] += rs.decompress_secs;
+                self.restore_phases[2] += rs.verify_secs;
+            }
             (state, restarted.launched, Some(at))
         };
         launched.wait_attached(ATTACH_TIMEOUT)?;
@@ -479,6 +512,14 @@ impl<A: CrApp> CrSession<A> {
     /// `kill`/`finish`). Campaign reports roll these up fleet-wide.
     pub fn series(&self) -> SampledSeries {
         self.series_acc.clone().unwrap_or_default()
+    }
+
+    /// Restore-pipeline `[read, decompress, verify]` seconds summed over
+    /// this session's restarts so far (all `[0.0; 3]` when every restart
+    /// decoded a v1 full image — the phases only exist for v2 manifest
+    /// restores). Campaign drivers fold these into the fleet report.
+    pub fn restore_phase_secs(&self) -> [f64; 3] {
+        self.restore_phases
     }
 
     /// Verify a final state bitwise against an uninterrupted reference run
@@ -687,6 +728,9 @@ impl<A: CrApp> CrSession<A> {
                     restart_steps,
                     chunks_written: tally.chunks_written,
                     chunks_deduped: tally.chunks_deduped,
+                    restore_read_secs: self.restore_phases[0],
+                    restore_decompress_secs: self.restore_phases[1],
+                    restore_verify_secs: self.restore_phases[2],
                 });
             }
             // func_trap: SIGTERM trapped → checkpoint → requeue.

@@ -20,19 +20,27 @@ use crate::dmtcp::process::{ProcessStats, SegmentSource, SuspendGate};
 use crate::dmtcp::protocol::{
     recv_from_coordinator, send_to_coordinator, FromCoordinator, Phase, ToCoordinator,
 };
-use crate::dmtcp::store::{ImageStore, SegmentManifest, StoreOpts};
+use crate::dmtcp::store::{ChunkerSpec, ImageStore, SegmentManifest, StoreConfig};
 use crate::dmtcp::virtualization::FdTable;
 use crate::error::{Error, Result};
 
 /// Everything the checkpoint thread needs about its process.
 pub struct CkptContext {
+    /// Process name (images are discovered by it).
     pub name: String,
+    /// Real (host) pid, sent in the Hello handshake.
     pub real_pid: u64,
+    /// Restart generation (0 = first incarnation).
     pub generation: u32,
+    /// The safe-point gate user threads park at during barriers.
     pub gate: Arc<SuspendGate>,
+    /// Shared process counters (steps, bytes, checkpoint totals).
     pub stats: Arc<ProcessStats>,
+    /// The process's (virtualized) environment.
     pub env: Arc<Mutex<BTreeMap<String, String>>>,
+    /// The process's virtual fd table (captured into images).
     pub fds: Arc<Mutex<FdTable>>,
+    /// Plugin registry fired at each barrier event.
     pub plugins: Arc<Mutex<PluginRegistry>>,
     /// Type-erased handle to the application state.
     pub source: Box<dyn SegmentSource>,
@@ -271,7 +279,7 @@ fn write_image(ctx: &mut CkptContext, vpid: u64, ckpt_id: u64, dir: &str) -> Res
     };
     let image = CheckpointImage { header, segments };
 
-    let (gzip, incremental, full_every, per_round) = {
+    let (gzip, incremental, full_every, per_round, chunker) = {
         let env = ctx.env.lock().expect("env poisoned");
         let flag = |k: &str| env.get(k).map(|v| v != "0").unwrap_or(false);
         (
@@ -281,6 +289,12 @@ fn write_image(ctx: &mut CkptContext, vpid: u64, ckpt_id: u64, dir: &str) -> Res
                 .and_then(|v| v.parse::<u64>().ok())
                 .unwrap_or(0),
             flag("DMTCP_IMAGE_PER_ROUND"),
+            // Malformed specs fail the checkpoint as a typed error rather
+            // than silently changing the chunking of every later image.
+            match env.get("DMTCP_CHUNKER") {
+                Some(v) => v.parse::<ChunkerSpec>()?,
+                None => ChunkerSpec::Fixed,
+            },
         )
     };
     let ckpt_index = ctx.stats.checkpoints.load(Ordering::Relaxed);
@@ -300,8 +314,9 @@ fn write_image(ctx: &mut CkptContext, vpid: u64, ckpt_id: u64, dir: &str) -> Res
     let t0 = Instant::now();
     let (stored, chunks_written, chunks_deduped) = if incremental && !force_full {
         let store = ImageStore::for_images(std::path::Path::new(dir));
-        let opts = StoreOpts {
+        let opts = StoreConfig {
             gzip,
+            chunker,
             ..Default::default()
         };
         let (manifest, stats) =

@@ -38,20 +38,27 @@ pub struct DmtcpCommand {
 /// Coordinator status snapshot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CoordStatus {
+    /// Registered checkpoint threads.
     pub clients: u32,
+    /// Highest completed checkpoint round.
     pub last_ckpt_id: u64,
+    /// Coordinator epoch (bumps on coordinator restart).
     pub epoch: u64,
 }
 
 /// Result of a requested checkpoint round.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CkptResult {
+    /// The completed round's id.
     pub ckpt_id: u64,
+    /// Images written in the round.
     pub images: u32,
+    /// Bytes stored across those images.
     pub total_stored_bytes: u64,
 }
 
 impl DmtcpCommand {
+    /// A command client for the coordinator at `addr`.
     pub fn new(addr: SocketAddr) -> Self {
         Self { addr }
     }

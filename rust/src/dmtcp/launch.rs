@@ -34,6 +34,7 @@ pub struct LaunchSpec {
 }
 
 impl LaunchSpec {
+    /// A launch spec for process `name` attaching to `coordinator`.
     pub fn new(name: impl Into<String>, coordinator: SocketAddr) -> Self {
         Self {
             name: name.into(),
@@ -42,6 +43,7 @@ impl LaunchSpec {
         }
     }
 
+    /// Add one environment variable (builder style).
     pub fn env(mut self, k: impl Into<String>, v: impl Into<String>) -> Self {
         self.env.insert(k.into(), v.into());
         self
@@ -50,6 +52,7 @@ impl LaunchSpec {
 
 /// A process running under checkpoint control.
 pub struct LaunchedProcess {
+    /// The simulated process under checkpoint control.
     pub process: UserProcess,
     ckpt_join: Option<std::thread::JoinHandle<()>>,
     attached_rx: mpsc::Receiver<Result<u64>>,

@@ -40,6 +40,7 @@ pub struct ManaState<S: Checkpointable> {
 }
 
 impl<S: Checkpointable> ManaState<S> {
+    /// Wrap `inner` with MANA lower-half exclusion ON.
     pub fn new(inner: Arc<Mutex<S>>, reinit: ReinitFn<S>) -> Self {
         Self::with_exclusion(inner, reinit, true)
     }

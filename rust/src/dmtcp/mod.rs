@@ -38,7 +38,8 @@ pub use restart::{
     dmtcp_restart, dmtcp_restart_with_env, inspect_gang, inspect_image, RestartedProcess,
 };
 pub use store::{
-    latest_gang_manifest, ChunkId, ChunkRef, GangManifest, GangRankEntry, GcStats, ImageManifest,
-    ImageStore, SegmentManifest, StoreOpts, StoreWriteStats, DEFAULT_CHUNK_SIZE,
+    latest_gang_manifest, ChunkId, ChunkRef, ChunkerSpec, GangManifest, GangRankEntry, GcStats,
+    ImageManifest, ImageStore, RestoreStats, SegmentManifest, StoreConfig, StoreWriteStats,
+    DEFAULT_CHUNK_SIZE,
 };
 pub use virtualization::{FdKind, FdTable, PidTable};

@@ -87,6 +87,7 @@ pub struct SuspendGate {
 }
 
 impl SuspendGate {
+    /// A fresh gate with no suspend requested.
     pub fn new() -> Self {
         Self::default()
     }
@@ -239,10 +240,12 @@ impl WorkerCtx {
         self.stats.steps_done.store(steps_done, Ordering::Relaxed);
     }
 
+    /// This worker's index within the process.
     pub fn thread_idx(&self) -> usize {
         self.thread_idx
     }
 
+    /// Whether the process has been torn down (preemption or quit).
     pub fn killed(&self) -> bool {
         self.gate.killed()
     }
@@ -254,16 +257,23 @@ impl WorkerCtx {
 /// [`crate::dmtcp::restart::dmtcp_restart`]; most fields are shared with the
 /// checkpoint thread.
 pub struct UserProcess {
+    /// Process name (images are discovered by it).
     pub name: String,
+    /// Real (host) pid.
     pub real_pid: u64,
     /// Virtual pid (assigned by the coordinator at Hello/Welcome).
     pub vpid: Arc<AtomicU64>,
     /// Restart generation (0 = first incarnation).
     pub generation: u32,
+    /// The safe-point gate user threads park at during barriers.
     pub gate: Arc<SuspendGate>,
+    /// Shared process counters (steps, bytes, checkpoint totals).
     pub stats: Arc<ProcessStats>,
+    /// The process's (virtualized) environment.
     pub env: Arc<Mutex<BTreeMap<String, String>>>,
+    /// The process's virtual fd table.
     pub fds: Arc<Mutex<crate::dmtcp::virtualization::FdTable>>,
+    /// Plugin registry fired at each barrier event.
     pub plugins: Arc<Mutex<crate::dmtcp::plugin::PluginRegistry>>,
     pub(crate) threads: Vec<std::thread::JoinHandle<()>>,
 }

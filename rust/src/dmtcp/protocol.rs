@@ -25,14 +25,20 @@ use crate::util::bytes::{ByteReader, PutBytes};
 /// Barrier phases, in order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Phase {
+    /// Park every user thread at its safe-point gate.
     Suspend = 0,
+    /// Drain in-flight messages so the cut is consistent.
     Drain = 1,
+    /// Write the checkpoint image.
     Checkpoint = 2,
+    /// Re-inject drained messages.
     Refill = 3,
+    /// Release the gates; user threads continue.
     Resume = 4,
 }
 
 impl Phase {
+    /// Every phase, in barrier order.
     pub const ALL: [Phase; 5] = [
         Phase::Suspend,
         Phase::Drain,
@@ -41,6 +47,7 @@ impl Phase {
         Phase::Resume,
     ];
 
+    /// Decode a wire phase byte (inverse of `phase as u8`).
     pub fn from_u8(v: u8) -> Result<Self> {
         Ok(match v {
             0 => Phase::Suspend,
@@ -65,22 +72,41 @@ pub enum ToCoordinator {
     /// exactly that job (unknown tags are rejected with a typed error), an
     /// untagged Hello is only accepted when the daemon hosts a single job.
     Hello {
+        /// The registering process's real (host) pid.
         real_pid: u64,
+        /// Process name (image discovery is scoped by it).
         name: String,
+        /// Worker threads the barrier must gate.
         n_threads: u32,
+        /// Original virtual pid to re-adopt (restart path).
         restored_vpid: Option<u64>,
+        /// Gang rank of the process, if any.
         rank: Option<u32>,
+        /// Job tag for multi-tenant daemon routing.
         job: Option<String>,
     },
     /// Ack for one barrier phase of one checkpoint round.
-    PhaseAck { vpid: u64, ckpt_id: u64, phase: Phase },
+    PhaseAck {
+        /// The acking process's virtual pid.
+        vpid: u64,
+        /// Checkpoint round being acked.
+        ckpt_id: u64,
+        /// Phase being acked.
+        phase: Phase,
+    },
     /// Checkpoint phase completion detail (image written).
     CkptDone {
+        /// The writing process's virtual pid.
         vpid: u64,
+        /// Checkpoint round the image belongs to.
         ckpt_id: u64,
+        /// Image path, relative to the checkpoint directory.
         path: String,
+        /// Bytes actually stored (compressed / deduplicated).
         stored_bytes: u64,
+        /// Raw (logical, uncompressed) segment bytes.
         raw_bytes: u64,
+        /// Wall seconds spent writing the image.
         write_secs: f64,
         /// Chunks newly written to the content-addressed store (0 for
         /// full images).
@@ -89,10 +115,16 @@ pub enum ToCoordinator {
         chunks_deduped: u64,
     },
     /// Graceful detach.
-    Goodbye { vpid: u64 },
-    /// One-off command-client requests (`dmtcp_command` analog).
+    Goodbye {
+        /// The departing process's virtual pid.
+        vpid: u64,
+    },
+    /// One-off command-client request: trigger a checkpoint round
+    /// (`dmtcp_command --checkpoint` analog).
     CommandCheckpoint,
+    /// One-off command-client request: status snapshot.
     CommandStatus,
+    /// One-off command-client request: shut the coordinator down.
     CommandQuit,
 }
 
@@ -100,30 +132,47 @@ pub enum ToCoordinator {
 #[derive(Debug, Clone, PartialEq)]
 pub enum FromCoordinator {
     /// Registration reply: assigned (or re-adopted) virtual pid.
-    Welcome { vpid: u64, epoch: u64 },
+    Welcome {
+        /// The virtual pid the coordinator assigned.
+        vpid: u64,
+        /// Coordinator epoch (bumps on coordinator restart).
+        epoch: u64,
+    },
     /// Enter a barrier phase of checkpoint round `ckpt_id`. `dir` is the
     /// destination directory during the `Checkpoint` phase.
     Phase {
+        /// Checkpoint round the phase belongs to.
         ckpt_id: u64,
+        /// Which barrier phase to enter.
         phase: Phase,
+        /// Image destination directory (Checkpoint phase only).
         dir: String,
     },
     /// Terminate the user process (preemption path).
     Kill,
     /// Status snapshot (command-client reply).
     Status {
+        /// Registered checkpoint threads.
         clients: u32,
+        /// Highest completed checkpoint round.
         last_ckpt_id: u64,
+        /// Coordinator epoch.
         epoch: u64,
     },
     /// Checkpoint round completed (command-client reply).
     CkptComplete {
+        /// The completed round's id.
         ckpt_id: u64,
+        /// Images written in the round.
         images: u32,
+        /// Bytes stored across those images.
         total_stored_bytes: u64,
     },
     /// Generic error reply.
-    Error { message: String },
+    Error {
+        /// Human-readable cause.
+        message: String,
+    },
 }
 
 // ---- encoding ------------------------------------------------------------

@@ -22,8 +22,13 @@ use crate::error::Result;
 /// Outcome of a restart: the re-attached process plus the image header it
 /// was reconstructed from (for logging / verification).
 pub struct RestartedProcess {
+    /// The re-attached process (threads parked, coordinator registered).
     pub launched: LaunchedProcess,
+    /// Header of the image the process was reconstructed from.
     pub header: ImageHeader,
+    /// Per-phase restore-pipeline stats for v2 manifest images; `None`
+    /// when the image was a v1 full image (decoded inline, no store).
+    pub restore: Option<crate::dmtcp::store::RestoreStats>,
 }
 
 /// Restart a process from `image_path`, attaching to `coordinator`.
@@ -55,10 +60,11 @@ pub fn dmtcp_restart_with_env<S: Checkpointable + 'static>(
     env_overrides: &BTreeMap<String, String>,
 ) -> Result<RestartedProcess> {
     // Reads v1 full images and v2 incremental manifests alike; v2 segments
-    // reassemble from the chunk store next to the image, with per-chunk
-    // CRC verification — a damaged store surfaces as `Error::Corrupt`
-    // before any state is touched.
-    let image = crate::dmtcp::store::read_image_file(image_path)?;
+    // reassemble — in parallel, each distinct chunk fetched and verified
+    // once — from the chunk store next to the image, with per-chunk CRC
+    // verification. A damaged store surfaces as `Error::Corrupt` before
+    // any state is touched.
+    let (image, restore) = crate::dmtcp::store::read_image_file_with_stats(image_path)?;
     let header = image.header.clone();
 
     // Rebuild process metadata from the image.
@@ -112,7 +118,11 @@ pub fn dmtcp_restart_with_env<S: Checkpointable + 'static>(
         generation,
         header.steps_done
     );
-    Ok(RestartedProcess { launched, header })
+    Ok(RestartedProcess {
+        launched,
+        header,
+        restore,
+    })
 }
 
 /// Peek at an image without restoring it (`dmtcp_restart --inspect`).

@@ -6,8 +6,10 @@
 //! show the same lever: *don't rewrite unchanged memory*. This module
 //! applies it to the image format:
 //!
-//! * Segments are split into fixed-size chunks; each chunk is addressed by
-//!   a CRC-seeded 128-bit content hash ([`ChunkId`]).
+//! * Segments are split into chunks — fixed-size, or content-defined via
+//!   a gear rolling hash ([`ChunkerSpec`]) so an insert shifts only the
+//!   boundaries near it instead of every later chunk; each chunk is
+//!   addressed by a CRC-seeded 128-bit content hash ([`ChunkId`]).
 //! * Chunks live in a per-workdir store (`<ckpt_dir>/store/<aa>/<hex>.chunk`,
 //!   atomically published), so a checkpoint after a small state delta only
 //!   compresses and writes chunks whose content actually changed — across
@@ -22,6 +24,11 @@
 //! * Reads verify every chunk's CRC and length before any state is
 //!   restored; a missing or damaged chunk surfaces as the typed
 //!   [`Error::Corrupt`] — never a panic or silent zero-fill.
+//! * Restore fans chunk fetch → decompress → CRC verify over the same
+//!   worker pool the write path uses, decompressing each *distinct* chunk
+//!   exactly once even when many segment references share a hash;
+//!   [`RestoreStats`] reports the per-phase timings
+//!   ([`ImageStore::assemble_with_stats`]).
 //!
 //! Dirty-segment tracking lives one level up (the checkpoint thread keeps
 //! the previous generation's [`SegmentManifest`]s and skips re-chunking
@@ -33,8 +40,8 @@ use std::collections::BTreeSet;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
 
 use flate2::read::GzDecoder;
 use flate2::write::GzEncoder;
@@ -50,6 +57,14 @@ use crate::util::bytes::{ByteReader, PutBytes};
 /// Default chunk size: 64 KiB balances dedup granularity (small deltas
 /// re-store little) against per-chunk overhead (hashing, one file each).
 pub const DEFAULT_CHUNK_SIZE: usize = 64 * 1024;
+
+/// Default CDC minimum chunk size (boundaries are suppressed below this).
+pub const DEFAULT_CDC_MIN: usize = 16 * 1024;
+/// Default CDC target average chunk size (the boundary-mask width; must
+/// be a power of two).
+pub const DEFAULT_CDC_AVG: usize = 64 * 1024;
+/// Default CDC maximum chunk size (a boundary is forced at this length).
+pub const DEFAULT_CDC_MAX: usize = 256 * 1024;
 
 /// The store directory name under a checkpoint directory.
 pub const STORE_DIR_NAME: &str = "store";
@@ -275,24 +290,206 @@ impl ImageManifest {
     }
 }
 
-/// Knobs for the incremental write pipeline.
+/// How segment bytes are split into chunks before content addressing.
+///
+/// The chunker only decides *boundaries*; chunk files, manifests and the
+/// restore path are identical for every variant (invariant 10, DESIGN
+/// §13): an image written with any chunker restores bit-identical on any
+/// reader, because readers never consult the chunker at all — they follow
+/// the manifest's explicit `(id, raw_len, raw_crc)` references.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkerSpec {
+    /// Fixed-size split at `chunk_size` boundaries (the last chunk of a
+    /// segment is shorter). Cheapest, but a single inserted byte shifts
+    /// every later boundary and defeats dedup for the rest of the segment.
+    Fixed,
+    /// Content-defined chunking: a gear rolling hash
+    /// (`h = (h << 1) + GEAR[byte]`, ~64-byte effective window) cuts a
+    /// boundary where `h & (avg - 1) == 0`, suppressed below `min` bytes
+    /// and forced at `max`. Boundaries depend on content, not offsets, so
+    /// chunks re-synchronize shortly after an insert and dedup survives.
+    Cdc {
+        /// Minimum chunk size in bytes (≥ 1; boundaries suppressed below).
+        min: usize,
+        /// Target average chunk size (the boundary mask; a power of two,
+        /// `min ≤ avg ≤ max`).
+        avg: usize,
+        /// Maximum chunk size in bytes (a boundary is forced here).
+        max: usize,
+    },
+}
+
+impl ChunkerSpec {
+    /// The default content-defined chunker:
+    /// `cdc:DEFAULT_CDC_MIN:DEFAULT_CDC_AVG:DEFAULT_CDC_MAX`.
+    pub fn cdc_default() -> Self {
+        Self::Cdc {
+            min: DEFAULT_CDC_MIN,
+            avg: DEFAULT_CDC_AVG,
+            max: DEFAULT_CDC_MAX,
+        }
+    }
+
+    /// Validate the bounds; every constructor path (spec key, env var,
+    /// CLI flag, builder) funnels through this before the chunker is used.
+    pub fn validate(&self) -> Result<()> {
+        match *self {
+            Self::Fixed => Ok(()),
+            Self::Cdc { min, avg, max } => {
+                if min == 0 {
+                    return Err(Error::Usage("cdc min chunk size must be >= 1".into()));
+                }
+                if !(min <= avg && avg <= max) {
+                    return Err(Error::Usage(format!(
+                        "cdc chunk sizes must satisfy min <= avg <= max, got \
+                         {min}:{avg}:{max}"
+                    )));
+                }
+                if !avg.is_power_of_two() {
+                    return Err(Error::Usage(format!(
+                        "cdc avg chunk size must be a power of two, got {avg}"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl Default for ChunkerSpec {
+    fn default() -> Self {
+        Self::Fixed
+    }
+}
+
+impl std::fmt::Display for ChunkerSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Self::Fixed => write!(f, "fixed"),
+            Self::Cdc { min, avg, max } => write!(f, "cdc:{min}:{avg}:{max}"),
+        }
+    }
+}
+
+impl std::str::FromStr for ChunkerSpec {
+    type Err = Error;
+
+    /// Parse `fixed`, `cdc` (default bounds), or `cdc:<min>:<avg>:<max>`
+    /// (bytes). The exact strings [`Display`](std::fmt::Display) emits
+    /// round-trip.
+    fn from_str(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let spec = match s {
+            "fixed" => Self::Fixed,
+            "cdc" => Self::cdc_default(),
+            _ => {
+                let Some(rest) = s.strip_prefix("cdc:") else {
+                    return Err(Error::Usage(format!(
+                        "unknown chunker {s:?} (expected fixed, cdc, or \
+                         cdc:<min>:<avg>:<max>)"
+                    )));
+                };
+                let parts: Vec<&str> = rest.split(':').collect();
+                if parts.len() != 3 {
+                    return Err(Error::Usage(format!(
+                        "cdc chunker takes min:avg:max, got {s:?}"
+                    )));
+                }
+                let parse = |what: &str, p: &str| -> Result<usize> {
+                    p.trim().parse::<usize>().map_err(|_| {
+                        Error::Usage(format!("cdc {what} chunk size {p:?} is not a byte count"))
+                    })
+                };
+                Self::Cdc {
+                    min: parse("min", parts[0])?,
+                    avg: parse("avg", parts[1])?,
+                    max: parse("max", parts[2])?,
+                }
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// The gear table: 256 pseudo-random u64s (SplitMix64 over a fixed seed),
+/// one per byte value. Process-independent and version-pinned — boundary
+/// placement is part of what makes dedup work *across* sessions, so the
+/// table must never vary.
+fn gear_table() -> &'static [u64; 256] {
+    static TABLE: OnceLock<[u64; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u64; 256];
+        let mut s = 0x4E43_5243_4443_5631u64; // "NCRCDCV1"
+        for e in t.iter_mut() {
+            s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            *e = mix64(s);
+        }
+        t
+    })
+}
+
+/// Chunk boundaries for `data` under `chunker`: `(start, end)` ranges that
+/// cover `data` exactly, in order. `chunk_size` is the [`ChunkerSpec::Fixed`]
+/// width. Empty data yields no ranges (an empty segment has no chunks).
+fn chunk_ranges(data: &[u8], chunk_size: usize, chunker: ChunkerSpec) -> Vec<(usize, usize)> {
+    if data.is_empty() {
+        return Vec::new();
+    }
+    match chunker {
+        ChunkerSpec::Fixed => {
+            let sz = chunk_size.max(1);
+            (0..data.len())
+                .step_by(sz)
+                .map(|s| (s, (s + sz).min(data.len())))
+                .collect()
+        }
+        ChunkerSpec::Cdc { min, avg, max } => {
+            let gear = gear_table();
+            let mask = avg as u64 - 1;
+            let mut out = Vec::new();
+            let mut start = 0usize;
+            let mut h = 0u64;
+            for (pos, &b) in data.iter().enumerate() {
+                h = (h << 1).wrapping_add(gear[b as usize]);
+                let len = pos + 1 - start;
+                if (len >= min && h & mask == 0) || len >= max {
+                    out.push((start, pos + 1));
+                    start = pos + 1;
+                    h = 0;
+                }
+            }
+            if start < data.len() {
+                out.push((start, data.len()));
+            }
+            out
+        }
+    }
+}
+
+/// Knobs for the incremental write and parallel restore pipelines.
 #[derive(Debug, Clone)]
-pub struct StoreOpts {
-    /// Chunk size in bytes (fixed-size split; the last chunk is shorter).
+pub struct StoreConfig {
+    /// Chunk size in bytes for [`ChunkerSpec::Fixed`] (the last chunk of
+    /// a segment is shorter).
     pub chunk_size: usize,
-    /// Compression worker threads (the parallel gzip stage).
+    /// Worker threads, shared by the parallel compress stage on write and
+    /// the fetch → decompress → verify stage on restore.
     pub workers: usize,
     /// gzip chunk payloads (DMTCP `--gzip`; chunk files self-describe, so
     /// mixed-mode stores read fine).
     pub gzip: bool,
+    /// How segment bytes are split into chunks.
+    pub chunker: ChunkerSpec,
 }
 
-impl Default for StoreOpts {
+impl Default for StoreConfig {
     fn default() -> Self {
         Self {
             chunk_size: DEFAULT_CHUNK_SIZE,
             workers: default_workers(),
             gzip: true,
+            chunker: ChunkerSpec::Fixed,
         }
     }
 }
@@ -319,6 +516,30 @@ pub struct StoreWriteStats {
     pub logical_bytes: u64,
     /// Bytes actually written to disk: new chunk files + the manifest.
     pub stored_bytes: u64,
+}
+
+/// Per-phase counters and timings from one parallel manifest restore
+/// ([`ImageStore::assemble_with_stats`]). Phase seconds are summed across
+/// pool workers, so they can exceed `wall_secs` when the pool overlaps
+/// work — compare phases to each other, and `wall_secs` to the clock.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RestoreStats {
+    /// Distinct chunk files fetched from the store.
+    pub chunk_reads: u64,
+    /// Manifest chunk references served from the per-restore memo instead
+    /// of a second fetch (dedup-heavy images: `total refs - chunk_reads`).
+    pub chunks_memoized: u64,
+    /// Seconds spent reading chunk files (summed across workers).
+    pub read_secs: f64,
+    /// Seconds spent decompressing chunk payloads (summed across workers).
+    pub decompress_secs: f64,
+    /// Seconds spent CRC-verifying raw bytes, chunk- and segment-level
+    /// (summed across workers).
+    pub verify_secs: f64,
+    /// Wall-clock seconds for the whole assemble.
+    pub wall_secs: f64,
+    /// Workers the restore pool actually ran.
+    pub workers: usize,
 }
 
 /// Stats from one [`ImageStore::gc`] pass.
@@ -378,8 +599,9 @@ impl ImageStore {
         img: &CheckpointImage,
         path: &Path,
         prev: Option<&BTreeMap<String, SegmentManifest>>,
-        opts: &StoreOpts,
+        opts: &StoreConfig,
     ) -> Result<(ImageManifest, StoreWriteStats)> {
+        opts.chunker.validate()?;
         let mut stats = StoreWriteStats::default();
         let chunk_size = opts.chunk_size.max(1);
 
@@ -406,9 +628,10 @@ impl ImageStore {
         let jobs: Vec<(usize, usize, &[u8])> = dirty
             .iter()
             .flat_map(|&(si, _, data, _)| {
-                data.chunks(chunk_size)
+                chunk_ranges(data, chunk_size, opts.chunker)
+                    .into_iter()
                     .enumerate()
-                    .map(move |(ci, c)| (si, ci, c))
+                    .map(move |(ci, (s, e))| (si, ci, &data[s..e]))
             })
             .collect();
         // Degenerate but legal: an empty segment still needs a manifest.
@@ -459,7 +682,7 @@ impl ImageStore {
     fn run_pool(
         &self,
         jobs: &[(usize, usize, &[u8])],
-        opts: &StoreOpts,
+        opts: &StoreConfig,
     ) -> Result<Vec<(usize, usize, ChunkRef, u64, bool)>> {
         let cursor = AtomicUsize::new(0);
         let out: Mutex<Vec<(usize, usize, ChunkRef, u64, bool)>> =
@@ -568,7 +791,15 @@ impl ImageStore {
     /// Fetch and verify one chunk. Every failure mode — missing file, bad
     /// magic, gzip damage, length or CRC mismatch — is [`Error::Corrupt`].
     pub fn get_chunk(&self, cref: &ChunkRef) -> Result<Vec<u8>> {
+        self.get_chunk_timed(cref).map(|(raw, _)| raw)
+    }
+
+    /// [`get_chunk`](Self::get_chunk) plus per-phase wall times
+    /// `[read, decompress, verify]` in seconds — the restore pipeline's
+    /// accounting primitive.
+    fn get_chunk_timed(&self, cref: &ChunkRef) -> Result<(Vec<u8>, [f64; 3])> {
         let path = self.chunk_path(cref.id);
+        let t_read = Instant::now();
         let bytes = std::fs::read(&path).map_err(|e| {
             Error::Corrupt(format!(
                 "chunk {} missing from store {}: {e}",
@@ -576,6 +807,7 @@ impl ImageStore {
                 self.root.display()
             ))
         })?;
+        let read_secs = t_read.elapsed().as_secs_f64();
         if bytes.len() < CHUNK_MAGIC.len() + 1 || &bytes[..CHUNK_MAGIC.len()] != CHUNK_MAGIC {
             return Err(Error::Corrupt(format!(
                 "chunk {}: bad chunk-file magic",
@@ -584,6 +816,7 @@ impl ImageStore {
         }
         let flags = bytes[CHUNK_MAGIC.len()];
         let payload = &bytes[CHUNK_MAGIC.len() + 1..];
+        let t_dec = Instant::now();
         let raw = if flags & CHUNK_FLAG_GZIP != 0 {
             let mut dec = GzDecoder::new(payload);
             let mut out = Vec::with_capacity(cref.raw_len as usize);
@@ -594,6 +827,8 @@ impl ImageStore {
         } else {
             payload.to_vec()
         };
+        let decompress_secs = t_dec.elapsed().as_secs_f64();
+        let t_ver = Instant::now();
         if raw.len() != cref.raw_len as usize {
             return Err(Error::Corrupt(format!(
                 "chunk {}: length {} != manifest {}",
@@ -610,19 +845,127 @@ impl ImageStore {
                 cref.raw_crc
             )));
         }
-        Ok(raw)
+        let verify_secs = t_ver.elapsed().as_secs_f64();
+        Ok((raw, [read_secs, decompress_secs, verify_secs]))
     }
 
     /// Reassemble a full [`CheckpointImage`] from a manifest, verifying
-    /// per-chunk and per-segment CRCs.
+    /// per-chunk and per-segment CRCs. Convenience wrapper over
+    /// [`assemble_with_stats`](Self::assemble_with_stats) with the
+    /// default worker pool.
     pub fn assemble(&self, manifest: &ImageManifest) -> Result<CheckpointImage> {
+        self.assemble_with_stats(manifest, default_workers())
+            .map(|(img, _)| img)
+    }
+
+    /// The parallel restore pipeline: fetch → decompress → CRC-verify
+    /// every *distinct* chunk the manifest references over a worker pool
+    /// (the write pool's twin), then stitch segments sequentially.
+    ///
+    /// Ordering guarantee (DESIGN §13): workers only populate a map keyed
+    /// by [`ChunkId`] with fully verified raw bytes; segment assembly then
+    /// walks the manifest in order on the calling thread. Output is
+    /// therefore deterministic and bit-identical to a sequential restore
+    /// regardless of worker count or interleaving. The per-restore memo
+    /// means a chunk referenced by many segments (zero pages, replicated
+    /// tables) is read, decompressed and verified exactly once; two
+    /// references sharing a hash but disagreeing on length or CRC are
+    /// typed corruption before any IO happens.
+    pub fn assemble_with_stats(
+        &self,
+        manifest: &ImageManifest,
+        workers: usize,
+    ) -> Result<(CheckpointImage, RestoreStats)> {
+        let t_wall = Instant::now();
+        let mut unique: BTreeMap<ChunkId, ChunkRef> = BTreeMap::new();
+        let mut total_refs = 0u64;
+        for s in &manifest.segments {
+            for c in &s.chunks {
+                total_refs += 1;
+                if let Some(prev) = unique.insert(c.id, *c) {
+                    if prev.raw_len != c.raw_len || prev.raw_crc != c.raw_crc {
+                        return Err(Error::Corrupt(format!(
+                            "chunk {}: conflicting manifest references (len {} \
+                             crc {:08x} vs len {} crc {:08x})",
+                            c.id.hex(),
+                            prev.raw_len,
+                            prev.raw_crc,
+                            c.raw_len,
+                            c.raw_crc
+                        )));
+                    }
+                }
+            }
+        }
+        let refs: Vec<ChunkRef> = unique.into_values().collect();
+        let mut stats = RestoreStats {
+            chunk_reads: refs.len() as u64,
+            chunks_memoized: total_refs - refs.len() as u64,
+            workers: workers.clamp(1, refs.len().max(1)),
+            ..RestoreStats::default()
+        };
+
+        let cursor = AtomicUsize::new(0);
+        let fetched: Mutex<BTreeMap<ChunkId, Vec<u8>>> = Mutex::new(BTreeMap::new());
+        let first_err: Mutex<Option<Error>> = Mutex::new(None);
+        let phases: Mutex<[f64; 3]> = Mutex::new([0.0; 3]);
+        std::thread::scope(|scope| {
+            for _ in 0..stats.workers {
+                scope.spawn(|| {
+                    let mut local: Vec<(ChunkId, Vec<u8>)> = Vec::new();
+                    let mut t = [0.0f64; 3];
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= refs.len() {
+                            break;
+                        }
+                        let cref = refs[i];
+                        match self.get_chunk_timed(&cref) {
+                            Ok((raw, dt)) => {
+                                for (a, d) in t.iter_mut().zip(dt) {
+                                    *a += d;
+                                }
+                                local.push((cref.id, raw));
+                            }
+                            Err(e) => {
+                                let mut g = first_err.lock().expect("pool error slot");
+                                if g.is_none() {
+                                    *g = Some(e);
+                                }
+                                break;
+                            }
+                        }
+                    }
+                    fetched.lock().expect("restore results").extend(local);
+                    let mut g = phases.lock().expect("phase timings");
+                    for (a, d) in g.iter_mut().zip(t) {
+                        *a += d;
+                    }
+                });
+            }
+        });
+        if let Some(e) = first_err.into_inner().expect("pool error slot") {
+            return Err(e);
+        }
+        let fetched = fetched.into_inner().expect("restore results");
+        let [r, d, v] = phases.into_inner().expect("phase timings");
+        stats.read_secs = r;
+        stats.decompress_secs = d;
+        stats.verify_secs = v;
+
+        // Sequential, deterministic stitch + per-segment CRC.
         let mut segments = Vec::with_capacity(manifest.segments.len());
         for s in &manifest.segments {
             let mut data = Vec::with_capacity(s.raw_len as usize);
             for c in &s.chunks {
-                data.extend_from_slice(&self.get_chunk(c)?);
+                let raw = fetched.get(&c.id).ok_or_else(|| {
+                    Error::Corrupt(format!("chunk {} vanished mid-restore", c.id.hex()))
+                })?;
+                data.extend_from_slice(raw);
             }
+            let t_ver = Instant::now();
             let got = crc32fast::hash(&data);
+            stats.verify_secs += t_ver.elapsed().as_secs_f64();
             if got != s.raw_crc {
                 return Err(Error::Corrupt(format!(
                     "segment {:?}: CRC mismatch after reassembly: stored {:08x}, \
@@ -632,10 +975,14 @@ impl ImageStore {
             }
             segments.push((s.name.clone(), data));
         }
-        Ok(CheckpointImage {
-            header: manifest.header.clone(),
-            segments,
-        })
+        stats.wall_secs = t_wall.elapsed().as_secs_f64();
+        Ok((
+            CheckpointImage {
+                header: manifest.header.clone(),
+                segments,
+            },
+            stats,
+        ))
     }
 
     /// Delete chunks referenced by no `*.dmtcp` manifest under `ckpt_dir`,
@@ -735,15 +1082,26 @@ fn read_manifest_file(path: &Path) -> Result<Option<ImageManifest>> {
 /// image file. This is what `CheckpointImage::read_file` and
 /// `dmtcp_restart` call.
 pub fn read_image_file(path: &Path) -> Result<CheckpointImage> {
+    read_image_file_with_stats(path).map(|(img, _)| img)
+}
+
+/// [`read_image_file`] plus the restore pipeline's per-phase stats.
+/// `None` for v1 full images — they decode inline with no chunk store, so
+/// there are no restore phases to report.
+pub fn read_image_file_with_stats(
+    path: &Path,
+) -> Result<(CheckpointImage, Option<RestoreStats>)> {
     let bytes = std::fs::read(path)
         .map_err(|e| Error::Image(format!("{}: {e}", path.display())))?;
     let (version, flags, body) = image::unframe(&bytes)?;
     match version {
-        VERSION_FULL => CheckpointImage::from_unframed(flags, body),
+        VERSION_FULL => Ok((CheckpointImage::from_unframed(flags, body)?, None)),
         VERSION_MANIFEST => {
             let manifest = ImageManifest::decode(body)?;
             let dir = path.parent().unwrap_or(Path::new("."));
-            ImageStore::for_images(dir).assemble(&manifest)
+            let (img, stats) =
+                ImageStore::for_images(dir).assemble_with_stats(&manifest, default_workers())?;
+            Ok((img, Some(stats)))
         }
         other => Err(Error::Image(format!("unsupported image version {other}"))),
     }
@@ -1001,11 +1359,37 @@ mod tests {
         }
     }
 
-    fn opts() -> StoreOpts {
-        StoreOpts {
+    fn opts() -> StoreConfig {
+        StoreConfig {
             chunk_size: 16 * 1024,
             workers: 3,
             gzip: true,
+            chunker: ChunkerSpec::Fixed,
+        }
+    }
+
+    /// SplitMix64 byte stream: CDC fixtures need real entropy — on
+    /// near-periodic data every 13-byte gear window repeats and the
+    /// boundary mask can simply never hit, degenerating CDC to max-size
+    /// cuts.
+    fn rand_bytes(n: usize, seed: u64) -> Vec<u8> {
+        let mut s = seed;
+        (0..n)
+            .map(|_| {
+                s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+                (mix64(s) >> 56) as u8
+            })
+            .collect()
+    }
+
+    fn cdc_opts() -> StoreConfig {
+        StoreConfig {
+            chunker: ChunkerSpec::Cdc {
+                min: 2 * 1024,
+                avg: 8 * 1024,
+                max: 32 * 1024,
+            },
+            ..opts()
         }
     }
 
@@ -1196,12 +1580,197 @@ mod tests {
         let store = ImageStore::for_images(&d);
         let img = sample_image(8);
         let path = d.join("g.dmtcp");
-        let o = StoreOpts {
+        let o = StoreConfig {
             gzip: false,
             ..opts()
         };
         store.write_incremental(&img, &path, None, &o).unwrap();
         assert_eq!(read_image_file(&path).unwrap(), img);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn chunker_spec_parses_and_round_trips() {
+        use std::str::FromStr as _;
+        for (s, want) in [
+            ("fixed", ChunkerSpec::Fixed),
+            ("cdc", ChunkerSpec::cdc_default()),
+            (
+                "cdc:1024:4096:16384",
+                ChunkerSpec::Cdc {
+                    min: 1024,
+                    avg: 4096,
+                    max: 16384,
+                },
+            ),
+        ] {
+            let got = ChunkerSpec::from_str(s).unwrap();
+            assert_eq!(got, want, "{s}");
+            // Display round-trips through FromStr.
+            assert_eq!(ChunkerSpec::from_str(&got.to_string()).unwrap(), got);
+        }
+        for bad in [
+            "",
+            "nope",
+            "cdc:1:2",
+            "cdc:1:2:3:4",
+            "cdc:0:4096:16384",     // min must be >= 1
+            "cdc:8192:4096:16384",  // min > avg
+            "cdc:1024:5000:16384",  // avg not a power of two
+            "cdc:1024:16384:4096",  // avg > max
+            "cdc:a:4096:16384",     // not a byte count
+        ] {
+            match ChunkerSpec::from_str(bad) {
+                Err(Error::Usage(_)) => {}
+                other => panic!("{bad:?} should be Error::Usage, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly_and_respect_bounds() {
+        let data = rand_bytes(200_000, 5);
+        for (cfg, min, max) in [
+            (ChunkerSpec::Fixed, 1, 16 * 1024),
+            (
+                ChunkerSpec::Cdc {
+                    min: 2 * 1024,
+                    avg: 8 * 1024,
+                    max: 32 * 1024,
+                },
+                2 * 1024,
+                32 * 1024,
+            ),
+        ] {
+            let ranges = chunk_ranges(&data, 16 * 1024, cfg);
+            assert_eq!(ranges.first().unwrap().0, 0);
+            assert_eq!(ranges.last().unwrap().1, data.len());
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "{cfg:?}: ranges must tile");
+            }
+            for (i, &(s, e)) in ranges.iter().enumerate() {
+                assert!(e > s, "{cfg:?}: empty range");
+                assert!(e - s <= max, "{cfg:?}: range {i} too long: {}", e - s);
+                if i + 1 < ranges.len() {
+                    assert!(e - s >= min, "{cfg:?}: interior range {i} too short");
+                }
+            }
+        }
+        assert!(chunk_ranges(&[], 1024, ChunkerSpec::cdc_default()).is_empty());
+    }
+
+    #[test]
+    fn cdc_images_restore_bit_identical() {
+        let d = dir("cdc_rt");
+        let store = ImageStore::for_images(&d);
+        let img = sample_image(12);
+        let path = d.join("g.dmtcp");
+        let (manifest, _) = store
+            .write_incremental(&img, &path, None, &cdc_opts())
+            .unwrap();
+        assert_eq!(manifest.raw_bytes(), img.raw_segment_bytes());
+        assert_eq!(read_image_file(&path).unwrap(), img);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn cdc_survives_insert_shift_where_fixed_does_not() {
+        // Insert a few bytes near the front of a big random segment:
+        // fixed chunking shifts every later boundary and rewrites nearly
+        // everything; CDC boundaries re-synchronize after the insert.
+        let seg = rand_bytes(1_000_000, 77);
+        let mut shifted = seg.clone();
+        for (k, b) in [7u8, 33, 99].iter().enumerate() {
+            shifted.insert(1000 + k, *b);
+        }
+        let mk = |data: &[u8]| CheckpointImage {
+            header: ImageHeader {
+                vpid: 40002,
+                name: "cdc_shift".into(),
+                ckpt_id: 1,
+                ..Default::default()
+            },
+            segments: vec![("seg".into(), data.to_vec())],
+        };
+        let mut written = BTreeMap::new();
+        for (tag, cfg) in [("fixed", opts()), ("cdc", cdc_opts())] {
+            let d = dir(&format!("shift_{tag}"));
+            let store = ImageStore::for_images(&d);
+            let p1 = d.join("g1.dmtcp");
+            let p2 = d.join("g2.dmtcp");
+            store
+                .write_incremental(&mk(&seg), &p1, None, &cfg)
+                .unwrap();
+            let (_, s2) = store
+                .write_incremental(&mk(&shifted), &p2, None, &cfg)
+                .unwrap();
+            assert_eq!(read_image_file(&p2).unwrap(), mk(&shifted));
+            written.insert(tag, s2.chunks_written);
+            std::fs::remove_dir_all(&d).ok();
+        }
+        assert!(
+            written["cdc"] * 4 < written["fixed"],
+            "CDC should rewrite far fewer chunks after an insert: {written:?}"
+        );
+    }
+
+    #[test]
+    fn restore_memo_reads_each_distinct_chunk_once() {
+        // Dedup-heavy image: many segments of identical content reference
+        // the same chunks; the restore memo must fetch each distinct
+        // chunk once and serve the other references from memory.
+        let d = dir("memo");
+        let store = ImageStore::for_images(&d);
+        let body = vec![0xA5u8; 64 * 1024];
+        let img = CheckpointImage {
+            header: ImageHeader {
+                vpid: 40003,
+                name: "memo".into(),
+                ckpt_id: 1,
+                ..Default::default()
+            },
+            segments: (0..6)
+                .map(|i| (format!("seg{i}"), body.clone()))
+                .collect(),
+        };
+        let path = d.join("g.dmtcp");
+        let (manifest, _) = store.write_incremental(&img, &path, None, &opts()).unwrap();
+        let total_refs = manifest.n_chunks() as u64;
+        let (back, stats) = store.assemble_with_stats(&manifest, 4).unwrap();
+        assert_eq!(back, img);
+        assert!(
+            stats.chunk_reads < total_refs,
+            "memo should cut chunk-file reads: {} reads for {total_refs} refs",
+            stats.chunk_reads
+        );
+        assert_eq!(stats.chunk_reads + stats.chunks_memoized, total_refs);
+        // Exactly the distinct-id set hits the disk (here a single chunk:
+        // every 16 KiB slice of the constant segment has the same id).
+        let distinct: BTreeSet<ChunkId> = manifest
+            .segments
+            .iter()
+            .flat_map(|s| s.chunks.iter().map(|c| c.id))
+            .collect();
+        assert_eq!(stats.chunk_reads, distinct.len() as u64);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn parallel_restore_matches_sequential_bitwise() {
+        let d = dir("par_rt");
+        let store = ImageStore::for_images(&d);
+        let img = sample_image(13);
+        let path = d.join("g.dmtcp");
+        let (manifest, _) = store
+            .write_incremental(&img, &path, None, &cdc_opts())
+            .unwrap();
+        let (seq, s1) = store.assemble_with_stats(&manifest, 1).unwrap();
+        for w in [2, 4, 8] {
+            let (par, sw) = store.assemble_with_stats(&manifest, w).unwrap();
+            assert_eq!(seq, par, "workers={w}");
+            assert_eq!(sw.chunk_reads, s1.chunk_reads);
+        }
+        assert_eq!(seq, img);
         std::fs::remove_dir_all(&d).ok();
     }
 

@@ -25,6 +25,7 @@ pub struct PidTable {
 }
 
 impl PidTable {
+    /// An empty table; virtual pids start in the reserved high band.
     pub fn new() -> Self {
         Self {
             v2r: BTreeMap::new(),
@@ -83,6 +84,7 @@ impl PidTable {
         Ok(())
     }
 
+    /// Drop a virtual pid (and its real mapping).
     pub fn unregister(&mut self, vpid: u64) -> Result<()> {
         let real = self
             .v2r
@@ -92,22 +94,27 @@ impl PidTable {
         Ok(())
     }
 
+    /// The real pid behind `vpid`, if registered.
     pub fn real_of(&self, vpid: u64) -> Option<u64> {
         self.v2r.get(&vpid).copied()
     }
 
+    /// The virtual pid assigned to `real`, if registered.
     pub fn virtual_of(&self, real: u64) -> Option<u64> {
         self.r2v.get(&real).copied()
     }
 
+    /// Registered pid pairs.
     pub fn len(&self) -> usize {
         self.v2r.len()
     }
 
+    /// Whether no pid is registered.
     pub fn is_empty(&self) -> bool {
         self.v2r.is_empty()
     }
 
+    /// Every registered virtual pid, ascending.
     pub fn virtual_pids(&self) -> impl Iterator<Item = u64> + '_ {
         self.v2r.keys().copied()
     }
@@ -141,6 +148,7 @@ pub struct FdTable {
 }
 
 impl FdTable {
+    /// An empty table; virtual fds start above the std streams.
     pub fn new() -> Self {
         Self {
             entries: BTreeMap::new(),
@@ -156,6 +164,7 @@ impl FdTable {
         vfd
     }
 
+    /// Close a virtual descriptor.
     pub fn close(&mut self, vfd: u32) -> Result<()> {
         self.entries
             .remove(&vfd)
@@ -163,14 +172,17 @@ impl FdTable {
             .ok_or_else(|| Error::Protocol(format!("close of unknown vfd {vfd}")))
     }
 
+    /// Look a virtual descriptor up.
     pub fn get(&self, vfd: u32) -> Option<&FdKind> {
         self.entries.get(&vfd)
     }
 
+    /// Open virtual descriptors.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether no descriptor is open.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

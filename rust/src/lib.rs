@@ -42,6 +42,7 @@ pub mod cli;
 pub mod container;
 #[deny(missing_docs)]
 pub mod cr;
+#[deny(missing_docs)]
 pub mod dmtcp;
 pub mod error;
 pub mod fsmodel;

@@ -6,17 +6,20 @@
 //! chunk, surfaces as a typed error through `dmtcp_restart`, never a panic
 //! or silent zero-fill.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use nersc_cr::container::{Image, PodmanHpc, Registry, RunSpec, EMBED_DMTCP_SNIPPET};
 use nersc_cr::cr::{CrApp, CrPolicy, CrSession, CrStrategy, Substrate};
-use nersc_cr::dmtcp::store::image_version;
+use nersc_cr::dmtcp::store::{image_version, read_image_file, SegmentManifest};
 use nersc_cr::dmtcp::{
-    dmtcp_launch, dmtcp_restart, Checkpointable, Coordinator, CoordinatorConfig, GateVerdict,
-    LaunchSpec, PluginRegistry,
+    dmtcp_launch, dmtcp_restart, CheckpointImage, Checkpointable, ChunkerSpec, Coordinator,
+    CoordinatorConfig, GateVerdict, ImageHeader, ImageStore, LaunchSpec, PluginRegistry,
+    StoreConfig,
 };
+use nersc_cr::util::rng::SplitMix64;
 use nersc_cr::workload::Cp2kApp;
 use nersc_cr::Error;
 
@@ -445,5 +448,183 @@ fn gc_grace_window_is_configurable_per_session() {
         0,
         "zero grace must reclaim unreferenced chunks immediately"
     );
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// Compressible-but-aperiodic bytes (long runs + 2 bits of noise): real
+/// LZ payloads, and enough entropy that the gear CDC cuts healthy
+/// boundaries (pure periodic data degenerates content-defined chunking).
+fn lz_friendly_bytes(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|i| ((i / 64) % 251) as u8 ^ ((rng.next_u64() >> 56) & 0x03) as u8)
+        .collect()
+}
+
+/// The chunk file backing `id` under `store_root` (mirrors the store's
+/// two-hex-bucket layout).
+fn chunk_file_of(store_root: &Path, id: nersc_cr::dmtcp::ChunkId) -> PathBuf {
+    let hex = id.hex();
+    store_root.join(&hex[..2]).join(format!("{hex}.chunk"))
+}
+
+/// Damage matrix over the LZ + CDC hot path: every way a chunk file can
+/// rot — a bit flipped inside the deflate stream, the stream truncated,
+/// damage straddling a CDC chunk boundary (both neighbors hit), the
+/// compression flag byte tampered — must surface as `Error::Corrupt`
+/// through the normal read path. Never a panic, never silently wrong
+/// bytes.
+#[test]
+fn lz_cdc_chunk_damage_matrix_is_typed_corrupt() {
+    let wd = workdir("corrupt_matrix");
+    let ckpt = wd.join("ckpt");
+    std::fs::create_dir_all(&ckpt).unwrap();
+    let store = ImageStore::for_images(&ckpt);
+    let cfg = StoreConfig {
+        gzip: true,
+        chunker: ChunkerSpec::Cdc {
+            min: 1024,
+            avg: 4096,
+            max: 16384,
+        },
+        ..StoreConfig::default()
+    };
+    let img = CheckpointImage {
+        header: ImageHeader {
+            vpid: 9,
+            name: "matrix".into(),
+            ckpt_id: 1,
+            ..Default::default()
+        },
+        segments: vec![("seg".into(), lz_friendly_bytes(64 << 10, 31))],
+    };
+    let path = ckpt.join("matrix.dmtcp");
+    let (manifest, _) = store.write_incremental(&img, &path, None, &cfg).unwrap();
+    assert_eq!(read_image_file(&path).unwrap(), img, "pristine restore");
+
+    // Ordered chunk refs of the one segment: adjacency in raw space.
+    let refs = &manifest.segments[0].chunks;
+    assert!(refs.len() >= 3, "want >= 3 CDC chunks, got {}", refs.len());
+    let store_root = ckpt.join("store");
+    let files: Vec<PathBuf> = refs
+        .iter()
+        .map(|c| chunk_file_of(&store_root, c.id))
+        .collect();
+    let pristine: Vec<Vec<u8>> = files.iter().map(|f| std::fs::read(f).unwrap()).collect();
+    // 8-byte magic + 1 flag byte precede the gzip payload.
+    assert!(pristine.iter().all(|b| b.len() > 13));
+
+    let expect_corrupt = |tag: &str| match read_image_file(&path) {
+        Err(Error::Corrupt(_)) => {}
+        Err(other) => panic!("{tag}: expected Error::Corrupt, got {other}"),
+        Ok(_) => panic!("{tag}: damage accepted"),
+    };
+    let restore_all = || {
+        for (f, b) in files.iter().zip(&pristine) {
+            std::fs::write(f, b).unwrap();
+        }
+    };
+
+    // 1. One bit flipped in the middle of a deflate stream.
+    let mut flip = pristine[1].clone();
+    let mid = 9 + (flip.len() - 9) / 2;
+    flip[mid] ^= 0x01;
+    std::fs::write(&files[1], &flip).unwrap();
+    expect_corrupt("lz bit-flip");
+    restore_all();
+
+    // 2. Truncated deflate stream (file cut a few bytes into the payload).
+    std::fs::write(&files[1], &pristine[1][..13]).unwrap();
+    expect_corrupt("truncated deflate");
+    restore_all();
+
+    // 3. Damage straddling a CDC boundary: the raw-space run hits the
+    // tail of chunk 1 AND the head of chunk 2, so both backing files rot.
+    let mut tail = pristine[1].clone();
+    let last = tail.len() - 1;
+    tail[last] ^= 0xFF;
+    let mut head = pristine[2].clone();
+    head[9] ^= 0xFF;
+    std::fs::write(&files[1], &tail).unwrap();
+    std::fs::write(&files[2], &head).unwrap();
+    expect_corrupt("boundary-straddling damage");
+    restore_all();
+
+    // 4. Flag byte tampered: a gzip payload reinterpreted as raw bytes
+    // can never satisfy the manifest's raw length + CRC.
+    let mut flag = pristine[0].clone();
+    flag[8] = 0;
+    std::fs::write(&files[0], &flag).unwrap();
+    expect_corrupt("compression-flag tamper");
+    restore_all();
+
+    // The matrix left no residue: the pristine store still restores.
+    assert_eq!(read_image_file(&path).unwrap(), img, "post-matrix restore");
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+/// Backward compatibility: stores written before the LZ/CDC hot path —
+/// stored-block (uncompressed) chunk files and v1 full images — must keep
+/// restoring bit-identically through today's readers, and a store may mix
+/// compression modes freely (chunk files self-describe via their flag
+/// byte).
+#[test]
+fn pre_lz_stores_and_v1_images_still_restore() {
+    let wd = workdir("backcompat");
+    let ckpt = wd.join("ckpt");
+    std::fs::create_dir_all(&ckpt).unwrap();
+    let store = ImageStore::for_images(&ckpt);
+    let mk = |ckpt_id: u64, data: Vec<u8>| CheckpointImage {
+        header: ImageHeader {
+            vpid: 7,
+            name: "compat".into(),
+            ckpt_id,
+            ..Default::default()
+        },
+        segments: vec![("seg".into(), data)],
+    };
+
+    // Gen 0 written the old way: no chunk compression at all.
+    // 128 KiB = two full fixed chunks, so the grown gen-1 segment below
+    // re-chunks to the same two leading chunks plus a short tail.
+    let img0 = mk(0, lz_friendly_bytes(128 << 10, 5));
+    let p0 = ckpt.join("g0.dmtcp");
+    let plain = StoreConfig {
+        gzip: false,
+        ..StoreConfig::default()
+    };
+    let (m0, _) = store.write_incremental(&img0, &p0, None, &plain).unwrap();
+    assert_eq!(read_image_file(&p0).unwrap(), img0, "stored-block restore");
+
+    // Gen 1 written today (gzip on), deduping against the uncompressed
+    // gen-0 chunks in the same store: mixed-mode reads resolve per chunk.
+    let mut data1 = img0.segments[0].1.clone();
+    data1.extend_from_slice(&lz_friendly_bytes(16 << 10, 6));
+    let img1 = mk(1, data1);
+    let p1 = ckpt.join("g1.dmtcp");
+    let prev: BTreeMap<String, SegmentManifest> = m0
+        .segments
+        .iter()
+        .map(|s| (s.name.clone(), s.clone()))
+        .collect();
+    let gz = StoreConfig::default();
+    let (_, s1) = store
+        .write_incremental(&img1, &p1, Some(&prev), &gz)
+        .unwrap();
+    assert!(
+        s1.chunks_deduped > 0,
+        "gzip-mode write must dedup against stored-block chunks: {s1:?}"
+    );
+    assert_eq!(read_image_file(&p1).unwrap(), img1, "mixed-mode restore");
+    assert_eq!(read_image_file(&p0).unwrap(), img0, "gen 0 still restores");
+
+    // v1 full images, gzip'd and plain, through the same reader.
+    for (tag, gzip) in [("full_gz", true), ("full_plain", false)] {
+        let img = mk(2, lz_friendly_bytes(32 << 10, 9));
+        let p = ckpt.join(format!("{tag}.dmtcp"));
+        img.write_file(&p, gzip).unwrap();
+        assert_eq!(image_version(&p).unwrap(), 1);
+        assert_eq!(read_image_file(&p).unwrap(), img, "{tag} restore");
+    }
     std::fs::remove_dir_all(&wd).ok();
 }

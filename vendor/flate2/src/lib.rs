@@ -1,41 +1,52 @@
-//! Offline shim for the `flate2` crate.
+//! Offline shim for the `flate2` crate — now with a real compressor.
 //!
 //! Implements the [`write::GzEncoder`] / [`read::GzDecoder`] subset that
 //! `nersc_cr` uses, producing **valid gzip streams** (RFC 1952 container,
-//! RFC 1951 *stored* DEFLATE blocks, CRC-32 + ISIZE trailer) that any real
-//! gzip implementation can read. Nothing is actually compressed — stored
-//! blocks copy the input verbatim — so "gzip'd" checkpoint images are
-//! integrity-protected and format-compatible but not smaller. Swap in the
-//! real `flate2` via a `[patch]` entry to get real compression.
+//! RFC 1951 DEFLATE payload, CRC-32 + ISIZE trailer) that any real gzip
+//! implementation can read. Unlike the original stored-block-only shim,
+//! the encoder performs actual LZ77 greedy matching (32 KiB window, hash
+//! chains) and entropy-codes the token stream with the *fixed* Huffman
+//! tables of RFC 1951 §3.2.6 — so redundant checkpoint payloads genuinely
+//! shrink. Every block is emitted as whichever of {fixed-Huffman, stored}
+//! is smaller, so incompressible data pays only the 5-byte-per-64KiB
+//! stored-block overhead and the output can never blow up.
 //!
-//! The decoder accepts gzip streams whose DEFLATE payload uses stored
-//! blocks only (i.e. everything the encoder here emits, or `gzip -0`-style
-//! output); Huffman-compressed blocks are rejected with a clear error.
+//! The decoder inflates stored *and* fixed-Huffman blocks (everything this
+//! encoder emits, plus `gzip -0`-style stored output and any other
+//! encoder's `Z_FIXED` streams). Dynamic-Huffman blocks (BTYPE=10) are
+//! rejected with a clear error — nothing in the offline toolchain emits
+//! them, and a checkpoint store must fail loudly on inputs it cannot
+//! verify rather than guess. Swap in the real `flate2` via a `[patch]`
+//! entry for dynamic-table support and faster codecs.
 
 use std::io;
 
-/// Compression level. Accepted for API compatibility; stored blocks are
-/// emitted regardless of the level.
+/// Compression level, mapped onto LZ77 match-search effort.
+///
+/// Level 0 emits stored blocks only (no matching); levels 1-3 walk short
+/// hash chains (fast), 4-6 medium, 7-9 deep. All levels > 0 use the same
+/// fixed-Huffman entropy coder, so the level trades search time for match
+/// quality, never stream compatibility.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Compression(u32);
 
 impl Compression {
-    /// Construct a specific level (0-9). Retained for API compatibility.
+    /// Construct a specific level (0-9).
     pub fn new(level: u32) -> Self {
         Self(level)
     }
 
-    /// No compression.
+    /// No compression: stored blocks only.
     pub fn none() -> Self {
         Self(0)
     }
 
-    /// Fastest "compression" (stored blocks here).
+    /// Fastest compression (short hash chains).
     pub fn fast() -> Self {
         Self(1)
     }
 
-    /// Best "compression" (still stored blocks here).
+    /// Best compression this shim offers (deep hash chains).
     pub fn best() -> Self {
         Self(9)
     }
@@ -56,33 +67,465 @@ impl Default for Compression {
 /// OS=255 (unknown).
 const GZIP_HEADER: [u8; 10] = [0x1F, 0x8B, 0x08, 0, 0, 0, 0, 0, 0, 0xFF];
 
-/// Serialize `data` as a gzip member using stored DEFLATE blocks.
-fn gzip_stored(data: &[u8]) -> Vec<u8> {
-    // header + per-64KiB block overhead (5 bytes) + trailer.
-    let n_blocks = data.len() / 0xFFFF + 1;
-    let mut out = Vec::with_capacity(data.len() + 10 + 8 + 5 * n_blocks);
+// ---- DEFLATE constant tables (RFC 1951 §3.2.5) -----------------------------
+
+/// Base match length for length symbols 257..=285.
+const LENGTH_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+/// Extra bits carried by length symbols 257..=285.
+const LENGTH_EXTRA: [u32; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+/// Base distance for distance symbols 0..=29.
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+/// Extra bits carried by distance symbols 0..=29.
+const DIST_EXTRA: [u32; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+
+const MIN_MATCH: usize = 3;
+const MAX_MATCH: usize = 258;
+const WINDOW: usize = 32 * 1024;
+const HASH_BITS: u32 = 15;
+/// Raw bytes per DEFLATE block (also the stored-block LEN ceiling): each
+/// block independently picks fixed-Huffman or stored, so one incompressible
+/// region cannot force the whole stream into stored mode.
+const BLOCK_RAW: usize = 0xFFFF;
+
+/// Map a match length (3..=258) to `(symbol, extra_bits, extra_value)`.
+fn length_code(len: usize) -> (u16, u32, u16) {
+    debug_assert!((MIN_MATCH..=MAX_MATCH).contains(&len));
+    let mut i = LENGTH_BASE.len() - 1;
+    while LENGTH_BASE[i] as usize > len {
+        i -= 1;
+    }
+    (257 + i as u16, LENGTH_EXTRA[i], (len - LENGTH_BASE[i] as usize) as u16)
+}
+
+/// Map a match distance (1..=32768) to `(symbol, extra_bits, extra_value)`.
+fn dist_code(dist: usize) -> (u16, u32, u16) {
+    debug_assert!((1..=WINDOW).contains(&dist));
+    let mut i = DIST_BASE.len() - 1;
+    while DIST_BASE[i] as usize > dist {
+        i -= 1;
+    }
+    (i as u16, DIST_EXTRA[i], (dist - DIST_BASE[i] as usize) as u16)
+}
+
+/// Bit length of the fixed-Huffman code for a literal/length symbol.
+fn litlen_code_bits(sym: u16) -> u32 {
+    match sym {
+        0..=143 => 8,
+        144..=255 => 9,
+        256..=279 => 7,
+        _ => 8,
+    }
+}
+
+// ---- bit-level IO ----------------------------------------------------------
+
+/// LSB-first bit packer (RFC 1951 §3.1.1). Huffman codes go through
+/// [`BitWriter::write_code`], which emits them most-significant-bit first
+/// as the format requires; everything else is little-endian bit order.
+struct BitWriter {
+    out: Vec<u8>,
+    bitbuf: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        Self {
+            out: Vec::new(),
+            bitbuf: 0,
+            nbits: 0,
+        }
+    }
+
+    fn write_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 32);
+        self.bitbuf |= value << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.out.push(self.bitbuf as u8);
+            self.bitbuf >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Write a Huffman code MSB-first (bit-reversed into the LSB-first
+    /// stream).
+    fn write_code(&mut self, code: u16, len: u32) {
+        let mut rev = 0u64;
+        for i in 0..len {
+            rev |= (((code >> i) & 1) as u64) << (len - 1 - i);
+        }
+        self.write_bits(rev, len);
+    }
+
+    /// Pad with zero bits to the next byte boundary.
+    fn align_byte(&mut self) {
+        if self.nbits > 0 {
+            self.out.push(self.bitbuf as u8);
+            self.bitbuf = 0;
+            self.nbits = 0;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        self.align_byte();
+        self.out
+    }
+}
+
+/// LSB-first bit reader over a byte slice.
+struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    bitbuf: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self {
+            buf,
+            pos: 0,
+            bitbuf: 0,
+            nbits: 0,
+        }
+    }
+
+    fn bits(&mut self, n: u32) -> io::Result<u64> {
+        debug_assert!(n <= 32);
+        while self.nbits < n {
+            let Some(&b) = self.buf.get(self.pos) else {
+                return Err(bad("deflate stream truncated"));
+            };
+            self.pos += 1;
+            self.bitbuf |= (b as u64) << self.nbits;
+            self.nbits += 8;
+        }
+        let v = self.bitbuf & ((1u64 << n) - 1);
+        self.bitbuf >>= n;
+        self.nbits -= n;
+        Ok(v)
+    }
+
+    /// Read a Huffman code bit: codes arrive MSB-first.
+    fn code_bit(&mut self) -> io::Result<u16> {
+        Ok(self.bits(1)? as u16)
+    }
+
+    /// Discard bits up to the next byte boundary (stored-block entry).
+    fn align_byte(&mut self) {
+        let r = self.nbits % 8;
+        self.bitbuf >>= r;
+        self.nbits -= r;
+    }
+
+    /// Byte offset of the next unread byte (only meaningful when
+    /// byte-aligned).
+    fn byte_pos(&self) -> usize {
+        self.pos - (self.nbits / 8) as usize
+    }
+}
+
+fn bad(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+// ---- LZ77 greedy matcher ---------------------------------------------------
+
+/// One DEFLATE token: a literal byte or a back-reference.
+#[derive(Clone, Copy)]
+enum Token {
+    Lit(u8),
+    Match { len: u16, dist: u16 },
+}
+
+/// Hash of the 3-byte prefix at `pos` (caller guarantees `pos + 3 <= len`).
+#[inline]
+fn hash3(data: &[u8], pos: usize) -> usize {
+    let v = (u32::from(data[pos]) << 16)
+        ^ (u32::from(data[pos + 1]) << 8)
+        ^ u32::from(data[pos + 2]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+const NO_POS: u32 = u32::MAX;
+
+/// Greedy LZ77 over `data[bstart..bend]` using hash chains shared across
+/// blocks (matches may reach back into earlier blocks, up to the 32 KiB
+/// window). Matches never extend past `bend`, so blocks partition the raw
+/// bytes cleanly and a stored fallback stays byte-exact.
+#[allow(clippy::too_many_arguments)]
+fn tokenize_block(
+    data: &[u8],
+    bstart: usize,
+    bend: usize,
+    head: &mut [u32],
+    prev: &mut [u32],
+    max_chain: u32,
+    tokens: &mut Vec<Token>,
+) {
+    let insert = |head: &mut [u32], prev: &mut [u32], p: usize| {
+        if p + MIN_MATCH <= data.len() {
+            let h = hash3(data, p);
+            prev[p] = head[h];
+            head[h] = p as u32;
+        }
+    };
+    let mut pos = bstart;
+    while pos < bend {
+        let max_len = (bend - pos).min(MAX_MATCH);
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if pos + MIN_MATCH <= data.len() && max_len >= MIN_MATCH {
+            let mut cand = head[hash3(data, pos)];
+            let mut chain = max_chain;
+            while cand != NO_POS && chain > 0 {
+                let c = cand as usize;
+                if pos - c > WINDOW {
+                    break; // chains are recency-ordered: older is farther
+                }
+                let mut l = 0usize;
+                while l < max_len && data[c + l] == data[pos + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = pos - c;
+                    if l == max_len {
+                        break;
+                    }
+                }
+                cand = prev[c];
+                chain -= 1;
+            }
+        }
+        if best_len >= MIN_MATCH {
+            tokens.push(Token::Match {
+                len: best_len as u16,
+                dist: best_dist as u16,
+            });
+            for p in pos..pos + best_len {
+                insert(head, prev, p);
+            }
+            pos += best_len;
+        } else {
+            tokens.push(Token::Lit(data[pos]));
+            insert(head, prev, pos);
+            pos += 1;
+        }
+    }
+}
+
+/// Exact bit cost of one token under the fixed Huffman tables.
+fn token_bits(t: &Token) -> u64 {
+    match *t {
+        Token::Lit(b) => litlen_code_bits(b as u16) as u64,
+        Token::Match { len, dist } => {
+            let (lsym, lextra, _) = length_code(len as usize);
+            let (_, dextra, _) = dist_code(dist as usize);
+            litlen_code_bits(lsym) as u64 + lextra as u64 + 5 + dextra as u64
+        }
+    }
+}
+
+/// Emit one literal/length symbol with its fixed-Huffman code.
+fn emit_litlen(bw: &mut BitWriter, sym: u16) {
+    match sym {
+        0..=143 => bw.write_code(0x30 + sym, 8),
+        144..=255 => bw.write_code(0x190 + (sym - 144), 9),
+        256..=279 => bw.write_code(sym - 256, 7),
+        _ => bw.write_code(0xC0 + (sym - 280), 8),
+    }
+}
+
+/// DEFLATE `data` into a raw bit stream (no gzip container). `max_chain`
+/// 0 emits stored blocks only.
+fn deflate(data: &[u8], max_chain: u32) -> Vec<u8> {
+    let mut bw = BitWriter::new();
+    if data.is_empty() {
+        // A final fixed-Huffman block holding only end-of-block: 10 bits.
+        bw.write_bits(1, 1);
+        bw.write_bits(1, 2);
+        emit_litlen(&mut bw, 256);
+        return bw.finish();
+    }
+    let mut head = vec![NO_POS; 1 << HASH_BITS];
+    let mut prev = vec![NO_POS; data.len()];
+    let mut tokens: Vec<Token> = Vec::new();
+    let n_blocks = data.len().div_ceil(BLOCK_RAW);
+    for bi in 0..n_blocks {
+        let bstart = bi * BLOCK_RAW;
+        let bend = (bstart + BLOCK_RAW).min(data.len());
+        let bfinal = u64::from(bi + 1 == n_blocks);
+        tokens.clear();
+        let comp_bits = if max_chain == 0 {
+            u64::MAX // level 0: stored blocks unconditionally
+        } else {
+            tokenize_block(data, bstart, bend, &mut head, &mut prev, max_chain, &mut tokens);
+            3 + tokens.iter().map(token_bits).sum::<u64>() + 7 // header + EOB
+        };
+        // Stored cost, sans alignment padding: ties go to stored (cheaper
+        // to decode, bit-identical content either way).
+        let stored_bits = 3 + 32 + 8 * (bend - bstart) as u64;
+        if comp_bits < stored_bits {
+            bw.write_bits(bfinal, 1);
+            bw.write_bits(1, 2); // BTYPE=01: fixed Huffman
+            for t in &tokens {
+                match *t {
+                    Token::Lit(b) => emit_litlen(&mut bw, b as u16),
+                    Token::Match { len, dist } => {
+                        let (lsym, lextra, lval) = length_code(len as usize);
+                        emit_litlen(&mut bw, lsym);
+                        if lextra > 0 {
+                            bw.write_bits(lval as u64, lextra);
+                        }
+                        let (dsym, dextra, dval) = dist_code(dist as usize);
+                        bw.write_code(dsym, 5);
+                        if dextra > 0 {
+                            bw.write_bits(dval as u64, dextra);
+                        }
+                    }
+                }
+            }
+            emit_litlen(&mut bw, 256);
+        } else {
+            bw.write_bits(bfinal, 1);
+            bw.write_bits(0, 2); // BTYPE=00: stored
+            bw.align_byte();
+            let len = (bend - bstart) as u16;
+            bw.out.extend_from_slice(&len.to_le_bytes());
+            bw.out.extend_from_slice(&(!len).to_le_bytes());
+            bw.out.extend_from_slice(&data[bstart..bend]);
+        }
+    }
+    bw.finish()
+}
+
+/// Inflate a raw DEFLATE stream (stored + fixed-Huffman blocks). Returns
+/// the plain bytes and the count of stream bytes consumed (the trailer
+/// starts there).
+fn inflate(stream: &[u8]) -> io::Result<(Vec<u8>, usize)> {
+    let mut br = BitReader::new(stream);
+    let mut out = Vec::new();
+    loop {
+        let bfinal = br.bits(1)?;
+        let btype = br.bits(2)?;
+        match btype {
+            0 => {
+                br.align_byte();
+                let len = br.bits(16)? as usize;
+                let nlen = br.bits(16)? as u16;
+                if nlen != !(len as u16) {
+                    return Err(bad("stored block LEN/NLEN mismatch"));
+                }
+                for _ in 0..len {
+                    out.push(br.bits(8)? as u8);
+                }
+            }
+            1 => inflate_fixed_block(&mut br, &mut out)?,
+            2 => {
+                return Err(bad(
+                    "flate2 shim: dynamic Huffman blocks are not supported",
+                ))
+            }
+            _ => return Err(bad("reserved deflate block type")),
+        }
+        if bfinal == 1 {
+            break;
+        }
+    }
+    br.align_byte();
+    Ok((out, br.byte_pos()))
+}
+
+/// Decode one literal/length symbol from the fixed Huffman table: 7-bit
+/// codes 0x00-0x17 (symbols 256-279), 8-bit 0x30-0xBF (literals 0-143)
+/// and 0xC0-0xC7 (symbols 280-287), 9-bit 0x190-0x1FF (literals 144-255).
+fn decode_fixed_litlen(br: &mut BitReader<'_>) -> io::Result<u16> {
+    let mut code = 0u16;
+    for _ in 0..7 {
+        code = (code << 1) | br.code_bit()?;
+    }
+    if code <= 0x17 {
+        return Ok(256 + code);
+    }
+    code = (code << 1) | br.code_bit()?;
+    if (0x30..=0xBF).contains(&code) {
+        return Ok(code - 0x30);
+    }
+    if (0xC0..=0xC7).contains(&code) {
+        return Ok(280 + (code - 0xC0));
+    }
+    code = (code << 1) | br.code_bit()?;
+    // 9-bit codes span exactly 0x190..=0x1FF given the prefixes above.
+    Ok(144 + (code - 0x190))
+}
+
+fn inflate_fixed_block(br: &mut BitReader<'_>, out: &mut Vec<u8>) -> io::Result<()> {
+    loop {
+        let sym = decode_fixed_litlen(br)?;
+        if sym < 256 {
+            out.push(sym as u8);
+            continue;
+        }
+        if sym == 256 {
+            return Ok(());
+        }
+        if sym > 285 {
+            return Err(bad("invalid length symbol"));
+        }
+        let li = (sym - 257) as usize;
+        let len = LENGTH_BASE[li] as usize + br.bits(LENGTH_EXTRA[li])? as usize;
+        let mut dcode = 0u16;
+        for _ in 0..5 {
+            dcode = (dcode << 1) | br.code_bit()?;
+        }
+        if dcode > 29 {
+            return Err(bad("invalid distance symbol"));
+        }
+        let di = dcode as usize;
+        let dist = DIST_BASE[di] as usize + br.bits(DIST_EXTRA[di])? as usize;
+        if dist > out.len() {
+            return Err(bad("match distance beyond output history"));
+        }
+        for _ in 0..len {
+            let b = out[out.len() - dist];
+            out.push(b);
+        }
+    }
+}
+
+/// Serialize `data` as a gzip member; `level` selects LZ77 search depth
+/// (0 = stored blocks only).
+fn gzip_compress(data: &[u8], level: u32) -> Vec<u8> {
+    let max_chain = match level {
+        0 => 0,
+        1..=3 => 8,
+        4..=6 => 32,
+        _ => 128,
+    };
+    let body = deflate(data, max_chain);
+    let mut out = Vec::with_capacity(GZIP_HEADER.len() + body.len() + 8);
     out.extend_from_slice(&GZIP_HEADER);
-    let chunks: Vec<&[u8]> = data.chunks(0xFFFF).collect();
-    if chunks.is_empty() {
-        // Empty input: one final stored block of length zero.
-        out.extend_from_slice(&[0x01, 0x00, 0x00, 0xFF, 0xFF]);
-    }
-    for (idx, chunk) in chunks.iter().enumerate() {
-        let bfinal = u8::from(idx + 1 == chunks.len());
-        let len = chunk.len() as u16;
-        out.push(bfinal); // BFINAL bit, BTYPE=00 (stored)
-        out.extend_from_slice(&len.to_le_bytes());
-        out.extend_from_slice(&(!len).to_le_bytes());
-        out.extend_from_slice(chunk);
-    }
+    out.extend_from_slice(&body);
     out.extend_from_slice(&crc32fast::hash(data).to_le_bytes());
     out.extend_from_slice(&(data.len() as u32).to_le_bytes());
     out
 }
 
-/// Parse a gzip member produced with stored DEFLATE blocks.
-fn gunzip_stored(bytes: &[u8]) -> io::Result<Vec<u8>> {
-    let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
+/// Parse a gzip member (stored or fixed-Huffman DEFLATE payload).
+fn gunzip(bytes: &[u8]) -> io::Result<Vec<u8>> {
     if bytes.len() < 18 {
         return Err(bad("gzip stream truncated"));
     }
@@ -118,43 +561,14 @@ fn gunzip_stored(bytes: &[u8]) -> io::Result<Vec<u8>> {
     if pos >= bytes.len() {
         return Err(bad("gzip header overruns stream"));
     }
-    // DEFLATE payload: stored blocks only.
-    let mut out = Vec::new();
-    loop {
-        if pos >= bytes.len() {
-            return Err(bad("deflate stream truncated"));
-        }
-        let hdr = bytes[pos];
-        pos += 1;
-        if hdr & 0x06 != 0 {
-            return Err(bad(
-                "flate2 shim: only stored deflate blocks are supported",
-            ));
-        }
-        if pos + 4 > bytes.len() {
-            return Err(bad("stored block header truncated"));
-        }
-        let len = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]) as usize;
-        let nlen = u16::from_le_bytes([bytes[pos + 2], bytes[pos + 3]]);
-        if nlen != !(len as u16) {
-            return Err(bad("stored block LEN/NLEN mismatch"));
-        }
-        pos += 4;
-        if pos + len > bytes.len() {
-            return Err(bad("stored block body truncated"));
-        }
-        out.extend_from_slice(&bytes[pos..pos + len]);
-        pos += len;
-        if hdr & 0x01 != 0 {
-            break;
-        }
-    }
+    let (out, consumed) = inflate(&bytes[pos..])?;
+    let tpos = pos + consumed;
     // Trailer: CRC-32 of the plain data, then ISIZE (mod 2^32).
-    if pos + 8 > bytes.len() {
+    if tpos + 8 > bytes.len() {
         return Err(bad("gzip trailer truncated"));
     }
-    let crc = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
-    let isize = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+    let crc = u32::from_le_bytes(bytes[tpos..tpos + 4].try_into().unwrap());
+    let isize = u32::from_le_bytes(bytes[tpos + 4..tpos + 8].try_into().unwrap());
     if crc32fast::hash(&out) != crc {
         return Err(bad("gzip CRC mismatch"));
     }
@@ -166,29 +580,31 @@ fn gunzip_stored(bytes: &[u8]) -> io::Result<Vec<u8>> {
 
 /// Write-side gzip adapters.
 pub mod write {
-    use super::{gzip_stored, Compression};
+    use super::{gzip_compress, Compression};
     use std::io::{self, Write};
 
-    /// Buffers everything written to it; [`GzEncoder::finish`] emits the
-    /// gzip stream into the inner writer and returns it.
+    /// Buffers everything written to it; [`GzEncoder::finish`] compresses,
+    /// emits the gzip stream into the inner writer, and returns it.
     #[derive(Debug)]
     pub struct GzEncoder<W: Write> {
         inner: W,
         buf: Vec<u8>,
+        level: u32,
     }
 
     impl<W: Write> GzEncoder<W> {
-        /// Wrap `inner`; `level` is accepted for API compatibility.
-        pub fn new(inner: W, _level: Compression) -> Self {
+        /// Wrap `inner`; `level` selects the LZ77 search depth.
+        pub fn new(inner: W, level: Compression) -> Self {
             Self {
                 inner,
                 buf: Vec::new(),
+                level: level.level(),
             }
         }
 
-        /// Emit the gzip stream and hand back the inner writer.
+        /// Compress, emit the gzip stream, and hand back the inner writer.
         pub fn finish(mut self) -> io::Result<W> {
-            let bytes = gzip_stored(&self.buf);
+            let bytes = gzip_compress(&self.buf, self.level);
             self.inner.write_all(&bytes)?;
             self.inner.flush()?;
             Ok(self.inner)
@@ -209,7 +625,7 @@ pub mod write {
 
 /// Read-side gzip adapters.
 pub mod read {
-    use super::gunzip_stored;
+    use super::gunzip;
     use std::io::{self, Read};
 
     /// Decodes a whole gzip stream from the inner reader on first read,
@@ -242,7 +658,7 @@ pub mod read {
                 let decoded = (|| {
                     let mut raw = Vec::new();
                     r.read_to_end(&mut raw)?;
-                    gunzip_stored(&raw)
+                    gunzip(&raw)
                 })();
                 match decoded {
                     Ok(plain) => self.plain = plain,
@@ -264,17 +680,24 @@ pub mod read {
 mod tests {
     use super::read::GzDecoder;
     use super::write::GzEncoder;
-    use super::{gunzip_stored, gzip_stored, Compression};
+    use super::{gunzip, gzip_compress, Compression};
     use std::io::{Read, Write};
 
-    fn roundtrip(data: &[u8]) {
-        let mut enc = GzEncoder::new(Vec::new(), Compression::fast());
+    fn roundtrip_at(data: &[u8], level: Compression) -> usize {
+        let mut enc = GzEncoder::new(Vec::new(), level);
         enc.write_all(data).unwrap();
         let stream = enc.finish().unwrap();
         let mut dec = GzDecoder::new(stream.as_slice());
         let mut back = Vec::new();
         dec.read_to_end(&mut back).unwrap();
         assert_eq!(back, data);
+        stream.len()
+    }
+
+    fn roundtrip(data: &[u8]) {
+        for level in [Compression::none(), Compression::fast(), Compression::best()] {
+            roundtrip_at(data, level);
+        }
     }
 
     #[test]
@@ -289,44 +712,123 @@ mod tests {
 
     #[test]
     fn roundtrip_multi_block() {
-        // > 64 KiB forces several stored blocks.
+        // > 64 KiB forces several DEFLATE blocks.
         let data: Vec<u8> = (0..200_000u32).map(|i| (i % 251) as u8).collect();
         roundtrip(&data);
     }
 
     #[test]
+    fn compressible_data_actually_shrinks() {
+        // Periodic data is LZ77's best case: the compressed stream must be
+        // a small fraction of the input, not a stored copy.
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i % 251) as u8).collect();
+        let n = roundtrip_at(&data, Compression::fast());
+        assert!(n < data.len() / 4, "{n} bytes for {} raw", data.len());
+        // Deeper chains can only match the fast level or better.
+        let best = roundtrip_at(&data, Compression::best());
+        assert!(best <= n, "best {best} > fast {n}");
+    }
+
+    #[test]
+    fn incompressible_data_falls_back_to_stored() {
+        // A SplitMix64 stream has no 3-byte repeats worth coding: every
+        // block must fall back to stored, bounding overhead at the gzip
+        // container plus 5 bytes per 64 KiB block.
+        let mut z = 0x9E3779B97F4A7C15u64;
+        let mut data = Vec::with_capacity(150_000);
+        while data.len() < 150_000 {
+            z = z.wrapping_add(0x9E3779B97F4A7C15);
+            let mut x = z;
+            x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+            data.extend_from_slice(&(x ^ (x >> 31)).to_le_bytes());
+        }
+        let n = roundtrip_at(&data, Compression::best());
+        let max_overhead = 18 + 5 * (data.len() / 0xFFFF + 1);
+        assert!(
+            n <= data.len() + max_overhead,
+            "{n} vs {} (+{max_overhead} allowed)",
+            data.len()
+        );
+    }
+
+    #[test]
+    fn level_zero_emits_stored_blocks() {
+        let data = b"abcabcabcabcabcabcabcabc";
+        let stream = gzip_compress(data, 0);
+        // BFINAL=1, BTYPE=00 right after the 10-byte header.
+        assert_eq!(stream[10], 0x01);
+        assert_eq!(gunzip(&stream).unwrap(), data);
+    }
+
+    #[test]
+    fn zlib_fixed_huffman_stream_decodes() {
+        // Emitted by Python zlib (compressobj strategy=Z_FIXED, raw wbits),
+        // wrapped in the gzip container: an *external* encoder's
+        // fixed-Huffman stream, with LZ77 back-references, that this
+        // decoder must accept byte-for-byte.
+        let member: [u8; 66] = [
+            31, 139, 8, 0, 0, 0, 0, 0, 0, 255, 43, 201, 72, 85, 40, 44, 205, 76, 206, 86, 72,
+            42, 202, 47, 207, 83, 72, 203, 175, 80, 200, 42, 205, 45, 40, 86, 200, 47, 75, 45,
+            82, 40, 1, 74, 231, 36, 86, 85, 42, 164, 228, 167, 235, 128, 121, 104, 138, 1, 29,
+            196, 180, 180, 64, 0, 0, 0,
+        ];
+        assert_eq!(
+            gunzip(&member).unwrap(),
+            b"the quick brown fox jumps over the lazy dog, the quick brown fox"
+        );
+    }
+
+    #[test]
     fn trailer_crc_is_checked() {
-        let mut stream = gzip_stored(b"payload");
+        let mut stream = gzip_compress(b"payload", 1);
         let n = stream.len();
         stream[n - 6] ^= 0xFF; // flip a CRC byte
-        assert!(gunzip_stored(&stream).is_err());
+        assert!(gunzip(&stream).is_err());
     }
 
     #[test]
     fn truncation_is_detected() {
-        let stream = gzip_stored(b"payload bytes here");
+        let stream = gzip_compress(b"payload bytes here, repeated: payload bytes here", 1);
         for cut in [3, 11, stream.len() - 3] {
-            assert!(gunzip_stored(&stream[..cut]).is_err());
+            assert!(gunzip(&stream[..cut]).is_err());
         }
     }
 
     #[test]
-    fn huffman_blocks_rejected() {
-        let mut stream = gzip_stored(b"x");
-        stream[10] = 0x03; // BFINAL=1, BTYPE=01 (fixed Huffman)
-        assert!(gunzip_stored(&stream).is_err());
+    fn dynamic_blocks_rejected() {
+        let mut stream = gzip_compress(b"x", 0);
+        stream[10] = 0x05; // BFINAL=1, BTYPE=10 (dynamic Huffman)
+        let err = gunzip(&stream).unwrap_err();
+        assert!(err.to_string().contains("dynamic"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_fixed_stream_is_an_error_not_garbage() {
+        // Bit-flip inside the LZ payload: either the symbol decode breaks
+        // or the trailer CRC catches it — never a silent wrong answer.
+        let data: Vec<u8> = (0..4096u32).map(|i| (i % 13) as u8).collect();
+        let pristine = gzip_compress(&data, 6);
+        for at in [12, 15, pristine.len() / 2] {
+            let mut s = pristine.clone();
+            s[at] ^= 0x10;
+            match gunzip(&s) {
+                Err(_) => {}
+                Ok(out) => assert_eq!(out, data, "flip at {at} silently changed the payload"),
+            }
+        }
     }
 
     #[test]
     fn header_magic_checked() {
-        let mut stream = gzip_stored(b"x");
+        let mut stream = gzip_compress(b"x", 1);
         stream[0] = 0x00;
-        assert!(gunzip_stored(&stream).is_err());
+        assert!(gunzip(&stream).is_err());
     }
 
     #[test]
     fn decoder_errors_are_sticky() {
-        let mut stream = gzip_stored(b"payload");
+        let mut stream = gzip_compress(b"payload", 1);
         let n = stream.len();
         stream[n - 6] ^= 0xFF; // corrupt the CRC
         let mut dec = GzDecoder::new(stream.as_slice());
