@@ -25,6 +25,7 @@ bench:
 	cargo bench --bench coordinator_mux
 	cargo bench --bench sched_campaign
 	cargo bench --bench store_hotpath
+	cargo bench --bench trace_overhead
 
 # AOT-lower the L2 model to HLO text for the PJRT backend (needs jax).
 artifacts:

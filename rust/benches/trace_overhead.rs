@@ -1,0 +1,316 @@
+//! Tracing overhead gate + SLO window rollups, self-checking (ISSUE 9).
+//!
+//! Part 1 (overhead): the instrumented store hot path (incremental write
+//! + parallel restore) is timed in three modes — *baseline* (no sink ever
+//! installed), *disabled* (sink installed, tracing off: every span site
+//! reduces to one relaxed atomic load), and *enabled* (records flowing
+//! into the ring). The gate: disabled wall clock within 2% of baseline
+//! (plus a 5 ms noise floor), and a disabled instant-event site costing
+//! nanoseconds, not microseconds. With tracing on, memory must stay
+//! ring-bounded no matter how many records flood in: `len() <=
+//! capacity()`, eviction observed, heap footprint under a generous
+//! per-record bound.
+//!
+//! Part 2 (SLO windows): a real fault-injected fleet campaign runs with
+//! tracing enabled; its report's windowed availability / restart-latency
+//! [`TimeSeries`] rollups must be non-trivial (availability dips below
+//! 1.0 in some window when kills fired, every window value in [0, 1],
+//! latency windows strictly positive) and must appear in
+//! `CampaignReport::to_json`. The sink's snapshot of the whole campaign
+//! exports to Chrome-trace JSON, validates structurally, and lands as a
+//! `.trace.json` artifact next to the bench JSON.
+//!
+//! Run: `cargo bench --bench trace_overhead` (`BENCH_SMOKE=1` skips the
+//! wall-clock comparisons — meaningless at smoke scale — but still
+//! checks every bound and shape).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use nersc_cr::campaign::{run_campaign, CampaignSpec, FaultPlan, IntervalPolicy};
+use nersc_cr::dmtcp::store::SegmentManifest;
+use nersc_cr::dmtcp::{CheckpointImage, ImageHeader, ImageStore, StoreConfig};
+use nersc_cr::report::{bench_smoke, emit_bench_json, human_bytes, smoke_scaled, Table};
+use nersc_cr::trace::{self, export, names, TraceConfig};
+use nersc_cr::util::rng::SplitMix64;
+
+/// Ring capacity for the installed sink (also the bound part 1 checks).
+const SINK_CAPACITY: usize = 4096;
+
+/// Generous per-record heap bound for `approx_bytes`: a [`SpanRecord`]
+/// plus a handful of short attribute strings is far under this.
+const RECORD_BYTES_BOUND: usize = 1024;
+
+/// Stencil-like compressible bytes (same shape as `store_hotpath`).
+fn stencil_bytes(n: usize, seed: u64) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|i| ((i / 64) % 251) as u8 ^ ((rng.next_u64() >> 56) & 0x03) as u8)
+        .collect()
+}
+
+fn image_of(n: usize) -> CheckpointImage {
+    CheckpointImage {
+        header: ImageHeader {
+            vpid: 1,
+            name: "trace-overhead".into(),
+            ckpt_id: 0,
+            ..Default::default()
+        },
+        segments: vec![("seg".into(), stencil_bytes(n, 13))],
+    }
+}
+
+/// One full instrumented hot-path pass: incremental write into a fresh
+/// store, 2-worker restore, bit-compare. Returns the wall seconds.
+fn hotpath_pass(dir: &Path, img: &CheckpointImage, cfg: &StoreConfig) -> f64 {
+    std::fs::create_dir_all(dir).unwrap();
+    let store = ImageStore::for_images(dir);
+    let path = dir.join("0.dmtcp");
+    let prev: Option<&BTreeMap<String, SegmentManifest>> = None;
+    let t0 = Instant::now();
+    let (manifest, _) = store.write_incremental(img, &path, prev, cfg).unwrap();
+    let (got, _) = store.assemble_with_stats(&manifest, 2).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(&got, img, "hot-path restore diverged");
+    std::fs::remove_dir_all(dir).ok();
+    wall
+}
+
+/// Best-of-`reps` hot-path wall for the current tracing mode.
+fn measure_mode(root: &Path, tag: &str, img: &CheckpointImage, reps: usize) -> f64 {
+    let cfg = StoreConfig::default();
+    let mut best = f64::INFINITY;
+    for r in 0..reps {
+        let wall = hotpath_pass(&root.join(format!("{tag}_{r}")), img, &cfg);
+        best = best.min(wall);
+    }
+    best
+}
+
+fn main() {
+    nersc_cr::logging::init();
+    let root = std::env::temp_dir().join(format!("ncr_trace_ovh_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let n = smoke_scaled(8 << 20, 256 << 10);
+    let reps = smoke_scaled(5, 2);
+    println!(
+        "== trace overhead: {} hot-path image, best of {reps}, \
+         baseline vs disabled vs enabled ==\n",
+        human_bytes(n as u64)
+    );
+    let img = image_of(n);
+
+    // --- Part 1: three-mode wall clock ---------------------------------
+    // Baseline must run before install(): the sink is process-wide and
+    // cannot be uninstalled. A warm-up pass first, so the baseline lane
+    // does not pay the cold file-system costs for the later lanes.
+    assert!(!trace::enabled(), "no tracing may be on before install");
+    hotpath_pass(&root.join("warmup"), &img, &StoreConfig::default());
+    let baseline = measure_mode(&root, "baseline", &img, reps);
+
+    let sink = trace::install(TraceConfig {
+        seed: 0x0ead_cafe,
+        capacity: SINK_CAPACITY,
+    });
+    trace::set_enabled(false);
+    let disabled = measure_mode(&root, "disabled", &img, reps);
+
+    // Disabled instant-event site: one relaxed load, closure never runs.
+    let iters = smoke_scaled(2_000_000, 50_000);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        trace::event(names::SCHED_DISPATCH, |a| a.u64("i", i as u64));
+    }
+    let disabled_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    assert!(sink.is_empty(), "disabled sink must have recorded nothing");
+
+    trace::set_enabled(true);
+    let enabled = measure_mode(&root, "enabled", &img, reps);
+
+    // Flood the ring far past capacity: memory must stay bounded through
+    // eviction, never grow with record count.
+    let flood = smoke_scaled(100_000, 10_000);
+    for i in 0..flood {
+        trace::event(names::LOG_EVENT, |a| {
+            a.str("job", "ring-flood");
+            a.u64("i", i as u64);
+        });
+    }
+    let (held, cap) = (sink.len(), sink.capacity());
+    let (dropped, heap) = (sink.dropped(), sink.approx_bytes());
+
+    let mut t = Table::new(&["mode", "wall ms", "vs baseline"]);
+    for (mode, wall) in [
+        ("baseline", baseline),
+        ("disabled", disabled),
+        ("enabled", enabled),
+    ] {
+        t.row(&[
+            mode.into(),
+            format!("{:.1}", wall * 1e3),
+            format!("{:+.2}%", (wall / baseline - 1.0) * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "disabled event site: {disabled_ns:.1} ns/op; ring after {flood}-event \
+         flood: {held}/{cap} records, {dropped} evicted, ~{} heap\n",
+        human_bytes(heap as u64)
+    );
+
+    // --- Part 2: fault-injected fleet, windowed SLO rollups ------------
+    let sessions = smoke_scaled(8, 3) as u32;
+    // Sessions must outlive the first kill draw by a wide margin (many
+    // MTBFs of work each) so "faults actually fired" holds at smoke
+    // scale too, not just probabilistically at full scale.
+    let spec = CampaignSpec {
+        name: "trace-slo".into(),
+        sessions,
+        concurrency: 2,
+        target_steps: 2_000,
+        seed: 77_000,
+        interval: IntervalPolicy::Daly {
+            cost_prior: Duration::from_millis(4),
+        },
+        faults: FaultPlan::exponential(Duration::from_millis(20), 2),
+        straggler_timeout: Duration::from_secs(180),
+        ..Default::default()
+    };
+    let report = run_campaign(&spec).expect("slo campaign");
+    let window = report.slo_window_secs();
+    let avail = report.availability_windows(window);
+    let lat = report.restart_latency_windows(window);
+    let json = report.to_json();
+    println!(
+        "slo campaign: {} sessions, {} kills, {:.0} ms window, \
+         {} availability windows (min {:.4}), {} restart-latency windows",
+        sessions,
+        report.kills(),
+        window * 1e3,
+        avail.len(),
+        avail.min(),
+        lat.len()
+    );
+
+    // The whole campaign traced into the ring; export it as the Chrome
+    // artifact next to the bench JSON.
+    let recs = sink.snapshot();
+    let doc = export::chrome_json(&recs);
+    let chrome_events = export::validate_chrome_json(&doc).expect("chrome JSON validates");
+    let out_dir =
+        std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| "target/bench-json".into());
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let trace_path = Path::new(&out_dir).join("trace_overhead.trace.json");
+    std::fs::write(&trace_path, &doc).unwrap();
+    println!(
+        "chrome trace: {chrome_events} events -> {}\n",
+        trace_path.display()
+    );
+    std::fs::remove_dir_all(&root).ok();
+
+    let mut checks = vec![
+        (
+            "ring holds at most its configured capacity",
+            held <= cap && cap <= SINK_CAPACITY,
+        ),
+        ("flood past capacity was evicted, not grown", dropped > 0),
+        (
+            "ring heap footprint bounded per record",
+            heap <= cap * RECORD_BYTES_BOUND,
+        ),
+        (
+            "live fleet fully completed",
+            report.completed() == sessions as usize,
+        ),
+        (
+            "live fleet fully bit-identical",
+            report.verified() == sessions as usize,
+        ),
+        ("faults actually fired", report.kills() >= 1),
+        (
+            "availability windows cover the campaign",
+            !avail.is_empty() && avail.len() >= lat.len(),
+        ),
+        (
+            "every availability window value is in [0, 1]",
+            avail.v.iter().all(|v| (0.0..=1.0).contains(v)),
+        ),
+        (
+            "kills dent availability in some window",
+            avail.min() < 1.0,
+        ),
+        (
+            "restart-latency windows are non-empty and positive",
+            !lat.is_empty() && lat.v.iter().all(|v| *v > 0.0),
+        ),
+        (
+            "campaign JSON carries both windowed series",
+            json.contains("\"availability_windows\": [[")
+                && json.contains("\"restart_latency_windows\": [["),
+        ),
+        (
+            "campaign spans reached the ring (client phases traced)",
+            recs.iter().any(|r| r.name == names::CLIENT_PHASE),
+        ),
+        (
+            "chrome export validates one event per record",
+            chrome_events == recs.len() && chrome_events > 0,
+        ),
+    ];
+    if bench_smoke() {
+        println!(
+            "  [SKIP] wall-clock gates (smoke scale: {:.1} vs {:.1} ms not \
+             meaningful)",
+            baseline * 1e3,
+            disabled * 1e3
+        );
+    } else {
+        checks.push((
+            "disabled tracing within 2% of baseline wall clock (+5 ms floor)",
+            disabled <= baseline * 1.02 + 0.005,
+        ));
+        checks.push((
+            "disabled event site costs nanoseconds (< 250 ns/op)",
+            disabled_ns < 250.0,
+        ));
+    }
+    let mut ok = true;
+    for (name, pass) in checks {
+        println!("  [{}] {name}", if pass { "PASS" } else { "FAIL" });
+        ok &= pass;
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+
+    let path = emit_bench_json(
+        "trace_overhead",
+        &[
+            ("image_bytes", n as f64),
+            ("reps", reps as f64),
+            ("baseline_wall_secs", baseline),
+            ("disabled_wall_secs", disabled),
+            ("enabled_wall_secs", enabled),
+            ("disabled_overhead_pct", (disabled / baseline - 1.0) * 100.0),
+            ("enabled_overhead_pct", (enabled / baseline - 1.0) * 100.0),
+            ("disabled_ns_per_event", disabled_ns),
+            ("sink_capacity", cap as f64),
+            ("sink_len_after_flood", held as f64),
+            ("sink_dropped", dropped as f64),
+            ("sink_approx_bytes", heap as f64),
+            ("slo_sessions", sessions as f64),
+            ("slo_kills", report.kills() as f64),
+            ("slo_window_secs", window),
+            ("slo_availability_windows", avail.len() as f64),
+            ("slo_availability_min", avail.min()),
+            ("slo_availability_mean", avail.mean()),
+            ("slo_restart_windows", lat.len() as f64),
+            ("slo_restart_window_max_secs", lat.max()),
+            ("chrome_events", chrome_events as f64),
+        ],
+    )
+    .expect("bench json");
+    println!("\nwrote {}", path.display());
+}

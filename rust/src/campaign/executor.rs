@@ -274,16 +274,30 @@ fn run_session_pool(
                             work_estimate_secs: spec.target_steps as f64,
                             ckpt_cost_secs: ckpt_cost_hint,
                         };
-                        if let AdmitOutcome::Rejected(reason) = d.queue.offer(req) {
-                            log::warn!("campaign session {i}: {reason}");
-                            let mut o = SessionOutcome::unstarted(
-                                i,
-                                spec.seed.wrapping_add(i as u64),
-                                spec.ranks,
-                                spec.target_steps,
-                            );
-                            o.disposition = SessionDisposition::Rejected;
-                            outcomes.lock().expect("outcomes poisoned")[i as usize] = Some(o);
+                        match d.queue.offer(req) {
+                            AdmitOutcome::Rejected(reason) => {
+                                crate::trace::event(crate::trace::names::SCHED_REJECT, |a| {
+                                    a.u64("session", i as u64);
+                                    a.str("reason", reason.label());
+                                    a.f64("at_secs", now);
+                                });
+                                log::warn!("campaign session {i}: {reason}");
+                                let mut o = SessionOutcome::unstarted(
+                                    i,
+                                    spec.seed.wrapping_add(i as u64),
+                                    spec.ranks,
+                                    spec.target_steps,
+                                );
+                                o.disposition = SessionDisposition::Rejected;
+                                outcomes.lock().expect("outcomes poisoned")[i as usize] =
+                                    Some(o);
+                            }
+                            AdmitOutcome::Admitted => {
+                                crate::trace::event(crate::trace::names::SCHED_ADMIT, |a| {
+                                    a.u64("session", i as u64);
+                                    a.f64("at_secs", now);
+                                });
+                            }
                         }
                     }
                     match d.sched.pick(&d.queue, now) {
@@ -299,7 +313,16 @@ fn run_session_pool(
                     Tick::Done => break,
                     Tick::Idle => std::thread::sleep(POLL),
                     Tick::Run(req, dispatched_at) => {
+                        crate::trace::event(crate::trace::names::SCHED_DISPATCH, |a| {
+                            a.u64("session", req.index as u64);
+                            a.f64("at_secs", dispatched_at);
+                            a.f64(
+                                "queue_wait_secs",
+                                (dispatched_at - req.arrival_secs).max(0.0),
+                            );
+                        });
                         let mut outcome = drive(req.index, &root, &ctx);
+                        outcome.dispatched_at_secs = dispatched_at;
                         outcome.queue_wait_secs = (dispatched_at - req.arrival_secs).max(0.0);
                         outcomes.lock().expect("outcomes poisoned")[req.index as usize] =
                             Some(outcome);
@@ -449,6 +472,10 @@ fn drive_session<A: CrApp>(
         out.disposition = SessionDisposition::Failed(e.to_string());
         log::warn!("campaign session {index}: {e}");
     }
+    // Flight dumps written under this session's workdir (failed barriers,
+    // boot errors) — surfaced in the report so `nersc-cr trace` has a
+    // reason to be pointed here.
+    out.flight_dumps = crate::trace::flight::scan(&wd).len() as u32;
     out.final_interval_ms = cadence.interval().as_millis() as u64;
     out.measured_ckpt_cost_ms = cadence.measured_cost_ms();
     out.wall_secs = t0.elapsed().as_secs_f64();
@@ -511,6 +538,10 @@ fn drive_session_inner<A: CrApp>(
                 // strictly better than riding the cadence into the
                 // kill (unsaved work exists, or no image at all), then
                 // an immediate requeue into a fresh walltime.
+                crate::trace::event(crate::trace::names::SCHED_PREEMPT_NOTICE, |a| {
+                    a.u64("session", out.index as u64);
+                    a.f64("at_secs", ctx.epoch.elapsed().as_secs_f64());
+                });
                 let at_notice = status.steps_done;
                 let no_image = session.session_images()?.is_empty();
                 if at_notice > steps_at_ckpt || no_image {
@@ -547,7 +578,10 @@ fn drive_session_inner<A: CrApp>(
                 out.preempts += 1;
                 std::thread::sleep(spec.requeue_delay);
                 let resumed = session.resubmit_from_checkpoint()?;
-                out.restart_latencies_secs.push(t_kill.elapsed().as_secs_f64());
+                let lat = t_kill.elapsed().as_secs_f64();
+                out.restart_latencies_secs.push(lat);
+                out.restart_events
+                    .push((ctx.epoch.elapsed().as_secs_f64(), lat));
                 out.steps_lost += at_kill.saturating_sub(resumed);
                 steps_at_ckpt = resumed;
                 deadline = Instant::now() + spec.straggler_timeout;
@@ -587,7 +621,10 @@ fn drive_session_inner<A: CrApp>(
                     out.kills += 1;
                     std::thread::sleep(spec.requeue_delay);
                     let resumed = session.resubmit_from_checkpoint()?;
-                    out.restart_latencies_secs.push(t_kill.elapsed().as_secs_f64());
+                    let lat = t_kill.elapsed().as_secs_f64();
+                    out.restart_latencies_secs.push(lat);
+                    out.restart_events
+                        .push((ctx.epoch.elapsed().as_secs_f64(), lat));
                     out.steps_lost += at_kill.saturating_sub(resumed);
                     steps_at_ckpt = resumed;
                     next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
@@ -682,6 +719,7 @@ fn drive_gang(
         out.disposition = SessionDisposition::Failed(e.to_string());
         log::warn!("campaign gang {index}: {e}");
     }
+    out.flight_dumps = crate::trace::flight::scan(&wd).len() as u32;
     out.final_interval_ms = cadence.interval().as_millis() as u64;
     out.measured_ckpt_cost_ms = cadence.measured_cost_ms();
     out.wall_secs = t0.elapsed().as_secs_f64();
@@ -757,6 +795,10 @@ fn drive_gang_inner(
                 // Grace notice for the whole gang: one final
                 // coordinated checkpoint if strictly better, then an
                 // immediate gang requeue into a fresh walltime.
+                crate::trace::event(crate::trace::names::SCHED_PREEMPT_NOTICE, |a| {
+                    a.u64("session", out.index as u64);
+                    a.f64("at_secs", ctx.epoch.elapsed().as_secs_f64());
+                });
                 let at_notice = status.steps_done;
                 let no_image = session.latest_checkpoint()?.is_none();
                 if at_notice > steps_at_ckpt || no_image {
@@ -791,7 +833,10 @@ fn drive_gang_inner(
                 out.preempts += 1;
                 std::thread::sleep(spec.requeue_delay);
                 let resumed = session.resubmit_from_checkpoint()?;
-                out.restart_latencies_secs.push(t_kill.elapsed().as_secs_f64());
+                let lat = t_kill.elapsed().as_secs_f64();
+                out.restart_latencies_secs.push(lat);
+                out.restart_events
+                    .push((ctx.epoch.elapsed().as_secs_f64(), lat));
                 out.steps_lost += at_kill.saturating_sub(resumed);
                 steps_at_ckpt = resumed;
                 deadline = Instant::now() + spec.straggler_timeout;
@@ -834,7 +879,10 @@ fn drive_gang_inner(
                     out.kills += 1;
                     std::thread::sleep(spec.requeue_delay);
                     let resumed = session.resubmit_from_checkpoint()?;
-                    out.restart_latencies_secs.push(t_kill.elapsed().as_secs_f64());
+                    let lat = t_kill.elapsed().as_secs_f64();
+                    out.restart_latencies_secs.push(lat);
+                    out.restart_events
+                        .push((ctx.epoch.elapsed().as_secs_f64(), lat));
                     out.steps_lost += at_kill.saturating_sub(resumed);
                     steps_at_ckpt = resumed;
                     next_kill = injector.next_kill_in().map(|d| Instant::now() + d);

@@ -3,7 +3,7 @@
 //! (the CI artifact shape), and as LDMS rollups derived from the
 //! per-session [`SampledSeries`] the sessions collected.
 
-use crate::metrics::SampledSeries;
+use crate::metrics::{SampledSeries, TimeSeries};
 use crate::report::Table;
 
 /// How one session of the fleet ended.
@@ -36,14 +36,18 @@ impl SessionDisposition {
     }
 }
 
-/// Nearest-rank percentile of an ascending-sorted slice (`0.0` when
-/// empty). `p` is in percent: `percentile(xs, 50.0)` is the median.
-pub fn percentile(sorted: &[f64], p: f64) -> f64 {
-    if sorted.is_empty() {
-        return 0.0;
+/// Nearest-rank percentile of a sample slice (`0.0` when empty; `p` in
+/// percent, so `percentile(xs, 50.0)` is the median). A thin adapter over
+/// [`TimeSeries::percentile`] — the crate's single percentile
+/// implementation — keeping the report convention that an empty sample
+/// set reads `0.0` rather than NaN. Input order does not matter.
+pub fn percentile(sample: &[f64], p: f64) -> f64 {
+    let v = TimeSeries::from_values("pct", sample).percentile(p);
+    if v.is_nan() {
+        0.0
+    } else {
+        v
     }
-    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
-    sorted[rank.clamp(1, sorted.len()) - 1]
 }
 
 /// Everything the executor learned about one session.
@@ -105,8 +109,25 @@ pub struct SessionOutcome {
     /// restart decoded a v1 full image — the phases only exist for v2
     /// manifest restores).
     pub restore_phase_secs: [f64; 3],
+    /// When the session was dispatched to a worker slot, seconds on the
+    /// campaign clock (first submit = 0).
+    pub dispatched_at_secs: f64,
+    /// Every restart the session went through, as `(t, latency)` pairs:
+    /// `t` is the campaign-clock second the restart *completed*,
+    /// `latency` the kill-to-resumed seconds (matching
+    /// `restart_latencies_secs` order). The windowed SLO rollups are
+    /// built from these.
+    pub restart_events: Vec<(f64, f64)>,
+    /// Flight-recorder dumps found in the session's workdir at harvest
+    /// (0 unless tracing was on and something failed).
+    pub flight_dumps: u32,
     /// The session's LDMS series (all incarnations, folded at teardown).
     pub series: SampledSeries,
+}
+
+/// Length of `[a0, a1) ∩ [b0, b1)`, `0.0` when disjoint.
+fn overlap(a0: f64, a1: f64, b0: f64, b1: f64) -> f64 {
+    (a1.min(b1) - a0.max(b0)).max(0.0)
 }
 
 impl SessionOutcome {
@@ -138,6 +159,9 @@ impl SessionOutcome {
             preempts: 0,
             notice_ckpts: 0,
             restore_phase_secs: [0.0; 3],
+            dispatched_at_secs: 0.0,
+            restart_events: Vec::new(),
+            flight_dumps: 0,
             series: Default::default(),
         }
     }
@@ -211,25 +235,23 @@ impl CampaignReport {
     /// `(p50, p99)` of kill-to-resumed restart latency across every
     /// restart in the fleet, seconds (`(0, 0)` with no restarts).
     pub fn restart_latency_percentiles(&self) -> (f64, f64) {
-        let mut xs: Vec<f64> = self
+        let xs: Vec<f64> = self
             .sessions
             .iter()
             .flat_map(|s| s.restart_latencies_secs.iter().copied())
             .collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
         (percentile(&xs, 50.0), percentile(&xs, 99.0))
     }
 
     /// `(p50, p99)` of ready-queue wait across sessions that ran,
     /// seconds.
     pub fn queue_wait_percentiles(&self) -> (f64, f64) {
-        let mut xs: Vec<f64> = self
+        let xs: Vec<f64> = self
             .sessions
             .iter()
             .filter(|s| s.disposition != SessionDisposition::Rejected)
             .map(|s| s.queue_wait_secs)
             .collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
         (percentile(&xs, 50.0), percentile(&xs, 99.0))
     }
 
@@ -252,6 +274,106 @@ impl CampaignReport {
             return 1.0;
         }
         done / (done + lost)
+    }
+
+    /// Flight-recorder dumps found across the fleet's workdirs (0 unless
+    /// tracing was on and something failed — invariant 11's receipts).
+    pub fn flight_dumps(&self) -> u64 {
+        self.sessions.iter().map(|s| s.flight_dumps as u64).sum()
+    }
+
+    /// The default SLO window width used by [`CampaignReport::to_json`]:
+    /// an eighth of the campaign wall clock, floored so degenerate runs
+    /// still get a nonzero window.
+    pub fn slo_window_secs(&self) -> f64 {
+        (self.wall_secs / 8.0).max(0.05)
+    }
+
+    /// Availability over fixed windows of `window_secs`, as a
+    /// [`TimeSeries`] (`t` = window start, `v ∈ [0, 1]`). Each
+    /// non-rejected session is *active* over
+    /// `[dispatched_at, dispatched_at + wall]` and *down* over
+    /// `[t - latency, t]` for each of its `restart_events`; a window's
+    /// availability is `1 - downtime/active-time` over the session-time
+    /// that falls inside it (windows with no active session-time read
+    /// `1.0`, matching the aggregate convention). This is ROADMAP item
+    /// 5's "availability over time-series windows".
+    pub fn availability_windows(&self, window_secs: f64) -> TimeSeries {
+        let mut out = TimeSeries::new("availability");
+        if window_secs <= 0.0 {
+            return out;
+        }
+        let end = self.active_end();
+        if end <= 0.0 {
+            return out;
+        }
+        let n = (end / window_secs).ceil() as usize;
+        for w in 0..n {
+            let w0 = w as f64 * window_secs;
+            let w1 = w0 + window_secs;
+            let mut active = 0.0;
+            let mut down = 0.0;
+            for s in &self.sessions {
+                if s.disposition == SessionDisposition::Rejected {
+                    continue;
+                }
+                let a0 = s.dispatched_at_secs;
+                active += overlap(a0, a0 + s.wall_secs, w0, w1);
+                for &(t_end, latency) in &s.restart_events {
+                    down += overlap(t_end - latency, t_end, w0, w1);
+                }
+            }
+            let v = if active > 0.0 {
+                (1.0 - down / active).clamp(0.0, 1.0)
+            } else {
+                1.0
+            };
+            out.push(w0, v);
+        }
+        out
+    }
+
+    /// Mean kill-to-resumed restart latency per fixed window of
+    /// `window_secs` (`t` = window start; windows with no restarts are
+    /// omitted, so the series is never NaN).
+    pub fn restart_latency_windows(&self, window_secs: f64) -> TimeSeries {
+        let mut out = TimeSeries::new("restart_latency_secs");
+        if window_secs <= 0.0 {
+            return out;
+        }
+        let end = self.active_end();
+        if end <= 0.0 {
+            return out;
+        }
+        let n = (end / window_secs).ceil() as usize;
+        for w in 0..n {
+            let w0 = w as f64 * window_secs;
+            let w1 = w0 + window_secs;
+            let mut sum = 0.0;
+            let mut count = 0usize;
+            for s in &self.sessions {
+                for &(t_end, latency) in &s.restart_events {
+                    if t_end >= w0 && t_end < w1 {
+                        sum += latency;
+                        count += 1;
+                    }
+                }
+            }
+            if count > 0 {
+                out.push(w0, sum / count as f64);
+            }
+        }
+        out
+    }
+
+    /// Campaign-clock second the last session-activity ends (window
+    /// horizon for the SLO series).
+    fn active_end(&self) -> f64 {
+        self.sessions
+            .iter()
+            .filter(|s| s.disposition != SessionDisposition::Rejected)
+            .map(|s| s.dispatched_at_secs + s.wall_secs)
+            .fold(self.wall_secs, f64::max)
     }
 
     /// Chunk-store totals `(stored, logical, written, deduped)` across
@@ -380,6 +502,7 @@ impl CampaignReport {
             "preempts",
             "notice ckpts",
             "burst collisions",
+            "flight dumps",
         ]);
         t.row(&[
             self.rejected_admissions().to_string(),
@@ -391,6 +514,7 @@ impl CampaignReport {
             self.preempts().to_string(),
             self.notice_ckpts().to_string(),
             self.burst_collisions.to_string(),
+            self.flight_dumps().to_string(),
         ]);
         t
     }
@@ -403,6 +527,18 @@ impl CampaignReport {
         let (qw50, qw99) = self.queue_wait_percentiles();
         let (rl50, rl99) = self.restart_latency_percentiles();
         let [rr, rd, rv] = self.restore_phase_totals();
+        let window = self.slo_window_secs();
+        let fmt_series = |s: &TimeSeries| {
+            let mut o = String::from("[");
+            for i in 0..s.len() {
+                if i > 0 {
+                    o.push_str(", ");
+                }
+                o.push_str(&format!("[{:.3}, {:.6}]", s.t[i], s.v[i]));
+            }
+            o.push(']');
+            o
+        };
         format!(
             "{{\n  \"campaign\": \"{}\",\n  \"sessions\": {},\n  \"completed\": {},\n  \
              \"verified\": {},\n  \"kills\": {},\n  \"steps_done\": {},\n  \
@@ -415,6 +551,8 @@ impl CampaignReport {
              \"restore_decompress_secs\": {:.6},\n  \"restore_verify_secs\": {:.6},\n  \
              \"preempts\": {},\n  \
              \"notice_ckpts\": {},\n  \"burst_collisions\": {},\n  \
+             \"flight_dumps\": {},\n  \"slo_window_secs\": {:.6},\n  \
+             \"availability_windows\": {},\n  \"restart_latency_windows\": {},\n  \
              \"wall_secs\": {:.3}\n}}\n",
             esc(&self.name),
             self.sessions.len(),
@@ -441,6 +579,10 @@ impl CampaignReport {
             self.preempts(),
             self.notice_ckpts(),
             self.burst_collisions,
+            self.flight_dumps(),
+            window,
+            fmt_series(&self.availability_windows(window)),
+            fmt_series(&self.restart_latency_windows(window)),
             self.wall_secs,
         )
     }
@@ -545,6 +687,54 @@ mod tests {
         assert_eq!(r.rejected_admissions(), 1);
         // Rejected sessions do not skew queue-wait percentiles.
         assert_eq!(r.queue_wait_percentiles(), (0.25, 0.5));
+    }
+
+    #[test]
+    fn windowed_slos_track_downtime_and_latency() {
+        let mut r = report();
+        // Session 0 runs [0, 1) and finishes a restart at t=0.5 that took
+        // 0.25 s; session 1 runs [1, 2) cleanly.
+        r.sessions[0].dispatched_at_secs = 0.0;
+        r.sessions[0].wall_secs = 1.0;
+        r.sessions[0].restart_events = vec![(0.5, 0.25)];
+        r.sessions[1].dispatched_at_secs = 1.0;
+        r.sessions[1].wall_secs = 1.0;
+        r.wall_secs = 2.0;
+        let aw = r.availability_windows(0.5);
+        assert_eq!(aw.len(), 4);
+        // [0, 0.5): 0.5 s active, 0.25 s down (the [0.25, 0.5) outage).
+        assert!((aw.v[0] - 0.5).abs() < 1e-9, "{:?}", aw.v);
+        assert_eq!(&aw.v[1..], &[1.0, 1.0, 1.0]);
+        let rw = r.restart_latency_windows(0.5);
+        // The restart completed at t=0.5 — exactly one window has data.
+        assert_eq!(rw.len(), 1);
+        assert_eq!(rw.t[0], 0.5);
+        assert!((rw.v[0] - 0.25).abs() < 1e-9);
+        assert!(aw.v.iter().all(|v| (0.0..=1.0).contains(v)));
+        let j = r.to_json();
+        assert!(j.contains("\"slo_window_secs\""), "{j}");
+        assert!(j.contains("\"availability_windows\": [["), "{j}");
+        assert!(j.contains("\"restart_latency_windows\": [["), "{j}");
+        assert!(j.contains("\"flight_dumps\": 0"), "{j}");
+        assert!(!j.contains("NaN"), "{j}");
+    }
+
+    #[test]
+    fn windowed_slos_empty_fleet_and_flight_dump_count() {
+        let empty = CampaignReport {
+            name: "e".into(),
+            sessions: vec![],
+            wall_secs: 0.0,
+            burst_collisions: 0,
+        };
+        assert!(empty.availability_windows(1.0).is_empty());
+        assert!(empty.restart_latency_windows(1.0).is_empty());
+        assert!(empty.availability_windows(0.0).is_empty());
+        let mut r = report();
+        r.sessions[0].flight_dumps = 2;
+        r.sessions[1].flight_dumps = 1;
+        assert_eq!(r.flight_dumps(), 3);
+        assert!(r.to_json().contains("\"flight_dumps\": 3"));
     }
 
     #[test]

@@ -508,7 +508,8 @@ pub fn run_lab(spec: &LabSpec) -> Result<LabOutcome> {
         }
     }
 
-    waits.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    // `percentile` routes through `TimeSeries::percentile` and sorts
+    // internally; dispatch order is fine as-is.
     out.queue_wait_p50_secs = percentile(&waits, 50.0);
     out.queue_wait_p99_secs = percentile(&waits, 99.0);
     Ok(out)

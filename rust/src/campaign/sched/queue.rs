@@ -40,6 +40,16 @@ pub enum RejectReason {
     },
 }
 
+impl RejectReason {
+    /// Stable machine-readable label for trace attributes (the `Display`
+    /// form stays human-oriented and carries the numbers).
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull { .. } => "queue_full",
+        }
+    }
+}
+
 impl std::fmt::Display for RejectReason {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {

@@ -95,6 +95,9 @@ subcommands:
       [--json] [--print-spec]                          run a fleet campaign
                                                        (spec: ranks = N for gangs)
   fig2 [--ranks N]                                     container-startup table
+  trace WORKDIR                                        list flight-recorder dumps under
+                                                       a workdir (failed rounds: who
+                                                       died, in which phase)
   workloads                                            list workload names
   version";
 
@@ -117,6 +120,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         Some("run") => cmd_run(&args[1..]),
         Some("campaign") => cmd_campaign(&args[1..]),
         Some("fig2") => cmd_fig2(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("workloads") => {
             for k in crate::workload::WorkloadKind::all() {
                 println!("{}", k.label());
@@ -250,6 +254,35 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
         "  plugins : {:?}",
         h.plugin_records.keys().collect::<Vec<_>>()
     );
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> Result<()> {
+    let o = Opts::parse(args, &[])?;
+    let root = o
+        .positional
+        .first()
+        .ok_or_else(|| Error::Usage("trace needs a workdir".into()))?;
+    let dumps = crate::trace::flight::scan(std::path::Path::new(root));
+    if dumps.is_empty() {
+        println!("no flight dumps under {root}");
+        return Ok(());
+    }
+    println!("{} flight dump(s) under {root}", dumps.len());
+    for d in dumps {
+        let rank = d
+            .failed_rank
+            .map(|r| r.to_string())
+            .unwrap_or_else(|| "-".into());
+        let phase = d.failed_phase.clone().unwrap_or_else(|| "-".into());
+        println!(
+            "  {}  job {}  rank {rank}  phase {phase}  spans {}  reason: {}",
+            d.path.display(),
+            d.job,
+            d.n_spans,
+            d.reason
+        );
+    }
     Ok(())
 }
 
@@ -735,6 +768,28 @@ mod tests {
             "cp2k-scf".into(),
         ])
         .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_lists_flight_dumps() {
+        let dir = std::env::temp_dir().join(format!("ncr_cli_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // No dumps: still succeeds (prints the empty notice).
+        run(vec!["trace".into(), dir.to_string_lossy().into_owned()]).unwrap();
+        // A dump written through the real path is then listed without error.
+        crate::trace::install(crate::trace::TraceConfig::default());
+        crate::trace::event(crate::trace::names::PHASE_FAIL, |a| {
+            a.str("job", "cli-trace-job");
+            a.u64("rank", 1);
+            a.str("phase", "Drain");
+            a.str("error", "injected");
+        });
+        crate::trace::flight::dump_for_job("cli-trace-job", "test dump", &dir)
+            .expect("dump written");
+        run(vec!["trace".into(), dir.to_string_lossy().into_owned()]).unwrap();
+        // Missing workdir argument is a usage error.
+        assert!(run(vec!["trace".into()]).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

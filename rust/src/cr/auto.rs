@@ -45,6 +45,23 @@ pub enum AutoState {
     Failed,
 }
 
+impl AutoState {
+    /// Stable lowercase label for trace attributes and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AutoState::Submitted => "submitted",
+            AutoState::Starting => "starting",
+            AutoState::Running => "running",
+            AutoState::Checkpointing => "checkpointing",
+            AutoState::SignalTrapped => "signal_trapped",
+            AutoState::Requeued => "requeued",
+            AutoState::Restarting => "restarting",
+            AutoState::Completed => "completed",
+            AutoState::Failed => "failed",
+        }
+    }
+}
+
 /// Policy knobs for one automated C/R run.
 #[derive(Debug, Clone)]
 pub struct CrPolicy {
@@ -155,6 +172,28 @@ pub struct CrReport<S = G4SimState> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn state_labels_distinct_and_lowercase() {
+        let all = [
+            AutoState::Submitted,
+            AutoState::Starting,
+            AutoState::Running,
+            AutoState::Checkpointing,
+            AutoState::SignalTrapped,
+            AutoState::Requeued,
+            AutoState::Restarting,
+            AutoState::Completed,
+            AutoState::Failed,
+        ];
+        let mut labels: Vec<&str> = all.iter().map(|s| s.label()).collect();
+        assert!(labels
+            .iter()
+            .all(|l| l.chars().all(|c| c.is_ascii_lowercase() || c == '_')));
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), all.len());
+    }
 
     #[test]
     fn policy_default_sane() {

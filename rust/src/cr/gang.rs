@@ -345,6 +345,32 @@ impl<A: GangApp> GangSession<A> {
         if self.active.is_some() {
             return Err(Error::Workload("gang already active".into()));
         }
+        let name = if self.generation == 0 {
+            crate::trace::names::GANG_LAUNCH
+        } else {
+            crate::trace::names::GANG_RESTART
+        };
+        let mut sp = crate::trace::span(name)
+            .with("job", || self.jobid())
+            .with_u64("generation", self.generation as u64);
+        let res = self.boot_inner();
+        match &res {
+            Ok(Some(at)) => sp.note_u64("resumed_at", *at),
+            Ok(None) => {}
+            Err(e) => {
+                sp.fail(&e.to_string());
+                drop(sp);
+                crate::trace::flight::dump_for_job(
+                    &self.jobid(),
+                    &format!("gang boot failed: {e}"),
+                    &self.ckpt_dir(),
+                );
+            }
+        }
+        res
+    }
+
+    fn boot_inner(&mut self) -> Result<Option<u64>> {
         let mut cfg = CrConfig::new(self.jobid(), &self.workdir);
         if let Some(full_every) = self.incremental {
             cfg.incremental = true;
@@ -598,6 +624,32 @@ impl<A: GangApp> GangSession<A> {
     /// mid-barrier, a phase timed out) nothing is committed and the
     /// previous manifest remains the newest restartable cut.
     pub fn checkpoint_now(&self) -> Result<GangCheckpoint> {
+        let mut sp = crate::trace::span(crate::trace::names::GANG_CHECKPOINT)
+            .with("job", || self.jobid())
+            .with_u64("ranks", self.app.n_ranks() as u64);
+        match self.checkpoint_now_inner() {
+            Ok(ck) => {
+                sp.note_u64("round", ck.manifest.ckpt_id);
+                Ok(ck)
+            }
+            Err(e) => {
+                sp.fail(&e.to_string());
+                drop(sp);
+                // The uncommitted round's daemon-side PHASE_FAIL pin (if
+                // any) is already in the ring; persist it next to the
+                // surviving manifests so the failure is explainable even
+                // after the gang restarts.
+                crate::trace::flight::dump_for_job(
+                    &self.jobid(),
+                    &format!("gang checkpoint failed: {e}"),
+                    &self.ckpt_dir(),
+                );
+                Err(e)
+            }
+        }
+    }
+
+    fn checkpoint_now_inner(&self) -> Result<GangCheckpoint> {
         let gang = self.gang()?;
         let images = gang.coordinator.checkpoint_gang(self.app.n_ranks())?;
         let ckpt_dir = self.ckpt_dir();
@@ -681,6 +733,10 @@ impl<A: GangApp> GangSession<A> {
             .slots
             .get(rank as usize)
             .ok_or_else(|| Error::Workload(format!("no rank {rank} in this gang")))?;
+        crate::trace::event(crate::trace::names::GANG_KILL, |a| {
+            a.str("job", self.jobid());
+            a.u64("rank", rank as u64);
+        });
         slot.launched.process.gate.kill();
         Ok(())
     }

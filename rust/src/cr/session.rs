@@ -375,6 +375,32 @@ impl<A: CrApp> CrSession<A> {
         if self.active.is_some() {
             return Err(Error::Workload("job already active".into()));
         }
+        let name = if self.incarnation == 0 {
+            crate::trace::names::SESSION_LAUNCH
+        } else {
+            crate::trace::names::SESSION_RESTART
+        };
+        let mut sp = crate::trace::span(name)
+            .with("job", || self.jobid())
+            .with_u64("incarnation", self.incarnation as u64);
+        let res = self.boot_inner();
+        match &res {
+            Ok(Some(at)) => sp.note_u64("resumed_at", *at),
+            Ok(None) => {}
+            Err(e) => {
+                sp.fail(&e.to_string());
+                drop(sp);
+                crate::trace::flight::dump_for_job(
+                    &self.jobid(),
+                    &format!("boot failed: {e}"),
+                    &self.workdir.join("ckpt"),
+                );
+            }
+        }
+        res
+    }
+
+    fn boot_inner(&mut self) -> Result<Option<u64>> {
         let mut cfg = CrConfig::new(self.jobid(), &self.workdir);
         if let CrStrategy::Auto(p) = &self.strategy {
             cfg.incremental = p.incremental_ckpt;
@@ -533,11 +559,24 @@ impl<A: CrApp> CrSession<A> {
     /// Take a checkpoint now (`dmtcp_command --checkpoint`); returns the
     /// image paths.
     pub fn checkpoint_now(&self) -> Result<Vec<PathBuf>> {
-        Ok(self
-            .checkpoint_images()?
-            .into_iter()
-            .map(|i| i.path)
-            .collect())
+        let mut sp = crate::trace::span(crate::trace::names::SESSION_CHECKPOINT)
+            .with("job", || self.jobid());
+        match self.checkpoint_images() {
+            Ok(images) => {
+                sp.note_u64("images", images.len() as u64);
+                Ok(images.into_iter().map(|i| i.path).collect())
+            }
+            Err(e) => {
+                sp.fail(&e.to_string());
+                drop(sp);
+                crate::trace::flight::dump_for_job(
+                    &self.jobid(),
+                    &format!("checkpoint failed: {e}"),
+                    &self.workdir.join("ckpt"),
+                );
+                Err(e)
+            }
+        }
     }
 
     /// Poll until the workload finishes or `timeout` elapses.
@@ -611,6 +650,10 @@ impl<A: CrApp> CrSession<A> {
     /// Manual step 4: kill the job (failure injection / operator
     /// decision). The session stays usable for resubmission.
     pub fn kill(&mut self) -> Result<()> {
+        crate::trace::event(crate::trace::names::SESSION_KILL, |a| {
+            a.str("job", self.jobid());
+            a.u64("incarnation", self.incarnation as u64);
+        });
         self.teardown().map(|_| ())
     }
 
@@ -656,8 +699,13 @@ impl<A: CrApp> CrSession<A> {
         };
         let t0 = Instant::now();
         let mut timeline = vec![(0.0, AutoState::Submitted)];
+        let auto_tag = self.process_name();
         let mark = |tl: &mut Vec<(f64, AutoState)>, s: AutoState| {
             tl.push((t0.elapsed().as_secs_f64(), s));
+            crate::trace::event(crate::trace::names::AUTO_STATE, |a| {
+                a.str("job", auto_tag.clone());
+                a.str("state", s.label());
+            });
         };
 
         let mut tally = CkptTally::default();

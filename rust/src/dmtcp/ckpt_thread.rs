@@ -114,6 +114,9 @@ fn run(
             env.get("DMTCP_JOB").cloned(),
         )
     };
+    // Span attribution: sessions always export DMTCP_JOB (cr::module), so
+    // the process name fallback only covers bare-protocol tests.
+    let job_tag = job.clone().unwrap_or_else(|| ctx.name.clone());
     send_to_coordinator(
         &mut stream,
         &ToCoordinator::Hello {
@@ -145,7 +148,30 @@ fn run(
         let msg = recv_from_coordinator(&mut stream)?;
         match msg {
             FromCoordinator::Phase { ckpt_id, phase, dir } => {
-                handle_phase(ctx, &mut stream, vpid, ckpt_id, phase, &dir)?;
+                let mut sp = crate::trace::span(crate::trace::names::CLIENT_PHASE)
+                    .with("job", || job_tag.clone())
+                    .with_u64("round", ckpt_id)
+                    .with("phase", || format!("{phase:?}"));
+                if let Some(r) = rank {
+                    sp.note_u64("rank", r as u64);
+                }
+                if let Err(e) = handle_phase(ctx, &mut stream, vpid, ckpt_id, phase, &dir) {
+                    // The flight recorder pivots on this event: it names
+                    // the rank and barrier phase a failed round died in
+                    // (invariant 11).
+                    sp.fail(&e.to_string());
+                    drop(sp);
+                    crate::trace::event(crate::trace::names::PHASE_FAIL, |a| {
+                        a.str("job", job_tag.clone());
+                        if let Some(r) = rank {
+                            a.u64("rank", r as u64);
+                        }
+                        a.str("phase", format!("{phase:?}"));
+                        a.u64("round", ckpt_id);
+                        a.str("error", e.to_string());
+                    });
+                    return Err(e);
+                }
             }
             FromCoordinator::Kill => {
                 fire_plugins(ctx, Event::Kill)?;
@@ -261,6 +287,17 @@ fn fire_plugins(ctx: &mut CkptContext, event: Event) -> Result<()> {
 fn write_image(ctx: &mut CkptContext, vpid: u64, ckpt_id: u64, dir: &str) -> Result<WriteOutcome> {
     fire_plugins(ctx, Event::PreCheckpoint)?;
 
+    let mut sp = crate::trace::span(crate::trace::names::IMAGE_WRITE).with_u64("round", ckpt_id);
+    if sp.is_active() {
+        let env = ctx.env.lock().expect("env poisoned");
+        if let Some(j) = env.get("DMTCP_JOB") {
+            sp.note("job", || j.clone());
+        }
+        if let Some(r) = env.get("DMTCP_RANK") {
+            sp.note("rank", || r.clone());
+        }
+    }
+
     let (segments, steps_done) = ctx.source.capture();
     let raw_bytes: u64 = segments.iter().map(|(_, d)| d.len() as u64).sum();
     // The transient allocation below is what produces the paper's Fig 4
@@ -333,6 +370,9 @@ fn write_image(ctx: &mut CkptContext, vpid: u64, ckpt_id: u64, dir: &str) -> Res
         (image.write_file(&path, gzip)?, 0, 0)
     };
     let secs = t0.elapsed().as_secs_f64();
+    sp.note_u64("raw_bytes", raw_bytes);
+    sp.note_u64("stored_bytes", stored);
+    drop(sp);
 
     ctx.stats.transient_bytes.store(0, Ordering::Relaxed);
     ctx.stats.checkpoints.fetch_add(1, Ordering::Relaxed);

@@ -227,9 +227,17 @@ impl Coordinator {
     /// Drive a full five-phase checkpoint barrier across all attached
     /// processes of this job. Returns one [`ImageInfo`] per process.
     pub fn checkpoint_all(&self) -> Result<Vec<ImageInfo>> {
-        self.daemon
+        let mut sp = crate::trace::span(crate::trace::names::COORD_CHECKPOINT)
+            .with("job", || self.job.clone());
+        let res = self
+            .daemon
             .checkpoint_job(&self.job, None)
-            .map(|(images, _ranks)| images)
+            .map(|(images, _ranks)| images);
+        match &res {
+            Ok(images) => sp.note_u64("images", images.len() as u64),
+            Err(e) => sp.fail(&e.to_string()),
+        }
+        res
     }
 
     /// Drive one all-or-nothing gang checkpoint barrier: every attached
@@ -239,6 +247,18 @@ impl Coordinator {
     /// caller publishes the gang manifest only on `Ok`). Returns the
     /// images sorted by rank.
     pub fn checkpoint_gang(&self, expected_ranks: u32) -> Result<Vec<(u32, ImageInfo)>> {
+        let mut sp = crate::trace::span(crate::trace::names::COORD_CHECKPOINT_GANG)
+            .with("job", || self.job.clone())
+            .with_u64("ranks", expected_ranks as u64);
+        let res = self.checkpoint_gang_inner(expected_ranks);
+        match &res {
+            Ok(out) => sp.note_u64("images", out.len() as u64),
+            Err(e) => sp.fail(&e.to_string()),
+        }
+        res
+    }
+
+    fn checkpoint_gang_inner(&self, expected_ranks: u32) -> Result<Vec<(u32, ImageInfo)>> {
         let (images, rank_of) = self.daemon.checkpoint_job(&self.job, Some(expected_ranks))?;
         let mut out = Vec::with_capacity(images.len());
         for info in images {

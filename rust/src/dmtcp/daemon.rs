@@ -993,10 +993,24 @@ fn detach_client(st: &mut DaemonState, job_key: &str, vpid: u64, why: &str) {
         }
         if let Some(round) = j.round.as_mut() {
             if round.pending.remove(&vpid) {
-                round.failed = Some(format!(
+                let msg = format!(
                     "client vpid {vpid} {why} during {:?} of round {}",
                     round.phase, round.ckpt_id
-                ));
+                );
+                // Daemon-side failure pin for the flight recorder: the
+                // rank comes from the round's gang rank map (plain
+                // rounds have no ranks and record only the vpid).
+                crate::trace::event(crate::trace::names::PHASE_FAIL, |a| {
+                    a.str("job", job_key.to_string());
+                    if let Some(r) = round.rank_map.get(&vpid) {
+                        a.u64("rank", *r as u64);
+                    }
+                    a.str("phase", format!("{:?}", round.phase));
+                    a.u64("round", round.ckpt_id);
+                    a.u64("vpid", vpid);
+                    a.str("error", msg.clone());
+                });
+                round.failed = Some(msg);
             }
         }
     }
@@ -1081,6 +1095,14 @@ fn start_round(
     };
     let ckpt_id = j.next_ckpt_id;
     j.next_ckpt_id += 1;
+    crate::trace::event(crate::trace::names::BARRIER_ROUND, |a| {
+        a.str("job", job_key.to_string());
+        a.u64("round", ckpt_id);
+        a.u64("clients", j.clients.len() as u64);
+        if let Some(n) = expected_ranks {
+            a.u64("ranks", n as u64);
+        }
+    });
     let deadline = now + j.phase_timeout;
     j.round = Some(Round {
         ckpt_id,
@@ -1106,6 +1128,12 @@ fn broadcast_phase(st: &mut DaemonState, job_key: &str, ckpt_id: u64, phase: Pha
     let dir = j.ckpt_dir.to_string_lossy().to_string();
     let targets: Vec<(u64, u64)> = j.clients.iter().map(|(&v, c)| (v, c.conn)).collect();
     if let Some(round) = j.round.as_mut() {
+        crate::trace::event(crate::trace::names::BARRIER_PHASE, |a| {
+            a.str("job", job_key.to_string());
+            a.u64("round", ckpt_id);
+            a.str("phase", format!("{phase:?}"));
+            a.u64("clients", targets.len() as u64);
+        });
         round.phase = phase;
         round.deadline = Instant::now() + j.phase_timeout;
         round.pending = targets.iter().map(|(v, _)| *v).collect();
@@ -1249,6 +1277,12 @@ fn advance_rounds(st: &mut DaemonState, now: Instant) -> bool {
                 };
                 let round = j.round.take().expect("round checked above");
                 let ckpt_id = round.ckpt_id;
+                // A failed round must be explainable after the fact
+                // (invariant 11): persist the job's recent spans — the
+                // PHASE_FAIL pin above names the rank and phase — next to
+                // the images the round would have produced. No-op unless
+                // a trace sink is installed.
+                crate::trace::flight::dump_for_job(&key, &why, &j.ckpt_dir);
                 if round.waited {
                     j.round_result = Some(Err(Error::Protocol(why.clone())));
                 }

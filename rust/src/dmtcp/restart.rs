@@ -64,8 +64,24 @@ pub fn dmtcp_restart_with_env<S: Checkpointable + 'static>(
     // once — from the chunk store next to the image, with per-chunk CRC
     // verification. A damaged store surfaces as `Error::Corrupt` before
     // any state is touched.
-    let (image, restore) = crate::dmtcp::store::read_image_file_with_stats(image_path)?;
+    let mut sp = crate::trace::span(crate::trace::names::RESTART_IMAGE)
+        .with("image", || image_path.display().to_string());
+    let (image, restore) = match crate::dmtcp::store::read_image_file_with_stats(image_path) {
+        Ok(pair) => pair,
+        Err(e) => {
+            sp.fail(&e.to_string());
+            return Err(e);
+        }
+    };
     let header = image.header.clone();
+    if sp.is_active() {
+        sp.note("name", || header.name.clone());
+        sp.note_u64("vpid", header.vpid);
+        sp.note_u64("generation", header.generation + 1);
+        if let Some(env_job) = env_overrides.get("DMTCP_JOB") {
+            sp.note("job", || env_job.clone());
+        }
+    }
 
     // Rebuild process metadata from the image.
     let generation = header.generation + 1;

@@ -602,6 +602,8 @@ impl ImageStore {
         opts: &StoreConfig,
     ) -> Result<(ImageManifest, StoreWriteStats)> {
         opts.chunker.validate()?;
+        let mut sp = crate::trace::span(crate::trace::names::STORE_WRITE)
+            .with_u64("segments", img.segments.len() as u64);
         let mut stats = StoreWriteStats::default();
         let chunk_size = opts.chunk_size.max(1);
 
@@ -638,6 +640,9 @@ impl ImageStore {
         let results: Vec<(usize, usize, ChunkRef, u64, bool)> = if jobs.is_empty() {
             Vec::new()
         } else {
+            let _pool_sp = crate::trace::span(crate::trace::names::STORE_COMPRESS)
+                .with_u64("chunks", jobs.len() as u64)
+                .with_u64("workers", opts.workers.clamp(1, jobs.len().max(1)) as u64);
             self.run_pool(&jobs, opts)?
         };
         let mut per_segment: BTreeMap<usize, Vec<(usize, ChunkRef)>> = BTreeMap::new();
@@ -672,6 +677,12 @@ impl ImageStore {
         let bytes = image::frame(VERSION_MANIFEST, 0, &body);
         atomic_write(path, &bytes)?;
         stats.stored_bytes += bytes.len() as u64;
+        if sp.is_active() {
+            sp.note_u64("chunks_written", stats.chunks_written);
+            sp.note_u64("chunks_deduped", stats.chunks_deduped);
+            sp.note_u64("logical_bytes", stats.logical_bytes);
+            sp.note_u64("stored_bytes", stats.stored_bytes);
+        }
         Ok((manifest, stats))
     }
 
@@ -876,6 +887,8 @@ impl ImageStore {
         manifest: &ImageManifest,
         workers: usize,
     ) -> Result<(CheckpointImage, RestoreStats)> {
+        let mut sp = crate::trace::span(crate::trace::names::STORE_RESTORE)
+            .with_u64("segments", manifest.segments.len() as u64);
         let t_wall = Instant::now();
         let mut unique: BTreeMap<ChunkId, ChunkRef> = BTreeMap::new();
         let mut total_refs = 0u64;
@@ -976,6 +989,24 @@ impl ImageStore {
             segments.push((s.name.clone(), data));
         }
         stats.wall_secs = t_wall.elapsed().as_secs_f64();
+        if sp.is_active() {
+            sp.note_u64("chunk_reads", stats.chunk_reads);
+            sp.note_u64("chunks_memoized", stats.chunks_memoized);
+            sp.note_u64("workers", stats.workers as u64);
+            // Pool-summed phase times as backdated child spans: the
+            // catapult view shows where a restore spent its time even
+            // though the phases interleave inside `get_chunk_timed`.
+            for (name, secs) in [
+                (crate::trace::names::STORE_READ, stats.read_secs),
+                (crate::trace::names::STORE_DECOMPRESS, stats.decompress_secs),
+                (crate::trace::names::STORE_VERIFY, stats.verify_secs),
+            ] {
+                crate::trace::closed_span(name, Duration::from_secs_f64(secs.max(0.0)), |a| {
+                    a.u64("chunks", stats.chunk_reads);
+                    a.f64("pool_secs", secs);
+                });
+            }
+        }
         Ok((
             CheckpointImage {
                 header: manifest.header.clone(),

@@ -30,6 +30,9 @@
 //!   and, behind the `pjrt` feature, the PJRT/XLA engine that executes the
 //!   AOT-lowered `artifacts/*.hlo.txt`. Python never runs at request time.
 //! * [`metrics`] — an LDMS-analog resource sampler (the Fig 4 substrate).
+//! * [`trace`] — structured spans across every layer above: the bounded
+//!   global sink, the flight recorder that explains failed rounds, and
+//!   the Chrome-trace exporter (DESIGN §14).
 //! * [`simclock`] — the discrete-event simulation core.
 //!
 //! See `DESIGN.md` for the architecture and the experiment index mapping
@@ -53,6 +56,8 @@ pub mod report;
 pub mod runtime;
 pub mod simclock;
 pub mod slurm;
+#[deny(missing_docs)]
+pub mod trace;
 pub mod util;
 pub mod workload;
 

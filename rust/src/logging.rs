@@ -2,7 +2,10 @@
 //!
 //! Level comes from `NERSC_CR_LOG` (error|warn|info|debug|trace), default
 //! `info`. Messages go to stderr with a monotonic timestamp, mirroring the
-//! `dmtcp_coordinator --daemon` log style.
+//! `dmtcp_coordinator --daemon` log style. When a [`crate::trace`] sink is
+//! recording, every emitted record is also forwarded into it as an
+//! instant event (`log.event` with level/target/msg attributes), so a
+//! flight-recorder dump interleaves log lines with the spans around them.
 
 use std::io::Write;
 use std::sync::OnceLock;
@@ -16,8 +19,12 @@ static LOGGER: Logger = Logger;
 struct Logger;
 
 impl log::Log for Logger {
-    fn enabled(&self, _metadata: &Metadata) -> bool {
-        true
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        // Honor the `NERSC_CR_LOG` filter `init` installed: a `debug`
+        // record is only enabled when the max level admits it. (This used
+        // to return `true` unconditionally, so `log_enabled!` and direct
+        // `enabled()` probes lied about what would actually print.)
+        metadata.level() <= log::max_level()
     }
 
     fn log(&self, record: &Record) {
@@ -32,6 +39,9 @@ impl log::Log for Logger {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
+        if crate::trace::enabled() {
+            crate::trace::log_event(lvl.trim_end(), record.target(), &record.args().to_string());
+        }
         let mut err = std::io::stderr().lock();
         let _ = writeln!(
             err,
@@ -63,10 +73,28 @@ pub fn init() {
 
 #[cfg(test)]
 mod tests {
+    use log::Log;
+
     #[test]
     fn init_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke");
+    }
+
+    #[test]
+    fn enabled_honors_max_level() {
+        super::init();
+        let meta = |l: log::Level| log::Metadata::builder().level(l).target("t").build();
+        let max = log::max_level();
+        // Whatever the filter is, a level past it must be disabled and a
+        // level within it enabled — `enabled()` can no longer say yes to
+        // everything.
+        if max < log::LevelFilter::Trace {
+            assert!(!super::LOGGER.enabled(&meta(log::Level::Trace)));
+        }
+        if max >= log::LevelFilter::Error {
+            assert!(super::LOGGER.enabled(&meta(log::Level::Error)));
+        }
     }
 }

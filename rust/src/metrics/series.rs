@@ -21,6 +21,17 @@ impl TimeSeries {
         }
     }
 
+    /// Build a series from bare values (`t` = sample index): how the
+    /// campaign report lifts latency/wait samples into series form for
+    /// [`TimeSeries::percentile`] and windowed SLO rollups.
+    pub fn from_values(name: impl Into<String>, vals: &[f64]) -> Self {
+        Self {
+            name: name.into(),
+            t: (0..vals.len()).map(|i| i as f64).collect(),
+            v: vals.to_vec(),
+        }
+    }
+
     pub fn push(&mut self, t: f64, v: f64) {
         self.t.push(t);
         self.v.push(v);
@@ -63,6 +74,24 @@ impl TimeSeries {
         } else {
             vals.iter().sum::<f64>() / vals.len() as f64
         }
+    }
+
+    /// Nearest-rank percentile of the values, NaN-safe: NaN samples are
+    /// ignored, and an all-NaN or empty series returns NaN (callers that
+    /// want `0.0`-for-empty decide that themselves). `p` is in percent
+    /// and is clamped to `[0, 100]`; `percentile(50.0)` is the median.
+    ///
+    /// This is the one percentile implementation in the crate — the
+    /// campaign report's p50/p99 SLOs all route through it.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let mut vals: Vec<f64> = self.v.iter().copied().filter(|x| !x.is_nan()).collect();
+        if vals.is_empty() {
+            return f64::NAN;
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).expect("NaN filtered"));
+        let p = p.clamp(0.0, 100.0);
+        let rank = (p / 100.0 * vals.len() as f64).ceil() as usize;
+        vals[rank.clamp(1, vals.len()) - 1]
     }
 
     /// Local maxima above `threshold` (the Fig 4 checkpoint spikes).
@@ -219,5 +248,46 @@ mod tests {
         let s = TimeSeries::new("empty");
         assert_eq!(ascii_chart(&s, 10, 3), "");
         assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn percentile_empty_is_nan() {
+        assert!(TimeSeries::new("p").percentile(50.0).is_nan());
+        // All-NaN behaves like empty.
+        let s = TimeSeries::from_values("nan", &[f64::NAN, f64::NAN]);
+        assert!(s.percentile(99.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_single_value() {
+        let s = TimeSeries::from_values("one", &[7.5]);
+        assert_eq!(s.percentile(0.0), 7.5);
+        assert_eq!(s.percentile(50.0), 7.5);
+        assert_eq!(s.percentile(100.0), 7.5);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_with_duplicates() {
+        let s = TimeSeries::from_values("dup", &[2.0, 1.0, 2.0, 2.0, 4.0, 3.0]);
+        assert_eq!(s.percentile(50.0), 2.0);
+        assert_eq!(s.percentile(99.0), 4.0);
+        assert_eq!(s.percentile(100.0), 4.0);
+        // Out-of-range p clamps rather than panicking.
+        assert_eq!(s.percentile(-10.0), 1.0);
+        assert_eq!(s.percentile(200.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_skips_nan_samples() {
+        let s = TimeSeries::from_values("mix", &[1.0, f64::NAN, 3.0, 2.0]);
+        assert_eq!(s.percentile(50.0), 2.0);
+        assert_eq!(s.percentile(99.0), 3.0);
+    }
+
+    #[test]
+    fn from_values_indexes_time() {
+        let s = TimeSeries::from_values("fv", &[5.0, 6.0]);
+        assert_eq!(s.t, vec![0.0, 1.0]);
+        assert_eq!(s.v, vec![5.0, 6.0]);
     }
 }

@@ -1,0 +1,198 @@
+//! Chrome-trace (catapult) JSON export.
+//!
+//! [`chrome_json`] renders spans in the trace-event format
+//! `chrome://tracing` / Perfetto load directly: an object with a
+//! `traceEvents` array of complete (`"ph":"X"`) and instant (`"ph":"i"`)
+//! events, microsecond timestamps. [`validate_chrome_json`] is the
+//! matching structural checker (no JSON dependency in the offline
+//! closure): it walks the document with a string-and-escape-aware scanner
+//! and returns the event count, so round-trip tests and the CLI can
+//! prove an export is well-formed.
+
+use crate::error::{Error, Result};
+use crate::trace::SpanRecord;
+
+/// JSON-escape a string value (quotes, backslashes, control bytes).
+pub fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render one span as a catapult trace event object.
+pub fn span_json(rec: &SpanRecord) -> String {
+    let mut args = String::new();
+    for (i, (k, v)) in rec.attrs.iter().enumerate() {
+        if i > 0 {
+            args.push(',');
+        }
+        args.push_str(&format!("\"{}\":\"{}\"", esc(k), esc(v)));
+    }
+    if rec.instant {
+        format!(
+            "{{\"name\":\"{}\",\"cat\":\"cr\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{},\"pid\":1,\"tid\":{},\"id\":\"{:016x}\",\"args\":{{{}}}}}",
+            esc(rec.name),
+            rec.start_us,
+            rec.tid,
+            rec.id,
+            args
+        )
+    } else {
+        format!(
+            "{{\"name\":\"{}\",\"cat\":\"cr\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{},\"id\":\"{:016x}\",\"args\":{{{}}}}}",
+            esc(rec.name),
+            rec.start_us,
+            rec.dur_us,
+            rec.tid,
+            rec.id,
+            args
+        )
+    }
+}
+
+/// Render spans as a complete Chrome-trace JSON document.
+pub fn chrome_json(spans: &[SpanRecord]) -> String {
+    let mut out = String::from("{\"traceEvents\":[");
+    for (i, rec) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('\n');
+        out.push_str(&span_json(rec));
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+/// Structurally validate a Chrome-trace document and return how many
+/// trace events it holds. Checks: the document is one object whose first
+/// key is `traceEvents` with an array value, every event in the array is
+/// an object, strings escape correctly, and all brackets balance. This is
+/// deliberately a scanner, not a parser — enough to prove the exporter
+/// (or a flight dump embedding the same event shape) emitted well-formed
+/// JSON without pulling a JSON crate into the offline closure.
+pub fn validate_chrome_json(doc: &str) -> Result<usize> {
+    let s = doc.trim_start();
+    let prefix = "{\"traceEvents\":[";
+    if !s.starts_with(prefix) {
+        return Err(Error::Manifest(
+            "chrome trace: document must start with {\"traceEvents\":[".into(),
+        ));
+    }
+    let mut events = 0usize;
+    let mut depth = 0i64; // brace/bracket depth across the whole document
+    let mut in_string = false;
+    let mut escaped = false;
+    let mut array_depth: Option<i64> = None; // depth of the traceEvents array
+    let mut chars = s.char_indices();
+    while let Some((i, c)) = chars.next() {
+        if in_string {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_string = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_string = true,
+            '{' => {
+                depth += 1;
+                // An object opening directly inside the traceEvents array
+                // is one event.
+                if array_depth == Some(depth - 1) {
+                    events += 1;
+                }
+            }
+            '[' => {
+                depth += 1;
+                if i + 1 == prefix.len() {
+                    array_depth = Some(depth);
+                }
+            }
+            '}' | ']' => {
+                depth -= 1;
+                if depth < 0 {
+                    return Err(Error::Manifest(format!(
+                        "chrome trace: unbalanced close at byte {i}"
+                    )));
+                }
+                if c == ']' && array_depth == Some(depth + 1) {
+                    array_depth = None;
+                }
+            }
+            _ => {}
+        }
+    }
+    if in_string {
+        return Err(Error::Manifest("chrome trace: unterminated string".into()));
+    }
+    if depth != 0 {
+        return Err(Error::Manifest(format!(
+            "chrome trace: {depth} unclosed brackets"
+        )));
+    }
+    Ok(events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &'static str, instant: bool) -> SpanRecord {
+        SpanRecord {
+            id: 7,
+            name,
+            start_us: 10,
+            dur_us: if instant { 0 } else { 25 },
+            instant,
+            tid: 3,
+            attrs: vec![("job", "j\"quoted\"".to_string()), ("rank", "2".to_string())],
+        }
+    }
+
+    #[test]
+    fn export_validates_and_counts() {
+        let spans = vec![
+            rec(crate::trace::names::BARRIER_PHASE, false),
+            rec(crate::trace::names::PHASE_FAIL, true),
+        ];
+        let doc = chrome_json(&spans);
+        assert_eq!(validate_chrome_json(&doc).unwrap(), 2);
+        assert!(doc.contains("\"ph\":\"X\""));
+        assert!(doc.contains("\"ph\":\"i\""));
+        assert!(doc.contains("j\\\"quoted\\\""));
+    }
+
+    #[test]
+    fn empty_export_is_valid() {
+        let doc = chrome_json(&[]);
+        assert_eq!(validate_chrome_json(&doc).unwrap(), 0);
+    }
+
+    #[test]
+    fn validator_rejects_damage() {
+        let doc = chrome_json(&[rec(crate::trace::names::STORE_WRITE, false)]);
+        assert!(validate_chrome_json(&doc[..doc.len() - 4]).is_err());
+        assert!(validate_chrome_json("[1,2,3]").is_err());
+        assert!(validate_chrome_json("{\"traceEvents\":[{\"name\":\"x]}").is_err());
+    }
+
+    #[test]
+    fn escapes_control_bytes() {
+        assert_eq!(esc("a\nb\t\"\\"), "a\\nb\\t\\\"\\\\");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+    }
+}

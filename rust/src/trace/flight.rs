@@ -1,0 +1,310 @@
+//! The flight recorder: when a round fails, explain it from the ring.
+//!
+//! The global [`crate::trace::TraceSink`] ring survives a failed barrier
+//! round (the records are in process memory, not on the failing path), so
+//! any `Error` path can call [`dump_for_job`] to persist the job's last
+//! spans plus the failure's who/where — the rank and barrier phase pulled
+//! from the most recent [`crate::trace::names::PHASE_FAIL`] event. That is
+//! invariant 11: a failed round is always explainable from its dump.
+//! Dumps are JSON files named `flight-<job>-<seq>.json` in the job's
+//! checkpoint directory; [`scan`] walks a workdir and summarizes them for
+//! `nersc-cr trace` and the campaign report.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::trace::export::{esc, span_json};
+use crate::trace::{installed, names, SpanRecord};
+
+/// How many trailing spans of the failing job a dump keeps.
+pub const DEFAULT_LAST_N: usize = 64;
+
+static NEXT_DUMP: AtomicU64 = AtomicU64::new(0);
+
+/// Replace filesystem-hostile characters in a job id.
+fn sanitize(job: &str) -> String {
+    job.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '.' || c == '_' || c == '-' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Pull `(rank, phase)` from the most recent `PHASE_FAIL` event in a
+/// span slice.
+fn failure_coords(spans: &[SpanRecord]) -> (Option<u64>, Option<String>) {
+    for rec in spans.iter().rev() {
+        if rec.name == names::PHASE_FAIL {
+            let rank = rec.attr("rank").and_then(|v| v.parse::<u64>().ok());
+            let phase = rec.attr("phase").map(|v| v.to_string());
+            return (rank, phase);
+        }
+    }
+    (None, None)
+}
+
+/// Serialize one dump document.
+fn render(job: &str, reason: &str, spans: &[SpanRecord]) -> String {
+    let (rank, phase) = failure_coords(spans);
+    let mut out = String::from("{\"flight_dump\":1,");
+    out.push_str(&format!("\"job\":\"{}\",", esc(job)));
+    out.push_str(&format!("\"reason\":\"{}\",", esc(reason)));
+    match rank {
+        Some(r) => out.push_str(&format!("\"failed_rank\":{r},")),
+        None => out.push_str("\"failed_rank\":null,"),
+    }
+    match &phase {
+        Some(p) => out.push_str(&format!("\"failed_phase\":\"{}\",", esc(p))),
+        None => out.push_str("\"failed_phase\":null,"),
+    }
+    out.push_str(&format!("\"n_spans\":{},", spans.len()));
+    out.push_str("\"spans\":[");
+    for (i, rec) in spans.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push('\n');
+        out.push_str(&span_json(rec));
+    }
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Dump the last [`DEFAULT_LAST_N`] spans recorded for `job` into `dir`
+/// as `flight-<job>-<seq>.json`, tagged with `reason` and the failing
+/// rank/phase from the latest `PHASE_FAIL` event. Returns the dump path,
+/// or `None` when no sink is installed (tracing off — the default) or
+/// the write failed (failure paths must stay failure-proof; the error is
+/// logged, not propagated).
+pub fn dump_for_job(job: &str, reason: &str, dir: &Path) -> Option<PathBuf> {
+    let sink = installed()?;
+    let spans = sink.snapshot_job(job, DEFAULT_LAST_N);
+    let doc = render(job, reason, &spans);
+    let seq = NEXT_DUMP.fetch_add(1, Ordering::Relaxed);
+    let path = dir.join(format!("flight-{}-{}.json", sanitize(job), seq));
+    let tmp = dir.join(format!(".flight-{}-{}.json.tmp", sanitize(job), seq));
+    let write = std::fs::create_dir_all(dir)
+        .and_then(|()| std::fs::write(&tmp, doc.as_bytes()))
+        .and_then(|()| std::fs::rename(&tmp, &path));
+    match write {
+        Ok(()) => {
+            crate::trace::event(names::FLIGHT_DUMP, |a| {
+                a.str("job", job.to_string());
+                a.str("path", path.display().to_string());
+            });
+            log::warn!("flight recorder: dumped {} spans to {}", spans.len(), path.display());
+            Some(path)
+        }
+        Err(e) => {
+            log::warn!("flight recorder: dump to {} failed: {e}", path.display());
+            None
+        }
+    }
+}
+
+/// Summary of one dump file, as [`scan`] reads it back.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlightSummary {
+    /// Where the dump lives.
+    pub path: PathBuf,
+    /// The job that failed.
+    pub job: String,
+    /// The error that triggered the dump.
+    pub reason: String,
+    /// The rank the latest `PHASE_FAIL` named, if any.
+    pub failed_rank: Option<u64>,
+    /// The barrier phase the latest `PHASE_FAIL` named, if any.
+    pub failed_phase: Option<String>,
+    /// Spans held in the dump.
+    pub n_spans: usize,
+}
+
+/// Un-escape a JSON string body (the subset [`esc`] emits).
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('t') => out.push('\t'),
+            Some('u') => {
+                let hex: String = chars.by_ref().take(4).collect();
+                if let Some(u) = u32::from_str_radix(&hex, 16).ok().and_then(char::from_u32) {
+                    out.push(u);
+                }
+            }
+            Some(other) => out.push(other),
+            None => {}
+        }
+    }
+    out
+}
+
+/// Extract the raw (still-escaped) body of the first `"key":"..."` field.
+fn string_field(doc: &str, key: &str) -> Option<String> {
+    let marker = format!("\"{key}\":\"");
+    let start = doc.find(&marker)? + marker.len();
+    let rest = &doc[start..];
+    let mut end = None;
+    let mut escaped = false;
+    for (i, c) in rest.char_indices() {
+        if escaped {
+            escaped = false;
+        } else if c == '\\' {
+            escaped = true;
+        } else if c == '"' {
+            end = Some(i);
+            break;
+        }
+    }
+    Some(unescape(&rest[..end?]))
+}
+
+/// Extract the first `"key":<number>` field (`None` for `null`).
+fn number_field(doc: &str, key: &str) -> Option<u64> {
+    let marker = format!("\"{key}\":");
+    let start = doc.find(&marker)? + marker.len();
+    let digits: String = doc[start..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits.parse().ok()
+}
+
+/// Read one dump file back into a summary.
+pub fn read_summary(path: &Path) -> Result<FlightSummary> {
+    let doc = std::fs::read_to_string(path)?;
+    if !doc.starts_with("{\"flight_dump\":1,") {
+        return Err(Error::Manifest(format!(
+            "{}: not a flight-recorder dump",
+            path.display()
+        )));
+    }
+    Ok(FlightSummary {
+        path: path.to_path_buf(),
+        job: string_field(&doc, "job")
+            .ok_or_else(|| Error::Manifest(format!("{}: dump has no job", path.display())))?,
+        reason: string_field(&doc, "reason").unwrap_or_default(),
+        failed_rank: number_field(&doc, "failed_rank"),
+        failed_phase: string_field(&doc, "failed_phase"),
+        n_spans: number_field(&doc, "n_spans").unwrap_or(0) as usize,
+    })
+}
+
+/// Recursively collect every `flight-*.json` dump under `root`, sorted by
+/// path. Unreadable or malformed files are skipped (a torn dump must not
+/// hide the others).
+pub fn scan(root: &Path) -> Vec<FlightSummary> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let Ok(entries) = std::fs::read_dir(&dir) else {
+            continue;
+        };
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("flight-") && n.ends_with(".json"))
+            {
+                if let Ok(s) = read_summary(&path) {
+                    out.push(s);
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| a.path.cmp(&b.path));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::SpanRecord;
+
+    fn fail_rec(rank: u64, phase: &str) -> SpanRecord {
+        SpanRecord {
+            id: 1,
+            name: names::PHASE_FAIL,
+            start_us: 5,
+            dur_us: 0,
+            instant: true,
+            tid: 1,
+            attrs: vec![
+                ("job", "j1".into()),
+                ("rank", rank.to_string()),
+                ("phase", phase.into()),
+            ],
+        }
+    }
+
+    #[test]
+    fn render_and_read_back_round_trips() {
+        let spans = vec![fail_rec(2, "Drain")];
+        let doc = render("j\"1", "barrier failed: \"why\"", &spans);
+        let dir = std::env::temp_dir().join(format!("ncr_flight_rt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flight-j1-0.json");
+        std::fs::write(&path, &doc).unwrap();
+        let s = read_summary(&path).unwrap();
+        assert_eq!(s.job, "j\"1");
+        assert_eq!(s.reason, "barrier failed: \"why\"");
+        assert_eq!(s.failed_rank, Some(2));
+        assert_eq!(s.failed_phase.as_deref(), Some("Drain"));
+        assert_eq!(s.n_spans, 1);
+        let found = scan(&dir);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0], s);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn no_phase_fail_means_null_coords() {
+        let doc = render("j2", "teardown", &[]);
+        assert!(doc.contains("\"failed_rank\":null"));
+        assert!(doc.contains("\"failed_phase\":null"));
+        let dir = std::env::temp_dir().join(format!("ncr_flight_null_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flight-j2-0.json");
+        std::fs::write(&path, &doc).unwrap();
+        let s = read_summary(&path).unwrap();
+        assert_eq!(s.failed_rank, None);
+        assert_eq!(s.failed_phase, None);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn scan_skips_garbage() {
+        let dir = std::env::temp_dir().join(format!("ncr_flight_garbage_{}", std::process::id()));
+        std::fs::create_dir_all(dir.join("sub")).unwrap();
+        std::fs::write(dir.join("flight-bad-0.json"), b"not a dump").unwrap();
+        std::fs::write(dir.join("sub").join("flight-ok-1.json"), render("ok", "r", &[])).unwrap();
+        std::fs::write(dir.join("other.json"), b"{}").unwrap();
+        let found = scan(&dir);
+        assert_eq!(found.len(), 1);
+        assert_eq!(found[0].job, "ok");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dump_without_sink_is_none() {
+        // Tracing may be installed by sibling tests in this binary; only
+        // assert the no-sink behavior when nothing is installed.
+        if crate::trace::installed().is_none() {
+            assert_eq!(dump_for_job("j", "r", Path::new("/nonexistent")), None);
+        }
+    }
+}

@@ -1,0 +1,561 @@
+//! Structured tracing across the C/R stack (DESIGN §14).
+//!
+//! One zero-dependency span layer gives every subsystem the same eyes the
+//! paper's LDMS pipeline gave Fig 4: the five-phase gang barrier
+//! ([`crate::dmtcp::daemon`], [`crate::dmtcp::coordinator`]), the store
+//! hot path ([`crate::dmtcp::store`]), session lifecycle
+//! ([`crate::cr::session`], [`crate::cr::gang`]), and scheduler decisions
+//! ([`crate::campaign`]). Three pieces:
+//!
+//! * the global [`TraceSink`] — sharded, bounded in-memory span rings with
+//!   seeded ids and a monotonic microsecond clock. Installed once per
+//!   process ([`install`]); when no sink is installed (the default) every
+//!   instrumentation point reduces to **one relaxed atomic load and no
+//!   allocation** — the disabled fast path the `trace_overhead` bench
+//!   gates at ≤2% wall-clock delta.
+//! * RAII [`SpanGuard`]s ([`span`]) and instant events ([`event`]) carrying
+//!   `(&'static str, String)` attributes. Span names are constants from
+//!   [`names`] — CI lints that every name used anywhere is registered in
+//!   [`names::ALL`], so the five instrumented modules cannot drift.
+//! * consumers: the [`flight`] recorder (the ring survives a failed round;
+//!   a dump names the failing rank and barrier phase — invariant 11) and
+//!   the [`export`] Chrome-trace (catapult) JSON exporter.
+
+pub mod export;
+pub mod flight;
+pub mod names;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Number of independent ring shards in a [`TraceSink`]. Writers on
+/// different threads land on different shards (by thread id), so the
+/// enabled path takes one short uncontended lock per record.
+pub const N_SHARDS: usize = 8;
+
+/// Configuration for [`install`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Seed for span-id generation. Ids are `splitmix64(seed ^ seq)` over
+    /// a global sequence counter: unique for the life of the sink (the
+    /// mix is a bijection) and reproducible for a fixed seed and
+    /// allocation order.
+    pub seed: u64,
+    /// Total ring capacity in records, split evenly across [`N_SHARDS`]
+    /// shards. When a shard fills, its oldest record is evicted (and
+    /// counted in [`TraceSink::dropped`]) — memory stays bounded no
+    /// matter how long the process traces.
+    pub capacity: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 0x5eed_7ace,
+            capacity: 4096,
+        }
+    }
+}
+
+/// One recorded span or instant event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Seeded unique id.
+    pub id: u64,
+    /// Span name — always a constant from [`names`].
+    pub name: &'static str,
+    /// Microseconds since the sink was installed (monotonic clock).
+    pub start_us: u64,
+    /// Duration in microseconds; `0` for instant events.
+    pub dur_us: u64,
+    /// `true` for instant events ([`event`]), `false` for spans.
+    pub instant: bool,
+    /// Small dense per-process thread id (allocation order, not the OS
+    /// tid) — stable for the life of the thread.
+    pub tid: u64,
+    /// Attributes, in the order they were attached.
+    pub attrs: Vec<(&'static str, String)>,
+}
+
+impl SpanRecord {
+    /// The value of attribute `key`, if attached.
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// The bounded, sharded span sink. One per process, installed with
+/// [`install`]; benches and tests hold the returned [`Arc`] to drain or
+/// snapshot what the instrumentation recorded.
+pub struct TraceSink {
+    epoch: Instant,
+    seed: u64,
+    next_seq: AtomicU64,
+    shard_cap: usize,
+    shards: Vec<Mutex<VecDeque<SpanRecord>>>,
+    dropped: AtomicU64,
+}
+
+impl TraceSink {
+    fn new(cfg: TraceConfig) -> Self {
+        let shard_cap = (cfg.capacity / N_SHARDS).max(1);
+        TraceSink {
+            epoch: Instant::now(),
+            seed: cfg.seed,
+            next_seq: AtomicU64::new(0),
+            shard_cap,
+            shards: (0..N_SHARDS)
+                .map(|_| Mutex::new(VecDeque::with_capacity(0)))
+                .collect(),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Microseconds since install (the span clock).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    fn next_id(&self) -> u64 {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        splitmix64(self.seed ^ seq)
+    }
+
+    fn push(&self, rec: SpanRecord) {
+        let shard = &self.shards[(rec.tid as usize) % N_SHARDS];
+        let mut q = shard.lock().expect("trace shard poisoned");
+        if q.len() >= self.shard_cap {
+            q.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(rec);
+    }
+
+    /// Records currently held across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("trace shard poisoned").len())
+            .sum()
+    }
+
+    /// `true` when no records are held.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total record capacity (`len()` can never exceed this).
+    pub fn capacity(&self) -> usize {
+        self.shard_cap * N_SHARDS
+    }
+
+    /// Records evicted because their shard was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Rough heap footprint of the held records (record size plus
+    /// attribute string bytes) — the bound the `trace_overhead` bench
+    /// checks against the configured capacity.
+    pub fn approx_bytes(&self) -> usize {
+        let mut total = 0usize;
+        for shard in &self.shards {
+            let q = shard.lock().expect("trace shard poisoned");
+            for rec in q.iter() {
+                total += std::mem::size_of::<SpanRecord>();
+                for (_, v) in &rec.attrs {
+                    total += std::mem::size_of::<(&str, String)>() + v.len();
+                }
+            }
+        }
+        total
+    }
+
+    /// Copy every held record, sorted by `(start_us, id)`.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.lock().expect("trace shard poisoned").iter().cloned());
+        }
+        out.sort_by(|a, b| (a.start_us, a.id).cmp(&(b.start_us, b.id)));
+        out
+    }
+
+    /// The last `last_n` records whose `job` attribute equals `job`,
+    /// oldest first — the flight-recorder view of one job's recent
+    /// history.
+    pub fn snapshot_job(&self, job: &str, last_n: usize) -> Vec<SpanRecord> {
+        let mut out: Vec<SpanRecord> = self
+            .snapshot()
+            .into_iter()
+            .filter(|r| r.attr("job") == Some(job))
+            .collect();
+        let excess = out.len().saturating_sub(last_n);
+        out.drain(..excess);
+        out
+    }
+
+    /// Remove and return every held record, sorted by `(start_us, id)`.
+    pub fn drain(&self) -> Vec<SpanRecord> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.lock().expect("trace shard poisoned").drain(..));
+        }
+        out.sort_by(|a, b| (a.start_us, a.id).cmp(&(b.start_us, b.id)));
+        out
+    }
+}
+
+/// `splitmix64` mix — a bijection on `u64`, so distinct inputs give
+/// distinct span ids.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+// The disabled fast path is this one atomic: no sink lock, no allocation.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Arc<TraceSink>>> = Mutex::new(None);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// Install the global sink (idempotent: a second install returns the
+/// already-installed sink unchanged) and enable recording. Returns the
+/// sink so the caller can drain/snapshot it later.
+pub fn install(cfg: TraceConfig) -> Arc<TraceSink> {
+    let mut slot = SINK.lock().expect("trace sink slot poisoned");
+    if let Some(sink) = slot.as_ref() {
+        ENABLED.store(true, Ordering::SeqCst);
+        return Arc::clone(sink);
+    }
+    let sink = Arc::new(TraceSink::new(cfg));
+    *slot = Some(Arc::clone(&sink));
+    ENABLED.store(true, Ordering::SeqCst);
+    sink
+}
+
+/// Remove the global sink and disable recording. Existing [`Arc`]s from
+/// [`install`] keep their records.
+pub fn uninstall() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *SINK.lock().expect("trace sink slot poisoned") = None;
+}
+
+/// Toggle recording without uninstalling the sink — the
+/// installed-but-disabled mode the overhead bench measures.
+pub fn set_enabled(on: bool) {
+    let slot = SINK.lock().expect("trace sink slot poisoned");
+    if slot.is_some() {
+        ENABLED.store(on, Ordering::SeqCst);
+    }
+}
+
+/// `true` when a sink is installed and recording — the hot-path check.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The installed sink, if any (recording or not).
+pub fn installed() -> Option<Arc<TraceSink>> {
+    SINK.lock().expect("trace sink slot poisoned").clone()
+}
+
+/// Growable attribute list handed to [`event`] fill closures.
+pub struct Attrs(Vec<(&'static str, String)>);
+
+impl Attrs {
+    /// Attach a string attribute.
+    pub fn str(&mut self, key: &'static str, val: impl Into<String>) {
+        self.0.push((key, val.into()));
+    }
+
+    /// Attach an integer attribute.
+    pub fn u64(&mut self, key: &'static str, val: u64) {
+        self.0.push((key, val.to_string()));
+    }
+
+    /// Attach a float attribute (6 decimal places).
+    pub fn f64(&mut self, key: &'static str, val: f64) {
+        self.0.push((key, format!("{val:.6}")));
+    }
+}
+
+/// Record an instant event. `fill` runs only when recording is enabled —
+/// attribute formatting costs nothing on the disabled path.
+pub fn event(name: &'static str, fill: impl FnOnce(&mut Attrs)) {
+    if !enabled() {
+        return;
+    }
+    let Some(sink) = installed() else { return };
+    let mut attrs = Attrs(Vec::new());
+    fill(&mut attrs);
+    let rec = SpanRecord {
+        id: sink.next_id(),
+        name,
+        start_us: sink.now_us(),
+        dur_us: 0,
+        instant: true,
+        tid: tid(),
+        attrs: attrs.0,
+    };
+    sink.push(rec);
+}
+
+/// Record an already-measured span ending now (duration `dur`): the store
+/// restore pipeline reports its read/decompress/verify phases this way,
+/// from the same [`crate::dmtcp::store::RestoreStats`] it returns.
+pub fn closed_span(name: &'static str, dur: Duration, fill: impl FnOnce(&mut Attrs)) {
+    if !enabled() {
+        return;
+    }
+    let Some(sink) = installed() else { return };
+    let mut attrs = Attrs(Vec::new());
+    fill(&mut attrs);
+    let dur_us = dur.as_micros() as u64;
+    let rec = SpanRecord {
+        id: sink.next_id(),
+        name,
+        start_us: sink.now_us().saturating_sub(dur_us),
+        dur_us,
+        instant: false,
+        tid: tid(),
+        attrs: attrs.0,
+    };
+    sink.push(rec);
+}
+
+struct ActiveSpan {
+    sink: Arc<TraceSink>,
+    id: u64,
+    name: &'static str,
+    start: Instant,
+    start_us: u64,
+    attrs: Vec<(&'static str, String)>,
+}
+
+/// RAII span: records itself (with its wall duration) when dropped. When
+/// tracing is disabled the guard is inert — constructing and dropping it
+/// is the atomic check and nothing else.
+#[must_use = "a span measures the scope it is bound to; binding to _ drops it immediately"]
+pub struct SpanGuard(Option<ActiveSpan>);
+
+impl SpanGuard {
+    /// `true` when this guard is recording (sink installed and enabled at
+    /// construction).
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Builder-style string attribute; the closure runs only when active.
+    pub fn with(mut self, key: &'static str, f: impl FnOnce() -> String) -> Self {
+        if let Some(a) = &mut self.0 {
+            a.attrs.push((key, f()));
+        }
+        self
+    }
+
+    /// Builder-style integer attribute.
+    pub fn with_u64(mut self, key: &'static str, val: u64) -> Self {
+        if let Some(a) = &mut self.0 {
+            a.attrs.push((key, val.to_string()));
+        }
+        self
+    }
+
+    /// Builder-style float attribute (6 decimal places).
+    pub fn with_f64(mut self, key: &'static str, val: f64) -> Self {
+        if let Some(a) = &mut self.0 {
+            a.attrs.push((key, format!("{val:.6}")));
+        }
+        self
+    }
+
+    /// Attach a string attribute mid-span; the closure runs only when
+    /// active.
+    pub fn note(&mut self, key: &'static str, f: impl FnOnce() -> String) {
+        if let Some(a) = &mut self.0 {
+            a.attrs.push((key, f()));
+        }
+    }
+
+    /// Attach an integer attribute mid-span.
+    pub fn note_u64(&mut self, key: &'static str, val: u64) {
+        if let Some(a) = &mut self.0 {
+            a.attrs.push((key, val.to_string()));
+        }
+    }
+
+    /// Mark the span failed with an error message attribute.
+    pub fn fail(&mut self, err: &str) {
+        if let Some(a) = &mut self.0 {
+            a.attrs.push(("error", err.to_string()));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(a) = self.0.take() {
+            let dur_us = a.start.elapsed().as_micros() as u64;
+            a.sink.push(SpanRecord {
+                id: a.id,
+                name: a.name,
+                start_us: a.start_us,
+                dur_us,
+                instant: false,
+                tid: tid(),
+                attrs: a.attrs,
+            });
+        }
+    }
+}
+
+/// Open a span; it records itself when the returned guard drops. `name`
+/// must be a constant from [`names`] (CI-linted).
+pub fn span(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard(None);
+    }
+    let Some(sink) = installed() else {
+        return SpanGuard(None);
+    };
+    let id = sink.next_id();
+    let start_us = sink.now_us();
+    SpanGuard(Some(ActiveSpan {
+        sink,
+        id,
+        name,
+        start: Instant::now(),
+        start_us,
+        attrs: Vec::new(),
+    }))
+}
+
+/// Forward a `log` record into the sink as an instant event (the
+/// [`crate::logging`] backend calls this for every emitted record when a
+/// sink is recording).
+pub fn log_event(level: &'static str, target: &str, msg: &str) {
+    event(names::LOG_EVENT, |a| {
+        a.str("level", level);
+        a.str("target", target.to_string());
+        a.str("msg", msg.to_string());
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The global sink is process-wide; every test that installs shares it,
+    // so these tests use the returned Arc and never uninstall (other test
+    // binaries run with tracing off, exercising the disabled path).
+    fn sink() -> Arc<TraceSink> {
+        install(TraceConfig {
+            seed: 42,
+            capacity: 256,
+        })
+    }
+
+    #[test]
+    fn disabled_span_is_inert_and_enable_records() {
+        let s = sink();
+        set_enabled(false);
+        {
+            let _g = span(names::SESSION_LAUNCH).with_u64("x", 1);
+            event(names::LOG_EVENT, |a| a.u64("y", 2));
+        }
+        let before = s.len();
+        set_enabled(true);
+        {
+            let mut g = span(names::SESSION_LAUNCH).with_u64("x", 1);
+            g.note_u64("z", 3);
+        }
+        let after = s.snapshot();
+        assert!(after.len() > before);
+        let rec = after
+            .iter()
+            .rev()
+            .find(|r| r.name == names::SESSION_LAUNCH)
+            .expect("span recorded");
+        assert_eq!(rec.attr("x"), Some("1"));
+        assert_eq!(rec.attr("z"), Some("3"));
+        assert!(!rec.instant);
+    }
+
+    #[test]
+    fn ids_unique_and_ring_bounded() {
+        let s = sink();
+        set_enabled(true);
+        for i in 0..s.capacity() * 2 {
+            event(names::SCHED_DISPATCH, |a| a.u64("i", i as u64));
+        }
+        assert!(s.len() <= s.capacity());
+        assert!(s.dropped() > 0);
+        let snap = s.snapshot();
+        let mut ids: Vec<u64> = snap.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), snap.len(), "span ids must never collide");
+    }
+
+    #[test]
+    fn job_snapshot_filters_and_caps() {
+        let s = sink();
+        set_enabled(true);
+        for i in 0..10u64 {
+            event(names::BARRIER_PHASE, |a| {
+                a.str("job", "jobA");
+                a.u64("i", i);
+            });
+            event(names::BARRIER_PHASE, |a| {
+                a.str("job", "jobB");
+                a.u64("i", i);
+            });
+        }
+        let recent = s.snapshot_job("jobA", 4);
+        assert_eq!(recent.len(), 4);
+        assert!(recent.iter().all(|r| r.attr("job") == Some("jobA")));
+        // Oldest-first, and the cap keeps the most recent records.
+        assert_eq!(recent.last().unwrap().attr("i"), Some("9"));
+    }
+
+    #[test]
+    fn closed_span_backdates_start() {
+        let s = sink();
+        set_enabled(true);
+        closed_span(names::STORE_VERIFY, Duration::from_micros(1500), |a| {
+            a.u64("chunks", 3)
+        });
+        let snap = s.snapshot();
+        let rec = snap
+            .iter()
+            .rev()
+            .find(|r| r.name == names::STORE_VERIFY)
+            .unwrap();
+        assert_eq!(rec.dur_us, 1500);
+        assert!(rec.start_us + rec.dur_us <= s.now_us() + 1);
+    }
+
+    #[test]
+    fn splitmix_is_injective_on_a_range() {
+        let mut seen: Vec<u64> = (0..10_000u64).map(splitmix64).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 10_000);
+    }
+}

@@ -1,0 +1,147 @@
+//! The span-name registry. Every span or event name used anywhere in the
+//! crate is a constant here, and every constant is listed in [`ALL`] — CI
+//! lints both directions, so the five instrumented modules (daemon/
+//! coordinator, store, ckpt_thread/restart, sessions, scheduler) cannot
+//! drift into stringly-typed names.
+
+/// One five-phase barrier round, daemon side (attrs: `job`, `round`,
+/// `ranks`).
+pub const BARRIER_ROUND: &str = "barrier.round";
+/// One phase of a barrier round, daemon side (attrs: `job`, `round`,
+/// `phase`, `clients`).
+pub const BARRIER_PHASE: &str = "barrier.phase";
+/// A barrier participant died or stalled (attrs: `job`, `rank`, `phase`,
+/// `error`) — the event the flight recorder pivots on (invariant 11).
+pub const PHASE_FAIL: &str = "barrier.phase_fail";
+
+/// Client-side handling of one barrier phase in the checkpoint thread
+/// (attrs: `job`, `rank`, `phase`).
+pub const CLIENT_PHASE: &str = "client.phase";
+/// Client-side checkpoint image write (attrs: `job`, `rank`, `bytes`).
+pub const IMAGE_WRITE: &str = "client.image_write";
+
+/// `Coordinator::checkpoint_all` — one whole checkpoint round as the
+/// session sees it (attrs: `job`).
+pub const COORD_CHECKPOINT: &str = "coordinator.checkpoint";
+/// `Coordinator::checkpoint_gang` — one all-or-nothing gang round
+/// (attrs: `job`, `ranks`).
+pub const COORD_CHECKPOINT_GANG: &str = "coordinator.checkpoint_gang";
+
+/// Store write of one image (attrs: `chunks_written`, `chunks_deduped`,
+/// `stored_bytes`, `logical_bytes`).
+pub const STORE_WRITE: &str = "store.write";
+/// Chunk compress + publish fan-out inside a store write (attrs:
+/// `chunks`).
+pub const STORE_COMPRESS: &str = "store.compress";
+/// Whole restore-assembly of a v2 image (attrs: `chunks`, `bytes`).
+pub const STORE_RESTORE: &str = "store.restore";
+/// Chunk-read phase of a restore, from [`crate::dmtcp::store::RestoreStats`]
+/// (attrs: `chunks`).
+pub const STORE_READ: &str = "store.read";
+/// Decompress phase of a restore (attrs: `chunks`).
+pub const STORE_DECOMPRESS: &str = "store.decompress";
+/// CRC-verify phase of a restore (attrs: `chunks`).
+pub const STORE_VERIFY: &str = "store.verify";
+
+/// `dmtcp_restart` reconstructing a process from an image (attrs: `name`,
+/// `vpid`, `generation`).
+pub const RESTART_IMAGE: &str = "restart.image";
+
+/// Session launch, first incarnation (attrs: `job`).
+pub const SESSION_LAUNCH: &str = "session.launch";
+/// One session-level checkpoint (attrs: `job`).
+pub const SESSION_CHECKPOINT: &str = "session.checkpoint";
+/// A session kill — injected fault or operator action (attrs: `job`).
+pub const SESSION_KILL: &str = "session.kill";
+/// A session restart from its latest image (attrs: `job`, `generation`).
+pub const SESSION_RESTART: &str = "session.restart";
+/// Fig 3 auto-workflow state transition (attrs: `job`, `state`).
+pub const AUTO_STATE: &str = "session.auto_state";
+
+/// Gang launch of all ranks (attrs: `job`, `ranks`).
+pub const GANG_LAUNCH: &str = "gang.launch";
+/// One gang checkpoint: barrier + manifest commit (attrs: `job`,
+/// `ranks`).
+pub const GANG_CHECKPOINT: &str = "gang.checkpoint";
+/// A gang rank kill (attrs: `job`, `rank`).
+pub const GANG_KILL: &str = "gang.kill_rank";
+/// Gang restart of every rank from a consistent cut (attrs: `job`,
+/// `ranks`).
+pub const GANG_RESTART: &str = "gang.restart";
+
+/// Admission control accepted an arrival (attrs: `session`).
+pub const SCHED_ADMIT: &str = "sched.admit";
+/// Admission control turned an arrival away (attrs: `session`,
+/// `reason`).
+pub const SCHED_REJECT: &str = "sched.reject";
+/// The scheduler dispatched a queued request to a worker slot (attrs:
+/// `session`, `policy`, `queue_wait_secs`).
+pub const SCHED_DISPATCH: &str = "sched.dispatch";
+/// A preemption notice fired and the executor is deciding/running the
+/// final-checkpoint override (attrs: `session`).
+pub const SCHED_PREEMPT_NOTICE: &str = "sched.preempt_notice";
+
+/// A `log` facade record forwarded by [`crate::logging`] (attrs: `level`,
+/// `target`, `msg`).
+pub const LOG_EVENT: &str = "log.event";
+/// A flight-recorder dump was written (attrs: `job`, `path`).
+pub const FLIGHT_DUMP: &str = "flight.dump";
+
+/// Every span name, in one table. CI asserts (a) every `names::X` usage
+/// in the crate resolves to a constant defined here and (b) every
+/// constant defined here appears in this list.
+pub const ALL: &[&str] = &[
+    BARRIER_ROUND,
+    BARRIER_PHASE,
+    PHASE_FAIL,
+    CLIENT_PHASE,
+    IMAGE_WRITE,
+    COORD_CHECKPOINT,
+    COORD_CHECKPOINT_GANG,
+    STORE_WRITE,
+    STORE_COMPRESS,
+    STORE_RESTORE,
+    STORE_READ,
+    STORE_DECOMPRESS,
+    STORE_VERIFY,
+    RESTART_IMAGE,
+    SESSION_LAUNCH,
+    SESSION_CHECKPOINT,
+    SESSION_KILL,
+    SESSION_RESTART,
+    AUTO_STATE,
+    GANG_LAUNCH,
+    GANG_CHECKPOINT,
+    GANG_KILL,
+    GANG_RESTART,
+    SCHED_ADMIT,
+    SCHED_REJECT,
+    SCHED_DISPATCH,
+    SCHED_PREEMPT_NOTICE,
+    LOG_EVENT,
+    FLIGHT_DUMP,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::ALL;
+
+    #[test]
+    fn registry_has_no_duplicates() {
+        let mut sorted: Vec<&str> = ALL.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ALL.len(), "duplicate span name in ALL");
+    }
+
+    #[test]
+    fn names_are_dotted_lowercase() {
+        for n in ALL {
+            assert!(
+                n.contains('.')
+                    && n.chars().all(|c| c.is_ascii_lowercase() || c == '.' || c == '_'),
+                "bad span name {n:?}"
+            );
+        }
+    }
+}

@@ -149,9 +149,52 @@ const PHASE_EVENTS: [Event; 5] = [
     Event::PostCheckpoint,
 ];
 
+/// The protocol barrier phase each plugin event fires inside — the phase
+/// name a flight dump must pin the failure to. `PreCheckpoint` fires in
+/// the `Checkpoint` phase handler, `PostCheckpoint` in `Resume`; the rest
+/// share their phase's name.
+fn barrier_phase_of(event: Event) -> &'static str {
+    match event {
+        Event::Suspend => "Suspend",
+        Event::Drain => "Drain",
+        Event::PreCheckpoint => "Checkpoint",
+        Event::Refill => "Refill",
+        Event::PostCheckpoint => "Resume",
+        _ => panic!("not a barrier event: {event:?}"),
+    }
+}
+
+/// Assert the failed round left a flight dump under `ckpt_dir` naming the
+/// killed rank and the barrier phase it died in (ISSUE 9 acceptance: no
+/// failed round without an explanation on disk).
+fn assert_flight_dump_names_victim(ckpt_dir: &std::path::Path, victim: u32, event: Event) {
+    let dumps = nersc_cr::trace::flight::scan(ckpt_dir);
+    assert!(
+        !dumps.is_empty(),
+        "{event:?}: a failed round must leave a flight dump in {}",
+        ckpt_dir.display()
+    );
+    let phase = barrier_phase_of(event);
+    let named = dumps
+        .iter()
+        .find(|d| d.failed_rank == Some(victim as u64))
+        .unwrap_or_else(|| {
+            panic!("{event:?}: no dump names victim rank {victim}: {dumps:?}")
+        });
+    assert_eq!(
+        named.failed_phase.as_deref(),
+        Some(phase),
+        "{event:?}: dump must pin the failing barrier phase"
+    );
+    assert!(named.n_spans > 0, "{event:?}: dump must carry span context");
+}
+
 #[test]
 fn rank_death_at_every_phase_never_exposes_a_torn_image_set() {
     const RANKS: u32 = 4;
+    // Flight recorder on: every injected failure below must leave a dump
+    // naming the victim rank and the phase it died in.
+    nersc_cr::trace::install(nersc_cr::trace::TraceConfig::default());
     for (i, event) in PHASE_EVENTS.iter().enumerate() {
         let armed = Arc::new(AtomicBool::new(false));
         let app = TortureApp {
@@ -188,6 +231,10 @@ fn rank_death_at_every_phase_never_exposes_a_torn_image_set() {
             "the injector must actually have fired at {event:?} ({msg})"
         );
 
+        // The failure is explainable: a flight dump in the checkpoint dir
+        // names the killed rank and the barrier phase (invariant 11).
+        assert_flight_dump_names_victim(&ckpt_dir, 2, *event);
+
         // The newest visible cut is still round 1, byte-for-byte whole:
         // the failed round published nothing and overwrote nothing.
         let still_id = assert_cut_is_whole(&ckpt_dir, &gang, RANKS);
@@ -223,6 +270,7 @@ fn repeated_phase_deaths_before_any_commit_leave_no_cut_visible() {
         event: Event::Drain,
         armed: Arc::clone(&armed),
     };
+    nersc_cr::trace::install(nersc_cr::trace::TraceConfig::default());
     let wd = workdir("first");
     let mut session = GangSession::builder(&app)
         .workdir(&wd)
@@ -237,6 +285,8 @@ fn repeated_phase_deaths_before_any_commit_leave_no_cut_visible() {
         latest_gang_manifest(&wd.join("ckpt"), &gang).unwrap().is_none(),
         "no cut was committed, none may be visible"
     );
+    // Even a never-committed round must be explainable after the fact.
+    assert_flight_dump_names_victim(&wd.join("ckpt"), 1, Event::Drain);
     // With no cut, gang restart is impossible — a typed error, not a
     // torn restore.
     session.kill().unwrap();

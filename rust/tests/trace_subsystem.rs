@@ -1,0 +1,138 @@
+//! Trace-subsystem integration (PR-9 tentpole): the global sink under
+//! concurrent writers, and the Chrome-trace export round-trip.
+//!
+//! These run in their own test binary, so `install` here exercises the
+//! real process-wide singleton the instrumented layers share. Tests never
+//! uninstall (the sink is process-wide by design); they coordinate through
+//! the returned [`Arc`] and job-scoped snapshots.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use nersc_cr::trace::{self, export, names, TraceConfig, TraceSink};
+
+/// The sink is process-wide and one test here toggles `set_enabled`;
+/// serialize the tests of this binary so a mid-run disable cannot drop
+/// another test's records.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn sink() -> (MutexGuard<'static, ()>, Arc<TraceSink>) {
+    let guard = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let sink = trace::install(TraceConfig {
+        seed: 0xD1CE,
+        capacity: 8192,
+    });
+    (guard, sink)
+}
+
+/// Many threads hammer the sink concurrently; every record must come out
+/// whole — unique id, its own thread's attributes, no interleaving or
+/// tearing across writers.
+#[test]
+fn concurrent_writers_never_tear_or_collide() {
+    const THREADS: u64 = 8;
+    const PER_THREAD: u64 = 200;
+    let (_gate, s) = sink();
+    trace::set_enabled(true);
+    let job = "torn-writer-test";
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            scope.spawn(move || {
+                for i in 0..PER_THREAD {
+                    trace::event(names::SCHED_DISPATCH, |a| {
+                        a.str("job", job);
+                        a.u64("writer", t);
+                        a.u64("i", i);
+                        // A value derivable from the other two: if records
+                        // ever interleaved attribute lists across threads,
+                        // this check value would disagree.
+                        a.u64("check", t * 10_000 + i);
+                    });
+                }
+            });
+        }
+    });
+    let recs: Vec<_> = s
+        .snapshot()
+        .into_iter()
+        .filter(|r| r.attr("job") == Some(job))
+        .collect();
+    // The ring may have evicted some under other tests' load, but a
+    // capacity of 8192 comfortably holds 1600 records.
+    assert_eq!(recs.len(), (THREADS * PER_THREAD) as usize);
+    let mut ids: Vec<u64> = recs.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), recs.len(), "span ids must be unique");
+    for r in &recs {
+        let w: u64 = r.attr("writer").unwrap().parse().unwrap();
+        let i: u64 = r.attr("i").unwrap().parse().unwrap();
+        let check: u64 = r.attr("check").unwrap().parse().unwrap();
+        assert_eq!(check, w * 10_000 + i, "torn record: {r:?}");
+        assert_eq!(r.attrs.len(), 4, "attribute list must be intact");
+    }
+}
+
+/// Spans and events survive the trip into catapult JSON: the exporter
+/// emits one event object per record, the validator structurally parses
+/// the document back, and names/attrs appear escaped but intact.
+#[test]
+fn chrome_export_round_trips() {
+    let (_gate, s) = sink();
+    trace::set_enabled(true);
+    let job = "chrome-export-test";
+    {
+        let _g = trace::span(names::STORE_WRITE)
+            .with("job", || job.to_string())
+            .with("nasty", || "quote\" slash\\ ctrl\u{1} done".to_string())
+            .with_u64("chunks", 7);
+        trace::event(names::PHASE_FAIL, |a| {
+            a.str("job", job);
+            a.u64("rank", 3);
+            a.str("phase", "Drain");
+        });
+    }
+    let spans: Vec<_> = s
+        .snapshot()
+        .into_iter()
+        .filter(|r| r.attr("job") == Some(job))
+        .collect();
+    assert_eq!(spans.len(), 2);
+    let doc = export::chrome_json(&spans);
+    let n = export::validate_chrome_json(&doc).expect("exported JSON must validate");
+    assert_eq!(n, spans.len(), "one catapult event per record");
+    assert!(doc.contains("\"store.write\""));
+    assert!(doc.contains("\"barrier.phase_fail\""));
+    assert!(doc.contains("quote\\\" slash\\\\"), "escaping must round-trip");
+    assert!(doc.contains("\\u0001"), "control bytes must be escaped");
+    // The instant event exports as a catapult instant, the span as a
+    // complete event with a duration.
+    assert!(doc.contains("\"ph\":\"i\""));
+    assert!(doc.contains("\"ph\":\"X\""));
+
+    // Damage is rejected, not silently accepted.
+    let damaged = doc.replace("traceEvents", "traceEvent");
+    assert!(export::validate_chrome_json(&damaged).is_err());
+}
+
+/// The disabled path stays allocation-free and inert even while another
+/// sink consumer holds a snapshot: toggling enabled off mid-run drops new
+/// records without disturbing what is already held.
+#[test]
+fn toggling_enabled_preserves_held_records() {
+    let (_gate, s) = sink();
+    trace::set_enabled(true);
+    let job = "toggle-test";
+    trace::event(names::SESSION_KILL, |a| a.str("job", job));
+    let held = s.snapshot_job(job, 16).len();
+    assert_eq!(held, 1);
+    trace::set_enabled(false);
+    trace::event(names::SESSION_KILL, |a| a.str("job", job));
+    assert_eq!(
+        s.snapshot_job(job, 16).len(),
+        held,
+        "disabled sink must not record"
+    );
+    trace::set_enabled(true);
+    trace::event(names::SESSION_KILL, |a| a.str("job", job));
+    assert_eq!(s.snapshot_job(job, 16).len(), held + 1);
+}

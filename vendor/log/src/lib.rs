@@ -55,6 +55,33 @@ pub enum LevelFilter {
     Trace,
 }
 
+// The real crate lets levels compare against filters directly
+// (`record.level() <= log::max_level()`); mirror that so backends can
+// implement an honest `Log::enabled`.
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        (*self as usize) == (*other as usize)
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        (*self as usize) == (*other as usize)
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
 /// Record metadata consulted by [`Log::enabled`].
 #[derive(Debug, Clone)]
 pub struct Metadata<'a> {
@@ -63,6 +90,15 @@ pub struct Metadata<'a> {
 }
 
 impl<'a> Metadata<'a> {
+    /// Start building a `Metadata` (the real crate's constructor path;
+    /// backends use it to probe `Log::enabled` directly).
+    pub fn builder() -> MetadataBuilder<'a> {
+        MetadataBuilder {
+            level: Level::Info,
+            target: "",
+        }
+    }
+
     /// The record's level.
     pub fn level(&self) -> Level {
         self.level
@@ -71,6 +107,35 @@ impl<'a> Metadata<'a> {
     /// The record's target (module path by default).
     pub fn target(&self) -> &'a str {
         self.target
+    }
+}
+
+/// Builder for [`Metadata`], mirroring the real crate.
+#[derive(Debug)]
+pub struct MetadataBuilder<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> MetadataBuilder<'a> {
+    /// Set the level.
+    pub fn level(mut self, level: Level) -> Self {
+        self.level = level;
+        self
+    }
+
+    /// Set the target.
+    pub fn target(mut self, target: &'a str) -> Self {
+        self.target = target;
+        self
+    }
+
+    /// Finish building.
+    pub fn build(self) -> Metadata<'a> {
+        Metadata {
+            level: self.level,
+            target: self.target,
+        }
     }
 }
 
@@ -234,5 +299,17 @@ mod tests {
         assert_eq!(HITS.load(Ordering::Relaxed), 1);
         assert!(set_logger(&COUNTER).is_err(), "second install must fail");
         assert_eq!(max_level(), LevelFilter::Info);
+    }
+
+    #[test]
+    fn level_compares_against_filter() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(LevelFilter::Warn >= Level::Error);
+        assert_eq!(Level::Warn, LevelFilter::Warn);
+        let meta = Metadata::builder().level(Level::Debug).target("t").build();
+        assert_eq!(meta.level(), Level::Debug);
+        assert_eq!(meta.target(), "t");
     }
 }
