@@ -26,6 +26,7 @@ bench:
 	cargo bench --bench sched_campaign
 	cargo bench --bench store_hotpath
 	cargo bench --bench trace_overhead
+	cargo bench --bench fault_storm
 
 # AOT-lower the L2 model to HLO text for the PJRT backend (needs jax).
 artifacts:

@@ -1,0 +1,349 @@
+//! Correlated-failure storm, self-checking: the three fault domains the
+//! paper's fleets actually face at once, against the live C/R stack.
+//!
+//! Part 1 (node storms): node-scoped kill campaigns — a seeded `NodeMap`
+//! places sessions on nodes, and one node fault fells everything
+//! co-located in the same tick. Every cell must complete bit-identical,
+//! and availability *with* checkpoints must strictly beat the
+//! counterfactual no-checkpoint fleet (every kill restarts from step 0).
+//!
+//! Part 2 (store corruption): a seeded `StoreCorruptor` damages every
+//! chunk file unique to a gang's newest committed round. The gang restart
+//! must skip the corrupt cut with a typed error — zero panics — fall back
+//! to the retained predecessor round, and still finish bit-identical.
+//!
+//! Part 3 (fabric partitions): mid-barrier partitions sever rank subsets
+//! at SUSPEND, DRAIN and CHECKPOINT. Every failed round must leave the
+//! previously committed gang manifest byte-identical on disk (zero torn
+//! cuts), and the gang must restart from it and finish bit-identical.
+//!
+//! Run: `cargo bench --bench fault_storm`
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use nersc_cr::campaign::{
+    run_campaign, CampaignSpec, FaultPlan, IntervalPolicy, StoreCorruptor, WorkloadSpec,
+};
+use nersc_cr::cr::GangSession;
+use nersc_cr::dmtcp::protocol::Phase;
+use nersc_cr::report::{emit_bench_json, smoke_scaled, Table};
+use nersc_cr::trace::flight;
+use nersc_cr::workload::StencilApp;
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ncr_storm_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn checkpoint_retrying(session: &GangSession<&StencilApp>) -> nersc_cr::cr::GangCheckpoint {
+    let mut last_err = None;
+    for _ in 0..200 {
+        match session.checkpoint_now() {
+            Ok(ck) => return ck,
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(Duration::from_millis(3));
+            }
+        }
+    }
+    panic!("gang checkpoint never succeeded: {:?}", last_err);
+}
+
+fn chunk_set(store_root: &Path) -> BTreeSet<PathBuf> {
+    let mut out = BTreeSet::new();
+    if let Ok(buckets) = std::fs::read_dir(store_root) {
+        for b in buckets.flatten() {
+            if !b.path().is_dir() {
+                continue;
+            }
+            if let Ok(files) = std::fs::read_dir(b.path()) {
+                for f in files.flatten() {
+                    if f.path().extension().map(|x| x == "chunk").unwrap_or(false) {
+                        out.insert(f.path());
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+struct StormCell {
+    nodes: u32,
+    completed: usize,
+    verified: usize,
+    kills: u64,
+    node_kills: u64,
+    availability: f64,
+    no_ckpt_availability: f64,
+    node_dumps: usize,
+}
+
+fn main() {
+    nersc_cr::logging::init();
+    // The flight recorder is part of the contract under test: every
+    // injected fault must be explainable from a domain-tagged dump.
+    nersc_cr::trace::install(nersc_cr::trace::TraceConfig::default());
+
+    let sessions = smoke_scaled(6, 3) as u32;
+    let target_steps = smoke_scaled(6_000, 2_000) as u64;
+    println!("== fault storm: node / store / fabric domains ({sessions} sessions/cell) ==\n");
+
+    // --- Part 1: node-scoped kill storms -------------------------------
+    let mut cells: Vec<StormCell> = Vec::new();
+    for (i, nodes) in [2u32, 4u32].into_iter().enumerate() {
+        let wd = workdir(&format!("nodes{nodes}"));
+        let spec = CampaignSpec {
+            name: format!("storm-n{nodes}"),
+            sessions,
+            concurrency: sessions,
+            workload: WorkloadSpec::Cp2kScf { n: 10 },
+            target_steps,
+            seed: 60_000 + i as u64 * 1_000,
+            workdir: Some(wd.clone()),
+            faults: FaultPlan::node_scoped(Duration::from_millis(25), 2, nodes),
+            interval: IntervalPolicy::Fixed(Duration::from_millis(8)),
+            straggler_timeout: Duration::from_secs(120),
+            ..Default::default()
+        };
+        let report = run_campaign(&spec).expect("storm campaign");
+        let node_dumps = flight::scan(&wd)
+            .iter()
+            .filter(|d| d.fault_domain.as_deref() == Some("node"))
+            .count();
+        cells.push(StormCell {
+            nodes,
+            completed: report.completed(),
+            verified: report.verified(),
+            kills: report.kills(),
+            node_kills: report.node_kills(),
+            availability: report.availability(),
+            no_ckpt_availability: report.no_ckpt_availability(),
+            node_dumps,
+        });
+        std::fs::remove_dir_all(&wd).ok();
+    }
+    let mut t = Table::new(&[
+        "nodes",
+        "completed",
+        "verified",
+        "kills",
+        "node kills",
+        "avail (C/R)",
+        "avail (no ckpt)",
+        "node dumps",
+    ]);
+    for c in &cells {
+        t.row(&[
+            c.nodes.to_string(),
+            format!("{}/{sessions}", c.completed),
+            format!("{}/{sessions}", c.verified),
+            c.kills.to_string(),
+            c.node_kills.to_string(),
+            format!("{:.4}", c.availability),
+            format!("{:.4}", c.no_ckpt_availability),
+            c.node_dumps.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- Part 2: fleet-scale store corruption --------------------------
+    const RANKS: u32 = 3;
+    let app = StencilApp::new(RANKS, 8).endpoint_bytes(2048);
+    let wd = workdir("store");
+    let mut session = GangSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(smoke_scaled(100_000, 30_000) as u64)
+        .seed(606)
+        .incremental_images(0)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+    let store_root = wd.join("ckpt").join("store");
+    let ck1 = checkpoint_retrying(&session);
+    let (ck2, fresh) = {
+        let mut found = None;
+        let mut prior_cut = ck1.manifest.cut_steps();
+        for _ in 0..200 {
+            std::thread::sleep(Duration::from_millis(5));
+            let before = chunk_set(&store_root);
+            let c = checkpoint_retrying(&session);
+            let cut = c.manifest.cut_steps();
+            if cut > prior_cut {
+                let new: Vec<PathBuf> =
+                    chunk_set(&store_root).difference(&before).cloned().collect();
+                found = Some((c, new));
+                break;
+            }
+            prior_cut = cut;
+        }
+        found.expect("the gang never advanced past its first cut")
+    };
+    let struck = StoreCorruptor::new(4242)
+        .strike_paths(&fresh)
+        .expect("strike")
+        .len();
+    session.kill().unwrap();
+    let resumed = session.resubmit_from_checkpoint().expect("typed fallback restart");
+    let corrupt_fallbacks = session.manifest_fallbacks();
+    let fell_back_one_round =
+        corrupt_fallbacks == 1 && resumed < ck2.manifest.cut_steps();
+    session.wait_done(Duration::from_secs(240)).unwrap();
+    let finals = session.final_states().unwrap();
+    let store_verified = session.verify_final(&finals).is_ok();
+    session.finish();
+    let store_dumps = flight::scan(&wd.join("ckpt"))
+        .iter()
+        .filter(|d| d.fault_domain.as_deref() == Some("store"))
+        .count();
+    println!(
+        "store corruption: {struck} chunks struck, {corrupt_fallbacks} fallback(s), \
+         resumed at {resumed} (corrupt cut was {}), verified={store_verified}\n",
+        ck2.manifest.cut_steps()
+    );
+    std::fs::remove_dir_all(&wd).ok();
+
+    // --- Part 3: mid-barrier fabric partitions -------------------------
+    let phases = [Phase::Suspend, Phase::Drain, Phase::Checkpoint];
+    let app = StencilApp::new(4, 8).endpoint_bytes(2048);
+    let wd = workdir("fabric");
+    let mut session = GangSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(smoke_scaled(120_000, 40_000) as u64)
+        .seed(909)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+    let mut partition_rounds = 0usize;
+    let mut torn_cuts = 0usize;
+    let mut untyped_failures = 0usize;
+    for phase in phases {
+        let good = checkpoint_retrying(&session);
+        let pristine = std::fs::read(&good.manifest_path).unwrap();
+        session.inject_partition(phase, &[1, 3]).unwrap();
+        match session.checkpoint_now() {
+            Err(_) => partition_rounds += 1,
+            Ok(_) => untyped_failures += 1,
+        }
+        if std::fs::read(&good.manifest_path).unwrap() != pristine {
+            torn_cuts += 1;
+        }
+        session.kill().unwrap();
+        let resumed = session.resubmit_from_checkpoint().expect("partition restart");
+        if resumed != good.manifest.cut_steps() {
+            torn_cuts += 1;
+        }
+    }
+    session.wait_done(Duration::from_secs(240)).unwrap();
+    let finals = session.final_states().unwrap();
+    let fabric_verified = session.verify_final(&finals).is_ok();
+    session.finish();
+    let fabric_dumps = flight::scan(&wd.join("ckpt"))
+        .iter()
+        .filter(|d| d.fault_domain.as_deref() == Some("fabric"))
+        .count();
+    println!(
+        "fabric partitions: {partition_rounds}/{} rounds failed typed, {torn_cuts} torn \
+         cuts, {fabric_dumps} fabric dumps, verified={fabric_verified}\n",
+        phases.len()
+    );
+    std::fs::remove_dir_all(&wd).ok();
+
+    // --- Self-checks ----------------------------------------------------
+    let mut ok = true;
+    for (name, pass) in [
+        (
+            "every storm cell completes and verifies bit-identical",
+            cells
+                .iter()
+                .all(|c| c.completed == sessions as usize && c.verified == sessions as usize),
+        ),
+        (
+            "the storm actually struck in every cell (kills >= 1)",
+            cells.iter().all(|c| c.kills >= 1),
+        ),
+        (
+            "every kill in a node-domain campaign is a node kill",
+            cells.iter().all(|c| c.node_kills == c.kills),
+        ),
+        (
+            "C/R strictly beats the no-checkpoint baseline in every cell",
+            cells.iter().all(|c| c.availability > c.no_ckpt_availability),
+        ),
+        (
+            "every node kill is explainable from a node-domain dump",
+            cells.iter().all(|c| c.node_dumps >= 1),
+        ),
+        (
+            "store strike hit several chunks in one blow",
+            struck >= 2,
+        ),
+        (
+            "corrupt newest cut fell back exactly one round, typed",
+            fell_back_one_round,
+        ),
+        (
+            "store-domain dump explains the skipped cut",
+            store_dumps >= 1,
+        ),
+        (
+            "gang after store fallback completes bit-identical",
+            store_verified,
+        ),
+        (
+            "every partitioned round failed typed (no silent commit)",
+            partition_rounds == phases.len() && untyped_failures == 0,
+        ),
+        (
+            "zero torn cuts: committed manifests stay byte-identical",
+            torn_cuts == 0,
+        ),
+        (
+            "every partition is explainable from a fabric-domain dump",
+            fabric_dumps >= phases.len(),
+        ),
+        (
+            "gang after partitions completes bit-identical",
+            fabric_verified,
+        ),
+    ] {
+        println!("  [{}] {name}", if pass { "PASS" } else { "FAIL" });
+        ok &= pass;
+    }
+
+    let avail_margin_min = cells
+        .iter()
+        .map(|c| c.availability - c.no_ckpt_availability)
+        .fold(f64::INFINITY, f64::min);
+    if let Ok(p) = emit_bench_json(
+        "fault_storm",
+        &[
+            ("storm_cells", cells.len() as f64),
+            ("storm_sessions", sessions as f64),
+            ("storm_kills", cells.iter().map(|c| c.kills).sum::<u64>() as f64),
+            (
+                "storm_node_kills",
+                cells.iter().map(|c| c.node_kills).sum::<u64>() as f64,
+            ),
+            (
+                "storm_node_dumps",
+                cells.iter().map(|c| c.node_dumps).sum::<usize>() as f64,
+            ),
+            ("avail_margin_min", avail_margin_min),
+            ("store_chunks_struck", struck as f64),
+            ("store_fallbacks", corrupt_fallbacks as f64),
+            ("store_dumps", store_dumps as f64),
+            ("partition_rounds", partition_rounds as f64),
+            ("fabric_dumps", fabric_dumps as f64),
+            ("torn_cuts", torn_cuts as f64),
+        ],
+    ) {
+        println!("\nwrote {}", p.display());
+    }
+    if !ok {
+        std::process::exit(1);
+    }
+}

@@ -29,7 +29,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::campaign::faults::FaultInjector;
+use crate::campaign::faults::{FaultInjector, NodeFaults};
 use crate::campaign::report::{CampaignReport, SessionDisposition, SessionOutcome};
 use crate::campaign::sched::{
     AdmitOutcome, BarrierPlacer, BurstMeter, ReadyQueue, Scheduler, SchedulerKind, SessionRequest,
@@ -39,7 +39,7 @@ use crate::campaign::tune::{DalyTuner, IntervalPolicy};
 use crate::container::{Image, PodmanHpc, Registry, RunSpec, Shifter, EMBED_DMTCP_SNIPPET};
 use crate::cr::{CoordinatorHandle, CrApp, CrSession, GangApp, GangSession, Substrate};
 use crate::dmtcp::{CoordinatorDaemon, DaemonConfig};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::util::rng::SplitMix64;
 use crate::workload::{Cp2kApp, G4App, StencilApp};
 
@@ -58,6 +58,10 @@ struct SchedCtx {
     placer: Option<BarrierPlacer>,
     meter: BurstMeter,
     epoch: Instant,
+    /// Node-domain fault material, precomputed once per campaign: the
+    /// seeded session→node placement and each node's shared kill
+    /// schedule (`None` under the default session fault domain).
+    node_faults: Option<NodeFaults>,
 }
 
 impl SchedCtx {
@@ -66,6 +70,7 @@ impl SchedCtx {
             placer: (spec.scheduler == SchedulerKind::CkptAware).then(BarrierPlacer::new),
             meter: BurstMeter::new(),
             epoch,
+            node_faults: spec.faults.node_faults(spec.seed),
         }
     }
 
@@ -220,14 +225,26 @@ fn run_session_pool(
     spec.validate()?;
     let root = match &spec.workdir {
         Some(p) => p.clone(),
-        None => std::env::temp_dir().join(format!(
-            "{root_tag}_{}_{}",
-            std::process::id(),
-            std::time::SystemTime::now()
+        None => {
+            // A wall clock reading before the Unix epoch (NTP step, VM
+            // snapshot resume) must not abort the whole campaign over a
+            // directory-name nonce: fall back to a zero offset and
+            // leave a trace of the skew instead.
+            let nanos = std::time::SystemTime::now()
                 .duration_since(std::time::UNIX_EPOCH)
-                .expect("clock before epoch")
-                .as_nanos()
-        )),
+                .map(|d| d.as_nanos())
+                .unwrap_or_else(|e| {
+                    log::warn!(
+                        "system clock reads before the Unix epoch ({e}); \
+                         using a zero workdir-tag offset"
+                    );
+                    crate::trace::event(crate::trace::names::CLOCK_SKEW, |a| {
+                        a.str("context", format!("workdir tag for {root_tag}"));
+                    });
+                    0
+                });
+            std::env::temp_dir().join(format!("{root_tag}_{}_{nanos}", std::process::id()))
+        }
     };
     std::fs::create_dir_all(&root)?;
     let t0 = Instant::now();
@@ -251,7 +268,12 @@ fn run_session_pool(
         for _ in 0..workers {
             sc.spawn(|| loop {
                 let tick = {
-                    let mut d = dispatch.lock().expect("dispatch poisoned");
+                    // A panicking fleet-mate must not take the whole
+                    // campaign down with a poisoned lock: the guarded
+                    // state (arrival cursor, ready queue, outcome slots)
+                    // is consistent between statements, so recover the
+                    // inner value and keep dispatching.
+                    let mut d = dispatch.lock().unwrap_or_else(|p| p.into_inner());
                     // Reborrow through the guard so `d.sched` and
                     // `d.queue` below are disjoint field borrows.
                     let d = &mut *d;
@@ -289,8 +311,8 @@ fn run_session_pool(
                                     spec.target_steps,
                                 );
                                 o.disposition = SessionDisposition::Rejected;
-                                outcomes.lock().expect("outcomes poisoned")[i as usize] =
-                                    Some(o);
+                                outcomes.lock().unwrap_or_else(|p| p.into_inner())
+                                    [i as usize] = Some(o);
                             }
                             AdmitOutcome::Admitted => {
                                 crate::trace::event(crate::trace::names::SCHED_ADMIT, |a| {
@@ -321,11 +343,37 @@ fn run_session_pool(
                                 (dispatched_at - req.arrival_secs).max(0.0),
                             );
                         });
-                        let mut outcome = drive(req.index, &root, &ctx);
+                        // Contain a panicking drive to its own session:
+                        // `thread::scope` would re-raise the panic at
+                        // join and abort the whole campaign, so catch it
+                        // here and fold it into a typed per-session
+                        // failure instead. The drive owns no state that
+                        // outlives the unwind (its session is dropped by
+                        // it), so the assertion is sound.
+                        let mut outcome = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| drive(req.index, &root, &ctx)),
+                        )
+                        .unwrap_or_else(|p| {
+                            let msg = panic_message(p.as_ref());
+                            log::warn!(
+                                "campaign session {}: worker panicked: {msg}",
+                                req.index
+                            );
+                            let mut o = SessionOutcome::unstarted(
+                                req.index,
+                                spec.seed.wrapping_add(req.index as u64),
+                                spec.ranks,
+                                spec.target_steps,
+                            );
+                            o.disposition = SessionDisposition::Failed(
+                                Error::Campaign(format!("worker panicked: {msg}")).to_string(),
+                            );
+                            o
+                        });
                         outcome.dispatched_at_secs = dispatched_at;
                         outcome.queue_wait_secs = (dispatched_at - req.arrival_secs).max(0.0);
-                        outcomes.lock().expect("outcomes poisoned")[req.index as usize] =
-                            Some(outcome);
+                        outcomes.lock().unwrap_or_else(|p| p.into_inner())
+                            [req.index as usize] = Some(outcome);
                     }
                 }
             });
@@ -333,9 +381,27 @@ fn run_session_pool(
     });
     let sessions = outcomes
         .into_inner()
-        .expect("outcomes poisoned")
+        .unwrap_or_else(|p| p.into_inner())
         .into_iter()
-        .map(|o| o.expect("worker filled every slot"))
+        .enumerate()
+        .map(|(i, o)| {
+            // Every slot is normally filled; an empty one means its
+            // worker died in a way even catch_unwind could not report
+            // (e.g. a panic while the slot lock was held). Fail that
+            // session, not the campaign.
+            o.unwrap_or_else(|| {
+                let mut o = SessionOutcome::unstarted(
+                    i as u32,
+                    spec.seed.wrapping_add(i as u64),
+                    spec.ranks,
+                    spec.target_steps,
+                );
+                o.disposition = SessionDisposition::Failed(
+                    Error::Campaign("worker never filled the outcome slot".into()).to_string(),
+                );
+                o
+            })
+        })
         .collect();
     Ok(CampaignReport {
         name: spec.name.clone(),
@@ -421,6 +487,101 @@ impl Cadence {
     }
 }
 
+/// Where a drive loop's kill instants come from. The session domain
+/// draws an independent exponential schedule per session (the
+/// pre-existing behavior); the node domain replays the session's *node*
+/// schedule — absolute offsets from the campaign epoch that every
+/// co-located session shares, so one node event fells them all in the
+/// same tick.
+enum KillSource<'a> {
+    /// Independent per-session schedule.
+    Session(&'a mut FaultInjector),
+    /// Shared per-node schedule (campaign-epoch offsets, cumulative).
+    Node {
+        schedule: &'a [Duration],
+        cursor: usize,
+        epoch: Instant,
+        node: u32,
+    },
+}
+
+impl<'a> KillSource<'a> {
+    fn new(injector: &'a mut FaultInjector, ctx: &'a SchedCtx, index: u32) -> Self {
+        match &ctx.node_faults {
+            Some(nf) => {
+                let node = nf.map().node_of_session(index);
+                KillSource::Node {
+                    schedule: nf.schedule_for_session(index),
+                    cursor: 0,
+                    epoch: ctx.epoch,
+                    node,
+                }
+            }
+            None => KillSource::Session(injector),
+        }
+    }
+
+    /// The node this source replays, `None` in the session domain.
+    fn node(&self) -> Option<u32> {
+        match self {
+            KillSource::Session(_) => None,
+            KillSource::Node { node, .. } => Some(*node),
+        }
+    }
+
+    /// The next kill instant. For the node domain this first skips node
+    /// events that fired before this session was dispatched (a session
+    /// arriving late does not replay its node's history), and after an
+    /// executed kill it collapses every event that elapsed while the
+    /// session was down into the one kill that already happened — a
+    /// dead session cannot die twice.
+    fn arm(&mut self) -> Option<Instant> {
+        match self {
+            KillSource::Session(inj) => inj.next_kill_in().map(|d| Instant::now() + d),
+            KillSource::Node {
+                schedule,
+                cursor,
+                epoch,
+                ..
+            } => {
+                let now = Instant::now();
+                while *cursor < schedule.len() && *epoch + schedule[*cursor] <= now {
+                    *cursor += 1;
+                }
+                schedule.get(*cursor).map(|d| *epoch + *d)
+            }
+        }
+    }
+}
+
+/// Best-effort text of a panic payload (`&str` and `String` cover
+/// essentially every real panic message).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// Flight dumps attributable to *this* session. In a shared workdir the
+/// scan sees every fleet-mate's dumps, so the count is filtered by the
+/// session's nonce-scoped job prefix (`…s<nonce>i` / `…g<nonce>i` —
+/// the literal `i` terminator keeps one nonce from prefix-matching a
+/// longer one). An empty prefix (the session never built) contributes
+/// zero rather than claiming the whole directory.
+fn flight_dumps_for(wd: &Path, job_prefix: &str) -> u32 {
+    if job_prefix.is_empty() {
+        return 0;
+    }
+    crate::trace::flight::scan(wd)
+        .iter()
+        .filter(|d| d.job.starts_with(job_prefix))
+        .count() as u32
+}
+
 /// Fold the active coordinator's lifetime store totals into the outcome
 /// (called once per incarnation, just before its teardown — coordinator
 /// totals do not survive the incarnation).
@@ -474,8 +635,11 @@ fn drive_session<A: CrApp>(
     }
     // Flight dumps written under this session's workdir (failed barriers,
     // boot errors) — surfaced in the report so `nersc-cr trace` has a
-    // reason to be pointed here.
-    out.flight_dumps = crate::trace::flight::scan(&wd).len() as u32;
+    // reason to be pointed here. The scan is filtered by this session's
+    // job prefix: under `shared_workdir` every fleet-mate dumps into the
+    // same directory, and an unfiltered count would attribute the whole
+    // fleet's dumps to every session.
+    out.flight_dumps = flight_dumps_for(&wd, &out.job);
     out.final_interval_ms = cadence.interval().as_millis() as u64;
     out.measured_ckpt_cost_ms = cadence.measured_cost_ms();
     out.wall_secs = t0.elapsed().as_secs_f64();
@@ -507,6 +671,7 @@ fn drive_session_inner<A: CrApp>(
         builder = builder.incremental_images(full_every).chunker(spec.chunker);
     }
     let mut session = builder.build()?;
+    out.job = session.job_prefix();
     session.submit()?;
 
     // Without a preemption signal the straggler timeout is an absolute
@@ -518,7 +683,8 @@ fn drive_session_inner<A: CrApp>(
     let mut deadline = Instant::now() + spec.straggler_timeout;
     let mut notice_at = notice_offset.map(|off| deadline - off);
     let mut next_ckpt = ctx.next_ckpt_at(cadence);
-    let mut next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
+    let mut kills = KillSource::new(injector, ctx, out.index);
+    let mut next_kill = kills.arm();
     let mut steps_at_ckpt = 0u64;
 
     let completed = loop {
@@ -576,6 +742,9 @@ fn drive_session_inner<A: CrApp>(
                 let t_kill = Instant::now();
                 session.kill()?;
                 out.preempts += 1;
+                // The checkpoint-free counterfactual restarts from step
+                // 0: this cycle would have cost its full progress.
+                out.steps_lost_nockpt += at_kill;
                 std::thread::sleep(spec.requeue_delay);
                 let resumed = session.resubmit_from_checkpoint()?;
                 let lat = t_kill.elapsed().as_secs_f64();
@@ -612,13 +781,31 @@ fn drive_session_inner<A: CrApp>(
                 if session.session_images()?.is_empty() {
                     // Nothing to restart from yet: defer the kill past
                     // the next checkpoint (see campaign::faults docs).
+                    // Node schedules keep their cursor, so the deferred
+                    // event is still the same node event when it lands.
                     next_kill = Some(now + cadence.interval());
                 } else {
                     let at_kill = session.monitor()?.steps_done;
                     harvest_store(out, &session);
                     let t_kill = Instant::now();
+                    if let Some(node) = kills.node() {
+                        out.node_kills += 1;
+                        crate::trace::event(crate::trace::names::NODE_KILL, |a| {
+                            a.u64("node", node as u64);
+                            a.u64("session", out.index as u64);
+                        });
+                        crate::trace::flight::dump_for_job_in_domain(
+                            &session.jobid(),
+                            &format!("node {node} fault felled the session"),
+                            &wd.join("ckpt"),
+                            "node",
+                        );
+                    }
                     session.kill()?;
                     out.kills += 1;
+                    // The checkpoint-free counterfactual restarts from
+                    // step 0: each kill charges its full progress.
+                    out.steps_lost_nockpt += at_kill;
                     std::thread::sleep(spec.requeue_delay);
                     let resumed = session.resubmit_from_checkpoint()?;
                     let lat = t_kill.elapsed().as_secs_f64();
@@ -627,12 +814,14 @@ fn drive_session_inner<A: CrApp>(
                         .push((ctx.epoch.elapsed().as_secs_f64(), lat));
                     out.steps_lost += at_kill.saturating_sub(resumed);
                     steps_at_ckpt = resumed;
-                    next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
+                    next_kill = kills.arm();
                     next_ckpt = ctx.next_ckpt_at(cadence);
                 }
             }
         }
     };
+
+    out.corrupt_fallbacks = session.image_fallbacks();
 
     harvest_store(out, &session);
     // Assigned once (not accumulated per harvest): the session's phase
@@ -719,7 +908,7 @@ fn drive_gang(
         out.disposition = SessionDisposition::Failed(e.to_string());
         log::warn!("campaign gang {index}: {e}");
     }
-    out.flight_dumps = crate::trace::flight::scan(&wd).len() as u32;
+    out.flight_dumps = flight_dumps_for(&wd, &out.job);
     out.final_interval_ms = cadence.interval().as_millis() as u64;
     out.measured_ckpt_cost_ms = cadence.measured_cost_ms();
     out.wall_secs = t0.elapsed().as_secs_f64();
@@ -764,6 +953,7 @@ fn drive_gang_inner(
         builder = builder.incremental_images(full_every).chunker(spec.chunker);
     }
     let mut session = builder.build()?;
+    out.job = session.job_prefix();
     session.submit()?;
 
     // Which rank each injected fault lands on: seeded like the kill
@@ -776,7 +966,8 @@ fn drive_gang_inner(
     let mut deadline = Instant::now() + spec.straggler_timeout;
     let mut notice_at = notice_offset.map(|off| deadline - off);
     let mut next_ckpt = ctx.next_ckpt_at(cadence);
-    let mut next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
+    let mut kills = KillSource::new(injector, ctx, out.index);
+    let mut next_kill = kills.arm();
     let mut steps_at_ckpt = 0u64;
 
     let completed = loop {
@@ -831,6 +1022,9 @@ fn drive_gang_inner(
                 let t_kill = Instant::now();
                 session.kill()?;
                 out.preempts += 1;
+                // The checkpoint-free counterfactual restarts from step
+                // 0: this cycle would have cost its full progress.
+                out.steps_lost_nockpt += at_kill;
                 std::thread::sleep(spec.requeue_delay);
                 let resumed = session.resubmit_from_checkpoint()?;
                 let lat = t_kill.elapsed().as_secs_f64();
@@ -871,12 +1065,49 @@ fn drive_gang_inner(
                     let at_kill = session.monitor()?.steps_done;
                     // Losing one rank aborts the generation: the whole
                     // gang is torn down and restarted from the last cut.
-                    let victim = rank_rng.gen_range(spec.ranks as u64) as u32;
-                    session.kill_rank(victim)?;
+                    // A node event fells every rank co-located on the
+                    // felled node in the same tick (possibly none — the
+                    // gang still loses its node-resident coordinator);
+                    // the session domain picks one seeded victim.
+                    match kills.node() {
+                        Some(node) => {
+                            let map = ctx
+                                .node_faults
+                                .as_ref()
+                                .expect("node kill source implies node faults")
+                                .map();
+                            let victims: Vec<u32> = (0..spec.ranks)
+                                .filter(|&r| map.node_of_rank(out.index, r) == node)
+                                .collect();
+                            for &v in &victims {
+                                session.kill_rank(v)?;
+                            }
+                            out.node_kills += 1;
+                            crate::trace::event(crate::trace::names::NODE_KILL, |a| {
+                                a.u64("node", node as u64);
+                                a.u64("session", out.index as u64);
+                            });
+                            crate::trace::flight::dump_for_job_in_domain(
+                                &session.jobid(),
+                                &format!(
+                                    "node {node} fault felled ranks {victims:?} of the gang"
+                                ),
+                                &wd.join("ckpt"),
+                                "node",
+                            );
+                        }
+                        None => {
+                            let victim = rank_rng.gen_range(spec.ranks as u64) as u32;
+                            session.kill_rank(victim)?;
+                        }
+                    }
                     harvest_gang_store(out, &session);
                     let t_kill = Instant::now();
                     session.kill()?;
                     out.kills += 1;
+                    // The checkpoint-free counterfactual restarts from
+                    // step 0: each kill charges its full progress.
+                    out.steps_lost_nockpt += at_kill;
                     std::thread::sleep(spec.requeue_delay);
                     let resumed = session.resubmit_from_checkpoint()?;
                     let lat = t_kill.elapsed().as_secs_f64();
@@ -885,12 +1116,14 @@ fn drive_gang_inner(
                         .push((ctx.epoch.elapsed().as_secs_f64(), lat));
                     out.steps_lost += at_kill.saturating_sub(resumed);
                     steps_at_ckpt = resumed;
-                    next_kill = injector.next_kill_in().map(|d| Instant::now() + d);
+                    next_kill = kills.arm();
                     next_ckpt = ctx.next_ckpt_at(cadence);
                 }
             }
         }
     };
+
+    out.corrupt_fallbacks = session.manifest_fallbacks();
 
     harvest_gang_store(out, &session);
     // Assigned once, like the single-process driver: the counters span

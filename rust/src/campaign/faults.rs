@@ -17,19 +17,55 @@
 //! real-world analog is a job failing before `dmtcp_command --checkpoint`
 //! ever ran, which simply reruns from scratch — a case the session API
 //! models as a fresh submission, not a restart).
+//!
+//! Real outages are *correlated*, though, not independent (DESIGN §9):
+//! a node dies and takes every rank and session placed on it, and a
+//! filesystem hiccup damages many chunks of a shared store at once. The
+//! correlated half of the model lives here too:
+//!
+//! - [`FaultDomain::Node`] + [`NodeMap`] + [`NodeFaults`]: sessions and
+//!   gang ranks are deterministically placed on `nodes` simulated nodes,
+//!   and each *node* draws one absolute kill timeline — every session and
+//!   rank co-located on a node observes the same event at the same
+//!   offset, so they fall in the same tick.
+//! - [`StoreCorruptor`]: a seeded fleet-scale corruptor that flips bytes,
+//!   truncates, or deletes chunk files of a shared content-addressed
+//!   store between rounds; restores over damaged chunks must surface
+//!   typed [`crate::error::Error::Corrupt`] and fall back (never panic).
 
+use std::path::{Path, PathBuf};
 use std::time::Duration;
 
+use crate::error::{Error, Result};
 use crate::util::rng::SplitMix64;
 
-/// The failure process of one campaign, applied per session.
+/// Which correlation domain injected kills strike.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultDomain {
+    /// Independent per-session kills (the classic renewal model).
+    Session,
+    /// Node-scoped kills: the campaign's sessions and gang ranks are
+    /// placed on `nodes` simulated nodes, and one kill event fells every
+    /// co-located session and rank in the same tick.
+    Node {
+        /// Number of simulated nodes in the fleet (≥ 1).
+        nodes: u32,
+    },
+}
+
+/// The failure process of one campaign, applied per session (or, in the
+/// node domain, per simulated node).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultPlan {
     /// Mean time between injected kills per session (`None` = no faults).
     pub mtbf: Option<Duration>,
     /// Stop injecting after this many kills per session (bounds the
     /// incarnation count so a short straggler timeout stays meaningful).
+    /// In the node domain: at most this many kill events per node.
     pub max_kills_per_session: u32,
+    /// Which correlation domain kill events strike (default: independent
+    /// per-session kills).
+    pub domain: FaultDomain,
 }
 
 impl FaultPlan {
@@ -38,6 +74,7 @@ impl FaultPlan {
         Self {
             mtbf: None,
             max_kills_per_session: 0,
+            domain: FaultDomain::Session,
         }
     }
 
@@ -46,6 +83,18 @@ impl FaultPlan {
         Self {
             mtbf: Some(mtbf),
             max_kills_per_session: max_kills,
+            domain: FaultDomain::Session,
+        }
+    }
+
+    /// Node-scoped exponential kills: `nodes` simulated nodes each draw
+    /// their own kill timeline around `mtbf` (at most `max_kills` events
+    /// per node), and every co-located session/rank dies together.
+    pub fn node_scoped(mtbf: Duration, max_kills: u32, nodes: u32) -> Self {
+        Self {
+            mtbf: Some(mtbf),
+            max_kills_per_session: max_kills,
+            domain: FaultDomain::Node { nodes },
         }
     }
 
@@ -64,6 +113,21 @@ impl FaultPlan {
             mtbf: self.mtbf,
             kills_left: self.max_kills_per_session,
         }
+    }
+
+    /// Precompute the fleet's node kill timelines, or `None` when the
+    /// plan is not node-scoped (or fault-free).
+    pub fn node_faults(&self, campaign_seed: u64) -> Option<NodeFaults> {
+        let FaultDomain::Node { nodes } = self.domain else {
+            return None;
+        };
+        let mtbf = self.mtbf?;
+        Some(NodeFaults::new(
+            campaign_seed,
+            nodes.max(1),
+            mtbf,
+            self.max_kills_per_session,
+        ))
     }
 }
 
@@ -93,6 +157,268 @@ impl FaultInjector {
     pub fn kills_left(&self) -> u32 {
         self.kills_left
     }
+}
+
+/// Deterministic placement of sessions and gang ranks onto simulated
+/// nodes. Equal `(campaign_seed, nodes)` pairs place identically, so a
+/// spec replays the same co-location pattern.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeMap {
+    seed: u64,
+    nodes: u32,
+}
+
+impl NodeMap {
+    /// Build the placement for a fleet of `nodes` simulated nodes.
+    pub fn new(campaign_seed: u64, nodes: u32) -> Self {
+        Self {
+            seed: campaign_seed,
+            nodes: nodes.max(1),
+        }
+    }
+
+    /// Number of simulated nodes.
+    pub fn nodes(&self) -> u32 {
+        self.nodes
+    }
+
+    fn place(&self, tag: u64, a: u64, b: u64) -> u32 {
+        let mixed = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(tag << 48)
+            .wrapping_add(a.wrapping_mul(0x2545_F491_4F6C_DD1D))
+            .wrapping_add(b);
+        (SplitMix64::new(mixed).next_u64() % self.nodes as u64) as u32
+    }
+
+    /// The node a single-process session runs on.
+    pub fn node_of_session(&self, session_index: u32) -> u32 {
+        self.place(0x5E, session_index as u64, 0)
+    }
+
+    /// The node one rank of a gang session runs on (gang ranks spread
+    /// over nodes, so a node event fells a *subset* of the gang).
+    pub fn node_of_rank(&self, session_index: u32, rank: u32) -> u32 {
+        self.place(0x4A, session_index as u64, rank as u64 + 1)
+    }
+
+    /// Every co-located session of a fleet of `n_sessions`, grouped as
+    /// `(node, session indices)` — diagnostic/report helper.
+    pub fn colocated_sessions(&self, n_sessions: u32) -> Vec<(u32, Vec<u32>)> {
+        let mut groups: Vec<Vec<u32>> = vec![Vec::new(); self.nodes as usize];
+        for s in 0..n_sessions {
+            groups[self.node_of_session(s) as usize].push(s);
+        }
+        groups
+            .into_iter()
+            .enumerate()
+            .filter(|(_, g)| !g.is_empty())
+            .map(|(n, g)| (n as u32, g))
+            .collect()
+    }
+}
+
+/// The fleet's precomputed node kill timelines: one absolute schedule
+/// (offsets from the campaign epoch, cumulative) per simulated node.
+/// Everything placed on a node observes the *same* events, which is what
+/// makes node kills correlated — co-located sessions fall in the same
+/// tick, not merely at the same rate.
+#[derive(Debug, Clone)]
+pub struct NodeFaults {
+    map: NodeMap,
+    schedules: Vec<Vec<Duration>>,
+}
+
+impl NodeFaults {
+    fn new(campaign_seed: u64, nodes: u32, mtbf: Duration, max_kills: u32) -> Self {
+        let map = NodeMap::new(campaign_seed, nodes);
+        let schedules = (0..nodes)
+            .map(|node| {
+                let seed = campaign_seed
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add(0x4E0Du64)
+                    .wrapping_add((node as u64) << 8);
+                let mut rng = SplitMix64::new(seed);
+                let mut at = 0.0f64;
+                (0..max_kills)
+                    .map(|_| {
+                        at += rng.gen_exp(mtbf.as_secs_f64());
+                        Duration::from_secs_f64(at)
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { map, schedules }
+    }
+
+    /// The placement behind these timelines.
+    pub fn map(&self) -> &NodeMap {
+        &self.map
+    }
+
+    /// The absolute kill schedule (offsets from the campaign epoch,
+    /// strictly increasing) of one node.
+    pub fn schedule(&self, node: u32) -> &[Duration] {
+        &self.schedules[node as usize % self.schedules.len()]
+    }
+
+    /// The kill schedule observed by a single-process session — the
+    /// schedule of the node it is placed on.
+    pub fn schedule_for_session(&self, session_index: u32) -> &[Duration] {
+        self.schedule(self.map.node_of_session(session_index))
+    }
+}
+
+/// How a [`StoreCorruptor`] strike damaged one chunk file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorruptionKind {
+    /// One payload byte XOR-flipped in place (magic intact: survives the
+    /// store's write-time self-heal probe and is only caught by the
+    /// restore-time CRC).
+    FlipByte,
+    /// File truncated below its payload length.
+    Truncate,
+    /// File deleted outright.
+    Delete,
+}
+
+impl CorruptionKind {
+    /// Stable lowercase label (for trace attrs and reports).
+    pub fn label(&self) -> &'static str {
+        match self {
+            CorruptionKind::FlipByte => "flip_byte",
+            CorruptionKind::Truncate => "truncate",
+            CorruptionKind::Delete => "delete",
+        }
+    }
+}
+
+/// One chunk file damaged by a corruptor strike.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CorruptionEvent {
+    /// The damaged chunk file.
+    pub path: PathBuf,
+    /// What was done to it.
+    pub kind: CorruptionKind,
+}
+
+/// Chunk files begin with an 8-byte magic and a flag byte; flipping at or
+/// past this offset hits payload bytes, which write-time self-healing
+/// (magic probe only) cannot see.
+const CHUNK_HEADER: u64 = 9;
+
+/// A seeded fleet-scale chunk-store corruptor: one `strike` damages many
+/// chunk files of a shared store in a single correlated event (the
+/// filesystem-hiccup analog of a node kill). Deterministic per seed.
+#[derive(Debug, Clone)]
+pub struct StoreCorruptor {
+    rng: SplitMix64,
+}
+
+impl StoreCorruptor {
+    /// Build a corruptor replaying the same damage for the same seed.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: SplitMix64::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0xC0)),
+        }
+    }
+
+    /// Damage up to `victims` distinct chunk files under `store_root` in
+    /// one correlated event. Returns what was hit (possibly fewer than
+    /// requested when the store is small). Errors only on I/O failures
+    /// damaging a file; an absent or empty store yields an empty event
+    /// list.
+    pub fn strike(&mut self, store_root: &Path, victims: usize) -> Result<Vec<CorruptionEvent>> {
+        let chunks = chunk_files(store_root)?;
+        if chunks.is_empty() || victims == 0 {
+            return Ok(Vec::new());
+        }
+        // Seeded distinct victim picks, order-stable over the sorted list.
+        let mut picked: Vec<usize> = Vec::new();
+        let wanted = victims.min(chunks.len());
+        while picked.len() < wanted {
+            let i = self.rng.gen_range(chunks.len() as u64) as usize;
+            if !picked.contains(&i) {
+                picked.push(i);
+            }
+        }
+        let targets: Vec<PathBuf> = picked.into_iter().map(|i| chunks[i].clone()).collect();
+        self.strike_paths(&targets)
+    }
+
+    /// Damage exactly the given chunk files in one correlated event (the
+    /// targeted form the torture suites use to hit a known generation's
+    /// chunks). Missing files are skipped.
+    pub fn strike_paths(&mut self, paths: &[PathBuf]) -> Result<Vec<CorruptionEvent>> {
+        let mut events = Vec::new();
+        for path in paths {
+            let len = match std::fs::metadata(path) {
+                Ok(m) => m.len(),
+                Err(_) => continue, // raced with GC — nothing to damage
+            };
+            let kind = match self.rng.gen_range(3) {
+                0 if len > CHUNK_HEADER => CorruptionKind::FlipByte,
+                1 if len > CHUNK_HEADER => CorruptionKind::Truncate,
+                _ => CorruptionKind::Delete,
+            };
+            match kind {
+                CorruptionKind::FlipByte => {
+                    let mut bytes = std::fs::read(path)?;
+                    let off =
+                        (CHUNK_HEADER + self.rng.gen_range(len - CHUNK_HEADER)) as usize;
+                    bytes[off] ^= 0xA5;
+                    std::fs::write(path, bytes)?;
+                }
+                CorruptionKind::Truncate => {
+                    let keep = self.rng.gen_range(CHUNK_HEADER);
+                    let f = std::fs::OpenOptions::new().write(true).open(path)?;
+                    f.set_len(keep)?;
+                }
+                CorruptionKind::Delete => {
+                    std::fs::remove_file(path)?;
+                }
+            }
+            crate::trace::event(crate::trace::names::FAULT_CORRUPT, |a| {
+                a.str("chunk", path.display().to_string());
+                a.str("kind", kind.label());
+            });
+            events.push(CorruptionEvent {
+                path: path.clone(),
+                kind,
+            });
+        }
+        if events.is_empty() && !paths.is_empty() {
+            return Err(Error::Corrupt(
+                "corruptor strike matched no existing chunk files".into(),
+            ));
+        }
+        Ok(events)
+    }
+}
+
+/// All `*.chunk` files under a store root (2-hex fan-out), sorted by path
+/// so victim picks are stable across platforms. Temp files are skipped.
+fn chunk_files(store_root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let buckets = match std::fs::read_dir(store_root) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(out), // no store yet — nothing to corrupt
+    };
+    for bucket in buckets.flatten() {
+        let p = bucket.path();
+        if !p.is_dir() {
+            continue;
+        }
+        for entry in std::fs::read_dir(&p)?.flatten() {
+            let f = entry.path();
+            if f.extension().and_then(|e| e.to_str()) == Some("chunk") {
+                out.push(f);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -134,5 +460,94 @@ mod tests {
             .sum::<f64>()
             / n as f64;
         assert!((mean - 10.0).abs() < 0.6, "mean={mean}");
+    }
+
+    #[test]
+    fn node_map_is_deterministic_and_in_range() {
+        let a = NodeMap::new(42, 4);
+        let b = NodeMap::new(42, 4);
+        for s in 0..64 {
+            assert_eq!(a.node_of_session(s), b.node_of_session(s));
+            assert!(a.node_of_session(s) < 4);
+            for r in 0..8 {
+                assert_eq!(a.node_of_rank(s, r), b.node_of_rank(s, r));
+                assert!(a.node_of_rank(s, r) < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn node_map_spreads_sessions() {
+        let m = NodeMap::new(7, 4);
+        let groups = m.colocated_sessions(64);
+        assert!(groups.len() > 1, "64 sessions all landed on one node");
+        let total: usize = groups.iter().map(|(_, g)| g.len()).sum();
+        assert_eq!(total, 64);
+    }
+
+    #[test]
+    fn node_schedules_are_shared_by_colocated_sessions() {
+        let plan = FaultPlan::node_scoped(Duration::from_millis(50), 3, 2);
+        let nf = plan.node_faults(42).expect("node domain");
+        // Find two sessions placed on the same node; their observed
+        // schedules must be identical (correlation, not just equal rate).
+        let groups = nf.map().colocated_sessions(16);
+        let (_, together) = groups
+            .iter()
+            .find(|(_, g)| g.len() >= 2)
+            .expect("16 sessions on 2 nodes must co-locate somewhere");
+        let s0 = nf.schedule_for_session(together[0]);
+        let s1 = nf.schedule_for_session(together[1]);
+        assert_eq!(s0, s1);
+        assert_eq!(s0.len(), 3);
+        assert!(s0.windows(2).all(|w| w[0] < w[1]), "cumulative offsets");
+    }
+
+    #[test]
+    fn node_faults_absent_outside_node_domain() {
+        assert!(FaultPlan::none().node_faults(1).is_none());
+        assert!(FaultPlan::exponential(Duration::from_secs(1), 2)
+            .node_faults(1)
+            .is_none());
+    }
+
+    #[test]
+    fn corruptor_is_deterministic_and_typed() {
+        let dir = std::env::temp_dir().join(format!("ncr_corr_{}", std::process::id()));
+        let bucket = dir.join("ab");
+        std::fs::create_dir_all(&bucket).unwrap();
+        for i in 0..6 {
+            let mut bytes = b"NCRCHNK1\0".to_vec();
+            bytes.extend_from_slice(&[i as u8; 32]);
+            std::fs::write(bucket.join(format!("abc{i}.chunk")), bytes).unwrap();
+        }
+        let ev_a = StoreCorruptor::new(9).strike(&dir, 3).unwrap();
+        assert_eq!(ev_a.len(), 3);
+        // Replay against identical content: same victims, same kinds.
+        for e in &ev_a {
+            let mut bytes = b"NCRCHNK1\0".to_vec();
+            let i: u8 = e
+                .path
+                .file_name()
+                .unwrap()
+                .to_str()
+                .unwrap()
+                .as_bytes()[3]
+                - b'0';
+            bytes.extend_from_slice(&[i; 32]);
+            std::fs::write(&e.path, bytes).unwrap();
+        }
+        let ev_b = StoreCorruptor::new(9).strike(&dir, 3).unwrap();
+        assert_eq!(ev_a, ev_b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruptor_on_empty_store_is_empty_not_error() {
+        let dir = std::env::temp_dir().join(format!("ncr_corr_empty_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ev = StoreCorruptor::new(1).strike(&dir, 4).unwrap();
+        assert!(ev.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

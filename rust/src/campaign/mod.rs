@@ -41,7 +41,10 @@ pub mod spec;
 pub mod tune;
 
 pub use executor::{run_campaign, run_campaign_cancellable, run_fleet, run_gang_fleet, CancelToken};
-pub use faults::{FaultInjector, FaultPlan};
+pub use faults::{
+    CorruptionEvent, CorruptionKind, FaultDomain, FaultInjector, FaultPlan, NodeFaults, NodeMap,
+    StoreCorruptor,
+};
 pub use report::{CampaignReport, LdmsRollup, SessionDisposition, SessionOutcome};
 pub use sched::{
     run_lab, ArrivalSpec, BarrierPlacer, BurstMeter, LabOutcome, LabSpec, RandomVariable,

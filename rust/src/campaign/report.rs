@@ -57,6 +57,11 @@ pub struct SessionOutcome {
     pub index: u32,
     /// The session's workload seed (`campaign seed + index`).
     pub seed: u64,
+    /// The session's incarnation-independent job prefix (`…s<nonce>i` /
+    /// `…g<nonce>i`), used to attribute flight dumps in a shared workdir
+    /// to the session that wrote them. Empty for sessions that never
+    /// built (rejected arrivals, panicked workers).
+    pub job: String,
     /// How the session ended.
     pub disposition: SessionDisposition,
     /// Ranks the session drove (1 = a plain session, >1 = a gang).
@@ -68,6 +73,10 @@ pub struct SessionOutcome {
     pub incarnations: u32,
     /// Kills the fault injector landed.
     pub kills: u32,
+    /// Kills attributable to a node-domain event (co-located sessions
+    /// share these instants; always ≤ `kills`, and 0 under the default
+    /// session-scoped fault domain).
+    pub node_kills: u32,
     /// Checkpoints taken across all incarnations.
     pub checkpoints: u64,
     /// Steps done when the session ended.
@@ -76,6 +85,11 @@ pub struct SessionOutcome {
     pub target_steps: u64,
     /// Steps of progress lost to kills (work redone after restarts).
     pub steps_lost: u64,
+    /// Steps a checkpoint-free run would have lost to the same kills:
+    /// every kill restarts from step 0, so each charges the full
+    /// progress at the kill instant. The counterfactual behind
+    /// [`CampaignReport::no_ckpt_availability`].
+    pub steps_lost_nockpt: u64,
     /// Wall clock from submit to teardown (seconds).
     pub wall_secs: f64,
     /// Bytes actually stored across all checkpoint rounds.
@@ -119,8 +133,13 @@ pub struct SessionOutcome {
     /// built from these.
     pub restart_events: Vec<(f64, f64)>,
     /// Flight-recorder dumps found in the session's workdir at harvest
-    /// (0 unless tracing was on and something failed).
+    /// (0 unless tracing was on and something failed). In a shared
+    /// workdir the scan is filtered by `job`, so fleet-mates' dumps are
+    /// never double-counted here.
     pub flight_dumps: u32,
+    /// Store-domain recoveries: restarts that skipped a corrupt newest
+    /// image/cut and fell back to an older restorable one.
+    pub corrupt_fallbacks: u32,
     /// The session's LDMS series (all incarnations, folded at teardown).
     pub series: SampledSeries,
 }
@@ -138,15 +157,18 @@ impl SessionOutcome {
         SessionOutcome {
             index,
             seed,
+            job: String::new(),
             disposition: SessionDisposition::Failed("did not start".into()),
             ranks,
             verified: false,
             incarnations: 0,
             kills: 0,
+            node_kills: 0,
             checkpoints: 0,
             steps_done: 0,
             target_steps,
             steps_lost: 0,
+            steps_lost_nockpt: 0,
             wall_secs: 0.0,
             stored_bytes: 0,
             logical_bytes: 0,
@@ -162,6 +184,7 @@ impl SessionOutcome {
             dispatched_at_secs: 0.0,
             restart_events: Vec::new(),
             flight_dumps: 0,
+            corrupt_fallbacks: 0,
             series: Default::default(),
         }
     }
@@ -212,6 +235,18 @@ impl CampaignReport {
     /// Kills injected across the fleet.
     pub fn kills(&self) -> u64 {
         self.sessions.iter().map(|s| s.kills as u64).sum()
+    }
+
+    /// Kills attributable to node-domain events across the fleet (0
+    /// under the default session-scoped fault domain).
+    pub fn node_kills(&self) -> u64 {
+        self.sessions.iter().map(|s| s.node_kills as u64).sum()
+    }
+
+    /// Store-domain recoveries across the fleet: restarts that skipped a
+    /// corrupt newest image/cut and fell back to an older one.
+    pub fn corrupt_fallbacks(&self) -> u64 {
+        self.sessions.iter().map(|s| s.corrupt_fallbacks as u64).sum()
     }
 
     /// Arrivals admission control turned away.
@@ -270,6 +305,26 @@ impl CampaignReport {
     pub fn availability(&self) -> f64 {
         let done = self.steps_done() as f64;
         let lost = self.steps_lost() as f64;
+        if done + lost == 0.0 {
+            return 1.0;
+        }
+        done / (done + lost)
+    }
+
+    /// The checkpoint-free counterfactual of
+    /// [`CampaignReport::availability`]: the same fleet and the same
+    /// kill instants, but every kill restarts from step 0, charging the
+    /// full progress at the kill (`steps_lost_nockpt`). With any kill
+    /// landed this is strictly below `availability()` as long as at
+    /// least one restart resumed from a checkpoint — the paper's core
+    /// claim, asserted cell-by-cell in the `fault_storm` bench.
+    pub fn no_ckpt_availability(&self) -> f64 {
+        let done = self.steps_done() as f64;
+        let lost: f64 = self
+            .sessions
+            .iter()
+            .map(|s| s.steps_lost_nockpt as f64)
+            .sum();
         if done + lost == 0.0 {
             return 1.0;
         }
@@ -541,8 +596,10 @@ impl CampaignReport {
         };
         format!(
             "{{\n  \"campaign\": \"{}\",\n  \"sessions\": {},\n  \"completed\": {},\n  \
-             \"verified\": {},\n  \"kills\": {},\n  \"steps_done\": {},\n  \
-             \"steps_lost\": {},\n  \"availability\": {:.6},\n  \"stored_bytes\": {},\n  \
+             \"verified\": {},\n  \"kills\": {},\n  \"node_kills\": {},\n  \
+             \"steps_done\": {},\n  \
+             \"steps_lost\": {},\n  \"availability\": {:.6},\n  \
+             \"no_ckpt_availability\": {:.6},\n  \"stored_bytes\": {},\n  \
              \"logical_bytes\": {},\n  \"chunks_written\": {},\n  \"chunks_deduped\": {},\n  \
              \"ldms_peak_memory_bytes\": {},\n  \"ldms_ckpt_stored_bytes\": {},\n  \
              \"rejected_admissions\": {},\n  \"queue_wait_p50_secs\": {:.6},\n  \
@@ -551,7 +608,8 @@ impl CampaignReport {
              \"restore_decompress_secs\": {:.6},\n  \"restore_verify_secs\": {:.6},\n  \
              \"preempts\": {},\n  \
              \"notice_ckpts\": {},\n  \"burst_collisions\": {},\n  \
-             \"flight_dumps\": {},\n  \"slo_window_secs\": {:.6},\n  \
+             \"flight_dumps\": {},\n  \"corrupt_fallbacks\": {},\n  \
+             \"slo_window_secs\": {:.6},\n  \
              \"availability_windows\": {},\n  \"restart_latency_windows\": {},\n  \
              \"wall_secs\": {:.3}\n}}\n",
             esc(&self.name),
@@ -559,9 +617,11 @@ impl CampaignReport {
             self.completed(),
             self.verified(),
             self.kills(),
+            self.node_kills(),
             self.steps_done(),
             self.steps_lost(),
             self.availability(),
+            self.no_ckpt_availability(),
             stored,
             logical,
             written,
@@ -580,6 +640,7 @@ impl CampaignReport {
             self.notice_ckpts(),
             self.burst_collisions,
             self.flight_dumps(),
+            self.corrupt_fallbacks(),
             window,
             fmt_series(&self.availability_windows(window)),
             fmt_series(&self.restart_latency_windows(window)),
@@ -600,11 +661,14 @@ mod tests {
             SessionDisposition::Straggler
         };
         o.verified = completed;
+        o.job = format!("10000{index}s{index}i");
         o.incarnations = 2;
         o.kills = 1;
+        o.node_kills = index;
         o.checkpoints = 3;
         o.steps_done = done;
         o.steps_lost = lost;
+        o.steps_lost_nockpt = if index == 0 { 500 } else { 300 };
         o.wall_secs = 0.5;
         o.stored_bytes = 100;
         o.logical_bytes = 400;
@@ -634,9 +698,16 @@ mod tests {
         assert_eq!(r.completed(), 1);
         assert_eq!(r.verified(), 1);
         assert_eq!(r.kills(), 2);
+        assert_eq!(r.node_kills(), 1);
+        assert_eq!(r.corrupt_fallbacks(), 0);
         assert_eq!(r.steps_lost(), 200);
         let avail = r.availability();
         assert!((avail - 1200.0 / 1400.0).abs() < 1e-9, "{avail}");
+        // The checkpoint-free counterfactual charges full progress per
+        // kill (500 + 300 here) and must read strictly worse.
+        let no_ckpt = r.no_ckpt_availability();
+        assert!((no_ckpt - 1200.0 / 2000.0).abs() < 1e-9, "{no_ckpt}");
+        assert!(no_ckpt < avail);
         assert_eq!(r.store_totals(), (200, 800, 10, 14));
     }
 
@@ -649,6 +720,7 @@ mod tests {
             burst_collisions: 0,
         };
         assert_eq!(r.availability(), 1.0);
+        assert_eq!(r.no_ckpt_availability(), 1.0);
         assert_eq!(r.queue_wait_percentiles(), (0.0, 0.0));
         assert_eq!(r.restart_latency_percentiles(), (0.0, 0.0));
     }
@@ -662,6 +734,9 @@ mod tests {
         let j = r.to_json();
         assert!(j.contains("\"sessions\": 2"), "{j}");
         assert!(j.contains("\"availability\": 0.857143"), "{j}");
+        assert!(j.contains("\"no_ckpt_availability\": 0.600000"), "{j}");
+        assert!(j.contains("\"node_kills\": 1"), "{j}");
+        assert!(j.contains("\"corrupt_fallbacks\": 0"), "{j}");
         assert!(j.contains("\"rejected_admissions\": 0"), "{j}");
         assert!(j.contains("\"burst_collisions\": 3"), "{j}");
         assert!(j.contains("\"queue_wait_p99_secs\": 0.500000"), "{j}");

@@ -11,7 +11,7 @@
 use std::path::PathBuf;
 use std::time::Duration;
 
-use crate::campaign::faults::FaultPlan;
+use crate::campaign::faults::{FaultDomain, FaultPlan};
 use crate::campaign::sched::{ArrivalSpec, SchedulerKind};
 use crate::campaign::tune::IntervalPolicy;
 use crate::dmtcp::store::ChunkerSpec;
@@ -201,6 +201,8 @@ impl CampaignSpec {
         let mut fixed_ms: Option<u64> = None;
         let mut mtbf_ms: Option<u64> = None;
         let mut max_kills = 2u32;
+        let mut node_domain = false;
+        let mut nodes: Option<u32> = None;
         let mut seen_keys: std::collections::BTreeSet<String> = std::collections::BTreeSet::new();
 
         for (lineno, raw) in text.lines().enumerate() {
@@ -334,6 +336,34 @@ impl CampaignSpec {
                     }
                 }
                 "max-kills" => max_kills = value.parse().map_err(|_| bad("max-kills"))?,
+                // Underscore alias accepted; both spellings count as one
+                // key for the duplicate check (shared-coordinator
+                // precedent).
+                "fault-domain" | "fault_domain" => {
+                    let alias = if key == "fault-domain" {
+                        "fault_domain"
+                    } else {
+                        "fault-domain"
+                    };
+                    if !seen_keys.insert(alias.to_string()) {
+                        return Err(Error::Usage(format!(
+                            "campaign spec line {}: duplicate key {key:?}",
+                            lineno + 1
+                        )));
+                    }
+                    node_domain = match value {
+                        "session" => false,
+                        "node" => true,
+                        _ => return Err(bad("fault-domain")),
+                    }
+                }
+                "nodes" => {
+                    let n: u32 = value.parse().map_err(|_| bad("nodes"))?;
+                    if n == 0 {
+                        return Err(bad("nodes"));
+                    }
+                    nodes = Some(n);
+                }
                 "straggler-timeout-ms" => {
                     spec.straggler_timeout = Duration::from_millis(
                         value.parse().map_err(|_| bad("straggler-timeout-ms"))?,
@@ -420,9 +450,37 @@ impl CampaignSpec {
             spec.interval
         };
         spec.faults = match mtbf_ms {
-            Some(ms) => FaultPlan::exponential(Duration::from_millis(ms), max_kills),
-            None => FaultPlan::none(),
+            Some(ms) => {
+                let mtbf = Duration::from_millis(ms);
+                if node_domain {
+                    let n = nodes.ok_or_else(|| {
+                        Error::Usage(
+                            "fault-domain = node needs an explicit nodes = N (the fleet's \
+                             simulated node count)"
+                                .into(),
+                        )
+                    })?;
+                    FaultPlan::node_scoped(mtbf, max_kills, n)
+                } else {
+                    FaultPlan::exponential(mtbf, max_kills)
+                }
+            }
+            None => {
+                if node_domain {
+                    return Err(Error::Usage(
+                        "fault-domain = node needs mtbf-ms (a kill-free node domain is \
+                         vacuous)"
+                            .into(),
+                    ));
+                }
+                FaultPlan::none()
+            }
         };
+        if nodes.is_some() && !node_domain {
+            return Err(Error::Usage(
+                "nodes = N only makes sense with fault-domain = node".into(),
+            ));
+        }
         spec.validate()?;
         Ok(spec)
     }
@@ -452,6 +510,11 @@ impl CampaignSpec {
         if self.straggler_timeout.is_zero() {
             return Err(Error::Usage(
                 "straggler-timeout-ms must be nonzero (sessions need time to run)".into(),
+            ));
+        }
+        if self.faults.domain == (FaultDomain::Node { nodes: 0 }) {
+            return Err(Error::Usage(
+                "fault-domain node needs nodes >= 1".into(),
             ));
         }
         if self.admit_max == Some(0) {
@@ -563,6 +626,10 @@ impl CampaignSpec {
             Some(m) => {
                 kv("mtbf-ms", m.as_millis().to_string());
                 kv("max-kills", self.faults.max_kills_per_session.to_string());
+                if let FaultDomain::Node { nodes } = self.faults.domain {
+                    kv("fault-domain", "node".into());
+                    kv("nodes", nodes.to_string());
+                }
             }
         }
         kv(
@@ -827,6 +894,35 @@ requeue-delay-ms = 10
         assert!(CampaignSpec::parse("chunker = rolling\n").is_err());
         let err = CampaignSpec::parse("chunker = fixed\nchunker = cdc\n").unwrap_err();
         assert!(err.to_string().contains("duplicate key"), "{err}");
+    }
+
+    #[test]
+    fn fault_domain_keys_parse_round_trip_and_validate() {
+        let s = CampaignSpec::parse("mtbf-ms = 60\nfault-domain = node\nnodes = 4\n").unwrap();
+        assert_eq!(s.faults, FaultPlan::node_scoped(Duration::from_millis(60), 2, 4));
+        assert_eq!(CampaignSpec::parse(&s.to_text()).unwrap(), s);
+        // The underscore spelling works and is one key for dedup.
+        let s = CampaignSpec::parse("mtbf-ms = 60\nfault_domain = node\nnodes = 2\n").unwrap();
+        assert_eq!(s.faults.domain, FaultDomain::Node { nodes: 2 });
+        let err = CampaignSpec::parse("fault_domain = node\nfault-domain = session\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("duplicate key"), "{err}");
+        // An explicit session domain is the default shape.
+        let s = CampaignSpec::parse("mtbf-ms = 60\nfault-domain = session\n").unwrap();
+        assert_eq!(s.faults, FaultPlan::exponential(Duration::from_millis(60), 2));
+        // node domain demands an explicit node count and an MTBF; a node
+        // count without the domain is a stray.
+        assert!(CampaignSpec::parse("mtbf-ms = 60\nfault-domain = node\n").is_err());
+        assert!(CampaignSpec::parse("fault-domain = node\nnodes = 4\n").is_err());
+        assert!(CampaignSpec::parse("nodes = 4\n").is_err());
+        assert!(CampaignSpec::parse("mtbf-ms = 60\nfault-domain = node\nnodes = 0\n").is_err());
+        assert!(CampaignSpec::parse("fault-domain = rack\n").is_err());
+        // Programmatic zero-node plans are caught by validate.
+        let spec = CampaignSpec {
+            faults: FaultPlan::node_scoped(Duration::from_millis(60), 2, 0),
+            ..Default::default()
+        };
+        assert!(spec.validate().is_err());
     }
 
     #[test]

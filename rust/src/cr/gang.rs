@@ -32,6 +32,7 @@
 
 #![deny(missing_docs)]
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -41,9 +42,11 @@ use crate::cr::module::{CoordinatorHandle, CrConfig};
 use crate::cr::session::{merge_series, next_nonce, GC_GRACE};
 use crate::dmtcp::process::Checkpointable;
 use crate::dmtcp::store::{
-    latest_gang_manifest, ChunkerSpec, GangManifest, GangRankEntry, ImageStore,
+    gang_manifests, latest_gang_manifest, ChunkerSpec, GangManifest, GangRankEntry, ImageStore,
 };
-use crate::dmtcp::{inspect_image, Coordinator, LaunchedProcess, ManaState, PluginRegistry, TimerPlugin};
+use crate::dmtcp::{
+    inspect_image, Coordinator, LaunchedProcess, ManaState, PluginRegistry, TimerPlugin,
+};
 use crate::error::{Error, Result};
 use crate::metrics::{LdmsSampler, SampledSeries};
 
@@ -200,6 +203,7 @@ impl<A: GangApp> GangSessionBuilder<A> {
             active: None,
             series_acc: None,
             restore_phases: [0.0; 3],
+            manifest_fallbacks: 0,
         })
     }
 }
@@ -239,6 +243,9 @@ pub struct GangSession<A: GangApp> {
     /// Restore-pipeline `[read, decompress, verify]` seconds summed over
     /// every rank restart of every incarnation (v2 manifest images only).
     restore_phases: [f64; 3],
+    /// Gang restarts that had to skip a corrupt newest cut and fall back
+    /// to an older committed manifest (store-domain recoveries).
+    manifest_fallbacks: u32,
 }
 
 impl<A: GangApp> GangSession<A> {
@@ -269,6 +276,21 @@ impl<A: GangApp> GangSession<A> {
             self.nonce,
             self.generation
         )
+    }
+
+    /// The incarnation-independent prefix every [`GangSession::jobid`] of
+    /// this session starts with (`{base}g{nonce}i`). The literal `i`
+    /// terminator keeps a nonce from prefix-matching a longer nonce, so
+    /// flight-dump attribution in a shared workdir can filter scans by
+    /// `job.starts_with(prefix)`.
+    pub fn job_prefix(&self) -> String {
+        format!("{}g{}i", self.seed % 900_000 + 100_000, self.nonce)
+    }
+
+    /// Store-domain recoveries so far: gang restarts that skipped a
+    /// corrupt newest cut and restored an older committed manifest.
+    pub fn manifest_fallbacks(&self) -> u32 {
+        self.manifest_fallbacks
     }
 
     /// The gang's process-name base; rank processes are
@@ -381,90 +403,51 @@ impl<A: GangApp> GangSession<A> {
         self.app.begin_incarnation(self.generation);
         let n = self.app.n_ranks();
 
-        let restore_from = if self.generation == 0 {
-            None
-        } else {
-            let (_, manifest) = latest_gang_manifest(&self.ckpt_dir(), &self.gang_name())?
-                .ok_or_else(|| Error::Workload("requeued but no gang manifest".into()))?;
-            if manifest.n_ranks() != n {
-                return Err(Error::Workload(format!(
-                    "gang manifest covers {} ranks, app wants {n} \
-                     (gang restart is rank-count-preserving)",
-                    manifest.n_ranks()
+        let (mut slots, resumed_at) = if self.generation == 0 {
+            let mut slots: Vec<RankSlot<A::RankState>> = Vec::with_capacity(n as usize);
+            for rank in 0..n {
+                let mut plugins = PluginRegistry::new();
+                plugins.register(Box::new(TimerPlugin::new()));
+                let name = self.rank_name(rank);
+                let state = Arc::new(Mutex::new(self.app.fresh_rank_state(
+                    rank,
+                    self.target_steps,
+                    self.seed,
+                )?));
+                self.app.register_rank_plugins(rank, &state, &mut plugins);
+                let wrapped = Arc::new(Mutex::new(ManaState::with_exclusion(
+                    Arc::clone(&state),
+                    self.app.reinit_fn(rank),
+                    self.mana_exclusion,
                 )));
+                let mut env = base_env.clone();
+                env.insert("DMTCP_RANK".into(), rank.to_string());
+                env.insert("DMTCP_IMAGE_PER_ROUND".into(), "1".into());
+                let launched = self.substrate.launch(
+                    &name,
+                    coordinator.addr(),
+                    env,
+                    wrapped,
+                    plugins,
+                )?;
+                slots.push(RankSlot { state, launched });
             }
+            (slots, None)
+        } else {
+            let candidates = gang_manifests(&self.ckpt_dir(), &self.gang_name())?;
+            let newest_id = candidates
+                .first()
+                .map(|(_, m)| m.ckpt_id)
+                .ok_or_else(|| Error::Workload("requeued but no gang manifest".into()))?;
             // Round ids must stay unique across incarnations: a fresh
-            // coordinator would reuse the committed cut's round id and
-            // overwrite the very files its manifest references.
-            coordinator.bump_ckpt_id_to(manifest.ckpt_id + 1);
-            Some(manifest)
+            // coordinator would reuse a committed cut's round id and
+            // overwrite the very files its manifest references. Seed
+            // above the NEWEST cut even when a store-corruption fallback
+            // restores an older one, so new rounds cannot collide with
+            // the retained newer manifest's file names.
+            coordinator.bump_ckpt_id_to(newest_id + 1);
+            self.restore_gang(&coordinator, &base_env, n, candidates)?
         };
-
-        // The gang resumes from the cut: the slowest rank's step at the
-        // checkpoint (each rank still restores at its own recorded step —
-        // cut consistency covers the skew).
-        let resumed_at = restore_from.as_ref().map(|m| m.cut_steps());
-        let mut slots: Vec<RankSlot<A::RankState>> = Vec::with_capacity(n as usize);
-        for rank in 0..n {
-            let mut plugins = PluginRegistry::new();
-            plugins.register(Box::new(TimerPlugin::new()));
-            let name = self.rank_name(rank);
-            let (state, launched) = match &restore_from {
-                None => {
-                    let state = Arc::new(Mutex::new(self.app.fresh_rank_state(
-                        rank,
-                        self.target_steps,
-                        self.seed,
-                    )?));
-                    self.app.register_rank_plugins(rank, &state, &mut plugins);
-                    let wrapped = Arc::new(Mutex::new(ManaState::with_exclusion(
-                        Arc::clone(&state),
-                        self.app.reinit_fn(rank),
-                        self.mana_exclusion,
-                    )));
-                    let mut env = base_env.clone();
-                    env.insert("DMTCP_RANK".into(), rank.to_string());
-                    env.insert("DMTCP_IMAGE_PER_ROUND".into(), "1".into());
-                    let launched = self.substrate.launch(
-                        &name,
-                        coordinator.addr(),
-                        env,
-                        wrapped,
-                        plugins,
-                    )?;
-                    (state, launched)
-                }
-                Some(manifest) => {
-                    let entry = &manifest.ranks[rank as usize];
-                    let image = self.ckpt_dir().join(&entry.image);
-                    let state = Arc::new(Mutex::new(self.app.restore_rank_state(rank)));
-                    self.app.register_rank_plugins(rank, &state, &mut plugins);
-                    let wrapped = Arc::new(Mutex::new(ManaState::with_exclusion(
-                        Arc::clone(&state),
-                        self.app.reinit_fn(rank),
-                        self.mana_exclusion,
-                    )));
-                    // Re-tag the rank with this incarnation's coordinator
-                    // routing (DMTCP_JOB names the previous incarnation's
-                    // job inside the image); the rank's position itself is
-                    // preserved by the image's DMTCP_RANK.
-                    let restarted = self.substrate.restart(
-                        &image,
-                        coordinator.addr(),
-                        wrapped,
-                        plugins,
-                        &base_env,
-                    )?;
-                    if let Some(rs) = &restarted.restore {
-                        self.restore_phases[0] += rs.read_secs;
-                        self.restore_phases[1] += rs.decompress_secs;
-                        self.restore_phases[2] += rs.verify_secs;
-                    }
-                    (state, restarted.launched)
-                }
-            };
-            slots.push(RankSlot { state, launched });
-        }
         for slot in &slots {
             slot.launched.wait_attached(ATTACH_TIMEOUT)?;
         }
@@ -489,6 +472,106 @@ impl<A: GangApp> GangSession<A> {
             sampler: Some(sampler),
         });
         Ok(resumed_at)
+    }
+
+    /// Restore every rank from the newest *restorable* committed cut:
+    /// candidates are tried newest-first, and a typed [`Error::Corrupt`]
+    /// from any rank restore (fleet-scale chunk-store damage under that
+    /// cut) tears the partial attempt down and falls back to the next
+    /// older manifest — losing at most the work between the two cuts,
+    /// the store-domain bound of DESIGN §9. Any other error propagates
+    /// unchanged, and a gang whose every candidate is corrupt surfaces
+    /// the last typed error rather than panicking.
+    fn restore_gang(
+        &mut self,
+        coordinator: &Coordinator,
+        base_env: &BTreeMap<String, String>,
+        n: u32,
+        candidates: Vec<(PathBuf, GangManifest)>,
+    ) -> Result<(Vec<RankSlot<A::RankState>>, Option<u64>)> {
+        let mut last_corrupt = None;
+        for (path, manifest) in &candidates {
+            if manifest.n_ranks() != n {
+                return Err(Error::Workload(format!(
+                    "gang manifest covers {} ranks, app wants {n} \
+                     (gang restart is rank-count-preserving)",
+                    manifest.n_ranks()
+                )));
+            }
+            let mut slots: Vec<RankSlot<A::RankState>> = Vec::with_capacity(n as usize);
+            let mut corrupt = None;
+            for rank in 0..n {
+                let mut plugins = PluginRegistry::new();
+                plugins.register(Box::new(TimerPlugin::new()));
+                let entry = &manifest.ranks[rank as usize];
+                let image = self.ckpt_dir().join(&entry.image);
+                let state = Arc::new(Mutex::new(self.app.restore_rank_state(rank)));
+                self.app.register_rank_plugins(rank, &state, &mut plugins);
+                let wrapped = Arc::new(Mutex::new(ManaState::with_exclusion(
+                    Arc::clone(&state),
+                    self.app.reinit_fn(rank),
+                    self.mana_exclusion,
+                )));
+                // Re-tag the rank with this incarnation's coordinator
+                // routing (DMTCP_JOB names the previous incarnation's
+                // job inside the image); the rank's position itself is
+                // preserved by the image's DMTCP_RANK.
+                match self
+                    .substrate
+                    .restart(&image, coordinator.addr(), wrapped, plugins, base_env)
+                {
+                    Ok(restarted) => {
+                        if let Some(rs) = &restarted.restore {
+                            self.restore_phases[0] += rs.read_secs;
+                            self.restore_phases[1] += rs.decompress_secs;
+                            self.restore_phases[2] += rs.verify_secs;
+                        }
+                        slots.push(RankSlot {
+                            state,
+                            launched: restarted.launched,
+                        });
+                    }
+                    Err(e @ Error::Corrupt(_)) => {
+                        corrupt = Some((rank, e));
+                        break;
+                    }
+                    Err(e) => {
+                        Self::abandon_slots(slots);
+                        return Err(e);
+                    }
+                }
+            }
+            let Some((rank, e)) = corrupt else {
+                // The gang resumes from the cut: the slowest rank's step
+                // at the checkpoint (each rank still restores at its own
+                // recorded step — cut consistency covers the skew).
+                return Ok((slots, Some(manifest.cut_steps())));
+            };
+            Self::abandon_slots(slots);
+            self.manifest_fallbacks += 1;
+            log::warn!(
+                "gang {}: cut {} is corrupt at rank {rank} ({e}), falling back to an \
+                 older committed manifest",
+                self.nonce,
+                path.display()
+            );
+            crate::trace::flight::dump_for_job_in_domain(
+                &self.jobid(),
+                &format!("corrupt gang cut {}: rank {rank}: {e}", path.display()),
+                &self.ckpt_dir(),
+                "store",
+            );
+            last_corrupt = Some(e);
+        }
+        Err(last_corrupt.expect("restore loop saw at least one candidate"))
+    }
+
+    /// Kill and reap the rank processes of an abandoned restore attempt.
+    fn abandon_slots(slots: Vec<RankSlot<A::RankState>>) {
+        for slot in slots {
+            slot.launched.process.gate.kill();
+            let _ = slot.launched.join();
+        }
     }
 
     fn teardown(&mut self) -> Result<Vec<Arc<Mutex<A::RankState>>>> {
@@ -689,37 +772,44 @@ impl<A: GangApp> GangSession<A> {
         })
     }
 
-    /// Best-effort cleanup of rounds older than the just-committed one:
-    /// their manifests and round-stamped rank images are superseded.
-    /// (Chunk-store entries are reclaimed by the regular GC once the old
-    /// `.dmtcp` manifests are gone.) Never touches the new round.
+    /// Best-effort cleanup of superseded rounds, retaining the newest
+    /// committed round *and its immediate predecessor*: the predecessor
+    /// is the store-domain fallback — if fleet-scale chunk corruption
+    /// lands on the newest cut's unique chunks, the next gang restart
+    /// falls back to it instead of losing the session (DESIGN §9).
+    /// Everything older loses its manifest and round-stamped rank
+    /// images; chunk-store entries are reclaimed by the regular GC once
+    /// the old `.dmtcp` manifests are gone. Never touches the new round.
     fn prune_superseded_rounds(&self, newest: &GangManifest) {
         let ckpt_dir = self.ckpt_dir();
-        let prefix = format!("gang_{}_", self.gang_name());
-        let Ok(entries) = std::fs::read_dir(&ckpt_dir) else {
+        let Ok(all) = gang_manifests(&ckpt_dir, &self.gang_name()) else {
             return;
         };
-        for e in entries.flatten() {
-            let p = e.path();
-            let Some(name) = p.file_name().and_then(|n| n.to_str()) else {
-                continue;
-            };
-            if !name.starts_with(&prefix) || !name.ends_with(".gang") {
-                continue;
-            }
-            match GangManifest::read_file(&p) {
-                Ok(m)
-                    if m.gang == newest.gang
-                        && (m.generation, m.ckpt_id) < (newest.generation, newest.ckpt_id) =>
-                {
-                    for r in &m.ranks {
-                        let _ = std::fs::remove_file(ckpt_dir.join(&r.image));
-                    }
-                    let _ = std::fs::remove_file(&p);
+        // `all` is newest-first and includes the just-committed round:
+        // index 0 is `newest`, index 1 the retained fallback.
+        for (p, m) in all.into_iter().skip(2) {
+            if (m.generation, m.ckpt_id) < (newest.generation, newest.ckpt_id) {
+                for r in &m.ranks {
+                    let _ = std::fs::remove_file(ckpt_dir.join(&r.image));
                 }
-                _ => {}
+                let _ = std::fs::remove_file(&p);
             }
         }
+    }
+
+    /// Arm a one-shot fabric partition (fault injection): when the next
+    /// gang barrier reaches `phase`, the coordinator severs the given
+    /// ranks mid-round as if the fabric to their node dropped. The round
+    /// fails typed, surviving ranks are resumed by the daemon's abort
+    /// broadcast, and the previous committed manifest remains the newest
+    /// restartable cut — follow with [`GangSession::kill`] and
+    /// [`GangSession::resubmit_from_checkpoint`] as for any lost rank.
+    pub fn inject_partition(
+        &self,
+        phase: crate::dmtcp::protocol::Phase,
+        ranks: &[u32],
+    ) -> Result<()> {
+        self.gang()?.coordinator.inject_partition(phase, ranks)
     }
 
     /// Kill a single rank (fault injection). Losing any rank aborts the

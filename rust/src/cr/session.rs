@@ -242,6 +242,7 @@ impl<A: CrApp> CrSessionBuilder<A> {
             active: None,
             series_acc: None,
             restore_phases: [0.0; 3],
+            image_fallbacks: 0,
         })
     }
 }
@@ -273,6 +274,9 @@ pub struct CrSession<A: CrApp> {
     /// Restore-pipeline `[read, decompress, verify]` seconds summed over
     /// this session's restarts (v2 manifest images only).
     restore_phases: [f64; 3],
+    /// Restarts that had to skip a corrupt newest image and fall back to
+    /// an older restorable one (store-domain fault recovery).
+    image_fallbacks: u32,
 }
 
 impl<A: CrApp> CrSession<A> {
@@ -302,6 +306,21 @@ impl<A: CrApp> CrSession<A> {
             self.nonce,
             self.incarnation
         )
+    }
+
+    /// The incarnation-independent prefix every [`CrSession::jobid`] of
+    /// this session starts with. The literal `i` terminator after the
+    /// decimal nonce means no other session's job id can share this
+    /// prefix — what lets shared-workdir fleets attribute flight dumps
+    /// (whose `job` field names one incarnation) to their session.
+    pub fn job_prefix(&self) -> String {
+        format!("{}s{}i", self.seed % 900_000 + 100_000, self.nonce)
+    }
+
+    /// Restarts that skipped a corrupt newest image and fell back to an
+    /// older restorable one (store-domain fault recovery).
+    pub fn image_fallbacks(&self) -> u32 {
+        self.image_fallbacks
     }
 
     /// The process name this session launches under; checkpoint images
@@ -416,8 +435,6 @@ impl<A: CrApp> CrSession<A> {
         }
         let (coordinator, env) = self.coordinator_handle.start(&cfg)?;
         let images = self.session_images()?;
-        let mut plugins = PluginRegistry::new();
-        plugins.register(Box::new(TimerPlugin::new()));
         let name = self.process_name();
 
         let (state, mut launched, resumed_at) = if self.incarnation == 0 {
@@ -432,6 +449,8 @@ impl<A: CrApp> CrSession<A> {
             let state = Arc::new(Mutex::new(
                 self.app.fresh_state(self.target_steps, self.seed)?,
             ));
+            let mut plugins = PluginRegistry::new();
+            plugins.register(Box::new(TimerPlugin::new()));
             self.app.register_plugins(&state, &mut plugins);
             let launched = self.substrate.launch(
                 &name,
@@ -442,21 +461,58 @@ impl<A: CrApp> CrSession<A> {
             )?;
             (state, launched, None)
         } else {
-            let image = images.last().cloned().ok_or_else(|| {
-                Error::Workload("requeued but no checkpoint image".into())
-            })?;
-            let state = Arc::new(Mutex::new(self.app.restore_state()));
-            self.app.register_plugins(&state, &mut plugins);
-            // The env overlay re-tags the restarted process with *this*
-            // incarnation's coordinator routing (DMTCP_JOB et al.); the
-            // image's copy names the previous incarnation's job.
-            let restarted = self.substrate.restart(
-                &image,
-                coordinator.addr(),
-                Arc::clone(&state),
-                plugins,
-                &env,
-            )?;
+            if images.is_empty() {
+                return Err(Error::Workload("requeued but no checkpoint image".into()));
+            }
+            // Newest image first. A typed `Error::Corrupt` (store damage
+            // under the image's manifest) falls back to the previous
+            // restorable image instead of sinking the session — losing at
+            // most the work since the older cut, which is the store-domain
+            // bound of DESIGN §9. Any other error propagates untouched.
+            let mut restored = None;
+            let mut last_corrupt = None;
+            for image in images.iter().rev() {
+                let state = Arc::new(Mutex::new(self.app.restore_state()));
+                let mut plugins = PluginRegistry::new();
+                plugins.register(Box::new(TimerPlugin::new()));
+                self.app.register_plugins(&state, &mut plugins);
+                // The env overlay re-tags the restarted process with
+                // *this* incarnation's coordinator routing (DMTCP_JOB et
+                // al.); the image's copy names the previous incarnation's
+                // job.
+                match self.substrate.restart(
+                    image,
+                    coordinator.addr(),
+                    Arc::clone(&state),
+                    plugins,
+                    &env,
+                ) {
+                    Ok(r) => {
+                        restored = Some((state, r));
+                        break;
+                    }
+                    Err(e @ Error::Corrupt(_)) => {
+                        log::warn!(
+                            "session {}: image {} is corrupt, falling back to the \
+                             previous one: {e}",
+                            self.nonce,
+                            image.display()
+                        );
+                        self.image_fallbacks += 1;
+                        crate::trace::flight::dump_for_job_in_domain(
+                            &self.jobid(),
+                            &format!("corrupt image {}: {e}", image.display()),
+                            &self.workdir.join("ckpt"),
+                            "store",
+                        );
+                        last_corrupt = Some(e);
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            let Some((state, restarted)) = restored else {
+                return Err(last_corrupt.expect("restart loop saw at least one image"));
+            };
             let at = restarted.header.steps_done;
             if let Some(rs) = &restarted.restore {
                 self.restore_phases[0] += rs.read_secs;

@@ -304,6 +304,20 @@ impl Coordinator {
         self.daemon.kill_job(&self.job);
     }
 
+    /// Arm a one-shot fabric partition for this job's next barrier
+    /// broadcast of `phase`: the given gang ranks become unreachable
+    /// mid-phase, the round fails, and survivors are resumed (see
+    /// [`CoordinatorDaemon::inject_partition`]). Private and shared
+    /// coordinators behave identically — the injection lives on the
+    /// daemon either way.
+    pub fn inject_partition(
+        &self,
+        phase: crate::dmtcp::protocol::Phase,
+        ranks: &[u32],
+    ) -> Result<()> {
+        self.daemon.inject_partition(&self.job, phase, ranks)
+    }
+
     /// `(clients, last completed checkpoint id, epoch)`.
     pub fn status(&self) -> (usize, u64, u64) {
         self.daemon.job_status(&self.job)

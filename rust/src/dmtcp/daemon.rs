@@ -120,6 +120,9 @@ struct Round {
     reply_conn: Option<u64>,
     /// Whether a handle thread is blocked on this round's result.
     waited: bool,
+    /// Which fault domain felled the round, when an injector (rather
+    /// than an organic stall) did — tags the flight dump.
+    failed_domain: Option<&'static str>,
 }
 
 /// One entry of the routing table.
@@ -131,6 +134,10 @@ struct JobState {
     round: Option<Round>,
     /// Completed-round result parked for the waiting handle thread.
     round_result: Option<Result<(Vec<ImageInfo>, BTreeMap<u64, u32>)>>,
+    /// One-shot armed fabric partition: when the next broadcast of the
+    /// given phase goes out, these gang ranks become unreachable
+    /// mid-barrier (see [`CoordinatorDaemon::inject_partition`]).
+    armed_partition: Option<(Phase, Vec<u32>)>,
     next_ckpt_id: u64,
     last_ckpt_id: u64,
     images_written: u64,
@@ -149,6 +156,7 @@ impl JobState {
             pid_table: PidTable::new(),
             round: None,
             round_result: None,
+            armed_partition: None,
             next_ckpt_id: 1,
             last_ckpt_id: 0,
             images_written: 0,
@@ -378,6 +386,22 @@ impl CoordinatorDaemon {
                 .unwrap();
             st = g;
         }
+    }
+
+    /// Arm a one-shot fabric partition for `job`: the moment the next
+    /// barrier broadcast of `phase` goes out, the given gang `ranks`
+    /// become unreachable mid-phase (their links are severed before any
+    /// of them can ack), the round fails with a per-victim `PHASE_FAIL`
+    /// pin, and survivors are resumed. The previous committed manifest
+    /// stays restorable — that is exactly the invariant the partition
+    /// torture suites assert. Unknown jobs are a typed error.
+    pub fn inject_partition(&self, job: &str, phase: Phase, ranks: &[u32]) -> Result<()> {
+        let mut st = self.shared.state.lock().unwrap();
+        let j = st.jobs.get_mut(job).ok_or_else(|| {
+            Error::Protocol(format!("inject_partition: unknown job {job:?}"))
+        })?;
+        j.armed_partition = Some((phase, ranks.to_vec()));
+        Ok(())
     }
 
     /// Ensure `job`'s future round ids start at or above `min`.
@@ -1114,6 +1138,7 @@ fn start_round(
         rank_map,
         reply_conn,
         waited,
+        failed_domain: None,
     });
     broadcast_phase(st, job_key, ckpt_id, Phase::Suspend);
     Ok(())
@@ -1155,9 +1180,70 @@ fn broadcast_phase(st: &mut DaemonState, job_key: &str, ckpt_id: u64, phase: Pha
             if !ok {
                 log::warn!("phase {phase:?}: client {vpid} unreachable");
                 round.pending.remove(&vpid);
-                round.failed = Some(format!(
+                let msg = format!(
                     "client vpid {vpid} unreachable during {phase:?} of round {ckpt_id}"
+                );
+                // Same failure pin detach_client leaves: an unreachable
+                // client must be explainable from the flight dump too.
+                crate::trace::event(crate::trace::names::PHASE_FAIL, |a| {
+                    a.str("job", job_key.to_string());
+                    if let Some(r) = round.rank_map.get(&vpid) {
+                        a.u64("rank", *r as u64);
+                    }
+                    a.str("phase", format!("{phase:?}"));
+                    a.u64("round", ckpt_id);
+                    a.u64("vpid", vpid);
+                    a.str("error", msg.clone());
+                });
+                round.failed = Some(msg);
+            }
+        }
+        // A partition armed for this phase fires now, after the phase
+        // frames went out but before any victim can ack: the marked gang
+        // ranks' links are severed mid-barrier. One-shot.
+        if j.armed_partition.as_ref().is_some_and(|(p, _)| *p == phase) {
+            let (_, cut_ranks) = j.armed_partition.take().expect("armed checked above");
+            let mut hit: Vec<u32> = Vec::new();
+            for (&vpid, &rank) in round.rank_map.iter() {
+                if !cut_ranks.contains(&rank) {
+                    continue;
+                }
+                if let Some(cid) = j.clients.get(&vpid).map(|c| c.conn) {
+                    if let Some(conn) = st.conns.get_mut(&cid) {
+                        conn.dead = true;
+                    }
+                }
+                // Pre-removing from pending keeps the later reap-time
+                // detach from double-pinning this vpid.
+                round.pending.remove(&vpid);
+                crate::trace::event(crate::trace::names::PHASE_FAIL, |a| {
+                    a.str("job", job_key.to_string());
+                    a.u64("rank", rank as u64);
+                    a.str("phase", format!("{phase:?}"));
+                    a.u64("round", ckpt_id);
+                    a.u64("vpid", vpid);
+                    a.str(
+                        "error",
+                        format!(
+                            "fabric partition: rank {rank} unreachable during {phase:?} \
+                             of round {ckpt_id}"
+                        ),
+                    );
+                });
+                hit.push(rank);
+            }
+            if !hit.is_empty() {
+                crate::trace::event(crate::trace::names::FAULT_PARTITION, |a| {
+                    a.str("job", job_key.to_string());
+                    a.str("ranks", format!("{hit:?}"));
+                    a.str("phase", format!("{phase:?}"));
+                    a.u64("round", ckpt_id);
+                });
+                round.failed = Some(format!(
+                    "fabric partition: ranks {hit:?} unreachable during {phase:?} of \
+                     round {ckpt_id}"
                 ));
+                round.failed_domain = Some("fabric");
             }
         }
     }
@@ -1281,8 +1367,14 @@ fn advance_rounds(st: &mut DaemonState, now: Instant) -> bool {
                 // (invariant 11): persist the job's recent spans — the
                 // PHASE_FAIL pin above names the rank and phase — next to
                 // the images the round would have produced. No-op unless
-                // a trace sink is installed.
-                crate::trace::flight::dump_for_job(&key, &why, &j.ckpt_dir);
+                // a trace sink is installed. An injected fault names its
+                // domain; organic stalls let the dump infer one.
+                match round.failed_domain {
+                    Some(d) => {
+                        crate::trace::flight::dump_for_job_in_domain(&key, &why, &j.ckpt_dir, d)
+                    }
+                    None => crate::trace::flight::dump_for_job(&key, &why, &j.ckpt_dir),
+                };
                 if round.waited {
                     j.round_result = Some(Err(Error::Protocol(why.clone())));
                 }

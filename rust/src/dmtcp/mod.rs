@@ -38,8 +38,8 @@ pub use restart::{
     dmtcp_restart, dmtcp_restart_with_env, inspect_gang, inspect_image, RestartedProcess,
 };
 pub use store::{
-    latest_gang_manifest, ChunkId, ChunkRef, ChunkerSpec, GangManifest, GangRankEntry, GcStats,
-    ImageManifest, ImageStore, RestoreStats, SegmentManifest, StoreConfig, StoreWriteStats,
-    DEFAULT_CHUNK_SIZE,
+    gang_manifests, latest_gang_manifest, ChunkId, ChunkRef, ChunkerSpec, GangManifest,
+    GangRankEntry, GcStats, ImageManifest, ImageStore, RestoreStats, SegmentManifest, StoreConfig,
+    StoreWriteStats, DEFAULT_CHUNK_SIZE,
 };
 pub use virtualization::{FdKind, FdTable, PidTable};

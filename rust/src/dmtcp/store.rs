@@ -1328,8 +1328,19 @@ impl GangManifest {
 /// Unreadable or damaged manifests are skipped (an aborted writer or bit
 /// rot must not mask an older good cut); `Ok(None)` when none exists.
 pub fn latest_gang_manifest(ckpt_dir: &Path, gang: &str) -> Result<Option<(PathBuf, GangManifest)>> {
+    Ok(gang_manifests(ckpt_dir, gang)?.into_iter().next())
+}
+
+/// All restartable gang manifests for `gang` in `ckpt_dir`, newest first
+/// by `(generation, round id)`. The head is what [`latest_gang_manifest`]
+/// returns; the tail is the fallback chain a restart walks when the
+/// newest cut's *chunk store* turns out to be damaged — the manifest file
+/// itself reads back valid (it has its own CRC) but a rank image it
+/// references fails restore with a typed corruption error. Unreadable or
+/// damaged manifest files are skipped as before.
+pub fn gang_manifests(ckpt_dir: &Path, gang: &str) -> Result<Vec<(PathBuf, GangManifest)>> {
     let prefix = format!("gang_{gang}_");
-    let mut best: Option<((u32, u64), PathBuf, GangManifest)> = None;
+    let mut found: Vec<((u32, u64), PathBuf, GangManifest)> = Vec::new();
     if let Ok(entries) = std::fs::read_dir(ckpt_dir) {
         for e in entries.flatten() {
             let p = e.path();
@@ -1340,18 +1351,14 @@ pub fn latest_gang_manifest(ckpt_dir: &Path, gang: &str) -> Result<Option<(PathB
                 continue;
             }
             match GangManifest::read_file(&p) {
-                Ok(m) if m.gang == gang => {
-                    let key = (m.generation, m.ckpt_id);
-                    if best.as_ref().map(|(k, _, _)| key > *k).unwrap_or(true) {
-                        best = Some((key, p, m));
-                    }
-                }
+                Ok(m) if m.gang == gang => found.push(((m.generation, m.ckpt_id), p, m)),
                 Ok(_) => {} // prefix collision with a longer gang name
                 Err(e) => log::warn!("skipping unreadable gang manifest {name}: {e}"),
             }
         }
     }
-    Ok(best.map(|(_, p, m)| (p, m)))
+    found.sort_by(|(a, _, _), (b, _, _)| b.cmp(a));
+    Ok(found.into_iter().map(|(_, p, m)| (p, m)).collect())
 }
 
 #[cfg(test)]

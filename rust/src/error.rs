@@ -43,6 +43,11 @@ pub enum Error {
     /// completing (the contained value is the budget that was exhausted).
     IncarnationsExhausted(u32),
 
+    /// Campaign-executor failures scoped to one session of a fleet (a
+    /// worker panic, a poisoned slot): the affected session is reported
+    /// failed while the rest of the campaign keeps running.
+    Campaign(String),
+
     /// CLI usage errors.
     Usage(String),
 }
@@ -62,6 +67,7 @@ impl fmt::Display for Error {
             Error::IncarnationsExhausted(budget) => {
                 write!(f, "incarnation budget ({budget}) exhausted")
             }
+            Error::Campaign(msg) => write!(f, "campaign: {msg}"),
             Error::Usage(msg) => write!(f, "usage: {msg}"),
         }
     }
@@ -102,6 +108,10 @@ mod tests {
         assert_eq!(
             Error::Image("bad".into()).to_string(),
             "checkpoint image: bad"
+        );
+        assert_eq!(
+            Error::Campaign("worker panicked".into()).to_string(),
+            "campaign: worker panicked"
         );
     }
 

@@ -35,25 +35,43 @@ fn sanitize(job: &str) -> String {
         .collect()
 }
 
-/// Pull `(rank, phase)` from the most recent `PHASE_FAIL` event in a
-/// span slice.
-fn failure_coords(spans: &[SpanRecord]) -> (Option<u64>, Option<String>) {
-    for rec in spans.iter().rev() {
-        if rec.name == names::PHASE_FAIL {
-            let rank = rec.attr("rank").and_then(|v| v.parse::<u64>().ok());
-            let phase = rec.attr("phase").map(|v| v.to_string());
-            return (rank, phase);
-        }
-    }
-    (None, None)
+/// Pull `(rank, phase, all ranks)` from the `PHASE_FAIL` events in a
+/// span slice: the most recent event names the headline rank/phase, and
+/// every `PHASE_FAIL` of the *same round and phase* contributes to the
+/// full victim set (a correlated failure — fabric partition, node kill —
+/// fells several ranks in one round).
+fn failure_coords(spans: &[SpanRecord]) -> (Option<u64>, Option<String>, Vec<u64>) {
+    let latest = spans.iter().rev().find(|r| r.name == names::PHASE_FAIL);
+    let Some(latest) = latest else {
+        return (None, None, Vec::new());
+    };
+    let rank = latest.attr("rank").and_then(|v| v.parse::<u64>().ok());
+    let phase = latest.attr("phase").map(|v| v.to_string());
+    let round = latest.attr("round").map(|v| v.to_string());
+    let mut ranks: Vec<u64> = spans
+        .iter()
+        .filter(|r| {
+            r.name == names::PHASE_FAIL
+                && r.attr("phase") == latest.attr("phase")
+                && r.attr("round").map(|v| v.to_string()) == round
+        })
+        .filter_map(|r| r.attr("rank").and_then(|v| v.parse::<u64>().ok()))
+        .collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    (rank, phase, ranks)
 }
 
-/// Serialize one dump document.
-fn render(job: &str, reason: &str, spans: &[SpanRecord]) -> String {
-    let (rank, phase) = failure_coords(spans);
+/// Serialize one dump document. `domain` tags which fault domain the dump
+/// blames (`None` infers: two or more failed ranks in one round is a
+/// fabric-wide event, otherwise a single-victim session failure).
+fn render(job: &str, reason: &str, spans: &[SpanRecord], domain: Option<&str>) -> String {
+    let (rank, phase, ranks) = failure_coords(spans);
+    let domain = domain.unwrap_or(if ranks.len() >= 2 { "fabric" } else { "session" });
     let mut out = String::from("{\"flight_dump\":1,");
     out.push_str(&format!("\"job\":\"{}\",", esc(job)));
     out.push_str(&format!("\"reason\":\"{}\",", esc(reason)));
+    out.push_str(&format!("\"fault_domain\":\"{}\",", esc(domain)));
     match rank {
         Some(r) => out.push_str(&format!("\"failed_rank\":{r},")),
         None => out.push_str("\"failed_rank\":null,"),
@@ -62,6 +80,14 @@ fn render(job: &str, reason: &str, spans: &[SpanRecord]) -> String {
         Some(p) => out.push_str(&format!("\"failed_phase\":\"{}\",", esc(p))),
         None => out.push_str("\"failed_phase\":null,"),
     }
+    out.push_str("\"failed_ranks\":[");
+    for (i, r) in ranks.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&r.to_string());
+    }
+    out.push_str("],");
     out.push_str(&format!("\"n_spans\":{},", spans.len()));
     out.push_str("\"spans\":[");
     for (i, rec) in spans.iter().enumerate() {
@@ -82,9 +108,25 @@ fn render(job: &str, reason: &str, spans: &[SpanRecord]) -> String {
 /// the write failed (failure paths must stay failure-proof; the error is
 /// logged, not propagated).
 pub fn dump_for_job(job: &str, reason: &str, dir: &Path) -> Option<PathBuf> {
+    dump_inner(job, reason, dir, None)
+}
+
+/// [`dump_for_job`] with an explicit fault domain tag (`node`, `store`,
+/// `fabric`, `session`) instead of the inferred one — the correlated
+/// fault injectors know which domain struck and say so in the dump.
+pub fn dump_for_job_in_domain(
+    job: &str,
+    reason: &str,
+    dir: &Path,
+    domain: &str,
+) -> Option<PathBuf> {
+    dump_inner(job, reason, dir, Some(domain))
+}
+
+fn dump_inner(job: &str, reason: &str, dir: &Path, domain: Option<&str>) -> Option<PathBuf> {
     let sink = installed()?;
     let spans = sink.snapshot_job(job, DEFAULT_LAST_N);
-    let doc = render(job, reason, &spans);
+    let doc = render(job, reason, &spans, domain);
     let seq = NEXT_DUMP.fetch_add(1, Ordering::Relaxed);
     let path = dir.join(format!("flight-{}-{}.json", sanitize(job), seq));
     let tmp = dir.join(format!(".flight-{}-{}.json.tmp", sanitize(job), seq));
@@ -120,6 +162,13 @@ pub struct FlightSummary {
     pub failed_rank: Option<u64>,
     /// The barrier phase the latest `PHASE_FAIL` named, if any.
     pub failed_phase: Option<String>,
+    /// Every distinct rank that failed in the same round/phase as the
+    /// latest `PHASE_FAIL` (sorted) — more than one means a correlated
+    /// multi-victim event.
+    pub failed_ranks: Vec<u64>,
+    /// Which fault domain the dump blames (`session`, `node`, `store`,
+    /// `fabric`); absent in pre-domain dumps.
+    pub fault_domain: Option<String>,
     /// Spans held in the dump.
     pub n_spans: usize,
 }
@@ -181,6 +230,22 @@ fn number_field(doc: &str, key: &str) -> Option<u64> {
     digits.parse().ok()
 }
 
+/// Extract the first `"key":[n, n, ...]` number-array field (empty when
+/// the key is absent — pre-domain dumps have no `failed_ranks`).
+fn number_array_field(doc: &str, key: &str) -> Vec<u64> {
+    let marker = format!("\"{key}\":[");
+    let Some(start) = doc.find(&marker).map(|i| i + marker.len()) else {
+        return Vec::new();
+    };
+    let Some(end) = doc[start..].find(']') else {
+        return Vec::new();
+    };
+    doc[start..start + end]
+        .split(',')
+        .filter_map(|s| s.trim().parse::<u64>().ok())
+        .collect()
+}
+
 /// Read one dump file back into a summary.
 pub fn read_summary(path: &Path) -> Result<FlightSummary> {
     let doc = std::fs::read_to_string(path)?;
@@ -197,6 +262,8 @@ pub fn read_summary(path: &Path) -> Result<FlightSummary> {
         reason: string_field(&doc, "reason").unwrap_or_default(),
         failed_rank: number_field(&doc, "failed_rank"),
         failed_phase: string_field(&doc, "failed_phase"),
+        failed_ranks: number_array_field(&doc, "failed_ranks"),
+        fault_domain: string_field(&doc, "fault_domain"),
         n_spans: number_field(&doc, "n_spans").unwrap_or(0) as usize,
     })
 }
@@ -254,7 +321,7 @@ mod tests {
     #[test]
     fn render_and_read_back_round_trips() {
         let spans = vec![fail_rec(2, "Drain")];
-        let doc = render("j\"1", "barrier failed: \"why\"", &spans);
+        let doc = render("j\"1", "barrier failed: \"why\"", &spans, None);
         let dir = std::env::temp_dir().join(format!("ncr_flight_rt_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("flight-j1-0.json");
@@ -264,6 +331,8 @@ mod tests {
         assert_eq!(s.reason, "barrier failed: \"why\"");
         assert_eq!(s.failed_rank, Some(2));
         assert_eq!(s.failed_phase.as_deref(), Some("Drain"));
+        assert_eq!(s.failed_ranks, vec![2]);
+        assert_eq!(s.fault_domain.as_deref(), Some("session"));
         assert_eq!(s.n_spans, 1);
         let found = scan(&dir);
         assert_eq!(found.len(), 1);
@@ -273,9 +342,10 @@ mod tests {
 
     #[test]
     fn no_phase_fail_means_null_coords() {
-        let doc = render("j2", "teardown", &[]);
+        let doc = render("j2", "teardown", &[], None);
         assert!(doc.contains("\"failed_rank\":null"));
         assert!(doc.contains("\"failed_phase\":null"));
+        assert!(doc.contains("\"failed_ranks\":[]"));
         let dir = std::env::temp_dir().join(format!("ncr_flight_null_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("flight-j2-0.json");
@@ -283,6 +353,36 @@ mod tests {
         let s = read_summary(&path).unwrap();
         assert_eq!(s.failed_rank, None);
         assert_eq!(s.failed_phase, None);
+        assert!(s.failed_ranks.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn correlated_failures_name_every_rank_and_the_domain() {
+        // Three ranks of one round fail the same phase; an older failure
+        // from a different phase must not leak into the victim set.
+        let mut old = fail_rec(7, "Suspend");
+        old.attrs.push(("round", "3".into()));
+        let mut spans = vec![old];
+        for r in [3, 1, 3] {
+            let mut rec = fail_rec(r, "Drain");
+            rec.attrs.push(("round", "4".into()));
+            spans.push(rec);
+        }
+        let doc = render("g1", "fabric partition", &spans, None);
+        assert!(doc.contains("\"failed_ranks\":[1,3]"), "{doc}");
+        assert!(doc.contains("\"fault_domain\":\"fabric\""), "{doc}");
+        // An explicit domain wins over the inferred one.
+        let doc = render("g1", "node kill", &spans, Some("node"));
+        assert!(doc.contains("\"fault_domain\":\"node\""), "{doc}");
+        let dir = std::env::temp_dir().join(format!("ncr_flight_corr_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("flight-g1-0.json");
+        std::fs::write(&path, &doc).unwrap();
+        let s = read_summary(&path).unwrap();
+        assert_eq!(s.failed_ranks, vec![1, 3]);
+        assert_eq!(s.fault_domain.as_deref(), Some("node"));
+        assert_eq!(s.failed_phase.as_deref(), Some("Drain"));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -291,7 +391,11 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("ncr_flight_garbage_{}", std::process::id()));
         std::fs::create_dir_all(dir.join("sub")).unwrap();
         std::fs::write(dir.join("flight-bad-0.json"), b"not a dump").unwrap();
-        std::fs::write(dir.join("sub").join("flight-ok-1.json"), render("ok", "r", &[])).unwrap();
+        std::fs::write(
+            dir.join("sub").join("flight-ok-1.json"),
+            render("ok", "r", &[], None),
+        )
+        .unwrap();
         std::fs::write(dir.join("other.json"), b"{}").unwrap();
         let found = scan(&dir);
         assert_eq!(found.len(), 1);

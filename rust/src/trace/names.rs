@@ -87,6 +87,19 @@ pub const LOG_EVENT: &str = "log.event";
 /// A flight-recorder dump was written (attrs: `job`, `path`).
 pub const FLIGHT_DUMP: &str = "flight.dump";
 
+/// A node-scoped kill event felled every session/rank co-located on one
+/// simulated node (attrs: `node`, `session`).
+pub const NODE_KILL: &str = "fault.node.kill";
+/// A fabric partition made a subset of a gang's ranks unreachable
+/// mid-barrier (attrs: `job`, `ranks`, `phase`, `round`).
+pub const FAULT_PARTITION: &str = "fault.fabric.partition";
+/// The fleet-scale corruptor damaged a chunk file in a shared store
+/// (attrs: `chunk`, `kind`).
+pub const FAULT_CORRUPT: &str = "fault.store.corrupt";
+/// The campaign clock read before its own epoch (pre-epoch skew); the
+/// executor fell back to a zero offset (attrs: `context`).
+pub const CLOCK_SKEW: &str = "campaign.clock.skew";
+
 /// Every span name, in one table. CI asserts (a) every `names::X` usage
 /// in the crate resolves to a constant defined here and (b) every
 /// constant defined here appears in this list.
@@ -120,6 +133,10 @@ pub const ALL: &[&str] = &[
     SCHED_PREEMPT_NOTICE,
     LOG_EVENT,
     FLIGHT_DUMP,
+    NODE_KILL,
+    FAULT_PARTITION,
+    FAULT_CORRUPT,
+    CLOCK_SKEW,
 ];
 
 #[cfg(test)]

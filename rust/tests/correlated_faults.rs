@@ -1,0 +1,379 @@
+//! Correlated-failure torture (PR-10): faults that fell more than one
+//! process at once, across all four fault domains.
+//!
+//! * `node` — a seeded [`NodeMap`] places sessions (and gang ranks) on
+//!   nodes; one node fault kills everything co-located in the same tick.
+//! * `store` — a seeded [`StoreCorruptor`] damages chunk-store files;
+//!   restores surface typed `Error::Corrupt` and fall back to the
+//!   previous committed manifest, never panic.
+//! * `fabric` — a mid-barrier partition severs a subset of gang ranks;
+//!   the round fails typed, survivors resume, and the previous cut stays
+//!   bit-identical restorable.
+//!
+//! The invariant under test (DESIGN §9): a correlated fault never loses
+//! more than its domain.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use nersc_cr::campaign::{
+    run_campaign, CampaignSpec, FaultPlan, IntervalPolicy, NodeMap, SessionDisposition,
+    StoreCorruptor, WorkloadSpec,
+};
+use nersc_cr::cr::GangSession;
+use nersc_cr::dmtcp::protocol::Phase;
+use nersc_cr::trace::flight;
+use nersc_cr::util::proptest_lite::{run_cases, Gen};
+use nersc_cr::workload::StencilApp;
+
+fn workdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "ncr_corr_{tag}_{}_{}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Checkpoint, retrying briefly (a prior round may be in flight).
+fn checkpoint_retrying(session: &GangSession<&StencilApp>) -> nersc_cr::cr::GangCheckpoint {
+    let mut last_err = None;
+    for _ in 0..200 {
+        match session.checkpoint_now() {
+            Ok(ck) => return ck,
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(Duration::from_millis(3));
+            }
+        }
+    }
+    panic!("gang checkpoint never succeeded: {:?}", last_err);
+}
+
+/// Every `*.chunk` file under a store root, as a set.
+fn chunk_set(store_root: &Path) -> BTreeSet<PathBuf> {
+    let mut out = BTreeSet::new();
+    if let Ok(buckets) = std::fs::read_dir(store_root) {
+        for b in buckets.flatten() {
+            if !b.path().is_dir() {
+                continue;
+            }
+            if let Ok(files) = std::fs::read_dir(b.path()) {
+                for f in files.flatten() {
+                    if f.path().extension().map(|x| x == "chunk").unwrap_or(false) {
+                        out.insert(f.path());
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn node_map_is_deterministic_and_colocated_sessions_share_schedules() {
+    let plan = FaultPlan::node_scoped(Duration::from_millis(30), 2, 4);
+    let nf = plan.node_faults(99).expect("node-scoped plan has node faults");
+    let nf2 = plan.node_faults(99).unwrap();
+    let map = NodeMap::new(99, 4);
+    assert_eq!(nf.map(), &map, "same seed, same placement");
+
+    // Placement is total: every session lands on exactly one node.
+    let groups = map.colocated_sessions(16);
+    let placed: Vec<u32> = groups.iter().flat_map(|(_, s)| s.iter().copied()).collect();
+    let mut sorted = placed.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted, (0..16).collect::<Vec<u32>>());
+    for (node, sessions) in &groups {
+        assert!(*node < map.nodes());
+        for &s in sessions {
+            assert_eq!(map.node_of_session(s), *node);
+            // Co-located sessions see the *same* node kill schedule —
+            // that is what makes the fault correlated.
+            assert_eq!(nf.schedule_for_session(s), nf.schedule(*node));
+            assert_eq!(nf.schedule_for_session(s), nf2.schedule_for_session(s));
+        }
+    }
+    // Schedules are cumulative offsets, bounded by max_kills.
+    for node in 0..map.nodes() {
+        let sched = nf.schedule(node);
+        assert_eq!(sched.len(), 2);
+        assert!(sched[0] <= sched[1], "offsets must be cumulative: {sched:?}");
+    }
+    // Rank placement is deterministic too (gang fleets use it to pick
+    // which ranks a node fault fells).
+    for s in 0..4u32 {
+        for r in 0..8u32 {
+            assert_eq!(map.node_of_rank(s, r), NodeMap::new(99, 4).node_of_rank(s, r));
+            assert!(map.node_of_rank(s, r) < map.nodes());
+        }
+    }
+}
+
+#[test]
+fn node_scoped_storm_campaign_recovers_and_beats_no_ckpt_baseline() {
+    nersc_cr::trace::install(nersc_cr::trace::TraceConfig::default());
+    let wd = workdir("nodestorm");
+    let spec = CampaignSpec {
+        name: "node-storm".into(),
+        sessions: 4,
+        concurrency: 4,
+        workload: WorkloadSpec::Cp2kScf { n: 10 },
+        target_steps: 3_000,
+        seed: 41_000,
+        workdir: Some(wd.clone()),
+        faults: FaultPlan::node_scoped(Duration::from_millis(20), 2, 2),
+        interval: IntervalPolicy::Fixed(Duration::from_millis(8)),
+        straggler_timeout: Duration::from_secs(120),
+        ..Default::default()
+    };
+    let report = run_campaign(&spec).unwrap();
+    assert_eq!(report.sessions.len(), 4);
+    for s in &report.sessions {
+        assert_eq!(s.disposition, SessionDisposition::Completed, "s{}", s.index);
+        assert!(s.verified, "s{} diverged after node kills", s.index);
+        assert!(!s.job.is_empty(), "s{} must record its job prefix", s.index);
+    }
+    // In a node-domain campaign every kill is a node kill.
+    assert!(report.kills() >= 1, "the storm never struck");
+    assert_eq!(report.node_kills(), report.kills());
+    // Node kills are explainable: domain-tagged flight dumps on disk.
+    let dumps = flight::scan(&wd);
+    assert!(
+        dumps.iter().any(|d| d.fault_domain.as_deref() == Some("node")),
+        "a node kill must leave a node-domain dump: {dumps:?}"
+    );
+    // The point of checkpointing: the counterfactual no-checkpoint fleet
+    // (every kill restarts from step 0) does strictly worse.
+    assert!(report.availability() > 0.0);
+    assert!(
+        report.no_ckpt_availability() < report.availability(),
+        "C/R must beat the no-checkpoint baseline: {:.4} vs {:.4}",
+        report.no_ckpt_availability(),
+        report.availability()
+    );
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn shared_workdir_flight_dump_accounting_is_per_session() {
+    // Regression (PR-10 satellite): with `shared_workdir` every session's
+    // dumps land under one root, and the per-session `flight_dumps`
+    // counter used to count the whole fleet's dumps for every session.
+    // The fix filters the scan by the session's job prefix, so the
+    // per-session counts must now partition the shared scan exactly.
+    nersc_cr::trace::install(nersc_cr::trace::TraceConfig::default());
+    let wd = workdir("shared");
+    let spec = CampaignSpec {
+        name: "shared-accounting".into(),
+        sessions: 3,
+        concurrency: 3,
+        workload: WorkloadSpec::Cp2kScf { n: 10 },
+        target_steps: 2_000,
+        seed: 52_000,
+        workdir: Some(wd.clone()),
+        shared_workdir: true,
+        faults: FaultPlan::node_scoped(Duration::from_millis(15), 1, 2),
+        interval: IntervalPolicy::Fixed(Duration::from_millis(8)),
+        straggler_timeout: Duration::from_secs(120),
+        ..Default::default()
+    };
+    let report = run_campaign(&spec).unwrap();
+    for s in &report.sessions {
+        assert_eq!(s.disposition, SessionDisposition::Completed, "s{}", s.index);
+    }
+    let all = flight::scan(&wd);
+    assert!(!all.is_empty(), "node kills with tracing on must leave dumps");
+    // Every dump is attributable to exactly one session of the fleet.
+    for d in &all {
+        let owners = report
+            .sessions
+            .iter()
+            .filter(|s| d.job.starts_with(&s.job))
+            .count();
+        assert_eq!(owners, 1, "dump {} ({}) has {owners} owners", d.path.display(), d.job);
+    }
+    let per_session: u64 = report.sessions.iter().map(|s| u64::from(s.flight_dumps)).sum();
+    assert_eq!(
+        per_session,
+        all.len() as u64,
+        "per-session dump counts must partition the shared-workdir scan"
+    );
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn gang_restore_falls_back_past_a_corrupt_newest_round() {
+    nersc_cr::trace::install(nersc_cr::trace::TraceConfig::default());
+    const RANKS: u32 = 3;
+    let app = StencilApp::new(RANKS, 8).endpoint_bytes(2048);
+    let wd = workdir("storefall");
+    let mut session = GangSession::builder(&app)
+        .workdir(&wd)
+        .target_steps(100_000)
+        .seed(77)
+        .incremental_images(0)
+        .build()
+        .unwrap();
+    session.submit().unwrap();
+    let store_root = wd.join("ckpt").join("store");
+
+    // Round 1 commits; note which chunks back it.
+    let ck1 = checkpoint_retrying(&session);
+    let after1 = chunk_set(&store_root);
+    assert!(!after1.is_empty(), "incremental gang cut stored no chunks");
+
+    // Round 2 commits on top of real progress (retry until the cut
+    // advances); only the chunks that round itself stored are struck, so
+    // the retained predecessor round stays clean fallback material.
+    let (ck2, fresh) = {
+        let mut found = None;
+        let mut prior_cut = ck1.manifest.cut_steps();
+        for _ in 0..200 {
+            std::thread::sleep(Duration::from_millis(5));
+            let before = chunk_set(&store_root);
+            let c = checkpoint_retrying(&session);
+            let cut = c.manifest.cut_steps();
+            if cut > prior_cut {
+                let new: Vec<PathBuf> =
+                    chunk_set(&store_root).difference(&before).cloned().collect();
+                found = Some((c, new));
+                break;
+            }
+            prior_cut = cut;
+        }
+        found.expect("the gang never advanced past round 1's cut")
+    };
+    assert!(ck2.manifest.ckpt_id > ck1.manifest.ckpt_id);
+    assert!(!fresh.is_empty(), "round 2 progressed, so it must store new chunks");
+
+    // A correlated store fault: every chunk unique to round 2 is damaged
+    // in one strike (flip / truncate / delete, seeded per file).
+    let events = StoreCorruptor::new(4242).strike_paths(&fresh).unwrap();
+    assert_eq!(events.len(), fresh.len(), "every fresh chunk must be struck");
+
+    // Gang restart skips the corrupt newest cut — typed, not a panic —
+    // and restores the previous committed manifest.
+    session.kill().unwrap();
+    let resumed = session.resubmit_from_checkpoint().unwrap();
+    assert_eq!(resumed, ck1.manifest.cut_steps(), "must fall back to round 1");
+    assert_eq!(session.manifest_fallbacks(), 1);
+    let dumps = flight::scan(&wd.join("ckpt"));
+    assert!(
+        dumps.iter().any(|d| d.fault_domain.as_deref() == Some("store")),
+        "the skipped corrupt cut must leave a store-domain dump: {dumps:?}"
+    );
+
+    // The fallback is not just reachable but correct: the computation
+    // completes bit-identical to the uninterrupted reference.
+    session.wait_done(Duration::from_secs(120)).unwrap();
+    let finals = session.final_states().unwrap();
+    session.verify_final(&finals).unwrap();
+    session.finish();
+    std::fs::remove_dir_all(&wd).ok();
+}
+
+#[test]
+fn partition_mid_barrier_fails_round_names_victims_and_preserves_cut() {
+    nersc_cr::trace::install(nersc_cr::trace::TraceConfig::default());
+    const RANKS: u32 = 4;
+    let victims: [u32; 2] = [1, 3];
+    for (i, phase) in [Phase::Suspend, Phase::Drain, Phase::Checkpoint].iter().enumerate() {
+        let app = StencilApp::new(RANKS, 8).endpoint_bytes(2048);
+        let wd = workdir(&format!("part{i}"));
+        let mut session = GangSession::builder(&app)
+            .workdir(&wd)
+            .target_steps(1_500)
+            .seed(300 + i as u64)
+            .build()
+            .unwrap();
+        session.submit().unwrap();
+
+        // Round 1: a clean committed cut; freeze its manifest bytes.
+        let good = checkpoint_retrying(&session);
+        let pristine = std::fs::read(&good.manifest_path).unwrap();
+
+        // Round 2: the fabric to ranks {1,3} drops mid-barrier at this
+        // phase. The round must fail typed, as a whole.
+        session.inject_partition(*phase, &victims).unwrap();
+        let err = session
+            .checkpoint_now()
+            .expect_err("a mid-barrier partition must fail the round");
+        assert!(
+            err.to_string().contains("partition"),
+            "{phase:?}: error must name the partition: {err}"
+        );
+
+        // The dump blames the fabric domain, names ALL severed ranks and
+        // the exact phase the round died in.
+        let dumps = flight::scan(&wd.join("ckpt"));
+        let d = dumps
+            .iter()
+            .find(|d| d.fault_domain.as_deref() == Some("fabric"))
+            .unwrap_or_else(|| panic!("{phase:?}: no fabric-domain dump: {dumps:?}"));
+        assert_eq!(d.failed_ranks, vec![1, 3], "{phase:?}: dump must name every victim");
+        assert_eq!(d.failed_phase.as_deref(), Some(format!("{phase:?}").as_str()));
+
+        // The previous cut is untouched, byte for byte, and restorable:
+        // the gang restarts from it and completes bit-identically.
+        assert_eq!(
+            std::fs::read(&good.manifest_path).unwrap(),
+            pristine,
+            "{phase:?}: a failed round must not perturb the committed manifest"
+        );
+        session.kill().unwrap();
+        let resumed = session.resubmit_from_checkpoint().unwrap();
+        assert_eq!(resumed, good.manifest.cut_steps());
+        session.wait_done(Duration::from_secs(120)).unwrap();
+        let finals = session.final_states().unwrap();
+        session
+            .verify_final(&finals)
+            .unwrap_or_else(|e| panic!("{phase:?}: restored gang diverged: {e}"));
+        session.finish();
+        std::fs::remove_dir_all(&wd).ok();
+    }
+}
+
+#[test]
+fn corruptor_strikes_are_deterministic_and_always_detectable() {
+    run_cases("corruptor_determinism", 12, |g: &mut Gen| {
+        let seed = g.u64_in(1..1 << 40);
+        let n = g.usize_in(1..6);
+        let dir = workdir(&format!("prop{seed}_{n}"));
+        std::fs::create_dir_all(dir.join("ab")).unwrap();
+        let paths: Vec<PathBuf> = (0..n)
+            .map(|i| {
+                let p = dir.join("ab").join(format!("ab{i:02}.chunk"));
+                let mut body = b"NCRCHNK1\0".to_vec();
+                body.extend(g.bytes(16..64));
+                std::fs::write(&p, &body).unwrap();
+                p
+            })
+            .collect();
+        let pristine: Vec<Vec<u8>> = paths.iter().map(|p| std::fs::read(p).unwrap()).collect();
+        let events = StoreCorruptor::new(seed).strike_paths(&paths).unwrap();
+        assert_eq!(events.len(), n);
+        // Every strike leaves the file observably different from the
+        // pristine bytes — damage is never a silent no-op.
+        for (i, p) in paths.iter().enumerate() {
+            match std::fs::read(p) {
+                Ok(now) => assert_ne!(now, pristine[i], "{:?} left {p:?} intact", events[i].kind),
+                Err(_) => { /* deleted — observably different */ }
+            }
+        }
+        // Same seed, same paths: the replayed strike picks identical
+        // kinds per file (restore the files first so offsets line up).
+        for (p, b) in paths.iter().zip(&pristine) {
+            std::fs::write(p, b).unwrap();
+        }
+        let replay = StoreCorruptor::new(seed).strike_paths(&paths).unwrap();
+        assert_eq!(replay, events, "seeded strikes must replay identically");
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}

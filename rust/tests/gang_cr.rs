@@ -278,9 +278,11 @@ fn round_ids_stay_unique_across_generations() {
     std::fs::remove_dir_all(&wd).ok();
 }
 
-/// Committed cuts are pruned to the newest on each successful round:
-/// after several checkpoints only the latest manifest (and its images)
-/// remain discoverable, and it is the one a restart uses.
+/// Committed cuts are pruned to the newest *two* on each successful
+/// round: the immediate predecessor is retained as store-domain fallback
+/// material (a corrupt newest cut falls back to it at restart, DESIGN
+/// §9), everything older loses its manifest and images, and the newest
+/// is the one a restart uses.
 #[test]
 fn superseded_rounds_are_pruned_after_commit() {
     let app = StencilApp::new(2, 8);
@@ -296,23 +298,37 @@ fn superseded_rounds_are_pruned_after_commit() {
     std::thread::sleep(Duration::from_millis(10));
     let second = checkpoint_retrying(&session);
     assert!(second.manifest.ckpt_id > first.manifest.ckpt_id);
-    assert!(!first.manifest_path.exists(), "superseded manifest pruned");
+    assert!(
+        first.manifest_path.exists(),
+        "immediate predecessor retained as store-domain fallback"
+    );
+    std::thread::sleep(Duration::from_millis(10));
+    let third = checkpoint_retrying(&session);
+    assert!(third.manifest.ckpt_id > second.manifest.ckpt_id);
+    assert!(
+        !first.manifest_path.exists(),
+        "twice-superseded manifest pruned"
+    );
     let ckpt_dir = wd.join("ckpt");
     for entry in &first.manifest.ranks {
         assert!(
             !ckpt_dir.join(&entry.image).exists(),
-            "superseded rank image {} pruned",
+            "twice-superseded rank image {} pruned",
             entry.image
         );
     }
+    assert!(
+        second.manifest_path.exists(),
+        "fallback predecessor survives the third commit"
+    );
     let (_, latest) = latest_gang_manifest(&ckpt_dir, &session.gang_name())
         .unwrap()
         .expect("newest cut discoverable");
-    assert_eq!(latest, second.manifest);
+    assert_eq!(latest, third.manifest);
     session.kill().unwrap();
     assert_eq!(
         session.resubmit_from_checkpoint().unwrap(),
-        second.manifest.cut_steps()
+        third.manifest.cut_steps()
     );
     session.wait_done(Duration::from_secs(120)).unwrap();
     let finals = session.final_states().unwrap();

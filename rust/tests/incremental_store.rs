@@ -563,6 +563,93 @@ fn lz_cdc_chunk_damage_matrix_is_typed_corrupt() {
     std::fs::remove_dir_all(&wd).ok();
 }
 
+/// Correlated store damage (PR-10): one strike rots *several* chunk
+/// files at once — every chunk unique to the newest generation. The
+/// damage still surfaces as exactly one typed `Error::Corrupt` through
+/// the normal read path, and the previous generation, whose chunks the
+/// strike spared, keeps restoring bit-identically: a store-domain fault
+/// loses at most the rounds whose chunks it touched (DESIGN §9).
+#[test]
+fn correlated_multi_chunk_damage_is_typed_and_spares_the_prior_generation() {
+    let wd = workdir("corr_damage");
+    let ckpt = wd.join("ckpt");
+    std::fs::create_dir_all(&ckpt).unwrap();
+    let store = ImageStore::for_images(&ckpt);
+    let cfg = StoreConfig {
+        gzip: true,
+        chunker: ChunkerSpec::Cdc {
+            min: 1024,
+            avg: 4096,
+            max: 16384,
+        },
+        ..StoreConfig::default()
+    };
+    let mk = |ckpt_id: u64, data: Vec<u8>| CheckpointImage {
+        header: ImageHeader {
+            vpid: 11,
+            name: "corr".into(),
+            ckpt_id,
+            ..Default::default()
+        },
+        segments: vec![("seg".into(), data)],
+    };
+
+    // Gen 0: the baseline cut.
+    let img0 = mk(0, lz_friendly_bytes(64 << 10, 21));
+    let p0 = ckpt.join("corr_g0.dmtcp");
+    let (m0, _) = store.write_incremental(&img0, &p0, None, &cfg).unwrap();
+
+    // Gen 1: the trailing 24 KiB changes, so several CDC chunks differ.
+    let mut data1 = img0.segments[0].1.clone();
+    let tail = data1.len() - (24 << 10);
+    data1[tail..].copy_from_slice(&lz_friendly_bytes(24 << 10, 22));
+    let img1 = mk(1, data1);
+    let p1 = ckpt.join("corr_g1.dmtcp");
+    let prev: BTreeMap<String, SegmentManifest> = m0
+        .segments
+        .iter()
+        .map(|s| (s.name.clone(), s.clone()))
+        .collect();
+    let (m1, s1) = store.write_incremental(&img1, &p1, Some(&prev), &cfg).unwrap();
+    assert!(s1.chunks_deduped > 0, "the unchanged prefix must dedup: {s1:?}");
+
+    // The strike surface: every chunk file unique to gen 1.
+    let g0_ids: std::collections::BTreeSet<_> =
+        m0.segments[0].chunks.iter().map(|c| c.id).collect();
+    let store_root = ckpt.join("store");
+    let unique: Vec<PathBuf> = m1.segments[0]
+        .chunks
+        .iter()
+        .filter(|c| !g0_ids.contains(&c.id))
+        .map(|c| chunk_file_of(&store_root, c.id))
+        .collect();
+    assert!(
+        unique.len() >= 2,
+        "a 24 KiB rewrite must mint several fresh chunks, got {}",
+        unique.len()
+    );
+
+    // One correlated strike damages them all (flip / truncate / delete,
+    // seeded per file)...
+    let events = nersc_cr::campaign::StoreCorruptor::new(31_337)
+        .strike_paths(&unique)
+        .unwrap();
+    assert_eq!(events.len(), unique.len());
+
+    // ...and the read path reports it as one typed error, never a panic
+    // or silently wrong bytes.
+    match read_image_file(&p1) {
+        Err(Error::Corrupt(_)) => {}
+        Err(other) => panic!("multi-chunk damage: expected Error::Corrupt, got {other}"),
+        Ok(_) => panic!("multi-chunk damage accepted"),
+    }
+
+    // The prior generation shares none of the struck chunks: it still
+    // restores bit-identically.
+    assert_eq!(read_image_file(&p0).unwrap(), img0, "gen 0 must survive the strike");
+    std::fs::remove_dir_all(&wd).ok();
+}
+
 /// Backward compatibility: stores written before the LZ/CDC hot path —
 /// stored-block (uncompressed) chunk files and v1 full images — must keep
 /// restoring bit-identically through today's readers, and a store may mix

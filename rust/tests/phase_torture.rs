@@ -260,6 +260,74 @@ fn rank_death_at_every_phase_never_exposes_a_torn_image_set() {
 }
 
 #[test]
+fn partition_cells_dump_names_every_unreachable_rank_and_the_phase() {
+    // Correlated torture (PR-10): instead of one rank dying, a fabric
+    // partition severs a whole *subset* of ranks mid-barrier. The failed
+    // round's dump must name ALL unreachable ranks and the exact phase —
+    // a single-victim pin would hide the correlation — and the committed
+    // cut must stay whole.
+    use nersc_cr::dmtcp::protocol::Phase;
+    nersc_cr::trace::install(nersc_cr::trace::TraceConfig::default());
+    const RANKS: u32 = 5;
+    let cells: [(Phase, &[u32]); 3] = [
+        (Phase::Suspend, &[4]),
+        (Phase::Drain, &[0, 2]),
+        (Phase::Checkpoint, &[1, 2, 3]),
+    ];
+    for (i, (phase, cut)) in cells.iter().enumerate() {
+        let app = StencilApp::new(RANKS, 8);
+        let wd = workdir(&format!("cut{i}"));
+        let mut session = GangSession::builder(&app)
+            .workdir(&wd)
+            .target_steps(1_200)
+            .seed(700 + i as u64)
+            .build()
+            .unwrap();
+        session.submit().unwrap();
+        let gang = session.gang_name();
+        let ckpt_dir = wd.join("ckpt");
+
+        // Round 1: a clean committed cut.
+        let good = session.checkpoint_now().unwrap();
+        let good_id = assert_cut_is_whole(&ckpt_dir, &gang, RANKS);
+        assert_eq!(good_id, good.manifest.ckpt_id);
+
+        // Round 2: the partition fires mid-barrier at this phase.
+        session.inject_partition(*phase, cut).unwrap();
+        let err = session
+            .checkpoint_now()
+            .expect_err("a partition mid-barrier must fail the round");
+        assert!(
+            err.to_string().contains("partition"),
+            "{phase:?}: error must name the partition: {err}"
+        );
+
+        // The dump blames the fabric, and its victim set is the whole
+        // cut — every severed rank, not just the first one noticed.
+        let dumps = nersc_cr::trace::flight::scan(&ckpt_dir);
+        let want: Vec<u64> = cut.iter().map(|&r| u64::from(r)).collect();
+        let d = dumps
+            .iter()
+            .find(|d| d.fault_domain.as_deref() == Some("fabric"))
+            .unwrap_or_else(|| panic!("{phase:?}: no fabric-domain dump: {dumps:?}"));
+        assert_eq!(d.failed_ranks, want, "{phase:?}: dump must name every severed rank");
+        assert_eq!(
+            d.failed_phase.as_deref(),
+            Some(format!("{phase:?}").as_str()),
+            "{phase:?}: dump must pin the exact barrier phase"
+        );
+        assert!(d.n_spans > 0, "{phase:?}: dump must carry span context");
+
+        // All-or-nothing held: the newest visible cut is still round 1.
+        let still_id = assert_cut_is_whole(&ckpt_dir, &gang, RANKS);
+        assert_eq!(still_id, good_id, "{phase:?}: failed round must commit nothing");
+        session.kill().unwrap();
+        session.finish();
+        std::fs::remove_dir_all(&wd).ok();
+    }
+}
+
+#[test]
 fn repeated_phase_deaths_before_any_commit_leave_no_cut_visible() {
     // Kill during the very first round: nothing was ever committed, and
     // nothing must appear committed afterwards (no manifest at all).
